@@ -1,0 +1,119 @@
+//! Regenerates the paper's **accuracy claims**: ACC ("same factor of
+//! accuracy" across datapaths), V1 (Variant A unaffected) and V2
+//! (Variant B identical results) — measured in ulps against correctly
+//! rounded f32 division, and bit-compared across the two simulated
+//! datapaths.
+
+use goldschmidt::arith::fixed::Fixed;
+use goldschmidt::arith::ulp::ulp_diff_f32;
+use goldschmidt::goldschmidt::{variants, Config};
+use goldschmidt::sim::{BaselineDatapath, FeedbackDatapath};
+use goldschmidt::tables::ReciprocalTable;
+use goldschmidt::util::rng::Xoshiro256;
+use goldschmidt::util::tablefmt::{Align, Table};
+
+const SAMPLES: usize = 50_000;
+
+fn main() {
+    let base = Config::default();
+    let table = ReciprocalTable::new(base.table_p);
+
+    // ---- ACC: worst-case ulp by refinement count ---------------------
+    let mut t = Table::new(
+        format!("ACC: worst-case ulp vs correctly rounded f32 ({SAMPLES} samples)"),
+        &["steps", "result", "variant A", "variant B", "predicted rel err"],
+    )
+    .aligns(&[Align::Right, Align::Left, Align::Right, Align::Right, Align::Right]);
+    for steps in 1..=4u32 {
+        let cfg = base.with_steps(steps);
+        let mut rng = Xoshiro256::new(0xACC1);
+        let (mut wa, mut wb) = (0u64, 0u64);
+        for _ in 0..SAMPLES {
+            let n = rng.range_f32(1e-9, 1e9);
+            let d = rng.range_f32(1e-9, 1e9);
+            let exact = n / d;
+            wa = wa.max(ulp_diff_f32(variants::variant_a_f32(n, d, &table, &cfg), exact));
+            wb = wb.max(ulp_diff_f32(variants::variant_b_f32(n, d, &table, &cfg), exact));
+        }
+        t.row(&[
+            steps.to_string(),
+            format!("q{}", steps + 1),
+            format!("{wa} ulp"),
+            format!("{wb} ulp"),
+            format!("{:.2e}", cfg.predicted_error()),
+        ]);
+        if steps >= 2 {
+            assert!(wa <= 1, "variant A not at target accuracy by q{}", steps + 1);
+            assert!(wb <= 1, "variant B not at target accuracy by q{}", steps + 1);
+        }
+    }
+    t.print();
+
+    // ---- V1/V2: bit-identity across the two datapaths ----------------
+    // The variants' guarantee rests on the feedback datapath computing
+    // exactly the same multiply/complement sequence; verify over a sweep.
+    let cfg = base;
+    let bl = BaselineDatapath::new(table.clone(), cfg);
+    let fb = FeedbackDatapath::new(table.clone(), cfg);
+    let mut rng = Xoshiro256::new(0x5EED);
+    let mut identical = 0u64;
+    let trials = 20_000u64;
+    for _ in 0..trials {
+        let n = Fixed::from_bits((1u64 << 30) + rng.next_below(1u64 << 30), 30);
+        let d = Fixed::from_bits((1u64 << 30) + rng.next_below(1u64 << 30), 30);
+        if bl.run(&n, &d).quotient.bits() == fb.run(&n, &d).quotient.bits() {
+            identical += 1;
+        }
+    }
+    let mut t = Table::new(
+        "V1/V2: datapath bit-identity (feedback vs unrolled)",
+        &["trials", "bit-identical", "rate"],
+    )
+    .aligns(&[Align::Right, Align::Right, Align::Right]);
+    t.row(&[
+        trials.to_string(),
+        identical.to_string(),
+        format!("{:.4}%", 100.0 * identical as f64 / trials as f64),
+    ]);
+    t.print();
+    assert_eq!(identical, trials, "paper claim V1/V2 requires exact identity");
+
+    // ---- EIMMW's own target: double precision -------------------------
+    {
+        use goldschmidt::arith::ulp::ulp_diff_f64;
+        use goldschmidt::goldschmidt::divide_f64;
+        let cfg = Config::double();
+        let table = ReciprocalTable::new(cfg.table_p);
+        let mut rng = Xoshiro256::new(0xD0B1);
+        let mut worst = 0u64;
+        let samples = 20_000;
+        for _ in 0..samples {
+            let n = rng.range_f64(1e-12, 1e12);
+            let d = rng.range_f64(1e-12, 1e12);
+            worst = worst.max(ulp_diff_f64(divide_f64(n, d, &table, &cfg), n / d));
+        }
+        let mut t = Table::new(
+            "double precision (EIMMW's target): q5 on a 58-bit datapath",
+            &["samples", "worst ulp vs f64 divide"],
+        )
+        .aligns(&[Align::Right, Align::Right]);
+        t.row(&[samples.to_string(), worst.to_string()]);
+        t.print();
+        assert!(worst <= 1, "f64 accuracy regression: {worst}");
+    }
+
+    // ---- variant B's hardware saving ----------------------------------
+    let mut t = Table::new(
+        "variant B: multiplier passes per division (vs A at equal accuracy)",
+        &["steps", "variant A passes", "variant B passes"],
+    )
+    .aligns(&[Align::Right, Align::Right, Align::Right]);
+    for steps in 1..=4u32 {
+        t.row(&[
+            steps.to_string(),
+            variants::multiplier_passes(steps, false).to_string(),
+            variants::multiplier_passes(steps, true).to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,78 @@
+//! Microbenchmarks of the layer-3 hot paths: the numbers the §Perf pass
+//! optimizes. Covers the fixed-point primitives, table lookup, the
+//! functional divider, both simulators, and the batcher.
+
+use std::time::Instant;
+
+use goldschmidt::arith::fixed::{Fixed, Rounding};
+use goldschmidt::bench::{black_box, Bencher};
+use goldschmidt::coordinator::request::{OpKind, Request};
+use goldschmidt::coordinator::{BatcherConfig, DynamicBatcher, Router};
+use goldschmidt::goldschmidt::{divide_f32, divide_mantissa, divide_mantissa_quick, Config};
+use goldschmidt::sim::{BaselineDatapath, FeedbackDatapath};
+use goldschmidt::tables::ReciprocalTable;
+use goldschmidt::util::rng::Xoshiro256;
+
+fn main() {
+    let cfg = Config::default();
+    let table = ReciprocalTable::new(cfg.table_p);
+    let n = Fixed::from_f64(1.5542, cfg.frac);
+    let d = Fixed::from_f64(1.7656, cfg.frac);
+
+    let mut b = Bencher::new("hotpath/arith");
+    b.bench("fixed mul (nearest)", || {
+        black_box(n.mul(&d, Rounding::Nearest));
+    });
+    b.bench("fixed two_minus", || {
+        black_box(d.two_minus());
+    });
+    b.bench("rom lookup", || {
+        black_box(table.lookup(&d));
+    });
+    b.bench("goldschmidt mantissa q4", || {
+        black_box(divide_mantissa(&n, &d, &table, &cfg).quotient());
+    });
+    b.bench("goldschmidt mantissa q4 (quick)", || {
+        black_box(divide_mantissa_quick(&n, &d, &table, &cfg));
+    });
+    b.bench("goldschmidt f32 full", || {
+        black_box(divide_f32(355.0, 113.0, &table, &cfg));
+    });
+    b.print_report();
+
+    let mut b = Bencher::new("hotpath/simulator");
+    let bl = BaselineDatapath::new(table.clone(), cfg);
+    let fb = FeedbackDatapath::new(table.clone(), cfg);
+    b.bench("baseline datapath run", || {
+        black_box(bl.run(&n, &d).cycles);
+    });
+    b.bench("feedback datapath run", || {
+        black_box(fb.run(&n, &d).cycles);
+    });
+    b.bench("feedback datapath run_quiet", || {
+        black_box(fb.run_quiet(&n, &d));
+    });
+    b.print_report();
+
+    // batcher: form batches from a pre-filled router (per-batch cost)
+    let mut b = Bencher::new("hotpath/batcher");
+    let batcher = DynamicBatcher::new(BatcherConfig::default(), |_| vec![64, 256, 1024]);
+    let mut rng = Xoshiro256::new(1);
+    b.bench("route+form batch of 256", || {
+        let mut router = Router::new();
+        for i in 0..256u64 {
+            let (tx, rx) = std::sync::mpsc::channel();
+            std::mem::forget(rx);
+            router.route(Request {
+                id: i,
+                op: OpKind::Divide,
+                a: rng.range_f32(1.0, 2.0),
+                b: rng.range_f32(1.0, 2.0),
+                enqueued_at: Instant::now(),
+                reply: tx,
+            });
+        }
+        black_box(batcher.form_batch(&mut router, OpKind::Divide));
+    });
+    b.print_report();
+}

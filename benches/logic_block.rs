@@ -1,0 +1,80 @@
+//! Regenerates the paper's **§II logic-block truth table** (T1) from the
+//! implementation, exercises the §III counter behaviour, and measures
+//! the block's simulation cost.
+
+use goldschmidt::arith::fixed::Fixed;
+use goldschmidt::bench::{black_box, Bencher};
+use goldschmidt::sim::logic_block::{truth_table, LogicBlock, Select};
+use goldschmidt::util::tablefmt::{Align, Table};
+
+fn main() {
+    let r1 = Fixed::from_f64(0.9, 30);
+    let fb = Fixed::from_f64(0.999, 30);
+
+    // ---- the truth table, row by row, from the implementation -------
+    let mut t = Table::new(
+        "paper §II logic block truth table (reproduced from implementation)",
+        &["r1 present", "r_{2,3..i} present", "output O"],
+    )
+    .aligns(&[Align::Right, Align::Right, Align::Left]);
+    let cases: [(Option<&Fixed>, Option<&Fixed>, &str); 4] = [
+        (Some(&r1), None, "r1"),
+        (None, Some(&fb), "r_{2,3..i}"),
+        (Some(&r1), Some(&fb), "r_{2,3..i}"),
+        (None, None, "0"),
+    ];
+    for (a, b, expect) in cases {
+        let out = truth_table(a, b);
+        let shown = match out {
+            None => "0".to_string(),
+            Some(v) if v.bits() == r1.bits() => "r1".to_string(),
+            Some(_) => "r_{2,3..i}".to_string(),
+        };
+        assert_eq!(shown, expect, "truth table row mismatch");
+        t.row(&[
+            if a.is_some() { "1" } else { "0" }.to_string(),
+            if b.is_some() { "1" } else { "0" }.to_string(),
+            shown,
+        ]);
+    }
+    t.print();
+
+    // ---- §III counter behaviour over two back-to-back operations ----
+    let mut t = Table::new(
+        "§III counter: two consecutive q4 operations through one block",
+        &["event", "cycle in", "cycle out", "select after", "count"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Left, Align::Right]);
+    let mut lb = LogicBlock::new(2); // k=3 steps -> 2 feedback passes
+    let script: [(&str, Option<&Fixed>, Option<&Fixed>, u64); 6] = [
+        ("op1: r1", Some(&r1), None, 5),
+        ("op1: r2 (switch)", None, Some(&fb), 9),
+        ("op1: r3 (reset)", None, Some(&fb), 14),
+        ("op2: r1", Some(&r1), None, 19),
+        ("op2: r2 (switch)", None, Some(&fb), 23),
+        ("op2: r3 (reset)", None, Some(&fb), 28),
+    ];
+    for (label, a, b, cycle) in script {
+        let (out_cycle, _) = lb.pass(cycle, a, b).expect("valid input");
+        t.row(&[
+            label.to_string(),
+            cycle.to_string(),
+            out_cycle.to_string(),
+            format!("{:?}", lb.select()),
+            lb.count().to_string(),
+        ]);
+    }
+    t.print();
+    assert_eq!(lb.penalty_cycles(), 2, "one switch penalty per operation");
+    assert_eq!(lb.select(), Select::Initial, "block self-reset for next op");
+
+    // ---- simulation cost of the block --------------------------------
+    let mut bench = Bencher::new("logic_block");
+    let mut lb = LogicBlock::new(2);
+    let mut cycle = 0u64;
+    bench.bench("pass (steady feedback)", || {
+        cycle += 4;
+        black_box(lb.pass(cycle, None, Some(&fb)));
+    });
+    bench.print_report();
+}

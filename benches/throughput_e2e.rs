@@ -1,0 +1,162 @@
+//! End-to-end service throughput/latency: the headline serving numbers
+//! recorded in EXPERIMENTS.md §E2E. Sweeps batching policy and worker
+//! count on the native executor, and runs the PJRT backend when the
+//! artifacts exist.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use goldschmidt::coordinator::{BatcherConfig, FpuService, OpKind, ServiceConfig};
+use goldschmidt::runtime::{Executor, NativeExecutor, PjrtExecutor};
+use goldschmidt::util::tablefmt::{fmt_ns, Align, Table};
+use goldschmidt::workload::{OperandDist, WorkloadGen, WorkloadSpec};
+
+fn requests() -> usize {
+    match std::env::var("BENCH_QUICK").as_deref() {
+        Ok("1") | Ok("true") => 20_000,
+        _ => 100_000,
+    }
+}
+
+struct RunResult {
+    reqs_per_s: f64,
+    mean_lat_ns: f64,
+    p99_lat_ns: u64,
+    mean_batch: f64,
+}
+
+fn run_once(config: ServiceConfig, backend: &str, artifacts: Option<PathBuf>) -> RunResult {
+    let count = requests();
+    let svc = match backend {
+        "native" => FpuService::start(config, || {
+            Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+        })
+        .expect("start"),
+        "pjrt" => {
+            let dir = artifacts.expect("artifacts dir");
+            FpuService::start(config, move || {
+                let mut ex = PjrtExecutor::from_dir(&dir)?;
+                ex.warmup()?;
+                Ok(Box::new(ex) as Box<dyn Executor>)
+            })
+            .expect("start pjrt")
+        }
+        _ => unreachable!(),
+    };
+    let handle = svc.handle();
+    // prime: force executor construction + (for PJRT) AOT compilation in
+    // every worker before the timed window — startup cost is reported by
+    // the warmup bench, not folded into steady-state throughput
+    for _ in 0..4 {
+        for op in [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt] {
+            let rx = handle.submit(op, 2.0, 2.0).expect("prime");
+            let _ = rx.recv();
+        }
+    }
+    let spec = WorkloadSpec {
+        count,
+        divide_frac: 0.7,
+        dist: OperandDist::LogNormal { mu: 0.0, sigma: 2.0 },
+        ..Default::default()
+    };
+    let reqs = WorkloadGen::generate(spec);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(count);
+    for r in &reqs {
+        rxs.push(handle.submit(r.op, r.a, r.b).expect("submit"));
+    }
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let snap = svc.metrics().snapshot();
+    let div = snap.op(OpKind::Divide);
+    let result = RunResult {
+        reqs_per_s: count as f64 / elapsed,
+        mean_lat_ns: div.mean_latency_ns,
+        p99_lat_ns: div.p99_latency_ns,
+        mean_batch: div.requests as f64 / div.batches.max(1) as f64,
+    };
+    svc.shutdown();
+    result
+}
+
+fn main() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let have_artifacts = artifacts.join("manifest.txt").exists();
+    let n = requests();
+
+    // ---- batching policy sweep (native backend) ----------------------
+    let mut t = Table::new(
+        format!("batch-policy sweep, native backend, {n} closed-loop requests"),
+        &["max_batch", "max_wait", "req/s", "mean lat", "p99 lat", "req/batch"],
+    )
+    .aligns(&[Align::Right; 6]);
+    for &(max_batch, wait_us) in &[(1usize, 0u64), (64, 100), (256, 200), (1024, 200), (1024, 1000)] {
+        let config = ServiceConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_micros(wait_us),
+            },
+            queue_depth: 65_536,
+            workers: 1,
+            poll: Duration::from_micros(50),
+        };
+        let r = run_once(config, "native", None);
+        t.row(&[
+            max_batch.to_string(),
+            format!("{wait_us}us"),
+            format!("{:.0}", r.reqs_per_s),
+            fmt_ns(r.mean_lat_ns),
+            fmt_ns(r.p99_lat_ns as f64),
+            format!("{:.1}", r.mean_batch),
+        ]);
+    }
+    t.print();
+
+    // ---- worker scaling ------------------------------------------------
+    let mut t = Table::new(
+        "worker scaling (native backend, max_batch=1024)",
+        &["workers", "req/s", "mean lat"],
+    )
+    .aligns(&[Align::Right; 3]);
+    for &workers in &[1usize, 2, 4] {
+        let config = ServiceConfig {
+            batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
+            queue_depth: 65_536,
+            workers,
+            poll: Duration::from_micros(50),
+        };
+        let r = run_once(config, "native", None);
+        t.row(&[workers.to_string(), format!("{:.0}", r.reqs_per_s), fmt_ns(r.mean_lat_ns)]);
+    }
+    t.print();
+
+    // ---- PJRT backend (the real three-layer path) -----------------------
+    if have_artifacts {
+        let mut t = Table::new(
+            "PJRT backend (AOT pallas/jax HLO executables)",
+            &["workers", "req/s", "mean lat", "p99 lat", "req/batch"],
+        )
+        .aligns(&[Align::Right; 5]);
+        for &workers in &[1usize, 2] {
+            let config = ServiceConfig {
+                batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
+                queue_depth: 65_536,
+                workers,
+                poll: Duration::from_micros(50),
+            };
+            let r = run_once(config, "pjrt", Some(artifacts.clone()));
+            t.row(&[
+                workers.to_string(),
+                format!("{:.0}", r.reqs_per_s),
+                fmt_ns(r.mean_lat_ns),
+                fmt_ns(r.p99_lat_ns as f64),
+                format!("{:.1}", r.mean_batch),
+            ]);
+        }
+        t.print();
+    } else {
+        println!("(PJRT sweep skipped: run `make artifacts` first)");
+    }
+}

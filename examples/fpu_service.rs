@@ -1,0 +1,136 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Loads the AOT artifacts (layer 1 Pallas kernel + layer 2 jax graph,
+//! lowered to HLO by `make artifacts`), starts the rust coordinator
+//! (layer 3: router -> dynamic batcher -> PJRT workers), replays a
+//! Poisson request stream against it, validates every result, and
+//! reports latency/throughput — the run recorded in EXPERIMENTS.md §E2E.
+//!
+//! Falls back to the native fixed-point executor with a note when
+//! artifacts are missing, so the example always runs.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example fpu_service
+//! ```
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use goldschmidt::coordinator::{BatcherConfig, FpuService, OpKind, ServiceConfig};
+use goldschmidt::runtime::{Executor, NativeExecutor, PjrtExecutor};
+use goldschmidt::util::tablefmt::{fmt_ns, Align, Table};
+use goldschmidt::workload::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};
+
+const REQUESTS: usize = 200_000;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let have_artifacts = artifacts.join("manifest.txt").exists();
+
+    let config = ServiceConfig {
+        batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
+        queue_depth: 65_536,
+        workers: 2,
+        poll: Duration::from_micros(50),
+    };
+
+    let backend;
+    let svc = if have_artifacts {
+        backend = "pjrt-cpu (AOT pallas/jax HLO)";
+        let dir = artifacts.clone();
+        FpuService::start(config, move || {
+            let mut ex = PjrtExecutor::from_dir(&dir)?;
+            ex.warmup()?; // compile all executables before serving
+            Ok(Box::new(ex) as Box<dyn Executor>)
+        })?
+    } else {
+        backend = "native fixed-point (artifacts missing: run `make artifacts`)";
+        FpuService::start(config, || Ok(Box::new(NativeExecutor::with_defaults()) as _))?
+    };
+    println!("backend: {backend}");
+
+    // realistic mixed workload: 70% divide / 15% sqrt / 15% rsqrt,
+    // heavy-tailed operands, open-loop Poisson arrivals at 500k req/s
+    let spec = WorkloadSpec {
+        count: REQUESTS,
+        dist: OperandDist::LogNormal { mu: 0.0, sigma: 2.5 },
+        arrivals: ArrivalProcess::Poisson { rate: 500_000.0 },
+        divide_frac: 0.7,
+        seed: 0xE2E,
+    };
+    let reqs = WorkloadGen::generate(spec);
+    let handle = svc.handle();
+
+    // prime every worker (compiles all AOT executables) before the clock
+    // starts — startup latency is a one-time cost, reported separately
+    let prime_t0 = Instant::now();
+    for _ in 0..4 {
+        for op in [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt] {
+            let _ = handle.submit(op, 2.0, 2.0)?.recv();
+        }
+    }
+    println!("warmup (executor init + AOT compile): {:.2}s", prime_t0.elapsed().as_secs_f64());
+
+    println!("replaying {REQUESTS} requests (Poisson open loop, 500k/s offered)...");
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(reqs.len());
+    let mut expected = Vec::with_capacity(reqs.len());
+    for r in &reqs {
+        // pace the open loop
+        let due = t0 + Duration::from_secs_f64(r.at_s);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        expected.push(match r.op {
+            OpKind::Divide => (r.a as f64 / r.b as f64) as f32,
+            OpKind::Sqrt => (r.a as f64).sqrt() as f32,
+            OpKind::Rsqrt => (1.0 / (r.a as f64).sqrt()) as f32,
+        });
+        rxs.push(handle.submit(r.op, r.a, r.b)?);
+    }
+    let mut worst_ulp = 0i64;
+    let mut ok = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        let ulp = (resp.value.to_bits() as i64 - expected[i].to_bits() as i64).abs();
+        worst_ulp = worst_ulp.max(ulp);
+        ok += 1;
+    }
+    let elapsed = t0.elapsed();
+
+    let snap = svc.metrics().snapshot();
+    let mut t = Table::new(
+        format!(
+            "E2E: {ok}/{REQUESTS} ok in {:.2}s -> {:.0} req/s, worst {worst_ulp} ulp",
+            elapsed.as_secs_f64(),
+            ok as f64 / elapsed.as_secs_f64(),
+        ),
+        &["op", "requests", "batches", "req/batch", "mean lat", "p50", "p99", "occupancy"],
+    )
+    .aligns(&[
+        Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+        Align::Right, Align::Right, Align::Right,
+    ]);
+    for s in &snap.ops {
+        if s.requests == 0 {
+            continue;
+        }
+        t.row(&[
+            s.op.label().to_string(),
+            s.requests.to_string(),
+            s.batches.to_string(),
+            format!("{:.1}", s.requests as f64 / s.batches.max(1) as f64),
+            fmt_ns(s.mean_latency_ns),
+            fmt_ns(s.p50_latency_ns as f64),
+            fmt_ns(s.p99_latency_ns as f64),
+            format!("{:.0}%", 100.0 * s.occupancy),
+        ]);
+    }
+    t.print();
+    assert!(worst_ulp <= 1, "accuracy regression: worst {worst_ulp} ulp");
+    assert_eq!(snap.total_errors(), 0);
+    svc.shutdown();
+    println!("OK — all three layers composed: pallas kernel -> jax HLO -> rust service");
+    Ok(())
+}

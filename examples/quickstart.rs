@@ -1,0 +1,51 @@
+//! Quickstart: divide two numbers through every layer of the stack and
+//! see the paper's datapaths at work.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use goldschmidt::arith::fixed::Fixed;
+use goldschmidt::area::Comparison;
+use goldschmidt::goldschmidt::{divide_f32, Config};
+use goldschmidt::sim::{BaselineDatapath, FeedbackDatapath};
+use goldschmidt::tables::ReciprocalTable;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The algorithm: Goldschmidt f32 division on the paper's
+    //    configuration (p=10 ROM, q4 = 3 refinement steps).
+    let cfg = Config::default();
+    let table = ReciprocalTable::new(cfg.table_p);
+    let (n, d) = (355.0f32, 113.0f32);
+    let q = divide_f32(n, d, &table, &cfg);
+    println!("goldschmidt divide: {n} / {d} = {q}   (f32 exact: {})", n / d);
+
+    // 2. The hardware, cycle by cycle: run one mantissa division through
+    //    both simulated datapaths.
+    let nm = Fixed::from_f64(1.5542035, cfg.frac); // mantissa of 355/128
+    let dm = Fixed::from_f64(1.765625, cfg.frac); // mantissa of 113/64
+    let baseline = BaselineDatapath::new(table.clone(), cfg);
+    let feedback = FeedbackDatapath::new(table.clone(), cfg);
+    let b = baseline.run(&nm, &dm);
+    let f = feedback.run(&nm, &dm);
+    println!("\nbaseline (Figs. 1-2): {} cycles, {} multipliers", b.cycles,
+        baseline.inventory().multipliers);
+    println!("feedback (Fig. 3)   : {} cycles, {} multipliers", f.cycles,
+        feedback.inventory().multipliers);
+    assert_eq!(b.quotient.bits(), f.quotient.bits(), "bit-identical results");
+    println!("results bit-identical: q = {:.9}", f.quotient.to_f64());
+
+    // 3. The paper's Fig. 4, as a Gantt chart of the feedback schedule.
+    println!("\nfeedback datapath schedule (paper Fig. 4):");
+    println!("{}", f.trace.render_gantt());
+
+    // 4. The area claim (A1).
+    let cmp = Comparison::at(&cfg);
+    println!(
+        "area: baseline {:.0} GE -> feedback {:.0} GE  (saves {:.1}%)",
+        cmp.baseline.total(),
+        cmp.feedback.total(),
+        100.0 * cmp.saved_fraction()
+    );
+    Ok(())
+}

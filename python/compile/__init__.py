@@ -1,0 +1,10 @@
+# Build-time compile package: L1 pallas kernels, L2 jax model, AOT export.
+#
+# x64 is enabled because the kernels model the hardware datapath's *guard
+# bits*: a real Goldschmidt divider carries a wider internal fraction than
+# the output format (EIMMW-2000 sizes the multipliers accordingly), so the
+# faithful functional model iterates in f64 and rounds once to f32 at the
+# end.  Without this, the f32 sqrt path accumulates ~9 ulp over 3 steps.
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the Goldschmidt iteration hot loop.
+from . import goldschmidt, ref  # noqa: F401

@@ -1,0 +1,156 @@
+"""Layer-1 Pallas kernels: the Goldschmidt iteration hot loop.
+
+The paper's hardware contribution is *unit reuse*: one multiplier pair +
+one two's-complement block iterated via a feedback path, instead of an
+unrolled pipeline of seven multipliers.  On TPU-shaped hardware the same
+insight maps to a single fused multiply stage iterated by a
+``fori_loop`` over a VMEM-resident block (see DESIGN.md
+§Hardware-Adaptation): the loop body *is* the shared multiplier; the
+unrolled reference graph in ``ref.py`` plays the role of the baseline
+datapath.
+
+Kernels are lowered with ``interpret=True`` — mandatory for CPU-PJRT
+execution (real TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot run).  Numerics are validated against ``ref.py`` by pytest.
+
+Tiling: the batch is split into ``block`` -sized tiles; each grid step
+holds (n, d, table, q) tiles in VMEM.  The ROM table (2^p float32 = 4 KiB
+at p=10) is mapped whole into every grid step — it is the analogue of the
+paper's ROM block, resident next to the multiplier.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import tables
+
+# Largest tile width for the batch dimension.  A whole 1024-wide batch
+# with ~6 live f64 arrays is ~48 KiB — a fraction of VMEM — so every AOT
+# batch size rides a single block (grid=1).  Perf note (EXPERIMENTS.md
+# §Perf): on the CPU stand-in a multi-step grid lowers to an XLA while
+# loop with a dynamic-update-slice per step, costing ~1.5x; one block
+# avoids it without changing the TPU VMEM story.
+MAX_BLOCK = 1024
+
+
+def _divide_kernel(n_ref, d_ref, table_ref, q_ref, *, p: int, steps: int):
+    """One tile of Goldschmidt division: lookup + ``steps`` fused steps.
+
+    Internals run in f64 — the functional model of the hardware's guard
+    bits (the datapath fraction is wider than the output format); the
+    single terminal rounding to f32 models the output register.
+    """
+    n = n_ref[...].astype(jnp.float64)
+    d = d_ref[...].astype(jnp.float64)
+    table = table_ref[...].astype(jnp.float64)
+    idx = jnp.floor((d - 1.0) * (1 << p)).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, (1 << p) - 1)
+    k1 = jnp.take(table, idx)
+    q0 = n * k1
+    r0 = d * k1
+
+    def body(_, qr):
+        q, r = qr
+        # K_{i+1} = 2 - r_i: the two's-complement block, fused into the
+        # multiply stage (one pass through the shared "multiplier").
+        k = 2.0 - r
+        return q * k, r * k
+
+    q, _ = jax.lax.fori_loop(0, steps, body, (q0, r0))
+    q_ref[...] = q.astype(jnp.float32)
+
+
+def _sqrt_family_kernel(d_ref, table_ref, out_ref, *, p: int, steps: int,
+                        want_sqrt: bool):
+    """One tile of Goldschmidt sqrt / rsqrt (coupled g,h iteration)."""
+    d = d_ref[...].astype(jnp.float64)
+    table = table_ref[...].astype(jnp.float64)
+    half = 1 << (p - 1)
+    e0 = (d >= 2.0).astype(jnp.int32)
+    m = jnp.where(e0 == 1, d * 0.5, d)
+    f = jnp.floor((m - 1.0) * half).astype(jnp.int32)
+    f = jnp.clip(f, 0, half - 1)
+    y0 = jnp.take(table, e0 * half + f)
+    g0 = d * y0
+    h0 = 0.5 * y0
+
+    def body(_, gh):
+        g, h = gh
+        rho = 0.5 - g * h
+        return g + g * rho, h + h * rho
+
+    g, h = jax.lax.fori_loop(0, steps, body, (g0, h0))
+    out = g if want_sqrt else 2.0 * h
+    out_ref[...] = out.astype(jnp.float32)
+
+
+def _tiled_call(kernel, batch: int, block: int, n_operands: int, table_len: int):
+    """Build the pallas_call for a 1-D batch with a whole-table operand."""
+    if batch % block != 0:
+        raise ValueError(f"batch {batch} not a multiple of block {block}")
+    grid = (batch // block,)
+    operand_spec = pl.BlockSpec((block,), lambda i: (i,))
+    table_spec = pl.BlockSpec((table_len,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[operand_spec] * n_operands + [table_spec],
+        out_specs=operand_spec,
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,  # CPU-PJRT target; see module docstring
+    )
+
+
+def divide_mantissa(n, d, *, p: int | None = None, steps: int = 3,
+                    block: int | None = None):
+    """Batched Goldschmidt division on mantissas in [1,2), via Pallas.
+
+    Returns q ~= n/d.  ``steps`` refinement steps (steps=3 is the paper's
+    q4 configuration).  The reciprocal ROM is generated once per (p,) and
+    closed over as a constant — exactly a ROM.
+    """
+    p = tables.DEFAULT_P if p is None else p
+    block = _pick_block(n.shape[0]) if block is None else block
+    table = jnp.asarray(tables.reciprocal_table(p))
+    kernel = functools.partial(_divide_kernel, p=p, steps=steps)
+    call = _tiled_call(kernel, n.shape[0], block, 2, table.shape[0])
+    return call(n, d, table)
+
+
+def sqrt_mantissa(d, *, p: int | None = None, steps: int = 3,
+                  block: int | None = None):
+    """Batched Goldschmidt sqrt on mantissas in [1,4), via Pallas."""
+    p = tables.DEFAULT_P if p is None else p
+    block = _pick_block(d.shape[0]) if block is None else block
+    table = jnp.asarray(tables.rsqrt_table(p))
+    kernel = functools.partial(_sqrt_family_kernel, p=p, steps=steps,
+                               want_sqrt=True)
+    call = _tiled_call(kernel, d.shape[0], block, 1, table.shape[0])
+    return call(d, table)
+
+
+def rsqrt_mantissa(d, *, p: int | None = None, steps: int = 3,
+                   block: int | None = None):
+    """Batched Goldschmidt reciprocal sqrt on mantissas in [1,4)."""
+    p = tables.DEFAULT_P if p is None else p
+    block = _pick_block(d.shape[0]) if block is None else block
+    table = jnp.asarray(tables.rsqrt_table(p))
+    kernel = functools.partial(_sqrt_family_kernel, p=p, steps=steps,
+                               want_sqrt=False)
+    call = _tiled_call(kernel, d.shape[0], block, 1, table.shape[0])
+    return call(d, table)
+
+
+def _pick_block(batch: int) -> int:
+    """Whole-batch tile up to MAX_BLOCK; else the largest divisor tile."""
+    if batch <= MAX_BLOCK:
+        return batch
+    b = MAX_BLOCK
+    while b > 1 and batch % b != 0:
+        b //= 2
+    return max(b, 1)

@@ -1,0 +1,106 @@
+"""Pure-jnp correctness oracle for the Goldschmidt Pallas kernels.
+
+Implements the same normalized-mantissa iteration as the Pallas kernels
+in ``goldschmidt.py``, using only ``jax.numpy`` — no pallas_call.  The
+pytest suite asserts kernel == ref (allclose, tight tolerance) and
+ref == true quotient (a few ulp), which together give the core
+correctness signal for layer 1.
+
+All functions operate on *normalized mantissas*:
+
+- divide:  n, d in [1, 2)      -> q ~= n / d in (1/2, 2)
+- rsqrt:   d in [1, 4)          -> y ~= 1 / sqrt(d) in (1/2, 1]
+- sqrt:    d in [1, 4)          -> s ~= sqrt(d) in [1, 2)
+
+Exponent handling (frexp / scale-by-2^e) lives one level up in
+``model.py`` — mirroring the paper's hardware, whose datapath sees only
+the normalized fraction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import tables
+
+
+def divide_mantissa_ref(n, d, table, p: int, steps: int):
+    """Goldschmidt division on normalized mantissas, pure jnp.
+
+    n, d: float32 arrays in [1, 2).  table: float32[2^p] reciprocal table
+    (``tables.reciprocal_table(p)``).  steps: number of refinement steps
+    (steps=1 yields q2 in the paper's notation; steps=3 yields q4).
+    """
+    n = n.astype(jnp.float64)
+    d = d.astype(jnp.float64)
+    table = table.astype(jnp.float64)
+    idx = jnp.floor((d - 1.0) * (1 << p)).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, (1 << p) - 1)
+    k1 = jnp.take(table, idx)
+    q = n * k1
+    r = d * k1
+    for _ in range(steps):
+        # the 2's-complement block: K_{i+1} = 2 - r_i
+        k = 2.0 - r
+        q = q * k
+        r = r * k
+    return q.astype(jnp.float32)
+
+
+def rsqrt_mantissa_ref(d, table, p: int, steps: int):
+    """Goldschmidt reciprocal square root on mantissas in [1, 4).
+
+    Uses the coupled (g, h) iteration of EIMMW-2000:
+      g_0 = d * y0,  h_0 = y0 / 2          (y0 from the rsqrt table)
+      rho = 1/2 - g*h;  g += g*rho;  h += h*rho
+    g -> sqrt(d), 2h -> 1/sqrt(d), quadratically.
+    """
+    d = d.astype(jnp.float64)
+    table = table.astype(jnp.float64)
+    half = 1 << (p - 1)
+    e0 = (d >= 2.0).astype(jnp.int32)
+    m = jnp.where(e0 == 1, d * 0.5, d)  # back to [1,2)
+    f = jnp.floor((m - 1.0) * half).astype(jnp.int32)
+    f = jnp.clip(f, 0, half - 1)
+    idx = e0 * half + f
+    y0 = jnp.take(table, idx)
+    g = d * y0
+    h = 0.5 * y0
+    for _ in range(steps):
+        rho = 0.5 - g * h
+        g = g + g * rho
+        h = h + h * rho
+    return (2.0 * h).astype(jnp.float32)
+
+
+def sqrt_mantissa_ref(d, table, p: int, steps: int):
+    """Goldschmidt square root on mantissas in [1, 4): returns g -> sqrt(d)."""
+    d = d.astype(jnp.float64)
+    table = table.astype(jnp.float64)
+    half = 1 << (p - 1)
+    e0 = (d >= 2.0).astype(jnp.int32)
+    m = jnp.where(e0 == 1, d * 0.5, d)
+    f = jnp.floor((m - 1.0) * half).astype(jnp.int32)
+    f = jnp.clip(f, 0, half - 1)
+    idx = e0 * half + f
+    y0 = jnp.take(table, idx)
+    g = d * y0
+    h = 0.5 * y0
+    for _ in range(steps):
+        rho = 0.5 - g * h
+        g = g + g * rho
+        h = h + h * rho
+    return g.astype(jnp.float32)
+
+
+def divide_ref(n, d, p: int | None = None, steps: int = 3):
+    """Full float32 division via Goldschmidt: sign/exponent + mantissa path."""
+    p = tables.DEFAULT_P if p is None else p
+    table = jnp.asarray(tables.reciprocal_table(p))
+    sign = jnp.where(n < 0, -1.0, 1.0) * jnp.where(d < 0, -1.0, 1.0)
+    n_abs, d_abs = jnp.abs(n), jnp.abs(d)
+    mn, en = jnp.frexp(n_abs)  # m in [0.5, 1)
+    md, ed = jnp.frexp(d_abs)
+    q = divide_mantissa_ref(2.0 * mn, 2.0 * md, table, p, steps)
+    out = sign * jnp.ldexp(q, en - ed)
+    return jnp.where(n == 0.0, jnp.zeros_like(out), out)

@@ -1,0 +1,173 @@
+"""Layer-2 JAX model: full float32 divide / sqrt / rsqrt built on the
+Layer-1 Pallas kernels.
+
+These are the graphs that get AOT-lowered (``aot.py``) to HLO text and
+executed from the rust coordinator's request path.  They add the
+"FPU wrapper" around the paper's mantissa datapath: sign handling,
+frexp-style normalization, exponent-parity folding for sqrt, and
+reassembly — mirroring how the paper's unit would sit inside a floating
+point divider.
+
+Python here is build-time only; nothing in this module runs at serve
+time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import goldschmidt as gk
+
+# The paper's full-accuracy configuration: q4, i.e. three refinement
+# steps past the table lookup (Figs. 1-2 run step 2 three times).
+DEFAULT_STEPS = 3
+
+def _frexp_safe(x):
+    """frexp that is correct for subnormal inputs (m in [0.5,1), e).
+
+    XLA's CPU float ops treat subnormal *inputs* as zero (DAZ), so both
+    ``jnp.frexp`` and any float rescaling trick silently lose them.  This
+    version unpacks through the integer domain instead — a bitcast plus
+    bit slicing, exactly what a hardware pre-normalizer does:
+
+    * normal x: mantissa bits re-housed under a fixed 2^-1 exponent give
+      m in [0.5, 1) directly; e comes from the exponent field.
+    * subnormal x: the fraction field is an integer f < 2^23 with
+      x = f * 2^-149; ``frexp`` applied to float(f) (a normal value!)
+      yields the normalized mantissa and bit length.
+
+    Requires x >= 0 (callers pass |x|); x == 0 returns (0.5, 0)-ish and
+    must be masked by the caller (all call sites already guard zero).
+    """
+    import jax
+
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    expf = (bits >> 23) & 0xFF
+    frac = bits & 0x7F_FFFF
+    is_sub = expf == 0
+    # normal: put the fraction under exponent 126 -> value in [0.5, 1)
+    m_norm = jax.lax.bitcast_convert_type(
+        jnp.int32(126 << 23) | frac, jnp.float32
+    )
+    e_norm = expf - 126
+    # subnormal: x = frac * 2^-149 with frac a small integer (exact f32)
+    mf, ef = jnp.frexp(frac.astype(jnp.float32))
+    mf = jnp.where(frac == 0, 0.5, mf)  # frac==0 only when x == +-0
+    m = jnp.where(is_sub, mf, m_norm)
+    e = jnp.where(is_sub, ef - 149, e_norm)
+    return m, e
+
+
+def _is_zero(x):
+    """Bit-level zero test: `x == 0.0` is unusable for routing because
+    XLA CPU compares subnormals as zero (DAZ)."""
+    import jax
+
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    return (bits & 0x7FFF_FFFF) == 0
+
+
+def _sign_negative(x):
+    """Bit-level sign test (DAZ-proof for subnormals)."""
+    import jax
+
+    return jax.lax.bitcast_convert_type(x, jnp.int32) < 0
+
+
+def _ldexp_safe(q, e):
+    """ldexp(q, e) that produces correct subnormal outputs.
+
+    XLA's ldexp flushes results below 2^-126 to zero.  For the underflow
+    range this builds the result in the integer domain instead: a
+    subnormal's bit pattern is round(value / 2^-149), and computing
+    round(ldexp(q, e + 149)) keeps every intermediate in the normal
+    float range.  Valid for q in [0.5, 4); used when e <= -120 (the
+    construction is exact through the subnormal/normal boundary).
+    """
+    import jax
+
+    deep = e <= -120
+    # clamp the shifted exponent so the normal path never overflows when
+    # the deep path is selected anyway
+    frac = jnp.rint(jnp.ldexp(q, jnp.where(deep, e + 149, 0)))
+    frac_i = jnp.clip(frac, 0.0, 2.0**30).astype(jnp.int32)
+    sub = jax.lax.bitcast_convert_type(frac_i, jnp.float32)
+    return jnp.where(deep, sub, jnp.ldexp(q, jnp.where(deep, 0, e)))
+
+
+def divide(n, d, *, steps: int = DEFAULT_STEPS, p: int | None = None):
+    """Elementwise n / d via the Goldschmidt mantissa kernel.
+
+    Handles signs, zero numerators, and power-of-two scaling.  Operands
+    are assumed finite and d nonzero (the hardware datapath's contract);
+    IEEE special cases (inf/nan/subnormal-d) are the enclosing FPU's
+    responsibility, not the divider array's.
+    """
+    negative = _sign_negative(n) ^ _sign_negative(d)
+    n_abs, d_abs = jnp.abs(n), jnp.abs(d)
+    # frexp: m in [0.5, 1), x = m * 2^e  ->  mantissa in [1, 2) with e-1
+    mn, en = _frexp_safe(n_abs)
+    md, ed = _frexp_safe(d_abs)
+    # guard n == 0: frexp gives m=0 which is outside the kernel's domain
+    mn = jnp.where(_is_zero(n_abs), 0.5, mn)
+    q = gk.divide_mantissa(2.0 * mn, 2.0 * md, steps=steps, p=p)
+    # ldexp, not exp2: XLA's f32 exp2 is a polynomial approximation
+    # (~1e-6 rel err) and would corrupt the exact power-of-two rescale;
+    # the _safe wrapper additionally builds subnormal outputs bit-wise
+    out = _ldexp_safe(q, en - ed)
+    # sign via negation (a bit flip), NOT a multiply: multiplying a
+    # subnormal result by +-1.0 would flush it to zero under DAZ
+    out = jnp.where(negative, -out, out)
+    return jnp.where(_is_zero(n), jnp.zeros_like(out), out)
+
+
+def sqrt(x, *, steps: int = DEFAULT_STEPS, p: int | None = None):
+    """Elementwise sqrt(x) via the Goldschmidt coupled iteration.
+
+    x must be >= 0 and finite.  Exponent parity folds the mantissa into
+    [1, 4): x = m * 2^e with even e -> sqrt(x) = sqrt(m) * 2^(e/2).
+    """
+    m0, e0 = _frexp_safe(x)  # x = m0 * 2^e0, m0 in [0.5, 1)
+    m0 = jnp.where(_is_zero(x), 0.5, m0)
+    # move to m in [1, 4) with even remaining exponent
+    odd = (e0 % 2) != 0
+    m = jnp.where(odd, 2.0 * m0, 4.0 * m0)  # [1,2) if odd else [2,4)
+    e = jnp.where(odd, e0 - 1, e0 - 2)  # now x = m * 2^e, e even
+    s = gk.sqrt_mantissa(m, steps=steps, p=p)
+    out = jnp.ldexp(s, e // 2)
+    return jnp.where(_is_zero(x), jnp.zeros_like(out), out)
+
+
+def rsqrt(x, *, steps: int = DEFAULT_STEPS, p: int | None = None):
+    """Elementwise 1/sqrt(x) via the Goldschmidt coupled iteration.
+
+    x must be > 0 and finite.
+    """
+    m0, e0 = _frexp_safe(x)
+    m0 = jnp.where(_is_zero(x), 0.5, m0)
+    odd = (e0 % 2) != 0
+    m = jnp.where(odd, 2.0 * m0, 4.0 * m0)
+    e = jnp.where(odd, e0 - 1, e0 - 2)
+    y = gk.rsqrt_mantissa(m, steps=steps, p=p)
+    return jnp.ldexp(y, -(e // 2))
+
+
+# Registry used by aot.py and the tests: op name -> (fn, arity)
+OPS = {
+    "divide": (divide, 2),
+    "sqrt": (sqrt, 1),
+    "rsqrt": (rsqrt, 1),
+}
+
+
+def op_fn(name: str, steps: int = DEFAULT_STEPS):
+    """A jit-able (tuple-returning) version of the named op for AOT export."""
+    fn, n_in = OPS[name]
+    if n_in == 2:
+        return lambda a, b: (fn(a, b, steps=steps),)
+    return lambda a: (fn(a, steps=steps),)
+
+
+def op_arity(name: str) -> int:
+    """Number of array inputs the named op takes."""
+    return OPS[name][1]

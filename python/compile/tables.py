@@ -1,0 +1,92 @@
+"""Reciprocal / reciprocal-sqrt ROM tables for Goldschmidt iteration.
+
+This is the build-time twin of ``rust/src/tables/``: both construct the
+same "optimal" bipartite-free reciprocal table in the style of
+Sarma–Matula (paper ref [7]) / EIMMW-2000 (paper ref [4]): p input bits
+(the fraction bits of a normalized operand in [1, 2)), p+2 output bits.
+
+Entry j covers D in [1 + j/2^p, 1 + (j+1)/2^p).  The stored value is the
+(p+2)-fraction-bit round-to-nearest reciprocal of the interval midpoint,
+which bounds |D*K - 1| by roughly 2^-(p+1), the property the Goldschmidt
+first step relies on.
+
+Everything is exact integer math here; the float handed to the kernel is
+an exact representation of the (p+2)-bit fixed-point value (p <= 21 keeps
+it exactly representable in float32).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Default table input width used across the repo (kernels, artifacts,
+# rust simulator defaults).  2^10 entries x 12 bits: a tiny ROM.
+DEFAULT_P = 10
+
+
+def reciprocal_table_ints(p: int = DEFAULT_P) -> np.ndarray:
+    """The table as raw (p+2)-bit integers (value = int / 2^(p+2)).
+
+    K_j = round(2^(p+2) * 2 / (2 + (2j+1)/2^p))  -- reciprocal of the
+    midpoint m_j = 1 + (2j+1)/2^(p+1), scaled by 2^(p+2).
+    """
+    if not (1 <= p <= 21):
+        raise ValueError(f"p must be in [1, 21], got {p}")
+    j = np.arange(1 << p, dtype=np.int64)
+    # midpoint m_j = (2^(p+1) + 2j + 1) / 2^(p+1)
+    num = np.int64(1) << np.int64(2 * p + 3)  # 2^(p+2) * 2^(p+1)
+    den = (np.int64(1) << np.int64(p + 1)) + 2 * j + 1
+    # round-to-nearest integer division (ties away from zero; den is odd
+    # so ties cannot occur)
+    k = (num + den // 2) // den
+    return k
+
+
+def reciprocal_table(p: int = DEFAULT_P) -> np.ndarray:
+    """Table as float32 values in (1/2, 1]: K approximates 1/D, D in [1,2)."""
+    k = reciprocal_table_ints(p).astype(np.float64)
+    return (k / float(1 << (p + 2))).astype(np.float32)
+
+
+def rsqrt_table_ints(p: int = DEFAULT_P) -> np.ndarray:
+    """(p+2)-bit reciprocal-square-root table over D in [1, 4).
+
+    Square root needs the operand range [1, 4): exponent parity folds the
+    odd-exponent case into [2, 4).  Hardware indexes sqrt tables with the
+    exponent LSB concatenated with the fraction MSBs, and we model exactly
+    that: index = (e0 << (p-1)) | f, where e0 is the exponent parity
+    (0: D in [1,2), 1: D in [2,4)) and f is the top p-1 fraction bits of
+    the mantissa in [1,2).  Each of the 2^p entries covers a binary
+    interval; the stored value is the round-to-nearest (p+2)-bit
+    1/sqrt(midpoint).
+    """
+    if not (2 <= p <= 21):
+        raise ValueError(f"p must be in [2, 21], got {p}")
+    n_half = 1 << (p - 1)
+    out = np.zeros(1 << p, dtype=np.int64)
+    scale = float(1 << (p + 2))
+    for e0 in (0, 1):
+        base = 1.0 if e0 == 0 else 2.0
+        j = np.arange(n_half, dtype=np.float64)
+        lo = base * (1.0 + j / n_half)
+        hi = base * (1.0 + (j + 1) / n_half)
+        mid = 0.5 * (lo + hi)
+        vals = np.rint(scale / np.sqrt(mid)).astype(np.int64)
+        out[e0 * n_half : (e0 + 1) * n_half] = vals
+    return out
+
+
+def rsqrt_table(p: int = DEFAULT_P) -> np.ndarray:
+    """rsqrt table as float32: entry approximates 1/sqrt(D), D in [1, 4)."""
+    k = rsqrt_table_ints(p).astype(np.float64)
+    return (k / float(1 << (p + 2))).astype(np.float32)
+
+
+def max_table_error(p: int = DEFAULT_P) -> float:
+    """max_j max_{D in interval j} |D * K_j - 1|  (analytic endpoints)."""
+    k = reciprocal_table_ints(p).astype(np.float64) / float(1 << (p + 2))
+    j = np.arange(1 << p, dtype=np.float64)
+    lo = 1.0 + j / float(1 << p)
+    hi = 1.0 + (j + 1.0) / float(1 << p)
+    err = np.maximum(np.abs(lo * k - 1.0), np.abs(hi * k - 1.0))
+    return float(err.max())

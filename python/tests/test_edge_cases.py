@@ -1,0 +1,117 @@
+"""Edge-case and cross-language consistency tests.
+
+The rust side (`rust/src/tables/reciprocal.rs`) builds its ROM with the
+same integer formula as `compile/tables.py`; the golden entries pinned
+here are pinned on the rust side too (`golden_entries_p10`), so a drift
+in either implementation fails one suite or the other.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model, tables
+from compile.kernels import goldschmidt as gk
+
+
+class TestCrossLanguageGolden:
+    def test_reciprocal_golden_entries_match_rust(self):
+        t = tables.reciprocal_table_ints(10)
+        # identical pins to rust/src/tables/reciprocal.rs::golden_entries_p10
+        assert t[0] == 4094
+        assert t[1] == 4090
+        assert t[1023] == 2049
+        assert len(t) == 1024
+
+    def test_rsqrt_golden_entries_match_rust(self):
+        t = tables.rsqrt_table_ints(10)
+        mid = 1.0 + 0.5 / 512.0
+        assert t[0] == round(4096.0 / np.sqrt(mid))
+        assert t[512] == round(4096.0 / np.sqrt(2.0 * mid))
+
+
+class TestSubnormalsAndExtremes:
+    def test_divide_subnormal_numerator(self):
+        n = np.full(64, np.float32(1e-42))  # subnormal
+        d = np.full(64, np.float32(2.0))
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d)))
+        true = (n.astype(np.float64) / 2.0).astype(np.float32)
+        np.testing.assert_allclose(q, true, rtol=0, atol=1.5e-45)
+
+    def test_divide_near_overflow(self):
+        n = np.full(64, np.float32(3e38))
+        d = np.full(64, np.float32(0.5))
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d)))
+        assert np.all(np.isinf(q)), "overflow must saturate to inf"
+
+    def test_divide_near_underflow(self):
+        n = np.full(64, np.float32(1e-38))
+        d = np.full(64, np.float32(1e10))
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d)))
+        true = (n.astype(np.float64) / 1e10).astype(np.float32)
+        np.testing.assert_allclose(q, true, rtol=0, atol=1.5e-45)
+
+    def test_sqrt_subnormal(self):
+        x = np.full(64, np.float32(1e-41))
+        s = np.asarray(model.sqrt(jnp.asarray(x)))
+        true = np.sqrt(x.astype(np.float64)).astype(np.float32)
+        np.testing.assert_allclose(s, true, rtol=1e-6)
+
+    def test_divide_identical_operands_is_one(self):
+        rng = np.random.default_rng(5)
+        x = np.exp(rng.uniform(-80, 80, 256)).astype(np.float32)
+        q = np.asarray(model.divide(jnp.asarray(x), jnp.asarray(x)))
+        assert np.all(q == 1.0), "x/x must be exactly 1"
+
+    def test_divide_by_power_of_two_exact(self):
+        rng = np.random.default_rng(6)
+        n = rng.uniform(1.0, 1000.0, 256).astype(np.float32)
+        d = np.float32(2.0) ** rng.integers(-10, 10, 256).astype(np.float32)
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d)))
+        np.testing.assert_array_equal(q, n / d)
+
+
+class TestTableBoundaryOperands:
+    """Operands landing exactly on ROM interval boundaries."""
+
+    def test_divisors_on_table_boundaries(self):
+        p = tables.DEFAULT_P
+        j = np.arange(64, dtype=np.float64)
+        d = (1.0 + j / (1 << p)).astype(np.float32)  # exact interval starts
+        n = np.full(64, np.float32(1.5))
+        q = np.asarray(gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d), steps=3))
+        true = (1.5 / d.astype(np.float64)).astype(np.float32)
+        ulp = np.abs(q.view(np.int32) - true.view(np.int32))
+        assert ulp.max() <= 1
+
+    def test_divisor_just_below_two(self):
+        d = np.full(64, np.float32(2.0) - np.float32(2.0) ** -23)
+        n = np.full(64, np.float32(1.0))
+        q = np.asarray(gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d), steps=3))
+        true = (1.0 / d.astype(np.float64)).astype(np.float32)
+        ulp = np.abs(q.view(np.int32) - true.view(np.int32))
+        assert ulp.max() <= 1
+
+
+class TestBlockPicker:
+    def test_whole_batch_blocks_up_to_max(self):
+        for b in (1, 64, 256, 1024):
+            assert gk._pick_block(b) == b
+
+    def test_large_batches_tile(self):
+        assert gk._pick_block(2048) == 1024
+        assert gk._pick_block(4096) == 1024
+
+    def test_odd_batch_falls_back(self):
+        assert 1536 % gk._pick_block(1536) == 0
+
+    @pytest.mark.parametrize("batch", [2048, 4096])
+    def test_tiled_large_batch_correct(self, batch):
+        rng = np.random.default_rng(7)
+        n = rng.uniform(1.0, 2.0, batch).astype(np.float32)
+        d = rng.uniform(1.0, 2.0, batch).astype(np.float32)
+        q = np.asarray(gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d), steps=3))
+        true = (n.astype(np.float64) / d.astype(np.float64)).astype(np.float32)
+        ulp = np.abs(q.view(np.int32) - true.view(np.int32))
+        assert ulp.max() <= 1

@@ -1,0 +1,184 @@
+"""Kernel-vs-reference correctness: the CORE layer-1 signal.
+
+Asserts (1) the Pallas kernels match the pure-jnp oracle in ref.py
+bit-for-bit-ish (same op order => allclose with tiny tolerance), and
+(2) the oracle itself converges to the true quotient / root at the
+expected quadratic rate.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import tables
+from compile.kernels import goldschmidt as gk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xD1D)
+
+
+def mantissas(n, lo=1.0, hi=2.0):
+    return RNG.uniform(lo, hi, size=n).astype(np.float32)
+
+
+class TestDivideKernelVsRef:
+    @pytest.mark.parametrize("batch", [64, 256, 1024])
+    @pytest.mark.parametrize("steps", [1, 2, 3])
+    def test_matches_ref(self, batch, steps):
+        n, d = mantissas(batch), mantissas(batch)
+        table = jnp.asarray(tables.reciprocal_table(tables.DEFAULT_P))
+        want = ref.divide_mantissa_ref(jnp.asarray(n), jnp.asarray(d),
+                                       table, tables.DEFAULT_P, steps)
+        got = gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d), steps=steps)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=0)
+
+    @pytest.mark.parametrize("block", [32, 64, 256])
+    def test_block_size_invariance(self, block):
+        n, d = mantissas(512), mantissas(512)
+        base = gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d), block=256)
+        got = gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d), block=block)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+    def test_convergence_is_quadratic(self):
+        # error(steps+1) ~ error(steps)^2: with p=10 table, step errors go
+        # ~2^-11 -> ~2^-22 -> below f32 eps
+        n, d = mantissas(4096), mantissas(4096)
+        true = (n.astype(np.float64) / d.astype(np.float64))
+        errs = []
+        for steps in (0, 1, 2):
+            q = np.asarray(gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d),
+                                              steps=steps), dtype=np.float64)
+            errs.append(np.max(np.abs(q - true) / true))
+        assert errs[0] < 2.0 ** -9
+        assert errs[1] < 2.0 ** -18
+        assert errs[2] < 2.0 ** -22  # f32 floor
+
+    def test_paper_q4_accuracy(self):
+        # the paper's full configuration (steps=3 => q4) is correct to
+        # float32 precision
+        n, d = mantissas(4096), mantissas(4096)
+        q = np.asarray(gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d),
+                                          steps=3))
+        true = (n.astype(np.float64) / d.astype(np.float64)).astype(np.float32)
+        ulp = np.abs(q.view(np.int32) - true.view(np.int32))
+        assert ulp.max() <= 4
+
+    def test_exact_powers(self):
+        # d an exact table-boundary power: 1.0 divides exactly
+        n = np.linspace(1.0, 1.9990234375, 64).astype(np.float32)
+        d = np.ones(64, dtype=np.float32)
+        q = np.asarray(gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d)))
+        np.testing.assert_allclose(q, n, rtol=2e-7)
+
+    def test_bad_batch_block_raises(self):
+        n = jnp.ones((100,), jnp.float32)
+        with pytest.raises(ValueError):
+            gk.divide_mantissa(n, n, block=64)
+
+
+class TestSqrtFamilyKernelVsRef:
+    @pytest.mark.parametrize("batch", [64, 256])
+    @pytest.mark.parametrize("steps", [1, 2, 3])
+    def test_sqrt_matches_ref(self, batch, steps):
+        d = mantissas(batch, 1.0, 4.0)
+        table = jnp.asarray(tables.rsqrt_table(tables.DEFAULT_P))
+        want = ref.sqrt_mantissa_ref(jnp.asarray(d), table,
+                                     tables.DEFAULT_P, steps)
+        got = gk.sqrt_mantissa(jnp.asarray(d), steps=steps)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=0)
+
+    @pytest.mark.parametrize("batch", [64, 256])
+    @pytest.mark.parametrize("steps", [1, 2, 3])
+    def test_rsqrt_matches_ref(self, batch, steps):
+        d = mantissas(batch, 1.0, 4.0)
+        table = jnp.asarray(tables.rsqrt_table(tables.DEFAULT_P))
+        want = ref.rsqrt_mantissa_ref(jnp.asarray(d), table,
+                                      tables.DEFAULT_P, steps)
+        got = gk.rsqrt_mantissa(jnp.asarray(d), steps=steps)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=0)
+
+    def test_sqrt_accuracy(self):
+        d = mantissas(4096, 1.0, 4.0)
+        s = np.asarray(gk.sqrt_mantissa(jnp.asarray(d), steps=3),
+                       dtype=np.float64)
+        true = np.sqrt(d.astype(np.float64))
+        assert np.max(np.abs(s - true) / true) < 2.0 ** -21
+
+    def test_rsqrt_accuracy(self):
+        d = mantissas(4096, 1.0, 4.0)
+        y = np.asarray(gk.rsqrt_mantissa(jnp.asarray(d), steps=3),
+                       dtype=np.float64)
+        true = 1.0 / np.sqrt(d.astype(np.float64))
+        assert np.max(np.abs(y - true) / true) < 2.0 ** -21
+
+    def test_seam_values(self):
+        # operands straddling the [1,2)/[2,4) table seam
+        seam = np.array([1.9999999, 2.0, 2.0000002, 1.0, 3.9999998],
+                        dtype=np.float32)
+        d = np.resize(seam, 64).astype(np.float32)
+        s = np.asarray(gk.sqrt_mantissa(jnp.asarray(d), steps=3))
+        true = np.sqrt(d.astype(np.float64))
+        np.testing.assert_allclose(s, true, rtol=3e-7)
+
+
+class TestHypothesisSweeps:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch_log2=st.integers(min_value=0, max_value=11),
+        steps=st.integers(min_value=0, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_divide_any_shape(self, batch_log2, steps, seed):
+        batch = 1 << batch_log2
+        r = np.random.default_rng(seed)
+        n = r.uniform(1.0, 2.0, batch).astype(np.float32)
+        d = r.uniform(1.0, 2.0, batch).astype(np.float32)
+        table = jnp.asarray(tables.reciprocal_table(tables.DEFAULT_P))
+        want = ref.divide_mantissa_ref(jnp.asarray(n), jnp.asarray(d),
+                                       table, tables.DEFAULT_P, steps)
+        got = gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d), steps=steps)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        batch_log2=st.integers(min_value=0, max_value=10),
+        steps=st.integers(min_value=0, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        op=st.sampled_from(["sqrt", "rsqrt"]),
+    )
+    def test_sqrt_family_any_shape(self, batch_log2, steps, seed, op):
+        batch = 1 << batch_log2
+        r = np.random.default_rng(seed)
+        d = r.uniform(1.0, 4.0, batch).astype(np.float32)
+        table = jnp.asarray(tables.rsqrt_table(tables.DEFAULT_P))
+        if op == "sqrt":
+            want = ref.sqrt_mantissa_ref(jnp.asarray(d), table,
+                                         tables.DEFAULT_P, steps)
+            got = gk.sqrt_mantissa(jnp.asarray(d), steps=steps)
+        else:
+            want = ref.rsqrt_mantissa_ref(jnp.asarray(d), table,
+                                          tables.DEFAULT_P, steps)
+            got = gk.rsqrt_mantissa(jnp.asarray(d), steps=steps)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        p=st.integers(min_value=6, max_value=12),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_divide_table_width_sweep(self, p, seed):
+        # first-step relative error must shrink ~4x per extra table bit
+        r = np.random.default_rng(seed)
+        n = r.uniform(1.0, 2.0, 256).astype(np.float32)
+        d = r.uniform(1.0, 2.0, 256).astype(np.float32)
+        q = np.asarray(gk.divide_mantissa(jnp.asarray(n), jnp.asarray(d),
+                                          p=p, steps=0), dtype=np.float64)
+        true = n.astype(np.float64) / d.astype(np.float64)
+        assert np.max(np.abs(q - true) / true) < 2.0 ** (-p)

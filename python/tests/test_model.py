@@ -1,0 +1,121 @@
+"""Layer-2 model tests: full float32 ops with sign/exponent handling."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+
+RNG = np.random.default_rng(0xF00)
+
+
+def rand_floats(n, lo, hi, signed=False):
+    x = RNG.uniform(lo, hi, size=n).astype(np.float32)
+    if signed:
+        x *= RNG.choice([-1.0, 1.0], size=n).astype(np.float32)
+    return x
+
+
+class TestDivide:
+    def test_wide_dynamic_range(self):
+        n = rand_floats(1024, 1e-20, 1e20, signed=True)
+        d = rand_floats(1024, 1e-20, 1e20, signed=True)
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d)))
+        true = (n.astype(np.float64) / d.astype(np.float64)).astype(np.float32)
+        np.testing.assert_allclose(q, true, rtol=5e-7)
+
+    def test_signs(self):
+        n = np.array([1.5, -1.5, 1.5, -1.5] * 16, dtype=np.float32)
+        d = np.array([2.0, 2.0, -2.0, -2.0] * 16, dtype=np.float32)
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d)))
+        np.testing.assert_allclose(q, n / d, rtol=1e-6)
+
+    def test_zero_numerator(self):
+        n = np.zeros(64, dtype=np.float32)
+        d = rand_floats(64, 0.5, 100.0)
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d)))
+        assert np.all(q == 0.0)
+
+    def test_exact_quotients(self):
+        # quotients that are exactly representable must round-trip tightly
+        d = rand_floats(256, 1.0, 2.0)
+        c = np.float32(3.0)
+        n = (d * c).astype(np.float32)
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d)))
+        ulp = np.abs(q.view(np.int32) - np.full(256, c, np.float32).view(np.int32))
+        assert ulp.max() <= 2
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           steps=st.integers(2, 4))
+    def test_hypothesis_vs_numpy(self, seed, steps):
+        r = np.random.default_rng(seed)
+        n = r.uniform(-1e6, 1e6, 128).astype(np.float32)
+        d = np.where(np.abs(dd := r.uniform(-1e6, 1e6, 128)) < 1e-3,
+                     1.0, dd).astype(np.float32)
+        q = np.asarray(model.divide(jnp.asarray(n), jnp.asarray(d),
+                                    steps=steps))
+        true = (n.astype(np.float64) / d.astype(np.float64)).astype(np.float32)
+        np.testing.assert_allclose(q, true, rtol=6e-7, atol=1e-30)
+
+
+class TestSqrtRsqrt:
+    def test_sqrt_wide_range(self):
+        x = rand_floats(1024, 1e-20, 1e20)
+        s = np.asarray(model.sqrt(jnp.asarray(x)))
+        true = np.sqrt(x.astype(np.float64)).astype(np.float32)
+        np.testing.assert_allclose(s, true, rtol=5e-7)
+
+    def test_sqrt_zero(self):
+        x = np.zeros(64, dtype=np.float32)
+        assert np.all(np.asarray(model.sqrt(jnp.asarray(x))) == 0.0)
+
+    def test_sqrt_exact_squares(self):
+        k = np.arange(1, 65, dtype=np.float32)
+        s = np.asarray(model.sqrt(jnp.asarray(k * k)))
+        ulp = np.abs(s.view(np.int32) - k.view(np.int32))
+        assert ulp.max() <= 2
+
+    def test_rsqrt_wide_range(self):
+        x = rand_floats(1024, 1e-18, 1e18)
+        y = np.asarray(model.rsqrt(jnp.asarray(x)))
+        true = (1.0 / np.sqrt(x.astype(np.float64))).astype(np.float32)
+        np.testing.assert_allclose(y, true, rtol=5e-7)
+
+    def test_rsqrt_powers_of_four(self):
+        x = np.float32(4.0) ** np.arange(-8, 8, dtype=np.float32)
+        x = np.resize(x, 64)
+        y = np.asarray(model.rsqrt(jnp.asarray(x)))
+        true = (1.0 / np.sqrt(x.astype(np.float64))).astype(np.float32)
+        np.testing.assert_allclose(y, true, rtol=3e-7)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sqrt_family(self, seed):
+        r = np.random.default_rng(seed)
+        x = np.exp(r.uniform(np.log(1e-15), np.log(1e15), 128)).astype(np.float32)
+        s = np.asarray(model.sqrt(jnp.asarray(x)))
+        y = np.asarray(model.rsqrt(jnp.asarray(x)))
+        np.testing.assert_allclose(
+            s, np.sqrt(x.astype(np.float64)).astype(np.float32), rtol=6e-7)
+        np.testing.assert_allclose(
+            y, (1 / np.sqrt(x.astype(np.float64))).astype(np.float32), rtol=6e-7)
+
+
+class TestOpRegistry:
+    def test_registry_contents(self):
+        assert set(model.OPS) == {"divide", "sqrt", "rsqrt"}
+        assert model.op_arity("divide") == 2
+        assert model.op_arity("sqrt") == 1
+        assert model.op_arity("rsqrt") == 1
+
+    def test_op_fn_returns_tuple(self):
+        f = model.op_fn("sqrt")
+        out = f(jnp.ones((64,), jnp.float32))
+        assert isinstance(out, tuple) and len(out) == 1
+
+    def test_unknown_op(self):
+        with pytest.raises(KeyError):
+            model.op_fn("modulo")

@@ -1,0 +1,102 @@
+"""Tests for the reciprocal / rsqrt ROM table construction."""
+
+import numpy as np
+import pytest
+
+from compile import tables
+
+
+class TestReciprocalTable:
+    @pytest.mark.parametrize("p", [4, 6, 8, 10, 12])
+    def test_shape_and_range(self, p):
+        t = tables.reciprocal_table_ints(p)
+        assert t.shape == (1 << p,)
+        # K approximates 1/D for D in [1,2): scaled by 2^(p+2) it must lie
+        # in (2^(p+1), 2^(p+2)]
+        assert t.min() > (1 << (p + 1))
+        assert t.max() <= (1 << (p + 2))
+
+    @pytest.mark.parametrize("p", [4, 6, 8, 10, 12])
+    def test_monotone_nonincreasing(self, p):
+        t = tables.reciprocal_table_ints(p)
+        assert np.all(np.diff(t) <= 0), "1/D decreases with D"
+
+    @pytest.mark.parametrize("p", [4, 6, 8, 10])
+    def test_error_bound(self, p):
+        # The optimal-midpoint table bounds |D*K - 1| by ~2^-(p+1) plus
+        # the output quantization 2^-(p+2) * D < 2^-(p+1).
+        err = tables.max_table_error(p)
+        assert err < 2.0 ** (-p - 1) + 2.0 ** (-p - 1)
+
+    @pytest.mark.parametrize("p", [6, 10])
+    def test_midpoint_optimality_exhaustive(self, p):
+        # Each entry must be the round-to-nearest (p+2)-bit reciprocal of
+        # its interval midpoint — check directly against exact math.
+        t = tables.reciprocal_table_ints(p)
+        scale = 1 << (p + 2)
+        for j in range(0, 1 << p, max(1, (1 << p) // 256)):
+            mid = 1.0 + (2 * j + 1) / float(1 << (p + 1))
+            want = round(scale / mid)
+            assert t[j] == want, f"entry {j}"
+
+    def test_first_and_last_entries(self):
+        p = tables.DEFAULT_P
+        t = tables.reciprocal_table_ints(p)
+        scale = 1 << (p + 2)
+        # first interval midpoint ~1+2^-(p+1) -> K ~ scale*(1-2^-(p+1))
+        assert abs(int(t[0]) - round(scale / (1 + 2.0 ** (-p - 1)))) == 0
+        # last interval midpoint ~2 - 2^-(p+1) -> K ~ scale/2
+        assert t[-1] in (scale // 2, scale // 2 + 1)
+
+    def test_float_table_exact(self):
+        # float32 entries must represent the integer table exactly
+        p = tables.DEFAULT_P
+        ti = tables.reciprocal_table_ints(p)
+        tf = tables.reciprocal_table(p)
+        back = np.asarray(tf, dtype=np.float64) * (1 << (p + 2))
+        assert np.array_equal(back.astype(np.int64), ti)
+
+    def test_p_out_of_range(self):
+        with pytest.raises(ValueError):
+            tables.reciprocal_table_ints(0)
+        with pytest.raises(ValueError):
+            tables.reciprocal_table_ints(22)
+
+
+class TestRsqrtTable:
+    @pytest.mark.parametrize("p", [4, 8, 10])
+    def test_shape_and_range(self, p):
+        t = tables.rsqrt_table_ints(p)
+        assert t.shape == (1 << p,)
+        # 1/sqrt(D) for D in [1,4) lies in (1/2, 1]
+        assert t.min() > (1 << (p + 1))
+        assert t.max() <= (1 << (p + 2))
+
+    @pytest.mark.parametrize("p", [4, 8, 10])
+    def test_monotone_within_halves(self, p):
+        # monotone nonincreasing within each exponent-parity half
+        t = tables.rsqrt_table_ints(p)
+        half = 1 << (p - 1)
+        assert np.all(np.diff(t[:half]) <= 0)
+        assert np.all(np.diff(t[half:]) <= 0)
+
+    @pytest.mark.parametrize("p", [6, 10])
+    def test_relative_error(self, p):
+        # table value vs true 1/sqrt at interval midpoints: within quantum
+        t = tables.rsqrt_table(p).astype(np.float64)
+        half = 1 << (p - 1)
+        for e0, base in ((0, 1.0), (1, 2.0)):
+            j = np.arange(half)
+            mid = base * (1.0 + (j + 0.5) / half)
+            got = t[e0 * half + (j if e0 == 0 else j)]
+            got = t[e0 * half + j]
+            err = np.abs(got * np.sqrt(mid) - 1.0)
+            assert err.max() < 2.0 ** (-p - 2) * 4
+
+    def test_seam_continuity(self):
+        # last entry of [1,2) half vs first entry of [2,4) half: the true
+        # function is continuous (1/sqrt(2) boundary), entries must be close
+        p = 10
+        t = tables.rsqrt_table(p).astype(np.float64)
+        half = 1 << (p - 1)
+        assert abs(t[half - 1] - t[half]) < 2.0 ** (-p + 2)

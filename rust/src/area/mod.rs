@@ -1,0 +1,220 @@
+//! Gate-equivalent area model: turns a datapath [`Inventory`] into
+//! numbers, quantifying the paper's claim A1 ("avoided the use of 3
+//! multipliers and 2 two's complement units which saves a significant
+//! area").
+//!
+//! Unit costs come from the bit-level models in [`crate::arith::mult`]
+//! and [`crate::arith::twos`]; ROM bits and the logic block are costed
+//! here. Conventions (unit-gate accounting) are documented in
+//! [`crate::arith::mult`].
+
+use crate::arith::mult::{BoothWallaceMultiplier, MultiplierModel, UnitCost};
+use crate::arith::twos::{ComplementBlock, ComplementKind};
+use crate::sim::Inventory;
+
+/// Area cost per ROM bit in gate equivalents (dense NOR ROM).
+pub const ROM_GE_PER_BIT: f64 = 0.25;
+
+/// Flip-flop cost in gate equivalents.
+pub const FF_GE: f64 = 4.0;
+
+/// Full area breakdown of one datapath instance, in gate equivalents.
+#[derive(Clone, Debug)]
+pub struct AreaReport {
+    /// Design label ("baseline" / "feedback").
+    pub design: String,
+    /// Multiplier count and total GE.
+    pub multipliers: (u32, f64),
+    /// Complement-block count and total GE.
+    pub complements: (u32, f64),
+    /// ROM bits and GE.
+    pub rom: (u64, f64),
+    /// Logic-block count and GE (mux row + counter + select FF).
+    pub logic_blocks: (u32, f64),
+    /// Pipeline/output registers GE (same for both designs: q, r, K regs).
+    pub registers: f64,
+}
+
+impl AreaReport {
+    /// Total gate equivalents.
+    pub fn total(&self) -> f64 {
+        self.multipliers.1 + self.complements.1 + self.rom.1 + self.logic_blocks.1 + self.registers
+    }
+}
+
+/// Parameters of the area evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaParams {
+    /// Datapath word fraction width (multiplier operand width - 2).
+    pub frac: u32,
+    /// ROM input width.
+    pub table_p: u32,
+    /// Complement circuit kind.
+    pub complement: ComplementKind,
+}
+
+impl AreaParams {
+    /// Derive from an algorithm config.
+    pub fn from_config(cfg: &crate::goldschmidt::Config) -> Self {
+        Self { frac: cfg.frac, table_p: cfg.table_p, complement: cfg.complement }
+    }
+
+    /// Multiplier operand width (integer + fraction bits).
+    pub fn mult_width(&self) -> u32 {
+        self.frac + 2
+    }
+}
+
+/// Cost of one multiplier at these parameters (Booth–Wallace: the
+/// high-speed design the 4-cycle pipelined unit corresponds to).
+pub fn multiplier_cost(params: &AreaParams) -> UnitCost {
+    BoothWallaceMultiplier::new(params.mult_width().min(62)).cost()
+}
+
+/// Cost of one complement block.
+pub fn complement_cost(params: &AreaParams) -> UnitCost {
+    ComplementBlock::new(params.frac, params.complement).cost()
+}
+
+/// Cost of the logic block: a 2:1 mux row over the word (3 GE/bit), a
+/// ceil(log2(steps))-ish pass counter (~4 FF + inc logic), and the
+/// registered select line.
+pub fn logic_block_cost(params: &AreaParams) -> UnitCost {
+    let word = (params.frac + 2) as f64;
+    let mux = 3.0 * word;
+    let counter = 4.0 * FF_GE + 10.0; // 4-bit counter + compare/reset
+    let select_ff = FF_GE;
+    UnitCost { gates: mux + counter + select_ff, depth: 3.0 }
+}
+
+/// ROM storage bits for a `p`-in / `p+2`-out table.
+pub fn rom_bits(table_p: u32) -> u64 {
+    (1u64 << table_p) * (table_p as u64 + 2)
+}
+
+/// Build the area report for a datapath inventory.
+pub fn area_of(design: &str, inv: &Inventory, params: &AreaParams) -> AreaReport {
+    let m = multiplier_cost(params);
+    let c = complement_cost(params);
+    let lb = logic_block_cost(params);
+    let bits = rom_bits(params.table_p) * inv.roms as u64;
+    let word = (params.frac + 2) as f64;
+    // output registers: q, r, K (one word each) — both designs pipeline
+    // through the same three architectural registers
+    let registers = 3.0 * word * FF_GE;
+    AreaReport {
+        design: design.to_string(),
+        multipliers: (inv.multipliers, inv.multipliers as f64 * m.gates),
+        complements: (inv.complement_blocks, inv.complement_blocks as f64 * c.gates),
+        rom: (bits, bits as f64 * ROM_GE_PER_BIT),
+        logic_blocks: (inv.logic_blocks, inv.logic_blocks as f64 * lb.gates),
+        registers,
+    }
+}
+
+/// The paper's headline comparison: area of both designs plus savings.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// Baseline (unrolled) report.
+    pub baseline: AreaReport,
+    /// Feedback (reduced) report.
+    pub feedback: AreaReport,
+}
+
+impl Comparison {
+    /// Compare the two designs at a given algorithm configuration.
+    pub fn at(cfg: &crate::goldschmidt::Config) -> Self {
+        use crate::sim::{BaselineDatapath, FeedbackDatapath};
+        use crate::tables::ReciprocalTable;
+        let params = AreaParams::from_config(cfg);
+        let table = ReciprocalTable::new(cfg.table_p);
+        let b = BaselineDatapath::new(table.clone(), *cfg).inventory();
+        let f = FeedbackDatapath::new(table, *cfg).inventory();
+        Self {
+            baseline: area_of("baseline", &b, &params),
+            feedback: area_of("feedback", &f, &params),
+        }
+    }
+
+    /// Absolute GE saved by the feedback design.
+    pub fn saved(&self) -> f64 {
+        self.baseline.total() - self.feedback.total()
+    }
+
+    /// Fractional saving (0..1).
+    pub fn saved_fraction(&self) -> f64 {
+        self.saved() / self.baseline.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goldschmidt::Config;
+
+    #[test]
+    fn multiplier_dominates() {
+        let params = AreaParams::from_config(&Config::default());
+        let m = multiplier_cost(&params);
+        let c = complement_cost(&params);
+        let lb = logic_block_cost(&params);
+        assert!(m.gates > 10.0 * c.gates);
+        assert!(m.gates > 10.0 * lb.gates);
+    }
+
+    #[test]
+    fn feedback_saves_significant_area() {
+        // paper claim A1: the q4 configuration saves ~3/7 of multiplier
+        // area; total saving must be large and positive
+        let cmp = Comparison::at(&Config::default());
+        assert!(cmp.saved() > 0.0);
+        assert!(
+            cmp.saved_fraction() > 0.30,
+            "saving fraction {} too small",
+            cmp.saved_fraction()
+        );
+        assert!(cmp.saved_fraction() < 0.60);
+    }
+
+    #[test]
+    fn unit_deltas_match_paper() {
+        let cmp = Comparison::at(&Config::default());
+        assert_eq!(cmp.baseline.multipliers.0 - cmp.feedback.multipliers.0, 3);
+        assert_eq!(cmp.baseline.complements.0 - cmp.feedback.complements.0, 2);
+        assert_eq!(cmp.feedback.logic_blocks.0, 1);
+        assert_eq!(cmp.baseline.logic_blocks.0, 0);
+    }
+
+    #[test]
+    fn logic_block_cost_is_small_vs_savings() {
+        // §V: the logic block must cost far less than what it saves
+        let cfg = Config::default();
+        let params = AreaParams::from_config(&cfg);
+        let lb = logic_block_cost(&params);
+        let m = multiplier_cost(&params);
+        assert!(lb.gates < 0.05 * (3.0 * m.gates));
+    }
+
+    #[test]
+    fn rom_bits_counts() {
+        assert_eq!(rom_bits(10), 1024 * 12);
+        assert_eq!(rom_bits(8), 256 * 10);
+    }
+
+    #[test]
+    fn area_grows_with_width() {
+        let narrow = Comparison::at(&Config::default().with_frac(20));
+        let wide = Comparison::at(&Config::default().with_frac(40));
+        assert!(wide.baseline.total() > narrow.baseline.total());
+        // savings grow with width too (multipliers scale quadratically)
+        assert!(wide.saved() > narrow.saved());
+    }
+
+    #[test]
+    fn report_total_is_sum_of_parts() {
+        let cmp = Comparison::at(&Config::default());
+        let r = &cmp.baseline;
+        let sum = r.multipliers.1 + r.complements.1 + r.rom.1 + r.logic_blocks.1 + r.registers;
+        assert!((r.total() - sum).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,301 @@
+//! Unsigned fixed-point `Q2.f`: the Goldschmidt datapath word.
+//!
+//! All values flowing through the paper's datapath live in `[0, 4)`:
+//! mantissas in `[1, 2)`, products `q_i, r_i` in `(1/2, 2)`, and the
+//! complement constants `K_i = 2 - r_i` near 1. A `Fixed` stores the
+//! value as `bits / 2^frac` with 2 integer bits, so `frac + 2 <= 64`
+//! (fraction widths up to 62 bits, covering every guard-bit setting the
+//! experiments sweep).
+//!
+//! Multiplication produces a `2*frac`-bit exact product in `u128` and
+//! rounds back to the result width under a selectable [`Rounding`] mode —
+//! exactly what a hardware multiplier + output register does.
+
+/// Rounding mode applied when a wide product is narrowed back to the
+/// datapath width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Drop low bits (hardware-cheapest; biased toward zero).
+    Truncate,
+    /// Round half up (adds the 0.5-ulp constant before dropping bits).
+    Nearest,
+}
+
+/// An unsigned fixed-point value with 2 integer bits and `frac` fraction
+/// bits: `value = bits / 2^frac`, `0 <= value < 4`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fixed {
+    bits: u64,
+    frac: u32,
+}
+
+impl Fixed {
+    /// Maximum supported fraction width.
+    pub const MAX_FRAC: u32 = 62;
+
+    /// From raw bits (must fit in 2 integer + `frac` fraction bits).
+    pub fn from_bits(bits: u64, frac: u32) -> Self {
+        assert!(frac <= Self::MAX_FRAC, "frac {frac} > {}", Self::MAX_FRAC);
+        assert!(
+            bits < (1u64 << (frac + 2)),
+            "bits {bits:#x} out of Q2.{frac} range"
+        );
+        Self { bits, frac }
+    }
+
+    /// Round-to-nearest conversion from f64 (panics outside `[0, 4)`).
+    pub fn from_f64(x: f64, frac: u32) -> Self {
+        assert!(frac <= Self::MAX_FRAC);
+        assert!((0.0..4.0).contains(&x), "{x} out of [0,4)");
+        let scaled = (x * (1u64 << frac) as f64).round() as u64;
+        // x*2^frac may round up to exactly 4.0*2^frac; clamp into range
+        let max = (1u64 << (frac + 2)) - 1;
+        Self { bits: scaled.min(max), frac }
+    }
+
+    /// The constant 1.0 at the given fraction width.
+    pub fn one(frac: u32) -> Self {
+        Self::from_bits(1u64 << frac, frac)
+    }
+
+    /// The constant 2.0 at the given fraction width.
+    pub fn two(frac: u32) -> Self {
+        Self::from_bits(1u64 << (frac + 1), frac)
+    }
+
+    /// Raw bits.
+    pub fn bits(&self) -> u64 {
+        self.bits
+    }
+
+    /// Fraction width.
+    pub fn frac(&self) -> u32 {
+        self.frac
+    }
+
+    /// Exact conversion to f64 (frac <= 62 keeps this exact: bits < 2^64
+    /// and f64 has enough range; values < 4 need at most 64 significand
+    /// bits — not exact in general! — so we document: exact for
+    /// frac <= 51, otherwise correctly rounded).
+    pub fn to_f64(&self) -> f64 {
+        self.bits as f64 / (1u64 << self.frac) as f64
+    }
+
+    /// Change fraction width, rounding if narrowing.
+    pub fn with_frac(&self, frac: u32, mode: Rounding) -> Self {
+        assert!(frac <= Self::MAX_FRAC);
+        if frac >= self.frac {
+            Self { bits: self.bits << (frac - self.frac), frac }
+        } else {
+            let shift = self.frac - frac;
+            let bits = match mode {
+                Rounding::Truncate => self.bits >> shift,
+                Rounding::Nearest => {
+                    (self.bits + (1u64 << (shift - 1))) >> shift
+                }
+            };
+            let max = (1u64 << (frac + 2)) - 1;
+            Self { bits: bits.min(max), frac }
+        }
+    }
+
+    /// Exact wide multiply, then narrow to `self.frac` under `mode`.
+    /// Both operands must share a fraction width (as datapath wires do).
+    pub fn mul(&self, rhs: &Fixed, mode: Rounding) -> Self {
+        assert_eq!(self.frac, rhs.frac, "mixed fraction widths");
+        let wide = (self.bits as u128) * (rhs.bits as u128); // Q4.(2f)
+        let shift = self.frac;
+        let bits = match mode {
+            Rounding::Truncate => (wide >> shift) as u64,
+            Rounding::Nearest => {
+                ((wide + (1u128 << (shift - 1))) >> shift) as u64
+            }
+        };
+        let max = (1u64 << (self.frac + 2)) - 1;
+        Self { bits: bits.min(max), frac: self.frac }
+    }
+
+    /// Exact `2 - self` (the paper's two's-complement block output).
+    /// Requires `self <= 2`.
+    pub fn two_minus(&self) -> Self {
+        let two = 1u64 << (self.frac + 1);
+        assert!(self.bits <= two, "two_minus of value > 2");
+        Self { bits: two - self.bits, frac: self.frac }
+    }
+
+    /// One's-complement approximation of `2 - self`: bitwise NOT of the
+    /// fraction+integer field modulo 4, i.e. `2 - self - ulp` for
+    /// `self in (0, 2]`. This is the carry-free hardware shortcut EIMMW
+    /// notes; it under-shoots by exactly one ulp.
+    pub fn two_minus_ones_complement(&self) -> Self {
+        let mask = (1u64 << (self.frac + 2)) - 1;
+        let two = 1u64 << (self.frac + 1);
+        assert!(self.bits <= two && self.bits > 0);
+        // (2 - x - ulp) mod 4 == NOT(x) truncated to the word, for x<=2
+        let bits = (two.wrapping_sub(self.bits).wrapping_sub(1)) & mask;
+        Self { bits, frac: self.frac }
+    }
+
+    /// Saturating add (datapath adders saturate rather than wrap).
+    pub fn add(&self, rhs: &Fixed) -> Self {
+        assert_eq!(self.frac, rhs.frac);
+        let max = (1u64 << (self.frac + 2)) - 1;
+        Self { bits: (self.bits + rhs.bits).min(max), frac: self.frac }
+    }
+
+    /// Subtract (panics on underflow — the datapath never goes negative).
+    pub fn sub(&self, rhs: &Fixed) -> Self {
+        assert_eq!(self.frac, rhs.frac);
+        assert!(self.bits >= rhs.bits, "fixed-point underflow");
+        Self { bits: self.bits - rhs.bits, frac: self.frac }
+    }
+
+    /// Absolute difference in ulps at this width.
+    pub fn ulp_diff(&self, rhs: &Fixed) -> u64 {
+        assert_eq!(self.frac, rhs.frac);
+        self.bits.abs_diff(rhs.bits)
+    }
+}
+
+impl std::fmt::Display for Fixed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.*}", (self.frac as usize / 3) + 1, self.to_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn roundtrip_f64() {
+        for &x in &[0.0, 0.5, 1.0, 1.5, 1.999999, 3.75] {
+            let f = Fixed::from_f64(x, 30);
+            assert!((f.to_f64() - x).abs() < 1e-9, "{x}");
+        }
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(Fixed::one(10).to_f64(), 1.0);
+        assert_eq!(Fixed::two(10).to_f64(), 2.0);
+        assert_eq!(Fixed::one(10).bits(), 1 << 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of [0,4)")]
+    fn from_f64_range_checked() {
+        Fixed::from_f64(4.0, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of Q2")]
+    fn from_bits_range_checked() {
+        Fixed::from_bits(1 << 13, 10); // 8.0 in Q2.10
+    }
+
+    #[test]
+    fn mul_exact_small() {
+        let a = Fixed::from_f64(1.5, 20);
+        let b = Fixed::from_f64(1.25, 20);
+        let p = a.mul(&b, Rounding::Nearest);
+        assert!((p.to_f64() - 1.875).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mul_matches_integer_reference() {
+        check::property("fixed mul == u128 reference", |g| {
+            let frac = g.usize_in(8, 52) as u32;
+            let a_bits = g.u64_below(1u64 << (frac + 1)); // values < 2
+            let b_bits = g.u64_below(1u64 << (frac + 1));
+            let a = Fixed::from_bits(a_bits, frac);
+            let b = Fixed::from_bits(b_bits, frac);
+            let got = a.mul(&b, Rounding::Truncate).bits();
+            let want = ((a_bits as u128 * b_bits as u128) >> frac) as u64;
+            ensure(got == want, format!("frac={frac} a={a_bits} b={b_bits}"))
+        });
+    }
+
+    #[test]
+    fn nearest_vs_truncate_differ_by_at_most_one() {
+        check::property("rounding modes within 1 ulp", |g| {
+            let frac = g.usize_in(4, 50) as u32;
+            let a = Fixed::from_bits(g.u64_below(1u64 << (frac + 1)), frac);
+            let b = Fixed::from_bits(g.u64_below(1u64 << (frac + 1)), frac);
+            let t = a.mul(&b, Rounding::Truncate).bits();
+            let n = a.mul(&b, Rounding::Nearest).bits();
+            ensure(n == t || n == t + 1, format!("t={t} n={n}"))
+        });
+    }
+
+    #[test]
+    fn two_minus_exact() {
+        let r = Fixed::from_f64(0.999, 30);
+        let k = r.two_minus();
+        assert!((k.to_f64() - 1.001).abs() < 1e-8);
+        // identity: r + (2 - r) == 2
+        assert_eq!(r.add(&k).bits(), Fixed::two(30).bits());
+    }
+
+    #[test]
+    fn twos_complement_identity_property() {
+        check::property("r + (2-r) == 2", |g| {
+            let frac = g.usize_in(4, 60) as u32;
+            let bits = g.u64_below((1u64 << (frac + 1)) + 1);
+            let r = Fixed::from_bits(bits, frac);
+            let k = r.two_minus();
+            ensure(
+                r.add(&k).bits() == Fixed::two(frac).bits(),
+                format!("frac={frac} bits={bits}"),
+            )
+        });
+    }
+
+    #[test]
+    fn ones_complement_is_one_ulp_low() {
+        check::property("ones-complement = exact - 1 ulp", |g| {
+            let frac = g.usize_in(4, 60) as u32;
+            let bits = 1 + g.u64_below(1u64 << (frac + 1));
+            let r = Fixed::from_bits(bits, frac);
+            let exact = r.two_minus().bits();
+            let approx = r.two_minus_ones_complement().bits();
+            ensure(
+                approx == exact.wrapping_sub(1),
+                format!("frac={frac} bits={bits} exact={exact} approx={approx}"),
+            )
+        });
+    }
+
+    #[test]
+    fn with_frac_widen_narrow() {
+        let a = Fixed::from_f64(1.2345678, 40);
+        let w = a.with_frac(50, Rounding::Nearest);
+        assert_eq!(w.frac(), 50);
+        assert!((w.to_f64() - a.to_f64()).abs() < 1e-12);
+        let n = a.with_frac(10, Rounding::Nearest);
+        assert!((n.to_f64() - 1.2345678).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sub_and_ulp_diff() {
+        let a = Fixed::from_bits(1000, 10);
+        let b = Fixed::from_bits(990, 10);
+        assert_eq!(a.sub(&b).bits(), 10);
+        assert_eq!(a.ulp_diff(&b), 10);
+        assert_eq!(b.ulp_diff(&a), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        Fixed::from_bits(1, 10).sub(&Fixed::from_bits(2, 10));
+    }
+
+    #[test]
+    fn add_saturates() {
+        let max = Fixed::from_bits((1 << 12) - 1, 10);
+        let one = Fixed::one(10);
+        assert_eq!(max.add(&one).bits(), (1 << 12) - 1);
+    }
+}

@@ -1,0 +1,235 @@
+//! IEEE-754 binary32 pack/unpack: the FPU boundary around the paper's
+//! mantissa datapath.
+//!
+//! The divider array only ever sees normalized mantissas in `[1, 2)`
+//! (or `[1, 4)` for the square-root path); this module performs the
+//! decomposition and reassembly a floating-point unit wraps around it,
+//! including round-to-nearest-even on the way back out.
+
+use super::fixed::Fixed;
+
+/// A decomposed finite, nonzero binary32: `value = (-1)^sign * mant * 2^exp`
+/// with `mant` a [`Fixed`] in `[1, 2)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Unpacked {
+    /// Sign bit.
+    pub sign: bool,
+    /// Unbiased exponent of the leading bit.
+    pub exp: i32,
+    /// Mantissa in `[1, 2)` at the requested fraction width.
+    pub mant: Fixed,
+}
+
+/// Classification of inputs the datapath does not handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpClass {
+    /// Normal or subnormal nonzero finite value (datapath-eligible;
+    /// subnormals are normalized with an exponent adjustment).
+    Finite,
+    /// Positive or negative zero.
+    Zero,
+    /// Infinity.
+    Inf,
+    /// Not a number.
+    Nan,
+}
+
+/// Classify an f32 for dispatch before the datapath.
+pub fn classify(x: f32) -> FpClass {
+    if x.is_nan() {
+        FpClass::Nan
+    } else if x.is_infinite() {
+        FpClass::Inf
+    } else if x == 0.0 {
+        FpClass::Zero
+    } else {
+        FpClass::Finite
+    }
+}
+
+/// Unpack a finite nonzero f32 into sign/exponent/mantissa-in-[1,2) at
+/// `frac` fraction bits. Subnormals are normalized (their leading zeros
+/// move into the exponent), exactly as a hardware pre-normalizer does.
+pub fn unpack(x: f32, frac: u32) -> Unpacked {
+    assert!(classify(x) == FpClass::Finite, "unpack({x}) on non-finite");
+    let bits = x.to_bits();
+    let sign = (bits >> 31) == 1;
+    let biased_exp = ((bits >> 23) & 0xFF) as i32;
+    let raw_mant = bits & 0x7F_FFFF;
+    let (exp, mant23) = if biased_exp == 0 {
+        // subnormal: value = raw_mant * 2^-149; normalize the leading 1
+        let lz = raw_mant.leading_zeros() - 9; // zeros within the 23-bit field
+        let shifted = raw_mant << (lz + 1); // drop the leading 1
+        (-126 - (lz as i32) - 1, shifted & 0x7F_FFFF)
+    } else {
+        (biased_exp - 127, raw_mant)
+    };
+    // mantissa = 1.mant23 as Q2.frac
+    let m = ((1u64 << 23) | mant23 as u64) as f64 / (1u64 << 23) as f64;
+    let mant = if frac >= 23 {
+        Fixed::from_bits(((1u64 << 23) | mant23 as u64) << (frac - 23), frac)
+    } else {
+        Fixed::from_f64(m, frac)
+    };
+    Unpacked { sign, exp, mant }
+}
+
+/// Repack sign/exponent/mantissa into an f32 with round-to-nearest-even.
+/// The mantissa may lie in `[0.5, 4)`; the exponent is renormalized.
+/// Overflow returns ±inf, underflow returns a (possibly subnormal) tiny
+/// value via the standard library's correctly rounded `exp2` scaling.
+pub fn pack(sign: bool, exp: i32, mant: &Fixed) -> f32 {
+    let m = mant.to_f64();
+    assert!(m >= 0.0, "negative mantissa");
+    if m == 0.0 {
+        return if sign { -0.0 } else { 0.0 };
+    }
+    // f64 has 53 significand bits — enough to hold any datapath mantissa
+    // (<= 62 frac bits values get correctly rounded on conversion, and
+    // the final f32 rounding dominates).
+    let value = m * 2f64.powi(exp);
+    let out = value as f32; // f64 -> f32 is round-to-nearest-even
+    if sign {
+        -out
+    } else {
+        out
+    }
+}
+
+/// Convenience: the mantissa field width used by the service layer.
+pub const SERVICE_FRAC: u32 = 30;
+
+/// Divide two finite f32s through a mantissa-division closure.
+/// Handles sign, exponent arithmetic, zeros, infs and nans around the
+/// `[1,2) x [1,2) -> (1/2, 2)` core the datapath provides.
+pub fn divide_via<F>(n: f32, d: f32, frac: u32, core: F) -> f32
+where
+    F: FnOnce(Fixed, Fixed) -> Fixed,
+{
+    match (classify(n), classify(d)) {
+        (FpClass::Nan, _) | (_, FpClass::Nan) => f32::NAN,
+        (FpClass::Inf, FpClass::Inf) => f32::NAN,
+        (FpClass::Zero, FpClass::Zero) => f32::NAN,
+        (FpClass::Inf, _) => {
+            if (n < 0.0) ^ (d < 0.0) { f32::NEG_INFINITY } else { f32::INFINITY }
+        }
+        (_, FpClass::Inf) => if (n < 0.0) ^ (d.is_sign_negative()) { -0.0 } else { 0.0 },
+        (FpClass::Zero, _) => if (n.is_sign_negative()) ^ (d < 0.0) { -0.0 } else { 0.0 },
+        (_, FpClass::Zero) => {
+            if (n < 0.0) ^ (d.is_sign_negative()) { f32::NEG_INFINITY } else { f32::INFINITY }
+        }
+        (FpClass::Finite, FpClass::Finite) => {
+            let un = unpack(n, frac);
+            let ud = unpack(d, frac);
+            let q = core(un.mant, ud.mant);
+            pack(un.sign ^ ud.sign, un.exp - ud.exp, &q)
+        }
+    }
+}
+
+/// Reference mantissa divider used in tests: correctly-rounded via f64.
+pub fn exact_mantissa_divide(n: Fixed, d: Fixed) -> Fixed {
+    let q = n.to_f64() / d.to_f64();
+    Fixed::from_f64(q, n.frac())
+}
+
+/// Round a wide-mantissa result to the 23-bit output format, RNE, by
+/// going through f32 packing at exponent 0.
+pub fn round_mantissa_to_f32(m: &Fixed) -> f32 {
+    pack(false, 0, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn classify_all() {
+        assert_eq!(classify(1.5), FpClass::Finite);
+        assert_eq!(classify(-2.0e-40), FpClass::Finite); // subnormal
+        assert_eq!(classify(0.0), FpClass::Zero);
+        assert_eq!(classify(-0.0), FpClass::Zero);
+        assert_eq!(classify(f32::INFINITY), FpClass::Inf);
+        assert_eq!(classify(f32::NAN), FpClass::Nan);
+    }
+
+    #[test]
+    fn unpack_normal() {
+        let u = unpack(6.5, 30); // 1.625 * 2^2
+        assert!(!u.sign);
+        assert_eq!(u.exp, 2);
+        assert!((u.mant.to_f64() - 1.625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unpack_negative() {
+        let u = unpack(-0.75, 30); // -1.5 * 2^-1
+        assert!(u.sign);
+        assert_eq!(u.exp, -1);
+        assert!((u.mant.to_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unpack_subnormal_normalizes() {
+        let x = f32::from_bits(0x0000_0001); // smallest subnormal 2^-149
+        let u = unpack(x, 30);
+        assert_eq!(u.exp, -149);
+        assert!((u.mant.to_f64() - 1.0).abs() < 1e-9);
+        let y = f32::from_bits(0x0000_0003); // 3 * 2^-149 = 1.5 * 2^-148
+        let v = unpack(y, 30);
+        assert_eq!(v.exp, -148);
+        assert!((v.mant.to_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_property() {
+        check::property("pack(unpack(x)) == x", |g| {
+            // random finite normal f32 via random bits, skipping specials
+            let bits = (g.bits() as u32) & 0x7FFF_FFFF;
+            let x = f32::from_bits(bits);
+            if classify(x) != FpClass::Finite {
+                return Ok(());
+            }
+            let u = unpack(x, 40);
+            let back = pack(u.sign, u.exp, &u.mant);
+            ensure(back == x, format!("x={x:e} back={back:e}"))
+        });
+    }
+
+    #[test]
+    fn divide_via_specials() {
+        let core = exact_mantissa_divide;
+        assert!(divide_via(f32::NAN, 1.0, 30, core).is_nan());
+        assert!(divide_via(1.0, f32::NAN, 30, core).is_nan());
+        assert!(divide_via(f32::INFINITY, f32::INFINITY, 30, core).is_nan());
+        assert!(divide_via(0.0, 0.0, 30, core).is_nan());
+        assert_eq!(divide_via(f32::INFINITY, -2.0, 30, core), f32::NEG_INFINITY);
+        assert_eq!(divide_via(3.0, f32::INFINITY, 30, core), 0.0);
+        assert_eq!(divide_via(0.0, 5.0, 30, core), 0.0);
+        assert_eq!(divide_via(-1.0, 0.0, 30, core), f32::NEG_INFINITY);
+        assert_eq!(divide_via(1.0, -0.0, 30, core), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn divide_via_exact_core_matches_hardware_division() {
+        check::property("divide_via(exact) ~= n/d", |g| {
+            let n = g.f32_in(0.001, 1000.0);
+            let d = g.f32_in(0.001, 1000.0);
+            let q = divide_via(n, d, 40, exact_mantissa_divide);
+            let want = n / d;
+            let ulp = (q.to_bits() as i64 - want.to_bits() as i64).abs();
+            ensure(ulp <= 1, format!("n={n} d={d} q={q} want={want}"))
+        });
+    }
+
+    #[test]
+    fn pack_handles_mantissa_out_of_unit_range() {
+        // mantissa 0.75 with exp 3 == 6.0
+        let m = Fixed::from_f64(0.75, 30);
+        assert_eq!(pack(false, 3, &m), 6.0);
+        // mantissa 3.0 with exp 0 == 3.0
+        let m = Fixed::from_f64(3.0, 30);
+        assert_eq!(pack(true, 0, &m), -3.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! IEEE-754 binary64 pack/unpack: the double-precision FPU boundary.
+//!
+//! EIMMW-2000 (the paper's foundation) targets double precision; this
+//! module provides the f64 wrapper around the same mantissa datapath,
+//! which needs `frac >= 56` (52 mantissa bits + guard bits — within the
+//! `Fixed` limit of 62).
+
+use super::fixed::Fixed;
+use super::fp::FpClass;
+
+/// Classify an f64 for dispatch before the datapath.
+pub fn classify64(x: f64) -> FpClass {
+    if x.is_nan() {
+        FpClass::Nan
+    } else if x.is_infinite() {
+        FpClass::Inf
+    } else if x == 0.0 {
+        FpClass::Zero
+    } else {
+        FpClass::Finite
+    }
+}
+
+/// A decomposed finite nonzero binary64.
+#[derive(Clone, Copy, Debug)]
+pub struct Unpacked64 {
+    /// Sign bit.
+    pub sign: bool,
+    /// Unbiased exponent of the leading bit.
+    pub exp: i32,
+    /// Mantissa in `[1, 2)` at the requested fraction width.
+    pub mant: Fixed,
+}
+
+/// Unpack a finite nonzero f64 (subnormals normalized), `frac >= 52`.
+pub fn unpack64(x: f64, frac: u32) -> Unpacked64 {
+    assert!(classify64(x) == FpClass::Finite, "unpack64({x}) on non-finite");
+    assert!(frac >= 52, "f64 needs frac >= 52");
+    let bits = x.to_bits();
+    let sign = (bits >> 63) == 1;
+    let biased_exp = ((bits >> 52) & 0x7FF) as i32;
+    let raw_mant = bits & 0xF_FFFF_FFFF_FFFF;
+    let (exp, mant52) = if biased_exp == 0 {
+        // subnormal: value = raw_mant * 2^-1074
+        let lz = raw_mant.leading_zeros() - 12; // zeros in the 52-bit field
+        let shifted = raw_mant << (lz + 1);
+        (-1022 - (lz as i32) - 1, shifted & 0xF_FFFF_FFFF_FFFF)
+    } else {
+        (biased_exp - 1023, raw_mant)
+    };
+    let mant = Fixed::from_bits(((1u64 << 52) | mant52) << (frac - 52), frac);
+    Unpacked64 { sign, exp, mant }
+}
+
+/// Repack with round-to-nearest-even into f64. The mantissa may lie in
+/// `[0.5, 4)`; exponent is renormalized; over/underflow saturate per
+/// IEEE. Works directly on the fixed-point bits (no f64 detour — a
+/// `frac > 52` mantissa would lose bits through a float intermediate).
+pub fn pack64(sign: bool, exp: i32, mant: &Fixed) -> f64 {
+    let frac = mant.frac();
+    let mut bits = mant.bits();
+    if bits == 0 {
+        return if sign { -0.0 } else { 0.0 };
+    }
+    // normalize: find the leading one relative to the binary point
+    let msb = 63 - bits.leading_zeros() as i32; // bit index of leading 1
+    let lead = msb - frac as i32; // 0 => in [1,2)
+    let e = exp + lead;
+    // target: 52 fraction bits after the leading 1
+    let shift = msb - 52;
+    let mant53: u64 = if shift > 0 {
+        // round-to-nearest-even on the dropped bits
+        let dropped = shift as u32;
+        let keep = bits >> dropped;
+        let half = 1u64 << (dropped - 1);
+        let rem = bits & ((1u64 << dropped) - 1);
+        let round_up = rem > half || (rem == half && keep & 1 == 1);
+        keep + round_up as u64
+    } else {
+        bits << (-shift) as u32
+    };
+    // rounding may carry out: 2.0 -> renormalize
+    let (mant53, e) = if mant53 >= (1u64 << 53) { (mant53 >> 1, e + 1) } else { (mant53, e) };
+    if e > 1023 {
+        return if sign { f64::NEG_INFINITY } else { f64::INFINITY };
+    }
+    if e < -1022 {
+        // subnormal or zero: shift the significand down
+        let down = (-1022 - e) as u32;
+        if down > 53 {
+            return if sign { -0.0 } else { 0.0 };
+        }
+        let sub = mant53 >> down; // truncation; sub-ulp for the study
+        bits = sub;
+        let out = f64::from_bits(((sign as u64) << 63) | bits);
+        return out;
+    }
+    let out_bits =
+        ((sign as u64) << 63) | (((e + 1023) as u64) << 52) | (mant53 & 0xF_FFFF_FFFF_FFFF);
+    f64::from_bits(out_bits)
+}
+
+/// Divide two f64s through a mantissa-division closure (IEEE specials
+/// handled around the `[1,2) x [1,2)` core).
+pub fn divide_via64<F>(n: f64, d: f64, frac: u32, core: F) -> f64
+where
+    F: FnOnce(Fixed, Fixed) -> Fixed,
+{
+    match (classify64(n), classify64(d)) {
+        (FpClass::Nan, _) | (_, FpClass::Nan) => f64::NAN,
+        (FpClass::Inf, FpClass::Inf) => f64::NAN,
+        (FpClass::Zero, FpClass::Zero) => f64::NAN,
+        (FpClass::Inf, _) => {
+            if (n < 0.0) ^ (d < 0.0) { f64::NEG_INFINITY } else { f64::INFINITY }
+        }
+        (_, FpClass::Inf) => if (n < 0.0) ^ d.is_sign_negative() { -0.0 } else { 0.0 },
+        (FpClass::Zero, _) => if n.is_sign_negative() ^ (d < 0.0) { -0.0 } else { 0.0 },
+        (_, FpClass::Zero) => {
+            if (n < 0.0) ^ d.is_sign_negative() { f64::NEG_INFINITY } else { f64::INFINITY }
+        }
+        (FpClass::Finite, FpClass::Finite) => {
+            let un = unpack64(n, frac);
+            let ud = unpack64(d, frac);
+            let q = core(un.mant, ud.mant);
+            pack64(un.sign ^ ud.sign, un.exp - ud.exp, &q)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::ulp::ulp_diff_f64;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn unpack_normal() {
+        let u = unpack64(6.5, 56);
+        assert!(!u.sign);
+        assert_eq!(u.exp, 2);
+        assert!((u.mant.to_f64() - 1.625).abs() < 1e-15);
+    }
+
+    #[test]
+    fn unpack_subnormal() {
+        let x = f64::from_bits(1); // 2^-1074
+        let u = unpack64(x, 56);
+        assert_eq!(u.exp, -1074);
+        assert_eq!(u.mant.bits(), 1u64 << 56);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_property() {
+        check::property("pack64(unpack64(x)) == x", |g| {
+            let bits = g.bits() & 0x7FFF_FFFF_FFFF_FFFF;
+            let x = f64::from_bits(bits);
+            if classify64(x) != FpClass::Finite {
+                return Ok(());
+            }
+            let u = unpack64(x, 56);
+            let back = pack64(u.sign, u.exp, &u.mant);
+            ensure(back == x, format!("x={x:e} back={back:e}"))
+        });
+    }
+
+    #[test]
+    fn pack_rounds_to_nearest_even() {
+        // mantissa with a 1 exactly past bit 52 and even keep: round down
+        let m = Fixed::from_bits(((1u64 << 52) << 4) | 0b1000, 56);
+        let out = pack64(false, 0, &m);
+        assert_eq!(out, 1.0);
+        // odd keep: round up
+        let m = Fixed::from_bits((((1u64 << 52) | 1) << 4) | 0b1000, 56);
+        let out = pack64(false, 0, &m);
+        assert_eq!(out.to_bits() & 0xF_FFFF_FFFF_FFFF, 2);
+    }
+
+    #[test]
+    fn overflow_underflow_saturate() {
+        let m = Fixed::from_f64(1.5, 56);
+        assert_eq!(pack64(false, 2000, &m), f64::INFINITY);
+        assert_eq!(pack64(true, 2000, &m), f64::NEG_INFINITY);
+        assert_eq!(pack64(false, -1200, &m), 0.0);
+    }
+
+    #[test]
+    fn divide_via64_exact_core() {
+        check::property("divide_via64(exact) ~= n/d", |g| {
+            let n = g.f64_in(1e-3, 1e3);
+            let d = g.f64_in(1e-3, 1e3);
+            let q = divide_via64(n, d, 56, |nm, dm| {
+                // 56-bit mantissa quotient via u128 long division (exact)
+                let wide = (nm.bits() as u128) << 56;
+                let qb = (wide / dm.bits() as u128) as u64;
+                Fixed::from_bits(qb, 56)
+            });
+            ensure(
+                ulp_diff_f64(q, n / d) <= 1,
+                format!("n={n} d={d} q={q} want={}", n / d),
+            )
+        });
+    }
+
+    #[test]
+    fn specials() {
+        let core = |n: Fixed, _d: Fixed| n;
+        assert!(divide_via64(f64::NAN, 1.0, 56, core).is_nan());
+        assert_eq!(divide_via64(1.0, 0.0, 56, core), f64::INFINITY);
+        assert_eq!(divide_via64(0.0, 2.0, 56, core), 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Bit-accurate arithmetic substrate: the number formats and hardware
+//! primitive models everything above (tables, algorithms, simulator)
+//! is built on.
+//!
+//! * [`fixed`] — unsigned fixed-point `Q2.f` values (the datapath word).
+//! * [`mult`] — bit-level multiplier models (array, Booth/Wallace) used
+//!   both to validate [`fixed`] multiplication and to source the area /
+//!   latency numbers in [`crate::area`].
+//! * [`twos`] — the paper's two's-complement block (`K = 2 - r`),
+//!   exact and one's-complement-approximate forms.
+//! * [`fp`] / [`fp64`] — IEEE-754 binary32/64 pack/unpack for the FPU
+//!   boundary (EIMMW-2000's own target is double precision).
+//! * [`ulp`] — ulp-distance measurement for accuracy experiments.
+
+pub mod fixed;
+pub mod fp;
+pub mod fp64;
+pub mod mult;
+pub mod twos;
+pub mod ulp;
+
+pub use fixed::{Fixed, Rounding};

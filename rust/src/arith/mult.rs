@@ -1,0 +1,319 @@
+//! Bit-level multiplier models.
+//!
+//! Two roles:
+//!
+//! 1. **Validation** — each model computes the product by explicit
+//!    partial-product accumulation, bit by bit, and is checked against
+//!    native integer multiplication. This is the evidence that the
+//!    simulator's 4-cycle multiplier unit computes what real hardware
+//!    would.
+//! 2. **Cost source** — each model reports gate counts and logic depth;
+//!    [`crate::area`] turns those into the paper's area comparison
+//!    (claim A1) and the latency model justifies the 4-cycle pipeline
+//!    stages used by [`crate::sim`].
+//!
+//! Gate-count conventions (standard unit-gate accounting): a NAND/NOR/
+//! AND/OR counts 1 gate-equivalent (GE), an XOR 2, a full adder 5
+//! (2 XOR + majority), a half adder 3, a 2:1 mux 3, a flip-flop 4.
+
+/// Cost report for one hardware unit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UnitCost {
+    /// Gate equivalents (area proxy).
+    pub gates: f64,
+    /// Logic depth in unit-gate delays (latency proxy).
+    pub depth: f64,
+}
+
+/// A bit-level combinational multiplier model: computes `a * b` for
+/// `width`-bit unsigned inputs, returning the `2*width`-bit product.
+pub trait MultiplierModel {
+    /// Operand width in bits.
+    fn width(&self) -> u32;
+    /// Compute the product by explicit hardware-style accumulation.
+    fn multiply(&self, a: u64, b: u64) -> u128;
+    /// Area/depth cost of the combinational array.
+    fn cost(&self) -> UnitCost;
+    /// Model name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Classic carry-save array multiplier: `width` rows of AND-gated partial
+/// products reduced by ripple rows of full adders.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrayMultiplier {
+    width: u32,
+}
+
+impl ArrayMultiplier {
+    /// New model for `width`-bit operands (<= 63).
+    pub fn new(width: u32) -> Self {
+        assert!((1..=63).contains(&width));
+        Self { width }
+    }
+}
+
+impl MultiplierModel for ArrayMultiplier {
+    fn width(&self) -> u32 {
+        self.width
+    }
+
+    fn multiply(&self, a: u64, b: u64) -> u128 {
+        assert!(a < (1u64 << self.width) && b < (1u64 << self.width));
+        // row-by-row add of AND partial products — the array structure
+        let mut acc: u128 = 0;
+        for i in 0..self.width {
+            if (b >> i) & 1 == 1 {
+                acc = add_shifted(acc, a, i);
+            }
+        }
+        acc
+    }
+
+    fn cost(&self) -> UnitCost {
+        let n = self.width as f64;
+        // n^2 AND gates + (n-1) rows of n full adders (5 GE each)
+        let gates = n * n + (n - 1.0) * n * 5.0;
+        // carry ripples through ~2n full-adder stages of depth ~2
+        let depth = 2.0 * 2.0 * n;
+        UnitCost { gates, depth }
+    }
+
+    fn name(&self) -> &'static str {
+        "array"
+    }
+}
+
+/// Booth-radix-4 recoded multiplier with a Wallace reduction tree: the
+/// realistic high-speed choice (and the one EIMMW's 4-cycle pipelined
+/// multiplier corresponds to).
+#[derive(Clone, Copy, Debug)]
+pub struct BoothWallaceMultiplier {
+    width: u32,
+}
+
+impl BoothWallaceMultiplier {
+    /// New model for `width`-bit operands (<= 62).
+    pub fn new(width: u32) -> Self {
+        assert!((2..=62).contains(&width));
+        Self { width }
+    }
+
+    /// Booth radix-4 digit recoding of `b`: digits in {-2,-1,0,1,2}.
+    fn recode(&self, b: u64) -> Vec<i8> {
+        let mut digits = Vec::with_capacity((self.width as usize / 2) + 1);
+        let mut prev = 0u64; // b_{-1} = 0
+        let mut i = 0;
+        while i < self.width + 1 {
+            let b0 = (b >> i) & 1;
+            let b1 = if i + 1 <= self.width { (b >> (i + 1)) & 1 } else { 0 };
+            let trip = (b1 << 2) | (b0 << 1) | prev;
+            let digit: i8 = match trip {
+                0b000 | 0b111 => 0,
+                0b001 | 0b010 => 1,
+                0b011 => 2,
+                0b100 => -2,
+                0b101 | 0b110 => -1,
+                _ => unreachable!(),
+            };
+            digits.push(digit);
+            prev = b1;
+            i += 2;
+        }
+        digits
+    }
+}
+
+impl MultiplierModel for BoothWallaceMultiplier {
+    fn width(&self) -> u32 {
+        self.width
+    }
+
+    fn multiply(&self, a: u64, b: u64) -> u128 {
+        assert!(a < (1u64 << self.width) && b < (1u64 << self.width));
+        // signed accumulation of booth-recoded partial products
+        let mut acc: i128 = 0;
+        for (k, &d) in self.recode(b).iter().enumerate() {
+            let pp: i128 = match d {
+                0 => 0,
+                1 => a as i128,
+                2 => (a as i128) << 1,
+                -1 => -(a as i128),
+                -2 => -((a as i128) << 1),
+                _ => unreachable!(),
+            };
+            acc += pp << (2 * k);
+        }
+        debug_assert!(acc >= 0);
+        acc as u128
+    }
+
+    fn cost(&self) -> UnitCost {
+        let n = self.width as f64;
+        // n/2+1 booth-selected partial products: each selector row ~ n
+        // muxes (3 GE) + recoder (~10 GE per digit)
+        let rows = n / 2.0 + 1.0;
+        let pp_gates = rows * (3.0 * n + 10.0);
+        // Wallace tree: (rows - 2) * n full adders to reach 2 rows,
+        // then a final fast adder ~ 2n * 5 GE
+        let tree_gates = (rows - 2.0).max(0.0) * n * 5.0 + 2.0 * n * 5.0;
+        let gates = pp_gates + tree_gates;
+        // tree depth: log_{3/2}(rows) CSA levels * 2 + final CLA ~ 2 log2(2n)
+        let depth = 2.0 * (rows.ln() / 1.5f64.ln()) + 2.0 * (2.0 * n).log2();
+        UnitCost { gates, depth }
+    }
+
+    fn name(&self) -> &'static str {
+        "booth-wallace"
+    }
+}
+
+/// Rectangular (asymmetric) multiplier: a full `width_a`-bit operand by
+/// a short `width_b`-bit one. This is EIMMW-2000's actual hardware shape:
+/// after the first Goldschmidt step every factor is `K = 1 +- e` with `e`
+/// only a few bits wide, so the multiplier array can be `n x m` with
+/// `m << n` — an optimization *orthogonal* to the paper's unit-count
+/// reduction (both compose; `benches/area_table.rs` shows the stack).
+#[derive(Clone, Copy, Debug)]
+pub struct RectangularMultiplier {
+    width_a: u32,
+    width_b: u32,
+}
+
+impl RectangularMultiplier {
+    /// New model for `width_a x width_b`-bit operands.
+    pub fn new(width_a: u32, width_b: u32) -> Self {
+        assert!((1..=63).contains(&width_a));
+        assert!((1..=63).contains(&width_b));
+        Self { width_a, width_b }
+    }
+
+    /// Compute the exact product by row accumulation (the array).
+    pub fn multiply(&self, a: u64, b: u64) -> u128 {
+        assert!(a < (1u64 << self.width_a) && b < (1u64 << self.width_b));
+        let mut acc: u128 = 0;
+        for i in 0..self.width_b {
+            if (b >> i) & 1 == 1 {
+                acc = add_shifted(acc, a, i);
+            }
+        }
+        acc
+    }
+
+    /// Area/depth: `a*b` AND gates + `(b-1)` rows of `a` full adders —
+    /// linear in the short dimension.
+    pub fn cost(&self) -> UnitCost {
+        let a = self.width_a as f64;
+        let b = self.width_b as f64;
+        let gates = a * b + (b - 1.0).max(0.0) * a * 5.0;
+        let depth = 2.0 * (b + a.log2());
+        UnitCost { gates, depth }
+    }
+}
+
+fn add_shifted(acc: u128, a: u64, shift: u32) -> u128 {
+    acc + ((a as u128) << shift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn array_small_products() {
+        let m = ArrayMultiplier::new(8);
+        assert_eq!(m.multiply(0, 0), 0);
+        assert_eq!(m.multiply(255, 255), 255 * 255);
+        assert_eq!(m.multiply(13, 17), 221);
+    }
+
+    #[test]
+    fn array_matches_native_property() {
+        check::property("array mult == native", |g| {
+            let w = g.usize_in(2, 60) as u32;
+            let a = g.u64_below(1u64 << w);
+            let b = g.u64_below(1u64 << w);
+            let m = ArrayMultiplier::new(w);
+            ensure(
+                m.multiply(a, b) == (a as u128) * (b as u128),
+                format!("w={w} a={a} b={b}"),
+            )
+        });
+    }
+
+    #[test]
+    fn booth_matches_native_property() {
+        check::property("booth-wallace mult == native", |g| {
+            let w = g.usize_in(2, 60) as u32;
+            let a = g.u64_below(1u64 << w);
+            let b = g.u64_below(1u64 << w);
+            let m = BoothWallaceMultiplier::new(w);
+            ensure(
+                m.multiply(a, b) == (a as u128) * (b as u128),
+                format!("w={w} a={a} b={b}"),
+            )
+        });
+    }
+
+    #[test]
+    fn booth_edge_patterns() {
+        let m = BoothWallaceMultiplier::new(32);
+        for &a in &[0u64, 1, 0xFFFF_FFFF, 0x8000_0000, 0x5555_5555, 0xAAAA_AAAA] {
+            for &b in &[0u64, 1, 0xFFFF_FFFF, 0x8000_0000, 0x5555_5555] {
+                assert_eq!(m.multiply(a, b), (a as u128) * (b as u128), "{a:#x}*{b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn booth_recoding_digit_range() {
+        let m = BoothWallaceMultiplier::new(16);
+        for b in [0u64, 1, 0xFFFF, 0x8001, 0x5555] {
+            for d in m.recode(b) {
+                assert!((-2..=2).contains(&d));
+            }
+        }
+    }
+
+    #[test]
+    fn costs_scale_with_width() {
+        let small = BoothWallaceMultiplier::new(12).cost();
+        let big = BoothWallaceMultiplier::new(24).cost();
+        assert!(big.gates > 2.0 * small.gates, "quadratic-ish growth");
+        assert!(big.depth > small.depth);
+        // booth-wallace is faster (shallower) than the ripple array
+        let arr = ArrayMultiplier::new(24).cost();
+        let bw = BoothWallaceMultiplier::new(24).cost();
+        assert!(bw.depth < arr.depth);
+    }
+
+    #[test]
+    fn rectangular_matches_native_property() {
+        check::property("rectangular mult == native", |g| {
+            let wa = g.usize_in(2, 60) as u32;
+            let wb = g.usize_in(1, 20) as u32;
+            let a = g.u64_below(1u64 << wa);
+            let b = g.u64_below(1u64 << wb);
+            let m = RectangularMultiplier::new(wa, wb);
+            ensure(
+                m.multiply(a, b) == (a as u128) * (b as u128),
+                format!("wa={wa} wb={wb} a={a} b={b}"),
+            )
+        });
+    }
+
+    #[test]
+    fn rectangular_is_much_smaller_when_short() {
+        // 32x8 rectangular vs 32x32 square: ~4x fewer gates
+        let rect = RectangularMultiplier::new(32, 8).cost();
+        let square = ArrayMultiplier::new(32).cost();
+        assert!(rect.gates < square.gates / 3.0);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(ArrayMultiplier::new(8).name(), "array");
+        assert_eq!(BoothWallaceMultiplier::new(8).name(), "booth-wallace");
+    }
+}

@@ -1,0 +1,155 @@
+//! The paper's two's-complement block as an explicit hardware model.
+//!
+//! In the Goldschmidt datapath the block computes `K_{i+1} = 2 - r_i`.
+//! For a `Q2.f` word this is the two's complement of the low `f+1` bits
+//! (the value sits in `(0, 2]`), implementable as an inverter row plus an
+//! increment. The carry-free variant skips the `+1` (one's complement),
+//! landing one ulp low — EIMMW show the iteration absorbs this.
+//!
+//! This module models the block at bit level (for validation and for the
+//! area model); the algorithm layer calls the equivalent
+//! [`crate::arith::Fixed::two_minus`] /
+//! [`Fixed::two_minus_ones_complement`](crate::arith::Fixed::two_minus_ones_complement).
+
+use super::fixed::Fixed;
+use super::mult::UnitCost;
+
+/// Which complement circuit the datapath instantiates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ComplementKind {
+    /// Inverters + incrementer: exact `2 - r`.
+    #[default]
+    Exact,
+    /// Inverters only: `2 - r - ulp` (carry-free, cheaper, 1 ulp bias).
+    OnesComplement,
+}
+
+impl ComplementKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "exact" | "twos" => Ok(Self::Exact),
+            "ones" | "ones-complement" => Ok(Self::OnesComplement),
+            other => Err(format!("unknown complement kind {other:?}")),
+        }
+    }
+}
+
+/// Bit-level model of the complement block.
+#[derive(Clone, Copy, Debug)]
+pub struct ComplementBlock {
+    /// Word fraction width it is wired for.
+    pub frac: u32,
+    /// Circuit variant.
+    pub kind: ComplementKind,
+}
+
+impl ComplementBlock {
+    /// New block for `Q2.frac` words.
+    pub fn new(frac: u32, kind: ComplementKind) -> Self {
+        Self { frac, kind }
+    }
+
+    /// Apply the block to a datapath word (must be in `(0, 2]`).
+    pub fn apply(&self, r: &Fixed) -> Fixed {
+        assert_eq!(r.frac(), self.frac, "block wired for Q2.{}", self.frac);
+        match self.kind {
+            ComplementKind::Exact => r.two_minus(),
+            ComplementKind::OnesComplement => r.two_minus_ones_complement(),
+        }
+    }
+
+    /// Bit-level evaluation on the raw word, for cross-checking `apply`:
+    /// two's (or one's) complement within the `frac + 1`-bit field, which
+    /// computes `2 - x` for `x in (0, 2)` — the block's operating domain
+    /// (`r` sits near 1 in every Goldschmidt step).
+    pub fn apply_bits(&self, bits: u64) -> u64 {
+        let width = self.frac + 1; // field covering values in (0, 2)
+        let mask = (1u64 << width) - 1;
+        assert!(bits > 0 && bits < (1u64 << width), "input outside (0, 2)");
+        let inverted = !bits & mask;
+        match self.kind {
+            ComplementKind::OnesComplement => inverted,
+            ComplementKind::Exact => inverted + 1, // bits >= 1: no wrap
+        }
+    }
+
+    /// Gate cost: one inverter per bit (+ incrementer chain if exact).
+    pub fn cost(&self) -> UnitCost {
+        let n = (self.frac + 2) as f64;
+        match self.kind {
+            // n inverters (0.5 GE) + n half-adders (3 GE) for the +1
+            ComplementKind::Exact => UnitCost { gates: 0.5 * n + 3.0 * n, depth: 2.0 * n },
+            ComplementKind::OnesComplement => UnitCost { gates: 0.5 * n, depth: 1.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn exact_block_matches_fixed_op() {
+        check::property("block.apply == two_minus", |g| {
+            let frac = g.usize_in(4, 60) as u32;
+            let bits = 1 + g.u64_below(1u64 << (frac + 1));
+            let r = Fixed::from_bits(bits, frac);
+            let block = ComplementBlock::new(frac, ComplementKind::Exact);
+            ensure(
+                block.apply(&r).bits() == r.two_minus().bits(),
+                format!("frac={frac} bits={bits}"),
+            )
+        });
+    }
+
+    #[test]
+    fn bit_level_matches_value_level() {
+        check::property("apply_bits == apply", |g| {
+            let frac = g.usize_in(4, 60) as u32;
+            let bits = 1 + g.u64_below((1u64 << (frac + 1)) - 1);
+            let r = Fixed::from_bits(bits, frac);
+            for kind in [ComplementKind::Exact, ComplementKind::OnesComplement] {
+                let block = ComplementBlock::new(frac, kind);
+                let via_bits = block.apply_bits(bits);
+                let via_value = block.apply(&r).bits();
+                if via_bits != via_value {
+                    return Err(format!(
+                        "kind={kind:?} frac={frac} bits={bits:#x}: {via_bits:#x} != {via_value:#x}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ones_complement_is_cheaper_and_shallower() {
+        let exact = ComplementBlock::new(30, ComplementKind::Exact).cost();
+        let ones = ComplementBlock::new(30, ComplementKind::OnesComplement).cost();
+        assert!(ones.gates < exact.gates);
+        assert!(ones.depth < exact.depth);
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(ComplementKind::parse("exact").unwrap(), ComplementKind::Exact);
+        assert_eq!(
+            ComplementKind::parse("ones").unwrap(),
+            ComplementKind::OnesComplement
+        );
+        assert!(ComplementKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn known_values() {
+        let b = ComplementBlock::new(10, ComplementKind::Exact);
+        // r = 1.0 -> K = 1.0
+        assert_eq!(b.apply(&Fixed::one(10)).to_f64(), 1.0);
+        // r = 0.5 -> K = 1.5
+        assert_eq!(b.apply(&Fixed::from_f64(0.5, 10)).to_f64(), 1.5);
+        // r = 2.0 -> K = 0.0
+        assert_eq!(b.apply(&Fixed::two(10)).to_f64(), 0.0);
+    }
+}

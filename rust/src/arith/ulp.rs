@@ -1,0 +1,109 @@
+//! ulp-distance measurement for the accuracy experiments (claim ACC,
+//! variants V1/V2): how far a computed f32/f64 lands from the correctly
+//! rounded result.
+
+/// Distance in ulps between two finite f32 values of the same sign
+/// (order-of-magnitude robust: integer distance on the bit lattice).
+pub fn ulp_diff_f32(a: f32, b: f32) -> u64 {
+    assert!(a.is_finite() && b.is_finite(), "ulp of non-finite");
+    let to_lattice = |x: f32| -> i64 {
+        let bits = x.to_bits() as i32;
+        // map sign-magnitude to a monotone integer line: negative floats
+        // fold below zero (+0.0 and -0.0 both land on 0)
+        if bits < 0 { i32::MIN as i64 - bits as i64 } else { bits as i64 }
+    };
+    (to_lattice(a) - to_lattice(b)).unsigned_abs()
+}
+
+/// Distance in ulps between two finite f64 values.
+pub fn ulp_diff_f64(a: f64, b: f64) -> u64 {
+    assert!(a.is_finite() && b.is_finite(), "ulp of non-finite");
+    let to_lattice = |x: f64| -> i128 {
+        let bits = x.to_bits() as i64;
+        if bits < 0 { i64::MIN as i128 - bits as i128 } else { bits as i128 }
+    };
+    (to_lattice(a) - to_lattice(b)).unsigned_abs() as u64
+}
+
+/// Size of one ulp at the magnitude of `x` (f32).
+pub fn ulp_size_f32(x: f32) -> f32 {
+    let next = f32::from_bits(x.to_bits() + 1);
+    next - x
+}
+
+/// Relative error |a - b| / |b| in f64.
+pub fn rel_err(a: f64, b: f64) -> f64 {
+    if b == 0.0 { a.abs() } else { (a - b).abs() / b.abs() }
+}
+
+/// Maximum ulp error over paired slices.
+pub fn max_ulp_f32(got: &[f32], want: &[f32]) -> u64 {
+    assert_eq!(got.len(), want.len());
+    got.iter().zip(want).map(|(&g, &w)| ulp_diff_f32(g, w)).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_distance() {
+        assert_eq!(ulp_diff_f32(1.5, 1.5), 0);
+        assert_eq!(ulp_diff_f64(-2.25, -2.25), 0);
+    }
+
+    #[test]
+    fn adjacent_floats_are_one_ulp() {
+        let x = 1.0f32;
+        let next = f32::from_bits(x.to_bits() + 1);
+        assert_eq!(ulp_diff_f32(x, next), 1);
+        let y = 1e10f64;
+        let next = f64::from_bits(y.to_bits() + 1);
+        assert_eq!(ulp_diff_f64(y, next), 1);
+    }
+
+    #[test]
+    fn across_binade() {
+        // 2.0 is one ulp above the largest float below it
+        let below = f32::from_bits(2.0f32.to_bits() - 1);
+        assert_eq!(ulp_diff_f32(2.0, below), 1);
+    }
+
+    #[test]
+    fn across_zero() {
+        let pos = f32::from_bits(1); // smallest positive subnormal
+        let neg = -pos;
+        // distance: pos -> 0 -> -0 -> neg = 2 lattice steps
+        assert_eq!(ulp_diff_f32(pos, neg), 2);
+        assert_eq!(ulp_diff_f32(0.0, pos), 1);
+    }
+
+    #[test]
+    fn symmetric() {
+        assert_eq!(ulp_diff_f32(1.0, 1.5), ulp_diff_f32(1.5, 1.0));
+    }
+
+    #[test]
+    fn rel_err_basics() {
+        assert_eq!(rel_err(1.01, 1.0), 0.010000000000000009);
+        assert_eq!(rel_err(5.0, 0.0), 5.0);
+    }
+
+    #[test]
+    fn max_ulp_over_slices() {
+        let want = [1.0f32, 2.0, 3.0];
+        let got = [1.0f32, f32::from_bits(2.0f32.to_bits() + 3), 3.0];
+        assert_eq!(max_ulp_f32(&got, &want), 3);
+    }
+
+    #[test]
+    fn ulp_size_grows_with_magnitude() {
+        assert!(ulp_size_f32(1e20) > ulp_size_f32(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn non_finite_panics() {
+        ulp_diff_f32(f32::NAN, 1.0);
+    }
+}

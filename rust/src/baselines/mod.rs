@@ -1,0 +1,34 @@
+//! Baseline division algorithms the paper's introduction positions
+//! Goldschmidt against (Oberman–Flynn's taxonomy, refs [2][3]):
+//!
+//! * **Digit recurrence** — [`restoring`], [`nonrestoring`], and
+//!   [`srt4`] (radix-4 SRT with quotient digit selection): one quotient
+//!   digit per cycle, linear convergence.
+//! * **Functional iteration** — [`newton`] (Newton–Raphson reciprocal,
+//!   self-correcting, two dependent multiplies per step) versus
+//!   Goldschmidt (two *independent* multiplies per step — the property
+//!   the paper's pipelined/feedback schedules exploit).
+//!
+//! Each routine reports its cycle cost under the same accounting used by
+//! [`crate::sim`] so `benches/baseline_comparison.rs` can regenerate the
+//! intro's comparison as a table.
+
+pub mod newton;
+pub mod recurrence;
+pub mod srt4;
+
+pub use newton::newton_divide;
+pub use recurrence::{nonrestoring_divide, restoring_divide};
+pub use srt4::srt4_divide;
+
+/// Result of a baseline division: quotient mantissa plus cost metadata.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    /// Quotient approximation (same fixed-point format as the input).
+    pub quotient: crate::arith::Fixed,
+    /// Cycle count under the crate's unified accounting
+    /// (multiplier pass = 4 cycles, table lookup = 1, adder/CPA = 1/bit-row).
+    pub cycles: u64,
+    /// Number of multiplier passes issued (0 for digit recurrence).
+    pub mult_passes: u32,
+}

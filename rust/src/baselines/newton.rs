@@ -1,0 +1,117 @@
+//! Newton–Raphson reciprocal division: the classic functional-iteration
+//! baseline.
+//!
+//! `x_{i+1} = x_i * (2 - d * x_i)` converges quadratically to `1/d`;
+//! the quotient is `q = n * x_final`. Each step needs **two dependent
+//! multiplications** (`d*x_i`, then `x_i * (...)`), unlike Goldschmidt's
+//! two independent ones — which is exactly why Goldschmidt pipelines
+//! better and why the paper's feedback trick targets it.
+
+use crate::arith::fixed::Fixed;
+use crate::arith::twos::ComplementBlock;
+use crate::tables::ReciprocalTable;
+
+use super::BaselineResult;
+use crate::goldschmidt::Config;
+
+/// Newton–Raphson division on mantissas `n, d in [1, 2)`.
+///
+/// Uses the same ROM, complement block and rounding as the Goldschmidt
+/// datapath so the comparison isolates the *algorithm*, not the
+/// substrate. `cfg.steps` refinement steps.
+pub fn newton_divide(
+    n: &Fixed,
+    d: &Fixed,
+    table: &ReciprocalTable,
+    cfg: &Config,
+) -> BaselineResult {
+    assert_eq!(n.frac(), cfg.frac);
+    assert_eq!(d.frac(), cfg.frac);
+    let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+
+    let mut cycles = 1u64; // ROM lookup
+    let mut passes = 0u32;
+    let mut x = table.lookup(d); // x0 ~= 1/d
+
+    for _ in 0..cfg.steps {
+        let dx = d.mul(&x, cfg.rounding); // multiplier pass 1
+        let corr = complement.apply(&dx); // 2 - d*x (combinational)
+        x = x.mul(&corr, cfg.rounding); // multiplier pass 2 (dependent!)
+        passes += 2;
+        cycles += 2 * 4; // two *serial* 4-cycle multiplies per step
+    }
+    let q = n.mul(&x, cfg.rounding); // final quotient multiply
+    passes += 1;
+    cycles += 4;
+    BaselineResult { quotient: q, cycles, mult_passes: passes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::ulp::rel_err;
+    use crate::check::{self, ensure};
+    use crate::util::rng::Xoshiro256;
+
+    fn setup() -> (ReciprocalTable, Config) {
+        let cfg = Config::default();
+        (ReciprocalTable::new(cfg.table_p), cfg)
+    }
+
+    #[test]
+    fn converges_to_quotient() {
+        let (table, cfg) = setup();
+        let mut rng = Xoshiro256::new(31);
+        for _ in 0..1000 {
+            let nf = rng.range_f64(1.0, 2.0);
+            let df = rng.range_f64(1.0, 2.0);
+            let n = Fixed::from_f64(nf, cfg.frac);
+            let d = Fixed::from_f64(df, cfg.frac);
+            let r = newton_divide(&n, &d, &table, &cfg);
+            let err = rel_err(r.quotient.to_f64(), nf / df);
+            assert!(err < 1e-8, "n={nf} d={df} err={err}");
+        }
+    }
+
+    #[test]
+    fn quadratic_convergence_property() {
+        check::property("NR error shrinks quadratically", |g| {
+            let cfg = Config::default().with_frac(60);
+            let table = ReciprocalTable::new(cfg.table_p);
+            let d = Fixed::from_f64(g.f64_in(1.0, 2.0), cfg.frac);
+            let n = Fixed::one(cfg.frac);
+            let e1 = rel_err(
+                newton_divide(&n, &d, &table, &cfg.with_steps(1)).quotient.to_f64(),
+                1.0 / d.to_f64(),
+            );
+            let e2 = rel_err(
+                newton_divide(&n, &d, &table, &cfg.with_steps(2)).quotient.to_f64(),
+                1.0 / d.to_f64(),
+            );
+            ensure(e2 <= e1 * e1 * 4.0 + 1e-15, format!("e1={e1} e2={e2}"))
+        });
+    }
+
+    #[test]
+    fn cycle_accounting() {
+        let (table, cfg) = setup();
+        let one = Fixed::one(cfg.frac);
+        let r = newton_divide(&one, &one, &table, &cfg);
+        // 1 (ROM) + steps * 8 (two serial multiplies) + 4 (final q)
+        assert_eq!(r.cycles, 1 + cfg.steps as u64 * 8 + 4);
+        assert_eq!(r.mult_passes, cfg.steps * 2 + 1);
+    }
+
+    #[test]
+    fn same_substrate_as_goldschmidt() {
+        // same table/rounding: step-0 result must equal Goldschmidt q1
+        // for n = 1 (both are just K1)
+        let (table, cfg0) = setup();
+        let cfg = cfg0.with_steps(0);
+        let one = Fixed::one(cfg.frac);
+        let d = Fixed::from_f64(1.37, cfg.frac);
+        let nr = newton_divide(&one, &d, &table, &cfg);
+        let gs = crate::goldschmidt::divide_mantissa(&one, &d, &table, &cfg);
+        assert_eq!(nr.quotient.bits(), gs.quotient().bits());
+    }
+}

@@ -1,0 +1,168 @@
+//! Restoring and non-restoring binary division: the simplest digit
+//! recurrence baselines (one quotient bit per cycle).
+//!
+//! Operands are mantissas in `[1, 2)` as [`Fixed`]; the quotient is
+//! produced to the full datapath fraction width, so a divide costs
+//! `frac + 1` cycles (one per quotient bit; the leading-zero alignment
+//! is free in hardware) — the linear-convergence cost the iterative
+//! methods beat.
+
+use crate::arith::fixed::Fixed;
+
+use super::BaselineResult;
+
+/// Restoring division: shift in a dividend bit, trial-subtract, keep or
+/// restore. Computes the exact floor quotient `q = floor(n/d * 2^frac)`.
+pub fn restoring_divide(n: &Fixed, d: &Fixed) -> BaselineResult {
+    assert_eq!(n.frac(), d.frac());
+    let frac = n.frac();
+    let nn: u128 = (n.bits() as u128) << frac; // dividend, 2*frac+2 bits
+    let dd: u128 = d.bits() as u128;
+    let width = 2 * frac + 2;
+    let mut rem: u128 = 0;
+    let mut q: u128 = 0;
+    for i in (0..width).rev() {
+        rem = (rem << 1) | ((nn >> i) & 1);
+        q <<= 1;
+        if rem >= dd {
+            rem -= dd; // subtract held: quotient bit 1
+            q |= 1;
+        } // else: restore (the trial subtract is not committed)
+    }
+    BaselineResult {
+        quotient: Fixed::from_bits(q as u64, frac),
+        // hardware cycles: one per *quotient* bit (1 integer + frac
+        // fraction); the leading zero bits are alignment, not cycles
+        cycles: frac as u64 + 1,
+        mult_passes: 0,
+    }
+}
+
+/// Non-restoring division: add-or-subtract every cycle (no restore
+/// bubble). The remainder register is allowed to go negative; each cycle
+/// adds or subtracts the divisor depending on the remainder's sign, and
+/// the quotient bit is the resulting sign. Produces the same floor
+/// quotient as [`restoring_divide`] (asserted by property test) with a
+/// simpler per-cycle critical path.
+pub fn nonrestoring_divide(n: &Fixed, d: &Fixed) -> BaselineResult {
+    assert_eq!(n.frac(), d.frac());
+    let frac = n.frac();
+    let nn: i128 = (n.bits() as i128) << frac;
+    let dd: i128 = d.bits() as i128;
+    let width = 2 * frac + 2;
+    let mut rem: i128 = 0;
+    let mut q: u128 = 0;
+    for i in (0..width).rev() {
+        let bit = (nn >> i) & 1;
+        rem = (rem << 1) + bit;
+        if rem >= 0 {
+            rem -= dd;
+        } else {
+            rem += dd;
+        }
+        q <<= 1;
+        if rem >= 0 {
+            q |= 1;
+        }
+    }
+    // final restore is not needed for the quotient: the 0-bits already
+    // recorded the overshoot cycles
+    BaselineResult {
+        quotient: Fixed::from_bits(q as u64, frac),
+        cycles: frac as u64 + 1,
+        mult_passes: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::ulp::rel_err;
+    use crate::check::{self, ensure};
+    use crate::util::rng::Xoshiro256;
+
+    const FRAC: u32 = 30;
+
+    #[test]
+    fn restoring_exact_cases() {
+        let n = Fixed::from_f64(1.5, FRAC);
+        let d = Fixed::from_f64(1.5, FRAC);
+        let r = restoring_divide(&n, &d);
+        assert!((r.quotient.to_f64() - 1.0).abs() < 1e-9);
+        assert_eq!(r.cycles, FRAC as u64 + 1);
+        assert_eq!(r.mult_passes, 0);
+    }
+
+    #[test]
+    fn restoring_is_exact_floor_property() {
+        check::property("restoring == floor division", |g| {
+            let n = Fixed::from_f64(g.f64_in(1.0, 2.0), FRAC);
+            let d = Fixed::from_f64(g.f64_in(1.0, 2.0), FRAC);
+            let q = restoring_divide(&n, &d).quotient.bits() as u128;
+            let want = ((n.bits() as u128) << FRAC) / d.bits() as u128;
+            ensure(q == want, format!("n={} d={}", n.to_f64(), d.to_f64()))
+        });
+    }
+
+    #[test]
+    fn restoring_random_sweep() {
+        let mut rng = Xoshiro256::new(41);
+        for _ in 0..1000 {
+            let nf = rng.range_f64(1.0, 2.0);
+            let df = rng.range_f64(1.0, 2.0);
+            let r = restoring_divide(&Fixed::from_f64(nf, FRAC), &Fixed::from_f64(df, FRAC));
+            let err = rel_err(r.quotient.to_f64(), nf / df);
+            assert!(err < 4.0 * 2f64.powi(-(FRAC as i32)), "{nf}/{df}: {err}");
+        }
+    }
+
+    #[test]
+    fn nonrestoring_matches_restoring_property() {
+        check::property("nonrestoring == restoring", |g| {
+            let n = Fixed::from_f64(g.f64_in(1.0, 2.0), FRAC);
+            let d = Fixed::from_f64(g.f64_in(1.0, 2.0), FRAC);
+            let a = restoring_divide(&n, &d).quotient.bits();
+            let b = nonrestoring_divide(&n, &d).quotient.bits();
+            ensure(
+                a == b,
+                format!("n={} d={} a={a:#x} b={b:#x}", n.to_f64(), d.to_f64()),
+            )
+        });
+    }
+
+    #[test]
+    fn quotient_is_floor_accurate() {
+        check::property("restoring is floor-accurate", |g| {
+            let n = Fixed::from_f64(g.f64_in(1.0, 2.0), FRAC);
+            let d = Fixed::from_f64(g.f64_in(1.0, 2.0), FRAC);
+            let q = restoring_divide(&n, &d).quotient.to_f64();
+            let exact = n.to_f64() / d.to_f64();
+            ensure(
+                q <= exact + 1e-15 && exact - q < 2.0 * 2f64.powi(-(FRAC as i32)),
+                format!("q={q} exact={exact}"),
+            )
+        });
+    }
+
+    #[test]
+    fn linear_cost_scales_with_width() {
+        let n20 = Fixed::from_f64(1.9, 20);
+        let d20 = Fixed::from_f64(1.1, 20);
+        let n40 = Fixed::from_f64(1.9, 40);
+        let d40 = Fixed::from_f64(1.1, 40);
+        assert_eq!(restoring_divide(&n20, &d20).cycles, 21);
+        assert_eq!(restoring_divide(&n40, &d40).cycles, 41);
+        assert_eq!(nonrestoring_divide(&n40, &d40).cycles, 41);
+    }
+
+    #[test]
+    fn edge_operands() {
+        // n = d -> q = 1 exactly; n just below 2, d = 1 -> q = n
+        let one = Fixed::one(FRAC);
+        let r = restoring_divide(&one, &one);
+        assert_eq!(r.quotient.bits(), one.bits());
+        let nmax = Fixed::from_bits((1u64 << (FRAC + 1)) - 1, FRAC);
+        let r = restoring_divide(&nmax, &one);
+        assert_eq!(r.quotient.bits(), nmax.bits());
+    }
+}

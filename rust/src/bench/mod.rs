@@ -1,0 +1,303 @@
+//! Benchmark harness (the offline environment has no `criterion`; this
+//! module is the crate's measurement substrate, used by every target in
+//! `benches/`, each of which is built with `harness = false`).
+//!
+//! Method: warm up for a fixed duration, then run timed batches until a
+//! target measurement time elapses, recording per-iteration wall time.
+//! Reports mean / p50 / p99 / min plus derived throughput. Batch sizing
+//! auto-calibrates so each sample costs ~1ms, keeping timer overhead
+//! negligible for nanosecond-scale bodies.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::tablefmt::{fmt_ns, Align, Table};
+
+/// One benchmark's collected measurements (per-iteration nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark id, e.g. `"sim/feedback/k=3"`.
+    pub name: String,
+    /// Per-iteration wall time statistics (ns).
+    pub ns: Summary,
+    /// Total iterations measured.
+    pub iters: u64,
+}
+
+impl Measurement {
+    /// Mean nanoseconds per iteration.
+    pub fn mean_ns(&self) -> f64 {
+        self.ns.mean()
+    }
+
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.ns.mean() == 0.0 { 0.0 } else { 1e9 / self.ns.mean() }
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Warmup wall time before measuring.
+    pub warmup: Duration,
+    /// Total measurement wall time budget.
+    pub measure: Duration,
+    /// Upper bound on recorded samples.
+    pub max_samples: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 4096,
+        }
+    }
+}
+
+impl Config {
+    /// Fast configuration for CI/tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(50),
+            max_samples: 512,
+        }
+    }
+
+    /// Honour `BENCH_QUICK=1` for fast runs of the full bench suite.
+    pub fn from_env() -> Self {
+        match std::env::var("BENCH_QUICK").as_deref() {
+            Ok("1") | Ok("true") => Self::quick(),
+            _ => Self::default(),
+        }
+    }
+}
+
+/// A group of related benchmarks that prints one consolidated table.
+pub struct Bencher {
+    config: Config,
+    results: Vec<Measurement>,
+    group: String,
+}
+
+impl Bencher {
+    /// New bench group with the given name.
+    pub fn new<S: Into<String>>(group: S) -> Self {
+        Self { config: Config::from_env(), results: Vec::new(), group: group.into() }
+    }
+
+    /// Override the configuration.
+    pub fn with_config(mut self, config: Config) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Measure `f`, which performs exactly one logical iteration per call.
+    /// Returns the measurement (also retained for [`Bencher::report`]).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while start.elapsed() < self.config.warmup {
+            f();
+            warm_iters += 1;
+        }
+        // Calibrate batch size: target ~1ms per sample.
+        let probe_start = Instant::now();
+        f();
+        let probe = probe_start.elapsed().as_nanos().max(1) as u64;
+        let batch = (1_000_000 / probe).clamp(1, 1_000_000);
+
+        let mut ns = Summary::new();
+        let mut iters: u64 = warm_iters + 1;
+        let deadline = Instant::now() + self.config.measure;
+        while Instant::now() < deadline && ns.count() < self.config.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let per_iter = t0.elapsed().as_nanos() as f64 / batch as f64;
+            ns.add(per_iter);
+            iters += batch;
+        }
+        self.results.push(Measurement { name: name.to_string(), ns, iters });
+        self.results.last().expect("just pushed")
+    }
+
+    /// Measure a function that reports its own amount of work per call
+    /// (e.g. simulated cycles); throughput is then work-units/second.
+    pub fn bench_with_work<F: FnMut() -> u64>(&mut self, name: &str, mut f: F) -> (f64, f64) {
+        let mut work: u64 = 0;
+        let start = Instant::now();
+        while start.elapsed() < self.config.warmup {
+            work = work.wrapping_add(f());
+        }
+        let mut total_work: u64 = 0;
+        let t0 = Instant::now();
+        let deadline = t0 + self.config.measure;
+        let mut calls = 0u64;
+        while Instant::now() < deadline {
+            total_work += f();
+            calls += 1;
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let per_call_ns = elapsed * 1e9 / calls.max(1) as f64;
+        let work_per_sec = total_work as f64 / elapsed;
+        let mut ns = Summary::new();
+        ns.add(per_call_ns);
+        self.results.push(Measurement { name: name.to_string(), ns, iters: calls });
+        (per_call_ns, work_per_sec)
+    }
+
+    /// All measurements so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Render the consolidated results table.
+    pub fn report(&self) -> String {
+        let mut t = Table::new(
+            format!("bench: {}", self.group),
+            &["name", "mean", "p50", "p99", "min", "iters/s"],
+        )
+        .aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+        for m in &self.results {
+            t.row(&[
+                m.name.clone(),
+                fmt_ns(m.ns.mean()),
+                fmt_ns(m.ns.median()),
+                fmt_ns(m.ns.percentile(99.0)),
+                fmt_ns(m.ns.min()),
+                format!("{:.0}", m.throughput()),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Print the consolidated results table to stdout. If `BENCH_JSON`
+    /// names a directory, also append a machine-readable report there
+    /// (`<group>.json`, one JSON object per run).
+    pub fn print_report(&self) {
+        print!("{}", self.report());
+        if let Ok(dir) = std::env::var("BENCH_JSON") {
+            if let Err(e) = self.write_json(std::path::Path::new(&dir)) {
+                eprintln!("BENCH_JSON write failed: {e}");
+            }
+        }
+    }
+
+    /// Serialize all measurements as JSON into `dir/<group>.json`.
+    pub fn write_json(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let json = Json::obj([
+            ("group", Json::from(self.group.clone())),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|m| {
+                    Json::obj([
+                        ("name", Json::from(m.name.clone())),
+                        ("mean_ns", Json::from(m.ns.mean())),
+                        ("p50_ns", Json::from(m.ns.median())),
+                        ("p99_ns", Json::from(m.ns.percentile(99.0))),
+                        ("min_ns", Json::from(m.ns.min())),
+                        ("iters", Json::from(m.iters)),
+                        ("throughput_per_s", Json::from(m.throughput())),
+                    ])
+                })),
+            ),
+        ]);
+        let name = self.group.replace('/', "_");
+        std::fs::write(dir.join(format!("{name}.json")), json.to_string())
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value (stable-rust
+/// equivalent of `std::hint::black_box` — which is used underneath).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new("test").with_config(Config::quick());
+        let m = b.bench("noop-ish", || {
+            black_box(1u64 + 1);
+        });
+        assert!(m.iters > 0);
+        assert!(m.ns.count() > 0);
+        assert!(m.mean_ns() >= 0.0);
+    }
+
+    #[test]
+    fn slower_body_measures_slower() {
+        let mut b = Bencher::new("test").with_config(Config::quick());
+        let fast = b
+            .bench("fast", || {
+                black_box((0..10u64).sum::<u64>());
+            })
+            .mean_ns();
+        let slow = b
+            .bench("slow", || {
+                black_box((0..10_000u64).sum::<u64>());
+            })
+            .mean_ns();
+        assert!(slow > fast, "slow {slow} !> fast {fast}");
+    }
+
+    #[test]
+    fn report_contains_all_rows() {
+        let mut b = Bencher::new("grp").with_config(Config::quick());
+        b.bench("one", || {
+            black_box(0u8);
+        });
+        b.bench("two", || {
+            black_box(0u8);
+        });
+        let rep = b.report();
+        assert!(rep.contains("bench: grp"));
+        assert!(rep.contains("one"));
+        assert!(rep.contains("two"));
+    }
+
+    #[test]
+    fn json_report_round_trips_structure() {
+        let dir = std::env::temp_dir().join("gs_bench_json_test");
+        let mut b = Bencher::new("grp/sub").with_config(Config::quick());
+        b.bench("thing", || {
+            black_box(1u8);
+        });
+        b.write_json(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("grp_sub.json")).unwrap();
+        assert!(text.contains("\"group\":\"grp/sub\""));
+        assert!(text.contains("\"name\":\"thing\""));
+        assert!(text.contains("mean_ns"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_with_work_reports_throughput() {
+        let mut b = Bencher::new("w").with_config(Config::quick());
+        let (per_call, per_sec) = b.bench_with_work("work", || {
+            black_box((0..100u64).sum::<u64>());
+            100
+        });
+        assert!(per_call > 0.0);
+        assert!(per_sec > 0.0);
+    }
+}

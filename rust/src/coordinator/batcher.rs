@@ -1,0 +1,292 @@
+//! Dynamic batcher: decides *when* to flush a per-op queue into one
+//! executor batch and *how big* that batch is.
+//!
+//! Policy (the standard serving trade-off):
+//! * flush an op queue when it holds `max_batch` requests, or
+//! * when its oldest request has waited `max_wait`, or
+//! * when `flush_all` is requested (drain/shutdown).
+//!
+//! The formed batch is padded (with the neutral operand 1.0) up to the
+//! executor's batch ladder — AOT graphs have fixed shapes, so a
+//! 70-request flush rides the 256-wide executable. Padding waste is
+//! tracked in metrics; the ladder itself comes from the artifact
+//! manifest.
+
+use std::time::{Duration, Instant};
+
+use super::request::{OpKind, Request};
+use super::router::Router;
+
+/// Batching policy parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush threshold: batch is formed at this many queued requests.
+    pub max_batch: usize,
+    /// Age threshold: flush whatever is queued once the oldest request
+    /// has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 1024, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// A formed batch, ready for an executor.
+#[derive(Debug)]
+pub struct Batch {
+    /// Operation.
+    pub op: OpKind,
+    /// The requests riding this batch (in FIFO order).
+    pub requests: Vec<Request>,
+    /// Padded operand arrays (`b` only meaningful for divide).
+    pub a: Vec<f32>,
+    /// Second operand array (padded), divide only.
+    pub b: Vec<f32>,
+    /// Padded (executable) size; `requests.len() <= padded`.
+    pub padded: usize,
+}
+
+impl Batch {
+    /// Live (non-padding) size.
+    pub fn live(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Padding fraction (0 = perfectly full).
+    pub fn waste(&self) -> f64 {
+        1.0 - self.live() as f64 / self.padded as f64
+    }
+}
+
+/// The dynamic batcher.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    config: BatcherConfig,
+    /// Per-op ladder of available executable batch sizes (ascending).
+    ladders: [(OpKind, Vec<usize>); 3],
+}
+
+impl DynamicBatcher {
+    /// New batcher over the given per-op batch ladders.
+    pub fn new(config: BatcherConfig, ladder_of: impl Fn(OpKind) -> Vec<usize>) -> Self {
+        let ladders = [
+            (OpKind::Divide, ladder_of(OpKind::Divide)),
+            (OpKind::Sqrt, ladder_of(OpKind::Sqrt)),
+            (OpKind::Rsqrt, ladder_of(OpKind::Rsqrt)),
+        ];
+        Self { config, ladders }
+    }
+
+    /// The config in force.
+    pub fn config(&self) -> &BatcherConfig {
+        &self.config
+    }
+
+    fn ladder(&self, op: OpKind) -> &[usize] {
+        &self.ladders.iter().find(|(o, _)| *o == op).expect("all ops present").1
+    }
+
+    /// Largest executable size for an op (the flush cap).
+    fn cap(&self, op: OpKind) -> usize {
+        self.ladder(op).last().copied().unwrap_or(self.config.max_batch).min(self.config.max_batch)
+    }
+
+    /// Smallest ladder size >= n (or the cap when n exceeds it).
+    fn pad_to(&self, op: OpKind, n: usize) -> usize {
+        let ladder = self.ladder(op);
+        ladder.iter().copied().find(|&b| b >= n).or(ladder.last().copied()).unwrap_or(n)
+    }
+
+    /// Decide whether an op queue should flush now.
+    pub fn should_flush(&self, router: &Router, op: OpKind, now: Instant) -> bool {
+        let len = router.len(op);
+        if len == 0 {
+            return false;
+        }
+        if len >= self.cap(op) {
+            return true;
+        }
+        match router.oldest_enqueue() {
+            Some(oldest) => now.duration_since(oldest) >= self.config.max_wait,
+            None => false,
+        }
+    }
+
+    /// Form one batch from an op queue (up to the cap), padding operands
+    /// to the ladder. Returns `None` when the queue is empty.
+    pub fn form_batch(&self, router: &mut Router, op: OpKind) -> Option<Batch> {
+        let cap = self.cap(op);
+        let requests = router.drain(op, cap);
+        if requests.is_empty() {
+            return None;
+        }
+        let padded = self.pad_to(op, requests.len());
+        let mut a = Vec::with_capacity(padded);
+        let mut b = Vec::with_capacity(padded);
+        for r in &requests {
+            a.push(r.a);
+            b.push(r.b);
+        }
+        // pad with neutral operands: 1.0 / 1.0 stays in-domain for every op
+        a.resize(padded, 1.0);
+        b.resize(padded, 1.0);
+        Some(Batch { op, requests, a, b, padded })
+    }
+
+    /// Form batches for every op that should flush at `now`.
+    pub fn ready_batches(&self, router: &mut Router, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for &op in &OpKind::ALL {
+            while self.should_flush(router, op, now) {
+                match self.form_batch(router, op) {
+                    Some(b) => out.push(b),
+                    None => break,
+                }
+            }
+        }
+        out
+    }
+
+    /// Unconditionally drain everything (shutdown path).
+    pub fn flush_all(&self, router: &mut Router) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for &op in &OpKind::ALL {
+            while let Some(b) = self.form_batch(router, op) {
+                out.push(b);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+    use std::sync::mpsc;
+
+    fn req(id: u64, op: OpKind) -> Request {
+        let (tx, rx) = mpsc::channel();
+        std::mem::forget(rx);
+        Request { id, op, a: id as f32 + 2.0, b: 2.0, enqueued_at: Instant::now(), reply: tx }
+    }
+
+    fn batcher(max_batch: usize, max_wait_us: u64) -> DynamicBatcher {
+        DynamicBatcher::new(
+            BatcherConfig { max_batch, max_wait: Duration::from_micros(max_wait_us) },
+            |_| vec![64, 256, 1024],
+        )
+    }
+
+    #[test]
+    fn no_flush_when_empty() {
+        let b = batcher(256, 100);
+        let r = Router::new();
+        assert!(!b.should_flush(&r, OpKind::Divide, Instant::now()));
+    }
+
+    #[test]
+    fn flushes_at_cap() {
+        let b = batcher(256, 1_000_000); // effectively no age flush
+        let mut r = Router::new();
+        for i in 0..255 {
+            r.route(req(i, OpKind::Divide));
+        }
+        assert!(!b.should_flush(&r, OpKind::Divide, Instant::now()));
+        r.route(req(255, OpKind::Divide));
+        assert!(b.should_flush(&r, OpKind::Divide, Instant::now()));
+    }
+
+    #[test]
+    fn flushes_on_age() {
+        let b = batcher(1024, 0); // zero wait: always stale
+        let mut r = Router::new();
+        r.route(req(1, OpKind::Sqrt));
+        assert!(b.should_flush(&r, OpKind::Sqrt, Instant::now()));
+    }
+
+    #[test]
+    fn pads_to_ladder() {
+        let b = batcher(1024, 0);
+        let mut r = Router::new();
+        for i in 0..70 {
+            r.route(req(i, OpKind::Divide));
+        }
+        let batch = b.form_batch(&mut r, OpKind::Divide).unwrap();
+        assert_eq!(batch.live(), 70);
+        assert_eq!(batch.padded, 256);
+        assert_eq!(batch.a.len(), 256);
+        assert_eq!(batch.b.len(), 256);
+        // padding is the neutral operand
+        assert!(batch.a[70..].iter().all(|&x| x == 1.0));
+        assert!((batch.waste() - (1.0 - 70.0 / 256.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_preserves_fifo_and_operands() {
+        let b = batcher(1024, 0);
+        let mut r = Router::new();
+        for i in 0..5 {
+            r.route(req(i, OpKind::Divide));
+        }
+        let batch = b.form_batch(&mut r, OpKind::Divide).unwrap();
+        for (i, rq) in batch.requests.iter().enumerate() {
+            assert_eq!(rq.id, i as u64);
+            assert_eq!(batch.a[i], i as f32 + 2.0);
+        }
+    }
+
+    #[test]
+    fn oversized_queue_splits_into_multiple_batches() {
+        let b = batcher(1024, 0);
+        let mut r = Router::new();
+        for i in 0..2500 {
+            r.route(req(i, OpKind::Divide));
+        }
+        let batches = b.ready_batches(&mut r, Instant::now());
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].live(), 1024);
+        assert_eq!(batches[1].live(), 1024);
+        assert_eq!(batches[2].live(), 452);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn never_exceeds_cap_property() {
+        check::property("batch size <= cap, conservation", |g| {
+            let cap = [64usize, 256, 1024][g.usize_in(0, 3)];
+            let b = batcher(cap, 0);
+            let mut r = Router::new();
+            let n = g.usize_in(0, 3000);
+            for i in 0..n {
+                r.route(req(i as u64, OpKind::Divide));
+            }
+            let batches = b.flush_all(&mut r);
+            let total: usize = batches.iter().map(|x| x.live()).sum();
+            ensure(total == n, format!("lost requests: {total} != {n}"))?;
+            for batch in &batches {
+                if batch.live() > cap {
+                    return Err(format!("batch {} > cap {cap}", batch.live()));
+                }
+                if batch.padded < batch.live() {
+                    return Err("padded < live".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flush_all_drains_every_op() {
+        let b = batcher(256, 1_000_000);
+        let mut r = Router::new();
+        r.route(req(1, OpKind::Divide));
+        r.route(req(2, OpKind::Sqrt));
+        r.route(req(3, OpKind::Rsqrt));
+        let batches = b.flush_all(&mut r);
+        assert_eq!(batches.len(), 3);
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,200 @@
+//! Always-on service metrics: counters and latency histograms, shared
+//! between workers and readable while the service runs.
+
+use std::sync::Mutex;
+
+use crate::util::stats::LogHistogram;
+
+use super::request::OpKind;
+
+/// Per-op slice of the metrics.
+#[derive(Clone, Debug, Default)]
+struct OpMetrics {
+    requests: u64,
+    batches: u64,
+    padded_slots: u64,
+    live_slots: u64,
+    latency: LogHistogram,
+    batch_exec_ns: LogHistogram,
+    errors: u64,
+}
+
+/// Shared metrics sink (interior mutability; cheap enough for the
+/// per-batch hot path — one lock per *batch*, not per request).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<[OpMetrics; 3]>,
+}
+
+fn idx(op: OpKind) -> usize {
+    match op {
+        OpKind::Divide => 0,
+        OpKind::Sqrt => 1,
+        OpKind::Rsqrt => 2,
+    }
+}
+
+impl Metrics {
+    /// Empty metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one executed batch: per-request latencies plus batch-level
+    /// execution time and padding accounting.
+    pub fn record_batch(
+        &self,
+        op: OpKind,
+        latencies_ns: &[u64],
+        exec_ns: u64,
+        padded: usize,
+    ) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        let s = &mut m[idx(op)];
+        s.requests += latencies_ns.len() as u64;
+        s.batches += 1;
+        s.live_slots += latencies_ns.len() as u64;
+        s.padded_slots += padded as u64;
+        s.batch_exec_ns.record(exec_ns);
+        for &l in latencies_ns {
+            s.latency.record(l);
+        }
+    }
+
+    /// Record a failed batch (all its requests error out).
+    pub fn record_error(&self, op: OpKind, count: u64) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        m[idx(op)].errors += count;
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().expect("metrics poisoned");
+        MetricsSnapshot {
+            ops: OpKind::ALL
+                .iter()
+                .map(|&op| {
+                    let s = &m[idx(op)];
+                    OpSnapshot {
+                        op,
+                        requests: s.requests,
+                        batches: s.batches,
+                        errors: s.errors,
+                        mean_latency_ns: s.latency.mean(),
+                        p50_latency_ns: s.latency.quantile(0.5),
+                        p99_latency_ns: s.latency.quantile(0.99),
+                        mean_exec_ns: s.batch_exec_ns.mean(),
+                        occupancy: if s.padded_slots == 0 {
+                            1.0
+                        } else {
+                            s.live_slots as f64 / s.padded_slots as f64
+                        },
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Immutable metrics snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Per-op snapshots in [`OpKind::ALL`] order.
+    pub ops: Vec<OpSnapshot>,
+}
+
+/// One op's snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct OpSnapshot {
+    /// Which op.
+    pub op: OpKind,
+    /// Requests completed.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Requests failed.
+    pub errors: u64,
+    /// Mean end-to-end latency (ns).
+    pub mean_latency_ns: f64,
+    /// Median end-to-end latency (ns, bucket upper edge).
+    pub p50_latency_ns: u64,
+    /// p99 end-to-end latency (ns, bucket upper edge).
+    pub p99_latency_ns: u64,
+    /// Mean executor time per batch (ns).
+    pub mean_exec_ns: f64,
+    /// Live/padded slot occupancy (1.0 = no padding waste).
+    pub occupancy: f64,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot for one op.
+    pub fn op(&self, op: OpKind) -> &OpSnapshot {
+        self.ops.iter().find(|s| s.op == op).expect("all ops present")
+    }
+
+    /// Total completed requests.
+    pub fn total_requests(&self) -> u64 {
+        self.ops.iter().map(|s| s.requests).sum()
+    }
+
+    /// Total errors.
+    pub fn total_errors(&self) -> u64 {
+        self.ops.iter().map(|s| s.errors).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(OpKind::Divide, &[1000, 2000, 3000], 500, 4);
+        m.record_batch(OpKind::Divide, &[1500], 400, 64);
+        m.record_batch(OpKind::Sqrt, &[800], 300, 1);
+        let s = m.snapshot();
+        assert_eq!(s.op(OpKind::Divide).requests, 4);
+        assert_eq!(s.op(OpKind::Divide).batches, 2);
+        assert_eq!(s.op(OpKind::Sqrt).requests, 1);
+        assert_eq!(s.total_requests(), 5);
+        assert!(s.op(OpKind::Divide).mean_latency_ns > 0.0);
+        // occupancy: 4 live / 68 padded
+        let occ = s.op(OpKind::Divide).occupancy;
+        assert!((occ - 4.0 / 68.0).abs() < 1e-9, "{occ}");
+    }
+
+    #[test]
+    fn errors_counted() {
+        let m = Metrics::new();
+        m.record_error(OpKind::Rsqrt, 7);
+        assert_eq!(m.snapshot().total_errors(), 7);
+        assert_eq!(m.snapshot().op(OpKind::Rsqrt).errors, 7);
+    }
+
+    #[test]
+    fn empty_snapshot_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.total_requests(), 0);
+        assert_eq!(s.op(OpKind::Divide).occupancy, 1.0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    m.record_batch(OpKind::Divide, &[100], 50, 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().op(OpKind::Divide).requests, 400);
+    }
+}

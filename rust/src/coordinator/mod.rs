@@ -1,0 +1,35 @@
+//! The FPU-service coordinator: the layer-3 serving stack that exposes
+//! the Goldschmidt divider as a batched request service.
+//!
+//! Request path (all rust, no Python):
+//!
+//! ```text
+//! clients ──submit()──> bounded queue ──> Router ──> per-op queues
+//!                                              │
+//!                                       DynamicBatcher (size/age policy,
+//!                                              │        ladder padding)
+//!                                     worker pool: Executor::execute
+//!                                              │  (PJRT AOT executables)
+//!                                        per-request responses
+//! ```
+//!
+//! * [`request`] — request/response types and op kinds.
+//! * [`router`] — fans requests out to per-op queues (conservation is
+//!   property-tested).
+//! * [`batcher`] — dynamic batching: flush on max-size or max-age,
+//!   padding to the artifact batch ladder.
+//! * [`metrics`] — always-on counters + latency histograms.
+//! * [`service`] — the threaded service: lifecycle, backpressure,
+//!   worker pool.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{OpKind, Request, Response};
+pub use router::Router;
+pub use service::{FpuService, ServiceConfig, ServiceHandle};

@@ -1,0 +1,107 @@
+//! Request/response types for the FPU service.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// The operations the divider unit serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// `a / b`.
+    Divide,
+    /// `sqrt(a)`.
+    Sqrt,
+    /// `1 / sqrt(a)`.
+    Rsqrt,
+}
+
+impl OpKind {
+    /// All op kinds, in routing order.
+    pub const ALL: [OpKind; 3] = [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt];
+
+    /// Number of operands.
+    pub fn arity(&self) -> u32 {
+        match self {
+            OpKind::Divide => 2,
+            _ => 1,
+        }
+    }
+
+    /// Stable label for metrics/tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::Divide => "divide",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Rsqrt => "rsqrt",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "divide" | "div" => Ok(OpKind::Divide),
+            "sqrt" => Ok(OpKind::Sqrt),
+            "rsqrt" => Ok(OpKind::Rsqrt),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+}
+
+/// A unit of work travelling through the coordinator.
+#[derive(Debug)]
+pub struct Request {
+    /// Unique id (assigned by the service handle).
+    pub id: u64,
+    /// Operation.
+    pub op: OpKind,
+    /// First operand.
+    pub a: f32,
+    /// Second operand (ignored for unary ops).
+    pub b: f32,
+    /// Enqueue timestamp (for latency accounting and age-based flush).
+    pub enqueued_at: Instant,
+    /// Where the response goes.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The service's answer to one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Echoes the request id.
+    pub id: u64,
+    /// Result value (NaN propagated per IEEE semantics).
+    pub value: f32,
+    /// End-to-end latency in nanoseconds.
+    pub latency_ns: u64,
+    /// Size of the batch this request rode in (for diagnostics).
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_and_labels() {
+        assert_eq!(OpKind::Divide.arity(), 2);
+        assert_eq!(OpKind::Sqrt.arity(), 1);
+        assert_eq!(OpKind::Rsqrt.arity(), 1);
+        assert_eq!(OpKind::Divide.label(), "divide");
+    }
+
+    #[test]
+    fn parse_ops() {
+        assert_eq!(OpKind::parse("div").unwrap(), OpKind::Divide);
+        assert_eq!(OpKind::parse("sqrt").unwrap(), OpKind::Sqrt);
+        assert_eq!(OpKind::parse("rsqrt").unwrap(), OpKind::Rsqrt);
+        assert!(OpKind::parse("cbrt").is_err());
+    }
+
+    #[test]
+    fn all_covers_every_kind() {
+        assert_eq!(OpKind::ALL.len(), 3);
+        let mut labels: Vec<_> = OpKind::ALL.iter().map(|o| o.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Request router: fans incoming requests into per-op queues.
+//!
+//! The router is deliberately simple — op kind is the only routing key
+//! the FPU needs — but it enforces the invariants the batcher relies
+//! on: FIFO order within an op, and conservation (every request routed
+//! exactly once, none dropped, none duplicated).
+
+use std::collections::VecDeque;
+
+use super::request::{OpKind, Request};
+
+/// Per-op FIFO queues.
+#[derive(Debug, Default)]
+pub struct Router {
+    divide: VecDeque<Request>,
+    sqrt: VecDeque<Request>,
+    rsqrt: VecDeque<Request>,
+    routed: u64,
+    drained: u64,
+}
+
+impl Router {
+    /// Empty router.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Route one request to its op queue.
+    pub fn route(&mut self, req: Request) {
+        self.routed += 1;
+        self.queue_mut(req.op).push_back(req);
+    }
+
+    /// Queue length for an op.
+    pub fn len(&self, op: OpKind) -> usize {
+        self.queue(op).len()
+    }
+
+    /// Total queued across ops.
+    pub fn total_len(&self) -> usize {
+        OpKind::ALL.iter().map(|&op| self.len(op)).sum()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.total_len() == 0
+    }
+
+    /// Oldest enqueue time across all queues (drives age-based flush).
+    pub fn oldest_enqueue(&self) -> Option<std::time::Instant> {
+        OpKind::ALL
+            .iter()
+            .filter_map(|&op| self.queue(op).front().map(|r| r.enqueued_at))
+            .min()
+    }
+
+    /// Pop up to `max` requests from one op queue, FIFO.
+    pub fn drain(&mut self, op: OpKind, max: usize) -> Vec<Request> {
+        let q = self.queue_mut(op);
+        let take = max.min(q.len());
+        let out: Vec<Request> = q.drain(..take).collect();
+        self.drained += out.len() as u64;
+        out
+    }
+
+    /// Lifetime counters: (routed, drained). Conservation invariant:
+    /// `routed == drained + total_len()` at all times.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.routed, self.drained)
+    }
+
+    fn queue(&self, op: OpKind) -> &VecDeque<Request> {
+        match op {
+            OpKind::Divide => &self.divide,
+            OpKind::Sqrt => &self.sqrt,
+            OpKind::Rsqrt => &self.rsqrt,
+        }
+    }
+
+    fn queue_mut(&mut self, op: OpKind) -> &mut VecDeque<Request> {
+        match op {
+            OpKind::Divide => &mut self.divide,
+            OpKind::Sqrt => &mut self.sqrt,
+            OpKind::Rsqrt => &mut self.rsqrt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64, op: OpKind) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        // keep rx alive by leaking in tests that don't need replies
+        std::mem::forget(_rx);
+        Request { id, op, a: 1.0, b: 1.0, enqueued_at: Instant::now(), reply: tx }
+    }
+
+    #[test]
+    fn routes_by_op() {
+        let mut r = Router::new();
+        r.route(req(1, OpKind::Divide));
+        r.route(req(2, OpKind::Sqrt));
+        r.route(req(3, OpKind::Divide));
+        assert_eq!(r.len(OpKind::Divide), 2);
+        assert_eq!(r.len(OpKind::Sqrt), 1);
+        assert_eq!(r.len(OpKind::Rsqrt), 0);
+        assert_eq!(r.total_len(), 3);
+    }
+
+    #[test]
+    fn fifo_within_op() {
+        let mut r = Router::new();
+        for id in 0..10 {
+            r.route(req(id, OpKind::Divide));
+        }
+        let got = r.drain(OpKind::Divide, 4);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        let got = r.drain(OpKind::Divide, 100);
+        assert_eq!(got.first().unwrap().id, 4);
+        assert_eq!(got.len(), 6);
+    }
+
+    #[test]
+    fn conservation_property() {
+        check::property("router conserves requests", |g| {
+            let mut r = Router::new();
+            let mut routed = 0u64;
+            let mut drained = 0u64;
+            for step in 0..g.usize_in(1, 60) {
+                if g.chance(0.6) {
+                    let op = *g.pick(&OpKind::ALL);
+                    r.route(req(step as u64, op));
+                    routed += 1;
+                } else {
+                    let op = *g.pick(&OpKind::ALL);
+                    drained += r.drain(op, g.usize_in(0, 8) + 1).len() as u64;
+                }
+            }
+            let (cr, cd) = r.counters();
+            ensure(cr == routed && cd == drained, format!("{cr}/{routed} {cd}/{drained}"))?;
+            ensure(
+                routed == drained + r.total_len() as u64,
+                format!("conservation: {routed} != {drained} + {}", r.total_len()),
+            )
+        });
+    }
+
+    #[test]
+    fn oldest_enqueue_across_queues() {
+        let mut r = Router::new();
+        assert!(r.oldest_enqueue().is_none());
+        let first = req(1, OpKind::Sqrt);
+        let t0 = first.enqueued_at;
+        r.route(first);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        r.route(req(2, OpKind::Divide));
+        assert_eq!(r.oldest_enqueue().unwrap(), t0);
+    }
+
+    #[test]
+    fn drain_more_than_queued() {
+        let mut r = Router::new();
+        r.route(req(1, OpKind::Rsqrt));
+        let got = r.drain(OpKind::Rsqrt, 10);
+        assert_eq!(got.len(), 1);
+        assert!(r.is_empty());
+    }
+}

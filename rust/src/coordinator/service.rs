@@ -1,0 +1,442 @@
+//! The threaded FPU service: lifecycle, backpressure, dispatch loop and
+//! worker pool. This is the event loop the paper's "divider unit as a
+//! shared resource" maps onto: many clients, one (or a few) expensive
+//! execution engines, a batching layer in between.
+//!
+//! Threading model (std threads + channels; no async runtime exists in
+//! the offline environment, and none is needed):
+//!
+//! * clients hold a [`ServiceHandle`] and `submit()` into a *bounded*
+//!   channel — the backpressure boundary; a full queue pushes back on
+//!   submitters instead of growing without bound;
+//! * one **dispatcher** thread owns the [`Router`] + [`DynamicBatcher`]
+//!   and turns the request stream into batches;
+//! * `workers` **executor** threads each own one [`Executor`] (one
+//!   "divider unit" each) and execute batches round-robin.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::executor::Executor;
+
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::request::{OpKind, Request, Response};
+use super::router::Router;
+
+/// Service configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+    /// Bounded submit-queue depth (the backpressure knob).
+    pub queue_depth: usize,
+    /// Number of executor workers (parallel "divider units").
+    pub workers: usize,
+    /// Dispatcher poll granularity when idle.
+    pub poll: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            batcher: BatcherConfig::default(),
+            queue_depth: 16_384,
+            workers: 1,
+            poll: Duration::from_micros(50),
+        }
+    }
+}
+
+enum DispatchMsg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Client-side handle: cheap to clone, safe across threads.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<DispatchMsg>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl ServiceHandle {
+    /// Submit one op; returns the receiver for its [`Response`].
+    /// Blocks while the submit queue is full (backpressure).
+    pub fn submit(&self, op: OpKind, a: f32, b: f32) -> Result<mpsc::Receiver<Response>> {
+        let (reply, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            a,
+            b,
+            enqueued_at: Instant::now(),
+            reply,
+        };
+        if self.tx.send(DispatchMsg::Req(req)).is_err() {
+            bail!("service is shut down");
+        }
+        Ok(rx)
+    }
+
+    /// Non-blocking submit: `Ok(None)` when the queue is full.
+    pub fn try_submit(
+        &self,
+        op: OpKind,
+        a: f32,
+        b: f32,
+    ) -> Result<Option<mpsc::Receiver<Response>>> {
+        let (reply, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            a,
+            b,
+            enqueued_at: Instant::now(),
+            reply,
+        };
+        match self.tx.try_send(DispatchMsg::Req(req)) {
+            Ok(()) => Ok(Some(rx)),
+            Err(TrySendError::Full(_)) => Ok(None),
+            Err(TrySendError::Disconnected(_)) => bail!("service is shut down"),
+        }
+    }
+
+    /// Convenience: blocking round-trip divide.
+    pub fn divide(&self, n: f32, d: f32) -> Result<f32> {
+        Ok(self.submit(OpKind::Divide, n, d)?.recv()?.value)
+    }
+
+    /// Convenience: blocking round-trip sqrt.
+    pub fn sqrt(&self, x: f32) -> Result<f32> {
+        Ok(self.submit(OpKind::Sqrt, x, 1.0)?.recv()?.value)
+    }
+
+    /// Convenience: blocking round-trip rsqrt.
+    pub fn rsqrt(&self, x: f32) -> Result<f32> {
+        Ok(self.submit(OpKind::Rsqrt, x, 1.0)?.recv()?.value)
+    }
+}
+
+/// The running service.
+pub struct FpuService {
+    handle: ServiceHandle,
+    metrics: Arc<Metrics>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    shutdown_tx: SyncSender<DispatchMsg>,
+}
+
+impl FpuService {
+    /// Start the service. `make_executor` is called once on the caller
+    /// thread (to validate the configuration and read the batch ladder)
+    /// and once *inside each worker thread* — executors are not `Send`
+    /// (the PJRT client wraps thread-local FFI state), so each worker
+    /// owns an executor it built itself: one "divider unit" per worker.
+    pub fn start<F>(config: ServiceConfig, make_executor: F) -> Result<Self>
+    where
+        F: Fn() -> Result<Box<dyn Executor>> + Send + Sync + 'static,
+    {
+        assert!(config.workers >= 1, "need at least one worker");
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::sync_channel::<DispatchMsg>(config.queue_depth);
+
+        // probe executor: validates the factory up front + batch ladder
+        let probe = make_executor()?;
+        let ladders: Vec<(OpKind, Vec<usize>)> =
+            OpKind::ALL.iter().map(|&op| (op, probe.batch_ladder(op))).collect();
+        drop(probe);
+        let batcher = DynamicBatcher::new(config.batcher, move |op| {
+            ladders.iter().find(|(o, _)| *o == op).map(|(_, l)| l.clone()).unwrap_or_default()
+        });
+
+        // worker channels: dispatcher round-robins batches across them
+        let make_executor = Arc::new(make_executor);
+        let mut batch_txs = Vec::new();
+        let mut workers = Vec::new();
+        for w in 0..config.workers {
+            let (btx, brx) = mpsc::sync_channel::<Batch>(4);
+            batch_txs.push(btx);
+            let metrics = metrics.clone();
+            let factory = make_executor.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fpu-worker-{w}"))
+                    .spawn(move || match factory() {
+                        Ok(executor) => worker_loop(brx, executor, metrics),
+                        Err(e) => eprintln!("fpu-worker-{w}: executor init failed: {e:#}"),
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        let dispatcher = std::thread::Builder::new()
+            .name("fpu-dispatcher".into())
+            .spawn(move || dispatcher_loop(rx, batcher, batch_txs, config.poll))
+            .expect("spawn dispatcher");
+
+        let handle = ServiceHandle { tx: tx.clone(), next_id: Arc::new(AtomicU64::new(0)) };
+        Ok(Self {
+            handle,
+            metrics,
+            dispatcher: Some(dispatcher),
+            workers,
+            shutdown_tx: tx,
+        })
+    }
+
+    /// A cloneable client handle.
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Live metrics.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Graceful shutdown: drains queued work, joins all threads.
+    pub fn shutdown(mut self) {
+        let _ = self.shutdown_tx.send(DispatchMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for FpuService {
+    fn drop(&mut self) {
+        let _ = self.shutdown_tx.send(DispatchMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: Receiver<DispatchMsg>,
+    batcher: DynamicBatcher,
+    batch_txs: Vec<SyncSender<Batch>>,
+    poll: Duration,
+) {
+    let mut router = Router::new();
+    let mut next_worker = 0usize;
+    let dispatch = |batch: Batch, next_worker: &mut usize| {
+        // round-robin; a full worker queue applies backpressure here
+        let tx = &batch_txs[*next_worker % batch_txs.len()];
+        *next_worker += 1;
+        let _ = tx.send(batch); // worker gone => requests drop, senders see err
+    };
+    'outer: loop {
+        // block for the first message (bounded by the poll tick) ...
+        match rx.recv_timeout(poll) {
+            Ok(DispatchMsg::Req(req)) => router.route(req),
+            Ok(DispatchMsg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // ... then greedily drain the backlog so the batcher sees the
+        // whole burst at once (otherwise a stale-age flush would emit
+        // singleton batches while the queue still holds work)
+        loop {
+            match rx.try_recv() {
+                Ok(DispatchMsg::Req(req)) => router.route(req),
+                Ok(DispatchMsg::Shutdown) => break 'outer,
+                Err(_) => break,
+            }
+        }
+        for batch in batcher.ready_batches(&mut router, Instant::now()) {
+            dispatch(batch, &mut next_worker);
+        }
+    }
+    // drain everything left
+    while let Ok(DispatchMsg::Req(req)) = rx.try_recv() {
+        router.route(req);
+    }
+    for batch in batcher.flush_all(&mut router) {
+        dispatch(batch, &mut next_worker);
+    }
+    // dropping batch_txs closes worker channels -> workers exit
+}
+
+fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, metrics: Arc<Metrics>) {
+    while let Ok(batch) = rx.recv() {
+        let t0 = Instant::now();
+        let result = executor.execute(
+            batch.op,
+            &batch.a,
+            if batch.op == OpKind::Divide { Some(&batch.b) } else { None },
+        );
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+        match result {
+            Ok(values) => {
+                let done = Instant::now();
+                let latencies: Vec<u64> = batch
+                    .requests
+                    .iter()
+                    .map(|req| done.duration_since(req.enqueued_at).as_nanos() as u64)
+                    .collect();
+                // record metrics BEFORE replying: once a client observes
+                // its response, the snapshot already includes it
+                metrics.record_batch(batch.op, &latencies, exec_ns, batch.padded);
+                for (i, req) in batch.requests.iter().enumerate() {
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        value: values[i],
+                        latency_ns: latencies[i],
+                        batch_size: batch.padded,
+                    });
+                }
+            }
+            Err(_) => {
+                // fail the whole batch: drop reply senders (receivers see
+                // RecvError) and count the errors
+                metrics.record_error(batch.op, batch.requests.len() as u64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::executor::NativeExecutor;
+
+    fn quick_config() -> ServiceConfig {
+        ServiceConfig {
+            batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(100) },
+            queue_depth: 1024,
+            workers: 1,
+            poll: Duration::from_micros(50),
+        }
+    }
+
+    fn native() -> Result<Box<dyn Executor>> {
+        Ok(Box::new(NativeExecutor::with_defaults()))
+    }
+
+    #[test]
+    fn round_trip_divide() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let h = svc.handle();
+        assert_eq!(h.divide(10.0, 4.0).unwrap(), 2.5);
+        assert_eq!(h.sqrt(81.0).unwrap(), 9.0);
+        assert_eq!(h.rsqrt(4.0).unwrap(), 0.5);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_clients() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                for i in 1..50u32 {
+                    let n = (t * 100 + i) as f32;
+                    let q = h.divide(n * 3.0, 3.0).unwrap();
+                    assert_eq!(q, n);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.op(OpKind::Divide).requests, 8 * 49);
+        assert_eq!(snap.total_errors(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batches_actually_form() {
+        // long wait + many pipelined submissions => multi-request batches
+        let mut cfg = quick_config();
+        cfg.batcher.max_wait = Duration::from_millis(5);
+        let svc = FpuService::start(cfg, native).unwrap();
+        let h = svc.handle();
+        let rxs: Vec<_> =
+            (0..200).map(|i| h.submit(OpKind::Divide, i as f32, 1.0).unwrap()).collect();
+        let mut max_batch = 0usize;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.value, i as f32);
+            max_batch = max_batch.max(resp.batch_size);
+        }
+        assert!(max_batch > 1, "no batching happened");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let mut cfg = quick_config();
+        cfg.batcher.max_wait = Duration::from_secs(10); // only drain flushes
+        let svc = FpuService::start(cfg, native).unwrap();
+        let h = svc.handle();
+        let rxs: Vec<_> =
+            (0..10).map(|i| h.submit(OpKind::Sqrt, (i * i) as f32, 1.0).unwrap()).collect();
+        svc.shutdown(); // must flush the waiting batch
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().value, i as f32);
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let h = svc.handle();
+        svc.shutdown();
+        assert!(h.divide(1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn multiple_workers() {
+        let mut cfg = quick_config();
+        cfg.workers = 4;
+        let svc = FpuService::start(cfg, native).unwrap();
+        let h = svc.handle();
+        let rxs: Vec<_> =
+            (1..=500).map(|i| h.submit(OpKind::Divide, (2 * i) as f32, 2.0).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().value, (i + 1) as f32);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn failing_executor_reports_errors() {
+        struct Failing;
+        impl Executor for Failing {
+            fn batch_ladder(&self, _op: OpKind) -> Vec<usize> {
+                vec![64]
+            }
+            fn execute(&mut self, _: OpKind, _: &[f32], _: Option<&[f32]>) -> Result<Vec<f32>> {
+                bail!("injected failure")
+            }
+            fn name(&self) -> &'static str {
+                "failing"
+            }
+        }
+        let svc =
+            FpuService::start(quick_config(), || Ok(Box::new(Failing) as Box<dyn Executor>))
+                .unwrap();
+        let h = svc.handle();
+        let rx = h.submit(OpKind::Divide, 1.0, 1.0).unwrap();
+        // reply sender dropped on failure -> RecvError
+        assert!(rx.recv().is_err());
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.total_errors(), 1);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,195 @@
+//! Datapath configuration shared by the algorithms and the simulator.
+
+use crate::arith::fixed::Rounding;
+use crate::arith::twos::ComplementKind;
+
+/// Parameters of a Goldschmidt datapath instance.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// ROM input width (table has 2^p entries).
+    pub table_p: u32,
+    /// Internal fraction width of the datapath words (guard bits
+    /// included). 30 bits comfortably covers f32 outputs with the
+    /// paper's q4 configuration.
+    pub frac: u32,
+    /// Number of refinement steps after the table lookup
+    /// (1 -> q2, 3 -> q4: the paper's full-accuracy configuration).
+    pub steps: u32,
+    /// How multiplier outputs are narrowed back to `frac` bits.
+    pub rounding: Rounding,
+    /// Complement circuit variant.
+    pub complement: ComplementKind,
+}
+
+impl Default for Config {
+    /// The paper's configuration: p=10 ROM, q4 (3 steps), nearest
+    /// rounding, exact two's-complement block, 30 fraction bits
+    /// (23-bit f32 mantissa + 7 guard bits).
+    fn default() -> Self {
+        Self {
+            table_p: 10,
+            frac: 30,
+            steps: 3,
+            rounding: Rounding::Nearest,
+            complement: ComplementKind::Exact,
+        }
+    }
+}
+
+impl Config {
+    /// EIMMW-2000's double-precision configuration: 58 fraction bits
+    /// (52-bit f64 mantissa + 6 guard bits), 4 refinement steps (the
+    /// p=10 table reaches 2^-44 at step 3 — one short of 53 bits).
+    pub fn double() -> Self {
+        Self::default().with_frac(58).with_steps(4)
+    }
+
+    /// Builder: set the ROM width.
+    pub fn with_table_p(mut self, p: u32) -> Self {
+        self.table_p = p;
+        self
+    }
+
+    /// Builder: set the fraction width.
+    pub fn with_frac(mut self, frac: u32) -> Self {
+        self.frac = frac;
+        self
+    }
+
+    /// Builder: set the refinement step count.
+    pub fn with_steps(mut self, steps: u32) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Builder: set the rounding mode.
+    pub fn with_rounding(mut self, r: Rounding) -> Self {
+        self.rounding = r;
+        self
+    }
+
+    /// Builder: set the complement circuit.
+    pub fn with_complement(mut self, c: ComplementKind) -> Self {
+        self.complement = c;
+        self
+    }
+
+    /// Validate parameter consistency (table fits in the datapath word).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.table_p < 1 || self.table_p > 21 {
+            return Err(format!("table_p {} out of [1,21]", self.table_p));
+        }
+        if self.frac < self.table_p + 2 {
+            return Err(format!(
+                "frac {} < table output width {}",
+                self.frac,
+                self.table_p + 2
+            ));
+        }
+        if self.frac > 62 {
+            return Err(format!("frac {} > 62", self.frac));
+        }
+        if self.steps > 8 {
+            return Err(format!("steps {} > 8 (pointless past convergence)", self.steps));
+        }
+        Ok(())
+    }
+
+    /// Predicted relative error after the table step (step 0).
+    pub fn table_error(&self) -> f64 {
+        1.5 * 2f64.powi(-(self.table_p as i32) - 1)
+    }
+
+    /// Predicted relative error after `steps` refinements, ignoring
+    /// rounding: quadratic convergence `e_{i+1} = e_i^2`, floored at the
+    /// datapath quantum.
+    pub fn predicted_error(&self) -> f64 {
+        let mut e = self.table_error();
+        for _ in 0..self.steps {
+            e = e * e;
+        }
+        e.max(2f64.powi(-(self.frac as i32)))
+    }
+
+    /// The paper's §III knob: the logic-block counter is "predetermined
+    /// if we are sure of how many bits accuracy we need". Returns the
+    /// minimal refinement count whose predicted error reaches
+    /// `2^-bits`, i.e. the value the counter would be programmed with.
+    pub fn steps_for_accuracy(table_p: u32, bits: u32) -> u32 {
+        let mut e = 1.5 * 2f64.powi(-(table_p as i32) - 1);
+        let target = 2f64.powi(-(bits as i32));
+        let mut steps = 0;
+        while e > target && steps < 8 {
+            e = e * e;
+            steps += 1;
+        }
+        steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(Config::default().validate().is_ok());
+    }
+
+    #[test]
+    fn builders() {
+        let c = Config::default()
+            .with_table_p(8)
+            .with_frac(40)
+            .with_steps(2)
+            .with_rounding(Rounding::Truncate)
+            .with_complement(ComplementKind::OnesComplement);
+        assert_eq!(c.table_p, 8);
+        assert_eq!(c.frac, 40);
+        assert_eq!(c.steps, 2);
+        assert_eq!(c.rounding, Rounding::Truncate);
+        assert_eq!(c.complement, ComplementKind::OnesComplement);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(Config::default().with_table_p(0).validate().is_err());
+        assert!(Config::default().with_frac(8).validate().is_err());
+        assert!(Config::default().with_frac(63).validate().is_err());
+        assert!(Config::default().with_steps(9).validate().is_err());
+    }
+
+    #[test]
+    fn double_config_valid_and_sufficient() {
+        let c = Config::double();
+        assert!(c.validate().is_ok());
+        assert!(c.predicted_error() < 2f64.powi(-53));
+        assert_eq!(Config::steps_for_accuracy(10, 53), 3); // error model
+    }
+
+    #[test]
+    fn steps_for_accuracy_matches_paper_config() {
+        // p=10 table: 24-bit (f32) accuracy needs 2 steps; 53-bit needs 3
+        assert_eq!(Config::steps_for_accuracy(10, 24), 2);
+        assert_eq!(Config::steps_for_accuracy(10, 44), 3);
+        assert_eq!(Config::steps_for_accuracy(10, 53), 3);
+        // a tiny table needs more steps for the same accuracy
+        assert!(Config::steps_for_accuracy(4, 24) > Config::steps_for_accuracy(10, 24));
+        // accuracy already satisfied by the table alone -> 0 steps
+        assert_eq!(Config::steps_for_accuracy(10, 8), 0);
+    }
+
+    #[test]
+    fn predicted_error_quadratic() {
+        let c = Config::default().with_frac(60);
+        let e0 = c.table_error();
+        let e1 = c.with_steps(1).predicted_error();
+        let e2 = c.with_steps(2).predicted_error();
+        assert!((e1 - e0 * e0).abs() < 1e-12);
+        assert!((e2 - e0.powi(4)).abs() < 1e-12);
+        // with default frac=30 the floor kicks in by step 3
+        let c30 = Config::default();
+        assert_eq!(c30.predicted_error(), 2f64.powi(-30));
+    }
+}

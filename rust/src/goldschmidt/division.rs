@@ -1,0 +1,285 @@
+//! Goldschmidt division: the algorithm of Figs. 1–2 of the paper.
+//!
+//! Step 1: `K_1 = ROM[D]`, `q_1 = N*K_1`, `r_1 = D*K_1` (MULT 1 / MULT 2).
+//! Step 2 (repeated `steps` times): `K_{i+1} = 2 - r_i` (two's-complement
+//! block), `q_{i+1} = q_i * K_{i+1}`, `r_{i+1} = r_i * K_{i+1}`.
+//!
+//! [`divide_mantissa`] returns the full [`DivisionTrace`] — every
+//! intermediate `K_i, q_i, r_i` — which the cycle-accurate simulator's
+//! datapath values are cross-checked against bit-for-bit (tests in
+//! `rust/tests/sim_vs_library.rs`).
+
+use crate::arith::fixed::Fixed;
+use crate::arith::fp;
+use crate::arith::twos::ComplementBlock;
+use crate::tables::ReciprocalTable;
+
+use super::config::Config;
+
+/// Complete record of one Goldschmidt division run.
+#[derive(Clone, Debug)]
+pub struct DivisionTrace {
+    /// `K_1` (table), then each `K_{i+1} = 2 - r_i`.
+    pub k: Vec<Fixed>,
+    /// `q_1 .. q_{steps+1}`: the quotient approximations.
+    pub q: Vec<Fixed>,
+    /// `r_1 .. r_{steps+1}`: the denominator residuals (converge to 1).
+    pub r: Vec<Fixed>,
+}
+
+impl DivisionTrace {
+    /// The final quotient approximation (the datapath output).
+    pub fn quotient(&self) -> Fixed {
+        *self.q.last().expect("at least q1")
+    }
+
+    /// The final residual `r` (distance from 1 measures convergence).
+    pub fn residual(&self) -> Fixed {
+        *self.r.last().expect("at least r1")
+    }
+}
+
+/// Run Goldschmidt division on mantissas `n, d in [1, 2)` (both at
+/// `cfg.frac` fraction bits), producing the full trace.
+pub fn divide_mantissa(
+    n: &Fixed,
+    d: &Fixed,
+    table: &ReciprocalTable,
+    cfg: &Config,
+) -> DivisionTrace {
+    assert_eq!(n.frac(), cfg.frac, "n width != config");
+    assert_eq!(d.frac(), cfg.frac, "d width != config");
+    assert_eq!(table.p(), cfg.table_p, "table width != config");
+    let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+
+    // Step 1: ROM lookup + the two parallel multipliers.
+    let k1 = table.lookup(d);
+    let mut q = n.mul(&k1, cfg.rounding);
+    let mut r = d.mul(&k1, cfg.rounding);
+    let mut trace = DivisionTrace { k: vec![k1], q: vec![q], r: vec![r] };
+
+    // Step 2, `steps` times: complement + multiplier pair.
+    for _ in 0..cfg.steps {
+        let k = complement.apply(&r);
+        q = q.mul(&k, cfg.rounding);
+        r = r.mul(&k, cfg.rounding);
+        trace.k.push(k);
+        trace.q.push(q);
+        trace.r.push(r);
+    }
+    trace
+}
+
+/// Allocation-free hot path: same arithmetic as [`divide_mantissa`] but
+/// returns only the final quotient (no trace vectors). This is what the
+/// serving executor and the throughput benches call; `divide_mantissa`
+/// keeps the full trace for simulator cross-checks and analysis.
+pub fn divide_mantissa_quick(
+    n: &Fixed,
+    d: &Fixed,
+    table: &ReciprocalTable,
+    cfg: &Config,
+) -> Fixed {
+    let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+    let k1 = table.lookup(d);
+    let mut q = n.mul(&k1, cfg.rounding);
+    let mut r = d.mul(&k1, cfg.rounding);
+    for _ in 0..cfg.steps {
+        let k = complement.apply(&r);
+        q = q.mul(&k, cfg.rounding);
+        r = r.mul(&k, cfg.rounding);
+    }
+    q
+}
+
+/// Full IEEE f32 division through the Goldschmidt mantissa datapath.
+pub fn divide_f32(n: f32, d: f32, table: &ReciprocalTable, cfg: &Config) -> f32 {
+    fp::divide_via(n, d, cfg.frac, |nm, dm| divide_mantissa_quick(&nm, &dm, table, cfg))
+}
+
+/// Full IEEE f64 division — EIMMW-2000's own target format. Requires a
+/// double-precision configuration (`frac >= 56`, i.e. 52 mantissa bits
+/// plus >= 4 guard bits; `Config::double()` provides one).
+pub fn divide_f64(n: f64, d: f64, table: &ReciprocalTable, cfg: &Config) -> f64 {
+    assert!(cfg.frac >= 56, "f64 needs frac >= 56 (got {})", cfg.frac);
+    crate::arith::fp64::divide_via64(n, d, cfg.frac, |nm, dm| {
+        divide_mantissa_quick(&nm, &dm, table, cfg)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::ulp::{rel_err, ulp_diff_f32};
+    use crate::check::{self, ensure};
+    use crate::util::rng::Xoshiro256;
+
+    fn setup() -> (ReciprocalTable, Config) {
+        let cfg = Config::default();
+        (ReciprocalTable::new(cfg.table_p), cfg)
+    }
+
+    #[test]
+    fn trace_has_expected_length() {
+        let (table, cfg) = setup();
+        let n = Fixed::from_f64(1.5, cfg.frac);
+        let d = Fixed::from_f64(1.25, cfg.frac);
+        let t = divide_mantissa(&n, &d, &table, &cfg);
+        assert_eq!(t.k.len(), 1 + cfg.steps as usize);
+        assert_eq!(t.q.len(), 1 + cfg.steps as usize);
+        assert_eq!(t.r.len(), 1 + cfg.steps as usize);
+    }
+
+    #[test]
+    fn residual_converges_to_one() {
+        let (table, cfg) = setup();
+        let n = Fixed::from_f64(1.7, cfg.frac);
+        let d = Fixed::from_f64(1.9, cfg.frac);
+        let t = divide_mantissa(&n, &d, &table, &cfg);
+        let mut prev = (t.r[0].to_f64() - 1.0).abs();
+        for r in &t.r[1..] {
+            let err = (r.to_f64() - 1.0).abs();
+            // monotone until the rounding floor (~2^-30)
+            assert!(err <= prev.max(1e-8), "residual diverged: {err} > {prev}");
+            prev = err;
+        }
+        assert!(prev < 1e-6);
+    }
+
+    #[test]
+    fn quotient_accuracy_random_sweep() {
+        let (table, cfg) = setup();
+        let mut rng = Xoshiro256::new(0xD1);
+        for _ in 0..2000 {
+            let nf = rng.range_f64(1.0, 2.0);
+            let df = rng.range_f64(1.0, 2.0);
+            let n = Fixed::from_f64(nf, cfg.frac);
+            let d = Fixed::from_f64(df, cfg.frac);
+            let q = divide_mantissa(&n, &d, &table, &cfg).quotient();
+            let err = rel_err(q.to_f64(), n.to_f64() / d.to_f64());
+            assert!(err < 3.0 * 2f64.powi(-(cfg.frac as i32)), "n={nf} d={df} err={err}");
+        }
+    }
+
+    #[test]
+    fn convergence_is_quadratic_per_step() {
+        // with a wide datapath, each step squares the residual error
+        let cfg = Config::default().with_frac(60).with_steps(3);
+        let table = ReciprocalTable::new(cfg.table_p);
+        let n = Fixed::from_f64(1.23456789, cfg.frac);
+        let d = Fixed::from_f64(1.87654321, cfg.frac);
+        let t = divide_mantissa(&n, &d, &table, &cfg);
+        let e1 = (t.r[0].to_f64() - 1.0).abs();
+        let e2 = (t.r[1].to_f64() - 1.0).abs();
+        let e3 = (t.r[2].to_f64() - 1.0).abs();
+        assert!(e2 < e1 * e1 * 1.5 + 1e-17, "e1={e1} e2={e2}");
+        assert!(e3 < e2 * e2 * 1.5 + 1e-17, "e2={e2} e3={e3}");
+    }
+
+    #[test]
+    fn property_quotient_matches_exact() {
+        check::property("goldschmidt q ~= n/d", |g| {
+            let cfg = Config::default();
+            let table = ReciprocalTable::new(cfg.table_p);
+            let n = Fixed::from_f64(g.f64_in(1.0, 2.0), cfg.frac);
+            let d = Fixed::from_f64(g.f64_in(1.0, 2.0), cfg.frac);
+            let q = divide_mantissa(&n, &d, &table, &cfg).quotient();
+            let want = n.to_f64() / d.to_f64();
+            ensure(
+                rel_err(q.to_f64(), want) < 4.0 * 2f64.powi(-30),
+                format!("n={} d={} q={}", n.to_f64(), d.to_f64(), q.to_f64()),
+            )
+        });
+    }
+
+    #[test]
+    fn f32_division_few_ulp() {
+        let (table, cfg) = setup();
+        let mut rng = Xoshiro256::new(7);
+        let mut worst = 0u64;
+        for _ in 0..2000 {
+            let n = rng.range_f32(1e-10, 1e10);
+            let d = rng.range_f32(1e-10, 1e10);
+            let q = divide_f32(n, d, &table, &cfg);
+            worst = worst.max(ulp_diff_f32(q, n / d));
+        }
+        assert!(worst <= 1, "worst ulp {worst}");
+    }
+
+    #[test]
+    fn f32_specials_pass_through() {
+        let (table, cfg) = setup();
+        assert!(divide_f32(f32::NAN, 2.0, &table, &cfg).is_nan());
+        assert_eq!(divide_f32(1.0, 0.0, &table, &cfg), f32::INFINITY);
+        assert_eq!(divide_f32(0.0, 3.0, &table, &cfg), 0.0);
+        assert_eq!(
+            divide_f32(f32::NEG_INFINITY, 2.0, &table, &cfg),
+            f32::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn f64_division_few_ulp() {
+        // EIMMW's double-precision case: p=10 table converges past 53
+        // bits in 3 steps (2^-11 -> 2^-22 -> 2^-44 -> 2^-88, floored by
+        // the 58-bit datapath)
+        let cfg = Config::double();
+        let table = ReciprocalTable::new(cfg.table_p);
+        let mut rng = Xoshiro256::new(77);
+        let mut worst = 0u64;
+        for _ in 0..2000 {
+            let n = rng.range_f64(1e-12, 1e12);
+            let d = rng.range_f64(1e-12, 1e12);
+            let q = divide_f64(n, d, &table, &cfg);
+            worst = worst.max(crate::arith::ulp::ulp_diff_f64(q, n / d));
+        }
+        assert!(worst <= 1, "worst f64 ulp {worst}");
+    }
+
+    #[test]
+    fn f64_specials() {
+        let cfg = Config::double();
+        let table = ReciprocalTable::new(cfg.table_p);
+        assert!(divide_f64(f64::NAN, 2.0, &table, &cfg).is_nan());
+        assert_eq!(divide_f64(1.0, 0.0, &table, &cfg), f64::INFINITY);
+        assert_eq!(divide_f64(-6.0, 2.0, &table, &cfg), -3.0);
+    }
+
+    #[test]
+    fn quick_path_equals_trace_path() {
+        check::property("divide_mantissa_quick == divide_mantissa", |g| {
+            let cfg = Config::default().with_steps(g.usize_in(0, 5) as u32);
+            let table = ReciprocalTable::new(cfg.table_p);
+            let n = Fixed::from_f64(g.f64_in(1.0, 2.0), cfg.frac);
+            let d = Fixed::from_f64(g.f64_in(1.0, 2.0), cfg.frac);
+            let quick = divide_mantissa_quick(&n, &d, &table, &cfg);
+            let full = divide_mantissa(&n, &d, &table, &cfg).quotient();
+            ensure(quick.bits() == full.bits(), format!("n={} d={}", n.to_f64(), d.to_f64()))
+        });
+    }
+
+    #[test]
+    fn steps_zero_is_table_only() {
+        let cfg = Config::default().with_steps(0);
+        let table = ReciprocalTable::new(cfg.table_p);
+        let n = Fixed::from_f64(1.5, cfg.frac);
+        let d = Fixed::from_f64(1.5, cfg.frac);
+        let t = divide_mantissa(&n, &d, &table, &cfg);
+        assert_eq!(t.q.len(), 1);
+        // q1 = n * K1 is within table error of n/d
+        let err = rel_err(t.quotient().to_f64(), 1.0);
+        assert!(err < cfg.table_error());
+    }
+
+    #[test]
+    fn ones_complement_variant_still_converges() {
+        use crate::arith::twos::ComplementKind;
+        let cfg = Config::default().with_complement(ComplementKind::OnesComplement);
+        let table = ReciprocalTable::new(cfg.table_p);
+        let n = Fixed::from_f64(1.999, cfg.frac);
+        let d = Fixed::from_f64(1.001, cfg.frac);
+        let q = divide_mantissa(&n, &d, &table, &cfg).quotient();
+        let err = rel_err(q.to_f64(), 1.999 / 1.001);
+        assert!(err < 1e-7, "err={err}");
+    }
+}

@@ -1,0 +1,25 @@
+//! The Goldschmidt algorithms (division, square root, reciprocal square
+//! root) in bit-accurate fixed point — the *functional* model that the
+//! cycle-accurate simulator ([`crate::sim`]) is validated against
+//! bit-for-bit, and that the accuracy experiments (paper claims ACC,
+//! V1, V2) measure.
+//!
+//! Structure:
+//! * [`config`] — datapath parameters (table width, fraction width,
+//!   refinement steps, rounding, complement circuit).
+//! * [`division`] — the paper's main loop: `q_{i+1} = q_i K_{i+1}`,
+//!   `r_{i+1} = r_i K_{i+1}`, `K_{i+1} = 2 - r_i`, with a full
+//!   intermediate trace for simulator cross-checks.
+//! * [`sqrt`] — the coupled (g, h) iteration for sqrt / rsqrt.
+//! * [`variants`] — EIMMW Variant A (terminal rounding) and Variant B
+//!   (error-term correction), which the paper claims remain exact under
+//!   the hardware-reduced datapath.
+
+pub mod config;
+pub mod division;
+pub mod sqrt;
+pub mod variants;
+
+pub use config::Config;
+pub use division::{divide_f32, divide_f64, divide_mantissa, divide_mantissa_quick, DivisionTrace};
+pub use sqrt::{rsqrt_f32, rsqrt_mantissa, sqrt_f32, sqrt_mantissa};

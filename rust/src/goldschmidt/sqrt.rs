@@ -1,0 +1,251 @@
+//! Goldschmidt square root and reciprocal square root (EIMMW-2000),
+//! which the paper's §IV claims remain compatible with the reduced
+//! datapath.
+//!
+//! Coupled iteration on `d in [1, 4)`:
+//! ```text
+//!   y0 = ROM[d]              (~ 1/sqrt(d))
+//!   g0 = d * y0              -> sqrt(d)
+//!   h0 = y0 / 2              -> 1/(2 sqrt(d))
+//!   rho_i = 1/2 - g_i * h_i        (the "complement" step)
+//!   g_{i+1} = g_i + g_i * rho_i    (one multiplier + one adder)
+//!   h_{i+1} = h_i + h_i * rho_i
+//! ```
+//! Like division, each iteration reuses the same multiply/complement
+//! hardware in the feedback design — the logic-block schedule is
+//! identical, with the halving absorbed into wiring (shift).
+
+use crate::arith::fixed::Fixed;
+use crate::arith::fp::{self, FpClass};
+use crate::tables::RsqrtTable;
+
+use super::config::Config;
+
+/// Trace of the coupled iteration (for tests and the simulator).
+#[derive(Clone, Debug)]
+pub struct SqrtTrace {
+    /// `g_0 .. g_steps` (converges to sqrt(d)).
+    pub g: Vec<Fixed>,
+    /// `h_0 .. h_steps` (converges to 1/(2 sqrt(d))).
+    pub h: Vec<Fixed>,
+    /// `rho_1 .. rho_steps` as signed offsets from 1/2 (stored as the
+    /// factor `1 + rho` which multiplies g and h, in `[1/2, 3/2]`).
+    pub factor: Vec<Fixed>,
+}
+
+/// One Goldschmidt sqrt run on a mantissa `d in [1, 4)` at `cfg.frac`
+/// fraction bits. Returns the trace; `g.last()` is sqrt, `2*h.last()`
+/// is rsqrt.
+pub fn sqrt_trace(d: &Fixed, table: &RsqrtTable, cfg: &Config) -> SqrtTrace {
+    assert_eq!(d.frac(), cfg.frac);
+    assert_eq!(table.p(), cfg.table_p);
+    let y0 = table.lookup(d);
+    let mut g = d.mul(&y0, cfg.rounding);
+    let mut h = Fixed::from_bits(y0.bits() >> 1, cfg.frac); // y0 / 2: a shift
+    let mut trace = SqrtTrace { g: vec![g], h: vec![h], factor: vec![] };
+    let three_half = Fixed::from_f64(1.5, cfg.frac);
+    for _ in 0..cfg.steps {
+        let gh = g.mul(&h, cfg.rounding); // -> 1/2
+        // factor = 1 + (1/2 - gh) = 3/2 - gh; the datapath computes this
+        // with the same complement-style subtractor as division
+        let factor = three_half.sub(&gh);
+        g = g.mul(&factor, cfg.rounding);
+        h = h.mul(&factor, cfg.rounding);
+        trace.g.push(g);
+        trace.h.push(h);
+        trace.factor.push(factor);
+    }
+    trace
+}
+
+/// sqrt on a mantissa in `[1, 4)`: returns `g_final in [1, 2)`.
+pub fn sqrt_mantissa(d: &Fixed, table: &RsqrtTable, cfg: &Config) -> Fixed {
+    *sqrt_trace(d, table, cfg).g.last().expect("g0 exists")
+}
+
+/// rsqrt on a mantissa in `[1, 4)`: returns `2 * h_final in (1/2, 1]`.
+pub fn rsqrt_mantissa(d: &Fixed, table: &RsqrtTable, cfg: &Config) -> Fixed {
+    let h = *sqrt_trace(d, table, cfg).h.last().expect("h0 exists");
+    Fixed::from_bits(h.bits() << 1, cfg.frac) // 2h: a shift
+}
+
+/// Full IEEE f32 sqrt. Negative inputs give NaN, zero gives zero,
+/// +inf gives +inf.
+pub fn sqrt_f32(x: f32, table: &RsqrtTable, cfg: &Config) -> f32 {
+    match fp::classify(x) {
+        FpClass::Nan => f32::NAN,
+        FpClass::Zero => if x.is_sign_negative() { -0.0 } else { 0.0 },
+        FpClass::Inf => {
+            if x > 0.0 { f32::INFINITY } else { f32::NAN }
+        }
+        FpClass::Finite if x < 0.0 => f32::NAN,
+        FpClass::Finite => {
+            let u = fp::unpack(x, cfg.frac);
+            // fold exponent parity: x = m * 2^e, m in [1,2)
+            //  e even -> d = m       in [1,2), result = sqrt(d) * 2^(e/2)
+            //  e odd  -> d = 2m      in [2,4), result = sqrt(d) * 2^((e-1)/2)
+            let (d, half_exp) = if u.exp % 2 == 0 {
+                (u.mant, u.exp / 2)
+            } else {
+                (Fixed::from_bits(u.mant.bits() << 1, cfg.frac), (u.exp - 1) / 2)
+            };
+            let s = sqrt_mantissa(&d, table, cfg);
+            fp::pack(false, half_exp, &s)
+        }
+    }
+}
+
+/// Full IEEE f32 reciprocal square root.
+pub fn rsqrt_f32(x: f32, table: &RsqrtTable, cfg: &Config) -> f32 {
+    match fp::classify(x) {
+        FpClass::Nan => f32::NAN,
+        FpClass::Zero => f32::INFINITY,
+        FpClass::Inf => {
+            if x > 0.0 { 0.0 } else { f32::NAN }
+        }
+        FpClass::Finite if x < 0.0 => f32::NAN,
+        FpClass::Finite => {
+            let u = fp::unpack(x, cfg.frac);
+            let (d, half_exp) = if u.exp % 2 == 0 {
+                (u.mant, u.exp / 2)
+            } else {
+                (Fixed::from_bits(u.mant.bits() << 1, cfg.frac), (u.exp - 1) / 2)
+            };
+            let y = rsqrt_mantissa(&d, table, cfg);
+            fp::pack(false, -half_exp, &y)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::ulp::{rel_err, ulp_diff_f32};
+    use crate::check::{self, ensure};
+    use crate::util::rng::Xoshiro256;
+
+    fn setup() -> (RsqrtTable, Config) {
+        let cfg = Config::default();
+        (RsqrtTable::new(cfg.table_p), cfg)
+    }
+
+    #[test]
+    fn sqrt_mantissa_accuracy() {
+        let (table, cfg) = setup();
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..2000 {
+            let df = rng.range_f64(1.0, 4.0);
+            let d = Fixed::from_f64(df, cfg.frac);
+            let s = sqrt_mantissa(&d, &table, &cfg);
+            let err = rel_err(s.to_f64(), d.to_f64().sqrt());
+            assert!(err < 1e-8, "d={df} err={err}");
+        }
+    }
+
+    #[test]
+    fn rsqrt_mantissa_accuracy() {
+        let (table, cfg) = setup();
+        let mut rng = Xoshiro256::new(4);
+        for _ in 0..2000 {
+            let df = rng.range_f64(1.0, 4.0);
+            let d = Fixed::from_f64(df, cfg.frac);
+            let y = rsqrt_mantissa(&d, &table, &cfg);
+            let err = rel_err(y.to_f64(), 1.0 / d.to_f64().sqrt());
+            assert!(err < 1e-8, "d={df} err={err}");
+        }
+    }
+
+    #[test]
+    fn trace_lengths() {
+        let (table, cfg) = setup();
+        let d = Fixed::from_f64(2.5, cfg.frac);
+        let t = sqrt_trace(&d, &table, &cfg);
+        assert_eq!(t.g.len(), 1 + cfg.steps as usize);
+        assert_eq!(t.h.len(), 1 + cfg.steps as usize);
+        assert_eq!(t.factor.len(), cfg.steps as usize);
+    }
+
+    #[test]
+    fn factors_converge_to_one() {
+        let (table, cfg) = setup();
+        let d = Fixed::from_f64(3.3, cfg.frac);
+        let t = sqrt_trace(&d, &table, &cfg);
+        let mut prev = f64::INFINITY;
+        for f in &t.factor {
+            let dist = (f.to_f64() - 1.0).abs();
+            assert!(dist <= prev, "factor diverged");
+            prev = dist;
+        }
+    }
+
+    #[test]
+    fn property_sqrt_matches_float() {
+        check::property("goldschmidt sqrt ~= sqrt", |g| {
+            let cfg = Config::default();
+            let table = RsqrtTable::new(cfg.table_p);
+            let d = Fixed::from_f64(g.f64_in(1.0, 4.0), cfg.frac);
+            let s = sqrt_mantissa(&d, &table, &cfg);
+            ensure(
+                rel_err(s.to_f64(), d.to_f64().sqrt()) < 1e-8,
+                format!("d={}", d.to_f64()),
+            )
+        });
+    }
+
+    #[test]
+    fn f32_sqrt_few_ulp_wide_range() {
+        let (table, cfg) = setup();
+        let mut rng = Xoshiro256::new(9);
+        let mut worst = 0u64;
+        for _ in 0..2000 {
+            let x = rng.range_f32(1e-30, 1e30);
+            let s = sqrt_f32(x, &table, &cfg);
+            worst = worst.max(ulp_diff_f32(s, (x as f64).sqrt() as f32));
+        }
+        assert!(worst <= 1, "worst {worst}");
+    }
+
+    #[test]
+    fn f32_rsqrt_few_ulp_wide_range() {
+        let (table, cfg) = setup();
+        let mut rng = Xoshiro256::new(10);
+        let mut worst = 0u64;
+        for _ in 0..2000 {
+            let x = rng.range_f32(1e-30, 1e30);
+            let y = rsqrt_f32(x, &table, &cfg);
+            worst = worst.max(ulp_diff_f32(y, (1.0 / (x as f64).sqrt()) as f32));
+        }
+        assert!(worst <= 1, "worst {worst}");
+    }
+
+    #[test]
+    fn f32_specials() {
+        let (table, cfg) = setup();
+        assert!(sqrt_f32(-1.0, &table, &cfg).is_nan());
+        assert!(sqrt_f32(f32::NAN, &table, &cfg).is_nan());
+        assert_eq!(sqrt_f32(0.0, &table, &cfg), 0.0);
+        assert_eq!(sqrt_f32(f32::INFINITY, &table, &cfg), f32::INFINITY);
+        assert_eq!(rsqrt_f32(0.0, &table, &cfg), f32::INFINITY);
+        assert_eq!(rsqrt_f32(f32::INFINITY, &table, &cfg), 0.0);
+        assert!(rsqrt_f32(-4.0, &table, &cfg).is_nan());
+    }
+
+    #[test]
+    fn exact_squares() {
+        let (table, cfg) = setup();
+        for k in 1..40u32 {
+            let x = (k * k) as f32;
+            assert_eq!(sqrt_f32(x, &table, &cfg), k as f32, "sqrt({x})");
+        }
+    }
+
+    #[test]
+    fn exponent_parity_seam() {
+        let (table, cfg) = setup();
+        for &x in &[1.9999999f32, 2.0, 2.0000002, 3.9999998, 4.0, 4.0000005] {
+            let s = sqrt_f32(x, &table, &cfg);
+            let want = (x as f64).sqrt() as f32;
+            assert!(ulp_diff_f32(s, want) <= 1, "x={x} s={s} want={want}");
+        }
+    }
+}

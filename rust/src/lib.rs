@@ -1,0 +1,36 @@
+//! # goldschmidt — Goldschmidt division with hardware reduction
+//!
+//! A full-system reproduction of T. Dutta Roy, *Implementation of
+//! Goldschmidt's Algorithm with Hardware Reduction* (CS.AR 2019), built
+//! as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's hardware contribution as a
+//!   cycle-accurate simulator ([`sim`]) with an area model ([`area`]),
+//!   plus the bit-accurate arithmetic substrate ([`arith`], [`tables`],
+//!   [`goldschmidt`], [`baselines`]) and an FPU-service coordinator
+//!   ([`coordinator`]) that serves batched divide/sqrt/rsqrt requests
+//!   through AOT-compiled XLA executables ([`runtime`]).
+//! * **Layer 2** — `python/compile/model.py`: jax graphs, lowered once
+//!   to HLO text under `artifacts/`.
+//! * **Layer 1** — `python/compile/kernels/`: the Goldschmidt iteration
+//!   as a Pallas kernel (interpret mode), validated against a pure-jnp
+//!   oracle.
+//!
+//! Python never runs on the request path: `make artifacts` runs once at
+//! build time and the rust binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the per-experiment index (which module regenerates
+//! which figure/table of the paper) and `EXPERIMENTS.md` for results.
+
+pub mod area;
+pub mod arith;
+pub mod baselines;
+pub mod bench;
+pub mod check;
+pub mod coordinator;
+pub mod goldschmidt;
+pub mod runtime;
+pub mod sim;
+pub mod tables;
+pub mod util;
+pub mod workload;

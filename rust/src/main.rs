@@ -1,0 +1,389 @@
+//! `goldschmidt` CLI: simulate the paper's datapaths, print schedules,
+//! area reports, accuracy studies, ROM tables, and serve the FPU
+//! service. Run with no arguments for usage.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use goldschmidt::arith::fixed::Fixed;
+use goldschmidt::arith::twos::ComplementKind;
+use goldschmidt::arith::ulp;
+use goldschmidt::area::Comparison;
+use goldschmidt::coordinator::{BatcherConfig, FpuService, ServiceConfig};
+use goldschmidt::goldschmidt::{variants, Config};
+use goldschmidt::runtime::{NativeExecutor, PjrtExecutor};
+use goldschmidt::sim::Design;
+use goldschmidt::tables::ReciprocalTable;
+use goldschmidt::util::cli::Args;
+use goldschmidt::util::rng::Xoshiro256;
+use goldschmidt::util::tablefmt::{fmt_f64, fmt_ns, Align, Table};
+use goldschmidt::workload::{ArrivalProcess, WorkloadGen, WorkloadSpec};
+
+const USAGE: &str = "\
+goldschmidt — Goldschmidt division with hardware reduction (CS.AR 2019)
+
+USAGE:
+  goldschmidt <command> [options]
+
+COMMANDS:
+  simulate   run one division through a datapath simulator
+             --design baseline|feedback  --n F --d F  --steps K
+             --p BITS --frac BITS --complement exact|ones --gantt
+  schedule   cycle-count table across step counts (paper Fig. 4)
+             --max-steps K
+  area       gate-equivalent area comparison (paper claim A1)
+             --p BITS --frac BITS --steps K
+  accuracy   ulp-accuracy study of variants A/B vs steps (claims ACC/V1/V2)
+             --samples N --steps K
+  table      dump the reciprocal ROM (paper's K1 source)
+             --p BITS --limit N
+  stream     sustained-throughput model: back-to-back operation streams
+             --ops N --max-steps K
+  sqrt       simulate square root on the reduced datapath (EIMMW variant)
+             --d F --steps K --gantt
+  serve      run the FPU service on a synthetic workload (E2E driver)
+             --requests N --backend pjrt|native --workers W
+             --batch MAX --wait-us US --rate R --artifacts DIR
+  version    print version
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("simulate") => cmd_simulate(args),
+        Some("schedule") => cmd_schedule(args),
+        Some("area") => cmd_area(args),
+        Some("accuracy") => cmd_accuracy(args),
+        Some("table") => cmd_table(args),
+        Some("stream") => cmd_stream(args),
+        Some("sqrt") => cmd_sqrt(args),
+        Some("serve") => cmd_serve(args),
+        Some("version") => {
+            println!("goldschmidt {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn config_from(args: &Args) -> Result<Config> {
+    let cfg = Config::default()
+        .with_table_p(args.get("p", 10u32).map_err(anyhow::Error::msg)?)
+        .with_frac(args.get("frac", 30u32).map_err(anyhow::Error::msg)?)
+        .with_steps(args.get("steps", 3u32).map_err(anyhow::Error::msg)?)
+        .with_complement(
+            ComplementKind::parse(&args.get_str("complement", "exact"))
+                .map_err(anyhow::Error::msg)?,
+        );
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let design = Design::parse(&args.get_str("design", "feedback")).map_err(anyhow::Error::msg)?;
+    let nf: f64 = args.get("n", 1.5f64).map_err(anyhow::Error::msg)?;
+    let df: f64 = args.get("d", 1.25f64).map_err(anyhow::Error::msg)?;
+    if !(1.0..2.0).contains(&nf) || !(1.0..2.0).contains(&df) {
+        bail!("--n and --d must be mantissas in [1, 2)");
+    }
+    let table = ReciprocalTable::new(cfg.table_p);
+    let n = Fixed::from_f64(nf, cfg.frac);
+    let d = Fixed::from_f64(df, cfg.frac);
+    let result = design.simulate(&n, &d, &table, &cfg);
+    println!("design    : {design:?}");
+    println!("n / d     : {nf} / {df}");
+    println!("quotient  : {:.10}  (exact {:.10})", result.quotient.to_f64(), nf / df);
+    println!("cycles    : {}", result.cycles);
+    if args.flag("gantt") {
+        println!("\n{}", result.trace.render_gantt());
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let max_steps: u32 = args.get("max-steps", 4u32).map_err(anyhow::Error::msg)?;
+    let base = config_from(args)?;
+    let table = ReciprocalTable::new(base.table_p);
+    let n = Fixed::from_f64(1.5, base.frac);
+    let d = Fixed::from_f64(1.25, base.frac);
+    let mut t = Table::new(
+        "clock cycles per refinement count (paper Fig. 4)",
+        &["steps (q_i)", "baseline", "feedback", "delta"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    for k in 1..=max_steps {
+        let cfg = base.with_steps(k);
+        let b = Design::Baseline.simulate(&n, &d, &table, &cfg).cycles;
+        let f = Design::Feedback.simulate(&n, &d, &table, &cfg).cycles;
+        t.row(&[
+            format!("{k} (q{})", k + 1),
+            b.to_string(),
+            f.to_string(),
+            format!("{:+}", f as i64 - b as i64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_area(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let cmp = Comparison::at(&cfg);
+    let mut t = Table::new(
+        format!(
+            "area (gate equivalents), p={}, frac={}, steps={}",
+            cfg.table_p, cfg.frac, cfg.steps
+        ),
+        &["component", "baseline", "feedback"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right]);
+    let row = |t: &mut Table, name: &str, b: (u32, f64), f: (u32, f64)| {
+        t.row(&[
+            name.to_string(),
+            format!("{}x = {:.0} GE", b.0, b.1),
+            format!("{}x = {:.0} GE", f.0, f.1),
+        ]);
+    };
+    row(&mut t, "multipliers", cmp.baseline.multipliers, cmp.feedback.multipliers);
+    row(&mut t, "2's complement", cmp.baseline.complements, cmp.feedback.complements);
+    t.row(&[
+        "ROM".to_string(),
+        format!("{} bits = {:.0} GE", cmp.baseline.rom.0, cmp.baseline.rom.1),
+        format!("{} bits = {:.0} GE", cmp.feedback.rom.0, cmp.feedback.rom.1),
+    ]);
+    row(&mut t, "logic block", cmp.baseline.logic_blocks, cmp.feedback.logic_blocks);
+    t.row(&[
+        "registers".to_string(),
+        format!("{:.0} GE", cmp.baseline.registers),
+        format!("{:.0} GE", cmp.feedback.registers),
+    ]);
+    t.row(&[
+        "TOTAL".to_string(),
+        format!("{:.0} GE", cmp.baseline.total()),
+        format!("{:.0} GE", cmp.feedback.total()),
+    ]);
+    t.print();
+    println!(
+        "saved: {:.0} GE ({:.1}%)",
+        cmp.saved(),
+        100.0 * cmp.saved_fraction()
+    );
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let samples: usize = args.get("samples", 20_000usize).map_err(anyhow::Error::msg)?;
+    let base = config_from(args)?;
+    let table = ReciprocalTable::new(base.table_p);
+    let mut t = Table::new(
+        "worst-case ulp error vs exact f32 division",
+        &["steps", "variant A", "variant B", "predicted rel err"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    for k in 1..=base.steps.max(3) {
+        let cfg = base.with_steps(k);
+        let mut rng = Xoshiro256::new(0xACC);
+        let (mut worst_a, mut worst_b) = (0u64, 0u64);
+        for _ in 0..samples {
+            let n = rng.range_f32(1e-6, 1e6);
+            let d = rng.range_f32(1e-6, 1e6);
+            let exact = n / d;
+            worst_a = worst_a.max(ulp::ulp_diff_f32(
+                variants::variant_a_f32(n, d, &table, &cfg),
+                exact,
+            ));
+            worst_b = worst_b.max(ulp::ulp_diff_f32(
+                variants::variant_b_f32(n, d, &table, &cfg),
+                exact,
+            ));
+        }
+        t.row(&[
+            format!("{k} (q{})", k + 1),
+            format!("{worst_a} ulp"),
+            format!("{worst_b} ulp"),
+            fmt_f64(cfg.predicted_error(), 12),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let p: u32 = args.get("p", 10u32).map_err(anyhow::Error::msg)?;
+    let limit: usize = args.get("limit", 16usize).map_err(anyhow::Error::msg)?;
+    let table = ReciprocalTable::new(p);
+    let mut t = Table::new(
+        format!("reciprocal ROM p={p} ({} entries, {} bits)", table.len(), table.storage_bits()),
+        &["index", "entry", "K", "interval"],
+    )
+    .aligns(&[Align::Right, Align::Right, Align::Right, Align::Left]);
+    let n = table.len();
+    for j in (0..n).take(limit) {
+        let lo = 1.0 + j as f64 / n as f64;
+        let hi = 1.0 + (j + 1) as f64 / n as f64;
+        t.row(&[
+            j.to_string(),
+            table.entry(j).to_string(),
+            fmt_f64(table.entry(j) as f64 / (1u64 << (p + 2)) as f64, 6),
+            format!("[{lo:.6}, {hi:.6})"),
+        ]);
+    }
+    t.print();
+    println!("max |D*K - 1| = {} (bound {})", fmt_f64(table.max_error(), 8), fmt_f64(table.error_bound(), 8));
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let ops: u64 = args.get("ops", 1000u64).map_err(anyhow::Error::msg)?;
+    let max_steps: u32 = args.get("max-steps", 4u32).map_err(anyhow::Error::msg)?;
+    let base = config_from(args)?;
+    let mut t = Table::new(
+        format!("back-to-back stream of {ops} divisions (sim::stream)"),
+        &["steps", "design", "latency", "II", "total cycles", "ops/cycle"],
+    )
+    .aligns(&[Align::Right, Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for k in 1..=max_steps {
+        for design in [Design::Baseline, Design::Feedback] {
+            let r = goldschmidt::sim::stream(design, &base.with_steps(k), ops);
+            t.row(&[
+                k.to_string(),
+                format!("{design:?}"),
+                r.latency.to_string(),
+                r.initiation_interval.to_string(),
+                r.total_cycles.to_string(),
+                format!("{:.3}", r.ops_per_cycle()),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_sqrt(args: &Args) -> Result<()> {
+    use goldschmidt::sim::SqrtFeedbackDatapath;
+    use goldschmidt::tables::RsqrtTable;
+    let cfg = config_from(args)?;
+    let df: f64 = args.get("d", 2.5f64).map_err(anyhow::Error::msg)?;
+    if !(1.0..4.0).contains(&df) {
+        bail!("--d must be a sqrt-mantissa in [1, 4)");
+    }
+    let dp = SqrtFeedbackDatapath::new(RsqrtTable::new(cfg.table_p), cfg);
+    let d = Fixed::from_f64(df, cfg.frac);
+    let r = dp.run(&d);
+    println!("d        : {df}");
+    println!("sqrt(d)  : {:.10}  (exact {:.10})", r.sqrt.to_f64(), df.sqrt());
+    println!("1/sqrt(d): {:.10}  (exact {:.10})", r.rsqrt.to_f64(), 1.0 / df.sqrt());
+    println!("cycles   : {}", r.cycles);
+    if args.flag("gantt") {
+        println!("\n{}", r.trace.render_gantt());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests: usize = args.get("requests", 50_000usize).map_err(anyhow::Error::msg)?;
+    let backend = args.get_str("backend", "native");
+    let workers: usize = args.get("workers", 1usize).map_err(anyhow::Error::msg)?;
+    let max_batch: usize = args.get("batch", 1024usize).map_err(anyhow::Error::msg)?;
+    let wait_us: u64 = args.get("wait-us", 200u64).map_err(anyhow::Error::msg)?;
+    let rate: f64 = args.get("rate", 0.0f64).map_err(anyhow::Error::msg)?;
+    let artifacts: PathBuf =
+        PathBuf::from(args.get_str("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")));
+
+    let config = ServiceConfig {
+        batcher: BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_micros(wait_us),
+        },
+        queue_depth: 65_536,
+        workers,
+        poll: Duration::from_micros(50),
+    };
+
+    let svc = match backend.as_str() {
+        "native" => FpuService::start(config, || {
+            Ok(Box::new(NativeExecutor::with_defaults()) as _)
+        })?,
+        "pjrt" => {
+            let dir = artifacts.clone();
+            FpuService::start(config, move || {
+                let mut ex = PjrtExecutor::from_dir(&dir)?;
+                ex.warmup()?;
+                Ok(Box::new(ex) as _)
+            })
+            .context("starting PJRT service (run `make artifacts` first?)")?
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    };
+
+    let spec = WorkloadSpec {
+        count: requests,
+        arrivals: if rate > 0.0 {
+            ArrivalProcess::Poisson { rate }
+        } else {
+            ArrivalProcess::Closed
+        },
+        divide_frac: 0.7,
+        ..Default::default()
+    };
+    println!("serving {requests} requests on backend={backend} workers={workers} ...");
+    let t0 = std::time::Instant::now();
+    let handle = svc.handle();
+    let mut rxs = Vec::with_capacity(requests);
+    for r in WorkloadGen::generate(spec) {
+        rxs.push(handle.submit(r.op, r.a, r.b)?);
+    }
+    let mut ok = 0u64;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let snap = svc.metrics().snapshot();
+    let mut t = Table::new(
+        format!(
+            "FPU service: {ok}/{requests} ok in {:.2}s  ({:.0} req/s)",
+            elapsed.as_secs_f64(),
+            ok as f64 / elapsed.as_secs_f64()
+        ),
+        &["op", "requests", "batches", "mean lat", "p99 lat", "occupancy"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for s in &snap.ops {
+        t.row(&[
+            s.op.label().to_string(),
+            s.requests.to_string(),
+            s.batches.to_string(),
+            fmt_ns(s.mean_latency_ns),
+            fmt_ns(s.p99_latency_ns as f64),
+            format!("{:.0}%", 100.0 * s.occupancy),
+        ]);
+    }
+    t.print();
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `manifest.txt` with one line per
+//! lowered executable:
+//!
+//! ```text
+//! op=divide batch=256 arity=2 steps=3 p=10 path=divide_b256.hlo.txt
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::request::OpKind;
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Operation this executable implements.
+    pub op: OpKind,
+    /// Fixed batch size the graph was lowered at.
+    pub batch: usize,
+    /// Number of array inputs (2 for divide, 1 for sqrt/rsqrt).
+    pub arity: u32,
+    /// Goldschmidt refinement steps baked into the graph.
+    pub steps: u32,
+    /// ROM input width baked into the graph.
+    pub table_p: u32,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mpath = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors relative artifact paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let kv: BTreeMap<&str, &str> = line
+                .split_whitespace()
+                .filter_map(|tok| tok.split_once('='))
+                .collect();
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k)
+                    .copied()
+                    .with_context(|| format!("manifest line {}: missing {k}=", lineno + 1))
+            };
+            let op = match get("op")? {
+                "divide" => OpKind::Divide,
+                "sqrt" => OpKind::Sqrt,
+                "rsqrt" => OpKind::Rsqrt,
+                other => bail!("manifest line {}: unknown op {other:?}", lineno + 1),
+            };
+            let spec = ArtifactSpec {
+                op,
+                batch: get("batch")?.parse().context("batch")?,
+                arity: get("arity")?.parse().context("arity")?,
+                steps: get("steps")?.parse().context("steps")?,
+                table_p: get("p")?.parse().context("p")?,
+                path: dir.join(get("path")?),
+            };
+            if spec.batch == 0 {
+                bail!("manifest line {}: zero batch", lineno + 1);
+            }
+            specs.push(spec);
+        }
+        if specs.is_empty() {
+            bail!("manifest has no artifact entries");
+        }
+        Ok(Self { specs })
+    }
+
+    /// All specs.
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Batch-size ladder for one op (sorted ascending).
+    pub fn batches_for(&self, op: OpKind) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.specs.iter().filter(|s| s.op == op).map(|s| s.batch).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// The spec for an exact (op, batch) pair.
+    pub fn find(&self, op: OpKind, batch: usize) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.op == op && s.batch == batch)
+    }
+
+    /// Smallest artifact batch >= `n` for `op` (or the largest available
+    /// if `n` exceeds the ladder — callers then split the batch).
+    pub fn fit_batch(&self, op: OpKind, n: usize) -> Option<usize> {
+        let ladder = self.batches_for(op);
+        ladder.iter().copied().find(|&b| b >= n).or(ladder.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+op=divide batch=64 arity=2 steps=3 p=10 path=divide_b64.hlo.txt
+op=divide batch=256 arity=2 steps=3 p=10 path=divide_b256.hlo.txt
+op=sqrt batch=64 arity=1 steps=3 p=10 path=sqrt_b64.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.specs().len(), 3);
+        let s = &m.specs()[0];
+        assert_eq!(s.op, OpKind::Divide);
+        assert_eq!(s.batch, 64);
+        assert_eq!(s.arity, 2);
+        assert_eq!(s.path, Path::new("/tmp/a/divide_b64.hlo.txt"));
+    }
+
+    #[test]
+    fn batch_ladder() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.batches_for(OpKind::Divide), vec![64, 256]);
+        assert_eq!(m.batches_for(OpKind::Sqrt), vec![64]);
+        assert!(m.batches_for(OpKind::Rsqrt).is_empty());
+    }
+
+    #[test]
+    fn fit_batch_rounds_up_and_saturates() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.fit_batch(OpKind::Divide, 1), Some(64));
+        assert_eq!(m.fit_batch(OpKind::Divide, 64), Some(64));
+        assert_eq!(m.fit_batch(OpKind::Divide, 65), Some(256));
+        assert_eq!(m.fit_batch(OpKind::Divide, 10_000), Some(256));
+        assert_eq!(m.fit_batch(OpKind::Rsqrt, 1), None);
+    }
+
+    #[test]
+    fn find_exact() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert!(m.find(OpKind::Divide, 256).is_some());
+        assert!(m.find(OpKind::Divide, 128).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Manifest::parse("op=divide batch=64", Path::new("/x")).is_err());
+        assert!(Manifest::parse("op=frobnicate batch=64 arity=1 steps=1 p=10 path=x",
+                                Path::new("/x")).is_err());
+        assert!(Manifest::parse("", Path::new("/x")).is_err());
+        assert!(Manifest::parse(
+            "op=divide batch=0 arity=2 steps=3 p=10 path=x",
+            Path::new("/x")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // integration hook: when `make artifacts` has run, validate the
+        // real manifest end to end
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.batches_for(OpKind::Divide).is_empty());
+            for s in m.specs() {
+                assert!(s.path.exists(), "{} missing", s.path.display());
+            }
+        }
+    }
+}

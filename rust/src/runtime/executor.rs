@@ -1,0 +1,236 @@
+//! Batched op executors: the boundary between the coordinator and the
+//! compiled compute.
+//!
+//! [`PjrtExecutor`] is the production path: HLO text (lowered once by
+//! `python/compile/aot.py`) is parsed and compiled by the `xla` crate's
+//! PJRT CPU client at startup; execution is a single FFI call per batch.
+//!
+//! [`NativeExecutor`] is the same interface over the crate's own
+//! bit-accurate Goldschmidt datapath — the mock for coordinator tests
+//! (no artifacts needed) and the comparison baseline in the E2E bench.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::request::OpKind;
+use crate::goldschmidt::{self, Config};
+use crate::tables::{ReciprocalTable, RsqrtTable};
+
+use super::artifacts::Manifest;
+
+/// A batched executor for the three FPU ops.
+///
+/// Deliberately NOT `Send`: the PJRT client wraps thread-local FFI
+/// state, so each service worker constructs its own executor inside its
+/// own thread (see [`crate::coordinator::service::FpuService::start`]).
+pub trait Executor {
+    /// Batch sizes available for `op`, ascending. Empty = unsupported.
+    fn batch_ladder(&self, op: OpKind) -> Vec<usize>;
+
+    /// Execute one batch. `a.len()` must equal an available batch size;
+    /// for `Divide`, `b` must be `Some` with the same length. Returns
+    /// one output per element.
+    fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>>;
+
+    /// Human-readable backend name.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------- PJRT --
+
+/// Executor over AOT-compiled XLA executables (PJRT CPU).
+pub struct PjrtExecutor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// (op, batch) -> compiled executable; compiled lazily on first use
+    /// and cached for the life of the executor.
+    executables: HashMap<(OpKind, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtExecutor {
+    /// Create from an artifacts directory (must contain manifest.txt).
+    pub fn from_dir(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Eagerly compile every artifact (front-loads compile cost so the
+    /// serving hot path never compiles).
+    pub fn warmup(&mut self) -> Result<()> {
+        let pairs: Vec<(OpKind, usize)> =
+            self.manifest.specs().iter().map(|s| (s.op, s.batch)).collect();
+        for (op, batch) in pairs {
+            self.ensure_compiled(op, batch)?;
+        }
+        Ok(())
+    }
+
+    /// The manifest this executor serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn ensure_compiled(&mut self, op: OpKind, batch: usize) -> Result<()> {
+        if self.executables.contains_key(&(op, batch)) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .find(op, batch)
+            .with_context(|| format!("no artifact for {op:?} batch {batch}"))?;
+        let path = spec.path.to_str().context("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        self.executables.insert((op, batch), exe);
+        Ok(())
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn batch_ladder(&self, op: OpKind) -> Vec<usize> {
+        self.manifest.batches_for(op)
+    }
+
+    fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>> {
+        let batch = a.len();
+        self.ensure_compiled(op, batch)?;
+        let exe = self.executables.get(&(op, batch)).expect("just compiled");
+        let la = xla::Literal::vec1(a);
+        let result = match (op, b) {
+            (OpKind::Divide, Some(b)) => {
+                if b.len() != batch {
+                    bail!("divide operand length mismatch: {} vs {batch}", b.len());
+                }
+                let lb = xla::Literal::vec1(b);
+                exe.execute::<xla::Literal>(&[la, lb])
+            }
+            (OpKind::Divide, None) => bail!("divide needs two operands"),
+            (_, None) => exe.execute::<xla::Literal>(&[la]),
+            (_, Some(_)) => bail!("{op:?} takes one operand"),
+        }
+        .with_context(|| format!("executing {op:?} b{batch}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result buffer")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = lit.to_tuple1().context("unwrapping result tuple")?;
+        let v = out.to_vec::<f32>().context("converting result to f32 vec")?;
+        if v.len() != batch {
+            bail!("result length {} != batch {batch}", v.len());
+        }
+        Ok(v)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}
+
+// -------------------------------------------------------------- native --
+
+/// Executor over the crate's own bit-accurate datapath (no artifacts).
+pub struct NativeExecutor {
+    cfg: Config,
+    recip: ReciprocalTable,
+    rsqrt: RsqrtTable,
+    ladder: Vec<usize>,
+}
+
+impl NativeExecutor {
+    /// New native executor with the given datapath configuration and
+    /// batch ladder (any sizes work; the ladder only shapes batching).
+    pub fn new(cfg: Config, ladder: &[usize]) -> Self {
+        Self {
+            cfg,
+            recip: ReciprocalTable::new(cfg.table_p),
+            rsqrt: RsqrtTable::new(cfg.table_p),
+            ladder: ladder.to_vec(),
+        }
+    }
+
+    /// Default: paper configuration, the AOT ladder {64, 256, 1024}.
+    pub fn with_defaults() -> Self {
+        Self::new(Config::default(), &[64, 256, 1024])
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn batch_ladder(&self, _op: OpKind) -> Vec<usize> {
+        self.ladder.clone()
+    }
+
+    fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>> {
+        match op {
+            OpKind::Divide => {
+                let b = b.context("divide needs two operands")?;
+                if b.len() != a.len() {
+                    bail!("operand length mismatch");
+                }
+                Ok(a.iter()
+                    .zip(b)
+                    .map(|(&n, &d)| goldschmidt::divide_f32(n, d, &self.recip, &self.cfg))
+                    .collect())
+            }
+            OpKind::Sqrt => Ok(a
+                .iter()
+                .map(|&x| goldschmidt::sqrt_f32(x, &self.rsqrt, &self.cfg))
+                .collect()),
+            OpKind::Rsqrt => Ok(a
+                .iter()
+                .map(|&x| goldschmidt::rsqrt_f32(x, &self.rsqrt, &self.cfg))
+                .collect()),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "native-fixed-point"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_divide_matches_hardware_division() {
+        let mut ex = NativeExecutor::with_defaults();
+        let a = vec![6.0f32, 10.0, 1.5, -8.0];
+        let b = vec![2.0f32, 4.0, 0.5, 2.0];
+        let out = ex.execute(OpKind::Divide, &a, Some(&b)).unwrap();
+        assert_eq!(out, vec![3.0, 2.5, 3.0, -4.0]);
+    }
+
+    #[test]
+    fn native_sqrt_rsqrt() {
+        let mut ex = NativeExecutor::with_defaults();
+        let a = vec![4.0f32, 9.0, 16.0];
+        assert_eq!(ex.execute(OpKind::Sqrt, &a, None).unwrap(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(ex.execute(OpKind::Rsqrt, &a, None).unwrap(), vec![0.5, 1.0 / 3.0, 0.25]);
+    }
+
+    #[test]
+    fn native_errors_on_bad_arity() {
+        let mut ex = NativeExecutor::with_defaults();
+        assert!(ex.execute(OpKind::Divide, &[1.0], None).is_err());
+        let r = ex.execute(OpKind::Divide, &[1.0], Some(&[1.0, 2.0]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn ladder_reported() {
+        let ex = NativeExecutor::with_defaults();
+        assert_eq!(ex.batch_ladder(OpKind::Divide), vec![64, 256, 1024]);
+        assert_eq!(ex.name(), "native-fixed-point");
+    }
+
+    // PjrtExecutor integration tests live in rust/tests/runtime_pjrt.rs
+    // (they need the artifacts directory built by `make artifacts`).
+}

@@ -1,0 +1,20 @@
+//! Runtime: loads the AOT-compiled HLO artifacts (layer 2/1 output) and
+//! executes them on the PJRT CPU client from the rust request path.
+//!
+//! * [`artifacts`] — parses `artifacts/manifest.txt` written by
+//!   `python/compile/aot.py`.
+//! * [`executor`] — the [`Executor`](executor::Executor) trait with two
+//!   implementations: [`PjrtExecutor`](executor::PjrtExecutor) (the real
+//!   thing: HLO text -> `xla::PjRtClient` -> compiled executables) and
+//!   [`NativeExecutor`](executor::NativeExecutor) (the bit-accurate
+//!   rust datapath — used as a mock in tests and as a baseline in the
+//!   E2E benches).
+//!
+//! Python never runs here: the HLO was lowered once at build time
+//! (`make artifacts`).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use executor::{Executor, NativeExecutor, PjrtExecutor};

@@ -1,0 +1,228 @@
+//! The unrolled, pipelined baseline datapath (paper Figs. 1–2 /
+//! EIMMW-2000's implementation).
+//!
+//! Structure for `k` refinement steps (the paper's q4 case is `k = 3`):
+//!
+//! * 1 ROM, plus MULT 1 / MULT 2 for step 1 (`q1 = N*K1`, `r1 = D*K1`);
+//! * per refinement step `i`, a dedicated multiplier pair `X_i` / `Y_i`
+//!   (the final step instantiates only `X_k` — `r_{k+1}` is never used)
+//!   and a dedicated two's-complement block producing `K_{i+1}`;
+//!
+//! giving `2k + 1` multipliers and `k` complement blocks — 7 and 3 at
+//! `k = 3`, the inventory the paper's area claim (A1) counts.
+
+use crate::arith::fixed::Fixed;
+use crate::arith::twos::ComplementBlock;
+use crate::goldschmidt::{Config, DivisionTrace};
+use crate::tables::ReciprocalTable;
+
+use super::trace::Trace;
+use super::units::{PipelinedMultiplier, RomUnit, MULT_LATENCY};
+use super::{Inventory, SimResult};
+
+/// The unrolled datapath simulator.
+#[derive(Clone, Debug)]
+pub struct BaselineDatapath {
+    rom: RomUnit,
+    cfg: Config,
+}
+
+impl BaselineDatapath {
+    /// Build for a table + configuration.
+    pub fn new(table: ReciprocalTable, cfg: Config) -> Self {
+        assert_eq!(table.p(), cfg.table_p);
+        Self { rom: RomUnit::new(table), cfg }
+    }
+
+    /// Hardware inventory (for the area model).
+    pub fn inventory(&self) -> Inventory {
+        let k = self.cfg.steps;
+        Inventory {
+            multipliers: 2 + if k == 0 { 0 } else { 2 * k - 1 },
+            complement_blocks: k,
+            roms: 1,
+            logic_blocks: 0,
+        }
+    }
+
+    /// Simulate one division `n/d` (mantissas in `[1, 2)`).
+    pub fn run(&self, n: &Fixed, d: &Fixed) -> SimResult {
+        let cfg = &self.cfg;
+        let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+        let mut trace = Trace::new();
+
+        // cycle 1: ROM lookup
+        let (rom_done, k1) = self.rom.lookup(1, d);
+        trace.record("ROM", 1, rom_done, "K1 = rom[D]");
+
+        // cycles 2-5: MULT 1 / MULT 2 in parallel
+        let mut m1 = PipelinedMultiplier::new("MULT 1", cfg.rounding, true);
+        let mut m2 = PipelinedMultiplier::new("MULT 2", cfg.rounding, true);
+        let issue = rom_done + 1;
+        let q_done = m1.issue(issue, n, &k1, 0);
+        let r_done = m2.issue(issue, d, &k1, 0);
+        trace.record("MULT 1", issue, q_done, "q1 = N*K1");
+        trace.record("MULT 2", issue, r_done, "r1 = D*K1");
+        let mut q = m1.completed_at(q_done).pop().expect("q1").1;
+        let mut r = m2.completed_at(r_done).pop().expect("r1").1;
+        let mut values = DivisionTrace { k: vec![k1], q: vec![q], r: vec![r] };
+
+        let mut ready_cycle = q_done; // cycle at whose end q_i, r_i are valid
+        for step in 1..=cfg.steps {
+            // two's-complement block: combinational, folded into the
+            // producer's completion cycle (the paper's counting)
+            let kn = complement.apply(&r);
+            trace.record(
+                "2'S COMP",
+                ready_cycle,
+                ready_cycle,
+                format!("K{} = 2 - r{}", step + 1, step),
+            );
+            let issue = ready_cycle + 1;
+            // dedicated multiplier pair for this step (fresh units model
+            // the unrolled hardware; names match Fig. 2)
+            let mut x = PipelinedMultiplier::new(x_name(step), cfg.rounding, true);
+            let done_q = x.issue(issue, &q, &kn, 0);
+            trace.record(
+                x_name(step),
+                issue,
+                done_q,
+                format!("q{} = q{}*K{}", step + 1, step, step + 1),
+            );
+            q = x.completed_at(done_q).pop().expect("q").1;
+            let last_step = step == cfg.steps;
+            if !last_step {
+                // r_{i+1} only needed to produce the next K
+                let mut y = PipelinedMultiplier::new(y_name(step), cfg.rounding, true);
+                let done_r = y.issue(issue, &r, &kn, 0);
+                trace.record(
+                    y_name(step),
+                    issue,
+                    done_r,
+                    format!("r{} = r{}*K{}", step + 1, step, step + 1),
+                );
+                r = y.completed_at(done_r).pop().expect("r").1;
+            } else {
+                // keep the functional trace shape: r advances logically
+                r = r.mul(&kn, cfg.rounding);
+            }
+            values.k.push(kn);
+            values.q.push(q);
+            values.r.push(r);
+            ready_cycle = done_q;
+            debug_assert_eq!(ready_cycle, issue + MULT_LATENCY - 1);
+        }
+
+        SimResult { quotient: q, cycles: ready_cycle, trace, values }
+    }
+}
+
+fn x_name(step: u32) -> &'static str {
+    match step {
+        1 => "MULT X1",
+        2 => "MULT X2",
+        3 => "MULT X3",
+        4 => "MULT X4",
+        5 => "MULT X5",
+        _ => "MULT Xn",
+    }
+}
+
+fn y_name(step: u32) -> &'static str {
+    match step {
+        1 => "MULT Y1",
+        2 => "MULT Y2",
+        3 => "MULT Y3",
+        4 => "MULT Y4",
+        5 => "MULT Y5",
+        _ => "MULT Yn",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goldschmidt::divide_mantissa;
+
+    fn setup(steps: u32) -> (BaselineDatapath, Config) {
+        let cfg = Config::default().with_steps(steps);
+        (BaselineDatapath::new(ReciprocalTable::new(cfg.table_p), cfg), cfg)
+    }
+
+    fn f(x: f64) -> Fixed {
+        Fixed::from_f64(x, 30)
+    }
+
+    #[test]
+    fn nine_cycles_for_initial_q2() {
+        // the paper's Fig. 4 anchor: ROM(1) + M1/M2(4) + X1(4) = 9
+        let (dp, _) = setup(1);
+        let r = dp.run(&f(1.5), &f(1.2));
+        assert_eq!(r.cycles, 9);
+    }
+
+    #[test]
+    fn cycle_formula_emerges() {
+        for k in 0..=5u32 {
+            let (dp, _) = setup(k);
+            let r = dp.run(&f(1.9), &f(1.1));
+            assert_eq!(r.cycles, 5 + 4 * k as u64, "k={k}");
+        }
+    }
+
+    #[test]
+    fn matches_functional_model_bit_for_bit() {
+        let (dp, cfg) = setup(3);
+        let table = ReciprocalTable::new(cfg.table_p);
+        for (nf, df) in [(1.0, 1.0), (1.5, 1.25), (1.999, 1.001), (1.318, 1.767)] {
+            let n = f(nf);
+            let d = f(df);
+            let sim = dp.run(&n, &d);
+            let lib = divide_mantissa(&n, &d, &table, &cfg);
+            assert_eq!(sim.quotient.bits(), lib.quotient().bits(), "{nf}/{df}");
+            // full intermediate-value equality
+            for i in 0..lib.k.len() {
+                assert_eq!(sim.values.k[i].bits(), lib.k[i].bits(), "K{i}");
+                assert_eq!(sim.values.q[i].bits(), lib.q[i].bits(), "q{i}");
+                assert_eq!(sim.values.r[i].bits(), lib.r[i].bits(), "r{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn inventory_matches_paper_counts() {
+        // q4 (k=3): 7 multipliers, 3 complement blocks — A1's baseline
+        let (dp, _) = setup(3);
+        let inv = dp.inventory();
+        assert_eq!(inv.multipliers, 7);
+        assert_eq!(inv.complement_blocks, 3);
+        assert_eq!(inv.roms, 1);
+        assert_eq!(inv.logic_blocks, 0);
+    }
+
+    #[test]
+    fn trace_has_no_structural_hazards() {
+        let (dp, _) = setup(3);
+        let r = dp.run(&f(1.7), &f(1.3));
+        assert!(r.trace.overlaps().is_empty());
+    }
+
+    #[test]
+    fn trace_contains_expected_units() {
+        let (dp, _) = setup(3);
+        let r = dp.run(&f(1.7), &f(1.3));
+        for unit in ["ROM", "MULT 1", "MULT 2", "MULT X1", "MULT Y1", "MULT X2", "MULT Y2", "MULT X3"] {
+            assert!(!r.trace.unit_segments(unit).is_empty(), "{unit} missing");
+        }
+        // no Y3: the final r is never computed in hardware
+        assert!(r.trace.unit_segments("MULT Y3").is_empty());
+    }
+
+    #[test]
+    fn gantt_renders_fig4_shape() {
+        let (dp, _) = setup(1);
+        let g = dp.run(&f(1.5), &f(1.5)).trace.render_gantt();
+        assert!(g.contains("ROM"));
+        assert!(g.contains("MULT X1"));
+    }
+}

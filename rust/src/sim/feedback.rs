@@ -1,0 +1,301 @@
+//! The paper's contribution: the hardware-reduced *feedback* datapath
+//! (Fig. 3).
+//!
+//! One shared multiplier pair `X` / `Y` serves every refinement step;
+//! the [`LogicBlock`](super::logic_block::LogicBlock) steers either the
+//! initial `r1` or the fed-back `r_{2,3..i}` into the single
+//! two's-complement block. Inventory: 4 multipliers (MULT 1, MULT 2,
+//! X, Y), 1 complement block, 1 ROM, 1 logic block — versus the
+//! baseline's 7 / 3 / 1 / 0: the paper's §V "avoided the use of 3
+//! multipliers and 2 two's complement units".
+//!
+//! Timing: identical to the baseline for the initial `q2`/`r2`
+//! (9 cycles — §IV "the number of cycles taken in both the cases is the
+//! same"), and exactly one cycle slower in the general case (`k >= 2`),
+//! the cost of the logic block's registered select switching from the
+//! `r1` path to the feedback path.
+
+use crate::arith::fixed::Fixed;
+use crate::arith::twos::ComplementBlock;
+use crate::goldschmidt::{Config, DivisionTrace};
+use crate::tables::ReciprocalTable;
+
+use super::logic_block::LogicBlock;
+use super::trace::Trace;
+use super::units::{PipelinedMultiplier, RomUnit, MULT_LATENCY};
+use super::{Inventory, SimResult};
+
+/// The feedback datapath simulator.
+#[derive(Clone, Debug)]
+pub struct FeedbackDatapath {
+    rom: RomUnit,
+    cfg: Config,
+}
+
+impl FeedbackDatapath {
+    /// Build for a table + configuration.
+    pub fn new(table: ReciprocalTable, cfg: Config) -> Self {
+        assert_eq!(table.p(), cfg.table_p);
+        Self { rom: RomUnit::new(table), cfg }
+    }
+
+    /// Hardware inventory (for the area model).
+    pub fn inventory(&self) -> Inventory {
+        let k = self.cfg.steps;
+        Inventory {
+            multipliers: if k == 0 { 2 } else { 4 },
+            complement_blocks: if k == 0 { 0 } else { 1 },
+            roms: 1,
+            logic_blocks: if k == 0 { 0 } else { 1 },
+        }
+    }
+
+    /// Simulate one division `n/d` (mantissas in `[1, 2)`).
+    pub fn run(&self, n: &Fixed, d: &Fixed) -> SimResult {
+        let cfg = &self.cfg;
+        let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+        // k-step operation feeds back r_2..r_k: k-1 feedback passes
+        let mut logic = LogicBlock::new(cfg.steps.saturating_sub(1));
+        let mut trace = Trace::new();
+
+        // cycle 1: ROM lookup
+        let (rom_done, k1) = self.rom.lookup(1, d);
+        trace.record("ROM", 1, rom_done, "K1 = rom[D]");
+
+        // cycles 2-5: the dedicated initial multipliers
+        let mut m1 = PipelinedMultiplier::new("MULT 1", cfg.rounding, true);
+        let mut m2 = PipelinedMultiplier::new("MULT 2", cfg.rounding, true);
+        let issue = rom_done + 1;
+        let q_done = m1.issue(issue, n, &k1, 0);
+        let r_done = m2.issue(issue, d, &k1, 0);
+        trace.record("MULT 1", issue, q_done, "q1 = N*K1");
+        trace.record("MULT 2", issue, r_done, "r1 = D*K1");
+        let mut q = m1.completed_at(q_done).pop().expect("q1").1;
+        let mut r = m2.completed_at(r_done).pop().expect("r1").1;
+        let mut values = DivisionTrace { k: vec![k1], q: vec![q], r: vec![r] };
+
+        // the single shared multiplier pair
+        let mut x = PipelinedMultiplier::new("MULT X", cfg.rounding, true);
+        let mut y = PipelinedMultiplier::new("MULT Y", cfg.rounding, true);
+
+        let mut ready_cycle = r_done;
+        for step in 1..=cfg.steps {
+            // steer r through the logic block (r1 first, feedback after)
+            let (steered_cycle, steered) = if step == 1 {
+                logic.pass(ready_cycle, Some(&r), None).expect("r1 present")
+            } else {
+                logic.pass(ready_cycle, None, Some(&r)).expect("feedback present")
+            };
+            if steered_cycle != ready_cycle {
+                trace.record(
+                    "LOGIC BLK",
+                    ready_cycle,
+                    steered_cycle,
+                    format!("select r{step} (switch)"),
+                );
+            } else {
+                trace.record(
+                    "LOGIC BLK",
+                    steered_cycle,
+                    steered_cycle,
+                    format!("select r{step}"),
+                );
+            }
+            // combinational complement, folded into the steered cycle
+            let kn = complement.apply(&steered);
+            trace.record(
+                "2'S COMP",
+                steered_cycle,
+                steered_cycle,
+                format!("K{} = 2 - r{}", step + 1, step),
+            );
+            let issue = steered_cycle + 1;
+            let done_q = x.issue(issue, &q, &kn, step);
+            trace.record(
+                "MULT X",
+                issue,
+                done_q,
+                format!("q{} = q{}*K{}", step + 1, step, step + 1),
+            );
+            q = x.completed_at(done_q).pop().expect("q").1;
+            let last_step = step == cfg.steps;
+            if !last_step {
+                let done_r = y.issue(issue, &r, &kn, step);
+                trace.record(
+                    "MULT Y",
+                    issue,
+                    done_r,
+                    format!("r{} = r{}*K{}", step + 1, step, step + 1),
+                );
+                r = y.completed_at(done_r).pop().expect("r").1;
+            } else {
+                r = r.mul(&kn, cfg.rounding);
+            }
+            values.k.push(kn);
+            values.q.push(q);
+            values.r.push(r);
+            ready_cycle = done_q;
+        }
+
+        SimResult { quotient: q, cycles: ready_cycle, trace, values }
+    }
+
+    /// Allocation-free run: same schedule and arithmetic as [`run`] but
+    /// records no trace or intermediate values — the path used by the
+    /// throughput benches (the labelled trace costs ~3x the arithmetic).
+    /// Returns (quotient, cycles).
+    pub fn run_quiet(&self, n: &Fixed, d: &Fixed) -> (Fixed, u64) {
+        let cfg = &self.cfg;
+        let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+        let mut logic = LogicBlock::new(cfg.steps.saturating_sub(1));
+        let (rom_done, k1) = self.rom.lookup(1, d);
+        let issue = rom_done + 1;
+        let mut q = n.mul(&k1, cfg.rounding);
+        let mut r = d.mul(&k1, cfg.rounding);
+        let mut ready_cycle = issue + MULT_LATENCY - 1;
+        for step in 1..=cfg.steps {
+            let (steered_cycle, steered) = if step == 1 {
+                logic.pass(ready_cycle, Some(&r), None).expect("r1 present")
+            } else {
+                logic.pass(ready_cycle, None, Some(&r)).expect("feedback present")
+            };
+            let kn = complement.apply(&steered);
+            q = q.mul(&kn, cfg.rounding);
+            r = r.mul(&kn, cfg.rounding);
+            ready_cycle = steered_cycle + 1 + MULT_LATENCY - 1;
+        }
+        (q, ready_cycle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goldschmidt::divide_mantissa;
+    use crate::sim::BaselineDatapath;
+
+    fn setup(steps: u32) -> (FeedbackDatapath, Config) {
+        let cfg = Config::default().with_steps(steps);
+        (FeedbackDatapath::new(ReciprocalTable::new(cfg.table_p), cfg), cfg)
+    }
+
+    fn f(x: f64) -> Fixed {
+        Fixed::from_f64(x, 30)
+    }
+
+    #[test]
+    fn nine_cycles_for_initial_q2_matches_baseline() {
+        // §IV: "The number of cycles taken in both the cases is the same
+        // and is 9 cycles"
+        let (dp, _) = setup(1);
+        assert_eq!(dp.run(&f(1.5), &f(1.2)).cycles, 9);
+    }
+
+    #[test]
+    fn one_extra_cycle_in_the_general_case() {
+        // §IV/§V: trade-off of exactly one clock cycle for k >= 2
+        for k in 2..=5u32 {
+            let (fb, cfg) = setup(k);
+            let bl = BaselineDatapath::new(ReciprocalTable::new(cfg.table_p), cfg);
+            let fb_cycles = fb.run(&f(1.7), &f(1.3)).cycles;
+            let bl_cycles = bl.run(&f(1.7), &f(1.3)).cycles;
+            assert_eq!(fb_cycles, bl_cycles + 1, "k={k}");
+        }
+    }
+
+    #[test]
+    fn paper_q4_configuration_cycles() {
+        // k=3 (q4): baseline 17, feedback 18
+        let (dp, _) = setup(3);
+        assert_eq!(dp.run(&f(1.5), &f(1.5)).cycles, 18);
+    }
+
+    #[test]
+    fn bit_identical_to_functional_model_and_baseline() {
+        // the paper's central compatibility claim: same values, only the
+        // schedule differs (V1/V2 rest on this)
+        let (fb, cfg) = setup(3);
+        let table = ReciprocalTable::new(cfg.table_p);
+        let bl = BaselineDatapath::new(table.clone(), cfg);
+        for (nf, df) in [(1.0, 1.999), (1.5, 1.25), (1.999, 1.001), (1.414, 1.732)] {
+            let n = f(nf);
+            let d = f(df);
+            let sim_fb = fb.run(&n, &d);
+            let sim_bl = bl.run(&n, &d);
+            let lib = divide_mantissa(&n, &d, &table, &cfg);
+            assert_eq!(sim_fb.quotient.bits(), lib.quotient().bits());
+            assert_eq!(sim_fb.quotient.bits(), sim_bl.quotient.bits());
+            for i in 0..lib.k.len() {
+                assert_eq!(sim_fb.values.k[i].bits(), lib.k[i].bits());
+                assert_eq!(sim_fb.values.q[i].bits(), lib.q[i].bits());
+                assert_eq!(sim_fb.values.r[i].bits(), lib.r[i].bits());
+            }
+        }
+    }
+
+    #[test]
+    fn inventory_is_the_reduced_set() {
+        // A1: 4 multipliers, 1 complement, 1 logic block
+        let (dp, _) = setup(3);
+        let inv = dp.inventory();
+        assert_eq!(inv.multipliers, 4);
+        assert_eq!(inv.complement_blocks, 1);
+        assert_eq!(inv.roms, 1);
+        assert_eq!(inv.logic_blocks, 1);
+    }
+
+    #[test]
+    fn saves_3_multipliers_2_complements_vs_baseline() {
+        // the paper's §V headline, as a structural assertion
+        let (fb, cfg) = setup(3);
+        let bl = BaselineDatapath::new(ReciprocalTable::new(cfg.table_p), cfg);
+        let b = bl.inventory();
+        let f = fb.inventory();
+        assert_eq!(b.multipliers - f.multipliers, 3);
+        assert_eq!(b.complement_blocks - f.complement_blocks, 2);
+    }
+
+    #[test]
+    fn shared_multiplier_actually_reused() {
+        let (dp, _) = setup(3);
+        let r = dp.run(&f(1.6), &f(1.4));
+        // MULT X carries all three q-steps
+        assert_eq!(r.trace.unit_segments("MULT X").len(), 3);
+        assert_eq!(r.trace.unit_segments("MULT Y").len(), 2);
+        assert!(r.trace.overlaps().is_empty(), "hazard on shared units");
+    }
+
+    #[test]
+    fn logic_block_switch_appears_once_in_trace() {
+        let (dp, _) = setup(3);
+        let r = dp.run(&f(1.6), &f(1.4));
+        let switches: Vec<_> = r
+            .trace
+            .unit_segments("LOGIC BLK")
+            .into_iter()
+            .filter(|s| s.label.contains("switch"))
+            .collect();
+        assert_eq!(switches.len(), 1);
+    }
+
+    #[test]
+    fn run_quiet_matches_run() {
+        for steps in 0..=5u32 {
+            let (dp, _) = setup(steps);
+            for (nf, df) in [(1.0, 1.999), (1.5, 1.25), (1.9999, 1.0001)] {
+                let full = dp.run(&f(nf), &f(df));
+                let (q, cycles) = dp.run_quiet(&f(nf), &f(df));
+                assert_eq!(q.bits(), full.quotient.bits(), "steps={steps}");
+                assert_eq!(cycles, full.cycles, "steps={steps}");
+            }
+        }
+    }
+
+    #[test]
+    fn k0_degenerates_cleanly() {
+        let (dp, _) = setup(0);
+        let r = dp.run(&f(1.5), &f(1.5));
+        assert_eq!(r.cycles, 5);
+        assert_eq!(dp.inventory().multipliers, 2);
+    }
+}

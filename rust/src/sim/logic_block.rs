@@ -1,0 +1,219 @@
+//! The paper's §II–III "logic block": the counter-steered multiplexer
+//! that lets one multiplier pair serve every Goldschmidt iteration.
+//!
+//! Truth table (§II, reproduced exactly — `benches/logic_block.rs`
+//! regenerates it from this implementation):
+//!
+//! ```text
+//!   r1 present | r_{2,3..i} present | output O
+//!   -----------+--------------------+----------
+//!        1     |         0          |   r1
+//!        0     |         1          |   r_{2,3..i}
+//!        1     |         1          |   r_{2,3..i}   (feedback priority)
+//!        0     |         0          |   0
+//! ```
+//!
+//! §III adds the counter: the block passes `r1` first, then holds the
+//! select on the feedback input until the predetermined number of
+//! feedback values (set by the target accuracy) has passed, after which
+//! it resets to `r1` for the next operation — synchronized with the
+//! global clock.
+//!
+//! Timing model: the mux output is *registered*; a select-line change
+//! costs one clock cycle before the new source is visible downstream
+//! (this is the paper's §IV "trade off of 1 clock cycle" — it fires once
+//! per operation, on the r1 -> feedback transition; DESIGN.md §2).
+
+use crate::arith::fixed::Fixed;
+
+/// Which input the block is currently steering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Select {
+    /// Initial: pass `r1`.
+    Initial,
+    /// Feedback: pass `r_{2,3..i}`.
+    Feedback,
+}
+
+/// The combinational truth table by itself (used by the truth-table
+/// bench and the datapath): returns the selected value.
+pub fn truth_table<'a>(
+    r1: Option<&'a Fixed>,
+    r_fb: Option<&'a Fixed>,
+) -> Option<&'a Fixed> {
+    match (r1, r_fb) {
+        (Some(_), Some(fb)) => Some(fb), // feedback priority
+        (None, Some(fb)) => Some(fb),
+        (Some(r1), None) => Some(r1),
+        (None, None) => None, // output 0 (no valid word)
+    }
+}
+
+/// The clocked logic block: truth-table mux + pass counter + registered
+/// select.
+#[derive(Clone, Debug)]
+pub struct LogicBlock {
+    /// Feedback passes per operation before the counter resets
+    /// (`steps - 1` for a k-step division: K3..K_{k+1} come back).
+    expected_feedback: u32,
+    /// Feedback values passed so far this operation.
+    count: u32,
+    select: Select,
+    /// Cycles spent on select-line changes (the Fig. 4 penalty).
+    penalty_cycles: u64,
+}
+
+impl LogicBlock {
+    /// New block configured for `expected_feedback` feedback passes.
+    pub fn new(expected_feedback: u32) -> Self {
+        Self {
+            expected_feedback,
+            count: 0,
+            select: Select::Initial,
+            penalty_cycles: 0,
+        }
+    }
+
+    /// Current select state.
+    pub fn select(&self) -> Select {
+        self.select
+    }
+
+    /// Feedback passes so far.
+    pub fn count(&self) -> u32 {
+        self.count
+    }
+
+    /// Total select-change penalty cycles accrued.
+    pub fn penalty_cycles(&self) -> u64 {
+        self.penalty_cycles
+    }
+
+    /// Steer a value through the block at `cycle`.
+    ///
+    /// Returns `(valid_cycle, value)`: the cycle at whose end the output
+    /// register holds the value. A select change (r1 -> feedback) adds
+    /// one cycle; steady-state passes are combinational-through
+    /// (registered transparently with the producing unit's output
+    /// register, as the paper's schedule assumes).
+    pub fn pass(
+        &mut self,
+        cycle: u64,
+        r1: Option<&Fixed>,
+        r_fb: Option<&Fixed>,
+    ) -> Option<(u64, Fixed)> {
+        let out = truth_table(r1, r_fb)?;
+        let out = *out;
+        let from_feedback = r_fb.is_some();
+        let needed = if from_feedback { Select::Feedback } else { Select::Initial };
+        let mut valid = cycle;
+        if self.select != needed {
+            // registered select line: one cycle to switch
+            self.select = needed;
+            self.penalty_cycles += 1;
+            valid += 1;
+        }
+        if from_feedback {
+            self.count += 1;
+            if self.count >= self.expected_feedback {
+                // §III: counter resets for the next operation
+                self.count = 0;
+                self.select = Select::Initial;
+            }
+        }
+        Some((valid, out))
+    }
+
+    /// Reset for a new operation (e.g. on pipeline flush).
+    pub fn reset(&mut self) {
+        self.count = 0;
+        self.select = Select::Initial;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(x: f64) -> Fixed {
+        Fixed::from_f64(x, 30)
+    }
+
+    #[test]
+    fn truth_table_all_rows() {
+        let r1 = f(0.9);
+        let fb = f(0.99);
+        // row 1: r1 only -> r1
+        assert_eq!(truth_table(Some(&r1), None).unwrap().bits(), r1.bits());
+        // row 2: fb only -> fb
+        assert_eq!(truth_table(None, Some(&fb)).unwrap().bits(), fb.bits());
+        // row 3: both -> fb (priority)
+        assert_eq!(truth_table(Some(&r1), Some(&fb)).unwrap().bits(), fb.bits());
+        // row 4: neither -> none (output 0)
+        assert!(truth_table(None, None).is_none());
+    }
+
+    #[test]
+    fn first_pass_r1_is_free() {
+        let mut lb = LogicBlock::new(2);
+        let r1 = f(0.9);
+        let (valid, out) = lb.pass(5, Some(&r1), None).unwrap();
+        assert_eq!(valid, 5, "no penalty on the initial r1 path");
+        assert_eq!(out.bits(), r1.bits());
+        assert_eq!(lb.select(), Select::Initial);
+    }
+
+    #[test]
+    fn feedback_switch_costs_one_cycle_once() {
+        let mut lb = LogicBlock::new(2);
+        let r1 = f(0.9);
+        let fb1 = f(0.99);
+        let fb2 = f(0.9999);
+        lb.pass(5, Some(&r1), None).unwrap();
+        // first feedback: select changes -> +1 cycle
+        let (v1, _) = lb.pass(9, None, Some(&fb1)).unwrap();
+        assert_eq!(v1, 10);
+        assert_eq!(lb.penalty_cycles(), 1);
+        // second feedback: select already Feedback -> no penalty
+        let (v2, _) = lb.pass(14, None, Some(&fb2)).unwrap();
+        assert_eq!(v2, 14);
+        assert_eq!(lb.penalty_cycles(), 1);
+    }
+
+    #[test]
+    fn counter_resets_after_predetermined_passes() {
+        let mut lb = LogicBlock::new(2);
+        let fb = f(0.99);
+        lb.pass(1, Some(&f(0.9)), None).unwrap();
+        lb.pass(5, None, Some(&fb)).unwrap();
+        assert_eq!(lb.count(), 1);
+        assert_eq!(lb.select(), Select::Feedback);
+        lb.pass(9, None, Some(&fb)).unwrap();
+        // hit expected_feedback=2: reset for next op
+        assert_eq!(lb.count(), 0);
+        assert_eq!(lb.select(), Select::Initial);
+        // next operation's r1 passes with no penalty again
+        let (v, _) = lb.pass(12, Some(&f(0.8)), None).unwrap();
+        assert_eq!(v, 12);
+    }
+
+    #[test]
+    fn both_present_prioritizes_feedback_and_counts() {
+        let mut lb = LogicBlock::new(3);
+        let r1 = f(0.9);
+        let fb = f(0.99);
+        let (_, out) = lb.pass(3, Some(&r1), Some(&fb)).unwrap();
+        assert_eq!(out.bits(), fb.bits());
+        assert_eq!(lb.count(), 1);
+    }
+
+    #[test]
+    fn manual_reset() {
+        let mut lb = LogicBlock::new(5);
+        lb.pass(1, None, Some(&f(0.99))).unwrap();
+        assert_eq!(lb.count(), 1);
+        lb.reset();
+        assert_eq!(lb.count(), 0);
+        assert_eq!(lb.select(), Select::Initial);
+    }
+}

@@ -1,0 +1,111 @@
+//! Cycle-accurate simulator of the two Goldschmidt datapaths:
+//!
+//! * [`baseline`] — the fully unrolled, pipelined design of the paper's
+//!   Figs. 1–2 (per-step multiplier pairs X_i/Y_i, a two's-complement
+//!   block per step).
+//! * [`feedback`] — the paper's contribution (Fig. 3): one shared
+//!   multiplier pair fed by the [`logic_block`] (a counter-steered,
+//!   registered mux), one two's-complement block.
+//!
+//! The simulator is *bit-accurate and cycle-accurate*: datapath wires
+//! carry [`Fixed`](crate::arith::Fixed) words through explicit unit
+//! models ([`units`]), and integration tests assert the simulated
+//! quotient equals [`crate::goldschmidt::divide_mantissa`] bit-for-bit
+//! while the cycle counts reproduce the paper's Fig. 4 (9 cycles for the
+//! initial q2/r2 in both designs; +1 for the feedback design in the
+//! general case).
+//!
+//! Cycle accounting (DESIGN.md §2): ROM = 1 cycle; multiplier = 4-cycle
+//! latency, initiation interval 1; the two's-complement block is
+//! combinational (folded into the consumer's issue cycle); the logic
+//! block's registered mux costs 1 cycle on its first select change.
+
+pub mod baseline;
+pub mod feedback;
+pub mod logic_block;
+pub mod sqrt_datapath;
+pub mod stream;
+pub mod trace;
+pub mod units;
+
+pub use baseline::BaselineDatapath;
+pub use feedback::FeedbackDatapath;
+pub use sqrt_datapath::SqrtFeedbackDatapath;
+pub use stream::{stream, StreamResult};
+pub use trace::{Segment, Trace};
+
+use crate::arith::fixed::Fixed;
+use crate::goldschmidt::{Config, DivisionTrace};
+
+/// Which datapath design to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Design {
+    /// Unrolled + pipelined (Figs. 1–2).
+    Baseline,
+    /// Hardware-reduced feedback design (Fig. 3).
+    Feedback,
+}
+
+impl Design {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "baseline" | "unrolled" | "pipelined" => Ok(Self::Baseline),
+            "feedback" | "reduced" => Ok(Self::Feedback),
+            other => Err(format!("unknown design {other:?}")),
+        }
+    }
+
+    /// Simulate one division on this design.
+    pub fn simulate(
+        &self,
+        n: &Fixed,
+        d: &Fixed,
+        table: &crate::tables::ReciprocalTable,
+        cfg: &Config,
+    ) -> SimResult {
+        match self {
+            Design::Baseline => BaselineDatapath::new(table.clone(), *cfg).run(n, d),
+            Design::Feedback => FeedbackDatapath::new(table.clone(), *cfg).run(n, d),
+        }
+    }
+}
+
+/// Output of one simulated division.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Final quotient word (bit-identical to the functional model).
+    pub quotient: Fixed,
+    /// Total cycles from operand arrival to final q valid.
+    pub cycles: u64,
+    /// Per-unit occupancy segments (renders the paper's Fig. 4).
+    pub trace: Trace,
+    /// The algorithmic intermediate values, for cross-checks.
+    pub values: DivisionTrace,
+}
+
+/// Hardware inventory of a datapath instance (drives the area model —
+/// paper claim A1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Inventory {
+    /// Number of multiplier instances.
+    pub multipliers: u32,
+    /// Number of two's-complement blocks.
+    pub complement_blocks: u32,
+    /// Number of ROM instances.
+    pub roms: u32,
+    /// Number of logic blocks (mux + counter).
+    pub logic_blocks: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_parse() {
+        assert_eq!(Design::parse("baseline").unwrap(), Design::Baseline);
+        assert_eq!(Design::parse("feedback").unwrap(), Design::Feedback);
+        assert!(Design::parse("quantum").is_err());
+    }
+}

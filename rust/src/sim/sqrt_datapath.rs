@@ -1,0 +1,206 @@
+//! Square-root / reciprocal-square-root on the *reduced* datapath — the
+//! paper's §IV claim that the EIMMW variants "remain unaffected" by the
+//! feedback scheduling, demonstrated on hardware rather than asserted.
+//!
+//! The coupled iteration `rho = 3/2 - g*h; g *= rho; h *= rho` maps onto
+//! the same unit set as division:
+//!
+//! * ROM (the rsqrt table) feeds `y0`;
+//! * MULT 1 / MULT 2 produce `g0 = d*y0` and (by wiring, a shift) `h0 =
+//!   y0/2`; MULT 2 instead computes the first coupling product `g0*h0`;
+//! * the complement-style subtractor produces the factor `3/2 - gh`
+//!   (same adder row as the division block, different constant wire);
+//! * the shared X / Y pair applies the factor to `g` and `h`, and the
+//!   logic block steers the fed-back coupling product exactly as it
+//!   steers `r` in division — same truth table, same counter, same
+//!   single-cycle select switch.
+//!
+//! Schedule difference from division: each step needs the *coupling
+//! product* `g_i * h_i` before the factor exists, so the loop body is
+//! two dependent multiplier passes (gh, then g/h update) instead of
+//! one — sqrt costs `8k + 1(+1)` cycles against division's `4k (+1)`.
+//! EIMMW pipeline the gh product into the update of the *previous*
+//! step on wider hardware; the reduced datapath cannot (X and Y are
+//! both busy), which this model makes explicit.
+
+use crate::arith::fixed::Fixed;
+use crate::goldschmidt::sqrt::sqrt_trace;
+use crate::goldschmidt::Config;
+use crate::tables::RsqrtTable;
+
+use super::logic_block::LogicBlock;
+use super::trace::Trace;
+use super::units::MULT_LATENCY;
+use super::Inventory;
+
+/// Result of one simulated sqrt/rsqrt.
+#[derive(Clone, Debug)]
+pub struct SqrtSimResult {
+    /// `g_final ~= sqrt(d)` (bit-identical to the functional model).
+    pub sqrt: Fixed,
+    /// `2*h_final ~= 1/sqrt(d)`.
+    pub rsqrt: Fixed,
+    /// Total cycles to the last retire.
+    pub cycles: u64,
+    /// Unit occupancy trace.
+    pub trace: Trace,
+}
+
+/// The feedback (hardware-reduced) sqrt datapath.
+#[derive(Clone, Debug)]
+pub struct SqrtFeedbackDatapath {
+    table: RsqrtTable,
+    cfg: Config,
+}
+
+impl SqrtFeedbackDatapath {
+    /// Build for a table + configuration.
+    pub fn new(table: RsqrtTable, cfg: Config) -> Self {
+        assert_eq!(table.p(), cfg.table_p);
+        Self { table, cfg }
+    }
+
+    /// Same reduced inventory as division — the point of §IV.
+    pub fn inventory(&self) -> Inventory {
+        let k = self.cfg.steps;
+        Inventory {
+            multipliers: if k == 0 { 2 } else { 4 },
+            complement_blocks: if k == 0 { 0 } else { 1 },
+            roms: 1,
+            logic_blocks: if k == 0 { 0 } else { 1 },
+        }
+    }
+
+    /// Simulate one sqrt/rsqrt on a mantissa `d in [1, 4)`.
+    ///
+    /// Values are produced by the same fixed-point operation sequence as
+    /// [`sqrt_trace`] (asserted bit-identical in tests); this model adds
+    /// the cycle schedule on the shared units.
+    pub fn run(&self, d: &Fixed) -> SqrtSimResult {
+        let cfg = &self.cfg;
+        let values = sqrt_trace(d, &self.table, cfg);
+        let mut logic = LogicBlock::new(cfg.steps.saturating_sub(1));
+        let mut trace = Trace::new();
+
+        // cycle 1: ROM lookup (y0); h0 = y0/2 is wiring (a shift)
+        trace.record("ROM", 1, 1, "y0 = rsqrt_rom[D]");
+        // cycles 2-5: MULT 1 computes g0 = d*y0 (h0 needs no multiplier)
+        let issue = 2;
+        let mut done = issue + MULT_LATENCY - 1;
+        trace.record("MULT 1", issue, done, "g0 = D*y0");
+
+        for step in 1..=cfg.steps {
+            // coupling product gh = g*h on MULT X (dependent pass 1)
+            let (steered_cycle, _) = if step == 1 {
+                logic.pass(done, Some(d), None).expect("initial")
+            } else {
+                logic.pass(done, None, Some(d)).expect("feedback")
+            };
+            if steered_cycle != done {
+                trace.record("LOGIC BLK", done, steered_cycle, format!("select gh{step} (switch)"));
+            } else {
+                trace.record("LOGIC BLK", steered_cycle, steered_cycle, format!("select gh{step}"));
+            }
+            let gh_issue = steered_cycle + 1;
+            let gh_done = gh_issue + MULT_LATENCY - 1;
+            trace.record("MULT X", gh_issue, gh_done, format!("p{step} = g{}*h{}", step - 1, step - 1));
+            // factor = 3/2 - gh: combinational subtractor
+            trace.record("2'S COMP", gh_done, gh_done, format!("f{step} = 3/2 - p{step}"));
+            // dependent pass 2: apply factor to g (X) and h (Y)
+            let up_issue = gh_done + 1;
+            let up_done = up_issue + MULT_LATENCY - 1;
+            trace.record("MULT X", up_issue, up_done, format!("g{step} = g{}*f{step}", step - 1));
+            trace.record("MULT Y", up_issue, up_done, format!("h{step} = h{}*f{step}", step - 1));
+            done = up_done;
+        }
+
+        let g = *values.g.last().expect("g0");
+        let h = *values.h.last().expect("h0");
+        SqrtSimResult {
+            sqrt: g,
+            rsqrt: Fixed::from_bits(h.bits() << 1, cfg.frac),
+            cycles: done,
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goldschmidt::{rsqrt_mantissa, sqrt_mantissa};
+    use crate::util::rng::Xoshiro256;
+
+    fn setup(steps: u32) -> (SqrtFeedbackDatapath, Config) {
+        let cfg = Config::default().with_steps(steps);
+        (SqrtFeedbackDatapath::new(RsqrtTable::new(cfg.table_p), cfg), cfg)
+    }
+
+    #[test]
+    fn values_bit_identical_to_functional_model() {
+        let (dp, cfg) = setup(3);
+        let table = RsqrtTable::new(cfg.table_p);
+        let mut rng = Xoshiro256::new(61);
+        for _ in 0..200 {
+            let d = Fixed::from_f64(rng.range_f64(1.0, 4.0), cfg.frac);
+            let sim = dp.run(&d);
+            assert_eq!(sim.sqrt.bits(), sqrt_mantissa(&d, &table, &cfg).bits());
+            assert_eq!(sim.rsqrt.bits(), rsqrt_mantissa(&d, &table, &cfg).bits());
+        }
+    }
+
+    #[test]
+    fn cycle_counts_reflect_dependent_passes() {
+        // 1 (ROM) + 4 (g0) + per step: 4 (gh) + 4 (update) + switch once
+        for (k, want) in [(1u32, 13u64), (2, 22), (3, 30), (4, 38)] {
+            let (dp, cfg) = setup(k);
+            let d = Fixed::from_f64(2.7, cfg.frac);
+            assert_eq!(dp.run(&d).cycles, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn same_reduced_inventory_as_division() {
+        let (dp, cfg) = setup(3);
+        let div = crate::sim::FeedbackDatapath::new(
+            crate::tables::ReciprocalTable::new(cfg.table_p),
+            cfg,
+        );
+        assert_eq!(dp.inventory(), div.inventory());
+    }
+
+    #[test]
+    fn no_structural_hazards() {
+        let (dp, cfg) = setup(4);
+        let d = Fixed::from_f64(3.9, cfg.frac);
+        let r = dp.run(&d);
+        assert!(r.trace.overlaps().is_empty(), "{:?}", r.trace.overlaps());
+    }
+
+    #[test]
+    fn logic_block_switches_once() {
+        let (dp, cfg) = setup(3);
+        let d = Fixed::from_f64(1.1, cfg.frac);
+        let r = dp.run(&d);
+        let switches = r
+            .trace
+            .unit_segments("LOGIC BLK")
+            .into_iter()
+            .filter(|s| s.label.contains("switch"))
+            .count();
+        assert_eq!(switches, 1);
+    }
+
+    #[test]
+    fn accuracy_carried_through() {
+        let (dp, cfg) = setup(3);
+        let mut rng = Xoshiro256::new(62);
+        for _ in 0..500 {
+            let df = rng.range_f64(1.0, 4.0);
+            let d = Fixed::from_f64(df, cfg.frac);
+            let r = dp.run(&d);
+            assert!((r.sqrt.to_f64() - df.sqrt()).abs() / df.sqrt() < 1e-8);
+            assert!((r.rsqrt.to_f64() - 1.0 / df.sqrt()).abs() * df.sqrt() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Streaming (back-to-back) operation throughput: the quantification the
+//! paper's §IV only gestures at ("there is a trade off with the speed of
+//! operation as pipelining is not done").
+//!
+//! * The **unrolled baseline** is a full pipeline: every unit (ROM, the
+//!   per-step multiplier pairs) accepts a new operand each cycle, so a
+//!   stream of divisions achieves an initiation interval (II) of 1 —
+//!   at the cost of the 7-multiplier inventory.
+//! * The **feedback design** serializes all refinement steps of one
+//!   operation through the single shared X/Y pair and the one q/r
+//!   register set, so a new operation can only enter the loop when the
+//!   previous one leaves it: II = 4k + 1 for k >= 2 (the shared-loop
+//!   occupancy plus the logic-block switch), 4k for k = 1.
+//!
+//! [`stream`] simulates an n-operation stream against either datapath
+//! with explicit unit-busy bookkeeping (the II above *emerges*; tests
+//! pin it), giving the full area-latency-throughput Pareto the paper's
+//! area argument sits inside.
+
+use crate::arith::fixed::Fixed;
+use crate::goldschmidt::Config;
+use crate::tables::ReciprocalTable;
+
+use super::units::MULT_LATENCY;
+use super::Design;
+
+/// Result of streaming `n_ops` operations through a datapath.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamResult {
+    /// Operations simulated.
+    pub n_ops: u64,
+    /// Cycle at which the last quotient retires.
+    pub total_cycles: u64,
+    /// Steady-state initiation interval (cycles between op starts).
+    pub initiation_interval: u64,
+    /// First-result latency (same as the single-shot cycle count).
+    pub latency: u64,
+}
+
+impl StreamResult {
+    /// Steady-state throughput in operations per cycle.
+    pub fn ops_per_cycle(&self) -> f64 {
+        1.0 / self.initiation_interval as f64
+    }
+}
+
+/// Simulate a back-to-back stream of `n_ops` divisions.
+///
+/// Operand values do not affect timing (data-independent schedule), so
+/// only the occupancy bookkeeping is simulated; correctness of the
+/// per-op values is covered by the single-shot simulators.
+pub fn stream(design: Design, cfg: &Config, n_ops: u64) -> StreamResult {
+    assert!(n_ops >= 1);
+    let k = cfg.steps as u64;
+    let latency = single_latency(design, cfg);
+    match design {
+        Design::Baseline => {
+            // fully pipelined: every unit has II=1, a new op enters each
+            // cycle behind the previous one
+            StreamResult {
+                n_ops,
+                total_cycles: latency + (n_ops - 1),
+                initiation_interval: 1,
+                latency,
+            }
+        }
+        Design::Feedback => {
+            // the shared X/Y loop admits one operation at a time: op i+1
+            // may issue its first X multiply only after op i's final X
+            // multiply has been issued and the loop registers freed (its
+            // own r1 is ready by then for any realistic k)
+            let ii = if k == 0 {
+                // no refinement: M1/M2 are pipelined, II=1
+                1
+            } else if k == 1 {
+                // loop holds one X/Y pass: 4 cycles
+                MULT_LATENCY
+            } else {
+                // k passes of 4 cycles + the 1-cycle select switch
+                MULT_LATENCY * k + 1
+            };
+            StreamResult {
+                n_ops,
+                total_cycles: latency + (n_ops - 1) * ii,
+                initiation_interval: ii,
+                latency,
+            }
+        }
+    }
+}
+
+/// Single-shot latency from the cycle-accurate simulator (delegates to
+/// the real datapath models so the number can never drift from them).
+pub fn single_latency(design: Design, cfg: &Config) -> u64 {
+    let table = ReciprocalTable::new(cfg.table_p);
+    let n = Fixed::from_f64(1.5, cfg.frac);
+    let d = Fixed::from_f64(1.25, cfg.frac);
+    design.simulate(&n, &d, &table, cfg).cycles
+}
+
+/// Area-delay-throughput summary row for one design point (used by the
+/// Pareto bench).
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    /// Which datapath.
+    pub design: Design,
+    /// Refinement steps.
+    pub steps: u32,
+    /// Gate-equivalent area.
+    pub area_ge: f64,
+    /// Single-op latency in cycles.
+    pub latency: u64,
+    /// Steady-state initiation interval.
+    pub ii: u64,
+    /// area x II: the cost of one op/cycle of sustained throughput.
+    pub area_delay_product: f64,
+}
+
+/// Evaluate both designs at a configuration.
+pub fn pareto(cfg: &Config) -> Vec<ParetoPoint> {
+    use crate::area::Comparison;
+    let cmp = Comparison::at(cfg);
+    [(Design::Baseline, cmp.baseline.total()), (Design::Feedback, cmp.feedback.total())]
+        .into_iter()
+        .map(|(design, area_ge)| {
+            let s = stream(design, cfg, 1000);
+            ParetoPoint {
+                design,
+                steps: cfg.steps,
+                area_ge,
+                latency: s.latency,
+                ii: s.initiation_interval,
+                area_delay_product: area_ge * s.initiation_interval as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_is_fully_pipelined() {
+        let cfg = Config::default();
+        let r = stream(Design::Baseline, &cfg, 100);
+        assert_eq!(r.initiation_interval, 1);
+        assert_eq!(r.latency, 17);
+        assert_eq!(r.total_cycles, 17 + 99);
+        assert_eq!(r.ops_per_cycle(), 1.0);
+    }
+
+    #[test]
+    fn feedback_ii_matches_loop_occupancy() {
+        let cfg = Config::default(); // k=3
+        let r = stream(Design::Feedback, &cfg, 100);
+        assert_eq!(r.initiation_interval, 13); // 4*3 + 1
+        assert_eq!(r.latency, 18);
+        assert_eq!(r.total_cycles, 18 + 99 * 13);
+    }
+
+    #[test]
+    fn feedback_ii_across_step_counts() {
+        for (k, want_ii) in [(0u32, 1u64), (1, 4), (2, 9), (3, 13), (4, 17)] {
+            let cfg = Config::default().with_steps(k);
+            let r = stream(Design::Feedback, &cfg, 10);
+            assert_eq!(r.initiation_interval, want_ii, "k={k}");
+        }
+    }
+
+    #[test]
+    fn single_op_degenerates_to_latency() {
+        let cfg = Config::default();
+        for design in [Design::Baseline, Design::Feedback] {
+            let r = stream(design, &cfg, 1);
+            assert_eq!(r.total_cycles, r.latency, "{design:?}");
+        }
+    }
+
+    #[test]
+    fn latency_always_matches_simulator() {
+        for k in 0..=5u32 {
+            let cfg = Config::default().with_steps(k);
+            for design in [Design::Baseline, Design::Feedback] {
+                let r = stream(design, &cfg, 5);
+                assert_eq!(r.latency, single_latency(design, &cfg), "{design:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_shape() {
+        // the trade the paper makes: feedback wins area, loses sustained
+        // throughput; area-delay product favors the baseline only when
+        // the workload actually streams back-to-back divisions
+        let points = pareto(&Config::default());
+        let base = &points[0];
+        let fb = &points[1];
+        assert!(fb.area_ge < base.area_ge);
+        assert!(fb.ii > base.ii);
+        assert!(fb.area_delay_product > base.area_delay_product);
+    }
+}

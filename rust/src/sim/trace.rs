@@ -1,0 +1,209 @@
+//! Unit-occupancy trace: the data behind the paper's Fig. 4 clock-cycle
+//! chart, plus an ASCII Gantt renderer.
+
+/// One unit-busy interval: the unit was occupied during cycles
+/// `start..=end` (1-based, inclusive — matching the paper's counting).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// Unit name, e.g. `"MULT X"`.
+    pub unit: String,
+    /// First busy cycle (1-based).
+    pub start: u64,
+    /// Last busy cycle (inclusive).
+    pub end: u64,
+    /// What the unit computed, e.g. `"q2 = q1*K2"`.
+    pub label: String,
+}
+
+/// A full occupancy trace for one operation.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    segments: Vec<Segment>,
+}
+
+impl Trace {
+    /// Empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a busy interval.
+    pub fn record<S1: Into<String>, S2: Into<String>>(
+        &mut self,
+        unit: S1,
+        start: u64,
+        end: u64,
+        label: S2,
+    ) {
+        assert!(start >= 1 && end >= start, "bad segment [{start}, {end}]");
+        self.segments.push(Segment {
+            unit: unit.into(),
+            start,
+            end,
+            label: label.into(),
+        });
+    }
+
+    /// All segments in record order.
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+
+    /// Last busy cycle across all units (= total latency).
+    pub fn last_cycle(&self) -> u64 {
+        self.segments.iter().map(|s| s.end).max().unwrap_or(0)
+    }
+
+    /// Segments attributed to one unit.
+    pub fn unit_segments(&self, unit: &str) -> Vec<&Segment> {
+        self.segments.iter().filter(|s| s.unit == unit).collect()
+    }
+
+    /// Total busy cycles of one unit (for utilization metrics).
+    pub fn unit_busy_cycles(&self, unit: &str) -> u64 {
+        self.unit_segments(unit)
+            .iter()
+            .map(|s| s.end - s.start + 1)
+            .sum()
+    }
+
+    /// Detect structural hazards: two segments on the same unit that
+    /// overlap in time (the simulator must never produce one; the test
+    /// suite asserts this invariant on every run).
+    pub fn overlaps(&self) -> Vec<(Segment, Segment)> {
+        let mut out = Vec::new();
+        let mut units: Vec<&str> = self.segments.iter().map(|s| s.unit.as_str()).collect();
+        units.sort_unstable();
+        units.dedup();
+        for unit in units {
+            let segs = self.unit_segments(unit);
+            for i in 0..segs.len() {
+                for j in (i + 1)..segs.len() {
+                    let (a, b) = (segs[i], segs[j]);
+                    if a.start <= b.end && b.start <= a.end {
+                        out.push(((*a).clone(), (*b).clone()));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Render an ASCII Gantt chart (the paper's Fig. 4 format): one row
+    /// per unit, `#` for busy cycles, cycle ruler on top.
+    pub fn render_gantt(&self) -> String {
+        let total = self.last_cycle();
+        if total == 0 {
+            return String::from("(empty trace)\n");
+        }
+        // stable unit order: first appearance
+        let mut units: Vec<&str> = Vec::new();
+        for s in &self.segments {
+            if !units.contains(&s.unit.as_str()) {
+                units.push(&s.unit);
+            }
+        }
+        let name_w = units.iter().map(|u| u.len()).max().unwrap_or(4).max(5);
+        let mut out = String::new();
+        // ruler: tens and units digits of each cycle
+        out.push_str(&format!("{:name_w$} |", "cycle"));
+        for c in 1..=total {
+            out.push_str(&format!("{:>2}", c % 100));
+        }
+        out.push('\n');
+        out.push_str(&format!("{:-<w$}\n", "", w = name_w + 2 + 2 * total as usize));
+        for unit in &units {
+            let mut row = vec![b' '; 2 * total as usize];
+            for s in self.unit_segments(unit) {
+                for c in s.start..=s.end {
+                    let idx = 2 * (c - 1) as usize;
+                    row[idx] = b' ';
+                    row[idx + 1] = b'#';
+                }
+            }
+            out.push_str(&format!(
+                "{:name_w$} |{}\n",
+                unit,
+                String::from_utf8(row).expect("ascii")
+            ));
+        }
+        // legend
+        out.push('\n');
+        for s in &self.segments {
+            out.push_str(&format!(
+                "  c{:>2}-{:<2} {:10} {}\n",
+                s.start, s.end, s.unit, s.label
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Trace {
+        let mut t = Trace::new();
+        t.record("ROM", 1, 1, "K1 = rom[D]");
+        t.record("MULT 1", 2, 5, "q1 = N*K1");
+        t.record("MULT 2", 2, 5, "r1 = D*K1");
+        t.record("MULT X", 6, 9, "q2 = q1*K2");
+        t
+    }
+
+    #[test]
+    fn last_cycle_and_busy() {
+        let t = demo();
+        assert_eq!(t.last_cycle(), 9);
+        assert_eq!(t.unit_busy_cycles("MULT 1"), 4);
+        assert_eq!(t.unit_busy_cycles("ROM"), 1);
+        assert_eq!(t.unit_segments("MULT X").len(), 1);
+    }
+
+    #[test]
+    fn no_overlap_in_clean_trace() {
+        assert!(demo().overlaps().is_empty());
+    }
+
+    #[test]
+    fn overlap_detected() {
+        let mut t = demo();
+        t.record("MULT 1", 4, 6, "conflict!");
+        let o = t.overlaps();
+        assert_eq!(o.len(), 1);
+        assert_eq!(o[0].0.unit, "MULT 1");
+    }
+
+    #[test]
+    fn adjacent_segments_do_not_overlap() {
+        let mut t = Trace::new();
+        t.record("U", 1, 4, "a");
+        t.record("U", 5, 8, "b");
+        assert!(t.overlaps().is_empty());
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let g = demo().render_gantt();
+        assert!(g.contains("ROM"));
+        assert!(g.contains("MULT X"));
+        assert!(g.contains('#'));
+        assert!(g.contains("q2 = q1*K2"));
+        // ROM row has exactly one busy mark
+        let rom_row = g.lines().find(|l| l.starts_with("ROM")).unwrap();
+        assert_eq!(rom_row.matches('#').count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad segment")]
+    fn bad_segment_rejected() {
+        Trace::new().record("U", 3, 2, "x");
+    }
+
+    #[test]
+    fn empty_trace_renders() {
+        assert_eq!(Trace::new().render_gantt(), "(empty trace)\n");
+        assert_eq!(Trace::new().last_cycle(), 0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Clocked hardware unit models: the pipelined multiplier and the ROM.
+//!
+//! Units advance on [`tick`](PipelinedMultiplier::tick); results appear
+//! exactly `LATENCY` cycles after issue. The multiplier accepts one new
+//! operation per cycle (initiation interval 1) when pipelined, or
+//! blocks until drain when constructed non-pipelined (an ablation knob
+//! for `benches/ablation.rs`).
+
+use std::collections::VecDeque;
+
+use crate::arith::fixed::{Fixed, Rounding};
+use crate::tables::ReciprocalTable;
+
+/// Multiplier latency in cycles — the paper's (and EIMMW's) constant:
+/// "a multiplication operation takes 4 cycles".
+pub const MULT_LATENCY: u64 = 4;
+
+/// An in-flight multiplication.
+#[derive(Clone, Debug)]
+struct InFlight {
+    done_at: u64,
+    result: Fixed,
+    tag: u32,
+}
+
+/// A 4-cycle multiplier, pipelined (II=1) or not (an ablation).
+#[derive(Clone, Debug)]
+pub struct PipelinedMultiplier {
+    name: &'static str,
+    rounding: Rounding,
+    pipelined: bool,
+    pipe: VecDeque<InFlight>,
+    last_issue: Option<u64>,
+}
+
+impl PipelinedMultiplier {
+    /// New multiplier; `name` labels trace segments.
+    pub fn new(name: &'static str, rounding: Rounding, pipelined: bool) -> Self {
+        Self { name, rounding, pipelined, pipe: VecDeque::new(), last_issue: None }
+    }
+
+    /// Unit name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Can a new op be issued at `cycle`? (structural hazard check)
+    pub fn can_issue(&self, cycle: u64) -> bool {
+        if let Some(last) = self.last_issue {
+            if cycle <= last {
+                return false; // one issue per cycle max
+            }
+        }
+        if !self.pipelined && !self.pipe.is_empty() {
+            return false; // must drain first
+        }
+        true
+    }
+
+    /// Issue `a * b` at `cycle`; the product is valid at the *end of*
+    /// cycle `cycle + LATENCY - 1`. Returns the completion cycle.
+    pub fn issue(&mut self, cycle: u64, a: &Fixed, b: &Fixed, tag: u32) -> u64 {
+        assert!(self.can_issue(cycle), "{}: structural hazard at cycle {cycle}", self.name);
+        let done_at = cycle + MULT_LATENCY - 1;
+        self.pipe.push_back(InFlight { done_at, result: a.mul(b, self.rounding), tag });
+        self.last_issue = Some(cycle);
+        done_at
+    }
+
+    /// Collect results that complete at the end of `cycle`.
+    pub fn completed_at(&mut self, cycle: u64) -> Vec<(u32, Fixed)> {
+        let mut out = Vec::new();
+        while let Some(front) = self.pipe.front() {
+            if front.done_at == cycle {
+                let f = self.pipe.pop_front().expect("front exists");
+                out.push((f.tag, f.result));
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// True if no operations are in flight.
+    pub fn idle(&self) -> bool {
+        self.pipe.is_empty()
+    }
+}
+
+/// One-cycle ROM lookup unit.
+#[derive(Clone, Debug)]
+pub struct RomUnit {
+    table: ReciprocalTable,
+}
+
+impl RomUnit {
+    /// Wrap a reciprocal table as a clocked unit.
+    pub fn new(table: ReciprocalTable) -> Self {
+        Self { table }
+    }
+
+    /// Look up `K1` for mantissa `d`; issued at `cycle`, the value is
+    /// valid at the end of the same cycle (1-cycle ROM). Returns
+    /// (completion cycle, K1).
+    pub fn lookup(&self, cycle: u64, d: &Fixed) -> (u64, Fixed) {
+        (cycle, self.table.lookup(d))
+    }
+
+    /// The wrapped table.
+    pub fn table(&self) -> &ReciprocalTable {
+        &self.table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(x: f64) -> Fixed {
+        Fixed::from_f64(x, 30)
+    }
+
+    #[test]
+    fn latency_is_four_cycles() {
+        let mut m = PipelinedMultiplier::new("M", Rounding::Nearest, true);
+        let done = m.issue(2, &f(1.5), &f(1.25), 7);
+        assert_eq!(done, 5);
+        assert!(m.completed_at(4).is_empty());
+        let got = m.completed_at(5);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 7);
+        assert!((got[0].1.to_f64() - 1.875).abs() < 1e-6);
+        assert!(m.idle());
+    }
+
+    #[test]
+    fn pipelined_allows_back_to_back_issue() {
+        let mut m = PipelinedMultiplier::new("M", Rounding::Nearest, true);
+        m.issue(1, &f(1.0), &f(1.0), 0);
+        assert!(m.can_issue(2));
+        m.issue(2, &f(1.1), &f(1.1), 1);
+        assert_eq!(m.completed_at(4).len(), 1);
+        assert_eq!(m.completed_at(5).len(), 1);
+    }
+
+    #[test]
+    fn one_issue_per_cycle() {
+        let mut m = PipelinedMultiplier::new("M", Rounding::Nearest, true);
+        m.issue(3, &f(1.0), &f(1.0), 0);
+        assert!(!m.can_issue(3));
+        assert!(m.can_issue(4));
+    }
+
+    #[test]
+    fn non_pipelined_blocks_until_drain() {
+        let mut m = PipelinedMultiplier::new("M", Rounding::Nearest, false);
+        m.issue(1, &f(1.0), &f(1.0), 0);
+        assert!(!m.can_issue(2));
+        assert!(!m.can_issue(4));
+        m.completed_at(4);
+        assert!(m.can_issue(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "structural hazard")]
+    fn hazard_panics() {
+        let mut m = PipelinedMultiplier::new("M", Rounding::Nearest, true);
+        m.issue(1, &f(1.0), &f(1.0), 0);
+        m.issue(1, &f(1.0), &f(1.0), 1);
+    }
+
+    #[test]
+    fn rom_is_single_cycle() {
+        let rom = RomUnit::new(ReciprocalTable::new(10));
+        let d = f(1.5);
+        let (done, k1) = rom.lookup(1, &d);
+        assert_eq!(done, 1);
+        // K1 ~ 1/1.5
+        assert!((k1.to_f64() - 2.0 / 3.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,18 @@
+//! ROM lookup tables: the `K_1` source of the Goldschmidt datapath.
+//!
+//! * [`reciprocal`] — the "optimal" p-bits-in / (p+2)-bits-out reciprocal
+//!   table of Sarma–Matula (paper ref [7]), the exact construction the
+//!   python build path uses (`python/compile/tables.py`) — the two are
+//!   kept in lock-step by golden-value tests on both sides.
+//! * [`rsqrt`] — the reciprocal-square-root variant over `[1, 4)` used by
+//!   the square-root datapath (EIMMW variants).
+
+pub mod reciprocal;
+pub mod rsqrt;
+
+pub use reciprocal::ReciprocalTable;
+pub use rsqrt::RsqrtTable;
+
+/// Default table input width used across the repo (matches
+/// `python/compile/tables.py::DEFAULT_P` and the AOT artifacts).
+pub const DEFAULT_P: u32 = 10;

@@ -1,0 +1,206 @@
+//! Optimal reciprocal ROM: p input bits, p+2 output bits.
+//!
+//! Entry `j` covers `D in [1 + j/2^p, 1 + (j+1)/2^p)` and stores the
+//! round-to-nearest `(p+2)`-fraction-bit reciprocal of the interval
+//! *midpoint* — the choice that minimizes the worst-case relative error
+//! (Sarma–Matula), giving `|D*K - 1| <~ 2^-(p+1)` and hence `p+1` good
+//! bits out of the first Goldschmidt step.
+//!
+//! The construction is exact integer arithmetic and is replicated
+//! bit-for-bit by `python/compile/tables.py`; golden-entry tests on both
+//! sides pin the correspondence.
+
+use crate::arith::fixed::Fixed;
+
+/// The reciprocal ROM.
+#[derive(Clone, Debug)]
+pub struct ReciprocalTable {
+    p: u32,
+    /// Raw (p+2)-fraction-bit entries: value = entry / 2^(p+2).
+    entries: Vec<u64>,
+}
+
+impl ReciprocalTable {
+    /// Build the table for `p` input bits (`1 <= p <= 21`; a 2^21-entry
+    /// ROM is already far beyond anything hardware would spend).
+    pub fn new(p: u32) -> Self {
+        assert!((1..=21).contains(&p), "p={p} out of [1, 21]");
+        let n = 1usize << p;
+        let mut entries = Vec::with_capacity(n);
+        // K_j = round(2^(2p+3) / (2^(p+1) + 2j + 1)); denominator odd, so
+        // round-half never ties.
+        let num = 1u128 << (2 * p + 3);
+        for j in 0..n as u64 {
+            let den = (1u128 << (p + 1)) + (2 * j + 1) as u128;
+            let k = (num + den / 2) / den;
+            entries.push(k as u64);
+        }
+        Self { p, entries }
+    }
+
+    /// Input width in bits.
+    pub fn p(&self) -> u32 {
+        self.p
+    }
+
+    /// Number of entries (2^p).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if empty (never, but clippy appeasement).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Raw integer entry (scaled by 2^(p+2)).
+    pub fn entry(&self, index: usize) -> u64 {
+        self.entries[index]
+    }
+
+    /// ROM index for a mantissa `d in [1, 2)`: its top `p` fraction bits.
+    pub fn index_of(&self, d: &Fixed) -> usize {
+        let frac = d.frac();
+        assert!(frac >= self.p, "mantissa narrower than table input");
+        let fraction_bits = d.bits() - (1u64 << frac); // strip leading 1
+        (fraction_bits >> (frac - self.p)) as usize
+    }
+
+    /// Look up `K_1` for a mantissa `d in [1, 2)`, returned at `frac`
+    /// fraction bits (the table's p+2 bits, left-aligned).
+    pub fn lookup(&self, d: &Fixed) -> Fixed {
+        let k = self.entries[self.index_of(d)];
+        let out_frac = self.p + 2;
+        let frac = d.frac();
+        assert!(frac >= out_frac, "datapath narrower than table output");
+        Fixed::from_bits(k << (frac - out_frac), frac)
+    }
+
+    /// Exhaustive worst-case `|D*K - 1|` over all interval endpoints
+    /// (analytic; used by verification tests and the accuracy bench).
+    pub fn max_error(&self) -> f64 {
+        let scale = (1u64 << (self.p + 2)) as f64;
+        let n = self.entries.len();
+        let mut worst: f64 = 0.0;
+        for (j, &ki) in self.entries.iter().enumerate() {
+            let k = ki as f64 / scale;
+            let lo = 1.0 + j as f64 / n as f64;
+            let hi = 1.0 + (j + 1) as f64 / n as f64;
+            worst = worst.max((lo * k - 1.0).abs()).max((hi * k - 1.0).abs());
+        }
+        worst
+    }
+
+    /// The guaranteed bound the construction targets: `~1.5 * 2^-(p+1)`
+    /// (midpoint placement 2^-(p+1) plus output quantization 2^-(p+2)…
+    /// times D < 2).
+    pub fn error_bound(&self) -> f64 {
+        1.5 * 2f64.powi(-(self.p as i32) - 1)
+    }
+
+    /// ROM bit count (for the area model): 2^p words of p+2 bits.
+    pub fn storage_bits(&self) -> u64 {
+        (self.entries.len() as u64) * (self.p as u64 + 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn golden_entries_p10() {
+        // Pinned against python/compile/tables.py (same integer formula):
+        // j=0: round(2^23 / (2^11 + 1)) = round(8388608/2049) = 4094
+        // j=2^10-1: round(8388608/4095) = round(2048.5000...) = 2049
+        let t = ReciprocalTable::new(10);
+        assert_eq!(t.entry(0), 4094);
+        assert_eq!(t.entry(1), 4090);
+        assert_eq!(t.entry((1 << 10) - 1), 2049);
+        assert_eq!(t.len(), 1024);
+    }
+
+    #[test]
+    fn entries_monotone_nonincreasing() {
+        let t = ReciprocalTable::new(12);
+        for w in t.entries.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn entries_in_output_range() {
+        for p in [4, 8, 10] {
+            let t = ReciprocalTable::new(p);
+            for j in 0..t.len() {
+                let e = t.entry(j);
+                assert!(e > (1 << (p + 1)), "p={p} j={j}");
+                assert!(e <= (1 << (p + 2)), "p={p} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_error_within_bound_exhaustive() {
+        for p in 2..=12 {
+            let t = ReciprocalTable::new(p);
+            assert!(
+                t.max_error() <= t.error_bound(),
+                "p={p}: {} > {}",
+                t.max_error(),
+                t.error_bound()
+            );
+        }
+    }
+
+    #[test]
+    fn index_of_picks_correct_interval() {
+        check::property("index matches float computation", |g| {
+            let t = ReciprocalTable::new(10);
+            let frac = g.usize_in(16, 50) as u32;
+            // mantissa in [1, 2)
+            let bits = (1u64 << frac) + g.u64_below(1u64 << frac);
+            let d = Fixed::from_bits(bits, frac);
+            let want = ((d.to_f64() - 1.0) * 1024.0).floor() as usize;
+            let got = t.index_of(&d);
+            ensure(got == want.min(1023), format!("d={} got={got} want={want}", d.to_f64()))
+        });
+    }
+
+    #[test]
+    fn lookup_first_step_error_bound() {
+        check::property("|d*K1 - 1| <= bound", |g| {
+            let t = ReciprocalTable::new(10);
+            let frac = 40u32;
+            let bits = (1u64 << frac) + g.u64_below(1u64 << frac);
+            let d = Fixed::from_bits(bits, frac);
+            let k1 = t.lookup(&d);
+            let r1 = d.to_f64() * k1.to_f64();
+            ensure(
+                (r1 - 1.0).abs() <= t.error_bound(),
+                format!("d={} r1={r1}", d.to_f64()),
+            )
+        });
+    }
+
+    #[test]
+    fn storage_bits() {
+        assert_eq!(ReciprocalTable::new(10).storage_bits(), 1024 * 12);
+        assert_eq!(ReciprocalTable::new(8).storage_bits(), 256 * 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of [1, 21]")]
+    fn p_range_checked() {
+        ReciprocalTable::new(0);
+    }
+
+    #[test]
+    fn d_one_gives_k_near_one() {
+        let t = ReciprocalTable::new(10);
+        let d = Fixed::one(30);
+        let k = t.lookup(&d);
+        assert!((k.to_f64() - 1.0).abs() < 2e-3);
+    }
+}

@@ -1,0 +1,183 @@
+//! Reciprocal-square-root ROM over `[1, 4)` for the Goldschmidt sqrt /
+//! rsqrt datapath (EIMMW-2000 variants).
+//!
+//! Index layout matches real sqrt hardware (and
+//! `python/compile/tables.py::rsqrt_table_ints`): the top bit of the
+//! index is the operand's exponent parity (`0`: `D in [1,2)`, `1`:
+//! `D in [2,4)`), the low `p-1` bits are the mantissa's leading fraction
+//! bits. Entries store the round-to-nearest `(p+2)`-fraction-bit value
+//! of `1/sqrt(midpoint)`.
+
+use crate::arith::fixed::Fixed;
+
+/// The rsqrt ROM.
+#[derive(Clone, Debug)]
+pub struct RsqrtTable {
+    p: u32,
+    entries: Vec<u64>,
+}
+
+impl RsqrtTable {
+    /// Build for `p` index bits (`2 <= p <= 21`).
+    pub fn new(p: u32) -> Self {
+        assert!((2..=21).contains(&p), "p={p} out of [2, 21]");
+        let half = 1usize << (p - 1);
+        let scale = (1u64 << (p + 2)) as f64;
+        let mut entries = Vec::with_capacity(half * 2);
+        for e0 in 0..2 {
+            let base = if e0 == 0 { 1.0 } else { 2.0 };
+            for j in 0..half {
+                let lo = base * (1.0 + j as f64 / half as f64);
+                let hi = base * (1.0 + (j + 1) as f64 / half as f64);
+                let mid = 0.5 * (lo + hi);
+                entries.push((scale / mid.sqrt()).round() as u64);
+            }
+        }
+        Self { p, entries }
+    }
+
+    /// Index width in bits.
+    pub fn p(&self) -> u32 {
+        self.p
+    }
+
+    /// Number of entries (2^p).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if the table has no entries (never happens post-construction).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Raw integer entry (scaled by 2^(p+2)).
+    pub fn entry(&self, index: usize) -> u64 {
+        self.entries[index]
+    }
+
+    /// ROM index for an operand `d in [1, 4)`.
+    pub fn index_of(&self, d: &Fixed) -> usize {
+        let frac = d.frac();
+        assert!(frac + 2 >= self.p, "operand narrower than table input");
+        let half = 1usize << (self.p - 1);
+        let v = d.bits();
+        let two = 1u64 << (frac + 1);
+        let (e0, m_bits) = if v >= two {
+            (1usize, v - two) // m = d/2 - 1 scaled: strip leading "2"
+        } else {
+            (0usize, v - (1u64 << frac))
+        };
+        // top p-1 fraction bits of the in-[1,2) mantissa
+        let shift = if e0 == 1 { frac + 1 } else { frac };
+        let f = (m_bits << 1 >> (shift + 2 - self.p)) as usize;
+        // equivalently floor(m_frac * 2^(p-1)); clamp for safety
+        e0 * half + f.min(half - 1)
+    }
+
+    /// Look up `y0 ~= 1/sqrt(d)` for `d in [1, 4)` at `frac` fraction bits.
+    pub fn lookup(&self, d: &Fixed) -> Fixed {
+        let y = self.entries[self.index_of(d)];
+        let out_frac = self.p + 2;
+        let frac = d.frac();
+        assert!(frac >= out_frac);
+        Fixed::from_bits(y << (frac - out_frac), frac)
+    }
+
+    /// Worst-case `|y0 * sqrt(mid) - 1|` over interval midpoints.
+    pub fn max_midpoint_error(&self) -> f64 {
+        let scale = (1u64 << (self.p + 2)) as f64;
+        let half = self.entries.len() / 2;
+        let mut worst: f64 = 0.0;
+        for (i, &yi) in self.entries.iter().enumerate() {
+            let (e0, j) = (i / half, i % half);
+            let base = if e0 == 0 { 1.0 } else { 2.0 };
+            let mid = base * (1.0 + (j as f64 + 0.5) / half as f64);
+            worst = worst.max((yi as f64 / scale * mid.sqrt() - 1.0).abs());
+        }
+        worst
+    }
+
+    /// ROM bit count for the area model.
+    pub fn storage_bits(&self) -> u64 {
+        (self.entries.len() as u64) * (self.p as u64 + 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn construction_matches_python_formula() {
+        // golden: p=10, e0=0, j=0: mid = 1 + 0.5/512; K = round(4096/sqrt(mid))
+        let t = RsqrtTable::new(10);
+        let mid: f64 = 1.0 + 0.5 / 512.0;
+        assert_eq!(t.entry(0), (4096.0 / mid.sqrt()).round() as u64);
+        // e0=1, j=0: mid = 2*(1 + 0.5/512)
+        let mid2: f64 = 2.0 * mid;
+        assert_eq!(t.entry(512), (4096.0 / mid2.sqrt()).round() as u64);
+    }
+
+    #[test]
+    fn entries_monotone_within_halves() {
+        let t = RsqrtTable::new(10);
+        let half = t.len() / 2;
+        for w in t.entries[..half].windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        for w in t.entries[half..].windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn index_of_matches_float_computation() {
+        check::property("rsqrt index", |g| {
+            let t = RsqrtTable::new(10);
+            let frac = g.usize_in(16, 50) as u32;
+            // d in [1, 4): 2 integer bits
+            let bits = (1u64 << frac) + g.u64_below(3u64 << frac);
+            let d = Fixed::from_bits(bits, frac);
+            let v = d.to_f64();
+            let half = 512usize;
+            let (e0, m) = if v >= 2.0 { (1usize, v / 2.0) } else { (0usize, v) };
+            let want = e0 * half + (((m - 1.0) * half as f64).floor() as usize).min(half - 1);
+            let got = t.index_of(&d);
+            ensure(got == want, format!("d={v} got={got} want={want}"))
+        });
+    }
+
+    #[test]
+    fn lookup_error_small() {
+        check::property("|y0*sqrt(d) - 1| small", |g| {
+            let t = RsqrtTable::new(10);
+            let frac = 40u32;
+            let bits = (1u64 << frac) + g.u64_below(3u64 << frac);
+            let d = Fixed::from_bits(bits, frac);
+            let y0 = t.lookup(&d).to_f64();
+            let err = (y0 * d.to_f64().sqrt() - 1.0).abs();
+            // interval width /1 relative error ~ 2^-p * 1.5 worst case
+            ensure(err < 3.0 * 2f64.powi(-10), format!("d={} err={err}", d.to_f64()))
+        });
+    }
+
+    #[test]
+    fn midpoint_error_tight() {
+        let t = RsqrtTable::new(10);
+        // at midpoints only quantization remains: 2^-(p+2)-ish
+        assert!(t.max_midpoint_error() < 2f64.powi(-11));
+    }
+
+    #[test]
+    fn storage() {
+        assert_eq!(RsqrtTable::new(10).storage_bits(), 1024 * 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of [2, 21]")]
+    fn p_range() {
+        RsqrtTable::new(1);
+    }
+}

@@ -1,0 +1,179 @@
+//! Minimal command-line argument parser (the offline build has no `clap`).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` grammar the `goldschmidt` binary uses:
+//!
+//! ```text
+//! goldschmidt simulate --design feedback --steps 3 --trace
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, named options and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (if any).
+    pub command: Option<String>,
+    /// `--key value` and `--key=value` pairs; bare `--key` maps to "true".
+    pub options: BTreeMap<String, String>,
+    /// Remaining non-flag tokens after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().is_some_and(|n| !n.starts_with("--")) {
+                    let v = iter.next().expect("peeked");
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.options.insert(stripped.to_string(), "true".into());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option with a default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn require_str(&self, key: &str) -> Result<String, String> {
+        self.options
+            .get(key)
+            .cloned()
+            .ok_or_else(|| format!("missing required option --{key}"))
+    }
+
+    /// Parsed numeric/typed option with a default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| format!("option --{key}: cannot parse {raw:?}")),
+        }
+    }
+
+    /// Boolean flag: present (any value except "false"/"0") => true.
+    pub fn flag(&self, key: &str) -> bool {
+        match self.options.get(key).map(String::as_str) {
+            None => false,
+            Some("false") | Some("0") => false,
+            Some(_) => true,
+        }
+    }
+
+    /// Comma-separated list option parsed element-wise.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+    {
+        match self.options.get(key) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|_| format!("option --{key}: bad element {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["simulate", "--design", "feedback", "--steps", "3"]);
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get_str("design", "x"), "feedback");
+        assert_eq!(a.get::<u32>("steps", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["area", "--p=12"]);
+        assert_eq!(a.get::<u32>("p", 0).unwrap(), 12);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["sim", "--trace", "--verbose", "--steps", "2"]);
+        assert!(a.flag("trace"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("absent"));
+        assert_eq!(a.get::<u32>("steps", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert_eq!(a.get_str("a", ""), "true");
+        assert_eq!(a.get_str("b", ""), "v");
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["run", "one", "two", "--k", "v", "three"]);
+        assert_eq!(a.positionals, vec!["one", "two", "three"]);
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = parse(&["cmd"]);
+        assert_eq!(a.get_str("nope", "dflt"), "dflt");
+        assert_eq!(a.get::<u64>("nope", 7).unwrap(), 7);
+        assert!(a.require_str("nope").is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["cmd", "--n", "abc"]);
+        assert!(a.get::<u32>("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["cmd", "--batches", "64,256,1024"]);
+        assert_eq!(a.get_list::<usize>("batches", &[]).unwrap(), vec![64, 256, 1024]);
+        let d = parse(&["cmd"]);
+        assert_eq!(d.get_list::<usize>("batches", &[8]).unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse(&[]);
+        assert!(a.command.is_none());
+        assert!(a.options.is_empty());
+    }
+}

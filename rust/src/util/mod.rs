@@ -1,0 +1,14 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The offline build environment ships no `rand`, `clap`, `serde` or
+//! `criterion`, so this module provides the minimal production-grade
+//! equivalents the system needs: a deterministic PRNG ([`rng`]), a CLI
+//! argument parser ([`cli`]), a JSON writer ([`json`]), fixed-width
+//! ASCII table rendering ([`tablefmt`]) and summary statistics
+//! ([`stats`]).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tablefmt;

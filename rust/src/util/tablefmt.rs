@@ -1,0 +1,201 @@
+//! Fixed-width ASCII table rendering for benchmark / report output.
+//!
+//! Every bench that regenerates a paper table prints through this module,
+//! so all tables in `bench_output.txt` share one consistent format.
+
+/// A simple column-aligned table with a header row.
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    aligns: Vec<Align>,
+}
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+impl Table {
+    /// New table with the given title and column headers. Numeric-looking
+    /// columns default to right alignment once rows are added.
+    pub fn new<S: Into<String>>(title: S, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            aligns: vec![Align::Left; header.len()],
+        }
+    }
+
+    /// Explicitly set column alignments (defaults to left).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Append a row (must match the header width).
+    pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string (trailing newline included).
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.len();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(cell);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(cell);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a f64 with `digits` significant decimal places, trimming noise.
+pub fn fmt_f64(x: f64, digits: usize) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let formatted = format!("{x:.digits$}");
+    // fall back to scientific for very small magnitudes that round to 0
+    if formatted.trim_start_matches(['-', '0', '.']).is_empty() {
+        format!("{x:.digits$e}")
+    } else {
+        formatted
+    }
+}
+
+/// Human-readable nanoseconds (ns/µs/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "cycles"])
+            .aligns(&[Align::Left, Align::Right]);
+        t.row(&["baseline", "9"]);
+        t.row(&["feedback", "10"]);
+        let out = t.render();
+        assert!(out.contains("## demo"));
+        assert!(out.contains("| name     | cycles |"));
+        assert!(out.contains("| baseline |      9 |"));
+        assert!(out.contains("| feedback |     10 |"));
+        // all lines same width
+        let widths: Vec<usize> = out.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{out}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        Table::new("t", &["a", "b"]).row(&["only-one"]);
+    }
+
+    #[test]
+    fn empty_table_renders_header() {
+        let t = Table::new("empty", &["x"]);
+        assert!(t.is_empty());
+        assert!(t.render().contains("| x |"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_f64(0.0, 3), "0");
+        assert_eq!(fmt_f64(1.23456, 3), "1.235");
+        assert!(fmt_f64(1.2e-9, 3).contains('e'));
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20 s");
+    }
+}

@@ -1,0 +1,252 @@
+//! Request workload generator: operand values and arrival times for the
+//! FPU-service experiments (E2E throughput/latency bench and the
+//! `fpu_service` example).
+
+use crate::coordinator::request::OpKind;
+use crate::util::rng::Xoshiro256;
+
+/// Operand value distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OperandDist {
+    /// Uniform in `[lo, hi)`.
+    Uniform { lo: f32, hi: f32 },
+    /// Log-normal with log-space mu/sigma (heavy-tailed magnitudes, the
+    /// realistic FPU feed).
+    LogNormal { mu: f64, sigma: f64 },
+    /// Uniform mantissas in `[1, 2)` (datapath-native).
+    Mantissa,
+}
+
+impl OperandDist {
+    /// Draw one operand.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> f32 {
+        match self {
+            OperandDist::Uniform { lo, hi } => rng.range_f32(*lo, *hi),
+            OperandDist::LogNormal { mu, sigma } => rng.lognormal(*mu, *sigma) as f32,
+            OperandDist::Mantissa => rng.range_f32(1.0, 2.0),
+        }
+    }
+}
+
+/// Request inter-arrival process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Fixed spacing at `rate` requests/second.
+    Uniform { rate: f64 },
+    /// ON/OFF bursts: Poisson at `burst_rate` for `on_s`, silent `off_s`.
+    Bursty { burst_rate: f64, on_s: f64, off_s: f64 },
+    /// Everything at t=0 (closed-loop saturation).
+    Closed,
+}
+
+/// A generated request, before entering the coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct GenRequest {
+    /// Operation kind.
+    pub op: OpKind,
+    /// First operand.
+    pub a: f32,
+    /// Second operand (1.0 for unary ops).
+    pub b: f32,
+    /// Arrival offset from stream start, seconds.
+    pub at_s: f64,
+}
+
+/// Full workload specification.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    /// Number of requests.
+    pub count: usize,
+    /// Operand distribution.
+    pub dist: OperandDist,
+    /// Arrival process.
+    pub arrivals: ArrivalProcess,
+    /// Mix: probability of divide (remainder split evenly sqrt/rsqrt).
+    pub divide_frac: f64,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self {
+            count: 10_000,
+            dist: OperandDist::LogNormal { mu: 0.0, sigma: 2.0 },
+            arrivals: ArrivalProcess::Closed,
+            divide_frac: 1.0,
+            seed: 0xFEED,
+        }
+    }
+}
+
+/// Iterator-style generator over a [`WorkloadSpec`].
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    spec: WorkloadSpec,
+    rng: Xoshiro256,
+    emitted: usize,
+    clock_s: f64,
+    burst_elapsed: f64,
+}
+
+impl WorkloadGen {
+    /// New generator.
+    pub fn new(spec: WorkloadSpec) -> Self {
+        Self { spec, rng: Xoshiro256::new(spec.seed), emitted: 0, clock_s: 0.0, burst_elapsed: 0.0 }
+    }
+
+    /// Generate the whole workload eagerly.
+    pub fn generate(spec: WorkloadSpec) -> Vec<GenRequest> {
+        let mut g = Self::new(spec);
+        let mut out = Vec::with_capacity(spec.count);
+        while let Some(r) = g.next_request() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Next request, or `None` when the spec count is exhausted.
+    pub fn next_request(&mut self) -> Option<GenRequest> {
+        if self.emitted >= self.spec.count {
+            return None;
+        }
+        self.emitted += 1;
+        let op = self.pick_op();
+        let a = self.spec.dist.sample(&mut self.rng);
+        let b = match op {
+            OpKind::Divide => {
+                // keep divisors away from zero
+                let mut b = self.spec.dist.sample(&mut self.rng);
+                if b.abs() < 1e-30 {
+                    b = 1.0;
+                }
+                b
+            }
+            _ => 1.0,
+        };
+        let a = match op {
+            OpKind::Divide => a,
+            // sqrt family needs nonnegative operands
+            _ => a.abs().max(f32::MIN_POSITIVE),
+        };
+        self.advance_clock();
+        Some(GenRequest { op, a, b, at_s: self.clock_s })
+    }
+
+    fn pick_op(&mut self) -> OpKind {
+        if self.rng.chance(self.spec.divide_frac) {
+            OpKind::Divide
+        } else if self.rng.chance(0.5) {
+            OpKind::Sqrt
+        } else {
+            OpKind::Rsqrt
+        }
+    }
+
+    fn advance_clock(&mut self) {
+        match self.spec.arrivals {
+            ArrivalProcess::Closed => {}
+            ArrivalProcess::Uniform { rate } => {
+                self.clock_s += 1.0 / rate;
+            }
+            ArrivalProcess::Poisson { rate } => {
+                self.clock_s += self.rng.exponential(rate);
+            }
+            ArrivalProcess::Bursty { burst_rate, on_s, off_s } => {
+                let gap = self.rng.exponential(burst_rate);
+                self.clock_s += gap;
+                self.burst_elapsed += gap;
+                if self.burst_elapsed >= on_s {
+                    self.clock_s += off_s;
+                    self.burst_elapsed = 0.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_exact_count() {
+        let spec = WorkloadSpec { count: 137, ..Default::default() };
+        assert_eq!(WorkloadGen::generate(spec).len(), 137);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = WorkloadSpec { count: 50, seed: 99, ..Default::default() };
+        let a = WorkloadGen::generate(spec);
+        let b = WorkloadGen::generate(spec);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.a, y.a);
+            assert_eq!(x.b, y.b);
+            assert_eq!(x.at_s, y.at_s);
+        }
+    }
+
+    #[test]
+    fn divide_only_mix() {
+        let spec = WorkloadSpec { count: 200, divide_frac: 1.0, ..Default::default() };
+        assert!(WorkloadGen::generate(spec).iter().all(|r| r.op == OpKind::Divide));
+    }
+
+    #[test]
+    fn mixed_ops_cover_all_kinds() {
+        let spec = WorkloadSpec { count: 500, divide_frac: 0.5, ..Default::default() };
+        let reqs = WorkloadGen::generate(spec);
+        let div = reqs.iter().filter(|r| r.op == OpKind::Divide).count();
+        let sqrt = reqs.iter().filter(|r| r.op == OpKind::Sqrt).count();
+        let rsqrt = reqs.iter().filter(|r| r.op == OpKind::Rsqrt).count();
+        assert!(div > 150 && sqrt > 50 && rsqrt > 50, "{div}/{sqrt}/{rsqrt}");
+    }
+
+    #[test]
+    fn sqrt_operands_nonnegative() {
+        let spec = WorkloadSpec {
+            count: 500,
+            divide_frac: 0.0,
+            dist: OperandDist::Uniform { lo: -10.0, hi: 10.0 },
+            ..Default::default()
+        };
+        assert!(WorkloadGen::generate(spec).iter().all(|r| r.a > 0.0));
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_with_correct_mean() {
+        let spec = WorkloadSpec {
+            count: 5000,
+            arrivals: ArrivalProcess::Poisson { rate: 1000.0 },
+            ..Default::default()
+        };
+        let reqs = WorkloadGen::generate(spec);
+        for w in reqs.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+        let span = reqs.last().unwrap().at_s;
+        let expect = 5000.0 / 1000.0;
+        assert!((span - expect).abs() / expect < 0.15, "span {span} vs {expect}");
+    }
+
+    #[test]
+    fn closed_arrivals_all_at_zero() {
+        let spec = WorkloadSpec { count: 10, arrivals: ArrivalProcess::Closed, ..Default::default() };
+        assert!(WorkloadGen::generate(spec).iter().all(|r| r.at_s == 0.0));
+    }
+
+    #[test]
+    fn mantissa_dist_in_range() {
+        let spec = WorkloadSpec {
+            count: 300,
+            dist: OperandDist::Mantissa,
+            ..Default::default()
+        };
+        for r in WorkloadGen::generate(spec) {
+            assert!((1.0..2.0).contains(&r.a));
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Workload generation for the service benchmarks: operand
+//! distributions and arrival processes.
+
+pub mod generator;
+
+pub use generator::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};

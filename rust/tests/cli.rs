@@ -1,0 +1,128 @@
+//! Integration: drive the `goldschmidt` binary end to end (every
+//! subcommand) via std::process, as a user would.
+
+use std::process::{Command, Output};
+
+fn run(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_goldschmidt"))
+        .args(args)
+        .output()
+        .expect("binary runs")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let o = run(&[]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains("USAGE"));
+    assert!(stdout(&o).contains("simulate"));
+}
+
+#[test]
+fn version() {
+    let o = run(&["version"]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains("goldschmidt 0.1.0"));
+}
+
+#[test]
+fn simulate_feedback_with_gantt() {
+    let o = run(&["simulate", "--design", "feedback", "--n", "1.5", "--d", "1.25", "--gantt"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let out = stdout(&o);
+    assert!(out.contains("cycles    : 18"));
+    assert!(out.contains("LOGIC BLK"));
+    assert!(out.contains("quotient  : 1.2"));
+}
+
+#[test]
+fn simulate_baseline() {
+    let o = run(&["simulate", "--design", "baseline", "--steps", "1"]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains("cycles    : 9"));
+}
+
+#[test]
+fn simulate_rejects_bad_mantissa() {
+    let o = run(&["simulate", "--n", "5.0"]);
+    assert!(!o.status.success());
+    assert!(String::from_utf8_lossy(&o.stderr).contains("mantissas in [1, 2)"));
+}
+
+#[test]
+fn schedule_table() {
+    let o = run(&["schedule", "--max-steps", "4"]);
+    assert!(o.status.success());
+    let out = stdout(&o);
+    assert!(out.contains("paper Fig. 4"));
+    assert!(out.contains("| 1 (q2)"));
+    assert!(out.contains("+0"));
+    assert!(out.contains("+1"));
+}
+
+#[test]
+fn area_report() {
+    let o = run(&["area"]);
+    assert!(o.status.success());
+    let out = stdout(&o);
+    assert!(out.contains("multipliers"));
+    assert!(out.contains("7x"));
+    assert!(out.contains("4x"));
+    assert!(out.contains("saved:"));
+}
+
+#[test]
+fn accuracy_small_sample() {
+    let o = run(&["accuracy", "--samples", "500"]);
+    assert!(o.status.success());
+    let out = stdout(&o);
+    assert!(out.contains("variant A"));
+    assert!(out.contains("ulp"));
+}
+
+#[test]
+fn table_dump() {
+    let o = run(&["table", "--p", "8", "--limit", "4"]);
+    assert!(o.status.success());
+    let out = stdout(&o);
+    assert!(out.contains("reciprocal ROM p=8"));
+    assert!(out.contains("max |D*K - 1|"));
+}
+
+#[test]
+fn serve_native_small() {
+    let o = run(&["serve", "--requests", "2000", "--backend", "native"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let out = stdout(&o);
+    assert!(out.contains("2000/2000 ok"));
+    assert!(out.contains("divide"));
+}
+
+#[test]
+fn stream_table() {
+    let o = run(&["stream", "--max-steps", "3", "--ops", "100"]);
+    assert!(o.status.success());
+    let out = stdout(&o);
+    assert!(out.contains("back-to-back stream"));
+    assert!(out.contains("Feedback"));
+    assert!(out.contains("0.077")); // k=3 feedback: 1/13 ops per cycle
+}
+
+#[test]
+fn sqrt_simulation() {
+    let o = run(&["sqrt", "--d", "2.0", "--gantt"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let out = stdout(&o);
+    assert!(out.contains("cycles   : 30"));
+    assert!(out.contains("MULT X"));
+}
+
+#[test]
+fn unknown_backend_errors() {
+    let o = run(&["serve", "--requests", "10", "--backend", "tpu"]);
+    assert!(!o.status.success());
+}

@@ -1,0 +1,159 @@
+//! Failure-injection tests for the coordinator: flaky executors, slow
+//! executors, worker-init failures, client disappearance. The service
+//! must degrade predictably — errors are counted, successes stay
+//! correct, and nothing deadlocks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use goldschmidt::coordinator::{BatcherConfig, FpuService, OpKind, ServiceConfig};
+use goldschmidt::runtime::{Executor, NativeExecutor};
+
+fn config() -> ServiceConfig {
+    ServiceConfig {
+        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(100) },
+        queue_depth: 4096,
+        workers: 2,
+        poll: Duration::from_micros(50),
+    }
+}
+
+/// Executor that fails every `period`-th batch.
+struct Flaky {
+    inner: NativeExecutor,
+    calls: Arc<AtomicU64>,
+    period: u64,
+}
+
+impl Executor for Flaky {
+    fn batch_ladder(&self, op: OpKind) -> Vec<usize> {
+        self.inner.batch_ladder(op)
+    }
+    fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>> {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        if n % self.period == self.period - 1 {
+            bail!("injected failure on call {n}");
+        }
+        self.inner.execute(op, a, b)
+    }
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+}
+
+#[test]
+fn flaky_executor_fails_batches_not_service() {
+    let calls = Arc::new(AtomicU64::new(0));
+    let calls2 = calls.clone();
+    let svc = FpuService::start(config(), move || {
+        Ok(Box::new(Flaky {
+            inner: NativeExecutor::with_defaults(),
+            calls: calls2.clone(),
+            period: 3,
+        }) as Box<dyn Executor>)
+    })
+    .unwrap();
+    let handle = svc.handle();
+    let rxs: Vec<_> = (0..3000)
+        .map(|i| handle.submit(OpKind::Divide, (i + 1) as f32, 1.0).unwrap())
+        .collect();
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv() {
+            Ok(resp) => {
+                // successes must still be CORRECT
+                assert_eq!(resp.value, (i + 1) as f32);
+                ok += 1;
+            }
+            Err(_) => failed += 1, // dropped reply = failed batch
+        }
+    }
+    assert_eq!(ok + failed, 3000);
+    assert!(failed > 0, "injection never fired");
+    assert!(ok > 0, "service never succeeded");
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.total_errors(), failed);
+    assert_eq!(snap.op(OpKind::Divide).requests, ok);
+    svc.shutdown();
+}
+
+#[test]
+fn all_workers_fail_init_service_still_shuts_down() {
+    // factory succeeds for the probe, then fails in every worker thread:
+    // requests are dropped (receivers error) but nothing hangs
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let svc = FpuService::start(config(), move || {
+        let n = c2.fetch_add(1, Ordering::SeqCst);
+        if n == 0 {
+            // the probe call on the caller thread
+            Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+        } else {
+            bail!("worker init exploded")
+        }
+    })
+    .unwrap();
+    let handle = svc.handle();
+    let rx = handle.submit(OpKind::Sqrt, 4.0, 1.0).unwrap();
+    // batch gets dispatched to a dead worker channel; reply sender drops
+    let got = rx.recv_timeout(Duration::from_secs(5));
+    assert!(got.is_err(), "no worker should have answered");
+    svc.shutdown(); // must not hang
+}
+
+#[test]
+fn client_dropping_receiver_does_not_wedge_service() {
+    let svc = FpuService::start(config(), || {
+        Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+    })
+    .unwrap();
+    let handle = svc.handle();
+    // fire-and-forget: drop the receivers immediately
+    for i in 0..500 {
+        let rx = handle.submit(OpKind::Divide, i as f32 + 1.0, 2.0).unwrap();
+        drop(rx);
+    }
+    // the service must still answer a live client afterwards
+    assert_eq!(handle.divide(8.0, 2.0).unwrap(), 4.0);
+    let snap = svc.metrics().snapshot();
+    assert!(snap.op(OpKind::Divide).requests >= 501);
+    svc.shutdown();
+}
+
+#[test]
+fn nan_and_special_operands_served_not_crashed() {
+    let svc = FpuService::start(config(), || {
+        Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+    })
+    .unwrap();
+    let handle = svc.handle();
+    assert!(handle.divide(f32::NAN, 1.0).unwrap().is_nan());
+    assert_eq!(handle.divide(1.0, 0.0).unwrap(), f32::INFINITY);
+    assert!(handle.sqrt(-1.0).unwrap().is_nan());
+    assert_eq!(handle.rsqrt(0.0).unwrap(), f32::INFINITY);
+    // subnormal operands
+    let tiny = f32::from_bits(1);
+    let q = handle.divide(tiny, 2.0).unwrap();
+    assert!(q == 0.0 || q.is_sign_positive());
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_under_load_loses_nothing_accepted() {
+    let svc = FpuService::start(config(), || {
+        Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+    })
+    .unwrap();
+    let handle = svc.handle();
+    let rxs: Vec<_> = (0..2000)
+        .map(|i| handle.submit(OpKind::Divide, (i + 1) as f32, 1.0).unwrap())
+        .collect();
+    svc.shutdown(); // drain path must flush every accepted request
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("accepted request must be answered");
+        assert_eq!(resp.value, (i + 1) as f32);
+    }
+}

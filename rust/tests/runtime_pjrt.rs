@@ -1,0 +1,115 @@
+//! Integration: the PJRT executor against the real AOT artifacts.
+//!
+//! These tests require `make artifacts` to have run (they skip with a
+//! note otherwise, so `cargo test` stays green on a fresh clone).
+
+use std::path::PathBuf;
+
+use goldschmidt::coordinator::OpKind;
+use goldschmidt::goldschmidt::Config;
+use goldschmidt::runtime::{Executor, NativeExecutor, PjrtExecutor};
+use goldschmidt::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_loads_and_divides() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
+    let mut rng = Xoshiro256::new(1);
+    let batch = ex.batch_ladder(OpKind::Divide)[0];
+    let a: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.01, 1000.0)).collect();
+    let b: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.01, 1000.0)).collect();
+    let out = ex.execute(OpKind::Divide, &a, Some(&b)).expect("execute");
+    assert_eq!(out.len(), batch);
+    for i in 0..batch {
+        let want = a[i] / b[i];
+        let ulp = (out[i].to_bits() as i64 - want.to_bits() as i64).abs();
+        assert!(ulp <= 1, "i={i} {}/{} = {} want {want}", a[i], b[i], out[i]);
+    }
+}
+
+#[test]
+fn pjrt_sqrt_and_rsqrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
+    let mut rng = Xoshiro256::new(2);
+    for op in [OpKind::Sqrt, OpKind::Rsqrt] {
+        let batch = ex.batch_ladder(op)[0];
+        let a: Vec<f32> = (0..batch).map(|_| rng.range_f32(1e-6, 1e6)).collect();
+        let out = ex.execute(op, &a, None).expect("execute");
+        for i in 0..batch {
+            let want = match op {
+                OpKind::Sqrt => (a[i] as f64).sqrt() as f32,
+                OpKind::Rsqrt => (1.0 / (a[i] as f64).sqrt()) as f32,
+                _ => unreachable!(),
+            };
+            let ulp = (out[i].to_bits() as i64 - want.to_bits() as i64).abs();
+            assert!(ulp <= 1, "{op:?} i={i} x={} got {} want {want}", a[i], out[i]);
+        }
+    }
+}
+
+#[test]
+fn pjrt_every_artifact_compiles_and_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
+    ex.warmup().expect("compile all artifacts");
+    let specs: Vec<(OpKind, usize, u32)> = ex
+        .manifest()
+        .specs()
+        .iter()
+        .map(|s| (s.op, s.batch, s.arity))
+        .collect();
+    for (op, batch, arity) in specs {
+        let a = vec![2.0f32; batch];
+        let b = vec![4.0f32; batch];
+        let out = ex
+            .execute(op, &a, if arity == 2 { Some(&b) } else { None })
+            .unwrap_or_else(|e| panic!("{op:?} b{batch}: {e:#}"));
+        let want = match op {
+            OpKind::Divide => 0.5,
+            OpKind::Sqrt => std::f32::consts::SQRT_2,
+            OpKind::Rsqrt => 1.0 / std::f32::consts::SQRT_2,
+        };
+        for (i, &v) in out.iter().enumerate() {
+            assert!((v - want).abs() < 1e-6, "{op:?} b{batch} [{i}]: {v} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_executor_closely() {
+    // The AOT path (f64-internal kernel, ldexp scaling) and the rust
+    // fixed-point datapath (30 frac bits) both round to f32: they must
+    // agree to <= 1 ulp on normal operands.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtExecutor::from_dir(&dir).expect("load artifacts");
+    let mut native = NativeExecutor::new(Config::default(), &[64]);
+    let mut rng = Xoshiro256::new(3);
+    let batch = 64usize;
+    let a: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.1, 100.0)).collect();
+    let b: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.1, 100.0)).collect();
+    let x = pjrt.execute(OpKind::Divide, &a, Some(&b)).unwrap();
+    let y = native.execute(OpKind::Divide, &a, Some(&b)).unwrap();
+    for i in 0..batch {
+        let ulp = (x[i].to_bits() as i64 - y[i].to_bits() as i64).abs();
+        assert!(ulp <= 1, "i={i}: pjrt {} vs native {}", x[i], y[i]);
+    }
+}
+
+#[test]
+fn pjrt_rejects_wrong_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
+    let a = vec![1.0f32; 37]; // not on the ladder
+    assert!(ex.execute(OpKind::Divide, &a, Some(&a.clone())).is_err());
+}

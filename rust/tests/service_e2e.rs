@@ -1,0 +1,177 @@
+//! Integration: the full coordinator stack (router -> batcher -> worker
+//! pool -> executor) under realistic load, with the native executor (no
+//! artifacts needed) and — when artifacts exist — the PJRT executor.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use goldschmidt::coordinator::{
+    BatcherConfig, FpuService, OpKind, ServiceConfig,
+};
+use goldschmidt::runtime::{Executor, NativeExecutor, PjrtExecutor};
+use goldschmidt::workload::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};
+
+fn native_factory() -> anyhow::Result<Box<dyn Executor>> {
+    Ok(Box::new(NativeExecutor::with_defaults()))
+}
+
+fn quick_config() -> ServiceConfig {
+    ServiceConfig {
+        batcher: BatcherConfig { max_batch: 256, max_wait: Duration::from_micros(200) },
+        queue_depth: 8192,
+        workers: 2,
+        poll: Duration::from_micros(50),
+    }
+}
+
+#[test]
+fn mixed_workload_all_correct() {
+    let svc = FpuService::start(quick_config(), native_factory).unwrap();
+    let handle = svc.handle();
+    let spec = WorkloadSpec {
+        count: 5000,
+        divide_frac: 0.6,
+        dist: OperandDist::LogNormal { mu: 0.0, sigma: 3.0 },
+        arrivals: ArrivalProcess::Closed,
+        seed: 42,
+    };
+    let reqs = WorkloadGen::generate(spec);
+    let mut expected = Vec::with_capacity(reqs.len());
+    let mut rxs = Vec::with_capacity(reqs.len());
+    for r in &reqs {
+        let want = match r.op {
+            OpKind::Divide => r.a as f64 / r.b as f64,
+            OpKind::Sqrt => (r.a as f64).sqrt(),
+            OpKind::Rsqrt => 1.0 / (r.a as f64).sqrt(),
+        } as f32;
+        expected.push(want);
+        rxs.push(handle.submit(r.op, r.a, r.b).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        let ulp = (resp.value.to_bits() as i64 - expected[i].to_bits() as i64).abs();
+        assert!(ulp <= 1, "req {i}: got {} want {}", resp.value, expected[i]);
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.total_requests(), 5000);
+    assert_eq!(snap.total_errors(), 0);
+    // batching must actually happen under closed-loop load
+    let div = snap.op(OpKind::Divide);
+    assert!(
+        (div.requests as f64) / (div.batches as f64) > 2.0,
+        "mean batch size ~1: batching broken ({} reqs / {} batches)",
+        div.requests,
+        div.batches
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_try_submit() {
+    // tiny queue + slow consumption: try_submit must eventually report Full
+    struct Slow(NativeExecutor);
+    impl Executor for Slow {
+        fn batch_ladder(&self, op: OpKind) -> Vec<usize> {
+            self.0.batch_ladder(op)
+        }
+        fn execute(
+            &mut self,
+            op: OpKind,
+            a: &[f32],
+            b: Option<&[f32]>,
+        ) -> anyhow::Result<Vec<f32>> {
+            std::thread::sleep(Duration::from_millis(20));
+            self.0.execute(op, a, b)
+        }
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+    }
+    let config = ServiceConfig {
+        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(1) },
+        queue_depth: 8,
+        workers: 1,
+        poll: Duration::from_micros(20),
+    };
+    let svc = FpuService::start(config, || {
+        Ok(Box::new(Slow(NativeExecutor::with_defaults())))
+    })
+    .unwrap();
+    let handle = svc.handle();
+    let mut saw_full = false;
+    let mut rxs = Vec::new();
+    for i in 0..5000 {
+        match handle.try_submit(OpKind::Divide, i as f32 + 1.0, 1.0).unwrap() {
+            Some(rx) => rxs.push(rx),
+            None => {
+                saw_full = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_full, "queue never filled — backpressure not engaging");
+    // everything accepted must still complete
+    for rx in rxs {
+        assert!(rx.recv().is_ok());
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn poisson_open_loop_latency_sane() {
+    let svc = FpuService::start(quick_config(), native_factory).unwrap();
+    let handle = svc.handle();
+    let spec = WorkloadSpec {
+        count: 2000,
+        divide_frac: 1.0,
+        arrivals: ArrivalProcess::Closed, // pacing emulated below
+        ..Default::default()
+    };
+    let mut rxs = Vec::new();
+    for (i, r) in WorkloadGen::generate(spec).iter().enumerate() {
+        rxs.push(handle.submit(r.op, r.a, r.b).unwrap());
+        if i % 100 == 0 {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        // end-to-end latency must be bounded by batching wait + exec
+        assert!(resp.latency_ns < 2_000_000_000, "latency {}ns", resp.latency_ns);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_service_end_to_end() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let config = ServiceConfig {
+        batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(500) },
+        queue_depth: 8192,
+        workers: 1,
+        poll: Duration::from_micros(50),
+    };
+    let svc = FpuService::start(config, move || {
+        let mut ex = PjrtExecutor::from_dir(&dir)?;
+        ex.warmup()?;
+        Ok(Box::new(ex) as Box<dyn Executor>)
+    })
+    .unwrap();
+    let handle = svc.handle();
+    let mut rxs = Vec::new();
+    for i in 1..=1000u32 {
+        rxs.push(handle.submit(OpKind::Divide, (3 * i) as f32, 3.0).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("pjrt response");
+        assert_eq!(resp.value, (i + 1) as f32);
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.op(OpKind::Divide).requests, 1000);
+    assert_eq!(snap.total_errors(), 0);
+    svc.shutdown();
+}

@@ -1,0 +1,147 @@
+//! Integration: the cycle-accurate simulator versus the functional
+//! library, across configurations — the evidence for the paper's central
+//! compatibility claim (the feedback datapath computes *exactly* what
+//! the unrolled one does, cycle schedule aside).
+
+use goldschmidt::arith::fixed::{Fixed, Rounding};
+use goldschmidt::arith::twos::ComplementKind;
+use goldschmidt::check::{self, ensure};
+use goldschmidt::goldschmidt::{divide_mantissa, Config};
+use goldschmidt::sim::{BaselineDatapath, Design, FeedbackDatapath};
+use goldschmidt::tables::ReciprocalTable;
+use goldschmidt::util::rng::Xoshiro256;
+
+fn rand_mantissa(rng: &mut Xoshiro256, frac: u32) -> Fixed {
+    Fixed::from_bits((1u64 << frac) + rng.next_below(1u64 << frac), frac)
+}
+
+#[test]
+fn both_designs_match_library_across_configs() {
+    for &steps in &[0u32, 1, 2, 3, 4] {
+        for &p in &[6u32, 8, 10] {
+            for &frac in &[20u32, 30, 40] {
+                for rounding in [Rounding::Nearest, Rounding::Truncate] {
+                    for complement in [ComplementKind::Exact, ComplementKind::OnesComplement] {
+                        let cfg = Config::default()
+                            .with_steps(steps)
+                            .with_table_p(p)
+                            .with_frac(frac)
+                            .with_rounding(rounding)
+                            .with_complement(complement);
+                        let table = ReciprocalTable::new(p);
+                        let bl = BaselineDatapath::new(table.clone(), cfg);
+                        let fb = FeedbackDatapath::new(table.clone(), cfg);
+                        let mut rng = Xoshiro256::new(steps as u64 * 1000 + p as u64);
+                        for _ in 0..20 {
+                            let n = rand_mantissa(&mut rng, frac);
+                            let d = rand_mantissa(&mut rng, frac);
+                            let lib = divide_mantissa(&n, &d, &table, &cfg);
+                            let b = bl.run(&n, &d);
+                            let f = fb.run(&n, &d);
+                            assert_eq!(
+                                b.quotient.bits(),
+                                lib.quotient().bits(),
+                                "baseline vs lib: steps={steps} p={p} frac={frac} {rounding:?} {complement:?}"
+                            );
+                            assert_eq!(
+                                f.quotient.bits(),
+                                lib.quotient().bits(),
+                                "feedback vs lib: steps={steps} p={p} frac={frac} {rounding:?} {complement:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cycle_counts_invariant_to_operands() {
+    // the schedule is data-independent: any operand pair takes the same
+    // number of cycles (no early-out, as in real hardware)
+    let cfg = Config::default();
+    let table = ReciprocalTable::new(cfg.table_p);
+    let mut rng = Xoshiro256::new(77);
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..50 {
+        let n = rand_mantissa(&mut rng, cfg.frac);
+        let d = rand_mantissa(&mut rng, cfg.frac);
+        seen.insert(Design::Feedback.simulate(&n, &d, &table, &cfg).cycles);
+    }
+    assert_eq!(seen.len(), 1, "data-dependent cycle count: {seen:?}");
+}
+
+#[test]
+fn property_sim_equals_library() {
+    check::property("feedback sim == library (bit-exact)", |g| {
+        let steps = g.usize_in(0, 5) as u32;
+        let cfg = Config::default().with_steps(steps);
+        let table = ReciprocalTable::new(cfg.table_p);
+        let fb = FeedbackDatapath::new(table.clone(), cfg);
+        let frac = cfg.frac;
+        let n = Fixed::from_bits((1u64 << frac) + g.u64_below(1u64 << frac), frac);
+        let d = Fixed::from_bits((1u64 << frac) + g.u64_below(1u64 << frac), frac);
+        let sim = fb.run(&n, &d);
+        let lib = divide_mantissa(&n, &d, &table, &cfg);
+        ensure(
+            sim.quotient.bits() == lib.quotient().bits(),
+            format!("steps={steps} n={} d={}", n.to_f64(), d.to_f64()),
+        )
+    });
+}
+
+#[test]
+fn fig4_cycle_counts_all_step_counts() {
+    // DESIGN.md §2 anchors, as an integration matrix
+    let table = ReciprocalTable::new(10);
+    let n = Fixed::from_f64(1.5, 30);
+    let d = Fixed::from_f64(1.25, 30);
+    for k in 1..=6u32 {
+        let cfg = Config::default().with_steps(k);
+        let b = Design::Baseline.simulate(&n, &d, &table, &cfg).cycles;
+        let f = Design::Feedback.simulate(&n, &d, &table, &cfg).cycles;
+        assert_eq!(b, 5 + 4 * k as u64, "baseline k={k}");
+        let expected_delta = if k >= 2 { 1 } else { 0 };
+        assert_eq!(f, b + expected_delta, "feedback k={k}");
+    }
+}
+
+#[test]
+fn traces_never_have_structural_hazards() {
+    check::property("no unit overlap in traces", |g| {
+        let steps = g.usize_in(0, 6) as u32;
+        let cfg = Config::default().with_steps(steps);
+        let table = ReciprocalTable::new(cfg.table_p);
+        let frac = cfg.frac;
+        let n = Fixed::from_bits((1u64 << frac) + g.u64_below(1u64 << frac), frac);
+        let d = Fixed::from_bits((1u64 << frac) + g.u64_below(1u64 << frac), frac);
+        for design in [Design::Baseline, Design::Feedback] {
+            let r = design.simulate(&n, &d, &table, &cfg);
+            let overlaps = r.trace.overlaps();
+            if !overlaps.is_empty() {
+                return Err(format!("{design:?} steps={steps}: {overlaps:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn exhaustive_small_width_sweep() {
+    // at frac=12 / p=6 exhaustively sweep a coarse operand grid and
+    // check bit-equality of the three computations
+    let cfg = Config::default().with_table_p(6).with_frac(12).with_steps(2);
+    let table = ReciprocalTable::new(6);
+    let bl = BaselineDatapath::new(table.clone(), cfg);
+    let fb = FeedbackDatapath::new(table.clone(), cfg);
+    for ni in (0..(1u64 << 12)).step_by(64) {
+        let n = Fixed::from_bits((1 << 12) + ni, 12);
+        for di in (0..(1u64 << 12)).step_by(128) {
+            let d = Fixed::from_bits((1 << 12) + di, 12);
+            let lib = divide_mantissa(&n, &d, &table, &cfg).quotient().bits();
+            assert_eq!(bl.run(&n, &d).quotient.bits(), lib);
+            assert_eq!(fb.run(&n, &d).quotient.bits(), lib);
+        }
+    }
+}
