@@ -9,6 +9,7 @@ use goldschmidt::bench::{black_box, Bencher};
 use goldschmidt::coordinator::request::{OpKind, Request};
 use goldschmidt::coordinator::{BatcherConfig, DynamicBatcher, Router};
 use goldschmidt::goldschmidt::{divide_f32, divide_mantissa, divide_mantissa_quick, Config};
+use goldschmidt::kernel::GoldschmidtContext;
 use goldschmidt::sim::{BaselineDatapath, FeedbackDatapath};
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::rng::Xoshiro256;
@@ -51,6 +52,47 @@ fn main() {
     });
     b.bench("feedback datapath run_quiet", || {
         black_box(fb.run_quiet(&n, &d));
+    });
+    b.print_report();
+
+    // batch kernels: the SoA serving hot path vs the scalar map it
+    // replaced, at the top of the AOT ladder (1024 lanes)
+    let mut b = Bencher::new("hotpath/batch-kernel");
+    let ctx = GoldschmidtContext::new(cfg);
+    let mut rng = Xoshiro256::new(0xBEEF);
+    const LANES: usize = 1024;
+    let na: Vec<f32> = (0..LANES).map(|_| rng.range_f32(1e-6, 1e6)).collect();
+    let da: Vec<f32> = (0..LANES).map(|_| rng.range_f32(1e-6, 1e6)).collect();
+    let mut out = vec![0.0f32; LANES];
+    b.bench("scalar map divide_f32 x1024 (seed path)", || {
+        for ((o, &n), &d) in out.iter_mut().zip(&na).zip(&da) {
+            *o = divide_f32(n, d, &table, &cfg);
+        }
+        black_box(&out);
+    });
+    b.bench("divide_batch_f32 x1024 (serial)", || {
+        ctx.divide_batch_f32_serial(&na, &da, &mut out);
+        black_box(&out);
+    });
+    b.bench("divide_batch_f32 x1024 (worker split)", || {
+        ctx.divide_batch_f32(&na, &da, &mut out);
+        black_box(&out);
+    });
+    b.bench("sqrt_batch_f32 x1024 (serial)", || {
+        ctx.sqrt_batch_f32_serial(&na, &mut out);
+        black_box(&out);
+    });
+    b.bench("rsqrt_batch_f32 x1024 (serial)", || {
+        ctx.rsqrt_batch_f32_serial(&na, &mut out);
+        black_box(&out);
+    });
+    let ctx64 = GoldschmidtContext::new(Config::double());
+    let na64: Vec<f64> = na.iter().map(|&v| v as f64).collect();
+    let da64: Vec<f64> = da.iter().map(|&v| v as f64).collect();
+    let mut out64 = vec![0.0f64; LANES];
+    b.bench("divide_batch_f64 x1024 (serial)", || {
+        ctx64.divide_batch_f64_serial(&na64, &da64, &mut out64);
+        black_box(&out64);
     });
     b.print_report();
 

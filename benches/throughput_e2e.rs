@@ -1,13 +1,24 @@
 //! End-to-end service throughput/latency: the headline serving numbers
 //! recorded in EXPERIMENTS.md §E2E. Sweeps batching policy and worker
-//! count on the native executor, and runs the PJRT backend when the
-//! artifacts exist.
+//! count on the native executor, measures the batch-kernel hot path
+//! against the scalar-map path it replaced, and runs the PJRT backend
+//! when built with `--features pjrt` and the artifacts exist.
+//!
+//! Machine-readable output: every run writes `BENCH_throughput.json`
+//! into the working directory (override the path with
+//! `BENCH_THROUGHPUT_JSON`), so the perf trajectory is tracked across
+//! PRs.
 
-use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use goldschmidt::bench::{black_box, Bencher};
 use goldschmidt::coordinator::{BatcherConfig, FpuService, OpKind, ServiceConfig};
-use goldschmidt::runtime::{Executor, NativeExecutor, PjrtExecutor};
+use goldschmidt::goldschmidt::{divide_f32, Config};
+use goldschmidt::kernel::GoldschmidtContext;
+use goldschmidt::runtime::{Executor, NativeExecutor};
+use goldschmidt::tables::ReciprocalTable;
+use goldschmidt::util::json::Json;
+use goldschmidt::util::rng::Xoshiro256;
 use goldschmidt::util::tablefmt::{fmt_ns, Align, Table};
 use goldschmidt::workload::{OperandDist, WorkloadGen, WorkloadSpec};
 
@@ -25,24 +36,19 @@ struct RunResult {
     mean_batch: f64,
 }
 
-fn run_once(config: ServiceConfig, backend: &str, artifacts: Option<PathBuf>) -> RunResult {
+impl RunResult {
+    fn json(&self) -> Json {
+        Json::obj([
+            ("reqs_per_s", Json::from(self.reqs_per_s)),
+            ("mean_lat_ns", Json::from(self.mean_lat_ns)),
+            ("p99_lat_ns", Json::from(self.p99_lat_ns)),
+            ("mean_batch", Json::from(self.mean_batch)),
+        ])
+    }
+}
+
+fn drive(svc: FpuService) -> RunResult {
     let count = requests();
-    let svc = match backend {
-        "native" => FpuService::start(config, || {
-            Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
-        })
-        .expect("start"),
-        "pjrt" => {
-            let dir = artifacts.expect("artifacts dir");
-            FpuService::start(config, move || {
-                let mut ex = PjrtExecutor::from_dir(&dir)?;
-                ex.warmup()?;
-                Ok(Box::new(ex) as Box<dyn Executor>)
-            })
-            .expect("start pjrt")
-        }
-        _ => unreachable!(),
-    };
     let handle = svc.handle();
     // prime: force executor construction + (for PJRT) AOT compilation in
     // every worker before the timed window — startup cost is reported by
@@ -81,10 +87,80 @@ fn run_once(config: ServiceConfig, backend: &str, artifacts: Option<PathBuf>) ->
     result
 }
 
+fn run_native(config: ServiceConfig) -> RunResult {
+    let svc = FpuService::start(config, || {
+        Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+    })
+    .expect("start");
+    drive(svc)
+}
+
+#[cfg(feature = "pjrt")]
+fn run_pjrt(config: ServiceConfig, dir: std::path::PathBuf) -> RunResult {
+    use goldschmidt::runtime::PjrtExecutor;
+    let svc = FpuService::start(config, move || {
+        let mut ex = PjrtExecutor::from_dir(&dir)?;
+        ex.warmup()?;
+        Ok(Box::new(ex) as Box<dyn Executor>)
+    })
+    .expect("start pjrt");
+    drive(svc)
+}
+
+/// Single-thread batch-1024 divide: the scalar map the seed executor
+/// used vs the SoA batch kernel (serial and with the worker split).
+/// Returns the JSON section (speedups included).
+fn kernel_comparison() -> Json {
+    let cfg = Config::default();
+    let table = ReciprocalTable::new(cfg.table_p);
+    let ctx = GoldschmidtContext::new(cfg);
+    let mut rng = Xoshiro256::new(0x7EE);
+    const LANES: usize = 1024;
+    let n: Vec<f32> = (0..LANES).map(|_| rng.range_f32(1e-6, 1e6)).collect();
+    let d: Vec<f32> = (0..LANES).map(|_| rng.range_f32(1e-6, 1e6)).collect();
+    let mut out = vec![0.0f32; LANES];
+
+    let mut b = Bencher::new("e2e/divide-batch-1024");
+    b.bench("scalar map (seed path)", || {
+        for ((o, &a), &bb) in out.iter_mut().zip(&n).zip(&d) {
+            *o = divide_f32(a, bb, &table, &cfg);
+        }
+        black_box(&out);
+    });
+    b.bench("batch kernel (serial)", || {
+        ctx.divide_batch_f32_serial(&n, &d, &mut out);
+        black_box(&out);
+    });
+    b.bench("batch kernel (worker split)", || {
+        ctx.divide_batch_f32(&n, &d, &mut out);
+        black_box(&out);
+    });
+    b.print_report();
+
+    let rs = b.results();
+    let (scalar, serial, parallel) = (rs[0].mean_ns(), rs[1].mean_ns(), rs[2].mean_ns());
+    let speedup_serial = scalar / serial;
+    let speedup_parallel = scalar / parallel;
+    println!(
+        "batch-1024 divide: {speedup_serial:.2}x single-thread, \
+         {speedup_parallel:.2}x with worker split\n"
+    );
+    Json::obj([
+        ("lanes", Json::from(LANES)),
+        ("scalar_map_ns_per_batch", Json::from(scalar)),
+        ("batch_serial_ns_per_batch", Json::from(serial)),
+        ("batch_parallel_ns_per_batch", Json::from(parallel)),
+        ("speedup_serial", Json::from(speedup_serial)),
+        ("speedup_parallel", Json::from(speedup_parallel)),
+    ])
+}
+
 fn main() {
-    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let have_artifacts = artifacts.join("manifest.txt").exists();
     let n = requests();
+    let mut report: Vec<(&'static str, Json)> = vec![("requests", Json::from(n))];
+
+    // ---- batch-kernel hot path vs scalar map -------------------------
+    report.push(("kernel_divide_1024", kernel_comparison()));
 
     // ---- batching policy sweep (native backend) ----------------------
     let mut t = Table::new(
@@ -92,7 +168,9 @@ fn main() {
         &["max_batch", "max_wait", "req/s", "mean lat", "p99 lat", "req/batch"],
     )
     .aligns(&[Align::Right; 6]);
-    for &(max_batch, wait_us) in &[(1usize, 0u64), (64, 100), (256, 200), (1024, 200), (1024, 1000)] {
+    let mut sweep = Vec::new();
+    for &(max_batch, wait_us) in &[(1usize, 0u64), (64, 100), (256, 200), (1024, 200), (1024, 1000)]
+    {
         let config = ServiceConfig {
             batcher: BatcherConfig {
                 max_batch,
@@ -102,7 +180,7 @@ fn main() {
             workers: 1,
             poll: Duration::from_micros(50),
         };
-        let r = run_once(config, "native", None);
+        let r = run_native(config);
         t.row(&[
             max_batch.to_string(),
             format!("{wait_us}us"),
@@ -111,8 +189,15 @@ fn main() {
             fmt_ns(r.p99_lat_ns as f64),
             format!("{:.1}", r.mean_batch),
         ]);
+        let mut row = r.json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("max_batch".into(), Json::from(max_batch));
+            map.insert("max_wait_us".into(), Json::from(wait_us));
+        }
+        sweep.push(row);
     }
     t.print();
+    report.push(("policy_sweep", Json::arr(sweep)));
 
     // ---- worker scaling ------------------------------------------------
     let mut t = Table::new(
@@ -120,6 +205,7 @@ fn main() {
         &["workers", "req/s", "mean lat"],
     )
     .aligns(&[Align::Right; 3]);
+    let mut scaling = Vec::new();
     for &workers in &[1usize, 2, 4] {
         let config = ServiceConfig {
             batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
@@ -127,36 +213,67 @@ fn main() {
             workers,
             poll: Duration::from_micros(50),
         };
-        let r = run_once(config, "native", None);
+        let r = run_native(config);
         t.row(&[workers.to_string(), format!("{:.0}", r.reqs_per_s), fmt_ns(r.mean_lat_ns)]);
+        let mut row = r.json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("workers".into(), Json::from(workers));
+        }
+        scaling.push(row);
     }
     t.print();
+    report.push(("worker_scaling", Json::arr(scaling)));
 
     // ---- PJRT backend (the real three-layer path) -----------------------
-    if have_artifacts {
-        let mut t = Table::new(
-            "PJRT backend (AOT pallas/jax HLO executables)",
-            &["workers", "req/s", "mean lat", "p99 lat", "req/batch"],
-        )
-        .aligns(&[Align::Right; 5]);
-        for &workers in &[1usize, 2] {
-            let config = ServiceConfig {
-                batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
-                queue_depth: 65_536,
-                workers,
-                poll: Duration::from_micros(50),
-            };
-            let r = run_once(config, "pjrt", Some(artifacts.clone()));
-            t.row(&[
-                workers.to_string(),
-                format!("{:.0}", r.reqs_per_s),
-                fmt_ns(r.mean_lat_ns),
-                fmt_ns(r.p99_lat_ns as f64),
-                format!("{:.1}", r.mean_batch),
-            ]);
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifacts.join("manifest.txt").exists() {
+            let mut t = Table::new(
+                "PJRT backend (AOT pallas/jax HLO executables)",
+                &["workers", "req/s", "mean lat", "p99 lat", "req/batch"],
+            )
+            .aligns(&[Align::Right; 5]);
+            let mut pjrt_rows = Vec::new();
+            for &workers in &[1usize, 2] {
+                let config = ServiceConfig {
+                    batcher: BatcherConfig {
+                        max_batch: 1024,
+                        max_wait: Duration::from_micros(200),
+                    },
+                    queue_depth: 65_536,
+                    workers,
+                    poll: Duration::from_micros(50),
+                };
+                let r = run_pjrt(config, artifacts.clone());
+                t.row(&[
+                    workers.to_string(),
+                    format!("{:.0}", r.reqs_per_s),
+                    fmt_ns(r.mean_lat_ns),
+                    fmt_ns(r.p99_lat_ns as f64),
+                    format!("{:.1}", r.mean_batch),
+                ]);
+                let mut row = r.json();
+                if let Json::Obj(map) = &mut row {
+                    map.insert("workers".into(), Json::from(workers));
+                }
+                pjrt_rows.push(row);
+            }
+            t.print();
+            report.push(("pjrt", Json::arr(pjrt_rows)));
+        } else {
+            println!("(PJRT sweep skipped: run `make artifacts` first)");
         }
-        t.print();
-    } else {
-        println!("(PJRT sweep skipped: run `make artifacts` first)");
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(PJRT sweep skipped: built without the `pjrt` feature)");
+
+    // ---- machine-readable report ----------------------------------------
+    let path = std::env::var("BENCH_THROUGHPUT_JSON")
+        .unwrap_or_else(|_| "BENCH_throughput.json".to_string());
+    let json = Json::obj(report);
+    match std::fs::write(&path, json.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
     }
 }

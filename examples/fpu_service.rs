@@ -17,15 +17,40 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use goldschmidt::coordinator::{BatcherConfig, FpuService, OpKind, ServiceConfig};
-use goldschmidt::runtime::{Executor, NativeExecutor, PjrtExecutor};
+use goldschmidt::runtime::NativeExecutor;
+#[cfg(feature = "pjrt")]
+use goldschmidt::runtime::{Executor, PjrtExecutor};
 use goldschmidt::util::tablefmt::{fmt_ns, Align, Table};
 use goldschmidt::workload::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};
 
 const REQUESTS: usize = 200_000;
 
+/// Start on the PJRT backend when the feature is compiled in and the
+/// AOT artifacts exist; otherwise serve through the native batch
+/// kernels so the example always runs.
+fn start_backend(
+    config: ServiceConfig,
+    artifacts: &std::path::Path,
+) -> anyhow::Result<(FpuService, &'static str)> {
+    #[cfg(feature = "pjrt")]
+    if artifacts.join("manifest.txt").exists() {
+        let dir = artifacts.to_path_buf();
+        let svc = FpuService::start(config, move || {
+            let mut ex = PjrtExecutor::from_dir(&dir)?;
+            ex.warmup()?; // compile all executables before serving
+            Ok(Box::new(ex) as Box<dyn Executor>)
+        })?;
+        return Ok((svc, "pjrt-cpu (AOT pallas/jax HLO)"));
+    }
+    #[cfg(not(feature = "pjrt"))]
+    let _ = artifacts;
+    let svc =
+        FpuService::start(config, || Ok(Box::new(NativeExecutor::with_defaults()) as _))?;
+    Ok((svc, "native fixed-point (batched SoA kernels)"))
+}
+
 fn main() -> anyhow::Result<()> {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let have_artifacts = artifacts.join("manifest.txt").exists();
 
     let config = ServiceConfig {
         batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
@@ -34,19 +59,7 @@ fn main() -> anyhow::Result<()> {
         poll: Duration::from_micros(50),
     };
 
-    let backend;
-    let svc = if have_artifacts {
-        backend = "pjrt-cpu (AOT pallas/jax HLO)";
-        let dir = artifacts.clone();
-        FpuService::start(config, move || {
-            let mut ex = PjrtExecutor::from_dir(&dir)?;
-            ex.warmup()?; // compile all executables before serving
-            Ok(Box::new(ex) as Box<dyn Executor>)
-        })?
-    } else {
-        backend = "native fixed-point (artifacts missing: run `make artifacts`)";
-        FpuService::start(config, || Ok(Box::new(NativeExecutor::with_defaults()) as _))?
-    };
+    let (svc, backend) = start_backend(config, &artifacts)?;
     println!("backend: {backend}");
 
     // realistic mixed workload: 70% divide / 15% sqrt / 15% rsqrt,

@@ -29,6 +29,38 @@ pub struct Fixed {
     frac: u32,
 }
 
+/// Largest bit pattern of a `Q2.frac` word: `2^(frac+2) - 1`, computed
+/// without the `1 << 64` overflow that the naive form hits at
+/// `frac == Fixed::MAX_FRAC` (a full 64-bit word).
+#[inline]
+pub(crate) fn q2_max(frac: u32) -> u64 {
+    debug_assert!(frac <= Fixed::MAX_FRAC);
+    u64::MAX >> (Fixed::MAX_FRAC - frac)
+}
+
+/// Narrow a wide product by `shift` bits under a rounding mode,
+/// returning the full-width result (callers saturate to their word
+/// before casting down, so an out-of-range product clamps instead of
+/// silently wrapping through a `u64` cast). The `Nearest` half-ulp
+/// constant is `2^(shift-1)`, which is well-defined only for
+/// `shift >= 1`; at `shift == 0` nothing is dropped, so the value
+/// passes through unchanged (the old `1 << (shift - 1)` form was
+/// shift-underflow UB at zero).
+#[inline]
+pub(crate) fn narrow_u128(wide: u128, shift: u32, mode: Rounding) -> u128 {
+    match mode {
+        Rounding::Truncate => wide >> shift,
+        Rounding::Nearest => {
+            if shift == 0 {
+                wide
+            } else {
+                // wide <= (2^64-1)^2 leaves headroom for the half-ulp add
+                (wide + (1u128 << (shift - 1))) >> shift
+            }
+        }
+    }
+}
+
 impl Fixed {
     /// Maximum supported fraction width.
     pub const MAX_FRAC: u32 = 62;
@@ -36,10 +68,7 @@ impl Fixed {
     /// From raw bits (must fit in 2 integer + `frac` fraction bits).
     pub fn from_bits(bits: u64, frac: u32) -> Self {
         assert!(frac <= Self::MAX_FRAC, "frac {frac} > {}", Self::MAX_FRAC);
-        assert!(
-            bits < (1u64 << (frac + 2)),
-            "bits {bits:#x} out of Q2.{frac} range"
-        );
+        assert!(bits <= q2_max(frac), "bits {bits:#x} out of Q2.{frac} range");
         Self { bits, frac }
     }
 
@@ -49,8 +78,7 @@ impl Fixed {
         assert!((0.0..4.0).contains(&x), "{x} out of [0,4)");
         let scaled = (x * (1u64 << frac) as f64).round() as u64;
         // x*2^frac may round up to exactly 4.0*2^frac; clamp into range
-        let max = (1u64 << (frac + 2)) - 1;
-        Self { bits: scaled.min(max), frac }
+        Self { bits: scaled.min(q2_max(frac)), frac }
     }
 
     /// The constant 1.0 at the given fraction width.
@@ -87,15 +115,11 @@ impl Fixed {
         if frac >= self.frac {
             Self { bits: self.bits << (frac - self.frac), frac }
         } else {
+            // shift >= 1 here; the u128 widening keeps the Nearest
+            // half-ulp add overflow-free even for full 64-bit words
             let shift = self.frac - frac;
-            let bits = match mode {
-                Rounding::Truncate => self.bits >> shift,
-                Rounding::Nearest => {
-                    (self.bits + (1u64 << (shift - 1))) >> shift
-                }
-            };
-            let max = (1u64 << (frac + 2)) - 1;
-            Self { bits: bits.min(max), frac }
+            let bits = narrow_u128(self.bits as u128, shift, mode);
+            Self { bits: bits.min(q2_max(frac) as u128) as u64, frac }
         }
     }
 
@@ -104,15 +128,8 @@ impl Fixed {
     pub fn mul(&self, rhs: &Fixed, mode: Rounding) -> Self {
         assert_eq!(self.frac, rhs.frac, "mixed fraction widths");
         let wide = (self.bits as u128) * (rhs.bits as u128); // Q4.(2f)
-        let shift = self.frac;
-        let bits = match mode {
-            Rounding::Truncate => (wide >> shift) as u64,
-            Rounding::Nearest => {
-                ((wide + (1u128 << (shift - 1))) >> shift) as u64
-            }
-        };
-        let max = (1u64 << (self.frac + 2)) - 1;
-        Self { bits: bits.min(max), frac: self.frac }
+        let bits = narrow_u128(wide, self.frac, mode);
+        Self { bits: bits.min(q2_max(self.frac) as u128) as u64, frac: self.frac }
     }
 
     /// Exact `2 - self` (the paper's two's-complement block output).
@@ -128,7 +145,7 @@ impl Fixed {
     /// `self in (0, 2]`. This is the carry-free hardware shortcut EIMMW
     /// notes; it under-shoots by exactly one ulp.
     pub fn two_minus_ones_complement(&self) -> Self {
-        let mask = (1u64 << (self.frac + 2)) - 1;
+        let mask = q2_max(self.frac);
         let two = 1u64 << (self.frac + 1);
         assert!(self.bits <= two && self.bits > 0);
         // (2 - x - ulp) mod 4 == NOT(x) truncated to the word, for x<=2
@@ -139,8 +156,7 @@ impl Fixed {
     /// Saturating add (datapath adders saturate rather than wrap).
     pub fn add(&self, rhs: &Fixed) -> Self {
         assert_eq!(self.frac, rhs.frac);
-        let max = (1u64 << (self.frac + 2)) - 1;
-        Self { bits: (self.bits + rhs.bits).min(max), frac: self.frac }
+        Self { bits: self.bits.saturating_add(rhs.bits).min(q2_max(self.frac)), frac: self.frac }
     }
 
     /// Subtract (panics on underflow — the datapath never goes negative).
@@ -297,5 +313,83 @@ mod tests {
         let max = Fixed::from_bits((1 << 12) - 1, 10);
         let one = Fixed::one(10);
         assert_eq!(max.add(&one).bits(), (1 << 12) - 1);
+    }
+
+    // ---- rounding-shift regression tests at boundary widths ----------
+    //
+    // frac == 1 narrows to frac == 0 (shift hits the Nearest half-ulp
+    // minimum), frac == 51 is the widest exact-f64 width, frac == 62 is
+    // MAX_FRAC where the word occupies all 64 bits and the naive
+    // `1 << (frac + 2)` bound / `bits + half` add both overflow.
+
+    #[test]
+    fn mul_nearest_well_defined_at_zero_shift() {
+        // frac == 0: the product keeps all bits; Nearest must not
+        // compute `1 << (0 - 1)`
+        let a = Fixed::from_bits(3, 0); // 3.0 in Q2.0
+        let b = Fixed::from_bits(1, 0); // 1.0
+        assert_eq!(a.mul(&b, Rounding::Nearest).bits(), 3);
+        assert_eq!(a.mul(&b, Rounding::Truncate).bits(), 3);
+        // 3.0 * 3.0 = 9.0 saturates to the Q2.0 max (3)
+        assert_eq!(a.mul(&a, Rounding::Nearest).bits(), 3);
+    }
+
+    #[test]
+    fn boundary_width_frac1() {
+        let a = Fixed::from_bits(3, 1); // 1.5 in Q2.1
+        let p = a.mul(&a, Rounding::Nearest); // 2.25 -> rounds at 1 bit
+        assert_eq!(p.bits(), 5, "1.5^2 = 2.25 -> 2.5 (round half up)");
+        assert_eq!(a.mul(&a, Rounding::Truncate).bits(), 4); // -> 2.0
+        // narrowing 1 -> 0 exercises shift == 1 in with_frac
+        assert_eq!(a.with_frac(0, Rounding::Nearest).bits(), 2);
+        assert_eq!(a.with_frac(0, Rounding::Truncate).bits(), 1);
+    }
+
+    #[test]
+    fn boundary_width_frac51() {
+        let frac = 51u32;
+        let a = Fixed::from_bits((1u64 << frac) | 1, frac); // 1 + ulp
+        let b = Fixed::from_bits(3u64 << (frac - 1), frac); // 1.5
+        let want = ((a.bits() as u128 * b.bits() as u128) >> frac) as u64;
+        assert_eq!(a.mul(&b, Rounding::Truncate).bits(), want);
+        let n = a.mul(&b, Rounding::Nearest).bits();
+        assert!(n == want || n == want + 1);
+    }
+
+    #[test]
+    fn boundary_width_frac62_no_overflow() {
+        let frac = Fixed::MAX_FRAC;
+        // the largest representable word: bits == u64::MAX (just under 4.0)
+        let max = Fixed::from_bits(u64::MAX, frac);
+        assert_eq!(max.frac(), frac);
+        // saturating ops at the top of the range must not wrap or panic
+        assert_eq!(max.add(&Fixed::one(frac)).bits(), u64::MAX);
+        let sq = max.mul(&max, Rounding::Nearest);
+        assert_eq!(sq.bits(), u64::MAX, "(~4)^2 saturates");
+        // narrowing the full 64-bit word rounds without overflowing the
+        // half-ulp add (the old `bits + (1 << (shift-1))` form wrapped)
+        let narrowed = max.with_frac(30, Rounding::Nearest);
+        assert_eq!(narrowed.bits(), (1u64 << 32) - 1, "saturates at Q2.30 max");
+        // 2.0 survives a 62 -> 51 -> 62 round-trip exactly
+        let two = Fixed::two(frac);
+        let back = two.with_frac(51, Rounding::Nearest).with_frac(frac, Rounding::Nearest);
+        assert_eq!(back.bits(), two.bits());
+    }
+
+    #[test]
+    fn with_frac_nearest_matches_u128_reference() {
+        check::property("with_frac nearest == u128 round-half-up", |g| {
+            let from = g.usize_in(1, 63) as u32;
+            let to = g.usize_in(0, from as usize) as u32;
+            let bits = g.u64_below(q2_max(from));
+            let a = Fixed::from_bits(bits, from);
+            let shift = from - to;
+            let want =
+                (((bits as u128 + (1u128 << (shift - 1))) >> shift) as u64).min(q2_max(to));
+            ensure(
+                a.with_frac(to, Rounding::Nearest).bits() == want,
+                format!("from={from} to={to} bits={bits:#x}"),
+            )
+        });
     }
 }

@@ -81,6 +81,19 @@ pub fn divide_mantissa_quick(
     cfg: &Config,
 ) -> Fixed {
     let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+    divide_mantissa_quick_in(n, d, table, cfg, &complement)
+}
+
+/// [`divide_mantissa_quick`] with the complement block threaded in, so
+/// repeated callers (the batched kernel context, the serving executor)
+/// construct it once per configuration instead of once per division.
+pub fn divide_mantissa_quick_in(
+    n: &Fixed,
+    d: &Fixed,
+    table: &ReciprocalTable,
+    cfg: &Config,
+    complement: &ComplementBlock,
+) -> Fixed {
     let k1 = table.lookup(d);
     let mut q = n.mul(&k1, cfg.rounding);
     let mut r = d.mul(&k1, cfg.rounding);
@@ -94,16 +107,43 @@ pub fn divide_mantissa_quick(
 
 /// Full IEEE f32 division through the Goldschmidt mantissa datapath.
 pub fn divide_f32(n: f32, d: f32, table: &ReciprocalTable, cfg: &Config) -> f32 {
-    fp::divide_via(n, d, cfg.frac, |nm, dm| divide_mantissa_quick(&nm, &dm, table, cfg))
+    let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+    divide_f32_in(n, d, table, cfg, &complement)
+}
+
+/// [`divide_f32`] with the complement block threaded in (the batched
+/// kernel context constructs it once per configuration).
+pub fn divide_f32_in(
+    n: f32,
+    d: f32,
+    table: &ReciprocalTable,
+    cfg: &Config,
+    complement: &ComplementBlock,
+) -> f32 {
+    fp::divide_via(n, d, cfg.frac, |nm, dm| {
+        divide_mantissa_quick_in(&nm, &dm, table, cfg, complement)
+    })
 }
 
 /// Full IEEE f64 division — EIMMW-2000's own target format. Requires a
 /// double-precision configuration (`frac >= 56`, i.e. 52 mantissa bits
 /// plus >= 4 guard bits; `Config::double()` provides one).
 pub fn divide_f64(n: f64, d: f64, table: &ReciprocalTable, cfg: &Config) -> f64 {
+    let complement = ComplementBlock::new(cfg.frac, cfg.complement);
+    divide_f64_in(n, d, table, cfg, &complement)
+}
+
+/// [`divide_f64`] with the complement block threaded in.
+pub fn divide_f64_in(
+    n: f64,
+    d: f64,
+    table: &ReciprocalTable,
+    cfg: &Config,
+    complement: &ComplementBlock,
+) -> f64 {
     assert!(cfg.frac >= 56, "f64 needs frac >= 56 (got {})", cfg.frac);
     crate::arith::fp64::divide_via64(n, d, cfg.frac, |nm, dm| {
-        divide_mantissa_quick(&nm, &dm, table, cfg)
+        divide_mantissa_quick_in(&nm, &dm, table, cfg, complement)
     })
 }
 

@@ -21,5 +21,11 @@ pub mod sqrt;
 pub mod variants;
 
 pub use config::Config;
-pub use division::{divide_f32, divide_f64, divide_mantissa, divide_mantissa_quick, DivisionTrace};
-pub use sqrt::{rsqrt_f32, rsqrt_mantissa, sqrt_f32, sqrt_mantissa};
+pub use division::{
+    divide_f32, divide_f32_in, divide_f64, divide_f64_in, divide_mantissa,
+    divide_mantissa_quick, divide_mantissa_quick_in, DivisionTrace,
+};
+pub use sqrt::{
+    rsqrt_f32, rsqrt_f32_in, rsqrt_mantissa, sqrt_f32, sqrt_f32_in, sqrt_mantissa,
+    sqrt_rsqrt_mantissa_quick_in,
+};

@@ -58,20 +58,53 @@ pub fn sqrt_trace(d: &Fixed, table: &RsqrtTable, cfg: &Config) -> SqrtTrace {
     trace
 }
 
+/// Allocation-free coupled iteration: same arithmetic as [`sqrt_trace`]
+/// but returns only the final `(g, h)` pair, with the `3/2` constant
+/// threaded in so repeated callers (the batched kernel context, the
+/// serving executor) construct it once per configuration instead of
+/// once per operation.
+pub fn sqrt_rsqrt_mantissa_quick_in(
+    d: &Fixed,
+    table: &RsqrtTable,
+    cfg: &Config,
+    three_half: &Fixed,
+) -> (Fixed, Fixed) {
+    assert_eq!(d.frac(), cfg.frac, "d width != config");
+    assert_eq!(table.p(), cfg.table_p, "table width != config");
+    let y0 = table.lookup(d);
+    let mut g = d.mul(&y0, cfg.rounding);
+    let mut h = Fixed::from_bits(y0.bits() >> 1, cfg.frac); // y0 / 2: a shift
+    for _ in 0..cfg.steps {
+        let gh = g.mul(&h, cfg.rounding);
+        let factor = three_half.sub(&gh);
+        g = g.mul(&factor, cfg.rounding);
+        h = h.mul(&factor, cfg.rounding);
+    }
+    (g, h)
+}
+
 /// sqrt on a mantissa in `[1, 4)`: returns `g_final in [1, 2)`.
 pub fn sqrt_mantissa(d: &Fixed, table: &RsqrtTable, cfg: &Config) -> Fixed {
-    *sqrt_trace(d, table, cfg).g.last().expect("g0 exists")
+    let three_half = Fixed::from_f64(1.5, cfg.frac);
+    sqrt_rsqrt_mantissa_quick_in(d, table, cfg, &three_half).0
 }
 
 /// rsqrt on a mantissa in `[1, 4)`: returns `2 * h_final in (1/2, 1]`.
 pub fn rsqrt_mantissa(d: &Fixed, table: &RsqrtTable, cfg: &Config) -> Fixed {
-    let h = *sqrt_trace(d, table, cfg).h.last().expect("h0 exists");
+    let three_half = Fixed::from_f64(1.5, cfg.frac);
+    let h = sqrt_rsqrt_mantissa_quick_in(d, table, cfg, &three_half).1;
     Fixed::from_bits(h.bits() << 1, cfg.frac) // 2h: a shift
 }
 
 /// Full IEEE f32 sqrt. Negative inputs give NaN, zero gives zero,
 /// +inf gives +inf.
 pub fn sqrt_f32(x: f32, table: &RsqrtTable, cfg: &Config) -> f32 {
+    sqrt_f32_in(x, table, cfg, &Fixed::from_f64(1.5, cfg.frac))
+}
+
+/// [`sqrt_f32`] with the `3/2` iteration constant threaded in (the
+/// batched kernel context constructs it once per configuration).
+pub fn sqrt_f32_in(x: f32, table: &RsqrtTable, cfg: &Config, three_half: &Fixed) -> f32 {
     match fp::classify(x) {
         FpClass::Nan => f32::NAN,
         FpClass::Zero => if x.is_sign_negative() { -0.0 } else { 0.0 },
@@ -89,7 +122,7 @@ pub fn sqrt_f32(x: f32, table: &RsqrtTable, cfg: &Config) -> f32 {
             } else {
                 (Fixed::from_bits(u.mant.bits() << 1, cfg.frac), (u.exp - 1) / 2)
             };
-            let s = sqrt_mantissa(&d, table, cfg);
+            let s = sqrt_rsqrt_mantissa_quick_in(&d, table, cfg, three_half).0;
             fp::pack(false, half_exp, &s)
         }
     }
@@ -97,6 +130,11 @@ pub fn sqrt_f32(x: f32, table: &RsqrtTable, cfg: &Config) -> f32 {
 
 /// Full IEEE f32 reciprocal square root.
 pub fn rsqrt_f32(x: f32, table: &RsqrtTable, cfg: &Config) -> f32 {
+    rsqrt_f32_in(x, table, cfg, &Fixed::from_f64(1.5, cfg.frac))
+}
+
+/// [`rsqrt_f32`] with the `3/2` iteration constant threaded in.
+pub fn rsqrt_f32_in(x: f32, table: &RsqrtTable, cfg: &Config, three_half: &Fixed) -> f32 {
     match fp::classify(x) {
         FpClass::Nan => f32::NAN,
         FpClass::Zero => f32::INFINITY,
@@ -111,7 +149,8 @@ pub fn rsqrt_f32(x: f32, table: &RsqrtTable, cfg: &Config) -> f32 {
             } else {
                 (Fixed::from_bits(u.mant.bits() << 1, cfg.frac), (u.exp - 1) / 2)
             };
-            let y = rsqrt_mantissa(&d, table, cfg);
+            let h = sqrt_rsqrt_mantissa_quick_in(&d, table, cfg, three_half).1;
+            let y = Fixed::from_bits(h.bits() << 1, cfg.frac); // 2h: a shift
             fp::pack(false, -half_exp, &y)
         }
     }
@@ -228,6 +267,23 @@ mod tests {
         assert_eq!(rsqrt_f32(0.0, &table, &cfg), f32::INFINITY);
         assert_eq!(rsqrt_f32(f32::INFINITY, &table, &cfg), 0.0);
         assert!(rsqrt_f32(-4.0, &table, &cfg).is_nan());
+    }
+
+    #[test]
+    fn quick_path_equals_trace_path() {
+        check::property("sqrt quick == trace", |g| {
+            let cfg = Config::default().with_steps(g.usize_in(0, 6) as u32);
+            let table = RsqrtTable::new(cfg.table_p);
+            let d = Fixed::from_f64(g.f64_in(1.0, 4.0), cfg.frac);
+            let t = sqrt_trace(&d, &table, &cfg);
+            let three_half = Fixed::from_f64(1.5, cfg.frac);
+            let (gq, hq) = sqrt_rsqrt_mantissa_quick_in(&d, &table, &cfg, &three_half);
+            ensure(
+                gq.bits() == t.g.last().expect("g0").bits()
+                    && hq.bits() == t.h.last().expect("h0").bits(),
+                format!("d={}", d.to_f64()),
+            )
+        });
     }
 
     #[test]

@@ -1,0 +1,455 @@
+//! SoA batch kernels over [`GoldschmidtContext`]: decompose a whole
+//! batch into sign / exponent / mantissa planes, run the Goldschmidt
+//! iterations as tight lane loops, then repack.
+//!
+//! Layout per batch (divide shown; sqrt/rsqrt analogous with one input
+//! plane):
+//!
+//! ```text
+//!   f32 inputs ──decompose──> meta plane  (orig index, sign, exponent)
+//!                             q plane: u64 mantissa words   (MULT 1)
+//!                             r plane: u64 mantissa words   (MULT 2)
+//!   step loop (outer) x lane loop (inner):
+//!       K = 2 - r[i]          (complement block, one subtract)
+//!       q[i] *= K; r[i] *= K  (the paper's parallel multiplier pair)
+//!   q plane ──repack──> f32 outputs (via the shared IEEE boundary)
+//! ```
+//!
+//! Special-class lanes (NaN / Inf / zero / negative-for-sqrt) are
+//! answered during decomposition through the context's scalar entry
+//! points — whose special arms are the very code the scalar path runs —
+//! and never enter the planes, keeping the lane loops free of classify
+//! branches. Rounding mode and complement circuit are const-generic
+//! parameters, so each configuration gets a monomorphized loop with no
+//! per-lane branching.
+//!
+//! For batches of [`PAR_MIN_LANES`] lanes or more the kernels split the
+//! planes across scoped worker threads (lanes are independent, so the
+//! split is bit-transparent); a 1024-wide flush saturates every core.
+
+use crate::arith::fixed::{narrow_u128, Fixed, Rounding};
+use crate::arith::twos::ComplementKind;
+
+use super::context::{
+    classify, classify64, pack, pack64, unpack, unpack64, FpClass, GoldschmidtContext,
+};
+
+/// Batches at or above this lane count engage the scoped-thread split.
+pub const PAR_MIN_LANES: usize = 256;
+
+/// Minimum lanes handed to one worker (bounds the split fan-out so tiny
+/// shards never dominate thread overhead).
+const MIN_LANES_PER_WORKER: usize = 128;
+
+/// Per-lane metadata carried around the mantissa planes.
+#[derive(Clone, Copy)]
+struct LaneMeta {
+    /// Position in the original batch.
+    index: usize,
+    /// Result sign bit.
+    sign: bool,
+    /// Result exponent (pre-normalization).
+    exp: i32,
+}
+
+/// How many workers a batch of `lanes` lanes should split across.
+/// `cores` is the context's cached hardware parallelism; callers running
+/// several executors concurrently (the coordinator's worker pool) keep
+/// total threads bounded because each split is also capped by the lane
+/// count, and scoped threads exist only for the batch's duration.
+fn worker_count(cores: usize, lanes: usize) -> usize {
+    if lanes < PAR_MIN_LANES {
+        return 1;
+    }
+    cores.clamp(1, lanes.div_ceil(MIN_LANES_PER_WORKER))
+}
+
+/// Run `f` over aligned chunks of a two-input batch on scoped threads.
+fn split2<T, F>(workers: usize, a: &[T], b: &[T], out: &mut [T], f: F)
+where
+    T: Copy + Send + Sync,
+    F: Fn(&[T], &[T], &mut [T]) + Sync,
+{
+    let per = a.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        for ((ac, bc), oc) in a.chunks(per).zip(b.chunks(per)).zip(out.chunks_mut(per)) {
+            let f = &f;
+            s.spawn(move || f(ac, bc, oc));
+        }
+    });
+}
+
+/// Run `f` over aligned chunks of a one-input batch on scoped threads.
+fn split1<T, F>(workers: usize, a: &[T], out: &mut [T], f: F)
+where
+    T: Copy + Send + Sync,
+    F: Fn(&[T], &mut [T]) + Sync,
+{
+    let per = a.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ac, oc) in a.chunks(per).zip(out.chunks_mut(per)) {
+            let f = &f;
+            s.spawn(move || f(ac, oc));
+        }
+    });
+}
+
+/// Map the const-generic rounding flag back to the enum (constant-folds
+/// after monomorphization, so the lane loops carry no mode branch).
+#[inline(always)]
+fn mode<const NEAREST: bool>() -> Rounding {
+    if NEAREST {
+        Rounding::Nearest
+    } else {
+        Rounding::Truncate
+    }
+}
+
+/// One datapath multiply: exact wide product narrowed to `frac` bits —
+/// the same `narrow_u128` + saturate the scalar [`Fixed::mul`] uses, so
+/// lane results are bit-identical by construction.
+#[inline(always)]
+fn mul_lane(a: u64, b: u64, frac: u32, sat: u64, m: Rounding) -> u64 {
+    let wide = (a as u128) * (b as u128);
+    narrow_u128(wide, frac, m).min(sat as u128) as u64
+}
+
+/// The division iteration over mantissa planes. `q`/`r` arrive holding
+/// the numerator / denominator mantissa words and leave holding the
+/// final quotient / residual.
+fn div_mantissa_lanes<const NEAREST: bool, const ONES: bool>(
+    ctx: &GoldschmidtContext,
+    q: &mut [u64],
+    r: &mut [u64],
+) {
+    debug_assert_eq!(q.len(), r.len());
+    let m = mode::<NEAREST>();
+    let (frac, sat, one, two) = (ctx.frac, ctx.sat, ctx.one, ctx.two);
+    let idx_shift = frac - ctx.cfg.table_p;
+    let rom = ctx.recip_lanes.as_slice();
+    // Step 1: ROM lookup + the parallel multiplier pair, per lane.
+    for (qi, ri) in q.iter_mut().zip(r.iter_mut()) {
+        let d = *ri;
+        debug_assert!((one..two).contains(&d), "mantissa outside [1,2)");
+        let k1 = rom[((d - one) >> idx_shift) as usize];
+        *qi = mul_lane(*qi, k1, frac, sat, m);
+        *ri = mul_lane(d, k1, frac, sat, m);
+    }
+    // Step 2, `steps` times: complement + multiplier pair, per lane.
+    for _ in 0..ctx.steps {
+        for (qi, ri) in q.iter_mut().zip(r.iter_mut()) {
+            debug_assert!(*ri <= two && *ri > 0);
+            let k = if ONES {
+                two.wrapping_sub(*ri).wrapping_sub(1) & sat
+            } else {
+                two - *ri
+            };
+            *qi = mul_lane(*qi, k, frac, sat, m);
+            *ri = mul_lane(*ri, k, frac, sat, m);
+        }
+    }
+}
+
+/// The coupled sqrt iteration over mantissa planes. `g` arrives holding
+/// the operand words `d in [1, 4)` and leaves holding `sqrt(d)`; `h`
+/// leaves holding `1/(2 sqrt(d))`.
+fn sqrt_mantissa_lanes<const NEAREST: bool>(
+    ctx: &GoldschmidtContext,
+    g: &mut [u64],
+    h: &mut [u64],
+) {
+    debug_assert_eq!(g.len(), h.len());
+    let m = mode::<NEAREST>();
+    let (frac, sat, one, two) = (ctx.frac, ctx.sat, ctx.one, ctx.two);
+    let p = ctx.cfg.table_p;
+    let half = 1usize << (p - 1);
+    let th = ctx.three_half_bits;
+    let rom = ctx.rsqrt_lanes.as_slice();
+    // y0 lookup + g0 = d*y0, h0 = y0/2 (the halving is a wire shift).
+    for (gi, hi) in g.iter_mut().zip(h.iter_mut()) {
+        let v = *gi;
+        // RsqrtTable::index_of: exponent-parity bit + leading mantissa
+        // fraction bits, replicated on the raw word.
+        let (e0, m_bits, shift) =
+            if v >= two { (1usize, v - two, frac + 1) } else { (0usize, v - one, frac) };
+        let f = ((m_bits << 1) >> (shift + 2 - p)) as usize;
+        let y0 = rom[e0 * half + f.min(half - 1)];
+        *hi = y0 >> 1;
+        *gi = mul_lane(v, y0, frac, sat, m);
+    }
+    // rho steps: factor = 3/2 - g*h, then the multiplier pair.
+    for _ in 0..ctx.steps {
+        for (gi, hi) in g.iter_mut().zip(h.iter_mut()) {
+            let gh = mul_lane(*gi, *hi, frac, sat, m);
+            debug_assert!(gh <= th, "sqrt factor underflow");
+            let factor = th - gh;
+            *gi = mul_lane(*gi, factor, frac, sat, m);
+            *hi = mul_lane(*hi, factor, frac, sat, m);
+        }
+    }
+}
+
+impl GoldschmidtContext {
+    fn div_dispatch(&self, q: &mut [u64], r: &mut [u64]) {
+        match (self.cfg.rounding, self.cfg.complement) {
+            (Rounding::Nearest, ComplementKind::Exact) => {
+                div_mantissa_lanes::<true, false>(self, q, r)
+            }
+            (Rounding::Nearest, ComplementKind::OnesComplement) => {
+                div_mantissa_lanes::<true, true>(self, q, r)
+            }
+            (Rounding::Truncate, ComplementKind::Exact) => {
+                div_mantissa_lanes::<false, false>(self, q, r)
+            }
+            (Rounding::Truncate, ComplementKind::OnesComplement) => {
+                div_mantissa_lanes::<false, true>(self, q, r)
+            }
+        }
+    }
+
+    fn sqrt_dispatch(&self, g: &mut [u64], h: &mut [u64]) {
+        match self.cfg.rounding {
+            Rounding::Nearest => sqrt_mantissa_lanes::<true>(self, g, h),
+            Rounding::Truncate => sqrt_mantissa_lanes::<false>(self, g, h),
+        }
+    }
+
+    // ---- f32 divide ---------------------------------------------------
+
+    /// Batched f32 division, bit-identical per lane to
+    /// [`divide_f32`](crate::goldschmidt::divide_f32). Splits across
+    /// scoped worker threads for batches >= [`PAR_MIN_LANES`].
+    pub fn divide_batch_f32(&self, n: &[f32], d: &[f32], out: &mut [f32]) {
+        assert_eq!(n.len(), d.len(), "divide operand length mismatch");
+        assert_eq!(n.len(), out.len(), "output length mismatch");
+        let workers = worker_count(self.cores, n.len());
+        if workers <= 1 {
+            self.divide_batch_f32_serial(n, d, out);
+        } else {
+            split2(workers, n, d, out, |nc, dc, oc| self.divide_batch_f32_serial(nc, dc, oc));
+        }
+    }
+
+    /// Single-threaded batched f32 division (the per-worker kernel).
+    pub fn divide_batch_f32_serial(&self, n: &[f32], d: &[f32], out: &mut [f32]) {
+        assert_eq!(n.len(), d.len(), "divide operand length mismatch");
+        assert_eq!(n.len(), out.len(), "output length mismatch");
+        let frac = self.frac;
+        let lanes = n.len();
+        let mut meta = Vec::with_capacity(lanes);
+        let mut qm = Vec::with_capacity(lanes);
+        let mut rm = Vec::with_capacity(lanes);
+        for (i, (&nf, &df)) in n.iter().zip(d.iter()).enumerate() {
+            if classify(nf) == FpClass::Finite && classify(df) == FpClass::Finite {
+                let un = unpack(nf, frac);
+                let ud = unpack(df, frac);
+                meta.push(LaneMeta { index: i, sign: un.sign ^ ud.sign, exp: un.exp - ud.exp });
+                qm.push(un.mant.bits());
+                rm.push(ud.mant.bits());
+            } else {
+                // special arms only; the datapath closure is unreachable
+                out[i] = self.divide_f32(nf, df);
+            }
+        }
+        self.div_dispatch(&mut qm, &mut rm);
+        for (m, &qbits) in meta.iter().zip(qm.iter()) {
+            out[m.index] = pack(m.sign, m.exp, &Fixed::from_bits(qbits, frac));
+        }
+    }
+
+    // ---- f64 divide ---------------------------------------------------
+
+    /// Batched f64 division, bit-identical per lane to
+    /// [`divide_f64`](crate::goldschmidt::divide_f64). Requires a
+    /// double-precision configuration (`frac >= 56`).
+    pub fn divide_batch_f64(&self, n: &[f64], d: &[f64], out: &mut [f64]) {
+        assert_eq!(n.len(), d.len(), "divide operand length mismatch");
+        assert_eq!(n.len(), out.len(), "output length mismatch");
+        let workers = worker_count(self.cores, n.len());
+        if workers <= 1 {
+            self.divide_batch_f64_serial(n, d, out);
+        } else {
+            split2(workers, n, d, out, |nc, dc, oc| self.divide_batch_f64_serial(nc, dc, oc));
+        }
+    }
+
+    /// Single-threaded batched f64 division (the per-worker kernel).
+    pub fn divide_batch_f64_serial(&self, n: &[f64], d: &[f64], out: &mut [f64]) {
+        assert_eq!(n.len(), d.len(), "divide operand length mismatch");
+        assert_eq!(n.len(), out.len(), "output length mismatch");
+        assert!(self.frac >= 56, "f64 needs frac >= 56 (got {})", self.frac);
+        let frac = self.frac;
+        let lanes = n.len();
+        let mut meta = Vec::with_capacity(lanes);
+        let mut qm = Vec::with_capacity(lanes);
+        let mut rm = Vec::with_capacity(lanes);
+        for (i, (&nf, &df)) in n.iter().zip(d.iter()).enumerate() {
+            if classify64(nf) == FpClass::Finite && classify64(df) == FpClass::Finite {
+                let un = unpack64(nf, frac);
+                let ud = unpack64(df, frac);
+                meta.push(LaneMeta { index: i, sign: un.sign ^ ud.sign, exp: un.exp - ud.exp });
+                qm.push(un.mant.bits());
+                rm.push(ud.mant.bits());
+            } else {
+                out[i] = self.divide_f64(nf, df);
+            }
+        }
+        self.div_dispatch(&mut qm, &mut rm);
+        for (m, &qbits) in meta.iter().zip(qm.iter()) {
+            out[m.index] = pack64(m.sign, m.exp, &Fixed::from_bits(qbits, frac));
+        }
+    }
+
+    // ---- f32 sqrt / rsqrt ---------------------------------------------
+
+    /// Batched f32 square root, bit-identical per lane to
+    /// [`sqrt_f32`](crate::goldschmidt::sqrt_f32).
+    pub fn sqrt_batch_f32(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len(), "output length mismatch");
+        let workers = worker_count(self.cores, x.len());
+        if workers <= 1 {
+            self.sqrt_batch_f32_serial(x, out);
+        } else {
+            split1(workers, x, out, |xc, oc| self.sqrt_batch_f32_serial(xc, oc));
+        }
+    }
+
+    /// Single-threaded batched f32 square root.
+    pub fn sqrt_batch_f32_serial(&self, x: &[f32], out: &mut [f32]) {
+        self.sqrt_like_serial::<false>(x, out);
+    }
+
+    /// Batched f32 reciprocal square root, bit-identical per lane to
+    /// [`rsqrt_f32`](crate::goldschmidt::rsqrt_f32).
+    pub fn rsqrt_batch_f32(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len(), "output length mismatch");
+        let workers = worker_count(self.cores, x.len());
+        if workers <= 1 {
+            self.rsqrt_batch_f32_serial(x, out);
+        } else {
+            split1(workers, x, out, |xc, oc| self.rsqrt_batch_f32_serial(xc, oc));
+        }
+    }
+
+    /// Single-threaded batched f32 reciprocal square root.
+    pub fn rsqrt_batch_f32_serial(&self, x: &[f32], out: &mut [f32]) {
+        self.sqrt_like_serial::<true>(x, out);
+    }
+
+    /// Shared sqrt/rsqrt kernel: the coupled iteration computes both
+    /// `sqrt` (g plane) and `rsqrt` (h plane); `RECIP` selects which
+    /// plane is packed out.
+    fn sqrt_like_serial<const RECIP: bool>(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len(), "output length mismatch");
+        let frac = self.frac;
+        let lanes = x.len();
+        let mut meta = Vec::with_capacity(lanes);
+        let mut g = Vec::with_capacity(lanes);
+        for (i, &xf) in x.iter().enumerate() {
+            if classify(xf) == FpClass::Finite && xf > 0.0 {
+                let u = unpack(xf, frac);
+                // fold exponent parity exactly as the scalar path does
+                let (d_bits, half_exp) = if u.exp % 2 == 0 {
+                    (u.mant.bits(), u.exp / 2)
+                } else {
+                    (u.mant.bits() << 1, (u.exp - 1) / 2)
+                };
+                meta.push(LaneMeta { index: i, sign: false, exp: half_exp });
+                g.push(d_bits);
+            } else {
+                // NaN / zero / inf / negative: scalar special arms
+                out[i] = if RECIP { self.rsqrt_f32(xf) } else { self.sqrt_f32(xf) };
+            }
+        }
+        let mut h = vec![0u64; g.len()];
+        self.sqrt_dispatch(&mut g, &mut h);
+        if RECIP {
+            for (m, &hbits) in meta.iter().zip(h.iter()) {
+                let y = Fixed::from_bits(hbits << 1, frac); // 2h: a shift
+                out[m.index] = pack(false, -m.exp, &y);
+            }
+        } else {
+            for (m, &gbits) in meta.iter().zip(g.iter()) {
+                out[m.index] = pack(false, m.exp, &Fixed::from_bits(gbits, frac));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goldschmidt::Config;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn known_values() {
+        let ctx = GoldschmidtContext::new(Config::default());
+        let n = [6.0f32, 10.0, 1.5, -8.0];
+        let d = [2.0f32, 4.0, 0.5, 2.0];
+        let mut out = [0.0f32; 4];
+        ctx.divide_batch_f32(&n, &d, &mut out);
+        assert_eq!(out, [3.0, 2.5, 3.0, -4.0]);
+
+        let x = [4.0f32, 9.0, 16.0];
+        let mut s = [0.0f32; 3];
+        ctx.sqrt_batch_f32(&x, &mut s);
+        assert_eq!(s, [2.0, 3.0, 4.0]);
+        let mut r = [0.0f32; 3];
+        ctx.rsqrt_batch_f32(&x, &mut r);
+        assert_eq!(r, [0.5, 1.0 / 3.0, 0.25]);
+    }
+
+    #[test]
+    fn specials_inline_with_finite_lanes() {
+        let ctx = GoldschmidtContext::new(Config::default());
+        let n = [f32::NAN, 1.0, 6.0, 0.0, f32::INFINITY];
+        let d = [2.0f32, 0.0, 2.0, 0.0, 2.0];
+        let mut out = [0.0f32; 5];
+        ctx.divide_batch_f32(&n, &d, &mut out);
+        assert!(out[0].is_nan());
+        assert_eq!(out[1], f32::INFINITY);
+        assert_eq!(out[2], 3.0);
+        assert!(out[3].is_nan()); // 0/0
+        assert_eq!(out[4], f32::INFINITY);
+    }
+
+    #[test]
+    fn parallel_split_matches_serial() {
+        let ctx = GoldschmidtContext::new(Config::default());
+        let mut rng = Xoshiro256::new(0xBA7C);
+        let lanes = 1024; // >= PAR_MIN_LANES: exercises the worker split
+        let n: Vec<f32> = (0..lanes).map(|_| rng.range_f32(1e-8, 1e8)).collect();
+        let d: Vec<f32> = (0..lanes).map(|_| rng.range_f32(1e-8, 1e8)).collect();
+        let mut par = vec![0.0f32; lanes];
+        let mut ser = vec![0.0f32; lanes];
+        ctx.divide_batch_f32(&n, &d, &mut par);
+        ctx.divide_batch_f32_serial(&n, &d, &mut ser);
+        for i in 0..lanes {
+            assert_eq!(par[i].to_bits(), ser[i].to_bits(), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn f64_batch_known_values() {
+        let ctx = GoldschmidtContext::new(Config::double());
+        let n = [6.0f64, -1.0, f64::NAN, 1e300];
+        let d = [2.0f64, 3.0, 1.0, 1e-10];
+        let mut out = [0.0f64; 4];
+        ctx.divide_batch_f64(&n, &d, &mut out);
+        assert_eq!(out[0], 3.0);
+        // the contract is scalar-path equality, not exact division
+        assert_eq!(out[1].to_bits(), ctx.divide_f64(-1.0, 3.0).to_bits());
+        assert!(out[2].is_nan());
+        assert_eq!(out[3], f64::INFINITY); // overflow saturates per IEEE
+    }
+
+    #[test]
+    fn empty_batches_are_fine() {
+        let ctx = GoldschmidtContext::new(Config::default());
+        let mut out: [f32; 0] = [];
+        ctx.divide_batch_f32(&[], &[], &mut out);
+        ctx.sqrt_batch_f32(&[], &mut out);
+        ctx.rsqrt_batch_f32(&[], &mut out);
+    }
+}

@@ -1,0 +1,208 @@
+//! [`GoldschmidtContext`]: per-configuration precomputation for the
+//! batched kernels and the context-threaded scalar paths.
+
+use crate::arith::fixed::{q2_max, Fixed};
+use crate::arith::twos::ComplementBlock;
+use crate::goldschmidt::{division, sqrt, Config};
+use crate::tables::{ReciprocalTable, RsqrtTable};
+
+/// Everything the Goldschmidt datapath derives from a [`Config`],
+/// computed once so the per-batch lane loops contain only shifts,
+/// multiplies and table indexing.
+///
+/// Construction cost is dominated by the two ROMs (2^p entries each);
+/// build one context per configuration and reuse it for the life of the
+/// executor — exactly as the paper's hardware instantiates one ROM +
+/// multiplier pair per divider unit, not one per operation.
+pub struct GoldschmidtContext {
+    pub(super) cfg: Config,
+    pub(super) recip: ReciprocalTable,
+    pub(super) rsqrt: RsqrtTable,
+    /// The complement circuit, constructed once (the scalar hot path
+    /// used to rebuild this on every call).
+    pub(super) complement: ComplementBlock,
+    /// `3/2` at the datapath width (the sqrt iteration constant).
+    pub(super) three_half: Fixed,
+
+    // ---- raw planes for the lane loops --------------------------------
+    /// Fraction width of the datapath words.
+    pub(super) frac: u32,
+    /// Refinement step count.
+    pub(super) steps: u32,
+    /// Saturation bound `2^(frac+2) - 1` (also the one's-complement
+    /// field mask).
+    pub(super) sat: u64,
+    /// `1.0` as raw bits (`1 << frac`).
+    pub(super) one: u64,
+    /// `2.0` as raw bits (`1 << (frac+1)`).
+    pub(super) two: u64,
+    /// `3/2` as raw bits.
+    pub(super) three_half_bits: u64,
+    /// Reciprocal ROM entries pre-shifted to `frac` fraction bits, so a
+    /// lookup is a single array index (no per-call realignment).
+    pub(super) recip_lanes: Vec<u64>,
+    /// Rsqrt ROM entries pre-shifted to `frac` fraction bits.
+    pub(super) rsqrt_lanes: Vec<u64>,
+    /// Available hardware parallelism, read once at construction so the
+    /// per-batch worker split never makes a syscall.
+    pub(super) cores: usize,
+}
+
+impl GoldschmidtContext {
+    /// Build a context (tables included) for a validated configuration.
+    /// Panics on an invalid [`Config`], like the table constructors do.
+    pub fn new(cfg: Config) -> Self {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid Goldschmidt config: {e}");
+        }
+        let recip = ReciprocalTable::new(cfg.table_p);
+        let rsqrt = RsqrtTable::new(cfg.table_p);
+        Self::with_tables(cfg, recip, rsqrt)
+    }
+
+    /// Build a context around existing tables (they must match the
+    /// configuration's ROM width).
+    pub fn with_tables(cfg: Config, recip: ReciprocalTable, rsqrt: RsqrtTable) -> Self {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid Goldschmidt config: {e}");
+        }
+        assert_eq!(recip.p(), cfg.table_p, "reciprocal table width != config");
+        assert_eq!(rsqrt.p(), cfg.table_p, "rsqrt table width != config");
+        let frac = cfg.frac;
+        // Both ROMs store (p+2)-fraction-bit entries; left-align them to
+        // the datapath width once (ReciprocalTable::lookup does this
+        // shift on every call).
+        let align = frac - (cfg.table_p + 2);
+        let recip_lanes: Vec<u64> = (0..recip.len()).map(|j| recip.entry(j) << align).collect();
+        let rsqrt_lanes: Vec<u64> = (0..rsqrt.len()).map(|j| rsqrt.entry(j) << align).collect();
+        let three_half = Fixed::from_f64(1.5, frac);
+        Self {
+            complement: ComplementBlock::new(frac, cfg.complement),
+            three_half,
+            frac,
+            steps: cfg.steps,
+            sat: q2_max(frac),
+            one: 1u64 << frac,
+            two: 1u64 << (frac + 1),
+            three_half_bits: three_half.bits(),
+            recip_lanes,
+            rsqrt_lanes,
+            cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            cfg,
+            recip,
+            rsqrt,
+        }
+    }
+
+    /// The configuration this context was built for.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// The reciprocal ROM.
+    pub fn reciprocal_table(&self) -> &ReciprocalTable {
+        &self.recip
+    }
+
+    /// The rsqrt ROM.
+    pub fn rsqrt_table(&self) -> &RsqrtTable {
+        &self.rsqrt
+    }
+
+    // ---- context-threaded scalar paths --------------------------------
+    //
+    // Same signatures as the free functions minus the table/config
+    // plumbing; these reuse the precomputed complement block and sqrt
+    // constant instead of rebuilding them per call. The batch kernels
+    // route special-class lanes through these (the datapath closure is
+    // unreachable for specials, so results match the scalar path by
+    // construction).
+
+    /// Scalar f32 division with precomputed datapath state.
+    pub fn divide_f32(&self, n: f32, d: f32) -> f32 {
+        division::divide_f32_in(n, d, &self.recip, &self.cfg, &self.complement)
+    }
+
+    /// Scalar f64 division (requires `frac >= 56`).
+    pub fn divide_f64(&self, n: f64, d: f64) -> f64 {
+        division::divide_f64_in(n, d, &self.recip, &self.cfg, &self.complement)
+    }
+
+    /// Scalar f32 square root with precomputed datapath state.
+    pub fn sqrt_f32(&self, x: f32) -> f32 {
+        sqrt::sqrt_f32_in(x, &self.rsqrt, &self.cfg, &self.three_half)
+    }
+
+    /// Scalar f32 reciprocal square root with precomputed state.
+    pub fn rsqrt_f32(&self, x: f32) -> f32 {
+        sqrt::rsqrt_f32_in(x, &self.rsqrt, &self.cfg, &self.three_half)
+    }
+
+    /// Scalar mantissa division reusing the precomputed complement
+    /// block (bit-identical to
+    /// [`divide_mantissa_quick`](crate::goldschmidt::divide_mantissa_quick)).
+    pub fn divide_mantissa(&self, n: &Fixed, d: &Fixed) -> Fixed {
+        division::divide_mantissa_quick_in(n, d, &self.recip, &self.cfg, &self.complement)
+    }
+}
+
+// The fp/fp64 boundary helpers are consumed by batch.rs through this
+// module's re-exports to keep the kernel's import surface in one place.
+pub(super) use crate::arith::fp::{classify, pack, unpack, FpClass};
+pub(super) use crate::arith::fp64::{classify64, pack64, unpack64};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rom_planes_match_table_lookup() {
+        let ctx = GoldschmidtContext::new(Config::default());
+        let frac = ctx.config().frac;
+        // every interval representative: direct index == Fixed lookup
+        for j in 0..ctx.recip.len() {
+            let bits = (1u64 << frac) + ((j as u64) << (frac - ctx.cfg.table_p));
+            let d = Fixed::from_bits(bits, frac);
+            assert_eq!(ctx.recip_lanes[j], ctx.recip.lookup(&d).bits(), "recip j={j}");
+        }
+    }
+
+    #[test]
+    fn constants_match_fixed() {
+        let ctx = GoldschmidtContext::new(Config::default());
+        assert_eq!(ctx.one, Fixed::one(ctx.frac).bits());
+        assert_eq!(ctx.two, Fixed::two(ctx.frac).bits());
+        assert_eq!(ctx.three_half_bits, Fixed::from_f64(1.5, ctx.frac).bits());
+        assert_eq!(ctx.sat, q2_max(ctx.frac));
+    }
+
+    #[test]
+    fn scalar_wrappers_match_free_functions() {
+        use crate::goldschmidt::{divide_f32, rsqrt_f32, sqrt_f32};
+        let cfg = Config::default();
+        let ctx = GoldschmidtContext::new(cfg);
+        for &(n, d) in &[(355.0f32, 113.0f32), (1.0, 3.0), (-8.5, 2.0), (0.0, -0.0)] {
+            let free = divide_f32(n, d, &ctx.recip, &cfg);
+            let threaded = ctx.divide_f32(n, d);
+            assert_eq!(free.to_bits(), threaded.to_bits(), "{n}/{d}");
+        }
+        for &x in &[2.0f32, 9.0, 1e-20, -4.0, f32::INFINITY] {
+            assert_eq!(
+                sqrt_f32(x, &ctx.rsqrt, &cfg).to_bits(),
+                ctx.sqrt_f32(x).to_bits(),
+                "sqrt({x})"
+            );
+            assert_eq!(
+                rsqrt_f32(x, &ctx.rsqrt, &cfg).to_bits(),
+                ctx.rsqrt_f32(x).to_bits(),
+                "rsqrt({x})"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid Goldschmidt config")]
+    fn invalid_config_rejected() {
+        GoldschmidtContext::new(Config::default().with_frac(8));
+    }
+}

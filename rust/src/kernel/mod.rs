@@ -1,0 +1,59 @@
+//! Batched structure-of-arrays (SoA) Goldschmidt engine: the serving
+//! hot path.
+//!
+//! # Why SoA, and why it mirrors the paper's datapath
+//!
+//! The paper's hardware contribution is a *reorganized datapath*: one
+//! ROM lookup feeds a pair of parallel multipliers (MULT 1 computes
+//! `q_{i+1} = q_i * K`, MULT 2 computes `r_{i+1} = r_i * K`) with a
+//! two's-complement block closing the loop. Every operation flowing
+//! through it is independent of every other — Goldschmidt is
+//! "multiplicative and parallelizable", which is exactly the property
+//! this module exploits in software.
+//!
+//! The scalar path ([`crate::goldschmidt::divide_f32`]) processes one
+//! request at a time: unpack IEEE fields, rebuild the complement block,
+//! branch on the rounding mode, iterate, repack. Mapped over a
+//! 1024-wide batch that per-call overhead dominates. The batch kernels
+//! here instead decompose the whole batch into *planes* — a sign plane,
+//! an exponent plane, and a mantissa plane of raw `u64` datapath words —
+//! and run the Goldschmidt iteration as tight lane loops over the
+//! mantissa plane. Each inner loop is the software image of the paper's
+//! multiplier pair: the `q` plane is MULT 1, the `r` plane is MULT 2,
+//! and the complement constant `K = 2 - r` is a single subtract between
+//! them. Steps advance in lockstep across lanes (the outer loop is the
+//! step counter, as in the paper's logic-block schedule), so the body
+//! contains only shifts, `u64`/`u128` multiplies and table indexing —
+//! no asserts, no struct plumbing, no per-lane allocation, and the
+//! rounding mode / complement circuit are lifted to const generics so
+//! the compiler monomorphizes and can auto-vectorize.
+//!
+//! # Components
+//!
+//! * [`GoldschmidtContext`] — everything derivable from a
+//!   [`Config`](crate::goldschmidt::Config) precomputed once:
+//!   reciprocal / rsqrt ROMs pre-shifted to the datapath width, the
+//!   complement constants, the `3/2` sqrt constant, and saturation
+//!   masks. Also exposes scalar entry points that reuse the same
+//!   precomputed state (no per-call `ComplementBlock::new`).
+//! * [`batch`] — the SoA kernels: `divide_batch_f32`, `sqrt_batch_f32`,
+//!   `rsqrt_batch_f32`, and the `fp64` twin `divide_batch_f64`, plus an
+//!   N-way scoped-thread worker split that engages for batches >= 256
+//!   so a 1024-wide flush uses every core.
+//!
+//! # Contract
+//!
+//! Batch kernels are **bit-for-bit identical** to the scalar trace path
+//! for every lane, every rounding mode, every complement circuit and
+//! every step count — IEEE specials (NaN, infinities, signed zeros,
+//! subnormals) included. `rust/tests/kernel_equivalence.rs` enforces
+//! this with property tests; the simulator cross-checks in
+//! `rust/tests/sim_vs_library.rs` then extend transitively to the batch
+//! path. Special-class lanes are routed through the scalar special
+//! arms during decomposition (they never enter the mantissa planes), so
+//! the lane loops stay branch-free over the datapath words.
+
+pub mod batch;
+pub mod context;
+
+pub use context::GoldschmidtContext;

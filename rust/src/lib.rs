@@ -7,9 +7,11 @@
 //! * **Layer 3 (this crate)** — the paper's hardware contribution as a
 //!   cycle-accurate simulator ([`sim`]) with an area model ([`area`]),
 //!   plus the bit-accurate arithmetic substrate ([`arith`], [`tables`],
-//!   [`goldschmidt`], [`baselines`]) and an FPU-service coordinator
-//!   ([`coordinator`]) that serves batched divide/sqrt/rsqrt requests
-//!   through AOT-compiled XLA executables ([`runtime`]).
+//!   [`goldschmidt`], [`baselines`]), the batched SoA serving kernels
+//!   ([`kernel`]) and an FPU-service coordinator ([`coordinator`]) that
+//!   serves batched divide/sqrt/rsqrt requests through the native batch
+//!   kernels or AOT-compiled XLA executables ([`runtime`], the latter
+//!   behind the non-default `pjrt` feature).
 //! * **Layer 2** — `python/compile/model.py`: jax graphs, lowered once
 //!   to HLO text under `artifacts/`.
 //! * **Layer 1** — `python/compile/kernels/`: the Goldschmidt iteration
@@ -29,6 +31,7 @@ pub mod bench;
 pub mod check;
 pub mod coordinator;
 pub mod goldschmidt;
+pub mod kernel;
 pub mod runtime;
 pub mod sim;
 pub mod tables;

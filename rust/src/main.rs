@@ -5,7 +5,9 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use goldschmidt::arith::fixed::Fixed;
 use goldschmidt::arith::twos::ComplementKind;
@@ -13,7 +15,9 @@ use goldschmidt::arith::ulp;
 use goldschmidt::area::Comparison;
 use goldschmidt::coordinator::{BatcherConfig, FpuService, ServiceConfig};
 use goldschmidt::goldschmidt::{variants, Config};
-use goldschmidt::runtime::{NativeExecutor, PjrtExecutor};
+use goldschmidt::runtime::NativeExecutor;
+#[cfg(feature = "pjrt")]
+use goldschmidt::runtime::PjrtExecutor;
 use goldschmidt::sim::Design;
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::cli::Args;
@@ -303,6 +307,37 @@ fn cmd_sqrt(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Start the FPU service on the requested backend. The PJRT backend
+/// only exists when the crate is built with `--features pjrt`; the
+/// offline default build serves through the native batch kernels.
+fn start_service(
+    config: ServiceConfig,
+    backend: &str,
+    artifacts: &std::path::Path,
+) -> Result<FpuService> {
+    match backend {
+        "native" => Ok(FpuService::start(config, || {
+            Ok(Box::new(NativeExecutor::with_defaults()) as _)
+        })?),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let dir = artifacts.to_path_buf();
+            FpuService::start(config, move || {
+                let mut ex = PjrtExecutor::from_dir(&dir)?;
+                ex.warmup()?;
+                Ok(Box::new(ex) as _)
+            })
+            .context("starting PJRT service (run `make artifacts` first?)")
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => {
+            let _ = artifacts;
+            bail!("backend pjrt requires a build with `--features pjrt` (offline builds serve --backend native)")
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.get("requests", 50_000usize).map_err(anyhow::Error::msg)?;
     let backend = args.get_str("backend", "native");
@@ -323,21 +358,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         poll: Duration::from_micros(50),
     };
 
-    let svc = match backend.as_str() {
-        "native" => FpuService::start(config, || {
-            Ok(Box::new(NativeExecutor::with_defaults()) as _)
-        })?,
-        "pjrt" => {
-            let dir = artifacts.clone();
-            FpuService::start(config, move || {
-                let mut ex = PjrtExecutor::from_dir(&dir)?;
-                ex.warmup()?;
-                Ok(Box::new(ex) as _)
-            })
-            .context("starting PJRT service (run `make artifacts` first?)")?
-        }
-        other => bail!("unknown backend {other:?} (native|pjrt)"),
-    };
+    let svc = start_service(config, &backend, &artifacts)?;
 
     let spec = WorkloadSpec {
         count: requests,

@@ -1,24 +1,24 @@
 //! Batched op executors: the boundary between the coordinator and the
 //! compiled compute.
 //!
-//! [`PjrtExecutor`] is the production path: HLO text (lowered once by
-//! `python/compile/aot.py`) is parsed and compiled by the `xla` crate's
-//! PJRT CPU client at startup; execution is a single FFI call per batch.
+//! [`PjrtExecutor`] (behind the non-default `pjrt` feature) is the
+//! XLA path: HLO text (lowered once by `python/compile/aot.py`) is
+//! parsed and compiled by the `xla` crate's PJRT CPU client at startup;
+//! execution is a single FFI call per batch.
 //!
 //! [`NativeExecutor`] is the same interface over the crate's own
-//! bit-accurate Goldschmidt datapath — the mock for coordinator tests
-//! (no artifacts needed) and the comparison baseline in the E2E bench.
+//! bit-accurate Goldschmidt datapath, served through the batched SoA
+//! kernels ([`crate::kernel`]): one [`GoldschmidtContext`] per executor
+//! (ROMs + complement constants precomputed once), lane-parallel batch
+//! execution, and a scoped-thread worker split for large flushes. It is
+//! both the mock for coordinator tests (no artifacts needed) and the
+//! comparison baseline in the E2E bench.
 
-use std::collections::HashMap;
-use std::path::Path;
-
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Context as _, Result};
 
 use crate::coordinator::request::OpKind;
-use crate::goldschmidt::{self, Config};
-use crate::tables::{ReciprocalTable, RsqrtTable};
-
-use super::artifacts::Manifest;
+use crate::goldschmidt::Config;
+use crate::kernel::GoldschmidtContext;
 
 /// A batched executor for the three FPU ops.
 ///
@@ -40,21 +40,24 @@ pub trait Executor {
 
 // ---------------------------------------------------------------- PJRT --
 
-/// Executor over AOT-compiled XLA executables (PJRT CPU).
+/// Executor over AOT-compiled XLA executables (PJRT CPU). Requires the
+/// `pjrt` feature (and the `xla` dependency it implies).
+#[cfg(feature = "pjrt")]
 pub struct PjrtExecutor {
     client: xla::PjRtClient,
-    manifest: Manifest,
+    manifest: super::artifacts::Manifest,
     /// (op, batch) -> compiled executable; compiled lazily on first use
     /// and cached for the life of the executor.
-    executables: HashMap<(OpKind, usize), xla::PjRtLoadedExecutable>,
+    executables: std::collections::HashMap<(OpKind, usize), xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtExecutor {
     /// Create from an artifacts directory (must contain manifest.txt).
-    pub fn from_dir(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
+    pub fn from_dir(dir: &std::path::Path) -> Result<Self> {
+        let manifest = super::artifacts::Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, manifest, executables: HashMap::new() })
+        Ok(Self { client, manifest, executables: std::collections::HashMap::new() })
     }
 
     /// Eagerly compile every artifact (front-loads compile cost so the
@@ -69,7 +72,7 @@ impl PjrtExecutor {
     }
 
     /// The manifest this executor serves.
-    pub fn manifest(&self) -> &Manifest {
+    pub fn manifest(&self) -> &super::artifacts::Manifest {
         &self.manifest
     }
 
@@ -94,6 +97,7 @@ impl PjrtExecutor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executor for PjrtExecutor {
     fn batch_ladder(&self, op: OpKind) -> Vec<usize> {
         self.manifest.batches_for(op)
@@ -136,29 +140,31 @@ impl Executor for PjrtExecutor {
 
 // -------------------------------------------------------------- native --
 
-/// Executor over the crate's own bit-accurate datapath (no artifacts).
+/// Executor over the crate's own bit-accurate datapath (no artifacts),
+/// running the batched SoA kernels with a precomputed
+/// [`GoldschmidtContext`].
 pub struct NativeExecutor {
-    cfg: Config,
-    recip: ReciprocalTable,
-    rsqrt: RsqrtTable,
+    ctx: GoldschmidtContext,
     ladder: Vec<usize>,
 }
 
 impl NativeExecutor {
     /// New native executor with the given datapath configuration and
     /// batch ladder (any sizes work; the ladder only shapes batching).
+    /// The context (ROMs, complement constants, rounding dispatch) is
+    /// built once here — the per-batch path only runs the lane loops.
     pub fn new(cfg: Config, ladder: &[usize]) -> Self {
-        Self {
-            cfg,
-            recip: ReciprocalTable::new(cfg.table_p),
-            rsqrt: RsqrtTable::new(cfg.table_p),
-            ladder: ladder.to_vec(),
-        }
+        Self { ctx: GoldschmidtContext::new(cfg), ladder: ladder.to_vec() }
     }
 
     /// Default: paper configuration, the AOT ladder {64, 256, 1024}.
     pub fn with_defaults() -> Self {
         Self::new(Config::default(), &[64, 256, 1024])
+    }
+
+    /// The precomputed datapath context this executor serves with.
+    pub fn context(&self) -> &GoldschmidtContext {
+        &self.ctx
     }
 }
 
@@ -168,26 +174,19 @@ impl Executor for NativeExecutor {
     }
 
     fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; a.len()];
         match op {
             OpKind::Divide => {
                 let b = b.context("divide needs two operands")?;
                 if b.len() != a.len() {
                     bail!("operand length mismatch");
                 }
-                Ok(a.iter()
-                    .zip(b)
-                    .map(|(&n, &d)| goldschmidt::divide_f32(n, d, &self.recip, &self.cfg))
-                    .collect())
+                self.ctx.divide_batch_f32(a, b, &mut out);
             }
-            OpKind::Sqrt => Ok(a
-                .iter()
-                .map(|&x| goldschmidt::sqrt_f32(x, &self.rsqrt, &self.cfg))
-                .collect()),
-            OpKind::Rsqrt => Ok(a
-                .iter()
-                .map(|&x| goldschmidt::rsqrt_f32(x, &self.rsqrt, &self.cfg))
-                .collect()),
+            OpKind::Sqrt => self.ctx.sqrt_batch_f32(a, &mut out),
+            OpKind::Rsqrt => self.ctx.rsqrt_batch_f32(a, &mut out),
         }
+        Ok(out)
     }
 
     fn name(&self) -> &'static str {
@@ -231,6 +230,22 @@ mod tests {
         assert_eq!(ex.name(), "native-fixed-point");
     }
 
+    #[test]
+    fn batch_path_matches_scalar_map() {
+        use crate::util::rng::Xoshiro256;
+        let mut ex = NativeExecutor::with_defaults();
+        let mut rng = Xoshiro256::new(0xE0);
+        let a: Vec<f32> = (0..1024).map(|_| rng.range_f32(1e-6, 1e6)).collect();
+        let b: Vec<f32> = (0..1024).map(|_| rng.range_f32(1e-6, 1e6)).collect();
+        let out = ex.execute(OpKind::Divide, &a, Some(&b)).unwrap();
+        let ctx = ex.context();
+        for i in 0..a.len() {
+            let want = ctx.divide_f32(a[i], b[i]);
+            assert_eq!(out[i].to_bits(), want.to_bits(), "lane {i}");
+        }
+    }
+
     // PjrtExecutor integration tests live in rust/tests/runtime_pjrt.rs
-    // (they need the artifacts directory built by `make artifacts`).
+    // (they need the artifacts directory built by `make artifacts` and
+    // the `pjrt` feature).
 }

@@ -1,20 +1,24 @@
-//! Runtime: loads the AOT-compiled HLO artifacts (layer 2/1 output) and
-//! executes them on the PJRT CPU client from the rust request path.
+//! Runtime: the batched [`Executor`](executor::Executor) boundary the
+//! coordinator serves through.
 //!
 //! * [`artifacts`] — parses `artifacts/manifest.txt` written by
 //!   `python/compile/aot.py`.
 //! * [`executor`] — the [`Executor`](executor::Executor) trait with two
-//!   implementations: [`PjrtExecutor`](executor::PjrtExecutor) (the real
-//!   thing: HLO text -> `xla::PjRtClient` -> compiled executables) and
-//!   [`NativeExecutor`](executor::NativeExecutor) (the bit-accurate
-//!   rust datapath — used as a mock in tests and as a baseline in the
-//!   E2E benches).
+//!   implementations: [`NativeExecutor`](executor::NativeExecutor) (the
+//!   bit-accurate rust datapath on the batched SoA kernels — the
+//!   default serving backend, no artifacts needed) and, behind the
+//!   non-default `pjrt` feature,
+//!   [`PjrtExecutor`](executor::PjrtExecutor) (HLO text ->
+//!   `xla::PjRtClient` -> compiled executables).
 //!
 //! Python never runs here: the HLO was lowered once at build time
-//! (`make artifacts`).
+//! (`make artifacts`), and the offline build compiles the PJRT path
+//! out entirely.
 
 pub mod artifacts;
 pub mod executor;
 
 pub use artifacts::{ArtifactSpec, Manifest};
-pub use executor::{Executor, NativeExecutor, PjrtExecutor};
+#[cfg(feature = "pjrt")]
+pub use executor::PjrtExecutor;
+pub use executor::{Executor, NativeExecutor};

@@ -1,0 +1,262 @@
+//! The batch-kernel contract: every SoA batch kernel output is
+//! bit-identical to the scalar trace path — all three ops, f32 and f64,
+//! both rounding modes, both complement circuits, steps 0 through 5,
+//! with IEEE specials (NaN, infinities, signed zeros, subnormals)
+//! mixed into the batches. The scalar path is itself cross-checked
+//! against the cycle-accurate simulator in `sim_vs_library.rs`, so
+//! equality here extends that chain to the serving hot path.
+
+use goldschmidt::arith::fixed::Rounding;
+use goldschmidt::arith::twos::ComplementKind;
+use goldschmidt::check::{self, Gen};
+use goldschmidt::goldschmidt::{divide_f32, divide_f64, rsqrt_f32, sqrt_f32, Config};
+use goldschmidt::kernel::GoldschmidtContext;
+use goldschmidt::util::rng::Xoshiro256;
+
+/// A random datapath configuration across the swept parameter space.
+fn random_config(g: &mut Gen) -> Config {
+    Config::default()
+        .with_steps(g.usize_in(0, 6) as u32)
+        .with_rounding(*g.pick(&[Rounding::Nearest, Rounding::Truncate]))
+        .with_complement(*g.pick(&[ComplementKind::Exact, ComplementKind::OnesComplement]))
+}
+
+/// Random f32 over the full bit space: normals, subnormals, zeros,
+/// infinities and NaNs all occur.
+fn any_f32(g: &mut Gen) -> f32 {
+    f32::from_bits(g.bits() as u32)
+}
+
+/// Hand-picked f32 specials and boundary values.
+const SPECIALS_F32: [f32; 12] = [
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    0.0,
+    -0.0,
+    1.0,
+    -1.0,
+    f32::MIN_POSITIVE,        // smallest normal
+    1.0e-40,                  // subnormal
+    -1.0e-42,                 // negative subnormal
+    f32::MAX,
+    3.5,
+];
+
+fn assert_lanes_equal_f32(got: &[f32], want: &[f32], what: &str) {
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: lane {i} got {g:e} ({:#010x}) want {w:e} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+#[test]
+fn divide_batch_matches_scalar_property() {
+    check::property("divide_batch_f32 == divide_f32 per lane", |g| {
+        let cfg = random_config(g);
+        let ctx = GoldschmidtContext::new(cfg);
+        let lanes = g.usize_in(0, 80);
+        let n: Vec<f32> = (0..lanes).map(|_| any_f32(g)).collect();
+        let d: Vec<f32> = (0..lanes).map(|_| any_f32(g)).collect();
+        let mut out = vec![0.0f32; lanes];
+        ctx.divide_batch_f32(&n, &d, &mut out);
+        for i in 0..lanes {
+            let want = divide_f32(n[i], d[i], ctx.reciprocal_table(), &cfg);
+            if out[i].to_bits() != want.to_bits() {
+                return Err(format!(
+                    "steps={} rounding={:?} complement={:?} lane {i}: {} / {} -> {} want {}",
+                    cfg.steps, cfg.rounding, cfg.complement, n[i], d[i], out[i], want
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sqrt_batch_matches_scalar_property() {
+    check::property("sqrt_batch_f32 == sqrt_f32 per lane", |g| {
+        let cfg = random_config(g);
+        let ctx = GoldschmidtContext::new(cfg);
+        let lanes = g.usize_in(0, 80);
+        let x: Vec<f32> = (0..lanes).map(|_| any_f32(g)).collect();
+        let mut out = vec![0.0f32; lanes];
+        ctx.sqrt_batch_f32(&x, &mut out);
+        for i in 0..lanes {
+            let want = sqrt_f32(x[i], ctx.rsqrt_table(), &cfg);
+            if out[i].to_bits() != want.to_bits() {
+                return Err(format!(
+                    "steps={} rounding={:?} lane {i}: sqrt({}) -> {} want {}",
+                    cfg.steps, cfg.rounding, x[i], out[i], want
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rsqrt_batch_matches_scalar_property() {
+    check::property("rsqrt_batch_f32 == rsqrt_f32 per lane", |g| {
+        let cfg = random_config(g);
+        let ctx = GoldschmidtContext::new(cfg);
+        let lanes = g.usize_in(0, 80);
+        let x: Vec<f32> = (0..lanes).map(|_| any_f32(g)).collect();
+        let mut out = vec![0.0f32; lanes];
+        ctx.rsqrt_batch_f32(&x, &mut out);
+        for i in 0..lanes {
+            let want = rsqrt_f32(x[i], ctx.rsqrt_table(), &cfg);
+            if out[i].to_bits() != want.to_bits() {
+                return Err(format!(
+                    "steps={} rounding={:?} lane {i}: rsqrt({}) -> {} want {}",
+                    cfg.steps, cfg.rounding, x[i], out[i], want
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn divide_batch_f64_matches_scalar_property() {
+    check::property("divide_batch_f64 == divide_f64 per lane", |g| {
+        // double-precision base (frac 58) across the same sweep space
+        let cfg = Config::double()
+            .with_steps(g.usize_in(0, 6) as u32)
+            .with_rounding(*g.pick(&[Rounding::Nearest, Rounding::Truncate]))
+            .with_complement(*g.pick(&[ComplementKind::Exact, ComplementKind::OnesComplement]));
+        let ctx = GoldschmidtContext::new(cfg);
+        let lanes = g.usize_in(0, 48);
+        let n: Vec<f64> = (0..lanes).map(|_| f64::from_bits(g.bits())).collect();
+        let d: Vec<f64> = (0..lanes).map(|_| f64::from_bits(g.bits())).collect();
+        let mut out = vec![0.0f64; lanes];
+        ctx.divide_batch_f64(&n, &d, &mut out);
+        for i in 0..lanes {
+            let want = divide_f64(n[i], d[i], ctx.reciprocal_table(), &cfg);
+            if out[i].to_bits() != want.to_bits() {
+                return Err(format!(
+                    "steps={} rounding={:?} lane {i}: {} / {} -> {} want {}",
+                    cfg.steps, cfg.rounding, n[i], d[i], out[i], want
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_matrix_deterministic_sweep() {
+    // every (steps, rounding, complement) combination on a fixed mixed
+    // batch: finite values sandwiched between specials, all three ops
+    for steps in 0..=5u32 {
+        for rounding in [Rounding::Nearest, Rounding::Truncate] {
+            for complement in [ComplementKind::Exact, ComplementKind::OnesComplement] {
+                let cfg = Config::default()
+                    .with_steps(steps)
+                    .with_rounding(rounding)
+                    .with_complement(complement);
+                let ctx = GoldschmidtContext::new(cfg);
+                let mut rng = Xoshiro256::new(0x5EED ^ steps as u64);
+                let mut x: Vec<f32> = SPECIALS_F32.to_vec();
+                x.extend((0..52).map(|_| rng.range_f32(1e-20, 1e20)));
+                let d: Vec<f32> =
+                    x.iter().rev().copied().collect(); // specials meet finite lanes
+                let tag = format!("steps={steps} {rounding:?} {complement:?}");
+
+                let mut out = vec![0.0f32; x.len()];
+                ctx.divide_batch_f32(&x, &d, &mut out);
+                let want: Vec<f32> = x
+                    .iter()
+                    .zip(d.iter())
+                    .map(|(&n, &dd)| divide_f32(n, dd, ctx.reciprocal_table(), &cfg))
+                    .collect();
+                assert_lanes_equal_f32(&out, &want, &format!("divide {tag}"));
+
+                ctx.sqrt_batch_f32(&x, &mut out);
+                let want: Vec<f32> =
+                    x.iter().map(|&v| sqrt_f32(v, ctx.rsqrt_table(), &cfg)).collect();
+                assert_lanes_equal_f32(&out, &want, &format!("sqrt {tag}"));
+
+                ctx.rsqrt_batch_f32(&x, &mut out);
+                let want: Vec<f32> =
+                    x.iter().map(|&v| rsqrt_f32(v, ctx.rsqrt_table(), &cfg)).collect();
+                assert_lanes_equal_f32(&out, &want, &format!("rsqrt {tag}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn specials_inside_large_parallel_batches() {
+    // 1024 lanes engages the scoped-thread worker split; specials are
+    // scattered through the batch so every worker shard sees some
+    let cfg = Config::default();
+    let ctx = GoldschmidtContext::new(cfg);
+    let mut rng = Xoshiro256::new(0xFA11);
+    let lanes = 1024usize;
+    let mut n: Vec<f32> = (0..lanes).map(|_| rng.range_f32(1e-15, 1e15)).collect();
+    let mut d: Vec<f32> = (0..lanes).map(|_| rng.range_f32(1e-15, 1e15)).collect();
+    for (k, &s) in SPECIALS_F32.iter().enumerate() {
+        n[k * 83 % lanes] = s; // scatter across shards
+        d[(k * 83 + 41) % lanes] = s;
+    }
+    let mut out = vec![0.0f32; lanes];
+    ctx.divide_batch_f32(&n, &d, &mut out);
+    let want: Vec<f32> = n
+        .iter()
+        .zip(d.iter())
+        .map(|(&a, &b)| divide_f32(a, b, ctx.reciprocal_table(), &cfg))
+        .collect();
+    assert_lanes_equal_f32(&out, &want, "parallel divide 1024");
+
+    ctx.sqrt_batch_f32(&n, &mut out);
+    let want: Vec<f32> = n.iter().map(|&v| sqrt_f32(v, ctx.rsqrt_table(), &cfg)).collect();
+    assert_lanes_equal_f32(&out, &want, "parallel sqrt 1024");
+
+    ctx.rsqrt_batch_f32(&n, &mut out);
+    let want: Vec<f32> = n.iter().map(|&v| rsqrt_f32(v, ctx.rsqrt_table(), &cfg)).collect();
+    assert_lanes_equal_f32(&out, &want, "parallel rsqrt 1024");
+}
+
+#[test]
+fn f64_parallel_batch_with_specials() {
+    let cfg = Config::double();
+    let ctx = GoldschmidtContext::new(cfg);
+    let mut rng = Xoshiro256::new(0xD64);
+    let lanes = 512usize;
+    let mut n: Vec<f64> = (0..lanes).map(|_| rng.range_f64(1e-100, 1e100)).collect();
+    let mut d: Vec<f64> = (0..lanes).map(|_| rng.range_f64(1e-100, 1e100)).collect();
+    let specials64 = [
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f64::MIN_POSITIVE,
+        5.0e-320, // subnormal
+        f64::MAX,
+    ];
+    for (k, &s) in specials64.iter().enumerate() {
+        n[k * 61 % lanes] = s;
+        d[(k * 61 + 29) % lanes] = s;
+    }
+    let mut out = vec![0.0f64; lanes];
+    ctx.divide_batch_f64(&n, &d, &mut out);
+    for i in 0..lanes {
+        let want = divide_f64(n[i], d[i], ctx.reciprocal_table(), &cfg);
+        assert_eq!(
+            out[i].to_bits(),
+            want.to_bits(),
+            "f64 lane {i}: {} / {} -> {} want {}",
+            n[i],
+            d[i],
+            out[i],
+            want
+        );
+    }
+}

@@ -1,7 +1,10 @@
 //! Integration: the PJRT executor against the real AOT artifacts.
 //!
-//! These tests require `make artifacts` to have run (they skip with a
-//! note otherwise, so `cargo test` stays green on a fresh clone).
+//! These tests require the `pjrt` feature (the whole file compiles out
+//! without it) and `make artifacts` to have run (they skip with a note
+//! otherwise, so `cargo test` stays green on a fresh clone).
+
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

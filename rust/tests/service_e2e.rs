@@ -2,13 +2,14 @@
 //! pool -> executor) under realistic load, with the native executor (no
 //! artifacts needed) and — when artifacts exist — the PJRT executor.
 
-use std::path::PathBuf;
 use std::time::Duration;
 
 use goldschmidt::coordinator::{
     BatcherConfig, FpuService, OpKind, ServiceConfig,
 };
-use goldschmidt::runtime::{Executor, NativeExecutor, PjrtExecutor};
+use goldschmidt::runtime::{Executor, NativeExecutor};
+#[cfg(feature = "pjrt")]
+use goldschmidt::runtime::PjrtExecutor;
 use goldschmidt::workload::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};
 
 fn native_factory() -> anyhow::Result<Box<dyn Executor>> {
@@ -142,9 +143,10 @@ fn poisson_open_loop_latency_sane() {
     svc.shutdown();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_service_end_to_end() {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.txt").exists() {
         eprintln!("SKIP: artifacts/ not built");
         return;
