@@ -6,10 +6,11 @@ use std::time::Instant;
 
 use goldschmidt::arith::fixed::{Fixed, Rounding};
 use goldschmidt::bench::{black_box, Bencher};
-use goldschmidt::coordinator::request::{OpKind, Request};
+use goldschmidt::coordinator::request::{FormatKind, OpKind, Request, Value};
 use goldschmidt::coordinator::{BatcherConfig, DynamicBatcher, Router};
+use goldschmidt::formats;
 use goldschmidt::goldschmidt::{divide_f32, divide_mantissa, divide_mantissa_quick, Config};
-use goldschmidt::kernel::GoldschmidtContext;
+use goldschmidt::kernel::{BatchScratch, GoldschmidtContext};
 use goldschmidt::sim::{BaselineDatapath, FeedbackDatapath};
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::rng::Xoshiro256;
@@ -94,11 +95,29 @@ fn main() {
         ctx64.divide_batch_f64_serial(&na64, &da64, &mut out64);
         black_box(&out64);
     });
+    // the executor's actual hot path: bits planes + persistent scratch
+    // (no per-batch allocation at all)
+    let nb: Vec<u64> = na.iter().map(|&v| v.to_bits() as u64).collect();
+    let db: Vec<u64> = da.iter().map(|&v| v.to_bits() as u64).collect();
+    let mut ob = vec![0u64; LANES];
+    let mut scratch = BatchScratch::new();
+    b.bench("divide_batch_bits<f32> x1024 (serial, scratch reuse)", || {
+        ctx.divide_batch_bits_serial::<formats::F32>(&nb, &db, &mut ob, &mut scratch);
+        black_box(&ob);
+    });
+    let ctx16 = GoldschmidtContext::new(FormatKind::F16.datapath_config());
+    let enc16 = |v: &f32| Value::from_f64(FormatKind::F16, *v as f64).bits();
+    let nb16: Vec<u64> = na.iter().map(enc16).collect();
+    let db16: Vec<u64> = da.iter().map(enc16).collect();
+    b.bench("divide_batch_bits<f16> x1024 (serial, scratch reuse)", || {
+        ctx16.divide_batch_bits_serial::<formats::F16>(&nb16, &db16, &mut ob, &mut scratch);
+        black_box(&ob);
+    });
     b.print_report();
 
     // batcher: form batches from a pre-filled router (per-batch cost)
     let mut b = Bencher::new("hotpath/batcher");
-    let batcher = DynamicBatcher::new(BatcherConfig::default(), |_| vec![64, 256, 1024]);
+    let batcher = DynamicBatcher::new(BatcherConfig::default(), |_, _| vec![64, 256, 1024]);
     let mut rng = Xoshiro256::new(1);
     b.bench("route+form batch of 256", || {
         let mut router = Router::new();
@@ -108,13 +127,13 @@ fn main() {
             router.route(Request {
                 id: i,
                 op: OpKind::Divide,
-                a: rng.range_f32(1.0, 2.0),
-                b: rng.range_f32(1.0, 2.0),
+                a: Value::F32(rng.range_f32(1.0, 2.0)),
+                b: Value::F32(rng.range_f32(1.0, 2.0)),
                 enqueued_at: Instant::now(),
                 reply: tx,
             });
         }
-        black_box(batcher.form_batch(&mut router, OpKind::Divide));
+        black_box(batcher.form_batch(&mut router, OpKind::Divide, FormatKind::F32));
     });
     b.print_report();
 }

@@ -12,7 +12,7 @@
 use std::time::{Duration, Instant};
 
 use goldschmidt::bench::{black_box, Bencher};
-use goldschmidt::coordinator::{BatcherConfig, FpuService, OpKind, ServiceConfig};
+use goldschmidt::coordinator::{BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig};
 use goldschmidt::goldschmidt::{divide_f32, Config};
 use goldschmidt::kernel::GoldschmidtContext;
 use goldschmidt::runtime::{Executor, NativeExecutor};
@@ -47,7 +47,8 @@ impl RunResult {
     }
 }
 
-fn drive(svc: FpuService) -> RunResult {
+fn drive_fmt(svc: FpuService, format: FormatKind) -> RunResult {
+    use goldschmidt::coordinator::Value;
     let count = requests();
     let handle = svc.handle();
     // prime: force executor construction + (for PJRT) AOT compilation in
@@ -55,7 +56,8 @@ fn drive(svc: FpuService) -> RunResult {
     // the warmup bench, not folded into steady-state throughput
     for _ in 0..4 {
         for op in [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt] {
-            let rx = handle.submit(op, 2.0, 2.0).expect("prime");
+            let two = Value::from_f64(format, 2.0);
+            let rx = handle.submit_value(op, two, two).expect("prime");
             let _ = rx.recv();
         }
     }
@@ -63,13 +65,14 @@ fn drive(svc: FpuService) -> RunResult {
         count,
         divide_frac: 0.7,
         dist: OperandDist::LogNormal { mu: 0.0, sigma: 2.0 },
+        format,
         ..Default::default()
     };
     let reqs = WorkloadGen::generate(spec);
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(count);
     for r in &reqs {
-        rxs.push(handle.submit(r.op, r.a, r.b).expect("submit"));
+        rxs.push(handle.submit_value(r.op, r.value_a(), r.value_b()).expect("submit"));
     }
     for rx in rxs {
         rx.recv().expect("response");
@@ -88,11 +91,15 @@ fn drive(svc: FpuService) -> RunResult {
 }
 
 fn run_native(config: ServiceConfig) -> RunResult {
+    run_native_fmt(config, FormatKind::F32)
+}
+
+fn run_native_fmt(config: ServiceConfig, format: FormatKind) -> RunResult {
     let svc = FpuService::start(config, || {
         Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
     })
     .expect("start");
-    drive(svc)
+    drive_fmt(svc, format)
 }
 
 #[cfg(feature = "pjrt")]
@@ -104,7 +111,7 @@ fn run_pjrt(config: ServiceConfig, dir: std::path::PathBuf) -> RunResult {
         Ok(Box::new(ex) as Box<dyn Executor>)
     })
     .expect("start pjrt");
-    drive(svc)
+    drive_fmt(svc, FormatKind::F32)
 }
 
 /// Single-thread batch-1024 divide: the scalar map the seed executor
@@ -223,6 +230,37 @@ fn main() {
     }
     t.print();
     report.push(("worker_scaling", Json::arr(scaling)));
+
+    // ---- format sweep: the multi-precision serving plane ----------------
+    let mut t = Table::new(
+        "format sweep (native backend, max_batch=1024, workers=2)",
+        &["format", "req/s", "mean lat", "p99 lat", "req/batch"],
+    )
+    .aligns(&[Align::Right; 5]);
+    let mut formats_rows = Vec::new();
+    for format in FormatKind::ALL {
+        let config = ServiceConfig {
+            batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
+            queue_depth: 65_536,
+            workers: 2,
+            poll: Duration::from_micros(50),
+        };
+        let r = run_native_fmt(config, format);
+        t.row(&[
+            format.label().to_string(),
+            format!("{:.0}", r.reqs_per_s),
+            fmt_ns(r.mean_lat_ns),
+            fmt_ns(r.p99_lat_ns as f64),
+            format!("{:.1}", r.mean_batch),
+        ]);
+        let mut row = r.json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("format".into(), Json::from(format.label()));
+        }
+        formats_rows.push(row);
+    }
+    t.print();
+    report.push(("format_sweep", Json::arr(formats_rows)));
 
     // ---- PJRT backend (the real three-layer path) -----------------------
     #[cfg(feature = "pjrt")]

@@ -9,14 +9,21 @@
 //! Falls back to the native fixed-point executor with a note when
 //! artifacts are missing, so the example always runs.
 //!
+//! `--format f16|bf16|f32|f64` selects the serving precision (native
+//! backend; the AOT artifacts are f32-only, so a non-f32 format always
+//! uses the native batch kernels):
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example fpu_service
+//! cargo run --release --example fpu_service -- --format f64
 //! ```
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use goldschmidt::coordinator::{BatcherConfig, FpuService, OpKind, ServiceConfig};
+use goldschmidt::coordinator::{
+    BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, Value,
+};
 use goldschmidt::runtime::NativeExecutor;
 #[cfg(feature = "pjrt")]
 use goldschmidt::runtime::{Executor, PjrtExecutor};
@@ -25,15 +32,33 @@ use goldschmidt::workload::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSp
 
 const REQUESTS: usize = 200_000;
 
-/// Start on the PJRT backend when the feature is compiled in and the
-/// AOT artifacts exist; otherwise serve through the native batch
-/// kernels so the example always runs.
+/// Parse `--format X` from the argument list (default f32).
+fn format_arg() -> FormatKind {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--format" {
+            match FormatKind::parse(&w[1]) {
+                Ok(f) => return f,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    FormatKind::F32
+}
+
+/// Start on the PJRT backend when the feature is compiled in, the AOT
+/// artifacts exist and the workload is f32; otherwise serve through the
+/// native batch kernels so the example always runs.
 fn start_backend(
     config: ServiceConfig,
     artifacts: &std::path::Path,
+    format: FormatKind,
 ) -> anyhow::Result<(FpuService, &'static str)> {
     #[cfg(feature = "pjrt")]
-    if artifacts.join("manifest.txt").exists() {
+    if format == FormatKind::F32 && artifacts.join("manifest.txt").exists() {
         let dir = artifacts.to_path_buf();
         let svc = FpuService::start(config, move || {
             let mut ex = PjrtExecutor::from_dir(&dir)?;
@@ -43,7 +68,7 @@ fn start_backend(
         return Ok((svc, "pjrt-cpu (AOT pallas/jax HLO)"));
     }
     #[cfg(not(feature = "pjrt"))]
-    let _ = artifacts;
+    let _ = (artifacts, format);
     let svc =
         FpuService::start(config, || Ok(Box::new(NativeExecutor::with_defaults()) as _))?;
     Ok((svc, "native fixed-point (batched SoA kernels)"))
@@ -51,6 +76,7 @@ fn start_backend(
 
 fn main() -> anyhow::Result<()> {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let format = format_arg();
 
     let config = ServiceConfig {
         batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
@@ -59,8 +85,8 @@ fn main() -> anyhow::Result<()> {
         poll: Duration::from_micros(50),
     };
 
-    let (svc, backend) = start_backend(config, &artifacts)?;
-    println!("backend: {backend}");
+    let (svc, backend) = start_backend(config, &artifacts, format)?;
+    println!("backend: {backend}, format: {format}");
 
     // realistic mixed workload: 70% divide / 15% sqrt / 15% rsqrt,
     // heavy-tailed operands, open-loop Poisson arrivals at 500k req/s
@@ -69,6 +95,7 @@ fn main() -> anyhow::Result<()> {
         dist: OperandDist::LogNormal { mu: 0.0, sigma: 2.5 },
         arrivals: ArrivalProcess::Poisson { rate: 500_000.0 },
         divide_frac: 0.7,
+        format,
         seed: 0xE2E,
     };
     let reqs = WorkloadGen::generate(spec);
@@ -79,7 +106,8 @@ fn main() -> anyhow::Result<()> {
     let prime_t0 = Instant::now();
     for _ in 0..4 {
         for op in [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt] {
-            let _ = handle.submit(op, 2.0, 2.0)?.recv();
+            let two = Value::from_f64(format, 2.0);
+            let _ = handle.submit_value(op, two, two)?.recv();
         }
     }
     println!("warmup (executor init + AOT compile): {:.2}s", prime_t0.elapsed().as_secs_f64());
@@ -95,19 +123,28 @@ fn main() -> anyhow::Result<()> {
         if due > now {
             std::thread::sleep(due - now);
         }
-        expected.push(match r.op {
-            OpKind::Divide => (r.a as f64 / r.b as f64) as f32,
-            OpKind::Sqrt => (r.a as f64).sqrt() as f32,
-            OpKind::Rsqrt => (1.0 / (r.a as f64).sqrt()) as f32,
-        });
-        rxs.push(handle.submit(r.op, r.a, r.b)?);
+        // the reference result: the exact operation on the *encoded*
+        // operands (what the format actually serves), rounded into the
+        // format — bit distance to it is the accuracy metric
+        let (a, b) = (r.value_a(), r.value_b());
+        let exact = match r.op {
+            OpKind::Divide => a.to_f64() / b.to_f64(),
+            OpKind::Sqrt => a.to_f64().sqrt(),
+            OpKind::Rsqrt => 1.0 / a.to_f64().sqrt(),
+        };
+        expected.push(Value::from_f64(format, exact));
+        rxs.push(handle.submit_value(r.op, a, b)?);
     }
     let mut worst_ulp = 0i64;
     let mut ok = 0u64;
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv()?;
-        let ulp = (resp.value.to_bits() as i64 - expected[i].to_bits() as i64).abs();
-        worst_ulp = worst_ulp.max(ulp);
+        if resp.value.is_nan() || expected[i].is_nan() {
+            assert_eq!(resp.value.is_nan(), expected[i].is_nan(), "req {i}");
+        } else {
+            let ulp = (resp.value.bits() as i64 - expected[i].bits() as i64).abs();
+            worst_ulp = worst_ulp.max(ulp);
+        }
         ok += 1;
     }
     let elapsed = t0.elapsed();
@@ -115,7 +152,7 @@ fn main() -> anyhow::Result<()> {
     let snap = svc.metrics().snapshot();
     let mut t = Table::new(
         format!(
-            "E2E: {ok}/{REQUESTS} ok in {:.2}s -> {:.0} req/s, worst {worst_ulp} ulp",
+            "E2E ({format}): {ok}/{REQUESTS} ok in {:.2}s -> {:.0} req/s, worst {worst_ulp} ulp",
             elapsed.as_secs_f64(),
             ok as f64 / elapsed.as_secs_f64(),
         ),

@@ -2,98 +2,33 @@
 //! mantissa datapath.
 //!
 //! The divider array only ever sees normalized mantissas in `[1, 2)`
-//! (or `[1, 4)` for the square-root path); this module performs the
-//! decomposition and reassembly a floating-point unit wraps around it,
-//! including round-to-nearest-even on the way back out.
+//! (or `[1, 4)` for the square-root path); this module is the f32-typed
+//! face of the generic boundary in [`crate::formats`] — classification,
+//! decomposition, and round-to-nearest-even reassembly are implemented
+//! once there and monomorphized here for binary32.
 
 use super::fixed::Fixed;
+use crate::formats::{self, F32 as Fmt32};
 
-/// A decomposed finite, nonzero binary32: `value = (-1)^sign * mant * 2^exp`
-/// with `mant` a [`Fixed`] in `[1, 2)`.
-#[derive(Clone, Copy, Debug)]
-pub struct Unpacked {
-    /// Sign bit.
-    pub sign: bool,
-    /// Unbiased exponent of the leading bit.
-    pub exp: i32,
-    /// Mantissa in `[1, 2)` at the requested fraction width.
-    pub mant: Fixed,
-}
-
-/// Classification of inputs the datapath does not handle.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum FpClass {
-    /// Normal or subnormal nonzero finite value (datapath-eligible;
-    /// subnormals are normalized with an exponent adjustment).
-    Finite,
-    /// Positive or negative zero.
-    Zero,
-    /// Infinity.
-    Inf,
-    /// Not a number.
-    Nan,
-}
+pub use crate::formats::{FpClass, Unpacked};
 
 /// Classify an f32 for dispatch before the datapath.
 pub fn classify(x: f32) -> FpClass {
-    if x.is_nan() {
-        FpClass::Nan
-    } else if x.is_infinite() {
-        FpClass::Inf
-    } else if x == 0.0 {
-        FpClass::Zero
-    } else {
-        FpClass::Finite
-    }
+    formats::classify::<Fmt32>(x.to_bits() as u64)
 }
 
 /// Unpack a finite nonzero f32 into sign/exponent/mantissa-in-[1,2) at
 /// `frac` fraction bits. Subnormals are normalized (their leading zeros
 /// move into the exponent), exactly as a hardware pre-normalizer does.
 pub fn unpack(x: f32, frac: u32) -> Unpacked {
-    assert!(classify(x) == FpClass::Finite, "unpack({x}) on non-finite");
-    let bits = x.to_bits();
-    let sign = (bits >> 31) == 1;
-    let biased_exp = ((bits >> 23) & 0xFF) as i32;
-    let raw_mant = bits & 0x7F_FFFF;
-    let (exp, mant23) = if biased_exp == 0 {
-        // subnormal: value = raw_mant * 2^-149; normalize the leading 1
-        let lz = raw_mant.leading_zeros() - 9; // zeros within the 23-bit field
-        let shifted = raw_mant << (lz + 1); // drop the leading 1
-        (-126 - (lz as i32) - 1, shifted & 0x7F_FFFF)
-    } else {
-        (biased_exp - 127, raw_mant)
-    };
-    // mantissa = 1.mant23 as Q2.frac
-    let m = ((1u64 << 23) | mant23 as u64) as f64 / (1u64 << 23) as f64;
-    let mant = if frac >= 23 {
-        Fixed::from_bits(((1u64 << 23) | mant23 as u64) << (frac - 23), frac)
-    } else {
-        Fixed::from_f64(m, frac)
-    };
-    Unpacked { sign, exp, mant }
+    formats::unpack::<Fmt32>(x.to_bits() as u64, frac)
 }
 
 /// Repack sign/exponent/mantissa into an f32 with round-to-nearest-even.
 /// The mantissa may lie in `[0.5, 4)`; the exponent is renormalized.
-/// Overflow returns ±inf, underflow returns a (possibly subnormal) tiny
-/// value via the standard library's correctly rounded `exp2` scaling.
+/// Overflow returns ±inf, underflow rounds into the subnormal range.
 pub fn pack(sign: bool, exp: i32, mant: &Fixed) -> f32 {
-    let m = mant.to_f64();
-    assert!(m >= 0.0, "negative mantissa");
-    if m == 0.0 {
-        return if sign { -0.0 } else { 0.0 };
-    }
-    // f64 has 53 significand bits — enough to hold any datapath mantissa
-    // (<= 62 frac bits values get correctly rounded on conversion, and
-    // the final f32 rounding dominates).
-    let value = m * 2f64.powi(exp);
-    let out = value as f32; // f64 -> f32 is round-to-nearest-even
-    if sign {
-        -out
-    } else {
-        out
-    }
+    f32::from_bits(formats::pack::<Fmt32>(sign, exp, mant) as u32)
 }
 
 /// Convenience: the mantissa field width used by the service layer.
@@ -106,25 +41,10 @@ pub fn divide_via<F>(n: f32, d: f32, frac: u32, core: F) -> f32
 where
     F: FnOnce(Fixed, Fixed) -> Fixed,
 {
-    match (classify(n), classify(d)) {
-        (FpClass::Nan, _) | (_, FpClass::Nan) => f32::NAN,
-        (FpClass::Inf, FpClass::Inf) => f32::NAN,
-        (FpClass::Zero, FpClass::Zero) => f32::NAN,
-        (FpClass::Inf, _) => {
-            if (n < 0.0) ^ (d < 0.0) { f32::NEG_INFINITY } else { f32::INFINITY }
-        }
-        (_, FpClass::Inf) => if (n < 0.0) ^ (d.is_sign_negative()) { -0.0 } else { 0.0 },
-        (FpClass::Zero, _) => if (n.is_sign_negative()) ^ (d < 0.0) { -0.0 } else { 0.0 },
-        (_, FpClass::Zero) => {
-            if (n < 0.0) ^ (d.is_sign_negative()) { f32::NEG_INFINITY } else { f32::INFINITY }
-        }
-        (FpClass::Finite, FpClass::Finite) => {
-            let un = unpack(n, frac);
-            let ud = unpack(d, frac);
-            let q = core(un.mant, ud.mant);
-            pack(un.sign ^ ud.sign, un.exp - ud.exp, &q)
-        }
-    }
+    f32::from_bits(
+        formats::divide_via_bits::<Fmt32, F>(n.to_bits() as u64, d.to_bits() as u64, frac, core)
+            as u32,
+    )
 }
 
 /// Reference mantissa divider used in tests: correctly-rounded via f64.
@@ -231,5 +151,15 @@ mod tests {
         // mantissa 3.0 with exp 0 == 3.0
         let m = Fixed::from_f64(3.0, 30);
         assert_eq!(pack(true, 0, &m), -3.0);
+    }
+
+    #[test]
+    fn pack_subnormal_outputs_round_nearest_even() {
+        // 1.5 * 2^-149: halfway between subnormals 1 and 2 -> ties to 2
+        let m = Fixed::from_f64(1.5, 30);
+        assert_eq!(pack(false, -149, &m).to_bits(), 2);
+        // 1.25 * 2^-149 rounds down to the nearest subnormal
+        let m = Fixed::from_f64(1.25, 30);
+        assert_eq!(pack(false, -149, &m).to_bits(), 1);
     }
 }

@@ -1,55 +1,28 @@
 //! IEEE-754 binary64 pack/unpack: the double-precision FPU boundary.
 //!
 //! EIMMW-2000 (the paper's foundation) targets double precision; this
-//! module provides the f64 wrapper around the same mantissa datapath,
-//! which needs `frac >= 56` (52 mantissa bits + guard bits — within the
-//! `Fixed` limit of 62).
+//! module is the f64-typed face of the generic boundary in
+//! [`crate::formats`], wrapping the same mantissa datapath, which needs
+//! `frac >= 56` (52 mantissa bits + guard bits — within the `Fixed`
+//! limit of 62).
 
 use super::fixed::Fixed;
 use super::fp::FpClass;
+use crate::formats::{self, F64 as Fmt64};
+
+/// A decomposed finite nonzero binary64 (same shape as the generic
+/// [`formats::Unpacked`]).
+pub type Unpacked64 = formats::Unpacked;
 
 /// Classify an f64 for dispatch before the datapath.
 pub fn classify64(x: f64) -> FpClass {
-    if x.is_nan() {
-        FpClass::Nan
-    } else if x.is_infinite() {
-        FpClass::Inf
-    } else if x == 0.0 {
-        FpClass::Zero
-    } else {
-        FpClass::Finite
-    }
-}
-
-/// A decomposed finite nonzero binary64.
-#[derive(Clone, Copy, Debug)]
-pub struct Unpacked64 {
-    /// Sign bit.
-    pub sign: bool,
-    /// Unbiased exponent of the leading bit.
-    pub exp: i32,
-    /// Mantissa in `[1, 2)` at the requested fraction width.
-    pub mant: Fixed,
+    formats::classify::<Fmt64>(x.to_bits())
 }
 
 /// Unpack a finite nonzero f64 (subnormals normalized), `frac >= 52`.
 pub fn unpack64(x: f64, frac: u32) -> Unpacked64 {
-    assert!(classify64(x) == FpClass::Finite, "unpack64({x}) on non-finite");
     assert!(frac >= 52, "f64 needs frac >= 52");
-    let bits = x.to_bits();
-    let sign = (bits >> 63) == 1;
-    let biased_exp = ((bits >> 52) & 0x7FF) as i32;
-    let raw_mant = bits & 0xF_FFFF_FFFF_FFFF;
-    let (exp, mant52) = if biased_exp == 0 {
-        // subnormal: value = raw_mant * 2^-1074
-        let lz = raw_mant.leading_zeros() - 12; // zeros in the 52-bit field
-        let shifted = raw_mant << (lz + 1);
-        (-1022 - (lz as i32) - 1, shifted & 0xF_FFFF_FFFF_FFFF)
-    } else {
-        (biased_exp - 1023, raw_mant)
-    };
-    let mant = Fixed::from_bits(((1u64 << 52) | mant52) << (frac - 52), frac);
-    Unpacked64 { sign, exp, mant }
+    formats::unpack::<Fmt64>(x.to_bits(), frac)
 }
 
 /// Repack with round-to-nearest-even into f64. The mantissa may lie in
@@ -57,47 +30,7 @@ pub fn unpack64(x: f64, frac: u32) -> Unpacked64 {
 /// IEEE. Works directly on the fixed-point bits (no f64 detour — a
 /// `frac > 52` mantissa would lose bits through a float intermediate).
 pub fn pack64(sign: bool, exp: i32, mant: &Fixed) -> f64 {
-    let frac = mant.frac();
-    let mut bits = mant.bits();
-    if bits == 0 {
-        return if sign { -0.0 } else { 0.0 };
-    }
-    // normalize: find the leading one relative to the binary point
-    let msb = 63 - bits.leading_zeros() as i32; // bit index of leading 1
-    let lead = msb - frac as i32; // 0 => in [1,2)
-    let e = exp + lead;
-    // target: 52 fraction bits after the leading 1
-    let shift = msb - 52;
-    let mant53: u64 = if shift > 0 {
-        // round-to-nearest-even on the dropped bits
-        let dropped = shift as u32;
-        let keep = bits >> dropped;
-        let half = 1u64 << (dropped - 1);
-        let rem = bits & ((1u64 << dropped) - 1);
-        let round_up = rem > half || (rem == half && keep & 1 == 1);
-        keep + round_up as u64
-    } else {
-        bits << (-shift) as u32
-    };
-    // rounding may carry out: 2.0 -> renormalize
-    let (mant53, e) = if mant53 >= (1u64 << 53) { (mant53 >> 1, e + 1) } else { (mant53, e) };
-    if e > 1023 {
-        return if sign { f64::NEG_INFINITY } else { f64::INFINITY };
-    }
-    if e < -1022 {
-        // subnormal or zero: shift the significand down
-        let down = (-1022 - e) as u32;
-        if down > 53 {
-            return if sign { -0.0 } else { 0.0 };
-        }
-        let sub = mant53 >> down; // truncation; sub-ulp for the study
-        bits = sub;
-        let out = f64::from_bits(((sign as u64) << 63) | bits);
-        return out;
-    }
-    let out_bits =
-        ((sign as u64) << 63) | (((e + 1023) as u64) << 52) | (mant53 & 0xF_FFFF_FFFF_FFFF);
-    f64::from_bits(out_bits)
+    f64::from_bits(formats::pack::<Fmt64>(sign, exp, mant))
 }
 
 /// Divide two f64s through a mantissa-division closure (IEEE specials
@@ -106,25 +39,7 @@ pub fn divide_via64<F>(n: f64, d: f64, frac: u32, core: F) -> f64
 where
     F: FnOnce(Fixed, Fixed) -> Fixed,
 {
-    match (classify64(n), classify64(d)) {
-        (FpClass::Nan, _) | (_, FpClass::Nan) => f64::NAN,
-        (FpClass::Inf, FpClass::Inf) => f64::NAN,
-        (FpClass::Zero, FpClass::Zero) => f64::NAN,
-        (FpClass::Inf, _) => {
-            if (n < 0.0) ^ (d < 0.0) { f64::NEG_INFINITY } else { f64::INFINITY }
-        }
-        (_, FpClass::Inf) => if (n < 0.0) ^ d.is_sign_negative() { -0.0 } else { 0.0 },
-        (FpClass::Zero, _) => if n.is_sign_negative() ^ (d < 0.0) { -0.0 } else { 0.0 },
-        (_, FpClass::Zero) => {
-            if (n < 0.0) ^ d.is_sign_negative() { f64::NEG_INFINITY } else { f64::INFINITY }
-        }
-        (FpClass::Finite, FpClass::Finite) => {
-            let un = unpack64(n, frac);
-            let ud = unpack64(d, frac);
-            let q = core(un.mant, ud.mant);
-            pack64(un.sign ^ ud.sign, un.exp - ud.exp, &q)
-        }
-    }
+    f64::from_bits(formats::divide_via_bits::<Fmt64, F>(n.to_bits(), d.to_bits(), frac, core))
 }
 
 #[cfg(test)]

@@ -1,20 +1,22 @@
-//! Dynamic batcher: decides *when* to flush a per-op queue into one
-//! executor batch and *how big* that batch is.
+//! Dynamic batcher: decides *when* to flush a per-(op, format) queue
+//! into one executor batch and *how big* that batch is.
 //!
 //! Policy (the standard serving trade-off):
-//! * flush an op queue when it holds `max_batch` requests, or
+//! * flush a queue when it holds `max_batch` requests, or
 //! * when its oldest request has waited `max_wait`, or
 //! * when `flush_all` is requested (drain/shutdown).
 //!
-//! The formed batch is padded (with the neutral operand 1.0) up to the
-//! executor's batch ladder — AOT graphs have fixed shapes, so a
-//! 70-request flush rides the 256-wide executable. Padding waste is
-//! tracked in metrics; the ladder itself comes from the artifact
-//! manifest.
+//! The formed batch is padded (with the neutral operand `1.0` *in the
+//! batch's format*) up to the executor's batch ladder — AOT graphs have
+//! fixed shapes, so a 70-request flush rides the 256-wide executable.
+//! Operands travel as raw `u64` plane words (format-uniform per batch,
+//! guaranteed by the router's per-(op, format) queues). Padding waste
+//! is tracked in metrics; the ladder itself comes from the artifact
+//! manifest, per (op, format).
 
 use std::time::{Duration, Instant};
 
-use super::request::{OpKind, Request};
+use super::request::{FormatKind, op_format_slot, OP_FORMAT_SLOTS, OpKind, Request};
 use super::router::Router;
 
 /// Batching policy parameters.
@@ -38,12 +40,15 @@ impl Default for BatcherConfig {
 pub struct Batch {
     /// Operation.
     pub op: OpKind,
+    /// IEEE format of every lane (the router guarantees purity).
+    pub format: FormatKind,
     /// The requests riding this batch (in FIFO order).
     pub requests: Vec<Request>,
-    /// Padded operand arrays (`b` only meaningful for divide).
-    pub a: Vec<f32>,
-    /// Second operand array (padded), divide only.
-    pub b: Vec<f32>,
+    /// Padded operand plane as raw format words (`b` only meaningful
+    /// for divide).
+    pub a: Vec<u64>,
+    /// Second operand plane (padded), divide only.
+    pub b: Vec<u64>,
     /// Padded (executable) size; `requests.len() <= padded`.
     pub padded: usize,
 }
@@ -54,9 +59,14 @@ impl Batch {
         self.requests.len()
     }
 
-    /// Padding fraction (0 = perfectly full).
+    /// Padding fraction (0 = perfectly full; an empty batch wastes
+    /// nothing rather than dividing by zero).
     pub fn waste(&self) -> f64 {
-        1.0 - self.live() as f64 / self.padded as f64
+        if self.padded == 0 {
+            0.0
+        } else {
+            1.0 - self.live() as f64 / self.padded as f64
+        }
     }
 }
 
@@ -64,18 +74,23 @@ impl Batch {
 #[derive(Debug)]
 pub struct DynamicBatcher {
     config: BatcherConfig,
-    /// Per-op ladder of available executable batch sizes (ascending).
-    ladders: [(OpKind, Vec<usize>); 3],
+    /// Per-(op, format) ladder of available executable batch sizes
+    /// (ascending), indexed by the shared routing-slot layout.
+    ladders: [Vec<usize>; OP_FORMAT_SLOTS],
 }
 
 impl DynamicBatcher {
-    /// New batcher over the given per-op batch ladders.
-    pub fn new(config: BatcherConfig, ladder_of: impl Fn(OpKind) -> Vec<usize>) -> Self {
-        let ladders = [
-            (OpKind::Divide, ladder_of(OpKind::Divide)),
-            (OpKind::Sqrt, ladder_of(OpKind::Sqrt)),
-            (OpKind::Rsqrt, ladder_of(OpKind::Rsqrt)),
-        ];
+    /// New batcher over the given per-(op, format) batch ladders.
+    pub fn new(
+        config: BatcherConfig,
+        ladder_of: impl Fn(OpKind, FormatKind) -> Vec<usize>,
+    ) -> Self {
+        let mut ladders: [Vec<usize>; OP_FORMAT_SLOTS] = std::array::from_fn(|_| Vec::new());
+        for &op in &OpKind::ALL {
+            for &format in &FormatKind::ALL {
+                ladders[op_format_slot(op, format)] = ladder_of(op, format);
+            }
+        }
         Self { config, ladders }
     }
 
@@ -84,77 +99,103 @@ impl DynamicBatcher {
         &self.config
     }
 
-    fn ladder(&self, op: OpKind) -> &[usize] {
-        &self.ladders.iter().find(|(o, _)| *o == op).expect("all ops present").1
+    fn ladder(&self, op: OpKind, format: FormatKind) -> &[usize] {
+        &self.ladders[op_format_slot(op, format)]
     }
 
-    /// Largest executable size for an op (the flush cap).
-    fn cap(&self, op: OpKind) -> usize {
-        self.ladder(op).last().copied().unwrap_or(self.config.max_batch).min(self.config.max_batch)
+    /// Largest executable size for an (op, format) pair (the flush cap).
+    fn cap(&self, op: OpKind, format: FormatKind) -> usize {
+        self.ladder(op, format)
+            .last()
+            .copied()
+            .unwrap_or(self.config.max_batch)
+            .min(self.config.max_batch)
     }
 
     /// Smallest ladder size >= n (or the cap when n exceeds it).
-    fn pad_to(&self, op: OpKind, n: usize) -> usize {
-        let ladder = self.ladder(op);
+    fn pad_to(&self, op: OpKind, format: FormatKind, n: usize) -> usize {
+        let ladder = self.ladder(op, format);
         ladder.iter().copied().find(|&b| b >= n).or(ladder.last().copied()).unwrap_or(n)
     }
 
-    /// Decide whether an op queue should flush now.
-    pub fn should_flush(&self, router: &Router, op: OpKind, now: Instant) -> bool {
-        let len = router.len(op);
+    /// Decide whether an (op, format) queue should flush now.
+    pub fn should_flush(
+        &self,
+        router: &Router,
+        op: OpKind,
+        format: FormatKind,
+        now: Instant,
+    ) -> bool {
+        let len = router.len(op, format);
         if len == 0 {
             return false;
         }
-        if len >= self.cap(op) {
+        if len >= self.cap(op, format) {
             return true;
         }
-        match router.oldest_enqueue() {
+        match router.oldest_enqueue_in(op, format) {
             Some(oldest) => now.duration_since(oldest) >= self.config.max_wait,
             None => false,
         }
     }
 
-    /// Form one batch from an op queue (up to the cap), padding operands
-    /// to the ladder. Returns `None` when the queue is empty.
-    pub fn form_batch(&self, router: &mut Router, op: OpKind) -> Option<Batch> {
-        let cap = self.cap(op);
-        let requests = router.drain(op, cap);
+    /// Form one batch from an (op, format) queue (up to the cap),
+    /// padding operand planes to the ladder with the format's `1.0`.
+    /// Returns `None` when the queue is empty.
+    pub fn form_batch(
+        &self,
+        router: &mut Router,
+        op: OpKind,
+        format: FormatKind,
+    ) -> Option<Batch> {
+        let cap = self.cap(op, format);
+        let requests = router.drain(op, format, cap);
         if requests.is_empty() {
             return None;
         }
-        let padded = self.pad_to(op, requests.len());
+        let padded = self.pad_to(op, format, requests.len());
         let mut a = Vec::with_capacity(padded);
         let mut b = Vec::with_capacity(padded);
         for r in &requests {
-            a.push(r.a);
-            b.push(r.b);
+            a.push(r.a.bits());
+            b.push(r.b.bits());
         }
         // pad with neutral operands: 1.0 / 1.0 stays in-domain for every op
-        a.resize(padded, 1.0);
-        b.resize(padded, 1.0);
-        Some(Batch { op, requests, a, b, padded })
+        let one = format.one_bits();
+        a.resize(padded, one);
+        b.resize(padded, one);
+        Some(Batch { op, format, requests, a, b, padded })
     }
 
-    /// Form batches for every op that should flush at `now`.
+    /// Form batches for every (op, format) queue that should flush at
+    /// `now`.
     pub fn ready_batches(&self, router: &mut Router, now: Instant) -> Vec<Batch> {
         let mut out = Vec::new();
         for &op in &OpKind::ALL {
-            while self.should_flush(router, op, now) {
-                match self.form_batch(router, op) {
-                    Some(b) => out.push(b),
-                    None => break,
+            for &format in &FormatKind::ALL {
+                while self.should_flush(router, op, format, now) {
+                    match self.form_batch(router, op, format) {
+                        Some(b) => out.push(b),
+                        None => break,
+                    }
                 }
             }
         }
         out
     }
 
-    /// Unconditionally drain everything (shutdown path).
+    /// Unconditionally drain everything (shutdown path). Queues that
+    /// are already empty form no batch.
     pub fn flush_all(&self, router: &mut Router) -> Vec<Batch> {
         let mut out = Vec::new();
         for &op in &OpKind::ALL {
-            while let Some(b) = self.form_batch(router, op) {
-                out.push(b);
+            for &format in &FormatKind::ALL {
+                if router.len(op, format) == 0 {
+                    continue; // skip forming empty batches
+                }
+                while let Some(b) = self.form_batch(router, op, format) {
+                    out.push(b);
+                }
             }
         }
         out
@@ -165,26 +206,44 @@ impl DynamicBatcher {
 mod tests {
     use super::*;
     use crate::check::{self, ensure};
+    use crate::formats::Value;
     use std::sync::mpsc;
 
-    fn req(id: u64, op: OpKind) -> Request {
+    fn req_at(id: u64, op: OpKind, format: FormatKind, enqueued_at: Instant) -> Request {
         let (tx, rx) = mpsc::channel();
         std::mem::forget(rx);
-        Request { id, op, a: id as f32 + 2.0, b: 2.0, enqueued_at: Instant::now(), reply: tx }
+        Request {
+            id,
+            op,
+            a: Value::from_f64(format, id as f64 + 2.0),
+            b: Value::from_f64(format, 2.0),
+            enqueued_at,
+            reply: tx,
+        }
+    }
+
+    fn req_fmt(id: u64, op: OpKind, format: FormatKind) -> Request {
+        req_at(id, op, format, Instant::now())
+    }
+
+    fn req(id: u64, op: OpKind) -> Request {
+        req_fmt(id, op, FormatKind::F32)
     }
 
     fn batcher(max_batch: usize, max_wait_us: u64) -> DynamicBatcher {
         DynamicBatcher::new(
             BatcherConfig { max_batch, max_wait: Duration::from_micros(max_wait_us) },
-            |_| vec![64, 256, 1024],
+            |_, _| vec![64, 256, 1024],
         )
     }
+
+    const F32: FormatKind = FormatKind::F32;
 
     #[test]
     fn no_flush_when_empty() {
         let b = batcher(256, 100);
         let r = Router::new();
-        assert!(!b.should_flush(&r, OpKind::Divide, Instant::now()));
+        assert!(!b.should_flush(&r, OpKind::Divide, F32, Instant::now()));
     }
 
     #[test]
@@ -194,9 +253,9 @@ mod tests {
         for i in 0..255 {
             r.route(req(i, OpKind::Divide));
         }
-        assert!(!b.should_flush(&r, OpKind::Divide, Instant::now()));
+        assert!(!b.should_flush(&r, OpKind::Divide, F32, Instant::now()));
         r.route(req(255, OpKind::Divide));
-        assert!(b.should_flush(&r, OpKind::Divide, Instant::now()));
+        assert!(b.should_flush(&r, OpKind::Divide, F32, Instant::now()));
     }
 
     #[test]
@@ -204,7 +263,42 @@ mod tests {
         let b = batcher(1024, 0); // zero wait: always stale
         let mut r = Router::new();
         r.route(req(1, OpKind::Sqrt));
-        assert!(b.should_flush(&r, OpKind::Sqrt, Instant::now()));
+        assert!(b.should_flush(&r, OpKind::Sqrt, F32, Instant::now()));
+    }
+
+    #[test]
+    fn age_flush_is_per_queue() {
+        // a stale f64 queue must not force the fresh f32 queue to flush
+        let b = batcher(1024, 500);
+        let mut r = Router::new();
+        let stale = Instant::now() - Duration::from_millis(10);
+        r.route(req_at(1, OpKind::Divide, FormatKind::F64, stale));
+        r.route(req_fmt(2, OpKind::Divide, FormatKind::F32));
+        let now = Instant::now();
+        assert!(b.should_flush(&r, OpKind::Divide, FormatKind::F64, now));
+        assert!(!b.should_flush(&r, OpKind::Divide, FormatKind::F32, now));
+        let ready = b.ready_batches(&mut r, now);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].format, FormatKind::F64);
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F32), 1);
+    }
+
+    #[test]
+    fn max_wait_flush_preserves_fifo_order() {
+        // two age-triggered flushes from one queue: the older requests
+        // must ride the earlier batch, in submission order
+        let b = batcher(4, 0);
+        let mut r = Router::new();
+        for i in 0..6 {
+            r.route(req(i, OpKind::Divide));
+        }
+        let batches = b.ready_batches(&mut r, Instant::now());
+        assert_eq!(batches.len(), 2);
+        assert_eq!(
+            batches[0].requests.iter().map(|x| x.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(batches[1].requests.iter().map(|x| x.id).collect::<Vec<_>>(), vec![4, 5]);
     }
 
     #[test]
@@ -214,14 +308,42 @@ mod tests {
         for i in 0..70 {
             r.route(req(i, OpKind::Divide));
         }
-        let batch = b.form_batch(&mut r, OpKind::Divide).unwrap();
+        let batch = b.form_batch(&mut r, OpKind::Divide, F32).unwrap();
         assert_eq!(batch.live(), 70);
         assert_eq!(batch.padded, 256);
         assert_eq!(batch.a.len(), 256);
         assert_eq!(batch.b.len(), 256);
-        // padding is the neutral operand
-        assert!(batch.a[70..].iter().all(|&x| x == 1.0));
+        // padding is the neutral operand in the batch format
+        assert!(batch.a[70..].iter().all(|&x| x == F32.one_bits()));
         assert!((batch.waste() - (1.0 - 70.0 / 256.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pads_with_format_specific_one() {
+        let b = batcher(1024, 0);
+        let mut r = Router::new();
+        for i in 0..3 {
+            r.route(req_fmt(i, OpKind::Divide, FormatKind::F16));
+        }
+        let batch = b.form_batch(&mut r, OpKind::Divide, FormatKind::F16).unwrap();
+        assert_eq!(batch.format, FormatKind::F16);
+        assert_eq!(batch.padded, 64);
+        assert!(batch.a[3..].iter().all(|&x| x == 0x3C00)); // f16 1.0
+        assert!(batch.b[3..].iter().all(|&x| x == 0x3C00));
+    }
+
+    #[test]
+    fn empty_batch_wastes_nothing() {
+        // padded == 0 must not divide by zero (guard, not NaN)
+        let batch = Batch {
+            op: OpKind::Divide,
+            format: F32,
+            requests: Vec::new(),
+            a: Vec::new(),
+            b: Vec::new(),
+            padded: 0,
+        };
+        assert_eq!(batch.waste(), 0.0);
     }
 
     #[test]
@@ -231,10 +353,10 @@ mod tests {
         for i in 0..5 {
             r.route(req(i, OpKind::Divide));
         }
-        let batch = b.form_batch(&mut r, OpKind::Divide).unwrap();
+        let batch = b.form_batch(&mut r, OpKind::Divide, F32).unwrap();
         for (i, rq) in batch.requests.iter().enumerate() {
             assert_eq!(rq.id, i as u64);
-            assert_eq!(batch.a[i], i as f32 + 2.0);
+            assert_eq!(batch.a[i], (i as f32 + 2.0).to_bits() as u64);
         }
     }
 
@@ -254,6 +376,24 @@ mod tests {
     }
 
     #[test]
+    fn formats_batch_independently() {
+        // the same op in two formats never shares a batch
+        let b = batcher(1024, 0);
+        let mut r = Router::new();
+        for i in 0..10 {
+            let fmt = if i % 2 == 0 { FormatKind::F32 } else { FormatKind::F64 };
+            r.route(req_fmt(i, OpKind::Divide, fmt));
+        }
+        let batches = b.ready_batches(&mut r, Instant::now());
+        assert_eq!(batches.len(), 2);
+        for batch in &batches {
+            assert_eq!(batch.live(), 5);
+            assert!(batch.requests.iter().all(|x| x.format() == batch.format));
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
     fn never_exceeds_cap_property() {
         check::property("batch size <= cap, conservation", |g| {
             let cap = [64usize, 256, 1024][g.usize_in(0, 3)];
@@ -261,17 +401,24 @@ mod tests {
             let mut r = Router::new();
             let n = g.usize_in(0, 3000);
             for i in 0..n {
-                r.route(req(i as u64, OpKind::Divide));
+                let fmt = *g.pick(&FormatKind::ALL);
+                r.route(req_fmt(i as u64, OpKind::Divide, fmt));
             }
             let batches = b.flush_all(&mut r);
             let total: usize = batches.iter().map(|x| x.live()).sum();
             ensure(total == n, format!("lost requests: {total} != {n}"))?;
             for batch in &batches {
+                if batch.live() == 0 {
+                    return Err("flush_all formed an empty batch".into());
+                }
                 if batch.live() > cap {
                     return Err(format!("batch {} > cap {cap}", batch.live()));
                 }
                 if batch.padded < batch.live() {
                     return Err("padded < live".into());
+                }
+                if batch.requests.iter().any(|x| x.format() != batch.format) {
+                    return Err("mixed formats in one batch".into());
                 }
             }
             Ok(())
@@ -279,14 +426,16 @@ mod tests {
     }
 
     #[test]
-    fn flush_all_drains_every_op() {
+    fn flush_all_drains_every_op_and_format() {
         let b = batcher(256, 1_000_000);
         let mut r = Router::new();
         r.route(req(1, OpKind::Divide));
         r.route(req(2, OpKind::Sqrt));
         r.route(req(3, OpKind::Rsqrt));
+        r.route(req_fmt(4, OpKind::Divide, FormatKind::BF16));
         let batches = b.flush_all(&mut r);
-        assert_eq!(batches.len(), 3);
+        assert_eq!(batches.len(), 4);
+        assert!(batches.iter().all(|x| x.live() > 0));
         assert!(r.is_empty());
     }
 }

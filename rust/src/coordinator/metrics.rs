@@ -1,15 +1,19 @@
 //! Always-on service metrics: counters and latency histograms, shared
-//! between workers and readable while the service runs.
+//! between workers and readable while the service runs. Sliced per
+//! (op, format) — the same key the router queues and batch planes use —
+//! with per-op aggregates for the headline numbers.
 
 use std::sync::Mutex;
 
 use crate::util::stats::LogHistogram;
 
-use super::request::OpKind;
+use super::request::{FormatKind, op_format_slot, OP_FORMAT_SLOTS, OpKind};
 
-/// Per-op slice of the metrics.
+const SLOTS: usize = OP_FORMAT_SLOTS;
+
+/// Per-(op, format) slice of the metrics.
 #[derive(Clone, Debug, Default)]
-struct OpMetrics {
+struct SliceMetrics {
     requests: u64,
     batches: u64,
     padded_slots: u64,
@@ -21,23 +25,25 @@ struct OpMetrics {
 
 /// Shared metrics sink (interior mutability; cheap enough for the
 /// per-batch hot path — one lock per *batch*, not per request).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
-    inner: Mutex<[OpMetrics; 3]>,
+    inner: Mutex<[SliceMetrics; SLOTS]>,
 }
 
-fn idx(op: OpKind) -> usize {
-    match op {
-        OpKind::Divide => 0,
-        OpKind::Sqrt => 1,
-        OpKind::Rsqrt => 2,
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
     }
+}
+
+fn idx(op: OpKind, format: FormatKind) -> usize {
+    op_format_slot(op, format)
 }
 
 impl Metrics {
     /// Empty metrics.
     pub fn new() -> Self {
-        Self::default()
+        Self { inner: Mutex::new(std::array::from_fn(|_| SliceMetrics::default())) }
     }
 
     /// Record one executed batch: per-request latencies plus batch-level
@@ -45,12 +51,13 @@ impl Metrics {
     pub fn record_batch(
         &self,
         op: OpKind,
+        format: FormatKind,
         latencies_ns: &[u64],
         exec_ns: u64,
         padded: usize,
     ) {
         let mut m = self.inner.lock().expect("metrics poisoned");
-        let s = &mut m[idx(op)];
+        let s = &mut m[idx(op, format)];
         s.requests += latencies_ns.len() as u64;
         s.batches += 1;
         s.live_slots += latencies_ns.len() as u64;
@@ -62,52 +69,54 @@ impl Metrics {
     }
 
     /// Record a failed batch (all its requests error out).
-    pub fn record_error(&self, op: OpKind, count: u64) {
+    pub fn record_error(&self, op: OpKind, format: FormatKind, count: u64) {
         let mut m = self.inner.lock().expect("metrics poisoned");
-        m[idx(op)].errors += count;
+        m[idx(op, format)].errors += count;
     }
 
     /// Snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().expect("metrics poisoned");
-        MetricsSnapshot {
-            ops: OpKind::ALL
-                .iter()
-                .map(|&op| {
-                    let s = &m[idx(op)];
-                    OpSnapshot {
-                        op,
-                        requests: s.requests,
-                        batches: s.batches,
-                        errors: s.errors,
-                        mean_latency_ns: s.latency.mean(),
-                        p50_latency_ns: s.latency.quantile(0.5),
-                        p99_latency_ns: s.latency.quantile(0.99),
-                        mean_exec_ns: s.batch_exec_ns.mean(),
-                        occupancy: if s.padded_slots == 0 {
-                            1.0
-                        } else {
-                            s.live_slots as f64 / s.padded_slots as f64
-                        },
-                    }
-                })
-                .collect(),
+        let snap_of = |s: &SliceMetrics| OpSnapshotBody {
+            requests: s.requests,
+            batches: s.batches,
+            errors: s.errors,
+            mean_latency_ns: s.latency.mean(),
+            p50_latency_ns: s.latency.quantile(0.5),
+            p99_latency_ns: s.latency.quantile(0.99),
+            mean_exec_ns: s.batch_exec_ns.mean(),
+            occupancy: if s.padded_slots == 0 {
+                1.0
+            } else {
+                s.live_slots as f64 / s.padded_slots as f64
+            },
+        };
+        let mut op_formats = Vec::with_capacity(SLOTS);
+        let mut ops = Vec::with_capacity(OpKind::ALL.len());
+        for &op in &OpKind::ALL {
+            // aggregate the op's format slices (histograms merge exactly)
+            let mut agg = SliceMetrics::default();
+            for &format in &FormatKind::ALL {
+                let s = &m[idx(op, format)];
+                agg.requests += s.requests;
+                agg.batches += s.batches;
+                agg.padded_slots += s.padded_slots;
+                agg.live_slots += s.live_slots;
+                agg.errors += s.errors;
+                agg.latency.merge(&s.latency);
+                agg.batch_exec_ns.merge(&s.batch_exec_ns);
+                op_formats.push(OpFormatSnapshot { op, format, body: snap_of(s) });
+            }
+            ops.push(OpSnapshot { op, body: snap_of(&agg) });
         }
+        MetricsSnapshot { ops, op_formats }
     }
 }
 
-/// Immutable metrics snapshot.
-#[derive(Clone, Debug)]
-pub struct MetricsSnapshot {
-    /// Per-op snapshots in [`OpKind::ALL`] order.
-    pub ops: Vec<OpSnapshot>,
-}
-
-/// One op's snapshot.
+/// The measured quantities shared by per-op and per-(op, format)
+/// snapshots.
 #[derive(Clone, Copy, Debug)]
-pub struct OpSnapshot {
-    /// Which op.
-    pub op: OpKind,
+pub struct OpSnapshotBody {
     /// Requests completed.
     pub requests: u64,
     /// Batches executed.
@@ -126,10 +135,62 @@ pub struct OpSnapshot {
     pub occupancy: f64,
 }
 
+/// One op's aggregate snapshot (all formats merged).
+#[derive(Clone, Copy, Debug)]
+pub struct OpSnapshot {
+    /// Which op.
+    pub op: OpKind,
+    /// The measurements.
+    pub body: OpSnapshotBody,
+}
+
+impl std::ops::Deref for OpSnapshot {
+    type Target = OpSnapshotBody;
+    fn deref(&self) -> &OpSnapshotBody {
+        &self.body
+    }
+}
+
+/// One (op, format) slice's snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct OpFormatSnapshot {
+    /// Which op.
+    pub op: OpKind,
+    /// Which format.
+    pub format: FormatKind,
+    /// The measurements.
+    pub body: OpSnapshotBody,
+}
+
+impl std::ops::Deref for OpFormatSnapshot {
+    type Target = OpSnapshotBody;
+    fn deref(&self) -> &OpSnapshotBody {
+        &self.body
+    }
+}
+
+/// Immutable metrics snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Per-op aggregates in [`OpKind::ALL`] order.
+    pub ops: Vec<OpSnapshot>,
+    /// Per-(op, format) slices, ops-major in [`OpKind::ALL`] x
+    /// [`FormatKind::ALL`] order.
+    pub op_formats: Vec<OpFormatSnapshot>,
+}
+
 impl MetricsSnapshot {
-    /// Snapshot for one op.
+    /// Aggregate snapshot for one op (all formats).
     pub fn op(&self, op: OpKind) -> &OpSnapshot {
         self.ops.iter().find(|s| s.op == op).expect("all ops present")
+    }
+
+    /// Snapshot for one (op, format) slice.
+    pub fn op_format(&self, op: OpKind, format: FormatKind) -> &OpFormatSnapshot {
+        self.op_formats
+            .iter()
+            .find(|s| s.op == op && s.format == format)
+            .expect("all slices present")
     }
 
     /// Total completed requests.
@@ -147,12 +208,14 @@ impl MetricsSnapshot {
 mod tests {
     use super::*;
 
+    const F32: FormatKind = FormatKind::F32;
+
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_batch(OpKind::Divide, &[1000, 2000, 3000], 500, 4);
-        m.record_batch(OpKind::Divide, &[1500], 400, 64);
-        m.record_batch(OpKind::Sqrt, &[800], 300, 1);
+        m.record_batch(OpKind::Divide, F32, &[1000, 2000, 3000], 500, 4);
+        m.record_batch(OpKind::Divide, F32, &[1500], 400, 64);
+        m.record_batch(OpKind::Sqrt, F32, &[800], 300, 1);
         let s = m.snapshot();
         assert_eq!(s.op(OpKind::Divide).requests, 4);
         assert_eq!(s.op(OpKind::Divide).batches, 2);
@@ -165,9 +228,28 @@ mod tests {
     }
 
     #[test]
+    fn per_format_slices_are_isolated() {
+        let m = Metrics::new();
+        m.record_batch(OpKind::Divide, FormatKind::F32, &[1000, 1000], 500, 4);
+        m.record_batch(OpKind::Divide, FormatKind::F64, &[9000], 700, 8);
+        m.record_error(OpKind::Divide, FormatKind::F16, 3);
+        let s = m.snapshot();
+        assert_eq!(s.op_format(OpKind::Divide, FormatKind::F32).requests, 2);
+        assert_eq!(s.op_format(OpKind::Divide, FormatKind::F64).requests, 1);
+        assert_eq!(s.op_format(OpKind::Divide, FormatKind::F16).errors, 3);
+        assert_eq!(s.op_format(OpKind::Divide, FormatKind::BF16).requests, 0);
+        // the op aggregate sums the slices
+        assert_eq!(s.op(OpKind::Divide).requests, 3);
+        assert_eq!(s.op(OpKind::Divide).batches, 2);
+        assert_eq!(s.op(OpKind::Divide).errors, 3);
+        let occ = s.op(OpKind::Divide).occupancy;
+        assert!((occ - 3.0 / 12.0).abs() < 1e-9, "{occ}");
+    }
+
+    #[test]
     fn errors_counted() {
         let m = Metrics::new();
-        m.record_error(OpKind::Rsqrt, 7);
+        m.record_error(OpKind::Rsqrt, F32, 7);
         assert_eq!(m.snapshot().total_errors(), 7);
         assert_eq!(m.snapshot().op(OpKind::Rsqrt).errors, 7);
     }
@@ -177,6 +259,7 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.total_requests(), 0);
         assert_eq!(s.op(OpKind::Divide).occupancy, 1.0);
+        assert_eq!(s.op_formats.len(), 12);
     }
 
     #[test]
@@ -188,7 +271,7 @@ mod tests {
             let m = m.clone();
             handles.push(std::thread::spawn(move || {
                 for _ in 0..100 {
-                    m.record_batch(OpKind::Divide, &[100], 50, 1);
+                    m.record_batch(OpKind::Divide, F32, &[100], 50, 1);
                 }
             }));
         }

@@ -4,21 +4,30 @@
 //! Request path (all rust, no Python):
 //!
 //! ```text
-//! clients ──submit()──> bounded queue ──> Router ──> per-op queues
-//!                                              │
+//! clients ──submit()──> bounded queue ──> Router ──> per-(op, format)
+//!                                              │      queues
 //!                                       DynamicBatcher (size/age policy,
 //!                                              │        ladder padding)
 //!                                     worker pool: Executor::execute
-//!                                              │  (PJRT AOT executables)
+//!                                              │  (format-dispatched
+//!                                              │   batch kernels / PJRT)
 //!                                        per-request responses
 //! ```
 //!
-//! * [`request`] — request/response types and op kinds.
-//! * [`router`] — fans requests out to per-op queues (conservation is
-//!   property-tested).
+//! Every request carries a format-tagged [`Value`] pair; the
+//! (op, IEEE format) pair is the routing key end to end — queues,
+//! batches, executor dispatch and metrics are all sliced by it, so an
+//! f16 inference workload and an f64 scientific workload batch
+//! independently on the same service.
+//!
+//! * [`request`] — request/response types, op kinds, and the format
+//!   tags re-exported from [`crate::formats`].
+//! * [`router`] — fans requests out to per-(op, format) queues
+//!   (conservation and format purity are property-tested).
 //! * [`batcher`] — dynamic batching: flush on max-size or max-age,
-//!   padding to the artifact batch ladder.
-//! * [`metrics`] — always-on counters + latency histograms.
+//!   padding to the artifact batch ladder with the format's `1.0`.
+//! * [`metrics`] — always-on counters + latency histograms, per
+//!   (op, format) with per-op aggregates.
 //! * [`service`] — the threaded service: lifecycle, backpressure,
 //!   worker pool.
 
@@ -28,8 +37,8 @@ pub mod request;
 pub mod router;
 pub mod service;
 
-pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{OpKind, Request, Response};
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use metrics::{Metrics, MetricsSnapshot, OpFormatSnapshot, OpSnapshot};
+pub use request::{FormatKind, OpKind, Request, Response, Value};
 pub use router::Router;
 pub use service::{FpuService, ServiceConfig, ServiceHandle};

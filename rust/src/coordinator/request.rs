@@ -3,6 +3,8 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+pub use crate::formats::{FormatKind, Value};
+
 /// The operations the divider unit serves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum OpKind {
@@ -17,6 +19,15 @@ pub enum OpKind {
 impl OpKind {
     /// All op kinds, in routing order.
     pub const ALL: [OpKind; 3] = [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt];
+
+    /// Dense index (for per-op tables: queues, metrics).
+    pub fn index(&self) -> usize {
+        match self {
+            OpKind::Divide => 0,
+            OpKind::Sqrt => 1,
+            OpKind::Rsqrt => 2,
+        }
+    }
 
     /// Number of operands.
     pub fn arity(&self) -> u32 {
@@ -46,7 +57,10 @@ impl OpKind {
     }
 }
 
-/// A unit of work travelling through the coordinator.
+/// A unit of work travelling through the coordinator. The operands are
+/// format-tagged [`Value`]s; [`Request::format`] (derived from the
+/// first operand, so it can never desync from the payload) is the
+/// routing key the per-(op, format) queues and batch planes use.
 #[derive(Debug)]
 pub struct Request {
     /// Unique id (assigned by the service handle).
@@ -54,13 +68,32 @@ pub struct Request {
     /// Operation.
     pub op: OpKind,
     /// First operand.
-    pub a: f32,
-    /// Second operand (ignored for unary ops).
-    pub b: f32,
+    pub a: Value,
+    /// Second operand (`1.0` in the request format for unary ops;
+    /// must share `a`'s format — the service handle enforces this at
+    /// submit time).
+    pub b: Value,
     /// Enqueue timestamp (for latency accounting and age-based flush).
     pub enqueued_at: Instant,
     /// Where the response goes.
     pub reply: mpsc::Sender<Response>,
+}
+
+impl Request {
+    /// The IEEE format this request is served in (the first operand's
+    /// tag — structural, not stored).
+    pub fn format(&self) -> FormatKind {
+        self.a.format()
+    }
+}
+
+/// Number of (op, format) routing slots.
+pub(crate) const OP_FORMAT_SLOTS: usize = OpKind::ALL.len() * FormatKind::ALL.len();
+
+/// Dense (op, format) slot index — the one layout shared by the
+/// router's queues, the metrics slices and the batcher's ladders.
+pub(crate) fn op_format_slot(op: OpKind, format: FormatKind) -> usize {
+    op.index() * FormatKind::ALL.len() + format.index()
 }
 
 /// The service's answer to one request.
@@ -68,8 +101,9 @@ pub struct Request {
 pub struct Response {
     /// Echoes the request id.
     pub id: u64,
-    /// Result value (NaN propagated per IEEE semantics).
-    pub value: f32,
+    /// Result value in the request's format (NaN propagated per IEEE
+    /// semantics).
+    pub value: Value,
     /// End-to-end latency in nanoseconds.
     pub latency_ns: u64,
     /// Size of the batch this request rode in (for diagnostics).
@@ -103,5 +137,18 @@ mod tests {
         labels.sort_unstable();
         labels.dedup();
         assert_eq!(labels.len(), 3);
+        let mut idxs: Vec<_> = OpKind::ALL.iter().map(|o| o.index()).collect();
+        idxs.sort_unstable();
+        assert_eq!(idxs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn value_round_trips_through_response_plane() {
+        for kind in FormatKind::ALL {
+            let v = Value::from_f64(kind, 2.5);
+            assert_eq!(v.format(), kind);
+            assert_eq!(Value::from_bits(kind, v.bits()), v);
+            assert_eq!(v.to_f64(), 2.5);
+        }
     }
 }

@@ -1,44 +1,54 @@
-//! Request router: fans incoming requests into per-op queues.
+//! Request router: fans incoming requests into per-(op, format) queues.
 //!
-//! The router is deliberately simple — op kind is the only routing key
-//! the FPU needs — but it enforces the invariants the batcher relies
-//! on: FIFO order within an op, and conservation (every request routed
-//! exactly once, none dropped, none duplicated).
+//! The router is deliberately simple — (op kind, IEEE format) is the
+//! full routing key the FPU needs — but it enforces the invariants the
+//! batcher relies on: FIFO order within a queue, format purity (a
+//! queue's requests all share one format, so a batch's planes are
+//! uniform), and conservation (every request routed exactly once, none
+//! dropped, none duplicated).
 
 use std::collections::VecDeque;
 
-use super::request::{OpKind, Request};
+use super::request::{FormatKind, op_format_slot as slot, OP_FORMAT_SLOTS, OpKind, Request};
 
-/// Per-op FIFO queues.
-#[derive(Debug, Default)]
+/// Per-(op, format) FIFO queues.
+#[derive(Debug)]
 pub struct Router {
-    divide: VecDeque<Request>,
-    sqrt: VecDeque<Request>,
-    rsqrt: VecDeque<Request>,
+    queues: [VecDeque<Request>; OP_FORMAT_SLOTS],
     routed: u64,
     drained: u64,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Router {
     /// Empty router.
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            queues: std::array::from_fn(|_| VecDeque::new()),
+            routed: 0,
+            drained: 0,
+        }
     }
 
-    /// Route one request to its op queue.
+    /// Route one request to its (op, format) queue.
     pub fn route(&mut self, req: Request) {
         self.routed += 1;
-        self.queue_mut(req.op).push_back(req);
+        self.queues[slot(req.op, req.format())].push_back(req);
     }
 
-    /// Queue length for an op.
-    pub fn len(&self, op: OpKind) -> usize {
-        self.queue(op).len()
+    /// Queue length for an (op, format) pair.
+    pub fn len(&self, op: OpKind, format: FormatKind) -> usize {
+        self.queues[slot(op, format)].len()
     }
 
-    /// Total queued across ops.
+    /// Total queued across all queues.
     pub fn total_len(&self) -> usize {
-        OpKind::ALL.iter().map(|&op| self.len(op)).sum()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     /// True when nothing is queued.
@@ -46,17 +56,19 @@ impl Router {
         self.total_len() == 0
     }
 
-    /// Oldest enqueue time across all queues (drives age-based flush).
-    pub fn oldest_enqueue(&self) -> Option<std::time::Instant> {
-        OpKind::ALL
-            .iter()
-            .filter_map(|&op| self.queue(op).front().map(|r| r.enqueued_at))
-            .min()
+    /// Oldest enqueue time in one (op, format) queue (FIFO: its front).
+    pub fn oldest_enqueue_in(&self, op: OpKind, format: FormatKind) -> Option<std::time::Instant> {
+        self.queues[slot(op, format)].front().map(|r| r.enqueued_at)
     }
 
-    /// Pop up to `max` requests from one op queue, FIFO.
-    pub fn drain(&mut self, op: OpKind, max: usize) -> Vec<Request> {
-        let q = self.queue_mut(op);
+    /// Oldest enqueue time across all queues (drives idle wake-up).
+    pub fn oldest_enqueue(&self) -> Option<std::time::Instant> {
+        self.queues.iter().filter_map(|q| q.front().map(|r| r.enqueued_at)).min()
+    }
+
+    /// Pop up to `max` requests from one (op, format) queue, FIFO.
+    pub fn drain(&mut self, op: OpKind, format: FormatKind, max: usize) -> Vec<Request> {
+        let q = &mut self.queues[slot(op, format)];
         let take = max.min(q.len());
         let out: Vec<Request> = q.drain(..take).collect();
         self.drained += out.len() as u64;
@@ -68,36 +80,32 @@ impl Router {
     pub fn counters(&self) -> (u64, u64) {
         (self.routed, self.drained)
     }
-
-    fn queue(&self, op: OpKind) -> &VecDeque<Request> {
-        match op {
-            OpKind::Divide => &self.divide,
-            OpKind::Sqrt => &self.sqrt,
-            OpKind::Rsqrt => &self.rsqrt,
-        }
-    }
-
-    fn queue_mut(&mut self, op: OpKind) -> &mut VecDeque<Request> {
-        match op {
-            OpKind::Divide => &mut self.divide,
-            OpKind::Sqrt => &mut self.sqrt,
-            OpKind::Rsqrt => &mut self.rsqrt,
-        }
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::check::{self, ensure};
+    use crate::formats::Value;
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn req(id: u64, op: OpKind) -> Request {
+    fn req_fmt(id: u64, op: OpKind, format: FormatKind) -> Request {
         let (tx, _rx) = mpsc::channel();
         // keep rx alive by leaking in tests that don't need replies
         std::mem::forget(_rx);
-        Request { id, op, a: 1.0, b: 1.0, enqueued_at: Instant::now(), reply: tx }
+        Request {
+            id,
+            op,
+            a: Value::one(format),
+            b: Value::one(format),
+            enqueued_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn req(id: u64, op: OpKind) -> Request {
+        req_fmt(id, op, FormatKind::F32)
     }
 
     #[test]
@@ -106,10 +114,29 @@ mod tests {
         r.route(req(1, OpKind::Divide));
         r.route(req(2, OpKind::Sqrt));
         r.route(req(3, OpKind::Divide));
-        assert_eq!(r.len(OpKind::Divide), 2);
-        assert_eq!(r.len(OpKind::Sqrt), 1);
-        assert_eq!(r.len(OpKind::Rsqrt), 0);
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F32), 2);
+        assert_eq!(r.len(OpKind::Sqrt, FormatKind::F32), 1);
+        assert_eq!(r.len(OpKind::Rsqrt, FormatKind::F32), 0);
         assert_eq!(r.total_len(), 3);
+    }
+
+    #[test]
+    fn routes_by_format_within_one_op() {
+        let mut r = Router::new();
+        r.route(req_fmt(1, OpKind::Divide, FormatKind::F32));
+        r.route(req_fmt(2, OpKind::Divide, FormatKind::F64));
+        r.route(req_fmt(3, OpKind::Divide, FormatKind::F16));
+        r.route(req_fmt(4, OpKind::Divide, FormatKind::F64));
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F32), 1);
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F64), 2);
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F16), 1);
+        assert_eq!(r.len(OpKind::Divide, FormatKind::BF16), 0);
+        // draining one format leaves the others untouched
+        let got = r.drain(OpKind::Divide, FormatKind::F64, 10);
+        assert_eq!(got.iter().map(|x| x.id).collect::<Vec<_>>(), vec![2, 4]);
+        assert!(got.iter().all(|x| x.format() == FormatKind::F64));
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F32), 1);
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F16), 1);
     }
 
     #[test]
@@ -118,9 +145,9 @@ mod tests {
         for id in 0..10 {
             r.route(req(id, OpKind::Divide));
         }
-        let got = r.drain(OpKind::Divide, 4);
+        let got = r.drain(OpKind::Divide, FormatKind::F32, 4);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
-        let got = r.drain(OpKind::Divide, 100);
+        let got = r.drain(OpKind::Divide, FormatKind::F32, 100);
         assert_eq!(got.first().unwrap().id, 4);
         assert_eq!(got.len(), 6);
     }
@@ -132,13 +159,13 @@ mod tests {
             let mut routed = 0u64;
             let mut drained = 0u64;
             for step in 0..g.usize_in(1, 60) {
+                let op = *g.pick(&OpKind::ALL);
+                let fmt = *g.pick(&FormatKind::ALL);
                 if g.chance(0.6) {
-                    let op = *g.pick(&OpKind::ALL);
-                    r.route(req(step as u64, op));
+                    r.route(req_fmt(step as u64, op, fmt));
                     routed += 1;
                 } else {
-                    let op = *g.pick(&OpKind::ALL);
-                    drained += r.drain(op, g.usize_in(0, 8) + 1).len() as u64;
+                    drained += r.drain(op, fmt, g.usize_in(0, 8) + 1).len() as u64;
                 }
             }
             let (cr, cd) = r.counters();
@@ -158,15 +185,18 @@ mod tests {
         let t0 = first.enqueued_at;
         r.route(first);
         std::thread::sleep(std::time::Duration::from_millis(1));
-        r.route(req(2, OpKind::Divide));
+        r.route(req_fmt(2, OpKind::Divide, FormatKind::F64));
         assert_eq!(r.oldest_enqueue().unwrap(), t0);
+        assert_eq!(r.oldest_enqueue_in(OpKind::Sqrt, FormatKind::F32).unwrap(), t0);
+        assert!(r.oldest_enqueue_in(OpKind::Divide, FormatKind::F64).unwrap() > t0);
+        assert!(r.oldest_enqueue_in(OpKind::Divide, FormatKind::F32).is_none());
     }
 
     #[test]
     fn drain_more_than_queued() {
         let mut r = Router::new();
         r.route(req(1, OpKind::Rsqrt));
-        let got = r.drain(OpKind::Rsqrt, 10);
+        let got = r.drain(OpKind::Rsqrt, FormatKind::F32, 10);
         assert_eq!(got.len(), 1);
         assert!(r.is_empty());
     }

@@ -26,7 +26,7 @@ use crate::runtime::executor::Executor;
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
-use super::request::{OpKind, Request, Response};
+use super::request::{FormatKind, OpKind, Request, Response, Value};
 use super::router::Router;
 
 /// Service configuration.
@@ -66,9 +66,15 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Submit one op; returns the receiver for its [`Response`].
-    /// Blocks while the submit queue is full (backpressure).
-    pub fn submit(&self, op: OpKind, a: f32, b: f32) -> Result<mpsc::Receiver<Response>> {
+    fn make_request(
+        &self,
+        op: OpKind,
+        a: Value,
+        b: Value,
+    ) -> Result<(Request, mpsc::Receiver<Response>)> {
+        if a.format() != b.format() {
+            bail!("operand format mismatch: {} vs {}", a.format(), b.format());
+        }
         let (reply, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -78,28 +84,35 @@ impl ServiceHandle {
             enqueued_at: Instant::now(),
             reply,
         };
+        Ok((req, rx))
+    }
+
+    /// Submit one op on format-tagged operands; returns the receiver for
+    /// its [`Response`]. Blocks while the submit queue is full
+    /// (backpressure). Both operands must share a format (pass
+    /// `Value::one(format)` as `b` for unary ops).
+    pub fn submit_value(&self, op: OpKind, a: Value, b: Value) -> Result<mpsc::Receiver<Response>> {
+        let (req, rx) = self.make_request(op, a, b)?;
         if self.tx.send(DispatchMsg::Req(req)).is_err() {
             bail!("service is shut down");
         }
         Ok(rx)
     }
 
-    /// Non-blocking submit: `Ok(None)` when the queue is full.
-    pub fn try_submit(
+    /// Submit one f32 op (the single-precision convenience path).
+    pub fn submit(&self, op: OpKind, a: f32, b: f32) -> Result<mpsc::Receiver<Response>> {
+        self.submit_value(op, Value::F32(a), Value::F32(b))
+    }
+
+    /// Non-blocking submit of format-tagged operands: `Ok(None)` when
+    /// the queue is full.
+    pub fn try_submit_value(
         &self,
         op: OpKind,
-        a: f32,
-        b: f32,
+        a: Value,
+        b: Value,
     ) -> Result<Option<mpsc::Receiver<Response>>> {
-        let (reply, rx) = mpsc::channel();
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            op,
-            a,
-            b,
-            enqueued_at: Instant::now(),
-            reply,
-        };
+        let (req, rx) = self.make_request(op, a, b)?;
         match self.tx.try_send(DispatchMsg::Req(req)) {
             Ok(()) => Ok(Some(rx)),
             Err(TrySendError::Full(_)) => Ok(None),
@@ -107,19 +120,55 @@ impl ServiceHandle {
         }
     }
 
-    /// Convenience: blocking round-trip divide.
+    /// Non-blocking f32 submit: `Ok(None)` when the queue is full.
+    pub fn try_submit(
+        &self,
+        op: OpKind,
+        a: f32,
+        b: f32,
+    ) -> Result<Option<mpsc::Receiver<Response>>> {
+        self.try_submit_value(op, Value::F32(a), Value::F32(b))
+    }
+
+    /// Convenience: blocking round-trip divide (f32).
     pub fn divide(&self, n: f32, d: f32) -> Result<f32> {
-        Ok(self.submit(OpKind::Divide, n, d)?.recv()?.value)
+        Ok(self.submit(OpKind::Divide, n, d)?.recv()?.value.f32())
     }
 
-    /// Convenience: blocking round-trip sqrt.
+    /// Convenience: blocking round-trip sqrt (f32).
     pub fn sqrt(&self, x: f32) -> Result<f32> {
-        Ok(self.submit(OpKind::Sqrt, x, 1.0)?.recv()?.value)
+        Ok(self.submit(OpKind::Sqrt, x, 1.0)?.recv()?.value.f32())
     }
 
-    /// Convenience: blocking round-trip rsqrt.
+    /// Convenience: blocking round-trip rsqrt (f32).
     pub fn rsqrt(&self, x: f32) -> Result<f32> {
-        Ok(self.submit(OpKind::Rsqrt, x, 1.0)?.recv()?.value)
+        Ok(self.submit(OpKind::Rsqrt, x, 1.0)?.recv()?.value.f32())
+    }
+
+    /// Convenience: blocking round-trip divide in any format (operands
+    /// encoded from f64 with round-to-nearest-even, result decoded
+    /// exactly).
+    pub fn divide_in(&self, format: FormatKind, n: f64, d: f64) -> Result<f64> {
+        let rx = self.submit_value(
+            OpKind::Divide,
+            Value::from_f64(format, n),
+            Value::from_f64(format, d),
+        )?;
+        Ok(rx.recv()?.value.to_f64())
+    }
+
+    /// Convenience: blocking round-trip sqrt in any format.
+    pub fn sqrt_in(&self, format: FormatKind, x: f64) -> Result<f64> {
+        let rx =
+            self.submit_value(OpKind::Sqrt, Value::from_f64(format, x), Value::one(format))?;
+        Ok(rx.recv()?.value.to_f64())
+    }
+
+    /// Convenience: blocking round-trip rsqrt in any format.
+    pub fn rsqrt_in(&self, format: FormatKind, x: f64) -> Result<f64> {
+        let rx =
+            self.submit_value(OpKind::Rsqrt, Value::from_f64(format, x), Value::one(format))?;
+        Ok(rx.recv()?.value.to_f64())
     }
 }
 
@@ -146,13 +195,21 @@ impl FpuService {
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::sync_channel::<DispatchMsg>(config.queue_depth);
 
-        // probe executor: validates the factory up front + batch ladder
+        // probe executor: validates the factory up front + batch ladders
         let probe = make_executor()?;
-        let ladders: Vec<(OpKind, Vec<usize>)> =
-            OpKind::ALL.iter().map(|&op| (op, probe.batch_ladder(op))).collect();
+        let mut ladders: Vec<(OpKind, FormatKind, Vec<usize>)> = Vec::new();
+        for &op in &OpKind::ALL {
+            for &format in &FormatKind::ALL {
+                ladders.push((op, format, probe.batch_ladder(op, format)));
+            }
+        }
         drop(probe);
-        let batcher = DynamicBatcher::new(config.batcher, move |op| {
-            ladders.iter().find(|(o, _)| *o == op).map(|(_, l)| l.clone()).unwrap_or_default()
+        let batcher = DynamicBatcher::new(config.batcher, move |op, format| {
+            ladders
+                .iter()
+                .find(|(o, f, _)| *o == op && *f == format)
+                .map(|(_, _, l)| l.clone())
+                .unwrap_or_default()
         });
 
         // worker channels: dispatcher round-robins batches across them
@@ -275,6 +332,7 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, metrics: Ar
         let t0 = Instant::now();
         let result = executor.execute(
             batch.op,
+            batch.format,
             &batch.a,
             if batch.op == OpKind::Divide { Some(&batch.b) } else { None },
         );
@@ -289,11 +347,11 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, metrics: Ar
                     .collect();
                 // record metrics BEFORE replying: once a client observes
                 // its response, the snapshot already includes it
-                metrics.record_batch(batch.op, &latencies, exec_ns, batch.padded);
+                metrics.record_batch(batch.op, batch.format, &latencies, exec_ns, batch.padded);
                 for (i, req) in batch.requests.iter().enumerate() {
                     let _ = req.reply.send(Response {
                         id: req.id,
-                        value: values[i],
+                        value: Value::from_bits(batch.format, values[i]),
                         latency_ns: latencies[i],
                         batch_size: batch.padded,
                     });
@@ -302,7 +360,7 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, metrics: Ar
             Err(_) => {
                 // fail the whole batch: drop reply senders (receivers see
                 // RecvError) and count the errors
-                metrics.record_error(batch.op, batch.requests.len() as u64);
+                metrics.record_error(batch.op, batch.format, batch.requests.len() as u64);
             }
         }
     }
@@ -333,6 +391,42 @@ mod tests {
         assert_eq!(h.divide(10.0, 4.0).unwrap(), 2.5);
         assert_eq!(h.sqrt(81.0).unwrap(), 9.0);
         assert_eq!(h.rsqrt(4.0).unwrap(), 0.5);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn round_trip_every_format() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let h = svc.handle();
+        for format in FormatKind::ALL {
+            assert_eq!(h.divide_in(format, 10.0, 4.0).unwrap(), 2.5, "{format}");
+            assert_eq!(h.sqrt_in(format, 81.0).unwrap(), 9.0, "{format}");
+            assert_eq!(h.rsqrt_in(format, 4.0).unwrap(), 0.5, "{format}");
+            // the response carries the request's format tag
+            let rx = h
+                .submit_value(
+                    OpKind::Divide,
+                    Value::from_f64(format, 6.0),
+                    Value::from_f64(format, 2.0),
+                )
+                .unwrap();
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.value.format(), format);
+            assert_eq!(resp.value.to_f64(), 3.0);
+        }
+        let snap = svc.metrics().snapshot();
+        for format in FormatKind::ALL {
+            assert!(snap.op_format(OpKind::Divide, format).requests >= 2, "{format}");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_format_operands_rejected() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let h = svc.handle();
+        let err = h.submit_value(OpKind::Divide, Value::F32(1.0), Value::F64(2.0));
+        assert!(err.is_err());
         svc.shutdown();
     }
 
@@ -371,7 +465,7 @@ mod tests {
         let mut max_batch = 0usize;
         for (i, rx) in rxs.into_iter().enumerate() {
             let resp = rx.recv().unwrap();
-            assert_eq!(resp.value, i as f32);
+            assert_eq!(resp.value.f32(), i as f32);
             max_batch = max_batch.max(resp.batch_size);
         }
         assert!(max_batch > 1, "no batching happened");
@@ -388,7 +482,7 @@ mod tests {
             (0..10).map(|i| h.submit(OpKind::Sqrt, (i * i) as f32, 1.0).unwrap()).collect();
         svc.shutdown(); // must flush the waiting batch
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap().value, i as f32);
+            assert_eq!(rx.recv().unwrap().value.f32(), i as f32);
         }
     }
 
@@ -409,7 +503,7 @@ mod tests {
         let rxs: Vec<_> =
             (1..=500).map(|i| h.submit(OpKind::Divide, (2 * i) as f32, 2.0).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap().value, (i + 1) as f32);
+            assert_eq!(rx.recv().unwrap().value.f32(), (i + 1) as f32);
         }
         svc.shutdown();
     }
@@ -418,10 +512,16 @@ mod tests {
     fn failing_executor_reports_errors() {
         struct Failing;
         impl Executor for Failing {
-            fn batch_ladder(&self, _op: OpKind) -> Vec<usize> {
+            fn batch_ladder(&self, _op: OpKind, _format: FormatKind) -> Vec<usize> {
                 vec![64]
             }
-            fn execute(&mut self, _: OpKind, _: &[f32], _: Option<&[f32]>) -> Result<Vec<f32>> {
+            fn execute(
+                &mut self,
+                _: OpKind,
+                _: FormatKind,
+                _: &[u64],
+                _: Option<&[u64]>,
+            ) -> Result<Vec<u64>> {
                 bail!("injected failure")
             }
             fn name(&self) -> &'static str {

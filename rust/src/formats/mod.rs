@@ -1,0 +1,778 @@
+//! The multi-precision format plane: IEEE-754 geometry as data, serving
+//! f16 / bf16 / f32 / f64 through one datapath implementation.
+//!
+//! # Why a formats subsystem
+//!
+//! The paper's reorganized datapath (one ROM, two parallel multipliers,
+//! a complement block) is *geometry-agnostic*: nothing in the
+//! Goldschmidt iteration depends on the IEEE container — only the
+//! sign/exponent/mantissa split at the boundary does. This module
+//! captures that boundary once, generically:
+//!
+//! * [`FloatFormat`] — a zero-sized type per IEEE format carrying the
+//!   field geometry as associated constants (monomorphized, so the
+//!   pack/unpack code compiles to straight-line bit twiddling per
+//!   format, with no runtime dispatch).
+//! * [`FormatKind`] — the matching runtime tag the coordinator threads
+//!   through requests, queues, batches and metrics.
+//! * [`classify`] / [`unpack`] / [`pack`] — the shared FPU boundary:
+//!   classification, subnormal-normalizing decomposition into a
+//!   [`Fixed`] mantissa in `[1, 2)`, and round-to-nearest-even
+//!   recomposition (overflow to infinity, graceful subnormal underflow).
+//! * [`divide_via_bits`] / [`sqrt_via_bits`] / [`rsqrt_via_bits`] — the
+//!   IEEE special-case envelopes around a mantissa-core closure, shared
+//!   by the scalar reference paths and the batch kernels.
+//! * [`Value`] — a format-tagged scalar for the request/response plane
+//!   (f16/bf16 carried as raw bit patterns; Rust has no native type).
+//!
+//! # Geometry -> paper hardware mapping
+//!
+//! Each format instantiates the paper's datapath at a different word
+//! width. With the shared `p = 10` reciprocal/rsqrt ROM (1024 entries,
+//! `p+2 = 12` output bits), the per-format derivation is:
+//!
+//! | format | mant bits | datapath frac | multiplier width | steps (bound) |
+//! |--------|-----------|---------------|------------------|---------------|
+//! | bf16   | 7         | 20 (13 guard) | 22 x 22          | 1 (0)         |
+//! | f16    | 10        | 20 (10 guard) | 22 x 22          | 2 (1)         |
+//! | f32    | 23        | 30 ( 7 guard) | 32 x 32          | 3 (2)         |
+//! | f64    | 52        | 58 ( 6 guard) | 60 x 60          | 4 (3)         |
+//!
+//! "multiplier width" is `frac + 2` (the Q2.frac datapath word — the
+//! paper's MULT 1 / MULT 2 operand width); "steps" is the programmed
+//! logic-block counter, the paper's §III knob, set one above the
+//! analytic bound from [`Config::steps_for_accuracy`] (quadratic
+//! convergence from the table error `1.5 * 2^-(p+1)`) so rounding noise
+//! in the narrowed products never surfaces. [`FormatKind::datapath_config`]
+//! encodes this table.
+
+use crate::arith::fixed::{narrow_u128, Fixed, Rounding};
+use crate::goldschmidt::config::Config;
+
+/// Classification of inputs the mantissa datapath does not handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpClass {
+    /// Normal or subnormal nonzero finite value (datapath-eligible;
+    /// subnormals are normalized with an exponent adjustment).
+    Finite,
+    /// Positive or negative zero.
+    Zero,
+    /// Infinity.
+    Inf,
+    /// Not a number.
+    Nan,
+}
+
+/// Runtime format tag: the routing key the coordinator carries alongside
+/// [`OpKind`](crate::coordinator::request::OpKind).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FormatKind {
+    /// IEEE binary16 (half precision).
+    F16,
+    /// bfloat16 (f32's exponent range, 7 mantissa bits).
+    BF16,
+    /// IEEE binary32 (single precision).
+    F32,
+    /// IEEE binary64 (double precision — EIMMW-2000's native format).
+    F64,
+}
+
+impl FormatKind {
+    /// All formats, in routing order.
+    pub const ALL: [FormatKind; 4] = [
+        FormatKind::F16,
+        FormatKind::BF16,
+        FormatKind::F32,
+        FormatKind::F64,
+    ];
+
+    /// Dense index (for per-format tables: queues, metrics, contexts).
+    pub fn index(self) -> usize {
+        match self {
+            FormatKind::F16 => 0,
+            FormatKind::BF16 => 1,
+            FormatKind::F32 => 2,
+            FormatKind::F64 => 3,
+        }
+    }
+
+    /// Stable label for metrics/tables/CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            FormatKind::F16 => "f16",
+            FormatKind::BF16 => "bf16",
+            FormatKind::F32 => "f32",
+            FormatKind::F64 => "f64",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "f16" | "half" => Ok(FormatKind::F16),
+            "bf16" | "bfloat16" => Ok(FormatKind::BF16),
+            "f32" | "single" => Ok(FormatKind::F32),
+            "f64" | "double" => Ok(FormatKind::F64),
+            other => Err(format!("unknown format {other:?} (f16|bf16|f32|f64)")),
+        }
+    }
+
+    /// Container width in bits.
+    pub fn total_bits(self) -> u32 {
+        match self {
+            FormatKind::F16 | FormatKind::BF16 => 16,
+            FormatKind::F32 => 32,
+            FormatKind::F64 => 64,
+        }
+    }
+
+    /// Mantissa field width in bits.
+    pub fn mant_bits(self) -> u32 {
+        match self {
+            FormatKind::F16 => F16::MANT_BITS,
+            FormatKind::BF16 => BF16::MANT_BITS,
+            FormatKind::F32 => F32::MANT_BITS,
+            FormatKind::F64 => F64::MANT_BITS,
+        }
+    }
+
+    /// The bit pattern of `1.0` in this format (the batcher's neutral
+    /// padding operand).
+    pub fn one_bits(self) -> u64 {
+        match self {
+            FormatKind::F16 => (F16::BIAS as u64) << F16::MANT_BITS,
+            FormatKind::BF16 => (BF16::BIAS as u64) << BF16::MANT_BITS,
+            FormatKind::F32 => (F32::BIAS as u64) << F32::MANT_BITS,
+            FormatKind::F64 => (F64::BIAS as u64) << F64::MANT_BITS,
+        }
+    }
+
+    /// The paper's datapath instantiated for this format: shared p=10
+    /// ROM, per-format fraction width (mantissa + guard bits) and
+    /// refinement count (one above the analytic
+    /// [`Config::steps_for_accuracy`] bound — see the module table).
+    pub fn datapath_config(self) -> Config {
+        match self {
+            FormatKind::F16 => Config::default().with_frac(20).with_steps(2),
+            FormatKind::BF16 => Config::default().with_frac(20).with_steps(1),
+            FormatKind::F32 => Config::default(),
+            FormatKind::F64 => Config::double(),
+        }
+    }
+}
+
+impl std::fmt::Display for FormatKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// IEEE-754 field geometry as associated constants. Implementors are
+/// zero-sized tags; every helper in this module monomorphizes over them
+/// so each format gets branch-free pack/unpack code.
+///
+/// Raw bit patterns travel as `u64` regardless of container width (the
+/// upper bits are zero) — one plane type serves every format in the SoA
+/// kernels and the coordinator.
+pub trait FloatFormat: Copy + Send + Sync + 'static {
+    /// The matching runtime tag.
+    const KIND: FormatKind;
+    /// Container width in bits (16 / 32 / 64).
+    const BITS: u32;
+    /// Exponent field width.
+    const EXP_BITS: u32;
+    /// Mantissa (fraction) field width.
+    const MANT_BITS: u32;
+
+    // ---- derived geometry (never override) ----------------------------
+    /// Exponent bias.
+    const BIAS: i32 = (1i32 << (Self::EXP_BITS - 1)) - 1;
+    /// Minimum normal exponent.
+    const EXP_MIN: i32 = 1 - Self::BIAS;
+    /// Maximum normal exponent.
+    const EXP_MAX: i32 = Self::BIAS;
+    /// Exponent field mask (in place at bit 0).
+    const EXP_MASK: u64 = (1u64 << Self::EXP_BITS) - 1;
+    /// Mantissa field mask.
+    const MANT_MASK: u64 = (1u64 << Self::MANT_BITS) - 1;
+    /// Sign bit mask.
+    const SIGN_MASK: u64 = 1u64 << (Self::BITS - 1);
+    /// Positive infinity bit pattern.
+    const INF: u64 = Self::EXP_MASK << Self::MANT_BITS;
+    /// Canonical quiet NaN bit pattern.
+    const QNAN: u64 = (Self::EXP_MASK << Self::MANT_BITS) | (1u64 << (Self::MANT_BITS - 1));
+}
+
+/// IEEE binary16.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct F16;
+impl FloatFormat for F16 {
+    const KIND: FormatKind = FormatKind::F16;
+    const BITS: u32 = 16;
+    const EXP_BITS: u32 = 5;
+    const MANT_BITS: u32 = 10;
+}
+
+/// bfloat16: f32 truncated to 16 bits (same exponent range, 7 mantissa
+/// bits).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BF16;
+impl FloatFormat for BF16 {
+    const KIND: FormatKind = FormatKind::BF16;
+    const BITS: u32 = 16;
+    const EXP_BITS: u32 = 8;
+    const MANT_BITS: u32 = 7;
+}
+
+/// IEEE binary32.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct F32;
+impl FloatFormat for F32 {
+    const KIND: FormatKind = FormatKind::F32;
+    const BITS: u32 = 32;
+    const EXP_BITS: u32 = 8;
+    const MANT_BITS: u32 = 23;
+}
+
+/// IEEE binary64.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct F64;
+impl FloatFormat for F64 {
+    const KIND: FormatKind = FormatKind::F64;
+    const BITS: u32 = 64;
+    const EXP_BITS: u32 = 11;
+    const MANT_BITS: u32 = 52;
+}
+
+/// Sign bit of a raw word.
+#[inline]
+pub fn sign_bit<F: FloatFormat>(bits: u64) -> bool {
+    bits & F::SIGN_MASK != 0
+}
+
+/// Signed-zero bit pattern.
+#[inline]
+pub fn zero_bits<F: FloatFormat>(negative: bool) -> u64 {
+    if negative { F::SIGN_MASK } else { 0 }
+}
+
+/// Signed-infinity bit pattern.
+#[inline]
+pub fn inf_bits<F: FloatFormat>(negative: bool) -> u64 {
+    F::INF | zero_bits::<F>(negative)
+}
+
+/// Classify a raw word for dispatch before the datapath.
+#[inline]
+pub fn classify<F: FloatFormat>(bits: u64) -> FpClass {
+    let exp = (bits >> F::MANT_BITS) & F::EXP_MASK;
+    let mant = bits & F::MANT_MASK;
+    if exp == F::EXP_MASK {
+        if mant == 0 { FpClass::Inf } else { FpClass::Nan }
+    } else if exp == 0 && mant == 0 {
+        FpClass::Zero
+    } else {
+        FpClass::Finite
+    }
+}
+
+/// A decomposed finite, nonzero value:
+/// `value = (-1)^sign * mant * 2^exp` with `mant` a [`Fixed`] in `[1, 2)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Unpacked {
+    /// Sign bit.
+    pub sign: bool,
+    /// Unbiased exponent of the leading bit.
+    pub exp: i32,
+    /// Mantissa in `[1, 2)` at the requested fraction width.
+    pub mant: Fixed,
+}
+
+/// Unpack a finite nonzero word into sign/exponent/mantissa-in-`[1,2)`
+/// at `frac` fraction bits. Subnormals are normalized (their leading
+/// zeros move into the exponent), exactly as a hardware pre-normalizer
+/// does. A `frac` narrower than the mantissa field rounds (nearest) —
+/// the narrow-datapath sweeps use this.
+pub fn unpack<F: FloatFormat>(bits: u64, frac: u32) -> Unpacked {
+    assert!(
+        classify::<F>(bits) == FpClass::Finite,
+        "unpack::<{}>({bits:#x}) on non-finite",
+        F::KIND
+    );
+    let sign = sign_bit::<F>(bits);
+    let biased = ((bits >> F::MANT_BITS) & F::EXP_MASK) as i32;
+    let raw = bits & F::MANT_MASK;
+    let (exp, field) = if biased == 0 {
+        // subnormal: value = raw * 2^(EXP_MIN - MANT_BITS); normalize the
+        // leading 1 out of the field
+        let lz = raw.leading_zeros() - (64 - F::MANT_BITS);
+        (F::EXP_MIN - 1 - lz as i32, (raw << (lz + 1)) & F::MANT_MASK)
+    } else {
+        (biased - F::BIAS, raw)
+    };
+    let full = (1u64 << F::MANT_BITS) | field; // 1.field at MANT_BITS frac
+    let mant = if frac >= F::MANT_BITS {
+        Fixed::from_bits(full << (frac - F::MANT_BITS), frac)
+    } else {
+        let rounded = narrow_u128(full as u128, F::MANT_BITS - frac, Rounding::Nearest) as u64;
+        Fixed::from_bits(rounded, frac)
+    };
+    Unpacked { sign, exp, mant }
+}
+
+/// Repack sign/exponent/mantissa into a raw word with
+/// round-to-nearest-even. The mantissa may lie anywhere in `(0, 4)` (the
+/// exponent is renormalized); zero packs to a signed zero. Overflow
+/// saturates to infinity; underflow rounds into the subnormal range (a
+/// single RNE rounding at the subnormal quantum) and then to zero.
+pub fn pack<F: FloatFormat>(sign: bool, exp: i32, mant: &Fixed) -> u64 {
+    let bits = mant.bits();
+    if bits == 0 {
+        return zero_bits::<F>(sign);
+    }
+    let msb = 63 - bits.leading_zeros() as i32; // bit index of the leading 1
+    let mut e = exp + (msb - mant.frac() as i32); // exponent of the leading 1
+    // Bits to drop so MANT_BITS fraction bits remain after the leading 1;
+    // below the normal range the target quantum coarsens by the deficit.
+    let mut shift = msb - F::MANT_BITS as i32;
+    if e < F::EXP_MIN {
+        shift += F::EXP_MIN - e;
+    }
+    let mut sig: u64 = if shift <= 0 {
+        bits << (-shift) as u32 // exact: result msb stays below 2^(MANT_BITS+1)
+    } else if shift >= 126 {
+        0 // deep underflow: rem < half is guaranteed (bits has < 64 bits)
+    } else {
+        let sh = shift as u32;
+        let wide = bits as u128;
+        let keep = (wide >> sh) as u64;
+        let half = 1u128 << (sh - 1);
+        let rem = wide & ((1u128 << sh) - 1);
+        let round_up = rem > half || (rem == half && keep & 1 == 1);
+        keep + round_up as u64
+    };
+    // rounding may carry out of the significand: renormalize
+    if sig >= 1u64 << (F::MANT_BITS + 1) {
+        sig >>= 1;
+        e += 1;
+    }
+    if e < F::EXP_MIN {
+        // subnormal result (biased exponent 0); a round-up to exactly
+        // 2^MANT_BITS is the minimum normal
+        return if sig >= 1u64 << F::MANT_BITS {
+            zero_bits::<F>(sign) | (1u64 << F::MANT_BITS) | (sig & F::MANT_MASK)
+        } else {
+            zero_bits::<F>(sign) | sig
+        };
+    }
+    if e > F::EXP_MAX {
+        return inf_bits::<F>(sign);
+    }
+    zero_bits::<F>(sign) | (((e + F::BIAS) as u64) << F::MANT_BITS) | (sig & F::MANT_MASK)
+}
+
+// -------------------------------------------------------------------------
+// IEEE special-case envelopes around a mantissa core.
+//
+// These are the single source of truth for special handling across the
+// scalar reference paths and the batch kernels: the typed f32/f64
+// wrappers in `arith::fp` / `arith::fp64` delegate here, so every
+// format — and both the scalar and batch sides of the bit-for-bit
+// contract — shares one set of arms. (This rewrite also fixed the
+// seed's sign handling for quotients involving signed zeros: IEEE
+// requires inf / -0 = -inf and -0 / inf = -0.)
+
+/// Divide through a mantissa-division closure: IEEE specials handled
+/// around the `[1,2) x [1,2) -> (1/2, 2)` core the datapath provides.
+pub fn divide_via_bits<F, C>(n: u64, d: u64, frac: u32, core: C) -> u64
+where
+    F: FloatFormat,
+    C: FnOnce(Fixed, Fixed) -> Fixed,
+{
+    let (cn, cd) = (classify::<F>(n), classify::<F>(d));
+    // IEEE 754: the sign of every non-NaN quotient is the XOR of the raw
+    // operand sign bits — signed zeros included (inf / -0 is -inf).
+    let sign = sign_bit::<F>(n) ^ sign_bit::<F>(d);
+    match (cn, cd) {
+        (FpClass::Nan, _) | (_, FpClass::Nan) => F::QNAN,
+        (FpClass::Inf, FpClass::Inf) | (FpClass::Zero, FpClass::Zero) => F::QNAN,
+        (FpClass::Inf, _) | (_, FpClass::Zero) => inf_bits::<F>(sign),
+        (_, FpClass::Inf) | (FpClass::Zero, _) => zero_bits::<F>(sign),
+        (FpClass::Finite, FpClass::Finite) => {
+            let un = unpack::<F>(n, frac);
+            let ud = unpack::<F>(d, frac);
+            let q = core(un.mant, ud.mant);
+            pack::<F>(sign, un.exp - ud.exp, &q)
+        }
+    }
+}
+
+/// Fold the exponent parity for the sqrt family: `x = m * 2^e` with
+/// `m in [1,2)` becomes `d in [1,4)` and a halved exponent.
+#[inline]
+fn fold_parity(u: &Unpacked, frac: u32) -> (Fixed, i32) {
+    if u.exp % 2 == 0 {
+        (u.mant, u.exp / 2)
+    } else {
+        (Fixed::from_bits(u.mant.bits() << 1, frac), (u.exp - 1) / 2)
+    }
+}
+
+/// Square root through a mantissa closure (`d in [1,4) -> sqrt(d)`).
+/// Negative inputs give NaN, zeros pass through signed, +inf gives +inf.
+pub fn sqrt_via_bits<F, C>(x: u64, frac: u32, core: C) -> u64
+where
+    F: FloatFormat,
+    C: FnOnce(Fixed) -> Fixed,
+{
+    match classify::<F>(x) {
+        FpClass::Nan => F::QNAN,
+        FpClass::Zero => x, // sqrt(+-0) = +-0
+        FpClass::Inf => {
+            if sign_bit::<F>(x) { F::QNAN } else { F::INF }
+        }
+        FpClass::Finite if sign_bit::<F>(x) => F::QNAN,
+        FpClass::Finite => {
+            let u = unpack::<F>(x, frac);
+            let (d, half_exp) = fold_parity(&u, frac);
+            pack::<F>(false, half_exp, &core(d))
+        }
+    }
+}
+
+/// Reciprocal square root through a mantissa closure
+/// (`d in [1,4) -> 1/sqrt(d)`). Zero gives +inf, +inf gives +0,
+/// negatives give NaN.
+pub fn rsqrt_via_bits<F, C>(x: u64, frac: u32, core: C) -> u64
+where
+    F: FloatFormat,
+    C: FnOnce(Fixed) -> Fixed,
+{
+    match classify::<F>(x) {
+        FpClass::Nan => F::QNAN,
+        FpClass::Zero => F::INF,
+        FpClass::Inf => {
+            if sign_bit::<F>(x) { F::QNAN } else { 0 }
+        }
+        FpClass::Finite if sign_bit::<F>(x) => F::QNAN,
+        FpClass::Finite => {
+            let u = unpack::<F>(x, frac);
+            let (d, half_exp) = fold_parity(&u, frac);
+            pack::<F>(false, -half_exp, &core(d))
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// Format-tagged scalar values.
+
+/// A scalar tagged with its format: the unit the request/response plane
+/// carries. f16/bf16 travel as raw bit patterns (Rust has no native
+/// half types); f32/f64 keep their native representation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Value {
+    /// IEEE binary16, raw bits.
+    F16(u16),
+    /// bfloat16, raw bits.
+    BF16(u16),
+    /// IEEE binary32.
+    F32(f32),
+    /// IEEE binary64.
+    F64(f64),
+}
+
+impl Value {
+    /// The value's format tag.
+    pub fn format(self) -> FormatKind {
+        match self {
+            Value::F16(_) => FormatKind::F16,
+            Value::BF16(_) => FormatKind::BF16,
+            Value::F32(_) => FormatKind::F32,
+            Value::F64(_) => FormatKind::F64,
+        }
+    }
+
+    /// Raw bit pattern, widened to the universal `u64` plane word.
+    pub fn bits(self) -> u64 {
+        match self {
+            Value::F16(b) | Value::BF16(b) => b as u64,
+            Value::F32(v) => v.to_bits() as u64,
+            Value::F64(v) => v.to_bits(),
+        }
+    }
+
+    /// Rebuild from a plane word (the executor's output path).
+    pub fn from_bits(kind: FormatKind, bits: u64) -> Self {
+        match kind {
+            FormatKind::F16 => Value::F16(bits as u16),
+            FormatKind::BF16 => Value::BF16(bits as u16),
+            FormatKind::F32 => Value::F32(f32::from_bits(bits as u32)),
+            FormatKind::F64 => Value::F64(f64::from_bits(bits)),
+        }
+    }
+
+    /// Encode an f64 into the format with a single round-to-nearest-even
+    /// (specials map across; overflow saturates to infinity).
+    pub fn from_f64(kind: FormatKind, x: f64) -> Self {
+        fn encode<F: FloatFormat>(x: f64) -> u64 {
+            let bits = x.to_bits();
+            match classify::<F64>(bits) {
+                FpClass::Nan => F::QNAN,
+                FpClass::Inf => inf_bits::<F>(sign_bit::<F64>(bits)),
+                FpClass::Zero => zero_bits::<F>(sign_bit::<F64>(bits)),
+                FpClass::Finite => {
+                    let u = unpack::<F64>(bits, F64::MANT_BITS);
+                    pack::<F>(u.sign, u.exp, &u.mant)
+                }
+            }
+        }
+        match kind {
+            FormatKind::F16 => Value::F16(encode::<F16>(x) as u16),
+            FormatKind::BF16 => Value::BF16(encode::<BF16>(x) as u16),
+            FormatKind::F32 => Value::F32(x as f32),
+            FormatKind::F64 => Value::F64(x),
+        }
+    }
+
+    /// Exact decode to f64 (every supported format embeds losslessly).
+    pub fn to_f64(self) -> f64 {
+        fn decode<F: FloatFormat>(bits: u64) -> f64 {
+            match classify::<F>(bits) {
+                FpClass::Nan => f64::NAN,
+                FpClass::Inf => {
+                    if sign_bit::<F>(bits) { f64::NEG_INFINITY } else { f64::INFINITY }
+                }
+                FpClass::Zero => {
+                    if sign_bit::<F>(bits) { -0.0 } else { 0.0 }
+                }
+                FpClass::Finite => {
+                    let u = unpack::<F>(bits, F::MANT_BITS);
+                    // mant has <= 53 significant bits: exact in f64
+                    let m = u.mant.to_f64() * 2f64.powi(u.exp);
+                    if u.sign { -m } else { m }
+                }
+            }
+        }
+        match self {
+            Value::F16(b) => decode::<F16>(b as u64),
+            Value::BF16(b) => decode::<BF16>(b as u64),
+            Value::F32(v) => v as f64,
+            Value::F64(v) => v,
+        }
+    }
+
+    /// Convenience view as f32 (exact for F32, rounded otherwise).
+    pub fn f32(self) -> f32 {
+        match self {
+            Value::F32(v) => v,
+            other => other.to_f64() as f32,
+        }
+    }
+
+    /// True for a NaN of any format.
+    pub fn is_nan(self) -> bool {
+        match self {
+            Value::F16(b) => classify::<F16>(b as u64) == FpClass::Nan,
+            Value::BF16(b) => classify::<BF16>(b as u64) == FpClass::Nan,
+            Value::F32(v) => v.is_nan(),
+            Value::F64(v) => v.is_nan(),
+        }
+    }
+
+    /// `1.0` in the given format.
+    pub fn one(kind: FormatKind) -> Self {
+        Value::from_bits(kind, kind.one_bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn geometry_constants() {
+        assert_eq!(F16::BIAS, 15);
+        assert_eq!(BF16::BIAS, 127);
+        assert_eq!(F32::BIAS, 127);
+        assert_eq!(F64::BIAS, 1023);
+        assert_eq!(F32::INF, 0x7F80_0000);
+        assert_eq!(F32::QNAN, f32::NAN.to_bits() as u64);
+        assert_eq!(F64::QNAN, f64::NAN.to_bits());
+        assert_eq!(F16::INF, 0x7C00);
+        assert_eq!(F16::QNAN, 0x7E00);
+        assert_eq!(BF16::INF, 0x7F80);
+        assert_eq!(FormatKind::F16.one_bits(), 0x3C00);
+        assert_eq!(FormatKind::BF16.one_bits(), 0x3F80);
+        assert_eq!(FormatKind::F32.one_bits(), 1.0f32.to_bits() as u64);
+        assert_eq!(FormatKind::F64.one_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn classify_matches_std_f32() {
+        for bits in [0u32, 0x8000_0000, 1, 0x7F80_0000, 0xFF80_0000, 0x7FC0_0001, 0x3F80_0000] {
+            let x = f32::from_bits(bits);
+            let want = if x.is_nan() {
+                FpClass::Nan
+            } else if x.is_infinite() {
+                FpClass::Inf
+            } else if x == 0.0 {
+                FpClass::Zero
+            } else {
+                FpClass::Finite
+            };
+            assert_eq!(classify::<F32>(bits as u64), want, "bits {bits:#x}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_every_format() {
+        fn roundtrip<F: FloatFormat>(g: &mut crate::check::Gen) -> Result<(), String> {
+            let bits = g.bits() & (F::SIGN_MASK | F::INF | F::MANT_MASK);
+            if classify::<F>(bits) != FpClass::Finite {
+                return Ok(());
+            }
+            let frac = F::MANT_BITS + 6;
+            let u = unpack::<F>(bits, frac);
+            let back = pack::<F>(u.sign, u.exp, &u.mant);
+            ensure(back == bits, format!("{}: {bits:#x} -> {back:#x}", F::KIND))
+        }
+        check::property("pack(unpack(x)) == x for all formats", |g| {
+            roundtrip::<F16>(g)?;
+            roundtrip::<BF16>(g)?;
+            roundtrip::<F32>(g)?;
+            roundtrip::<F64>(g)
+        });
+    }
+
+    #[test]
+    fn unpack_normalizes_subnormals() {
+        // smallest f16 subnormal: 2^-24
+        let u = unpack::<F16>(0x0001, 20);
+        assert_eq!(u.exp, -24);
+        assert_eq!(u.mant.bits(), 1u64 << 20);
+        // 3 * 2^-24 = 1.5 * 2^-23
+        let u = unpack::<F16>(0x0003, 20);
+        assert_eq!(u.exp, -23);
+        assert!((u.mant.to_f64() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pack_overflow_and_underflow() {
+        let m = Fixed::from_f64(1.5, 20);
+        assert_eq!(pack::<F16>(false, 100, &m), F16::INF);
+        assert_eq!(pack::<F16>(true, 100, &m), F16::INF | F16::SIGN_MASK);
+        assert_eq!(pack::<F16>(false, -100, &m), 0);
+        assert_eq!(pack::<F16>(true, -100, &m), F16::SIGN_MASK);
+        // f16 max finite is 65504 = 1.9990234375 * 2^15
+        let v = Value::from_f64(FormatKind::F16, 65504.0);
+        assert_eq!(v.to_f64(), 65504.0);
+        // halfway above max rounds to infinity
+        let v = Value::from_f64(FormatKind::F16, 65536.0);
+        assert_eq!(v.bits(), F16::INF);
+    }
+
+    #[test]
+    fn pack_subnormal_rne() {
+        // value exactly half an f16-subnormal ulp above zero rounds to
+        // even (zero); just above rounds up to the minimum subnormal
+        let half_ulp = Fixed::from_f64(1.0, 30); // 1.0 * 2^-25 below
+        assert_eq!(pack::<F16>(false, -25, &half_ulp), 0x0000);
+        let above = Fixed::from_bits((1u64 << 30) + 1, 30);
+        assert_eq!(pack::<F16>(false, -25, &above), 0x0001);
+        // 1.5 * 2^-24 is halfway between subnormals 1 and 2: ties to even
+        let m = Fixed::from_f64(1.5, 30);
+        assert_eq!(pack::<F16>(false, -24, &m), 0x0002);
+    }
+
+    #[test]
+    fn value_encode_decode_known_points() {
+        assert_eq!(Value::from_f64(FormatKind::F16, 1.5).bits(), 0x3E00);
+        assert_eq!(Value::from_f64(FormatKind::BF16, 1.5).bits(), 0x3FC0);
+        assert_eq!(Value::from_f64(FormatKind::F16, -2.0).bits(), 0xC000);
+        assert_eq!(Value::from_f64(FormatKind::F16, 1.5).to_f64(), 1.5);
+        assert!(Value::from_f64(FormatKind::BF16, f64::NAN).is_nan());
+        assert_eq!(Value::from_f64(FormatKind::F16, f64::INFINITY).bits(), 0x7C00);
+        assert_eq!(Value::one(FormatKind::BF16).to_f64(), 1.0);
+        assert_eq!(Value::from_f64(FormatKind::F32, 0.1).f32(), 0.1f32);
+    }
+
+    #[test]
+    fn bf16_encode_matches_f32_truncation_rounding() {
+        // bf16 is the top 16 bits of f32 with RNE: check across a sweep
+        let mut x = 0.001f64;
+        while x < 1e4 {
+            let f = x as f32;
+            let bits = f.to_bits();
+            // RNE on the low 16 bits of the f32 pattern
+            let keep = bits >> 16;
+            let rem = bits & 0xFFFF;
+            let up = rem > 0x8000 || (rem == 0x8000 && keep & 1 == 1);
+            let want = keep + up as u32;
+            // only valid when f32 itself is exact enough not to double-round:
+            // compare through the f32 value, which the sweep keeps finite
+            let got = Value::from_f64(FormatKind::BF16, f as f64).bits();
+            assert_eq!(got, want as u64, "x={x}");
+            x *= 3.7;
+        }
+    }
+
+    #[test]
+    fn divide_via_bits_specials_match_ieee() {
+        // pin the special arms against Rust's native (IEEE 754) division,
+        // signed zeros and infinities included
+        let core = |n: Fixed, d: Fixed| {
+            let q = n.to_f64() / d.to_f64();
+            Fixed::from_f64(q, n.frac())
+        };
+        let cases: [(f32, f32); 12] = [
+            (f32::NAN, 1.0),
+            (1.0, f32::NAN),
+            (f32::INFINITY, f32::INFINITY),
+            (0.0, 0.0),
+            (f32::INFINITY, -2.0),
+            (3.0, f32::INFINITY),
+            (0.0, 5.0),
+            (-1.0, 0.0),
+            (1.0, -0.0),
+            (f32::INFINITY, -0.0),
+            (-0.0, f32::INFINITY),
+            (f32::NEG_INFINITY, 0.0),
+        ];
+        for (n, d) in cases {
+            let got = divide_via_bits::<F32, _>(n.to_bits() as u64, d.to_bits() as u64, 30, core);
+            let native = n / d;
+            if native.is_nan() {
+                // hardware NaN payloads vary; require a NaN of some kind
+                assert_eq!(classify::<F32>(got), FpClass::Nan, "{n} / {d}");
+            } else {
+                assert_eq!(got as u32, native.to_bits(), "{n} / {d}");
+            }
+            // and the typed f32 wrapper is the same envelope
+            let typed = crate::arith::fp::divide_via(n, d, 30, core);
+            assert_eq!(got as u32, typed.to_bits(), "wrapper {n} / {d}");
+        }
+    }
+
+    #[test]
+    fn format_kind_parse_label() {
+        for kind in FormatKind::ALL {
+            assert_eq!(FormatKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert!(FormatKind::parse("f128").is_err());
+        assert_eq!(FormatKind::parse("double").unwrap(), FormatKind::F64);
+    }
+
+    #[test]
+    fn datapath_configs_validate_and_cover_accuracy() {
+        for kind in FormatKind::ALL {
+            let cfg = kind.datapath_config();
+            assert!(cfg.validate().is_ok(), "{kind}");
+            // frac must hold the mantissa (plus guard bits)
+            assert!(cfg.frac >= kind.mant_bits() + 4, "{kind}");
+            // programmed steps at least the analytic bound
+            let bound = Config::steps_for_accuracy(cfg.table_p, kind.mant_bits() + 1);
+            assert!(cfg.steps >= bound, "{kind}: {} < {bound}", cfg.steps);
+        }
+    }
+}

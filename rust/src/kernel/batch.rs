@@ -1,40 +1,50 @@
-//! SoA batch kernels over [`GoldschmidtContext`]: decompose a whole
-//! batch into sign / exponent / mantissa planes, run the Goldschmidt
-//! iterations as tight lane loops, then repack.
+//! SoA batch kernels over [`GoldschmidtContext`], generic over the IEEE
+//! format: decompose a whole batch into sign / exponent / mantissa
+//! planes, run the Goldschmidt iterations as tight lane loops, then
+//! repack.
 //!
 //! Layout per batch (divide shown; sqrt/rsqrt analogous with one input
 //! plane):
 //!
 //! ```text
-//!   f32 inputs ──decompose──> meta plane  (orig index, sign, exponent)
-//!                             q plane: u64 mantissa words   (MULT 1)
-//!                             r plane: u64 mantissa words   (MULT 2)
+//!   raw words ──decompose──> meta plane  (orig index, sign, exponent)
+//!   (u64 per lane)           q plane: u64 mantissa words   (MULT 1)
+//!                            r plane: u64 mantissa words   (MULT 2)
 //!   step loop (outer) x lane loop (inner):
 //!       K = 2 - r[i]          (complement block, one subtract)
 //!       q[i] *= K; r[i] *= K  (the paper's parallel multiplier pair)
-//!   q plane ──repack──> f32 outputs (via the shared IEEE boundary)
+//!   q plane ──repack──> raw words (via the shared formats boundary)
 //! ```
 //!
-//! Special-class lanes (NaN / Inf / zero / negative-for-sqrt) are
-//! answered during decomposition through the context's scalar entry
-//! points — whose special arms are the very code the scalar path runs —
-//! and never enter the planes, keeping the lane loops free of classify
-//! branches. Rounding mode and complement circuit are const-generic
-//! parameters, so each configuration gets a monomorphized loop with no
-//! per-lane branching.
+//! Every kernel is monomorphized over a [`FloatFormat`]: the same lane
+//! loops serve f16, bf16, f32 and f64 — only the boundary
+//! (decompose/repack) changes with the geometry, and the datapath
+//! context fixes the word width. Raw operands travel as `u64` plane
+//! words regardless of container width, so one [`BatchScratch`] arena
+//! serves every format.
 //!
-//! For batches of [`PAR_MIN_LANES`] lanes or more the kernels split the
-//! planes across scoped worker threads (lanes are independent, so the
-//! split is bit-transparent); a 1024-wide flush saturates every core.
+//! Special-class lanes (NaN / Inf / zero / negative-for-sqrt) are
+//! answered during decomposition through the context's generic scalar
+//! entry points — whose special arms are the very code the scalar path
+//! runs — and never enter the planes, keeping the lane loops free of
+//! classify branches. Rounding mode and complement circuit are
+//! const-generic parameters, so each configuration gets a monomorphized
+//! loop with no per-lane branching.
+//!
+//! For [`PAR_MIN_LANES`] or more datapath-eligible lanes the mantissa
+//! iteration splits across scoped worker threads (lanes are
+//! independent, so the split is bit-transparent); a 1024-wide flush
+//! saturates every core. Decomposition and repack stay on the calling
+//! thread so the scratch arena needs no synchronization.
 
 use crate::arith::fixed::{narrow_u128, Fixed, Rounding};
 use crate::arith::twos::ComplementKind;
+use crate::formats::{self, classify, pack, sign_bit, unpack, FloatFormat, FpClass};
 
-use super::context::{
-    classify, classify64, pack, pack64, unpack, unpack64, FpClass, GoldschmidtContext,
-};
+use super::context::GoldschmidtContext;
 
-/// Batches at or above this lane count engage the scoped-thread split.
+/// Batches at or above this many datapath lanes engage the scoped-thread
+/// split.
 pub const PAR_MIN_LANES: usize = 256;
 
 /// Minimum lanes handed to one worker (bounds the split fan-out so tiny
@@ -52,7 +62,39 @@ struct LaneMeta {
     exp: i32,
 }
 
-/// How many workers a batch of `lanes` lanes should split across.
+/// Reusable SoA planes for one batch decomposition: the per-worker
+/// scratch arena. The serving executor owns one per worker thread, so
+/// the batch hot path performs **zero** plane allocations after the
+/// first flush at each ladder size — the ROADMAP "scratch-buffer reuse"
+/// item. Capacity grows monotonically to the largest batch seen and is
+/// retained across batches.
+#[derive(Default)]
+pub struct BatchScratch {
+    meta: Vec<LaneMeta>,
+    /// q plane for divide; g plane for the sqrt family.
+    p0: Vec<u64>,
+    /// r plane for divide; h plane for the sqrt family.
+    p1: Vec<u64>,
+}
+
+impl BatchScratch {
+    /// Empty scratch (planes grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear the planes, keeping capacity, and reserve for `lanes`.
+    fn begin(&mut self, lanes: usize) {
+        self.meta.clear();
+        self.p0.clear();
+        self.p1.clear();
+        self.meta.reserve(lanes);
+        self.p0.reserve(lanes);
+        self.p1.reserve(lanes);
+    }
+}
+
+/// How many workers `lanes` datapath lanes should split across.
 /// `cores` is the context's cached hardware parallelism; callers running
 /// several executors concurrently (the coordinator's worker pool) keep
 /// total threads bounded because each split is also capped by the lane
@@ -64,32 +106,17 @@ fn worker_count(cores: usize, lanes: usize) -> usize {
     cores.clamp(1, lanes.div_ceil(MIN_LANES_PER_WORKER))
 }
 
-/// Run `f` over aligned chunks of a two-input batch on scoped threads.
-fn split2<T, F>(workers: usize, a: &[T], b: &[T], out: &mut [T], f: F)
+/// Run `f` over aligned chunks of the two mantissa planes on scoped
+/// threads (`workers >= 2`, planes non-empty).
+fn split_planes<F>(workers: usize, a: &mut [u64], b: &mut [u64], f: F)
 where
-    T: Copy + Send + Sync,
-    F: Fn(&[T], &[T], &mut [T]) + Sync,
+    F: Fn(&mut [u64], &mut [u64]) + Sync,
 {
     let per = a.len().div_ceil(workers);
     std::thread::scope(|s| {
-        for ((ac, bc), oc) in a.chunks(per).zip(b.chunks(per)).zip(out.chunks_mut(per)) {
+        for (ac, bc) in a.chunks_mut(per).zip(b.chunks_mut(per)) {
             let f = &f;
-            s.spawn(move || f(ac, bc, oc));
-        }
-    });
-}
-
-/// Run `f` over aligned chunks of a one-input batch on scoped threads.
-fn split1<T, F>(workers: usize, a: &[T], out: &mut [T], f: F)
-where
-    T: Copy + Send + Sync,
-    F: Fn(&[T], &mut [T]) + Sync,
-{
-    let per = a.len().div_ceil(workers);
-    std::thread::scope(|s| {
-        for (ac, oc) in a.chunks(per).zip(out.chunks_mut(per)) {
-            let f = &f;
-            s.spawn(move || f(ac, oc));
+            s.spawn(move || f(ac, bc));
         }
     });
 }
@@ -214,171 +241,293 @@ impl GoldschmidtContext {
         }
     }
 
-    // ---- f32 divide ---------------------------------------------------
-
-    /// Batched f32 division, bit-identical per lane to
-    /// [`divide_f32`](crate::goldschmidt::divide_f32). Splits across
-    /// scoped worker threads for batches >= [`PAR_MIN_LANES`].
-    pub fn divide_batch_f32(&self, n: &[f32], d: &[f32], out: &mut [f32]) {
-        assert_eq!(n.len(), d.len(), "divide operand length mismatch");
-        assert_eq!(n.len(), out.len(), "output length mismatch");
-        let workers = worker_count(self.cores, n.len());
+    /// Run the division iteration over the scratch planes, split across
+    /// scoped workers when the lane count warrants it.
+    fn div_planes(&self, q: &mut [u64], r: &mut [u64], parallel: bool) {
+        let workers = if parallel { worker_count(self.cores, q.len()) } else { 1 };
         if workers <= 1 {
-            self.divide_batch_f32_serial(n, d, out);
+            self.div_dispatch(q, r);
         } else {
-            split2(workers, n, d, out, |nc, dc, oc| self.divide_batch_f32_serial(nc, dc, oc));
+            split_planes(workers, q, r, |qc, rc| self.div_dispatch(qc, rc));
         }
     }
 
-    /// Single-threaded batched f32 division (the per-worker kernel).
-    pub fn divide_batch_f32_serial(&self, n: &[f32], d: &[f32], out: &mut [f32]) {
+    /// Run the coupled sqrt iteration over the scratch planes.
+    fn sqrt_planes(&self, g: &mut [u64], h: &mut [u64], parallel: bool) {
+        let workers = if parallel { worker_count(self.cores, g.len()) } else { 1 };
+        if workers <= 1 {
+            self.sqrt_dispatch(g, h);
+        } else {
+            split_planes(workers, g, h, |gc, hc| self.sqrt_dispatch(gc, hc));
+        }
+    }
+
+    // ---- format-generic batch kernels ---------------------------------
+
+    /// Batched division on raw format words, bit-identical per lane to
+    /// [`divide_bits`](Self::divide_bits). Splits the mantissa
+    /// iteration across scoped worker threads for batches with
+    /// [`PAR_MIN_LANES`] or more datapath lanes.
+    pub fn divide_batch_bits<F: FloatFormat>(
+        &self,
+        n: &[u64],
+        d: &[u64],
+        out: &mut [u64],
+        scratch: &mut BatchScratch,
+    ) {
+        self.divide_batch_bits_impl::<F>(n, d, out, scratch, true);
+    }
+
+    /// [`divide_batch_bits`](Self::divide_batch_bits) pinned to the
+    /// calling thread (no worker split).
+    pub fn divide_batch_bits_serial<F: FloatFormat>(
+        &self,
+        n: &[u64],
+        d: &[u64],
+        out: &mut [u64],
+        scratch: &mut BatchScratch,
+    ) {
+        self.divide_batch_bits_impl::<F>(n, d, out, scratch, false);
+    }
+
+    fn divide_batch_bits_impl<F: FloatFormat>(
+        &self,
+        n: &[u64],
+        d: &[u64],
+        out: &mut [u64],
+        s: &mut BatchScratch,
+        parallel: bool,
+    ) {
         assert_eq!(n.len(), d.len(), "divide operand length mismatch");
         assert_eq!(n.len(), out.len(), "output length mismatch");
         let frac = self.frac;
-        let lanes = n.len();
-        let mut meta = Vec::with_capacity(lanes);
-        let mut qm = Vec::with_capacity(lanes);
-        let mut rm = Vec::with_capacity(lanes);
-        for (i, (&nf, &df)) in n.iter().zip(d.iter()).enumerate() {
-            if classify(nf) == FpClass::Finite && classify(df) == FpClass::Finite {
-                let un = unpack(nf, frac);
-                let ud = unpack(df, frac);
-                meta.push(LaneMeta { index: i, sign: un.sign ^ ud.sign, exp: un.exp - ud.exp });
-                qm.push(un.mant.bits());
-                rm.push(ud.mant.bits());
+        s.begin(n.len());
+        for (i, (&nb, &db)) in n.iter().zip(d.iter()).enumerate() {
+            if classify::<F>(nb) == FpClass::Finite && classify::<F>(db) == FpClass::Finite {
+                let un = unpack::<F>(nb, frac);
+                let ud = unpack::<F>(db, frac);
+                s.meta.push(LaneMeta { index: i, sign: un.sign ^ ud.sign, exp: un.exp - ud.exp });
+                s.p0.push(un.mant.bits());
+                s.p1.push(ud.mant.bits());
             } else {
                 // special arms only; the datapath closure is unreachable
-                out[i] = self.divide_f32(nf, df);
+                out[i] = self.divide_bits::<F>(nb, db);
             }
         }
-        self.div_dispatch(&mut qm, &mut rm);
-        for (m, &qbits) in meta.iter().zip(qm.iter()) {
-            out[m.index] = pack(m.sign, m.exp, &Fixed::from_bits(qbits, frac));
+        self.div_planes(&mut s.p0, &mut s.p1, parallel);
+        for (m, &qbits) in s.meta.iter().zip(s.p0.iter()) {
+            out[m.index] = pack::<F>(m.sign, m.exp, &Fixed::from_bits(qbits, frac));
         }
     }
 
-    // ---- f64 divide ---------------------------------------------------
-
-    /// Batched f64 division, bit-identical per lane to
-    /// [`divide_f64`](crate::goldschmidt::divide_f64). Requires a
-    /// double-precision configuration (`frac >= 56`).
-    pub fn divide_batch_f64(&self, n: &[f64], d: &[f64], out: &mut [f64]) {
-        assert_eq!(n.len(), d.len(), "divide operand length mismatch");
-        assert_eq!(n.len(), out.len(), "output length mismatch");
-        let workers = worker_count(self.cores, n.len());
-        if workers <= 1 {
-            self.divide_batch_f64_serial(n, d, out);
-        } else {
-            split2(workers, n, d, out, |nc, dc, oc| self.divide_batch_f64_serial(nc, dc, oc));
-        }
+    /// Batched square root on raw format words, bit-identical per lane
+    /// to [`sqrt_bits`](Self::sqrt_bits).
+    pub fn sqrt_batch_bits<F: FloatFormat>(
+        &self,
+        x: &[u64],
+        out: &mut [u64],
+        scratch: &mut BatchScratch,
+    ) {
+        self.sqrt_like_bits_impl::<F, false>(x, out, scratch, true);
     }
 
-    /// Single-threaded batched f64 division (the per-worker kernel).
-    pub fn divide_batch_f64_serial(&self, n: &[f64], d: &[f64], out: &mut [f64]) {
-        assert_eq!(n.len(), d.len(), "divide operand length mismatch");
-        assert_eq!(n.len(), out.len(), "output length mismatch");
-        assert!(self.frac >= 56, "f64 needs frac >= 56 (got {})", self.frac);
-        let frac = self.frac;
-        let lanes = n.len();
-        let mut meta = Vec::with_capacity(lanes);
-        let mut qm = Vec::with_capacity(lanes);
-        let mut rm = Vec::with_capacity(lanes);
-        for (i, (&nf, &df)) in n.iter().zip(d.iter()).enumerate() {
-            if classify64(nf) == FpClass::Finite && classify64(df) == FpClass::Finite {
-                let un = unpack64(nf, frac);
-                let ud = unpack64(df, frac);
-                meta.push(LaneMeta { index: i, sign: un.sign ^ ud.sign, exp: un.exp - ud.exp });
-                qm.push(un.mant.bits());
-                rm.push(ud.mant.bits());
-            } else {
-                out[i] = self.divide_f64(nf, df);
-            }
-        }
-        self.div_dispatch(&mut qm, &mut rm);
-        for (m, &qbits) in meta.iter().zip(qm.iter()) {
-            out[m.index] = pack64(m.sign, m.exp, &Fixed::from_bits(qbits, frac));
-        }
-    }
-
-    // ---- f32 sqrt / rsqrt ---------------------------------------------
-
-    /// Batched f32 square root, bit-identical per lane to
-    /// [`sqrt_f32`](crate::goldschmidt::sqrt_f32).
-    pub fn sqrt_batch_f32(&self, x: &[f32], out: &mut [f32]) {
-        assert_eq!(x.len(), out.len(), "output length mismatch");
-        let workers = worker_count(self.cores, x.len());
-        if workers <= 1 {
-            self.sqrt_batch_f32_serial(x, out);
-        } else {
-            split1(workers, x, out, |xc, oc| self.sqrt_batch_f32_serial(xc, oc));
-        }
-    }
-
-    /// Single-threaded batched f32 square root.
-    pub fn sqrt_batch_f32_serial(&self, x: &[f32], out: &mut [f32]) {
-        self.sqrt_like_serial::<false>(x, out);
-    }
-
-    /// Batched f32 reciprocal square root, bit-identical per lane to
-    /// [`rsqrt_f32`](crate::goldschmidt::rsqrt_f32).
-    pub fn rsqrt_batch_f32(&self, x: &[f32], out: &mut [f32]) {
-        assert_eq!(x.len(), out.len(), "output length mismatch");
-        let workers = worker_count(self.cores, x.len());
-        if workers <= 1 {
-            self.rsqrt_batch_f32_serial(x, out);
-        } else {
-            split1(workers, x, out, |xc, oc| self.rsqrt_batch_f32_serial(xc, oc));
-        }
-    }
-
-    /// Single-threaded batched f32 reciprocal square root.
-    pub fn rsqrt_batch_f32_serial(&self, x: &[f32], out: &mut [f32]) {
-        self.sqrt_like_serial::<true>(x, out);
+    /// Batched reciprocal square root on raw format words, bit-identical
+    /// per lane to [`rsqrt_bits`](Self::rsqrt_bits).
+    pub fn rsqrt_batch_bits<F: FloatFormat>(
+        &self,
+        x: &[u64],
+        out: &mut [u64],
+        scratch: &mut BatchScratch,
+    ) {
+        self.sqrt_like_bits_impl::<F, true>(x, out, scratch, true);
     }
 
     /// Shared sqrt/rsqrt kernel: the coupled iteration computes both
     /// `sqrt` (g plane) and `rsqrt` (h plane); `RECIP` selects which
     /// plane is packed out.
-    fn sqrt_like_serial<const RECIP: bool>(&self, x: &[f32], out: &mut [f32]) {
+    fn sqrt_like_bits_impl<F: FloatFormat, const RECIP: bool>(
+        &self,
+        x: &[u64],
+        out: &mut [u64],
+        s: &mut BatchScratch,
+        parallel: bool,
+    ) {
         assert_eq!(x.len(), out.len(), "output length mismatch");
         let frac = self.frac;
-        let lanes = x.len();
-        let mut meta = Vec::with_capacity(lanes);
-        let mut g = Vec::with_capacity(lanes);
-        for (i, &xf) in x.iter().enumerate() {
-            if classify(xf) == FpClass::Finite && xf > 0.0 {
-                let u = unpack(xf, frac);
+        s.begin(x.len());
+        for (i, &xb) in x.iter().enumerate() {
+            if classify::<F>(xb) == FpClass::Finite && !sign_bit::<F>(xb) {
+                let u = unpack::<F>(xb, frac);
                 // fold exponent parity exactly as the scalar path does
                 let (d_bits, half_exp) = if u.exp % 2 == 0 {
                     (u.mant.bits(), u.exp / 2)
                 } else {
                     (u.mant.bits() << 1, (u.exp - 1) / 2)
                 };
-                meta.push(LaneMeta { index: i, sign: false, exp: half_exp });
-                g.push(d_bits);
+                s.meta.push(LaneMeta { index: i, sign: false, exp: half_exp });
+                s.p0.push(d_bits);
             } else {
                 // NaN / zero / inf / negative: scalar special arms
-                out[i] = if RECIP { self.rsqrt_f32(xf) } else { self.sqrt_f32(xf) };
+                out[i] =
+                    if RECIP { self.rsqrt_bits::<F>(xb) } else { self.sqrt_bits::<F>(xb) };
             }
         }
-        let mut h = vec![0u64; g.len()];
-        self.sqrt_dispatch(&mut g, &mut h);
+        s.p1.resize(s.p0.len(), 0);
+        self.sqrt_planes(&mut s.p0, &mut s.p1, parallel);
         if RECIP {
-            for (m, &hbits) in meta.iter().zip(h.iter()) {
+            for (m, &hbits) in s.meta.iter().zip(s.p1.iter()) {
                 let y = Fixed::from_bits(hbits << 1, frac); // 2h: a shift
-                out[m.index] = pack(false, -m.exp, &y);
+                out[m.index] = pack::<F>(false, -m.exp, &y);
             }
         } else {
-            for (m, &gbits) in meta.iter().zip(g.iter()) {
-                out[m.index] = pack(false, m.exp, &Fixed::from_bits(gbits, frac));
+            for (m, &gbits) in s.meta.iter().zip(s.p0.iter()) {
+                out[m.index] = pack::<F>(false, m.exp, &Fixed::from_bits(gbits, frac));
             }
         }
     }
+
+    // ---- typed convenience wrappers -----------------------------------
+    //
+    // The f32/f64 entry points the benches, tests and library users
+    // call; each converts to plane words and runs the generic kernel
+    // over a thread-local arena, so repeated calls (the benched hot
+    // loops) allocate nothing after the first batch at each size. The
+    // serving executor holds its own persistent scratch and uses the
+    // bits kernels directly.
+
+    /// Batched f32 division, bit-identical per lane to
+    /// [`divide_f32`](crate::goldschmidt::divide_f32).
+    pub fn divide_batch_f32(&self, n: &[f32], d: &[f32], out: &mut [f32]) {
+        self.divide_batch_f32_impl(n, d, out, true);
+    }
+
+    /// Single-threaded batched f32 division (the per-worker kernel).
+    pub fn divide_batch_f32_serial(&self, n: &[f32], d: &[f32], out: &mut [f32]) {
+        self.divide_batch_f32_impl(n, d, out, false);
+    }
+
+    fn divide_batch_f32_impl(&self, n: &[f32], d: &[f32], out: &mut [f32], parallel: bool) {
+        with_typed_scratch(|ts| {
+            ts.load2(n.iter().map(|v| v.to_bits() as u64), d.iter().map(|v| v.to_bits() as u64));
+            ts.out.resize(out.len(), 0);
+            self.divide_batch_bits_impl::<formats::F32>(
+                &ts.a,
+                &ts.b,
+                &mut ts.out,
+                &mut ts.scratch,
+                parallel,
+            );
+            for (o, &w) in out.iter_mut().zip(ts.out.iter()) {
+                *o = f32::from_bits(w as u32);
+            }
+        });
+    }
+
+    /// Batched f64 division, bit-identical per lane to
+    /// [`divide_f64`](crate::goldschmidt::divide_f64). Requires a
+    /// double-precision configuration (`frac >= 56`).
+    pub fn divide_batch_f64(&self, n: &[f64], d: &[f64], out: &mut [f64]) {
+        self.divide_batch_f64_impl(n, d, out, true);
+    }
+
+    /// Single-threaded batched f64 division (the per-worker kernel).
+    pub fn divide_batch_f64_serial(&self, n: &[f64], d: &[f64], out: &mut [f64]) {
+        self.divide_batch_f64_impl(n, d, out, false);
+    }
+
+    fn divide_batch_f64_impl(&self, n: &[f64], d: &[f64], out: &mut [f64], parallel: bool) {
+        assert!(self.frac >= 56, "f64 needs frac >= 56 (got {})", self.frac);
+        with_typed_scratch(|ts| {
+            ts.load2(n.iter().map(|v| v.to_bits()), d.iter().map(|v| v.to_bits()));
+            ts.out.resize(out.len(), 0);
+            self.divide_batch_bits_impl::<formats::F64>(
+                &ts.a,
+                &ts.b,
+                &mut ts.out,
+                &mut ts.scratch,
+                parallel,
+            );
+            for (o, &w) in out.iter_mut().zip(ts.out.iter()) {
+                *o = f64::from_bits(w);
+            }
+        });
+    }
+
+    /// Batched f32 square root, bit-identical per lane to
+    /// [`sqrt_f32`](crate::goldschmidt::sqrt_f32).
+    pub fn sqrt_batch_f32(&self, x: &[f32], out: &mut [f32]) {
+        self.sqrt_like_f32_impl::<false>(x, out, true);
+    }
+
+    /// Single-threaded batched f32 square root.
+    pub fn sqrt_batch_f32_serial(&self, x: &[f32], out: &mut [f32]) {
+        self.sqrt_like_f32_impl::<false>(x, out, false);
+    }
+
+    /// Batched f32 reciprocal square root, bit-identical per lane to
+    /// [`rsqrt_f32`](crate::goldschmidt::rsqrt_f32).
+    pub fn rsqrt_batch_f32(&self, x: &[f32], out: &mut [f32]) {
+        self.sqrt_like_f32_impl::<true>(x, out, true);
+    }
+
+    /// Single-threaded batched f32 reciprocal square root.
+    pub fn rsqrt_batch_f32_serial(&self, x: &[f32], out: &mut [f32]) {
+        self.sqrt_like_f32_impl::<true>(x, out, false);
+    }
+
+    fn sqrt_like_f32_impl<const RECIP: bool>(&self, x: &[f32], out: &mut [f32], parallel: bool) {
+        with_typed_scratch(|ts| {
+            ts.a.clear();
+            ts.a.extend(x.iter().map(|v| v.to_bits() as u64));
+            ts.out.clear();
+            ts.out.resize(out.len(), 0);
+            self.sqrt_like_bits_impl::<formats::F32, RECIP>(
+                &ts.a,
+                &mut ts.out,
+                &mut ts.scratch,
+                parallel,
+            );
+            for (o, &w) in out.iter_mut().zip(ts.out.iter()) {
+                *o = f32::from_bits(w as u32);
+            }
+        });
+    }
+}
+
+/// Thread-local arena backing the typed convenience wrappers: input /
+/// output planes plus the inner [`BatchScratch`], reused across calls so
+/// the benched f32/f64 paths stay allocation-free after warmup.
+#[derive(Default)]
+struct TypedScratch {
+    a: Vec<u64>,
+    b: Vec<u64>,
+    out: Vec<u64>,
+    scratch: BatchScratch,
+}
+
+impl TypedScratch {
+    /// Refill both input planes (capacity retained).
+    fn load2(&mut self, a: impl Iterator<Item = u64>, b: impl Iterator<Item = u64>) {
+        self.a.clear();
+        self.a.extend(a);
+        self.b.clear();
+        self.b.extend(b);
+        self.out.clear();
+    }
+}
+
+fn with_typed_scratch<R>(f: impl FnOnce(&mut TypedScratch) -> R) -> R {
+    thread_local! {
+        static TYPED: std::cell::RefCell<TypedScratch> =
+            std::cell::RefCell::new(TypedScratch::default());
+    }
+    TYPED.with(|ts| f(&mut ts.borrow_mut()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::{FormatKind, F16};
     use crate::goldschmidt::Config;
     use crate::util::rng::Xoshiro256;
 
@@ -442,6 +591,53 @@ mod tests {
         assert_eq!(out[1].to_bits(), ctx.divide_f64(-1.0, 3.0).to_bits());
         assert!(out[2].is_nan());
         assert_eq!(out[3], f64::INFINITY); // overflow saturates per IEEE
+    }
+
+    #[test]
+    fn f16_batch_known_values() {
+        let ctx = GoldschmidtContext::new(FormatKind::F16.datapath_config());
+        let mut scratch = BatchScratch::new();
+        // 6/2, 10/4, 1.5/0.5 in f16 bits
+        let enc = |x: f64| crate::formats::Value::from_f64(FormatKind::F16, x).bits();
+        let n = [enc(6.0), enc(10.0), enc(1.5), enc(f64::NAN)];
+        let d = [enc(2.0), enc(4.0), enc(0.5), enc(1.0)];
+        let mut out = [0u64; 4];
+        ctx.divide_batch_bits::<F16>(&n, &d, &mut out, &mut scratch);
+        assert_eq!(out[0], enc(3.0));
+        assert_eq!(out[1], enc(2.5));
+        assert_eq!(out[2], enc(3.0));
+        assert_eq!(out[3], F16::QNAN);
+        let x = [enc(4.0), enc(9.0), enc(0.25)];
+        let mut s = [0u64; 3];
+        ctx.sqrt_batch_bits::<F16>(&x, &mut s, &mut scratch);
+        assert_eq!(s, [enc(2.0), enc(3.0), enc(0.5)]);
+        let mut r = [0u64; 3];
+        ctx.rsqrt_batch_bits::<F16>(&x, &mut r, &mut scratch);
+        assert_eq!(r, [enc(0.5), enc(1.0 / 3.0), enc(2.0)]);
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches_is_transparent() {
+        // one scratch serving shrinking/growing batches of different ops
+        let ctx = GoldschmidtContext::new(Config::default());
+        let mut scratch = BatchScratch::new();
+        let mut rng = Xoshiro256::new(0x5C8A);
+        for &lanes in &[300usize, 7, 0, 64, 513] {
+            let n: Vec<u64> =
+                (0..lanes).map(|_| rng.range_f32(1e-6, 1e6).to_bits() as u64).collect();
+            let d: Vec<u64> =
+                (0..lanes).map(|_| rng.range_f32(1e-6, 1e6).to_bits() as u64).collect();
+            let mut out = vec![0u64; lanes];
+            ctx.divide_batch_bits::<crate::formats::F32>(&n, &d, &mut out, &mut scratch);
+            for i in 0..lanes {
+                assert_eq!(out[i], ctx.divide_bits::<crate::formats::F32>(n[i], d[i]), "lane {i}");
+            }
+            let mut out = vec![0u64; lanes];
+            ctx.sqrt_batch_bits::<crate::formats::F32>(&n, &mut out, &mut scratch);
+            for i in 0..lanes {
+                assert_eq!(out[i], ctx.sqrt_bits::<crate::formats::F32>(n[i]), "sqrt lane {i}");
+            }
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use crate::arith::fixed::{q2_max, Fixed};
 use crate::arith::twos::ComplementBlock;
+use crate::formats::{self, FloatFormat};
 use crate::goldschmidt::{division, sqrt, Config};
 use crate::tables::{ReciprocalTable, RsqrtTable};
 
@@ -144,12 +145,39 @@ impl GoldschmidtContext {
     pub fn divide_mantissa(&self, n: &Fixed, d: &Fixed) -> Fixed {
         division::divide_mantissa_quick_in(n, d, &self.recip, &self.cfg, &self.complement)
     }
-}
 
-// The fp/fp64 boundary helpers are consumed by batch.rs through this
-// module's re-exports to keep the kernel's import surface in one place.
-pub(super) use crate::arith::fp::{classify, pack, unpack, FpClass};
-pub(super) use crate::arith::fp64::{classify64, pack64, unpack64};
+    // ---- format-generic scalar paths ----------------------------------
+    //
+    // The scalar reference implementations the batch kernels are pinned
+    // against, monomorphized per IEEE format: the generic special-case
+    // envelopes from `crate::formats` around the precomputed mantissa
+    // datapath. For `F32`/`F64` these are bit-identical to the typed
+    // entry points above (both delegate to the same envelopes).
+
+    /// Scalar division on raw format words, any [`FloatFormat`].
+    pub fn divide_bits<F: FloatFormat>(&self, n: u64, d: u64) -> u64 {
+        formats::divide_via_bits::<F, _>(n, d, self.frac, |nm, dm| {
+            division::divide_mantissa_quick_in(&nm, &dm, &self.recip, &self.cfg, &self.complement)
+        })
+    }
+
+    /// Scalar square root on raw format words, any [`FloatFormat`].
+    pub fn sqrt_bits<F: FloatFormat>(&self, x: u64) -> u64 {
+        formats::sqrt_via_bits::<F, _>(x, self.frac, |d| {
+            sqrt::sqrt_rsqrt_mantissa_quick_in(&d, &self.rsqrt, &self.cfg, &self.three_half).0
+        })
+    }
+
+    /// Scalar reciprocal square root on raw format words, any
+    /// [`FloatFormat`].
+    pub fn rsqrt_bits<F: FloatFormat>(&self, x: u64) -> u64 {
+        formats::rsqrt_via_bits::<F, _>(x, self.frac, |d| {
+            let h = sqrt::sqrt_rsqrt_mantissa_quick_in(&d, &self.rsqrt, &self.cfg, &self.three_half)
+                .1;
+            Fixed::from_bits(h.bits() << 1, self.frac) // 2h: a shift
+        })
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -204,5 +232,36 @@ mod tests {
     #[should_panic(expected = "invalid Goldschmidt config")]
     fn invalid_config_rejected() {
         GoldschmidtContext::new(Config::default().with_frac(8));
+    }
+
+    #[test]
+    fn bits_paths_match_typed_scalar_wrappers() {
+        use crate::formats::{F32 as Fmt32, F64 as Fmt64};
+        let ctx = GoldschmidtContext::new(Config::default());
+        for &(n, d) in &[(355.0f32, 113.0), (-8.5, 2.0), (1.0, 0.0), (f32::NAN, 1.0), (0.0, -0.0)]
+        {
+            assert_eq!(
+                ctx.divide_bits::<Fmt32>(n.to_bits() as u64, d.to_bits() as u64) as u32,
+                ctx.divide_f32(n, d).to_bits(),
+                "{n} / {d}"
+            );
+        }
+        for &x in &[2.0f32, 9.0, -4.0, 0.0, f32::INFINITY, f32::NAN] {
+            assert_eq!(
+                ctx.sqrt_bits::<Fmt32>(x.to_bits() as u64) as u32,
+                ctx.sqrt_f32(x).to_bits(),
+                "sqrt({x})"
+            );
+            assert_eq!(
+                ctx.rsqrt_bits::<Fmt32>(x.to_bits() as u64) as u32,
+                ctx.rsqrt_f32(x).to_bits(),
+                "rsqrt({x})"
+            );
+        }
+        let ctx = GoldschmidtContext::new(Config::double());
+        assert_eq!(
+            ctx.divide_bits::<Fmt64>(1.0f64.to_bits(), 3.0f64.to_bits()),
+            ctx.divide_f64(1.0, 3.0).to_bits()
+        );
     }
 }

@@ -35,11 +35,18 @@
 //!   reciprocal / rsqrt ROMs pre-shifted to the datapath width, the
 //!   complement constants, the `3/2` sqrt constant, and saturation
 //!   masks. Also exposes scalar entry points that reuse the same
-//!   precomputed state (no per-call `ComplementBlock::new`).
-//! * [`batch`] — the SoA kernels: `divide_batch_f32`, `sqrt_batch_f32`,
-//!   `rsqrt_batch_f32`, and the `fp64` twin `divide_batch_f64`, plus an
-//!   N-way scoped-thread worker split that engages for batches >= 256
-//!   so a 1024-wide flush uses every core.
+//!   precomputed state (no per-call `ComplementBlock::new`), both typed
+//!   (f32/f64) and generic over any
+//!   [`FloatFormat`](crate::formats::FloatFormat) (`divide_bits`,
+//!   `sqrt_bits`, `rsqrt_bits`).
+//! * [`batch`] — the SoA kernels, monomorphized per IEEE format:
+//!   `divide_batch_bits`, `sqrt_batch_bits`, `rsqrt_batch_bits` over
+//!   raw `u64` plane words (f16 / bf16 / f32 / f64), with typed
+//!   f32/f64 convenience wrappers, a reusable [`BatchScratch`] plane
+//!   arena (the serving executor holds one per worker, making the hot
+//!   path allocation-free), and an N-way scoped-thread worker split
+//!   that engages for batches >= 256 so a 1024-wide flush uses every
+//!   core.
 //!
 //! # Contract
 //!
@@ -56,4 +63,5 @@
 pub mod batch;
 pub mod context;
 
+pub use batch::BatchScratch;
 pub use context::GoldschmidtContext;

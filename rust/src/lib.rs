@@ -7,11 +7,14 @@
 //! * **Layer 3 (this crate)** — the paper's hardware contribution as a
 //!   cycle-accurate simulator ([`sim`]) with an area model ([`area`]),
 //!   plus the bit-accurate arithmetic substrate ([`arith`], [`tables`],
-//!   [`goldschmidt`], [`baselines`]), the batched SoA serving kernels
-//!   ([`kernel`]) and an FPU-service coordinator ([`coordinator`]) that
-//!   serves batched divide/sqrt/rsqrt requests through the native batch
-//!   kernels or AOT-compiled XLA executables ([`runtime`], the latter
-//!   behind the non-default `pjrt` feature).
+//!   [`goldschmidt`], [`baselines`]), the multi-precision format plane
+//!   ([`formats`]: f16 / bf16 / f32 / f64 geometry, pack/unpack, and
+//!   format-tagged values), the batched SoA serving kernels ([`kernel`],
+//!   monomorphized per format) and an FPU-service coordinator
+//!   ([`coordinator`]) that serves batched divide/sqrt/rsqrt requests in
+//!   any supported format through the native batch kernels or
+//!   AOT-compiled XLA executables ([`runtime`], the latter behind the
+//!   non-default `pjrt` feature).
 //! * **Layer 2** — `python/compile/model.py`: jax graphs, lowered once
 //!   to HLO text under `artifacts/`.
 //! * **Layer 1** — `python/compile/kernels/`: the Goldschmidt iteration
@@ -30,6 +33,7 @@ pub mod baselines;
 pub mod bench;
 pub mod check;
 pub mod coordinator;
+pub mod formats;
 pub mod goldschmidt;
 pub mod kernel;
 pub mod runtime;

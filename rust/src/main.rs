@@ -13,7 +13,7 @@ use goldschmidt::arith::fixed::Fixed;
 use goldschmidt::arith::twos::ComplementKind;
 use goldschmidt::arith::ulp;
 use goldschmidt::area::Comparison;
-use goldschmidt::coordinator::{BatcherConfig, FpuService, ServiceConfig};
+use goldschmidt::coordinator::{BatcherConfig, FormatKind, FpuService, ServiceConfig};
 use goldschmidt::goldschmidt::{variants, Config};
 use goldschmidt::runtime::NativeExecutor;
 #[cfg(feature = "pjrt")]
@@ -49,6 +49,7 @@ COMMANDS:
              --d F --steps K --gantt
   serve      run the FPU service on a synthetic workload (E2E driver)
              --requests N --backend pjrt|native --workers W
+             --format f16|bf16|f32|f64 (native backend serves all four)
              --batch MAX --wait-us US --rate R --artifacts DIR
   version    print version
 ";
@@ -341,6 +342,11 @@ fn start_service(
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.get("requests", 50_000usize).map_err(anyhow::Error::msg)?;
     let backend = args.get_str("backend", "native");
+    let format =
+        FormatKind::parse(&args.get_str("format", "f32")).map_err(anyhow::Error::msg)?;
+    if backend == "pjrt" && format != FormatKind::F32 {
+        bail!("the pjrt backend serves f32 only (AOT artifacts are single-precision); use --backend native for {format}");
+    }
     let workers: usize = args.get("workers", 1usize).map_err(anyhow::Error::msg)?;
     let max_batch: usize = args.get("batch", 1024usize).map_err(anyhow::Error::msg)?;
     let wait_us: u64 = args.get("wait-us", 200u64).map_err(anyhow::Error::msg)?;
@@ -368,14 +374,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ArrivalProcess::Closed
         },
         divide_frac: 0.7,
+        format,
         ..Default::default()
     };
-    println!("serving {requests} requests on backend={backend} workers={workers} ...");
+    println!(
+        "serving {requests} {format} requests on backend={backend} workers={workers} ..."
+    );
     let t0 = std::time::Instant::now();
     let handle = svc.handle();
     let mut rxs = Vec::with_capacity(requests);
     for r in WorkloadGen::generate(spec) {
-        rxs.push(handle.submit(r.op, r.a, r.b)?);
+        rxs.push(handle.submit_value(r.op, r.value_a(), r.value_b())?);
     }
     let mut ok = 0u64;
     for rx in rxs {

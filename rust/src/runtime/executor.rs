@@ -1,38 +1,52 @@
 //! Batched op executors: the boundary between the coordinator and the
-//! compiled compute.
+//! compiled compute. Operands and results travel as raw `u64` plane
+//! words tagged with a [`FormatKind`], so one interface serves every
+//! IEEE format the [`crate::formats`] plane defines.
 //!
-//! [`PjrtExecutor`] (behind the non-default `pjrt` feature) is the
+//! `PjrtExecutor` (behind the non-default `pjrt` feature) is the
 //! XLA path: HLO text (lowered once by `python/compile/aot.py`) is
 //! parsed and compiled by the `xla` crate's PJRT CPU client at startup;
-//! execution is a single FFI call per batch.
+//! execution is a single FFI call per batch (f32 only — the AOT
+//! artifacts are lowered at single precision).
 //!
 //! [`NativeExecutor`] is the same interface over the crate's own
 //! bit-accurate Goldschmidt datapath, served through the batched SoA
-//! kernels ([`crate::kernel`]): one [`GoldschmidtContext`] per executor
-//! (ROMs + complement constants precomputed once), lane-parallel batch
-//! execution, and a scoped-thread worker split for large flushes. It is
-//! both the mock for coordinator tests (no artifacts needed) and the
+//! kernels ([`crate::kernel`]): one [`GoldschmidtContext`] per format
+//! (ROMs + complement constants precomputed once, at that format's
+//! datapath geometry), lane-parallel batch execution, a persistent
+//! per-worker [`BatchScratch`] arena so the hot path performs no plane
+//! allocations, and a scoped-thread worker split for large flushes. It
+//! is both the mock for coordinator tests (no artifacts needed) and the
 //! comparison baseline in the E2E bench.
 
 use anyhow::{bail, Context as _, Result};
 
 use crate::coordinator::request::OpKind;
-use crate::goldschmidt::Config;
-use crate::kernel::GoldschmidtContext;
+use crate::formats::{self, FloatFormat, FormatKind};
+use crate::kernel::{BatchScratch, GoldschmidtContext};
 
-/// A batched executor for the three FPU ops.
+/// A batched executor for the three FPU ops across the supported
+/// formats.
 ///
 /// Deliberately NOT `Send`: the PJRT client wraps thread-local FFI
 /// state, so each service worker constructs its own executor inside its
 /// own thread (see [`crate::coordinator::service::FpuService::start`]).
 pub trait Executor {
-    /// Batch sizes available for `op`, ascending. Empty = unsupported.
-    fn batch_ladder(&self, op: OpKind) -> Vec<usize>;
+    /// Batch sizes available for `(op, format)`, ascending. Empty =
+    /// unsupported (the batcher then forms unpadded batches, which the
+    /// executor may still reject at `execute` time).
+    fn batch_ladder(&self, op: OpKind, format: FormatKind) -> Vec<usize>;
 
-    /// Execute one batch. `a.len()` must equal an available batch size;
-    /// for `Divide`, `b` must be `Some` with the same length. Returns
-    /// one output per element.
-    fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>>;
+    /// Execute one batch of raw `format` words. `a.len()` must equal an
+    /// available batch size; for `Divide`, `b` must be `Some` with the
+    /// same length. Returns one output word per element.
+    fn execute(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: Option<&[u64]>,
+    ) -> Result<Vec<u64>>;
 
     /// Human-readable backend name.
     fn name(&self) -> &'static str;
@@ -41,7 +55,8 @@ pub trait Executor {
 // ---------------------------------------------------------------- PJRT --
 
 /// Executor over AOT-compiled XLA executables (PJRT CPU). Requires the
-/// `pjrt` feature (and the `xla` dependency it implies).
+/// `pjrt` feature (and the `xla` dependency it implies). Serves f32
+/// only; other formats report an empty ladder.
 #[cfg(feature = "pjrt")]
 pub struct PjrtExecutor {
     client: xla::PjRtClient,
@@ -99,21 +114,36 @@ impl PjrtExecutor {
 
 #[cfg(feature = "pjrt")]
 impl Executor for PjrtExecutor {
-    fn batch_ladder(&self, op: OpKind) -> Vec<usize> {
-        self.manifest.batches_for(op)
+    fn batch_ladder(&self, op: OpKind, format: FormatKind) -> Vec<usize> {
+        if format == FormatKind::F32 {
+            self.manifest.batches_for(op)
+        } else {
+            Vec::new()
+        }
     }
 
-    fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>> {
+    fn execute(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: Option<&[u64]>,
+    ) -> Result<Vec<u64>> {
+        if format != FormatKind::F32 {
+            bail!("pjrt backend serves f32 only (got {format})");
+        }
         let batch = a.len();
         self.ensure_compiled(op, batch)?;
         let exe = self.executables.get(&(op, batch)).expect("just compiled");
-        let la = xla::Literal::vec1(a);
+        let af: Vec<f32> = a.iter().map(|&w| f32::from_bits(w as u32)).collect();
+        let la = xla::Literal::vec1(&af);
         let result = match (op, b) {
             (OpKind::Divide, Some(b)) => {
                 if b.len() != batch {
                     bail!("divide operand length mismatch: {} vs {batch}", b.len());
                 }
-                let lb = xla::Literal::vec1(b);
+                let bf: Vec<f32> = b.iter().map(|&w| f32::from_bits(w as u32)).collect();
+                let lb = xla::Literal::vec1(&bf);
                 exe.execute::<xla::Literal>(&[la, lb])
             }
             (OpKind::Divide, None) => bail!("divide needs two operands"),
@@ -130,7 +160,7 @@ impl Executor for PjrtExecutor {
         if v.len() != batch {
             bail!("result length {} != batch {batch}", v.len());
         }
-        Ok(v)
+        Ok(v.into_iter().map(|x| x.to_bits() as u64).collect())
     }
 
     fn name(&self) -> &'static str {
@@ -141,50 +171,87 @@ impl Executor for PjrtExecutor {
 // -------------------------------------------------------------- native --
 
 /// Executor over the crate's own bit-accurate datapath (no artifacts),
-/// running the batched SoA kernels with a precomputed
-/// [`GoldschmidtContext`].
+/// running the batched SoA kernels with one precomputed
+/// [`GoldschmidtContext`] per format and a persistent scratch arena.
 pub struct NativeExecutor {
-    ctx: GoldschmidtContext,
+    /// One datapath context per [`FormatKind`], indexed by
+    /// `FormatKind::index()` — exactly as the paper's hardware would
+    /// instantiate one ROM + multiplier pair per word width.
+    ctxs: [GoldschmidtContext; 4],
     ladder: Vec<usize>,
+    /// Per-worker scratch planes: each service worker owns its executor,
+    /// so this arena makes batch decomposition allocation-free.
+    scratch: BatchScratch,
 }
 
 impl NativeExecutor {
-    /// New native executor with the given datapath configuration and
-    /// batch ladder (any sizes work; the ladder only shapes batching).
-    /// The context (ROMs, complement constants, rounding dispatch) is
-    /// built once here — the per-batch path only runs the lane loops.
-    pub fn new(cfg: Config, ladder: &[usize]) -> Self {
-        Self { ctx: GoldschmidtContext::new(cfg), ladder: ladder.to_vec() }
+    /// New native executor with the given batch ladder (any sizes work;
+    /// the ladder only shapes batching). The per-format contexts (ROMs,
+    /// complement constants, rounding dispatch) are built once here from
+    /// [`FormatKind::datapath_config`] — the per-batch path only runs
+    /// the lane loops.
+    pub fn new(ladder: &[usize]) -> Self {
+        Self {
+            ctxs: std::array::from_fn(|i| {
+                GoldschmidtContext::new(FormatKind::ALL[i].datapath_config())
+            }),
+            ladder: ladder.to_vec(),
+            scratch: BatchScratch::new(),
+        }
     }
 
-    /// Default: paper configuration, the AOT ladder {64, 256, 1024}.
+    /// Default: per-format paper configurations, the AOT ladder
+    /// {64, 256, 1024}.
     pub fn with_defaults() -> Self {
-        Self::new(Config::default(), &[64, 256, 1024])
+        Self::new(&[64, 256, 1024])
     }
 
-    /// The precomputed datapath context this executor serves with.
-    pub fn context(&self) -> &GoldschmidtContext {
-        &self.ctx
-    }
-}
-
-impl Executor for NativeExecutor {
-    fn batch_ladder(&self, _op: OpKind) -> Vec<usize> {
-        self.ladder.clone()
+    /// The precomputed datapath context serving `format`.
+    pub fn context(&self, format: FormatKind) -> &GoldschmidtContext {
+        &self.ctxs[format.index()]
     }
 
-    fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>> {
-        let mut out = vec![0.0f32; a.len()];
+    fn run<F: FloatFormat>(
+        &mut self,
+        op: OpKind,
+        a: &[u64],
+        b: Option<&[u64]>,
+        out: &mut [u64],
+    ) -> Result<()> {
+        let ctx = &self.ctxs[F::KIND.index()];
         match op {
             OpKind::Divide => {
                 let b = b.context("divide needs two operands")?;
                 if b.len() != a.len() {
                     bail!("operand length mismatch");
                 }
-                self.ctx.divide_batch_f32(a, b, &mut out);
+                ctx.divide_batch_bits::<F>(a, b, out, &mut self.scratch);
             }
-            OpKind::Sqrt => self.ctx.sqrt_batch_f32(a, &mut out),
-            OpKind::Rsqrt => self.ctx.rsqrt_batch_f32(a, &mut out),
+            OpKind::Sqrt => ctx.sqrt_batch_bits::<F>(a, out, &mut self.scratch),
+            OpKind::Rsqrt => ctx.rsqrt_batch_bits::<F>(a, out, &mut self.scratch),
+        }
+        Ok(())
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn batch_ladder(&self, _op: OpKind, _format: FormatKind) -> Vec<usize> {
+        self.ladder.clone()
+    }
+
+    fn execute(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: Option<&[u64]>,
+    ) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; a.len()];
+        match format {
+            FormatKind::F16 => self.run::<formats::F16>(op, a, b, &mut out)?,
+            FormatKind::BF16 => self.run::<formats::BF16>(op, a, b, &mut out)?,
+            FormatKind::F32 => self.run::<formats::F32>(op, a, b, &mut out)?,
+            FormatKind::F64 => self.run::<formats::F64>(op, a, b, &mut out)?,
         }
         Ok(out)
     }
@@ -198,35 +265,69 @@ impl Executor for NativeExecutor {
 mod tests {
     use super::*;
 
+    fn f32_plane(xs: &[f32]) -> Vec<u64> {
+        xs.iter().map(|v| v.to_bits() as u64).collect()
+    }
+
+    fn f32_out(ws: &[u64]) -> Vec<f32> {
+        ws.iter().map(|&w| f32::from_bits(w as u32)).collect()
+    }
+
     #[test]
     fn native_divide_matches_hardware_division() {
         let mut ex = NativeExecutor::with_defaults();
-        let a = vec![6.0f32, 10.0, 1.5, -8.0];
-        let b = vec![2.0f32, 4.0, 0.5, 2.0];
-        let out = ex.execute(OpKind::Divide, &a, Some(&b)).unwrap();
-        assert_eq!(out, vec![3.0, 2.5, 3.0, -4.0]);
+        let a = f32_plane(&[6.0, 10.0, 1.5, -8.0]);
+        let b = f32_plane(&[2.0, 4.0, 0.5, 2.0]);
+        let out = ex.execute(OpKind::Divide, FormatKind::F32, &a, Some(&b)).unwrap();
+        assert_eq!(f32_out(&out), vec![3.0, 2.5, 3.0, -4.0]);
     }
 
     #[test]
     fn native_sqrt_rsqrt() {
         let mut ex = NativeExecutor::with_defaults();
-        let a = vec![4.0f32, 9.0, 16.0];
-        assert_eq!(ex.execute(OpKind::Sqrt, &a, None).unwrap(), vec![2.0, 3.0, 4.0]);
-        assert_eq!(ex.execute(OpKind::Rsqrt, &a, None).unwrap(), vec![0.5, 1.0 / 3.0, 0.25]);
+        let a = f32_plane(&[4.0, 9.0, 16.0]);
+        let s = ex.execute(OpKind::Sqrt, FormatKind::F32, &a, None).unwrap();
+        assert_eq!(f32_out(&s), vec![2.0, 3.0, 4.0]);
+        let r = ex.execute(OpKind::Rsqrt, FormatKind::F32, &a, None).unwrap();
+        assert_eq!(f32_out(&r), vec![0.5, 1.0 / 3.0, 0.25]);
+    }
+
+    #[test]
+    fn native_serves_every_format() {
+        use crate::formats::Value;
+        let mut ex = NativeExecutor::with_defaults();
+        for format in FormatKind::ALL {
+            let a = vec![Value::from_f64(format, 6.0).bits(), Value::from_f64(format, 10.0).bits()];
+            let b = vec![Value::from_f64(format, 2.0).bits(), Value::from_f64(format, 4.0).bits()];
+            let out = ex.execute(OpKind::Divide, format, &a, Some(&b)).unwrap();
+            assert_eq!(Value::from_bits(format, out[0]).to_f64(), 3.0, "{format}");
+            assert_eq!(Value::from_bits(format, out[1]).to_f64(), 2.5, "{format}");
+            let s = ex.execute(OpKind::Sqrt, format, &a[..1], None).unwrap();
+            let want = Value::from_f64(format, 6.0f64.sqrt());
+            // sqrt(6) is inexact: the datapath result must round to the
+            // same format value or its neighbour; for the known-exact
+            // case below it must match exactly
+            assert!((Value::from_bits(format, s[0]).to_f64() - want.to_f64()).abs()
+                        <= want.to_f64() * 1e-2, "{format}");
+            let x = vec![Value::from_f64(format, 9.0).bits()];
+            let s = ex.execute(OpKind::Sqrt, format, &x, None).unwrap();
+            assert_eq!(Value::from_bits(format, s[0]).to_f64(), 3.0, "{format}");
+        }
     }
 
     #[test]
     fn native_errors_on_bad_arity() {
         let mut ex = NativeExecutor::with_defaults();
-        assert!(ex.execute(OpKind::Divide, &[1.0], None).is_err());
-        let r = ex.execute(OpKind::Divide, &[1.0], Some(&[1.0, 2.0]));
+        assert!(ex.execute(OpKind::Divide, FormatKind::F32, &[1], None).is_err());
+        let r = ex.execute(OpKind::Divide, FormatKind::F32, &[1], Some(&[1, 2]));
         assert!(r.is_err());
     }
 
     #[test]
     fn ladder_reported() {
         let ex = NativeExecutor::with_defaults();
-        assert_eq!(ex.batch_ladder(OpKind::Divide), vec![64, 256, 1024]);
+        assert_eq!(ex.batch_ladder(OpKind::Divide, FormatKind::F32), vec![64, 256, 1024]);
+        assert_eq!(ex.batch_ladder(OpKind::Sqrt, FormatKind::F64), vec![64, 256, 1024]);
         assert_eq!(ex.name(), "native-fixed-point");
     }
 
@@ -237,11 +338,13 @@ mod tests {
         let mut rng = Xoshiro256::new(0xE0);
         let a: Vec<f32> = (0..1024).map(|_| rng.range_f32(1e-6, 1e6)).collect();
         let b: Vec<f32> = (0..1024).map(|_| rng.range_f32(1e-6, 1e6)).collect();
-        let out = ex.execute(OpKind::Divide, &a, Some(&b)).unwrap();
-        let ctx = ex.context();
+        let out = ex
+            .execute(OpKind::Divide, FormatKind::F32, &f32_plane(&a), Some(&f32_plane(&b)))
+            .unwrap();
+        let ctx = ex.context(FormatKind::F32);
         for i in 0..a.len() {
             let want = ctx.divide_f32(a[i], b[i]);
-            assert_eq!(out[i].to_bits(), want.to_bits(), "lane {i}");
+            assert_eq!(out[i] as u32, want.to_bits(), "lane {i}");
         }
     }
 

@@ -5,11 +5,11 @@
 //!   `python/compile/aot.py`.
 //! * [`executor`] — the [`Executor`](executor::Executor) trait with two
 //!   implementations: [`NativeExecutor`](executor::NativeExecutor) (the
-//!   bit-accurate rust datapath on the batched SoA kernels — the
-//!   default serving backend, no artifacts needed) and, behind the
-//!   non-default `pjrt` feature,
-//!   [`PjrtExecutor`](executor::PjrtExecutor) (HLO text ->
-//!   `xla::PjRtClient` -> compiled executables).
+//!   bit-accurate rust datapath on the batched SoA kernels, serving
+//!   every [`FormatKind`](crate::formats::FormatKind) — the default
+//!   backend, no artifacts needed) and, behind the non-default `pjrt`
+//!   feature, `PjrtExecutor` (HLO text -> `xla::PjRtClient` ->
+//!   compiled executables, f32 only).
 //!
 //! Python never runs here: the HLO was lowered once at build time
 //! (`make artifacts`), and the offline build compiles the PJRT path

@@ -2,7 +2,7 @@
 //! FPU-service experiments (E2E throughput/latency bench and the
 //! `fpu_service` example).
 
-use crate::coordinator::request::OpKind;
+use crate::coordinator::request::{FormatKind, OpKind, Value};
 use crate::util::rng::Xoshiro256;
 
 /// Operand value distribution.
@@ -46,12 +46,27 @@ pub enum ArrivalProcess {
 pub struct GenRequest {
     /// Operation kind.
     pub op: OpKind,
-    /// First operand.
+    /// IEEE format the request is served in.
+    pub format: FormatKind,
+    /// First operand (sampled at f32 precision; encode into the request
+    /// format with [`GenRequest::value_a`]).
     pub a: f32,
     /// Second operand (1.0 for unary ops).
     pub b: f32,
     /// Arrival offset from stream start, seconds.
     pub at_s: f64,
+}
+
+impl GenRequest {
+    /// First operand encoded into the request format (RNE).
+    pub fn value_a(&self) -> Value {
+        Value::from_f64(self.format, self.a as f64)
+    }
+
+    /// Second operand encoded into the request format (RNE).
+    pub fn value_b(&self) -> Value {
+        Value::from_f64(self.format, self.b as f64)
+    }
 }
 
 /// Full workload specification.
@@ -65,6 +80,8 @@ pub struct WorkloadSpec {
     pub arrivals: ArrivalProcess,
     /// Mix: probability of divide (remainder split evenly sqrt/rsqrt).
     pub divide_frac: f64,
+    /// IEEE format every request is tagged with.
+    pub format: FormatKind,
     /// PRNG seed.
     pub seed: u64,
 }
@@ -76,6 +93,7 @@ impl Default for WorkloadSpec {
             dist: OperandDist::LogNormal { mu: 0.0, sigma: 2.0 },
             arrivals: ArrivalProcess::Closed,
             divide_frac: 1.0,
+            format: FormatKind::F32,
             seed: 0xFEED,
         }
     }
@@ -132,7 +150,7 @@ impl WorkloadGen {
             _ => a.abs().max(f32::MIN_POSITIVE),
         };
         self.advance_clock();
-        Some(GenRequest { op, a, b, at_s: self.clock_s })
+        Some(GenRequest { op, format: self.spec.format, a, b, at_s: self.clock_s })
     }
 
     fn pick_op(&mut self) -> OpKind {
@@ -234,7 +252,8 @@ mod tests {
 
     #[test]
     fn closed_arrivals_all_at_zero() {
-        let spec = WorkloadSpec { count: 10, arrivals: ArrivalProcess::Closed, ..Default::default() };
+        let spec =
+            WorkloadSpec { count: 10, arrivals: ArrivalProcess::Closed, ..Default::default() };
         assert!(WorkloadGen::generate(spec).iter().all(|r| r.at_s == 0.0));
     }
 
@@ -248,5 +267,18 @@ mod tests {
         for r in WorkloadGen::generate(spec) {
             assert!((1.0..2.0).contains(&r.a));
         }
+    }
+
+    #[test]
+    fn format_tags_and_values_follow_spec() {
+        let spec = WorkloadSpec { count: 50, format: FormatKind::F16, ..Default::default() };
+        for r in WorkloadGen::generate(spec) {
+            assert_eq!(r.format, FormatKind::F16);
+            assert_eq!(r.value_a().format(), FormatKind::F16);
+            // the encoded operand is the format's rounding of the sample
+            assert_eq!(r.value_a(), Value::from_f64(FormatKind::F16, r.a as f64));
+        }
+        // default stays f32 so existing workloads are unchanged
+        assert_eq!(WorkloadSpec::default().format, FormatKind::F32);
     }
 }

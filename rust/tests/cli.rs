@@ -103,6 +103,29 @@ fn serve_native_small() {
 }
 
 #[test]
+fn serve_native_f64() {
+    let o = run(&["serve", "--requests", "1000", "--backend", "native", "--format", "f64"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let out = stdout(&o);
+    assert!(out.contains("1000 f64 requests"));
+    assert!(out.contains("1000/1000 ok"));
+}
+
+#[test]
+fn serve_native_f16() {
+    let o = run(&["serve", "--requests", "500", "--backend", "native", "--format", "f16"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    assert!(stdout(&o).contains("500/500 ok"));
+}
+
+#[test]
+fn serve_rejects_unknown_format() {
+    let o = run(&["serve", "--requests", "10", "--format", "f128"]);
+    assert!(!o.status.success());
+    assert!(String::from_utf8_lossy(&o.stderr).contains("unknown format"));
+}
+
+#[test]
 fn stream_table() {
     let o = run(&["stream", "--max-steps", "3", "--ops", "100"]);
     assert!(o.status.success());

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
-use goldschmidt::coordinator::{BatcherConfig, FpuService, OpKind, ServiceConfig};
+use goldschmidt::coordinator::{BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig};
 use goldschmidt::runtime::{Executor, NativeExecutor};
 
 fn config() -> ServiceConfig {
@@ -28,15 +28,21 @@ struct Flaky {
 }
 
 impl Executor for Flaky {
-    fn batch_ladder(&self, op: OpKind) -> Vec<usize> {
-        self.inner.batch_ladder(op)
+    fn batch_ladder(&self, op: OpKind, format: FormatKind) -> Vec<usize> {
+        self.inner.batch_ladder(op, format)
     }
-    fn execute(&mut self, op: OpKind, a: &[f32], b: Option<&[f32]>) -> Result<Vec<f32>> {
+    fn execute(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: Option<&[u64]>,
+    ) -> Result<Vec<u64>> {
         let n = self.calls.fetch_add(1, Ordering::Relaxed);
         if n % self.period == self.period - 1 {
             bail!("injected failure on call {n}");
         }
-        self.inner.execute(op, a, b)
+        self.inner.execute(op, format, a, b)
     }
     fn name(&self) -> &'static str {
         "flaky"
@@ -65,7 +71,7 @@ fn flaky_executor_fails_batches_not_service() {
         match rx.recv() {
             Ok(resp) => {
                 // successes must still be CORRECT
-                assert_eq!(resp.value, (i + 1) as f32);
+                assert_eq!(resp.value.f32(), (i + 1) as f32);
                 ok += 1;
             }
             Err(_) => failed += 1, // dropped reply = failed batch
@@ -154,6 +160,6 @@ fn shutdown_under_load_loses_nothing_accepted() {
     svc.shutdown(); // drain path must flush every accepted request
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().expect("accepted request must be answered");
-        assert_eq!(resp.value, (i + 1) as f32);
+        assert_eq!(resp.value.f32(), (i + 1) as f32);
     }
 }

@@ -1,16 +1,18 @@
 //! The batch-kernel contract: every SoA batch kernel output is
-//! bit-identical to the scalar trace path — all three ops, f32 and f64,
-//! both rounding modes, both complement circuits, steps 0 through 5,
-//! with IEEE specials (NaN, infinities, signed zeros, subnormals)
-//! mixed into the batches. The scalar path is itself cross-checked
-//! against the cycle-accurate simulator in `sim_vs_library.rs`, so
-//! equality here extends that chain to the serving hot path.
+//! bit-identical to the scalar reference path — all three ops in every
+//! served format (f16 / bf16 / f32 / f64), both rounding modes, both
+//! complement circuits, steps 0 through 5, with IEEE specials (NaN,
+//! infinities, signed zeros, subnormals) mixed into the batches. The
+//! f32 scalar path is itself cross-checked against the cycle-accurate
+//! simulator in `sim_vs_library.rs`, so equality here extends that
+//! chain to the serving hot path in every precision.
 
 use goldschmidt::arith::fixed::Rounding;
 use goldschmidt::arith::twos::ComplementKind;
 use goldschmidt::check::{self, Gen};
+use goldschmidt::formats::{FloatFormat, Value, BF16, F16};
 use goldschmidt::goldschmidt::{divide_f32, divide_f64, rsqrt_f32, sqrt_f32, Config};
-use goldschmidt::kernel::GoldschmidtContext;
+use goldschmidt::kernel::{BatchScratch, GoldschmidtContext};
 use goldschmidt::util::rng::Xoshiro256;
 
 /// A random datapath configuration across the swept parameter space.
@@ -221,6 +223,166 @@ fn specials_inside_large_parallel_batches() {
     ctx.rsqrt_batch_f32(&n, &mut out);
     let want: Vec<f32> = n.iter().map(|&v| rsqrt_f32(v, ctx.rsqrt_table(), &cfg)).collect();
     assert_lanes_equal_f32(&out, &want, "parallel rsqrt 1024");
+}
+
+// ---- format-generic contract: batch == scalar reference, per lane ----
+
+/// Full container mask for a format (random draws cover every class:
+/// normals, subnormals, zeros, infinities, NaNs).
+fn full_mask<F: FloatFormat>() -> u64 {
+    if F::BITS == 64 { u64::MAX } else { (1u64 << F::BITS) - 1 }
+}
+
+/// Hand-picked special/boundary words of a format.
+fn specials<F: FloatFormat>() -> Vec<u64> {
+    vec![
+        F::QNAN,
+        F::INF,
+        F::INF | F::SIGN_MASK,
+        0,                          // +0
+        F::SIGN_MASK,               // -0
+        F::KIND.one_bits(),         // 1.0
+        F::KIND.one_bits() | F::SIGN_MASK,
+        1,                          // min subnormal
+        F::MANT_MASK,               // max subnormal
+        F::INF - 1,                 // max finite
+        F::SIGN_MASK | 1,           // -min subnormal
+    ]
+}
+
+/// The acceptance contract for one format: every batch kernel output is
+/// bit-identical to the scalar reference path, random full-bit-space
+/// lanes with specials spliced in.
+fn format_batch_matches_scalar<F: FloatFormat>(g: &mut Gen) -> Result<(), String> {
+    let ctx = GoldschmidtContext::new(F::KIND.datapath_config());
+    let mut scratch = BatchScratch::new();
+    let lanes = g.usize_in(0, 64);
+    let mut n: Vec<u64> = (0..lanes).map(|_| g.bits() & full_mask::<F>()).collect();
+    let mut d: Vec<u64> = (0..lanes).map(|_| g.bits() & full_mask::<F>()).collect();
+    for (k, &s) in specials::<F>().iter().enumerate() {
+        if lanes > 0 {
+            n[(k * 7) % lanes] = s;
+            d[(k * 5 + 3) % lanes] = s;
+        }
+    }
+    let mut out = vec![0u64; lanes];
+    ctx.divide_batch_bits::<F>(&n, &d, &mut out, &mut scratch);
+    for i in 0..lanes {
+        let want = ctx.divide_bits::<F>(n[i], d[i]);
+        if out[i] != want {
+            return Err(format!(
+                "{} divide lane {i}: {:#x} / {:#x} -> {:#x} want {:#x}",
+                F::KIND, n[i], d[i], out[i], want
+            ));
+        }
+    }
+    ctx.sqrt_batch_bits::<F>(&n, &mut out, &mut scratch);
+    for i in 0..lanes {
+        let want = ctx.sqrt_bits::<F>(n[i]);
+        if out[i] != want {
+            return Err(format!(
+                "{} sqrt lane {i}: sqrt({:#x}) -> {:#x} want {:#x}",
+                F::KIND, n[i], out[i], want
+            ));
+        }
+    }
+    ctx.rsqrt_batch_bits::<F>(&n, &mut out, &mut scratch);
+    for i in 0..lanes {
+        let want = ctx.rsqrt_bits::<F>(n[i]);
+        if out[i] != want {
+            return Err(format!(
+                "{} rsqrt lane {i}: rsqrt({:#x}) -> {:#x} want {:#x}",
+                F::KIND, n[i], out[i], want
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn f16_batch_matches_scalar_property() {
+    check::property("f16 batch kernels == scalar reference per lane", |g| {
+        format_batch_matches_scalar::<F16>(g)
+    });
+}
+
+#[test]
+fn bf16_batch_matches_scalar_property() {
+    check::property("bf16 batch kernels == scalar reference per lane", |g| {
+        format_batch_matches_scalar::<BF16>(g)
+    });
+}
+
+#[test]
+fn f64_batch_matches_scalar_property_all_ops() {
+    check::property("f64 batch kernels == scalar reference per lane", |g| {
+        format_batch_matches_scalar::<goldschmidt::formats::F64>(g)
+    });
+}
+
+#[test]
+fn f32_generic_batch_matches_typed_scalar() {
+    // the generic f32 plane must agree with the typed scalar free
+    // functions the seed pinned (ties the new plane to the old contract)
+    check::property("generic f32 bits == typed divide_f32", |g| {
+        let cfg = Config::default();
+        let ctx = GoldschmidtContext::new(cfg);
+        let mut scratch = BatchScratch::new();
+        let lanes = g.usize_in(0, 40);
+        let n: Vec<u64> = (0..lanes).map(|_| g.bits() & 0xFFFF_FFFF).collect();
+        let d: Vec<u64> = (0..lanes).map(|_| g.bits() & 0xFFFF_FFFF).collect();
+        let mut out = vec![0u64; lanes];
+        ctx.divide_batch_bits::<goldschmidt::formats::F32>(&n, &d, &mut out, &mut scratch);
+        for i in 0..lanes {
+            let want = divide_f32(
+                f32::from_bits(n[i] as u32),
+                f32::from_bits(d[i] as u32),
+                ctx.reciprocal_table(),
+                &cfg,
+            );
+            if out[i] as u32 != want.to_bits() {
+                return Err(format!("lane {i}: got {:#x} want {:#x}", out[i], want.to_bits()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Accuracy: the per-format datapath configuration must deliver <= 1 ulp
+/// against the correctly rounded result in that format.
+fn format_accurate_to_one_ulp<F: FloatFormat>() {
+    let kind = F::KIND;
+    let ctx = GoldschmidtContext::new(kind.datapath_config());
+    let mut rng = Xoshiro256::new(0xACC0 ^ kind.index() as u64);
+    for _ in 0..2000 {
+        let a = Value::from_f64(kind, rng.range_f64(1e-3, 1e3));
+        let b = Value::from_f64(kind, rng.range_f64(1e-3, 1e3));
+        let q = ctx.divide_bits::<F>(a.bits(), b.bits());
+        let want = Value::from_f64(kind, a.to_f64() / b.to_f64()).bits();
+        let ulp = (q as i64 - want as i64).abs();
+        assert!(ulp <= 1, "{kind}: {} / {} -> {q:#x} want {want:#x}", a.to_f64(), b.to_f64());
+        let s = ctx.sqrt_bits::<F>(a.bits());
+        let want = Value::from_f64(kind, a.to_f64().sqrt()).bits();
+        assert!((s as i64 - want as i64).abs() <= 1, "{kind}: sqrt({})", a.to_f64());
+        let r = ctx.rsqrt_bits::<F>(a.bits());
+        let want = Value::from_f64(kind, 1.0 / a.to_f64().sqrt()).bits();
+        assert!((r as i64 - want as i64).abs() <= 1, "{kind}: rsqrt({})", a.to_f64());
+    }
+}
+
+#[test]
+fn f16_accurate_to_one_ulp() {
+    format_accurate_to_one_ulp::<F16>();
+}
+
+#[test]
+fn bf16_accurate_to_one_ulp() {
+    format_accurate_to_one_ulp::<BF16>();
+}
+
+#[test]
+fn f64_accurate_to_one_ulp() {
+    format_accurate_to_one_ulp::<goldschmidt::formats::F64>();
 }
 
 #[test]

@@ -8,10 +8,11 @@
 
 use std::path::PathBuf;
 
-use goldschmidt::coordinator::OpKind;
-use goldschmidt::goldschmidt::Config;
+use goldschmidt::coordinator::{FormatKind, OpKind};
 use goldschmidt::runtime::{Executor, NativeExecutor, PjrtExecutor};
 use goldschmidt::util::rng::Xoshiro256;
+
+const F32: FormatKind = FormatKind::F32;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -23,15 +24,24 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+fn plane(xs: &[f32]) -> Vec<u64> {
+    xs.iter().map(|v| v.to_bits() as u64).collect()
+}
+
+fn unplane(ws: &[u64]) -> Vec<f32> {
+    ws.iter().map(|&w| f32::from_bits(w as u32)).collect()
+}
+
 #[test]
 fn pjrt_loads_and_divides() {
     let Some(dir) = artifacts_dir() else { return };
     let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
     let mut rng = Xoshiro256::new(1);
-    let batch = ex.batch_ladder(OpKind::Divide)[0];
+    let batch = ex.batch_ladder(OpKind::Divide, F32)[0];
     let a: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.01, 1000.0)).collect();
     let b: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.01, 1000.0)).collect();
-    let out = ex.execute(OpKind::Divide, &a, Some(&b)).expect("execute");
+    let out =
+        unplane(&ex.execute(OpKind::Divide, F32, &plane(&a), Some(&plane(&b))).expect("execute"));
     assert_eq!(out.len(), batch);
     for i in 0..batch {
         let want = a[i] / b[i];
@@ -46,9 +56,9 @@ fn pjrt_sqrt_and_rsqrt() {
     let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
     let mut rng = Xoshiro256::new(2);
     for op in [OpKind::Sqrt, OpKind::Rsqrt] {
-        let batch = ex.batch_ladder(op)[0];
+        let batch = ex.batch_ladder(op, F32)[0];
         let a: Vec<f32> = (0..batch).map(|_| rng.range_f32(1e-6, 1e6)).collect();
-        let out = ex.execute(op, &a, None).expect("execute");
+        let out = unplane(&ex.execute(op, F32, &plane(&a), None).expect("execute"));
         for i in 0..batch {
             let want = match op {
                 OpKind::Sqrt => (a[i] as f64).sqrt() as f32,
@@ -58,6 +68,16 @@ fn pjrt_sqrt_and_rsqrt() {
             let ulp = (out[i].to_bits() as i64 - want.to_bits() as i64).abs();
             assert!(ulp <= 1, "{op:?} i={i} x={} got {} want {want}", a[i], out[i]);
         }
+    }
+}
+
+#[test]
+fn pjrt_non_f32_formats_unsupported() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
+    for format in [FormatKind::F16, FormatKind::BF16, FormatKind::F64] {
+        assert!(ex.batch_ladder(OpKind::Divide, format).is_empty(), "{format}");
+        assert!(ex.execute(OpKind::Sqrt, format, &[format.one_bits()], None).is_err());
     }
 }
 
@@ -73,17 +93,17 @@ fn pjrt_every_artifact_compiles_and_runs() {
         .map(|s| (s.op, s.batch, s.arity))
         .collect();
     for (op, batch, arity) in specs {
-        let a = vec![2.0f32; batch];
-        let b = vec![4.0f32; batch];
+        let a = plane(&vec![2.0f32; batch]);
+        let b = plane(&vec![4.0f32; batch]);
         let out = ex
-            .execute(op, &a, if arity == 2 { Some(&b) } else { None })
+            .execute(op, F32, &a, if arity == 2 { Some(&b) } else { None })
             .unwrap_or_else(|e| panic!("{op:?} b{batch}: {e:#}"));
         let want = match op {
             OpKind::Divide => 0.5,
             OpKind::Sqrt => std::f32::consts::SQRT_2,
             OpKind::Rsqrt => 1.0 / std::f32::consts::SQRT_2,
         };
-        for (i, &v) in out.iter().enumerate() {
+        for (i, &v) in unplane(&out).iter().enumerate() {
             assert!((v - want).abs() < 1e-6, "{op:?} b{batch} [{i}]: {v} vs {want}");
         }
     }
@@ -96,13 +116,13 @@ fn pjrt_matches_native_executor_closely() {
     // agree to <= 1 ulp on normal operands.
     let Some(dir) = artifacts_dir() else { return };
     let mut pjrt = PjrtExecutor::from_dir(&dir).expect("load artifacts");
-    let mut native = NativeExecutor::new(Config::default(), &[64]);
+    let mut native = NativeExecutor::new(&[64]);
     let mut rng = Xoshiro256::new(3);
     let batch = 64usize;
     let a: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.1, 100.0)).collect();
     let b: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.1, 100.0)).collect();
-    let x = pjrt.execute(OpKind::Divide, &a, Some(&b)).unwrap();
-    let y = native.execute(OpKind::Divide, &a, Some(&b)).unwrap();
+    let x = unplane(&pjrt.execute(OpKind::Divide, F32, &plane(&a), Some(&plane(&b))).unwrap());
+    let y = unplane(&native.execute(OpKind::Divide, F32, &plane(&a), Some(&plane(&b))).unwrap());
     for i in 0..batch {
         let ulp = (x[i].to_bits() as i64 - y[i].to_bits() as i64).abs();
         assert!(ulp <= 1, "i={i}: pjrt {} vs native {}", x[i], y[i]);
@@ -113,6 +133,6 @@ fn pjrt_matches_native_executor_closely() {
 fn pjrt_rejects_wrong_batch() {
     let Some(dir) = artifacts_dir() else { return };
     let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
-    let a = vec![1.0f32; 37]; // not on the ladder
-    assert!(ex.execute(OpKind::Divide, &a, Some(&a.clone())).is_err());
+    let a = plane(&vec![1.0f32; 37]); // not on the ladder
+    assert!(ex.execute(OpKind::Divide, F32, &a, Some(&a.clone())).is_err());
 }

@@ -5,7 +5,7 @@
 use std::time::Duration;
 
 use goldschmidt::coordinator::{
-    BatcherConfig, FpuService, OpKind, ServiceConfig,
+    BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, Value,
 };
 use goldschmidt::runtime::{Executor, NativeExecutor};
 #[cfg(feature = "pjrt")]
@@ -34,6 +34,7 @@ fn mixed_workload_all_correct() {
         divide_frac: 0.6,
         dist: OperandDist::LogNormal { mu: 0.0, sigma: 3.0 },
         arrivals: ArrivalProcess::Closed,
+        format: FormatKind::F32,
         seed: 42,
     };
     let reqs = WorkloadGen::generate(spec);
@@ -50,8 +51,9 @@ fn mixed_workload_all_correct() {
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().expect("response");
-        let ulp = (resp.value.to_bits() as i64 - expected[i].to_bits() as i64).abs();
-        assert!(ulp <= 1, "req {i}: got {} want {}", resp.value, expected[i]);
+        let got = resp.value.f32();
+        let ulp = (got.to_bits() as i64 - expected[i].to_bits() as i64).abs();
+        assert!(ulp <= 1, "req {i}: got {got} want {}", expected[i]);
     }
     let snap = svc.metrics().snapshot();
     assert_eq!(snap.total_requests(), 5000);
@@ -72,17 +74,18 @@ fn backpressure_try_submit() {
     // tiny queue + slow consumption: try_submit must eventually report Full
     struct Slow(NativeExecutor);
     impl Executor for Slow {
-        fn batch_ladder(&self, op: OpKind) -> Vec<usize> {
-            self.0.batch_ladder(op)
+        fn batch_ladder(&self, op: OpKind, format: FormatKind) -> Vec<usize> {
+            self.0.batch_ladder(op, format)
         }
         fn execute(
             &mut self,
             op: OpKind,
-            a: &[f32],
-            b: Option<&[f32]>,
-        ) -> anyhow::Result<Vec<f32>> {
+            format: FormatKind,
+            a: &[u64],
+            b: Option<&[u64]>,
+        ) -> anyhow::Result<Vec<u64>> {
             std::thread::sleep(Duration::from_millis(20));
-            self.0.execute(op, a, b)
+            self.0.execute(op, format, a, b)
         }
         fn name(&self) -> &'static str {
             "slow"
@@ -143,6 +146,80 @@ fn poisson_open_loop_latency_sane() {
     svc.shutdown();
 }
 
+#[test]
+fn f64_workload_served_end_to_end() {
+    // the acceptance path: a full double-precision workload through the
+    // coordinator, every result within 1 ulp of exact f64 arithmetic
+    let svc = FpuService::start(quick_config(), native_factory).unwrap();
+    let handle = svc.handle();
+    let spec = WorkloadSpec {
+        count: 3000,
+        divide_frac: 0.6,
+        dist: OperandDist::LogNormal { mu: 0.0, sigma: 3.0 },
+        arrivals: ArrivalProcess::Closed,
+        format: FormatKind::F64,
+        seed: 0x64,
+    };
+    let reqs = WorkloadGen::generate(spec);
+    let mut expected = Vec::with_capacity(reqs.len());
+    let mut rxs = Vec::with_capacity(reqs.len());
+    for r in &reqs {
+        let (a, b) = (r.value_a(), r.value_b());
+        let want = match r.op {
+            OpKind::Divide => a.to_f64() / b.to_f64(),
+            OpKind::Sqrt => a.to_f64().sqrt(),
+            OpKind::Rsqrt => 1.0 / a.to_f64().sqrt(),
+        };
+        expected.push(want);
+        rxs.push(handle.submit_value(r.op, a, b).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.value.format(), FormatKind::F64, "req {i}");
+        let got = resp.value.to_f64();
+        let ulp = (got.to_bits() as i64 - expected[i].to_bits() as i64).abs();
+        assert!(ulp <= 1, "req {i}: got {got:e} want {:e}", expected[i]);
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.total_requests(), 3000);
+    assert_eq!(snap.total_errors(), 0);
+    assert_eq!(
+        snap.op_format(OpKind::Divide, FormatKind::F64).requests
+            + snap.op_format(OpKind::Sqrt, FormatKind::F64).requests
+            + snap.op_format(OpKind::Rsqrt, FormatKind::F64).requests,
+        3000
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_format_traffic_stays_isolated() {
+    // interleave all four formats on one service: every response must
+    // come back in its request's format with a format-correct value
+    let svc = FpuService::start(quick_config(), native_factory).unwrap();
+    let handle = svc.handle();
+    let mut rxs = Vec::new();
+    for i in 1..=400u32 {
+        let format = FormatKind::ALL[i as usize % 4];
+        let a = Value::from_f64(format, (6 * i) as f64);
+        let b = Value::from_f64(format, 2.0);
+        rxs.push((format, (3 * i) as f64, handle.submit_value(OpKind::Divide, a, b).unwrap()));
+    }
+    for (i, (format, want, rx)) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.value.format(), format, "req {i}");
+        // 6i/2 = 3i is exactly representable in every format up to
+        // 3*400 = 1200 (f16 has 11 significand bits: integers to 2048)
+        assert_eq!(resp.value.to_f64(), want, "req {i} ({format})");
+    }
+    let snap = svc.metrics().snapshot();
+    for format in FormatKind::ALL {
+        assert_eq!(snap.op_format(OpKind::Divide, format).requests, 100, "{format}");
+    }
+    assert_eq!(snap.total_errors(), 0);
+    svc.shutdown();
+}
+
 #[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_service_end_to_end() {
@@ -170,7 +247,7 @@ fn pjrt_service_end_to_end() {
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().expect("pjrt response");
-        assert_eq!(resp.value, (i + 1) as f32);
+        assert_eq!(resp.value.f32(), (i + 1) as f32);
     }
     let snap = svc.metrics().snapshot();
     assert_eq!(snap.op(OpKind::Divide).requests, 1000);
