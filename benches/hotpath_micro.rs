@@ -6,11 +6,12 @@ use std::time::Instant;
 
 use goldschmidt::arith::fixed::{Fixed, Rounding};
 use goldschmidt::bench::{black_box, Bencher};
-use goldschmidt::coordinator::request::{FormatKind, OpKind, Request, Value};
-use goldschmidt::coordinator::{BatcherConfig, DynamicBatcher, Router};
+use goldschmidt::coordinator::request::{FormatKind, OpKind, Value, WorkItem};
+use goldschmidt::coordinator::{BatcherConfig, DynamicBatcher, Metrics, PlanePool, Router};
 use goldschmidt::formats;
 use goldschmidt::goldschmidt::{divide_f32, divide_mantissa, divide_mantissa_quick, Config};
 use goldschmidt::kernel::{BatchScratch, GoldschmidtContext};
+use goldschmidt::runtime::BackendCaps;
 use goldschmidt::sim::{BaselineDatapath, FeedbackDatapath};
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::rng::Xoshiro256;
@@ -117,23 +118,48 @@ fn main() {
 
     // batcher: form batches from a pre-filled router (per-batch cost)
     let mut b = Bencher::new("hotpath/batcher");
-    let batcher = DynamicBatcher::new(BatcherConfig::default(), |_, _| vec![64, 256, 1024]);
+    let batcher = DynamicBatcher::new(
+        BatcherConfig::default(),
+        &BackendCaps::uniform("bench", &[64, 256, 1024]),
+    );
+    let pool = PlanePool::new();
+    let metrics = Metrics::new();
     let mut rng = Xoshiro256::new(1);
     b.bench("route+form batch of 256", || {
         let mut router = Router::new();
         for i in 0..256u64 {
-            let (tx, rx) = std::sync::mpsc::channel();
-            std::mem::forget(rx);
-            router.route(Request {
-                id: i,
-                op: OpKind::Divide,
-                a: Value::F32(rng.range_f32(1.0, 2.0)),
-                b: Value::F32(rng.range_f32(1.0, 2.0)),
-                enqueued_at: Instant::now(),
-                reply: tx,
-            });
+            let (item, _ticket) = WorkItem::single(
+                i,
+                OpKind::Divide,
+                Value::F32(rng.range_f32(1.0, 2.0)),
+                Value::F32(rng.range_f32(1.0, 2.0)),
+                None,
+            );
+            router.route(item);
         }
-        black_box(batcher.form_batch(&mut router, OpKind::Divide, FormatKind::F32));
+        black_box(batcher.form_batch(
+            &mut router,
+            OpKind::Divide,
+            FormatKind::F32,
+            Instant::now(),
+            &pool,
+            &metrics,
+        ));
+    });
+    b.bench("route+form one 256-lane group (vectored)", || {
+        let mut router = Router::new();
+        let plane: Vec<u64> = (0..256).map(|_| rng.range_f32(1.0, 2.0).to_bits() as u64).collect();
+        let (item, _ticket) =
+            WorkItem::group(0, OpKind::Divide, FormatKind::F32, &plane, &plane, None);
+        router.route(item);
+        black_box(batcher.form_batch(
+            &mut router,
+            OpKind::Divide,
+            FormatKind::F32,
+            Instant::now(),
+            &pool,
+            &metrics,
+        ));
     });
     b.print_report();
 }

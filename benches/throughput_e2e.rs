@@ -1,8 +1,10 @@
 //! End-to-end service throughput/latency: the headline serving numbers
 //! recorded in EXPERIMENTS.md §E2E. Sweeps batching policy and worker
 //! count on the native executor, measures the batch-kernel hot path
-//! against the scalar-map path it replaced, and runs the PJRT backend
-//! when built with `--features pjrt` and the artifacts exist.
+//! against the scalar-map path it replaced, compares per-request
+//! submission with the v2 vectored `submit_batch` path, and runs the
+//! PJRT backend when built with `--features pjrt` and the artifacts
+//! exist.
 //!
 //! Machine-readable output: every run writes `BENCH_throughput.json`
 //! into the working directory (override the path with
@@ -32,6 +34,7 @@ fn requests() -> usize {
 struct RunResult {
     reqs_per_s: f64,
     mean_lat_ns: f64,
+    p50_lat_ns: u64,
     p99_lat_ns: u64,
     mean_batch: f64,
 }
@@ -41,26 +44,46 @@ impl RunResult {
         Json::obj([
             ("reqs_per_s", Json::from(self.reqs_per_s)),
             ("mean_lat_ns", Json::from(self.mean_lat_ns)),
+            ("p50_lat_ns", Json::from(self.p50_lat_ns)),
             ("p99_lat_ns", Json::from(self.p99_lat_ns)),
             ("mean_batch", Json::from(self.mean_batch)),
         ])
     }
 }
 
-fn drive_fmt(svc: FpuService, format: FormatKind) -> RunResult {
+fn prime(svc: &FpuService, format: FormatKind) {
     use goldschmidt::coordinator::Value;
-    let count = requests();
+    // force executor construction + (for PJRT) AOT compilation in every
+    // worker before the timed window — startup cost is reported by the
+    // warmup bench, not folded into steady-state throughput
     let handle = svc.handle();
-    // prime: force executor construction + (for PJRT) AOT compilation in
-    // every worker before the timed window — startup cost is reported by
-    // the warmup bench, not folded into steady-state throughput
     for _ in 0..4 {
         for op in [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt] {
             let two = Value::from_f64(format, 2.0);
-            let rx = handle.submit_value(op, two, two).expect("prime");
-            let _ = rx.recv();
+            let ticket = handle.submit_value(op, two, two).expect("prime");
+            let _ = ticket.wait();
         }
     }
+}
+
+fn finish(svc: FpuService, count: usize, elapsed_s: f64) -> RunResult {
+    let snap = svc.metrics().snapshot();
+    let div = snap.op(OpKind::Divide);
+    let result = RunResult {
+        reqs_per_s: count as f64 / elapsed_s,
+        mean_lat_ns: div.mean_latency_ns,
+        p50_lat_ns: div.p50_latency_ns,
+        p99_lat_ns: div.p99_latency_ns,
+        mean_batch: div.requests as f64 / div.batches.max(1) as f64,
+    };
+    svc.shutdown();
+    result
+}
+
+fn drive_fmt(svc: FpuService, format: FormatKind) -> RunResult {
+    let count = requests();
+    prime(&svc, format);
+    let handle = svc.handle();
     let spec = WorkloadSpec {
         count,
         divide_frac: 0.7,
@@ -70,24 +93,65 @@ fn drive_fmt(svc: FpuService, format: FormatKind) -> RunResult {
     };
     let reqs = WorkloadGen::generate(spec);
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(count);
+    let mut tickets = Vec::with_capacity(count);
     for r in &reqs {
-        rxs.push(handle.submit_value(r.op, r.value_a(), r.value_b()).expect("submit"));
+        tickets.push(handle.submit_value(r.op, r.value_a(), r.value_b()).expect("submit"));
     }
-    for rx in rxs {
-        rx.recv().expect("response");
+    for t in tickets {
+        t.wait().expect("response");
     }
-    let elapsed = t0.elapsed().as_secs_f64();
-    let snap = svc.metrics().snapshot();
-    let div = snap.op(OpKind::Divide);
-    let result = RunResult {
-        reqs_per_s: count as f64 / elapsed,
-        mean_lat_ns: div.mean_latency_ns,
-        p99_lat_ns: div.p99_latency_ns,
-        mean_batch: div.requests as f64 / div.batches.max(1) as f64,
-    };
-    svc.shutdown();
-    result
+    finish(svc, count, t0.elapsed().as_secs_f64())
+}
+
+/// The per-request baseline for the vectored comparison: the same
+/// divide volume, one submit and one ticket per lane.
+fn drive_per_request_divide(svc: FpuService) -> RunResult {
+    let count = requests();
+    prime(&svc, FormatKind::F32);
+    let handle = svc.handle();
+    let mut rng = Xoshiro256::new(0x7EC);
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(count);
+    for _ in 0..count {
+        let a = rng.range_f32(1e-6, 1e6);
+        let b = rng.range_f32(1e-6, 1e6);
+        tickets.push(handle.submit(OpKind::Divide, a, b).expect("submit"));
+    }
+    for t in tickets {
+        t.wait().expect("response");
+    }
+    finish(svc, count, t0.elapsed().as_secs_f64())
+}
+
+/// The vectored client path: the same divide volume submitted as
+/// `submit_batch` groups of `group` lanes — one queue entry and one
+/// completion slot per group instead of per lane.
+fn drive_vectored(svc: FpuService, group: usize) -> RunResult {
+    let count = requests();
+    prime(&svc, FormatKind::F32);
+    let handle = svc.handle();
+    let mut rng = Xoshiro256::new(0x7EC);
+    let a: Vec<u64> = (0..count).map(|_| rng.range_f32(1e-6, 1e6).to_bits() as u64).collect();
+    let b: Vec<u64> = (0..count).map(|_| rng.range_f32(1e-6, 1e6).to_bits() as u64).collect();
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(count / group + 1);
+    for (ca, cb) in a.chunks(group).zip(b.chunks(group)) {
+        tickets.push(
+            handle.submit_batch(OpKind::Divide, FormatKind::F32, ca, cb).expect("submit_batch"),
+        );
+    }
+    for t in tickets {
+        let resp = t.wait().expect("batch response");
+        black_box(&resp.bits);
+    }
+    finish(svc, count, t0.elapsed().as_secs_f64())
+}
+
+fn native_service(config: ServiceConfig) -> FpuService {
+    FpuService::start(config, || {
+        Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+    })
+    .expect("start")
 }
 
 fn run_native(config: ServiceConfig) -> RunResult {
@@ -95,11 +159,7 @@ fn run_native(config: ServiceConfig) -> RunResult {
 }
 
 fn run_native_fmt(config: ServiceConfig, format: FormatKind) -> RunResult {
-    let svc = FpuService::start(config, || {
-        Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
-    })
-    .expect("start");
-    drive_fmt(svc, format)
+    drive_fmt(native_service(config), format)
 }
 
 #[cfg(feature = "pjrt")]
@@ -112,6 +172,15 @@ fn run_pjrt(config: ServiceConfig, dir: std::path::PathBuf) -> RunResult {
     })
     .expect("start pjrt");
     drive_fmt(svc, FormatKind::F32)
+}
+
+fn service_config(max_batch: usize, wait_us: u64, workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        batcher: BatcherConfig::new(max_batch, Duration::from_micros(wait_us)),
+        queue_depth: 65_536,
+        workers,
+        poll: Duration::from_micros(50),
+    }
 }
 
 /// Single-thread batch-1024 divide: the scalar map the seed executor
@@ -178,16 +247,7 @@ fn main() {
     let mut sweep = Vec::new();
     for &(max_batch, wait_us) in &[(1usize, 0u64), (64, 100), (256, 200), (1024, 200), (1024, 1000)]
     {
-        let config = ServiceConfig {
-            batcher: BatcherConfig {
-                max_batch,
-                max_wait: Duration::from_micros(wait_us),
-            },
-            queue_depth: 65_536,
-            workers: 1,
-            poll: Duration::from_micros(50),
-        };
-        let r = run_native(config);
+        let r = run_native(service_config(max_batch, wait_us, 1));
         t.row(&[
             max_batch.to_string(),
             format!("{wait_us}us"),
@@ -214,13 +274,7 @@ fn main() {
     .aligns(&[Align::Right; 3]);
     let mut scaling = Vec::new();
     for &workers in &[1usize, 2, 4] {
-        let config = ServiceConfig {
-            batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
-            queue_depth: 65_536,
-            workers,
-            poll: Duration::from_micros(50),
-        };
-        let r = run_native(config);
+        let r = run_native(service_config(1024, 200, workers));
         t.row(&[workers.to_string(), format!("{:.0}", r.reqs_per_s), fmt_ns(r.mean_lat_ns)]);
         let mut row = r.json();
         if let Json::Obj(map) = &mut row {
@@ -231,6 +285,37 @@ fn main() {
     t.print();
     report.push(("worker_scaling", Json::arr(scaling)));
 
+    // ---- vectored submission: submit_batch vs per-request ---------------
+    let mut t = Table::new(
+        "vectored submission (submit_batch groups vs per-request, divide, workers=2)",
+        &["group", "req/s", "mean lat", "p99 lat", "req/batch"],
+    )
+    .aligns(&[Align::Right; 5]);
+    let mut vectored = Vec::new();
+    for &group in &[0usize, 256, 1024, 4096] {
+        // group 0 = the per-request baseline on the same config
+        let svc = native_service(service_config(1024, 200, 2));
+        let r = if group == 0 {
+            drive_per_request_divide(svc)
+        } else {
+            drive_vectored(svc, group)
+        };
+        t.row(&[
+            if group == 0 { "per-req".to_string() } else { group.to_string() },
+            format!("{:.0}", r.reqs_per_s),
+            fmt_ns(r.mean_lat_ns),
+            fmt_ns(r.p99_lat_ns as f64),
+            format!("{:.1}", r.mean_batch),
+        ]);
+        let mut row = r.json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("group".into(), Json::from(group));
+        }
+        vectored.push(row);
+    }
+    t.print();
+    report.push(("vectored", Json::arr(vectored)));
+
     // ---- format sweep: the multi-precision serving plane ----------------
     let mut t = Table::new(
         "format sweep (native backend, max_batch=1024, workers=2)",
@@ -239,13 +324,7 @@ fn main() {
     .aligns(&[Align::Right; 5]);
     let mut formats_rows = Vec::new();
     for format in FormatKind::ALL {
-        let config = ServiceConfig {
-            batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
-            queue_depth: 65_536,
-            workers: 2,
-            poll: Duration::from_micros(50),
-        };
-        let r = run_native_fmt(config, format);
+        let r = run_native_fmt(service_config(1024, 200, 2), format);
         t.row(&[
             format.label().to_string(),
             format!("{:.0}", r.reqs_per_s),
@@ -274,16 +353,7 @@ fn main() {
             .aligns(&[Align::Right; 5]);
             let mut pjrt_rows = Vec::new();
             for &workers in &[1usize, 2] {
-                let config = ServiceConfig {
-                    batcher: BatcherConfig {
-                        max_batch: 1024,
-                        max_wait: Duration::from_micros(200),
-                    },
-                    queue_depth: 65_536,
-                    workers,
-                    poll: Duration::from_micros(50),
-                };
-                let r = run_pjrt(config, artifacts.clone());
+                let r = run_pjrt(service_config(1024, 200, workers), artifacts.clone());
                 t.row(&[
                     workers.to_string(),
                     format!("{:.0}", r.reqs_per_s),

@@ -11,43 +11,30 @@
 //!
 //! `--format f16|bf16|f32|f64` selects the serving precision (native
 //! backend; the AOT artifacts are f32-only, so a non-f32 format always
-//! uses the native batch kernels):
+//! uses the native batch kernels); `--requests N` overrides the
+//! replayed request count (the CI smoke runs a small N per format):
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example fpu_service
 //! cargo run --release --example fpu_service -- --format f64
+//! cargo run --release --example fpu_service -- --format bf16 --requests 2000
 //! ```
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use anyhow::bail;
 use goldschmidt::coordinator::{
     BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, Value,
 };
 use goldschmidt::runtime::NativeExecutor;
 #[cfg(feature = "pjrt")]
 use goldschmidt::runtime::{Executor, PjrtExecutor};
+use goldschmidt::util::cli::Args;
 use goldschmidt::util::tablefmt::{fmt_ns, Align, Table};
 use goldschmidt::workload::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};
 
-const REQUESTS: usize = 200_000;
-
-/// Parse `--format X` from the argument list (default f32).
-fn format_arg() -> FormatKind {
-    let args: Vec<String> = std::env::args().collect();
-    for w in args.windows(2) {
-        if w[0] == "--format" {
-            match FormatKind::parse(&w[1]) {
-                Ok(f) => return f,
-                Err(e) => {
-                    eprintln!("error: {e}");
-                    std::process::exit(2);
-                }
-            }
-        }
-    }
-    FormatKind::F32
-}
+const DEFAULT_REQUESTS: usize = 200_000;
 
 /// Start on the PJRT backend when the feature is compiled in, the AOT
 /// artifacts exist and the workload is f32; otherwise serve through the
@@ -76,22 +63,34 @@ fn start_backend(
 
 fn main() -> anyhow::Result<()> {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let format = format_arg();
+    // the binary's flag grammar (--key value / --key=value), typed:
+    // a dangling or unparsable value errors instead of running 200k
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let format =
+        FormatKind::parse(&args.get_str("format", "f32")).map_err(anyhow::Error::msg)?;
+    let requests: usize =
+        args.get("requests", DEFAULT_REQUESTS).map_err(anyhow::Error::msg)?;
+    if requests == 0 {
+        bail!("--requests needs a positive count");
+    }
 
     let config = ServiceConfig {
-        batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(200) },
+        batcher: BatcherConfig::new(1024, Duration::from_micros(200)).tight_half_precision(),
         queue_depth: 65_536,
         workers: 2,
         poll: Duration::from_micros(50),
     };
 
     let (svc, backend) = start_backend(config, &artifacts, format)?;
-    println!("backend: {backend}, format: {format}");
+    println!(
+        "backend: {backend} (caps: {} (op, format) pairs), format: {format}",
+        svc.capabilities().supported().len()
+    );
 
     // realistic mixed workload: 70% divide / 15% sqrt / 15% rsqrt,
     // heavy-tailed operands, open-loop Poisson arrivals at 500k req/s
     let spec = WorkloadSpec {
-        count: REQUESTS,
+        count: requests,
         dist: OperandDist::LogNormal { mu: 0.0, sigma: 2.5 },
         arrivals: ArrivalProcess::Poisson { rate: 500_000.0 },
         divide_frac: 0.7,
@@ -107,14 +106,14 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..4 {
         for op in [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt] {
             let two = Value::from_f64(format, 2.0);
-            let _ = handle.submit_value(op, two, two)?.recv();
+            let _ = handle.submit_value(op, two, two)?.wait();
         }
     }
     println!("warmup (executor init + AOT compile): {:.2}s", prime_t0.elapsed().as_secs_f64());
 
-    println!("replaying {REQUESTS} requests (Poisson open loop, 500k/s offered)...");
+    println!("replaying {requests} requests (Poisson open loop, 500k/s offered)...");
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(reqs.len());
+    let mut tickets = Vec::with_capacity(reqs.len());
     let mut expected = Vec::with_capacity(reqs.len());
     for r in &reqs {
         // pace the open loop
@@ -133,12 +132,12 @@ fn main() -> anyhow::Result<()> {
             OpKind::Rsqrt => 1.0 / a.to_f64().sqrt(),
         };
         expected.push(Value::from_f64(format, exact));
-        rxs.push(handle.submit_value(r.op, a, b)?);
+        tickets.push(handle.submit_value(r.op, a, b)?);
     }
     let mut worst_ulp = 0i64;
     let mut ok = 0u64;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv()?;
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let resp = ticket.wait()?;
         if resp.value.is_nan() || expected[i].is_nan() {
             assert_eq!(resp.value.is_nan(), expected[i].is_nan(), "req {i}");
         } else {
@@ -152,7 +151,7 @@ fn main() -> anyhow::Result<()> {
     let snap = svc.metrics().snapshot();
     let mut t = Table::new(
         format!(
-            "E2E ({format}): {ok}/{REQUESTS} ok in {:.2}s -> {:.0} req/s, worst {worst_ulp} ulp",
+            "E2E ({format}): {ok}/{requests} ok in {:.2}s -> {:.0} req/s, worst {worst_ulp} ulp",
             elapsed.as_secs_f64(),
             ok as f64 / elapsed.as_secs_f64(),
         ),

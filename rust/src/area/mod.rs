@@ -92,6 +92,42 @@ pub fn rom_bits(table_p: u32) -> u64 {
     (1u64 << table_p) * (table_p as u64 + 2)
 }
 
+/// One row of the per-format ROM sizing table.
+#[derive(Clone, Copy, Debug)]
+pub struct FormatRomRow {
+    /// IEEE format.
+    pub format: crate::formats::FormatKind,
+    /// ROM input width from the format's datapath configuration.
+    pub table_p: u32,
+    /// Table entries (`2^table_p`).
+    pub entries: u64,
+    /// Storage bits (`entries * (table_p + 2)`).
+    pub bits: u64,
+    /// Gate-equivalent area of those bits.
+    pub gate_equivalents: f64,
+}
+
+/// Per-format ROM sizing across the format plane: each format's seed
+/// table at its own `table_p` (bf16 runs p=5 — 32 entries — where the
+/// other formats keep the paper's p=10), pricing the area side of the
+/// ROM-size-vs-refinement-steps trade the paper's §III knob exposes.
+pub fn format_rom_rows() -> Vec<FormatRomRow> {
+    crate::formats::FormatKind::ALL
+        .iter()
+        .map(|&format| {
+            let p = format.datapath_config().table_p;
+            let bits = rom_bits(p);
+            FormatRomRow {
+                format,
+                table_p: p,
+                entries: 1u64 << p,
+                bits,
+                gate_equivalents: bits as f64 * ROM_GE_PER_BIT,
+            }
+        })
+        .collect()
+}
+
 /// Build the area report for a datapath inventory.
 pub fn area_of(design: &str, inv: &Inventory, params: &AreaParams) -> AreaReport {
     let m = multiplier_cost(params);
@@ -199,6 +235,26 @@ mod tests {
     fn rom_bits_counts() {
         assert_eq!(rom_bits(10), 1024 * 12);
         assert_eq!(rom_bits(8), 256 * 10);
+    }
+
+    #[test]
+    fn format_rom_rows_price_the_bf16_shrink() {
+        use crate::formats::FormatKind;
+        let rows = format_rom_rows();
+        assert_eq!(rows.len(), 4);
+        let row = |k: FormatKind| *rows.iter().find(|r| r.format == k).unwrap();
+        let bf16 = row(FormatKind::BF16);
+        let f32r = row(FormatKind::F32);
+        assert_eq!(bf16.table_p, 5);
+        assert_eq!(bf16.entries, 32);
+        assert_eq!(bf16.bits, 32 * 7);
+        assert_eq!(f32r.bits, 1024 * 12);
+        // the ROADMAP claim: ~30x (in fact ~55x) less ROM area for bf16
+        assert!(f32r.gate_equivalents / bf16.gate_equivalents > 30.0);
+        // every row's GE follows the shared per-bit cost
+        for r in rows {
+            assert!((r.gate_equivalents - r.bits as f64 * ROM_GE_PER_BIT).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -1,37 +1,152 @@
 //! Dynamic batcher: decides *when* to flush a per-(op, format) queue
 //! into one executor batch and *how big* that batch is.
 //!
-//! Policy (the standard serving trade-off):
-//! * flush a queue when it holds `max_batch` requests, or
-//! * when its oldest request has waited `max_wait`, or
+//! Policy (the standard serving trade-off), resolvable per (op, format)
+//! — half-precision inference traffic tolerates less queueing latency
+//! than f64 batch jobs, so [`BatcherConfig`] carries per-slot overrides
+//! on top of the global knobs:
+//! * flush a queue when it holds `max_batch` lanes, or
+//! * when its oldest item has waited `max_wait`, or
+//! * when a queued item's deadline has arrived (so deadline shedding is
+//!   timely, not deferred to the next natural flush), or
 //! * when `flush_all` is requested (drain/shutdown).
 //!
 //! The formed batch is padded (with the neutral operand `1.0` *in the
-//! batch's format*) up to the executor's batch ladder — AOT graphs have
-//! fixed shapes, so a 70-request flush rides the 256-wide executable.
-//! Operands travel as raw `u64` plane words (format-uniform per batch,
-//! guaranteed by the router's per-(op, format) queues). Padding waste
-//! is tracked in metrics; the ladder itself comes from the artifact
-//! manifest, per (op, format).
+//! batch's format*) up to the backend's capability ladder — AOT graphs
+//! have fixed shapes, so a 70-lane flush rides the 256-wide executable.
+//! Operand planes are recycled through a [`PlanePool`] (workers return
+//! them after execution), so steady-state batch formation performs no
+//! plane allocation. Items whose deadline expired are shed here —
+//! failed with [`ServiceError::Deadline`] and counted in metrics — and
+//! never reach an executor.
 
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::request::{FormatKind, op_format_slot, OP_FORMAT_SLOTS, OpKind, Request};
+use crate::runtime::caps::BackendCaps;
+
+use super::metrics::Metrics;
+use super::request::{
+    op_format_slot, FormatKind, OpKind, ServiceError, WorkItem, OP_FORMAT_SLOTS,
+};
 use super::router::Router;
+
+/// Per-(op, format) overrides of the batching policy; `None` fields
+/// fall back to the global [`BatcherConfig`] values.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PolicyOverride {
+    /// Flush threshold override (lanes).
+    pub max_batch: Option<usize>,
+    /// Age threshold override.
+    pub max_wait: Option<Duration>,
+}
 
 /// Batching policy parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
-    /// Flush threshold: batch is formed at this many queued requests.
+    /// Global flush threshold: a queue flushes at this many lanes.
     pub max_batch: usize,
-    /// Age threshold: flush whatever is queued once the oldest request
-    /// has waited this long.
+    /// Global age threshold: flush whatever is queued once the oldest
+    /// item has waited this long.
     pub max_wait: Duration,
+    overrides: [PolicyOverride; OP_FORMAT_SLOTS],
 }
 
 impl Default for BatcherConfig {
+    /// 1024-lane / 200 microsecond policy, with the half-precision
+    /// queues (f16, bf16) on a 4x tighter latency budget by default.
     fn default() -> Self {
-        Self { max_batch: 1024, max_wait: Duration::from_micros(200) }
+        Self::new(1024, Duration::from_micros(200)).tight_half_precision()
+    }
+}
+
+impl BatcherConfig {
+    /// Uniform policy: the same thresholds for every (op, format).
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self { max_batch, max_wait, overrides: [PolicyOverride::default(); OP_FORMAT_SLOTS] }
+    }
+
+    /// Set a full override for one (op, format) slot.
+    pub fn with_policy(mut self, op: OpKind, format: FormatKind, policy: PolicyOverride) -> Self {
+        self.overrides[op_format_slot(op, format)] = policy;
+        self
+    }
+
+    /// Override the age threshold for every op of one format.
+    pub fn with_format_max_wait(mut self, format: FormatKind, max_wait: Duration) -> Self {
+        for &op in &OpKind::ALL {
+            self.overrides[op_format_slot(op, format)].max_wait = Some(max_wait);
+        }
+        self
+    }
+
+    /// Override the flush threshold for every op of one format.
+    pub fn with_format_max_batch(mut self, format: FormatKind, max_batch: usize) -> Self {
+        for &op in &OpKind::ALL {
+            self.overrides[op_format_slot(op, format)].max_batch = Some(max_batch);
+        }
+        self
+    }
+
+    /// The default half-precision posture: f16/bf16 queues flush at a
+    /// quarter of the global age budget (inference traffic pays for
+    /// latency; f64 batch jobs pay for occupancy).
+    pub fn tight_half_precision(self) -> Self {
+        let wait = self.max_wait / 4;
+        self.with_format_max_wait(FormatKind::F16, wait)
+            .with_format_max_wait(FormatKind::BF16, wait)
+    }
+
+    /// Resolved flush threshold for one (op, format) queue.
+    pub fn max_batch_for(&self, op: OpKind, format: FormatKind) -> usize {
+        self.overrides[op_format_slot(op, format)].max_batch.unwrap_or(self.max_batch)
+    }
+
+    /// Resolved age threshold for one (op, format) queue.
+    pub fn max_wait_for(&self, op: OpKind, format: FormatKind) -> Duration {
+        self.overrides[op_format_slot(op, format)].max_wait.unwrap_or(self.max_wait)
+    }
+}
+
+/// Recycler for batch operand planes: workers return a batch's `a`/`b`
+/// vectors here after execution, and `form_batch` reuses them, so the
+/// steady-state request path allocates no planes. Bounded so a burst
+/// cannot pin memory forever.
+#[derive(Clone, Debug, Default)]
+pub struct PlanePool {
+    free: Arc<Mutex<Vec<Vec<u64>>>>,
+}
+
+/// Retained planes cap: beyond this, returned planes are dropped.
+const POOL_MAX_PLANES: usize = 64;
+
+impl PlanePool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a cleared plane (capacity retained from earlier batches).
+    pub fn take(&self) -> Vec<u64> {
+        self.free.lock().expect("plane pool poisoned").pop().unwrap_or_default()
+    }
+
+    /// Return a plane for reuse (capacity-less vectors — e.g. the empty
+    /// `b` of a unary batch — are dropped, not parked).
+    pub fn give(&self, mut plane: Vec<u64>) {
+        if plane.capacity() == 0 {
+            return;
+        }
+        plane.clear();
+        let mut free = self.free.lock().expect("plane pool poisoned");
+        if free.len() < POOL_MAX_PLANES {
+            free.push(plane);
+        }
+    }
+
+    /// Planes currently parked in the pool (diagnostics/tests).
+    pub fn parked(&self) -> usize {
+        self.free.lock().expect("plane pool poisoned").len()
     }
 }
 
@@ -42,21 +157,22 @@ pub struct Batch {
     pub op: OpKind,
     /// IEEE format of every lane (the router guarantees purity).
     pub format: FormatKind,
-    /// The requests riding this batch (in FIFO order).
-    pub requests: Vec<Request>,
-    /// Padded operand plane as raw format words (`b` only meaningful
-    /// for divide).
+    /// The work items riding this batch (FIFO order; lane offsets
+    /// within the planes follow item order).
+    pub items: Vec<WorkItem>,
+    /// Padded operand plane as raw format words.
     pub a: Vec<u64>,
-    /// Second operand plane (padded), divide only.
+    /// Second operand plane (padded), divide only — empty for unary
+    /// ops, whose executors never read it.
     pub b: Vec<u64>,
-    /// Padded (executable) size; `requests.len() <= padded`.
+    /// Padded (executable) size; `live() <= padded`.
     pub padded: usize,
 }
 
 impl Batch {
-    /// Live (non-padding) size.
+    /// Live (non-padding) lane count.
     pub fn live(&self) -> usize {
-        self.requests.len()
+        self.items.iter().map(|i| i.lanes()).sum()
     }
 
     /// Padding fraction (0 = perfectly full; an empty batch wastes
@@ -75,20 +191,17 @@ impl Batch {
 pub struct DynamicBatcher {
     config: BatcherConfig,
     /// Per-(op, format) ladder of available executable batch sizes
-    /// (ascending), indexed by the shared routing-slot layout.
+    /// (ascending), from the backend's negotiated capabilities.
     ladders: [Vec<usize>; OP_FORMAT_SLOTS],
 }
 
 impl DynamicBatcher {
-    /// New batcher over the given per-(op, format) batch ladders.
-    pub fn new(
-        config: BatcherConfig,
-        ladder_of: impl Fn(OpKind, FormatKind) -> Vec<usize>,
-    ) -> Self {
+    /// New batcher over a backend's capability ladders.
+    pub fn new(config: BatcherConfig, caps: &BackendCaps) -> Self {
         let mut ladders: [Vec<usize>; OP_FORMAT_SLOTS] = std::array::from_fn(|_| Vec::new());
         for &op in &OpKind::ALL {
             for &format in &FormatKind::ALL {
-                ladders[op_format_slot(op, format)] = ladder_of(op, format);
+                ladders[op_format_slot(op, format)] = caps.ladder(op, format).to_vec();
             }
         }
         Self { config, ladders }
@@ -105,11 +218,8 @@ impl DynamicBatcher {
 
     /// Largest executable size for an (op, format) pair (the flush cap).
     fn cap(&self, op: OpKind, format: FormatKind) -> usize {
-        self.ladder(op, format)
-            .last()
-            .copied()
-            .unwrap_or(self.config.max_batch)
-            .min(self.config.max_batch)
+        let max_batch = self.config.max_batch_for(op, format);
+        self.ladder(op, format).last().copied().unwrap_or(max_batch).min(max_batch).max(1)
     }
 
     /// Smallest ladder size >= n (or the cap when n exceeds it).
@@ -133,50 +243,92 @@ impl DynamicBatcher {
         if len >= self.cap(op, format) {
             return true;
         }
+        if router.earliest_deadline_in(op, format).is_some_and(|d| now >= d) {
+            return true; // a queued deadline arrived: shed it promptly
+        }
         match router.oldest_enqueue_in(op, format) {
-            Some(oldest) => now.duration_since(oldest) >= self.config.max_wait,
+            Some(oldest) => now.duration_since(oldest) >= self.config.max_wait_for(op, format),
             None => false,
         }
     }
 
     /// Form one batch from an (op, format) queue (up to the cap),
-    /// padding operand planes to the ladder with the format's `1.0`.
-    /// Returns `None` when the queue is empty.
+    /// shedding expired items and padding operand planes to the ladder
+    /// with the format's `1.0`. Returns `None` when the drain yields no
+    /// live items (empty queue, or everything drained was expired —
+    /// the queue has still shrunk, so callers loop on queue length).
     pub fn form_batch(
         &self,
         router: &mut Router,
         op: OpKind,
         format: FormatKind,
+        now: Instant,
+        pool: &PlanePool,
+        metrics: &Metrics,
     ) -> Option<Batch> {
         let cap = self.cap(op, format);
-        let requests = router.drain(op, format, cap);
-        if requests.is_empty() {
+        let drained = router.drain(op, format, cap);
+        if drained.is_empty() {
             return None;
         }
-        let padded = self.pad_to(op, format, requests.len());
-        let mut a = Vec::with_capacity(padded);
-        let mut b = Vec::with_capacity(padded);
-        for r in &requests {
-            a.push(r.a.bits());
-            b.push(r.b.bits());
+        let mut items = Vec::with_capacity(drained.len());
+        let mut shed = 0usize;
+        for item in drained {
+            if item.expired(now) {
+                shed += item.lanes();
+                item.fail(ServiceError::Deadline);
+            } else {
+                items.push(item);
+            }
         }
-        // pad with neutral operands: 1.0 / 1.0 stays in-domain for every op
+        if shed > 0 {
+            metrics.record_shed(op, format, shed as u64);
+        }
+        if items.is_empty() {
+            return None;
+        }
+        let live: usize = items.iter().map(|i| i.lanes()).sum();
+        let padded = self.pad_to(op, format, live);
+        // pad with neutral operands: 1.0 / 1.0 stays in-domain for every
+        // op; unary batches build no divisor plane at all
+        let divide = op == OpKind::Divide;
         let one = format.one_bits();
+        let mut a = pool.take();
+        let mut b = if divide { pool.take() } else { Vec::new() };
+        a.reserve(padded);
+        if divide {
+            b.reserve(padded);
+        }
+        for item in &items {
+            item.push_operands(&mut a, if divide { Some(&mut b) } else { None }, one);
+        }
         a.resize(padded, one);
-        b.resize(padded, one);
-        Some(Batch { op, format, requests, a, b, padded })
+        if divide {
+            b.resize(padded, one);
+        }
+        Some(Batch { op, format, items, a, b, padded })
     }
 
     /// Form batches for every (op, format) queue that should flush at
     /// `now`.
-    pub fn ready_batches(&self, router: &mut Router, now: Instant) -> Vec<Batch> {
+    pub fn ready_batches(
+        &self,
+        router: &mut Router,
+        now: Instant,
+        pool: &PlanePool,
+        metrics: &Metrics,
+    ) -> Vec<Batch> {
         let mut out = Vec::new();
         for &op in &OpKind::ALL {
             for &format in &FormatKind::ALL {
                 while self.should_flush(router, op, format, now) {
-                    match self.form_batch(router, op, format) {
+                    match self.form_batch(router, op, format, now, pool, metrics) {
                         Some(b) => out.push(b),
-                        None => break,
+                        None => {
+                            if router.len(op, format) == 0 {
+                                break; // everything drained was shed
+                            }
+                        }
                     }
                 }
             }
@@ -184,17 +336,23 @@ impl DynamicBatcher {
         out
     }
 
-    /// Unconditionally drain everything (shutdown path). Queues that
-    /// are already empty form no batch.
-    pub fn flush_all(&self, router: &mut Router) -> Vec<Batch> {
+    /// Unconditionally drain everything (shutdown path). Expired items
+    /// are still shed, not executed; queues that are already empty form
+    /// no batch.
+    pub fn flush_all(
+        &self,
+        router: &mut Router,
+        now: Instant,
+        pool: &PlanePool,
+        metrics: &Metrics,
+    ) -> Vec<Batch> {
         let mut out = Vec::new();
         for &op in &OpKind::ALL {
             for &format in &FormatKind::ALL {
-                if router.len(op, format) == 0 {
-                    continue; // skip forming empty batches
-                }
-                while let Some(b) = self.form_batch(router, op, format) {
-                    out.push(b);
+                while router.len(op, format) > 0 {
+                    if let Some(b) = self.form_batch(router, op, format, now, pool, metrics) {
+                        out.push(b);
+                    }
                 }
             }
         }
@@ -207,34 +365,36 @@ mod tests {
     use super::*;
     use crate::check::{self, ensure};
     use crate::formats::Value;
-    use std::sync::mpsc;
 
-    fn req_at(id: u64, op: OpKind, format: FormatKind, enqueued_at: Instant) -> Request {
-        let (tx, rx) = mpsc::channel();
-        std::mem::forget(rx);
-        Request {
+    fn req_at(id: u64, op: OpKind, format: FormatKind, enqueued_at: Instant) -> WorkItem {
+        let (mut item, _ticket) = WorkItem::single(
             id,
             op,
-            a: Value::from_f64(format, id as f64 + 2.0),
-            b: Value::from_f64(format, 2.0),
-            enqueued_at,
-            reply: tx,
-        }
+            Value::from_f64(format, id as f64 + 2.0),
+            Value::from_f64(format, 2.0),
+            None,
+        );
+        item.enqueued_at = enqueued_at;
+        item
     }
 
-    fn req_fmt(id: u64, op: OpKind, format: FormatKind) -> Request {
+    fn req_fmt(id: u64, op: OpKind, format: FormatKind) -> WorkItem {
         req_at(id, op, format, Instant::now())
     }
 
-    fn req(id: u64, op: OpKind) -> Request {
+    fn req(id: u64, op: OpKind) -> WorkItem {
         req_fmt(id, op, FormatKind::F32)
     }
 
     fn batcher(max_batch: usize, max_wait_us: u64) -> DynamicBatcher {
         DynamicBatcher::new(
-            BatcherConfig { max_batch, max_wait: Duration::from_micros(max_wait_us) },
-            |_, _| vec![64, 256, 1024],
+            BatcherConfig::new(max_batch, Duration::from_micros(max_wait_us)),
+            &BackendCaps::uniform("test", &[64, 256, 1024]),
         )
+    }
+
+    fn form(b: &DynamicBatcher, r: &mut Router, op: OpKind, format: FormatKind) -> Option<Batch> {
+        b.form_batch(r, op, format, Instant::now(), &PlanePool::new(), &Metrics::new())
     }
 
     const F32: FormatKind = FormatKind::F32;
@@ -277,10 +437,52 @@ mod tests {
         let now = Instant::now();
         assert!(b.should_flush(&r, OpKind::Divide, FormatKind::F64, now));
         assert!(!b.should_flush(&r, OpKind::Divide, FormatKind::F32, now));
-        let ready = b.ready_batches(&mut r, now);
+        let ready = b.ready_batches(&mut r, now, &PlanePool::new(), &Metrics::new());
         assert_eq!(ready.len(), 1);
         assert_eq!(ready[0].format, FormatKind::F64);
         assert_eq!(r.len(OpKind::Divide, FormatKind::F32), 1);
+    }
+
+    #[test]
+    fn per_format_policy_overrides_resolve() {
+        let cfg = BatcherConfig::new(1024, Duration::from_micros(400))
+            .with_format_max_wait(FormatKind::F16, Duration::from_micros(25))
+            .with_format_max_batch(FormatKind::F16, 128)
+            .with_policy(
+                OpKind::Sqrt,
+                FormatKind::F64,
+                PolicyOverride {
+                    max_batch: Some(2048),
+                    max_wait: Some(Duration::from_millis(2)),
+                },
+            );
+        assert_eq!(cfg.max_batch_for(OpKind::Divide, FormatKind::F16), 128);
+        assert_eq!(cfg.max_wait_for(OpKind::Rsqrt, FormatKind::F16), Duration::from_micros(25));
+        assert_eq!(cfg.max_batch_for(OpKind::Divide, FormatKind::F32), 1024);
+        assert_eq!(cfg.max_wait_for(OpKind::Divide, FormatKind::F32), Duration::from_micros(400));
+        assert_eq!(cfg.max_batch_for(OpKind::Sqrt, FormatKind::F64), 2048);
+        assert_eq!(cfg.max_wait_for(OpKind::Sqrt, FormatKind::F64), Duration::from_millis(2));
+        // default posture: half-precision waits a quarter of the budget
+        let d = BatcherConfig::default();
+        assert_eq!(d.max_wait_for(OpKind::Divide, FormatKind::F16), d.max_wait / 4);
+        assert_eq!(d.max_wait_for(OpKind::Divide, FormatKind::BF16), d.max_wait / 4);
+        assert_eq!(d.max_wait_for(OpKind::Divide, FormatKind::F64), d.max_wait);
+    }
+
+    #[test]
+    fn format_override_drives_flush_decision() {
+        // same age, different formats: only the tight-budget queue is stale
+        let cfg = BatcherConfig::new(1024, Duration::from_secs(1))
+            .with_format_max_wait(FormatKind::F16, Duration::from_micros(1));
+        let b =
+            DynamicBatcher::new(cfg, &BackendCaps::uniform("test", &[64, 256, 1024]));
+        let mut r = Router::new();
+        let t = Instant::now() - Duration::from_millis(1);
+        r.route(req_at(1, OpKind::Divide, FormatKind::F16, t));
+        r.route(req_at(2, OpKind::Divide, FormatKind::F32, t));
+        let now = Instant::now();
+        assert!(b.should_flush(&r, OpKind::Divide, FormatKind::F16, now));
+        assert!(!b.should_flush(&r, OpKind::Divide, FormatKind::F32, now));
     }
 
     #[test]
@@ -292,13 +494,13 @@ mod tests {
         for i in 0..6 {
             r.route(req(i, OpKind::Divide));
         }
-        let batches = b.ready_batches(&mut r, Instant::now());
+        let batches = b.ready_batches(&mut r, Instant::now(), &PlanePool::new(), &Metrics::new());
         assert_eq!(batches.len(), 2);
         assert_eq!(
-            batches[0].requests.iter().map(|x| x.id).collect::<Vec<_>>(),
+            batches[0].items.iter().map(|x| x.id).collect::<Vec<_>>(),
             vec![0, 1, 2, 3]
         );
-        assert_eq!(batches[1].requests.iter().map(|x| x.id).collect::<Vec<_>>(), vec![4, 5]);
+        assert_eq!(batches[1].items.iter().map(|x| x.id).collect::<Vec<_>>(), vec![4, 5]);
     }
 
     #[test]
@@ -308,7 +510,7 @@ mod tests {
         for i in 0..70 {
             r.route(req(i, OpKind::Divide));
         }
-        let batch = b.form_batch(&mut r, OpKind::Divide, F32).unwrap();
+        let batch = form(&b, &mut r, OpKind::Divide, F32).unwrap();
         assert_eq!(batch.live(), 70);
         assert_eq!(batch.padded, 256);
         assert_eq!(batch.a.len(), 256);
@@ -325,7 +527,7 @@ mod tests {
         for i in 0..3 {
             r.route(req_fmt(i, OpKind::Divide, FormatKind::F16));
         }
-        let batch = b.form_batch(&mut r, OpKind::Divide, FormatKind::F16).unwrap();
+        let batch = form(&b, &mut r, OpKind::Divide, FormatKind::F16).unwrap();
         assert_eq!(batch.format, FormatKind::F16);
         assert_eq!(batch.padded, 64);
         assert!(batch.a[3..].iter().all(|&x| x == 0x3C00)); // f16 1.0
@@ -338,7 +540,7 @@ mod tests {
         let batch = Batch {
             op: OpKind::Divide,
             format: F32,
-            requests: Vec::new(),
+            items: Vec::new(),
             a: Vec::new(),
             b: Vec::new(),
             padded: 0,
@@ -353,9 +555,9 @@ mod tests {
         for i in 0..5 {
             r.route(req(i, OpKind::Divide));
         }
-        let batch = b.form_batch(&mut r, OpKind::Divide, F32).unwrap();
-        for (i, rq) in batch.requests.iter().enumerate() {
-            assert_eq!(rq.id, i as u64);
+        let batch = form(&b, &mut r, OpKind::Divide, F32).unwrap();
+        for (i, item) in batch.items.iter().enumerate() {
+            assert_eq!(item.id, i as u64);
             assert_eq!(batch.a[i], (i as f32 + 2.0).to_bits() as u64);
         }
     }
@@ -367,7 +569,7 @@ mod tests {
         for i in 0..2500 {
             r.route(req(i, OpKind::Divide));
         }
-        let batches = b.ready_batches(&mut r, Instant::now());
+        let batches = b.ready_batches(&mut r, Instant::now(), &PlanePool::new(), &Metrics::new());
         assert_eq!(batches.len(), 3);
         assert_eq!(batches[0].live(), 1024);
         assert_eq!(batches[1].live(), 1024);
@@ -376,37 +578,124 @@ mod tests {
     }
 
     #[test]
-    fn formats_batch_independently() {
-        // the same op in two formats never shares a batch
-        let b = batcher(1024, 0);
+    fn vectored_group_keeps_locality_and_splits_on_ladder() {
+        // a 300-lane group: one batch of 256 (split) + the 44-lane tail
+        let b = batcher(256, 0);
         let mut r = Router::new();
-        for i in 0..10 {
-            let fmt = if i % 2 == 0 { FormatKind::F32 } else { FormatKind::F64 };
-            r.route(req_fmt(i, OpKind::Divide, fmt));
-        }
-        let batches = b.ready_batches(&mut r, Instant::now());
+        let a: Vec<u64> = (0..300).map(|i| (i as f32 + 1.0).to_bits() as u64).collect();
+        let (item, _ticket) =
+            WorkItem::group(9, OpKind::Sqrt, F32, &a, &[], None);
+        r.route(item);
+        let batches = b.ready_batches(&mut r, Instant::now(), &PlanePool::new(), &Metrics::new());
         assert_eq!(batches.len(), 2);
-        for batch in &batches {
-            assert_eq!(batch.live(), 5);
-            assert!(batch.requests.iter().all(|x| x.format() == batch.format));
+        assert_eq!(batches[0].live(), 256);
+        assert_eq!(batches[0].padded, 256);
+        assert_eq!(batches[1].live(), 44);
+        // lanes arrive pre-formed, in order, without re-discovery
+        assert_eq!(batches[0].a[..256], a[..256]);
+        assert_eq!(batches[1].a[..44], a[256..]);
+        // unary batch: no divisor plane is built at all
+        assert!(batches[0].b.is_empty());
+        assert!(batches[1].b.is_empty());
+    }
+
+    #[test]
+    fn expired_items_are_shed_not_executed() {
+        let b = batcher(1024, 0);
+        let metrics = Metrics::new();
+        let pool = PlanePool::new();
+        let mut r = Router::new();
+        let past = Instant::now() - Duration::from_millis(1);
+        let (expired, _t1) = {
+            let (mut item, t) = WorkItem::single(
+                1,
+                OpKind::Divide,
+                Value::F32(6.0),
+                Value::F32(2.0),
+                Some(past),
+            );
+            item.enqueued_at = past;
+            (item, t)
+        };
+        r.route(expired);
+        r.route(req(2, OpKind::Divide));
+        let batch = b
+            .form_batch(&mut r, OpKind::Divide, F32, Instant::now(), &pool, &metrics)
+            .unwrap();
+        assert_eq!(batch.live(), 1);
+        assert_eq!(batch.items[0].id, 2);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.op_format(OpKind::Divide, F32).shed, 1);
+        // the shed client observes a typed Deadline error
+        assert_eq!(_t1.wait().unwrap_err(), ServiceError::Deadline);
+    }
+
+    #[test]
+    fn all_expired_drain_still_empties_queue() {
+        let b = batcher(1024, 1_000_000);
+        let metrics = Metrics::new();
+        let pool = PlanePool::new();
+        let mut r = Router::new();
+        let past = Instant::now() - Duration::from_millis(1);
+        for i in 0..5 {
+            let (mut item, _t) = WorkItem::single(
+                i,
+                OpKind::Sqrt,
+                Value::F32(4.0),
+                Value::F32(1.0),
+                Some(past),
+            );
+            item.enqueued_at = past;
+            r.route(item);
         }
+        // deadline arrival makes the queue flush-eligible immediately
+        assert!(b.should_flush(&r, OpKind::Sqrt, F32, Instant::now()));
+        let batches = b.flush_all(&mut r, Instant::now(), &pool, &metrics);
+        assert!(batches.is_empty());
         assert!(r.is_empty());
+        assert_eq!(metrics.snapshot().op_format(OpKind::Sqrt, F32).shed, 5);
+    }
+
+    #[test]
+    fn plane_pool_recycles_capacity() {
+        let pool = PlanePool::new();
+        let mut v = pool.take();
+        assert_eq!(v.capacity(), 0);
+        v.resize(1024, 7);
+        pool.give(v);
+        assert_eq!(pool.parked(), 1);
+        let v = pool.take();
+        assert!(v.is_empty());
+        assert!(v.capacity() >= 1024);
+        assert_eq!(pool.parked(), 0);
     }
 
     #[test]
     fn never_exceeds_cap_property() {
-        check::property("batch size <= cap, conservation", |g| {
+        check::property("batch lanes <= cap, conservation", |g| {
             let cap = [64usize, 256, 1024][g.usize_in(0, 3)];
             let b = batcher(cap, 0);
+            let metrics = Metrics::new();
+            let pool = PlanePool::new();
             let mut r = Router::new();
-            let n = g.usize_in(0, 3000);
-            for i in 0..n {
+            let mut n = 0usize;
+            for i in 0..g.usize_in(0, 200) {
                 let fmt = *g.pick(&FormatKind::ALL);
-                r.route(req_fmt(i as u64, OpKind::Divide, fmt));
+                if g.chance(0.2) {
+                    let lanes = g.usize_in(1, 90);
+                    let a: Vec<u64> = vec![fmt.one_bits(); lanes];
+                    let (item, _t) =
+                        WorkItem::group(i as u64, OpKind::Divide, fmt, &a, &a, None);
+                    r.route(item);
+                    n += lanes;
+                } else {
+                    r.route(req_fmt(i as u64, OpKind::Divide, fmt));
+                    n += 1;
+                }
             }
-            let batches = b.flush_all(&mut r);
+            let batches = b.flush_all(&mut r, Instant::now(), &pool, &metrics);
             let total: usize = batches.iter().map(|x| x.live()).sum();
-            ensure(total == n, format!("lost requests: {total} != {n}"))?;
+            ensure(total == n, format!("lost lanes: {total} != {n}"))?;
             for batch in &batches {
                 if batch.live() == 0 {
                     return Err("flush_all formed an empty batch".into());
@@ -417,7 +706,10 @@ mod tests {
                 if batch.padded < batch.live() {
                     return Err("padded < live".into());
                 }
-                if batch.requests.iter().any(|x| x.format() != batch.format) {
+                if batch.a.len() != batch.padded || batch.b.len() != batch.padded {
+                    return Err("plane length != padded".into());
+                }
+                if batch.items.iter().any(|x| x.format() != batch.format) {
                     return Err("mixed formats in one batch".into());
                 }
             }
@@ -433,7 +725,7 @@ mod tests {
         r.route(req(2, OpKind::Sqrt));
         r.route(req(3, OpKind::Rsqrt));
         r.route(req_fmt(4, OpKind::Divide, FormatKind::BF16));
-        let batches = b.flush_all(&mut r);
+        let batches = b.flush_all(&mut r, Instant::now(), &PlanePool::new(), &Metrics::new());
         assert_eq!(batches.len(), 4);
         assert!(batches.iter().all(|x| x.live() > 0));
         assert!(r.is_empty());

@@ -2,12 +2,19 @@
 //! between workers and readable while the service runs. Sliced per
 //! (op, format) — the same key the router queues and batch planes use —
 //! with per-op aggregates for the headline numbers.
+//!
+//! The v2 request plane distinguishes outcomes, so the metrics do too:
+//! `requests` counts completed lanes, `errors` counts lanes failed
+//! after batching — backend execution failures (delivered to clients
+//! as [`ServiceError::ExecFailed`](super::request::ServiceError)) and
+//! the rare total-worker-loss path (delivered as `Shutdown`) — and
+//! `shed` counts lanes dropped by deadline expiry before execution.
 
 use std::sync::Mutex;
 
 use crate::util::stats::LogHistogram;
 
-use super::request::{FormatKind, op_format_slot, OP_FORMAT_SLOTS, OpKind};
+use super::request::{op_format_slot, FormatKind, OpKind, OP_FORMAT_SLOTS};
 
 const SLOTS: usize = OP_FORMAT_SLOTS;
 
@@ -21,6 +28,7 @@ struct SliceMetrics {
     latency: LogHistogram,
     batch_exec_ns: LogHistogram,
     errors: u64,
+    shed: u64,
 }
 
 /// Shared metrics sink (interior mutability; cheap enough for the
@@ -46,32 +54,41 @@ impl Metrics {
         Self { inner: Mutex::new(std::array::from_fn(|_| SliceMetrics::default())) }
     }
 
-    /// Record one executed batch: per-request latencies plus batch-level
-    /// execution time and padding accounting.
+    /// Record one executed batch. `latencies_ns` carries one entry per
+    /// work item: `(end-to-end latency, lanes at that latency)` — a
+    /// vectored submission's lanes share an enqueue timestamp, so they
+    /// weight the histogram without per-lane recording.
     pub fn record_batch(
         &self,
         op: OpKind,
         format: FormatKind,
-        latencies_ns: &[u64],
+        latencies_ns: &[(u64, usize)],
         exec_ns: u64,
         padded: usize,
     ) {
+        let lanes: u64 = latencies_ns.iter().map(|&(_, n)| n as u64).sum();
         let mut m = self.inner.lock().expect("metrics poisoned");
         let s = &mut m[idx(op, format)];
-        s.requests += latencies_ns.len() as u64;
+        s.requests += lanes;
         s.batches += 1;
-        s.live_slots += latencies_ns.len() as u64;
+        s.live_slots += lanes;
         s.padded_slots += padded as u64;
         s.batch_exec_ns.record(exec_ns);
-        for &l in latencies_ns {
-            s.latency.record(l);
+        for &(l, n) in latencies_ns {
+            s.latency.record_n(l, n as u64);
         }
     }
 
-    /// Record a failed batch (all its requests error out).
+    /// Record a failed batch (all its lanes error out).
     pub fn record_error(&self, op: OpKind, format: FormatKind, count: u64) {
         let mut m = self.inner.lock().expect("metrics poisoned");
         m[idx(op, format)].errors += count;
+    }
+
+    /// Record lanes shed by deadline expiry (never executed).
+    pub fn record_shed(&self, op: OpKind, format: FormatKind, count: u64) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        m[idx(op, format)].shed += count;
     }
 
     /// Snapshot for reporting.
@@ -81,6 +98,7 @@ impl Metrics {
             requests: s.requests,
             batches: s.batches,
             errors: s.errors,
+            shed: s.shed,
             mean_latency_ns: s.latency.mean(),
             p50_latency_ns: s.latency.quantile(0.5),
             p99_latency_ns: s.latency.quantile(0.99),
@@ -103,6 +121,7 @@ impl Metrics {
                 agg.padded_slots += s.padded_slots;
                 agg.live_slots += s.live_slots;
                 agg.errors += s.errors;
+                agg.shed += s.shed;
                 agg.latency.merge(&s.latency);
                 agg.batch_exec_ns.merge(&s.batch_exec_ns);
                 op_formats.push(OpFormatSnapshot { op, format, body: snap_of(s) });
@@ -117,12 +136,15 @@ impl Metrics {
 /// snapshots.
 #[derive(Clone, Copy, Debug)]
 pub struct OpSnapshotBody {
-    /// Requests completed.
+    /// Lanes completed.
     pub requests: u64,
     /// Batches executed.
     pub batches: u64,
-    /// Requests failed.
+    /// Lanes failed after batching (backend execution failure, or
+    /// worker loss at dispatch).
     pub errors: u64,
+    /// Lanes shed by deadline expiry (never executed).
+    pub shed: u64,
     /// Mean end-to-end latency (ns).
     pub mean_latency_ns: f64,
     /// Median end-to-end latency (ns, bucket upper edge).
@@ -193,7 +215,7 @@ impl MetricsSnapshot {
             .expect("all slices present")
     }
 
-    /// Total completed requests.
+    /// Total completed lanes.
     pub fn total_requests(&self) -> u64 {
         self.ops.iter().map(|s| s.requests).sum()
     }
@@ -201,6 +223,11 @@ impl MetricsSnapshot {
     /// Total errors.
     pub fn total_errors(&self) -> u64 {
         self.ops.iter().map(|s| s.errors).sum()
+    }
+
+    /// Total deadline-shed lanes.
+    pub fn total_shed(&self) -> u64 {
+        self.ops.iter().map(|s| s.shed).sum()
     }
 }
 
@@ -213,9 +240,9 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_batch(OpKind::Divide, F32, &[1000, 2000, 3000], 500, 4);
-        m.record_batch(OpKind::Divide, F32, &[1500], 400, 64);
-        m.record_batch(OpKind::Sqrt, F32, &[800], 300, 1);
+        m.record_batch(OpKind::Divide, F32, &[(1000, 1), (2000, 1), (3000, 1)], 500, 4);
+        m.record_batch(OpKind::Divide, F32, &[(1500, 1)], 400, 64);
+        m.record_batch(OpKind::Sqrt, F32, &[(800, 1)], 300, 1);
         let s = m.snapshot();
         assert_eq!(s.op(OpKind::Divide).requests, 4);
         assert_eq!(s.op(OpKind::Divide).batches, 2);
@@ -228,10 +255,24 @@ mod tests {
     }
 
     #[test]
+    fn vectored_entries_weight_lanes() {
+        let m = Metrics::new();
+        // one group of 100 lanes + one single, same batch
+        m.record_batch(OpKind::Divide, F32, &[(5000, 100), (900, 1)], 400, 128);
+        let s = m.snapshot();
+        let d = s.op(OpKind::Divide);
+        assert_eq!(d.requests, 101);
+        assert_eq!(d.batches, 1);
+        // the mean leans heavily toward the group's latency
+        assert!(d.mean_latency_ns > 4000.0, "{}", d.mean_latency_ns);
+        assert!((d.occupancy - 101.0 / 128.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn per_format_slices_are_isolated() {
         let m = Metrics::new();
-        m.record_batch(OpKind::Divide, FormatKind::F32, &[1000, 1000], 500, 4);
-        m.record_batch(OpKind::Divide, FormatKind::F64, &[9000], 700, 8);
+        m.record_batch(OpKind::Divide, FormatKind::F32, &[(1000, 1), (1000, 1)], 500, 4);
+        m.record_batch(OpKind::Divide, FormatKind::F64, &[(9000, 1)], 700, 8);
         m.record_error(OpKind::Divide, FormatKind::F16, 3);
         let s = m.snapshot();
         assert_eq!(s.op_format(OpKind::Divide, FormatKind::F32).requests, 2);
@@ -255,9 +296,23 @@ mod tests {
     }
 
     #[test]
+    fn shed_counted_separately_from_errors() {
+        let m = Metrics::new();
+        m.record_shed(OpKind::Divide, FormatKind::F16, 5);
+        m.record_error(OpKind::Divide, FormatKind::F16, 2);
+        let s = m.snapshot();
+        assert_eq!(s.total_shed(), 5);
+        assert_eq!(s.total_errors(), 2);
+        assert_eq!(s.op_format(OpKind::Divide, FormatKind::F16).shed, 5);
+        assert_eq!(s.op(OpKind::Divide).shed, 5);
+        assert_eq!(s.total_requests(), 0);
+    }
+
+    #[test]
     fn empty_snapshot_sane() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.total_requests(), 0);
+        assert_eq!(s.total_shed(), 0);
         assert_eq!(s.op(OpKind::Divide).occupancy, 1.0);
         assert_eq!(s.op_formats.len(), 12);
     }
@@ -271,7 +326,7 @@ mod tests {
             let m = m.clone();
             handles.push(std::thread::spawn(move || {
                 for _ in 0..100 {
-                    m.record_batch(OpKind::Divide, F32, &[100], 50, 1);
+                    m.record_batch(OpKind::Divide, F32, &[(100, 1)], 50, 1);
                 }
             }));
         }

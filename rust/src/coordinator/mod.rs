@@ -1,44 +1,107 @@
 //! The FPU-service coordinator: the layer-3 serving stack that exposes
-//! the Goldschmidt divider as a batched request service.
+//! the Goldschmidt divider as a batched request service, through the v2
+//! ticketed request plane.
 //!
 //! Request path (all rust, no Python):
 //!
 //! ```text
-//! clients ──submit()──> bounded queue ──> Router ──> per-(op, format)
-//!                                              │      queues
-//!                                       DynamicBatcher (size/age policy,
-//!                                              │        ladder padding)
-//!                                     worker pool: Executor::execute
-//!                                              │  (format-dispatched
-//!                                              │   batch kernels / PJRT)
-//!                                        per-request responses
+//! clients ──submit / submit_batch──> bounded queue ──> Router ──> per-
+//!            │ (Ticket / BatchTicket:                       (op, format)
+//!            │  shared completion slots,                    queues
+//!            │  no channel per request)              DynamicBatcher
+//!            │                                       (per-(op, format)
+//!            │                                        size/age policy,
+//!            │                                        deadline shedding,
+//!            │                                        capability-ladder
+//!            │                                        padding)
+//!            │                              worker pool: Executor::
+//!            │                                execute_into (caller-owned
+//!            │                                output plane; format-
+//!            │                                dispatched batch kernels
+//!            │                                or PJRT)
+//!            └───── tickets resolve: Response | typed ServiceError
 //! ```
 //!
-//! Every request carries a format-tagged [`Value`] pair; the
-//! (op, IEEE format) pair is the routing key end to end — queues,
-//! batches, executor dispatch and metrics are all sliced by it, so an
-//! f16 inference workload and an f64 scientific workload batch
-//! independently on the same service.
+//! Every request carries a format-tagged [`Value`] pair (or, vectored,
+//! a whole plane of raw format words); the (op, IEEE format) pair is
+//! the routing key end to end — queues, batches, executor dispatch and
+//! metrics are all sliced by it, so an f16 inference workload and an
+//! f64 scientific workload batch independently on the same service,
+//! under independently tunable batching budgets.
 //!
-//! * [`request`] — request/response types, op kinds, and the format
-//!   tags re-exported from [`crate::formats`].
-//! * [`router`] — fans requests out to per-(op, format) queues
-//!   (conservation and format purity are property-tested).
-//! * [`batcher`] — dynamic batching: flush on max-size or max-age,
-//!   padding to the artifact batch ladder with the format's `1.0`.
+//! What v2 of the request plane guarantees:
+//!
+//! * **Ticketed completion** — `submit` returns a [`Ticket`] backed by
+//!   a shared slot; `submit_batch` returns one [`BatchTicket`] for a
+//!   whole operand plane, which travels the router as a pre-formed
+//!   group (batch locality preserved, split only at executable-ladder
+//!   boundaries). No `mpsc::channel` per request.
+//! * **Typed failure surface** — every outcome is a
+//!   [`ServiceError`]: `Rejected` at submit time (validation and
+//!   capability misses), `Overloaded` from the non-blocking submit
+//!   family, `ExecFailed` carrying the backend's own message,
+//!   `Deadline` for shed work, `Shutdown` for teardown. Nothing is
+//!   signalled by dropping a sender.
+//! * **Deadlines** — `submit_value_deadline` / `submit_batch_deadline`
+//!   attach a completion deadline; expired work is shed by the
+//!   dispatcher (counted in [`Metrics`] as `shed`), not executed.
+//! * **Capability negotiation** — the backend's
+//!   [`BackendCaps`](crate::runtime::BackendCaps) table (per-(op,
+//!   format) support + batch ladders) is read once at startup and
+//!   drives both batch padding and submit-time rejection.
+//!
+//! # Example
+//!
+//! ```
+//! use goldschmidt::coordinator::{FormatKind, FpuService, OpKind, ServiceConfig};
+//! use goldschmidt::runtime::NativeExecutor;
+//!
+//! let svc = FpuService::start(ServiceConfig::default(), || {
+//!     Ok(Box::new(NativeExecutor::with_defaults()) as _)
+//! })
+//! .unwrap();
+//! let h = svc.handle();
+//!
+//! // one request: a ticket backed by a shared completion slot
+//! let ticket = h.submit(OpKind::Divide, 10.0, 4.0).unwrap();
+//! assert_eq!(ticket.wait().unwrap().value.f32(), 2.5);
+//!
+//! // vectored submission: one ticket for a whole operand plane
+//! let xs: Vec<u64> = [9.0f32, 16.0, 25.0].iter().map(|v| v.to_bits() as u64).collect();
+//! let batch = h.submit_batch(OpKind::Sqrt, FormatKind::F32, &xs, &[]).unwrap();
+//! let roots: Vec<f32> = batch.wait().unwrap().values().map(|v| v.f32()).collect();
+//! assert_eq!(roots, vec![3.0, 4.0, 5.0]);
+//!
+//! svc.shutdown();
+//! ```
+//!
+//! * [`request`] — op kinds, [`ServiceError`], [`Response`], and the
+//!   [`WorkItem`] unit (one request or a group window) the queues move;
+//!   format tags re-exported from [`crate::formats`].
+//! * [`ticket`] — [`Ticket`] / [`BatchTicket`] and their shared
+//!   completion slots.
+//! * [`router`] — fans work items out to per-(op, format) queues
+//!   (lane conservation and format purity are property-tested).
+//! * [`batcher`] — dynamic batching: flush on size, age, or deadline
+//!   arrival, per-(op, format) policy overrides, padding to the
+//!   backend's capability ladder with the format's `1.0`, operand-plane
+//!   recycling through the [`PlanePool`].
 //! * [`metrics`] — always-on counters + latency histograms, per
-//!   (op, format) with per-op aggregates.
-//! * [`service`] — the threaded service: lifecycle, backpressure,
-//!   worker pool.
+//!   (op, format) with per-op aggregates; errors and deadline sheds
+//!   counted separately.
+//! * [`service`] — the threaded service: fail-fast startup, lifecycle,
+//!   backpressure, dead-worker skipping, worker pool.
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod service;
+pub mod ticket;
 
-pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PlanePool, PolicyOverride};
 pub use metrics::{Metrics, MetricsSnapshot, OpFormatSnapshot, OpSnapshot};
-pub use request::{FormatKind, OpKind, Request, Response, Value};
+pub use request::{FormatKind, OpKind, Response, ServiceError, Value, WorkItem};
 pub use router::Router;
 pub use service::{FpuService, ServiceConfig, ServiceHandle};
+pub use ticket::{BatchResponse, BatchTicket, Ticket};

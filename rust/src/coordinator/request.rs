@@ -1,9 +1,20 @@
-//! Request/response types for the FPU service.
+//! Request-plane types for the FPU service: op kinds, typed service
+//! errors, responses, and the [`WorkItem`] unit the router and batcher
+//! move around.
+//!
+//! v2 of the request plane replaced the per-request reply channel with
+//! shared completion slots (see [`super::ticket`]): a [`WorkItem`] is
+//! either one request or a contiguous slice of a vectored submission,
+//! and carries a handle to the slot its results are written into. Every
+//! failure mode is a typed [`ServiceError`] delivered through that slot
+//! — nothing is signalled by dropping a sender any more.
 
-use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub use crate::formats::{FormatKind, Value};
+
+use super::ticket::{BatchTicket, Ticket, TicketCore};
 
 /// The operations the divider unit serves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -57,44 +68,60 @@ impl OpKind {
     }
 }
 
-/// A unit of work travelling through the coordinator. The operands are
-/// format-tagged [`Value`]s; [`Request::format`] (derived from the
-/// first operand, so it can never desync from the payload) is the
-/// routing key the per-(op, format) queues and batch planes use.
-#[derive(Debug)]
-pub struct Request {
-    /// Unique id (assigned by the service handle).
-    pub id: u64,
-    /// Operation.
-    pub op: OpKind,
-    /// First operand.
-    pub a: Value,
-    /// Second operand (`1.0` in the request format for unary ops;
-    /// must share `a`'s format — the service handle enforces this at
-    /// submit time).
-    pub b: Value,
-    /// Enqueue timestamp (for latency accounting and age-based flush).
-    pub enqueued_at: Instant,
-    /// Where the response goes.
-    pub reply: mpsc::Sender<Response>,
-}
-
-impl Request {
-    /// The IEEE format this request is served in (the first operand's
-    /// tag — structural, not stored).
-    pub fn format(&self) -> FormatKind {
-        self.a.format()
-    }
-}
-
 /// Number of (op, format) routing slots.
 pub(crate) const OP_FORMAT_SLOTS: usize = OpKind::ALL.len() * FormatKind::ALL.len();
 
 /// Dense (op, format) slot index — the one layout shared by the
-/// router's queues, the metrics slices and the batcher's ladders.
+/// router's queues, the metrics slices, the batcher's policies and the
+/// backend capability table.
 pub(crate) fn op_format_slot(op: OpKind, format: FormatKind) -> usize {
     op.index() * FormatKind::ALL.len() + format.index()
 }
+
+/// Every way a request can fail, carried to the client through its
+/// ticket. The v1 plane collapsed all of these into a dropped reply
+/// sender (`RecvError`); v2 makes each outcome distinguishable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The submission was invalid or unservable (format mismatch, bad
+    /// arity, an (op, format) pair outside the backend's capabilities).
+    /// Raised at submit time — rejected work never enters the queue.
+    Rejected {
+        /// Human-readable cause.
+        reason: String,
+    },
+    /// The bounded submit queue is full (only from the `try_submit`
+    /// family; blocking submits apply backpressure instead).
+    Overloaded,
+    /// The backend failed the batch this request rode in; carries the
+    /// executor's own error message.
+    ExecFailed {
+        /// The backend's rendered error chain.
+        backend: String,
+    },
+    /// The request's deadline expired before execution; the dispatcher
+    /// shed it without running it.
+    Deadline,
+    /// The service shut down (or lost every worker) before the request
+    /// could complete.
+    Shutdown,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Rejected { reason } => write!(f, "request rejected: {reason}"),
+            ServiceError::Overloaded => f.write_str("service overloaded: submit queue full"),
+            ServiceError::ExecFailed { backend } => {
+                write!(f, "backend execution failed: {backend}")
+            }
+            ServiceError::Deadline => f.write_str("deadline expired before execution"),
+            ServiceError::Shutdown => f.write_str("service is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// The service's answer to one request.
 #[derive(Clone, Debug)]
@@ -108,6 +135,228 @@ pub struct Response {
     pub latency_ns: u64,
     /// Size of the batch this request rode in (for diagnostics).
     pub batch_size: usize,
+}
+
+/// Operand storage: one inline pair, or a shared slice of a vectored
+/// submission's planes (groups split at ladder boundaries by cloning
+/// the `Arc` and narrowing the window — no copying).
+#[derive(Debug)]
+enum Payload {
+    One { a: u64, b: u64 },
+    Group { planes: Arc<GroupPlanes>, start: usize, len: usize },
+}
+
+/// The operand planes of one vectored submission (`b` empty for unary
+/// ops).
+#[derive(Debug)]
+struct GroupPlanes {
+    a: Vec<u64>,
+    b: Vec<u64>,
+}
+
+/// A unit of work travelling through the coordinator: one request, or a
+/// contiguous window of a vectored submission. Results flow back
+/// through the completion slot shared with the submitting client's
+/// ticket; a `WorkItem` dropped without being completed fails its lanes
+/// with [`ServiceError::Shutdown`], so no client can be left waiting.
+#[derive(Debug)]
+pub struct WorkItem {
+    /// Request / group id (assigned by the service handle).
+    pub id: u64,
+    /// Operation.
+    pub op: OpKind,
+    /// Enqueue timestamp (latency accounting and age-based flush).
+    pub enqueued_at: Instant,
+    /// Optional completion deadline; expired items are shed, not run.
+    pub deadline: Option<Instant>,
+    format: FormatKind,
+    payload: Payload,
+    completion: Arc<TicketCore>,
+    /// First lane of this item within its ticket's result plane.
+    base: usize,
+    done: bool,
+}
+
+impl WorkItem {
+    /// One request plus the [`Ticket`] resolving it. The routing format
+    /// is the first operand's tag, so it can never desync from the
+    /// payload; the caller has already checked `a` and `b` agree.
+    pub fn single(
+        id: u64,
+        op: OpKind,
+        a: Value,
+        b: Value,
+        deadline: Option<Instant>,
+    ) -> (WorkItem, Ticket) {
+        let format = a.format();
+        let core = TicketCore::new(1);
+        let item = WorkItem {
+            id,
+            op,
+            enqueued_at: Instant::now(),
+            deadline,
+            format,
+            payload: Payload::One { a: a.bits(), b: b.bits() },
+            completion: core.clone(),
+            base: 0,
+            done: false,
+        };
+        (item, Ticket::new(core, id, format))
+    }
+
+    /// A vectored submission plus the [`BatchTicket`] resolving it.
+    /// `a` must be non-empty; `b` is the divisor plane for divide (same
+    /// length as `a`) and must be empty for unary ops. Arity is
+    /// enforced here — the service handle reports it as a typed
+    /// [`ServiceError::Rejected`] before construction, but direct
+    /// callers fail at their own boundary instead of inside the
+    /// dispatcher.
+    pub fn group(
+        id: u64,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+        deadline: Option<Instant>,
+    ) -> (WorkItem, BatchTicket) {
+        assert!(!a.is_empty(), "a group needs at least one lane");
+        match op {
+            OpKind::Divide => assert!(
+                b.len() == a.len(),
+                "divide group needs matching operand planes ({} vs {})",
+                a.len(),
+                b.len()
+            ),
+            OpKind::Sqrt | OpKind::Rsqrt => {
+                assert!(b.is_empty(), "{} group takes one operand plane", op.label())
+            }
+        }
+        let lanes = a.len();
+        let core = TicketCore::new(lanes);
+        let item = WorkItem {
+            id,
+            op,
+            enqueued_at: Instant::now(),
+            deadline,
+            format,
+            payload: Payload::Group {
+                planes: Arc::new(GroupPlanes { a: a.to_vec(), b: b.to_vec() }),
+                start: 0,
+                len: lanes,
+            },
+            completion: core.clone(),
+            base: 0,
+            done: false,
+        };
+        (item, BatchTicket::new(core, id, format, lanes))
+    }
+
+    /// The IEEE format this item is served in (the routing key).
+    pub fn format(&self) -> FormatKind {
+        self.format
+    }
+
+    /// Number of operand lanes this item contributes to a batch.
+    pub fn lanes(&self) -> usize {
+        match &self.payload {
+            Payload::One { .. } => 1,
+            Payload::Group { len, .. } => *len,
+        }
+    }
+
+    /// True once the deadline (if any) has passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Split the first `k` lanes off into their own item (group items
+    /// only; `0 < k < lanes`). Both halves share the operand planes and
+    /// the completion slot; results land in the right ticket lanes via
+    /// each half's base offset.
+    pub(crate) fn split_off_front(&mut self, k: usize) -> WorkItem {
+        let front_base = self.base;
+        match &mut self.payload {
+            Payload::Group { planes, start, len } => {
+                assert!(k > 0 && k < *len, "split {k} outside (0, {len})");
+                let front = WorkItem {
+                    id: self.id,
+                    op: self.op,
+                    enqueued_at: self.enqueued_at,
+                    deadline: self.deadline,
+                    format: self.format,
+                    payload: Payload::Group {
+                        planes: planes.clone(),
+                        start: *start,
+                        len: k,
+                    },
+                    completion: self.completion.clone(),
+                    base: front_base,
+                    done: false,
+                };
+                *start += k;
+                *len -= k;
+                self.base += k;
+                front
+            }
+            Payload::One { .. } => unreachable!("cannot split a single request"),
+        }
+    }
+
+    /// Append this item's operand lanes to a batch's planes. `b_out`
+    /// is `None` for unary-op batches (no divisor plane is built at
+    /// all); a group submitted without a `b` plane but batched for
+    /// divide fills its divisor lanes with the neutral `one_bits` so
+    /// the planes stay rectangular.
+    pub(crate) fn push_operands(
+        &self,
+        a_out: &mut Vec<u64>,
+        b_out: Option<&mut Vec<u64>>,
+        one_bits: u64,
+    ) {
+        match &self.payload {
+            Payload::One { a, b } => {
+                a_out.push(*a);
+                if let Some(b_out) = b_out {
+                    b_out.push(*b);
+                }
+            }
+            Payload::Group { planes, start, len } => {
+                a_out.extend_from_slice(&planes.a[*start..*start + *len]);
+                if let Some(b_out) = b_out {
+                    if planes.b.is_empty() {
+                        b_out.resize(b_out.len() + *len, one_bits);
+                    } else {
+                        b_out.extend_from_slice(&planes.b[*start..*start + *len]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Deliver this item's results (one value per lane, in lane order).
+    pub(crate) fn complete(mut self, values: &[u64], latency_ns: u64, batch_size: usize) {
+        debug_assert_eq!(values.len(), self.lanes());
+        self.completion.complete_range(self.base, values, latency_ns, batch_size);
+        self.done = true;
+    }
+
+    /// Fail this item's lanes with a typed error.
+    pub(crate) fn fail(mut self, err: ServiceError) {
+        self.completion.fail_range(self.lanes(), err);
+        self.done = true;
+    }
+}
+
+impl Drop for WorkItem {
+    /// Failsafe: an item dropped without completion (a batch stranded in
+    /// a dead worker's channel, a queue dropped mid-teardown) fails its
+    /// lanes so no client blocks forever. This is the typed replacement
+    /// for v1's "dropped reply sender" signal.
+    fn drop(&mut self) {
+        if !self.done {
+            self.completion.fail_range(self.lanes(), ServiceError::Shutdown);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -150,5 +399,81 @@ mod tests {
             assert_eq!(Value::from_bits(kind, v.bits()), v);
             assert_eq!(v.to_f64(), 2.5);
         }
+    }
+
+    #[test]
+    fn service_error_displays_carry_detail() {
+        let e = ServiceError::Rejected { reason: "bad arity".into() };
+        assert!(e.to_string().contains("bad arity"));
+        let e = ServiceError::ExecFailed { backend: "pjrt: OOM".into() };
+        assert!(e.to_string().contains("pjrt: OOM"));
+        assert!(ServiceError::Deadline.to_string().contains("deadline"));
+        assert!(ServiceError::Overloaded.to_string().contains("overloaded"));
+        assert!(ServiceError::Shutdown.to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn single_item_completes_its_ticket() {
+        let (item, ticket) =
+            WorkItem::single(3, OpKind::Divide, Value::F32(6.0), Value::F32(2.0), None);
+        assert_eq!(item.lanes(), 1);
+        assert_eq!(item.format(), FormatKind::F32);
+        item.complete(&[3.0f32.to_bits() as u64], 100, 64);
+        let resp = ticket.wait().expect("ok");
+        assert_eq!(resp.value.f32(), 3.0);
+        assert_eq!(resp.id, 3);
+    }
+
+    #[test]
+    fn dropped_item_fails_ticket_with_shutdown() {
+        let (item, ticket) =
+            WorkItem::single(0, OpKind::Sqrt, Value::F32(4.0), Value::F32(1.0), None);
+        drop(item);
+        assert_eq!(ticket.wait().unwrap_err(), ServiceError::Shutdown);
+    }
+
+    #[test]
+    fn group_split_preserves_lanes_and_order() {
+        let a: Vec<u64> = (0..10).map(|i| i + 100).collect();
+        let (mut item, ticket) =
+            WorkItem::group(1, OpKind::Sqrt, FormatKind::F32, &a, &[], None);
+        assert_eq!(item.lanes(), 10);
+        let front = item.split_off_front(4);
+        assert_eq!(front.lanes(), 4);
+        assert_eq!(item.lanes(), 6);
+        // operand windows stay aligned
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        front.push_operands(&mut pa, Some(&mut pb), 0);
+        item.push_operands(&mut pa, Some(&mut pb), 0);
+        assert_eq!(pa, a);
+        assert_eq!(pb, vec![0u64; 10]); // b-less group: neutral divisor lanes
+        // and a unary batch builds no divisor plane at all
+        let mut pa2 = Vec::new();
+        item.push_operands(&mut pa2, None, 0);
+        assert_eq!(pa2, a[4..]);
+        // completing the halves out of order still fills the right slots
+        let tail: Vec<u64> = (4..10u64).map(|i| i * 2).collect();
+        item.complete(&tail, 50, 64);
+        let head: Vec<u64> = (0..4u64).map(|i| i * 2).collect();
+        front.complete(&head, 80, 64);
+        let resp = ticket.wait().expect("ok");
+        assert_eq!(resp.bits, (0..10u64).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(resp.latency_ns, 80);
+    }
+
+    #[test]
+    fn expiry_follows_deadline() {
+        let now = Instant::now();
+        let (item, _t) = WorkItem::single(
+            0,
+            OpKind::Divide,
+            Value::F32(1.0),
+            Value::F32(1.0),
+            Some(now),
+        );
+        assert!(item.expired(now + std::time::Duration::from_micros(1)));
+        let (item, _t) =
+            WorkItem::single(0, OpKind::Divide, Value::F32(1.0), Value::F32(1.0), None);
+        assert!(!item.expired(now + std::time::Duration::from_secs(1)));
     }
 }

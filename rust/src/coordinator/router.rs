@@ -1,20 +1,35 @@
-//! Request router: fans incoming requests into per-(op, format) queues.
+//! Request router: fans incoming work items into per-(op, format)
+//! queues.
 //!
 //! The router is deliberately simple — (op kind, IEEE format) is the
 //! full routing key the FPU needs — but it enforces the invariants the
 //! batcher relies on: FIFO order within a queue, format purity (a
-//! queue's requests all share one format, so a batch's planes are
-//! uniform), and conservation (every request routed exactly once, none
-//! dropped, none duplicated).
+//! queue's items all share one format, so a batch's planes are
+//! uniform), and lane conservation (every submitted lane drained
+//! exactly once, none dropped, none duplicated).
+//!
+//! Quantities are counted in **lanes**, not items: a vectored
+//! submission enters as one [`WorkItem`] carrying many lanes, and
+//! [`Router::drain`] may split it at a batch boundary (the halves share
+//! their operand planes and completion slot, so the split is free and
+//! invisible to the client).
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
-use super::request::{FormatKind, op_format_slot as slot, OP_FORMAT_SLOTS, OpKind, Request};
+use super::request::{op_format_slot as slot, FormatKind, OpKind, WorkItem, OP_FORMAT_SLOTS};
 
 /// Per-(op, format) FIFO queues.
 #[derive(Debug)]
 pub struct Router {
-    queues: [VecDeque<Request>; OP_FORMAT_SLOTS],
+    queues: [VecDeque<WorkItem>; OP_FORMAT_SLOTS],
+    /// Queued lanes per slot (kept incrementally; `len` must be O(1)).
+    lanes: [usize; OP_FORMAT_SLOTS],
+    /// Earliest deadline per slot (drives deadline-triggered flushes).
+    min_deadline: [Option<Instant>; OP_FORMAT_SLOTS],
+    /// Queued deadline-carrying items per slot: when zero (the common,
+    /// deadline-free case) `drain` skips the floor rescan entirely.
+    deadline_items: [usize; OP_FORMAT_SLOTS],
     routed: u64,
     drained: u64,
 }
@@ -30,25 +45,34 @@ impl Router {
     pub fn new() -> Self {
         Self {
             queues: std::array::from_fn(|_| VecDeque::new()),
+            lanes: [0; OP_FORMAT_SLOTS],
+            min_deadline: [None; OP_FORMAT_SLOTS],
+            deadline_items: [0; OP_FORMAT_SLOTS],
             routed: 0,
             drained: 0,
         }
     }
 
-    /// Route one request to its (op, format) queue.
-    pub fn route(&mut self, req: Request) {
-        self.routed += 1;
-        self.queues[slot(req.op, req.format())].push_back(req);
+    /// Route one item to its (op, format) queue.
+    pub fn route(&mut self, item: WorkItem) {
+        let s = slot(item.op, item.format());
+        self.lanes[s] += item.lanes();
+        self.routed += item.lanes() as u64;
+        if let Some(d) = item.deadline {
+            self.deadline_items[s] += 1;
+            self.min_deadline[s] = Some(self.min_deadline[s].map_or(d, |m| m.min(d)));
+        }
+        self.queues[s].push_back(item);
     }
 
-    /// Queue length for an (op, format) pair.
+    /// Queued lanes for an (op, format) pair.
     pub fn len(&self, op: OpKind, format: FormatKind) -> usize {
-        self.queues[slot(op, format)].len()
+        self.lanes[slot(op, format)]
     }
 
-    /// Total queued across all queues.
+    /// Total queued lanes across all queues.
     pub fn total_len(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.lanes.iter().sum()
     }
 
     /// True when nothing is queued.
@@ -57,26 +81,67 @@ impl Router {
     }
 
     /// Oldest enqueue time in one (op, format) queue (FIFO: its front).
-    pub fn oldest_enqueue_in(&self, op: OpKind, format: FormatKind) -> Option<std::time::Instant> {
+    pub fn oldest_enqueue_in(&self, op: OpKind, format: FormatKind) -> Option<Instant> {
         self.queues[slot(op, format)].front().map(|r| r.enqueued_at)
     }
 
     /// Oldest enqueue time across all queues (drives idle wake-up).
-    pub fn oldest_enqueue(&self) -> Option<std::time::Instant> {
+    pub fn oldest_enqueue(&self) -> Option<Instant> {
         self.queues.iter().filter_map(|q| q.front().map(|r| r.enqueued_at)).min()
     }
 
-    /// Pop up to `max` requests from one (op, format) queue, FIFO.
-    pub fn drain(&mut self, op: OpKind, format: FormatKind, max: usize) -> Vec<Request> {
-        let q = &mut self.queues[slot(op, format)];
-        let take = max.min(q.len());
-        let out: Vec<Request> = q.drain(..take).collect();
-        self.drained += out.len() as u64;
+    /// Earliest deadline among one queue's items (None when no queued
+    /// item carries a deadline).
+    pub fn earliest_deadline_in(&self, op: OpKind, format: FormatKind) -> Option<Instant> {
+        self.min_deadline[slot(op, format)]
+    }
+
+    /// Pop up to `max_lanes` lanes from one (op, format) queue, FIFO. A
+    /// group item straddling the boundary is split: its front window is
+    /// returned and the remainder stays at the head of the queue.
+    pub fn drain(&mut self, op: OpKind, format: FormatKind, max_lanes: usize) -> Vec<WorkItem> {
+        let qi = slot(op, format);
+        let mut out = Vec::new();
+        let mut taken = 0usize;
+        let mut drained_deadline = false;
+        while taken < max_lanes {
+            let Some(front) = self.queues[qi].front_mut() else { break };
+            let lanes = front.lanes();
+            if taken + lanes <= max_lanes {
+                let item = self.queues[qi].pop_front().expect("front exists");
+                if item.deadline.is_some() {
+                    self.deadline_items[qi] -= 1;
+                    drained_deadline = true;
+                }
+                taken += lanes;
+                out.push(item);
+            } else {
+                // a split leaves the remainder (with the same deadline,
+                // if any) at the head: the per-slot count and the floor
+                // are both unchanged
+                let part = front.split_off_front(max_lanes - taken);
+                taken += part.lanes();
+                out.push(part);
+                break;
+            }
+        }
+        self.lanes[qi] -= taken;
+        self.drained += taken as u64;
+        // deadline floor: unchanged unless a deadline-carrying item
+        // actually left the queue; the rescan is paid only by deadline
+        // traffic, never by a deadline-free (or deadline-behind) backlog
+        if drained_deadline {
+            self.min_deadline[qi] = if self.deadline_items[qi] == 0 {
+                None
+            } else {
+                self.queues[qi].iter().filter_map(|r| r.deadline).min()
+            };
+        }
         out
     }
 
-    /// Lifetime counters: (routed, drained). Conservation invariant:
-    /// `routed == drained + total_len()` at all times.
+    /// Lifetime lane counters: (routed, drained). Conservation
+    /// invariant: `routed == drained + total_len()` at all times.
     pub fn counters(&self) -> (u64, u64) {
         (self.routed, self.drained)
     }
@@ -87,25 +152,23 @@ mod tests {
     use super::*;
     use crate::check::{self, ensure};
     use crate::formats::Value;
-    use std::sync::mpsc;
-    use std::time::Instant;
+    use std::time::{Duration, Instant};
 
-    fn req_fmt(id: u64, op: OpKind, format: FormatKind) -> Request {
-        let (tx, _rx) = mpsc::channel();
-        // keep rx alive by leaking in tests that don't need replies
-        std::mem::forget(_rx);
-        Request {
-            id,
-            op,
-            a: Value::one(format),
-            b: Value::one(format),
-            enqueued_at: Instant::now(),
-            reply: tx,
-        }
+    fn req_fmt(id: u64, op: OpKind, format: FormatKind) -> WorkItem {
+        let (item, _ticket) =
+            WorkItem::single(id, op, Value::one(format), Value::one(format), None);
+        item
     }
 
-    fn req(id: u64, op: OpKind) -> Request {
+    fn req(id: u64, op: OpKind) -> WorkItem {
         req_fmt(id, op, FormatKind::F32)
+    }
+
+    fn group(id: u64, op: OpKind, format: FormatKind, lanes: usize) -> WorkItem {
+        let a: Vec<u64> = (0..lanes as u64).map(|i| i + 1).collect();
+        let b = if op == OpKind::Divide { a.clone() } else { Vec::new() };
+        let (item, _ticket) = WorkItem::group(id, op, format, &a, &b, None);
+        item
     }
 
     #[test]
@@ -153,8 +216,31 @@ mod tests {
     }
 
     #[test]
+    fn groups_count_lanes_and_split_at_drain_boundary() {
+        let mut r = Router::new();
+        r.route(group(1, OpKind::Divide, FormatKind::F32, 10));
+        r.route(req(2, OpKind::Divide));
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F32), 11);
+        // drain 6 lanes: the group splits, its tail stays queued
+        let got = r.drain(OpKind::Divide, FormatKind::F32, 6);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].lanes(), 6);
+        assert_eq!(r.len(OpKind::Divide, FormatKind::F32), 5);
+        // the tail (4 lanes) drains before the single behind it
+        let got = r.drain(OpKind::Divide, FormatKind::F32, 100);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].lanes(), 4);
+        assert_eq!(got[0].id, 1);
+        assert_eq!(got[1].id, 2);
+        assert!(r.is_empty());
+        let (routed, drained) = r.counters();
+        assert_eq!(routed, 11);
+        assert_eq!(drained, 11);
+    }
+
+    #[test]
     fn conservation_property() {
-        check::property("router conserves requests", |g| {
+        check::property("router conserves lanes", |g| {
             let mut r = Router::new();
             let mut routed = 0u64;
             let mut drained = 0u64;
@@ -162,10 +248,17 @@ mod tests {
                 let op = *g.pick(&OpKind::ALL);
                 let fmt = *g.pick(&FormatKind::ALL);
                 if g.chance(0.6) {
-                    r.route(req_fmt(step as u64, op, fmt));
-                    routed += 1;
+                    if g.chance(0.3) {
+                        let lanes = g.usize_in(1, 12);
+                        r.route(group(step as u64, op, fmt, lanes));
+                        routed += lanes as u64;
+                    } else {
+                        r.route(req_fmt(step as u64, op, fmt));
+                        routed += 1;
+                    }
                 } else {
-                    drained += r.drain(op, fmt, g.usize_in(0, 8) + 1).len() as u64;
+                    let got = r.drain(op, fmt, g.usize_in(0, 8) + 1);
+                    drained += got.iter().map(|x| x.lanes() as u64).sum::<u64>();
                 }
             }
             let (cr, cd) = r.counters();
@@ -184,12 +277,42 @@ mod tests {
         let first = req(1, OpKind::Sqrt);
         let t0 = first.enqueued_at;
         r.route(first);
-        std::thread::sleep(std::time::Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(1));
         r.route(req_fmt(2, OpKind::Divide, FormatKind::F64));
         assert_eq!(r.oldest_enqueue().unwrap(), t0);
         assert_eq!(r.oldest_enqueue_in(OpKind::Sqrt, FormatKind::F32).unwrap(), t0);
         assert!(r.oldest_enqueue_in(OpKind::Divide, FormatKind::F64).unwrap() > t0);
         assert!(r.oldest_enqueue_in(OpKind::Divide, FormatKind::F32).is_none());
+    }
+
+    #[test]
+    fn deadline_floor_tracked_and_recomputed() {
+        let mut r = Router::new();
+        assert!(r.earliest_deadline_in(OpKind::Divide, FormatKind::F32).is_none());
+        let far = Instant::now() + Duration::from_secs(60);
+        let near = Instant::now() + Duration::from_millis(5);
+        let mut with_deadline = |id, d| {
+            let (item, _t) = WorkItem::single(
+                id,
+                OpKind::Divide,
+                Value::F32(1.0),
+                Value::F32(1.0),
+                Some(d),
+            );
+            item
+        };
+        r.route(with_deadline(1, far));
+        assert_eq!(r.earliest_deadline_in(OpKind::Divide, FormatKind::F32), Some(far));
+        r.route(with_deadline(2, near));
+        assert_eq!(r.earliest_deadline_in(OpKind::Divide, FormatKind::F32), Some(near));
+        // draining the near-deadline item restores the floor
+        let got = r.drain(OpKind::Divide, FormatKind::F32, 2);
+        assert_eq!(got.len(), 2);
+        assert!(r.earliest_deadline_in(OpKind::Divide, FormatKind::F32).is_none());
+        r.route(with_deadline(3, far));
+        r.route(req(4, OpKind::Divide));
+        let _ = r.drain(OpKind::Divide, FormatKind::F32, 1);
+        assert_eq!(r.earliest_deadline_in(OpKind::Divide, FormatKind::F32), None);
     }
 
     #[test]

@@ -6,13 +6,22 @@
 //! Threading model (std threads + channels; no async runtime exists in
 //! the offline environment, and none is needed):
 //!
-//! * clients hold a [`ServiceHandle`] and `submit()` into a *bounded*
+//! * clients hold a [`ServiceHandle`] and submit into a *bounded*
 //!   channel — the backpressure boundary; a full queue pushes back on
-//!   submitters instead of growing without bound;
+//!   submitters (or returns [`ServiceError::Overloaded`] from the
+//!   `try_submit` family) instead of growing without bound;
 //! * one **dispatcher** thread owns the [`Router`] + [`DynamicBatcher`]
-//!   and turns the request stream into batches;
+//!   and turns the work stream into batches, shedding expired-deadline
+//!   items and skipping dead workers' channels;
 //! * `workers` **executor** threads each own one [`Executor`] (one
-//!   "divider unit" each) and execute batches round-robin.
+//!   "divider unit" each) and execute batches round-robin into a
+//!   reused output plane, completing each item's ticket in place.
+//!
+//! Startup is fail-fast: the executor factory is probed once on the
+//! caller thread (capability negotiation), and every worker reports its
+//! own factory result back before [`FpuService::start`] returns — a
+//! worker that cannot build its executor fails `start` instead of
+//! silently eating a share of the traffic.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -20,19 +29,21 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
+use crate::runtime::caps::BackendCaps;
 use crate::runtime::executor::Executor;
 
-use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher, PlanePool};
 use super::metrics::Metrics;
-use super::request::{FormatKind, OpKind, Request, Response, Value};
+use super::request::{FormatKind, OpKind, ServiceError, Value, WorkItem};
 use super::router::Router;
+use super::ticket::{BatchTicket, Ticket};
 
 /// Service configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {
-    /// Batching policy.
+    /// Batching policy (global knobs + per-(op, format) overrides).
     pub batcher: BatcherConfig,
     /// Bounded submit-queue depth (the backpressure knob).
     pub queue_depth: usize,
@@ -54,121 +65,231 @@ impl Default for ServiceConfig {
 }
 
 enum DispatchMsg {
-    Req(Request),
+    Req(WorkItem),
     Shutdown,
 }
 
-/// Client-side handle: cheap to clone, safe across threads.
+/// Client-side handle: cheap to clone, safe across threads. Every
+/// submission returns a [`Ticket`] / [`BatchTicket`] backed by a shared
+/// completion slot — no per-request channel — and every failure is a
+/// typed [`ServiceError`].
 #[derive(Clone)]
 pub struct ServiceHandle {
     tx: SyncSender<DispatchMsg>,
     next_id: Arc<AtomicU64>,
+    caps: Arc<BackendCaps>,
 }
 
 impl ServiceHandle {
-    fn make_request(
+    /// The backend's negotiated capability table (what this service can
+    /// serve, per (op, format), and at which batch sizes).
+    pub fn capabilities(&self) -> &BackendCaps {
+        &self.caps
+    }
+
+    fn check_supported(&self, op: OpKind, format: FormatKind) -> Result<(), ServiceError> {
+        if self.caps.supports(op, format) {
+            Ok(())
+        } else {
+            Err(ServiceError::Rejected {
+                reason: format!(
+                    "backend {} does not serve ({}, {format})",
+                    self.caps.backend(),
+                    op.label()
+                ),
+            })
+        }
+    }
+
+    fn send(&self, item: WorkItem) -> Result<(), ServiceError> {
+        // a failed send drops the item, which fails its ticket — but the
+        // caller gets the error directly and never sees that ticket
+        self.tx.send(DispatchMsg::Req(item)).map_err(|_| ServiceError::Shutdown)
+    }
+
+    fn make_single(
         &self,
         op: OpKind,
         a: Value,
         b: Value,
-    ) -> Result<(Request, mpsc::Receiver<Response>)> {
+        deadline: Option<Duration>,
+    ) -> Result<(WorkItem, Ticket), ServiceError> {
         if a.format() != b.format() {
-            bail!("operand format mismatch: {} vs {}", a.format(), b.format());
+            return Err(ServiceError::Rejected {
+                reason: format!("operand format mismatch: {} vs {}", a.format(), b.format()),
+            });
         }
-        let (reply, rx) = mpsc::channel();
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            op,
-            a,
-            b,
-            enqueued_at: Instant::now(),
-            reply,
-        };
-        Ok((req, rx))
+        self.check_supported(op, a.format())?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Ok(WorkItem::single(id, op, a, b, deadline.map(|d| Instant::now() + d)))
     }
 
-    /// Submit one op on format-tagged operands; returns the receiver for
-    /// its [`Response`]. Blocks while the submit queue is full
+    /// Submit one op on format-tagged operands; returns the [`Ticket`]
+    /// resolving it. Blocks while the submit queue is full
     /// (backpressure). Both operands must share a format (pass
     /// `Value::one(format)` as `b` for unary ops).
-    pub fn submit_value(&self, op: OpKind, a: Value, b: Value) -> Result<mpsc::Receiver<Response>> {
-        let (req, rx) = self.make_request(op, a, b)?;
-        if self.tx.send(DispatchMsg::Req(req)).is_err() {
-            bail!("service is shut down");
-        }
-        Ok(rx)
+    pub fn submit_value(&self, op: OpKind, a: Value, b: Value) -> Result<Ticket, ServiceError> {
+        let (item, ticket) = self.make_single(op, a, b, None)?;
+        self.send(item)?;
+        Ok(ticket)
+    }
+
+    /// [`Self::submit_value`] with a completion deadline: if the request
+    /// is still queued when the deadline arrives, the dispatcher sheds
+    /// it (counted in metrics) and the ticket resolves to
+    /// [`ServiceError::Deadline`] instead of executing stale work.
+    pub fn submit_value_deadline(
+        &self,
+        op: OpKind,
+        a: Value,
+        b: Value,
+        deadline: Duration,
+    ) -> Result<Ticket, ServiceError> {
+        let (item, ticket) = self.make_single(op, a, b, Some(deadline))?;
+        self.send(item)?;
+        Ok(ticket)
     }
 
     /// Submit one f32 op (the single-precision convenience path).
-    pub fn submit(&self, op: OpKind, a: f32, b: f32) -> Result<mpsc::Receiver<Response>> {
+    pub fn submit(&self, op: OpKind, a: f32, b: f32) -> Result<Ticket, ServiceError> {
         self.submit_value(op, Value::F32(a), Value::F32(b))
     }
 
-    /// Non-blocking submit of format-tagged operands: `Ok(None)` when
-    /// the queue is full.
+    /// Non-blocking submit of format-tagged operands:
+    /// [`ServiceError::Overloaded`] when the queue is full.
     pub fn try_submit_value(
         &self,
         op: OpKind,
         a: Value,
         b: Value,
-    ) -> Result<Option<mpsc::Receiver<Response>>> {
-        let (req, rx) = self.make_request(op, a, b)?;
-        match self.tx.try_send(DispatchMsg::Req(req)) {
-            Ok(()) => Ok(Some(rx)),
-            Err(TrySendError::Full(_)) => Ok(None),
-            Err(TrySendError::Disconnected(_)) => bail!("service is shut down"),
+    ) -> Result<Ticket, ServiceError> {
+        let (item, ticket) = self.make_single(op, a, b, None)?;
+        match self.tx.try_send(DispatchMsg::Req(item)) {
+            Ok(()) => Ok(ticket),
+            Err(TrySendError::Full(_)) => Err(ServiceError::Overloaded),
+            Err(TrySendError::Disconnected(_)) => Err(ServiceError::Shutdown),
         }
     }
 
-    /// Non-blocking f32 submit: `Ok(None)` when the queue is full.
-    pub fn try_submit(
-        &self,
-        op: OpKind,
-        a: f32,
-        b: f32,
-    ) -> Result<Option<mpsc::Receiver<Response>>> {
+    /// Non-blocking f32 submit: [`ServiceError::Overloaded`] when full.
+    pub fn try_submit(&self, op: OpKind, a: f32, b: f32) -> Result<Ticket, ServiceError> {
         self.try_submit_value(op, Value::F32(a), Value::F32(b))
     }
 
+    fn check_batch(
+        &self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+    ) -> Result<(), ServiceError> {
+        if a.is_empty() {
+            return Err(ServiceError::Rejected { reason: "empty batch".into() });
+        }
+        match op {
+            OpKind::Divide if b.len() != a.len() => {
+                return Err(ServiceError::Rejected {
+                    reason: format!(
+                        "divide needs matching operand planes ({} vs {})",
+                        a.len(),
+                        b.len()
+                    ),
+                });
+            }
+            OpKind::Sqrt | OpKind::Rsqrt if !b.is_empty() => {
+                return Err(ServiceError::Rejected {
+                    reason: format!("{} takes one operand plane", op.label()),
+                });
+            }
+            _ => {}
+        }
+        self.check_supported(op, format)
+    }
+
+    fn submit_batch_inner(
+        &self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+        deadline: Option<Duration>,
+    ) -> Result<BatchTicket, ServiceError> {
+        self.check_batch(op, format, a, b)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (item, ticket) =
+            WorkItem::group(id, op, format, a, b, deadline.map(|d| Instant::now() + d));
+        self.send(item)?;
+        Ok(ticket)
+    }
+
+    /// Vectored submission: a whole operand plane (raw `format` words)
+    /// as **one** queue entry with **one** completion slot. The group
+    /// enters the router pre-formed — batch locality is preserved, not
+    /// re-discovered — and is split only at executable-ladder
+    /// boundaries. `b` is the divisor plane for divide (same length as
+    /// `a`) and must be empty for unary ops.
+    pub fn submit_batch(
+        &self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+    ) -> Result<BatchTicket, ServiceError> {
+        self.submit_batch_inner(op, format, a, b, None)
+    }
+
+    /// [`Self::submit_batch`] with a completion deadline covering the
+    /// whole group.
+    pub fn submit_batch_deadline(
+        &self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+        deadline: Duration,
+    ) -> Result<BatchTicket, ServiceError> {
+        self.submit_batch_inner(op, format, a, b, Some(deadline))
+    }
+
     /// Convenience: blocking round-trip divide (f32).
-    pub fn divide(&self, n: f32, d: f32) -> Result<f32> {
-        Ok(self.submit(OpKind::Divide, n, d)?.recv()?.value.f32())
+    pub fn divide(&self, n: f32, d: f32) -> Result<f32, ServiceError> {
+        Ok(self.submit(OpKind::Divide, n, d)?.wait()?.value.f32())
     }
 
     /// Convenience: blocking round-trip sqrt (f32).
-    pub fn sqrt(&self, x: f32) -> Result<f32> {
-        Ok(self.submit(OpKind::Sqrt, x, 1.0)?.recv()?.value.f32())
+    pub fn sqrt(&self, x: f32) -> Result<f32, ServiceError> {
+        Ok(self.submit(OpKind::Sqrt, x, 1.0)?.wait()?.value.f32())
     }
 
     /// Convenience: blocking round-trip rsqrt (f32).
-    pub fn rsqrt(&self, x: f32) -> Result<f32> {
-        Ok(self.submit(OpKind::Rsqrt, x, 1.0)?.recv()?.value.f32())
+    pub fn rsqrt(&self, x: f32) -> Result<f32, ServiceError> {
+        Ok(self.submit(OpKind::Rsqrt, x, 1.0)?.wait()?.value.f32())
     }
 
     /// Convenience: blocking round-trip divide in any format (operands
     /// encoded from f64 with round-to-nearest-even, result decoded
     /// exactly).
-    pub fn divide_in(&self, format: FormatKind, n: f64, d: f64) -> Result<f64> {
-        let rx = self.submit_value(
+    pub fn divide_in(&self, format: FormatKind, n: f64, d: f64) -> Result<f64, ServiceError> {
+        let t = self.submit_value(
             OpKind::Divide,
             Value::from_f64(format, n),
             Value::from_f64(format, d),
         )?;
-        Ok(rx.recv()?.value.to_f64())
+        Ok(t.wait()?.value.to_f64())
     }
 
     /// Convenience: blocking round-trip sqrt in any format.
-    pub fn sqrt_in(&self, format: FormatKind, x: f64) -> Result<f64> {
-        let rx =
+    pub fn sqrt_in(&self, format: FormatKind, x: f64) -> Result<f64, ServiceError> {
+        let t =
             self.submit_value(OpKind::Sqrt, Value::from_f64(format, x), Value::one(format))?;
-        Ok(rx.recv()?.value.to_f64())
+        Ok(t.wait()?.value.to_f64())
     }
 
     /// Convenience: blocking round-trip rsqrt in any format.
-    pub fn rsqrt_in(&self, format: FormatKind, x: f64) -> Result<f64> {
-        let rx =
+    pub fn rsqrt_in(&self, format: FormatKind, x: f64) -> Result<f64, ServiceError> {
+        let t =
             self.submit_value(OpKind::Rsqrt, Value::from_f64(format, x), Value::one(format))?;
-        Ok(rx.recv()?.value.to_f64())
+        Ok(t.wait()?.value.to_f64())
     }
 }
 
@@ -183,61 +304,90 @@ pub struct FpuService {
 
 impl FpuService {
     /// Start the service. `make_executor` is called once on the caller
-    /// thread (to validate the configuration and read the batch ladder)
-    /// and once *inside each worker thread* — executors are not `Send`
-    /// (the PJRT client wraps thread-local FFI state), so each worker
-    /// owns an executor it built itself: one "divider unit" per worker.
+    /// thread (capability negotiation: the probe's [`BackendCaps`] are
+    /// kept for the life of the service) and once *inside each worker
+    /// thread* — executors are not `Send` (the PJRT client wraps
+    /// thread-local FFI state), so each worker owns an executor it built
+    /// itself: one "divider unit" per worker. Any worker whose factory
+    /// fails makes `start` return that error — no silently dead
+    /// workers.
     pub fn start<F>(config: ServiceConfig, make_executor: F) -> Result<Self>
     where
         F: Fn() -> Result<Box<dyn Executor>> + Send + Sync + 'static,
     {
         assert!(config.workers >= 1, "need at least one worker");
         let metrics = Arc::new(Metrics::new());
+        let pool = PlanePool::new();
         let (tx, rx) = mpsc::sync_channel::<DispatchMsg>(config.queue_depth);
 
-        // probe executor: validates the factory up front + batch ladders
-        let probe = make_executor()?;
-        let mut ladders: Vec<(OpKind, FormatKind, Vec<usize>)> = Vec::new();
-        for &op in &OpKind::ALL {
-            for &format in &FormatKind::ALL {
-                ladders.push((op, format, probe.batch_ladder(op, format)));
-            }
-        }
-        drop(probe);
-        let batcher = DynamicBatcher::new(config.batcher, move |op, format| {
-            ladders
-                .iter()
-                .find(|(o, f, _)| *o == op && *f == format)
-                .map(|(_, _, l)| l.clone())
-                .unwrap_or_default()
-        });
+        // probe executor: validates the factory and negotiates the
+        // capability table (support + batch ladders, one call)
+        let caps =
+            Arc::new(make_executor().context("probing executor capabilities")?.capabilities());
+        let batcher = DynamicBatcher::new(config.batcher, &caps);
 
         // worker channels: dispatcher round-robins batches across them
         let make_executor = Arc::new(make_executor);
+        let (init_tx, init_rx) = mpsc::channel::<(usize, std::result::Result<(), String>)>();
         let mut batch_txs = Vec::new();
         let mut workers = Vec::new();
         for w in 0..config.workers {
             let (btx, brx) = mpsc::sync_channel::<Batch>(4);
             batch_txs.push(btx);
             let metrics = metrics.clone();
+            let pool = pool.clone();
             let factory = make_executor.clone();
+            let init_tx = init_tx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("fpu-worker-{w}"))
                     .spawn(move || match factory() {
-                        Ok(executor) => worker_loop(brx, executor, metrics),
-                        Err(e) => eprintln!("fpu-worker-{w}: executor init failed: {e:#}"),
+                        Ok(executor) => {
+                            let _ = init_tx.send((w, Ok(())));
+                            drop(init_tx);
+                            worker_loop(brx, executor, metrics, pool);
+                        }
+                        Err(e) => {
+                            let _ = init_tx.send((w, Err(format!("{e:#}"))));
+                        }
                     })
                     .expect("spawn worker"),
             );
         }
+        drop(init_tx);
 
-        let dispatcher = std::thread::Builder::new()
-            .name("fpu-dispatcher".into())
-            .spawn(move || dispatcher_loop(rx, batcher, batch_txs, config.poll))
-            .expect("spawn dispatcher");
+        // fail-fast: every worker reports its init before we go live
+        for _ in 0..config.workers {
+            match init_rx.recv() {
+                Ok((_, Ok(()))) => {}
+                Ok((w, Err(msg))) => {
+                    drop(batch_txs); // close channels -> live workers exit
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    bail!("fpu-worker-{w}: executor init failed: {msg}");
+                }
+                Err(_) => {
+                    drop(batch_txs);
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    bail!("a worker exited before reporting executor init");
+                }
+            }
+        }
 
-        let handle = ServiceHandle { tx: tx.clone(), next_id: Arc::new(AtomicU64::new(0)) };
+        let dispatcher = {
+            let metrics = metrics.clone();
+            let pool = pool.clone();
+            std::thread::Builder::new()
+                .name("fpu-dispatcher".into())
+                .spawn(move || dispatcher_loop(rx, batcher, batch_txs, config.poll, metrics, pool))
+                .expect("spawn dispatcher")
+        };
+
+        let handle =
+            ServiceHandle { tx: tx.clone(), next_id: Arc::new(AtomicU64::new(0)), caps };
         Ok(Self {
             handle,
             metrics,
@@ -255,6 +405,11 @@ impl FpuService {
     /// Live metrics.
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// The backend's negotiated capability table.
+    pub fn capabilities(&self) -> &BackendCaps {
+        self.handle.capabilities()
     }
 
     /// Graceful shutdown: drains queued work, joins all threads.
@@ -281,20 +436,47 @@ impl Drop for FpuService {
     }
 }
 
+/// Hand one batch to a live worker, skipping closed channels (a worker
+/// whose thread died). With every worker gone the batch is failed with
+/// a typed [`ServiceError::Shutdown`] instead of vanishing.
+fn dispatch(
+    mut batch: Batch,
+    live: &mut Vec<SyncSender<Batch>>,
+    next_worker: &mut usize,
+    metrics: &Metrics,
+    pool: &PlanePool,
+) {
+    while !live.is_empty() {
+        let i = *next_worker % live.len();
+        *next_worker += 1;
+        // round-robin; a full worker queue applies backpressure here
+        match live[i].send(batch) {
+            Ok(()) => return,
+            Err(mpsc::SendError(returned)) => {
+                batch = returned;
+                live.remove(i); // dead worker: never pick it again
+            }
+        }
+    }
+    metrics.record_error(batch.op, batch.format, batch.live() as u64);
+    for item in batch.items.drain(..) {
+        item.fail(ServiceError::Shutdown);
+    }
+    pool.give(std::mem::take(&mut batch.a));
+    pool.give(std::mem::take(&mut batch.b));
+}
+
 fn dispatcher_loop(
     rx: Receiver<DispatchMsg>,
     batcher: DynamicBatcher,
     batch_txs: Vec<SyncSender<Batch>>,
     poll: Duration,
+    metrics: Arc<Metrics>,
+    pool: PlanePool,
 ) {
     let mut router = Router::new();
+    let mut live = batch_txs;
     let mut next_worker = 0usize;
-    let dispatch = |batch: Batch, next_worker: &mut usize| {
-        // round-robin; a full worker queue applies backpressure here
-        let tx = &batch_txs[*next_worker % batch_txs.len()];
-        *next_worker += 1;
-        let _ = tx.send(batch); // worker gone => requests drop, senders see err
-    };
     'outer: loop {
         // block for the first message (bounded by the poll tick) ...
         match rx.recv_timeout(poll) {
@@ -313,56 +495,75 @@ fn dispatcher_loop(
                 Err(_) => break,
             }
         }
-        for batch in batcher.ready_batches(&mut router, Instant::now()) {
-            dispatch(batch, &mut next_worker);
+        for batch in batcher.ready_batches(&mut router, Instant::now(), &pool, &metrics) {
+            dispatch(batch, &mut live, &mut next_worker, &metrics, &pool);
         }
     }
     // drain everything left
     while let Ok(DispatchMsg::Req(req)) = rx.try_recv() {
         router.route(req);
     }
-    for batch in batcher.flush_all(&mut router) {
-        dispatch(batch, &mut next_worker);
+    for batch in batcher.flush_all(&mut router, Instant::now(), &pool, &metrics) {
+        dispatch(batch, &mut live, &mut next_worker, &metrics, &pool);
     }
-    // dropping batch_txs closes worker channels -> workers exit
+    // dropping batch senders closes worker channels -> workers exit
 }
 
-fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, metrics: Arc<Metrics>) {
-    while let Ok(batch) = rx.recv() {
+fn worker_loop(
+    rx: Receiver<Batch>,
+    mut executor: Box<dyn Executor>,
+    metrics: Arc<Metrics>,
+    pool: PlanePool,
+) {
+    // both buffers persist across batches: the steady-state hot path
+    // performs no allocation in this loop (execute_into writes in place,
+    // operand planes go back to the pool)
+    let mut out: Vec<u64> = Vec::new();
+    let mut lat: Vec<(u64, usize)> = Vec::new();
+    while let Ok(mut batch) = rx.recv() {
+        out.clear();
+        out.resize(batch.padded, 0);
         let t0 = Instant::now();
-        let result = executor.execute(
+        let result = executor.execute_into(
             batch.op,
             batch.format,
             &batch.a,
             if batch.op == OpKind::Divide { Some(&batch.b) } else { None },
+            &mut out,
         );
         let exec_ns = t0.elapsed().as_nanos() as u64;
         match result {
-            Ok(values) => {
+            Ok(()) => {
                 let done = Instant::now();
-                let latencies: Vec<u64> = batch
-                    .requests
-                    .iter()
-                    .map(|req| done.duration_since(req.enqueued_at).as_nanos() as u64)
-                    .collect();
-                // record metrics BEFORE replying: once a client observes
+                lat.clear();
+                for item in &batch.items {
+                    lat.push((
+                        done.duration_since(item.enqueued_at).as_nanos() as u64,
+                        item.lanes(),
+                    ));
+                }
+                // record metrics BEFORE completing: once a client observes
                 // its response, the snapshot already includes it
-                metrics.record_batch(batch.op, batch.format, &latencies, exec_ns, batch.padded);
-                for (i, req) in batch.requests.iter().enumerate() {
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        value: Value::from_bits(batch.format, values[i]),
-                        latency_ns: latencies[i],
-                        batch_size: batch.padded,
-                    });
+                metrics.record_batch(batch.op, batch.format, &lat, exec_ns, batch.padded);
+                let mut off = 0usize;
+                for (k, item) in batch.items.drain(..).enumerate() {
+                    let lanes = item.lanes();
+                    item.complete(&out[off..off + lanes], lat[k].0, batch.padded);
+                    off += lanes;
                 }
             }
-            Err(_) => {
-                // fail the whole batch: drop reply senders (receivers see
-                // RecvError) and count the errors
-                metrics.record_error(batch.op, batch.format, batch.requests.len() as u64);
+            Err(e) => {
+                // fail the whole batch with the backend's message: every
+                // rider's ticket resolves to ExecFailed
+                metrics.record_error(batch.op, batch.format, batch.live() as u64);
+                let backend = format!("{e:#}");
+                for item in batch.items.drain(..) {
+                    item.fail(ServiceError::ExecFailed { backend: backend.clone() });
+                }
             }
         }
+        pool.give(std::mem::take(&mut batch.a));
+        pool.give(std::mem::take(&mut batch.b));
     }
 }
 
@@ -373,7 +574,7 @@ mod tests {
 
     fn quick_config() -> ServiceConfig {
         ServiceConfig {
-            batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(100) },
+            batcher: BatcherConfig::new(64, Duration::from_micros(100)),
             queue_depth: 1024,
             workers: 1,
             poll: Duration::from_micros(50),
@@ -403,14 +604,14 @@ mod tests {
             assert_eq!(h.sqrt_in(format, 81.0).unwrap(), 9.0, "{format}");
             assert_eq!(h.rsqrt_in(format, 4.0).unwrap(), 0.5, "{format}");
             // the response carries the request's format tag
-            let rx = h
+            let t = h
                 .submit_value(
                     OpKind::Divide,
                     Value::from_f64(format, 6.0),
                     Value::from_f64(format, 2.0),
                 )
                 .unwrap();
-            let resp = rx.recv().unwrap();
+            let resp = t.wait().unwrap();
             assert_eq!(resp.value.format(), format);
             assert_eq!(resp.value.to_f64(), 3.0);
         }
@@ -425,8 +626,23 @@ mod tests {
     fn mixed_format_operands_rejected() {
         let svc = FpuService::start(quick_config(), native).unwrap();
         let h = svc.handle();
-        let err = h.submit_value(OpKind::Divide, Value::F32(1.0), Value::F64(2.0));
-        assert!(err.is_err());
+        match h.submit_value(OpKind::Divide, Value::F32(1.0), Value::F64(2.0)) {
+            Err(ServiceError::Rejected { reason }) => {
+                assert!(reason.contains("format mismatch"), "{reason}");
+            }
+            other => panic!("expected Rejected, got {:?}", other.map(|t| t.id())),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn capabilities_visible_on_handle() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let caps = svc.handle().capabilities().clone();
+        assert_eq!(caps.backend(), "native-fixed-point");
+        assert!(caps.supports(OpKind::Divide, FormatKind::BF16));
+        assert_eq!(caps.ladder(OpKind::Divide, FormatKind::F32), &[64, 256, 1024]);
+        assert_eq!(svc.capabilities().backend(), "native-fixed-point");
         svc.shutdown();
     }
 
@@ -457,14 +673,14 @@ mod tests {
     fn batches_actually_form() {
         // long wait + many pipelined submissions => multi-request batches
         let mut cfg = quick_config();
-        cfg.batcher.max_wait = Duration::from_millis(5);
+        cfg.batcher = BatcherConfig::new(64, Duration::from_millis(5));
         let svc = FpuService::start(cfg, native).unwrap();
         let h = svc.handle();
-        let rxs: Vec<_> =
+        let tickets: Vec<_> =
             (0..200).map(|i| h.submit(OpKind::Divide, i as f32, 1.0).unwrap()).collect();
         let mut max_batch = 0usize;
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv().unwrap();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let resp = t.wait().unwrap();
             assert_eq!(resp.value.f32(), i as f32);
             max_batch = max_batch.max(resp.batch_size);
         }
@@ -473,16 +689,58 @@ mod tests {
     }
 
     #[test]
+    fn vectored_submission_round_trip() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let h = svc.handle();
+        let n: Vec<u64> = (1..=100u32).map(|i| ((3 * i) as f32).to_bits() as u64).collect();
+        let d: Vec<u64> = (1..=100u32).map(|_| 3.0f32.to_bits() as u64).collect();
+        let ticket = h.submit_batch(OpKind::Divide, FormatKind::F32, &n, &d).unwrap();
+        assert_eq!(ticket.lanes(), 100);
+        let resp = ticket.wait().unwrap();
+        assert_eq!(resp.len(), 100);
+        for (i, v) in resp.values().enumerate() {
+            assert_eq!(v.f32(), (i + 1) as f32, "lane {i}");
+        }
+        // unary vectored path
+        let x: Vec<u64> = [4.0f32, 9.0, 16.0].iter().map(|v| v.to_bits() as u64).collect();
+        let resp = h.submit_batch(OpKind::Sqrt, FormatKind::F32, &x, &[]).unwrap().wait().unwrap();
+        assert_eq!(resp.bits.len(), 3);
+        assert_eq!(resp.value(0).f32(), 2.0);
+        assert_eq!(resp.value(2).f32(), 4.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn vectored_submission_validates_arity() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let h = svc.handle();
+        let a = [1.0f32.to_bits() as u64];
+        assert!(matches!(
+            h.submit_batch(OpKind::Divide, FormatKind::F32, &a, &[]),
+            Err(ServiceError::Rejected { .. })
+        ));
+        assert!(matches!(
+            h.submit_batch(OpKind::Sqrt, FormatKind::F32, &a, &a),
+            Err(ServiceError::Rejected { .. })
+        ));
+        assert!(matches!(
+            h.submit_batch(OpKind::Sqrt, FormatKind::F32, &[], &[]),
+            Err(ServiceError::Rejected { .. })
+        ));
+        svc.shutdown();
+    }
+
+    #[test]
     fn shutdown_drains_pending() {
         let mut cfg = quick_config();
-        cfg.batcher.max_wait = Duration::from_secs(10); // only drain flushes
+        cfg.batcher = BatcherConfig::new(64, Duration::from_secs(10)); // only drain flushes
         let svc = FpuService::start(cfg, native).unwrap();
         let h = svc.handle();
-        let rxs: Vec<_> =
+        let tickets: Vec<_> =
             (0..10).map(|i| h.submit(OpKind::Sqrt, (i * i) as f32, 1.0).unwrap()).collect();
         svc.shutdown(); // must flush the waiting batch
-        for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap().value.f32(), i as f32);
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.wait().unwrap().value.f32(), i as f32);
         }
     }
 
@@ -491,7 +749,7 @@ mod tests {
         let svc = FpuService::start(quick_config(), native).unwrap();
         let h = svc.handle();
         svc.shutdown();
-        assert!(h.divide(1.0, 1.0).is_err());
+        assert_eq!(h.divide(1.0, 1.0).unwrap_err(), ServiceError::Shutdown);
     }
 
     #[test]
@@ -500,43 +758,86 @@ mod tests {
         cfg.workers = 4;
         let svc = FpuService::start(cfg, native).unwrap();
         let h = svc.handle();
-        let rxs: Vec<_> =
+        let tickets: Vec<_> =
             (1..=500).map(|i| h.submit(OpKind::Divide, (2 * i) as f32, 2.0).unwrap()).collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap().value.f32(), (i + 1) as f32);
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.wait().unwrap().value.f32(), (i + 1) as f32);
         }
         svc.shutdown();
     }
 
     #[test]
-    fn failing_executor_reports_errors() {
+    fn failing_executor_reports_typed_errors() {
         struct Failing;
         impl Executor for Failing {
-            fn batch_ladder(&self, _op: OpKind, _format: FormatKind) -> Vec<usize> {
-                vec![64]
+            fn capabilities(&self) -> BackendCaps {
+                BackendCaps::uniform("failing", &[64])
             }
-            fn execute(
+            fn execute_into(
                 &mut self,
                 _: OpKind,
                 _: FormatKind,
                 _: &[u64],
                 _: Option<&[u64]>,
-            ) -> Result<Vec<u64>> {
+                _: &mut [u64],
+            ) -> Result<()> {
                 bail!("injected failure")
-            }
-            fn name(&self) -> &'static str {
-                "failing"
             }
         }
         let svc =
             FpuService::start(quick_config(), || Ok(Box::new(Failing) as Box<dyn Executor>))
                 .unwrap();
         let h = svc.handle();
-        let rx = h.submit(OpKind::Divide, 1.0, 1.0).unwrap();
-        // reply sender dropped on failure -> RecvError
-        assert!(rx.recv().is_err());
+        let t = h.submit(OpKind::Divide, 1.0, 1.0).unwrap();
+        // the backend's message reaches the client, typed
+        match t.wait() {
+            Err(ServiceError::ExecFailed { backend }) => {
+                assert!(backend.contains("injected failure"), "{backend}");
+            }
+            other => panic!("expected ExecFailed, got {other:?}"),
+        }
         let snap = svc.metrics().snapshot();
         assert_eq!(snap.total_errors(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unsupported_pair_rejected_at_submit() {
+        // a backend that only serves f32 divide: everything else is
+        // rejected before queueing, with the backend named
+        struct DivOnly(NativeExecutor);
+        impl Executor for DivOnly {
+            fn capabilities(&self) -> BackendCaps {
+                BackendCaps::new("div-only").with(OpKind::Divide, FormatKind::F32, &[64])
+            }
+            fn execute_into(
+                &mut self,
+                op: OpKind,
+                format: FormatKind,
+                a: &[u64],
+                b: Option<&[u64]>,
+                out: &mut [u64],
+            ) -> Result<()> {
+                self.0.execute_into(op, format, a, b, out)
+            }
+        }
+        let svc = FpuService::start(quick_config(), || {
+            Ok(Box::new(DivOnly(NativeExecutor::with_defaults())) as Box<dyn Executor>)
+        })
+        .unwrap();
+        let h = svc.handle();
+        assert_eq!(h.divide(6.0, 2.0).unwrap(), 3.0);
+        match h.sqrt(4.0) {
+            Err(ServiceError::Rejected { reason }) => {
+                assert!(reason.contains("div-only"), "{reason}");
+                assert!(reason.contains("sqrt"), "{reason}");
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert!(matches!(
+            h.divide_in(FormatKind::F64, 1.0, 1.0),
+            Err(ServiceError::Rejected { .. })
+        ));
         svc.shutdown();
     }
 }

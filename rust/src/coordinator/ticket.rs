@@ -1,0 +1,341 @@
+//! Tickets: the client-side completion handles of the v2 request plane.
+//!
+//! A [`Ticket`] (one lane) or [`BatchTicket`] (a vectored submission's
+//! worth of lanes) is backed by one shared [`TicketCore`] — a
+//! mutex/condvar completion slot allocated **once per submit call**, not
+//! once per lane, and written in place by the executing worker. This
+//! replaces the v1 per-request `mpsc::channel`: no channel allocation on
+//! the hot path, and failures arrive as typed
+//! [`ServiceError`](super::request::ServiceError)s instead of a dropped
+//! sender.
+//!
+//! A batch submission's lanes may be executed across several executor
+//! batches (the dynamic batcher splits oversized groups at ladder
+//! boundaries); each completed range fills its slice of the slot and the
+//! final range wakes the waiter.
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::formats::{FormatKind, Value};
+
+use super::request::{Response, ServiceError};
+
+/// Result lanes: a single word inline, or a plane for batch tickets
+/// (no `Vec` for the single-request fast path).
+#[derive(Debug)]
+enum LaneStore {
+    One(u64),
+    Many(Vec<u64>),
+}
+
+#[derive(Debug)]
+struct CoreState {
+    store: LaneStore,
+    /// Lanes resolved so far (completed or failed).
+    filled: usize,
+    /// First failure, if any — the whole ticket then errors.
+    err: Option<ServiceError>,
+    /// Worst end-to-end latency over the ticket's lanes (ns).
+    latency_ns: u64,
+    /// Largest padded executor batch any lane rode in.
+    batch_size: usize,
+}
+
+/// The shared completion slot behind [`Ticket`] / [`BatchTicket`]: one
+/// allocation per submit call, holding every result lane.
+#[derive(Debug)]
+pub(crate) struct TicketCore {
+    lanes: usize,
+    state: Mutex<CoreState>,
+    cv: Condvar,
+}
+
+impl TicketCore {
+    /// New slot expecting `lanes >= 1` result lanes.
+    pub(crate) fn new(lanes: usize) -> Arc<Self> {
+        assert!(lanes >= 1, "a ticket needs at least one lane");
+        let store =
+            if lanes == 1 { LaneStore::One(0) } else { LaneStore::Many(vec![0; lanes]) };
+        Arc::new(Self {
+            lanes,
+            state: Mutex::new(CoreState {
+                store,
+                filled: 0,
+                err: None,
+                latency_ns: 0,
+                batch_size: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Fill result lanes `[base, base + values.len())`; wakes the waiter
+    /// once every lane of the ticket is resolved.
+    pub(crate) fn complete_range(
+        &self,
+        base: usize,
+        values: &[u64],
+        latency_ns: u64,
+        batch_size: usize,
+    ) {
+        let mut s = self.state.lock().expect("ticket lock poisoned");
+        match &mut s.store {
+            LaneStore::One(slot) => *slot = values[0],
+            LaneStore::Many(v) => v[base..base + values.len()].copy_from_slice(values),
+        }
+        s.filled += values.len();
+        if latency_ns > s.latency_ns {
+            s.latency_ns = latency_ns;
+        }
+        if batch_size > s.batch_size {
+            s.batch_size = batch_size;
+        }
+        if s.filled >= self.lanes {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Resolve `lanes` lanes as failed. The first recorded error wins
+    /// (a ticket either yields every value or one typed error).
+    pub(crate) fn fail_range(&self, lanes: usize, err: ServiceError) {
+        let mut s = self.state.lock().expect("ticket lock poisoned");
+        s.filled += lanes;
+        if s.err.is_none() {
+            s.err = Some(err);
+        }
+        if s.filled >= self.lanes {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait_done(&self) -> MutexGuard<'_, CoreState> {
+        let mut s = self.state.lock().expect("ticket lock poisoned");
+        while s.filled < self.lanes {
+            s = self.cv.wait(s).expect("ticket lock poisoned");
+        }
+        s
+    }
+
+    fn poll_done(&self) -> Option<MutexGuard<'_, CoreState>> {
+        let s = self.state.lock().expect("ticket lock poisoned");
+        if s.filled < self.lanes {
+            None
+        } else {
+            Some(s)
+        }
+    }
+}
+
+/// Completion handle for one submitted request.
+#[derive(Debug)]
+pub struct Ticket {
+    core: Arc<TicketCore>,
+    id: u64,
+    format: FormatKind,
+}
+
+impl Ticket {
+    pub(crate) fn new(core: Arc<TicketCore>, id: u64, format: FormatKind) -> Self {
+        Self { core, id, format }
+    }
+
+    /// The request id this ticket tracks.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The format the response will be tagged with.
+    pub fn format(&self) -> FormatKind {
+        self.format
+    }
+
+    fn resolve(s: &CoreState, id: u64, format: FormatKind) -> Result<Response, ServiceError> {
+        if let Some(e) = &s.err {
+            return Err(e.clone());
+        }
+        let bits = match &s.store {
+            LaneStore::One(v) => *v,
+            LaneStore::Many(v) => v[0],
+        };
+        Ok(Response {
+            id,
+            value: Value::from_bits(format, bits),
+            latency_ns: s.latency_ns,
+            batch_size: s.batch_size,
+        })
+    }
+
+    /// Block until the request resolves: the [`Response`] on success, a
+    /// typed [`ServiceError`] otherwise.
+    pub fn wait(self) -> Result<Response, ServiceError> {
+        let s = self.core.wait_done();
+        Self::resolve(&s, self.id, self.format)
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Response, ServiceError>> {
+        self.core.poll_done().map(|s| Self::resolve(&s, self.id, self.format))
+    }
+}
+
+/// Completion handle for one vectored submission
+/// ([`ServiceHandle::submit_batch`](super::service::ServiceHandle::submit_batch)).
+#[derive(Debug)]
+pub struct BatchTicket {
+    core: Arc<TicketCore>,
+    id: u64,
+    format: FormatKind,
+    lanes: usize,
+}
+
+impl BatchTicket {
+    pub(crate) fn new(core: Arc<TicketCore>, id: u64, format: FormatKind, lanes: usize) -> Self {
+        Self { core, id, format, lanes }
+    }
+
+    /// The group id this ticket tracks.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Number of result lanes the ticket will yield.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// The format every result lane is tagged with.
+    pub fn format(&self) -> FormatKind {
+        self.format
+    }
+
+    /// Non-blocking poll: `true` once every lane is resolved.
+    pub fn is_done(&self) -> bool {
+        self.core.poll_done().is_some()
+    }
+
+    /// Block until every lane resolves. Lanes keep submission order; a
+    /// failure of any lane fails the whole ticket with the first error.
+    pub fn wait(self) -> Result<BatchResponse, ServiceError> {
+        let mut s = self.core.wait_done();
+        if let Some(e) = &s.err {
+            return Err(e.clone());
+        }
+        let bits = match &mut s.store {
+            LaneStore::One(v) => vec![*v],
+            LaneStore::Many(v) => std::mem::take(v),
+        };
+        Ok(BatchResponse {
+            id: self.id,
+            format: self.format,
+            bits,
+            latency_ns: s.latency_ns,
+            batch_size: s.batch_size,
+        })
+    }
+}
+
+/// Results of a vectored submission, in submission order.
+#[derive(Clone, Debug)]
+pub struct BatchResponse {
+    /// Echoes the group id.
+    pub id: u64,
+    /// Format every lane is encoded in.
+    pub format: FormatKind,
+    /// Raw result words, one per submitted lane.
+    pub bits: Vec<u64>,
+    /// Worst end-to-end latency across the group's lanes (ns).
+    pub latency_ns: u64,
+    /// Largest padded executor batch any lane rode in.
+    pub batch_size: usize,
+}
+
+impl BatchResponse {
+    /// Number of result lanes.
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// True when the response carries no lanes (cannot happen for a
+    /// successfully submitted batch; provided for completeness).
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// One lane as a format-tagged [`Value`].
+    pub fn value(&self, lane: usize) -> Value {
+        Value::from_bits(self.format, self.bits[lane])
+    }
+
+    /// All lanes as format-tagged [`Value`]s, in submission order.
+    pub fn values(&self) -> impl Iterator<Item = Value> + '_ {
+        let format = self.format;
+        self.bits.iter().map(move |&w| Value::from_bits(format, w))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_lane_ticket_round_trip() {
+        let core = TicketCore::new(1);
+        let ticket = Ticket::new(core.clone(), 7, FormatKind::F32);
+        assert!(ticket.try_wait().is_none());
+        core.complete_range(0, &[2.5f32.to_bits() as u64], 1234, 64);
+        let resp = ticket.try_wait().expect("done").expect("ok");
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.value.f32(), 2.5);
+        assert_eq!(resp.latency_ns, 1234);
+        assert_eq!(resp.batch_size, 64);
+    }
+
+    #[test]
+    fn batch_ticket_fills_across_ranges() {
+        let core = TicketCore::new(4);
+        let ticket = BatchTicket::new(core.clone(), 9, FormatKind::F64, 4);
+        assert!(!ticket.is_done());
+        core.complete_range(0, &[1, 2], 100, 64);
+        assert!(!ticket.is_done());
+        core.complete_range(2, &[3, 4], 300, 256);
+        assert!(ticket.is_done());
+        let resp = ticket.wait().expect("ok");
+        assert_eq!(resp.bits, vec![1, 2, 3, 4]);
+        assert_eq!(resp.latency_ns, 300); // worst range wins
+        assert_eq!(resp.batch_size, 256);
+        assert_eq!(resp.len(), 4);
+    }
+
+    #[test]
+    fn failure_of_any_range_fails_the_ticket() {
+        let core = TicketCore::new(3);
+        let ticket = BatchTicket::new(core.clone(), 1, FormatKind::F32, 3);
+        core.complete_range(0, &[11], 10, 64);
+        core.fail_range(2, ServiceError::ExecFailed { backend: "boom".into() });
+        match ticket.wait() {
+            Err(ServiceError::ExecFailed { backend }) => assert_eq!(backend, "boom"),
+            other => panic!("expected ExecFailed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_blocks_until_completion_from_another_thread() {
+        let core = TicketCore::new(1);
+        let ticket = Ticket::new(core.clone(), 0, FormatKind::F32);
+        let filler = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            core.complete_range(0, &[1.0f32.to_bits() as u64], 42, 1);
+        });
+        assert_eq!(ticket.wait().expect("ok").value.f32(), 1.0);
+        filler.join().unwrap();
+    }
+
+    #[test]
+    fn first_error_wins() {
+        let core = TicketCore::new(2);
+        let ticket = BatchTicket::new(core.clone(), 0, FormatKind::F16, 2);
+        core.fail_range(1, ServiceError::Deadline);
+        core.fail_range(1, ServiceError::Shutdown);
+        assert_eq!(ticket.wait().unwrap_err(), ServiceError::Deadline);
+    }
+}

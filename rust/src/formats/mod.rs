@@ -28,23 +28,29 @@
 //! # Geometry -> paper hardware mapping
 //!
 //! Each format instantiates the paper's datapath at a different word
-//! width. With the shared `p = 10` reciprocal/rsqrt ROM (1024 entries,
-//! `p+2 = 12` output bits), the per-format derivation is:
+//! width **and ROM size** — `table_p` is part of the per-format
+//! configuration, so a format only pays for the lookup accuracy its
+//! mantissa actually needs. The per-format derivation is:
 //!
-//! | format | mant bits | datapath frac | multiplier width | steps (bound) |
-//! |--------|-----------|---------------|------------------|---------------|
-//! | bf16   | 7         | 20 (13 guard) | 22 x 22          | 1 (0)         |
-//! | f16    | 10        | 20 (10 guard) | 22 x 22          | 2 (1)         |
-//! | f32    | 23        | 30 ( 7 guard) | 32 x 32          | 3 (2)         |
-//! | f64    | 52        | 58 ( 6 guard) | 60 x 60          | 4 (3)         |
+//! | format | mant bits | table_p (ROM)     | datapath frac | multiplier width | steps (bound) |
+//! |--------|-----------|-------------------|---------------|------------------|---------------|
+//! | bf16   | 7         |  5 (32 entries)   | 20 (13 guard) | 22 x 22          | 2 (1)         |
+//! | f16    | 10        | 10 (1024 entries) | 20 (10 guard) | 22 x 22          | 2 (1)         |
+//! | f32    | 23        | 10 (1024 entries) | 30 ( 7 guard) | 32 x 32          | 3 (2)         |
+//! | f64    | 52        | 10 (1024 entries) | 58 ( 6 guard) | 60 x 60          | 4 (3)         |
 //!
 //! "multiplier width" is `frac + 2` (the Q2.frac datapath word — the
 //! paper's MULT 1 / MULT 2 operand width); "steps" is the programmed
 //! logic-block counter, the paper's §III knob, set one above the
 //! analytic bound from [`Config::steps_for_accuracy`] (quadratic
 //! convergence from the table error `1.5 * 2^-(p+1)`) so rounding noise
-//! in the narrowed products never surfaces. [`FormatKind::datapath_config`]
-//! encodes this table.
+//! in the narrowed products never surfaces. bf16's 8-bit result only
+//! needs a p=5 seed (error `1.5 * 2^-6`, squared once to `5.5e-4`,
+//! twice to `3e-7` — far under its half-ulp `2^-9`), so its ROM shrinks
+//! 32x in entry count (~55x in bits vs the p=10 table) at the cost of
+//! one extra refinement step — the paper's area-vs-steps trade applied
+//! across the format plane. [`FormatKind::datapath_config`] encodes
+//! this table; `crate::area::format_rom_rows` prices it.
 
 use crate::arith::fixed::{narrow_u128, Fixed, Rounding};
 use crate::goldschmidt::config::Config;
@@ -147,14 +153,18 @@ impl FormatKind {
         }
     }
 
-    /// The paper's datapath instantiated for this format: shared p=10
-    /// ROM, per-format fraction width (mantissa + guard bits) and
-    /// refinement count (one above the analytic
+    /// The paper's datapath instantiated for this format: per-format
+    /// ROM width (`table_p`), fraction width (mantissa + guard bits)
+    /// and refinement count (one above the analytic
     /// [`Config::steps_for_accuracy`] bound — see the module table).
+    /// bf16 reaches its accuracy bound from a p=5 seed, so its ROM is
+    /// 32 entries instead of 1024.
     pub fn datapath_config(self) -> Config {
         match self {
             FormatKind::F16 => Config::default().with_frac(20).with_steps(2),
-            FormatKind::BF16 => Config::default().with_frac(20).with_steps(1),
+            FormatKind::BF16 => {
+                Config::default().with_table_p(5).with_frac(20).with_steps(2)
+            }
             FormatKind::F32 => Config::default(),
             FormatKind::F64 => Config::double(),
         }
@@ -773,6 +783,22 @@ mod tests {
             // programmed steps at least the analytic bound
             let bound = Config::steps_for_accuracy(cfg.table_p, kind.mant_bits() + 1);
             assert!(cfg.steps >= bound, "{kind}: {} < {bound}", cfg.steps);
+        }
+    }
+
+    #[test]
+    fn bf16_rom_is_right_sized() {
+        // the per-format ROM sizing item: bf16 runs a p=5 seed table
+        // (32 entries vs 1024) and still clears its accuracy bound
+        let cfg = FormatKind::BF16.datapath_config();
+        assert_eq!(cfg.table_p, 5);
+        assert_eq!(1u64 << cfg.table_p, 32);
+        // the seed error squared through the programmed steps lands far
+        // below bf16's half-ulp (2^-9)
+        assert!(cfg.predicted_error() < 2f64.powi(-9) / 4.0, "{}", cfg.predicted_error());
+        // every other format keeps the paper's p=10 table
+        for kind in [FormatKind::F16, FormatKind::F32, FormatKind::F64] {
+            assert_eq!(kind.datapath_config().table_p, 10, "{kind}");
         }
     }
 }

@@ -5,16 +5,22 @@
 //! as a three-layer stack:
 //!
 //! * **Layer 3 (this crate)** — the paper's hardware contribution as a
-//!   cycle-accurate simulator ([`sim`]) with an area model ([`area`]),
-//!   plus the bit-accurate arithmetic substrate ([`arith`], [`tables`],
-//!   [`goldschmidt`], [`baselines`]), the multi-precision format plane
-//!   ([`formats`]: f16 / bf16 / f32 / f64 geometry, pack/unpack, and
-//!   format-tagged values), the batched SoA serving kernels ([`kernel`],
-//!   monomorphized per format) and an FPU-service coordinator
-//!   ([`coordinator`]) that serves batched divide/sqrt/rsqrt requests in
-//!   any supported format through the native batch kernels or
-//!   AOT-compiled XLA executables ([`runtime`], the latter behind the
-//!   non-default `pjrt` feature).
+//!   cycle-accurate simulator ([`sim`]) with an area model ([`area`],
+//!   including per-format ROM sizing), plus the bit-accurate arithmetic
+//!   substrate ([`arith`], [`tables`], [`goldschmidt`], [`baselines`]),
+//!   the multi-precision format plane ([`formats`]: f16 / bf16 / f32 /
+//!   f64 geometry, pack/unpack, format-tagged values, and per-format
+//!   datapath configs down to ROM width), the batched SoA serving
+//!   kernels ([`kernel`], monomorphized per format) and an FPU-service
+//!   coordinator ([`coordinator`]) serving batched divide/sqrt/rsqrt
+//!   through the v2 ticketed request plane: shared-slot completion
+//!   tickets (no channel per request), vectored `submit_batch`
+//!   group submissions, optional per-request deadlines with counted
+//!   shedding, and a typed `ServiceError` for every failure. Backends
+//!   plug in through a capability-negotiated executor contract
+//!   ([`runtime`]: `BackendCaps` + allocation-free `execute_into`),
+//!   implemented by the native batch kernels and by AOT-compiled XLA
+//!   executables (behind the non-default `pjrt` feature).
 //! * **Layer 2** — `python/compile/model.py`: jax graphs, lowered once
 //!   to HLO text under `artifacts/`.
 //! * **Layer 1** — `python/compile/kernels/`: the Goldschmidt iteration

@@ -51,6 +51,10 @@ COMMANDS:
              --requests N --backend pjrt|native --workers W
              --format f16|bf16|f32|f64 (native backend serves all four)
              --batch MAX --wait-us US --rate R --artifacts DIR
+             --deadline-us US (shed requests older than US; 0 = off)
+             --<fmt>-wait-us US / --<fmt>-batch MAX (per-format policy
+             override, e.g. --f16-wait-us 25 --f64-batch 2048; with the
+             default wait, f16/bf16 queues run a 4x tighter age budget)
   version    print version
 ";
 
@@ -196,6 +200,21 @@ fn cmd_area(args: &Args) -> Result<()> {
         cmp.saved(),
         100.0 * cmp.saved_fraction()
     );
+    let mut t = Table::new(
+        "per-format ROM sizing (seed table at each format's table_p)",
+        &["format", "table_p", "entries", "bits", "ROM area"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for row in goldschmidt::area::format_rom_rows() {
+        t.row(&[
+            row.format.label().to_string(),
+            row.table_p.to_string(),
+            row.entries.to_string(),
+            row.bits.to_string(),
+            format!("{:.0} GE", row.gate_equivalents),
+        ]);
+    }
+    t.print();
     Ok(())
 }
 
@@ -349,16 +368,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let workers: usize = args.get("workers", 1usize).map_err(anyhow::Error::msg)?;
     let max_batch: usize = args.get("batch", 1024usize).map_err(anyhow::Error::msg)?;
-    let wait_us: u64 = args.get("wait-us", 200u64).map_err(anyhow::Error::msg)?;
+    let explicit_wait: Option<u64> = args.get_opt("wait-us").map_err(anyhow::Error::msg)?;
+    let wait_us = explicit_wait.unwrap_or(200);
     let rate: f64 = args.get("rate", 0.0f64).map_err(anyhow::Error::msg)?;
+    let deadline_us: u64 = args.get("deadline-us", 0u64).map_err(anyhow::Error::msg)?;
     let artifacts: PathBuf =
         PathBuf::from(args.get_str("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")));
 
+    // format-aware batching policy: with the *default* age budget the
+    // half-precision queues run 4x tighter; an explicit --wait-us is
+    // honored verbatim for every format (per-format flags still win)
+    let mut batcher = BatcherConfig::new(max_batch, Duration::from_micros(wait_us));
+    if explicit_wait.is_none() {
+        batcher = batcher.tight_half_precision();
+    }
+    for fmt in FormatKind::ALL {
+        let wait_key = format!("{}-wait-us", fmt.label());
+        if let Some(us) = args.get_opt::<u64>(&wait_key).map_err(anyhow::Error::msg)? {
+            batcher = batcher.with_format_max_wait(fmt, Duration::from_micros(us));
+        }
+        let batch_key = format!("{}-batch", fmt.label());
+        if let Some(mb) = args.get_opt::<usize>(&batch_key).map_err(anyhow::Error::msg)? {
+            batcher = batcher.with_format_max_batch(fmt, mb);
+        }
+    }
+
     let config = ServiceConfig {
-        batcher: BatcherConfig {
-            max_batch,
-            max_wait: Duration::from_micros(wait_us),
-        },
+        batcher,
         queue_depth: 65_536,
         workers,
         poll: Duration::from_micros(50),
@@ -382,13 +418,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let t0 = std::time::Instant::now();
     let handle = svc.handle();
-    let mut rxs = Vec::with_capacity(requests);
+    let deadline = Duration::from_micros(deadline_us);
+    let mut tickets = Vec::with_capacity(requests);
     for r in WorkloadGen::generate(spec) {
-        rxs.push(handle.submit_value(r.op, r.value_a(), r.value_b())?);
+        let ticket = if deadline_us > 0 {
+            handle.submit_value_deadline(r.op, r.value_a(), r.value_b(), deadline)?
+        } else {
+            handle.submit_value(r.op, r.value_a(), r.value_b())?
+        };
+        tickets.push(ticket);
     }
     let mut ok = 0u64;
-    for rx in rxs {
-        if rx.recv().is_ok() {
+    for t in tickets {
+        if t.wait().is_ok() {
             ok += 1;
         }
     }
@@ -414,6 +456,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    if snap.total_shed() > 0 || snap.total_errors() > 0 {
+        println!(
+            "shed (deadline): {}   errors (exec/worker): {}",
+            snap.total_shed(),
+            snap.total_errors()
+        );
+    }
     svc.shutdown();
     Ok(())
 }

@@ -1,0 +1,147 @@
+//! [`BackendCaps`]: the capability table a backend hands the service at
+//! startup — the negotiated half of the v2 executor contract.
+//!
+//! v1 discovered backend shape by probing `batch_ladder(op, format)`
+//! twelve times and inferring "unsupported" from an empty ladder, with
+//! unservable requests only failing deep in the worker. v2 inverts
+//! this: [`Executor::capabilities`](super::executor::Executor::capabilities)
+//! returns the whole per-(op, format) support table (each supported
+//! pair with its executable batch-size ladder) in one call. The service
+//! keeps the table for the life of the process — the batcher reads its
+//! ladders, and the client handle rejects unsupported (op, format)
+//! pairs at submit time with a typed
+//! [`ServiceError::Rejected`](crate::coordinator::request::ServiceError),
+//! before any queueing happens.
+
+use crate::coordinator::request::{op_format_slot, OpKind, OP_FORMAT_SLOTS};
+use crate::formats::FormatKind;
+
+/// Per-(op, format) capability table of one backend.
+#[derive(Clone, Debug)]
+pub struct BackendCaps {
+    backend: &'static str,
+    /// `Some(ladder)` = supported with these executable batch sizes
+    /// (ascending, deduplicated); `None` = unservable.
+    ladders: [Option<Vec<usize>>; OP_FORMAT_SLOTS],
+}
+
+impl BackendCaps {
+    /// A backend serving nothing yet (build up with [`Self::with`]).
+    pub fn new(backend: &'static str) -> Self {
+        Self { backend, ladders: std::array::from_fn(|_| None) }
+    }
+
+    /// A backend serving every (op, format) pair with one shared ladder
+    /// (the native executor's shape).
+    pub fn uniform(backend: &'static str, ladder: &[usize]) -> Self {
+        let mut caps = Self::new(backend);
+        for &op in &OpKind::ALL {
+            for &format in &FormatKind::ALL {
+                caps = caps.with(op, format, ladder);
+            }
+        }
+        caps
+    }
+
+    /// Declare one (op, format) pair supported at the given batch
+    /// ladder (sorted and deduplicated here). An **empty** ladder means
+    /// "no executable exists" and is normalized to unsupported — the
+    /// invariant `supports() => non-empty ladder` is enforced centrally
+    /// so no backend can accidentally advertise unservable pairs.
+    pub fn with(mut self, op: OpKind, format: FormatKind, ladder: &[usize]) -> Self {
+        let mut l = ladder.to_vec();
+        l.sort_unstable();
+        l.dedup();
+        self.ladders[op_format_slot(op, format)] = if l.is_empty() { None } else { Some(l) };
+        self
+    }
+
+    /// Declare every op of one format supported at the given ladder.
+    pub fn with_format(mut self, format: FormatKind, ladder: &[usize]) -> Self {
+        for &op in &OpKind::ALL {
+            self = self.with(op, format, ladder);
+        }
+        self
+    }
+
+    /// Human-readable backend name (shown in reports and error text).
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Whether the backend serves this (op, format) pair at all.
+    pub fn supports(&self, op: OpKind, format: FormatKind) -> bool {
+        self.ladders[op_format_slot(op, format)].is_some()
+    }
+
+    /// The executable batch sizes for a pair (empty when unsupported).
+    pub fn ladder(&self, op: OpKind, format: FormatKind) -> &[usize] {
+        self.ladders[op_format_slot(op, format)].as_deref().unwrap_or(&[])
+    }
+
+    /// Every supported (op, format) pair, in routing order.
+    pub fn supported(&self) -> Vec<(OpKind, FormatKind)> {
+        let mut out = Vec::new();
+        for &op in &OpKind::ALL {
+            for &format in &FormatKind::ALL {
+                if self.supports(op, format) {
+                    out.push((op, format));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_covers_every_pair() {
+        let caps = BackendCaps::uniform("native", &[64, 256, 1024]);
+        assert_eq!(caps.backend(), "native");
+        assert_eq!(caps.supported().len(), 12);
+        for &op in &OpKind::ALL {
+            for &format in &FormatKind::ALL {
+                assert!(caps.supports(op, format));
+                assert_eq!(caps.ladder(op, format), &[64, 256, 1024]);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_support_reports_unservable_pairs() {
+        let caps = BackendCaps::new("pjrt-cpu").with_format(FormatKind::F32, &[64, 1024, 256]);
+        assert!(caps.supports(OpKind::Divide, FormatKind::F32));
+        assert!(!caps.supports(OpKind::Divide, FormatKind::F64));
+        assert!(!caps.supports(OpKind::Sqrt, FormatKind::F16));
+        // ladders are normalized: sorted ascending
+        assert_eq!(caps.ladder(OpKind::Sqrt, FormatKind::F32), &[64, 256, 1024]);
+        // unsupported pairs report an empty ladder, never panic
+        assert!(caps.ladder(OpKind::Rsqrt, FormatKind::BF16).is_empty());
+        assert_eq!(caps.supported().len(), 3);
+    }
+
+    #[test]
+    fn with_overrides_and_dedups() {
+        let caps = BackendCaps::new("x")
+            .with(OpKind::Divide, FormatKind::F32, &[8, 8, 4])
+            .with(OpKind::Divide, FormatKind::F32, &[16, 2, 16]);
+        assert_eq!(caps.ladder(OpKind::Divide, FormatKind::F32), &[2, 16]);
+    }
+
+    #[test]
+    fn empty_ladder_normalizes_to_unsupported() {
+        // a backend with no executable for a pair cannot advertise it,
+        // even by mistake
+        let caps = BackendCaps::new("x").with(OpKind::Divide, FormatKind::F32, &[]);
+        assert!(!caps.supports(OpKind::Divide, FormatKind::F32));
+        assert!(caps.supported().is_empty());
+        // and an empty ladder can retract earlier support
+        let caps = BackendCaps::new("x")
+            .with(OpKind::Sqrt, FormatKind::F16, &[64])
+            .with(OpKind::Sqrt, FormatKind::F16, &[]);
+        assert!(!caps.supports(OpKind::Sqrt, FormatKind::F16));
+    }
+}

@@ -3,27 +3,44 @@
 //! words tagged with a [`FormatKind`], so one interface serves every
 //! IEEE format the [`crate::formats`] plane defines.
 //!
+//! The v2 contract has two halves:
+//!
+//! * [`Executor::capabilities`] — negotiated once at service startup: a
+//!   [`BackendCaps`] table of every supported (op, format) pair with
+//!   its executable batch-size ladder (replacing the v1 twelve-way
+//!   `batch_ladder` probe loop). The service routes and rejects against
+//!   this table for the life of the process.
+//! * [`Executor::execute_into`] — the hot path: one batch executed into
+//!   a **caller-owned** output plane, so the per-batch path allocates
+//!   nothing (the v1 `execute` returned a fresh `Vec` per batch; the
+//!   worker now reuses one buffer across batches).
+//!
 //! `PjrtExecutor` (behind the non-default `pjrt` feature) is the
 //! XLA path: HLO text (lowered once by `python/compile/aot.py`) is
 //! parsed and compiled by the `xla` crate's PJRT CPU client at startup;
 //! execution is a single FFI call per batch (f32 only — the AOT
-//! artifacts are lowered at single precision).
+//! artifacts are lowered at single precision, and its capability table
+//! says exactly that).
 //!
 //! [`NativeExecutor`] is the same interface over the crate's own
 //! bit-accurate Goldschmidt datapath, served through the batched SoA
 //! kernels ([`crate::kernel`]): one [`GoldschmidtContext`] per format
 //! (ROMs + complement constants precomputed once, at that format's
-//! datapath geometry), lane-parallel batch execution, a persistent
-//! per-worker [`BatchScratch`] arena so the hot path performs no plane
-//! allocations, and a scoped-thread worker split for large flushes. It
-//! is both the mock for coordinator tests (no artifacts needed) and the
-//! comparison baseline in the E2E bench.
+//! datapath geometry — bf16's p=5 ROM included), lane-parallel batch
+//! execution, a persistent per-worker [`BatchScratch`] arena so the hot
+//! path performs no plane allocations, and a scoped-thread worker split
+//! for large flushes. It is both the mock for coordinator tests (no
+//! artifacts needed) and the comparison baseline in the E2E bench.
 
-use anyhow::{bail, Context as _, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context as _;
 
 use crate::coordinator::request::OpKind;
 use crate::formats::{self, FloatFormat, FormatKind};
 use crate::kernel::{BatchScratch, GoldschmidtContext};
+
+use super::caps::BackendCaps;
 
 /// A batched executor for the three FPU ops across the supported
 /// formats.
@@ -32,31 +49,47 @@ use crate::kernel::{BatchScratch, GoldschmidtContext};
 /// state, so each service worker constructs its own executor inside its
 /// own thread (see [`crate::coordinator::service::FpuService::start`]).
 pub trait Executor {
-    /// Batch sizes available for `(op, format)`, ascending. Empty =
-    /// unsupported (the batcher then forms unpadded batches, which the
-    /// executor may still reject at `execute` time).
-    fn batch_ladder(&self, op: OpKind, format: FormatKind) -> Vec<usize>;
+    /// The backend's capability table: every supported (op, format)
+    /// pair with its executable batch ladder, plus the backend name.
+    /// Called once at service startup (on the probe executor); must be
+    /// stable for the life of the executor.
+    fn capabilities(&self) -> BackendCaps;
 
-    /// Execute one batch of raw `format` words. `a.len()` must equal an
-    /// available batch size; for `Divide`, `b` must be `Some` with the
-    /// same length. Returns one output word per element.
+    /// Execute one batch of raw `format` words into `out`.
+    /// `out.len()` must equal `a.len()`, which must be an executable
+    /// batch size from the capability ladder; for `Divide`, `b` must be
+    /// `Some` with the same length.
+    fn execute_into(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: Option<&[u64]>,
+        out: &mut [u64],
+    ) -> Result<()>;
+
+    /// Allocating convenience wrapper around [`Self::execute_into`]
+    /// (tests and one-off callers; the serving worker reuses its own
+    /// output buffer instead).
     fn execute(
         &mut self,
         op: OpKind,
         format: FormatKind,
         a: &[u64],
         b: Option<&[u64]>,
-    ) -> Result<Vec<u64>>;
-
-    /// Human-readable backend name.
-    fn name(&self) -> &'static str;
+    ) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; a.len()];
+        self.execute_into(op, format, a, b, &mut out)?;
+        Ok(out)
+    }
 }
 
 // ---------------------------------------------------------------- PJRT --
 
 /// Executor over AOT-compiled XLA executables (PJRT CPU). Requires the
-/// `pjrt` feature (and the `xla` dependency it implies). Serves f32
-/// only; other formats report an empty ladder.
+/// `pjrt` feature (and the `xla` dependency it implies). Its capability
+/// table declares f32 only — the AOT artifacts are single-precision —
+/// so non-f32 submissions are rejected at the service boundary.
 #[cfg(feature = "pjrt")]
 pub struct PjrtExecutor {
     client: xla::PjRtClient,
@@ -114,25 +147,32 @@ impl PjrtExecutor {
 
 #[cfg(feature = "pjrt")]
 impl Executor for PjrtExecutor {
-    fn batch_ladder(&self, op: OpKind, format: FormatKind) -> Vec<usize> {
-        if format == FormatKind::F32 {
-            self.manifest.batches_for(op)
-        } else {
-            Vec::new()
+    fn capabilities(&self) -> BackendCaps {
+        let mut caps = BackendCaps::new("pjrt-cpu");
+        for &op in &OpKind::ALL {
+            let ladder = self.manifest.batches_for(op);
+            if !ladder.is_empty() {
+                caps = caps.with(op, FormatKind::F32, &ladder);
+            }
         }
+        caps
     }
 
-    fn execute(
+    fn execute_into(
         &mut self,
         op: OpKind,
         format: FormatKind,
         a: &[u64],
         b: Option<&[u64]>,
-    ) -> Result<Vec<u64>> {
+        out: &mut [u64],
+    ) -> Result<()> {
         if format != FormatKind::F32 {
             bail!("pjrt backend serves f32 only (got {format})");
         }
         let batch = a.len();
+        if out.len() != batch {
+            bail!("output length {} != batch {batch}", out.len());
+        }
         self.ensure_compiled(op, batch)?;
         let exe = self.executables.get(&(op, batch)).expect("just compiled");
         let af: Vec<f32> = a.iter().map(|&w| f32::from_bits(w as u32)).collect();
@@ -155,16 +195,15 @@ impl Executor for PjrtExecutor {
             .to_literal_sync()
             .context("fetching result buffer")?;
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple
-        let out = lit.to_tuple1().context("unwrapping result tuple")?;
-        let v = out.to_vec::<f32>().context("converting result to f32 vec")?;
+        let tup = lit.to_tuple1().context("unwrapping result tuple")?;
+        let v = tup.to_vec::<f32>().context("converting result to f32 vec")?;
         if v.len() != batch {
             bail!("result length {} != batch {batch}", v.len());
         }
-        Ok(v.into_iter().map(|x| x.to_bits() as u64).collect())
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt-cpu"
+        for (o, x) in out.iter_mut().zip(v) {
+            *o = x.to_bits() as u64;
+        }
+        Ok(())
     }
 }
 
@@ -176,7 +215,8 @@ impl Executor for PjrtExecutor {
 pub struct NativeExecutor {
     /// One datapath context per [`FormatKind`], indexed by
     /// `FormatKind::index()` — exactly as the paper's hardware would
-    /// instantiate one ROM + multiplier pair per word width.
+    /// instantiate one ROM + multiplier pair per word width (bf16's
+    /// context carries its p=5 ROM, 32 entries).
     ctxs: [GoldschmidtContext; 4],
     ladder: Vec<usize>,
     /// Per-worker scratch planes: each service worker owns its executor,
@@ -221,7 +261,10 @@ impl NativeExecutor {
         let ctx = &self.ctxs[F::KIND.index()];
         match op {
             OpKind::Divide => {
-                let b = b.context("divide needs two operands")?;
+                let b = match b {
+                    Some(b) => b,
+                    None => bail!("divide needs two operands"),
+                };
                 if b.len() != a.len() {
                     bail!("operand length mismatch");
                 }
@@ -235,29 +278,27 @@ impl NativeExecutor {
 }
 
 impl Executor for NativeExecutor {
-    fn batch_ladder(&self, _op: OpKind, _format: FormatKind) -> Vec<usize> {
-        self.ladder.clone()
+    fn capabilities(&self) -> BackendCaps {
+        BackendCaps::uniform("native-fixed-point", &self.ladder)
     }
 
-    fn execute(
+    fn execute_into(
         &mut self,
         op: OpKind,
         format: FormatKind,
         a: &[u64],
         b: Option<&[u64]>,
-    ) -> Result<Vec<u64>> {
-        let mut out = vec![0u64; a.len()];
-        match format {
-            FormatKind::F16 => self.run::<formats::F16>(op, a, b, &mut out)?,
-            FormatKind::BF16 => self.run::<formats::BF16>(op, a, b, &mut out)?,
-            FormatKind::F32 => self.run::<formats::F32>(op, a, b, &mut out)?,
-            FormatKind::F64 => self.run::<formats::F64>(op, a, b, &mut out)?,
+        out: &mut [u64],
+    ) -> Result<()> {
+        if out.len() != a.len() {
+            bail!("output length {} != batch {}", out.len(), a.len());
         }
-        Ok(out)
-    }
-
-    fn name(&self) -> &'static str {
-        "native-fixed-point"
+        match format {
+            FormatKind::F16 => self.run::<formats::F16>(op, a, b, out),
+            FormatKind::BF16 => self.run::<formats::BF16>(op, a, b, out),
+            FormatKind::F32 => self.run::<formats::F32>(op, a, b, out),
+            FormatKind::F64 => self.run::<formats::F64>(op, a, b, out),
+        }
     }
 }
 
@@ -280,6 +321,21 @@ mod tests {
         let b = f32_plane(&[2.0, 4.0, 0.5, 2.0]);
         let out = ex.execute(OpKind::Divide, FormatKind::F32, &a, Some(&b)).unwrap();
         assert_eq!(f32_out(&out), vec![3.0, 2.5, 3.0, -4.0]);
+    }
+
+    #[test]
+    fn execute_into_writes_caller_buffer() {
+        let mut ex = NativeExecutor::with_defaults();
+        let a = f32_plane(&[6.0, 10.0]);
+        let b = f32_plane(&[2.0, 4.0]);
+        let mut out = vec![u64::MAX; 2];
+        ex.execute_into(OpKind::Divide, FormatKind::F32, &a, Some(&b), &mut out).unwrap();
+        assert_eq!(f32_out(&out), vec![3.0, 2.5]);
+        // length mismatch is a typed error, not a panic
+        let mut short = vec![0u64; 1];
+        assert!(ex
+            .execute_into(OpKind::Divide, FormatKind::F32, &a, Some(&b), &mut short)
+            .is_err());
     }
 
     #[test]
@@ -324,11 +380,13 @@ mod tests {
     }
 
     #[test]
-    fn ladder_reported() {
+    fn capabilities_cover_every_pair_with_the_ladder() {
         let ex = NativeExecutor::with_defaults();
-        assert_eq!(ex.batch_ladder(OpKind::Divide, FormatKind::F32), vec![64, 256, 1024]);
-        assert_eq!(ex.batch_ladder(OpKind::Sqrt, FormatKind::F64), vec![64, 256, 1024]);
-        assert_eq!(ex.name(), "native-fixed-point");
+        let caps = ex.capabilities();
+        assert_eq!(caps.backend(), "native-fixed-point");
+        assert_eq!(caps.supported().len(), 12);
+        assert_eq!(caps.ladder(OpKind::Divide, FormatKind::F32), &[64, 256, 1024]);
+        assert_eq!(caps.ladder(OpKind::Sqrt, FormatKind::F64), &[64, 256, 1024]);
     }
 
     #[test]

@@ -1,24 +1,31 @@
 //! Runtime: the batched [`Executor`](executor::Executor) boundary the
 //! coordinator serves through.
 //!
+//! * [`caps`] — [`BackendCaps`](caps::BackendCaps), the per-(op, format)
+//!   capability table a backend hands the service at startup (the
+//!   negotiated half of the executor contract: support + batch ladders
+//!   in one call, no probe loop).
 //! * [`artifacts`] — parses `artifacts/manifest.txt` written by
 //!   `python/compile/aot.py`.
-//! * [`executor`] — the [`Executor`](executor::Executor) trait with two
+//! * [`executor`] — the [`Executor`](executor::Executor) trait
+//!   (`capabilities` + allocation-free `execute_into`) with two
 //!   implementations: [`NativeExecutor`](executor::NativeExecutor) (the
 //!   bit-accurate rust datapath on the batched SoA kernels, serving
 //!   every [`FormatKind`](crate::formats::FormatKind) — the default
 //!   backend, no artifacts needed) and, behind the non-default `pjrt`
 //!   feature, `PjrtExecutor` (HLO text -> `xla::PjRtClient` ->
-//!   compiled executables, f32 only).
+//!   compiled executables, f32 only — and its capability table says so).
 //!
 //! Python never runs here: the HLO was lowered once at build time
 //! (`make artifacts`), and the offline build compiles the PJRT path
 //! out entirely.
 
 pub mod artifacts;
+pub mod caps;
 pub mod executor;
 
 pub use artifacts::{ArtifactSpec, Manifest};
+pub use caps::BackendCaps;
 #[cfg(feature = "pjrt")]
 pub use executor::PjrtExecutor;
 pub use executor::{Executor, NativeExecutor};

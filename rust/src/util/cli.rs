@@ -65,6 +65,18 @@ impl Args {
             .ok_or_else(|| format!("missing required option --{key}"))
     }
 
+    /// Parsed numeric/typed option, `None` when absent (for options
+    /// whose default is "inherit from another knob").
+    pub fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("option --{key}: cannot parse {raw:?}")),
+        }
+    }
+
     /// Parsed numeric/typed option with a default.
     pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
         match self.options.get(key) {

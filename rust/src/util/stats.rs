@@ -113,10 +113,20 @@ impl LogHistogram {
 
     /// Record a (nanosecond) value.
     pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record the same value `n` times (one bucket update — the
+    /// weighted form the coordinator uses for vectored submissions
+    /// whose lanes share a latency).
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
         let idx = 63 - v.max(1).leading_zeros() as usize;
-        self.buckets[idx] += 1;
-        self.count += 1;
-        self.sum = self.sum.saturating_add(v);
+        self.buckets[idx] += n;
+        self.count += n;
+        self.sum = self.sum.saturating_add(v.saturating_mul(n));
     }
 
     /// Number of recorded values.

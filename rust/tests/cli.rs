@@ -73,6 +73,10 @@ fn area_report() {
     assert!(out.contains("7x"));
     assert!(out.contains("4x"));
     assert!(out.contains("saved:"));
+    // the per-format ROM sizing table (bf16's p=5 shrink) rides along
+    assert!(out.contains("per-format ROM sizing"));
+    assert!(out.contains("bf16"));
+    assert!(out.contains("224")); // bf16: 32 entries x 7 bits
 }
 
 #[test]
@@ -116,6 +120,33 @@ fn serve_native_f16() {
     let o = run(&["serve", "--requests", "500", "--backend", "native", "--format", "f16"]);
     assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
     assert!(stdout(&o).contains("500/500 ok"));
+}
+
+#[test]
+fn serve_with_per_format_policy_flags() {
+    // per-(op, format) batching overrides surfaced as CLI flags
+    let o = run(&[
+        "serve", "--requests", "500", "--backend", "native", "--format", "f16",
+        "--f16-wait-us", "25", "--f16-batch", "128",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    assert!(stdout(&o).contains("500/500 ok"));
+}
+
+#[test]
+fn serve_rejects_bad_policy_flag() {
+    let o = run(&["serve", "--requests", "10", "--f32-wait-us", "soon"]);
+    assert!(!o.status.success());
+    assert!(String::from_utf8_lossy(&o.stderr).contains("f32-wait-us"));
+}
+
+#[test]
+fn serve_with_generous_deadline_completes_everything() {
+    let o = run(&[
+        "serve", "--requests", "300", "--backend", "native", "--deadline-us", "30000000",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    assert!(stdout(&o).contains("300/300 ok"));
 }
 
 #[test]

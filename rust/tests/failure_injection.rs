@@ -1,19 +1,22 @@
 //! Failure-injection tests for the coordinator: flaky executors, slow
-//! executors, worker-init failures, client disappearance. The service
-//! must degrade predictably — errors are counted, successes stay
-//! correct, and nothing deadlocks.
+//! executors, worker-init failures, client disappearance, deadline
+//! expiry. The service must degrade predictably — every outcome reaches
+//! the client as a typed [`ServiceError`], errors and sheds are
+//! counted, successes stay correct, and nothing deadlocks.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
-use goldschmidt::coordinator::{BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig};
-use goldschmidt::runtime::{Executor, NativeExecutor};
+use goldschmidt::coordinator::{
+    BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, ServiceError,
+};
+use goldschmidt::runtime::{BackendCaps, Executor, NativeExecutor};
 
 fn config() -> ServiceConfig {
     ServiceConfig {
-        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(100) },
+        batcher: BatcherConfig::new(64, Duration::from_micros(100)),
         queue_depth: 4096,
         workers: 2,
         poll: Duration::from_micros(50),
@@ -28,24 +31,22 @@ struct Flaky {
 }
 
 impl Executor for Flaky {
-    fn batch_ladder(&self, op: OpKind, format: FormatKind) -> Vec<usize> {
-        self.inner.batch_ladder(op, format)
+    fn capabilities(&self) -> BackendCaps {
+        self.inner.capabilities()
     }
-    fn execute(
+    fn execute_into(
         &mut self,
         op: OpKind,
         format: FormatKind,
         a: &[u64],
         b: Option<&[u64]>,
-    ) -> Result<Vec<u64>> {
+        out: &mut [u64],
+    ) -> Result<()> {
         let n = self.calls.fetch_add(1, Ordering::Relaxed);
         if n % self.period == self.period - 1 {
             bail!("injected failure on call {n}");
         }
-        self.inner.execute(op, format, a, b)
-    }
-    fn name(&self) -> &'static str {
-        "flaky"
+        self.inner.execute_into(op, format, a, b, out)
     }
 }
 
@@ -62,19 +63,24 @@ fn flaky_executor_fails_batches_not_service() {
     })
     .unwrap();
     let handle = svc.handle();
-    let rxs: Vec<_> = (0..3000)
+    let tickets: Vec<_> = (0..3000)
         .map(|i| handle.submit(OpKind::Divide, (i + 1) as f32, 1.0).unwrap())
         .collect();
     let mut ok = 0u64;
     let mut failed = 0u64;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        match rx.recv() {
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
             Ok(resp) => {
                 // successes must still be CORRECT
                 assert_eq!(resp.value.f32(), (i + 1) as f32);
                 ok += 1;
             }
-            Err(_) => failed += 1, // dropped reply = failed batch
+            Err(ServiceError::ExecFailed { backend }) => {
+                // the injected message is carried verbatim to the client
+                assert!(backend.contains("injected failure"), "{backend}");
+                failed += 1;
+            }
+            Err(other) => panic!("unexpected error kind: {other}"),
         }
     }
     assert_eq!(ok + failed, 3000);
@@ -87,12 +93,57 @@ fn flaky_executor_fails_batches_not_service() {
 }
 
 #[test]
-fn all_workers_fail_init_service_still_shuts_down() {
-    // factory succeeds for the probe, then fails in every worker thread:
-    // requests are dropped (receivers error) but nothing hangs
+fn exec_failure_carries_backend_message_to_client() {
+    // the acceptance check: a backend failure arrives as a typed
+    // ExecFailed carrying the executor's own message — not a bare
+    // RecvError with the diagnostic thrown away
+    struct AlwaysFail;
+    impl Executor for AlwaysFail {
+        fn capabilities(&self) -> BackendCaps {
+            BackendCaps::uniform("always-fail", &[64])
+        }
+        fn execute_into(
+            &mut self,
+            _: OpKind,
+            _: FormatKind,
+            _: &[u64],
+            _: Option<&[u64]>,
+            _: &mut [u64],
+        ) -> Result<()> {
+            bail!("kaboom-7: simulated accelerator fault")
+        }
+    }
+    let svc = FpuService::start(config(), || Ok(Box::new(AlwaysFail) as Box<dyn Executor>))
+        .unwrap();
+    let handle = svc.handle();
+    let err = handle.submit(OpKind::Divide, 6.0, 2.0).unwrap().wait().unwrap_err();
+    match &err {
+        ServiceError::ExecFailed { backend } => {
+            assert!(backend.contains("kaboom-7"), "lost the backend message: {backend}");
+        }
+        other => panic!("expected ExecFailed, got {other}"),
+    }
+    // the rendered error is also self-describing
+    assert!(err.to_string().contains("kaboom-7"));
+    // vectored submissions fail the same way
+    let a = vec![1.0f32.to_bits() as u64; 10];
+    let err = handle
+        .submit_batch(OpKind::Sqrt, FormatKind::F32, &a, &[])
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(matches!(err, ServiceError::ExecFailed { .. }));
+    svc.shutdown();
+}
+
+#[test]
+fn worker_init_failure_propagates_out_of_start() {
+    // the factory succeeds for the capability probe, then fails in the
+    // worker thread: start must return the error instead of leaving a
+    // silently dead worker eating round-robined batches
     let count = Arc::new(AtomicU64::new(0));
     let c2 = count.clone();
-    let svc = FpuService::start(config(), move || {
+    let result = FpuService::start(config(), move || {
         let n = c2.fetch_add(1, Ordering::SeqCst);
         if n == 0 {
             // the probe call on the caller thread
@@ -100,27 +151,117 @@ fn all_workers_fail_init_service_still_shuts_down() {
         } else {
             bail!("worker init exploded")
         }
-    })
-    .unwrap();
-    let handle = svc.handle();
-    let rx = handle.submit(OpKind::Sqrt, 4.0, 1.0).unwrap();
-    // batch gets dispatched to a dead worker channel; reply sender drops
-    let got = rx.recv_timeout(Duration::from_secs(5));
-    assert!(got.is_err(), "no worker should have answered");
-    svc.shutdown(); // must not hang
+    });
+    let err = match result {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("start must fail when a worker cannot build its executor"),
+    };
+    assert!(err.contains("executor init failed"), "{err}");
+    assert!(err.contains("worker init exploded"), "{err}");
 }
 
 #[test]
-fn client_dropping_receiver_does_not_wedge_service() {
+fn partial_worker_init_failure_also_fails_start() {
+    // first worker builds, second fails: still a startup error (and the
+    // successfully started worker is joined, not leaked)
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let result = FpuService::start(config(), move || {
+        // call 0 = probe, call 1 = worker 0 (ok), call 2 = worker 1 (fail)
+        if c2.fetch_add(1, Ordering::SeqCst) < 2 {
+            Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+        } else {
+            bail!("second unit failed to power on")
+        }
+    });
+    assert!(result.is_err());
+    assert!(format!("{:#}", result.err().unwrap()).contains("second unit"));
+}
+
+#[test]
+fn deadline_expiry_sheds_instead_of_executing() {
+    // a queue that would otherwise wait 10 seconds: the deadline fires
+    // first, the request is shed with a typed error and counted
+    let cfg = ServiceConfig {
+        batcher: BatcherConfig::new(1024, Duration::from_secs(10)),
+        queue_depth: 1024,
+        workers: 1,
+        poll: Duration::from_micros(50),
+    };
+    let svc = FpuService::start(cfg, || {
+        Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+    })
+    .unwrap();
+    let handle = svc.handle();
+    let doomed = handle
+        .submit_value_deadline(
+            OpKind::Divide,
+            goldschmidt::coordinator::Value::F32(6.0),
+            goldschmidt::coordinator::Value::F32(2.0),
+            Duration::from_millis(2),
+        )
+        .unwrap();
+    assert_eq!(doomed.wait().unwrap_err(), ServiceError::Deadline);
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.total_shed(), 1);
+    assert_eq!(snap.op_format(OpKind::Divide, FormatKind::F32).shed, 1);
+    assert_eq!(snap.total_errors(), 0, "shed is not an executor error");
+    // a generous deadline on a live service is not shed
+    let fine = handle
+        .submit_value_deadline(
+            OpKind::Divide,
+            goldschmidt::coordinator::Value::F32(6.0),
+            goldschmidt::coordinator::Value::F32(2.0),
+            Duration::from_secs(30),
+        )
+        .unwrap();
+    // (the deadline arrival of the first request already forced a flush
+    // policy check; this one rides the next deadline-triggered or
+    // drain flush)
+    svc.shutdown();
+    assert_eq!(fine.wait().unwrap().value.f32(), 3.0);
+}
+
+#[test]
+fn vectored_deadline_sheds_whole_group() {
+    let cfg = ServiceConfig {
+        batcher: BatcherConfig::new(1024, Duration::from_secs(10)),
+        queue_depth: 1024,
+        workers: 1,
+        poll: Duration::from_micros(50),
+    };
+    let svc = FpuService::start(cfg, || {
+        Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
+    })
+    .unwrap();
+    let handle = svc.handle();
+    let a = vec![2.0f32.to_bits() as u64; 50];
+    let doomed = handle
+        .submit_batch_deadline(
+            OpKind::Sqrt,
+            FormatKind::F32,
+            &a,
+            &[],
+            Duration::from_millis(2),
+        )
+        .unwrap();
+    assert_eq!(doomed.wait().unwrap_err(), ServiceError::Deadline);
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.op_format(OpKind::Sqrt, FormatKind::F32).shed, 50);
+    svc.shutdown();
+}
+
+#[test]
+fn client_dropping_ticket_does_not_wedge_service() {
     let svc = FpuService::start(config(), || {
         Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
     })
     .unwrap();
     let handle = svc.handle();
-    // fire-and-forget: drop the receivers immediately
+    // fire-and-forget: drop the tickets immediately
     for i in 0..500 {
-        let rx = handle.submit(OpKind::Divide, i as f32 + 1.0, 2.0).unwrap();
-        drop(rx);
+        let t = handle.submit(OpKind::Divide, i as f32 + 1.0, 2.0).unwrap();
+        drop(t);
     }
     // the service must still answer a live client afterwards
     assert_eq!(handle.divide(8.0, 2.0).unwrap(), 4.0);
@@ -154,12 +295,12 @@ fn shutdown_under_load_loses_nothing_accepted() {
     })
     .unwrap();
     let handle = svc.handle();
-    let rxs: Vec<_> = (0..2000)
+    let tickets: Vec<_> = (0..2000)
         .map(|i| handle.submit(OpKind::Divide, (i + 1) as f32, 1.0).unwrap())
         .collect();
     svc.shutdown(); // drain path must flush every accepted request
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("accepted request must be answered");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let resp = t.wait().expect("accepted request must be answered");
         assert_eq!(resp.value.f32(), (i + 1) as f32);
     }
 }

@@ -37,7 +37,7 @@ fn pjrt_loads_and_divides() {
     let Some(dir) = artifacts_dir() else { return };
     let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
     let mut rng = Xoshiro256::new(1);
-    let batch = ex.batch_ladder(OpKind::Divide, F32)[0];
+    let batch = ex.capabilities().ladder(OpKind::Divide, F32)[0];
     let a: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.01, 1000.0)).collect();
     let b: Vec<f32> = (0..batch).map(|_| rng.range_f32(0.01, 1000.0)).collect();
     let out =
@@ -56,7 +56,7 @@ fn pjrt_sqrt_and_rsqrt() {
     let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
     let mut rng = Xoshiro256::new(2);
     for op in [OpKind::Sqrt, OpKind::Rsqrt] {
-        let batch = ex.batch_ladder(op, F32)[0];
+        let batch = ex.capabilities().ladder(op, F32)[0];
         let a: Vec<f32> = (0..batch).map(|_| rng.range_f32(1e-6, 1e6)).collect();
         let out = unplane(&ex.execute(op, F32, &plane(&a), None).expect("execute"));
         for i in 0..batch {
@@ -75,10 +75,16 @@ fn pjrt_sqrt_and_rsqrt() {
 fn pjrt_non_f32_formats_unsupported() {
     let Some(dir) = artifacts_dir() else { return };
     let mut ex = PjrtExecutor::from_dir(&dir).expect("load artifacts");
+    let caps = ex.capabilities();
+    assert_eq!(caps.backend(), "pjrt-cpu");
     for format in [FormatKind::F16, FormatKind::BF16, FormatKind::F64] {
-        assert!(ex.batch_ladder(OpKind::Divide, format).is_empty(), "{format}");
+        // the capability table declares the f32-only surface up front
+        assert!(!caps.supports(OpKind::Divide, format), "{format}");
+        assert!(caps.ladder(OpKind::Divide, format).is_empty(), "{format}");
+        // and the executor enforces it at execute time too
         assert!(ex.execute(OpKind::Sqrt, format, &[format.one_bits()], None).is_err());
     }
+    assert!(caps.supports(OpKind::Divide, F32));
 }
 
 #[test]

@@ -1,15 +1,18 @@
 //! Integration: the full coordinator stack (router -> batcher -> worker
 //! pool -> executor) under realistic load, with the native executor (no
 //! artifacts needed) and — when artifacts exist — the PJRT executor.
+//! Exercises the v2 request plane: tickets, vectored submission, typed
+//! backpressure, and the submit_batch == N x submit bit-identity.
 
 use std::time::Duration;
 
 use goldschmidt::coordinator::{
-    BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, Value,
+    BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, ServiceError, Value,
 };
-use goldschmidt::runtime::{Executor, NativeExecutor};
+use goldschmidt::runtime::{BackendCaps, Executor, NativeExecutor};
 #[cfg(feature = "pjrt")]
 use goldschmidt::runtime::PjrtExecutor;
+use goldschmidt::util::rng::Xoshiro256;
 use goldschmidt::workload::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};
 
 fn native_factory() -> anyhow::Result<Box<dyn Executor>> {
@@ -18,7 +21,7 @@ fn native_factory() -> anyhow::Result<Box<dyn Executor>> {
 
 fn quick_config() -> ServiceConfig {
     ServiceConfig {
-        batcher: BatcherConfig { max_batch: 256, max_wait: Duration::from_micros(200) },
+        batcher: BatcherConfig::new(256, Duration::from_micros(200)),
         queue_depth: 8192,
         workers: 2,
         poll: Duration::from_micros(50),
@@ -39,7 +42,7 @@ fn mixed_workload_all_correct() {
     };
     let reqs = WorkloadGen::generate(spec);
     let mut expected = Vec::with_capacity(reqs.len());
-    let mut rxs = Vec::with_capacity(reqs.len());
+    let mut tickets = Vec::with_capacity(reqs.len());
     for r in &reqs {
         let want = match r.op {
             OpKind::Divide => r.a as f64 / r.b as f64,
@@ -47,10 +50,10 @@ fn mixed_workload_all_correct() {
             OpKind::Rsqrt => 1.0 / (r.a as f64).sqrt(),
         } as f32;
         expected.push(want);
-        rxs.push(handle.submit(r.op, r.a, r.b).unwrap());
+        tickets.push(handle.submit(r.op, r.a, r.b).unwrap());
     }
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let resp = t.wait().expect("response");
         let got = resp.value.f32();
         let ulp = (got.to_bits() as i64 - expected[i].to_bits() as i64).abs();
         assert!(ulp <= 1, "req {i}: got {got} want {}", expected[i]);
@@ -70,53 +73,53 @@ fn mixed_workload_all_correct() {
 }
 
 #[test]
-fn backpressure_try_submit() {
-    // tiny queue + slow consumption: try_submit must eventually report Full
+fn backpressure_try_submit_reports_overloaded() {
+    // tiny queue + slow consumption: try_submit must eventually report
+    // a typed Overloaded error
     struct Slow(NativeExecutor);
     impl Executor for Slow {
-        fn batch_ladder(&self, op: OpKind, format: FormatKind) -> Vec<usize> {
-            self.0.batch_ladder(op, format)
+        fn capabilities(&self) -> BackendCaps {
+            self.0.capabilities()
         }
-        fn execute(
+        fn execute_into(
             &mut self,
             op: OpKind,
             format: FormatKind,
             a: &[u64],
             b: Option<&[u64]>,
-        ) -> anyhow::Result<Vec<u64>> {
+            out: &mut [u64],
+        ) -> anyhow::Result<()> {
             std::thread::sleep(Duration::from_millis(20));
-            self.0.execute(op, format, a, b)
-        }
-        fn name(&self) -> &'static str {
-            "slow"
+            self.0.execute_into(op, format, a, b, out)
         }
     }
     let config = ServiceConfig {
-        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(1) },
+        batcher: BatcherConfig::new(64, Duration::from_micros(1)),
         queue_depth: 8,
         workers: 1,
         poll: Duration::from_micros(20),
     };
     let svc = FpuService::start(config, || {
-        Ok(Box::new(Slow(NativeExecutor::with_defaults())))
+        Ok(Box::new(Slow(NativeExecutor::with_defaults())) as Box<dyn Executor>)
     })
     .unwrap();
     let handle = svc.handle();
     let mut saw_full = false;
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..5000 {
-        match handle.try_submit(OpKind::Divide, i as f32 + 1.0, 1.0).unwrap() {
-            Some(rx) => rxs.push(rx),
-            None => {
+        match handle.try_submit(OpKind::Divide, i as f32 + 1.0, 1.0) {
+            Ok(t) => tickets.push(t),
+            Err(ServiceError::Overloaded) => {
                 saw_full = true;
                 break;
             }
+            Err(e) => panic!("unexpected error: {e}"),
         }
     }
     assert!(saw_full, "queue never filled — backpressure not engaging");
     // everything accepted must still complete
-    for rx in rxs {
-        assert!(rx.recv().is_ok());
+    for t in tickets {
+        assert!(t.wait().is_ok());
     }
     svc.shutdown();
 }
@@ -131,15 +134,15 @@ fn poisson_open_loop_latency_sane() {
         arrivals: ArrivalProcess::Closed, // pacing emulated below
         ..Default::default()
     };
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for (i, r) in WorkloadGen::generate(spec).iter().enumerate() {
-        rxs.push(handle.submit(r.op, r.a, r.b).unwrap());
+        tickets.push(handle.submit(r.op, r.a, r.b).unwrap());
         if i % 100 == 0 {
             std::thread::sleep(Duration::from_micros(300));
         }
     }
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
+    for t in tickets {
+        let resp = t.wait().unwrap();
         // end-to-end latency must be bounded by batching wait + exec
         assert!(resp.latency_ns < 2_000_000_000, "latency {}ns", resp.latency_ns);
     }
@@ -162,7 +165,7 @@ fn f64_workload_served_end_to_end() {
     };
     let reqs = WorkloadGen::generate(spec);
     let mut expected = Vec::with_capacity(reqs.len());
-    let mut rxs = Vec::with_capacity(reqs.len());
+    let mut tickets = Vec::with_capacity(reqs.len());
     for r in &reqs {
         let (a, b) = (r.value_a(), r.value_b());
         let want = match r.op {
@@ -171,10 +174,10 @@ fn f64_workload_served_end_to_end() {
             OpKind::Rsqrt => 1.0 / a.to_f64().sqrt(),
         };
         expected.push(want);
-        rxs.push(handle.submit_value(r.op, a, b).unwrap());
+        tickets.push(handle.submit_value(r.op, a, b).unwrap());
     }
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let resp = t.wait().expect("response");
         assert_eq!(resp.value.format(), FormatKind::F64, "req {i}");
         let got = resp.value.to_f64();
         let ulp = (got.to_bits() as i64 - expected[i].to_bits() as i64).abs();
@@ -198,15 +201,15 @@ fn mixed_format_traffic_stays_isolated() {
     // come back in its request's format with a format-correct value
     let svc = FpuService::start(quick_config(), native_factory).unwrap();
     let handle = svc.handle();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 1..=400u32 {
         let format = FormatKind::ALL[i as usize % 4];
         let a = Value::from_f64(format, (6 * i) as f64);
         let b = Value::from_f64(format, 2.0);
-        rxs.push((format, (3 * i) as f64, handle.submit_value(OpKind::Divide, a, b).unwrap()));
+        tickets.push((format, (3 * i) as f64, handle.submit_value(OpKind::Divide, a, b).unwrap()));
     }
-    for (i, (format, want, rx)) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response");
+    for (i, (format, want, t)) in tickets.into_iter().enumerate() {
+        let resp = t.wait().expect("response");
         assert_eq!(resp.value.format(), format, "req {i}");
         // 6i/2 = 3i is exactly representable in every format up to
         // 3*400 = 1200 (f16 has 11 significand bits: integers to 2048)
@@ -220,6 +223,79 @@ fn mixed_format_traffic_stays_isolated() {
     svc.shutdown();
 }
 
+/// The vectored-submission contract: `submit_batch` must be
+/// bit-identical to N individual submits of the same operands — across
+/// formats, ops, and group sizes that straddle ladder boundaries.
+#[test]
+fn submit_batch_matches_scalar_submits_bit_identically() {
+    let svc = FpuService::start(quick_config(), native_factory).unwrap();
+    let handle = svc.handle();
+    let mut rng = Xoshiro256::new(0xBA7C);
+    for format in [FormatKind::F32, FormatKind::F16, FormatKind::F64] {
+        for (op, lanes) in [(OpKind::Divide, 777usize), (OpKind::Sqrt, 130), (OpKind::Rsqrt, 31)]
+        {
+            let a: Vec<u64> = (0..lanes)
+                .map(|_| Value::from_f64(format, rng.range_f64(1e-3, 1e3)).bits())
+                .collect();
+            let b: Vec<u64> = if op == OpKind::Divide {
+                (0..lanes)
+                    .map(|_| Value::from_f64(format, rng.range_f64(1e-3, 1e3)).bits())
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            // N individual submissions ...
+            let singles: Vec<_> = (0..lanes)
+                .map(|i| {
+                    let av = Value::from_bits(format, a[i]);
+                    let bv = if op == OpKind::Divide {
+                        Value::from_bits(format, b[i])
+                    } else {
+                        Value::one(format)
+                    };
+                    handle.submit_value(op, av, bv).unwrap()
+                })
+                .collect();
+            let scalar: Vec<u64> =
+                singles.into_iter().map(|t| t.wait().unwrap().value.bits()).collect();
+            // ... vs one vectored submission of the same planes
+            let resp = handle.submit_batch(op, format, &a, &b).unwrap().wait().unwrap();
+            assert_eq!(resp.bits.len(), lanes);
+            for i in 0..lanes {
+                assert_eq!(
+                    resp.bits[i], scalar[i],
+                    "{format} {op:?} lane {i}: vectored {:#x} != scalar {:#x}",
+                    resp.bits[i], scalar[i]
+                );
+            }
+        }
+    }
+    assert_eq!(svc.metrics().snapshot().total_errors(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn oversized_group_splits_transparently() {
+    // a group far beyond max_batch: split across many executor batches,
+    // results still in submission order
+    let svc = FpuService::start(quick_config(), native_factory).unwrap();
+    let handle = svc.handle();
+    let lanes = 3000usize; // max_batch is 256
+    let n: Vec<u64> = (1..=lanes as u32).map(|i| ((2 * i) as f32).to_bits() as u64).collect();
+    let d: Vec<u64> = (0..lanes).map(|_| 2.0f32.to_bits() as u64).collect();
+    let resp =
+        handle.submit_batch(OpKind::Divide, FormatKind::F32, &n, &d).unwrap().wait().unwrap();
+    assert_eq!(resp.len(), lanes);
+    for (i, v) in resp.values().enumerate() {
+        assert_eq!(v.f32(), (i + 1) as f32, "lane {i}");
+    }
+    // the group rode multiple batches without re-discovery overhead
+    let snap = svc.metrics().snapshot();
+    assert!(snap.op(OpKind::Divide).batches >= 2);
+    assert_eq!(snap.op(OpKind::Divide).requests, lanes as u64);
+    svc.shutdown();
+}
+
 #[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_service_end_to_end() {
@@ -229,7 +305,7 @@ fn pjrt_service_end_to_end() {
         return;
     }
     let config = ServiceConfig {
-        batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_micros(500) },
+        batcher: BatcherConfig::new(1024, Duration::from_micros(500)),
         queue_depth: 8192,
         workers: 1,
         poll: Duration::from_micros(50),
@@ -241,12 +317,18 @@ fn pjrt_service_end_to_end() {
     })
     .unwrap();
     let handle = svc.handle();
-    let mut rxs = Vec::new();
+    // the capability table says f32-only: other formats are rejected at
+    // submit time, typed
+    assert!(matches!(
+        handle.divide_in(FormatKind::F64, 1.0, 1.0),
+        Err(ServiceError::Rejected { .. })
+    ));
+    let mut tickets = Vec::new();
     for i in 1..=1000u32 {
-        rxs.push(handle.submit(OpKind::Divide, (3 * i) as f32, 3.0).unwrap());
+        tickets.push(handle.submit(OpKind::Divide, (3 * i) as f32, 3.0).unwrap());
     }
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("pjrt response");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let resp = t.wait().expect("pjrt response");
         assert_eq!(resp.value.f32(), (i + 1) as f32);
     }
     let snap = svc.metrics().snapshot();
