@@ -96,25 +96,59 @@ fn main() {
         ctx64.divide_batch_f64_serial(&na64, &da64, &mut out64);
         black_box(&out64);
     });
-    // the executor's actual hot path: bits planes + persistent scratch
-    // (no per-batch allocation at all)
+    // the executor's actual hot path: width-true planes + persistent
+    // scratch (no per-batch allocation at all)
     let nb: Vec<u64> = na.iter().map(|&v| v.to_bits() as u64).collect();
     let db: Vec<u64> = da.iter().map(|&v| v.to_bits() as u64).collect();
     let mut ob = vec![0u64; LANES];
-    let mut scratch = BatchScratch::new();
-    b.bench("divide_batch_bits<f32> x1024 (serial, scratch reuse)", || {
-        ctx.divide_batch_bits_serial::<formats::F32>(&nb, &db, &mut ob, &mut scratch);
+    let mut scratch64 = BatchScratch::<u64>::new();
+    b.bench("divide_batch_bits<f32> x1024 (limb, serial, scratch reuse)", || {
+        ctx.divide_batch_bits_serial::<formats::F32>(&nb, &db, &mut ob, &mut scratch64);
+        black_box(&ob);
+    });
+    b.bench("divide_batch_bits<f32> x1024 (u128 baseline)", || {
+        ctx.divide_batch_bits_u128_baseline::<formats::F32>(&nb, &db, &mut ob, &mut scratch64);
         black_box(&ob);
     });
     let ctx16 = GoldschmidtContext::new(FormatKind::F16.datapath_config());
     let enc16 = |v: &f32| Value::from_f64(FormatKind::F16, *v as f64).bits();
     let nb16: Vec<u64> = na.iter().map(enc16).collect();
     let db16: Vec<u64> = da.iter().map(enc16).collect();
-    b.bench("divide_batch_bits<f16> x1024 (serial, scratch reuse)", || {
-        ctx16.divide_batch_bits_serial::<formats::F16>(&nb16, &db16, &mut ob, &mut scratch);
+    let mut scratch16 = BatchScratch::<u32>::new();
+    b.bench("divide_batch_bits<f16> x1024 (limb, serial, scratch reuse)", || {
+        ctx16.divide_batch_bits_serial::<formats::F16>(&nb16, &db16, &mut ob, &mut scratch16);
         black_box(&ob);
     });
+    // the serving path proper: u32 planes end to end (half the traffic)
+    let np16: Vec<u32> = nb16.iter().map(|&w| w as u32).collect();
+    let dp16: Vec<u32> = db16.iter().map(|&w| w as u32).collect();
+    let mut op16 = vec![0u32; LANES];
+    // capture the two comparison means at their own call sites, so the
+    // headline ratio cannot silently drift when rows are added
+    let f16_limb = b
+        .bench("divide_batch_plane<f16> x1024 (limb, u32 planes)", || {
+            ctx16.divide_batch_plane_serial::<formats::F16>(
+                &np16,
+                &dp16,
+                &mut op16,
+                &mut scratch16,
+            );
+            black_box(&op16);
+        })
+        .mean_ns();
+    let f16_u128 = b
+        .bench("divide_batch_bits<f16> x1024 (u128 baseline)", || {
+            let s = &mut scratch64;
+            ctx16.divide_batch_bits_u128_baseline::<formats::F16>(&nb16, &db16, &mut ob, s);
+            black_box(&ob);
+        })
+        .mean_ns();
     b.print_report();
+    println!(
+        "limb-vs-u128 (f16 divide x1024, serial): {f16_limb:.0}ns vs {f16_u128:.0}ns \
+         = {:.2}x\n",
+        f16_u128 / f16_limb
+    );
 
     // batcher: form batches from a pre-filled router (per-batch cost)
     let mut b = Bencher::new("hotpath/batcher");

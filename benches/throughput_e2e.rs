@@ -13,10 +13,12 @@
 
 use std::time::{Duration, Instant};
 
+use goldschmidt::arith::limb::PlaneWord;
 use goldschmidt::bench::{black_box, Bencher};
 use goldschmidt::coordinator::{BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig};
+use goldschmidt::formats::{self, FloatFormat, Value};
 use goldschmidt::goldschmidt::{divide_f32, Config};
-use goldschmidt::kernel::GoldschmidtContext;
+use goldschmidt::kernel::{BatchScratch, GoldschmidtContext};
 use goldschmidt::runtime::{Executor, NativeExecutor};
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::json::Json;
@@ -231,12 +233,69 @@ fn kernel_comparison() -> Json {
     ])
 }
 
+/// One limb-vs-u128 row: the limb-sliced **width-true** batch divide
+/// kernel (the actual serving path — `F::Plane` operand planes, so
+/// half-precision rows include the halved memory traffic) against the
+/// retained u128-over-u64-planes baseline, same context, same
+/// 1024-lane batch. Prints the one-line comparison and returns the
+/// JSON row.
+fn limb_vs_u128_row<F: FloatFormat>() -> Json {
+    const LANES: usize = 1024;
+    let kind = F::KIND;
+    let ctx = GoldschmidtContext::new(kind.datapath_config());
+    let mut rng = Xoshiro256::new(0x11B ^ kind.index() as u64);
+    let n64: Vec<u64> = (0..LANES)
+        .map(|_| Value::from_f64(kind, rng.range_f64(1e-2, 1e2)).bits())
+        .collect();
+    let d64: Vec<u64> = (0..LANES)
+        .map(|_| Value::from_f64(kind, rng.range_f64(1e-2, 1e2)).bits())
+        .collect();
+    let n: Vec<F::Plane> = n64.iter().map(|&w| <F::Plane as PlaneWord>::from_u64(w)).collect();
+    let d: Vec<F::Plane> = d64.iter().map(|&w| <F::Plane as PlaneWord>::from_u64(w)).collect();
+    let mut out = vec![<F::Plane>::default(); LANES];
+    let mut out64 = vec![0u64; LANES];
+    let mut scratch = BatchScratch::<F::Plane>::new();
+    let mut scratch_base = BatchScratch::<u64>::new();
+    let mut b = Bencher::new(format!("e2e/limb-vs-u128-{kind}"));
+    b.bench("limb width-true planes (serial)", || {
+        ctx.divide_batch_plane_serial::<F>(&n, &d, &mut out, &mut scratch);
+        black_box(&out);
+    });
+    b.bench("u128 baseline, u64 planes (serial)", || {
+        ctx.divide_batch_bits_u128_baseline::<F>(&n64, &d64, &mut out64, &mut scratch_base);
+        black_box(&out64);
+    });
+    let rs = b.results();
+    let (limb, base) = (rs[0].mean_ns(), rs[1].mean_ns());
+    println!(
+        "limb-vs-u128 ({kind} divide x{LANES}, serial): {limb:.0}ns vs {base:.0}ns = {:.2}x",
+        base / limb
+    );
+    Json::obj([
+        ("format", Json::from(kind.label())),
+        ("lanes", Json::from(LANES)),
+        ("limb_ns_per_batch", Json::from(limb)),
+        ("u128_ns_per_batch", Json::from(base)),
+        ("speedup", Json::from(base / limb)),
+    ])
+}
+
 fn main() {
     let n = requests();
     let mut report: Vec<(&'static str, Json)> = vec![("requests", Json::from(n))];
 
     // ---- batch-kernel hot path vs scalar map -------------------------
     report.push(("kernel_divide_1024", kernel_comparison()));
+
+    // ---- limb-sliced multiply vs the u128 baseline --------------------
+    let limb_rows = vec![
+        limb_vs_u128_row::<formats::F16>(),
+        limb_vs_u128_row::<formats::BF16>(),
+        limb_vs_u128_row::<formats::F32>(),
+        limb_vs_u128_row::<formats::F64>(),
+    ];
+    println!();
+    report.push(("limb_vs_u128", Json::arr(limb_rows)));
 
     // ---- batching policy sweep (native backend) ----------------------
     let mut t = Table::new(

@@ -125,11 +125,24 @@ impl Fixed {
 
     /// Exact wide multiply, then narrow to `self.frac` under `mode`.
     /// Both operands must share a fraction width (as datapath wires do).
+    ///
+    /// Formulated on the 32-bit-limb layer ([`crate::arith::limb`]):
+    /// four widening `u32 x u32 -> u64` products with explicit carries
+    /// instead of one `u64 x u64 -> u128` — bit-identical to the `u128`
+    /// reference (property-tested both here and in `limb`), but built
+    /// from the primitive SIMD units actually have.
     pub fn mul(&self, rhs: &Fixed, mode: Rounding) -> Self {
         assert_eq!(self.frac, rhs.frac, "mixed fraction widths");
-        let wide = (self.bits as u128) * (rhs.bits as u128); // Q4.(2f)
-        let bits = narrow_u128(wide, self.frac, mode);
-        Self { bits: bits.min(q2_max(self.frac) as u128) as u64, frac: self.frac }
+        let sat = q2_max(self.frac);
+        let bits = match mode {
+            Rounding::Nearest => {
+                crate::arith::limb::mul_q2_u64::<true>(self.bits, rhs.bits, self.frac, sat)
+            }
+            Rounding::Truncate => {
+                crate::arith::limb::mul_q2_u64::<false>(self.bits, rhs.bits, self.frac, sat)
+            }
+        };
+        Self { bits, frac: self.frac }
     }
 
     /// Exact `2 - self` (the paper's two's-complement block output).

@@ -1,0 +1,318 @@
+//! 32-bit-limb multiply layer: the vectorizable formulation of the
+//! datapath multiply, and the [`PlaneWord`] abstraction over width-true
+//! plane words.
+//!
+//! # Why limbs
+//!
+//! The paper's lever is shrinking the multiplier to what the precision
+//! actually needs. The software analogue: a `u64 x u64 -> u128` product
+//! (the seed's formulation of every mantissa multiply) compiles to a
+//! 64-bit `mul` producing a 128-bit result — an operation SIMD units do
+//! not have, so the lane loops never auto-vectorize. Slicing each
+//! operand into 32-bit limbs turns one wide product into four widening
+//! `u32 x u32 -> u64` products plus an explicit carry chain — exactly
+//! the primitive AVX2 (`vpmuludq`) and NEON (`umull`) expose 4-8 lanes
+//! wide. And for the half-precision planes the whole word fits one
+//! limb: a Q2.20 datapath word is 22 bits, so the product fits a single
+//! `u64` and the multiply is *one* widening product per lane.
+//!
+//! Everything here is bit-identical to the `u128` reference by
+//! construction (property-tested below); [`Fixed::mul`] and the batch
+//! kernels' complement-multiply step are both built on it.
+//!
+//! [`Fixed::mul`]: crate::arith::fixed::Fixed::mul
+
+use super::fixed::Rounding;
+
+/// Bits per limb.
+pub const LIMB_BITS: u32 = 32;
+/// Low-limb mask.
+pub const LIMB_MASK: u64 = 0xFFFF_FFFF;
+
+/// Exact 128-bit product of two `u64` words as `(lo, hi)` halves,
+/// computed from four `u32 x u32 -> u64` limb products with an explicit
+/// carry chain — no `u128` anywhere. This is the schoolbook 2x2 limb
+/// array; the middle-column sum fits a `u64` (at most `3 * (2^32 - 1)`
+/// after the `p00` carry), so no intermediate overflows.
+#[inline(always)]
+pub fn widening_mul(a: u64, b: u64) -> (u64, u64) {
+    let (a0, a1) = (a & LIMB_MASK, a >> LIMB_BITS);
+    let (b0, b1) = (b & LIMB_MASK, b >> LIMB_BITS);
+    let p00 = a0 * b0;
+    let p01 = a0 * b1;
+    let p10 = a1 * b0;
+    let p11 = a1 * b1;
+    let mid = (p00 >> LIMB_BITS) + (p01 & LIMB_MASK) + (p10 & LIMB_MASK);
+    let lo = (p00 & LIMB_MASK) | (mid << LIMB_BITS);
+    let hi = p11 + (p01 >> LIMB_BITS) + (p10 >> LIMB_BITS) + (mid >> LIMB_BITS);
+    (lo, hi)
+}
+
+/// Narrow a 128-bit `(lo, hi)` product by `shift` bits under a rounding
+/// mode and saturate to `sat`: the limb-sliced image of
+/// `narrow_u128(wide, shift, mode).min(sat)` in [`crate::arith::fixed`].
+/// `shift <= 62` (the `Fixed` fraction range).
+#[inline(always)]
+pub fn narrow_sat(mut lo: u64, mut hi: u64, shift: u32, mode: Rounding, sat: u64) -> u64 {
+    debug_assert!(shift <= 62);
+    if mode == Rounding::Nearest && shift > 0 {
+        // add the half-ulp constant with an explicit carry into hi;
+        // hi < 2^64 - 1 always (it is a product's top half), so the
+        // carry add cannot wrap
+        let (sum, carry) = lo.overflowing_add(1u64 << (shift - 1));
+        lo = sum;
+        hi += carry as u64;
+    }
+    if shift == 0 {
+        return if hi != 0 { sat } else { lo.min(sat) };
+    }
+    if (hi >> shift) != 0 {
+        return sat; // the narrowed value exceeds 64 bits: saturate
+    }
+    ((lo >> shift) | (hi << (64 - shift))).min(sat)
+}
+
+/// Full limb-sliced Q2 multiply on 64-bit words: exact product of two
+/// `Q2.frac` words, narrowed back to `frac` fraction bits under
+/// `NEAREST`, saturated at `sat`. Bit-identical to the `u128` reference
+/// for every input pair.
+#[inline(always)]
+pub fn mul_q2_u64<const NEAREST: bool>(a: u64, b: u64, frac: u32, sat: u64) -> u64 {
+    let (lo, hi) = widening_mul(a, b);
+    let mode = if NEAREST { Rounding::Nearest } else { Rounding::Truncate };
+    narrow_sat(lo, hi, frac, mode, sat)
+}
+
+/// Single-limb Q2 multiply on 32-bit words (the half-precision fast
+/// path): both operands are at most `frac + 2 <= 32` bits, so the exact
+/// product — and its Nearest half-ulp add — fits one `u64`. One
+/// widening multiply per lane; this is the loop shape `vpmuludq` /
+/// `umull` vectorize 4-8 wide.
+#[inline(always)]
+pub fn mul_q2_u32<const NEAREST: bool>(a: u32, b: u32, frac: u32, sat: u32) -> u32 {
+    debug_assert!(frac <= 30, "u32 plane words need frac + 2 <= 32");
+    let wide = (a as u64) * (b as u64);
+    let narrowed = if NEAREST {
+        if frac == 0 {
+            wide
+        } else {
+            // wide <= (2^32 - 1)^2 leaves room for the half-ulp add
+            (wide + (1u64 << (frac - 1))) >> frac
+        }
+    } else {
+        wide >> frac
+    };
+    narrowed.min(sat as u64) as u32
+}
+
+/// A width-true SoA plane word: the storage type of one lane in the
+/// batch kernels and the coordinator's operand planes. `u32` carries the
+/// half-precision planes (16-bit containers, 22-bit Q2.20 datapath
+/// words), `u64` the single/double planes. Every op the lane loops need
+/// is part of the trait (or a supertrait bound), so the kernels
+/// monomorphize to straight-line integer code per width.
+pub trait PlaneWord:
+    Copy
+    + Default
+    + Send
+    + Sync
+    + Eq
+    + Ord
+    + std::fmt::Debug
+    + std::ops::Sub<Output = Self>
+    + std::ops::Add<Output = Self>
+    + std::ops::BitAnd<Output = Self>
+    + std::ops::Shl<u32, Output = Self>
+    + std::ops::Shr<u32, Output = Self>
+    + 'static
+{
+    /// Word width in bits.
+    const BITS: u32;
+    /// The zero word.
+    const ZERO: Self;
+    /// The one word (an integer 1, not a fixed-point 1.0).
+    const ONE: Self;
+
+    /// Truncate a universal `u64` word down (callers guarantee fit;
+    /// debug-checked).
+    fn from_u64(w: u64) -> Self;
+
+    /// Widen to the universal `u64` word.
+    fn to_u64(self) -> u64;
+
+    /// Wrapping subtract (the one's-complement circuit).
+    fn wrapping_sub(self, rhs: Self) -> Self;
+
+    /// The datapath multiply at this width: exact `Q2.frac` product
+    /// narrowed to `frac` under `NEAREST`, saturated at `sat`.
+    fn mul_q2<const NEAREST: bool>(a: Self, b: Self, frac: u32, sat: Self) -> Self;
+}
+
+impl PlaneWord for u32 {
+    const BITS: u32 = 32;
+    const ZERO: Self = 0;
+    const ONE: Self = 1;
+
+    #[inline(always)]
+    fn from_u64(w: u64) -> Self {
+        debug_assert!(w <= u32::MAX as u64, "{w:#x} does not fit a u32 plane word");
+        w as u32
+    }
+
+    #[inline(always)]
+    fn to_u64(self) -> u64 {
+        self as u64
+    }
+
+    #[inline(always)]
+    fn wrapping_sub(self, rhs: Self) -> Self {
+        u32::wrapping_sub(self, rhs)
+    }
+
+    #[inline(always)]
+    fn mul_q2<const NEAREST: bool>(a: Self, b: Self, frac: u32, sat: Self) -> Self {
+        mul_q2_u32::<NEAREST>(a, b, frac, sat)
+    }
+}
+
+impl PlaneWord for u64 {
+    const BITS: u32 = 64;
+    const ZERO: Self = 0;
+    const ONE: Self = 1;
+
+    #[inline(always)]
+    fn from_u64(w: u64) -> Self {
+        w
+    }
+
+    #[inline(always)]
+    fn to_u64(self) -> u64 {
+        self
+    }
+
+    #[inline(always)]
+    fn wrapping_sub(self, rhs: Self) -> Self {
+        u64::wrapping_sub(self, rhs)
+    }
+
+    #[inline(always)]
+    fn mul_q2<const NEAREST: bool>(a: Self, b: Self, frac: u32, sat: Self) -> Self {
+        mul_q2_u64::<NEAREST>(a, b, frac, sat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{self, ensure};
+
+    #[test]
+    fn widening_mul_matches_u128_property() {
+        check::property("limb widening_mul == u128", |g| {
+            let a = g.bits();
+            let b = g.bits();
+            let (lo, hi) = widening_mul(a, b);
+            let want = (a as u128) * (b as u128);
+            ensure(
+                lo == want as u64 && hi == (want >> 64) as u64,
+                format!("{a:#x} * {b:#x}: ({lo:#x}, {hi:#x}) want {want:#x}"),
+            )
+        });
+    }
+
+    #[test]
+    fn widening_mul_edge_patterns() {
+        for &a in &[0u64, 1, u64::MAX, 1u64 << 63, 0x5555_5555_5555_5555, LIMB_MASK] {
+            for &b in &[0u64, 1, u64::MAX, 1u64 << 32, 0xAAAA_AAAA_AAAA_AAAA] {
+                let (lo, hi) = widening_mul(a, b);
+                let want = (a as u128) * (b as u128);
+                assert_eq!(lo, want as u64, "{a:#x}*{b:#x} lo");
+                assert_eq!(hi, (want >> 64) as u64, "{a:#x}*{b:#x} hi");
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_sat_matches_u128_reference_property() {
+        use crate::arith::fixed::narrow_u128;
+        check::property("limb narrow_sat == narrow_u128 + min", |g| {
+            let a = g.bits();
+            let b = g.bits();
+            let shift = g.usize_in(0, 63) as u32; // 0..=62
+            let mode = *g.pick(&[Rounding::Truncate, Rounding::Nearest]);
+            let sat = g.bits();
+            let (lo, hi) = widening_mul(a, b);
+            let got = narrow_sat(lo, hi, shift, mode, sat);
+            let want = narrow_u128((a as u128) * (b as u128), shift, mode).min(sat as u128) as u64;
+            ensure(
+                got == want,
+                format!("{a:#x}*{b:#x} >> {shift} ({mode:?}): {got:#x} want {want:#x}"),
+            )
+        });
+    }
+
+    #[test]
+    fn mul_q2_u64_matches_u128_reference_property() {
+        use crate::arith::fixed::{narrow_u128, q2_max};
+        check::property("mul_q2_u64 == u128 Q2 multiply", |g| {
+            let frac = g.usize_in(0, 63) as u32; // 0..=62
+            let sat = q2_max(frac);
+            let a = g.bits() & sat;
+            let b = g.bits() & sat;
+            let wide = (a as u128) * (b as u128);
+            let want_n = narrow_u128(wide, frac, Rounding::Nearest).min(sat as u128) as u64;
+            let want_t = narrow_u128(wide, frac, Rounding::Truncate).min(sat as u128) as u64;
+            ensure(
+                mul_q2_u64::<true>(a, b, frac, sat) == want_n
+                    && mul_q2_u64::<false>(a, b, frac, sat) == want_t,
+                format!("frac={frac} a={a:#x} b={b:#x}"),
+            )
+        });
+    }
+
+    #[test]
+    fn mul_q2_u32_matches_u64_path_property() {
+        use crate::arith::fixed::q2_max;
+        check::property("u32 fast path == u64 limb path", |g| {
+            let frac = g.usize_in(0, 31) as u32; // 0..=30: the u32 range
+            let sat = q2_max(frac);
+            let a = g.bits() & sat;
+            let b = g.bits() & sat;
+            let got_n = mul_q2_u32::<true>(a as u32, b as u32, frac, sat as u32);
+            let got_t = mul_q2_u32::<false>(a as u32, b as u32, frac, sat as u32);
+            ensure(
+                got_n as u64 == mul_q2_u64::<true>(a, b, frac, sat)
+                    && got_t as u64 == mul_q2_u64::<false>(a, b, frac, sat),
+                format!("frac={frac} a={a:#x} b={b:#x}"),
+            )
+        });
+    }
+
+    #[test]
+    fn narrow_sat_saturates_oversized_products() {
+        // (just under 4.0)^2 at frac 62: the 128-bit product exceeds the
+        // word after narrowing and must clamp, not wrap
+        let sat = u64::MAX;
+        let (lo, hi) = widening_mul(u64::MAX, u64::MAX);
+        assert_eq!(narrow_sat(lo, hi, 62, Rounding::Nearest, sat), sat);
+        assert_eq!(narrow_sat(lo, hi, 62, Rounding::Truncate, sat), sat);
+        // shift 0 with a nonzero hi half also saturates
+        assert_eq!(narrow_sat(0, 1, 0, Rounding::Truncate, sat), sat);
+    }
+
+    #[test]
+    fn plane_word_roundtrip_and_consts() {
+        assert_eq!(<u32 as PlaneWord>::BITS, 32);
+        assert_eq!(<u64 as PlaneWord>::BITS, 64);
+        assert_eq!(u32::from_u64(0xABCD).to_u64(), 0xABCD);
+        assert_eq!(u64::from_u64(u64::MAX).to_u64(), u64::MAX);
+        assert_eq!(<u32 as PlaneWord>::ZERO + <u32 as PlaneWord>::ONE, 1);
+        // trait mul dispatches to the width's implementation
+        let s32 = crate::arith::fixed::q2_max(20) as u32;
+        let one20 = 1u32 << 20;
+        assert_eq!(<u32 as PlaneWord>::mul_q2::<true>(one20, one20, 20, s32), one20);
+        let s64 = crate::arith::fixed::q2_max(58);
+        let one58 = 1u64 << 58;
+        assert_eq!(<u64 as PlaneWord>::mul_q2::<true>(one58, one58, 58, s64), one58);
+    }
+}

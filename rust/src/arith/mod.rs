@@ -3,9 +3,14 @@
 //! is built on.
 //!
 //! * [`fixed`] — unsigned fixed-point `Q2.f` values (the datapath word).
-//! * [`mult`] — bit-level multiplier models (array, Booth/Wallace) used
-//!   both to validate [`fixed`] multiplication and to source the area /
-//!   latency numbers in [`crate::area`].
+//! * [`limb`] — the 32-bit-limb multiply layer (widening
+//!   `u32 x u32 -> u64` products with explicit carry chains) every
+//!   datapath multiply is built on, plus the [`limb::PlaneWord`]
+//!   abstraction over width-true plane words (`u32` half-precision
+//!   planes, `u64` single/double planes).
+//! * [`mult`] — bit-level multiplier models (array, Booth/Wallace,
+//!   limb-sliced) used both to validate [`fixed`] multiplication and to
+//!   source the area / latency numbers in [`crate::area`].
 //! * [`twos`] — the paper's two's-complement block (`K = 2 - r`),
 //!   exact and one's-complement-approximate forms.
 //! * [`fp`] / [`fp64`] — IEEE-754 binary32/64 pack/unpack for the FPU
@@ -15,8 +20,10 @@
 pub mod fixed;
 pub mod fp;
 pub mod fp64;
+pub mod limb;
 pub mod mult;
 pub mod twos;
 pub mod ulp;
 
 pub use fixed::{Fixed, Rounding};
+pub use limb::PlaneWord;

@@ -211,6 +211,64 @@ impl RectangularMultiplier {
     }
 }
 
+/// Limb-sliced multiplier: an `n x n` product built from 32-bit
+/// multiplier tiles plus a carry-chain adder tree — the hardware image
+/// of the software formulation in [`crate::arith::limb`] (and of SIMD
+/// widening-multiply units, which are exactly such tiles). For
+/// `width <= 32` a single tile computes the whole product (the
+/// half-precision planes); wider words use the 2x2 tile array with the
+/// same explicit carry chain the lane loops run.
+#[derive(Clone, Copy, Debug)]
+pub struct LimbSlicedMultiplier {
+    width: u32,
+}
+
+impl LimbSlicedMultiplier {
+    /// New model for `width`-bit operands (<= 64).
+    pub fn new(width: u32) -> Self {
+        assert!((1..=64).contains(&width));
+        Self { width }
+    }
+
+    /// Tiles along one operand dimension (1 for a single-limb word).
+    pub fn limbs(&self) -> u32 {
+        self.width.div_ceil(crate::arith::limb::LIMB_BITS)
+    }
+}
+
+impl MultiplierModel for LimbSlicedMultiplier {
+    fn width(&self) -> u32 {
+        self.width
+    }
+
+    fn multiply(&self, a: u64, b: u64) -> u128 {
+        if self.width < 64 {
+            assert!(a < (1u64 << self.width) && b < (1u64 << self.width));
+        }
+        // the exact limb formulation the datapath multiplies run
+        let (lo, hi) = crate::arith::limb::widening_mul(a, b);
+        ((hi as u128) << 64) | lo as u128
+    }
+
+    fn cost(&self) -> UnitCost {
+        // limbs^2 32-bit booth-wallace tiles + the carry-chain adders
+        // merging the partial columns (three 64-bit additions per extra
+        // tile row, ~5 GE per full-adder bit)
+        let tile = BoothWallaceMultiplier::new(crate::arith::limb::LIMB_BITS).cost();
+        let k = self.limbs() as f64;
+        let merge_gates = if k > 1.0 { (k * k - 1.0) * 64.0 * 5.0 } else { 0.0 };
+        UnitCost {
+            gates: k * k * tile.gates + merge_gates,
+            // tiles run in parallel; the merge chain adds log-depth CLAs
+            depth: tile.depth + if k > 1.0 { 2.0 * 64f64.log2() } else { 0.0 },
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "limb-sliced"
+    }
+}
+
 fn add_shifted(acc: u128, a: u64, shift: u32) -> u128 {
     acc + ((a as u128) << shift)
 }
@@ -315,5 +373,33 @@ mod tests {
     fn names() {
         assert_eq!(ArrayMultiplier::new(8).name(), "array");
         assert_eq!(BoothWallaceMultiplier::new(8).name(), "booth-wallace");
+        assert_eq!(LimbSlicedMultiplier::new(22).name(), "limb-sliced");
+    }
+
+    #[test]
+    fn limb_sliced_matches_native_property() {
+        check::property("limb-sliced mult == native", |g| {
+            let w = g.usize_in(1, 65) as u32; // 1..=64: the full-word case included
+            let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+            let a = g.bits() & mask;
+            let b = g.bits() & mask;
+            let m = LimbSlicedMultiplier::new(w);
+            ensure(
+                m.multiply(a, b) == (a as u128) * (b as u128),
+                format!("w={w} a={a:#x} b={b:#x}"),
+            )
+        });
+    }
+
+    #[test]
+    fn limb_sliced_tile_counts_and_costs() {
+        // a Q2.20 word (22 bits) is a single tile; a Q2.58 word (60
+        // bits) needs the 2x2 array — 4x the tiles plus merge adders
+        let half = LimbSlicedMultiplier::new(22);
+        let double = LimbSlicedMultiplier::new(60);
+        assert_eq!(half.limbs(), 1);
+        assert_eq!(double.limbs(), 2);
+        assert!(double.cost().gates > 3.9 * half.cost().gates);
+        assert!(double.cost().depth > half.cost().depth);
     }
 }

@@ -23,6 +23,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::formats::{PlaneBuf, PlaneWidth};
 use crate::runtime::caps::BackendCaps;
 
 use super::metrics::Metrics;
@@ -109,15 +110,24 @@ impl BatcherConfig {
 }
 
 /// Recycler for batch operand planes: workers return a batch's `a`/`b`
-/// vectors here after execution, and `form_batch` reuses them, so the
-/// steady-state request path allocates no planes. Bounded so a burst
+/// planes here after execution, and `form_batch` reuses them, so the
+/// steady-state request path allocates no planes. Planes are parked
+/// **per width** — a recycled u32 half-precision plane never widens
+/// into a u64 one — and each width's free list is bounded so a burst
 /// cannot pin memory forever.
 #[derive(Clone, Debug, Default)]
 pub struct PlanePool {
-    free: Arc<Mutex<Vec<Vec<u64>>>>,
+    free: Arc<Mutex<PoolLists>>,
 }
 
-/// Retained planes cap: beyond this, returned planes are dropped.
+#[derive(Debug, Default)]
+struct PoolLists {
+    w32: Vec<Vec<u32>>,
+    w64: Vec<Vec<u64>>,
+}
+
+/// Retained planes cap per width: beyond this, returned planes are
+/// dropped instead of parked.
 const POOL_MAX_PLANES: usize = 64;
 
 impl PlanePool {
@@ -126,27 +136,52 @@ impl PlanePool {
         Self::default()
     }
 
-    /// Take a cleared plane (capacity retained from earlier batches).
-    pub fn take(&self) -> Vec<u64> {
-        self.free.lock().expect("plane pool poisoned").pop().unwrap_or_default()
+    /// Take a cleared plane of the given width (capacity retained from
+    /// earlier batches of that width).
+    pub fn take(&self, width: PlaneWidth) -> PlaneBuf {
+        let mut free = self.free.lock().expect("plane pool poisoned");
+        match width {
+            PlaneWidth::W32 => PlaneBuf::W32(free.w32.pop().unwrap_or_default()),
+            PlaneWidth::W64 => PlaneBuf::W64(free.w64.pop().unwrap_or_default()),
+        }
     }
 
-    /// Return a plane for reuse (capacity-less vectors — e.g. the empty
+    /// Return a plane for reuse (capacity-less planes — e.g. the empty
     /// `b` of a unary batch — are dropped, not parked).
-    pub fn give(&self, mut plane: Vec<u64>) {
+    pub fn give(&self, mut plane: PlaneBuf) {
         if plane.capacity() == 0 {
             return;
         }
         plane.clear();
         let mut free = self.free.lock().expect("plane pool poisoned");
-        if free.len() < POOL_MAX_PLANES {
-            free.push(plane);
+        match plane {
+            PlaneBuf::W32(v) => {
+                if free.w32.len() < POOL_MAX_PLANES {
+                    free.w32.push(v);
+                }
+            }
+            PlaneBuf::W64(v) => {
+                if free.w64.len() < POOL_MAX_PLANES {
+                    free.w64.push(v);
+                }
+            }
         }
     }
 
-    /// Planes currently parked in the pool (diagnostics/tests).
+    /// Planes currently parked in the pool, both widths
+    /// (diagnostics/tests).
     pub fn parked(&self) -> usize {
-        self.free.lock().expect("plane pool poisoned").len()
+        let free = self.free.lock().expect("plane pool poisoned");
+        free.w32.len() + free.w64.len()
+    }
+
+    /// Planes currently parked at one width (diagnostics/tests).
+    pub fn parked_at(&self, width: PlaneWidth) -> usize {
+        let free = self.free.lock().expect("plane pool poisoned");
+        match width {
+            PlaneWidth::W32 => free.w32.len(),
+            PlaneWidth::W64 => free.w64.len(),
+        }
     }
 }
 
@@ -160,11 +195,12 @@ pub struct Batch {
     /// The work items riding this batch (FIFO order; lane offsets
     /// within the planes follow item order).
     pub items: Vec<WorkItem>,
-    /// Padded operand plane as raw format words.
-    pub a: Vec<u64>,
+    /// Padded operand plane as width-true raw format words (`u32` lanes
+    /// for half-precision batches).
+    pub a: PlaneBuf,
     /// Second operand plane (padded), divide only — empty for unary
     /// ops, whose executors never read it.
-    pub b: Vec<u64>,
+    pub b: PlaneBuf,
     /// Padded (executable) size; `live() <= padded`.
     pub padded: usize,
 }
@@ -193,10 +229,15 @@ pub struct DynamicBatcher {
     /// Per-(op, format) ladder of available executable batch sizes
     /// (ascending), from the backend's negotiated capabilities.
     ladders: [Vec<usize>; OP_FORMAT_SLOTS],
+    /// Per-format plane width the backend consumes (width-true unless
+    /// the backend negotiated otherwise); batch planes are drawn from
+    /// the pool at this width.
+    widths: [PlaneWidth; FormatKind::ALL.len()],
 }
 
 impl DynamicBatcher {
-    /// New batcher over a backend's capability ladders.
+    /// New batcher over a backend's capability ladders and plane
+    /// widths.
     pub fn new(config: BatcherConfig, caps: &BackendCaps) -> Self {
         let mut ladders: [Vec<usize>; OP_FORMAT_SLOTS] = std::array::from_fn(|_| Vec::new());
         for &op in &OpKind::ALL {
@@ -204,7 +245,8 @@ impl DynamicBatcher {
                 ladders[op_format_slot(op, format)] = caps.ladder(op, format).to_vec();
             }
         }
-        Self { config, ladders }
+        let widths = std::array::from_fn(|i| caps.plane_width(FormatKind::ALL[i]));
+        Self { config, ladders, widths }
     }
 
     /// The config in force.
@@ -290,11 +332,14 @@ impl DynamicBatcher {
         let live: usize = items.iter().map(|i| i.lanes()).sum();
         let padded = self.pad_to(op, format, live);
         // pad with neutral operands: 1.0 / 1.0 stays in-domain for every
-        // op; unary batches build no divisor plane at all
+        // op; unary batches build no divisor plane at all. Planes come
+        // from the pool at the backend's negotiated width (u32 for
+        // half-precision batches: half the flush traffic).
         let divide = op == OpKind::Divide;
         let one = format.one_bits();
-        let mut a = pool.take();
-        let mut b = if divide { pool.take() } else { Vec::new() };
+        let width = self.widths[format.index()];
+        let mut a = pool.take(width);
+        let mut b = if divide { pool.take(width) } else { PlaneBuf::new(width) };
         a.reserve(padded);
         if divide {
             b.reserve(padded);
@@ -516,7 +561,7 @@ mod tests {
         assert_eq!(batch.a.len(), 256);
         assert_eq!(batch.b.len(), 256);
         // padding is the neutral operand in the batch format
-        assert!(batch.a[70..].iter().all(|&x| x == F32.one_bits()));
+        assert!((70..256).all(|i| batch.a.get(i) == F32.one_bits()));
         assert!((batch.waste() - (1.0 - 70.0 / 256.0)).abs() < 1e-12);
     }
 
@@ -530,8 +575,11 @@ mod tests {
         let batch = form(&b, &mut r, OpKind::Divide, FormatKind::F16).unwrap();
         assert_eq!(batch.format, FormatKind::F16);
         assert_eq!(batch.padded, 64);
-        assert!(batch.a[3..].iter().all(|&x| x == 0x3C00)); // f16 1.0
-        assert!(batch.b[3..].iter().all(|&x| x == 0x3C00));
+        // half-precision batches ride width-true u32 planes
+        assert_eq!(batch.a.width(), PlaneWidth::W32);
+        assert_eq!(batch.b.width(), PlaneWidth::W32);
+        assert!((3..64).all(|i| batch.a.get(i) == 0x3C00)); // f16 1.0
+        assert!((3..64).all(|i| batch.b.get(i) == 0x3C00));
     }
 
     #[test]
@@ -541,8 +589,8 @@ mod tests {
             op: OpKind::Divide,
             format: F32,
             items: Vec::new(),
-            a: Vec::new(),
-            b: Vec::new(),
+            a: PlaneBuf::default(),
+            b: PlaneBuf::default(),
             padded: 0,
         };
         assert_eq!(batch.waste(), 0.0);
@@ -558,7 +606,7 @@ mod tests {
         let batch = form(&b, &mut r, OpKind::Divide, F32).unwrap();
         for (i, item) in batch.items.iter().enumerate() {
             assert_eq!(item.id, i as u64);
-            assert_eq!(batch.a[i], (i as f32 + 2.0).to_bits() as u64);
+            assert_eq!(batch.a.get(i), (i as f32 + 2.0).to_bits() as u64);
         }
     }
 
@@ -592,8 +640,8 @@ mod tests {
         assert_eq!(batches[0].padded, 256);
         assert_eq!(batches[1].live(), 44);
         // lanes arrive pre-formed, in order, without re-discovery
-        assert_eq!(batches[0].a[..256], a[..256]);
-        assert_eq!(batches[1].a[..44], a[256..]);
+        assert!((0..256).all(|i| batches[0].a.get(i) == a[i]));
+        assert!((0..44).all(|i| batches[1].a.get(i) == a[256 + i]));
         // unary batch: no divisor plane is built at all
         assert!(batches[0].b.is_empty());
         assert!(batches[1].b.is_empty());
@@ -658,16 +706,55 @@ mod tests {
 
     #[test]
     fn plane_pool_recycles_capacity() {
+        // capacity must actually be retained across give/take cycles,
+        // independently per width
         let pool = PlanePool::new();
-        let mut v = pool.take();
-        assert_eq!(v.capacity(), 0);
-        v.resize(1024, 7);
+        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            let mut v = pool.take(width);
+            assert_eq!(v.capacity(), 0);
+            v.resize(1024, 7);
+            pool.give(v);
+            assert_eq!(pool.parked_at(width), 1);
+            let v = pool.take(width);
+            assert!(v.is_empty());
+            assert_eq!(v.width(), width);
+            assert!(v.capacity() >= 1024, "{width:?} capacity lost in the pool");
+            assert_eq!(pool.parked_at(width), 0);
+            pool.give(v);
+        }
+        assert_eq!(pool.parked(), 2);
+    }
+
+    #[test]
+    fn plane_pool_never_crosses_widths() {
+        // a parked u32 plane must not come back as (or displace) a u64
+        // plane
+        let pool = PlanePool::new();
+        let mut v = pool.take(PlaneWidth::W32);
+        v.resize(512, 1);
         pool.give(v);
-        assert_eq!(pool.parked(), 1);
-        let v = pool.take();
-        assert!(v.is_empty());
-        assert!(v.capacity() >= 1024);
-        assert_eq!(pool.parked(), 0);
+        let w64 = pool.take(PlaneWidth::W64);
+        assert_eq!(w64.width(), PlaneWidth::W64);
+        assert_eq!(w64.capacity(), 0, "must not hand the u32 plane across widths");
+        assert_eq!(pool.parked_at(PlaneWidth::W32), 1);
+    }
+
+    #[test]
+    fn plane_pool_cap_drops_excess_planes() {
+        // the retained-planes cap bounds each width's free list: a
+        // burst of returns beyond the cap is dropped, not accumulated
+        let pool = PlanePool::new();
+        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            for _ in 0..200 {
+                let mut v = PlaneBuf::new(width);
+                v.resize(64, 0);
+                pool.give(v);
+            }
+            assert_eq!(pool.parked_at(width), POOL_MAX_PLANES, "{width:?} free list not capped");
+        }
+        // capacity-less planes (unary b planes) are never parked
+        pool.give(PlaneBuf::new(PlaneWidth::W64));
+        assert_eq!(pool.parked_at(PlaneWidth::W64), POOL_MAX_PLANES);
     }
 
     #[test]

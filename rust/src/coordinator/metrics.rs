@@ -29,6 +29,54 @@ struct SliceMetrics {
     batch_exec_ns: LogHistogram,
     errors: u64,
     shed: u64,
+    admission_rejected: u64,
+    /// Would-reject submissions seen by admission control (drives the
+    /// 1-in-N probe that keeps a rejecting slot able to recover).
+    admission_probes: u64,
+    recent: RecentWindow,
+}
+
+/// Batches a slice must have completed before its latency window is
+/// trusted as a queue-delay estimate (admission control stays out of
+/// the way on a cold service).
+const ADMISSION_MIN_BATCHES: usize = 4;
+
+/// Recent-batch window size backing the queue-delay estimate.
+const RECENT_WINDOW: usize = 32;
+
+/// Every `N`-th would-reject submission is admitted anyway as a probe.
+const ADMISSION_PROBE_PERIOD: u64 = 16;
+
+/// Sliding window of per-batch latency samples: the queue-delay
+/// estimate reads the median of the last [`RECENT_WINDOW`] batches, so
+/// it **decays** as the service recovers — a cumulative histogram
+/// would let one overload burst poison admission control forever.
+#[derive(Clone, Debug, Default)]
+struct RecentWindow {
+    buf: Vec<u64>,
+    idx: usize,
+}
+
+impl RecentWindow {
+    fn push(&mut self, sample: u64) {
+        if self.buf.len() < RECENT_WINDOW {
+            self.buf.push(sample);
+        } else {
+            self.buf[self.idx] = sample;
+        }
+        self.idx = (self.idx + 1) % RECENT_WINDOW;
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Median of the window (callers ensure it is non-empty).
+    fn median(&self) -> u64 {
+        let mut v = self.buf.clone();
+        v.sort_unstable();
+        v[v.len() / 2]
+    }
 }
 
 /// Shared metrics sink (interior mutability; cheap enough for the
@@ -77,6 +125,11 @@ impl Metrics {
         for &(l, n) in latencies_ns {
             s.latency.record_n(l, n as u64);
         }
+        // the admission window tracks the batch's slowest rider — the
+        // oldest waiter is what queue delay actually did to this batch
+        if let Some(worst) = latencies_ns.iter().map(|&(l, _)| l).max() {
+            s.recent.push(worst);
+        }
     }
 
     /// Record a failed batch (all its lanes error out).
@@ -91,6 +144,46 @@ impl Metrics {
         m[idx(op, format)].shed += count;
     }
 
+    /// Record lanes rejected by deadline admission control (never
+    /// queued — distinct from `shed`, which counts work admitted and
+    /// then expired in the queue).
+    pub fn record_admission_reject(&self, op: OpKind, format: FormatKind, count: u64) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        m[idx(op, format)].admission_rejected += count;
+    }
+
+    /// Queue-delay estimate for one (op, format) slot, in nanoseconds:
+    /// the median worst-rider latency over the slot's last
+    /// `RECENT_WINDOW` batches — a **windowed** signal, so it decays as
+    /// the service recovers instead of remembering every overload
+    /// forever. `None` until a minimum number of batches
+    /// (`ADMISSION_MIN_BATCHES`, currently 4) have completed, so
+    /// admission control never rejects on a cold slot. Reads one slice
+    /// under the lock — cheap enough for the deadline-submit path
+    /// (deadline-free submits never call it).
+    pub fn queue_delay_estimate_ns(&self, op: OpKind, format: FormatKind) -> Option<u64> {
+        let m = self.inner.lock().expect("metrics poisoned");
+        let s = &m[idx(op, format)];
+        if s.recent.len() < ADMISSION_MIN_BATCHES {
+            return None;
+        }
+        Some(s.recent.median())
+    }
+
+    /// Admission probe gate, called for each submission the estimate
+    /// says to reject: every `ADMISSION_PROBE_PERIOD`-th would-reject
+    /// is admitted anyway (returns `true`). The probes keep a stream of
+    /// fresh latency samples flowing through a rejecting slot, so when
+    /// the backlog clears the window median falls and full admission
+    /// resumes — without the probe, a slot whose traffic is all
+    /// deadline-gated could reject forever on stale signal.
+    pub fn admission_probe(&self, op: OpKind, format: FormatKind) -> bool {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        let s = &mut m[idx(op, format)];
+        s.admission_probes += 1;
+        s.admission_probes % ADMISSION_PROBE_PERIOD == 0
+    }
+
     /// Snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().expect("metrics poisoned");
@@ -99,6 +192,7 @@ impl Metrics {
             batches: s.batches,
             errors: s.errors,
             shed: s.shed,
+            admission_rejected: s.admission_rejected,
             mean_latency_ns: s.latency.mean(),
             p50_latency_ns: s.latency.quantile(0.5),
             p99_latency_ns: s.latency.quantile(0.99),
@@ -122,6 +216,7 @@ impl Metrics {
                 agg.live_slots += s.live_slots;
                 agg.errors += s.errors;
                 agg.shed += s.shed;
+                agg.admission_rejected += s.admission_rejected;
                 agg.latency.merge(&s.latency);
                 agg.batch_exec_ns.merge(&s.batch_exec_ns);
                 op_formats.push(OpFormatSnapshot { op, format, body: snap_of(s) });
@@ -145,6 +240,9 @@ pub struct OpSnapshotBody {
     pub errors: u64,
     /// Lanes shed by deadline expiry (never executed).
     pub shed: u64,
+    /// Lanes rejected by deadline admission control at submit time
+    /// (never queued).
+    pub admission_rejected: u64,
     /// Mean end-to-end latency (ns).
     pub mean_latency_ns: f64,
     /// Median end-to-end latency (ns, bucket upper edge).
@@ -229,6 +327,11 @@ impl MetricsSnapshot {
     pub fn total_shed(&self) -> u64 {
         self.ops.iter().map(|s| s.shed).sum()
     }
+
+    /// Total admission-rejected lanes.
+    pub fn total_admission_rejected(&self) -> u64 {
+        self.ops.iter().map(|s| s.admission_rejected).sum()
+    }
 }
 
 #[cfg(test)]
@@ -306,6 +409,70 @@ mod tests {
         assert_eq!(s.op_format(OpKind::Divide, FormatKind::F16).shed, 5);
         assert_eq!(s.op(OpKind::Divide).shed, 5);
         assert_eq!(s.total_requests(), 0);
+    }
+
+    #[test]
+    fn queue_delay_estimate_needs_signal_then_tracks_p50() {
+        let m = Metrics::new();
+        // no batches: no estimate (cold slot, admission stays open)
+        assert!(m.queue_delay_estimate_ns(OpKind::Divide, F32).is_none());
+        for _ in 0..3 {
+            m.record_batch(OpKind::Divide, F32, &[(5_000, 1)], 100, 1);
+        }
+        assert!(m.queue_delay_estimate_ns(OpKind::Divide, F32).is_none(), "below min batches");
+        m.record_batch(OpKind::Divide, F32, &[(5_000, 1)], 100, 1);
+        let est = m.queue_delay_estimate_ns(OpKind::Divide, F32).expect("warm slot");
+        assert!(est >= 5_000, "p50 estimate below observed latency: {est}");
+        // other slots stay cold
+        assert!(m.queue_delay_estimate_ns(OpKind::Sqrt, F32).is_none());
+        assert!(m.queue_delay_estimate_ns(OpKind::Divide, FormatKind::F16).is_none());
+    }
+
+    #[test]
+    fn queue_delay_estimate_recovers_after_overload() {
+        // the window must decay: an overload burst followed by fast
+        // batches brings the estimate back down (a cumulative histogram
+        // would keep rejecting forever)
+        let m = Metrics::new();
+        for _ in 0..40 {
+            m.record_batch(OpKind::Divide, F32, &[(50_000_000, 1)], 100, 1);
+        }
+        assert!(m.queue_delay_estimate_ns(OpKind::Divide, F32).unwrap() >= 50_000_000);
+        for _ in 0..RECENT_WINDOW {
+            m.record_batch(OpKind::Divide, F32, &[(2_000, 1)], 100, 1);
+        }
+        let est = m.queue_delay_estimate_ns(OpKind::Divide, F32).unwrap();
+        assert!(est <= 2_000, "window did not decay: {est}");
+    }
+
+    #[test]
+    fn admission_probe_admits_one_in_period() {
+        let m = Metrics::new();
+        let mut admitted = 0;
+        for _ in 0..(2 * ADMISSION_PROBE_PERIOD) {
+            if m.admission_probe(OpKind::Divide, F32) {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, 2, "exactly one probe per period");
+        // the first would-reject is never a probe (rejection is prompt)
+        let m = Metrics::new();
+        assert!(!m.admission_probe(OpKind::Divide, F32));
+        // probes are per slot
+        assert!(!m.admission_probe(OpKind::Sqrt, F32));
+    }
+
+    #[test]
+    fn admission_rejects_counted_separately() {
+        let m = Metrics::new();
+        m.record_admission_reject(OpKind::Divide, F32, 7);
+        m.record_shed(OpKind::Divide, F32, 2);
+        let s = m.snapshot();
+        assert_eq!(s.op_format(OpKind::Divide, F32).admission_rejected, 7);
+        assert_eq!(s.op(OpKind::Divide).admission_rejected, 7);
+        assert_eq!(s.total_admission_rejected(), 7);
+        assert_eq!(s.total_shed(), 2);
+        assert_eq!(s.total_errors(), 0);
     }
 
     #[test]

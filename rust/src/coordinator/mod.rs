@@ -43,8 +43,16 @@
 //!   `Deadline` for shed work, `Shutdown` for teardown. Nothing is
 //!   signalled by dropping a sender.
 //! * **Deadlines** — `submit_value_deadline` / `submit_batch_deadline`
-//!   attach a completion deadline; expired work is shed by the
-//!   dispatcher (counted in [`Metrics`] as `shed`), not executed.
+//!   attach a completion deadline, gated by **admission control**: a
+//!   budget the slot's queue-delay estimate already exceeds fails at
+//!   submit time with `ServiceError::Deadline` (counted as
+//!   `admission_rejected`), before any queueing. Admitted work whose
+//!   deadline expires in the queue is shed by the dispatcher (counted
+//!   in [`Metrics`] as `shed`), not executed.
+//! * **Width-true planes** — operand and result planes are
+//!   [`PlaneBuf`](crate::formats::PlaneBuf)s at the format's native
+//!   word (u32 for f16/bf16, u64 for f32/f64), recycled per width
+//!   through the [`PlanePool`], halving half-precision flush traffic.
 //! * **Capability negotiation** — the backend's
 //!   [`BackendCaps`](crate::runtime::BackendCaps) table (per-(op,
 //!   format) support + batch ladders) is read once at startup and

@@ -14,6 +14,8 @@ use std::time::Instant;
 
 pub use crate::formats::{FormatKind, Value};
 
+use crate::formats::PlaneBuf;
+
 use super::ticket::{BatchTicket, Ticket, TicketCore};
 
 /// The operations the divider unit serves.
@@ -147,11 +149,14 @@ enum Payload {
 }
 
 /// The operand planes of one vectored submission (`b` empty for unary
-/// ops).
+/// ops), stored **width-true** at the submission format's plane width —
+/// a queued half-precision group holds `u32` lanes, half the memory of
+/// the old universal `u64` planes, all the way from submit to batch
+/// formation.
 #[derive(Debug)]
 struct GroupPlanes {
-    a: Vec<u64>,
-    b: Vec<u64>,
+    a: PlaneBuf,
+    b: PlaneBuf,
 }
 
 /// A unit of work travelling through the coordinator: one request, or a
@@ -233,6 +238,7 @@ impl WorkItem {
         }
         let lanes = a.len();
         let core = TicketCore::new(lanes);
+        let width = format.plane_width();
         let item = WorkItem {
             id,
             op,
@@ -240,7 +246,10 @@ impl WorkItem {
             deadline,
             format,
             payload: Payload::Group {
-                planes: Arc::new(GroupPlanes { a: a.to_vec(), b: b.to_vec() }),
+                planes: Arc::new(GroupPlanes {
+                    a: PlaneBuf::from_u64_slice(width, a),
+                    b: PlaneBuf::from_u64_slice(width, b),
+                }),
                 start: 0,
                 len: lanes,
             },
@@ -302,15 +311,17 @@ impl WorkItem {
         }
     }
 
-    /// Append this item's operand lanes to a batch's planes. `b_out`
-    /// is `None` for unary-op batches (no divisor plane is built at
-    /// all); a group submitted without a `b` plane but batched for
-    /// divide fills its divisor lanes with the neutral `one_bits` so
-    /// the planes stay rectangular.
+    /// Append this item's operand lanes to a batch's width-true planes.
+    /// `b_out` is `None` for unary-op batches (no divisor plane is
+    /// built at all); a group submitted without a `b` plane but batched
+    /// for divide fills its divisor lanes with the neutral `one_bits`
+    /// so the planes stay rectangular. Group windows whose stored width
+    /// matches the batch plane (the common case — both derive from the
+    /// format) copy as straight `memcpy`s.
     pub(crate) fn push_operands(
         &self,
-        a_out: &mut Vec<u64>,
-        b_out: Option<&mut Vec<u64>>,
+        a_out: &mut PlaneBuf,
+        b_out: Option<&mut PlaneBuf>,
         one_bits: u64,
     ) {
         match &self.payload {
@@ -321,12 +332,12 @@ impl WorkItem {
                 }
             }
             Payload::Group { planes, start, len } => {
-                a_out.extend_from_slice(&planes.a[*start..*start + *len]);
+                a_out.extend_window(&planes.a, *start, *len);
                 if let Some(b_out) = b_out {
                     if planes.b.is_empty() {
                         b_out.resize(b_out.len() + *len, one_bits);
                     } else {
-                        b_out.extend_from_slice(&planes.b[*start..*start + *len]);
+                        b_out.extend_window(&planes.b, *start, *len);
                     }
                 }
             }
@@ -441,16 +452,17 @@ mod tests {
         let front = item.split_off_front(4);
         assert_eq!(front.lanes(), 4);
         assert_eq!(item.lanes(), 6);
-        // operand windows stay aligned
-        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        // operand windows stay aligned (width-true f32 planes)
+        let width = FormatKind::F32.plane_width();
+        let (mut pa, mut pb) = (PlaneBuf::new(width), PlaneBuf::new(width));
         front.push_operands(&mut pa, Some(&mut pb), 0);
         item.push_operands(&mut pa, Some(&mut pb), 0);
-        assert_eq!(pa, a);
-        assert_eq!(pb, vec![0u64; 10]); // b-less group: neutral divisor lanes
+        assert_eq!((0..pa.len()).map(|i| pa.get(i)).collect::<Vec<_>>(), a);
+        assert_eq!(pb, PlaneBuf::from_u64_slice(width, &[0u64; 10])); // b-less group: neutral lanes
         // and a unary batch builds no divisor plane at all
-        let mut pa2 = Vec::new();
+        let mut pa2 = PlaneBuf::new(width);
         item.push_operands(&mut pa2, None, 0);
-        assert_eq!(pa2, a[4..]);
+        assert_eq!((0..pa2.len()).map(|i| pa2.get(i)).collect::<Vec<_>>(), a[4..]);
         // completing the halves out of order still fills the right slots
         let tail: Vec<u64> = (4..10u64).map(|i| i * 2).collect();
         item.complete(&tail, 50, 64);
@@ -459,6 +471,18 @@ mod tests {
         let resp = ticket.wait().expect("ok");
         assert_eq!(resp.bits, (0..10u64).map(|i| i * 2).collect::<Vec<_>>());
         assert_eq!(resp.latency_ns, 80);
+    }
+
+    #[test]
+    fn half_precision_groups_store_width_true_planes() {
+        // a queued f16 group holds u32 lanes end to end
+        let a: Vec<u64> = vec![0x3C00; 8];
+        let (item, _t) = WorkItem::group(1, OpKind::Sqrt, FormatKind::F16, &a, &[], None);
+        let mut pa = PlaneBuf::for_format(FormatKind::F16);
+        item.push_operands(&mut pa, None, 0);
+        assert_eq!(pa.width(), crate::formats::PlaneWidth::W32);
+        assert_eq!(pa.len(), 8);
+        assert_eq!(pa.get(0), 0x3C00);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
+use crate::formats::{PlaneRefMut, PlaneWidth};
 use crate::runtime::caps::BackendCaps;
 use crate::runtime::executor::Executor;
 
@@ -78,6 +79,7 @@ pub struct ServiceHandle {
     tx: SyncSender<DispatchMsg>,
     next_id: Arc<AtomicU64>,
     caps: Arc<BackendCaps>,
+    metrics: Arc<Metrics>,
 }
 
 impl ServiceHandle {
@@ -85,6 +87,36 @@ impl ServiceHandle {
     /// serve, per (op, format), and at which batch sizes).
     pub fn capabilities(&self) -> &BackendCaps {
         &self.caps
+    }
+
+    /// Deadline admission control: a deadline-carrying submission whose
+    /// budget is already smaller than the queue-delay estimate for its
+    /// (op, format) slot is rejected **at submit time** with
+    /// [`ServiceError::Deadline`] — the work never enters the queue
+    /// only to be shed at batch formation. The estimate is windowed
+    /// (median worst-rider latency over the slot's recent batches, see
+    /// [`Metrics::queue_delay_estimate_ns`]), and every N-th
+    /// would-reject is admitted anyway as a probe
+    /// ([`Metrics::admission_probe`]), so a rejecting slot keeps
+    /// sampling the service and recovers as soon as the backlog
+    /// clears. With no signal yet (a cold service) everything is
+    /// admitted and deadline enforcement falls to the batcher's shed
+    /// path as before.
+    fn admit_deadline(
+        &self,
+        op: OpKind,
+        format: FormatKind,
+        lanes: usize,
+        deadline: Duration,
+    ) -> Result<(), ServiceError> {
+        if let Some(est_ns) = self.metrics.queue_delay_estimate_ns(op, format) {
+            if Duration::from_nanos(est_ns) > deadline && !self.metrics.admission_probe(op, format)
+            {
+                self.metrics.record_admission_reject(op, format, lanes as u64);
+                return Err(ServiceError::Deadline);
+            }
+        }
+        Ok(())
     }
 
     fn check_supported(&self, op: OpKind, format: FormatKind) -> Result<(), ServiceError> {
@@ -107,6 +139,18 @@ impl ServiceHandle {
         self.tx.send(DispatchMsg::Req(item)).map_err(|_| ServiceError::Shutdown)
     }
 
+    /// Validation shared by the single-request submit family (cheap:
+    /// two compares, no allocation — the admission reject path relies
+    /// on that).
+    fn check_single(&self, op: OpKind, a: Value, b: Value) -> Result<(), ServiceError> {
+        if a.format() != b.format() {
+            return Err(ServiceError::Rejected {
+                reason: format!("operand format mismatch: {} vs {}", a.format(), b.format()),
+            });
+        }
+        self.check_supported(op, a.format())
+    }
+
     fn make_single(
         &self,
         op: OpKind,
@@ -114,12 +158,7 @@ impl ServiceHandle {
         b: Value,
         deadline: Option<Duration>,
     ) -> Result<(WorkItem, Ticket), ServiceError> {
-        if a.format() != b.format() {
-            return Err(ServiceError::Rejected {
-                reason: format!("operand format mismatch: {} vs {}", a.format(), b.format()),
-            });
-        }
-        self.check_supported(op, a.format())?;
+        self.check_single(op, a, b)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         Ok(WorkItem::single(id, op, a, b, deadline.map(|d| Instant::now() + d)))
     }
@@ -134,9 +173,12 @@ impl ServiceHandle {
         Ok(ticket)
     }
 
-    /// [`Self::submit_value`] with a completion deadline: if the request
-    /// is still queued when the deadline arrives, the dispatcher sheds
-    /// it (counted in metrics) and the ticket resolves to
+    /// [`Self::submit_value`] with a completion deadline. Admission
+    /// control runs first: when the queue-delay estimate already
+    /// exceeds `deadline`, the submission fails immediately with
+    /// [`ServiceError::Deadline`]. Once admitted, a request still
+    /// queued when the deadline arrives is shed by the dispatcher
+    /// (counted in metrics) and the ticket resolves to
     /// [`ServiceError::Deadline`] instead of executing stale work.
     pub fn submit_value_deadline(
         &self,
@@ -145,6 +187,12 @@ impl ServiceHandle {
         b: Value,
         deadline: Duration,
     ) -> Result<Ticket, ServiceError> {
+        // validate first (a malformed submission is Rejected with its
+        // reason, never misreported as a Deadline admission miss), and
+        // only construct once admitted — the overload reject path
+        // allocates nothing
+        self.check_single(op, a, b)?;
+        self.admit_deadline(op, a.format(), 1, deadline)?;
         let (item, ticket) = self.make_single(op, a, b, Some(deadline))?;
         self.send(item)?;
         Ok(ticket)
@@ -203,9 +251,25 @@ impl ServiceHandle {
             }
             _ => {}
         }
+        // raw words must fit the format's container: the queue stores
+        // planes width-true, so an oversized word would otherwise be a
+        // debug panic / silent release truncation instead of a typed
+        // rejection of bad client input
+        if format.total_bits() < 64 {
+            let mask = !((1u64 << format.total_bits()) - 1);
+            if let Some(bad) = a.iter().chain(b.iter()).find(|&&w| w & mask != 0) {
+                return Err(ServiceError::Rejected {
+                    reason: format!(
+                        "operand word {bad:#x} does not fit a {}-bit {format} container",
+                        format.total_bits()
+                    ),
+                });
+            }
+        }
         self.check_supported(op, format)
     }
 
+    /// Callers have already run [`Self::check_batch`].
     fn submit_batch_inner(
         &self,
         op: OpKind,
@@ -214,7 +278,6 @@ impl ServiceHandle {
         b: &[u64],
         deadline: Option<Duration>,
     ) -> Result<BatchTicket, ServiceError> {
-        self.check_batch(op, format, a, b)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (item, ticket) =
             WorkItem::group(id, op, format, a, b, deadline.map(|d| Instant::now() + d));
@@ -235,11 +298,14 @@ impl ServiceHandle {
         a: &[u64],
         b: &[u64],
     ) -> Result<BatchTicket, ServiceError> {
+        self.check_batch(op, format, a, b)?;
         self.submit_batch_inner(op, format, a, b, None)
     }
 
     /// [`Self::submit_batch`] with a completion deadline covering the
-    /// whole group.
+    /// whole group. Admission control applies as in
+    /// [`Self::submit_value_deadline`]: a budget the queue-delay
+    /// estimate already exceeds is rejected here, before any queueing.
     pub fn submit_batch_deadline(
         &self,
         op: OpKind,
@@ -248,6 +314,9 @@ impl ServiceHandle {
         b: &[u64],
         deadline: Duration,
     ) -> Result<BatchTicket, ServiceError> {
+        // validation precedes admission (see submit_value_deadline)
+        self.check_batch(op, format, a, b)?;
+        self.admit_deadline(op, format, a.len(), deadline)?;
         self.submit_batch_inner(op, format, a, b, Some(deadline))
     }
 
@@ -386,8 +455,12 @@ impl FpuService {
                 .expect("spawn dispatcher")
         };
 
-        let handle =
-            ServiceHandle { tx: tx.clone(), next_id: Arc::new(AtomicU64::new(0)), caps };
+        let handle = ServiceHandle {
+            tx: tx.clone(),
+            next_id: Arc::new(AtomicU64::new(0)),
+            caps,
+            metrics: metrics.clone(),
+        };
         Ok(Self {
             handle,
             metrics,
@@ -515,22 +588,43 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     pool: PlanePool,
 ) {
-    // both buffers persist across batches: the steady-state hot path
-    // performs no allocation in this loop (execute_into writes in place,
-    // operand planes go back to the pool)
-    let mut out: Vec<u64> = Vec::new();
+    // all buffers persist across batches: the steady-state hot path
+    // performs no allocation in this loop (execute_into writes in place
+    // at the batch's plane width, operand planes go back to the pool).
+    // One output buffer per width; `widened` is the u64 view the ticket
+    // boundary needs for u32 batches.
+    let mut out32: Vec<u32> = Vec::new();
+    let mut out64: Vec<u64> = Vec::new();
+    let mut widened: Vec<u64> = Vec::new();
     let mut lat: Vec<(u64, usize)> = Vec::new();
     while let Ok(mut batch) = rx.recv() {
-        out.clear();
-        out.resize(batch.padded, 0);
+        let width = batch.a.width();
+        let b_plane = if batch.op == OpKind::Divide { Some(batch.b.as_ref()) } else { None };
         let t0 = Instant::now();
-        let result = executor.execute_into(
-            batch.op,
-            batch.format,
-            &batch.a,
-            if batch.op == OpKind::Divide { Some(&batch.b) } else { None },
-            &mut out,
-        );
+        let result = match width {
+            PlaneWidth::W32 => {
+                out32.clear();
+                out32.resize(batch.padded, 0);
+                executor.execute_into(
+                    batch.op,
+                    batch.format,
+                    batch.a.as_ref(),
+                    b_plane,
+                    PlaneRefMut::W32(&mut out32),
+                )
+            }
+            PlaneWidth::W64 => {
+                out64.clear();
+                out64.resize(batch.padded, 0);
+                executor.execute_into(
+                    batch.op,
+                    batch.format,
+                    batch.a.as_ref(),
+                    b_plane,
+                    PlaneRefMut::W64(&mut out64),
+                )
+            }
+        };
         let exec_ns = t0.elapsed().as_nanos() as u64;
         match result {
             Ok(()) => {
@@ -545,10 +639,20 @@ fn worker_loop(
                 // record metrics BEFORE completing: once a client observes
                 // its response, the snapshot already includes it
                 metrics.record_batch(batch.op, batch.format, &lat, exec_ns, batch.padded);
+                // tickets store u64 result words: widen u32 result
+                // planes once per batch (the one narrowing boundary)
+                let view: &[u64] = match width {
+                    PlaneWidth::W32 => {
+                        widened.clear();
+                        widened.extend(out32.iter().map(|&w| w as u64));
+                        &widened
+                    }
+                    PlaneWidth::W64 => &out64,
+                };
                 let mut off = 0usize;
                 for (k, item) in batch.items.drain(..).enumerate() {
                     let lanes = item.lanes();
-                    item.complete(&out[off..off + lanes], lat[k].0, batch.padded);
+                    item.complete(&view[off..off + lanes], lat[k].0, batch.padded);
                     off += lanes;
                 }
             }
@@ -570,6 +674,7 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::PlaneRef;
     use crate::runtime::executor::NativeExecutor;
 
     fn quick_config() -> ServiceConfig {
@@ -731,6 +836,110 @@ mod tests {
     }
 
     #[test]
+    fn vectored_submission_rejects_oversized_words() {
+        // a raw word that does not fit the format's container is a
+        // typed Rejected, not a narrowing panic or silent truncation
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let h = svc.handle();
+        match h.submit_batch(OpKind::Sqrt, FormatKind::F16, &[0x1_0000], &[]) {
+            Err(ServiceError::Rejected { reason }) => {
+                assert!(reason.contains("does not fit"), "{reason}");
+            }
+            other => panic!("expected Rejected, got {:?}", other.map(|t| t.id())),
+        }
+        // the divisor plane is checked too
+        let ok = [0x3C00u64, 0x4000];
+        let bad = [0x3C00u64, u64::MAX];
+        assert!(matches!(
+            h.submit_batch(OpKind::Divide, FormatKind::BF16, &ok, &bad),
+            Err(ServiceError::Rejected { .. })
+        ));
+        // in-range f16 words and full-width f64 words pass
+        let resp =
+            h.submit_batch(OpKind::Sqrt, FormatKind::F16, &[0x4400], &[]).unwrap().wait().unwrap();
+        assert_eq!(resp.bits.len(), 1);
+        let w = (-2.0f64).to_bits(); // high bit set: fine for a 64-bit container
+        assert!(h.submit_batch(OpKind::Sqrt, FormatKind::F64, &[w], &[]).is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_admission_rejects_at_submit() {
+        // the ROADMAP admission-control item: once the queue-delay
+        // estimate (observed p50 latency) exceeds a submission's
+        // budget, the submission fails with Deadline at submit time —
+        // before any queueing
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let h = svc.handle();
+        // a cold service has no estimate: even a tiny budget is admitted
+        let t = h
+            .submit_value_deadline(
+                OpKind::Divide,
+                Value::F32(6.0),
+                Value::F32(2.0),
+                Duration::from_secs(5),
+            )
+            .unwrap();
+        assert_eq!(t.wait().unwrap().value.f32(), 3.0);
+        // seed the estimator: observed latency ~10ms on (divide, f32)
+        for _ in 0..8 {
+            svc.metrics().record_batch(
+                OpKind::Divide,
+                FormatKind::F32,
+                &[(10_000_000, 1)],
+                1_000,
+                1,
+            );
+        }
+        // a 50us budget is now hopeless: rejected at submit, typed
+        match h.submit_value_deadline(
+            OpKind::Divide,
+            Value::F32(6.0),
+            Value::F32(2.0),
+            Duration::from_micros(50),
+        ) {
+            Err(ServiceError::Deadline) => {}
+            other => panic!("expected Deadline at submit, got {:?}", other.map(|t| t.id())),
+        }
+        // the vectored path is gated the same way, counting every lane
+        let a: Vec<u64> = vec![2.0f32.to_bits() as u64; 10];
+        assert!(matches!(
+            h.submit_batch_deadline(
+                OpKind::Divide,
+                FormatKind::F32,
+                &a,
+                &a,
+                Duration::from_micros(50)
+            ),
+            Err(ServiceError::Deadline)
+        ));
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.op_format(OpKind::Divide, FormatKind::F32).admission_rejected, 11);
+        assert_eq!(snap.total_shed(), 0, "admission rejects are not queue sheds");
+        // a generous budget still passes admission and completes
+        let t = h
+            .submit_value_deadline(
+                OpKind::Divide,
+                Value::F32(8.0),
+                Value::F32(2.0),
+                Duration::from_secs(30),
+            )
+            .unwrap();
+        assert_eq!(t.wait().unwrap().value.f32(), 4.0);
+        // other (op, format) slots are unaffected by this slot's history
+        let t = h
+            .submit_value_deadline(
+                OpKind::Sqrt,
+                Value::F32(9.0),
+                Value::F32(1.0),
+                Duration::from_micros(50),
+            )
+            .unwrap();
+        let _ = t.wait(); // may complete or shed; must not reject at submit
+        svc.shutdown();
+    }
+
+    #[test]
     fn shutdown_drains_pending() {
         let mut cfg = quick_config();
         cfg.batcher = BatcherConfig::new(64, Duration::from_secs(10)); // only drain flushes
@@ -777,9 +986,9 @@ mod tests {
                 &mut self,
                 _: OpKind,
                 _: FormatKind,
-                _: &[u64],
-                _: Option<&[u64]>,
-                _: &mut [u64],
+                _: PlaneRef<'_>,
+                _: Option<PlaneRef<'_>>,
+                _: PlaneRefMut<'_>,
             ) -> Result<()> {
                 bail!("injected failure")
             }
@@ -814,9 +1023,9 @@ mod tests {
                 &mut self,
                 op: OpKind,
                 format: FormatKind,
-                a: &[u64],
-                b: Option<&[u64]>,
-                out: &mut [u64],
+                a: PlaneRef<'_>,
+                b: Option<PlaneRef<'_>>,
+                out: PlaneRefMut<'_>,
             ) -> Result<()> {
                 self.0.execute_into(op, format, a, b, out)
             }

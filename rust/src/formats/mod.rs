@@ -24,6 +24,11 @@
 //!   by the scalar reference paths and the batch kernels.
 //! * [`Value`] — a format-tagged scalar for the request/response plane
 //!   (f16/bf16 carried as raw bit patterns; Rust has no native type).
+//! * [`plane`] — width-true operand/result planes ([`PlaneBuf`] /
+//!   [`PlaneRef`] / [`PlaneRefMut`]): `u32` lanes for f16/bf16, `u64`
+//!   for f32/f64 (each format's [`FloatFormat::Plane`] /
+//!   [`FormatKind::plane_width`] geometry), so half-precision batches
+//!   move half the bytes end to end.
 //!
 //! # Geometry -> paper hardware mapping
 //!
@@ -53,7 +58,12 @@
 //! this table; `crate::area::format_rom_rows` prices it.
 
 use crate::arith::fixed::{narrow_u128, Fixed, Rounding};
+use crate::arith::limb::PlaneWord;
 use crate::goldschmidt::config::Config;
+
+pub mod plane;
+
+pub use plane::{PlaneBuf, PlaneExtract, PlaneRef, PlaneRefMut, PlaneWidth};
 
 /// Classification of inputs the mantissa datapath does not handle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -132,6 +142,20 @@ impl FormatKind {
         }
     }
 
+    /// Width-true plane-word geometry: the storage word one SoA lane of
+    /// this format occupies, end to end (kernel mantissa planes and the
+    /// coordinator's operand/result planes alike). Half-precision lanes
+    /// ride `u32` words — their 16-bit containers and 22-bit Q2.20
+    /// datapath words both fit, halving plane memory traffic vs the old
+    /// universal `u64` word — while f32 (Q2.30 = 32-bit datapath words
+    /// alongside 32-bit containers) and f64 keep `u64`.
+    pub fn plane_width(self) -> PlaneWidth {
+        match self {
+            FormatKind::F16 | FormatKind::BF16 => PlaneWidth::W32,
+            FormatKind::F32 | FormatKind::F64 => PlaneWidth::W64,
+        }
+    }
+
     /// Mantissa field width in bits.
     pub fn mant_bits(self) -> u32 {
         match self {
@@ -193,6 +217,10 @@ pub trait FloatFormat: Copy + Send + Sync + 'static {
     const EXP_BITS: u32;
     /// Mantissa (fraction) field width.
     const MANT_BITS: u32;
+    /// Width-true plane word: the storage type of one SoA lane of this
+    /// format (raw container bits and mantissa datapath words both fit).
+    /// Must agree with [`FormatKind::plane_width`].
+    type Plane: PlaneWord;
 
     // ---- derived geometry (never override) ----------------------------
     /// Exponent bias.
@@ -221,6 +249,7 @@ impl FloatFormat for F16 {
     const BITS: u32 = 16;
     const EXP_BITS: u32 = 5;
     const MANT_BITS: u32 = 10;
+    type Plane = u32;
 }
 
 /// bfloat16: f32 truncated to 16 bits (same exponent range, 7 mantissa
@@ -232,6 +261,7 @@ impl FloatFormat for BF16 {
     const BITS: u32 = 16;
     const EXP_BITS: u32 = 8;
     const MANT_BITS: u32 = 7;
+    type Plane = u32;
 }
 
 /// IEEE binary32.
@@ -242,6 +272,7 @@ impl FloatFormat for F32 {
     const BITS: u32 = 32;
     const EXP_BITS: u32 = 8;
     const MANT_BITS: u32 = 23;
+    type Plane = u64;
 }
 
 /// IEEE binary64.
@@ -252,6 +283,7 @@ impl FloatFormat for F64 {
     const BITS: u32 = 64;
     const EXP_BITS: u32 = 11;
     const MANT_BITS: u32 = 52;
+    type Plane = u64;
 }
 
 /// Sign bit of a raw word.
@@ -783,6 +815,34 @@ mod tests {
             // programmed steps at least the analytic bound
             let bound = Config::steps_for_accuracy(cfg.table_p, kind.mant_bits() + 1);
             assert!(cfg.steps >= bound, "{kind}: {} < {bound}", cfg.steps);
+        }
+    }
+
+    #[test]
+    fn plane_words_agree_with_plane_width() {
+        // the compile-time Plane type and the runtime width tag must
+        // describe the same geometry, or the executor's width dispatch
+        // would hand kernels the wrong planes
+        fn bits_of<F: FloatFormat>() -> u32 {
+            <F::Plane as PlaneWord>::BITS
+        }
+        assert_eq!(bits_of::<F16>(), 32);
+        assert_eq!(bits_of::<BF16>(), 32);
+        assert_eq!(bits_of::<F32>(), 64);
+        assert_eq!(bits_of::<F64>(), 64);
+        for kind in FormatKind::ALL {
+            let width_bits = kind.plane_width().lane_bytes() as u32 * 8;
+            let type_bits = match kind {
+                FormatKind::F16 => bits_of::<F16>(),
+                FormatKind::BF16 => bits_of::<BF16>(),
+                FormatKind::F32 => bits_of::<F32>(),
+                FormatKind::F64 => bits_of::<F64>(),
+            };
+            assert_eq!(width_bits, type_bits, "{kind}");
+            // every plane word holds the format's container and its
+            // Q2.frac datapath word
+            assert!(kind.total_bits() <= type_bits, "{kind}");
+            assert!(kind.datapath_config().frac + 2 <= type_bits, "{kind}");
         }
     }
 

@@ -1,0 +1,455 @@
+//! Width-true operand/result planes: the storage unit the coordinator
+//! queues, the batcher pads, and the executor contract moves.
+//!
+//! A plane used to be a `Vec<u64>` regardless of format, so every
+//! f16/bf16 lane wasted 48 bits of storage and memory bandwidth on the
+//! flush path. [`PlaneBuf`] is the runtime-tagged replacement: a `u32`
+//! vector for half-precision formats, a `u64` vector for f32/f64 (see
+//! [`FormatKind::plane_width`]) — halving half-precision plane traffic
+//! through the router, the batcher's pad path and the executor, while
+//! the kernels consume the planes directly at their native width via
+//! [`PlaneRef`].
+//!
+//! The widening/narrowing boundary lives at the edges (client `u64`
+//! words in, ticket `u64` words out); everything between runs
+//! width-true.
+
+use crate::formats::FormatKind;
+
+/// The storage width of one plane word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlaneWidth {
+    /// 32-bit plane words (f16 / bf16 lanes).
+    W32,
+    /// 64-bit plane words (f32 / f64 lanes).
+    W64,
+}
+
+impl PlaneWidth {
+    /// Bytes per lane at this width.
+    pub fn lane_bytes(self) -> usize {
+        match self {
+            PlaneWidth::W32 => 4,
+            PlaneWidth::W64 => 8,
+        }
+    }
+
+    /// Stable label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            PlaneWidth::W32 => "u32",
+            PlaneWidth::W64 => "u64",
+        }
+    }
+}
+
+/// An owned width-true plane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlaneBuf {
+    /// 32-bit lanes.
+    W32(Vec<u32>),
+    /// 64-bit lanes.
+    W64(Vec<u64>),
+}
+
+impl Default for PlaneBuf {
+    /// An empty 64-bit plane (the universal-word default).
+    fn default() -> Self {
+        PlaneBuf::W64(Vec::new())
+    }
+}
+
+impl PlaneBuf {
+    /// Empty plane of the given width.
+    pub fn new(width: PlaneWidth) -> Self {
+        match width {
+            PlaneWidth::W32 => PlaneBuf::W32(Vec::new()),
+            PlaneWidth::W64 => PlaneBuf::W64(Vec::new()),
+        }
+    }
+
+    /// Empty plane at a format's native width.
+    pub fn for_format(format: FormatKind) -> Self {
+        Self::new(format.plane_width())
+    }
+
+    /// Build a width-true plane from universal `u64` words (the client
+    /// submission boundary). Words must fit the target width — raw
+    /// half-precision containers always do.
+    pub fn from_u64_slice(width: PlaneWidth, words: &[u64]) -> Self {
+        let mut plane = Self::new(width);
+        plane.extend_from_u64(words);
+        plane
+    }
+
+    /// This plane's word width.
+    pub fn width(&self) -> PlaneWidth {
+        match self {
+            PlaneBuf::W32(_) => PlaneWidth::W32,
+            PlaneBuf::W64(_) => PlaneWidth::W64,
+        }
+    }
+
+    /// Lane count.
+    pub fn len(&self) -> usize {
+        match self {
+            PlaneBuf::W32(v) => v.len(),
+            PlaneBuf::W64(v) => v.len(),
+        }
+    }
+
+    /// True when no lanes are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Retained lane capacity.
+    pub fn capacity(&self) -> usize {
+        match self {
+            PlaneBuf::W32(v) => v.capacity(),
+            PlaneBuf::W64(v) => v.capacity(),
+        }
+    }
+
+    /// Heap bytes currently reserved (the memory-traffic accounting the
+    /// width-true representation halves for half-precision).
+    pub fn heap_bytes(&self) -> usize {
+        self.capacity() * self.width().lane_bytes()
+    }
+
+    /// Drop all lanes, keeping capacity.
+    pub fn clear(&mut self) {
+        match self {
+            PlaneBuf::W32(v) => v.clear(),
+            PlaneBuf::W64(v) => v.clear(),
+        }
+    }
+
+    /// Reserve room for `additional` more lanes.
+    pub fn reserve(&mut self, additional: usize) {
+        match self {
+            PlaneBuf::W32(v) => v.reserve(additional),
+            PlaneBuf::W64(v) => v.reserve(additional),
+        }
+    }
+
+    /// Append one lane given as a universal `u64` word (must fit).
+    pub fn push(&mut self, word: u64) {
+        match self {
+            PlaneBuf::W32(v) => {
+                debug_assert!(word <= u32::MAX as u64, "{word:#x} overflows a u32 lane");
+                v.push(word as u32);
+            }
+            PlaneBuf::W64(v) => v.push(word),
+        }
+    }
+
+    /// Resize to `lanes`, filling new lanes with `word`.
+    pub fn resize(&mut self, lanes: usize, word: u64) {
+        match self {
+            PlaneBuf::W32(v) => {
+                debug_assert!(word <= u32::MAX as u64);
+                v.resize(lanes, word as u32);
+            }
+            PlaneBuf::W64(v) => v.resize(lanes, word),
+        }
+    }
+
+    /// One lane widened to `u64`.
+    pub fn get(&self, lane: usize) -> u64 {
+        match self {
+            PlaneBuf::W32(v) => v[lane] as u64,
+            PlaneBuf::W64(v) => v[lane],
+        }
+    }
+
+    /// Append universal `u64` words (narrowing for 32-bit planes).
+    /// Panics on a word that does not fit a 32-bit lane — this is the
+    /// untrusted narrowing boundary (vectored group construction), so
+    /// the check is unconditional: silent truncation here would turn a
+    /// bad submission into a wrong answer. (The service rejects such
+    /// words with a typed error before reaching this point; the panic
+    /// guards direct `WorkItem::group` callers.)
+    pub fn extend_from_u64(&mut self, words: &[u64]) {
+        match self {
+            PlaneBuf::W32(v) => {
+                v.reserve(words.len());
+                for &w in words {
+                    assert!(w <= u32::MAX as u64, "{w:#x} overflows a u32 lane");
+                    v.push(w as u32);
+                }
+            }
+            PlaneBuf::W64(v) => v.extend_from_slice(words),
+        }
+    }
+
+    /// Append a window of another plane. Same-width copies are straight
+    /// `memcpy`s (the hot path — both sides derive their width from the
+    /// same format); mixed widths convert per lane.
+    pub fn extend_window(&mut self, src: &PlaneBuf, start: usize, len: usize) {
+        match (self, src) {
+            (PlaneBuf::W32(dst), PlaneBuf::W32(s)) => dst.extend_from_slice(&s[start..start + len]),
+            (PlaneBuf::W64(dst), PlaneBuf::W64(s)) => dst.extend_from_slice(&s[start..start + len]),
+            (dst, src) => {
+                dst.reserve(len);
+                for lane in start..start + len {
+                    dst.push(src.get(lane));
+                }
+            }
+        }
+    }
+
+    /// Widen a window into a `u64` buffer (the ticket-completion
+    /// boundary; the result plane stays width-true, only the per-client
+    /// copy widens).
+    pub fn widen_into(&self, out: &mut Vec<u64>) {
+        out.clear();
+        match self {
+            PlaneBuf::W32(v) => out.extend(v.iter().map(|&w| w as u64)),
+            PlaneBuf::W64(v) => out.extend_from_slice(v),
+        }
+    }
+
+    /// Borrowed view.
+    pub fn as_ref(&self) -> PlaneRef<'_> {
+        match self {
+            PlaneBuf::W32(v) => PlaneRef::W32(v),
+            PlaneBuf::W64(v) => PlaneRef::W64(v),
+        }
+    }
+
+    /// Mutable borrowed view.
+    pub fn as_mut(&mut self) -> PlaneRefMut<'_> {
+        match self {
+            PlaneBuf::W32(v) => PlaneRefMut::W32(v),
+            PlaneBuf::W64(v) => PlaneRefMut::W64(v),
+        }
+    }
+}
+
+/// A borrowed width-true plane (the executor-contract operand view).
+#[derive(Clone, Copy, Debug)]
+pub enum PlaneRef<'a> {
+    /// 32-bit lanes.
+    W32(&'a [u32]),
+    /// 64-bit lanes.
+    W64(&'a [u64]),
+}
+
+impl<'a> PlaneRef<'a> {
+    /// Word width.
+    pub fn width(&self) -> PlaneWidth {
+        match *self {
+            PlaneRef::W32(_) => PlaneWidth::W32,
+            PlaneRef::W64(_) => PlaneWidth::W64,
+        }
+    }
+
+    /// Lane count.
+    pub fn len(&self) -> usize {
+        match *self {
+            PlaneRef::W32(v) => v.len(),
+            PlaneRef::W64(v) => v.len(),
+        }
+    }
+
+    /// True when no lanes are present.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One lane widened to `u64`.
+    pub fn get(&self, lane: usize) -> u64 {
+        match *self {
+            PlaneRef::W32(v) => v[lane] as u64,
+            PlaneRef::W64(v) => v[lane],
+        }
+    }
+
+    /// The 32-bit lanes, if this is a 32-bit plane.
+    pub fn as_w32(&self) -> Option<&'a [u32]> {
+        match *self {
+            PlaneRef::W32(v) => Some(v),
+            PlaneRef::W64(_) => None,
+        }
+    }
+
+    /// The 64-bit lanes, if this is a 64-bit plane.
+    pub fn as_w64(&self) -> Option<&'a [u64]> {
+        match *self {
+            PlaneRef::W64(v) => Some(v),
+            PlaneRef::W32(_) => None,
+        }
+    }
+}
+
+/// A mutable borrowed width-true plane (the executor-contract output
+/// view).
+#[derive(Debug)]
+pub enum PlaneRefMut<'a> {
+    /// 32-bit lanes.
+    W32(&'a mut [u32]),
+    /// 64-bit lanes.
+    W64(&'a mut [u64]),
+}
+
+impl PlaneRefMut<'_> {
+    /// Word width.
+    pub fn width(&self) -> PlaneWidth {
+        match self {
+            PlaneRefMut::W32(_) => PlaneWidth::W32,
+            PlaneRefMut::W64(_) => PlaneWidth::W64,
+        }
+    }
+
+    /// Lane count.
+    pub fn len(&self) -> usize {
+        match self {
+            PlaneRefMut::W32(v) => v.len(),
+            PlaneRefMut::W64(v) => v.len(),
+        }
+    }
+
+    /// True when no lanes are present.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reborrow (so callers can pass the view on without consuming it).
+    pub fn reborrow(&mut self) -> PlaneRefMut<'_> {
+        match self {
+            PlaneRefMut::W32(v) => PlaneRefMut::W32(&mut **v),
+            PlaneRefMut::W64(v) => PlaneRefMut::W64(&mut **v),
+        }
+    }
+
+    /// The 32-bit lanes, if this is a 32-bit plane.
+    pub fn as_w32(&mut self) -> Option<&mut [u32]> {
+        match self {
+            PlaneRefMut::W32(v) => Some(&mut **v),
+            PlaneRefMut::W64(_) => None,
+        }
+    }
+
+    /// The 64-bit lanes, if this is a 64-bit plane.
+    pub fn as_w64(&mut self) -> Option<&mut [u64]> {
+        match self {
+            PlaneRefMut::W64(v) => Some(&mut **v),
+            PlaneRefMut::W32(_) => None,
+        }
+    }
+}
+
+/// Width-true slice extraction from the runtime plane views, per plane
+/// word: lets executor code stay generic over a format's `Plane` type
+/// instead of duplicating a match arm per width. Returns `None` when
+/// the view carries the other width (a contract violation the caller
+/// reports as a typed error).
+pub trait PlaneExtract: Sized {
+    /// The native slice behind a borrowed plane, if the width matches.
+    fn from_ref(plane: PlaneRef<'_>) -> Option<&[Self]>;
+
+    /// The native mutable slice behind an output plane, if the width
+    /// matches.
+    fn from_mut<'a>(plane: &'a mut PlaneRefMut<'_>) -> Option<&'a mut [Self]>;
+}
+
+impl PlaneExtract for u32 {
+    fn from_ref(plane: PlaneRef<'_>) -> Option<&[Self]> {
+        plane.as_w32()
+    }
+
+    fn from_mut<'a>(plane: &'a mut PlaneRefMut<'_>) -> Option<&'a mut [Self]> {
+        plane.as_w32()
+    }
+}
+
+impl PlaneExtract for u64 {
+    fn from_ref(plane: PlaneRef<'_>) -> Option<&[Self]> {
+        plane.as_w64()
+    }
+
+    fn from_mut<'a>(plane: &'a mut PlaneRefMut<'_>) -> Option<&'a mut [Self]> {
+        plane.as_w64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_widths_are_width_true() {
+        assert_eq!(FormatKind::F16.plane_width(), PlaneWidth::W32);
+        assert_eq!(FormatKind::BF16.plane_width(), PlaneWidth::W32);
+        assert_eq!(FormatKind::F32.plane_width(), PlaneWidth::W64);
+        assert_eq!(FormatKind::F64.plane_width(), PlaneWidth::W64);
+        assert_eq!(PlaneWidth::W32.lane_bytes(), 4);
+        assert_eq!(PlaneWidth::W64.lane_bytes(), 8);
+    }
+
+    #[test]
+    fn half_precision_planes_halve_memory() {
+        let mut half = PlaneBuf::for_format(FormatKind::F16);
+        let mut full = PlaneBuf::for_format(FormatKind::F32);
+        half.resize(1024, 0x3C00);
+        full.resize(1024, 0x3F80_0000);
+        assert!(half.heap_bytes() * 2 <= full.heap_bytes());
+        assert_eq!(half.width().label(), "u32");
+    }
+
+    #[test]
+    fn push_get_roundtrip_both_widths() {
+        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            let mut p = PlaneBuf::new(width);
+            for w in [0u64, 1, 0x3C00, 0xFFFF] {
+                p.push(w);
+            }
+            assert_eq!(p.len(), 4);
+            assert_eq!(p.get(2), 0x3C00);
+            assert_eq!(p.as_ref().get(3), 0xFFFF);
+            p.clear();
+            assert!(p.is_empty());
+            assert!(p.capacity() >= 4, "clear keeps capacity");
+        }
+        // 64-bit planes carry full-width words
+        let mut p = PlaneBuf::new(PlaneWidth::W64);
+        p.push(u64::MAX);
+        assert_eq!(p.get(0), u64::MAX);
+    }
+
+    #[test]
+    fn extend_window_same_and_cross_width() {
+        let src = PlaneBuf::from_u64_slice(PlaneWidth::W32, &[1, 2, 3, 4, 5]);
+        let mut same = PlaneBuf::new(PlaneWidth::W32);
+        same.extend_window(&src, 1, 3);
+        assert_eq!(same, PlaneBuf::W32(vec![2, 3, 4]));
+        // cross-width falls back to per-lane conversion
+        let mut wide = PlaneBuf::new(PlaneWidth::W64);
+        wide.extend_window(&src, 0, 2);
+        assert_eq!(wide, PlaneBuf::W64(vec![1, 2]));
+    }
+
+    #[test]
+    fn widen_into_reuses_buffer() {
+        let p = PlaneBuf::from_u64_slice(PlaneWidth::W32, &[7, 8, 9]);
+        let mut out = vec![99u64; 64];
+        p.widen_into(&mut out);
+        assert_eq!(out, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn ref_views_expose_native_slices() {
+        let mut p = PlaneBuf::from_u64_slice(PlaneWidth::W32, &[10, 20]);
+        assert_eq!(p.as_ref().as_w32(), Some(&[10u32, 20][..]));
+        assert!(p.as_ref().as_w64().is_none());
+        assert_eq!(p.as_mut().as_w32().unwrap().len(), 2);
+        let mut q = PlaneBuf::from_u64_slice(PlaneWidth::W64, &[10, 20]);
+        assert_eq!(q.as_ref().as_w64(), Some(&[10u64, 20][..]));
+        assert!(q.as_mut().as_w32().is_none());
+        let mut m = q.as_mut();
+        assert_eq!(m.reborrow().len(), 2);
+        assert_eq!(m.width(), PlaneWidth::W64);
+        assert!(!m.is_empty());
+    }
+}

@@ -1,27 +1,31 @@
 //! SoA batch kernels over [`GoldschmidtContext`], generic over the IEEE
-//! format: decompose a whole batch into sign / exponent / mantissa
-//! planes, run the Goldschmidt iterations as tight lane loops, then
-//! repack.
+//! format **and its plane word**: decompose a whole batch into sign /
+//! exponent / mantissa planes, run the Goldschmidt iterations as tight
+//! lane loops, then repack.
 //!
 //! Layout per batch (divide shown; sqrt/rsqrt analogous with one input
 //! plane):
 //!
 //! ```text
 //!   raw words ──decompose──> meta plane  (orig index, sign, exponent)
-//!   (u64 per lane)           q plane: u64 mantissa words   (MULT 1)
-//!                            r plane: u64 mantissa words   (MULT 2)
+//!   (plane word per lane)    q plane: mantissa plane words  (MULT 1)
+//!                            r plane: mantissa plane words  (MULT 2)
 //!   step loop (outer) x lane loop (inner):
 //!       K = 2 - r[i]          (complement block, one subtract)
 //!       q[i] *= K; r[i] *= K  (the paper's parallel multiplier pair)
 //!   q plane ──repack──> raw words (via the shared formats boundary)
 //! ```
 //!
-//! Every kernel is monomorphized over a [`FloatFormat`]: the same lane
-//! loops serve f16, bf16, f32 and f64 — only the boundary
-//! (decompose/repack) changes with the geometry, and the datapath
-//! context fixes the word width. Raw operands travel as `u64` plane
-//! words regardless of container width, so one [`BatchScratch`] arena
-//! serves every format.
+//! Every kernel is monomorphized over a [`FloatFormat`] *and* its
+//! width-true plane word `F::Plane` ([`PlaneWord`]): f16/bf16 lanes run
+//! on `u32` planes (22-bit Q2.20 datapath words — half the memory
+//! traffic of the old universal `u64` word), f32/f64 on `u64` planes.
+//! The datapath multiply itself is the 32-bit-limb formulation from
+//! [`crate::arith::limb`]: one widening `u32 x u32 -> u64` product per
+//! lane on the half-precision planes, four limb products with an
+//! explicit carry chain on the wide planes — the loop shapes AVX2
+//! `vpmuludq` / NEON `umull` vectorize 4-8 lanes wide, where the old
+//! `u64 x u64 -> u128` product blocked auto-vectorization entirely.
 //!
 //! Special-class lanes (NaN / Inf / zero / negative-for-sqrt) are
 //! answered during decomposition through the context's generic scalar
@@ -31,6 +35,17 @@
 //! const-generic parameters, so each configuration gets a monomorphized
 //! loop with no per-lane branching.
 //!
+//! Two raw-word entry families exist per op:
+//!
+//! * `*_batch_plane` — width-true raw planes (`&[F::Plane]`): the
+//!   serving executor's hot path; zero conversions anywhere.
+//! * `*_batch_bits` — universal `u64` raw words: the compatibility
+//!   boundary for tests/benches and mixed-width callers (mantissa
+//!   planes are still width-true inside; only the raw-word view is
+//!   wide).
+//!
+//! Both are bit-for-bit identical to the scalar reference per lane.
+//!
 //! For [`PAR_MIN_LANES`] or more datapath-eligible lanes the mantissa
 //! iteration splits across scoped worker threads (lanes are
 //! independent, so the split is bit-transparent); a 1024-wide flush
@@ -38,6 +53,7 @@
 //! thread so the scratch arena needs no synchronization.
 
 use crate::arith::fixed::{narrow_u128, Fixed, Rounding};
+use crate::arith::limb::PlaneWord;
 use crate::arith::twos::ComplementKind;
 use crate::formats::{self, classify, pack, sign_bit, unpack, FloatFormat, FpClass};
 
@@ -63,21 +79,21 @@ struct LaneMeta {
 }
 
 /// Reusable SoA planes for one batch decomposition: the per-worker
-/// scratch arena. The serving executor owns one per worker thread, so
-/// the batch hot path performs **zero** plane allocations after the
-/// first flush at each ladder size — the ROADMAP "scratch-buffer reuse"
-/// item. Capacity grows monotonically to the largest batch seen and is
+/// scratch arena, width-true in the plane word `W`. The serving
+/// executor owns one per (worker, width), so the batch hot path performs
+/// **zero** plane allocations after the first flush at each ladder size.
+/// Capacity grows monotonically to the largest batch seen and is
 /// retained across batches.
 #[derive(Default)]
-pub struct BatchScratch {
+pub struct BatchScratch<W: PlaneWord = u64> {
     meta: Vec<LaneMeta>,
     /// q plane for divide; g plane for the sqrt family.
-    p0: Vec<u64>,
+    p0: Vec<W>,
     /// r plane for divide; h plane for the sqrt family.
-    p1: Vec<u64>,
+    p1: Vec<W>,
 }
 
-impl BatchScratch {
+impl<W: PlaneWord> BatchScratch<W> {
     /// Empty scratch (planes grow on first use).
     pub fn new() -> Self {
         Self::default()
@@ -108,9 +124,9 @@ fn worker_count(cores: usize, lanes: usize) -> usize {
 
 /// Run `f` over aligned chunks of the two mantissa planes on scoped
 /// threads (`workers >= 2`, planes non-empty).
-fn split_planes<F>(workers: usize, a: &mut [u64], b: &mut [u64], f: F)
+fn split_planes<W: PlaneWord, F>(workers: usize, a: &mut [W], b: &mut [W], f: F)
 where
-    F: Fn(&mut [u64], &mut [u64]) + Sync,
+    F: Fn(&mut [W], &mut [W]) + Sync,
 {
     let per = a.len().div_ceil(workers);
     std::thread::scope(|s| {
@@ -121,58 +137,42 @@ where
     });
 }
 
-/// Map the const-generic rounding flag back to the enum (constant-folds
-/// after monomorphization, so the lane loops carry no mode branch).
-#[inline(always)]
-fn mode<const NEAREST: bool>() -> Rounding {
-    if NEAREST {
-        Rounding::Nearest
-    } else {
-        Rounding::Truncate
-    }
-}
-
-/// One datapath multiply: exact wide product narrowed to `frac` bits —
-/// the same `narrow_u128` + saturate the scalar [`Fixed::mul`] uses, so
-/// lane results are bit-identical by construction.
-#[inline(always)]
-fn mul_lane(a: u64, b: u64, frac: u32, sat: u64, m: Rounding) -> u64 {
-    let wide = (a as u128) * (b as u128);
-    narrow_u128(wide, frac, m).min(sat as u128) as u64
-}
-
 /// The division iteration over mantissa planes. `q`/`r` arrive holding
 /// the numerator / denominator mantissa words and leave holding the
-/// final quotient / residual.
-fn div_mantissa_lanes<const NEAREST: bool, const ONES: bool>(
+/// final quotient / residual. Each multiply is [`PlaneWord::mul_q2`] —
+/// the limb-sliced narrow-and-saturate identical to the scalar
+/// [`Fixed::mul`], so lane results are bit-identical by construction.
+fn div_mantissa_lanes<W: PlaneWord, const NEAREST: bool, const ONES: bool>(
     ctx: &GoldschmidtContext,
-    q: &mut [u64],
-    r: &mut [u64],
+    q: &mut [W],
+    r: &mut [W],
 ) {
     debug_assert_eq!(q.len(), r.len());
-    let m = mode::<NEAREST>();
-    let (frac, sat, one, two) = (ctx.frac, ctx.sat, ctx.one, ctx.two);
+    let frac = ctx.frac;
+    let sat = W::from_u64(ctx.sat);
+    let one = W::from_u64(ctx.one);
+    let two = W::from_u64(ctx.two);
     let idx_shift = frac - ctx.cfg.table_p;
     let rom = ctx.recip_lanes.as_slice();
     // Step 1: ROM lookup + the parallel multiplier pair, per lane.
     for (qi, ri) in q.iter_mut().zip(r.iter_mut()) {
         let d = *ri;
         debug_assert!((one..two).contains(&d), "mantissa outside [1,2)");
-        let k1 = rom[((d - one) >> idx_shift) as usize];
-        *qi = mul_lane(*qi, k1, frac, sat, m);
-        *ri = mul_lane(d, k1, frac, sat, m);
+        let k1 = W::from_u64(rom[((d - one) >> idx_shift).to_u64() as usize]);
+        *qi = W::mul_q2::<NEAREST>(*qi, k1, frac, sat);
+        *ri = W::mul_q2::<NEAREST>(d, k1, frac, sat);
     }
     // Step 2, `steps` times: complement + multiplier pair, per lane.
     for _ in 0..ctx.steps {
         for (qi, ri) in q.iter_mut().zip(r.iter_mut()) {
-            debug_assert!(*ri <= two && *ri > 0);
+            debug_assert!(*ri <= two && *ri > W::ZERO);
             let k = if ONES {
-                two.wrapping_sub(*ri).wrapping_sub(1) & sat
+                two.wrapping_sub(*ri).wrapping_sub(W::ONE) & sat
             } else {
                 two - *ri
             };
-            *qi = mul_lane(*qi, k, frac, sat, m);
-            *ri = mul_lane(*ri, k, frac, sat, m);
+            *qi = W::mul_q2::<NEAREST>(*qi, k, frac, sat);
+            *ri = W::mul_q2::<NEAREST>(*ri, k, frac, sat);
         }
     }
 }
@@ -180,17 +180,19 @@ fn div_mantissa_lanes<const NEAREST: bool, const ONES: bool>(
 /// The coupled sqrt iteration over mantissa planes. `g` arrives holding
 /// the operand words `d in [1, 4)` and leaves holding `sqrt(d)`; `h`
 /// leaves holding `1/(2 sqrt(d))`.
-fn sqrt_mantissa_lanes<const NEAREST: bool>(
+fn sqrt_mantissa_lanes<W: PlaneWord, const NEAREST: bool>(
     ctx: &GoldschmidtContext,
-    g: &mut [u64],
-    h: &mut [u64],
+    g: &mut [W],
+    h: &mut [W],
 ) {
     debug_assert_eq!(g.len(), h.len());
-    let m = mode::<NEAREST>();
-    let (frac, sat, one, two) = (ctx.frac, ctx.sat, ctx.one, ctx.two);
+    let frac = ctx.frac;
+    let sat = W::from_u64(ctx.sat);
+    let one = W::from_u64(ctx.one);
+    let two = W::from_u64(ctx.two);
     let p = ctx.cfg.table_p;
     let half = 1usize << (p - 1);
-    let th = ctx.three_half_bits;
+    let th = W::from_u64(ctx.three_half_bits);
     let rom = ctx.rsqrt_lanes.as_slice();
     // y0 lookup + g0 = d*y0, h0 = y0/2 (the halving is a wire shift).
     for (gi, hi) in g.iter_mut().zip(h.iter_mut()) {
@@ -199,51 +201,51 @@ fn sqrt_mantissa_lanes<const NEAREST: bool>(
         // fraction bits, replicated on the raw word.
         let (e0, m_bits, shift) =
             if v >= two { (1usize, v - two, frac + 1) } else { (0usize, v - one, frac) };
-        let f = ((m_bits << 1) >> (shift + 2 - p)) as usize;
-        let y0 = rom[e0 * half + f.min(half - 1)];
+        let f = ((m_bits << 1) >> (shift + 2 - p)).to_u64() as usize;
+        let y0 = W::from_u64(rom[e0 * half + f.min(half - 1)]);
         *hi = y0 >> 1;
-        *gi = mul_lane(v, y0, frac, sat, m);
+        *gi = W::mul_q2::<NEAREST>(v, y0, frac, sat);
     }
     // rho steps: factor = 3/2 - g*h, then the multiplier pair.
     for _ in 0..ctx.steps {
         for (gi, hi) in g.iter_mut().zip(h.iter_mut()) {
-            let gh = mul_lane(*gi, *hi, frac, sat, m);
+            let gh = W::mul_q2::<NEAREST>(*gi, *hi, frac, sat);
             debug_assert!(gh <= th, "sqrt factor underflow");
             let factor = th - gh;
-            *gi = mul_lane(*gi, factor, frac, sat, m);
-            *hi = mul_lane(*hi, factor, frac, sat, m);
+            *gi = W::mul_q2::<NEAREST>(*gi, factor, frac, sat);
+            *hi = W::mul_q2::<NEAREST>(*hi, factor, frac, sat);
         }
     }
 }
 
 impl GoldschmidtContext {
-    fn div_dispatch(&self, q: &mut [u64], r: &mut [u64]) {
+    fn div_dispatch<W: PlaneWord>(&self, q: &mut [W], r: &mut [W]) {
         match (self.cfg.rounding, self.cfg.complement) {
             (Rounding::Nearest, ComplementKind::Exact) => {
-                div_mantissa_lanes::<true, false>(self, q, r)
+                div_mantissa_lanes::<W, true, false>(self, q, r)
             }
             (Rounding::Nearest, ComplementKind::OnesComplement) => {
-                div_mantissa_lanes::<true, true>(self, q, r)
+                div_mantissa_lanes::<W, true, true>(self, q, r)
             }
             (Rounding::Truncate, ComplementKind::Exact) => {
-                div_mantissa_lanes::<false, false>(self, q, r)
+                div_mantissa_lanes::<W, false, false>(self, q, r)
             }
             (Rounding::Truncate, ComplementKind::OnesComplement) => {
-                div_mantissa_lanes::<false, true>(self, q, r)
+                div_mantissa_lanes::<W, false, true>(self, q, r)
             }
         }
     }
 
-    fn sqrt_dispatch(&self, g: &mut [u64], h: &mut [u64]) {
+    fn sqrt_dispatch<W: PlaneWord>(&self, g: &mut [W], h: &mut [W]) {
         match self.cfg.rounding {
-            Rounding::Nearest => sqrt_mantissa_lanes::<true>(self, g, h),
-            Rounding::Truncate => sqrt_mantissa_lanes::<false>(self, g, h),
+            Rounding::Nearest => sqrt_mantissa_lanes::<W, true>(self, g, h),
+            Rounding::Truncate => sqrt_mantissa_lanes::<W, false>(self, g, h),
         }
     }
 
     /// Run the division iteration over the scratch planes, split across
     /// scoped workers when the lane count warrants it.
-    fn div_planes(&self, q: &mut [u64], r: &mut [u64], parallel: bool) {
+    fn div_planes<W: PlaneWord>(&self, q: &mut [W], r: &mut [W], parallel: bool) {
         let workers = if parallel { worker_count(self.cores, q.len()) } else { 1 };
         if workers <= 1 {
             self.div_dispatch(q, r);
@@ -253,7 +255,7 @@ impl GoldschmidtContext {
     }
 
     /// Run the coupled sqrt iteration over the scratch planes.
-    fn sqrt_planes(&self, g: &mut [u64], h: &mut [u64], parallel: bool) {
+    fn sqrt_planes<W: PlaneWord>(&self, g: &mut [W], h: &mut [W], parallel: bool) {
         let workers = if parallel { worker_count(self.cores, g.len()) } else { 1 };
         if workers <= 1 {
             self.sqrt_dispatch(g, h);
@@ -262,20 +264,172 @@ impl GoldschmidtContext {
         }
     }
 
-    // ---- format-generic batch kernels ---------------------------------
+    /// The plane word must hold this context's Q2.frac datapath word.
+    fn check_plane_width<W: PlaneWord>(&self) {
+        assert!(
+            self.frac + 2 <= W::BITS,
+            "Q2.{} datapath words do not fit u{} plane words",
+            self.frac,
+            W::BITS
+        );
+    }
 
-    /// Batched division on raw format words, bit-identical per lane to
-    /// [`divide_bits`](Self::divide_bits). Splits the mantissa
-    /// iteration across scoped worker threads for batches with
-    /// [`PAR_MIN_LANES`] or more datapath lanes.
+    // ---- format-generic batch kernels ---------------------------------
+    //
+    // Generic over the raw-word type `R` (how the caller stores the
+    // container bits: `u64` for the compatibility entries, `F::Plane`
+    // for the width-true serving path). The mantissa planes are always
+    // width-true (`F::Plane`), so the limb-sliced lane loops are
+    // identical through either entry.
+
+    fn divide_batch_impl<F: FloatFormat, R: PlaneWord>(
+        &self,
+        n: &[R],
+        d: &[R],
+        out: &mut [R],
+        s: &mut BatchScratch<F::Plane>,
+        parallel: bool,
+    ) {
+        assert_eq!(n.len(), d.len(), "divide operand length mismatch");
+        assert_eq!(n.len(), out.len(), "output length mismatch");
+        self.check_plane_width::<F::Plane>();
+        let frac = self.frac;
+        s.begin(n.len());
+        for (i, (&nw, &dw)) in n.iter().zip(d.iter()).enumerate() {
+            let (nb, db) = (nw.to_u64(), dw.to_u64());
+            if classify::<F>(nb) == FpClass::Finite && classify::<F>(db) == FpClass::Finite {
+                let un = unpack::<F>(nb, frac);
+                let ud = unpack::<F>(db, frac);
+                s.meta.push(LaneMeta { index: i, sign: un.sign ^ ud.sign, exp: un.exp - ud.exp });
+                s.p0.push(<F::Plane>::from_u64(un.mant.bits()));
+                s.p1.push(<F::Plane>::from_u64(ud.mant.bits()));
+            } else {
+                // special arms only; the datapath closure is unreachable
+                out[i] = R::from_u64(self.divide_bits::<F>(nb, db));
+            }
+        }
+        self.div_planes(&mut s.p0, &mut s.p1, parallel);
+        for (m, &qbits) in s.meta.iter().zip(s.p0.iter()) {
+            let q = Fixed::from_bits(qbits.to_u64(), frac);
+            out[m.index] = R::from_u64(pack::<F>(m.sign, m.exp, &q));
+        }
+    }
+
+    /// Shared sqrt/rsqrt kernel: the coupled iteration computes both
+    /// `sqrt` (g plane) and `rsqrt` (h plane); `RECIP` selects which
+    /// plane is packed out.
+    fn sqrt_like_impl<F: FloatFormat, R: PlaneWord, const RECIP: bool>(
+        &self,
+        x: &[R],
+        out: &mut [R],
+        s: &mut BatchScratch<F::Plane>,
+        parallel: bool,
+    ) {
+        assert_eq!(x.len(), out.len(), "output length mismatch");
+        self.check_plane_width::<F::Plane>();
+        let frac = self.frac;
+        s.begin(x.len());
+        for (i, &xw) in x.iter().enumerate() {
+            let xb = xw.to_u64();
+            if classify::<F>(xb) == FpClass::Finite && !sign_bit::<F>(xb) {
+                let u = unpack::<F>(xb, frac);
+                // fold exponent parity exactly as the scalar path does
+                let (d_bits, half_exp) = if u.exp % 2 == 0 {
+                    (u.mant.bits(), u.exp / 2)
+                } else {
+                    (u.mant.bits() << 1, (u.exp - 1) / 2)
+                };
+                s.meta.push(LaneMeta { index: i, sign: false, exp: half_exp });
+                s.p0.push(<F::Plane>::from_u64(d_bits));
+            } else {
+                // NaN / zero / inf / negative: scalar special arms
+                out[i] = R::from_u64(if RECIP {
+                    self.rsqrt_bits::<F>(xb)
+                } else {
+                    self.sqrt_bits::<F>(xb)
+                });
+            }
+        }
+        s.p1.resize(s.p0.len(), <F::Plane>::ZERO);
+        self.sqrt_planes(&mut s.p0, &mut s.p1, parallel);
+        if RECIP {
+            for (m, &hbits) in s.meta.iter().zip(s.p1.iter()) {
+                let y = Fixed::from_bits(hbits.to_u64() << 1, frac); // 2h: a shift
+                out[m.index] = R::from_u64(pack::<F>(false, -m.exp, &y));
+            }
+        } else {
+            for (m, &gbits) in s.meta.iter().zip(s.p0.iter()) {
+                let g = Fixed::from_bits(gbits.to_u64(), frac);
+                out[m.index] = R::from_u64(pack::<F>(false, m.exp, &g));
+            }
+        }
+    }
+
+    // ---- width-true plane entries (the serving hot path) ---------------
+
+    /// Batched division on width-true raw planes (`F::Plane` words),
+    /// bit-identical per lane to [`divide_bits`](Self::divide_bits).
+    /// Splits the mantissa iteration across scoped worker threads for
+    /// batches with [`PAR_MIN_LANES`] or more datapath lanes.
+    pub fn divide_batch_plane<F: FloatFormat>(
+        &self,
+        n: &[F::Plane],
+        d: &[F::Plane],
+        out: &mut [F::Plane],
+        scratch: &mut BatchScratch<F::Plane>,
+    ) {
+        self.divide_batch_impl::<F, F::Plane>(n, d, out, scratch, true);
+    }
+
+    /// [`divide_batch_plane`](Self::divide_batch_plane) pinned to the
+    /// calling thread (no worker split).
+    pub fn divide_batch_plane_serial<F: FloatFormat>(
+        &self,
+        n: &[F::Plane],
+        d: &[F::Plane],
+        out: &mut [F::Plane],
+        scratch: &mut BatchScratch<F::Plane>,
+    ) {
+        self.divide_batch_impl::<F, F::Plane>(n, d, out, scratch, false);
+    }
+
+    /// Batched square root on width-true raw planes, bit-identical per
+    /// lane to [`sqrt_bits`](Self::sqrt_bits).
+    pub fn sqrt_batch_plane<F: FloatFormat>(
+        &self,
+        x: &[F::Plane],
+        out: &mut [F::Plane],
+        scratch: &mut BatchScratch<F::Plane>,
+    ) {
+        self.sqrt_like_impl::<F, F::Plane, false>(x, out, scratch, true);
+    }
+
+    /// Batched reciprocal square root on width-true raw planes,
+    /// bit-identical per lane to [`rsqrt_bits`](Self::rsqrt_bits).
+    pub fn rsqrt_batch_plane<F: FloatFormat>(
+        &self,
+        x: &[F::Plane],
+        out: &mut [F::Plane],
+        scratch: &mut BatchScratch<F::Plane>,
+    ) {
+        self.sqrt_like_impl::<F, F::Plane, true>(x, out, scratch, true);
+    }
+
+    // ---- universal u64 raw-word entries (compat boundary) --------------
+
+    /// Batched division on raw format words carried as universal `u64`
+    /// plane words, bit-identical per lane to
+    /// [`divide_bits`](Self::divide_bits). The mantissa planes inside
+    /// are still width-true, so this runs the same limb-sliced loops as
+    /// [`divide_batch_plane`](Self::divide_batch_plane).
     pub fn divide_batch_bits<F: FloatFormat>(
         &self,
         n: &[u64],
         d: &[u64],
         out: &mut [u64],
-        scratch: &mut BatchScratch,
+        scratch: &mut BatchScratch<F::Plane>,
     ) {
-        self.divide_batch_bits_impl::<F>(n, d, out, scratch, true);
+        self.divide_batch_impl::<F, u64>(n, d, out, scratch, true);
     }
 
     /// [`divide_batch_bits`](Self::divide_batch_bits) pinned to the
@@ -285,18 +439,49 @@ impl GoldschmidtContext {
         n: &[u64],
         d: &[u64],
         out: &mut [u64],
-        scratch: &mut BatchScratch,
+        scratch: &mut BatchScratch<F::Plane>,
     ) {
-        self.divide_batch_bits_impl::<F>(n, d, out, scratch, false);
+        self.divide_batch_impl::<F, u64>(n, d, out, scratch, false);
     }
 
-    fn divide_batch_bits_impl<F: FloatFormat>(
+    /// Batched square root on raw format words as universal `u64` plane
+    /// words, bit-identical per lane to [`sqrt_bits`](Self::sqrt_bits).
+    pub fn sqrt_batch_bits<F: FloatFormat>(
+        &self,
+        x: &[u64],
+        out: &mut [u64],
+        scratch: &mut BatchScratch<F::Plane>,
+    ) {
+        self.sqrt_like_impl::<F, u64, false>(x, out, scratch, true);
+    }
+
+    /// Batched reciprocal square root on raw format words as universal
+    /// `u64` plane words, bit-identical per lane to
+    /// [`rsqrt_bits`](Self::rsqrt_bits).
+    pub fn rsqrt_batch_bits<F: FloatFormat>(
+        &self,
+        x: &[u64],
+        out: &mut [u64],
+        scratch: &mut BatchScratch<F::Plane>,
+    ) {
+        self.sqrt_like_impl::<F, u64, true>(x, out, scratch, true);
+    }
+
+    // ---- u128 baseline (perf comparison only) ---------------------------
+
+    /// The seed's `u64 x u64 -> u128` divide kernel, kept verbatim as
+    /// the perf baseline for the limb-vs-u128 comparison the benches
+    /// record. Not a serving path — the serving kernels are the
+    /// limb-sliced ones above; this exists so `hotpath_micro` /
+    /// `throughput_e2e` can measure the formulation change on the same
+    /// machine, same decompose/repack, same everything but the multiply.
+    #[doc(hidden)]
+    pub fn divide_batch_bits_u128_baseline<F: FloatFormat>(
         &self,
         n: &[u64],
         d: &[u64],
         out: &mut [u64],
-        s: &mut BatchScratch,
-        parallel: bool,
+        s: &mut BatchScratch<u64>,
     ) {
         assert_eq!(n.len(), d.len(), "divide operand length mismatch");
         assert_eq!(n.len(), out.len(), "output length mismatch");
@@ -310,79 +495,25 @@ impl GoldschmidtContext {
                 s.p0.push(un.mant.bits());
                 s.p1.push(ud.mant.bits());
             } else {
-                // special arms only; the datapath closure is unreachable
                 out[i] = self.divide_bits::<F>(nb, db);
             }
         }
-        self.div_planes(&mut s.p0, &mut s.p1, parallel);
+        match (self.cfg.rounding, self.cfg.complement) {
+            (Rounding::Nearest, ComplementKind::Exact) => {
+                div_lanes_u128::<true, false>(self, &mut s.p0, &mut s.p1)
+            }
+            (Rounding::Nearest, ComplementKind::OnesComplement) => {
+                div_lanes_u128::<true, true>(self, &mut s.p0, &mut s.p1)
+            }
+            (Rounding::Truncate, ComplementKind::Exact) => {
+                div_lanes_u128::<false, false>(self, &mut s.p0, &mut s.p1)
+            }
+            (Rounding::Truncate, ComplementKind::OnesComplement) => {
+                div_lanes_u128::<false, true>(self, &mut s.p0, &mut s.p1)
+            }
+        }
         for (m, &qbits) in s.meta.iter().zip(s.p0.iter()) {
             out[m.index] = pack::<F>(m.sign, m.exp, &Fixed::from_bits(qbits, frac));
-        }
-    }
-
-    /// Batched square root on raw format words, bit-identical per lane
-    /// to [`sqrt_bits`](Self::sqrt_bits).
-    pub fn sqrt_batch_bits<F: FloatFormat>(
-        &self,
-        x: &[u64],
-        out: &mut [u64],
-        scratch: &mut BatchScratch,
-    ) {
-        self.sqrt_like_bits_impl::<F, false>(x, out, scratch, true);
-    }
-
-    /// Batched reciprocal square root on raw format words, bit-identical
-    /// per lane to [`rsqrt_bits`](Self::rsqrt_bits).
-    pub fn rsqrt_batch_bits<F: FloatFormat>(
-        &self,
-        x: &[u64],
-        out: &mut [u64],
-        scratch: &mut BatchScratch,
-    ) {
-        self.sqrt_like_bits_impl::<F, true>(x, out, scratch, true);
-    }
-
-    /// Shared sqrt/rsqrt kernel: the coupled iteration computes both
-    /// `sqrt` (g plane) and `rsqrt` (h plane); `RECIP` selects which
-    /// plane is packed out.
-    fn sqrt_like_bits_impl<F: FloatFormat, const RECIP: bool>(
-        &self,
-        x: &[u64],
-        out: &mut [u64],
-        s: &mut BatchScratch,
-        parallel: bool,
-    ) {
-        assert_eq!(x.len(), out.len(), "output length mismatch");
-        let frac = self.frac;
-        s.begin(x.len());
-        for (i, &xb) in x.iter().enumerate() {
-            if classify::<F>(xb) == FpClass::Finite && !sign_bit::<F>(xb) {
-                let u = unpack::<F>(xb, frac);
-                // fold exponent parity exactly as the scalar path does
-                let (d_bits, half_exp) = if u.exp % 2 == 0 {
-                    (u.mant.bits(), u.exp / 2)
-                } else {
-                    (u.mant.bits() << 1, (u.exp - 1) / 2)
-                };
-                s.meta.push(LaneMeta { index: i, sign: false, exp: half_exp });
-                s.p0.push(d_bits);
-            } else {
-                // NaN / zero / inf / negative: scalar special arms
-                out[i] =
-                    if RECIP { self.rsqrt_bits::<F>(xb) } else { self.sqrt_bits::<F>(xb) };
-            }
-        }
-        s.p1.resize(s.p0.len(), 0);
-        self.sqrt_planes(&mut s.p0, &mut s.p1, parallel);
-        if RECIP {
-            for (m, &hbits) in s.meta.iter().zip(s.p1.iter()) {
-                let y = Fixed::from_bits(hbits << 1, frac); // 2h: a shift
-                out[m.index] = pack::<F>(false, -m.exp, &y);
-            }
-        } else {
-            for (m, &gbits) in s.meta.iter().zip(s.p0.iter()) {
-                out[m.index] = pack::<F>(false, m.exp, &Fixed::from_bits(gbits, frac));
-            }
         }
     }
 
@@ -393,7 +524,7 @@ impl GoldschmidtContext {
     // over a thread-local arena, so repeated calls (the benched hot
     // loops) allocate nothing after the first batch at each size. The
     // serving executor holds its own persistent scratch and uses the
-    // bits kernels directly.
+    // width-true plane kernels directly.
 
     /// Batched f32 division, bit-identical per lane to
     /// [`divide_f32`](crate::goldschmidt::divide_f32).
@@ -410,7 +541,7 @@ impl GoldschmidtContext {
         with_typed_scratch(|ts| {
             ts.load2(n.iter().map(|v| v.to_bits() as u64), d.iter().map(|v| v.to_bits() as u64));
             ts.out.resize(out.len(), 0);
-            self.divide_batch_bits_impl::<formats::F32>(
+            self.divide_batch_impl::<formats::F32, u64>(
                 &ts.a,
                 &ts.b,
                 &mut ts.out,
@@ -440,7 +571,7 @@ impl GoldschmidtContext {
         with_typed_scratch(|ts| {
             ts.load2(n.iter().map(|v| v.to_bits()), d.iter().map(|v| v.to_bits()));
             ts.out.resize(out.len(), 0);
-            self.divide_batch_bits_impl::<formats::F64>(
+            self.divide_batch_impl::<formats::F64, u64>(
                 &ts.a,
                 &ts.b,
                 &mut ts.out,
@@ -481,7 +612,7 @@ impl GoldschmidtContext {
             ts.a.extend(x.iter().map(|v| v.to_bits() as u64));
             ts.out.clear();
             ts.out.resize(out.len(), 0);
-            self.sqrt_like_bits_impl::<formats::F32, RECIP>(
+            self.sqrt_like_impl::<formats::F32, u64, RECIP>(
                 &ts.a,
                 &mut ts.out,
                 &mut ts.scratch,
@@ -494,6 +625,39 @@ impl GoldschmidtContext {
     }
 }
 
+/// One u128 datapath multiply (the baseline formulation): exact wide
+/// product narrowed to `frac` bits and saturated.
+#[inline(always)]
+fn mul_lane_u128(a: u64, b: u64, frac: u32, sat: u64, m: Rounding) -> u64 {
+    let wide = (a as u128) * (b as u128);
+    narrow_u128(wide, frac, m).min(sat as u128) as u64
+}
+
+/// The baseline division iteration: the seed's u128 lane loop.
+fn div_lanes_u128<const NEAREST: bool, const ONES: bool>(
+    ctx: &GoldschmidtContext,
+    q: &mut [u64],
+    r: &mut [u64],
+) {
+    let m = if NEAREST { Rounding::Nearest } else { Rounding::Truncate };
+    let (frac, sat, one, two) = (ctx.frac, ctx.sat, ctx.one, ctx.two);
+    let idx_shift = frac - ctx.cfg.table_p;
+    let rom = ctx.recip_lanes.as_slice();
+    for (qi, ri) in q.iter_mut().zip(r.iter_mut()) {
+        let d = *ri;
+        let k1 = rom[((d - one) >> idx_shift) as usize];
+        *qi = mul_lane_u128(*qi, k1, frac, sat, m);
+        *ri = mul_lane_u128(d, k1, frac, sat, m);
+    }
+    for _ in 0..ctx.steps {
+        for (qi, ri) in q.iter_mut().zip(r.iter_mut()) {
+            let k = if ONES { two.wrapping_sub(*ri).wrapping_sub(1) & sat } else { two - *ri };
+            *qi = mul_lane_u128(*qi, k, frac, sat, m);
+            *ri = mul_lane_u128(*ri, k, frac, sat, m);
+        }
+    }
+}
+
 /// Thread-local arena backing the typed convenience wrappers: input /
 /// output planes plus the inner [`BatchScratch`], reused across calls so
 /// the benched f32/f64 paths stay allocation-free after warmup.
@@ -502,7 +666,7 @@ struct TypedScratch {
     a: Vec<u64>,
     b: Vec<u64>,
     out: Vec<u64>,
-    scratch: BatchScratch,
+    scratch: BatchScratch<u64>,
 }
 
 impl TypedScratch {
@@ -617,6 +781,56 @@ mod tests {
     }
 
     #[test]
+    fn width_true_plane_entries_match_bits_entries() {
+        // the u32-plane serving path and the u64 compat path must be the
+        // same kernel: bit-identical outputs lane for lane
+        let ctx = GoldschmidtContext::new(FormatKind::F16.datapath_config());
+        let mut s32 = BatchScratch::<u32>::new();
+        let mut s64 = BatchScratch::<u32>::new();
+        let mut rng = Xoshiro256::new(0x3216);
+        let lanes = 300usize;
+        let n16: Vec<u32> = (0..lanes).map(|_| (rng.bits() & 0xFFFF) as u32).collect();
+        let d16: Vec<u32> = (0..lanes).map(|_| (rng.bits() & 0xFFFF) as u32).collect();
+        let n64: Vec<u64> = n16.iter().map(|&w| w as u64).collect();
+        let d64: Vec<u64> = d16.iter().map(|&w| w as u64).collect();
+        let mut out32 = vec![0u32; lanes];
+        let mut out64 = vec![0u64; lanes];
+        ctx.divide_batch_plane::<F16>(&n16, &d16, &mut out32, &mut s32);
+        ctx.divide_batch_bits::<F16>(&n64, &d64, &mut out64, &mut s64);
+        for i in 0..lanes {
+            assert_eq!(out32[i] as u64, out64[i], "divide lane {i}");
+        }
+        ctx.sqrt_batch_plane::<F16>(&n16, &mut out32, &mut s32);
+        ctx.sqrt_batch_bits::<F16>(&n64, &mut out64, &mut s64);
+        for i in 0..lanes {
+            assert_eq!(out32[i] as u64, out64[i], "sqrt lane {i}");
+        }
+        ctx.rsqrt_batch_plane::<F16>(&n16, &mut out32, &mut s32);
+        ctx.rsqrt_batch_bits::<F16>(&n64, &mut out64, &mut s64);
+        for i in 0..lanes {
+            assert_eq!(out32[i] as u64, out64[i], "rsqrt lane {i}");
+        }
+    }
+
+    #[test]
+    fn u128_baseline_matches_limb_kernel() {
+        // the bench baseline must stay bit-identical to the limb path
+        // (same results, different multiply formulation)
+        let ctx = GoldschmidtContext::new(Config::default());
+        let mut s = BatchScratch::<u64>::new();
+        let mut sb = BatchScratch::<u64>::new();
+        let mut rng = Xoshiro256::new(0x128);
+        let lanes = 257usize;
+        let n: Vec<u64> = (0..lanes).map(|_| rng.bits() & 0xFFFF_FFFF).collect();
+        let d: Vec<u64> = (0..lanes).map(|_| rng.bits() & 0xFFFF_FFFF).collect();
+        let mut out = vec![0u64; lanes];
+        let mut base = vec![0u64; lanes];
+        ctx.divide_batch_bits::<crate::formats::F32>(&n, &d, &mut out, &mut s);
+        ctx.divide_batch_bits_u128_baseline::<crate::formats::F32>(&n, &d, &mut base, &mut sb);
+        assert_eq!(out, base);
+    }
+
+    #[test]
     fn scratch_reuse_across_batches_is_transparent() {
         // one scratch serving shrinking/growing batches of different ops
         let ctx = GoldschmidtContext::new(Config::default());
@@ -638,6 +852,19 @@ mod tests {
                 assert_eq!(out[i], ctx.sqrt_bits::<crate::formats::F32>(n[i]), "sqrt lane {i}");
             }
         }
+    }
+
+    #[test]
+    fn oversized_datapath_word_panics_not_wraps() {
+        // an f16 kernel on a frac-40 context cannot fit u32 planes: the
+        // width check must refuse loudly instead of corrupting lanes
+        let ctx = GoldschmidtContext::new(Config::default().with_frac(40));
+        let mut scratch = BatchScratch::<u32>::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = [0u32; 1];
+            ctx.divide_batch_plane::<F16>(&[0x3C00], &[0x3C00], &mut out, &mut scratch);
+        }));
+        assert!(r.is_err(), "frac 40 words must not fit u32 planes");
     }
 
     #[test]

@@ -18,15 +18,20 @@
 //! here instead decompose the whole batch into *planes* — a sign plane,
 //! an exponent plane, and a mantissa plane of raw `u64` datapath words —
 //! and run the Goldschmidt iteration as tight lane loops over the
-//! mantissa plane. Each inner loop is the software image of the paper's
+//! mantissa plane — stored **width-true** (`u32` lanes for f16/bf16,
+//! `u64` for f32/f64: the [`PlaneWord`](crate::arith::limb::PlaneWord)
+//! geometry). Each inner loop is the software image of the paper's
 //! multiplier pair: the `q` plane is MULT 1, the `r` plane is MULT 2,
 //! and the complement constant `K = 2 - r` is a single subtract between
 //! them. Steps advance in lockstep across lanes (the outer loop is the
 //! step counter, as in the paper's logic-block schedule), so the body
-//! contains only shifts, `u64`/`u128` multiplies and table indexing —
-//! no asserts, no struct plumbing, no per-lane allocation, and the
-//! rounding mode / complement circuit are lifted to const generics so
-//! the compiler monomorphizes and can auto-vectorize.
+//! contains only shifts, limb-sliced multiplies ([`crate::arith::limb`]:
+//! one widening `u32 x u32 -> u64` product per half-precision lane,
+//! four carry-chained limb products per wide lane — never a
+//! vectorization-blocking `u128`) and table indexing — no asserts, no
+//! struct plumbing, no per-lane allocation, and the rounding mode /
+//! complement circuit are lifted to const generics so the compiler
+//! monomorphizes and can auto-vectorize.
 //!
 //! # Components
 //!
@@ -39,14 +44,15 @@
 //!   (f32/f64) and generic over any
 //!   [`FloatFormat`](crate::formats::FloatFormat) (`divide_bits`,
 //!   `sqrt_bits`, `rsqrt_bits`).
-//! * [`batch`] — the SoA kernels, monomorphized per IEEE format:
-//!   `divide_batch_bits`, `sqrt_batch_bits`, `rsqrt_batch_bits` over
-//!   raw `u64` plane words (f16 / bf16 / f32 / f64), with typed
+//! * [`batch`] — the SoA kernels, monomorphized per IEEE format and
+//!   plane width: width-true `divide_batch_plane` / `sqrt_batch_plane`
+//!   / `rsqrt_batch_plane` over `F::Plane` words (the serving path) and
+//!   universal-`u64` `*_batch_bits` compatibility entries, with typed
 //!   f32/f64 convenience wrappers, a reusable [`BatchScratch`] plane
-//!   arena (the serving executor holds one per worker, making the hot
-//!   path allocation-free), and an N-way scoped-thread worker split
-//!   that engages for batches >= 256 so a 1024-wide flush uses every
-//!   core.
+//!   arena per width (the serving executor holds one per worker per
+//!   width, making the hot path allocation-free), and an N-way
+//!   scoped-thread worker split that engages for batches >= 256 so a
+//!   1024-wide flush uses every core.
 //!
 //! # Contract
 //!

@@ -30,8 +30,19 @@
 //! Python never runs on the request path: `make artifacts` runs once at
 //! build time and the rust binary is self-contained afterwards.
 //!
-//! See `DESIGN.md` for the per-experiment index (which module regenerates
-//! which figure/table of the paper) and `EXPERIMENTS.md` for results.
+//! The datapath is **limb-sliced and width-true** end to end: every
+//! mantissa multiply is built from widening `u32 x u32 -> u64` limb
+//! products ([`arith::limb`] — vectorizable, no `u128` on the hot
+//! path), and every plane carries its format's native word (`u32`
+//! lanes for f16/bf16, `u64` for f32/f64 — [`formats::plane`]), from
+//! the vectored submission queue through the batcher's [`coordinator`]
+//! planes to the [`kernel`] lane loops.
+//!
+//! See the top-level `README.md` for the module map
+//! (arith -> formats -> kernel -> coordinator -> runtime), the
+//! plane-word/limb design, and how to run the service and benches;
+//! `DESIGN.md` for the per-experiment index (which module regenerates
+//! which figure/table of the paper); and `EXPERIMENTS.md` for results.
 
 pub mod area;
 pub mod arith;

@@ -14,7 +14,7 @@
 //! before any queueing happens.
 
 use crate::coordinator::request::{op_format_slot, OpKind, OP_FORMAT_SLOTS};
-use crate::formats::FormatKind;
+use crate::formats::{FormatKind, PlaneWidth};
 
 /// Per-(op, format) capability table of one backend.
 #[derive(Clone, Debug)]
@@ -23,12 +23,24 @@ pub struct BackendCaps {
     /// `Some(ladder)` = supported with these executable batch sizes
     /// (ascending, deduplicated); `None` = unservable.
     ladders: [Option<Vec<usize>>; OP_FORMAT_SLOTS],
+    /// Per-format plane-word width the backend consumes. Defaults to
+    /// the width-true geometry ([`FormatKind::plane_width`]: `u32`
+    /// half-precision planes, `u64` otherwise); a backend that can only
+    /// take universal `u64` planes overrides with
+    /// [`Self::with_plane_width`], and the batcher builds its operand
+    /// planes accordingly.
+    widths: [PlaneWidth; FormatKind::ALL.len()],
 }
 
 impl BackendCaps {
-    /// A backend serving nothing yet (build up with [`Self::with`]).
+    /// A backend serving nothing yet (build up with [`Self::with`]),
+    /// consuming width-true planes.
     pub fn new(backend: &'static str) -> Self {
-        Self { backend, ladders: std::array::from_fn(|_| None) }
+        Self {
+            backend,
+            ladders: std::array::from_fn(|_| None),
+            widths: std::array::from_fn(|i| FormatKind::ALL[i].plane_width()),
+        }
     }
 
     /// A backend serving every (op, format) pair with one shared ladder
@@ -62,6 +74,29 @@ impl BackendCaps {
             self = self.with(op, format, ladder);
         }
         self
+    }
+
+    /// Override the plane-word width this backend consumes for one
+    /// format (e.g. a legacy backend taking `u64` planes for every
+    /// format). Panics if the width cannot hold the format's raw
+    /// container (`W32` for f64 would silently truncate every lane) —
+    /// capability tables are built once at startup, so an impossible
+    /// declaration fails fast there instead of corrupting batches.
+    pub fn with_plane_width(mut self, format: FormatKind, width: PlaneWidth) -> Self {
+        assert!(
+            format.total_bits() as usize <= width.lane_bytes() * 8,
+            "{format} ({}-bit containers) cannot ride {} plane words",
+            format.total_bits(),
+            width.label()
+        );
+        self.widths[format.index()] = width;
+        self
+    }
+
+    /// The plane-word width the coordinator must build this format's
+    /// operand planes at.
+    pub fn plane_width(&self, format: FormatKind) -> PlaneWidth {
+        self.widths[format.index()]
     }
 
     /// Human-readable backend name (shown in reports and error text).
@@ -129,6 +164,27 @@ mod tests {
             .with(OpKind::Divide, FormatKind::F32, &[8, 8, 4])
             .with(OpKind::Divide, FormatKind::F32, &[16, 2, 16]);
         assert_eq!(caps.ladder(OpKind::Divide, FormatKind::F32), &[2, 16]);
+    }
+
+    #[test]
+    fn plane_widths_default_width_true_and_override() {
+        let caps = BackendCaps::uniform("native", &[64]);
+        assert_eq!(caps.plane_width(FormatKind::F16), PlaneWidth::W32);
+        assert_eq!(caps.plane_width(FormatKind::BF16), PlaneWidth::W32);
+        assert_eq!(caps.plane_width(FormatKind::F32), PlaneWidth::W64);
+        assert_eq!(caps.plane_width(FormatKind::F64), PlaneWidth::W64);
+        // a u64-planes-only backend can negotiate wide half planes
+        let caps = caps.with_plane_width(FormatKind::F16, PlaneWidth::W64);
+        assert_eq!(caps.plane_width(FormatKind::F16), PlaneWidth::W64);
+        assert_eq!(caps.plane_width(FormatKind::BF16), PlaneWidth::W32);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot ride")]
+    fn plane_width_too_narrow_for_container_rejected() {
+        // W32 planes cannot hold f64 containers: declaring them would
+        // mean silent lane truncation, so construction fails fast
+        let _ = BackendCaps::new("bad").with_plane_width(FormatKind::F64, PlaneWidth::W32);
     }
 
     #[test]

@@ -1,19 +1,22 @@
 //! Batched op executors: the boundary between the coordinator and the
-//! compiled compute. Operands and results travel as raw `u64` plane
-//! words tagged with a [`FormatKind`], so one interface serves every
-//! IEEE format the [`crate::formats`] plane defines.
+//! compiled compute. Operands and results travel as **width-true
+//! planes** ([`PlaneRef`] / [`PlaneRefMut`]) tagged with a
+//! [`FormatKind`]: `u32` plane words for f16/bf16 lanes, `u64` for
+//! f32/f64 — so one interface serves every IEEE format the
+//! [`crate::formats`] plane defines without half-precision lanes
+//! hauling 48 dead bits through the hot path.
 //!
 //! The v2 contract has two halves:
 //!
 //! * [`Executor::capabilities`] — negotiated once at service startup: a
 //!   [`BackendCaps`] table of every supported (op, format) pair with
-//!   its executable batch-size ladder (replacing the v1 twelve-way
-//!   `batch_ladder` probe loop). The service routes and rejects against
-//!   this table for the life of the process.
+//!   its executable batch-size ladder **and the plane-word width the
+//!   backend consumes per format** (width-true by default). The service
+//!   routes, rejects and builds planes against this table for the life
+//!   of the process.
 //! * [`Executor::execute_into`] — the hot path: one batch executed into
 //!   a **caller-owned** output plane, so the per-batch path allocates
-//!   nothing (the v1 `execute` returned a fresh `Vec` per batch; the
-//!   worker now reuses one buffer across batches).
+//!   nothing (the worker reuses one buffer per width across batches).
 //!
 //! `PjrtExecutor` (behind the non-default `pjrt` feature) is the
 //! XLA path: HLO text (lowered once by `python/compile/aot.py`) is
@@ -26,18 +29,21 @@
 //! bit-accurate Goldschmidt datapath, served through the batched SoA
 //! kernels ([`crate::kernel`]): one [`GoldschmidtContext`] per format
 //! (ROMs + complement constants precomputed once, at that format's
-//! datapath geometry — bf16's p=5 ROM included), lane-parallel batch
-//! execution, a persistent per-worker [`BatchScratch`] arena so the hot
-//! path performs no plane allocations, and a scoped-thread worker split
-//! for large flushes. It is both the mock for coordinator tests (no
-//! artifacts needed) and the comparison baseline in the E2E bench.
+//! datapath geometry — bf16's p=5 ROM included), limb-sliced
+//! lane-parallel batch execution at the format's native plane width, a
+//! persistent per-width [`BatchScratch`] arena so the hot path performs
+//! no plane allocations, and a scoped-thread worker split for large
+//! flushes. It is both the mock for coordinator tests (no artifacts
+//! needed) and the comparison baseline in the E2E bench.
 
 use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use anyhow::Context as _;
 
 use crate::coordinator::request::OpKind;
-use crate::formats::{self, FloatFormat, FormatKind};
+use crate::formats::{
+    self, FloatFormat, FormatKind, PlaneBuf, PlaneExtract, PlaneRef, PlaneRefMut,
+};
 use crate::kernel::{BatchScratch, GoldschmidtContext};
 
 use super::caps::BackendCaps;
@@ -50,27 +56,37 @@ use super::caps::BackendCaps;
 /// own thread (see [`crate::coordinator::service::FpuService::start`]).
 pub trait Executor {
     /// The backend's capability table: every supported (op, format)
-    /// pair with its executable batch ladder, plus the backend name.
-    /// Called once at service startup (on the probe executor); must be
-    /// stable for the life of the executor.
+    /// pair with its executable batch ladder and per-format plane
+    /// widths, plus the backend name. Called once at service startup
+    /// (on the probe executor); must be stable for the life of the
+    /// executor.
     fn capabilities(&self) -> BackendCaps;
 
-    /// Execute one batch of raw `format` words into `out`.
+    /// Execute one batch of width-true `format` planes into `out`.
     /// `out.len()` must equal `a.len()`, which must be an executable
     /// batch size from the capability ladder; for `Divide`, `b` must be
-    /// `Some` with the same length.
+    /// `Some` with the same length. Plane widths must match the
+    /// backend's negotiated [`BackendCaps::plane_width`] for the
+    /// format.
     fn execute_into(
         &mut self,
         op: OpKind,
         format: FormatKind,
-        a: &[u64],
-        b: Option<&[u64]>,
-        out: &mut [u64],
+        a: PlaneRef<'_>,
+        b: Option<PlaneRef<'_>>,
+        out: PlaneRefMut<'_>,
     ) -> Result<()>;
 
     /// Allocating convenience wrapper around [`Self::execute_into`]
     /// (tests and one-off callers; the serving worker reuses its own
-    /// output buffer instead).
+    /// output buffers instead). Takes and returns universal `u64`
+    /// words, converting at the format's width-true plane width —
+    /// rebuilding the whole capability table per call just to read one
+    /// width would contradict `capabilities()`'s once-at-startup
+    /// contract. A backend that negotiates non-default widths via
+    /// [`BackendCaps::with_plane_width`] should override this wrapper
+    /// too (no in-tree backend does; a mismatch is a typed error from
+    /// `execute_into`, never corruption).
     fn execute(
         &mut self,
         op: OpKind,
@@ -78,8 +94,20 @@ pub trait Executor {
         a: &[u64],
         b: Option<&[u64]>,
     ) -> Result<Vec<u64>> {
-        let mut out = vec![0u64; a.len()];
-        self.execute_into(op, format, a, b, &mut out)?;
+        let width = format.plane_width();
+        let ap = PlaneBuf::from_u64_slice(width, a);
+        let bp = b.map(|b| PlaneBuf::from_u64_slice(width, b));
+        let mut op_out = PlaneBuf::new(width);
+        op_out.resize(a.len(), 0);
+        self.execute_into(
+            op,
+            format,
+            ap.as_ref(),
+            bp.as_ref().map(|p| p.as_ref()),
+            op_out.as_mut(),
+        )?;
+        let mut out = Vec::new();
+        op_out.widen_into(&mut out);
         Ok(out)
     }
 }
@@ -162,13 +190,21 @@ impl Executor for PjrtExecutor {
         &mut self,
         op: OpKind,
         format: FormatKind,
-        a: &[u64],
-        b: Option<&[u64]>,
-        out: &mut [u64],
+        a: PlaneRef<'_>,
+        b: Option<PlaneRef<'_>>,
+        mut out: PlaneRefMut<'_>,
     ) -> Result<()> {
         if format != FormatKind::F32 {
             bail!("pjrt backend serves f32 only (got {format})");
         }
+        let a = match a.as_w64() {
+            Some(a) => a,
+            None => bail!("pjrt backend takes u64 f32 planes"),
+        };
+        let out = match out.as_w64() {
+            Some(o) => o,
+            None => bail!("pjrt backend writes u64 f32 planes"),
+        };
         let batch = a.len();
         if out.len() != batch {
             bail!("output length {} != batch {batch}", out.len());
@@ -179,6 +215,10 @@ impl Executor for PjrtExecutor {
         let la = xla::Literal::vec1(&af);
         let result = match (op, b) {
             (OpKind::Divide, Some(b)) => {
+                let b = match b.as_w64() {
+                    Some(b) => b,
+                    None => bail!("pjrt backend takes u64 f32 planes"),
+                };
                 if b.len() != batch {
                     bail!("divide operand length mismatch: {} vs {batch}", b.len());
                 }
@@ -210,8 +250,9 @@ impl Executor for PjrtExecutor {
 // -------------------------------------------------------------- native --
 
 /// Executor over the crate's own bit-accurate datapath (no artifacts),
-/// running the batched SoA kernels with one precomputed
-/// [`GoldschmidtContext`] per format and a persistent scratch arena.
+/// running the batched SoA kernels at each format's native plane width
+/// with one precomputed [`GoldschmidtContext`] per format and a
+/// persistent per-width scratch arena.
 pub struct NativeExecutor {
     /// One datapath context per [`FormatKind`], indexed by
     /// `FormatKind::index()` — exactly as the paper's hardware would
@@ -219,9 +260,11 @@ pub struct NativeExecutor {
     /// context carries its p=5 ROM, 32 entries).
     ctxs: [GoldschmidtContext; 4],
     ladder: Vec<usize>,
-    /// Per-worker scratch planes: each service worker owns its executor,
-    /// so this arena makes batch decomposition allocation-free.
-    scratch: BatchScratch,
+    /// Per-worker scratch planes, one arena per plane width: each
+    /// service worker owns its executor, so batch decomposition is
+    /// allocation-free at either width.
+    scratch32: BatchScratch<u32>,
+    scratch64: BatchScratch<u64>,
 }
 
 impl NativeExecutor {
@@ -236,7 +279,8 @@ impl NativeExecutor {
                 GoldschmidtContext::new(FormatKind::ALL[i].datapath_config())
             }),
             ladder: ladder.to_vec(),
-            scratch: BatchScratch::new(),
+            scratch32: BatchScratch::new(),
+            scratch64: BatchScratch::new(),
         }
     }
 
@@ -250,31 +294,45 @@ impl NativeExecutor {
     pub fn context(&self, format: FormatKind) -> &GoldschmidtContext {
         &self.ctxs[format.index()]
     }
+}
 
-    fn run<F: FloatFormat>(
-        &mut self,
-        op: OpKind,
-        a: &[u64],
-        b: Option<&[u64]>,
-        out: &mut [u64],
-    ) -> Result<()> {
-        let ctx = &self.ctxs[F::KIND.index()];
-        match op {
-            OpKind::Divide => {
-                let b = match b {
-                    Some(b) => b,
-                    None => bail!("divide needs two operands"),
-                };
-                if b.len() != a.len() {
-                    bail!("operand length mismatch");
-                }
-                ctx.divide_batch_bits::<F>(a, b, out, &mut self.scratch);
+/// Run one batch at a format's native plane width: extract the
+/// width-true slices from the contract's plane views (a mismatched
+/// width is a typed error) and dispatch to the monomorphized kernels.
+fn run<F: FloatFormat>(
+    ctx: &GoldschmidtContext,
+    scratch: &mut BatchScratch<F::Plane>,
+    op: OpKind,
+    a: PlaneRef<'_>,
+    b: Option<PlaneRef<'_>>,
+    mut out: PlaneRefMut<'_>,
+) -> Result<()>
+where
+    F::Plane: PlaneExtract,
+{
+    let a = match <F::Plane>::from_ref(a) {
+        Some(a) => a,
+        None => bail!("{} batches ride {} planes", F::KIND, F::KIND.plane_width().label()),
+    };
+    let out = match <F::Plane>::from_mut(&mut out) {
+        Some(o) => o,
+        None => bail!("{} results ride {} planes", F::KIND, F::KIND.plane_width().label()),
+    };
+    match op {
+        OpKind::Divide => {
+            let b = match b.and_then(<F::Plane>::from_ref) {
+                Some(b) => b,
+                None => bail!("divide needs two {} operand planes", F::KIND),
+            };
+            if b.len() != a.len() {
+                bail!("operand length mismatch");
             }
-            OpKind::Sqrt => ctx.sqrt_batch_bits::<F>(a, out, &mut self.scratch),
-            OpKind::Rsqrt => ctx.rsqrt_batch_bits::<F>(a, out, &mut self.scratch),
+            ctx.divide_batch_plane::<F>(a, b, out, scratch);
         }
-        Ok(())
+        OpKind::Sqrt => ctx.sqrt_batch_plane::<F>(a, out, scratch),
+        OpKind::Rsqrt => ctx.rsqrt_batch_plane::<F>(a, out, scratch),
     }
+    Ok(())
 }
 
 impl Executor for NativeExecutor {
@@ -286,18 +344,19 @@ impl Executor for NativeExecutor {
         &mut self,
         op: OpKind,
         format: FormatKind,
-        a: &[u64],
-        b: Option<&[u64]>,
-        out: &mut [u64],
+        a: PlaneRef<'_>,
+        b: Option<PlaneRef<'_>>,
+        out: PlaneRefMut<'_>,
     ) -> Result<()> {
         if out.len() != a.len() {
             bail!("output length {} != batch {}", out.len(), a.len());
         }
+        let ctx = &self.ctxs[format.index()];
         match format {
-            FormatKind::F16 => self.run::<formats::F16>(op, a, b, out),
-            FormatKind::BF16 => self.run::<formats::BF16>(op, a, b, out),
-            FormatKind::F32 => self.run::<formats::F32>(op, a, b, out),
-            FormatKind::F64 => self.run::<formats::F64>(op, a, b, out),
+            FormatKind::F16 => run::<formats::F16>(ctx, &mut self.scratch32, op, a, b, out),
+            FormatKind::BF16 => run::<formats::BF16>(ctx, &mut self.scratch32, op, a, b, out),
+            FormatKind::F32 => run::<formats::F32>(ctx, &mut self.scratch64, op, a, b, out),
+            FormatKind::F64 => run::<formats::F64>(ctx, &mut self.scratch64, op, a, b, out),
         }
     }
 }
@@ -329,12 +388,57 @@ mod tests {
         let a = f32_plane(&[6.0, 10.0]);
         let b = f32_plane(&[2.0, 4.0]);
         let mut out = vec![u64::MAX; 2];
-        ex.execute_into(OpKind::Divide, FormatKind::F32, &a, Some(&b), &mut out).unwrap();
+        ex.execute_into(
+            OpKind::Divide,
+            FormatKind::F32,
+            PlaneRef::W64(&a),
+            Some(PlaneRef::W64(&b)),
+            PlaneRefMut::W64(&mut out),
+        )
+        .unwrap();
         assert_eq!(f32_out(&out), vec![3.0, 2.5]);
         // length mismatch is a typed error, not a panic
         let mut short = vec![0u64; 1];
         assert!(ex
-            .execute_into(OpKind::Divide, FormatKind::F32, &a, Some(&b), &mut short)
+            .execute_into(
+                OpKind::Divide,
+                FormatKind::F32,
+                PlaneRef::W64(&a),
+                Some(PlaneRef::W64(&b)),
+                PlaneRefMut::W64(&mut short),
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn half_precision_batches_ride_u32_planes() {
+        use crate::formats::Value;
+        let mut ex = NativeExecutor::with_defaults();
+        let enc = |x: f64| Value::from_f64(FormatKind::F16, x).bits() as u32;
+        let a = vec![enc(6.0), enc(10.0)];
+        let b = vec![enc(2.0), enc(4.0)];
+        let mut out = vec![0u32; 2];
+        ex.execute_into(
+            OpKind::Divide,
+            FormatKind::F16,
+            PlaneRef::W32(&a),
+            Some(PlaneRef::W32(&b)),
+            PlaneRefMut::W32(&mut out),
+        )
+        .unwrap();
+        assert_eq!(Value::from_bits(FormatKind::F16, out[0] as u64).to_f64(), 3.0);
+        assert_eq!(Value::from_bits(FormatKind::F16, out[1] as u64).to_f64(), 2.5);
+        // a u64 plane for a u32 format is a typed error, not corruption
+        let a64 = vec![enc(6.0) as u64];
+        let mut out64 = vec![0u64; 1];
+        assert!(ex
+            .execute_into(
+                OpKind::Divide,
+                FormatKind::F16,
+                PlaneRef::W64(&a64),
+                Some(PlaneRef::W64(&a64)),
+                PlaneRefMut::W64(&mut out64),
+            )
             .is_err());
     }
 
@@ -387,6 +491,9 @@ mod tests {
         assert_eq!(caps.supported().len(), 12);
         assert_eq!(caps.ladder(OpKind::Divide, FormatKind::F32), &[64, 256, 1024]);
         assert_eq!(caps.ladder(OpKind::Sqrt, FormatKind::F64), &[64, 256, 1024]);
+        // width-true plane negotiation
+        assert_eq!(caps.plane_width(FormatKind::F16), formats::PlaneWidth::W32);
+        assert_eq!(caps.plane_width(FormatKind::F64), formats::PlaneWidth::W64);
     }
 
     #[test]

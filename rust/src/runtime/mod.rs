@@ -3,8 +3,8 @@
 //!
 //! * [`caps`] — [`BackendCaps`](caps::BackendCaps), the per-(op, format)
 //!   capability table a backend hands the service at startup (the
-//!   negotiated half of the executor contract: support + batch ladders
-//!   in one call, no probe loop).
+//!   negotiated half of the executor contract: support, batch ladders
+//!   and per-format plane widths in one call, no probe loop).
 //! * [`artifacts`] — parses `artifacts/manifest.txt` written by
 //!   `python/compile/aot.py`.
 //! * [`executor`] — the [`Executor`](executor::Executor) trait

@@ -1,0 +1,139 @@
+//! Exhaustive f16 conformance: every binary16 bit pattern — all 65536
+//! words, every class (normals, subnormals, signed zeros, infinities,
+//! NaNs) — through the width-true batch kernels against the scalar
+//! reference, bit for bit.
+//!
+//! Coverage:
+//!
+//! * **sqrt / rsqrt**: the full 2^16 unary operand grid, exhaustively.
+//! * **divide**: every one of the 2^16 numerators against a denominator
+//!   cover of the grid. The default cover strides the 2^16 denominator
+//!   grid with a walk longer than one mantissa period and coprime to
+//!   it (so every one of the 1024 mantissa residues, every exponent
+//!   and every class appears as a denominator) and always includes the
+//!   special / boundary words — about 68M lane comparisons, sized for
+//!   a release CI job on small runners. Set `F16_EXHAUSTIVE_FULL=1`
+//!   for the complete 2^32 pairwise grid (minutes of CPU; the
+//!   denominator shards split across available cores either way).
+//!
+//! These tests are `#[ignore]` by default — they are the release-mode
+//! conformance tier (`cargo test --release --test f16_exhaustive --
+//! --ignored`), which CI opts into; a debug run would take far too
+//! long.
+
+use goldschmidt::formats::{FormatKind, F16};
+use goldschmidt::kernel::{BatchScratch, GoldschmidtContext};
+
+fn ctx() -> GoldschmidtContext {
+    GoldschmidtContext::new(FormatKind::F16.datapath_config())
+}
+
+/// All 2^16 raw f16 words as u32 plane lanes.
+fn full_grid() -> Vec<u32> {
+    (0u32..=0xFFFF).collect()
+}
+
+/// The denominator cover for the default divide sweep: a stride-63
+/// walk of the full grid — 63 is odd (coprime to the 1024-word
+/// mantissa period) and the walk's 1041 samples exceed one full
+/// period, so **every** mantissa residue appears as a denominator, as
+/// does every exponent and every class — plus hand-picked
+/// special/boundary words.
+fn denominator_cover() -> Vec<u32> {
+    if std::env::var("F16_EXHAUSTIVE_FULL").as_deref() == Ok("1") {
+        return full_grid();
+    }
+    let mut cover: Vec<u32> = (0u32..=0xFFFF).step_by(63).collect();
+    cover.extend_from_slice(&[
+        0x0000, 0x8000, // signed zeros
+        0x0001, 0x8001, // min subnormals
+        0x03FF, // max subnormal
+        0x0400, // min normal
+        0x3C00, 0xBC00, // +-1.0
+        0x3BFF, 0x3C01, // 1.0 neighbours
+        0x7BFF, 0xFBFF, // max finite
+        0x7C00, 0xFC00, // infinities
+        0x7E00, 0x7C01, 0xFE00, // NaNs (quiet + signalling patterns)
+    ]);
+    cover.sort_unstable();
+    cover.dedup();
+    cover
+}
+
+/// Split a denominator list across the machine's cores; each shard
+/// checks every numerator against its denominators. Returns the total
+/// number of lane comparisons performed.
+fn sweep_divide(dens: &[u32]) -> u64 {
+    let ctx = ctx();
+    let nums = full_grid();
+    let shards = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let per = dens.len().div_ceil(shards);
+    let checked = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for chunk in dens.chunks(per) {
+            let (ctx, nums, checked) = (&ctx, &nums, &checked);
+            s.spawn(move || {
+                let mut scratch = BatchScratch::<u32>::new();
+                let mut d_plane = vec![0u32; nums.len()];
+                let mut out = vec![0u32; nums.len()];
+                let mut lanes = 0u64;
+                for &d in chunk {
+                    d_plane.fill(d);
+                    // serial per shard: the shards themselves are the
+                    // parallelism
+                    ctx.divide_batch_plane_serial::<F16>(nums, &d_plane, &mut out, &mut scratch);
+                    for (&n, &got) in nums.iter().zip(out.iter()) {
+                        let want = ctx.divide_bits::<F16>(n as u64, d as u64);
+                        assert_eq!(
+                            got as u64, want,
+                            "{n:#06x} / {d:#06x}: batch {got:#06x} != scalar {want:#06x}"
+                        );
+                    }
+                    lanes += nums.len() as u64;
+                }
+                checked.fetch_add(lanes, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+    });
+    checked.into_inner()
+}
+
+#[test]
+#[ignore = "release-mode conformance tier: run with --release -- --ignored"]
+fn f16_sqrt_rsqrt_full_grid() {
+    let ctx = ctx();
+    let grid = full_grid();
+    let mut scratch = BatchScratch::<u32>::new();
+    let mut out = vec![0u32; grid.len()];
+    ctx.sqrt_batch_plane::<F16>(&grid, &mut out, &mut scratch);
+    for (&x, &got) in grid.iter().zip(out.iter()) {
+        let want = ctx.sqrt_bits::<F16>(x as u64);
+        assert_eq!(got as u64, want, "sqrt({x:#06x}): batch {got:#06x} != scalar {want:#06x}");
+    }
+    ctx.rsqrt_batch_plane::<F16>(&grid, &mut out, &mut scratch);
+    for (&x, &got) in grid.iter().zip(out.iter()) {
+        let want = ctx.rsqrt_bits::<F16>(x as u64);
+        assert_eq!(got as u64, want, "rsqrt({x:#06x}): batch {got:#06x} != scalar {want:#06x}");
+    }
+    println!("f16 sqrt/rsqrt: {} words swept exhaustively, twice", grid.len());
+}
+
+#[test]
+#[ignore = "release-mode conformance tier: run with --release -- --ignored"]
+fn f16_divide_full_numerator_grid() {
+    let dens = denominator_cover();
+    // enforce the cover's claim: every one of the 1024 mantissa
+    // residues must actually appear among the denominators
+    let mut residues = vec![false; 1024];
+    for &d in &dens {
+        residues[(d & 0x3FF) as usize] = true;
+    }
+    assert!(residues.iter().all(|&r| r), "denominator cover misses mantissa residues");
+    let checked = sweep_divide(&dens);
+    // every numerator must have met every cover denominator
+    assert_eq!(checked, 65536 * dens.len() as u64);
+    println!(
+        "f16 divide: {checked} lane comparisons ({} denominators x 65536 numerators)",
+        dens.len()
+    );
+}

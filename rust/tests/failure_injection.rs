@@ -12,6 +12,7 @@ use anyhow::{bail, Result};
 use goldschmidt::coordinator::{
     BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, ServiceError,
 };
+use goldschmidt::formats::{PlaneRef, PlaneRefMut};
 use goldschmidt::runtime::{BackendCaps, Executor, NativeExecutor};
 
 fn config() -> ServiceConfig {
@@ -38,9 +39,9 @@ impl Executor for Flaky {
         &mut self,
         op: OpKind,
         format: FormatKind,
-        a: &[u64],
-        b: Option<&[u64]>,
-        out: &mut [u64],
+        a: PlaneRef<'_>,
+        b: Option<PlaneRef<'_>>,
+        out: PlaneRefMut<'_>,
     ) -> Result<()> {
         let n = self.calls.fetch_add(1, Ordering::Relaxed);
         if n % self.period == self.period - 1 {
@@ -106,9 +107,9 @@ fn exec_failure_carries_backend_message_to_client() {
             &mut self,
             _: OpKind,
             _: FormatKind,
-            _: &[u64],
-            _: Option<&[u64]>,
-            _: &mut [u64],
+            _: PlaneRef<'_>,
+            _: Option<PlaneRef<'_>>,
+            _: PlaneRefMut<'_>,
         ) -> Result<()> {
             bail!("kaboom-7: simulated accelerator fault")
         }

@@ -9,6 +9,7 @@ use std::time::Duration;
 use goldschmidt::coordinator::{
     BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, ServiceError, Value,
 };
+use goldschmidt::formats::{PlaneRef, PlaneRefMut};
 use goldschmidt::runtime::{BackendCaps, Executor, NativeExecutor};
 #[cfg(feature = "pjrt")]
 use goldschmidt::runtime::PjrtExecutor;
@@ -85,9 +86,9 @@ fn backpressure_try_submit_reports_overloaded() {
             &mut self,
             op: OpKind,
             format: FormatKind,
-            a: &[u64],
-            b: Option<&[u64]>,
-            out: &mut [u64],
+            a: PlaneRef<'_>,
+            b: Option<PlaneRef<'_>>,
+            out: PlaneRefMut<'_>,
         ) -> anyhow::Result<()> {
             std::thread::sleep(Duration::from_millis(20));
             self.0.execute_into(op, format, a, b, out)
