@@ -16,10 +16,11 @@ use std::time::{Duration, Instant};
 use goldschmidt::arith::limb::PlaneWord;
 use goldschmidt::bench::{black_box, Bencher};
 use goldschmidt::coordinator::{BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig};
+use goldschmidt::dispatch::{ExecutorRegistry, RoutePolicy};
 use goldschmidt::formats::{self, FloatFormat, Value};
 use goldschmidt::goldschmidt::{divide_f32, Config};
 use goldschmidt::kernel::{BatchScratch, GoldschmidtContext};
-use goldschmidt::runtime::{Executor, NativeExecutor};
+use goldschmidt::runtime::{Executor, NativeExecutor, ScalarReferenceExecutor, U128BaselineExecutor};
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::json::Json;
 use goldschmidt::util::rng::Xoshiro256;
@@ -154,6 +155,17 @@ fn native_service(config: ServiceConfig) -> FpuService {
         Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
     })
     .expect("start")
+}
+
+/// The full three-backend dispatch plane (native preferred, u128
+/// divide baseline, scalar reference) under the given routing policy.
+fn routed_service(config: ServiceConfig, policy: RoutePolicy) -> FpuService {
+    let registry = ExecutorRegistry::new()
+        .with_policy(policy)
+        .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>))
+        .register(|| Ok(Box::new(U128BaselineExecutor::with_defaults()) as Box<dyn Executor>))
+        .register(|| Ok(Box::new(ScalarReferenceExecutor::with_defaults()) as Box<dyn Executor>));
+    FpuService::start_routed(config, registry).expect("start routed")
 }
 
 fn run_native(config: ServiceConfig) -> RunResult {
@@ -399,6 +411,48 @@ fn main() {
     }
     t.print();
     report.push(("format_sweep", Json::arr(formats_rows)));
+
+    // ---- routed vs direct: what does the dispatch plane cost? -----------
+    // same f32 divide volume, same config: a direct single-backend
+    // service vs the three-backend routed plane (native preferred).
+    // The acceptance bar is routing overhead <= 5% on this hot path.
+    let mut t = Table::new(
+        "routed vs direct (f32 divide per-request, workers=2)",
+        &["mode", "req/s", "mean lat", "p99 lat", "req/batch"],
+    )
+    .aligns(&[Align::Right; 5]);
+    let mut routed_rows = Vec::new();
+    let mut direct_rps = 0.0f64;
+    for &mode in &["direct", "routed_static", "routed_latency"] {
+        let cfg = service_config(1024, 200, 2);
+        let svc = match mode {
+            "direct" => native_service(cfg),
+            "routed_static" => routed_service(cfg, RoutePolicy::Static),
+            _ => routed_service(cfg, RoutePolicy::Latency),
+        };
+        let r = drive_per_request_divide(svc);
+        if mode == "direct" {
+            direct_rps = r.reqs_per_s;
+        }
+        t.row(&[
+            mode.to_string(),
+            format!("{:.0}", r.reqs_per_s),
+            fmt_ns(r.mean_lat_ns),
+            fmt_ns(r.p99_lat_ns as f64),
+            format!("{:.1}", r.mean_batch),
+        ]);
+        let mut row = r.json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("mode".into(), Json::from(mode));
+            map.insert(
+                "overhead_vs_direct".into(),
+                Json::from(if r.reqs_per_s > 0.0 { direct_rps / r.reqs_per_s - 1.0 } else { 0.0 }),
+            );
+        }
+        routed_rows.push(row);
+    }
+    t.print();
+    report.push(("routed_vs_direct", Json::arr(routed_rows)));
 
     // ---- PJRT backend (the real three-layer path) -----------------------
     #[cfg(feature = "pjrt")]

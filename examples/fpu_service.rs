@@ -12,12 +12,17 @@
 //! `--format f16|bf16|f32|f64` selects the serving precision (native
 //! backend; the AOT artifacts are f32-only, so a non-f32 format always
 //! uses the native batch kernels); `--requests N` overrides the
-//! replayed request count (the CI smoke runs a small N per format):
+//! replayed request count (the CI smoke runs a small N per format);
+//! `--backend native,u128,scalar` serves through the dispatch plane's
+//! multi-backend router instead of a single executor (with
+//! `--route-policy static|latency` arbitration):
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example fpu_service
 //! cargo run --release --example fpu_service -- --format f64
 //! cargo run --release --example fpu_service -- --format bf16 --requests 2000
+//! cargo run --release --example fpu_service -- --backend native,u128,scalar \
+//!     --route-policy latency
 //! ```
 
 use std::path::PathBuf;
@@ -27,6 +32,7 @@ use anyhow::bail;
 use goldschmidt::coordinator::{
     BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, Value,
 };
+use goldschmidt::dispatch::{standard_registry, RoutePolicy};
 use goldschmidt::runtime::NativeExecutor;
 #[cfg(feature = "pjrt")]
 use goldschmidt::runtime::{Executor, PjrtExecutor};
@@ -36,14 +42,23 @@ use goldschmidt::workload::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSp
 
 const DEFAULT_REQUESTS: usize = 200_000;
 
-/// Start on the PJRT backend when the feature is compiled in, the AOT
-/// artifacts exist and the workload is f32; otherwise serve through the
-/// native batch kernels so the example always runs.
+/// With `--backend LIST`, serve through the dispatch plane's routed
+/// registry. Otherwise: the PJRT backend when the feature is compiled
+/// in, the AOT artifacts exist and the workload is f32; else the
+/// native batch kernels, so the example always runs.
 fn start_backend(
     config: ServiceConfig,
     artifacts: &std::path::Path,
     format: FormatKind,
-) -> anyhow::Result<(FpuService, &'static str)> {
+    backends: Option<&str>,
+    policy: RoutePolicy,
+) -> anyhow::Result<(FpuService, String)> {
+    if let Some(list) = backends {
+        let registry = standard_registry(list, policy, Some(artifacts.to_path_buf()))?;
+        let svc = FpuService::start_routed(config, registry)?;
+        let names = svc.backend_names().join(",");
+        return Ok((svc, format!("dispatch [{names}] ({} policy)", policy.label())));
+    }
     #[cfg(feature = "pjrt")]
     if format == FormatKind::F32 && artifacts.join("manifest.txt").exists() {
         let dir = artifacts.to_path_buf();
@@ -52,13 +67,13 @@ fn start_backend(
             ex.warmup()?; // compile all executables before serving
             Ok(Box::new(ex) as Box<dyn Executor>)
         })?;
-        return Ok((svc, "pjrt-cpu (AOT pallas/jax HLO)"));
+        return Ok((svc, "pjrt-cpu (AOT pallas/jax HLO)".to_string()));
     }
     #[cfg(not(feature = "pjrt"))]
     let _ = (artifacts, format);
     let svc =
         FpuService::start(config, || Ok(Box::new(NativeExecutor::with_defaults()) as _))?;
-    Ok((svc, "native fixed-point (batched SoA kernels)"))
+    Ok((svc, "native fixed-point (batched SoA kernels)".to_string()))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -73,6 +88,10 @@ fn main() -> anyhow::Result<()> {
     if requests == 0 {
         bail!("--requests needs a positive count");
     }
+    let backend_arg = args.get_str("backend", "");
+    let backends = if backend_arg.is_empty() { None } else { Some(backend_arg.as_str()) };
+    let policy = RoutePolicy::parse(&args.get_str("route-policy", "static"))
+        .map_err(anyhow::Error::msg)?;
 
     let config = ServiceConfig {
         batcher: BatcherConfig::new(1024, Duration::from_micros(200)).tight_half_precision(),
@@ -81,7 +100,7 @@ fn main() -> anyhow::Result<()> {
         poll: Duration::from_micros(50),
     };
 
-    let (svc, backend) = start_backend(config, &artifacts, format)?;
+    let (svc, backend) = start_backend(config, &artifacts, format, backends, policy)?;
     println!(
         "backend: {backend} (caps: {} (op, format) pairs), format: {format}",
         svc.capabilities().supported().len()
@@ -179,6 +198,18 @@ fn main() -> anyhow::Result<()> {
     t.print();
     assert!(worst_ulp <= 1, "accuracy regression: worst {worst_ulp} ulp");
     assert_eq!(snap.total_errors(), 0);
+    let report = svc.dispatch_report();
+    if report.len() > 1 {
+        for (name, s) in &report {
+            println!(
+                "  backend {name}: {} batches ok, {} failed, {} rerouted, breaker {}",
+                s.ok_batches,
+                s.failed_batches,
+                s.rerouted,
+                if s.breaker_open { "OPEN" } else { "closed" }
+            );
+        }
+    }
     svc.shutdown();
     println!("OK — all three layers composed: pallas kernel -> jax HLO -> rust service");
     Ok(())

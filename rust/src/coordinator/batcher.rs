@@ -195,14 +195,22 @@ pub struct Batch {
     /// The work items riding this batch (FIFO order; lane offsets
     /// within the planes follow item order).
     pub items: Vec<WorkItem>,
-    /// Padded operand plane as width-true raw format words (`u32` lanes
-    /// for half-precision batches).
+    /// Padded operand plane as raw format words at the serving
+    /// backend's negotiated plane width (`u32` lanes for width-true
+    /// half-precision batches).
     pub a: PlaneBuf,
     /// Second operand plane (padded), divide only — empty for unary
     /// ops, whose executors never read it.
     pub b: PlaneBuf,
     /// Padded (executable) size; `live() <= padded`.
     pub padded: usize,
+    /// Index of the backend (worker pool) this batch was formed for:
+    /// its planes are at that backend's width, padded to its ladder.
+    pub backend: usize,
+    /// Bitmask of backend indices that have already attempted this
+    /// batch — the dispatch plane's retry chain never re-offers a batch
+    /// to a backend that failed it.
+    pub tried: u8,
 }
 
 impl Batch {
@@ -222,10 +230,10 @@ impl Batch {
     }
 }
 
-/// The dynamic batcher.
+/// One backend's batching shape: its capability ladders and negotiated
+/// plane widths (a routed service keeps one per registered backend).
 #[derive(Debug)]
-pub struct DynamicBatcher {
-    config: BatcherConfig,
+struct BackendShape {
     /// Per-(op, format) ladder of available executable batch sizes
     /// (ascending), from the backend's negotiated capabilities.
     ladders: [Vec<usize>; OP_FORMAT_SLOTS],
@@ -235,10 +243,8 @@ pub struct DynamicBatcher {
     widths: [PlaneWidth; FormatKind::ALL.len()],
 }
 
-impl DynamicBatcher {
-    /// New batcher over a backend's capability ladders and plane
-    /// widths.
-    pub fn new(config: BatcherConfig, caps: &BackendCaps) -> Self {
+impl BackendShape {
+    fn from_caps(caps: &BackendCaps) -> Self {
         let mut ladders: [Vec<usize>; OP_FORMAT_SLOTS] = std::array::from_fn(|_| Vec::new());
         for &op in &OpKind::ALL {
             for &format in &FormatKind::ALL {
@@ -246,7 +252,33 @@ impl DynamicBatcher {
             }
         }
         let widths = std::array::from_fn(|i| caps.plane_width(FormatKind::ALL[i]));
-        Self { config, ladders, widths }
+        Self { ladders, widths }
+    }
+}
+
+/// The dynamic batcher. A routed service holds one shape table per
+/// registered backend and forms each batch *for* the backend the
+/// dispatch plane selected (`*_for` methods); the plain methods are the
+/// single-backend view (backend 0), which is what direct
+/// [`FpuService::start`](super::service::FpuService::start) services
+/// and the batcher's own tests use.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    config: BatcherConfig,
+    backends: Vec<BackendShape>,
+}
+
+impl DynamicBatcher {
+    /// New single-backend batcher over one capability table.
+    pub fn new(config: BatcherConfig, caps: &BackendCaps) -> Self {
+        Self::routed(config, std::slice::from_ref(caps))
+    }
+
+    /// New multi-backend batcher: one shape table per backend, index
+    /// order matching the dispatch plane's routing table.
+    pub fn routed(config: BatcherConfig, caps: &[BackendCaps]) -> Self {
+        assert!(!caps.is_empty(), "batcher needs at least one backend");
+        Self { config, backends: caps.iter().map(BackendShape::from_caps).collect() }
     }
 
     /// The config in force.
@@ -254,25 +286,51 @@ impl DynamicBatcher {
         &self.config
     }
 
-    fn ladder(&self, op: OpKind, format: FormatKind) -> &[usize] {
-        &self.ladders[op_format_slot(op, format)]
+    fn ladder_for(&self, backend: usize, op: OpKind, format: FormatKind) -> &[usize] {
+        &self.backends[backend].ladders[op_format_slot(op, format)]
     }
 
-    /// Largest executable size for an (op, format) pair (the flush cap).
-    fn cap(&self, op: OpKind, format: FormatKind) -> usize {
+    /// Largest executable size for a backend's (op, format) pair (the
+    /// flush cap).
+    fn cap_for(&self, backend: usize, op: OpKind, format: FormatKind) -> usize {
         let max_batch = self.config.max_batch_for(op, format);
-        self.ladder(op, format).last().copied().unwrap_or(max_batch).min(max_batch).max(1)
+        self.ladder_for(backend, op, format)
+            .last()
+            .copied()
+            .unwrap_or(max_batch)
+            .min(max_batch)
+            .max(1)
     }
 
-    /// Smallest ladder size >= n (or the cap when n exceeds it).
-    fn pad_to(&self, op: OpKind, format: FormatKind, n: usize) -> usize {
-        let ladder = self.ladder(op, format);
+    /// Smallest ladder size >= n for a backend (or the cap when n
+    /// exceeds it).
+    pub fn padded_for(&self, backend: usize, op: OpKind, format: FormatKind, n: usize) -> usize {
+        let ladder = self.ladder_for(backend, op, format);
         ladder.iter().copied().find(|&b| b >= n).or(ladder.last().copied()).unwrap_or(n)
     }
 
-    /// Decide whether an (op, format) queue should flush now.
+    /// The plane width a backend's batches of `format` ride.
+    pub fn plane_width_for(&self, backend: usize, format: FormatKind) -> PlaneWidth {
+        self.backends[backend].widths[format.index()]
+    }
+
+    /// Decide whether an (op, format) queue should flush now (single-
+    /// backend view).
     pub fn should_flush(
         &self,
+        router: &Router,
+        op: OpKind,
+        format: FormatKind,
+        now: Instant,
+    ) -> bool {
+        self.should_flush_for(0, router, op, format, now)
+    }
+
+    /// Decide whether an (op, format) queue should flush now, into a
+    /// batch shaped for `backend`.
+    pub fn should_flush_for(
+        &self,
+        backend: usize,
         router: &Router,
         op: OpKind,
         format: FormatKind,
@@ -282,7 +340,7 @@ impl DynamicBatcher {
         if len == 0 {
             return false;
         }
-        if len >= self.cap(op, format) {
+        if len >= self.cap_for(backend, op, format) {
             return true;
         }
         if router.earliest_deadline_in(op, format).is_some_and(|d| now >= d) {
@@ -294,11 +352,7 @@ impl DynamicBatcher {
         }
     }
 
-    /// Form one batch from an (op, format) queue (up to the cap),
-    /// shedding expired items and padding operand planes to the ladder
-    /// with the format's `1.0`. Returns `None` when the drain yields no
-    /// live items (empty queue, or everything drained was expired —
-    /// the queue has still shrunk, so callers loop on queue length).
+    /// [`Self::form_batch_for`] on the single-backend view (backend 0).
     pub fn form_batch(
         &self,
         router: &mut Router,
@@ -308,11 +362,34 @@ impl DynamicBatcher {
         pool: &PlanePool,
         metrics: &Metrics,
     ) -> Option<Batch> {
-        let cap = self.cap(op, format);
+        self.form_batch_for(0, router, op, format, now, pool, metrics)
+    }
+
+    /// Form one batch from an (op, format) queue (up to the backend's
+    /// cap), shedding expired items and padding operand planes to the
+    /// backend's ladder with the format's `1.0`, at the backend's
+    /// negotiated plane width. Every drained lane (shed included) is
+    /// discounted from the metrics queue-depth gauge. Returns `None`
+    /// when the drain yields no live items (empty queue, or everything
+    /// drained was expired — the queue has still shrunk, so callers
+    /// loop on queue length).
+    pub fn form_batch_for(
+        &self,
+        backend: usize,
+        router: &mut Router,
+        op: OpKind,
+        format: FormatKind,
+        now: Instant,
+        pool: &PlanePool,
+        metrics: &Metrics,
+    ) -> Option<Batch> {
+        let cap = self.cap_for(backend, op, format);
         let drained = router.drain(op, format, cap);
         if drained.is_empty() {
             return None;
         }
+        let taken: usize = drained.iter().map(|i| i.lanes()).sum();
+        metrics.record_dequeued(op, format, taken as u64);
         let mut items = Vec::with_capacity(drained.len());
         let mut shed = 0usize;
         for item in drained {
@@ -330,14 +407,15 @@ impl DynamicBatcher {
             return None;
         }
         let live: usize = items.iter().map(|i| i.lanes()).sum();
-        let padded = self.pad_to(op, format, live);
+        let padded = self.padded_for(backend, op, format, live);
         // pad with neutral operands: 1.0 / 1.0 stays in-domain for every
         // op; unary batches build no divisor plane at all. Planes come
         // from the pool at the backend's negotiated width (u32 for
-        // half-precision batches: half the flush traffic).
+        // half-precision batches on a width-true backend: half the
+        // flush traffic).
         let divide = op == OpKind::Divide;
         let one = format.one_bits();
-        let width = self.widths[format.index()];
+        let width = self.plane_width_for(backend, format);
         let mut a = pool.take(width);
         let mut b = if divide { pool.take(width) } else { PlaneBuf::new(width) };
         a.reserve(padded);
@@ -351,11 +429,12 @@ impl DynamicBatcher {
         if divide {
             b.resize(padded, one);
         }
-        Some(Batch { op, format, items, a, b, padded })
+        Some(Batch { op, format, items, a, b, padded, backend, tried: 0 })
     }
 
     /// Form batches for every (op, format) queue that should flush at
-    /// `now`.
+    /// `now` (single-backend view; the routed dispatcher drives
+    /// [`Self::form_batch_for`] per selected backend instead).
     pub fn ready_batches(
         &self,
         router: &mut Router,
@@ -383,7 +462,7 @@ impl DynamicBatcher {
 
     /// Unconditionally drain everything (shutdown path). Expired items
     /// are still shed, not executed; queues that are already empty form
-    /// no batch.
+    /// no batch. Single-backend view, like [`Self::ready_batches`].
     pub fn flush_all(
         &self,
         router: &mut Router,
@@ -592,8 +671,69 @@ mod tests {
             a: PlaneBuf::default(),
             b: PlaneBuf::default(),
             padded: 0,
+            backend: 0,
+            tried: 0,
         };
         assert_eq!(batch.waste(), 0.0);
+    }
+
+    #[test]
+    fn per_backend_shapes_drive_width_ladder_and_cap() {
+        // backend 0: width-true, fine ladder; backend 1: a u64-planes
+        // divide backend on a coarser ladder — the same queue forms
+        // differently depending on who serves the batch
+        let caps0 = BackendCaps::uniform("native", &[64, 256, 1024]);
+        let caps1 = {
+            let mut c = BackendCaps::new("u64-only");
+            for &format in &FormatKind::ALL {
+                c = c
+                    .with(OpKind::Divide, format, &[128])
+                    .with_plane_width(format, PlaneWidth::W64);
+            }
+            c
+        };
+        let b = DynamicBatcher::routed(
+            BatcherConfig::new(1024, Duration::from_micros(1_000_000)),
+            &[caps0, caps1],
+        );
+        assert_eq!(b.plane_width_for(0, FormatKind::F16), PlaneWidth::W32);
+        assert_eq!(b.plane_width_for(1, FormatKind::F16), PlaneWidth::W64);
+        assert_eq!(b.padded_for(0, OpKind::Divide, FormatKind::F16, 70), 256);
+        assert_eq!(b.padded_for(1, OpKind::Divide, FormatKind::F16, 70), 128);
+        let pool = PlanePool::new();
+        let metrics = Metrics::new();
+        let mut r = Router::new();
+        for i in 0..70 {
+            r.route(req_fmt(i, OpKind::Divide, FormatKind::F16));
+        }
+        let now = Instant::now();
+        let batch = b
+            .form_batch_for(1, &mut r, OpKind::Divide, FormatKind::F16, now, &pool, &metrics)
+            .unwrap();
+        assert_eq!(batch.backend, 1);
+        assert_eq!(batch.tried, 0);
+        assert_eq!(batch.padded, 128);
+        assert_eq!(batch.a.width(), PlaneWidth::W64, "backend 1 negotiated u64 planes");
+        assert!((70..128).all(|i| batch.a.get(i) == FormatKind::F16.one_bits()));
+    }
+
+    #[test]
+    fn form_batch_discounts_queue_depth_gauge() {
+        let b = batcher(1024, 0);
+        let metrics = Metrics::new();
+        let pool = PlanePool::new();
+        let mut r = Router::new();
+        for i in 0..30 {
+            r.route(req(i, OpKind::Divide));
+        }
+        // the service handle normally feeds the gauge at submit time
+        metrics.record_enqueued(OpKind::Divide, F32, 30);
+        assert_eq!(metrics.queued_lanes(OpKind::Divide, F32), 30);
+        let batch = b
+            .form_batch(&mut r, OpKind::Divide, F32, Instant::now(), &pool, &metrics)
+            .unwrap();
+        assert_eq!(batch.live(), 30);
+        assert_eq!(metrics.queued_lanes(OpKind::Divide, F32), 0, "drained lanes discounted");
     }
 
     #[test]

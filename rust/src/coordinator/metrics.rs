@@ -10,9 +10,10 @@
 //! the rare total-worker-loss path (delivered as `Shutdown`) — and
 //! `shed` counts lanes dropped by deadline expiry before execution.
 
+use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
 
-use crate::util::stats::LogHistogram;
+use crate::util::stats::{LogHistogram, RateWindow};
 
 use super::request::{op_format_slot, FormatKind, OpKind, OP_FORMAT_SLOTS};
 
@@ -33,57 +34,38 @@ struct SliceMetrics {
     /// Would-reject submissions seen by admission control (drives the
     /// 1-in-N probe that keeps a rejecting slot able to recover).
     admission_probes: u64,
-    recent: RecentWindow,
+    /// Per-batch `(exec_ns, live lanes)` service-rate window: the
+    /// queue-delay model reads `sum(exec_ns) / sum(lanes)` over the
+    /// last `RECENT_WINDOW` batches, so the rate **decays** as the
+    /// service recovers — a cumulative histogram would let one
+    /// overload burst poison admission control forever.
+    rate: RateWindow<RECENT_WINDOW>,
 }
 
-/// Batches a slice must have completed before its latency window is
-/// trusted as a queue-delay estimate (admission control stays out of
+/// Batches a slice must have completed before its service-rate window
+/// is trusted as a queue-delay model (admission control stays out of
 /// the way on a cold service).
 const ADMISSION_MIN_BATCHES: usize = 4;
 
-/// Recent-batch window size backing the queue-delay estimate.
+/// Recent-batch window size backing the service-rate estimate.
 const RECENT_WINDOW: usize = 32;
 
 /// Every `N`-th would-reject submission is admitted anyway as a probe.
 const ADMISSION_PROBE_PERIOD: u64 = 16;
 
-/// Sliding window of per-batch latency samples: the queue-delay
-/// estimate reads the median of the last [`RECENT_WINDOW`] batches, so
-/// it **decays** as the service recovers — a cumulative histogram
-/// would let one overload burst poison admission control forever.
-#[derive(Clone, Debug, Default)]
-struct RecentWindow {
-    buf: Vec<u64>,
-    idx: usize,
-}
-
-impl RecentWindow {
-    fn push(&mut self, sample: u64) {
-        if self.buf.len() < RECENT_WINDOW {
-            self.buf.push(sample);
-        } else {
-            self.buf[self.idx] = sample;
-        }
-        self.idx = (self.idx + 1) % RECENT_WINDOW;
-    }
-
-    fn len(&self) -> usize {
-        self.buf.len()
-    }
-
-    /// Median of the window (callers ensure it is non-empty).
-    fn median(&self) -> u64 {
-        let mut v = self.buf.clone();
-        v.sort_unstable();
-        v[v.len() / 2]
-    }
-}
-
 /// Shared metrics sink (interior mutability; cheap enough for the
-/// per-batch hot path — one lock per *batch*, not per request).
+/// per-batch hot path — one lock per *batch*, not per request; the
+/// queue-depth gauges are plain atomics, touched once per submission
+/// and once per batch formation).
 #[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<[SliceMetrics; SLOTS]>,
+    /// Per-slot queued-lane gauge: incremented at submit (when a work
+    /// item enters the bounded queue), decremented when its lanes are
+    /// drained into a batch (or shed). This mirrors the router's lane
+    /// counts — plus the submit-channel backlog the router has not
+    /// seen yet, which is exactly what makes burst tracking prompt.
+    depth: [AtomicI64; SLOTS],
 }
 
 impl Default for Metrics {
@@ -99,7 +81,10 @@ fn idx(op: OpKind, format: FormatKind) -> usize {
 impl Metrics {
     /// Empty metrics.
     pub fn new() -> Self {
-        Self { inner: Mutex::new(std::array::from_fn(|_| SliceMetrics::default())) }
+        Self {
+            inner: Mutex::new(std::array::from_fn(|_| SliceMetrics::default())),
+            depth: std::array::from_fn(|_| AtomicI64::new(0)),
+        }
     }
 
     /// Record one executed batch. `latencies_ns` carries one entry per
@@ -125,11 +110,9 @@ impl Metrics {
         for &(l, n) in latencies_ns {
             s.latency.record_n(l, n as u64);
         }
-        // the admission window tracks the batch's slowest rider — the
-        // oldest waiter is what queue delay actually did to this batch
-        if let Some(worst) = latencies_ns.iter().map(|&(l, _)| l).max() {
-            s.recent.push(worst);
-        }
+        // the admission model tracks the slot's service rate: how many
+        // nanoseconds of executor time one lane costs, windowed
+        s.rate.push(exec_ns, lanes);
     }
 
     /// Record a failed batch (all its lanes error out).
@@ -152,31 +135,55 @@ impl Metrics {
         m[idx(op, format)].admission_rejected += count;
     }
 
+    /// Record lanes entering the queue (submit time). Paired with
+    /// [`Self::record_dequeued`] at batch formation, this keeps the
+    /// per-slot queued-lane gauge the admission model multiplies by
+    /// the service rate.
+    pub fn record_enqueued(&self, op: OpKind, format: FormatKind, lanes: u64) {
+        self.depth[idx(op, format)].fetch_add(lanes as i64, Ordering::Relaxed);
+    }
+
+    /// Record lanes leaving the queue (drained into a batch or shed).
+    pub fn record_dequeued(&self, op: OpKind, format: FormatKind, lanes: u64) {
+        self.depth[idx(op, format)].fetch_sub(lanes as i64, Ordering::Relaxed);
+    }
+
+    /// Currently queued lanes for one (op, format) slot (submit queue +
+    /// router backlog; clamped at zero against transient enqueue/
+    /// dequeue interleavings).
+    pub fn queued_lanes(&self, op: OpKind, format: FormatKind) -> u64 {
+        self.depth[idx(op, format)].load(Ordering::Relaxed).max(0) as u64
+    }
+
     /// Queue-delay estimate for one (op, format) slot, in nanoseconds:
-    /// the median worst-rider latency over the slot's last
-    /// `RECENT_WINDOW` batches — a **windowed** signal, so it decays as
-    /// the service recovers instead of remembering every overload
-    /// forever. `None` until a minimum number of batches
-    /// (`ADMISSION_MIN_BATCHES`, currently 4) have completed, so
-    /// admission control never rejects on a cold slot. Reads one slice
-    /// under the lock — cheap enough for the deadline-submit path
-    /// (deadline-free submits never call it).
+    /// a **queue-depth × service-rate model** — the lanes currently
+    /// queued ahead (the gauge fed by submit/batch-formation, mirroring
+    /// the router's lane counts) times the windowed executor cost per
+    /// lane over the slot's last `RECENT_WINDOW` batches. Bursts move
+    /// the estimate the instant they are *queued*, not a latency-window
+    /// later; and an idle slot estimates ~zero delay no matter how slow
+    /// its history was, so recovery is immediate. `None` until a
+    /// minimum number of batches (`ADMISSION_MIN_BATCHES`, currently 4)
+    /// have fed the rate window, so admission control never rejects on
+    /// a cold slot. Reads one slice under the lock — cheap enough for
+    /// the deadline-submit path (deadline-free submits never call it).
     pub fn queue_delay_estimate_ns(&self, op: OpKind, format: FormatKind) -> Option<u64> {
+        let depth = self.queued_lanes(op, format);
         let m = self.inner.lock().expect("metrics poisoned");
         let s = &m[idx(op, format)];
-        if s.recent.len() < ADMISSION_MIN_BATCHES {
+        if s.rate.len() < ADMISSION_MIN_BATCHES {
             return None;
         }
-        Some(s.recent.median())
+        Some((depth as f64 * s.rate.ns_per_lane()?) as u64)
     }
 
     /// Admission probe gate, called for each submission the estimate
     /// says to reject: every `ADMISSION_PROBE_PERIOD`-th would-reject
-    /// is admitted anyway (returns `true`). The probes keep a stream of
-    /// fresh latency samples flowing through a rejecting slot, so when
-    /// the backlog clears the window median falls and full admission
-    /// resumes — without the probe, a slot whose traffic is all
-    /// deadline-gated could reject forever on stale signal.
+    /// is admitted anyway (returns `true`). The probes keep fresh
+    /// service-rate samples flowing through a rejecting slot, so a
+    /// stale rate window gets re-measured and full admission resumes —
+    /// without the probe, a slot whose traffic is all deadline-gated
+    /// could reject forever on stale signal.
     pub fn admission_probe(&self, op: OpKind, format: FormatKind) -> bool {
         let mut m = self.inner.lock().expect("metrics poisoned");
         let s = &mut m[idx(op, format)];
@@ -412,37 +419,67 @@ mod tests {
     }
 
     #[test]
-    fn queue_delay_estimate_needs_signal_then_tracks_p50() {
+    fn queue_depth_gauge_tracks_enqueue_dequeue_per_slot() {
+        let m = Metrics::new();
+        assert_eq!(m.queued_lanes(OpKind::Divide, F32), 0);
+        m.record_enqueued(OpKind::Divide, F32, 100);
+        m.record_enqueued(OpKind::Divide, F32, 28);
+        assert_eq!(m.queued_lanes(OpKind::Divide, F32), 128);
+        // slots are independent
+        assert_eq!(m.queued_lanes(OpKind::Divide, FormatKind::F16), 0);
+        assert_eq!(m.queued_lanes(OpKind::Sqrt, F32), 0);
+        m.record_dequeued(OpKind::Divide, F32, 128);
+        assert_eq!(m.queued_lanes(OpKind::Divide, F32), 0);
+        // transient negative interleavings clamp to zero, never wrap
+        m.record_dequeued(OpKind::Divide, F32, 5);
+        assert_eq!(m.queued_lanes(OpKind::Divide, F32), 0);
+        m.record_enqueued(OpKind::Divide, F32, 5);
+        assert_eq!(m.queued_lanes(OpKind::Divide, F32), 0, "gauge stays conserved");
+    }
+
+    #[test]
+    fn queue_delay_estimate_is_depth_times_service_rate() {
         let m = Metrics::new();
         // no batches: no estimate (cold slot, admission stays open)
         assert!(m.queue_delay_estimate_ns(OpKind::Divide, F32).is_none());
         for _ in 0..3 {
-            m.record_batch(OpKind::Divide, F32, &[(5_000, 1)], 100, 1);
+            m.record_batch(OpKind::Divide, F32, &[(5_000, 64)], 64_000, 64);
         }
         assert!(m.queue_delay_estimate_ns(OpKind::Divide, F32).is_none(), "below min batches");
-        m.record_batch(OpKind::Divide, F32, &[(5_000, 1)], 100, 1);
+        m.record_batch(OpKind::Divide, F32, &[(5_000, 64)], 64_000, 64);
+        // rate signal: 64_000ns / 64 lanes = 1000 ns per lane; with an
+        // empty queue the model predicts ~zero delay
+        assert_eq!(m.queue_delay_estimate_ns(OpKind::Divide, F32), Some(0));
+        // a queued burst moves the estimate immediately: depth x rate
+        m.record_enqueued(OpKind::Divide, F32, 200);
         let est = m.queue_delay_estimate_ns(OpKind::Divide, F32).expect("warm slot");
-        assert!(est >= 5_000, "p50 estimate below observed latency: {est}");
+        assert_eq!(est, 200_000, "200 lanes x 1000 ns/lane");
+        // and draining the queue recovers the estimate instantly — no
+        // latency window to wait out
+        m.record_dequeued(OpKind::Divide, F32, 200);
+        assert_eq!(m.queue_delay_estimate_ns(OpKind::Divide, F32), Some(0));
         // other slots stay cold
         assert!(m.queue_delay_estimate_ns(OpKind::Sqrt, F32).is_none());
         assert!(m.queue_delay_estimate_ns(OpKind::Divide, FormatKind::F16).is_none());
     }
 
     #[test]
-    fn queue_delay_estimate_recovers_after_overload() {
-        // the window must decay: an overload burst followed by fast
-        // batches brings the estimate back down (a cumulative histogram
-        // would keep rejecting forever)
+    fn service_rate_window_decays_after_slow_burst() {
+        // the rate window must decay: a burst of slow batches followed
+        // by fast ones re-ranks the per-lane cost (a cumulative mean
+        // would keep over-rejecting forever)
         let m = Metrics::new();
+        m.record_enqueued(OpKind::Divide, F32, 10);
         for _ in 0..40 {
-            m.record_batch(OpKind::Divide, F32, &[(50_000_000, 1)], 100, 1);
+            m.record_batch(OpKind::Divide, F32, &[(50_000_000, 1)], 5_000_000, 1);
         }
+        // 10 lanes x 5ms/lane = 50ms
         assert!(m.queue_delay_estimate_ns(OpKind::Divide, F32).unwrap() >= 50_000_000);
         for _ in 0..RECENT_WINDOW {
-            m.record_batch(OpKind::Divide, F32, &[(2_000, 1)], 100, 1);
+            m.record_batch(OpKind::Divide, F32, &[(2_000, 1)], 200, 1);
         }
         let est = m.queue_delay_estimate_ns(OpKind::Divide, F32).unwrap();
-        assert!(est <= 2_000, "window did not decay: {est}");
+        assert!(est <= 2_000, "rate window did not decay: {est}");
     }
 
     #[test]

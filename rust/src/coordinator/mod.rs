@@ -14,11 +14,17 @@
 //!            │                                        deadline shedding,
 //!            │                                        capability-ladder
 //!            │                                        padding)
-//!            │                              worker pool: Executor::
-//!            │                                execute_into (caller-owned
-//!            │                                output plane; format-
-//!            │                                dispatched batch kernels
-//!            │                                or PJRT)
+//!            │                        DispatchPlane (crate::dispatch):
+//!            │                          per-batch backend selection —
+//!            │                          static or latency policy,
+//!            │                          circuit breakers, probes,
+//!            │                          rider-invisible failover
+//!            │                              per-backend worker pools:
+//!            │                                Executor::execute_into
+//!            │                                (caller-owned output
+//!            │                                plane; batch kernels,
+//!            │                                u128 baseline, scalar
+//!            │                                reference or PJRT)
 //!            └───── tickets resolve: Response | typed ServiceError
 //! ```
 //!
@@ -53,10 +59,19 @@
 //!   [`PlaneBuf`](crate::formats::PlaneBuf)s at the format's native
 //!   word (u32 for f16/bf16, u64 for f32/f64), recycled per width
 //!   through the [`PlanePool`], halving half-precision flush traffic.
-//! * **Capability negotiation** — the backend's
+//! * **Capability negotiation** — every backend's
 //!   [`BackendCaps`](crate::runtime::BackendCaps) table (per-(op,
-//!   format) support + batch ladders) is read once at startup and
-//!   drives both batch padding and submit-time rejection.
+//!   format) support + batch ladders + plane widths) is read once at
+//!   startup; a routed service
+//!   ([`FpuService::start_routed`](service::FpuService::start_routed))
+//!   merges them into a [`RoutingTable`](crate::dispatch::RoutingTable)
+//!   whose union drives submit-time rejection while each batch is
+//!   padded and plane-shaped for the backend that actually serves it.
+//! * **Multi-backend dispatch** — batches route per (op, format) to
+//!   health-tracked per-backend worker pools (static preference or
+//!   measured-latency policy); a failed batch re-routes down the
+//!   candidate chain before any rider sees an error, and an open
+//!   circuit breaker is probed back to life (see [`crate::dispatch`]).
 //!
 //! # Example
 //!

@@ -11,19 +11,25 @@
 //!   submitters (or returns [`ServiceError::Overloaded`] from the
 //!   `try_submit` family) instead of growing without bound;
 //! * one **dispatcher** thread owns the [`Router`] + [`DynamicBatcher`]
-//!   and turns the work stream into batches, shedding expired-deadline
-//!   items and skipping dead workers' channels;
-//! * `workers` **executor** threads each own one [`Executor`] (one
-//!   "divider unit" each) and execute batches round-robin into a
-//!   reused output plane, completing each item's ticket in place.
+//!   + [`DispatchPlane`] and turns the work stream into batches —
+//!   shedding expired-deadline items, selecting a backend per batch
+//!   (policy + circuit breakers), and re-routing batches a backend
+//!   fails so riders never see a single backend's death;
+//! * each registered backend owns a **worker pool** of executor
+//!   threads, each owning one [`Executor`] (one "divider unit" each),
+//!   executing its backend's batches round-robin into a reused output
+//!   plane and completing each item's ticket in place. Outcomes are
+//!   recorded on the backend's [`HealthBoard`] slot, which is what the
+//!   dispatcher routes by.
 //!
-//! Startup is fail-fast: the executor factory is probed once on the
-//! caller thread (capability negotiation), and every worker reports its
-//! own factory result back before [`FpuService::start`] returns — a
-//! worker that cannot build its executor fails `start` instead of
+//! Startup is fail-fast: every registered executor factory is probed
+//! once on the caller thread (capability negotiation, merged into the
+//! routing table), and every worker of every pool reports its own
+//! factory result back before [`FpuService::start_routed`] returns — a
+//! worker that cannot build its executor fails start instead of
 //! silently eating a share of the traffic.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -31,6 +37,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
+use crate::dispatch::{
+    BackendHealthSnapshot, DispatchPlane, ExecutorRegistry, HealthBoard, RoutingTable,
+};
 use crate::formats::{PlaneRefMut, PlaneWidth};
 use crate::runtime::caps::BackendCaps;
 use crate::runtime::executor::Executor;
@@ -48,7 +57,9 @@ pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     /// Bounded submit-queue depth (the backpressure knob).
     pub queue_depth: usize,
-    /// Number of executor workers (parallel "divider units").
+    /// Number of executor workers **per backend pool** (parallel
+    /// "divider units"; a registry entry can override its own pool
+    /// size).
     pub workers: usize,
     /// Dispatcher poll granularity when idle.
     pub poll: Duration,
@@ -93,15 +104,17 @@ impl ServiceHandle {
     /// budget is already smaller than the queue-delay estimate for its
     /// (op, format) slot is rejected **at submit time** with
     /// [`ServiceError::Deadline`] — the work never enters the queue
-    /// only to be shed at batch formation. The estimate is windowed
-    /// (median worst-rider latency over the slot's recent batches, see
-    /// [`Metrics::queue_delay_estimate_ns`]), and every N-th
-    /// would-reject is admitted anyway as a probe
-    /// ([`Metrics::admission_probe`]), so a rejecting slot keeps
-    /// sampling the service and recovers as soon as the backlog
-    /// clears. With no signal yet (a cold service) everything is
-    /// admitted and deadline enforcement falls to the batcher's shed
-    /// path as before.
+    /// only to be shed at batch formation. The estimate is a
+    /// queue-depth × service-rate model (lanes queued ahead times the
+    /// slot's windowed executor cost per lane, see
+    /// [`Metrics::queue_delay_estimate_ns`]): a burst moves it the
+    /// moment the burst is queued, and a drained queue clears it
+    /// instantly — no latency window to age out. Every N-th
+    /// would-reject is still admitted anyway as a probe
+    /// ([`Metrics::admission_probe`]), so a slot whose rate window went
+    /// stale keeps resampling the service. With no rate signal yet (a
+    /// cold service) everything is admitted and deadline enforcement
+    /// falls to the batcher's shed path as before.
     fn admit_deadline(
         &self,
         op: OpKind,
@@ -136,7 +149,12 @@ impl ServiceHandle {
     fn send(&self, item: WorkItem) -> Result<(), ServiceError> {
         // a failed send drops the item, which fails its ticket — but the
         // caller gets the error directly and never sees that ticket
-        self.tx.send(DispatchMsg::Req(item)).map_err(|_| ServiceError::Shutdown)
+        let (op, format, lanes) = (item.op, item.format(), item.lanes() as u64);
+        self.tx.send(DispatchMsg::Req(item)).map_err(|_| ServiceError::Shutdown)?;
+        // feed the admission model's queue-depth gauge the moment the
+        // work is queued (batch formation discounts it)
+        self.metrics.record_enqueued(op, format, lanes);
+        Ok(())
     }
 
     /// Validation shared by the single-request submit family (cheap:
@@ -212,8 +230,12 @@ impl ServiceHandle {
         b: Value,
     ) -> Result<Ticket, ServiceError> {
         let (item, ticket) = self.make_single(op, a, b, None)?;
+        let format = item.format();
         match self.tx.try_send(DispatchMsg::Req(item)) {
-            Ok(()) => Ok(ticket),
+            Ok(()) => {
+                self.metrics.record_enqueued(op, format, 1);
+                Ok(ticket)
+            }
             Err(TrySendError::Full(_)) => Err(ServiceError::Overloaded),
             Err(TrySendError::Disconnected(_)) => Err(ServiceError::Shutdown),
         }
@@ -366,78 +388,177 @@ impl ServiceHandle {
 pub struct FpuService {
     handle: ServiceHandle,
     metrics: Arc<Metrics>,
+    health: Arc<HealthBoard>,
+    backend_names: Vec<&'static str>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     shutdown_tx: SyncSender<DispatchMsg>,
 }
 
+/// A batch a worker could not execute, handed back to the dispatcher
+/// for re-routing (the failure is already on the backend's breaker).
+struct FailedBatch {
+    batch: Batch,
+    error: String,
+}
+
+/// One backend's worker pool: the batch channels of its live workers.
+struct PoolSender {
+    txs: Vec<SyncSender<Batch>>,
+    next: usize,
+}
+
+impl PoolSender {
+    /// Round-robin one batch into the pool, dropping dead workers'
+    /// channels. `Err` returns the batch when the whole pool is gone.
+    fn send(&mut self, mut batch: Batch) -> std::result::Result<(), Batch> {
+        while !self.txs.is_empty() {
+            let i = self.next % self.txs.len();
+            self.next += 1;
+            // round-robin; a full worker queue applies backpressure here
+            match self.txs[i].send(batch) {
+                Ok(()) => return Ok(()),
+                Err(mpsc::SendError(returned)) => {
+                    batch = returned;
+                    self.txs.remove(i); // dead worker: never pick it again
+                }
+            }
+        }
+        Err(batch)
+    }
+}
+
+/// How long the dispatcher keeps servicing the retry channel at
+/// shutdown while batches are still in flight (a failsafe bound — the
+/// normal case drains in microseconds).
+const SHUTDOWN_RETIRE_BUDGET: Duration = Duration::from_secs(5);
+
 impl FpuService {
-    /// Start the service. `make_executor` is called once on the caller
-    /// thread (capability negotiation: the probe's [`BackendCaps`] are
-    /// kept for the life of the service) and once *inside each worker
-    /// thread* — executors are not `Send` (the PJRT client wraps
-    /// thread-local FFI state), so each worker owns an executor it built
-    /// itself: one "divider unit" per worker. Any worker whose factory
-    /// fails makes `start` return that error — no silently dead
-    /// workers.
+    /// Start a single-backend service. `make_executor` is called once
+    /// on the caller thread (capability negotiation: the probe's
+    /// [`BackendCaps`] are kept for the life of the service) and once
+    /// *inside each worker thread* — executors are not `Send` (the PJRT
+    /// client wraps thread-local FFI state), so each worker owns an
+    /// executor it built itself: one "divider unit" per worker. Any
+    /// worker whose factory fails makes `start` return that error — no
+    /// silently dead workers.
+    ///
+    /// This is sugar for [`Self::start_routed`] with a one-entry
+    /// registry: a single backend routes trivially.
     pub fn start<F>(config: ServiceConfig, make_executor: F) -> Result<Self>
     where
         F: Fn() -> Result<Box<dyn Executor>> + Send + Sync + 'static,
     {
+        Self::start_routed(config, ExecutorRegistry::new().register(make_executor))
+    }
+
+    /// Start a routed service over every backend in the registry.
+    ///
+    /// Each registered factory is probed once on the caller thread; the
+    /// probed capability tables are merged into a [`RoutingTable`]
+    /// (candidate lists per (op, format) + the union table the client
+    /// handle admits against), and each backend gets its **own worker
+    /// pool** (`config.workers` threads, or the registry entry's
+    /// override), its own batch shapes (ladders + plane widths) and its
+    /// own health tracking. The dispatcher selects a backend per formed
+    /// batch (registry policy: static preference or measured latency),
+    /// routes around open circuit breakers, probes broken backends back
+    /// to life, and re-routes failed batches down the candidate chain
+    /// so riders only ever see an error when every candidate failed.
+    pub fn start_routed(config: ServiceConfig, registry: ExecutorRegistry) -> Result<Self> {
         assert!(config.workers >= 1, "need at least one worker");
+        let (entries, policy) = registry.into_parts();
+        if entries.is_empty() {
+            bail!("dispatch registry has no backends");
+        }
+        if entries.len() > 8 {
+            bail!("at most 8 backends per service (the retry mask is a u8)");
+        }
         let metrics = Arc::new(Metrics::new());
         let pool = PlanePool::new();
         let (tx, rx) = mpsc::sync_channel::<DispatchMsg>(config.queue_depth);
 
-        // probe executor: validates the factory and negotiates the
-        // capability table (support + batch ladders, one call)
-        let caps =
-            Arc::new(make_executor().context("probing executor capabilities")?.capabilities());
-        let batcher = DynamicBatcher::new(config.batcher, &caps);
+        // probe every backend once: validates each factory and
+        // negotiates its capability table (support + ladders + widths)
+        let mut caps_list = Vec::with_capacity(entries.len());
+        for (i, entry) in entries.iter().enumerate() {
+            let probe = entry
+                .make()
+                .with_context(|| format!("probing backend #{i} capabilities"))?;
+            caps_list.push(probe.capabilities());
+        }
+        let table = RoutingTable::merge(caps_list)?;
+        let names = table.names();
+        let union = Arc::new(table.union().clone());
+        let batcher = DynamicBatcher::routed(config.batcher, table.caps_list());
+        let health = Arc::new(HealthBoard::new(table.backend_count()));
+        let outstanding = Arc::new(AtomicI64::new(0));
+        let (retry_tx, retry_rx) = mpsc::channel::<FailedBatch>();
 
-        // worker channels: dispatcher round-robins batches across them
-        let make_executor = Arc::new(make_executor);
-        let (init_tx, init_rx) = mpsc::channel::<(usize, std::result::Result<(), String>)>();
-        let mut batch_txs = Vec::new();
+        // per-backend worker pools: the dispatcher round-robins a
+        // backend's batches across that backend's own channels
+        let (init_tx, init_rx) = mpsc::channel::<(String, std::result::Result<(), String>)>();
+        let mut pools = Vec::with_capacity(entries.len());
         let mut workers = Vec::new();
-        for w in 0..config.workers {
-            let (btx, brx) = mpsc::sync_channel::<Batch>(4);
-            batch_txs.push(btx);
-            let metrics = metrics.clone();
-            let pool = pool.clone();
-            let factory = make_executor.clone();
-            let init_tx = init_tx.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("fpu-worker-{w}"))
-                    .spawn(move || match factory() {
-                        Ok(executor) => {
-                            let _ = init_tx.send((w, Ok(())));
-                            drop(init_tx);
-                            worker_loop(brx, executor, metrics, pool);
-                        }
-                        Err(e) => {
-                            let _ = init_tx.send((w, Err(format!("{e:#}"))));
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+        let mut total_workers = 0usize;
+        for (b, entry) in entries.iter().enumerate() {
+            let pool_workers = entry.workers().unwrap_or(config.workers).max(1);
+            let mut txs = Vec::with_capacity(pool_workers);
+            for w in 0..pool_workers {
+                total_workers += 1;
+                let (btx, brx) = mpsc::sync_channel::<Batch>(4);
+                txs.push(btx);
+                let metrics = metrics.clone();
+                let pool = pool.clone();
+                let health = health.clone();
+                let retry_tx = retry_tx.clone();
+                let outstanding = outstanding.clone();
+                let factory = entry.factory();
+                let init_tx = init_tx.clone();
+                let wname = format!("fpu-{}-{w}", names[b]);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(wname.clone())
+                        .spawn(move || match factory() {
+                            Ok(executor) => {
+                                let _ = init_tx.send((wname, Ok(())));
+                                drop(init_tx);
+                                worker_loop(
+                                    brx,
+                                    executor,
+                                    b,
+                                    metrics,
+                                    health,
+                                    pool,
+                                    retry_tx,
+                                    outstanding,
+                                );
+                            }
+                            Err(e) => {
+                                let _ = init_tx.send((wname, Err(format!("{e:#}"))));
+                            }
+                        })
+                        .expect("spawn worker"),
+                );
+            }
+            pools.push(PoolSender { txs, next: 0 });
         }
         drop(init_tx);
+        drop(retry_tx); // workers hold the only retry senders
 
         // fail-fast: every worker reports its init before we go live
-        for _ in 0..config.workers {
+        for _ in 0..total_workers {
             match init_rx.recv() {
                 Ok((_, Ok(()))) => {}
-                Ok((w, Err(msg))) => {
-                    drop(batch_txs); // close channels -> live workers exit
+                Ok((wname, Err(msg))) => {
+                    drop(pools); // close channels -> live workers exit
                     for h in workers {
                         let _ = h.join();
                     }
-                    bail!("fpu-worker-{w}: executor init failed: {msg}");
+                    bail!("{wname}: executor init failed: {msg}");
                 }
                 Err(_) => {
-                    drop(batch_txs);
+                    drop(pools);
                     for h in workers {
                         let _ = h.join();
                     }
@@ -449,21 +570,37 @@ impl FpuService {
         let dispatcher = {
             let metrics = metrics.clone();
             let pool = pool.clone();
+            let plane = DispatchPlane::new(table, policy, health.clone());
+            let outstanding = outstanding.clone();
             std::thread::Builder::new()
                 .name("fpu-dispatcher".into())
-                .spawn(move || dispatcher_loop(rx, batcher, batch_txs, config.poll, metrics, pool))
+                .spawn(move || {
+                    dispatcher_loop(
+                        rx,
+                        retry_rx,
+                        batcher,
+                        plane,
+                        pools,
+                        config.poll,
+                        metrics,
+                        pool,
+                        outstanding,
+                    )
+                })
                 .expect("spawn dispatcher")
         };
 
         let handle = ServiceHandle {
             tx: tx.clone(),
             next_id: Arc::new(AtomicU64::new(0)),
-            caps,
+            caps: union,
             metrics: metrics.clone(),
         };
         Ok(Self {
             handle,
             metrics,
+            health,
+            backend_names: names,
             dispatcher: Some(dispatcher),
             workers,
             shutdown_tx: tx,
@@ -480,9 +617,21 @@ impl FpuService {
         self.metrics.clone()
     }
 
-    /// The backend's negotiated capability table.
+    /// The negotiated capability table (for a routed service: the
+    /// union of every registered backend's).
     pub fn capabilities(&self) -> &BackendCaps {
         self.handle.capabilities()
+    }
+
+    /// Registered backend names, routing-preference order.
+    pub fn backend_names(&self) -> &[&'static str] {
+        &self.backend_names
+    }
+
+    /// Per-backend dispatch health and traffic counters, registration
+    /// order: (name, snapshot).
+    pub fn dispatch_report(&self) -> Vec<(&'static str, BackendHealthSnapshot)> {
+        self.backend_names.iter().copied().zip(self.health.snapshot()).collect()
     }
 
     /// Graceful shutdown: drains queued work, joins all threads.
@@ -509,47 +658,237 @@ impl Drop for FpuService {
     }
 }
 
-/// Hand one batch to a live worker, skipping closed channels (a worker
-/// whose thread died). With every worker gone the batch is failed with
-/// a typed [`ServiceError::Shutdown`] instead of vanishing.
-fn dispatch(
+/// Fail every rider of a batch with a typed error and recycle its
+/// planes (the terminal outcome of the retry chain).
+fn fail_batch(
     mut batch: Batch,
-    live: &mut Vec<SyncSender<Batch>>,
-    next_worker: &mut usize,
+    err: ServiceError,
     metrics: &Metrics,
-    pool: &PlanePool,
+    plane_pool: &PlanePool,
+    outstanding: &AtomicI64,
 ) {
-    while !live.is_empty() {
-        let i = *next_worker % live.len();
-        *next_worker += 1;
-        // round-robin; a full worker queue applies backpressure here
-        match live[i].send(batch) {
+    outstanding.fetch_sub(1, Ordering::AcqRel);
+    metrics.record_error(batch.op, batch.format, batch.live() as u64);
+    for item in batch.items.drain(..) {
+        item.fail(err.clone());
+    }
+    plane_pool.give(std::mem::take(&mut batch.a));
+    plane_pool.give(std::mem::take(&mut batch.b));
+}
+
+/// Re-shape a batch for a different backend: planes are rebuilt at the
+/// new backend's negotiated width and re-padded to its ladder. The
+/// common case (same width, same padded size — e.g. failover between
+/// backends sharing the default ladder) is a no-op; the lane-copy slow
+/// path only runs on the rare cross-shape retry.
+fn reshape_for_backend(
+    batch: &mut Batch,
+    backend: usize,
+    batcher: &DynamicBatcher,
+    plane_pool: &PlanePool,
+) {
+    let width = batcher.plane_width_for(backend, batch.format);
+    let live = batch.live();
+    // never below `live`: a failover target whose largest ladder rung
+    // is smaller than this batch must still receive every lane (an
+    // off-ladder size is at worst a typed executor error that continues
+    // the retry chain; a truncated plane would drop riders' lanes and
+    // panic the completion loop)
+    let padded = batcher.padded_for(backend, batch.op, batch.format, live).max(live);
+    if width == batch.a.width() && padded == batch.padded {
+        return;
+    }
+    let one = batch.format.one_bits();
+    let mut a = plane_pool.take(width);
+    a.reserve(padded);
+    for i in 0..live {
+        a.push(batch.a.get(i));
+    }
+    a.resize(padded, one);
+    plane_pool.give(std::mem::replace(&mut batch.a, a));
+    if batch.op == OpKind::Divide {
+        let mut b = plane_pool.take(width);
+        b.reserve(padded);
+        for i in 0..live {
+            b.push(batch.b.get(i));
+        }
+        b.resize(padded, one);
+        plane_pool.give(std::mem::replace(&mut batch.b, b));
+    }
+    batch.padded = padded;
+}
+
+/// Hand one batch to `backend`'s pool; if that pool's workers are all
+/// gone, walk the retry chain to the next untried candidate (reshaping
+/// the batch). When every candidate pool is gone the riders fail with
+/// the execution error that started the retry (`exec_error`, if this
+/// batch already failed somewhere) — [`ServiceError::Shutdown`] is
+/// reserved for a batch that never reached any executor.
+#[allow(clippy::too_many_arguments)]
+fn send_batch(
+    mut batch: Batch,
+    mut backend: usize,
+    exec_error: Option<String>,
+    plane: &mut DispatchPlane,
+    pools: &mut [PoolSender],
+    batcher: &DynamicBatcher,
+    metrics: &Metrics,
+    plane_pool: &PlanePool,
+    outstanding: &AtomicI64,
+) {
+    loop {
+        batch.backend = backend;
+        batch.tried |= 1u8 << backend;
+        match pools[backend].send(batch) {
             Ok(()) => return,
-            Err(mpsc::SendError(returned)) => {
+            Err(returned) => {
                 batch = returned;
-                live.remove(i); // dead worker: never pick it again
+                match plane.select_excluding(batch.op, batch.format, batch.tried) {
+                    Some(sel) => {
+                        reshape_for_backend(&mut batch, sel.backend, batcher, plane_pool);
+                        backend = sel.backend;
+                    }
+                    None => {
+                        let err = match exec_error {
+                            Some(backend_msg) => {
+                                ServiceError::ExecFailed { backend: backend_msg }
+                            }
+                            None => ServiceError::Shutdown,
+                        };
+                        fail_batch(batch, err, metrics, plane_pool, outstanding);
+                        return;
+                    }
+                }
             }
         }
     }
-    metrics.record_error(batch.op, batch.format, batch.live() as u64);
-    for item in batch.items.drain(..) {
-        item.fail(ServiceError::Shutdown);
-    }
-    pool.give(std::mem::take(&mut batch.a));
-    pool.give(std::mem::take(&mut batch.b));
 }
 
+/// Re-route a batch a worker failed: the next untried candidate gets a
+/// reshaped copy of the same lanes (rider-invisible failover); with no
+/// candidate left, every rider gets the backend's error, typed.
+fn reroute_failed(
+    failed: FailedBatch,
+    plane: &mut DispatchPlane,
+    pools: &mut [PoolSender],
+    batcher: &DynamicBatcher,
+    metrics: &Metrics,
+    plane_pool: &PlanePool,
+    outstanding: &AtomicI64,
+) {
+    let FailedBatch { mut batch, error } = failed;
+    match plane.select_excluding(batch.op, batch.format, batch.tried) {
+        Some(sel) => {
+            plane.health().record_reroute(batch.backend);
+            reshape_for_backend(&mut batch, sel.backend, batcher, plane_pool);
+            send_batch(
+                batch,
+                sel.backend,
+                Some(error),
+                plane,
+                pools,
+                batcher,
+                metrics,
+                plane_pool,
+                outstanding,
+            );
+        }
+        None => {
+            fail_batch(
+                batch,
+                ServiceError::ExecFailed { backend: error },
+                metrics,
+                plane_pool,
+                outstanding,
+            );
+        }
+    }
+}
+
+/// Form batches for every queue that should flush (`flush` = drain
+/// unconditionally) and dispatch each to the backend the plane
+/// selects.
+#[allow(clippy::too_many_arguments)]
+fn form_and_dispatch(
+    flush: bool,
+    router: &mut Router,
+    batcher: &DynamicBatcher,
+    plane: &mut DispatchPlane,
+    pools: &mut [PoolSender],
+    metrics: &Metrics,
+    plane_pool: &PlanePool,
+    outstanding: &AtomicI64,
+) {
+    let now = Instant::now();
+    for &op in &OpKind::ALL {
+        for &format in &FormatKind::ALL {
+            loop {
+                if router.len(op, format) == 0 {
+                    break;
+                }
+                let Some(peek) = plane.peek_candidate(op, format) else {
+                    // unreachable through the handle (union-caps checked
+                    // at submit), but a direct router feed must not
+                    // wedge: fail the queue typed
+                    for item in router.drain(op, format, usize::MAX) {
+                        metrics.record_dequeued(op, format, item.lanes() as u64);
+                        metrics.record_error(op, format, item.lanes() as u64);
+                        item.fail(ServiceError::Rejected {
+                            reason: format!("no backend serves ({}, {format})", op.label()),
+                        });
+                    }
+                    break;
+                };
+                // the flush decision peeks a candidate's shape without
+                // consuming probe/exploration state; only a batch that
+                // actually forms pays a select()
+                if !flush && !batcher.should_flush_for(peek, router, op, format, now) {
+                    break;
+                }
+                let sel = plane.select(op, format).expect("peeked candidate exists");
+                match batcher
+                    .form_batch_for(sel.backend, router, op, format, now, plane_pool, metrics)
+                {
+                    Some(batch) => {
+                        // counted outstanding from send to terminal
+                        // outcome (success, final failure, or shutdown)
+                        outstanding.fetch_add(1, Ordering::AcqRel);
+                        send_batch(
+                            batch,
+                            sel.backend,
+                            None,
+                            plane,
+                            pools,
+                            batcher,
+                            metrics,
+                            plane_pool,
+                            outstanding,
+                        );
+                    }
+                    None => {
+                        if router.len(op, format) == 0 {
+                            break; // everything drained was shed
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     rx: Receiver<DispatchMsg>,
+    retry_rx: Receiver<FailedBatch>,
     batcher: DynamicBatcher,
-    batch_txs: Vec<SyncSender<Batch>>,
+    mut plane: DispatchPlane,
+    mut pools: Vec<PoolSender>,
     poll: Duration,
     metrics: Arc<Metrics>,
-    pool: PlanePool,
+    plane_pool: PlanePool,
+    outstanding: Arc<AtomicI64>,
 ) {
     let mut router = Router::new();
-    let mut live = batch_txs;
-    let mut next_worker = 0usize;
     'outer: loop {
         // block for the first message (bounded by the poll tick) ...
         match rx.recv_timeout(poll) {
@@ -568,25 +907,77 @@ fn dispatcher_loop(
                 Err(_) => break,
             }
         }
-        for batch in batcher.ready_batches(&mut router, Instant::now(), &pool, &metrics) {
-            dispatch(batch, &mut live, &mut next_worker, &metrics, &pool);
+        // failed batches re-route before new work dispatches: their
+        // riders have waited longest
+        while let Ok(failed) = retry_rx.try_recv() {
+            reroute_failed(
+                failed,
+                &mut plane,
+                &mut pools,
+                &batcher,
+                &metrics,
+                &plane_pool,
+                &outstanding,
+            );
         }
+        form_and_dispatch(
+            false,
+            &mut router,
+            &batcher,
+            &mut plane,
+            &mut pools,
+            &metrics,
+            &plane_pool,
+            &outstanding,
+        );
     }
     // drain everything left
     while let Ok(DispatchMsg::Req(req)) = rx.try_recv() {
         router.route(req);
     }
-    for batch in batcher.flush_all(&mut router, Instant::now(), &pool, &metrics) {
-        dispatch(batch, &mut live, &mut next_worker, &metrics, &pool);
+    form_and_dispatch(
+        true,
+        &mut router,
+        &batcher,
+        &mut plane,
+        &mut pools,
+        &metrics,
+        &plane_pool,
+        &outstanding,
+    );
+    // retire in-flight batches before closing the pools: keep serving
+    // the retry chain until every dispatched batch reached a terminal
+    // outcome, so a backend dying during shutdown still fails over
+    // instead of stranding riders
+    let give_up = Instant::now() + SHUTDOWN_RETIRE_BUDGET;
+    while outstanding.load(Ordering::Acquire) > 0 && Instant::now() < give_up {
+        match retry_rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(failed) => reroute_failed(
+                failed,
+                &mut plane,
+                &mut pools,
+                &batcher,
+                &metrics,
+                &plane_pool,
+                &outstanding,
+            ),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
     }
     // dropping batch senders closes worker channels -> workers exit
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: Receiver<Batch>,
     mut executor: Box<dyn Executor>,
+    backend: usize,
     metrics: Arc<Metrics>,
+    health: Arc<HealthBoard>,
     pool: PlanePool,
+    retry_tx: mpsc::Sender<FailedBatch>,
+    outstanding: Arc<AtomicI64>,
 ) {
     // all buffers persist across batches: the steady-state hot path
     // performs no allocation in this loop (execute_into writes in place
@@ -628,6 +1019,8 @@ fn worker_loop(
         let exec_ns = t0.elapsed().as_nanos() as u64;
         match result {
             Ok(()) => {
+                let live = batch.live() as u64;
+                health.record_success(backend, batch.op, batch.format, live, exec_ns);
                 let done = Instant::now();
                 lat.clear();
                 for item in &batch.items {
@@ -655,19 +1048,29 @@ fn worker_loop(
                     item.complete(&view[off..off + lanes], lat[k].0, batch.padded);
                     off += lanes;
                 }
+                outstanding.fetch_sub(1, Ordering::AcqRel);
+                pool.give(std::mem::take(&mut batch.a));
+                pool.give(std::mem::take(&mut batch.b));
             }
             Err(e) => {
-                // fail the whole batch with the backend's message: every
-                // rider's ticket resolves to ExecFailed
-                metrics.record_error(batch.op, batch.format, batch.live() as u64);
-                let backend = format!("{e:#}");
-                for item in batch.items.drain(..) {
-                    item.fail(ServiceError::ExecFailed { backend: backend.clone() });
+                // hand the batch (planes intact) back to the dispatcher
+                // for re-routing; the riders only see an error if every
+                // candidate backend fails it
+                health.record_failure(backend);
+                let error = format!("{e:#}");
+                if let Err(mpsc::SendError(failed)) = retry_tx.send(FailedBatch { batch, error }) {
+                    // dispatcher already gone (teardown): fail typed
+                    let FailedBatch { mut batch, error } = failed;
+                    metrics.record_error(batch.op, batch.format, batch.live() as u64);
+                    for item in batch.items.drain(..) {
+                        item.fail(ServiceError::ExecFailed { backend: error.clone() });
+                    }
+                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                    pool.give(std::mem::take(&mut batch.a));
+                    pool.give(std::mem::take(&mut batch.b));
                 }
             }
         }
-        pool.give(std::mem::take(&mut batch.a));
-        pool.give(std::mem::take(&mut batch.b));
     }
 }
 
@@ -865,13 +1268,14 @@ mod tests {
 
     #[test]
     fn deadline_admission_rejects_at_submit() {
-        // the ROADMAP admission-control item: once the queue-delay
-        // estimate (observed p50 latency) exceeds a submission's
-        // budget, the submission fails with Deadline at submit time —
-        // before any queueing
+        // the ROADMAP admission-control item, v2: a queue-depth x
+        // service-rate model. Once (queued lanes) x (windowed executor
+        // cost per lane) exceeds a submission's budget, the submission
+        // fails with Deadline at submit time — before any queueing
         let svc = FpuService::start(quick_config(), native).unwrap();
         let h = svc.handle();
-        // a cold service has no estimate: even a tiny budget is admitted
+        // a cold service has no rate signal: even a tiny budget is
+        // admitted
         let t = h
             .submit_value_deadline(
                 OpKind::Divide,
@@ -881,16 +1285,21 @@ mod tests {
             )
             .unwrap();
         assert_eq!(t.wait().unwrap().value.f32(), 3.0);
-        // seed the estimator: observed latency ~10ms on (divide, f32)
+        // seed the rate window: ~1ms of executor time per lane on
+        // (divide, f32)
         for _ in 0..8 {
             svc.metrics().record_batch(
                 OpKind::Divide,
                 FormatKind::F32,
                 &[(10_000_000, 1)],
-                1_000,
+                1_000_000,
                 1,
             );
         }
+        // ... and a standing backlog of 200 lanes: the model predicts
+        // ~200ms of queue delay (the gauge is what the router's lane
+        // counts feed in production; the test feeds it directly)
+        svc.metrics().record_enqueued(OpKind::Divide, FormatKind::F32, 200);
         // a 50us budget is now hopeless: rejected at submit, typed
         match h.submit_value_deadline(
             OpKind::Divide,
@@ -916,7 +1325,21 @@ mod tests {
         let snap = svc.metrics().snapshot();
         assert_eq!(snap.op_format(OpKind::Divide, FormatKind::F32).admission_rejected, 11);
         assert_eq!(snap.total_shed(), 0, "admission rejects are not queue sheds");
-        // a generous budget still passes admission and completes
+        // clearing the backlog re-opens admission instantly — the depth
+        // model needs no latency window to decay. (The request may
+        // still shed *in the queue* on a slow run; the property under
+        // test is that submit no longer rejects.)
+        svc.metrics().record_dequeued(OpKind::Divide, FormatKind::F32, 200);
+        let t = h
+            .submit_value_deadline(
+                OpKind::Divide,
+                Value::F32(8.0),
+                Value::F32(2.0),
+                Duration::from_micros(50),
+            )
+            .expect("empty queue admits any budget");
+        let _ = t.wait();
+        // and a generous budget completes end to end
         let t = h
             .submit_value_deadline(
                 OpKind::Divide,
@@ -927,6 +1350,7 @@ mod tests {
             .unwrap();
         assert_eq!(t.wait().unwrap().value.f32(), 4.0);
         // other (op, format) slots are unaffected by this slot's history
+        svc.metrics().record_enqueued(OpKind::Divide, FormatKind::F32, 200);
         let t = h
             .submit_value_deadline(
                 OpKind::Sqrt,
@@ -1048,5 +1472,60 @@ mod tests {
             Err(ServiceError::Rejected { .. })
         ));
         svc.shutdown();
+    }
+
+    #[test]
+    fn routed_service_merges_capabilities_and_serves() {
+        use crate::runtime::executor::{ScalarReferenceExecutor, U128BaselineExecutor};
+        // u128 first (divide-only preference), scalar second: the union
+        // must admit every pair, divide routes to u128, sqrt to scalar
+        let registry = ExecutorRegistry::new()
+            .register(|| Ok(Box::new(U128BaselineExecutor::with_defaults()) as _))
+            .register(|| Ok(Box::new(ScalarReferenceExecutor::with_defaults()) as _));
+        let svc = FpuService::start_routed(quick_config(), registry).unwrap();
+        assert_eq!(svc.backend_names(), &["u128-baseline", "scalar-reference"]);
+        let caps = svc.capabilities();
+        assert_eq!(caps.backend(), "dispatch");
+        assert_eq!(caps.supported().len(), 12, "union admits what either serves");
+        let h = svc.handle();
+        for format in FormatKind::ALL {
+            assert_eq!(h.divide_in(format, 10.0, 4.0).unwrap(), 2.5, "{format}");
+            assert_eq!(h.sqrt_in(format, 81.0).unwrap(), 9.0, "{format}");
+            assert_eq!(h.rsqrt_in(format, 4.0).unwrap(), 0.5, "{format}");
+        }
+        let report = svc.dispatch_report();
+        assert_eq!(report.len(), 2);
+        let (u128_snap, scalar_snap) = (report[0].1, report[1].1);
+        assert!(u128_snap.ok_batches > 0, "divide batches route to the preferred backend");
+        assert!(scalar_snap.ok_batches > 0, "unary batches route to the only capable backend");
+        assert_eq!(u128_snap.failed_batches, 0);
+        assert!(!u128_snap.breaker_open);
+        assert_eq!(svc.metrics().snapshot().total_errors(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn routed_worker_init_failure_names_the_backend() {
+        use crate::runtime::executor::ScalarReferenceExecutor;
+        use std::sync::atomic::AtomicU64;
+        // probe succeeds, the pool worker's factory call fails: start
+        // must fail and name the backend's worker
+        let count = Arc::new(AtomicU64::new(0));
+        let c2 = count.clone();
+        let registry = ExecutorRegistry::new()
+            .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _))
+            .register(move || {
+                if c2.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Ok(Box::new(ScalarReferenceExecutor::with_defaults()) as _)
+                } else {
+                    Err(anyhow::anyhow!("scalar pool refused to start"))
+                }
+            });
+        let err = match FpuService::start_routed(quick_config(), registry) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("start must fail when a pool worker cannot build its executor"),
+        };
+        assert!(err.contains("fpu-scalar-reference"), "{err}");
+        assert!(err.contains("refused to start"), "{err}");
     }
 }

@@ -1,0 +1,275 @@
+//! [`HealthBoard`]: per-backend health and latency state shared between
+//! the dispatcher (which reads it to route) and the worker pools (which
+//! write outcomes into it).
+//!
+//! Two signals per backend:
+//!
+//! * **circuit breaker** — [`OPEN_AFTER_CONSECUTIVE`] consecutive batch
+//!   failures open the breaker; while open the dispatch plane routes
+//!   around the backend, except that one consideration in every
+//!   [`PROBE_PERIOD`] becomes a *probe* batch sent there anyway. A
+//!   probe that succeeds closes the breaker (the backend rejoins at
+//!   full preference); a probe that fails is re-routed like any other
+//!   failed batch, so riders never pay for probing. Counted failures
+//!   are *batch* failures, not lane counts — one wedged batch and one
+//!   wedged 4096-lane flush trip the breaker at the same rate.
+//! * **latency window** — per (backend, op, format): the last
+//!   [`LAT_WINDOW`] successful batches' execution time per lane, the
+//!   signal behind
+//!   [`RoutePolicy::Latency`](super::registry::RoutePolicy). Windowed,
+//!   so a backend that warms up (or cools down) is re-ranked within a
+//!   few batches.
+//!
+//! Everything is atomics plus one per-*batch* mutex for the latency
+//! windows — the same locking budget the coordinator's
+//! [`Metrics`](crate::coordinator::Metrics) (one lock per batch, never
+//! per request) already spends.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::request::{op_format_slot, OpKind, OP_FORMAT_SLOTS};
+use crate::formats::FormatKind;
+use crate::util::stats::RateWindow;
+
+/// Consecutive batch failures that open a backend's breaker.
+pub const OPEN_AFTER_CONSECUTIVE: u32 = 3;
+
+/// While a breaker is open, every `N`-th consideration of that backend
+/// becomes a probe batch routed to it anyway.
+pub const PROBE_PERIOD: u64 = 8;
+
+/// Per-(backend, slot) latency window length (successful batches).
+pub const LAT_WINDOW: usize = 16;
+
+#[derive(Debug, Default)]
+struct BackendHealth {
+    /// Consecutive batch failures (reset by any success).
+    consecutive: AtomicU32,
+    /// Breaker state: open = route around.
+    open: AtomicBool,
+    /// Times the breaker opened.
+    trips: AtomicU64,
+    /// Probe batches sent while open.
+    probes: AtomicU64,
+    /// Considerations of this backend while open (drives the probe
+    /// period).
+    probe_gate: AtomicU64,
+    /// Batches served successfully.
+    ok_batches: AtomicU64,
+    /// Batches failed.
+    failed_batches: AtomicU64,
+    /// Failed batches of this backend re-routed to another backend
+    /// (rider-invisible failures).
+    rerouted: AtomicU64,
+}
+
+/// One backend's health counters at a point in time.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendHealthSnapshot {
+    /// Batches served successfully.
+    pub ok_batches: u64,
+    /// Batches failed (whether or not riders saw the failure).
+    pub failed_batches: u64,
+    /// Failed batches absorbed by re-routing to another backend.
+    pub rerouted: u64,
+    /// Times the circuit breaker opened.
+    pub trips: u64,
+    /// Probe batches sent while the breaker was open.
+    pub probes: u64,
+    /// Whether the breaker is open right now.
+    pub breaker_open: bool,
+}
+
+/// Shared health/latency state for every registered backend.
+#[derive(Debug)]
+pub struct HealthBoard {
+    backends: Vec<BackendHealth>,
+    /// Per backend, per (op, format) slot: successful-batch service-
+    /// rate windows (one lock per recorded batch) — the shared
+    /// [`RateWindow`] type the admission model also uses.
+    lat: Mutex<Vec<[RateWindow<LAT_WINDOW>; OP_FORMAT_SLOTS]>>,
+}
+
+impl HealthBoard {
+    /// Fresh board for `n` backends (all breakers closed, no signal).
+    pub fn new(n: usize) -> Self {
+        Self {
+            backends: (0..n).map(|_| BackendHealth::default()).collect(),
+            lat: Mutex::new(
+                (0..n).map(|_| std::array::from_fn(|_| RateWindow::default())).collect(),
+            ),
+        }
+    }
+
+    /// Number of tracked backends.
+    pub fn backend_count(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// Record one successfully executed batch: closes the breaker,
+    /// resets the consecutive-failure count and feeds the latency
+    /// window for the batch's slot.
+    pub fn record_success(
+        &self,
+        backend: usize,
+        op: OpKind,
+        format: FormatKind,
+        lanes: u64,
+        exec_ns: u64,
+    ) {
+        let b = &self.backends[backend];
+        b.ok_batches.fetch_add(1, Ordering::Relaxed);
+        b.consecutive.store(0, Ordering::Relaxed);
+        b.open.store(false, Ordering::Release);
+        let mut lat = self.lat.lock().expect("health board poisoned");
+        lat[backend][op_format_slot(op, format)].push(exec_ns, lanes);
+    }
+
+    /// Record one failed batch. Returns `true` when this failure just
+    /// opened the breaker.
+    pub fn record_failure(&self, backend: usize) -> bool {
+        let b = &self.backends[backend];
+        b.failed_batches.fetch_add(1, Ordering::Relaxed);
+        let consecutive = b.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if consecutive >= OPEN_AFTER_CONSECUTIVE && !b.open.swap(true, Ordering::AcqRel) {
+            b.trips.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Record a failed batch of this backend being re-routed to another
+    /// one (the rider-invisible outcome).
+    pub fn record_reroute(&self, backend: usize) {
+        self.backends[backend].rerouted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Whether the backend's breaker is open.
+    pub fn is_open(&self, backend: usize) -> bool {
+        self.backends[backend].open.load(Ordering::Acquire)
+    }
+
+    /// Called each time the dispatch plane *considers* an open backend:
+    /// every [`PROBE_PERIOD`]-th consideration returns `true` — send a
+    /// probe batch there.
+    pub fn probe_tick(&self, backend: usize) -> bool {
+        let b = &self.backends[backend];
+        let n = b.probe_gate.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % PROBE_PERIOD == 0 {
+            b.probes.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Windowed mean execution nanoseconds per lane for one (backend,
+    /// op, format) — `None` until that backend has served the slot.
+    pub fn mean_exec_ns_per_lane(
+        &self,
+        backend: usize,
+        op: OpKind,
+        format: FormatKind,
+    ) -> Option<f64> {
+        let lat = self.lat.lock().expect("health board poisoned");
+        lat[backend][op_format_slot(op, format)].ns_per_lane()
+    }
+
+    /// Per-backend snapshots, index order.
+    pub fn snapshot(&self) -> Vec<BackendHealthSnapshot> {
+        self.backends
+            .iter()
+            .map(|b| BackendHealthSnapshot {
+                ok_batches: b.ok_batches.load(Ordering::Relaxed),
+                failed_batches: b.failed_batches.load(Ordering::Relaxed),
+                rerouted: b.rerouted.load(Ordering::Relaxed),
+                trips: b.trips.load(Ordering::Relaxed),
+                probes: b.probes.load(Ordering::Relaxed),
+                breaker_open: b.open.load(Ordering::Acquire),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F32: FormatKind = FormatKind::F32;
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures_and_success_closes_it() {
+        let h = HealthBoard::new(2);
+        assert!(!h.is_open(0));
+        for i in 0..OPEN_AFTER_CONSECUTIVE {
+            let opened = h.record_failure(0);
+            assert_eq!(opened, i + 1 == OPEN_AFTER_CONSECUTIVE, "failure {i}");
+        }
+        assert!(h.is_open(0));
+        assert!(!h.is_open(1), "breakers are per backend");
+        // further failures do not re-trip
+        assert!(!h.record_failure(0));
+        let snap = h.snapshot();
+        assert_eq!(snap[0].trips, 1);
+        assert_eq!(snap[0].failed_batches, (OPEN_AFTER_CONSECUTIVE + 1) as u64);
+        assert!(snap[0].breaker_open);
+        // one success closes the breaker and resets the streak
+        h.record_success(0, OpKind::Divide, F32, 64, 1_000);
+        assert!(!h.is_open(0));
+        assert!(!h.record_failure(0), "streak restarted from zero");
+        assert!(!h.is_open(0));
+    }
+
+    #[test]
+    fn interleaved_successes_keep_breaker_closed() {
+        let h = HealthBoard::new(1);
+        for _ in 0..20 {
+            h.record_failure(0);
+            h.record_failure(0);
+            h.record_success(0, OpKind::Sqrt, F32, 64, 500);
+        }
+        assert!(!h.is_open(0), "non-consecutive failures must not trip");
+        assert_eq!(h.snapshot()[0].trips, 0);
+    }
+
+    #[test]
+    fn probe_ticks_fire_once_per_period() {
+        let h = HealthBoard::new(1);
+        let mut fired = 0;
+        for _ in 0..(2 * PROBE_PERIOD) {
+            if h.probe_tick(0) {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 2);
+        assert_eq!(h.snapshot()[0].probes, 2);
+    }
+
+    #[test]
+    fn latency_windows_are_per_slot_and_decay() {
+        let h = HealthBoard::new(2);
+        assert!(h.mean_exec_ns_per_lane(0, OpKind::Divide, F32).is_none());
+        h.record_success(0, OpKind::Divide, F32, 100, 100_000);
+        let m = h.mean_exec_ns_per_lane(0, OpKind::Divide, F32).unwrap();
+        assert!((m - 1_000.0).abs() < 1e-9, "{m}");
+        // other slots and backends stay unsignalled
+        assert!(h.mean_exec_ns_per_lane(0, OpKind::Sqrt, F32).is_none());
+        assert!(h.mean_exec_ns_per_lane(1, OpKind::Divide, F32).is_none());
+        // the window decays: fill it with fast batches and the slow
+        // first sample ages out
+        for _ in 0..LAT_WINDOW {
+            h.record_success(0, OpKind::Divide, F32, 100, 1_000);
+        }
+        let m = h.mean_exec_ns_per_lane(0, OpKind::Divide, F32).unwrap();
+        assert!((m - 10.0).abs() < 1e-9, "window did not decay: {m}");
+    }
+
+    #[test]
+    fn reroutes_counted() {
+        let h = HealthBoard::new(1);
+        h.record_reroute(0);
+        h.record_reroute(0);
+        assert_eq!(h.snapshot()[0].rerouted, 2);
+    }
+}

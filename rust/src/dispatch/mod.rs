@@ -1,0 +1,56 @@
+//! The dispatch plane: a capability-merging multi-backend router.
+//!
+//! The paper's thesis is cost-driven backend choice — pick the cheaper
+//! datapath when it serves the workload. PR 3's capability-negotiated
+//! executor contract ([`BackendCaps`](crate::runtime::BackendCaps))
+//! made that decidable at runtime: every backend declares exactly which
+//! (op, format) pairs it serves, at which batch ladders and plane
+//! widths. This subsystem turns those per-backend tables into a
+//! *routing* table and picks, per formed batch, the worker pool that
+//! executes it:
+//!
+//! ```text
+//!             ExecutorRegistry (named factories, registration order =
+//!                 │             static preference)
+//!                 │ probe once at FpuService::start_routed
+//!                 ▼
+//!             RoutingTable (merged per-(op, format) candidate lists +
+//!                 │         the union BackendCaps the handle rejects
+//!                 │         against)
+//!                 ▼
+//!             DispatchPlane::select(op, format)
+//!                 │   policy: Static (preference order) or Latency
+//!                 │   (measured ns/lane per backend slot, with a
+//!                 │   periodic exploration tick so losers re-measure)
+//!                 │   health: HealthBoard circuit breakers — an open
+//!                 │   backend is routed around, and probed back to
+//!                 │   life with one batch in every few considerations
+//!                 ▼
+//!             per-backend worker pool (coordinator)
+//! ```
+//!
+//! Failure handling is rider-transparent: a batch a backend fails is
+//! handed back to the dispatcher, which records the failure on that
+//! backend's breaker and **re-routes the batch** to the next candidate
+//! (rebuilding its planes at the new backend's negotiated width and
+//! ladder). Riders only observe an error when *every* registered
+//! candidate for the pair has failed the same batch. Three consecutive
+//! failures open a backend's breaker; while open it receives no routed
+//! traffic except the probe batches that let a recovered backend
+//! rejoin.
+//!
+//! The registry/table/health split mirrors the coordinator's
+//! router/batcher/metrics split: [`registry`] is configuration,
+//! [`table`] is the merged static shape, [`health`] is the shared
+//! mutable state (workers record outcomes into it), and [`plane`] is
+//! the pure selection logic the dispatcher thread owns.
+
+pub mod health;
+pub mod plane;
+pub mod registry;
+pub mod table;
+
+pub use health::{BackendHealthSnapshot, HealthBoard};
+pub use plane::{DispatchPlane, Selection};
+pub use registry::{standard_registry, ExecutorFactory, ExecutorRegistry, RoutePolicy};
+pub use table::RoutingTable;

@@ -1,0 +1,324 @@
+//! [`DispatchPlane`]: the per-batch backend selection logic the
+//! dispatcher thread owns.
+//!
+//! `select` answers "which worker pool executes the next (op, format)
+//! batch", combining three inputs:
+//!
+//! 1. the [`RoutingTable`]'s candidate list for the pair (static
+//!    preference order);
+//! 2. the [`HealthBoard`]'s breakers — open backends are routed
+//!    around, except for the periodic probe that lets a recovered
+//!    backend rejoin;
+//! 3. the [`RoutePolicy`] — registration order, or measured ns/lane
+//!    with a periodic exploration tick (every [`EXPLORE_PERIOD`]-th
+//!    batch per slot rotates through the other healthy candidates so
+//!    their latency signal stays fresh; without it, a backend that
+//!    loses the slot once would never be re-measured and could never
+//!    win it back).
+//!
+//! `select_excluding` is the retry chain: given the set of backends a
+//! batch has already failed on, it returns the next candidate to try
+//! (healthy ones first), or `None` when the batch has exhausted every
+//! registered option.
+
+use std::sync::Arc;
+
+use crate::coordinator::request::{op_format_slot, OpKind, OP_FORMAT_SLOTS};
+use crate::formats::FormatKind;
+
+use super::health::HealthBoard;
+use super::registry::RoutePolicy;
+use super::table::RoutingTable;
+
+/// Under the latency policy, every `N`-th selection for a slot is an
+/// exploration tick: it rotates through the healthy candidates instead
+/// of picking the measured-fastest, keeping every backend's latency
+/// window warm enough to re-rank.
+pub const EXPLORE_PERIOD: u64 = 32;
+
+/// One routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Selection {
+    /// Index of the backend (worker pool) to execute on.
+    pub backend: usize,
+    /// True when this batch is a probe of an open-breaker backend.
+    pub probe: bool,
+}
+
+/// The dispatcher-owned selection state: merged table + policy +
+/// shared health, plus a per-slot sequence counter driving exploration.
+#[derive(Debug)]
+pub struct DispatchPlane {
+    table: RoutingTable,
+    policy: RoutePolicy,
+    health: Arc<HealthBoard>,
+    seq: [u64; OP_FORMAT_SLOTS],
+}
+
+impl DispatchPlane {
+    /// New plane over a merged table.
+    pub fn new(table: RoutingTable, policy: RoutePolicy, health: Arc<HealthBoard>) -> Self {
+        Self { table, policy, health, seq: [0; OP_FORMAT_SLOTS] }
+    }
+
+    /// The merged routing table.
+    pub fn table(&self) -> &RoutingTable {
+        &self.table
+    }
+
+    /// The shared health board.
+    pub fn health(&self) -> &HealthBoard {
+        &self.health
+    }
+
+    /// Non-consuming peek: the backend whose batch *shape* (cap,
+    /// ladder) the flush decision should assume — the first healthy
+    /// candidate, or the preferred one when every breaker is open.
+    /// Unlike [`Self::select`] this touches no probe or exploration
+    /// state, so the dispatcher can evaluate "should this queue flush?"
+    /// every poll tick without burning probe ticks on polls that form
+    /// no batch (which would inflate the probe counters and starve a
+    /// broken backend's recovery under light traffic).
+    pub fn peek_candidate(&self, op: OpKind, format: FormatKind) -> Option<usize> {
+        let cands = self.table.candidates(op, format);
+        cands
+            .iter()
+            .copied()
+            .find(|&b| !self.health.is_open(b))
+            .or_else(|| cands.first().copied())
+    }
+
+    /// Pick the backend for the next (op, format) batch. `None` only
+    /// when no registered backend serves the pair at all (the handle's
+    /// union-caps check rejects such submissions before queueing, so a
+    /// routed service never actually sees this).
+    pub fn select(&mut self, op: OpKind, format: FormatKind) -> Option<Selection> {
+        let cands = self.table.candidates(op, format);
+        if cands.is_empty() {
+            return None;
+        }
+        let any_healthy = cands.iter().any(|&b| !self.health.is_open(b));
+        if !any_healthy {
+            // every candidate's breaker is open: serve through the
+            // preferred one anyway — the retry chain still walks the
+            // alternatives, and refusing to route would strand riders
+            return Some(Selection { backend: cands[0], probe: false });
+        }
+        // probe an open backend back to life (only worth a batch when a
+        // healthy fallback exists to absorb a failed probe)
+        for &b in cands {
+            if self.health.is_open(b) && self.health.probe_tick(b) {
+                return Some(Selection { backend: b, probe: true });
+            }
+        }
+        let slot = op_format_slot(op, format);
+        let n = self.seq[slot];
+        self.seq[slot] += 1;
+        let backend = match self.policy {
+            RoutePolicy::Static => cands
+                .iter()
+                .copied()
+                .find(|&b| !self.health.is_open(b))
+                .expect("any_healthy checked"),
+            RoutePolicy::Latency => {
+                let healthy: Vec<usize> =
+                    cands.iter().copied().filter(|&b| !self.health.is_open(b)).collect();
+                if healthy.len() > 1 && n % EXPLORE_PERIOD == EXPLORE_PERIOD - 1 {
+                    // exploration tick: rotate through the candidates
+                    healthy[((n / EXPLORE_PERIOD) as usize) % healthy.len()]
+                } else {
+                    // unmeasured candidates rank ahead of any measured
+                    // one (mean < 0 is unreachable for real signal), so
+                    // every backend gets signal before ranking settles;
+                    // ties break toward registration order
+                    let ns_of = |b: usize| {
+                        self.health.mean_exec_ns_per_lane(b, op, format).unwrap_or(-1.0)
+                    };
+                    let mut best = healthy[0];
+                    let mut best_ns = ns_of(best);
+                    for &b in &healthy[1..] {
+                        let ns = ns_of(b);
+                        if ns < best_ns {
+                            best = b;
+                            best_ns = ns;
+                        }
+                    }
+                    best
+                }
+            }
+        };
+        Some(Selection { backend, probe: false })
+    }
+
+    /// The retry chain: the next candidate for a batch that already
+    /// failed on every backend in `tried` (a bitmask of backend
+    /// indices). Healthy untried candidates first, then any untried
+    /// one; `None` when the batch has exhausted the registry.
+    pub fn select_excluding(
+        &self,
+        op: OpKind,
+        format: FormatKind,
+        tried: u8,
+    ) -> Option<Selection> {
+        let untried = |b: &usize| tried & (1u8 << *b) == 0;
+        let cands = self.table.candidates(op, format);
+        cands
+            .iter()
+            .copied()
+            .find(|b| untried(b) && !self.health.is_open(*b))
+            .or_else(|| cands.iter().copied().find(untried))
+            .map(|backend| Selection { backend, probe: false })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::health::OPEN_AFTER_CONSECUTIVE;
+    use crate::dispatch::health::PROBE_PERIOD;
+    use crate::runtime::caps::BackendCaps;
+
+    const F32: FormatKind = FormatKind::F32;
+
+    fn two_backend_plane(policy: RoutePolicy) -> DispatchPlane {
+        let table = RoutingTable::merge(vec![
+            BackendCaps::uniform("a", &[64]),
+            BackendCaps::uniform("b", &[64]),
+        ])
+        .unwrap();
+        let health = Arc::new(HealthBoard::new(2));
+        DispatchPlane::new(table, policy, health)
+    }
+
+    #[test]
+    fn static_policy_prefers_registration_order() {
+        let mut plane = two_backend_plane(RoutePolicy::Static);
+        for _ in 0..10 {
+            assert_eq!(plane.select(OpKind::Divide, F32).unwrap().backend, 0);
+        }
+    }
+
+    #[test]
+    fn open_breaker_routes_around_and_probes_periodically() {
+        let mut plane = two_backend_plane(RoutePolicy::Static);
+        for _ in 0..OPEN_AFTER_CONSECUTIVE {
+            plane.health().record_failure(0);
+        }
+        assert!(plane.health().is_open(0));
+        let mut probes = 0;
+        let mut fallbacks = 0;
+        for _ in 0..(2 * PROBE_PERIOD) {
+            let sel = plane.select(OpKind::Divide, F32).unwrap();
+            if sel.probe {
+                assert_eq!(sel.backend, 0, "probes target the open backend");
+                probes += 1;
+            } else {
+                assert_eq!(sel.backend, 1, "routed traffic avoids the open backend");
+                fallbacks += 1;
+            }
+        }
+        assert_eq!(probes, 2, "one probe per period");
+        assert_eq!(fallbacks, 2 * PROBE_PERIOD - 2);
+        // recovery: a success closes the breaker and preference returns
+        plane.health().record_success(0, OpKind::Divide, F32, 64, 1_000);
+        assert_eq!(plane.select(OpKind::Divide, F32).unwrap().backend, 0);
+    }
+
+    #[test]
+    fn all_breakers_open_still_routes_preferred() {
+        let mut plane = two_backend_plane(RoutePolicy::Static);
+        for b in 0..2 {
+            for _ in 0..OPEN_AFTER_CONSECUTIVE {
+                plane.health().record_failure(b);
+            }
+        }
+        let sel = plane.select(OpKind::Divide, F32).unwrap();
+        assert_eq!(sel.backend, 0, "degraded mode serves through the preferred backend");
+    }
+
+    #[test]
+    fn latency_policy_prefers_measured_fastest() {
+        let mut plane = two_backend_plane(RoutePolicy::Latency);
+        // no signal: both unmeasured, first candidate wins the tie
+        assert_eq!(plane.select(OpKind::Divide, F32).unwrap().backend, 0);
+        // backend 0 measured slow, backend 1 unmeasured -> 1 is tried
+        plane.health().record_success(0, OpKind::Divide, F32, 64, 640_000);
+        assert_eq!(plane.select(OpKind::Divide, F32).unwrap().backend, 1);
+        // both measured: the faster one wins the slot
+        plane.health().record_success(1, OpKind::Divide, F32, 64, 6_400);
+        let picks: Vec<usize> = (0..8)
+            .map(|_| plane.select(OpKind::Divide, F32).unwrap().backend)
+            .collect();
+        assert!(picks.iter().all(|&b| b == 1), "{picks:?}");
+        // slots rank independently: sqrt has no signal, ties to 0
+        assert_eq!(plane.select(OpKind::Sqrt, F32).unwrap().backend, 0);
+    }
+
+    #[test]
+    fn latency_policy_explores_periodically() {
+        let mut plane = two_backend_plane(RoutePolicy::Latency);
+        plane.health().record_success(0, OpKind::Divide, F32, 64, 1_000);
+        plane.health().record_success(1, OpKind::Divide, F32, 64, 9_999_000);
+        let mut off_preference = 0;
+        for _ in 0..(2 * EXPLORE_PERIOD) {
+            if plane.select(OpKind::Divide, F32).unwrap().backend != 0 {
+                off_preference += 1;
+            }
+        }
+        assert!(
+            (1..=2).contains(&off_preference),
+            "exploration should visit the loser about once per period, got {off_preference}"
+        );
+    }
+
+    #[test]
+    fn select_excluding_walks_the_chain() {
+        let plane = two_backend_plane(RoutePolicy::Static);
+        assert_eq!(plane.select_excluding(OpKind::Divide, F32, 0b00).unwrap().backend, 0);
+        assert_eq!(plane.select_excluding(OpKind::Divide, F32, 0b01).unwrap().backend, 1);
+        assert!(plane.select_excluding(OpKind::Divide, F32, 0b11).is_none());
+        // an open-breaker untried backend still serves as last resort
+        for _ in 0..OPEN_AFTER_CONSECUTIVE {
+            plane.health().record_failure(1);
+        }
+        assert_eq!(plane.select_excluding(OpKind::Divide, F32, 0b01).unwrap().backend, 1);
+    }
+
+    #[test]
+    fn peek_candidate_consumes_no_probe_or_exploration_state() {
+        let mut plane = two_backend_plane(RoutePolicy::Static);
+        for _ in 0..OPEN_AFTER_CONSECUTIVE {
+            plane.health().record_failure(0);
+        }
+        // peeking many times (idle poll ticks) must not tick the probe
+        // gate: the first actual selections still route around backend
+        // 0 until a real probe period elapses
+        for _ in 0..(10 * PROBE_PERIOD) {
+            assert_eq!(plane.peek_candidate(OpKind::Divide, F32), Some(1));
+        }
+        assert_eq!(plane.health().snapshot()[0].probes, 0, "peeks are not probes");
+        let mut probes = 0;
+        for _ in 0..PROBE_PERIOD {
+            if plane.select(OpKind::Divide, F32).unwrap().probe {
+                probes += 1;
+            }
+        }
+        assert_eq!(probes, 1, "the probe budget was preserved for real selections");
+        // healthy preference: peek returns the first healthy candidate,
+        // and the preferred backend once its breaker closes
+        plane.health().record_success(0, OpKind::Divide, F32, 64, 1_000);
+        assert_eq!(plane.peek_candidate(OpKind::Divide, F32), Some(0));
+    }
+
+    #[test]
+    fn unserved_pair_selects_nothing() {
+        let mut caps = BackendCaps::new("div-only");
+        caps = caps.with(OpKind::Divide, F32, &[64]);
+        let table = RoutingTable::merge(vec![caps]).unwrap();
+        let health = Arc::new(HealthBoard::new(1));
+        let mut plane = DispatchPlane::new(table, RoutePolicy::Static, health);
+        assert!(plane.select(OpKind::Sqrt, F32).is_none());
+        assert!(plane.select_excluding(OpKind::Sqrt, F32, 0).is_none());
+        assert!(plane.select(OpKind::Divide, F32).is_some());
+    }
+}

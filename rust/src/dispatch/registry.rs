@@ -1,0 +1,270 @@
+//! [`ExecutorRegistry`]: the named executor factories a routed service
+//! is built from, plus the [`RoutePolicy`] that arbitrates among them.
+//!
+//! Registration order is the **static preference order**: with
+//! `RoutePolicy::Static` the earliest-registered healthy candidate for
+//! an (op, format) pair serves it; with `RoutePolicy::Latency` the
+//! measured-fastest healthy candidate wins instead (falling back to
+//! registration order until every candidate has latency signal).
+//!
+//! Factories — not executors — are registered because executors are
+//! deliberately not `Send` (the PJRT client wraps thread-local FFI
+//! state): each worker thread builds its own executor from the shared
+//! factory, exactly as [`FpuService::start`](crate::coordinator::FpuService::start)
+//! always did for the single-backend case.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::executor::Executor;
+
+/// A shared, thread-safe executor factory (called once per worker
+/// thread, plus once at startup for capability probing).
+pub type ExecutorFactory = Arc<dyn Fn() -> Result<Box<dyn Executor>> + Send + Sync>;
+
+/// How the dispatch plane arbitrates among healthy candidate backends
+/// for one (op, format) pair.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Registration order: the earliest-registered healthy candidate
+    /// serves the pair. Deterministic, zero measurement overhead.
+    #[default]
+    Static,
+    /// Measured-latency preference: the healthy candidate with the
+    /// lowest windowed mean execution time per lane for the pair
+    /// serves it. Candidates without signal are tried first (so every
+    /// backend gets measured), and a periodic exploration tick
+    /// re-measures the losers so a recovered or warmed-up backend can
+    /// win the slot back.
+    Latency,
+}
+
+impl RoutePolicy {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "static" => Ok(RoutePolicy::Static),
+            "latency" => Ok(RoutePolicy::Latency),
+            other => Err(format!("unknown route policy {other:?} (static|latency)")),
+        }
+    }
+
+    /// Stable label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::Static => "static",
+            RoutePolicy::Latency => "latency",
+        }
+    }
+}
+
+/// One registered backend: its factory and an optional per-backend
+/// worker count (defaulting to the service config's `workers`).
+pub struct BackendEntry {
+    factory: ExecutorFactory,
+    workers: Option<usize>,
+}
+
+impl BackendEntry {
+    /// Build one executor from this entry's factory.
+    pub fn make(&self) -> Result<Box<dyn Executor>> {
+        (self.factory)()
+    }
+
+    /// A clone of the shared factory (each worker thread gets one).
+    pub fn factory(&self) -> ExecutorFactory {
+        self.factory.clone()
+    }
+
+    /// Per-backend worker-pool size override, if any.
+    pub fn workers(&self) -> Option<usize> {
+        self.workers
+    }
+}
+
+/// The ordered set of executor factories a routed service serves
+/// through. Backend *names* are not stored here — they come from each
+/// probed executor's own [`BackendCaps::backend`](crate::runtime::BackendCaps::backend),
+/// so a registry entry can never claim a name its executor disowns.
+#[derive(Default)]
+pub struct ExecutorRegistry {
+    entries: Vec<BackendEntry>,
+    policy: RoutePolicy,
+}
+
+impl ExecutorRegistry {
+    /// Empty registry (static policy until overridden).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the routing policy.
+    pub fn with_policy(mut self, policy: RoutePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Register one backend factory. Registration order is the static
+    /// preference order.
+    pub fn register<F>(self, factory: F) -> Self
+    where
+        F: Fn() -> Result<Box<dyn Executor>> + Send + Sync + 'static,
+    {
+        self.push(Arc::new(factory), None)
+    }
+
+    /// [`Self::register`] with a per-backend worker-pool size (instead
+    /// of the service config's global `workers`).
+    pub fn register_with_workers<F>(self, factory: F, workers: usize) -> Self
+    where
+        F: Fn() -> Result<Box<dyn Executor>> + Send + Sync + 'static,
+    {
+        self.push(Arc::new(factory), Some(workers))
+    }
+
+    fn push(mut self, factory: ExecutorFactory, workers: Option<usize>) -> Self {
+        self.entries.push(BackendEntry { factory, workers });
+        self
+    }
+
+    /// The routing policy in force.
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Registered backends, in preference order.
+    pub fn entries(&self) -> &[BackendEntry] {
+        &self.entries
+    }
+
+    /// Number of registered backends.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Decompose into (entries, policy) — the service start path.
+    pub fn into_parts(self) -> (Vec<BackendEntry>, RoutePolicy) {
+        (self.entries, self.policy)
+    }
+}
+
+/// Build the standard registry from a comma-separated backend list
+/// (the CLI's `--backend native,u128,scalar` grammar). Known names:
+///
+/// * `native` — [`NativeExecutor`](crate::runtime::NativeExecutor), the
+///   width-true limb-sliced batch kernels (serves all 12 pairs);
+/// * `u128` — [`U128BaselineExecutor`](crate::runtime::U128BaselineExecutor),
+///   the retained u64×u64→u128 divide kernel family (divide only, u64
+///   planes — genuinely partial capabilities);
+/// * `scalar` — [`ScalarReferenceExecutor`](crate::runtime::ScalarReferenceExecutor),
+///   the scalar bit-accurate reference datapath, one lane at a time;
+/// * `pjrt` — the XLA AOT backend (f32 only; needs the `pjrt` feature
+///   and an artifacts directory).
+///
+/// List order is the static preference order. Duplicates and unknown
+/// names are errors.
+pub fn standard_registry(
+    spec: &str,
+    policy: RoutePolicy,
+    artifacts: Option<std::path::PathBuf>,
+) -> Result<ExecutorRegistry> {
+    use crate::runtime::executor::{
+        NativeExecutor, ScalarReferenceExecutor, U128BaselineExecutor,
+    };
+    #[cfg(not(feature = "pjrt"))]
+    let _ = &artifacts;
+    let mut registry = ExecutorRegistry::new().with_policy(policy);
+    let mut seen: Vec<&str> = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if seen.contains(&name) {
+            bail!("backend {name:?} registered twice");
+        }
+        seen.push(name);
+        registry = match name {
+            "native" => registry.register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _)),
+            "u128" => {
+                registry.register(|| Ok(Box::new(U128BaselineExecutor::with_defaults()) as _))
+            }
+            "scalar" => {
+                registry.register(|| Ok(Box::new(ScalarReferenceExecutor::with_defaults()) as _))
+            }
+            #[cfg(feature = "pjrt")]
+            "pjrt" => {
+                let dir = match &artifacts {
+                    Some(dir) => dir.clone(),
+                    None => bail!("backend pjrt needs an artifacts directory"),
+                };
+                registry.register(move || {
+                    let mut ex = crate::runtime::PjrtExecutor::from_dir(&dir)?;
+                    ex.warmup()?;
+                    Ok(Box::new(ex) as _)
+                })
+            }
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => {
+                bail!("backend pjrt requires a build with `--features pjrt`")
+            }
+            other => bail!("unknown backend {other:?} (native|u128|scalar|pjrt)"),
+        };
+    }
+    if registry.is_empty() {
+        bail!("no backends in {spec:?}");
+    }
+    Ok(registry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(RoutePolicy::parse("static").unwrap(), RoutePolicy::Static);
+        assert_eq!(RoutePolicy::parse("latency").unwrap(), RoutePolicy::Latency);
+        assert!(RoutePolicy::parse("fastest").is_err());
+        assert_eq!(RoutePolicy::default(), RoutePolicy::Static);
+        assert_eq!(RoutePolicy::Latency.label(), "latency");
+    }
+
+    #[test]
+    fn standard_registry_parses_lists() {
+        let reg = standard_registry("native,u128,scalar", RoutePolicy::Latency, None).unwrap();
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.policy(), RoutePolicy::Latency);
+        // every entry's factory builds a live executor
+        for entry in reg.entries() {
+            assert!(entry.make().is_ok());
+            assert!(entry.workers().is_none());
+        }
+        // whitespace tolerated, single entries fine
+        assert_eq!(standard_registry(" native ", RoutePolicy::Static, None).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn standard_registry_rejects_bad_specs() {
+        assert!(standard_registry("native,native", RoutePolicy::Static, None).is_err());
+        assert!(standard_registry("warp-drive", RoutePolicy::Static, None).is_err());
+        assert!(standard_registry("", RoutePolicy::Static, None).is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(standard_registry("pjrt", RoutePolicy::Static, None).is_err());
+    }
+
+    #[test]
+    fn register_with_workers_records_override() {
+        use crate::runtime::executor::NativeExecutor;
+        let reg = ExecutorRegistry::new()
+            .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _))
+            .register_with_workers(|| Ok(Box::new(NativeExecutor::with_defaults()) as _), 3);
+        assert_eq!(reg.entries()[0].workers(), None);
+        assert_eq!(reg.entries()[1].workers(), Some(3));
+        let (entries, policy) = reg.into_parts();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(policy, RoutePolicy::Static);
+    }
+}

@@ -1,0 +1,179 @@
+//! [`RoutingTable`]: several backends' [`BackendCaps`] merged into one
+//! per-(op, format) routing table.
+//!
+//! The merge produces two things:
+//!
+//! * **candidate lists** — for every (op, format) pair, the indices of
+//!   the backends that serve it, in registration (= static preference)
+//!   order. The dispatch plane picks among these per batch.
+//! * **the union capability table** — one [`BackendCaps`] whose
+//!   supported set is the union of every backend's (with merged
+//!   ladders). The service handle rejects submissions against this
+//!   union: a pair *some* backend serves is admissible even if the
+//!   preferred backend cannot run it — that is the whole point of a
+//!   router.
+//!
+//! Per-backend shape (ladders, plane widths) is **not** collapsed: the
+//! batcher keeps one shape table per backend and forms each batch at
+//! the width and ladder of the backend the plane selected, so a `u64`-
+//! planes-only baseline backend and the width-true native backend can
+//! share one service without either compromising its geometry.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::request::{op_format_slot, OpKind, OP_FORMAT_SLOTS};
+use crate::formats::FormatKind;
+use crate::runtime::caps::BackendCaps;
+
+/// Merged routing table over an ordered list of backends.
+#[derive(Debug)]
+pub struct RoutingTable {
+    caps: Vec<BackendCaps>,
+    /// Per (op, format) slot: indices of serving backends, preference
+    /// order.
+    candidates: [Vec<usize>; OP_FORMAT_SLOTS],
+    union: BackendCaps,
+}
+
+impl RoutingTable {
+    /// Merge the probed capability tables (index order = registration
+    /// order = static preference order). Fails when no backend serves
+    /// any (op, format) pair at all — such a service could only reject.
+    pub fn merge(caps: Vec<BackendCaps>) -> Result<Self> {
+        if caps.is_empty() {
+            bail!("no backends to merge");
+        }
+        let mut candidates: [Vec<usize>; OP_FORMAT_SLOTS] = std::array::from_fn(|_| Vec::new());
+        // the union table is what the client handle sees; a multi-
+        // backend union reports the plane's own name, a single backend
+        // keeps its own
+        let name = if caps.len() == 1 { caps[0].backend() } else { "dispatch" };
+        let mut union = BackendCaps::new(name);
+        for &op in &OpKind::ALL {
+            for &format in &FormatKind::ALL {
+                let mut ladder: Vec<usize> = Vec::new();
+                for (i, c) in caps.iter().enumerate() {
+                    if c.supports(op, format) {
+                        candidates[op_format_slot(op, format)].push(i);
+                        ladder.extend_from_slice(c.ladder(op, format));
+                    }
+                }
+                // BackendCaps::with sorts + dedups the merged ladder
+                union = union.with(op, format, &ladder);
+            }
+        }
+        if union.supported().is_empty() {
+            bail!("no registered backend serves any (op, format) pair");
+        }
+        Ok(Self { caps, candidates, union })
+    }
+
+    /// Number of merged backends.
+    pub fn backend_count(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// One backend's own capability table.
+    pub fn caps(&self, backend: usize) -> &BackendCaps {
+        &self.caps[backend]
+    }
+
+    /// Every backend's capability table, registration order (the
+    /// batcher builds its per-backend shape tables from this).
+    pub fn caps_list(&self) -> &[BackendCaps] {
+        &self.caps
+    }
+
+    /// One backend's name (from its own capability table).
+    pub fn name(&self, backend: usize) -> &'static str {
+        self.caps[backend].backend()
+    }
+
+    /// Every backend name, registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.caps.iter().map(|c| c.backend()).collect()
+    }
+
+    /// The backends serving one (op, format) pair, preference order
+    /// (empty when nothing serves it).
+    pub fn candidates(&self, op: OpKind, format: FormatKind) -> &[usize] {
+        &self.candidates[op_format_slot(op, format)]
+    }
+
+    /// The union capability table (what the client handle can admit).
+    pub fn union(&self) -> &BackendCaps {
+        &self.union
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full(name: &'static str, ladder: &[usize]) -> BackendCaps {
+        BackendCaps::uniform(name, ladder)
+    }
+
+    fn divide_only(name: &'static str, ladder: &[usize]) -> BackendCaps {
+        let mut caps = BackendCaps::new(name);
+        for &format in &FormatKind::ALL {
+            caps = caps.with(OpKind::Divide, format, ladder);
+        }
+        caps
+    }
+
+    #[test]
+    fn single_backend_union_is_identity() {
+        let t = RoutingTable::merge(vec![full("native", &[64, 256])]).unwrap();
+        assert_eq!(t.backend_count(), 1);
+        assert_eq!(t.union().backend(), "native");
+        assert_eq!(t.union().supported().len(), 12);
+        for &op in &OpKind::ALL {
+            for &format in &FormatKind::ALL {
+                assert_eq!(t.candidates(op, format), &[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_keeps_preference_order_and_partial_caps() {
+        let t = RoutingTable::merge(vec![
+            divide_only("u128", &[64]),
+            full("native", &[64, 256]),
+        ])
+        .unwrap();
+        assert_eq!(t.backend_count(), 2);
+        assert_eq!(t.name(0), "u128");
+        assert_eq!(t.name(1), "native");
+        assert_eq!(t.names(), vec!["u128", "native"]);
+        // divide: both serve, registration order
+        assert_eq!(t.candidates(OpKind::Divide, FormatKind::F32), &[0, 1]);
+        // sqrt: only the full backend
+        assert_eq!(t.candidates(OpKind::Sqrt, FormatKind::F32), &[1]);
+        // the union admits everything either serves, with merged ladders
+        assert_eq!(t.union().backend(), "dispatch");
+        assert_eq!(t.union().supported().len(), 12);
+        assert_eq!(t.union().ladder(OpKind::Divide, FormatKind::F16), &[64, 256]);
+        assert_eq!(t.union().ladder(OpKind::Rsqrt, FormatKind::F64), &[64, 256]);
+    }
+
+    #[test]
+    fn union_rejects_pairs_nobody_serves() {
+        let t = RoutingTable::merge(vec![
+            divide_only("a", &[64]),
+            divide_only("b", &[256]),
+        ])
+        .unwrap();
+        assert!(t.union().supports(OpKind::Divide, FormatKind::BF16));
+        assert!(!t.union().supports(OpKind::Sqrt, FormatKind::F32));
+        assert!(t.candidates(OpKind::Sqrt, FormatKind::F32).is_empty());
+        assert_eq!(t.union().ladder(OpKind::Divide, FormatKind::F32), &[64, 256]);
+    }
+
+    #[test]
+    fn degenerate_merges_fail() {
+        assert!(RoutingTable::merge(vec![]).is_err());
+        // a backend set in which nobody serves anything is unservable
+        assert!(RoutingTable::merge(vec![BackendCaps::new("empty")]).is_err());
+    }
+}

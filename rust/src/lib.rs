@@ -19,8 +19,14 @@
 //!   shedding, and a typed `ServiceError` for every failure. Backends
 //!   plug in through a capability-negotiated executor contract
 //!   ([`runtime`]: `BackendCaps` + allocation-free `execute_into`),
-//!   implemented by the native batch kernels and by AOT-compiled XLA
-//!   executables (behind the non-default `pjrt` feature).
+//!   implemented by the native batch kernels, a retained u128 divide
+//!   baseline, a scalar reference datapath, and AOT-compiled XLA
+//!   executables (behind the non-default `pjrt` feature) — and the
+//!   [`dispatch`] plane merges several backends' capability tables
+//!   into one routing table, serving each (op, format) batch through
+//!   health-tracked per-backend worker pools (static or
+//!   measured-latency preference, consecutive-failure circuit breakers
+//!   with probe-based recovery, rider-invisible failover).
 //! * **Layer 2** — `python/compile/model.py`: jax graphs, lowered once
 //!   to HLO text under `artifacts/`.
 //! * **Layer 1** — `python/compile/kernels/`: the Goldschmidt iteration
@@ -39,7 +45,7 @@
 //! planes to the [`kernel`] lane loops.
 //!
 //! See the top-level `README.md` for the module map
-//! (arith -> formats -> kernel -> coordinator -> runtime), the
+//! (arith -> formats -> kernel -> dispatch -> coordinator -> runtime), the
 //! plane-word/limb design, and how to run the service and benches;
 //! `DESIGN.md` for the per-experiment index (which module regenerates
 //! which figure/table of the paper); and `EXPERIMENTS.md` for results.
@@ -50,6 +56,7 @@ pub mod baselines;
 pub mod bench;
 pub mod check;
 pub mod coordinator;
+pub mod dispatch;
 pub mod formats;
 pub mod goldschmidt;
 pub mod kernel;

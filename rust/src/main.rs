@@ -5,19 +5,15 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use anyhow::{bail, Result};
-#[cfg(feature = "pjrt")]
-use anyhow::Context;
+use anyhow::{bail, Context as _, Result};
 
 use goldschmidt::arith::fixed::Fixed;
 use goldschmidt::arith::twos::ComplementKind;
 use goldschmidt::arith::ulp;
 use goldschmidt::area::Comparison;
 use goldschmidt::coordinator::{BatcherConfig, FormatKind, FpuService, ServiceConfig};
+use goldschmidt::dispatch::{standard_registry, RoutePolicy};
 use goldschmidt::goldschmidt::{variants, Config};
-use goldschmidt::runtime::NativeExecutor;
-#[cfg(feature = "pjrt")]
-use goldschmidt::runtime::PjrtExecutor;
 use goldschmidt::sim::Design;
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::cli::Args;
@@ -48,7 +44,12 @@ COMMANDS:
   sqrt       simulate square root on the reduced datapath (EIMMW variant)
              --d F --steps K --gantt
   serve      run the FPU service on a synthetic workload (E2E driver)
-             --requests N --backend pjrt|native --workers W
+             --requests N --workers W
+             --backend LIST (comma-separated registry, preference order:
+             native|u128|scalar|pjrt — e.g. --backend native,u128,scalar
+             routes per (op, format) across three pools; u128 serves
+             divide only, pjrt needs --features pjrt and is f32-only)
+             --route-policy static|latency (multi-backend arbitration)
              --format f16|bf16|f32|f64 (native backend serves all four)
              --batch MAX --wait-us US --rate R --artifacts DIR
              --deadline-us US (shed requests older than US; 0 = off)
@@ -327,40 +328,27 @@ fn cmd_sqrt(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Start the FPU service on the requested backend. The PJRT backend
-/// only exists when the crate is built with `--features pjrt`; the
-/// offline default build serves through the native batch kernels.
+/// Start the FPU service on the requested backend registry (a comma-
+/// separated preference list — `native,u128,scalar` routes per (op,
+/// format) across three worker pools). The PJRT backend only exists
+/// when the crate is built with `--features pjrt`; the offline default
+/// build serves through the native batch kernels.
 fn start_service(
     config: ServiceConfig,
     backend: &str,
+    policy: RoutePolicy,
     artifacts: &std::path::Path,
 ) -> Result<FpuService> {
-    match backend {
-        "native" => Ok(FpuService::start(config, || {
-            Ok(Box::new(NativeExecutor::with_defaults()) as _)
-        })?),
-        #[cfg(feature = "pjrt")]
-        "pjrt" => {
-            let dir = artifacts.to_path_buf();
-            FpuService::start(config, move || {
-                let mut ex = PjrtExecutor::from_dir(&dir)?;
-                ex.warmup()?;
-                Ok(Box::new(ex) as _)
-            })
-            .context("starting PJRT service (run `make artifacts` first?)")
-        }
-        #[cfg(not(feature = "pjrt"))]
-        "pjrt" => {
-            let _ = artifacts;
-            bail!("backend pjrt requires a build with `--features pjrt` (offline builds serve --backend native)")
-        }
-        other => bail!("unknown backend {other:?} (native|pjrt)"),
-    }
+    let registry = standard_registry(backend, policy, Some(artifacts.to_path_buf()))?;
+    FpuService::start_routed(config, registry)
+        .context("starting FPU service (pjrt backends need `make artifacts` first)")
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.get("requests", 50_000usize).map_err(anyhow::Error::msg)?;
     let backend = args.get_str("backend", "native");
+    let policy = RoutePolicy::parse(&args.get_str("route-policy", "static"))
+        .map_err(anyhow::Error::msg)?;
     let format =
         FormatKind::parse(&args.get_str("format", "f32")).map_err(anyhow::Error::msg)?;
     if backend == "pjrt" && format != FormatKind::F32 {
@@ -400,7 +388,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         poll: Duration::from_micros(50),
     };
 
-    let svc = start_service(config, &backend, &artifacts)?;
+    let svc = start_service(config, &backend, policy, &artifacts)?;
 
     let spec = WorkloadSpec {
         count: requests,
@@ -414,7 +402,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     println!(
-        "serving {requests} {format} requests on backend={backend} workers={workers} ..."
+        "serving {requests} {format} requests on backend={backend} policy={} \
+         workers={workers} (per pool) ...",
+        policy.label()
     );
     let t0 = std::time::Instant::now();
     let handle = svc.handle();
@@ -470,6 +460,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
             snap.total_admission_rejected(),
             snap.total_errors()
         );
+    }
+    // multi-backend runs: show where the traffic went and how the
+    // breakers fared
+    let report = svc.dispatch_report();
+    if report.len() > 1 {
+        let mut t = Table::new(
+            "dispatch plane (per backend)",
+            &["backend", "batches ok", "failed", "rerouted", "trips", "probes", "breaker"],
+        )
+        .aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+        for (name, s) in &report {
+            t.row(&[
+                name.to_string(),
+                s.ok_batches.to_string(),
+                s.failed_batches.to_string(),
+                s.rerouted.to_string(),
+                s.trips.to_string(),
+                s.probes.to_string(),
+                if s.breaker_open { "OPEN".into() } else { "closed".into() },
+            ]);
+        }
+        t.print();
     }
     svc.shutdown();
     Ok(())

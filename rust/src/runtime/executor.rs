@@ -35,6 +35,22 @@
 //! no plane allocations, and a scoped-thread worker split for large
 //! flushes. It is both the mock for coordinator tests (no artifacts
 //! needed) and the comparison baseline in the E2E bench.
+//!
+//! Two more offline backends exist so the [`crate::dispatch`] plane has
+//! real heterogeneity to route over:
+//!
+//! * [`U128BaselineExecutor`] — the retained seed `u64 x u64 -> u128`
+//!   divide kernel family behind the executor contract. **Divide
+//!   only**, universal `u64` planes for every format: a genuinely
+//!   partial capability table, so a routed service must send sqrt and
+//!   rsqrt elsewhere.
+//! * [`ScalarReferenceExecutor`] — the scalar bit-accurate reference
+//!   datapath, one lane at a time. Serves every (op, format) pair but
+//!   far slower than the batch kernels; under a latency routing policy
+//!   it loses every slot it shares with the native backend, which is
+//!   exactly what makes it a useful routing foil (and a bit-identity
+//!   cross-check, since the batch kernels are property-tested equal to
+//!   these scalar entries).
 
 use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
@@ -84,8 +100,9 @@ pub trait Executor {
     /// rebuilding the whole capability table per call just to read one
     /// width would contradict `capabilities()`'s once-at-startup
     /// contract. A backend that negotiates non-default widths via
-    /// [`BackendCaps::with_plane_width`] should override this wrapper
-    /// too (no in-tree backend does; a mismatch is a typed error from
+    /// [`BackendCaps::with_plane_width`] overrides this wrapper too
+    /// (the u128-baseline and scalar-reference backends do, building
+    /// universal `u64` planes; a mismatch is a typed error from
     /// `execute_into`, never corruption).
     fn execute(
         &mut self,
@@ -361,6 +378,230 @@ impl Executor for NativeExecutor {
     }
 }
 
+// ------------------------------------------------------ u128 baseline --
+
+/// Executor over the retained seed `u64 x u64 -> u128` divide kernel
+/// family (`GoldschmidtContext::divide_batch_bits_u128_baseline`) —
+/// the pre-limb formulation kept for the limb-vs-u128 bench, now
+/// servable so the dispatch plane has a second real divide datapath to
+/// route to. Capabilities are genuinely partial: **divide only** (the
+/// u128 baseline family never had sqrt/rsqrt entries), and every
+/// format's plane width is negotiated to universal `u64` words — this
+/// backend predates width-true planes.
+pub struct U128BaselineExecutor {
+    /// One datapath context per [`FormatKind`] (same geometry as the
+    /// native executor; only the multiply formulation differs).
+    ctxs: [GoldschmidtContext; 4],
+    ladder: Vec<usize>,
+    scratch: BatchScratch<u64>,
+}
+
+impl U128BaselineExecutor {
+    /// New baseline executor with the given batch ladder.
+    pub fn new(ladder: &[usize]) -> Self {
+        Self {
+            ctxs: std::array::from_fn(|i| {
+                GoldschmidtContext::new(FormatKind::ALL[i].datapath_config())
+            }),
+            ladder: ladder.to_vec(),
+            scratch: BatchScratch::new(),
+        }
+    }
+
+    /// Default ladder {64, 256, 1024} (matches the native executor, so
+    /// failover between the two never re-pads).
+    pub fn with_defaults() -> Self {
+        Self::new(&[64, 256, 1024])
+    }
+}
+
+impl Executor for U128BaselineExecutor {
+    fn capabilities(&self) -> BackendCaps {
+        let mut caps = BackendCaps::new("u128-baseline");
+        for &format in &FormatKind::ALL {
+            caps = caps
+                .with(OpKind::Divide, format, &self.ladder)
+                .with_plane_width(format, formats::PlaneWidth::W64);
+        }
+        caps
+    }
+
+    fn execute_into(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: PlaneRef<'_>,
+        b: Option<PlaneRef<'_>>,
+        mut out: PlaneRefMut<'_>,
+    ) -> Result<()> {
+        if op != OpKind::Divide {
+            bail!("u128 baseline serves divide only (got {})", op.label());
+        }
+        let Some(a) = a.as_w64() else {
+            bail!("u128 baseline takes u64 operand planes");
+        };
+        let Some(b) = b.and_then(|b| b.as_w64()) else {
+            bail!("divide needs a u64 divisor plane");
+        };
+        let Some(out) = out.as_w64() else {
+            bail!("u128 baseline writes u64 planes");
+        };
+        if b.len() != a.len() {
+            bail!("operand length mismatch: {} vs {}", b.len(), a.len());
+        }
+        if out.len() != a.len() {
+            bail!("output length {} != batch {}", out.len(), a.len());
+        }
+        let ctx = &self.ctxs[format.index()];
+        let s = &mut self.scratch;
+        match format {
+            FormatKind::F16 => ctx.divide_batch_bits_u128_baseline::<formats::F16>(a, b, out, s),
+            FormatKind::BF16 => ctx.divide_batch_bits_u128_baseline::<formats::BF16>(a, b, out, s),
+            FormatKind::F32 => ctx.divide_batch_bits_u128_baseline::<formats::F32>(a, b, out, s),
+            FormatKind::F64 => ctx.divide_batch_bits_u128_baseline::<formats::F64>(a, b, out, s),
+        }
+        Ok(())
+    }
+
+    fn execute(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: Option<&[u64]>,
+    ) -> Result<Vec<u64>> {
+        // this backend negotiates u64 planes for every format, so the
+        // allocating wrapper builds them directly
+        let mut out = vec![0u64; a.len()];
+        let out_ref = PlaneRefMut::W64(&mut out);
+        self.execute_into(op, format, PlaneRef::W64(a), b.map(PlaneRef::W64), out_ref)?;
+        Ok(out)
+    }
+}
+
+// --------------------------------------------------- scalar reference --
+
+/// Executor over the scalar bit-accurate reference datapath: each lane
+/// runs [`GoldschmidtContext::divide_bits`] /
+/// [`sqrt_bits`](GoldschmidtContext::sqrt_bits) /
+/// [`rsqrt_bits`](GoldschmidtContext::rsqrt_bits) on the calling
+/// thread — the entries the batch kernels are property-tested
+/// bit-identical to. Serves every (op, format) pair on universal `u64`
+/// planes; slow by design, which makes it both the routing plane's
+/// always-available fallback and its latency-policy foil.
+pub struct ScalarReferenceExecutor {
+    ctxs: [GoldschmidtContext; 4],
+    ladder: Vec<usize>,
+}
+
+impl ScalarReferenceExecutor {
+    /// New scalar executor with the given batch ladder.
+    pub fn new(ladder: &[usize]) -> Self {
+        Self {
+            ctxs: std::array::from_fn(|i| {
+                GoldschmidtContext::new(FormatKind::ALL[i].datapath_config())
+            }),
+            ladder: ladder.to_vec(),
+        }
+    }
+
+    /// Default ladder {64, 256, 1024} (matches the native executor).
+    pub fn with_defaults() -> Self {
+        Self::new(&[64, 256, 1024])
+    }
+}
+
+/// One batch, one lane at a time, through the scalar reference entries.
+fn scalar_lanes<F: FloatFormat>(
+    ctx: &GoldschmidtContext,
+    op: OpKind,
+    a: &[u64],
+    b: Option<&[u64]>,
+    out: &mut [u64],
+) -> Result<()> {
+    match op {
+        OpKind::Divide => {
+            let Some(b) = b else {
+                bail!("divide needs two operands");
+            };
+            if b.len() != a.len() {
+                bail!("operand length mismatch: {} vs {}", b.len(), a.len());
+            }
+            for ((o, &n), &d) in out.iter_mut().zip(a).zip(b) {
+                *o = ctx.divide_bits::<F>(n, d);
+            }
+        }
+        OpKind::Sqrt => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = ctx.sqrt_bits::<F>(x);
+            }
+        }
+        OpKind::Rsqrt => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = ctx.rsqrt_bits::<F>(x);
+            }
+        }
+    }
+    Ok(())
+}
+
+impl Executor for ScalarReferenceExecutor {
+    fn capabilities(&self) -> BackendCaps {
+        let mut caps = BackendCaps::uniform("scalar-reference", &self.ladder);
+        for &format in &FormatKind::ALL {
+            caps = caps.with_plane_width(format, formats::PlaneWidth::W64);
+        }
+        caps
+    }
+
+    fn execute_into(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: PlaneRef<'_>,
+        b: Option<PlaneRef<'_>>,
+        mut out: PlaneRefMut<'_>,
+    ) -> Result<()> {
+        let Some(a) = a.as_w64() else {
+            bail!("scalar reference takes u64 operand planes");
+        };
+        let b = match b {
+            Some(b) => match b.as_w64() {
+                Some(b) => Some(b),
+                None => bail!("scalar reference takes u64 operand planes"),
+            },
+            None => None,
+        };
+        let Some(out) = out.as_w64() else {
+            bail!("scalar reference writes u64 planes");
+        };
+        if out.len() != a.len() {
+            bail!("output length {} != batch {}", out.len(), a.len());
+        }
+        let ctx = &self.ctxs[format.index()];
+        match format {
+            FormatKind::F16 => scalar_lanes::<formats::F16>(ctx, op, a, b, out),
+            FormatKind::BF16 => scalar_lanes::<formats::BF16>(ctx, op, a, b, out),
+            FormatKind::F32 => scalar_lanes::<formats::F32>(ctx, op, a, b, out),
+            FormatKind::F64 => scalar_lanes::<formats::F64>(ctx, op, a, b, out),
+        }
+    }
+
+    fn execute(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: Option<&[u64]>,
+    ) -> Result<Vec<u64>> {
+        // u64 planes for every format (see capabilities)
+        let mut out = vec![0u64; a.len()];
+        let out_ref = PlaneRefMut::W64(&mut out);
+        self.execute_into(op, format, PlaneRef::W64(a), b.map(PlaneRef::W64), out_ref)?;
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,6 +752,80 @@ mod tests {
             let want = ctx.divide_f32(a[i], b[i]);
             assert_eq!(out[i] as u32, want.to_bits(), "lane {i}");
         }
+    }
+
+    #[test]
+    fn u128_baseline_matches_native_divide_bit_exactly() {
+        use crate::formats::Value;
+        use crate::util::rng::Xoshiro256;
+        let mut base = U128BaselineExecutor::with_defaults();
+        let mut native = NativeExecutor::with_defaults();
+        let mut rng = Xoshiro256::new(0xB45E);
+        for format in FormatKind::ALL {
+            let a: Vec<u64> = (0..256)
+                .map(|_| Value::from_f64(format, rng.range_f64(1e-3, 1e3)).bits())
+                .collect();
+            let b: Vec<u64> = (0..256)
+                .map(|_| Value::from_f64(format, rng.range_f64(1e-3, 1e3)).bits())
+                .collect();
+            let want = native.execute(OpKind::Divide, format, &a, Some(&b)).unwrap();
+            let got = base.execute(OpKind::Divide, format, &a, Some(&b)).unwrap();
+            assert_eq!(got, want, "{format}");
+        }
+    }
+
+    #[test]
+    fn u128_baseline_caps_are_divide_only_u64_planes() {
+        let caps = U128BaselineExecutor::with_defaults().capabilities();
+        assert_eq!(caps.backend(), "u128-baseline");
+        assert_eq!(caps.supported().len(), 4, "divide x four formats");
+        for format in FormatKind::ALL {
+            assert!(caps.supports(OpKind::Divide, format));
+            assert!(!caps.supports(OpKind::Sqrt, format));
+            assert!(!caps.supports(OpKind::Rsqrt, format));
+            assert_eq!(caps.plane_width(format), formats::PlaneWidth::W64);
+        }
+        // and execution enforces the same boundary, typed
+        let mut ex = U128BaselineExecutor::with_defaults();
+        assert!(ex.execute(OpKind::Sqrt, FormatKind::F32, &[0x40800000], None).is_err());
+        let a = vec![0x3C00u32; 2];
+        let mut out = vec![0u32; 2];
+        assert!(ex
+            .execute_into(
+                OpKind::Divide,
+                FormatKind::F16,
+                PlaneRef::W32(&a),
+                Some(PlaneRef::W32(&a)),
+                PlaneRefMut::W32(&mut out),
+            )
+            .is_err(), "u32 planes are a typed error for this backend");
+    }
+
+    #[test]
+    fn scalar_reference_matches_native_every_op_and_format() {
+        use crate::formats::Value;
+        use crate::util::rng::Xoshiro256;
+        let mut scalar = ScalarReferenceExecutor::with_defaults();
+        let mut native = NativeExecutor::with_defaults();
+        let mut rng = Xoshiro256::new(0x5CA1);
+        for format in FormatKind::ALL {
+            let a: Vec<u64> = (0..64)
+                .map(|_| Value::from_f64(format, rng.range_f64(1e-3, 1e3)).bits())
+                .collect();
+            let b: Vec<u64> = (0..64)
+                .map(|_| Value::from_f64(format, rng.range_f64(1e-3, 1e3)).bits())
+                .collect();
+            for op in OpKind::ALL {
+                let divisor = if op == OpKind::Divide { Some(&b[..]) } else { None };
+                let want = native.execute(op, format, &a, divisor).unwrap();
+                let got = scalar.execute(op, format, &a, divisor).unwrap();
+                assert_eq!(got, want, "{op:?} {format}");
+            }
+        }
+        let caps = scalar.capabilities();
+        assert_eq!(caps.backend(), "scalar-reference");
+        assert_eq!(caps.supported().len(), 12);
+        assert_eq!(caps.plane_width(FormatKind::F16), formats::PlaneWidth::W64);
     }
 
     // PjrtExecutor integration tests live in rust/tests/runtime_pjrt.rs

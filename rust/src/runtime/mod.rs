@@ -8,13 +8,19 @@
 //! * [`artifacts`] — parses `artifacts/manifest.txt` written by
 //!   `python/compile/aot.py`.
 //! * [`executor`] — the [`Executor`](executor::Executor) trait
-//!   (`capabilities` + allocation-free `execute_into`) with two
+//!   (`capabilities` + allocation-free `execute_into`) with four
 //!   implementations: [`NativeExecutor`](executor::NativeExecutor) (the
 //!   bit-accurate rust datapath on the batched SoA kernels, serving
 //!   every [`FormatKind`](crate::formats::FormatKind) — the default
-//!   backend, no artifacts needed) and, behind the non-default `pjrt`
-//!   feature, `PjrtExecutor` (HLO text -> `xla::PjRtClient` ->
-//!   compiled executables, f32 only — and its capability table says so).
+//!   backend, no artifacts needed),
+//!   [`U128BaselineExecutor`](executor::U128BaselineExecutor) (the
+//!   retained u128 divide kernel family — divide only, u64 planes: the
+//!   dispatch plane's genuinely-partial backend),
+//!   [`ScalarReferenceExecutor`](executor::ScalarReferenceExecutor)
+//!   (the scalar reference datapath, every pair, one lane at a time)
+//!   and, behind the non-default `pjrt` feature, `PjrtExecutor` (HLO
+//!   text -> `xla::PjRtClient` -> compiled executables, f32 only — and
+//!   its capability table says so).
 //!
 //! Python never runs here: the HLO was lowered once at build time
 //! (`make artifacts`), and the offline build compiles the PJRT path
@@ -28,4 +34,4 @@ pub use artifacts::{ArtifactSpec, Manifest};
 pub use caps::BackendCaps;
 #[cfg(feature = "pjrt")]
 pub use executor::PjrtExecutor;
-pub use executor::{Executor, NativeExecutor};
+pub use executor::{Executor, NativeExecutor, ScalarReferenceExecutor, U128BaselineExecutor};

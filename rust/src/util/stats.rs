@@ -166,9 +166,90 @@ impl LogHistogram {
     }
 }
 
+/// Fixed-capacity sliding window of per-batch `(exec_ns, lanes)`
+/// samples; reads as the windowed service rate
+/// `sum(exec_ns) / sum(lanes)`. **Windowed**, so the rate decays as
+/// conditions change — a cumulative mean would remember every slow
+/// burst forever. Shared by the coordinator's admission model
+/// (queue-depth × service-rate) and the dispatch plane's per-backend
+/// latency ranking.
+#[derive(Clone, Debug)]
+pub struct RateWindow<const N: usize> {
+    exec_ns: Vec<u64>,
+    lanes: Vec<u64>,
+    idx: usize,
+}
+
+impl<const N: usize> Default for RateWindow<N> {
+    fn default() -> Self {
+        Self { exec_ns: Vec::new(), lanes: Vec::new(), idx: 0 }
+    }
+}
+
+impl<const N: usize> RateWindow<N> {
+    /// Empty window.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one batch's execution time and live lane count; beyond
+    /// `N` samples the oldest is overwritten.
+    pub fn push(&mut self, exec_ns: u64, lanes: u64) {
+        if self.exec_ns.len() < N {
+            self.exec_ns.push(exec_ns);
+            self.lanes.push(lanes);
+        } else {
+            self.exec_ns[self.idx] = exec_ns;
+            self.lanes[self.idx] = lanes;
+        }
+        self.idx = (self.idx + 1) % N;
+    }
+
+    /// Samples currently held (saturates at `N`).
+    pub fn len(&self) -> usize {
+        self.exec_ns.len()
+    }
+
+    /// True before the first sample.
+    pub fn is_empty(&self) -> bool {
+        self.exec_ns.is_empty()
+    }
+
+    /// Windowed mean execution nanoseconds per lane (`None` with no
+    /// samples; a zero lane sum is guarded, not a division by zero).
+    pub fn ns_per_lane(&self) -> Option<f64> {
+        if self.exec_ns.is_empty() {
+            return None;
+        }
+        let exec: u64 = self.exec_ns.iter().sum();
+        let lanes: u64 = self.lanes.iter().sum();
+        Some(exec as f64 / lanes.max(1) as f64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rate_window_decays_and_rates() {
+        let mut w: RateWindow<4> = RateWindow::new();
+        assert!(w.is_empty());
+        assert!(w.ns_per_lane().is_none());
+        w.push(1_000, 10);
+        assert_eq!(w.len(), 1);
+        assert!((w.ns_per_lane().unwrap() - 100.0).abs() < 1e-9);
+        // fill with a different rate: the window forgets the first
+        for _ in 0..4 {
+            w.push(2_000, 1);
+        }
+        assert_eq!(w.len(), 4);
+        assert!((w.ns_per_lane().unwrap() - 2_000.0).abs() < 1e-9);
+        // zero lanes never divides by zero
+        let mut z: RateWindow<2> = RateWindow::new();
+        z.push(500, 0);
+        assert!(z.ns_per_lane().unwrap() >= 500.0);
+    }
 
     #[test]
     fn summary_basics() {

@@ -180,3 +180,43 @@ fn unknown_backend_errors() {
     let o = run(&["serve", "--requests", "10", "--backend", "tpu"]);
     assert!(!o.status.success());
 }
+
+#[test]
+fn serve_multi_backend_routes_and_reports() {
+    // the dispatch plane: three registered backends, one service; the
+    // per-backend report table only prints on multi-backend runs
+    let o = run(&[
+        "serve", "--requests", "800", "--backend", "native,u128,scalar",
+        "--route-policy", "latency",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let out = stdout(&o);
+    assert!(out.contains("800/800 ok"));
+    assert!(out.contains("policy=latency"));
+    assert!(out.contains("dispatch plane (per backend)"));
+    assert!(out.contains("native-fixed-point"));
+    assert!(out.contains("u128-baseline"));
+    assert!(out.contains("scalar-reference"));
+}
+
+#[test]
+fn serve_multi_backend_static_every_format() {
+    for fmt in ["f16", "bf16", "f32", "f64"] {
+        let o = run(&[
+            "serve", "--requests", "300", "--backend", "native,u128,scalar",
+            "--route-policy", "static", "--format", fmt,
+        ]);
+        assert!(o.status.success(), "{fmt}: {}", String::from_utf8_lossy(&o.stderr));
+        assert!(stdout(&o).contains("300/300 ok"), "{fmt}");
+    }
+}
+
+#[test]
+fn serve_rejects_bad_route_policy_and_duplicate_backends() {
+    let o = run(&["serve", "--requests", "10", "--route-policy", "fastest"]);
+    assert!(!o.status.success());
+    assert!(String::from_utf8_lossy(&o.stderr).contains("route policy"));
+    let o = run(&["serve", "--requests", "10", "--backend", "native,native"]);
+    assert!(!o.status.success());
+    assert!(String::from_utf8_lossy(&o.stderr).contains("twice"));
+}

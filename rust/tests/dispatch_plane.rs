@@ -1,0 +1,337 @@
+//! Integration tests for the dispatch plane: multi-backend routing,
+//! circuit breaking, probe-based recovery, rider-invisible failover,
+//! and routed bit-identity (a batch answers the same bits no matter
+//! which registered backend served it).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use goldschmidt::coordinator::{
+    BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, ServiceError,
+};
+use goldschmidt::dispatch::{ExecutorRegistry, RoutePolicy};
+use goldschmidt::formats::{PlaneRef, PlaneRefMut, Value};
+use goldschmidt::runtime::{
+    BackendCaps, Executor, NativeExecutor, ScalarReferenceExecutor, U128BaselineExecutor,
+};
+
+fn config() -> ServiceConfig {
+    ServiceConfig {
+        batcher: BatcherConfig::new(64, Duration::from_micros(100)),
+        queue_depth: 4096,
+        workers: 1,
+        poll: Duration::from_micros(50),
+    }
+}
+
+/// A backend whose every execution fails (the "killed backend").
+struct AlwaysFail;
+
+impl Executor for AlwaysFail {
+    fn capabilities(&self) -> BackendCaps {
+        BackendCaps::uniform("always-fail", &[64, 256, 1024])
+    }
+    fn execute_into(
+        &mut self,
+        _: OpKind,
+        _: FormatKind,
+        _: PlaneRef<'_>,
+        _: Option<PlaneRef<'_>>,
+        _: PlaneRefMut<'_>,
+    ) -> Result<()> {
+        bail!("backend is dead")
+    }
+}
+
+/// A backend that fails its first `fail_first` executions (counted
+/// across all worker instances), then serves correctly — the
+/// "recovers after a restart" shape the probe path exists for.
+struct FlakyRecovers {
+    inner: NativeExecutor,
+    calls: Arc<AtomicU64>,
+    fail_first: u64,
+}
+
+impl Executor for FlakyRecovers {
+    fn capabilities(&self) -> BackendCaps {
+        // the native shape under its own name, so reports distinguish it
+        BackendCaps::uniform("flaky-recovers", &[64, 256, 1024])
+    }
+    fn execute_into(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: PlaneRef<'_>,
+        b: Option<PlaneRef<'_>>,
+        out: PlaneRefMut<'_>,
+    ) -> Result<()> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if n < self.fail_first {
+            bail!("still rebooting (call {n})");
+        }
+        self.inner.execute_into(op, format, a, b, out)
+    }
+}
+
+#[test]
+fn killed_backend_circuit_breaks_with_zero_rider_errors() {
+    // the acceptance check: the preferred backend is dead on arrival;
+    // every batch it fails is re-routed to the healthy backend before
+    // any rider sees an error, the breaker opens after the consecutive
+    // failures, and routed traffic then avoids the corpse (except
+    // probes — whose failures are also rider-invisible)
+    let registry = ExecutorRegistry::new()
+        .register(|| Ok(Box::new(AlwaysFail) as _))
+        .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _));
+    let svc = FpuService::start_routed(config(), registry).unwrap();
+    let h = svc.handle();
+    for i in 1..=400u32 {
+        let q = h.divide((i * 3) as f32, 3.0).expect("submit");
+        assert_eq!(q, i as f32, "request {i} answered wrong");
+    }
+    // vectored groups survive the dead backend the same way
+    let a: Vec<u64> = (1..=100u32).map(|i| ((2 * i) as f32).to_bits() as u64).collect();
+    let b: Vec<u64> = (1..=100u32).map(|_| 2.0f32.to_bits() as u64).collect();
+    let resp = h
+        .submit_batch(OpKind::Divide, FormatKind::F32, &a, &b)
+        .unwrap()
+        .wait()
+        .expect("vectored riders must not see the dead backend");
+    for (i, v) in resp.values().enumerate() {
+        assert_eq!(v.f32(), (i + 1) as f32, "lane {i}");
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.total_errors(), 0, "failover must be rider-invisible");
+    let report = svc.dispatch_report();
+    assert_eq!(report[0].0, "always-fail");
+    let dead = report[0].1;
+    let alive = report[1].1;
+    assert!(dead.breaker_open, "breaker must be open on the dead backend");
+    assert!(dead.trips >= 1);
+    assert!(dead.failed_batches >= 3, "breaker opened after consecutive failures");
+    assert_eq!(dead.ok_batches, 0);
+    assert_eq!(dead.rerouted, dead.failed_batches, "every failure was absorbed");
+    assert!(alive.ok_batches > 0, "the healthy backend served the traffic");
+    assert_eq!(alive.failed_batches, 0);
+    // with the breaker open, routed traffic never touches the corpse:
+    // every post-open failure is a probe (the exact breaker invariant)
+    assert!(
+        dead.failed_batches <= 3 + dead.probes,
+        "non-probe traffic reached the open backend: {} failed, {} probes",
+        dead.failed_batches,
+        dead.probes
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn recovered_backend_is_probed_back_in() {
+    let calls = Arc::new(AtomicU64::new(0));
+    let c2 = calls.clone();
+    let registry = ExecutorRegistry::new()
+        .register(move || {
+            Ok(Box::new(FlakyRecovers {
+                inner: NativeExecutor::with_defaults(),
+                calls: c2.clone(),
+                fail_first: 6,
+            }) as _)
+        })
+        .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _));
+    let svc = FpuService::start_routed(config(), registry).unwrap();
+    let h = svc.handle();
+    // phase 1: the flaky backend fails everything — breaker opens, all
+    // riders still answered via the fallback
+    // phase 2: it recovers; a probe lands, the breaker closes, and
+    // preference returns to it
+    let mut recovered_at = None;
+    for i in 1..=600u32 {
+        let q = h.divide((i * 5) as f32, 5.0).expect("submit");
+        assert_eq!(q, i as f32);
+        let report = svc.dispatch_report();
+        let flaky = report[0].1;
+        if !flaky.breaker_open && flaky.ok_batches > 0 {
+            recovered_at = Some(i);
+            break;
+        }
+    }
+    let recovered_at = recovered_at.expect("probes never brought the recovered backend back");
+    // after recovery it serves again as the preferred backend
+    for i in 1..=50u32 {
+        assert_eq!(h.divide((i * 7) as f32, 7.0).unwrap(), i as f32);
+    }
+    let report = svc.dispatch_report();
+    let flaky = report[0].1;
+    assert!(flaky.trips >= 1, "the breaker must actually have opened first");
+    assert!(flaky.probes >= 1, "recovery rides a probe batch");
+    assert!(
+        flaky.ok_batches > 1,
+        "recovered backend (back in at request {recovered_at}) must serve traffic again"
+    );
+    assert_eq!(svc.metrics().snapshot().total_errors(), 0, "no rider saw any of this");
+    svc.shutdown();
+}
+
+#[test]
+fn every_backend_dead_surfaces_typed_errors() {
+    // with no healthy candidate left the retry chain is exhausted:
+    // riders get the backend's message, typed — never a hang
+    let registry = ExecutorRegistry::new().register(|| Ok(Box::new(AlwaysFail) as _));
+    let svc = FpuService::start_routed(config(), registry).unwrap();
+    let h = svc.handle();
+    match h.divide(6.0, 2.0) {
+        Err(ServiceError::ExecFailed { backend }) => {
+            assert!(backend.contains("backend is dead"), "{backend}");
+        }
+        other => panic!("expected ExecFailed, got {other:?}"),
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.total_errors(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn u128_only_service_rejects_what_it_cannot_serve() {
+    // genuinely partial caps end to end: a u128-baseline-only service
+    // serves divide in every format and rejects unary ops at submit
+    let registry = ExecutorRegistry::new()
+        .register(|| Ok(Box::new(U128BaselineExecutor::with_defaults()) as _));
+    let svc = FpuService::start_routed(config(), registry).unwrap();
+    let h = svc.handle();
+    for format in FormatKind::ALL {
+        assert_eq!(h.divide_in(format, 9.0, 2.0).unwrap(), 4.5, "{format}");
+    }
+    match h.sqrt(4.0) {
+        Err(ServiceError::Rejected { reason }) => {
+            assert!(reason.contains("u128-baseline"), "{reason}");
+            assert!(reason.contains("sqrt"), "{reason}");
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    svc.shutdown();
+}
+
+/// Operand planes with specials: raw `format` words covering normals,
+/// zeros, infinities, NaN and subnormals.
+fn operand_plane(format: FormatKind, seed: u64, n: usize) -> Vec<u64> {
+    use goldschmidt::util::rng::Xoshiro256;
+    let mut rng = Xoshiro256::new(seed);
+    let mut plane: Vec<u64> = vec![
+        Value::from_f64(format, 1.0).bits(),
+        Value::from_f64(format, 0.0).bits(),
+        Value::from_f64(format, -0.0).bits(),
+        Value::from_f64(format, f64::INFINITY).bits(),
+        Value::from_f64(format, f64::NEG_INFINITY).bits(),
+        Value::from_f64(format, f64::NAN).bits(),
+        Value::from_f64(format, 1e-42).bits(), // subnormal-ish for narrow formats
+        Value::from_f64(format, -7.5).bits(),
+    ];
+    while plane.len() < n {
+        plane.push(Value::from_f64(format, rng.range_f64(1e-4, 1e4)).bits());
+    }
+    plane
+}
+
+fn single_backend_bits(
+    registry: ExecutorRegistry,
+    op: OpKind,
+    format: FormatKind,
+    a: &[u64],
+    b: &[u64],
+) -> Vec<u64> {
+    let svc = FpuService::start_routed(config(), registry).unwrap();
+    let resp = svc.handle().submit_batch(op, format, a, b).unwrap().wait().unwrap();
+    svc.shutdown();
+    resp.bits
+}
+
+#[test]
+fn routed_bit_identity_regardless_of_serving_backend() {
+    // the satellite acceptance: submit_batch answers bit-identically no
+    // matter which registered backend served it — limb-sliced native,
+    // u128 baseline (divide) and scalar reference, across all four
+    // formats and all three ops
+    for format in FormatKind::ALL {
+        let a = operand_plane(format, 0xD15 ^ format.index() as u64, 96);
+        let b = operand_plane(format, 0x7AB ^ format.index() as u64, 96);
+        for op in OpKind::ALL {
+            let divisor: &[u64] = if op == OpKind::Divide { &b } else { &[] };
+            let native = single_backend_bits(
+                ExecutorRegistry::new()
+                    .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _)),
+                op,
+                format,
+                &a,
+                divisor,
+            );
+            let scalar = single_backend_bits(
+                ExecutorRegistry::new()
+                    .register(|| Ok(Box::new(ScalarReferenceExecutor::with_defaults()) as _)),
+                op,
+                format,
+                &a,
+                divisor,
+            );
+            assert_eq!(native, scalar, "native vs scalar: {op:?} {format}");
+            if op == OpKind::Divide {
+                let baseline = single_backend_bits(
+                    ExecutorRegistry::new()
+                        .register(|| Ok(Box::new(U128BaselineExecutor::with_defaults()) as _)),
+                    op,
+                    format,
+                    &a,
+                    divisor,
+                );
+                assert_eq!(native, baseline, "native vs u128 baseline: {format}");
+            }
+            // and a mixed registry (latency policy, so any backend may
+            // serve any batch) answers the same bits
+            let mixed = single_backend_bits(
+                ExecutorRegistry::new()
+                    .with_policy(RoutePolicy::Latency)
+                    .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _))
+                    .register(|| Ok(Box::new(U128BaselineExecutor::with_defaults()) as _))
+                    .register(|| Ok(Box::new(ScalarReferenceExecutor::with_defaults()) as _)),
+                op,
+                format,
+                &a,
+                divisor,
+            );
+            assert_eq!(native, mixed, "native vs mixed registry: {op:?} {format}");
+        }
+    }
+}
+
+#[test]
+fn latency_policy_converges_on_the_faster_backend() {
+    // scalar-reference vs native on big divide batches: once both have
+    // signal, the latency policy should hand the slot to the batch
+    // kernels (exploration still visits the scalar path occasionally)
+    let registry = ExecutorRegistry::new()
+        .with_policy(RoutePolicy::Latency)
+        .register(|| Ok(Box::new(ScalarReferenceExecutor::with_defaults()) as _))
+        .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _));
+    let mut cfg = config();
+    cfg.batcher = BatcherConfig::new(1024, Duration::from_micros(200));
+    let svc = FpuService::start_routed(cfg, registry).unwrap();
+    let h = svc.handle();
+    let a: Vec<u64> = (1..=1024u32).map(|i| ((3 * i) as f32).to_bits() as u64).collect();
+    let b: Vec<u64> = (1..=1024u32).map(|_| 3.0f32.to_bits() as u64).collect();
+    for _ in 0..40 {
+        let resp = h.submit_batch(OpKind::Divide, FormatKind::F32, &a, &b).unwrap().wait().unwrap();
+        assert_eq!(resp.len(), 1024);
+    }
+    let report = svc.dispatch_report();
+    let (scalar, native) = (report[0].1, report[1].1);
+    assert!(native.ok_batches > 0, "native must get signal");
+    assert!(scalar.ok_batches > 0, "scalar serves at least the exploration batches");
+    assert!(
+        native.ok_batches > scalar.ok_batches,
+        "latency policy should prefer the faster backend: native {} vs scalar {}",
+        native.ok_batches,
+        scalar.ok_batches
+    );
+    assert_eq!(svc.metrics().snapshot().total_errors(), 0);
+    svc.shutdown();
+}
