@@ -194,6 +194,7 @@ fn service_config(max_batch: usize, wait_us: u64, workers: usize) -> ServiceConf
         queue_depth: 65_536,
         workers,
         poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
     }
 }
 

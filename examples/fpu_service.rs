@@ -98,6 +98,7 @@ fn main() -> anyhow::Result<()> {
         queue_depth: 65_536,
         workers: 2,
         poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
     };
 
     let (svc, backend) = start_backend(config, &artifacts, format, backends, policy)?;

@@ -1,0 +1,454 @@
+//! [`Journal`]: the append-only binary request journal behind the
+//! durable submission API
+//! ([`submit_batch_durable`](super::service::FpuService::submit_batch_durable)).
+//!
+//! A journal file is a fixed 8-byte header (`GSJL` magic + version)
+//! followed by length-prefixed records, each CRC-guarded:
+//!
+//! ```text
+//! header  := b"GSJL" | version: u32 LE
+//! record  := len: u32 LE | crc32(payload): u32 LE | payload
+//! payload := id: u64 | op: u8 | format: u8 | status: u8 | flags: u8
+//!          | a_lanes: u32 | b_lanes: u32 | r_lanes: u32 | err_len: u32
+//!          | a words (u64 LE) | b words | result words | error (utf8)
+//! ```
+//!
+//! A job's lifecycle is append-only: one `Pending` record at submit,
+//! then one `Done` (with result words) or `Failed` (with the error
+//! text) record when its ticket resolves. On open, records are read
+//! back until the first short, oversized, or CRC-mismatching record —
+//! the *torn tail* a crash mid-append leaves — and the file is
+//! truncated there, so the journal is always well-formed for the next
+//! append. Replay coalesces by id (last status wins): ids whose latest
+//! record is still `Pending` are re-submitted through the normal
+//! request path by `FpuService::start`, exactly once.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::FormatKind;
+
+use super::request::OpKind;
+
+const MAGIC: [u8; 4] = *b"GSJL";
+const VERSION: u32 = 1;
+const HEADER_LEN: u64 = 8;
+/// Fixed-size payload prefix before the variable-length planes.
+const PREFIX_LEN: usize = 8 + 1 + 1 + 1 + 1 + 4 + 4 + 4 + 4;
+/// Refuse to trust a length prefix beyond this (a torn length field
+/// could otherwise ask for gigabytes).
+const MAX_RECORD: u32 = 256 << 20;
+
+/// A journalled job's lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Submitted, not yet resolved — replayed on restart.
+    Pending,
+    /// Resolved with result words.
+    Done,
+    /// Resolved with a service error.
+    Failed,
+}
+
+impl JobStatus {
+    fn to_byte(self) -> u8 {
+        match self {
+            JobStatus::Pending => 0,
+            JobStatus::Done => 1,
+            JobStatus::Failed => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<Self> {
+        match b {
+            0 => Ok(JobStatus::Pending),
+            1 => Ok(JobStatus::Done),
+            2 => Ok(JobStatus::Failed),
+            other => bail!("bad journal status byte {other}"),
+        }
+    }
+}
+
+/// One journal record: a job id plus everything needed to re-submit it
+/// (operands) or report it (result / error).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalRecord {
+    /// Stable job id (assigned at first submit, preserved by replay).
+    pub id: u64,
+    /// The operation.
+    pub op: OpKind,
+    /// The operand format.
+    pub format: FormatKind,
+    /// Lifecycle state this record asserts.
+    pub status: JobStatus,
+    /// Operand plane A, raw format words.
+    pub a: Vec<u64>,
+    /// Operand plane B (empty for unary ops).
+    pub b: Vec<u64>,
+    /// Result words (`Done` records only).
+    pub result: Vec<u64>,
+    /// Error text (`Failed` records only).
+    pub error: String,
+}
+
+impl JournalRecord {
+    /// A fresh `Pending` record for a submission.
+    pub fn pending(id: u64, op: OpKind, format: FormatKind, a: Vec<u64>, b: Vec<u64>) -> Self {
+        Self { id, op, format, status: JobStatus::Pending, a, b, result: Vec::new(), error: String::new() }
+    }
+}
+
+fn op_to_byte(op: OpKind) -> u8 {
+    match op {
+        OpKind::Divide => 0,
+        OpKind::Sqrt => 1,
+        OpKind::Rsqrt => 2,
+    }
+}
+
+fn op_from_byte(b: u8) -> Result<OpKind> {
+    match b {
+        0 => Ok(OpKind::Divide),
+        1 => Ok(OpKind::Sqrt),
+        2 => Ok(OpKind::Rsqrt),
+        other => bail!("bad journal op byte {other}"),
+    }
+}
+
+fn format_to_byte(format: FormatKind) -> u8 {
+    match format {
+        FormatKind::F16 => 0,
+        FormatKind::BF16 => 1,
+        FormatKind::F32 => 2,
+        FormatKind::F64 => 3,
+    }
+}
+
+fn format_from_byte(b: u8) -> Result<FormatKind> {
+    match b {
+        0 => Ok(FormatKind::F16),
+        1 => Ok(FormatKind::BF16),
+        2 => Ok(FormatKind::F32),
+        3 => Ok(FormatKind::F64),
+        other => bail!("bad journal format byte {other}"),
+    }
+}
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected), table-driven. Hand
+/// rolled because the environment ships no crc crate; pinned by a
+/// known-answer test below.
+fn crc32(data: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            table[i] = c;
+            i += 1;
+        }
+        table
+    };
+    let mut crc = 0xFFFF_FFFFu32;
+    for &byte in data {
+        crc = TABLE[((crc ^ byte as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+fn encode_payload(rec: &JournalRecord) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        PREFIX_LEN + 8 * (rec.a.len() + rec.b.len() + rec.result.len()) + rec.error.len(),
+    );
+    out.extend_from_slice(&rec.id.to_le_bytes());
+    out.push(op_to_byte(rec.op));
+    out.push(format_to_byte(rec.format));
+    out.push(rec.status.to_byte());
+    out.push(0); // flags, reserved
+    out.extend_from_slice(&(rec.a.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(rec.b.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(rec.result.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(rec.error.len() as u32).to_le_bytes());
+    for &w in &rec.a {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for &w in &rec.b {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for &w in &rec.result {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out.extend_from_slice(rec.error.as_bytes());
+    out
+}
+
+fn decode_payload(payload: &[u8]) -> Result<JournalRecord> {
+    if payload.len() < PREFIX_LEN {
+        bail!("journal payload shorter than prefix");
+    }
+    let id = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    let op = op_from_byte(payload[8])?;
+    let format = format_from_byte(payload[9])?;
+    let status = JobStatus::from_byte(payload[10])?;
+    let word32 = |off: usize| u32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+    let (a_lanes, b_lanes, r_lanes, err_len) =
+        (word32(12) as usize, word32(16) as usize, word32(20) as usize, word32(24) as usize);
+    let expect = PREFIX_LEN + 8 * (a_lanes + b_lanes + r_lanes) + err_len;
+    if payload.len() != expect {
+        bail!("journal payload length {} != declared {}", payload.len(), expect);
+    }
+    let mut off = PREFIX_LEN;
+    let mut words = |n: usize, off: &mut usize| -> Vec<u64> {
+        let v = (0..n)
+            .map(|i| u64::from_le_bytes(payload[*off + 8 * i..*off + 8 * i + 8].try_into().unwrap()))
+            .collect();
+        *off += 8 * n;
+        v
+    };
+    let a = words(a_lanes, &mut off);
+    let b = words(b_lanes, &mut off);
+    let result = words(r_lanes, &mut off);
+    let error = String::from_utf8(payload[off..].to_vec())
+        .context("journal error text is not utf8")?;
+    Ok(JournalRecord { id, op, format, status, a, b, result, error })
+}
+
+/// An open journal file positioned for appends. Construction via
+/// [`Journal::open`] returns the replayable records alongside.
+#[derive(Debug)]
+pub struct Journal {
+    file: File,
+}
+
+impl Journal {
+    /// Open (or create) a journal at `path`, returning the journal
+    /// positioned for appending plus every intact record in file
+    /// order. A torn tail — the partial record a crash mid-append
+    /// leaves — is detected by its length/CRC and truncated away; the
+    /// records before it are unaffected.
+    pub fn open(path: &Path) -> Result<(Journal, Vec<JournalRecord>)> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        let end = file.seek(SeekFrom::End(0))?;
+        if end == 0 {
+            file.write_all(&MAGIC)?;
+            file.write_all(&VERSION.to_le_bytes())?;
+            file.flush()?;
+            return Ok((Journal { file }, Vec::new()));
+        }
+        file.seek(SeekFrom::Start(0))?;
+        let mut bytes = Vec::with_capacity(end as usize);
+        file.read_to_end(&mut bytes)?;
+        if bytes.len() < HEADER_LEN as usize || bytes[..4] != MAGIC {
+            bail!("{} is not a journal (bad magic)", path.display());
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("journal version {version} unsupported (expected {VERSION})");
+        }
+        let mut records = Vec::new();
+        let mut pos = HEADER_LEN as usize;
+        let good_end = loop {
+            if pos == bytes.len() {
+                break pos; // clean end
+            }
+            if pos + 8 > bytes.len() {
+                break pos; // torn length/crc prefix
+            }
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+            let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+            if len > MAX_RECORD || pos + 8 + len as usize > bytes.len() {
+                break pos; // torn payload
+            }
+            let payload = &bytes[pos + 8..pos + 8 + len as usize];
+            if crc32(payload) != crc {
+                break pos; // corrupted record: stop trusting the tail
+            }
+            match decode_payload(payload) {
+                Ok(rec) => records.push(rec),
+                Err(_) => break pos,
+            }
+            pos += 8 + len as usize;
+        };
+        if good_end < bytes.len() {
+            file.set_len(good_end as u64)?;
+        }
+        file.seek(SeekFrom::Start(good_end as u64))?;
+        Ok((Journal { file }, records))
+    }
+
+    /// Append one record (length + CRC + payload, flushed). The write
+    /// is a single `write_all`, so a crash leaves at most one torn
+    /// tail record for the next open to truncate.
+    pub fn append(&mut self, rec: &JournalRecord) -> Result<()> {
+        let payload = encode_payload(rec);
+        if payload.len() as u64 > MAX_RECORD as u64 {
+            bail!("journal record too large ({} bytes)", payload.len());
+        }
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file.write_all(&frame)?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Coalesce raw records by job id — the **last** record of an id wins
+/// (a `Done`/`Failed` record supersedes the job's `Pending` record).
+/// Returns the coalesced records ordered by id, so replay is
+/// deterministic regardless of append interleaving.
+pub fn coalesce(records: Vec<JournalRecord>) -> Vec<JournalRecord> {
+    let mut by_id: std::collections::BTreeMap<u64, JournalRecord> =
+        std::collections::BTreeMap::new();
+    for rec in records {
+        by_id.insert(rec.id, rec);
+    }
+    by_id.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "goldschmidt-journal-{}-{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&dir);
+        dir
+    }
+
+    fn sample(id: u64, status: JobStatus) -> JournalRecord {
+        JournalRecord {
+            id,
+            op: OpKind::Divide,
+            format: FormatKind::F32,
+            status,
+            a: vec![0x4080_0000, 0x40A0_0000],
+            b: vec![0x4000_0000, 0x4000_0000],
+            result: if status == JobStatus::Done { vec![0x4000_0000, 0x4020_0000] } else { vec![] },
+            error: if status == JobStatus::Failed { "kaput".into() } else { String::new() },
+        }
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // the IEEE 802.3 check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn round_trips_records() {
+        let path = tmp("roundtrip");
+        {
+            let (mut j, recs) = Journal::open(&path).unwrap();
+            assert!(recs.is_empty());
+            j.append(&sample(1, JobStatus::Pending)).unwrap();
+            j.append(&sample(2, JobStatus::Pending)).unwrap();
+            j.append(&sample(1, JobStatus::Done)).unwrap();
+            j.append(&sample(3, JobStatus::Failed)).unwrap();
+        }
+        let (_, recs) = Journal::open(&path).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert_eq!(recs[0], sample(1, JobStatus::Pending));
+        assert_eq!(recs[2], sample(1, JobStatus::Done));
+        assert_eq!(recs[3].error, "kaput");
+        // ops and formats survive the byte round trip
+        for op in OpKind::ALL {
+            assert_eq!(op_from_byte(op_to_byte(op)).unwrap(), op);
+        }
+        for format in FormatKind::ALL {
+            assert_eq!(format_from_byte(format_to_byte(format)).unwrap(), format);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn coalesce_keeps_last_record_per_id() {
+        let recs = vec![
+            sample(2, JobStatus::Pending),
+            sample(1, JobStatus::Pending),
+            sample(2, JobStatus::Done),
+            sample(3, JobStatus::Pending),
+        ];
+        let merged = coalesce(recs);
+        assert_eq!(merged.len(), 3);
+        assert_eq!(
+            merged.iter().map(|r| (r.id, r.status)).collect::<Vec<_>>(),
+            vec![
+                (1, JobStatus::Pending),
+                (2, JobStatus::Done),
+                (3, JobStatus::Pending)
+            ],
+            "ordered by id, last status wins"
+        );
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_appendable() {
+        let path = tmp("torn");
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.append(&sample(1, JobStatus::Pending)).unwrap();
+            j.append(&sample(2, JobStatus::Pending)).unwrap();
+        }
+        // simulate a crash mid-append: a dangling half-record
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[0xAB; 11]).unwrap();
+        }
+        let torn_len = std::fs::metadata(&path).unwrap().len();
+        let (mut j, recs) = Journal::open(&path).unwrap();
+        assert_eq!(recs.len(), 2, "intact records survive the torn tail");
+        assert!(std::fs::metadata(&path).unwrap().len() < torn_len, "tail truncated");
+        // appends continue where the good records end
+        j.append(&sample(3, JobStatus::Pending)).unwrap();
+        drop(j);
+        let (_, recs) = Journal::open(&path).unwrap();
+        assert_eq!(recs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupted_record_stops_replay_at_the_corruption() {
+        let path = tmp("corrupt");
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.append(&sample(1, JobStatus::Pending)).unwrap();
+            let offset = j.file.stream_position().unwrap();
+            j.append(&sample(2, JobStatus::Pending)).unwrap();
+            j.append(&sample(3, JobStatus::Pending)).unwrap();
+            // flip one payload byte of record 2: its CRC no longer
+            // matches, so it and everything after is distrusted
+            j.file.seek(SeekFrom::Start(offset + 8 + 3)).unwrap();
+            j.file.write_all(&[0xFF]).unwrap();
+        }
+        let (_, recs) = Journal::open(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].id, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn non_journal_file_is_rejected() {
+        let path = tmp("notjournal");
+        std::fs::write(&path, b"#!/bin/sh\necho hello\n").unwrap();
+        assert!(Journal::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -10,7 +10,7 @@
 //! the rare total-worker-loss path (delivered as `Shutdown`) — and
 //! `shed` counts lanes dropped by deadline expiry before execution.
 
-use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::{LogHistogram, RateWindow};
@@ -66,6 +66,12 @@ pub struct Metrics {
     /// counts — plus the submit-channel backlog the router has not
     /// seen yet, which is exactly what makes burst tracking prompt.
     depth: [AtomicI64; SLOTS],
+    /// Per-slot serving-pool worker count (default 1), set once at
+    /// service start from the routed pool sizes. The queue-delay model
+    /// divides by it: `w` workers drain a slot's queue `w` times
+    /// faster than the per-batch service rate alone suggests, and
+    /// without the divisor a multi-worker pool sheds far too early.
+    workers: [AtomicU32; SLOTS],
 }
 
 impl Default for Metrics {
@@ -84,7 +90,15 @@ impl Metrics {
         Self {
             inner: Mutex::new(std::array::from_fn(|_| SliceMetrics::default())),
             depth: std::array::from_fn(|_| AtomicI64::new(0)),
+            workers: std::array::from_fn(|_| AtomicU32::new(1)),
         }
+    }
+
+    /// Set the worker-pool size serving one (op, format) slot (the
+    /// preferred backend's pool; clamped to at least 1). Called once at
+    /// service start — the queue-delay model divides by it.
+    pub fn set_slot_workers(&self, op: OpKind, format: FormatKind, workers: usize) {
+        self.workers[idx(op, format)].store(workers.max(1) as u32, Ordering::Relaxed);
     }
 
     /// Record one executed batch. `latencies_ns` carries one entry per
@@ -144,13 +158,20 @@ impl Metrics {
     }
 
     /// Record lanes leaving the queue (drained into a batch or shed).
+    /// Every dequeue must be covered by a prior enqueue — lanes are
+    /// enqueued *before* they can reach the router, so an underflowing
+    /// gauge means double-counted dequeues, not a benign interleaving.
     pub fn record_dequeued(&self, op: OpKind, format: FormatKind, lanes: u64) {
-        self.depth[idx(op, format)].fetch_sub(lanes as i64, Ordering::Relaxed);
+        let prev = self.depth[idx(op, format)].fetch_sub(lanes as i64, Ordering::Relaxed);
+        debug_assert!(
+            prev >= lanes as i64,
+            "queued-lane gauge underflow: dequeued {lanes} lanes at depth {prev}"
+        );
     }
 
     /// Currently queued lanes for one (op, format) slot (submit queue +
-    /// router backlog; clamped at zero against transient enqueue/
-    /// dequeue interleavings).
+    /// router backlog; clamped at zero in release builds as a
+    /// belt-and-braces guard — see [`Self::record_dequeued`]).
     pub fn queued_lanes(&self, op: OpKind, format: FormatKind) -> u64 {
         self.depth[idx(op, format)].load(Ordering::Relaxed).max(0) as u64
     }
@@ -159,22 +180,26 @@ impl Metrics {
     /// a **queue-depth × service-rate model** — the lanes currently
     /// queued ahead (the gauge fed by submit/batch-formation, mirroring
     /// the router's lane counts) times the windowed executor cost per
-    /// lane over the slot's last `RECENT_WINDOW` batches. Bursts move
-    /// the estimate the instant they are *queued*, not a latency-window
-    /// later; and an idle slot estimates ~zero delay no matter how slow
-    /// its history was, so recovery is immediate. `None` until a
-    /// minimum number of batches (`ADMISSION_MIN_BATCHES`, currently 4)
-    /// have fed the rate window, so admission control never rejects on
-    /// a cold slot. Reads one slice under the lock — cheap enough for
-    /// the deadline-submit path (deadline-free submits never call it).
+    /// lane over the slot's last `RECENT_WINDOW` batches, divided by
+    /// the serving pool's worker count (`w` workers drain the queue in
+    /// parallel, so a lane waits `depth × rate / w`, not
+    /// `depth × rate`). Bursts move the estimate the instant they are
+    /// *queued*, not a latency-window later; and an idle slot estimates
+    /// ~zero delay no matter how slow its history was, so recovery is
+    /// immediate. `None` until a minimum number of batches
+    /// (`ADMISSION_MIN_BATCHES`, currently 4) have fed the rate window,
+    /// so admission control never rejects on a cold slot. Reads one
+    /// slice under the lock — cheap enough for the deadline-submit path
+    /// (deadline-free submits never call it).
     pub fn queue_delay_estimate_ns(&self, op: OpKind, format: FormatKind) -> Option<u64> {
         let depth = self.queued_lanes(op, format);
+        let workers = self.workers[idx(op, format)].load(Ordering::Relaxed).max(1);
         let m = self.inner.lock().expect("metrics poisoned");
         let s = &m[idx(op, format)];
         if s.rate.len() < ADMISSION_MIN_BATCHES {
             return None;
         }
-        Some((depth as f64 * s.rate.ns_per_lane()?) as u64)
+        Some((depth as f64 * s.rate.ns_per_lane()? / workers as f64) as u64)
     }
 
     /// Admission probe gate, called for each submission the estimate
@@ -428,13 +453,64 @@ mod tests {
         // slots are independent
         assert_eq!(m.queued_lanes(OpKind::Divide, FormatKind::F16), 0);
         assert_eq!(m.queued_lanes(OpKind::Sqrt, F32), 0);
-        m.record_dequeued(OpKind::Divide, F32, 128);
+        // partial drains are fine; full drains return to zero
+        m.record_dequeued(OpKind::Divide, F32, 100);
+        assert_eq!(m.queued_lanes(OpKind::Divide, F32), 28);
+        m.record_dequeued(OpKind::Divide, F32, 28);
         assert_eq!(m.queued_lanes(OpKind::Divide, F32), 0);
-        // transient negative interleavings clamp to zero, never wrap
-        m.record_dequeued(OpKind::Divide, F32, 5);
-        assert_eq!(m.queued_lanes(OpKind::Divide, F32), 0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "queued-lane gauge underflow")]
+    fn double_dequeue_is_a_debug_panic() {
+        let m = Metrics::new();
         m.record_enqueued(OpKind::Divide, F32, 5);
-        assert_eq!(m.queued_lanes(OpKind::Divide, F32), 0, "gauge stays conserved");
+        m.record_dequeued(OpKind::Divide, F32, 5);
+        // the same lanes dequeued again: a bookkeeping bug, not a
+        // benign interleaving — debug builds must catch it
+        m.record_dequeued(OpKind::Divide, F32, 5);
+    }
+
+    #[test]
+    fn queue_depth_gauge_property_random_legal_interleavings() {
+        use crate::util::rng::Xoshiro256;
+        // any legal sequence (never dequeue more than is queued) keeps
+        // the gauge exactly equal to the model and never negative
+        let mut rng = Xoshiro256::new(0x5eed_cafe);
+        let m = Metrics::new();
+        let mut model = 0u64;
+        for _ in 0..10_000 {
+            if model == 0 || rng.chance(0.55) {
+                let lanes = rng.next_below(500) + 1;
+                m.record_enqueued(OpKind::Sqrt, F32, lanes);
+                model += lanes;
+            } else {
+                let lanes = rng.next_below(model) + 1;
+                m.record_dequeued(OpKind::Sqrt, F32, lanes);
+                model -= lanes;
+            }
+            assert_eq!(m.queued_lanes(OpKind::Sqrt, F32), model);
+        }
+    }
+
+    #[test]
+    fn queue_delay_estimate_divides_by_pool_workers() {
+        let m = Metrics::new();
+        for _ in 0..ADMISSION_MIN_BATCHES {
+            m.record_batch(OpKind::Divide, F32, &[(5_000, 64)], 64_000, 64);
+        }
+        m.record_enqueued(OpKind::Divide, F32, 200);
+        // default pool size 1: 200 lanes x 1000 ns/lane
+        assert_eq!(m.queue_delay_estimate_ns(OpKind::Divide, F32), Some(200_000));
+        // four workers drain in parallel: a lane waits a quarter of that
+        m.set_slot_workers(OpKind::Divide, F32, 4);
+        assert_eq!(m.queue_delay_estimate_ns(OpKind::Divide, F32), Some(50_000));
+        // slots are independent; zero clamps to one
+        m.set_slot_workers(OpKind::Sqrt, F32, 8);
+        m.set_slot_workers(OpKind::Divide, FormatKind::F16, 0);
+        assert_eq!(m.queue_delay_estimate_ns(OpKind::Divide, F32), Some(50_000));
+        m.record_dequeued(OpKind::Divide, F32, 200);
     }
 
     #[test]

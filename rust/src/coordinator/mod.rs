@@ -112,10 +112,20 @@
 //! * [`metrics`] — always-on counters + latency histograms, per
 //!   (op, format) with per-op aggregates; errors and deadline sheds
 //!   counted separately.
+//! * [`journal`] — the append-only CRC-guarded request journal behind
+//!   `submit_batch_durable` / `poll_job`: a `Pending` record per
+//!   durable submission, a `Done`/`Failed` record per outcome, and
+//!   torn-tail truncation on open so a crash mid-append never poisons
+//!   the file. `FpuService::start*` replays still-`Pending` records
+//!   through the normal submit path, exactly once.
 //! * [`service`] — the threaded service: fail-fast startup, lifecycle,
-//!   backpressure, dead-worker skipping, worker pool.
+//!   backpressure, supervised worker pools (a panicking worker's batch
+//!   fails over; the supervisor respawns the dead worker with capped
+//!   backoff and marks the pool degraded when respawn keeps failing),
+//!   deterministic fault-injection hooks ([`crate::fault`]).
 
 pub mod batcher;
+pub mod journal;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -123,8 +133,9 @@ pub mod service;
 pub mod ticket;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher, PlanePool, PolicyOverride};
+pub use journal::{coalesce, JobStatus, Journal, JournalRecord};
 pub use metrics::{Metrics, MetricsSnapshot, OpFormatSnapshot, OpSnapshot};
 pub use request::{FormatKind, OpKind, Response, ServiceError, Value, WorkItem};
 pub use router::Router;
-pub use service::{FpuService, ServiceConfig, ServiceHandle};
+pub use service::{FpuService, JobPoll, ServiceConfig, ServiceHandle};
 pub use ticket::{BatchResponse, BatchTicket, Ticket};

@@ -1,7 +1,7 @@
 //! The threaded FPU service: lifecycle, backpressure, dispatch loop and
-//! worker pool. This is the event loop the paper's "divider unit as a
-//! shared resource" maps onto: many clients, one (or a few) expensive
-//! execution engines, a batching layer in between.
+//! supervised worker pools. This is the event loop the paper's "divider
+//! unit as a shared resource" maps onto: many clients, one (or a few)
+//! expensive execution engines, a batching layer in between.
 //!
 //! Threading model (std threads + channels; no async runtime exists in
 //! the offline environment, and none is needed):
@@ -18,9 +18,16 @@
 //! * each registered backend owns a **worker pool** of executor
 //!   threads, each owning one [`Executor`] (one "divider unit" each),
 //!   executing its backend's batches round-robin into a reused output
-//!   plane and completing each item's ticket in place. Outcomes are
-//!   recorded on the backend's [`HealthBoard`] slot, which is what the
-//!   dispatcher routes by.
+//!   plane and completing each item's ticket in place. Executor calls
+//!   run under `catch_unwind`: a worker that panics fails its batch
+//!   over like any executor error (the riders never see the panic) and
+//!   then exits; outcomes are recorded on the backend's
+//!   [`HealthBoard`] slot, which is what the dispatcher routes by;
+//! * one **supervisor** thread watches for abnormal worker exits
+//!   (panic, injected death) and respawns replacements with capped
+//!   exponential backoff; a pool whose respawns keep failing is marked
+//!   *degraded* on the health board and routed around until a respawn
+//!   sticks.
 //!
 //! Startup is fail-fast: every registered executor factory is probed
 //! once on the caller thread (capability negotiation, merged into the
@@ -28,30 +35,52 @@
 //! factory result back before [`FpuService::start_routed`] returns — a
 //! worker that cannot build its executor fails start instead of
 //! silently eating a share of the traffic.
+//!
+//! Two opt-in planes extend the lifecycle story:
+//!
+//! * **Durability** — with [`ServiceConfig::journal`] set, the service
+//!   opens an append-only CRC-guarded [`Journal`] and exposes
+//!   [`FpuService::submit_batch_durable`] / [`FpuService::poll_job`]:
+//!   each durable submission is journalled `Pending` before it is
+//!   queued and `Done`/`Failed` when its ticket resolves, and a
+//!   restart replays still-`Pending` records through the normal submit
+//!   path exactly once ([`FpuService::replayed_jobs`]).
+//! * **Chaos** — with [`ServiceConfig::fault`] armed, a deterministic
+//!   [`FaultPlan`] (see [`crate::fault`]) injects executor errors,
+//!   panics, latency, bit flips, worker deaths and slow drains at
+//!   seeded occurrence schedules, exercising every recovery path above
+//!   reproducibly. An unarmed service pays one `Option` check.
 
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::any::Any;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
 use crate::dispatch::{
-    BackendHealthSnapshot, DispatchPlane, ExecutorRegistry, HealthBoard, RoutingTable,
+    BackendHealthSnapshot, DispatchPlane, ExecutorFactory, ExecutorRegistry, HealthBoard,
+    RoutingTable,
 };
+use crate::fault::{FaultPlan, FaultSite};
 use crate::formats::{PlaneRefMut, PlaneWidth};
 use crate::runtime::caps::BackendCaps;
 use crate::runtime::executor::Executor;
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher, PlanePool};
+use super::journal::{coalesce, JobStatus, Journal, JournalRecord};
 use super::metrics::Metrics;
 use super::request::{FormatKind, OpKind, ServiceError, Value, WorkItem};
 use super::router::Router;
 use super::ticket::{BatchTicket, Ticket};
 
 /// Service configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Batching policy (global knobs + per-(op, format) overrides).
     pub batcher: BatcherConfig,
@@ -63,6 +92,19 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// Dispatcher poll granularity when idle.
     pub poll: Duration,
+    /// Armed fault-injection plan (`None` = no chaos; see
+    /// [`crate::fault`]). Wraps every registered executor and feeds the
+    /// worker-thread hook points.
+    pub fault: Option<Arc<FaultPlan>>,
+    /// Path of the durable request journal (`None` = the
+    /// `submit_batch_durable` family is rejected). Opened (and its torn
+    /// tail truncated) at start; still-`Pending` records are replayed.
+    pub journal: Option<PathBuf>,
+    /// How long the shutdown retire loop keeps servicing the retry
+    /// channel *without progress* while batches are in flight. Progress
+    /// (a serviced retry) resets the clock, so a long candidate chain
+    /// gets this budget per hop, not one shared bound.
+    pub retire_budget: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -72,6 +114,9 @@ impl Default for ServiceConfig {
             queue_depth: 16_384,
             workers: 1,
             poll: Duration::from_micros(50),
+            fault: None,
+            journal: None,
+            retire_budget: SHUTDOWN_RETIRE_BUDGET,
         }
     }
 }
@@ -106,7 +151,8 @@ impl ServiceHandle {
     /// [`ServiceError::Deadline`] — the work never enters the queue
     /// only to be shed at batch formation. The estimate is a
     /// queue-depth × service-rate model (lanes queued ahead times the
-    /// slot's windowed executor cost per lane, see
+    /// slot's windowed executor cost per lane, divided by the serving
+    /// pool's worker parallelism, see
     /// [`Metrics::queue_delay_estimate_ns`]): a burst moves it the
     /// moment the burst is queued, and a drained queue clears it
     /// instantly — no latency window to age out. Every N-th
@@ -150,10 +196,15 @@ impl ServiceHandle {
         // a failed send drops the item, which fails its ticket — but the
         // caller gets the error directly and never sees that ticket
         let (op, format, lanes) = (item.op, item.format(), item.lanes() as u64);
-        self.tx.send(DispatchMsg::Req(item)).map_err(|_| ServiceError::Shutdown)?;
-        // feed the admission model's queue-depth gauge the moment the
-        // work is queued (batch formation discounts it)
+        // feed the admission model's queue-depth gauge BEFORE the send:
+        // the dispatcher may dequeue (and discount) the item the moment
+        // it lands, and the gauge must never dip below zero
         self.metrics.record_enqueued(op, format, lanes);
+        if self.tx.send(DispatchMsg::Req(item)).is_err() {
+            // undo is safe: our own +lanes has not been consumed
+            self.metrics.record_dequeued(op, format, lanes);
+            return Err(ServiceError::Shutdown);
+        }
         Ok(())
     }
 
@@ -231,13 +282,19 @@ impl ServiceHandle {
     ) -> Result<Ticket, ServiceError> {
         let (item, ticket) = self.make_single(op, a, b, None)?;
         let format = item.format();
+        // gauge before send, as in `send` (the undo on either failure
+        // is safe for the same reason)
+        self.metrics.record_enqueued(op, format, 1);
         match self.tx.try_send(DispatchMsg::Req(item)) {
-            Ok(()) => {
-                self.metrics.record_enqueued(op, format, 1);
-                Ok(ticket)
+            Ok(()) => Ok(ticket),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_dequeued(op, format, 1);
+                Err(ServiceError::Overloaded)
             }
-            Err(TrySendError::Full(_)) => Err(ServiceError::Overloaded),
-            Err(TrySendError::Disconnected(_)) => Err(ServiceError::Shutdown),
+            Err(TrySendError::Disconnected(_)) => {
+                self.metrics.record_dequeued(op, format, 1);
+                Err(ServiceError::Shutdown)
+            }
         }
     }
 
@@ -384,6 +441,58 @@ impl ServiceHandle {
     }
 }
 
+/// A durable job's current outcome, as [`FpuService::poll_job`] reports
+/// it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobPoll {
+    /// Journalled and queued (or replaying); not yet resolved.
+    Pending,
+    /// Completed: the result plane's raw words, lane order preserved.
+    Done(Vec<u64>),
+    /// Failed with a typed error (also journalled).
+    Failed(ServiceError),
+}
+
+/// Shared state of the durable plane: the journal writer, the in-memory
+/// job table the poll API reads, and the id allocator (seeded past the
+/// highest replayed id).
+struct DurableState {
+    journal: Mutex<Journal>,
+    jobs: Mutex<HashMap<u64, JobPoll>>,
+    next_job: AtomicU64,
+}
+
+/// What the journal retirer waits on: the job id, the routing key (a
+/// `BatchResponse` does not carry its op), and the ticket.
+type RetireMsg = (u64, OpKind, FormatKind, BatchTicket);
+
+/// The journal retirer: waits each durable ticket to resolution and
+/// appends the terminal `Done`/`Failed` record (operand planes are not
+/// repeated — `coalesce` keeps the last record per id, and a terminal
+/// record needs no replay data).
+fn retirer_loop(rx: Receiver<RetireMsg>, state: Arc<DurableState>) {
+    while let Ok((id, op, format, ticket)) = rx.recv() {
+        let outcome = ticket.wait();
+        let mut rec = JournalRecord::pending(id, op, format, Vec::new(), Vec::new());
+        match outcome {
+            Ok(resp) => {
+                rec.status = JobStatus::Done;
+                rec.result = resp.bits;
+                // journal before the poll table: a job never reads Done
+                // unless its record is on disk
+                let _ = state.journal.lock().unwrap().append(&rec);
+                state.jobs.lock().unwrap().insert(id, JobPoll::Done(rec.result));
+            }
+            Err(err) => {
+                rec.status = JobStatus::Failed;
+                rec.error = format!("{err}");
+                let _ = state.journal.lock().unwrap().append(&rec);
+                state.jobs.lock().unwrap().insert(id, JobPoll::Failed(err));
+            }
+        }
+    }
+}
+
 /// The running service.
 pub struct FpuService {
     handle: ServiceHandle,
@@ -393,45 +502,222 @@ pub struct FpuService {
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     shutdown_tx: SyncSender<DispatchMsg>,
+    supervisor: Option<JoinHandle<()>>,
+    supervisor_stop: Arc<AtomicBool>,
+    durable: Option<Arc<DurableState>>,
+    retirer: Option<JoinHandle<()>>,
+    retirer_tx: Option<mpsc::Sender<RetireMsg>>,
+    replayed: usize,
 }
 
 /// A batch a worker could not execute, handed back to the dispatcher
-/// for re-routing (the failure is already on the backend's breaker).
+/// for re-routing. `error: Some` blames the backend (the failure is
+/// already on its breaker, and the message reaches the riders if every
+/// candidate fails); `None` means the worker died *without* executing
+/// (injected death, or drained from a dead worker's queue) — the
+/// backend is not at fault and may serve the batch again once its pool
+/// respawns.
 struct FailedBatch {
     batch: Batch,
-    error: String,
+    error: Option<String>,
 }
 
-/// One backend's worker pool: the batch channels of its live workers.
+/// One live worker's batch channel, identified so the supervisor can
+/// remove exactly the dead worker's slot.
+struct WorkerSlot {
+    id: u64,
+    tx: SyncSender<Batch>,
+}
+
+/// A pool's slot list, shared between the dispatcher (sender side) and
+/// the supervisor (respawn side).
+struct PoolShared {
+    slots: Mutex<Vec<WorkerSlot>>,
+}
+
+/// One backend's worker pool, as the dispatcher sees it: round-robin
+/// over the live slots.
 struct PoolSender {
-    txs: Vec<SyncSender<Batch>>,
+    shared: Arc<PoolShared>,
     next: usize,
 }
 
 impl PoolSender {
     /// Round-robin one batch into the pool, dropping dead workers'
-    /// channels. `Err` returns the batch when the whole pool is gone.
+    /// slots. `Err` returns the batch when the whole pool is gone.
     fn send(&mut self, mut batch: Batch) -> std::result::Result<(), Batch> {
-        while !self.txs.is_empty() {
-            let i = self.next % self.txs.len();
-            self.next += 1;
-            // round-robin; a full worker queue applies backpressure here
-            match self.txs[i].send(batch) {
+        loop {
+            let (slot_id, tx) = {
+                let slots = self.shared.slots.lock().unwrap();
+                if slots.is_empty() {
+                    return Err(batch);
+                }
+                let i = self.next % slots.len();
+                self.next += 1;
+                (slots[i].id, slots[i].tx.clone())
+            };
+            // send outside the lock: a full worker queue applies
+            // backpressure here, and blocking must not hold up the
+            // supervisor's slot maintenance
+            match tx.send(batch) {
                 Ok(()) => return Ok(()),
                 Err(mpsc::SendError(returned)) => {
                     batch = returned;
-                    self.txs.remove(i); // dead worker: never pick it again
+                    // dead worker: never pick it again
+                    self.shared.slots.lock().unwrap().retain(|s| s.id != slot_id);
                 }
             }
         }
-        Err(batch)
     }
 }
 
+/// Everything a worker thread needs, bundled so the supervisor can
+/// clone it to build replacements. Deliberately does NOT hold the
+/// pool's [`PoolShared`]: a worker holding its own pool's batch senders
+/// would keep its own receiver alive and deadlock shutdown.
+#[derive(Clone)]
+struct WorkerCtx {
+    backend: usize,
+    name: &'static str,
+    factory: ExecutorFactory,
+    metrics: Arc<Metrics>,
+    health: Arc<HealthBoard>,
+    pool: PlanePool,
+    retry_tx: mpsc::Sender<FailedBatch>,
+    outstanding: Arc<AtomicI64>,
+    fault: Option<Arc<FaultPlan>>,
+    exit_tx: mpsc::Sender<ExitNotice>,
+    next_slot_id: Arc<AtomicU64>,
+}
+
+/// An abnormal worker exit (panic or injected death), reported to the
+/// supervisor so it can respawn a replacement.
+struct ExitNotice {
+    backend: usize,
+    slot_id: u64,
+}
+
+/// Worker batch-queue depth (per worker; backpressure onto the
+/// dispatcher beyond it).
+const WORKER_QUEUE: usize = 4;
+
 /// How long the dispatcher keeps servicing the retry channel at
-/// shutdown while batches are still in flight (a failsafe bound — the
-/// normal case drains in microseconds).
+/// shutdown while batches are still in flight without making progress
+/// (a failsafe bound — the normal case drains in microseconds, and
+/// every serviced retry resets the clock).
 const SHUTDOWN_RETIRE_BUDGET: Duration = Duration::from_secs(5);
+
+/// How long a batch send waits for a dead pool to respawn before
+/// walking the retry chain (covers the window where every worker of a
+/// pool died at once but the supervisor is about to replace them).
+const POOL_RESPAWN_WAIT: Duration = Duration::from_millis(100);
+
+/// Consecutive respawn failures before a pool is marked degraded (and
+/// routed around) instead of retried forever.
+const DEGRADE_AFTER_RESPAWN_FAILURES: u32 = 5;
+
+/// Capped exponential respawn backoff: 10ms doubling to a 500ms cap.
+fn backoff_for(streak: u32) -> Duration {
+    Duration::from_millis((10u64 << streak.min(6)).min(500))
+}
+
+/// Build one replacement worker for `ctx`'s backend: spawn the thread,
+/// wait for its factory result, and only publish the slot once the
+/// executor exists — a replacement that cannot build its executor is a
+/// respawn *failure* (fed to the supervisor's backoff), never a live
+/// slot that eats traffic.
+fn respawn_worker(
+    ctx: &WorkerCtx,
+    shared: &Arc<PoolShared>,
+) -> std::result::Result<JoinHandle<()>, String> {
+    let slot_id = ctx.next_slot_id.fetch_add(1, Ordering::Relaxed);
+    let (btx, brx) = mpsc::sync_channel::<Batch>(WORKER_QUEUE);
+    let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+    let ctx2 = ctx.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("fpu-{}-r{slot_id}", ctx.name))
+        .spawn(move || match (ctx2.factory)() {
+            Ok(executor) => {
+                let _ = ready_tx.send(Ok(()));
+                drop(ready_tx);
+                worker_loop(brx, executor, ctx2, slot_id);
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(format!("{e:#}")));
+            }
+        })
+        .map_err(|e| format!("spawn failed: {e}"))?;
+    match ready_rx.recv() {
+        Ok(Ok(())) => {
+            shared.slots.lock().unwrap().push(WorkerSlot { id: slot_id, tx: btx });
+            Ok(handle)
+        }
+        Ok(Err(msg)) => {
+            let _ = handle.join();
+            Err(msg)
+        }
+        Err(_) => {
+            let _ = handle.join();
+            Err("worker exited before reporting executor init".into())
+        }
+    }
+}
+
+/// The pool supervisor: waits for [`ExitNotice`]s, removes the dead
+/// worker's slot, and respawns a replacement with capped exponential
+/// backoff. Respawns that keep failing mark the pool degraded on the
+/// health board (the dispatcher routes around it); a later successful
+/// respawn clears the mark.
+fn supervisor_loop(
+    exit_rx: Receiver<ExitNotice>,
+    ctxs: Vec<WorkerCtx>,
+    shareds: Vec<Arc<PoolShared>>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut respawned: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        let notice = match exit_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(n) => n,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let b = notice.backend;
+        shareds[b].slots.lock().unwrap().retain(|s| s.id != notice.slot_id);
+        let ctx = &ctxs[b];
+        let mut streak = 0u32;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                break;
+            }
+            std::thread::sleep(backoff_for(streak));
+            match respawn_worker(ctx, &shareds[b]) {
+                Ok(handle) => {
+                    ctx.health.record_respawn(b);
+                    ctx.health.set_degraded(b, false);
+                    respawned.push(handle);
+                    break;
+                }
+                Err(_) => {
+                    streak += 1;
+                    if streak >= DEGRADE_AFTER_RESPAWN_FAILURES {
+                        ctx.health.set_degraded(b, true);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    // teardown: unplug every slot (disconnects any respawned workers'
+    // receivers too — the dispatcher's own clear cannot see slots
+    // published after it exited), drop the ctxs' senders, then join
+    for shared in &shareds {
+        shared.slots.lock().unwrap().clear();
+    }
+    drop(ctxs);
+    for h in respawned {
+        let _ = h.join();
+    }
+}
 
 impl FpuService {
     /// Start a single-backend service. `make_executor` is called once
@@ -462,11 +748,24 @@ impl FpuService {
     /// override), its own batch shapes (ladders + plane widths) and its
     /// own health tracking. The dispatcher selects a backend per formed
     /// batch (registry policy: static preference or measured latency),
-    /// routes around open circuit breakers, probes broken backends back
-    /// to life, and re-routes failed batches down the candidate chain
-    /// so riders only ever see an error when every candidate failed.
+    /// routes around open circuit breakers and degraded pools, probes
+    /// broken backends back to life, and re-routes failed batches down
+    /// the candidate chain so riders only ever see an error when every
+    /// candidate failed. A supervisor thread respawns workers that die
+    /// abnormally (panic / injected death).
+    ///
+    /// With [`ServiceConfig::fault`] armed, every executor is wrapped
+    /// in the plan's injector ([`crate::fault::wrap_registry`]) and the
+    /// worker threads consult the worker-level sites. With
+    /// [`ServiceConfig::journal`] set, the journal is opened (torn tail
+    /// truncated), still-`Pending` records are replayed through the
+    /// normal submit path exactly once, and the durable API goes live.
     pub fn start_routed(config: ServiceConfig, registry: ExecutorRegistry) -> Result<Self> {
         assert!(config.workers >= 1, "need at least one worker");
+        let registry = match &config.fault {
+            Some(plan) => crate::fault::wrap_registry(registry, plan.clone()),
+            None => registry,
+        };
         let (entries, policy) = registry.into_parts();
         if entries.is_empty() {
             bail!("dispatch registry has no backends");
@@ -494,45 +793,61 @@ impl FpuService {
         let health = Arc::new(HealthBoard::new(table.backend_count()));
         let outstanding = Arc::new(AtomicI64::new(0));
         let (retry_tx, retry_rx) = mpsc::channel::<FailedBatch>();
+        let (exit_tx, exit_rx) = mpsc::channel::<ExitNotice>();
+        let next_slot_id = Arc::new(AtomicU64::new(0));
+
+        // the admission model divides each slot's queue-delay estimate
+        // by the serving pool's worker parallelism: tell it how many
+        // workers the preferred backend of each (op, format) runs
+        let pool_sizes: Vec<usize> =
+            entries.iter().map(|e| e.workers().unwrap_or(config.workers).max(1)).collect();
+        for &op in &OpKind::ALL {
+            for &format in &FormatKind::ALL {
+                if let Some(&b) = table.candidates(op, format).first() {
+                    metrics.set_slot_workers(op, format, pool_sizes[b]);
+                }
+            }
+        }
 
         // per-backend worker pools: the dispatcher round-robins a
-        // backend's batches across that backend's own channels
+        // backend's batches across that backend's live slots
         let (init_tx, init_rx) = mpsc::channel::<(String, std::result::Result<(), String>)>();
+        let mut shareds: Vec<Arc<PoolShared>> = Vec::with_capacity(entries.len());
+        let mut ctxs: Vec<WorkerCtx> = Vec::with_capacity(entries.len());
         let mut pools = Vec::with_capacity(entries.len());
         let mut workers = Vec::new();
         let mut total_workers = 0usize;
         for (b, entry) in entries.iter().enumerate() {
-            let pool_workers = entry.workers().unwrap_or(config.workers).max(1);
-            let mut txs = Vec::with_capacity(pool_workers);
-            for w in 0..pool_workers {
+            let shared = Arc::new(PoolShared { slots: Mutex::new(Vec::new()) });
+            let ctx = WorkerCtx {
+                backend: b,
+                name: names[b],
+                factory: entry.factory(),
+                metrics: metrics.clone(),
+                health: health.clone(),
+                pool: pool.clone(),
+                retry_tx: retry_tx.clone(),
+                outstanding: outstanding.clone(),
+                fault: config.fault.clone(),
+                exit_tx: exit_tx.clone(),
+                next_slot_id: next_slot_id.clone(),
+            };
+            for w in 0..pool_sizes[b] {
                 total_workers += 1;
-                let (btx, brx) = mpsc::sync_channel::<Batch>(4);
-                txs.push(btx);
-                let metrics = metrics.clone();
-                let pool = pool.clone();
-                let health = health.clone();
-                let retry_tx = retry_tx.clone();
-                let outstanding = outstanding.clone();
-                let factory = entry.factory();
+                let slot_id = next_slot_id.fetch_add(1, Ordering::Relaxed);
+                let (btx, brx) = mpsc::sync_channel::<Batch>(WORKER_QUEUE);
+                shared.slots.lock().unwrap().push(WorkerSlot { id: slot_id, tx: btx });
+                let ctx2 = ctx.clone();
                 let init_tx = init_tx.clone();
                 let wname = format!("fpu-{}-{w}", names[b]);
                 workers.push(
                     std::thread::Builder::new()
                         .name(wname.clone())
-                        .spawn(move || match factory() {
+                        .spawn(move || match (ctx2.factory)() {
                             Ok(executor) => {
                                 let _ = init_tx.send((wname, Ok(())));
                                 drop(init_tx);
-                                worker_loop(
-                                    brx,
-                                    executor,
-                                    b,
-                                    metrics,
-                                    health,
-                                    pool,
-                                    retry_tx,
-                                    outstanding,
-                                );
+                                worker_loop(brx, executor, ctx2, slot_id);
                             }
                             Err(e) => {
                                 let _ = init_tx.send((wname, Err(format!("{e:#}"))));
@@ -541,37 +856,51 @@ impl FpuService {
                         .expect("spawn worker"),
                 );
             }
-            pools.push(PoolSender { txs, next: 0 });
+            pools.push(PoolSender { shared: shared.clone(), next: 0 });
+            shareds.push(shared);
+            ctxs.push(ctx);
         }
         drop(init_tx);
-        drop(retry_tx); // workers hold the only retry senders
+        drop(retry_tx); // workers + supervisor ctxs hold the retry senders
+        drop(exit_tx); // likewise the exit senders
 
         // fail-fast: every worker reports its init before we go live
         for _ in 0..total_workers {
-            match init_rx.recv() {
-                Ok((_, Ok(()))) => {}
-                Ok((wname, Err(msg))) => {
-                    drop(pools); // close channels -> live workers exit
-                    for h in workers {
-                        let _ = h.join();
-                    }
-                    bail!("{wname}: executor init failed: {msg}");
+            let failure = match init_rx.recv() {
+                Ok((_, Ok(()))) => None,
+                Ok((wname, Err(msg))) => Some(format!("{wname}: executor init failed: {msg}")),
+                Err(_) => Some("a worker exited before reporting executor init".into()),
+            };
+            if let Some(msg) = failure {
+                // unplug every slot -> live workers exit; then join
+                for shared in &shareds {
+                    shared.slots.lock().unwrap().clear();
                 }
-                Err(_) => {
-                    drop(pools);
-                    for h in workers {
-                        let _ = h.join();
-                    }
-                    bail!("a worker exited before reporting executor init");
+                drop(pools);
+                drop(ctxs);
+                for h in workers {
+                    let _ = h.join();
                 }
+                bail!(msg);
             }
         }
+
+        let supervisor_stop = Arc::new(AtomicBool::new(false));
+        let supervisor = {
+            let stop = supervisor_stop.clone();
+            std::thread::Builder::new()
+                .name("fpu-supervisor".into())
+                .spawn(move || supervisor_loop(exit_rx, ctxs, shareds, stop))
+                .expect("spawn supervisor")
+        };
 
         let dispatcher = {
             let metrics = metrics.clone();
             let pool = pool.clone();
             let plane = DispatchPlane::new(table, policy, health.clone());
             let outstanding = outstanding.clone();
+            let poll = config.poll;
+            let retire_budget = config.retire_budget;
             std::thread::Builder::new()
                 .name("fpu-dispatcher".into())
                 .spawn(move || {
@@ -581,7 +910,8 @@ impl FpuService {
                         batcher,
                         plane,
                         pools,
-                        config.poll,
+                        poll,
+                        retire_budget,
                         metrics,
                         pool,
                         outstanding,
@@ -596,6 +926,68 @@ impl FpuService {
             caps: union,
             metrics: metrics.clone(),
         };
+
+        // the durable plane: open (and tail-truncate) the journal, spawn
+        // the retirer, replay still-Pending records exactly once
+        let mut durable = None;
+        let mut retirer = None;
+        let mut retirer_tx = None;
+        let mut replayed = 0usize;
+        if let Some(path) = &config.journal {
+            let (journal, records) = Journal::open(path)
+                .with_context(|| format!("opening request journal {}", path.display()))?;
+            let state = Arc::new(DurableState {
+                journal: Mutex::new(journal),
+                jobs: Mutex::new(HashMap::new()),
+                next_job: AtomicU64::new(0),
+            });
+            let (rtx, rrx) = mpsc::channel::<RetireMsg>();
+            let retirer_state = state.clone();
+            let retirer_handle = std::thread::Builder::new()
+                .name("fpu-journal-retirer".into())
+                .spawn(move || retirer_loop(rrx, retirer_state))
+                .expect("spawn journal retirer");
+            let mut max_id = 0u64;
+            for rec in coalesce(records) {
+                max_id = max_id.max(rec.id + 1);
+                match rec.status {
+                    JobStatus::Done => {
+                        state.jobs.lock().unwrap().insert(rec.id, JobPoll::Done(rec.result));
+                    }
+                    JobStatus::Failed => {
+                        state.jobs.lock().unwrap().insert(
+                            rec.id,
+                            JobPoll::Failed(ServiceError::ExecFailed { backend: rec.error }),
+                        );
+                    }
+                    JobStatus::Pending => {
+                        // interrupted before its outcome was journalled:
+                        // replay through the normal submit path, once
+                        state.jobs.lock().unwrap().insert(rec.id, JobPoll::Pending);
+                        match handle.submit_batch(rec.op, rec.format, &rec.a, &rec.b) {
+                            Ok(ticket) => {
+                                let _ = rtx.send((rec.id, rec.op, rec.format, ticket));
+                                replayed += 1;
+                            }
+                            Err(err) => {
+                                let mut failed = JournalRecord::pending(
+                                    rec.id, rec.op, rec.format, rec.a, rec.b,
+                                );
+                                failed.status = JobStatus::Failed;
+                                failed.error = format!("{err}");
+                                let _ = state.journal.lock().unwrap().append(&failed);
+                                state.jobs.lock().unwrap().insert(rec.id, JobPoll::Failed(err));
+                            }
+                        }
+                    }
+                }
+            }
+            state.next_job.store(max_id, Ordering::Relaxed);
+            durable = Some(state);
+            retirer = Some(retirer_handle);
+            retirer_tx = Some(rtx);
+        }
+
         Ok(Self {
             handle,
             metrics,
@@ -604,6 +996,12 @@ impl FpuService {
             dispatcher: Some(dispatcher),
             workers,
             shutdown_tx: tx,
+            supervisor: Some(supervisor),
+            supervisor_stop,
+            durable,
+            retirer,
+            retirer_tx,
+            replayed,
         })
     }
 
@@ -634,27 +1032,100 @@ impl FpuService {
         self.backend_names.iter().copied().zip(self.health.snapshot()).collect()
     }
 
-    /// Graceful shutdown: drains queued work, joins all threads.
-    pub fn shutdown(mut self) {
+    /// Durable vectored submission: the request is appended to the
+    /// journal as `Pending` *before* it is queued, so a crash after
+    /// this returns can never lose it — a restart replays it through
+    /// the normal submit path. Returns the stable job id to poll with
+    /// [`Self::poll_job`]; the terminal outcome is journalled by the
+    /// retirer when the ticket resolves.
+    ///
+    /// Requires [`ServiceConfig::journal`]; otherwise every call is
+    /// [`ServiceError::Rejected`].
+    pub fn submit_batch_durable(
+        &self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+    ) -> Result<u64, ServiceError> {
+        let Some(state) = &self.durable else {
+            return Err(ServiceError::Rejected {
+                reason: "service started without a journal (set ServiceConfig::journal)".into(),
+            });
+        };
+        self.handle.check_batch(op, format, a, b)?;
+        let id = state.next_job.fetch_add(1, Ordering::Relaxed);
+        let rec = JournalRecord::pending(id, op, format, a.to_vec(), b.to_vec());
+        if let Err(e) = state.journal.lock().unwrap().append(&rec) {
+            return Err(ServiceError::Rejected {
+                reason: format!("journal append failed: {e:#}"),
+            });
+        }
+        state.jobs.lock().unwrap().insert(id, JobPoll::Pending);
+        match self.handle.submit_batch_inner(op, format, a, b, None) {
+            Ok(ticket) => {
+                if let Some(rtx) = &self.retirer_tx {
+                    let _ = rtx.send((id, op, format, ticket));
+                }
+                Ok(id)
+            }
+            Err(err) => {
+                // journalled Pending but never queued: journal the
+                // failure so a restart does not replay it
+                let mut failed = rec;
+                failed.status = JobStatus::Failed;
+                failed.error = format!("{err}");
+                let _ = state.journal.lock().unwrap().append(&failed);
+                state.jobs.lock().unwrap().insert(id, JobPoll::Failed(err.clone()));
+                Err(err)
+            }
+        }
+    }
+
+    /// A durable job's current outcome (`None`: unknown id, or the
+    /// service has no journal).
+    pub fn poll_job(&self, id: u64) -> Option<JobPoll> {
+        self.durable.as_ref().and_then(|s| s.jobs.lock().unwrap().get(&id).cloned())
+    }
+
+    /// How many still-`Pending` journal records this start replayed.
+    pub fn replayed_jobs(&self) -> usize {
+        self.replayed
+    }
+
+    /// Shared by [`Self::shutdown`] and `Drop`; idempotent. Order
+    /// matters: the dispatcher drains and retires first (resolving
+    /// every ticket), then the retirer (whose waits now return
+    /// instantly), then the supervisor (which unplugs and joins any
+    /// respawned workers), then the original workers.
+    fn teardown(&mut self) {
         let _ = self.shutdown_tx.send(DispatchMsg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
+        }
+        drop(self.retirer_tx.take());
+        if let Some(r) = self.retirer.take() {
+            let _ = r.join();
+        }
+        self.supervisor_stop.store(true, Ordering::Release);
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
+
+    /// Graceful shutdown: drains queued work, retires in-flight
+    /// batches, joins all threads.
+    pub fn shutdown(mut self) {
+        self.teardown();
+    }
 }
 
 impl Drop for FpuService {
     fn drop(&mut self) {
-        let _ = self.shutdown_tx.send(DispatchMsg::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.teardown();
     }
 }
 
@@ -718,12 +1189,42 @@ fn reshape_for_backend(
     batch.padded = padded;
 }
 
+/// Send into a pool, briefly waiting out a *total* worker die-off: when
+/// every worker of a pool died at once the supervisor is already
+/// respawning one, and failing the batch over (or failing the riders,
+/// on a single-backend service) during that window would turn a
+/// recoverable blip into user-visible errors. Gives up immediately once
+/// the pool is marked degraded (respawns are failing) and after
+/// [`POOL_RESPAWN_WAIT`] otherwise.
+fn send_with_respawn_wait(
+    pool: &mut PoolSender,
+    batch: Batch,
+    health: &HealthBoard,
+    backend: usize,
+) -> std::result::Result<(), Batch> {
+    let deadline = Instant::now() + POOL_RESPAWN_WAIT;
+    let mut batch = batch;
+    loop {
+        match pool.send(batch) {
+            Ok(()) => return Ok(()),
+            Err(returned) => {
+                if health.is_degraded(backend) || Instant::now() >= deadline {
+                    return Err(returned);
+                }
+                batch = returned;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
 /// Hand one batch to `backend`'s pool; if that pool's workers are all
-/// gone, walk the retry chain to the next untried candidate (reshaping
-/// the batch). When every candidate pool is gone the riders fail with
-/// the execution error that started the retry (`exec_error`, if this
-/// batch already failed somewhere) — [`ServiceError::Shutdown`] is
-/// reserved for a batch that never reached any executor.
+/// gone (and stay gone past the respawn wait), walk the retry chain to
+/// the next untried candidate (reshaping the batch). When every
+/// candidate pool is gone the riders fail with the execution error that
+/// started the retry (`exec_error`, if this batch already failed
+/// somewhere) — [`ServiceError::Shutdown`] is reserved for a batch that
+/// never reached any executor.
 #[allow(clippy::too_many_arguments)]
 fn send_batch(
     mut batch: Batch,
@@ -739,7 +1240,7 @@ fn send_batch(
     loop {
         batch.backend = backend;
         batch.tried |= 1u8 << backend;
-        match pools[backend].send(batch) {
+        match send_with_respawn_wait(&mut pools[backend], batch, plane.health(), backend) {
             Ok(()) => return,
             Err(returned) => {
                 batch = returned;
@@ -764,9 +1265,13 @@ fn send_batch(
     }
 }
 
-/// Re-route a batch a worker failed: the next untried candidate gets a
-/// reshaped copy of the same lanes (rider-invisible failover); with no
-/// candidate left, every rider gets the backend's error, typed.
+/// Re-route a batch a worker handed back. A *blamed* failure
+/// (`error: Some`) goes to the next untried candidate — a reshaped copy
+/// of the same lanes, rider-invisible failover — and with no candidate
+/// left, every rider gets the backend's error, typed. An *unblamed*
+/// hand-back (`error: None`: the worker died without executing) first
+/// clears the batch's own tried bit, so the same backend's respawned
+/// pool is allowed to serve it again.
 fn reroute_failed(
     failed: FailedBatch,
     plane: &mut DispatchPlane,
@@ -777,14 +1282,19 @@ fn reroute_failed(
     outstanding: &AtomicI64,
 ) {
     let FailedBatch { mut batch, error } = failed;
+    if error.is_none() {
+        batch.tried &= !(1u8 << batch.backend);
+    }
     match plane.select_excluding(batch.op, batch.format, batch.tried) {
         Some(sel) => {
-            plane.health().record_reroute(batch.backend);
+            if error.is_some() {
+                plane.health().record_reroute(batch.backend);
+            }
             reshape_for_backend(&mut batch, sel.backend, batcher, plane_pool);
             send_batch(
                 batch,
                 sel.backend,
-                Some(error),
+                error,
                 plane,
                 pools,
                 batcher,
@@ -794,13 +1304,11 @@ fn reroute_failed(
             );
         }
         None => {
-            fail_batch(
-                batch,
-                ServiceError::ExecFailed { backend: error },
-                metrics,
-                plane_pool,
-                outstanding,
-            );
+            let err = match error {
+                Some(backend) => ServiceError::ExecFailed { backend },
+                None => ServiceError::Shutdown,
+            };
+            fail_batch(batch, err, metrics, plane_pool, outstanding);
         }
     }
 }
@@ -876,6 +1384,44 @@ fn form_and_dispatch(
     }
 }
 
+/// The shutdown retire loop: keep servicing the retry channel until
+/// every dispatched batch reached a terminal outcome, so a backend
+/// dying during shutdown still fails over down its candidate chain
+/// instead of stranding riders. Each serviced retry **resets** the
+/// budget clock (progress earns more time — a chain of N candidates
+/// gets the budget per hop); the trailing drain then services anything
+/// already queued on the channel even when the budget is zero.
+#[allow(clippy::too_many_arguments)]
+fn retire_outstanding(
+    retry_rx: &Receiver<FailedBatch>,
+    retire_budget: Duration,
+    plane: &mut DispatchPlane,
+    pools: &mut [PoolSender],
+    batcher: &DynamicBatcher,
+    metrics: &Metrics,
+    plane_pool: &PlanePool,
+    outstanding: &AtomicI64,
+) {
+    let mut give_up = Instant::now() + retire_budget;
+    while outstanding.load(Ordering::Acquire) > 0 && Instant::now() < give_up {
+        match retry_rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(failed) => {
+                reroute_failed(failed, plane, pools, batcher, metrics, plane_pool, outstanding);
+                give_up = Instant::now() + retire_budget;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // final drain: a retry already on the channel must exhaust its
+    // candidate chain before the pools close — without this, a batch a
+    // dying backend handed back in the last instant would be dropped
+    // (its riders stranded as Shutdown) despite a live candidate
+    while let Ok(failed) = retry_rx.try_recv() {
+        reroute_failed(failed, plane, pools, batcher, metrics, plane_pool, outstanding);
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     rx: Receiver<DispatchMsg>,
@@ -884,6 +1430,7 @@ fn dispatcher_loop(
     mut plane: DispatchPlane,
     mut pools: Vec<PoolSender>,
     poll: Duration,
+    retire_budget: Duration,
     metrics: Arc<Metrics>,
     plane_pool: PlanePool,
     outstanding: Arc<AtomicI64>,
@@ -945,40 +1492,69 @@ fn dispatcher_loop(
         &plane_pool,
         &outstanding,
     );
-    // retire in-flight batches before closing the pools: keep serving
-    // the retry chain until every dispatched batch reached a terminal
-    // outcome, so a backend dying during shutdown still fails over
-    // instead of stranding riders
-    let give_up = Instant::now() + SHUTDOWN_RETIRE_BUDGET;
-    while outstanding.load(Ordering::Acquire) > 0 && Instant::now() < give_up {
-        match retry_rx.recv_timeout(Duration::from_millis(1)) {
-            Ok(failed) => reroute_failed(
-                failed,
-                &mut plane,
-                &mut pools,
-                &batcher,
-                &metrics,
-                &plane_pool,
-                &outstanding,
-            ),
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
+    // retire in-flight batches before closing the pools
+    retire_outstanding(
+        &retry_rx,
+        retire_budget,
+        &mut plane,
+        &mut pools,
+        &batcher,
+        &metrics,
+        &plane_pool,
+        &outstanding,
+    );
+    // unplug every worker channel explicitly: the supervisor shares the
+    // slot lists (behind `Arc`), so dropping `pools` alone would not
+    // disconnect the workers' receivers
+    for p in &pools {
+        p.shared.slots.lock().unwrap().clear();
     }
-    // dropping batch senders closes worker channels -> workers exit
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    rx: Receiver<Batch>,
-    mut executor: Box<dyn Executor>,
-    backend: usize,
-    metrics: Arc<Metrics>,
-    health: Arc<HealthBoard>,
-    pool: PlanePool,
-    retry_tx: mpsc::Sender<FailedBatch>,
-    outstanding: Arc<AtomicI64>,
-) {
+/// Best-effort text of a caught panic payload (`panic!` with a string
+/// literal or a formatted message covers the executor cases).
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic payload".to_string()
+    }
+}
+
+/// Hand a batch back to the dispatcher's retry channel; if the
+/// dispatcher is already gone (teardown), resolve the riders here,
+/// typed (`Some` error: the backend's own message; `None`: shutdown).
+fn send_failed_or_fail(ctx: &WorkerCtx, failed: FailedBatch) {
+    if let Err(mpsc::SendError(failed)) = ctx.retry_tx.send(failed) {
+        let FailedBatch { mut batch, error } = failed;
+        let err = match error {
+            Some(backend) => ServiceError::ExecFailed { backend },
+            None => ServiceError::Shutdown,
+        };
+        ctx.metrics.record_error(batch.op, batch.format, batch.live() as u64);
+        for item in batch.items.drain(..) {
+            item.fail(err.clone());
+        }
+        ctx.outstanding.fetch_sub(1, Ordering::AcqRel);
+        ctx.pool.give(std::mem::take(&mut batch.a));
+        ctx.pool.give(std::mem::take(&mut batch.b));
+    }
+}
+
+/// A dying worker's exit protocol: notify the supervisor (which removes
+/// this worker's slot, disconnecting its channel), then forward any
+/// batches still buffered on the channel to the retry path, unblamed —
+/// they were never executed.
+fn abnormal_exit(rx: &Receiver<Batch>, ctx: &WorkerCtx, slot_id: u64) {
+    let _ = ctx.exit_tx.send(ExitNotice { backend: ctx.backend, slot_id });
+    while let Ok(batch) = rx.recv() {
+        send_failed_or_fail(ctx, FailedBatch { batch, error: None });
+    }
+}
+
+fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: WorkerCtx, slot_id: u64) {
     // all buffers persist across batches: the steady-state hot path
     // performs no allocation in this loop (execute_into writes in place
     // at the batch's plane width, operand planes go back to the pool).
@@ -988,39 +1564,71 @@ fn worker_loop(
     let mut out64: Vec<u64> = Vec::new();
     let mut widened: Vec<u64> = Vec::new();
     let mut lat: Vec<(u64, usize)> = Vec::new();
-    while let Ok(mut batch) = rx.recv() {
-        let width = batch.a.width();
-        let b_plane = if batch.op == OpKind::Divide { Some(batch.b.as_ref()) } else { None };
-        let t0 = Instant::now();
-        let result = match width {
-            PlaneWidth::W32 => {
-                out32.clear();
-                out32.resize(batch.padded, 0);
-                executor.execute_into(
-                    batch.op,
-                    batch.format,
-                    batch.a.as_ref(),
-                    b_plane,
-                    PlaneRefMut::W32(&mut out32),
-                )
+    loop {
+        let mut batch = match rx.recv() {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        // worker-level fault sites (executor-level sites live inside
+        // the FaultInjectingExecutor wrapper)
+        if let Some(plan) = &ctx.fault {
+            if let Some(shot) = plan.check(FaultSite::SlowDrain, ctx.name) {
+                std::thread::sleep(Duration::from_micros(shot.micros));
             }
-            PlaneWidth::W64 => {
-                out64.clear();
-                out64.resize(batch.padded, 0);
-                executor.execute_into(
-                    batch.op,
-                    batch.format,
-                    batch.a.as_ref(),
-                    b_plane,
-                    PlaneRefMut::W64(&mut out64),
-                )
+            if plan.check(FaultSite::WorkerDeath, ctx.name).is_some() {
+                send_failed_or_fail(&ctx, FailedBatch { batch, error: None });
+                abnormal_exit(&rx, &ctx, slot_id);
+                return;
+            }
+        }
+        let width = batch.a.width();
+        let t0 = Instant::now();
+        // the executor call runs under catch_unwind: a panicking
+        // executor (a bug, or an injected exec-panic) must not take the
+        // whole service down — the batch fails over like any executor
+        // error and this worker exits for the supervisor to replace
+        let result = {
+            let (op, format) = (batch.op, batch.format);
+            match width {
+                PlaneWidth::W32 => {
+                    out32.clear();
+                    out32.resize(batch.padded, 0);
+                    let out = &mut out32;
+                    catch_unwind(AssertUnwindSafe(|| {
+                        let b_plane =
+                            if op == OpKind::Divide { Some(batch.b.as_ref()) } else { None };
+                        executor.execute_into(
+                            op,
+                            format,
+                            batch.a.as_ref(),
+                            b_plane,
+                            PlaneRefMut::W32(out),
+                        )
+                    }))
+                }
+                PlaneWidth::W64 => {
+                    out64.clear();
+                    out64.resize(batch.padded, 0);
+                    let out = &mut out64;
+                    catch_unwind(AssertUnwindSafe(|| {
+                        let b_plane =
+                            if op == OpKind::Divide { Some(batch.b.as_ref()) } else { None };
+                        executor.execute_into(
+                            op,
+                            format,
+                            batch.a.as_ref(),
+                            b_plane,
+                            PlaneRefMut::W64(out),
+                        )
+                    }))
+                }
             }
         };
         let exec_ns = t0.elapsed().as_nanos() as u64;
         match result {
-            Ok(()) => {
+            Ok(Ok(())) => {
                 let live = batch.live() as u64;
-                health.record_success(backend, batch.op, batch.format, live, exec_ns);
+                ctx.health.record_success(ctx.backend, batch.op, batch.format, live, exec_ns);
                 let done = Instant::now();
                 lat.clear();
                 for item in &batch.items {
@@ -1031,7 +1639,7 @@ fn worker_loop(
                 }
                 // record metrics BEFORE completing: once a client observes
                 // its response, the snapshot already includes it
-                metrics.record_batch(batch.op, batch.format, &lat, exec_ns, batch.padded);
+                ctx.metrics.record_batch(batch.op, batch.format, &lat, exec_ns, batch.padded);
                 // tickets store u64 result words: widen u32 result
                 // planes once per batch (the one narrowing boundary)
                 let view: &[u64] = match width {
@@ -1048,27 +1656,27 @@ fn worker_loop(
                     item.complete(&view[off..off + lanes], lat[k].0, batch.padded);
                     off += lanes;
                 }
-                outstanding.fetch_sub(1, Ordering::AcqRel);
-                pool.give(std::mem::take(&mut batch.a));
-                pool.give(std::mem::take(&mut batch.b));
+                ctx.outstanding.fetch_sub(1, Ordering::AcqRel);
+                ctx.pool.give(std::mem::take(&mut batch.a));
+                ctx.pool.give(std::mem::take(&mut batch.b));
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 // hand the batch (planes intact) back to the dispatcher
                 // for re-routing; the riders only see an error if every
                 // candidate backend fails it
-                health.record_failure(backend);
-                let error = format!("{e:#}");
-                if let Err(mpsc::SendError(failed)) = retry_tx.send(FailedBatch { batch, error }) {
-                    // dispatcher already gone (teardown): fail typed
-                    let FailedBatch { mut batch, error } = failed;
-                    metrics.record_error(batch.op, batch.format, batch.live() as u64);
-                    for item in batch.items.drain(..) {
-                        item.fail(ServiceError::ExecFailed { backend: error.clone() });
-                    }
-                    outstanding.fetch_sub(1, Ordering::AcqRel);
-                    pool.give(std::mem::take(&mut batch.a));
-                    pool.give(std::mem::take(&mut batch.b));
-                }
+                ctx.health.record_failure(ctx.backend);
+                let error = Some(format!("{e:#}"));
+                send_failed_or_fail(&ctx, FailedBatch { batch, error });
+            }
+            Err(payload) => {
+                // the executor panicked: blame the backend (breaker +
+                // failover, riders see the panic text only if every
+                // candidate fails), then die for the supervisor
+                ctx.health.record_failure(ctx.backend);
+                let error = Some(format!("worker panicked: {}", panic_message(&*payload)));
+                send_failed_or_fail(&ctx, FailedBatch { batch, error });
+                abnormal_exit(&rx, &ctx, slot_id);
+                return;
             }
         }
     }
@@ -1086,6 +1694,7 @@ mod tests {
             queue_depth: 1024,
             workers: 1,
             poll: Duration::from_micros(50),
+            ..ServiceConfig::default()
         }
     }
 
@@ -1527,5 +2136,196 @@ mod tests {
         };
         assert!(err.contains("fpu-scalar-reference"), "{err}");
         assert!(err.contains("refused to start"), "{err}");
+    }
+
+    #[test]
+    fn worker_panic_is_contained_and_respawned() {
+        // the tentpole's supervision contract on the real service: a
+        // panicking executor fails its riders typed (never a poisoned
+        // service or a hang), and the supervisor respawns the worker so
+        // the service keeps serving
+        struct PanicOnce(NativeExecutor, Arc<AtomicU64>);
+        impl Executor for PanicOnce {
+            fn capabilities(&self) -> BackendCaps {
+                self.0.capabilities()
+            }
+            fn execute_into(
+                &mut self,
+                op: OpKind,
+                format: FormatKind,
+                a: PlaneRef<'_>,
+                b: Option<PlaneRef<'_>>,
+                out: PlaneRefMut<'_>,
+            ) -> Result<()> {
+                if self.1.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("injected worker panic");
+                }
+                self.0.execute_into(op, format, a, b, out)
+            }
+        }
+        let calls = Arc::new(AtomicU64::new(0));
+        let c2 = calls.clone();
+        let svc = FpuService::start(quick_config(), move || {
+            Ok(Box::new(PanicOnce(NativeExecutor::with_defaults(), c2.clone()))
+                as Box<dyn Executor>)
+        })
+        .unwrap();
+        let h = svc.handle();
+        // first execution panics: contained, the rider sees a typed
+        // error carrying the panic text (single backend, no failover
+        // candidate)
+        match h.divide(10.0, 4.0) {
+            Err(ServiceError::ExecFailed { backend }) => {
+                assert!(backend.contains("panicked"), "{backend}");
+                assert!(backend.contains("injected worker panic"), "{backend}");
+            }
+            other => panic!("expected ExecFailed from the panicking worker, got {other:?}"),
+        }
+        // the supervisor respawns the worker (fresh executor, shared
+        // counter now past the panic) and the service keeps serving
+        let mut recovered = None;
+        for _ in 0..50 {
+            match h.divide(10.0, 4.0) {
+                Ok(q) => {
+                    recovered = Some(q);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+        assert_eq!(recovered, Some(2.5), "service recovers after the worker panic");
+        let report = svc.dispatch_report();
+        assert!(report[0].1.respawns >= 1, "supervisor recorded the respawn");
+        assert!(!report[0].1.degraded, "a successful respawn leaves the pool undegraded");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn durable_submission_round_trips_and_journals() {
+        let path = std::env::temp_dir()
+            .join(format!("goldschmidt-svc-journal-{}", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut cfg = quick_config();
+        cfg.journal = Some(path.clone());
+        let svc = FpuService::start(cfg, native).unwrap();
+        assert_eq!(svc.replayed_jobs(), 0, "a fresh journal replays nothing");
+        let a: Vec<u64> = [6.0f32, 9.0].iter().map(|v| v.to_bits() as u64).collect();
+        let b: Vec<u64> = [2.0f32, 3.0].iter().map(|v| v.to_bits() as u64).collect();
+        let id = svc.submit_batch_durable(OpKind::Divide, FormatKind::F32, &a, &b).unwrap();
+        let mut done = None;
+        for _ in 0..500 {
+            match svc.poll_job(id) {
+                Some(JobPoll::Done(bits)) => {
+                    done = Some(bits);
+                    break;
+                }
+                Some(JobPoll::Pending) => std::thread::sleep(Duration::from_millis(2)),
+                other => panic!("unexpected durable poll outcome: {other:?}"),
+            }
+        }
+        let bits = done.expect("durable job resolved to Done");
+        let expect: Vec<u64> = [3.0f32, 3.0].iter().map(|v| v.to_bits() as u64).collect();
+        assert_eq!(bits, expect);
+        svc.shutdown();
+        // on disk: the Pending record (with operands) then the Done
+        // record (with the result plane), same id
+        let (_journal, records) = Journal::open(&path).unwrap();
+        let recs: Vec<_> = records.into_iter().filter(|r| r.id == id).collect();
+        assert_eq!(recs.len(), 2, "one Pending + one Done record");
+        assert_eq!(recs[0].status, JobStatus::Pending);
+        assert_eq!(recs[0].a, a);
+        assert_eq!(recs[1].status, JobStatus::Done);
+        assert_eq!(recs[1].result, expect);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn durable_api_requires_a_journal() {
+        let svc = FpuService::start(quick_config(), native).unwrap();
+        let a = [6.0f32.to_bits() as u64];
+        let b = [2.0f32.to_bits() as u64];
+        match svc.submit_batch_durable(OpKind::Divide, FormatKind::F32, &a, &b) {
+            Err(ServiceError::Rejected { reason }) => {
+                assert!(reason.contains("journal"), "{reason}");
+            }
+            other => panic!("expected Rejected without a journal, got {other:?}"),
+        }
+        assert_eq!(svc.poll_job(0), None);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_retires_through_remaining_candidates() {
+        use crate::dispatch::RoutePolicy;
+        // the shutdown retire loop must walk a failed batch down its
+        // remaining candidate chain even with a zero time budget: a
+        // retry already queued on the channel reaches backend b's pool
+        // (the final drain), it is not dropped as Shutdown
+        let caps_a = BackendCaps::uniform("retire-a", &[64]);
+        let caps_b = BackendCaps::uniform("retire-b", &[64]);
+        let table = RoutingTable::merge(vec![caps_a, caps_b]).unwrap();
+        let batcher = DynamicBatcher::routed(
+            BatcherConfig::new(64, Duration::from_micros(100)),
+            table.caps_list(),
+        );
+        let health = Arc::new(HealthBoard::new(2));
+        let mut plane = DispatchPlane::new(table, RoutePolicy::Static, health.clone());
+        let metrics = Metrics::new();
+        let plane_pool = PlanePool::new();
+        // backend a's pool is empty (all workers gone); backend b has
+        // one live slot whose receiver the test holds
+        let shared_a = Arc::new(PoolShared { slots: Mutex::new(Vec::new()) });
+        let (btx, brx) = mpsc::sync_channel::<Batch>(WORKER_QUEUE);
+        let shared_b = Arc::new(PoolShared {
+            slots: Mutex::new(vec![WorkerSlot { id: 0, tx: btx }]),
+        });
+        let mut pools = vec![
+            PoolSender { shared: shared_a, next: 0 },
+            PoolSender { shared: shared_b, next: 0 },
+        ];
+        // one formed batch that already failed on backend a
+        let mut router = Router::new();
+        metrics.record_enqueued(OpKind::Divide, FormatKind::F32, 1);
+        let (item, ticket) = WorkItem::group(
+            7,
+            OpKind::Divide,
+            FormatKind::F32,
+            &[6.0f32.to_bits() as u64],
+            &[2.0f32.to_bits() as u64],
+            None,
+        );
+        router.route(item);
+        let mut batch = batcher
+            .form_batch_for(
+                0,
+                &mut router,
+                OpKind::Divide,
+                FormatKind::F32,
+                Instant::now(),
+                &plane_pool,
+                &metrics,
+            )
+            .expect("batch forms");
+        batch.backend = 0;
+        batch.tried = 0b01;
+        let (retry_tx, retry_rx) = mpsc::channel::<FailedBatch>();
+        retry_tx
+            .send(FailedBatch { batch, error: Some("backend a exploded".into()) })
+            .unwrap();
+        drop(retry_tx);
+        let outstanding = AtomicI64::new(1);
+        retire_outstanding(
+            &retry_rx,
+            Duration::ZERO,
+            &mut plane,
+            &mut pools,
+            &batcher,
+            &metrics,
+            &plane_pool,
+            &outstanding,
+        );
+        let got = brx.try_recv().expect("the retry failed over into backend b's pool");
+        assert_eq!(got.backend, 1, "rerouted to the untried candidate");
+        assert!(!ticket.is_done(), "the rider is still waiting on backend b, not failed");
     }
 }

@@ -7,12 +7,22 @@
 //! * **circuit breaker** — [`OPEN_AFTER_CONSECUTIVE`] consecutive batch
 //!   failures open the breaker; while open the dispatch plane routes
 //!   around the backend, except that one consideration in every
-//!   [`PROBE_PERIOD`] becomes a *probe* batch sent there anyway. A
-//!   probe that succeeds closes the breaker (the backend rejoins at
-//!   full preference); a probe that fails is re-routed like any other
-//!   failed batch, so riders never pay for probing. Counted failures
-//!   are *batch* failures, not lane counts — one wedged batch and one
-//!   wedged 4096-lane flush trip the breaker at the same rate.
+//!   [`PROBE_PERIOD`] becomes a *probe* batch sent there anyway. The
+//!   breaker is **half-open** under probing: it takes
+//!   [`CLOSE_AFTER_PROBE_SUCCESSES`] consecutive probe successes to
+//!   close (one lucky probe of a still-sick backend is not recovery),
+//!   and any failure resets that streak; a probe that fails is
+//!   re-routed like any other failed batch, so riders never pay for
+//!   probing. Counted failures are *batch* failures, not lane counts —
+//!   one wedged batch and one wedged 4096-lane flush trip the breaker
+//!   at the same rate.
+//!
+//! The board also carries the **supervision signals** of the fault
+//! plane (see [`crate::fault`]): `respawns` counts workers the per-pool
+//! supervisor brought back after a death, and `degraded` marks a pool
+//! whose respawns kept failing — the dispatch plane routes around a
+//! degraded pool whenever a healthy alternative exists, and
+//! `dispatch_report` surfaces both.
 //! * **latency window** — per (backend, op, format): the last
 //!   [`LAT_WINDOW`] successful batches' execution time per lane, the
 //!   signal behind
@@ -39,6 +49,10 @@ pub const OPEN_AFTER_CONSECUTIVE: u32 = 3;
 /// becomes a probe batch routed to it anyway.
 pub const PROBE_PERIOD: u64 = 8;
 
+/// Consecutive successes an *open* breaker must see before it closes
+/// again (half-open hysteresis — one lucky probe is not recovery).
+pub const CLOSE_AFTER_PROBE_SUCCESSES: u32 = 3;
+
 /// Per-(backend, slot) latency window length (successful batches).
 pub const LAT_WINDOW: usize = 16;
 
@@ -62,6 +76,14 @@ struct BackendHealth {
     /// Failed batches of this backend re-routed to another backend
     /// (rider-invisible failures).
     rerouted: AtomicU64,
+    /// Consecutive successes since the breaker opened (half-open
+    /// streak; reset by any failure).
+    probe_successes: AtomicU32,
+    /// Supervisor could not keep this pool staffed — route around it
+    /// whenever an alternative exists.
+    degraded: AtomicBool,
+    /// Workers respawned by the pool supervisor after a death.
+    respawns: AtomicU64,
 }
 
 /// One backend's health counters at a point in time.
@@ -79,6 +101,11 @@ pub struct BackendHealthSnapshot {
     pub probes: u64,
     /// Whether the breaker is open right now.
     pub breaker_open: bool,
+    /// Whether the supervisor has marked the pool degraded (respawn
+    /// attempts kept failing).
+    pub degraded: bool,
+    /// Workers respawned by the pool supervisor after a death.
+    pub respawns: u64,
 }
 
 /// Shared health/latency state for every registered backend.
@@ -107,9 +134,10 @@ impl HealthBoard {
         self.backends.len()
     }
 
-    /// Record one successfully executed batch: closes the breaker,
-    /// resets the consecutive-failure count and feeds the latency
-    /// window for the batch's slot.
+    /// Record one successfully executed batch: resets the consecutive-
+    /// failure count and feeds the latency window for the batch's slot.
+    /// An open breaker only closes after
+    /// [`CLOSE_AFTER_PROBE_SUCCESSES`] consecutive successes.
     pub fn record_success(
         &self,
         backend: usize,
@@ -121,7 +149,13 @@ impl HealthBoard {
         let b = &self.backends[backend];
         b.ok_batches.fetch_add(1, Ordering::Relaxed);
         b.consecutive.store(0, Ordering::Relaxed);
-        b.open.store(false, Ordering::Release);
+        if b.open.load(Ordering::Acquire) {
+            let streak = b.probe_successes.fetch_add(1, Ordering::AcqRel) + 1;
+            if streak >= CLOSE_AFTER_PROBE_SUCCESSES {
+                b.probe_successes.store(0, Ordering::Relaxed);
+                b.open.store(false, Ordering::Release);
+            }
+        }
         let mut lat = self.lat.lock().expect("health board poisoned");
         lat[backend][op_format_slot(op, format)].push(exec_ns, lanes);
     }
@@ -131,6 +165,7 @@ impl HealthBoard {
     pub fn record_failure(&self, backend: usize) -> bool {
         let b = &self.backends[backend];
         b.failed_batches.fetch_add(1, Ordering::Relaxed);
+        b.probe_successes.store(0, Ordering::Relaxed);
         let consecutive = b.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
         if consecutive >= OPEN_AFTER_CONSECUTIVE && !b.open.swap(true, Ordering::AcqRel) {
             b.trips.fetch_add(1, Ordering::Relaxed);
@@ -148,6 +183,21 @@ impl HealthBoard {
     /// Whether the backend's breaker is open.
     pub fn is_open(&self, backend: usize) -> bool {
         self.backends[backend].open.load(Ordering::Acquire)
+    }
+
+    /// Whether the supervisor has marked the pool degraded.
+    pub fn is_degraded(&self, backend: usize) -> bool {
+        self.backends[backend].degraded.load(Ordering::Acquire)
+    }
+
+    /// Supervisor verdict on whether the pool can be kept staffed.
+    pub fn set_degraded(&self, backend: usize, degraded: bool) {
+        self.backends[backend].degraded.store(degraded, Ordering::Release);
+    }
+
+    /// Count one supervisor respawn of a dead worker in this pool.
+    pub fn record_respawn(&self, backend: usize) {
+        self.backends[backend].respawns.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Called each time the dispatch plane *considers* an open backend:
@@ -187,6 +237,8 @@ impl HealthBoard {
                 trips: b.trips.load(Ordering::Relaxed),
                 probes: b.probes.load(Ordering::Relaxed),
                 breaker_open: b.open.load(Ordering::Acquire),
+                degraded: b.degraded.load(Ordering::Acquire),
+                respawns: b.respawns.load(Ordering::Relaxed),
             })
             .collect()
     }
@@ -214,11 +266,54 @@ mod tests {
         assert_eq!(snap[0].trips, 1);
         assert_eq!(snap[0].failed_batches, (OPEN_AFTER_CONSECUTIVE + 1) as u64);
         assert!(snap[0].breaker_open);
-        // one success closes the breaker and resets the streak
+        // half-open hysteresis: one or two probe successes keep the
+        // breaker open; the K-th closes it and resets the streak
+        for k in 1..CLOSE_AFTER_PROBE_SUCCESSES {
+            h.record_success(0, OpKind::Divide, F32, 64, 1_000);
+            assert!(h.is_open(0), "closed after only {k} probe success(es)");
+        }
         h.record_success(0, OpKind::Divide, F32, 64, 1_000);
         assert!(!h.is_open(0));
         assert!(!h.record_failure(0), "streak restarted from zero");
         assert!(!h.is_open(0));
+    }
+
+    #[test]
+    fn failure_resets_half_open_success_streak() {
+        let h = HealthBoard::new(1);
+        for _ in 0..OPEN_AFTER_CONSECUTIVE {
+            h.record_failure(0);
+        }
+        assert!(h.is_open(0));
+        // K-1 successes, then a failure: the streak must restart, so
+        // K-1 further successes still leave the breaker open
+        for _ in 0..CLOSE_AFTER_PROBE_SUCCESSES - 1 {
+            h.record_success(0, OpKind::Divide, F32, 64, 1_000);
+        }
+        h.record_failure(0);
+        for _ in 0..CLOSE_AFTER_PROBE_SUCCESSES - 1 {
+            h.record_success(0, OpKind::Divide, F32, 64, 1_000);
+        }
+        assert!(h.is_open(0), "failure must reset the half-open streak");
+        h.record_success(0, OpKind::Divide, F32, 64, 1_000);
+        assert!(!h.is_open(0));
+    }
+
+    #[test]
+    fn degraded_flag_and_respawns_reach_snapshot() {
+        let h = HealthBoard::new(2);
+        assert!(!h.is_degraded(0));
+        h.record_respawn(0);
+        h.record_respawn(0);
+        h.set_degraded(0, true);
+        assert!(h.is_degraded(0));
+        assert!(!h.is_degraded(1), "degradation is per pool");
+        let snap = h.snapshot();
+        assert!(snap[0].degraded);
+        assert_eq!(snap[0].respawns, 2);
+        assert!(!snap[1].degraded);
+        h.set_degraded(0, false);
+        assert!(!h.is_degraded(0));
     }
 
     #[test]

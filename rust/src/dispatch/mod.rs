@@ -37,7 +37,13 @@
 //! candidate for the pair has failed the same batch. Three consecutive
 //! failures open a backend's breaker; while open it receives no routed
 //! traffic except the probe batches that let a recovered backend
-//! rejoin.
+//! rejoin — and closing takes **three consecutive probe successes**
+//! (half-open hysteresis), so a flapping backend cannot buy its slot
+//! back with one lucky batch. A worker *death* (panic or injected
+//! exit) is the pool's problem, not the backend's: the batch requeues
+//! unblamed, the coordinator's supervisor respawns the worker, and
+//! only when respawns keep failing is the pool marked **degraded** —
+//! which the router treats exactly like an open breaker.
 //!
 //! The registry/table/health split mirrors the coordinator's
 //! router/batcher/metrics split: [`registry`] is configuration,

@@ -6,9 +6,12 @@
 //!
 //! 1. the [`RoutingTable`]'s candidate list for the pair (static
 //!    preference order);
-//! 2. the [`HealthBoard`]'s breakers — open backends are routed
-//!    around, except for the periodic probe that lets a recovered
-//!    backend rejoin;
+//! 2. the [`HealthBoard`]'s breakers and degradation flags — open
+//!    backends are routed around, except for the periodic probe that
+//!    lets a recovered backend rejoin; pools the supervisor marked
+//!    degraded (respawn kept failing, see [`crate::fault`]) are routed
+//!    around whenever any alternative exists, and are not probed —
+//!    only the supervisor can clear degradation;
 //! 3. the [`RoutePolicy`] — registration order, or measured ns/lane
 //!    with a periodic exploration tick (every [`EXPLORE_PERIOD`]-th
 //!    batch per slot rotates through the other healthy candidates so
@@ -71,6 +74,12 @@ impl DispatchPlane {
         &self.health
     }
 
+    /// A backend is routable when its breaker is closed and its pool is
+    /// not degraded.
+    fn routable(&self, b: usize) -> bool {
+        !self.health.is_open(b) && !self.health.is_degraded(b)
+    }
+
     /// Non-consuming peek: the backend whose batch *shape* (cap,
     /// ladder) the flush decision should assume — the first healthy
     /// candidate, or the preferred one when every breaker is open.
@@ -84,7 +93,7 @@ impl DispatchPlane {
         cands
             .iter()
             .copied()
-            .find(|&b| !self.health.is_open(b))
+            .find(|&b| self.routable(b))
             .or_else(|| cands.first().copied())
     }
 
@@ -97,17 +106,28 @@ impl DispatchPlane {
         if cands.is_empty() {
             return None;
         }
-        let any_healthy = cands.iter().any(|&b| !self.health.is_open(b));
+        let any_healthy = cands.iter().any(|&b| self.routable(b));
         if !any_healthy {
-            // every candidate's breaker is open: serve through the
-            // preferred one anyway — the retry chain still walks the
-            // alternatives, and refusing to route would strand riders
-            return Some(Selection { backend: cands[0], probe: false });
+            // every candidate is open or degraded: serve through the
+            // first non-degraded one (a degraded pool may have zero
+            // workers) — the retry chain still walks the alternatives,
+            // and refusing to route would strand riders
+            let backend = cands
+                .iter()
+                .copied()
+                .find(|&b| !self.health.is_degraded(b))
+                .unwrap_or(cands[0]);
+            return Some(Selection { backend, probe: false });
         }
         // probe an open backend back to life (only worth a batch when a
-        // healthy fallback exists to absorb a failed probe)
+        // healthy fallback exists to absorb a failed probe); degraded
+        // pools are never probed — traffic cannot heal a pool with no
+        // workers, only the supervisor can
         for &b in cands {
-            if self.health.is_open(b) && self.health.probe_tick(b) {
+            if self.health.is_open(b)
+                && !self.health.is_degraded(b)
+                && self.health.probe_tick(b)
+            {
                 return Some(Selection { backend: b, probe: true });
             }
         }
@@ -118,11 +138,11 @@ impl DispatchPlane {
             RoutePolicy::Static => cands
                 .iter()
                 .copied()
-                .find(|&b| !self.health.is_open(b))
+                .find(|&b| self.routable(b))
                 .expect("any_healthy checked"),
             RoutePolicy::Latency => {
                 let healthy: Vec<usize> =
-                    cands.iter().copied().filter(|&b| !self.health.is_open(b)).collect();
+                    cands.iter().copied().filter(|&b| self.routable(b)).collect();
                 if healthy.len() > 1 && n % EXPLORE_PERIOD == EXPLORE_PERIOD - 1 {
                     // exploration tick: rotate through the candidates
                     healthy[((n / EXPLORE_PERIOD) as usize) % healthy.len()]
@@ -165,7 +185,7 @@ impl DispatchPlane {
         cands
             .iter()
             .copied()
-            .find(|b| untried(b) && !self.health.is_open(*b))
+            .find(|b| untried(b) && self.routable(*b))
             .or_else(|| cands.iter().copied().find(untried))
             .map(|backend| Selection { backend, probe: false })
     }
@@ -174,8 +194,9 @@ impl DispatchPlane {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dispatch::health::OPEN_AFTER_CONSECUTIVE;
-    use crate::dispatch::health::PROBE_PERIOD;
+    use crate::dispatch::health::{
+        CLOSE_AFTER_PROBE_SUCCESSES, OPEN_AFTER_CONSECUTIVE, PROBE_PERIOD,
+    };
     use crate::runtime::caps::BackendCaps;
 
     const F32: FormatKind = FormatKind::F32;
@@ -219,8 +240,38 @@ mod tests {
         }
         assert_eq!(probes, 2, "one probe per period");
         assert_eq!(fallbacks, 2 * PROBE_PERIOD - 2);
-        // recovery: a success closes the breaker and preference returns
+        // recovery is hysteretic: preference only returns after K
+        // consecutive probe successes close the breaker
+        for _ in 0..CLOSE_AFTER_PROBE_SUCCESSES - 1 {
+            plane.health().record_success(0, OpKind::Divide, F32, 64, 1_000);
+            assert!(plane.health().is_open(0), "one lucky probe must not restore");
+        }
         plane.health().record_success(0, OpKind::Divide, F32, 64, 1_000);
+        assert_eq!(plane.select(OpKind::Divide, F32).unwrap().backend, 0);
+    }
+
+    #[test]
+    fn degraded_pool_routes_around_without_probing() {
+        let mut plane = two_backend_plane(RoutePolicy::Static);
+        plane.health().set_degraded(0, true);
+        for _ in 0..(4 * PROBE_PERIOD) {
+            let sel = plane.select(OpKind::Divide, F32).unwrap();
+            assert_eq!(sel.backend, 1, "traffic avoids the degraded pool");
+            assert!(!sel.probe, "degraded pools are not probed");
+        }
+        assert_eq!(plane.health().snapshot()[0].probes, 0);
+        // the retry chain prefers the non-degraded candidate...
+        assert_eq!(plane.select_excluding(OpKind::Divide, F32, 0b00).unwrap().backend, 1);
+        // ...but still uses the degraded one as a last resort
+        assert_eq!(plane.select_excluding(OpKind::Divide, F32, 0b10).unwrap().backend, 0);
+        // everything down: prefer the merely-open backend over the
+        // degraded (possibly workerless) one
+        for _ in 0..OPEN_AFTER_CONSECUTIVE {
+            plane.health().record_failure(1);
+        }
+        assert_eq!(plane.select(OpKind::Divide, F32).unwrap().backend, 1);
+        // the supervisor restaffs the pool: preference returns
+        plane.health().set_degraded(0, false);
         assert_eq!(plane.select(OpKind::Divide, F32).unwrap().backend, 0);
     }
 
@@ -305,8 +356,11 @@ mod tests {
         }
         assert_eq!(probes, 1, "the probe budget was preserved for real selections");
         // healthy preference: peek returns the first healthy candidate,
-        // and the preferred backend once its breaker closes
-        plane.health().record_success(0, OpKind::Divide, F32, 64, 1_000);
+        // and the preferred backend once its breaker closes (which
+        // takes K consecutive probe successes)
+        for _ in 0..CLOSE_AFTER_PROBE_SUCCESSES {
+            plane.health().record_success(0, OpKind::Divide, F32, 64, 1_000);
+        }
         assert_eq!(plane.peek_candidate(OpKind::Divide, F32), Some(0));
     }
 

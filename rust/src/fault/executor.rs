@@ -1,0 +1,205 @@
+//! [`FaultInjectingExecutor`]: an [`Executor`] decorator that consults
+//! an armed [`FaultPlan`] around every batch, plus [`wrap_registry`]
+//! for arming an entire [`ExecutorRegistry`] at once.
+//!
+//! The wrapper is registered like any other backend — it delegates
+//! `capabilities()`, so routing, batching and failover treat it as the
+//! backend it wraps. Executor-level sites handled here: injected
+//! latency, panics, transient errors, and post-execution bit flips.
+//! Worker-level sites ([`FaultSite::WorkerDeath`],
+//! [`FaultSite::SlowDrain`]) are consulted by `worker_loop` itself.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::request::OpKind;
+use crate::dispatch::registry::ExecutorRegistry;
+use crate::formats::{FormatKind, PlaneRef, PlaneRefMut};
+use crate::runtime::{BackendCaps, Executor};
+
+use super::plan::{FaultPlan, FaultSite};
+
+/// Decorates an inner executor with the executor-level sites of a
+/// [`FaultPlan`].
+pub struct FaultInjectingExecutor {
+    inner: Box<dyn Executor>,
+    plan: Arc<FaultPlan>,
+    /// The wrapped backend's own name (the plan's backend filters match
+    /// against this).
+    name: String,
+}
+
+impl FaultInjectingExecutor {
+    /// Wrap `inner`, consulting `plan` around every batch.
+    pub fn new(inner: Box<dyn Executor>, plan: Arc<FaultPlan>) -> Self {
+        let name = inner.capabilities().backend().to_string();
+        Self { inner, plan, name }
+    }
+}
+
+impl Executor for FaultInjectingExecutor {
+    fn capabilities(&self) -> BackendCaps {
+        self.inner.capabilities()
+    }
+
+    fn execute_into(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: PlaneRef<'_>,
+        b: Option<PlaneRef<'_>>,
+        mut out: PlaneRefMut<'_>,
+    ) -> Result<()> {
+        if let Some(shot) = self.plan.check(FaultSite::Latency, &self.name) {
+            thread::sleep(Duration::from_micros(shot.micros));
+        }
+        if self.plan.check(FaultSite::ExecPanic, &self.name).is_some() {
+            panic!("fault-plan: injected executor panic ({})", self.name);
+        }
+        if self.plan.check(FaultSite::ExecError, &self.name).is_some() {
+            bail!("fault-plan: injected transient error ({})", self.name);
+        }
+        self.inner.execute_into(op, format, a, b, out.reborrow())?;
+        if let Some(shot) = self.plan.check(FaultSite::BitFlip, &self.name) {
+            flip_one_bit(format, out, shot.salt);
+        }
+        Ok(())
+    }
+}
+
+/// Flip one deterministic bit of one deterministic result lane: the
+/// shot's salt picks the lane (low bits) and the bit position within
+/// the format's encoding (high bits).
+fn flip_one_bit(format: FormatKind, mut out: PlaneRefMut<'_>, salt: u64) {
+    let lanes = out.len();
+    if lanes == 0 {
+        return;
+    }
+    let lane = (salt % lanes as u64) as usize;
+    let bit = (salt >> 32) % format.total_bits() as u64;
+    if let Some(words) = out.as_w32() {
+        words[lane] ^= 1u32 << bit;
+    } else if let Some(words) = out.as_w64() {
+        words[lane] ^= 1u64 << bit;
+    }
+}
+
+/// Re-register every backend of `registry` behind a
+/// [`FaultInjectingExecutor`] sharing one armed plan. Preference
+/// order, routing policy and per-backend worker overrides are
+/// preserved — the armed registry is indistinguishable to the dispatch
+/// plane until a rule fires.
+pub fn wrap_registry(registry: ExecutorRegistry, plan: Arc<FaultPlan>) -> ExecutorRegistry {
+    let (entries, policy) = registry.into_parts();
+    let mut wrapped = ExecutorRegistry::new().with_policy(policy);
+    for entry in entries {
+        let workers = entry.workers();
+        let factory = entry.factory();
+        let plan = plan.clone();
+        let make = move || -> Result<Box<dyn Executor>> {
+            let inner = factory()?;
+            Ok(Box::new(FaultInjectingExecutor::new(inner, plan.clone())) as _)
+        };
+        wrapped = match workers {
+            Some(w) => wrapped.register_with_workers(make, w),
+            None => wrapped.register(make),
+        };
+    }
+    wrapped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::registry::RoutePolicy;
+    use crate::formats::PlaneBuf;
+    use crate::runtime::NativeExecutor;
+
+    fn divide_bits(ex: &mut dyn Executor, a_vals: &[f32]) -> Vec<u64> {
+        let format = FormatKind::F32;
+        let mut a = PlaneBuf::for_format(format);
+        let mut b = PlaneBuf::for_format(format);
+        for &v in a_vals {
+            a.push(v.to_bits() as u64);
+            b.push(1.0f32.to_bits() as u64);
+        }
+        let mut out = PlaneBuf::for_format(format);
+        out.resize(a_vals.len(), 0);
+        ex.execute_into(OpKind::Divide, format, a.as_ref(), Some(b.as_ref()), out.as_mut())
+            .unwrap();
+        (0..out.len()).map(|i| out.get(i)).collect()
+    }
+
+    #[test]
+    fn wrapper_delegates_capabilities_and_results() {
+        let plan = Arc::new(FaultPlan::parse("exec-error:after=1000000", 1).unwrap());
+        let inner = Box::new(NativeExecutor::with_defaults());
+        let caps = inner.capabilities();
+        let mut ex = FaultInjectingExecutor::new(inner, plan);
+        assert_eq!(ex.capabilities().backend(), caps.backend());
+        let vals = [2.0f32, 4.0, 8.0];
+        let bits = divide_bits(&mut ex, &vals);
+        for (b, v) in bits.iter().zip(vals) {
+            assert_eq!(f32::from_bits(*b as u32), v);
+        }
+    }
+
+    #[test]
+    fn injected_error_surfaces_and_window_closes() {
+        let plan = Arc::new(FaultPlan::parse("exec-error:count=1", 1).unwrap());
+        let mut ex =
+            FaultInjectingExecutor::new(Box::new(NativeExecutor::with_defaults()), plan);
+        let format = FormatKind::F32;
+        let mut a = PlaneBuf::for_format(format);
+        a.push(4.0f32.to_bits() as u64);
+        let mut b = PlaneBuf::for_format(format);
+        b.push(2.0f32.to_bits() as u64);
+        let mut out = PlaneBuf::for_format(format);
+        out.resize(1, 0);
+        let err = ex
+            .execute_into(OpKind::Divide, format, a.as_ref(), Some(b.as_ref()), out.as_mut())
+            .unwrap_err();
+        assert!(err.to_string().contains("injected transient error"), "{err}");
+        // window spent: the retry (same wrapper) succeeds
+        ex.execute_into(OpKind::Divide, format, a.as_ref(), Some(b.as_ref()), out.as_mut())
+            .unwrap();
+        assert_eq!(f32::from_bits(out.get(0) as u32), 2.0);
+    }
+
+    #[test]
+    fn bit_flip_corrupts_exactly_one_lane() {
+        let vals: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+        let clean = divide_bits(&mut NativeExecutor::with_defaults(), &vals);
+        let plan = Arc::new(FaultPlan::parse("bit-flip:count=1", 77).unwrap());
+        let mut ex =
+            FaultInjectingExecutor::new(Box::new(NativeExecutor::with_defaults()), plan);
+        let flipped = divide_bits(&mut ex, &vals);
+        let diffs: Vec<usize> =
+            (0..clean.len()).filter(|&i| clean[i] != flipped[i]).collect();
+        assert_eq!(diffs.len(), 1, "exactly one corrupted lane: {diffs:?}");
+        let xor = clean[diffs[0]] ^ flipped[diffs[0]];
+        assert_eq!(xor.count_ones(), 1, "exactly one flipped bit");
+        assert!(xor.leading_zeros() >= 32, "flip stays inside the f32 encoding");
+        // window spent: results are clean again
+        assert_eq!(divide_bits(&mut ex, &vals), clean);
+    }
+
+    #[test]
+    fn wrap_registry_preserves_order_policy_and_workers() {
+        let plan = Arc::new(FaultPlan::parse("latency:us=1", 5).unwrap());
+        let registry = ExecutorRegistry::new()
+            .with_policy(RoutePolicy::Latency)
+            .register(|| Ok(Box::new(NativeExecutor::with_defaults()) as _))
+            .register_with_workers(|| Ok(Box::new(NativeExecutor::with_defaults()) as _), 3);
+        let wrapped = wrap_registry(registry, plan);
+        assert_eq!(wrapped.policy(), RoutePolicy::Latency);
+        assert_eq!(wrapped.len(), 2);
+        assert_eq!(wrapped.entries()[0].workers(), None);
+        assert_eq!(wrapped.entries()[1].workers(), Some(3));
+        let ex = wrapped.entries()[0].make().unwrap();
+        assert_eq!(ex.capabilities().backend(), "native-fixed-point");
+    }
+}

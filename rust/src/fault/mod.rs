@@ -1,0 +1,58 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! The dispatch plane's failure machinery (circuit breakers, batch
+//! failover, worker supervision, journal replay) is only trustworthy
+//! if it can be *exercised on demand, reproducibly*. This module is
+//! the chaos half of that bargain: a [`FaultPlan`] is a seeded
+//! schedule of faults over named sites, armed either per-executor (the
+//! [`FaultInjectingExecutor`] decorator / [`wrap_registry`]) or at the
+//! worker-loop hook points the coordinator consults directly.
+//!
+//! # Spec grammar
+//!
+//! A plan is `;`-separated rules:
+//!
+//! ```text
+//! rule    := site [ '@' backend ] [ ':' kv { ',' kv } ]
+//! site    := exec-error | exec-panic | latency | bit-flip
+//!          | worker-death | slow-drain
+//! kv      := 'p' '=' float        probability per occurrence (default 1)
+//!          | 'after' '=' int      occurrences skipped first (default 0)
+//!          | 'count' '=' int      occurrences in the window (default ∞)
+//!          | 'us' '=' int         injected delay, µs (default 1000)
+//! ```
+//!
+//! Example: panic the scalar backend's second and third batches, then
+//! make it error forever, while every tenth native batch eats 200 µs:
+//!
+//! ```text
+//! exec-panic@scalar-reference:after=1,count=2;
+//! exec-error@scalar-reference:after=3;
+//! latency@native-fixed-point:p=0.1,us=200
+//! ```
+//!
+//! # Determinism
+//!
+//! Whether occurrence `n` of a rule fires is a pure hash of
+//! `(seed, rule index, n)` — see [`FaultPlan::check`] — so the same
+//! spec and seed replay the same multiset of decisions; which *thread*
+//! absorbs a given occurrence still depends on OS scheduling. Sites
+//! are consulted with plain atomic counters: a service with no plan
+//! armed pays a single `Option` check per hook point, nothing more.
+//!
+//! # Sites
+//!
+//! | site | injected at | proves out |
+//! |---|---|---|
+//! | `exec-error` | executor wrapper | retry-channel failover |
+//! | `exec-panic` | executor wrapper | `catch_unwind` + supervisor respawn |
+//! | `latency` | executor wrapper | latency routing, deadlines |
+//! | `bit-flip` | executor wrapper | harness detection of silent corruption |
+//! | `worker-death` | `worker_loop` | unblamed requeue + supervisor respawn |
+//! | `slow-drain` | `worker_loop` | shutdown retire budget |
+
+mod executor;
+mod plan;
+
+pub use executor::{wrap_registry, FaultInjectingExecutor};
+pub use plan::{FaultPlan, FaultRule, FaultShot, FaultSite};

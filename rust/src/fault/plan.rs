@@ -1,0 +1,380 @@
+//! [`FaultPlan`]: a deterministic, seeded schedule of injected faults.
+//!
+//! A plan is parsed from a spec string (see the grammar in
+//! [`crate::fault`]) plus a seed. Each rule names a [`FaultSite`], an
+//! optional backend filter, and an occurrence window; whether a given
+//! *occurrence* of a site fires is a pure function of
+//! `(seed, rule index, occurrence index)` — no wall clock, no global
+//! RNG — so any chaos failure replays exactly from the same spec and
+//! seed. (The mapping of occurrences to *threads* still depends on OS
+//! scheduling; what is deterministic is the multiset of decisions.)
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::SplitMix64;
+
+/// The named places faults can be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The executor returns a transient error instead of executing
+    /// (exercises the retry-channel failover path).
+    ExecError,
+    /// The executor panics mid-batch (exercises `catch_unwind` and the
+    /// pool supervisor).
+    ExecPanic,
+    /// Extra latency is injected before the batch executes.
+    Latency,
+    /// One bit of one result lane is flipped after executing (a
+    /// wrong-result fault the service can *not* detect — for proving
+    /// test harnesses catch silent corruption).
+    BitFlip,
+    /// The worker thread exits without executing (exercises unblamed
+    /// requeue and supervisor respawn).
+    WorkerDeath,
+    /// The worker sleeps before executing (exercises the shutdown
+    /// retire budget under a slow drain).
+    SlowDrain,
+}
+
+impl FaultSite {
+    /// Every site, spec order.
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::ExecError,
+        FaultSite::ExecPanic,
+        FaultSite::Latency,
+        FaultSite::BitFlip,
+        FaultSite::WorkerDeath,
+        FaultSite::SlowDrain,
+    ];
+
+    /// The spec-grammar name of the site.
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultSite::ExecError => "exec-error",
+            FaultSite::ExecPanic => "exec-panic",
+            FaultSite::Latency => "latency",
+            FaultSite::BitFlip => "bit-flip",
+            FaultSite::WorkerDeath => "worker-death",
+            FaultSite::SlowDrain => "slow-drain",
+        }
+    }
+
+    /// Parse a spec-grammar site name.
+    pub fn parse(s: &str) -> Result<Self> {
+        FaultSite::ALL
+            .into_iter()
+            .find(|site| site.label() == s)
+            .with_context(|| {
+                let known: Vec<&str> = FaultSite::ALL.iter().map(|s| s.label()).collect();
+                format!("unknown fault site {s:?} (one of {})", known.join("|"))
+            })
+    }
+}
+
+impl fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One parsed rule: a site, an optional backend filter, and the firing
+/// schedule over that site's occurrence sequence.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    /// Where to inject.
+    pub site: FaultSite,
+    /// Only fire for this backend name (`None` = every backend).
+    pub backend: Option<String>,
+    /// Probability a windowed occurrence fires (default 1.0).
+    pub p: f64,
+    /// Occurrences to skip before the window opens (default 0).
+    pub after: u64,
+    /// Occurrences in the window (default unbounded).
+    pub count: u64,
+    /// Injected delay for latency/slow-drain sites, microseconds
+    /// (default 1000).
+    pub micros: u64,
+}
+
+impl fmt::Display for FaultRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.site)?;
+        if let Some(b) = &self.backend {
+            write!(f, "@{b}")?;
+        }
+        write!(f, ":p={},after={}", self.p, self.after)?;
+        if self.count != u64::MAX {
+            write!(f, ",count={}", self.count)?;
+        }
+        if matches!(self.site, FaultSite::Latency | FaultSite::SlowDrain) {
+            write!(f, ",us={}", self.micros)?;
+        }
+        Ok(())
+    }
+}
+
+/// One fired fault: the rule's delay parameter plus deterministic salt
+/// bits the site can use to derive secondary choices (e.g. which lane
+/// and bit a [`FaultSite::BitFlip`] corrupts).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultShot {
+    /// Injected delay in microseconds (latency/slow-drain sites).
+    pub micros: u64,
+    /// Deterministic per-shot random bits.
+    pub salt: u64,
+}
+
+/// A seeded, armed fault schedule, shared (via `Arc`) by every hook
+/// point. Consulting an un-matching site costs one atomic increment
+/// per matching rule and nothing else; a service with no plan armed
+/// pays only an `Option` check.
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+    /// Per-rule occurrence counters (how many times a matching site
+    /// consulted this rule).
+    counters: Vec<AtomicU64>,
+}
+
+impl fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("seed", &self.seed)
+            .field("rules", &self.rules)
+            .finish_non_exhaustive()
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for rule in &self.rules {
+            write!(f, "; {rule}")?;
+        }
+        Ok(())
+    }
+}
+
+const RULE_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+const OCC_STRIDE: u64 = 0xD1B5_4A32_D192_ED03;
+
+impl FaultPlan {
+    /// Parse a plan from the spec grammar (see [`crate::fault`]):
+    /// `;`-separated rules of the form
+    /// `site[@backend][:key=value[,key=value...]]` with keys
+    /// `p`, `after`, `count`, `us`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (head, kvs) = match part.split_once(':') {
+                Some((h, k)) => (h.trim(), Some(k)),
+                None => (part, None),
+            };
+            let (site_s, backend) = match head.split_once('@') {
+                Some((s, b)) => (s.trim(), Some(b.trim())),
+                None => (head, None),
+            };
+            if backend == Some("") {
+                bail!("empty backend filter in fault rule {part:?}");
+            }
+            let mut rule = FaultRule {
+                site: FaultSite::parse(site_s)?,
+                backend: backend.map(str::to_string),
+                p: 1.0,
+                after: 0,
+                count: u64::MAX,
+                micros: 1000,
+            };
+            for kv in kvs.into_iter().flat_map(|k| k.split(',')) {
+                let kv = kv.trim();
+                if kv.is_empty() {
+                    continue;
+                }
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("fault rule key {kv:?} is not key=value"))?;
+                let (k, v) = (k.trim(), v.trim());
+                match k {
+                    "p" => {
+                        rule.p = v
+                            .parse::<f64>()
+                            .with_context(|| format!("bad fault probability {v:?}"))?;
+                        if !(0.0..=1.0).contains(&rule.p) {
+                            bail!("fault probability {v} outside [0, 1]");
+                        }
+                    }
+                    "after" => {
+                        rule.after =
+                            v.parse().with_context(|| format!("bad fault after {v:?}"))?
+                    }
+                    "count" => {
+                        rule.count =
+                            v.parse().with_context(|| format!("bad fault count {v:?}"))?
+                    }
+                    "us" => {
+                        rule.micros =
+                            v.parse().with_context(|| format!("bad fault us {v:?}"))?
+                    }
+                    other => bail!("unknown fault key {other:?} (p|after|count|us)"),
+                }
+            }
+            rules.push(rule);
+        }
+        if rules.is_empty() {
+            bail!("empty fault plan spec");
+        }
+        let counters = (0..rules.len()).map(|_| AtomicU64::new(0)).collect();
+        Ok(FaultPlan { seed, rules, counters })
+    }
+
+    /// The plan's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The parsed rules, spec order.
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    /// Consult the plan at one site occurrence for one backend.
+    /// Every matching rule's occurrence counter ticks exactly once per
+    /// consultation (this is what makes the decision sequence a pure
+    /// function of the spec and seed); the first rule that fires wins.
+    pub fn check(&self, site: FaultSite, backend: &str) -> Option<FaultShot> {
+        let mut shot = None;
+        for (i, rule) in self.rules.iter().enumerate() {
+            if rule.site != site {
+                continue;
+            }
+            if let Some(b) = &rule.backend {
+                if b != backend {
+                    continue;
+                }
+            }
+            let n = self.counters[i].fetch_add(1, Ordering::Relaxed);
+            if n < rule.after || n - rule.after >= rule.count {
+                continue;
+            }
+            let mut h = SplitMix64::new(
+                self.seed
+                    ^ (i as u64).wrapping_mul(RULE_STRIDE)
+                    ^ n.wrapping_mul(OCC_STRIDE),
+            );
+            let hash = h.next_u64();
+            if rule.p < 1.0 {
+                // top 53 bits -> uniform in [0, 1)
+                let u = (hash >> 11) as f64 * (1.0f64 / (1u64 << 53) as f64);
+                if u >= rule.p {
+                    continue;
+                }
+            }
+            if shot.is_none() {
+                shot = Some(FaultShot { micros: rule.micros, salt: h.next_u64() });
+            }
+        }
+        shot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse(
+            "exec-panic@scalar-reference:after=1,count=2; \
+             latency:us=250,p=0.5; worker-death@native-fixed-point",
+            42,
+        )
+        .unwrap();
+        assert_eq!(plan.seed(), 42);
+        let rules = plan.rules();
+        assert_eq!(rules.len(), 3);
+        assert_eq!(rules[0].site, FaultSite::ExecPanic);
+        assert_eq!(rules[0].backend.as_deref(), Some("scalar-reference"));
+        assert_eq!((rules[0].after, rules[0].count), (1, 2));
+        assert_eq!(rules[0].p, 1.0);
+        assert_eq!(rules[1].site, FaultSite::Latency);
+        assert_eq!(rules[1].backend, None);
+        assert_eq!(rules[1].micros, 250);
+        assert_eq!(rules[1].p, 0.5);
+        assert_eq!(rules[2].site, FaultSite::WorkerDeath);
+        assert_eq!(rules[2].count, u64::MAX);
+        // the rendered plan round-trips through the grammar
+        let rendered = plan.to_string();
+        assert!(rendered.contains("exec-panic@scalar-reference"), "{rendered}");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "",
+            " ; ",
+            "warp-core-breach",
+            "exec-error:p=1.5",
+            "exec-error:p=nope",
+            "exec-error:zap=1",
+            "exec-error:after",
+            "exec-panic@",
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn occurrence_window_is_exact() {
+        let plan = FaultPlan::parse("exec-error:after=2,count=3", 7).unwrap();
+        let fired: Vec<bool> =
+            (0..8).map(|_| plan.check(FaultSite::ExecError, "any").is_some()).collect();
+        assert_eq!(fired, [false, false, true, true, true, false, false, false]);
+    }
+
+    #[test]
+    fn backend_filter_only_ticks_matching_backends() {
+        let plan = FaultPlan::parse("exec-error@alpha:count=1", 7).unwrap();
+        // consultations for other backends neither fire nor consume
+        // the window
+        assert!(plan.check(FaultSite::ExecError, "beta").is_none());
+        assert!(plan.check(FaultSite::ExecPanic, "alpha").is_none());
+        assert!(plan.check(FaultSite::ExecError, "alpha").is_some());
+        assert!(plan.check(FaultSite::ExecError, "alpha").is_none(), "count=1 spent");
+    }
+
+    #[test]
+    fn decision_sequence_is_seed_deterministic() {
+        let spec = "exec-error:p=0.5";
+        let a = FaultPlan::parse(spec, 1234).unwrap();
+        let b = FaultPlan::parse(spec, 1234).unwrap();
+        let c = FaultPlan::parse(spec, 4321).unwrap();
+        let seq = |p: &FaultPlan| -> Vec<bool> {
+            (0..256).map(|_| p.check(FaultSite::ExecError, "x").is_some()).collect()
+        };
+        let (sa, sb, sc) = (seq(&a), seq(&b), seq(&c));
+        assert_eq!(sa, sb, "same spec+seed must replay identically");
+        assert_ne!(sa, sc, "a different seed must produce a different schedule");
+        let fired = sa.iter().filter(|&&f| f).count();
+        assert!((64..=192).contains(&fired), "p=0.5 wildly off: {fired}/256");
+        // salts are deterministic too
+        let d = FaultPlan::parse("bit-flip", 9).unwrap();
+        let e = FaultPlan::parse("bit-flip", 9).unwrap();
+        assert_eq!(
+            d.check(FaultSite::BitFlip, "x").unwrap().salt,
+            e.check(FaultSite::BitFlip, "x").unwrap().salt,
+        );
+    }
+
+    #[test]
+    fn first_matching_rule_wins_but_all_tick() {
+        let plan =
+            FaultPlan::parse("latency:us=100,count=1; latency:us=900", 3).unwrap();
+        // occurrence 0: rule 0 fires (us=100) and rule 1 also ticks
+        assert_eq!(plan.check(FaultSite::Latency, "x").unwrap().micros, 100);
+        // occurrence 1: rule 0's window is spent, rule 1 fires
+        assert_eq!(plan.check(FaultSite::Latency, "x").unwrap().micros, 900);
+    }
+}

@@ -57,6 +57,7 @@ pub mod bench;
 pub mod check;
 pub mod coordinator;
 pub mod dispatch;
+pub mod fault;
 pub mod formats;
 pub mod goldschmidt;
 pub mod kernel;

@@ -3,6 +3,7 @@
 //! service. Run with no arguments for usage.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context as _, Result};
@@ -11,8 +12,11 @@ use goldschmidt::arith::fixed::Fixed;
 use goldschmidt::arith::twos::ComplementKind;
 use goldschmidt::arith::ulp;
 use goldschmidt::area::Comparison;
-use goldschmidt::coordinator::{BatcherConfig, FormatKind, FpuService, ServiceConfig};
+use goldschmidt::coordinator::{
+    BatcherConfig, FormatKind, FpuService, JobPoll, OpKind, ServiceConfig,
+};
 use goldschmidt::dispatch::{standard_registry, RoutePolicy};
+use goldschmidt::fault::FaultPlan;
 use goldschmidt::goldschmidt::{variants, Config};
 use goldschmidt::sim::Design;
 use goldschmidt::tables::ReciprocalTable;
@@ -56,6 +60,15 @@ COMMANDS:
              --<fmt>-wait-us US / --<fmt>-batch MAX (per-format policy
              override, e.g. --f16-wait-us 25 --f64-batch 2048; with the
              default wait, f16/bf16 queues run a 4x tighter age budget)
+             --journal PATH (durable request journal: still-pending
+             records are replayed through the submit path on restart)
+             --durable (journal every request as a single-lane job via
+             the durable API; needs --journal — kill -9 the process and
+             a restart replays whatever never retired)
+             --fault-spec SPEC --fault-seed U64 (deterministic chaos:
+             arm a fault plan, e.g. \"exec-error:p=0.01;latency:us=200\"
+             — see goldschmidt::fault for the grammar; env FAULT_PLAN /
+             FAULT_SEED are the fallbacks, for CI smoke runs)
   version    print version
 ";
 
@@ -381,14 +394,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
+    // deterministic chaos: --fault-spec / --fault-seed arm a seeded
+    // fault plan over every backend (env FAULT_PLAN / FAULT_SEED are
+    // the CI-facing fallbacks — same seed, same spec => same faults)
+    let fault_spec = {
+        let s = args.get_str("fault-spec", "");
+        if s.is_empty() { std::env::var("FAULT_PLAN").unwrap_or_default() } else { s }
+    };
+    let fault_seed: u64 = match args.get_opt::<u64>("fault-seed").map_err(anyhow::Error::msg)? {
+        Some(seed) => seed,
+        None => std::env::var("FAULT_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(1),
+    };
+    let fault = if fault_spec.is_empty() {
+        None
+    } else {
+        let plan = FaultPlan::parse(&fault_spec, fault_seed)
+            .context("parsing --fault-spec / FAULT_PLAN")?;
+        println!("fault plan armed: {plan}");
+        Some(Arc::new(plan))
+    };
+    let journal_arg = args.get_str("journal", "");
+    let journal =
+        if journal_arg.is_empty() { None } else { Some(PathBuf::from(journal_arg)) };
+    let journal_armed = journal.is_some();
+    let durable = args.flag("durable");
+    if durable && !journal_armed {
+        bail!("--durable needs --journal PATH");
+    }
+
     let config = ServiceConfig {
         batcher,
         queue_depth: 65_536,
         workers,
         poll: Duration::from_micros(50),
+        fault,
+        journal,
+        ..ServiceConfig::default()
     };
 
     let svc = start_service(config, &backend, policy, &artifacts)?;
+    if journal_armed {
+        println!("journal: replayed {} pending job(s)", svc.replayed_jobs());
+    }
 
     let spec = WorkloadSpec {
         count: requests,
@@ -407,28 +454,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy.label()
     );
     let t0 = std::time::Instant::now();
-    let handle = svc.handle();
-    let deadline = Duration::from_micros(deadline_us);
-    let mut tickets = Vec::with_capacity(requests);
-    for r in WorkloadGen::generate(spec) {
-        if deadline_us > 0 {
-            // admission control may reject at submit time when the
-            // queue-delay estimate already exceeds the budget: that is
-            // load shedding working, not a serve failure (the rejects
-            // are counted in the metrics snapshot below)
-            match handle.submit_value_deadline(r.op, r.value_a(), r.value_b(), deadline) {
-                Ok(ticket) => tickets.push(ticket),
-                Err(goldschmidt::coordinator::ServiceError::Deadline) => {}
-                Err(e) => return Err(e.into()),
-            }
-        } else {
-            tickets.push(handle.submit_value(r.op, r.value_a(), r.value_b())?);
-        }
-    }
     let mut ok = 0u64;
-    for t in tickets {
-        if t.wait().is_ok() {
-            ok += 1;
+    if durable {
+        // every request becomes a journalled single-lane durable job:
+        // kill -9 anywhere in this loop and a restart replays exactly
+        // the records that never retired
+        let mut ids = Vec::with_capacity(requests);
+        for r in WorkloadGen::generate(spec) {
+            let a = [r.value_a().bits()];
+            let b = [r.value_b().bits()];
+            let b: &[u64] = if matches!(r.op, OpKind::Divide) { &b } else { &[] };
+            ids.push(svc.submit_batch_durable(r.op, format, &a, b)?);
+        }
+        for id in ids {
+            loop {
+                match svc.poll_job(id) {
+                    Some(JobPoll::Done(_)) => {
+                        ok += 1;
+                        break;
+                    }
+                    Some(JobPoll::Failed(_)) => break,
+                    _ => std::thread::sleep(Duration::from_micros(200)),
+                }
+            }
+        }
+    } else {
+        let handle = svc.handle();
+        let deadline = Duration::from_micros(deadline_us);
+        let mut tickets = Vec::with_capacity(requests);
+        for r in WorkloadGen::generate(spec) {
+            if deadline_us > 0 {
+                // admission control may reject at submit time when the
+                // queue-delay estimate already exceeds the budget: that
+                // is load shedding working, not a serve failure (the
+                // rejects are counted in the metrics snapshot below)
+                match handle.submit_value_deadline(r.op, r.value_a(), r.value_b(), deadline) {
+                    Ok(ticket) => tickets.push(ticket),
+                    Err(goldschmidt::coordinator::ServiceError::Deadline) => {}
+                    Err(e) => return Err(e.into()),
+                }
+            } else {
+                tickets.push(handle.submit_value(r.op, r.value_a(), r.value_b())?);
+            }
+        }
+        for t in tickets {
+            if t.wait().is_ok() {
+                ok += 1;
+            }
         }
     }
     let elapsed = t0.elapsed();
@@ -467,10 +539,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if report.len() > 1 {
         let mut t = Table::new(
             "dispatch plane (per backend)",
-            &["backend", "batches ok", "failed", "rerouted", "trips", "probes", "breaker"],
+            &[
+                "backend", "batches ok", "failed", "rerouted", "trips", "probes", "respawns",
+                "breaker",
+            ],
         )
         .aligns(&[
             Align::Left,
+            Align::Right,
             Align::Right,
             Align::Right,
             Align::Right,
@@ -486,7 +562,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 s.rerouted.to_string(),
                 s.trips.to_string(),
                 s.probes.to_string(),
-                if s.breaker_open { "OPEN".into() } else { "closed".into() },
+                s.respawns.to_string(),
+                if s.degraded {
+                    "DEGRADED".into()
+                } else if s.breaker_open {
+                    "OPEN".into()
+                } else {
+                    "closed".into()
+                },
             ]);
         }
         t.print();

@@ -252,6 +252,35 @@ mod tests {
     }
 
     #[test]
+    fn rate_window_under_concurrent_writers() {
+        // RateWindow is not Sync by itself; both of its users (metrics
+        // slices, health latency windows) share it behind a Mutex with
+        // many worker threads writing. The invariants that must hold
+        // under contention: len saturates at N, and the windowed rate
+        // stays inside the [min, max] envelope of the pushed rates.
+        use std::sync::{Arc, Mutex};
+        let w: Arc<Mutex<RateWindow<16>>> = Arc::new(Mutex::new(RateWindow::new()));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let w = w.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1_000u64 {
+                    // rates between 100 and 2000 ns/lane
+                    let rate = 100 + (t * 1_000 + i * 37) % 1_901;
+                    w.lock().unwrap().push(rate * 10, 10);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let w = w.lock().unwrap();
+        assert_eq!(w.len(), 16, "window saturates at N under contention");
+        let rate = w.ns_per_lane().unwrap();
+        assert!((100.0..=2000.0).contains(&rate), "rate outside pushed envelope: {rate}");
+    }
+
+    #[test]
     fn summary_basics() {
         let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0]);
         assert_eq!(s.count(), 5);

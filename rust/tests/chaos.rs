@@ -1,0 +1,342 @@
+//! CHAOS INTEGRATION SUITE: the fault plane driven end-to-end through
+//! the routed service.
+//!
+//! Every test arms a seeded [`FaultPlan`] (or hand-crafts journal
+//! state) and then asserts the service's externally visible contract
+//! survives the injected failures:
+//!
+//! - riders NEVER observe an injected panic/error/worker death — the
+//!   retry channel, breaker, and supervisor absorb them, and results
+//!   stay bit-identical to an uninjected run of the same workload;
+//! - panicked and killed workers are respawned (visible as
+//!   `respawns` in the dispatch report), without marking the pool
+//!   degraded;
+//! - a bit-flip fault (the one fault the service can *not* detect)
+//!   corrupts exactly one lane by exactly one bit — proving the
+//!   harness would catch silent corruption;
+//! - still-`Pending` journal records are replayed exactly once per
+//!   restart (verified by record ids in the raw journal), torn tails
+//!   from a mid-append crash are truncated, and fresh job ids continue
+//!   past every replayed id.
+//!
+//! Everything is deterministic: fault decisions are a pure function of
+//! (spec, seed, occurrence index), so these runs are reproducible.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use goldschmidt::coordinator::{
+    coalesce, BatcherConfig, FormatKind, FpuService, JobPoll, JobStatus, Journal,
+    JournalRecord, OpKind, ServiceConfig, Value,
+};
+use goldschmidt::dispatch::ExecutorRegistry;
+use goldschmidt::fault::{FaultPlan, FaultSite};
+use goldschmidt::runtime::{Executor, NativeExecutor, ScalarReferenceExecutor};
+
+fn f32b(x: f32) -> u64 {
+    u64::from(x.to_bits())
+}
+
+fn config(
+    fault: Option<FaultPlan>,
+    journal: Option<PathBuf>,
+    workers: usize,
+) -> ServiceConfig {
+    ServiceConfig {
+        batcher: BatcherConfig::new(64, Duration::from_micros(100)),
+        queue_depth: 8192,
+        workers,
+        poll: Duration::from_micros(50),
+        fault: fault.map(Arc::new),
+        journal,
+        ..ServiceConfig::default()
+    }
+}
+
+fn native() -> anyhow::Result<Box<dyn Executor>> {
+    Ok(Box::new(NativeExecutor::with_defaults()))
+}
+
+/// scalar-reference preferred (2 workers), native-fixed-point as the
+/// failover candidate — the shape every blamed-failure test wants.
+fn scalar_then_native() -> ExecutorRegistry {
+    ExecutorRegistry::new()
+        .register_with_workers(
+            || Ok(Box::new(ScalarReferenceExecutor::with_defaults()) as Box<dyn Executor>),
+            2,
+        )
+        .register(native)
+}
+
+/// A deterministic mixed divide/sqrt f32 workload; returns each
+/// rider's result bits in submission order. Panics if any rider
+/// observes an error — chaos must stay invisible.
+fn run_workload(svc: &FpuService, n: u32) -> Vec<u64> {
+    let handle = svc.handle();
+    let mut tickets = Vec::with_capacity(n as usize);
+    for i in 0..n {
+        let a = Value::from_f64(FormatKind::F32, 1.0 + f64::from(i % 97) * 0.375);
+        let b = Value::from_f64(FormatKind::F32, 1.0 + f64::from(i % 13) * 0.25);
+        let op = if i % 5 == 4 { OpKind::Sqrt } else { OpKind::Divide };
+        tickets.push(handle.submit_value(op, a, b).expect("submit"));
+    }
+    tickets
+        .into_iter()
+        .map(|t| t.wait().expect("rider must not observe an injected fault").value.bits())
+        .collect()
+}
+
+/// Poll a durable job to completion (5s budget).
+fn poll_done(svc: &FpuService, id: u64) -> Vec<u64> {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match svc.poll_job(id) {
+            Some(JobPoll::Done(bits)) => return bits,
+            Some(JobPoll::Failed(e)) => panic!("durable job {id} failed: {e}"),
+            _ => {
+                assert!(Instant::now() < deadline, "durable job {id} did not retire in time");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+fn temp_journal(tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("goldschmidt-chaos-{tag}-{}.bin", std::process::id()));
+    let _ = fs::remove_file(&path);
+    path
+}
+
+/// Same spec + same seed -> the same decision sequence, shot for shot;
+/// a different seed diverges. This is what makes a chaos run
+/// reproducible from its two-value fingerprint.
+#[test]
+fn fault_plan_decisions_are_a_pure_function_of_spec_and_seed() {
+    let spec = "exec-error@b0:p=0.5;latency:p=0.25,us=7";
+    let a = FaultPlan::parse(spec, 0xC0FFEE).unwrap();
+    let b = FaultPlan::parse(spec, 0xC0FFEE).unwrap();
+    let mut fired = 0u32;
+    for _ in 0..256 {
+        let (x, y) = (a.check(FaultSite::ExecError, "b0"), b.check(FaultSite::ExecError, "b0"));
+        assert_eq!(x.is_some(), y.is_some(), "twin plans must agree");
+        fired += u32::from(x.is_some());
+    }
+    assert!(fired > 0 && fired < 256, "p=0.5 over 256 draws fired {fired} times");
+
+    let c = FaultPlan::parse(spec, 1).unwrap();
+    let d = FaultPlan::parse(spec, 2).unwrap();
+    let seq = |p: &FaultPlan| -> Vec<bool> {
+        (0..256)
+            .map(|_| match p.check(FaultSite::Latency, "any-backend") {
+                Some(shot) => {
+                    assert_eq!(shot.micros, 7);
+                    true
+                }
+                None => false,
+            })
+            .collect()
+    };
+    assert_ne!(seq(&c), seq(&d), "different seeds must diverge");
+}
+
+#[test]
+fn fault_spec_rejects_malformed_rules() {
+    for bad in [
+        "",                      // empty plan
+        "no-such-site",          // unknown site
+        "exec-error:p=banana",   // unparsable probability
+        "exec-error:p=1.5",      // probability outside [0, 1]
+        "latency:wat=1",         // unknown key
+        "exec-panic@:p=1",       // empty backend filter
+        "latency:us",            // key without value
+    ] {
+        assert!(FaultPlan::parse(bad, 1).is_err(), "spec {bad:?} must be rejected");
+    }
+}
+
+/// ISSUE 6 acceptance: injected executor panics + a permanent error
+/// window on the preferred backend, plus latency on the failover
+/// backend. Zero rider errors, results bit-identical to a clean run,
+/// and the panicked scalar workers respawned.
+#[test]
+fn riders_survive_injected_panics_and_errors_bit_identically() {
+    let clean = FpuService::start_routed(config(None, None, 2), scalar_then_native()).unwrap();
+    let want = run_workload(&clean, 400);
+    clean.shutdown();
+
+    let spec = "exec-panic@scalar-reference:after=1,count=2;\
+                exec-error@scalar-reference:after=4,count=100000;\
+                latency@native-fixed-point:count=3,us=200";
+    let plan = FaultPlan::parse(spec, 0xDECAF).unwrap();
+    let svc = FpuService::start_routed(config(Some(plan), None, 2), scalar_then_native()).unwrap();
+    let got = run_workload(&svc, 400);
+    assert_eq!(got, want, "failover must be bit-invisible to riders");
+    assert_eq!(svc.metrics().snapshot().total_errors(), 0, "no rider-visible errors");
+
+    let report = svc.dispatch_report();
+    let scalar = report
+        .iter()
+        .find(|(name, _)| *name == "scalar-reference")
+        .expect("scalar backend in report")
+        .1;
+    assert!(scalar.respawns >= 1, "panicked workers must be respawned (saw {})", scalar.respawns);
+    assert!(scalar.failed_batches >= 2, "both injected panics are blamed on scalar");
+    assert!(scalar.rerouted >= 1, "blamed batches fail over to native");
+    svc.shutdown();
+}
+
+/// Worker-death faults (thread exits without executing) are unblamed:
+/// the batch requeues to the same (respawned) pool, nothing trips the
+/// breaker, and no rider notices.
+#[test]
+fn worker_death_is_unblamed_requeued_and_respawned() {
+    let clean = FpuService::start(config(None, None, 2), native).unwrap();
+    let want = run_workload(&clean, 300);
+    clean.shutdown();
+
+    let plan = FaultPlan::parse("worker-death@native-fixed-point:after=0,count=2", 7).unwrap();
+    let svc = FpuService::start(config(Some(plan), None, 2), native).unwrap();
+    let got = run_workload(&svc, 300);
+    assert_eq!(got, want, "killed workers must not change any result");
+    assert_eq!(svc.metrics().snapshot().total_errors(), 0);
+
+    let report = svc.dispatch_report();
+    assert_eq!(report.len(), 1);
+    let snap = report[0].1;
+    assert!(snap.respawns >= 1, "dead workers must be respawned (saw {})", snap.respawns);
+    assert!(!snap.breaker_open, "unblamed deaths must not open the breaker");
+    assert!(!snap.degraded, "a successfully respawned pool is not degraded");
+    svc.shutdown();
+}
+
+/// The one fault the service can NOT absorb: a silent single-bit
+/// result flip. Exactly one lane differs from the clean run, by
+/// exactly one bit, with zero reported errors — the negative control
+/// proving result-validating harnesses are load-bearing.
+#[test]
+fn bit_flip_corrupts_exactly_one_lane_end_to_end() {
+    // 64 live lanes fill the smallest ladder rung exactly, so there is
+    // no padding and the flipped lane is always a rider's lane
+    let a: Vec<u64> = (0..64).map(|i| f32b(3.0 + i as f32)).collect();
+    let b: Vec<u64> = (0..64).map(|i| f32b(1.0 + (i % 7) as f32)).collect();
+
+    let clean = FpuService::start(config(None, None, 1), native).unwrap();
+    let want: Vec<u64> = clean
+        .handle()
+        .submit_batch(OpKind::Divide, FormatKind::F32, &a, &b)
+        .unwrap()
+        .wait()
+        .unwrap()
+        .values()
+        .map(|v| v.bits())
+        .collect();
+    clean.shutdown();
+
+    let plan = FaultPlan::parse("bit-flip@native-fixed-point:after=0,count=1", 0xB17).unwrap();
+    let svc = FpuService::start(config(Some(plan), None, 1), native).unwrap();
+    let got: Vec<u64> = svc
+        .handle()
+        .submit_batch(OpKind::Divide, FormatKind::F32, &a, &b)
+        .unwrap()
+        .wait()
+        .unwrap()
+        .values()
+        .map(|v| v.bits())
+        .collect();
+    let diffs: Vec<usize> = (0..64).filter(|&i| got[i] != want[i]).collect();
+    assert_eq!(diffs.len(), 1, "exactly one corrupted lane, got {diffs:?}");
+    assert_eq!(
+        (got[diffs[0]] ^ want[diffs[0]]).count_ones(),
+        1,
+        "corruption is a single flipped bit"
+    );
+    assert_eq!(svc.metrics().snapshot().total_errors(), 0, "bit flips are silent");
+    svc.shutdown();
+}
+
+/// Crash-replay durability, by record id: a journal holding one
+/// still-Pending record (plus a torn tail from the "crash") replays
+/// exactly once on restart, the outcome is journalled as exactly one
+/// Done record, a second restart replays nothing, and fresh ids
+/// continue past the replayed one.
+#[test]
+fn journal_replays_pending_exactly_once_after_torn_tail() {
+    let path = temp_journal("replay");
+    {
+        let (mut j, recs) = Journal::open(&path).unwrap();
+        assert!(recs.is_empty());
+        j.append(&JournalRecord::pending(
+            5,
+            OpKind::Divide,
+            FormatKind::F32,
+            vec![f32b(6.0), f32b(9.0)],
+            vec![f32b(2.0), f32b(3.0)],
+        ))
+        .unwrap();
+    }
+    // a crash mid-append leaves a torn tail; open() must truncate it
+    {
+        let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0x13, 0x37, 0xFE]).unwrap();
+    }
+
+    let svc = FpuService::start(config(None, Some(path.clone()), 1), native).unwrap();
+    assert_eq!(svc.replayed_jobs(), 1, "one Pending record replays");
+    assert_eq!(poll_done(&svc, 5), vec![f32b(3.0), f32b(3.0)]);
+    let id = svc
+        .submit_batch_durable(OpKind::Divide, FormatKind::F32, &[f32b(8.0)], &[f32b(2.0)])
+        .unwrap();
+    assert_eq!(id, 6, "fresh ids continue past the replayed id");
+    assert_eq!(poll_done(&svc, 6), vec![f32b(4.0)]);
+    svc.shutdown();
+
+    let svc2 = FpuService::start(config(None, Some(path.clone()), 1), native).unwrap();
+    assert_eq!(svc2.replayed_jobs(), 0, "a retired job must never replay twice");
+    assert!(matches!(svc2.poll_job(5), Some(JobPoll::Done(_))));
+    assert!(matches!(svc2.poll_job(6), Some(JobPoll::Done(_))));
+    svc2.shutdown();
+
+    // the raw journal shows the exactly-once story per record id
+    let (_, recs) = Journal::open(&path).unwrap();
+    let statuses: Vec<JobStatus> =
+        recs.iter().filter(|r| r.id == 5).map(|r| r.status).collect();
+    assert_eq!(statuses, vec![JobStatus::Pending, JobStatus::Done]);
+    let _ = fs::remove_file(&path);
+}
+
+/// Durability and chaos compose: durable jobs submitted while the
+/// preferred backend panics and errors still all retire Done with the
+/// right bits, and the journal coalesces to one Done per id.
+#[test]
+fn durable_jobs_complete_under_panic_chaos() {
+    let path = temp_journal("durable");
+    let spec = "exec-panic@scalar-reference:after=2,count=1;\
+                exec-error@scalar-reference:after=6,count=4";
+    let plan = FaultPlan::parse(spec, 99).unwrap();
+    let svc =
+        FpuService::start_routed(config(Some(plan), Some(path.clone()), 2), scalar_then_native())
+            .unwrap();
+
+    let mut ids = Vec::new();
+    for i in 0..40u32 {
+        let a = f32b(2.0 * (1.0 + (i % 9) as f32));
+        ids.push(
+            svc.submit_batch_durable(OpKind::Divide, FormatKind::F32, &[a], &[f32b(2.0)])
+                .unwrap(),
+        );
+    }
+    for (i, id) in ids.iter().enumerate() {
+        let want = f32b(1.0 + (i as u32 % 9) as f32);
+        assert_eq!(poll_done(&svc, *id), vec![want], "durable job {id}");
+    }
+    svc.shutdown();
+
+    let (_, recs) = Journal::open(&path).unwrap();
+    let done = coalesce(recs).into_iter().filter(|r| r.status == JobStatus::Done).count();
+    assert_eq!(done, 40, "every durable job coalesces to Done");
+    let _ = fs::remove_file(&path);
+}

@@ -23,6 +23,7 @@ fn config() -> ServiceConfig {
         queue_depth: 4096,
         workers: 1,
         poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
     }
 }
 

@@ -21,6 +21,7 @@ fn config() -> ServiceConfig {
         queue_depth: 4096,
         workers: 2,
         poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
     }
 }
 
@@ -188,6 +189,7 @@ fn deadline_expiry_sheds_instead_of_executing() {
         queue_depth: 1024,
         workers: 1,
         poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
     };
     let svc = FpuService::start(cfg, || {
         Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)
@@ -230,6 +232,7 @@ fn vectored_deadline_sheds_whole_group() {
         queue_depth: 1024,
         workers: 1,
         poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
     };
     let svc = FpuService::start(cfg, || {
         Ok(Box::new(NativeExecutor::with_defaults()) as Box<dyn Executor>)

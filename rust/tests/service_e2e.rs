@@ -26,6 +26,7 @@ fn quick_config() -> ServiceConfig {
         queue_depth: 8192,
         workers: 2,
         poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
     }
 }
 
@@ -99,6 +100,7 @@ fn backpressure_try_submit_reports_overloaded() {
         queue_depth: 8,
         workers: 1,
         poll: Duration::from_micros(20),
+        ..ServiceConfig::default()
     };
     let svc = FpuService::start(config, || {
         Ok(Box::new(Slow(NativeExecutor::with_defaults())) as Box<dyn Executor>)
@@ -310,6 +312,7 @@ fn pjrt_service_end_to_end() {
         queue_depth: 8192,
         workers: 1,
         poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
     };
     let svc = FpuService::start(config, move || {
         let mut ex = PjrtExecutor::from_dir(&dir)?;
