@@ -20,6 +20,7 @@ use goldschmidt::dispatch::{ExecutorRegistry, RoutePolicy};
 use goldschmidt::formats::{self, FloatFormat, Value};
 use goldschmidt::goldschmidt::{divide_f32, Config};
 use goldschmidt::kernel::{BatchScratch, GoldschmidtContext};
+use goldschmidt::obs::TraceConfig;
 use goldschmidt::runtime::{Executor, NativeExecutor, ScalarReferenceExecutor, U128BaselineExecutor};
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::json::Json;
@@ -454,6 +455,46 @@ fn main() {
     }
     t.print();
     report.push(("routed_vs_direct", Json::arr(routed_rows)));
+
+    // ---- trace-plane overhead: off vs sampled vs all-on ------------------
+    // same routed f32 divide volume with the obs trace plane disarmed,
+    // at the shipping 1-in-64 sample, and tracing every request. The
+    // acceptance bar is <5% overhead at 1-in-64 (CI asserts the
+    // machine-readable overhead_vs_off with quick-mode headroom).
+    let mut t = Table::new(
+        "trace overhead (routed f32 divide per-request, workers=2)",
+        &["mode", "req/s", "mean lat", "p99 lat", "overhead"],
+    )
+    .aligns(&[Align::Right; 5]);
+    let mut trace_rows = Vec::new();
+    let mut off_rps = 0.0f64;
+    for &(mode, sample) in &[("off", 0u64), ("sampled_64", 64), ("all_on", 1)] {
+        let mut cfg = service_config(1024, 200, 2);
+        if sample > 0 {
+            cfg.trace = Some(TraceConfig { sample, ..TraceConfig::default() });
+        }
+        let r = drive_per_request_divide(routed_service(cfg, RoutePolicy::Static));
+        if mode == "off" {
+            off_rps = r.reqs_per_s;
+        }
+        let overhead = if r.reqs_per_s > 0.0 { off_rps / r.reqs_per_s - 1.0 } else { 0.0 };
+        t.row(&[
+            mode.to_string(),
+            format!("{:.0}", r.reqs_per_s),
+            fmt_ns(r.mean_lat_ns),
+            fmt_ns(r.p99_lat_ns as f64),
+            format!("{:+.1}%", 100.0 * overhead),
+        ]);
+        let mut row = r.json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("mode".into(), Json::from(mode));
+            map.insert("sample".into(), Json::from(sample));
+            map.insert("overhead_vs_off".into(), Json::from(overhead));
+        }
+        trace_rows.push(row);
+    }
+    t.print();
+    report.push(("trace_overhead", Json::arr(trace_rows)));
 
     // ---- PJRT backend (the real three-layer path) -----------------------
     #[cfg(feature = "pjrt")]

@@ -24,6 +24,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::formats::{PlaneBuf, PlaneWidth};
+use crate::obs::{TraceEvent, TraceKind, TracePlane};
 use crate::runtime::caps::BackendCaps;
 
 use super::metrics::Metrics;
@@ -211,6 +212,16 @@ pub struct Batch {
     /// batch — the dispatch plane's retry chain never re-offers a batch
     /// to a backend that failed it.
     pub tried: u8,
+    /// When this batch was formed (the boundary between a rider's
+    /// queue-wait and batch stages in the trace decomposition).
+    pub formed_at: Instant,
+    /// Whether any rider in this batch is trace-sampled — the worker
+    /// emits per-request stage spans only for sampled riders.
+    pub sampled: bool,
+    /// Nanoseconds burned on failed execution attempts before the
+    /// successful one (accumulated across failover hops; the trace's
+    /// failover stage).
+    pub failover_ns: u64,
 }
 
 impl Batch {
@@ -266,6 +277,7 @@ impl BackendShape {
 pub struct DynamicBatcher {
     config: BatcherConfig,
     backends: Vec<BackendShape>,
+    trace: Option<Arc<TracePlane>>,
 }
 
 impl DynamicBatcher {
@@ -278,7 +290,14 @@ impl DynamicBatcher {
     /// order matching the dispatch plane's routing table.
     pub fn routed(config: BatcherConfig, caps: &[BackendCaps]) -> Self {
         assert!(!caps.is_empty(), "batcher needs at least one backend");
-        Self { config, backends: caps.iter().map(BackendShape::from_caps).collect() }
+        Self { config, backends: caps.iter().map(BackendShape::from_caps).collect(), trace: None }
+    }
+
+    /// Attach a trace plane: batch formation then emits batch-formed
+    /// events for sampled batches and error-class shed events.
+    pub fn with_trace(mut self, trace: Option<Arc<TracePlane>>) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// The config in force.
@@ -395,6 +414,14 @@ impl DynamicBatcher {
         for item in drained {
             if item.expired(now) {
                 shed += item.lanes();
+                if let Some(trace) = &self.trace {
+                    // sheds are error-class: captured at 100%
+                    trace.emit(
+                        TraceEvent::new(TraceKind::Shed, trace.ns_of(now))
+                            .req(item.id, op, format)
+                            .with_lanes(item.lanes()),
+                    );
+                }
                 item.fail(ServiceError::Deadline);
             } else {
                 items.push(item);
@@ -429,7 +456,31 @@ impl DynamicBatcher {
         if divide {
             b.resize(padded, one);
         }
-        Some(Batch { op, format, items, a, b, padded, backend, tried: 0 })
+        let sampled = items.iter().any(|i| i.sampled);
+        if sampled {
+            if let Some(trace) = &self.trace {
+                trace.emit(
+                    TraceEvent::new(TraceKind::BatchFormed, trace.ns_of(now))
+                        .req(items[0].id, op, format)
+                        .on_backend(backend)
+                        .with_lanes(live)
+                        .with_arg(padded as u64),
+                );
+            }
+        }
+        Some(Batch {
+            op,
+            format,
+            items,
+            a,
+            b,
+            padded,
+            backend,
+            tried: 0,
+            formed_at: now,
+            sampled,
+            failover_ns: 0,
+        })
     }
 
     /// Form batches for every (op, format) queue that should flush at
@@ -673,6 +724,9 @@ mod tests {
             padded: 0,
             backend: 0,
             tried: 0,
+            formed_at: Instant::now(),
+            sampled: false,
+            failover_ns: 0,
         };
         assert_eq!(batch.waste(), 0.0);
     }
@@ -842,6 +896,57 @@ mod tests {
         assert!(batches.is_empty());
         assert!(r.is_empty());
         assert_eq!(metrics.snapshot().op_format(OpKind::Sqrt, F32).shed, 5);
+    }
+
+    #[test]
+    fn batch_formation_traces_sheds_and_sampled_batches() {
+        use crate::obs::{TraceConfig, TraceKind, TracePlane};
+        let trace = Arc::new(TracePlane::new(TraceConfig { sample: 1, capacity: 64 }));
+        let b = batcher(1024, 0).with_trace(Some(trace.clone()));
+        let metrics = Metrics::new();
+        let pool = PlanePool::new();
+        let mut r = Router::new();
+        let past = Instant::now() - Duration::from_millis(1);
+        let (expired, _t) = {
+            let (mut item, t) = WorkItem::single(
+                7,
+                OpKind::Divide,
+                Value::F32(6.0),
+                Value::F32(2.0),
+                Some(past),
+            );
+            item.enqueued_at = past;
+            (item, t)
+        };
+        r.route(expired);
+        let mut live = req(8, OpKind::Divide);
+        live.sampled = true;
+        r.route(live);
+        let now = Instant::now();
+        let batch =
+            b.form_batch(&mut r, OpKind::Divide, F32, now, &pool, &metrics).unwrap();
+        assert!(batch.sampled, "a sampled rider marks the whole batch");
+        assert_eq!(batch.formed_at, now);
+        assert_eq!(batch.failover_ns, 0);
+        let evs = trace.events();
+        let shed: Vec<_> = evs.iter().filter(|e| e.kind == TraceKind::Shed).collect();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 7, "the expired rider is the shed event");
+        let formed: Vec<_> =
+            evs.iter().filter(|e| e.kind == TraceKind::BatchFormed).collect();
+        assert_eq!(formed.len(), 1);
+        assert_eq!(formed[0].id, 8, "batch-formed carries the first live rider's id");
+        assert_eq!(formed[0].lanes, 1);
+        // an unsampled batch forms silently
+        r.route(req(9, OpKind::Divide));
+        let batch = form(&b, &mut r, OpKind::Divide, F32).unwrap();
+        assert!(!batch.sampled);
+        let evs = trace.events();
+        assert_eq!(
+            evs.iter().filter(|e| e.kind == TraceKind::BatchFormed).count(),
+            1,
+            "no batch-formed event for an unsampled batch"
+        );
     }
 
     #[test]

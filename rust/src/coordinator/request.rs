@@ -174,6 +174,12 @@ pub struct WorkItem {
     pub enqueued_at: Instant,
     /// Optional completion deadline; expired items are shed, not run.
     pub deadline: Option<Instant>,
+    /// Whole-lifecycle trace sampling flag: set at submit time by the
+    /// service handle (1-in-N by request id), carried through routing
+    /// and batch formation so every stage of a sampled request is
+    /// captured — or none of it. Error-class trace events ignore this
+    /// flag entirely (they are always captured).
+    pub sampled: bool,
     format: FormatKind,
     payload: Payload,
     completion: Arc<TicketCore>,
@@ -200,6 +206,7 @@ impl WorkItem {
             op,
             enqueued_at: Instant::now(),
             deadline,
+            sampled: false,
             format,
             payload: Payload::One { a: a.bits(), b: b.bits() },
             completion: core.clone(),
@@ -244,6 +251,7 @@ impl WorkItem {
             op,
             enqueued_at: Instant::now(),
             deadline,
+            sampled: false,
             format,
             payload: Payload::Group {
                 planes: Arc::new(GroupPlanes {
@@ -292,6 +300,7 @@ impl WorkItem {
                     op: self.op,
                     enqueued_at: self.enqueued_at,
                     deadline: self.deadline,
+                    sampled: self.sampled,
                     format: self.format,
                     payload: Payload::Group {
                         planes: planes.clone(),

@@ -15,7 +15,10 @@
 //! invisible to the client).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
+
+use crate::obs::{TraceEvent, TraceKind, TracePlane};
 
 use super::request::{op_format_slot as slot, FormatKind, OpKind, WorkItem, OP_FORMAT_SLOTS};
 
@@ -32,6 +35,9 @@ pub struct Router {
     deadline_items: [usize; OP_FORMAT_SLOTS],
     routed: u64,
     drained: u64,
+    /// Trace sink for enqueue events on sampled items (None = no
+    /// tracing; the route hot path pays one `Option` check).
+    trace: Option<Arc<TracePlane>>,
 }
 
 impl Default for Router {
@@ -50,12 +56,27 @@ impl Router {
             deadline_items: [0; OP_FORMAT_SLOTS],
             routed: 0,
             drained: 0,
+            trace: None,
         }
+    }
+
+    /// Arm (or disarm) trace emission for sampled items.
+    pub fn set_trace(&mut self, trace: Option<Arc<TracePlane>>) {
+        self.trace = trace;
     }
 
     /// Route one item to its (op, format) queue.
     pub fn route(&mut self, item: WorkItem) {
         let s = slot(item.op, item.format());
+        if item.sampled {
+            if let Some(t) = &self.trace {
+                t.emit(
+                    TraceEvent::new(TraceKind::Enqueue, t.now_ns())
+                        .req(item.id, item.op, item.format())
+                        .with_lanes(item.lanes()),
+                );
+            }
+        }
         self.lanes[s] += item.lanes();
         self.routed += item.lanes() as u64;
         if let Some(d) = item.deadline {
@@ -313,6 +334,23 @@ mod tests {
         r.route(req(4, OpKind::Divide));
         let _ = r.drain(OpKind::Divide, FormatKind::F32, 1);
         assert_eq!(r.earliest_deadline_in(OpKind::Divide, FormatKind::F32), None);
+    }
+
+    #[test]
+    fn sampled_items_emit_enqueue_events() {
+        use crate::obs::{TraceConfig, TraceKind, TracePlane};
+        let plane = Arc::new(TracePlane::new(TraceConfig { sample: 1, capacity: 64 }));
+        let mut r = Router::new();
+        r.set_trace(Some(plane.clone()));
+        let mut item = group(7, OpKind::Divide, FormatKind::F32, 3);
+        item.sampled = true;
+        r.route(item);
+        r.route(req(8, OpKind::Sqrt)); // unsampled: silent
+        let events = plane.events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, TraceKind::Enqueue);
+        assert_eq!(events[0].id, 7);
+        assert_eq!(events[0].lanes, 3);
     }
 
     #[test]

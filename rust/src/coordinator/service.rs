@@ -69,6 +69,7 @@ use crate::dispatch::{
 };
 use crate::fault::{FaultPlan, FaultSite};
 use crate::formats::{PlaneRefMut, PlaneWidth};
+use crate::obs::{TraceConfig, TraceEvent, TraceKind, TracePlane};
 use crate::runtime::caps::BackendCaps;
 use crate::runtime::executor::Executor;
 
@@ -105,6 +106,13 @@ pub struct ServiceConfig {
     /// (a serviced retry) resets the clock, so a long candidate chain
     /// gets this budget per hop, not one shared bound.
     pub retire_budget: Duration,
+    /// Trace-plane configuration (`None` = tracing off; an untraced
+    /// service pays one `Option` check per hook point). See
+    /// [`crate::obs`] for the sampling and export story.
+    pub trace: Option<TraceConfig>,
+    /// Emit a one-line service snapshot delta at this interval from a
+    /// dedicated `fpu-stats-emitter` thread (`None` = no emitter).
+    pub stats_interval: Option<Duration>,
 }
 
 impl Default for ServiceConfig {
@@ -117,6 +125,8 @@ impl Default for ServiceConfig {
             fault: None,
             journal: None,
             retire_budget: SHUTDOWN_RETIRE_BUDGET,
+            trace: None,
+            stats_interval: None,
         }
     }
 }
@@ -136,9 +146,39 @@ pub struct ServiceHandle {
     next_id: Arc<AtomicU64>,
     caps: Arc<BackendCaps>,
     metrics: Arc<Metrics>,
+    trace: Option<Arc<TracePlane>>,
 }
 
 impl ServiceHandle {
+    /// Stamp the whole-lifecycle sampling decision (1-in-N by request
+    /// id) and emit the Submit instant for sampled requests. Called
+    /// once per constructed item, right after id assignment — every
+    /// later stage keys off `item.sampled`, so a request is traced in
+    /// full or not at all.
+    fn mark_submit(&self, item: &mut WorkItem) {
+        if let Some(t) = &self.trace {
+            if t.sampled(item.id) {
+                item.sampled = true;
+                t.emit(
+                    TraceEvent::new(TraceKind::Submit, t.now_ns())
+                        .req(item.id, item.op, item.format())
+                        .with_lanes(item.lanes()),
+                );
+            }
+        }
+    }
+
+    /// Error-class Reject event (always captured; submit-time failures
+    /// have no request id yet, so `id` stays 0).
+    fn note_reject(&self, op: OpKind, format: FormatKind, lanes: usize) {
+        if let Some(t) = &self.trace {
+            t.emit(
+                TraceEvent::new(TraceKind::Reject, t.now_ns())
+                    .req(0, op, format)
+                    .with_lanes(lanes),
+            );
+        }
+    }
     /// The backend's negotiated capability table (what this service can
     /// serve, per (op, format), and at which batch sizes).
     pub fn capabilities(&self) -> &BackendCaps {
@@ -172,6 +212,7 @@ impl ServiceHandle {
             if Duration::from_nanos(est_ns) > deadline && !self.metrics.admission_probe(op, format)
             {
                 self.metrics.record_admission_reject(op, format, lanes as u64);
+                self.note_reject(op, format, lanes);
                 return Err(ServiceError::Deadline);
             }
         }
@@ -182,6 +223,7 @@ impl ServiceHandle {
         if self.caps.supports(op, format) {
             Ok(())
         } else {
+            self.note_reject(op, format, 0);
             Err(ServiceError::Rejected {
                 reason: format!(
                     "backend {} does not serve ({}, {format})",
@@ -229,7 +271,10 @@ impl ServiceHandle {
     ) -> Result<(WorkItem, Ticket), ServiceError> {
         self.check_single(op, a, b)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Ok(WorkItem::single(id, op, a, b, deadline.map(|d| Instant::now() + d)))
+        let (mut item, ticket) =
+            WorkItem::single(id, op, a, b, deadline.map(|d| Instant::now() + d));
+        self.mark_submit(&mut item);
+        Ok((item, ticket))
     }
 
     /// Submit one op on format-tagged operands; returns the [`Ticket`]
@@ -358,8 +403,9 @@ impl ServiceHandle {
         deadline: Option<Duration>,
     ) -> Result<BatchTicket, ServiceError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (item, ticket) =
+        let (mut item, ticket) =
             WorkItem::group(id, op, format, a, b, deadline.map(|d| Instant::now() + d));
+        self.mark_submit(&mut item);
         self.send(item)?;
         Ok(ticket)
     }
@@ -470,7 +516,21 @@ type RetireMsg = (u64, OpKind, FormatKind, BatchTicket);
 /// appends the terminal `Done`/`Failed` record (operand planes are not
 /// repeated — `coalesce` keeps the last record per id, and a terminal
 /// record needs no replay data).
-fn retirer_loop(rx: Receiver<RetireMsg>, state: Arc<DurableState>) {
+fn retirer_loop(rx: Receiver<RetireMsg>, state: Arc<DurableState>, trace: Option<Arc<TracePlane>>) {
+    // journal-append instants are an id-less sampling site (the durable
+    // job id is not the request id the submit sample keyed on), so they
+    // are gated by the plane's occurrence counter instead
+    let note_append = |id: u64, op: OpKind, format: FormatKind, arg: u64| {
+        if let Some(t) = &trace {
+            if t.tick_sampled() {
+                t.emit(
+                    TraceEvent::new(TraceKind::JournalAppend, t.now_ns())
+                        .req(id, op, format)
+                        .with_arg(arg),
+                );
+            }
+        }
+    };
     while let Ok((id, op, format, ticket)) = rx.recv() {
         let outcome = ticket.wait();
         let mut rec = JournalRecord::pending(id, op, format, Vec::new(), Vec::new());
@@ -481,12 +541,14 @@ fn retirer_loop(rx: Receiver<RetireMsg>, state: Arc<DurableState>) {
                 // journal before the poll table: a job never reads Done
                 // unless its record is on disk
                 let _ = state.journal.lock().unwrap().append(&rec);
+                note_append(id, op, format, 1);
                 state.jobs.lock().unwrap().insert(id, JobPoll::Done(rec.result));
             }
             Err(err) => {
                 rec.status = JobStatus::Failed;
                 rec.error = format!("{err}");
                 let _ = state.journal.lock().unwrap().append(&rec);
+                note_append(id, op, format, 2);
                 state.jobs.lock().unwrap().insert(id, JobPoll::Failed(err));
             }
         }
@@ -508,6 +570,9 @@ pub struct FpuService {
     retirer: Option<JoinHandle<()>>,
     retirer_tx: Option<mpsc::Sender<RetireMsg>>,
     replayed: usize,
+    trace: Option<Arc<TracePlane>>,
+    stats_stop: Arc<AtomicBool>,
+    stats_emitter: Option<JoinHandle<()>>,
 }
 
 /// A batch a worker could not execute, handed back to the dispatcher
@@ -588,6 +653,7 @@ struct WorkerCtx {
     fault: Option<Arc<FaultPlan>>,
     exit_tx: mpsc::Sender<ExitNotice>,
     next_slot_id: Arc<AtomicU64>,
+    trace: Option<Arc<TracePlane>>,
 }
 
 /// An abnormal worker exit (panic or injected death), reported to the
@@ -694,6 +760,9 @@ fn supervisor_loop(
                 Ok(handle) => {
                     ctx.health.record_respawn(b);
                     ctx.health.set_degraded(b, false);
+                    if let Some(t) = &ctx.trace {
+                        t.emit(TraceEvent::new(TraceKind::Respawn, t.now_ns()).on_backend(b));
+                    }
                     respawned.push(handle);
                     break;
                 }
@@ -716,6 +785,78 @@ fn supervisor_loop(
     drop(ctxs);
     for h in respawned {
         let _ = h.join();
+    }
+}
+
+/// The `fpu-stats-emitter` thread: one `stats:` line per interval,
+/// reporting **deltas** where counters are cumulative (qps, respawns,
+/// trace drops — the `+N` fields) and **levels** elsewhere (queued
+/// lanes, per-slot latency percentiles, breaker/degraded states).
+/// Sleeps in short slices so shutdown never waits out a full interval.
+fn stats_emitter_loop(
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    health: Arc<HealthBoard>,
+    names: Vec<&'static str>,
+    trace: Option<Arc<TracePlane>>,
+) {
+    let mut last_requests = 0u64;
+    let mut last_respawns = 0u64;
+    let mut last_drops = 0u64;
+    let mut last = Instant::now();
+    loop {
+        while last.elapsed() < interval {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            std::thread::sleep(interval.min(Duration::from_millis(20)));
+        }
+        let elapsed = last.elapsed().as_secs_f64();
+        last = Instant::now();
+        let snap = metrics.snapshot();
+        let requests = snap.total_requests();
+        let qps = (requests - last_requests) as f64 / elapsed.max(1e-9);
+        last_requests = requests;
+        let queued: u64 = OpKind::ALL
+            .iter()
+            .flat_map(|&op| FormatKind::ALL.iter().map(move |&format| (op, format)))
+            .map(|(op, format)| metrics.queued_lanes(op, format))
+            .sum();
+        // only slots that served traffic carry a latency story
+        let slots: Vec<String> = snap
+            .op_formats
+            .iter()
+            .filter(|s| s.requests > 0)
+            .map(|s| {
+                format!(
+                    "{}/{} p50={}ns p99={}ns",
+                    s.op.label(),
+                    s.format.label(),
+                    s.p50_latency_ns,
+                    s.p99_latency_ns
+                )
+            })
+            .collect();
+        let boards = health.snapshot();
+        let respawns: u64 = boards.iter().map(|b| b.respawns).sum();
+        let open: Vec<&str> = boards
+            .iter()
+            .zip(&names)
+            .filter(|(b, _)| b.breaker_open || b.degraded)
+            .map(|(_, n)| *n)
+            .collect();
+        let breakers = if open.is_empty() { "all-closed".to_string() } else { open.join(",") };
+        let drops = trace.as_ref().map(|t| t.drops()).unwrap_or(0);
+        println!(
+            "stats: qps={qps:.0} queued={queued} breakers={breakers} respawns=+{} \
+             trace-drops=+{} {}",
+            respawns - last_respawns,
+            drops - last_drops,
+            slots.join(" "),
+        );
+        last_respawns = respawns;
+        last_drops = drops;
     }
 }
 
@@ -762,8 +903,11 @@ impl FpuService {
     /// normal submit path exactly once, and the durable API goes live.
     pub fn start_routed(config: ServiceConfig, registry: ExecutorRegistry) -> Result<Self> {
         assert!(config.workers >= 1, "need at least one worker");
+        let trace = config.trace.clone().map(|c| Arc::new(TracePlane::new(c)));
         let registry = match &config.fault {
-            Some(plan) => crate::fault::wrap_registry(registry, plan.clone()),
+            Some(plan) => {
+                crate::fault::wrap_registry_traced(registry, plan.clone(), trace.clone())
+            }
             None => registry,
         };
         let (entries, policy) = registry.into_parts();
@@ -789,7 +933,8 @@ impl FpuService {
         let table = RoutingTable::merge(caps_list)?;
         let names = table.names();
         let union = Arc::new(table.union().clone());
-        let batcher = DynamicBatcher::routed(config.batcher, table.caps_list());
+        let batcher =
+            DynamicBatcher::routed(config.batcher, table.caps_list()).with_trace(trace.clone());
         let health = Arc::new(HealthBoard::new(table.backend_count()));
         let outstanding = Arc::new(AtomicI64::new(0));
         let (retry_tx, retry_rx) = mpsc::channel::<FailedBatch>();
@@ -831,6 +976,7 @@ impl FpuService {
                 fault: config.fault.clone(),
                 exit_tx: exit_tx.clone(),
                 next_slot_id: next_slot_id.clone(),
+                trace: trace.clone(),
             };
             for w in 0..pool_sizes[b] {
                 total_workers += 1;
@@ -897,7 +1043,8 @@ impl FpuService {
         let dispatcher = {
             let metrics = metrics.clone();
             let pool = pool.clone();
-            let plane = DispatchPlane::new(table, policy, health.clone());
+            let plane =
+                DispatchPlane::new(table, policy, health.clone()).with_trace(trace.clone());
             let outstanding = outstanding.clone();
             let poll = config.poll;
             let retire_budget = config.retire_budget;
@@ -925,7 +1072,22 @@ impl FpuService {
             next_id: Arc::new(AtomicU64::new(0)),
             caps: union,
             metrics: metrics.clone(),
+            trace: trace.clone(),
         };
+
+        // the live stats emitter: one snapshot-delta line per interval
+        let stats_stop = Arc::new(AtomicBool::new(false));
+        let stats_emitter = config.stats_interval.map(|interval| {
+            let stop = stats_stop.clone();
+            let metrics = metrics.clone();
+            let health = health.clone();
+            let names = names.clone();
+            let trace = trace.clone();
+            std::thread::Builder::new()
+                .name("fpu-stats-emitter".into())
+                .spawn(move || stats_emitter_loop(interval, stop, metrics, health, names, trace))
+                .expect("spawn stats emitter")
+        });
 
         // the durable plane: open (and tail-truncate) the journal, spawn
         // the retirer, replay still-Pending records exactly once
@@ -943,9 +1105,10 @@ impl FpuService {
             });
             let (rtx, rrx) = mpsc::channel::<RetireMsg>();
             let retirer_state = state.clone();
+            let retirer_trace = trace.clone();
             let retirer_handle = std::thread::Builder::new()
                 .name("fpu-journal-retirer".into())
-                .spawn(move || retirer_loop(rrx, retirer_state))
+                .spawn(move || retirer_loop(rrx, retirer_state, retirer_trace))
                 .expect("spawn journal retirer");
             let mut max_id = 0u64;
             for rec in coalesce(records) {
@@ -1002,6 +1165,9 @@ impl FpuService {
             retirer,
             retirer_tx,
             replayed,
+            trace,
+            stats_stop,
+            stats_emitter,
         })
     }
 
@@ -1030,6 +1196,14 @@ impl FpuService {
     /// order: (name, snapshot).
     pub fn dispatch_report(&self) -> Vec<(&'static str, BackendHealthSnapshot)> {
         self.backend_names.iter().copied().zip(self.health.snapshot()).collect()
+    }
+
+    /// The armed trace plane (`None` when started without
+    /// [`ServiceConfig::trace`]). Drain its events with
+    /// [`TracePlane::events`] and export via
+    /// [`crate::obs::write_trace`].
+    pub fn trace(&self) -> Option<Arc<TracePlane>> {
+        self.trace.clone()
     }
 
     /// Durable vectored submission: the request is appended to the
@@ -1062,6 +1236,11 @@ impl FpuService {
             });
         }
         state.jobs.lock().unwrap().insert(id, JobPoll::Pending);
+        if let Some(t) = &self.trace {
+            if t.tick_sampled() {
+                t.emit(TraceEvent::new(TraceKind::JournalAppend, t.now_ns()).req(id, op, format));
+            }
+        }
         match self.handle.submit_batch_inner(op, format, a, b, None) {
             Ok(ticket) => {
                 if let Some(rtx) = &self.retirer_tx {
@@ -1099,6 +1278,10 @@ impl FpuService {
     /// instantly), then the supervisor (which unplugs and joins any
     /// respawned workers), then the original workers.
     fn teardown(&mut self) {
+        self.stats_stop.store(true, Ordering::Release);
+        if let Some(s) = self.stats_emitter.take() {
+            let _ = s.join();
+        }
         let _ = self.shutdown_tx.send(DispatchMsg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -1130,16 +1313,26 @@ impl Drop for FpuService {
 }
 
 /// Fail every rider of a batch with a typed error and recycle its
-/// planes (the terminal outcome of the retry chain).
+/// planes (the terminal outcome of the retry chain). Emits the
+/// error-class BatchFailed event when a trace plane is armed.
 fn fail_batch(
     mut batch: Batch,
     err: ServiceError,
     metrics: &Metrics,
     plane_pool: &PlanePool,
     outstanding: &AtomicI64,
+    trace: Option<&Arc<TracePlane>>,
 ) {
     outstanding.fetch_sub(1, Ordering::AcqRel);
     metrics.record_error(batch.op, batch.format, batch.live() as u64);
+    if let Some(t) = trace {
+        t.emit(
+            TraceEvent::new(TraceKind::BatchFailed, t.now_ns())
+                .req(batch.items.first().map_or(0, |i| i.id), batch.op, batch.format)
+                .on_backend(batch.backend)
+                .with_lanes(batch.live()),
+        );
+    }
     for item in batch.items.drain(..) {
         item.fail(err.clone());
     }
@@ -1256,7 +1449,7 @@ fn send_batch(
                             }
                             None => ServiceError::Shutdown,
                         };
-                        fail_batch(batch, err, metrics, plane_pool, outstanding);
+                        fail_batch(batch, err, metrics, plane_pool, outstanding, plane.trace());
                         return;
                     }
                 }
@@ -1289,6 +1482,21 @@ fn reroute_failed(
         Some(sel) => {
             if error.is_some() {
                 plane.health().record_reroute(batch.backend);
+                // error-class: the hop is always captured, blaming the
+                // backend that failed the batch (`arg` = the next one)
+                if let Some(t) = plane.trace() {
+                    t.emit(
+                        TraceEvent::new(TraceKind::FailoverHop, t.now_ns())
+                            .req(
+                                batch.items.first().map_or(0, |i| i.id),
+                                batch.op,
+                                batch.format,
+                            )
+                            .on_backend(batch.backend)
+                            .with_lanes(batch.live())
+                            .with_arg(sel.backend as u64),
+                    );
+                }
             }
             reshape_for_backend(&mut batch, sel.backend, batcher, plane_pool);
             send_batch(
@@ -1308,7 +1516,7 @@ fn reroute_failed(
                 Some(backend) => ServiceError::ExecFailed { backend },
                 None => ServiceError::Shutdown,
             };
-            fail_batch(batch, err, metrics, plane_pool, outstanding);
+            fail_batch(batch, err, metrics, plane_pool, outstanding, plane.trace());
         }
     }
 }
@@ -1436,6 +1644,7 @@ fn dispatcher_loop(
     outstanding: Arc<AtomicI64>,
 ) {
     let mut router = Router::new();
+    router.set_trace(plane.trace().cloned());
     'outer: loop {
         // block for the first message (bounded by the poll tick) ...
         match rx.recv_timeout(poll) {
@@ -1534,6 +1743,14 @@ fn send_failed_or_fail(ctx: &WorkerCtx, failed: FailedBatch) {
             None => ServiceError::Shutdown,
         };
         ctx.metrics.record_error(batch.op, batch.format, batch.live() as u64);
+        if let Some(t) = &ctx.trace {
+            t.emit(
+                TraceEvent::new(TraceKind::BatchFailed, t.now_ns())
+                    .req(batch.items.first().map_or(0, |i| i.id), batch.op, batch.format)
+                    .on_backend(ctx.backend)
+                    .with_lanes(batch.live()),
+            );
+        }
         for item in batch.items.drain(..) {
             item.fail(err.clone());
         }
@@ -1576,6 +1793,16 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                 std::thread::sleep(Duration::from_micros(shot.micros));
             }
             if plan.check(FaultSite::WorkerDeath, ctx.name).is_some() {
+                // error-class: an injected death is always captured,
+                // blamed on this worker's backend
+                if let Some(t) = &ctx.trace {
+                    t.emit(
+                        TraceEvent::new(TraceKind::WorkerDeath, t.now_ns())
+                            .req(batch.items.first().map_or(0, |i| i.id), batch.op, batch.format)
+                            .on_backend(ctx.backend)
+                            .with_lanes(batch.live()),
+                    );
+                }
                 send_failed_or_fail(&ctx, FailedBatch { batch, error: None });
                 abnormal_exit(&rx, &ctx, slot_id);
                 return;
@@ -1640,6 +1867,60 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                 // record metrics BEFORE completing: once a client observes
                 // its response, the snapshot already includes it
                 ctx.metrics.record_batch(batch.op, batch.format, &lat, exec_ns, batch.padded);
+                // stage spans for sampled riders: the four stages tile
+                // [done - total, done] exactly, so they always sum to
+                // the rider-observed latency (`Complete.arg`). Clamping
+                // order matters: exec is the best-measured quantity,
+                // then queue wait, then failover; the batch stage
+                // absorbs the residual (dispatch + worker-queue time).
+                if batch.sampled {
+                    if let Some(t) = &ctx.trace {
+                        let done_ns = t.ns_of(done);
+                        for (k, item) in batch.items.iter().enumerate() {
+                            if !item.sampled {
+                                continue;
+                            }
+                            let total = lat[k].0;
+                            let exec = exec_ns.min(total);
+                            let queue = batch
+                                .formed_at
+                                .saturating_duration_since(item.enqueued_at)
+                                .as_nanos()
+                                .min(total.saturating_sub(exec) as u128)
+                                as u64;
+                            let failover =
+                                batch.failover_ns.min(total.saturating_sub(exec + queue));
+                            let residual = total - queue - exec - failover;
+                            let t0 = done_ns.saturating_sub(total);
+                            let stamp = |kind: TraceKind, at: u64, dur: u64| {
+                                TraceEvent::new(kind, at)
+                                    .req(item.id, batch.op, batch.format)
+                                    .on_backend(ctx.backend)
+                                    .with_lanes(item.lanes())
+                                    .spanning(dur)
+                            };
+                            t.emit(stamp(TraceKind::StageQueue, t0, queue));
+                            t.emit(stamp(TraceKind::StageBatch, t0 + queue, residual));
+                            t.emit(stamp(
+                                TraceKind::StageFailover,
+                                t0 + queue + residual,
+                                failover,
+                            ));
+                            t.emit(stamp(
+                                TraceKind::StageExec,
+                                t0 + queue + residual + failover,
+                                exec,
+                            ));
+                            t.emit(
+                                TraceEvent::new(TraceKind::Complete, t0 + total)
+                                    .req(item.id, batch.op, batch.format)
+                                    .on_backend(ctx.backend)
+                                    .with_lanes(item.lanes())
+                                    .with_arg(total),
+                            );
+                        }
+                    }
+                }
                 // tickets store u64 result words: widen u32 result
                 // planes once per batch (the one narrowing boundary)
                 let view: &[u64] = match width {
@@ -1665,6 +1946,17 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                 // for re-routing; the riders only see an error if every
                 // candidate backend fails it
                 ctx.health.record_failure(ctx.backend);
+                if let Some(t) = &ctx.trace {
+                    t.emit(
+                        TraceEvent::new(TraceKind::ExecError, t.now_ns())
+                            .req(batch.items.first().map_or(0, |i| i.id), batch.op, batch.format)
+                            .on_backend(ctx.backend)
+                            .with_lanes(batch.live()),
+                    );
+                }
+                // the failed attempt's executor time is failover
+                // overhead from the riders' point of view
+                batch.failover_ns += exec_ns;
                 let error = Some(format!("{e:#}"));
                 send_failed_or_fail(&ctx, FailedBatch { batch, error });
             }
@@ -1673,6 +1965,15 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                 // failover, riders see the panic text only if every
                 // candidate fails), then die for the supervisor
                 ctx.health.record_failure(ctx.backend);
+                if let Some(t) = &ctx.trace {
+                    t.emit(
+                        TraceEvent::new(TraceKind::WorkerDeath, t.now_ns())
+                            .req(batch.items.first().map_or(0, |i| i.id), batch.op, batch.format)
+                            .on_backend(ctx.backend)
+                            .with_lanes(batch.live()),
+                    );
+                }
+                batch.failover_ns += exec_ns;
                 let error = Some(format!("worker panicked: {}", panic_message(&*payload)));
                 send_failed_or_fail(&ctx, FailedBatch { batch, error });
                 abnormal_exit(&rx, &ctx, slot_id);
@@ -2327,5 +2628,66 @@ mod tests {
         let got = brx.try_recv().expect("the retry failed over into backend b's pool");
         assert_eq!(got.backend, 1, "rerouted to the untried candidate");
         assert!(!ticket.is_done(), "the rider is still waiting on backend b, not failed");
+    }
+
+    #[test]
+    fn sampled_requests_emit_tiled_stage_spans() {
+        use crate::obs::TraceKind;
+        let mut cfg = quick_config();
+        cfg.trace = Some(TraceConfig { sample: 1, capacity: 4096 });
+        let svc = FpuService::start(cfg, native).unwrap();
+        let h = svc.handle();
+        let resp = h.submit(OpKind::Divide, 10.0, 4.0).unwrap().wait().unwrap();
+        assert_eq!(resp.value.f32(), 2.5);
+        let trace = svc.trace().expect("trace armed");
+        svc.shutdown();
+        let events = trace.events();
+        let count = |k: TraceKind| events.iter().filter(|e| e.kind == k).count();
+        assert!(count(TraceKind::Submit) >= 1, "submit instant present");
+        assert!(count(TraceKind::Enqueue) >= 1, "enqueue instant present");
+        assert!(count(TraceKind::BatchFormed) >= 1, "batch-formed instant present");
+        assert!(count(TraceKind::Complete) >= 1, "complete instant present");
+        // the four stage spans tile the rider-observed latency exactly
+        let complete = events.iter().find(|e| e.kind == TraceKind::Complete).unwrap();
+        let spans: Vec<_> =
+            events.iter().filter(|e| e.id == complete.id && e.kind.is_span()).collect();
+        assert_eq!(spans.len(), 4, "queue/batch/failover/exec, one each");
+        let stage_sum: u64 = spans.iter().map(|e| e.dur_ns).sum();
+        assert_eq!(stage_sum, complete.arg, "stage spans sum to the total");
+        assert_eq!(trace.drops(), 0, "a roomy ring drops nothing");
+    }
+
+    #[test]
+    fn unsampled_requests_trace_nothing() {
+        let mut cfg = quick_config();
+        // sample rate above any id issued here: no lifecycle events at
+        // all, even though the plane is armed
+        cfg.trace = Some(TraceConfig { sample: u64::MAX, capacity: 256 });
+        let svc = FpuService::start(cfg, native).unwrap();
+        let h = svc.handle();
+        // id 0 is sampled by any rate (0 % n == 0); burn it first and
+        // check only the later ids stay silent
+        let _ = h.divide(1.0, 1.0).unwrap();
+        let trace = svc.trace().expect("trace armed");
+        let baseline = trace.events().len();
+        for _ in 0..10 {
+            assert_eq!(h.divide(9.0, 3.0).unwrap(), 3.0);
+        }
+        svc.shutdown();
+        let events = trace.events();
+        assert_eq!(events.len(), baseline, "unsampled requests emit no lifecycle events");
+    }
+
+    #[test]
+    fn stats_emitter_thread_starts_and_stops() {
+        let mut cfg = quick_config();
+        cfg.stats_interval = Some(Duration::from_millis(5));
+        cfg.trace = Some(TraceConfig::default());
+        let svc = FpuService::start(cfg, native).unwrap();
+        let h = svc.handle();
+        assert_eq!(h.divide(9.0, 3.0).unwrap(), 3.0);
+        std::thread::sleep(Duration::from_millis(20));
+        // the property under test: shutdown joins the emitter promptly
+        svc.shutdown();
     }
 }

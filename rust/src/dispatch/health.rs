@@ -40,7 +40,7 @@ use std::sync::Mutex;
 
 use crate::coordinator::request::{op_format_slot, OpKind, OP_FORMAT_SLOTS};
 use crate::formats::FormatKind;
-use crate::util::stats::RateWindow;
+use crate::util::stats::{RateWindow, Summary};
 
 /// Consecutive batch failures that open a backend's breaker.
 pub const OPEN_AFTER_CONSECUTIVE: u32 = 3;
@@ -106,6 +106,12 @@ pub struct BackendHealthSnapshot {
     pub degraded: bool,
     /// Workers respawned by the pool supervisor after a death.
     pub respawns: u64,
+    /// Windowed p50 of the backend's per-batch exec ns/lane, across
+    /// every (op, format) slot it served (0 with no signal yet).
+    pub p50_exec_ns_per_lane: f64,
+    /// Windowed p99 of the backend's per-batch exec ns/lane (0 with no
+    /// signal yet).
+    pub p99_exec_ns_per_lane: f64,
 }
 
 /// Shared health/latency state for every registered backend.
@@ -228,9 +234,26 @@ impl HealthBoard {
 
     /// Per-backend snapshots, index order.
     pub fn snapshot(&self) -> Vec<BackendHealthSnapshot> {
+        // per-backend rate percentiles across every (op, format)
+        // window the backend has served (one lock for the whole pass)
+        let rates: Vec<Summary> = {
+            let lat = self.lat.lock().expect("health board poisoned");
+            lat.iter()
+                .map(|slots| {
+                    let mut s = Summary::new();
+                    for w in slots.iter() {
+                        for r in w.batch_rates() {
+                            s.add(r);
+                        }
+                    }
+                    s
+                })
+                .collect()
+        };
         self.backends
             .iter()
-            .map(|b| BackendHealthSnapshot {
+            .zip(rates)
+            .map(|(b, rate)| BackendHealthSnapshot {
                 ok_batches: b.ok_batches.load(Ordering::Relaxed),
                 failed_batches: b.failed_batches.load(Ordering::Relaxed),
                 rerouted: b.rerouted.load(Ordering::Relaxed),
@@ -239,6 +262,8 @@ impl HealthBoard {
                 breaker_open: b.open.load(Ordering::Acquire),
                 degraded: b.degraded.load(Ordering::Acquire),
                 respawns: b.respawns.load(Ordering::Relaxed),
+                p50_exec_ns_per_lane: rate.percentile(50.0),
+                p99_exec_ns_per_lane: rate.percentile(99.0),
             })
             .collect()
     }
@@ -358,6 +383,27 @@ mod tests {
         }
         let m = h.mean_exec_ns_per_lane(0, OpKind::Divide, F32).unwrap();
         assert!((m - 10.0).abs() < 1e-9, "window did not decay: {m}");
+    }
+
+    #[test]
+    fn snapshot_rate_percentiles_span_slots() {
+        let h = HealthBoard::new(2);
+        // no signal: percentiles read 0, not NaN
+        let snap = h.snapshot();
+        assert_eq!(snap[0].p50_exec_ns_per_lane, 0.0);
+        assert_eq!(snap[0].p99_exec_ns_per_lane, 0.0);
+        // rates from different (op, format) slots pool into one
+        // per-backend envelope
+        h.record_success(0, OpKind::Divide, F32, 10, 1_000); // 100 ns/lane
+        h.record_success(0, OpKind::Sqrt, F32, 10, 3_000); // 300 ns/lane
+        h.record_success(0, OpKind::Divide, FormatKind::F64, 10, 9_000); // 900 ns/lane
+        let snap = h.snapshot();
+        assert!(snap[0].p50_exec_ns_per_lane >= 100.0);
+        assert!(snap[0].p50_exec_ns_per_lane <= 900.0);
+        assert!((snap[0].p99_exec_ns_per_lane - 900.0).abs() < 1e-9);
+        assert!(snap[0].p99_exec_ns_per_lane >= snap[0].p50_exec_ns_per_lane);
+        // per backend: backend 1 still unsignalled
+        assert_eq!(snap[1].p99_exec_ns_per_lane, 0.0);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::sync::Arc;
 
 use crate::coordinator::request::{op_format_slot, OpKind, OP_FORMAT_SLOTS};
 use crate::formats::FormatKind;
+use crate::obs::{TraceEvent, TraceKind, TracePlane};
 
 use super::health::HealthBoard;
 use super::registry::RoutePolicy;
@@ -56,12 +57,26 @@ pub struct DispatchPlane {
     policy: RoutePolicy,
     health: Arc<HealthBoard>,
     seq: [u64; OP_FORMAT_SLOTS],
+    trace: Option<Arc<TracePlane>>,
 }
 
 impl DispatchPlane {
     /// New plane over a merged table.
     pub fn new(table: RoutingTable, policy: RoutePolicy, health: Arc<HealthBoard>) -> Self {
-        Self { table, policy, health, seq: [0; OP_FORMAT_SLOTS] }
+        Self { table, policy, health, seq: [0; OP_FORMAT_SLOTS], trace: None }
+    }
+
+    /// Attach a trace plane: `select` then emits sampled
+    /// backend-selected events, and the dispatcher's failover path
+    /// reaches the plane through [`Self::trace`].
+    pub fn with_trace(mut self, trace: Option<Arc<TracePlane>>) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// The attached trace plane, if any.
+    pub fn trace(&self) -> Option<&Arc<TracePlane>> {
+        self.trace.as_ref()
     }
 
     /// The merged routing table.
@@ -78,6 +93,23 @@ impl DispatchPlane {
     /// not degraded.
     fn routable(&self, b: usize) -> bool {
         !self.health.is_open(b) && !self.health.is_degraded(b)
+    }
+
+    /// Trace a routing decision (1-in-N of selections — there is no
+    /// request id at selection time, so the gate is a plane-local
+    /// tick, not the per-request sample).
+    fn note_selection(&self, op: OpKind, format: FormatKind, sel: Selection) -> Selection {
+        if let Some(trace) = &self.trace {
+            if trace.tick_sampled() {
+                trace.emit(
+                    TraceEvent::new(TraceKind::BackendSelected, trace.now_ns())
+                        .req(0, op, format)
+                        .on_backend(sel.backend)
+                        .with_arg(u64::from(sel.probe)),
+                );
+            }
+        }
+        sel
     }
 
     /// Non-consuming peek: the backend whose batch *shape* (cap,
@@ -117,7 +149,7 @@ impl DispatchPlane {
                 .copied()
                 .find(|&b| !self.health.is_degraded(b))
                 .unwrap_or(cands[0]);
-            return Some(Selection { backend, probe: false });
+            return Some(self.note_selection(op, format, Selection { backend, probe: false }));
         }
         // probe an open backend back to life (only worth a batch when a
         // healthy fallback exists to absorb a failed probe); degraded
@@ -128,7 +160,7 @@ impl DispatchPlane {
                 && !self.health.is_degraded(b)
                 && self.health.probe_tick(b)
             {
-                return Some(Selection { backend: b, probe: true });
+                return Some(self.note_selection(op, format, Selection { backend: b, probe: true }));
             }
         }
         let slot = op_format_slot(op, format);
@@ -167,7 +199,7 @@ impl DispatchPlane {
                 }
             }
         };
-        Some(Selection { backend, probe: false })
+        Some(self.note_selection(op, format, Selection { backend, probe: false }))
     }
 
     /// The retry chain: the next candidate for a batch that already
@@ -362,6 +394,29 @@ mod tests {
             plane.health().record_success(0, OpKind::Divide, F32, 64, 1_000);
         }
         assert_eq!(plane.peek_candidate(OpKind::Divide, F32), Some(0));
+    }
+
+    #[test]
+    fn selections_emit_sampled_trace_events() {
+        use crate::obs::TraceConfig;
+        let table = RoutingTable::merge(vec![
+            BackendCaps::uniform("a", &[64]),
+            BackendCaps::uniform("b", &[64]),
+        ])
+        .unwrap();
+        let health = Arc::new(HealthBoard::new(2));
+        let trace = Arc::new(TracePlane::new(TraceConfig { sample: 2, capacity: 64 }));
+        let mut plane = DispatchPlane::new(table, RoutePolicy::Static, health)
+            .with_trace(Some(trace.clone()));
+        assert!(plane.trace().is_some());
+        for _ in 0..10 {
+            plane.select(OpKind::Divide, F32).unwrap();
+        }
+        let evs = trace.events();
+        let sel: Vec<_> =
+            evs.iter().filter(|e| e.kind == TraceKind::BackendSelected).collect();
+        assert_eq!(sel.len(), 5, "1-in-2 of 10 selections");
+        assert!(sel.iter().all(|e| e.backend == 0 && e.arg == 0));
     }
 
     #[test]

@@ -18,9 +18,16 @@ use anyhow::{bail, Result};
 use crate::coordinator::request::OpKind;
 use crate::dispatch::registry::ExecutorRegistry;
 use crate::formats::{FormatKind, PlaneRef, PlaneRefMut};
+use crate::obs::{TraceEvent, TraceKind, TracePlane, NO_BACKEND};
 use crate::runtime::{BackendCaps, Executor};
 
 use super::plan::{FaultPlan, FaultSite};
+
+/// Index of a site in [`FaultSite::ALL`] (the `arg` payload of a
+/// fault-injected trace event).
+fn site_index(site: FaultSite) -> u64 {
+    FaultSite::ALL.iter().position(|&s| s == site).unwrap_or(0) as u64
+}
 
 /// Decorates an inner executor with the executor-level sites of a
 /// [`FaultPlan`].
@@ -30,13 +37,38 @@ pub struct FaultInjectingExecutor {
     /// The wrapped backend's own name (the plan's backend filters match
     /// against this).
     name: String,
+    /// Trace plane + this backend's routing index: every fired rule
+    /// emits an error-class fault-injected event blaming the backend.
+    trace: Option<Arc<TracePlane>>,
+    backend: u8,
 }
 
 impl FaultInjectingExecutor {
     /// Wrap `inner`, consulting `plan` around every batch.
     pub fn new(inner: Box<dyn Executor>, plan: Arc<FaultPlan>) -> Self {
         let name = inner.capabilities().backend().to_string();
-        Self { inner, plan, name }
+        Self { inner, plan, name, trace: None, backend: NO_BACKEND }
+    }
+
+    /// Attach a trace plane and this backend's routing index, so fired
+    /// rules are captured (always — fault events are error-class) with
+    /// the right backend blame.
+    pub fn traced(mut self, trace: Arc<TracePlane>, backend: usize) -> Self {
+        self.trace = Some(trace);
+        self.backend = backend.min(NO_BACKEND as usize) as u8;
+        self
+    }
+
+    /// Emit the fault-injected event for a fired rule (before the
+    /// fault takes effect, so even a panic leaves its trace).
+    fn note_fault(&self, site: FaultSite) {
+        if let Some(trace) = &self.trace {
+            trace.emit(
+                TraceEvent::new(TraceKind::FaultInjected, trace.now_ns())
+                    .on_backend(self.backend as usize)
+                    .with_arg(site_index(site)),
+            );
+        }
     }
 }
 
@@ -54,16 +86,20 @@ impl Executor for FaultInjectingExecutor {
         mut out: PlaneRefMut<'_>,
     ) -> Result<()> {
         if let Some(shot) = self.plan.check(FaultSite::Latency, &self.name) {
+            self.note_fault(FaultSite::Latency);
             thread::sleep(Duration::from_micros(shot.micros));
         }
         if self.plan.check(FaultSite::ExecPanic, &self.name).is_some() {
+            self.note_fault(FaultSite::ExecPanic);
             panic!("fault-plan: injected executor panic ({})", self.name);
         }
         if self.plan.check(FaultSite::ExecError, &self.name).is_some() {
+            self.note_fault(FaultSite::ExecError);
             bail!("fault-plan: injected transient error ({})", self.name);
         }
         self.inner.execute_into(op, format, a, b, out.reborrow())?;
         if let Some(shot) = self.plan.check(FaultSite::BitFlip, &self.name) {
+            self.note_fault(FaultSite::BitFlip);
             flip_one_bit(format, out, shot.salt);
         }
         Ok(())
@@ -93,15 +129,31 @@ fn flip_one_bit(format: FormatKind, mut out: PlaneRefMut<'_>, salt: u64) {
 /// preserved — the armed registry is indistinguishable to the dispatch
 /// plane until a rule fires.
 pub fn wrap_registry(registry: ExecutorRegistry, plan: Arc<FaultPlan>) -> ExecutorRegistry {
+    wrap_registry_traced(registry, plan, None)
+}
+
+/// [`wrap_registry`], with a trace plane threaded into every wrapper
+/// so fired rules emit fault-injected events blaming the backend by
+/// its registration index (which is also its routing-table index).
+pub fn wrap_registry_traced(
+    registry: ExecutorRegistry,
+    plan: Arc<FaultPlan>,
+    trace: Option<Arc<TracePlane>>,
+) -> ExecutorRegistry {
     let (entries, policy) = registry.into_parts();
     let mut wrapped = ExecutorRegistry::new().with_policy(policy);
-    for entry in entries {
+    for (backend, entry) in entries.into_iter().enumerate() {
         let workers = entry.workers();
         let factory = entry.factory();
         let plan = plan.clone();
+        let trace = trace.clone();
         let make = move || -> Result<Box<dyn Executor>> {
             let inner = factory()?;
-            Ok(Box::new(FaultInjectingExecutor::new(inner, plan.clone())) as _)
+            let mut ex = FaultInjectingExecutor::new(inner, plan.clone());
+            if let Some(trace) = &trace {
+                ex = ex.traced(trace.clone(), backend);
+            }
+            Ok(Box::new(ex) as _)
         };
         wrapped = match workers {
             Some(w) => wrapped.register_with_workers(make, w),
@@ -185,6 +237,35 @@ mod tests {
         assert!(xor.leading_zeros() >= 32, "flip stays inside the f32 encoding");
         // window spent: results are clean again
         assert_eq!(divide_bits(&mut ex, &vals), clean);
+    }
+
+    #[test]
+    fn fired_rules_emit_blamed_trace_events() {
+        use crate::obs::{TraceConfig, TracePlane};
+        let trace = Arc::new(TracePlane::new(TraceConfig { sample: 1, capacity: 64 }));
+        let plan = Arc::new(FaultPlan::parse("exec-error:count=1", 1).unwrap());
+        let mut ex = FaultInjectingExecutor::new(
+            Box::new(NativeExecutor::with_defaults()),
+            plan,
+        )
+        .traced(trace.clone(), 1);
+        let format = FormatKind::F32;
+        let mut a = PlaneBuf::for_format(format);
+        a.push(4.0f32.to_bits() as u64);
+        let mut b = PlaneBuf::for_format(format);
+        b.push(2.0f32.to_bits() as u64);
+        let mut out = PlaneBuf::for_format(format);
+        out.resize(1, 0);
+        ex.execute_into(OpKind::Divide, format, a.as_ref(), Some(b.as_ref()), out.as_mut())
+            .unwrap_err();
+        // window spent: the second call is clean and emits nothing
+        ex.execute_into(OpKind::Divide, format, a.as_ref(), Some(b.as_ref()), out.as_mut())
+            .unwrap();
+        let evs = trace.events();
+        assert_eq!(evs.len(), 1, "one fired rule, one event");
+        assert_eq!(evs[0].kind, crate::obs::TraceKind::FaultInjected);
+        assert_eq!(evs[0].backend, 1, "blame lands on the wrapped backend's index");
+        assert_eq!(evs[0].arg, site_index(FaultSite::ExecError));
     }
 
     #[test]

@@ -54,5 +54,5 @@
 mod executor;
 mod plan;
 
-pub use executor::{wrap_registry, FaultInjectingExecutor};
+pub use executor::{wrap_registry, wrap_registry_traced, FaultInjectingExecutor};
 pub use plan::{FaultPlan, FaultRule, FaultShot, FaultSite};

@@ -26,7 +26,13 @@
 //!   into one routing table, serving each (op, format) batch through
 //!   health-tracked per-backend worker pools (static or
 //!   measured-latency preference, consecutive-failure circuit breakers
-//!   with probe-based recovery, rider-invisible failover).
+//!   with probe-based recovery, rider-invisible failover). The whole
+//!   request path is observable through the [`obs`] trace plane:
+//!   lock-free sampled lifecycle rings whose per-request stage spans
+//!   (queue / batch / exec / failover) decompose rider-observed
+//!   latency, always-captured error-class events (sheds, failovers,
+//!   injected faults, worker deaths), Chrome-trace/JSONL export and a
+//!   per-stage breakdown report.
 //! * **Layer 2** — `python/compile/model.py`: jax graphs, lowered once
 //!   to HLO text under `artifacts/`.
 //! * **Layer 1** — `python/compile/kernels/`: the Goldschmidt iteration
@@ -61,6 +67,7 @@ pub mod fault;
 pub mod formats;
 pub mod goldschmidt;
 pub mod kernel;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod tables;

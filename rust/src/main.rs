@@ -18,6 +18,7 @@ use goldschmidt::coordinator::{
 use goldschmidt::dispatch::{standard_registry, RoutePolicy};
 use goldschmidt::fault::FaultPlan;
 use goldschmidt::goldschmidt::{variants, Config};
+use goldschmidt::obs::TraceConfig;
 use goldschmidt::sim::Design;
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::cli::Args;
@@ -54,7 +55,8 @@ COMMANDS:
              routes per (op, format) across three pools; u128 serves
              divide only, pjrt needs --features pjrt and is f32-only)
              --route-policy static|latency (multi-backend arbitration)
-             --format f16|bf16|f32|f64 (native backend serves all four)
+             --format f16|bf16|f32|f64|mix (native backend serves all
+             four; mix rotates the stream across every format)
              --batch MAX --wait-us US --rate R --artifacts DIR
              --deadline-us US (shed requests older than US; 0 = off)
              --<fmt>-wait-us US / --<fmt>-batch MAX (per-format policy
@@ -69,6 +71,16 @@ COMMANDS:
              arm a fault plan, e.g. \"exec-error:p=0.01;latency:us=200\"
              — see goldschmidt::fault for the grammar; env FAULT_PLAN /
              FAULT_SEED are the fallbacks, for CI smoke runs)
+             --trace-out PATH (write the lifecycle trace on shutdown:
+             .jsonl => flat JSONL, anything else => Chrome trace_event
+             JSON for chrome://tracing / Perfetto)
+             --trace-sample N (trace 1 in N requests whole-lifecycle,
+             default 64; error-class events are always captured)
+             --stats-interval-ms MS (live stats emitter: one snapshot
+             line per interval — qps, queue depth, per-slot p50/p99,
+             breaker states, respawns, trace drops)
+  trace-report  per-stage latency breakdown of a --trace-out file
+             goldschmidt trace-report TRACE.json (or .jsonl)
   version    print version
 ";
 
@@ -100,6 +112,7 @@ fn run(args: &Args) -> Result<()> {
         Some("stream") => cmd_stream(args),
         Some("sqrt") => cmd_sqrt(args),
         Some("serve") => cmd_serve(args),
+        Some("trace-report") => cmd_trace_report(args),
         Some("version") => {
             println!("goldschmidt {}", env!("CARGO_PKG_VERSION"));
             Ok(())
@@ -357,15 +370,32 @@ fn start_service(
         .context("starting FPU service (pjrt backends need `make artifacts` first)")
 }
 
+/// Print the per-stage latency breakdown of a trace file written by
+/// `serve --trace-out` (either the Chrome JSON or the JSONL form).
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    let path = args
+        .positionals
+        .first()
+        .map(PathBuf::from)
+        .ok_or_else(|| anyhow::anyhow!("usage: goldschmidt trace-report TRACE.json"))?;
+    print!("{}", goldschmidt::obs::trace_report(&path)?);
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.get("requests", 50_000usize).map_err(anyhow::Error::msg)?;
     let backend = args.get_str("backend", "native");
     let policy = RoutePolicy::parse(&args.get_str("route-policy", "static"))
         .map_err(anyhow::Error::msg)?;
-    let format =
-        FormatKind::parse(&args.get_str("format", "f32")).map_err(anyhow::Error::msg)?;
-    if backend == "pjrt" && format != FormatKind::F32 {
-        bail!("the pjrt backend serves f32 only (AOT artifacts are single-precision); use --backend native for {format}");
+    let format_str = args.get_str("format", "f32");
+    let mix = format_str == "mix";
+    let format = if mix {
+        FormatKind::F32
+    } else {
+        FormatKind::parse(&format_str).map_err(anyhow::Error::msg)?
+    };
+    if backend == "pjrt" && (mix || format != FormatKind::F32) {
+        bail!("the pjrt backend serves f32 only (AOT artifacts are single-precision); use --backend native for {format_str}");
     }
     let workers: usize = args.get("workers", 1usize).map_err(anyhow::Error::msg)?;
     let max_batch: usize = args.get("batch", 1024usize).map_err(anyhow::Error::msg)?;
@@ -413,6 +443,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("fault plan armed: {plan}");
         Some(Arc::new(plan))
     };
+    // lifecycle tracing: --trace-out arms the trace plane for the whole
+    // run (1-in-N whole-request sampling; error-class events are always
+    // captured) and the file is written at shutdown
+    let trace_out = {
+        let p = args.get_str("trace-out", "");
+        if p.is_empty() { None } else { Some(PathBuf::from(p)) }
+    };
+    let trace_sample: u64 = args.get("trace-sample", 64u64).map_err(anyhow::Error::msg)?;
+    let stats_interval_ms: u64 =
+        args.get("stats-interval-ms", 0u64).map_err(anyhow::Error::msg)?;
     let journal_arg = args.get_str("journal", "");
     let journal =
         if journal_arg.is_empty() { None } else { Some(PathBuf::from(journal_arg)) };
@@ -429,6 +469,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         poll: Duration::from_micros(50),
         fault,
         journal,
+        trace: trace_out
+            .as_ref()
+            .map(|_| TraceConfig { sample: trace_sample, ..TraceConfig::default() }),
+        stats_interval: (stats_interval_ms > 0)
+            .then(|| Duration::from_millis(stats_interval_ms)),
         ..ServiceConfig::default()
     };
 
@@ -449,10 +494,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     println!(
-        "serving {requests} {format} requests on backend={backend} policy={} \
+        "serving {requests} {format_str} requests on backend={backend} policy={} \
          workers={workers} (per pool) ...",
         policy.label()
     );
+    let mut reqs = WorkloadGen::generate(spec);
+    if mix {
+        // rotate the four formats in blocks of five requests: every
+        // per-format batcher queue carries traffic, and the block
+        // length is coprime to power-of-two --trace-sample strides so
+        // a sampled trace still sees all four formats
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.format = FormatKind::ALL[(i / 5) % FormatKind::ALL.len()];
+        }
+    }
     let t0 = std::time::Instant::now();
     let mut ok = 0u64;
     if durable {
@@ -460,11 +515,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // kill -9 anywhere in this loop and a restart replays exactly
         // the records that never retired
         let mut ids = Vec::with_capacity(requests);
-        for r in WorkloadGen::generate(spec) {
+        for r in reqs {
             let a = [r.value_a().bits()];
             let b = [r.value_b().bits()];
             let b: &[u64] = if matches!(r.op, OpKind::Divide) { &b } else { &[] };
-            ids.push(svc.submit_batch_durable(r.op, format, &a, b)?);
+            ids.push(svc.submit_batch_durable(r.op, r.format, &a, b)?);
         }
         for id in ids {
             loop {
@@ -482,7 +537,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let handle = svc.handle();
         let deadline = Duration::from_micros(deadline_us);
         let mut tickets = Vec::with_capacity(requests);
-        for r in WorkloadGen::generate(spec) {
+        for r in reqs {
             if deadline_us > 0 {
                 // admission control may reject at submit time when the
                 // queue-delay estimate already exceeds the budget: that
@@ -541,11 +596,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "dispatch plane (per backend)",
             &[
                 "backend", "batches ok", "failed", "rerouted", "trips", "probes", "respawns",
-                "breaker",
+                "p50 ns/l", "p99 ns/l", "breaker",
             ],
         )
         .aligns(&[
             Align::Left,
+            Align::Right,
+            Align::Right,
             Align::Right,
             Align::Right,
             Align::Right,
@@ -563,6 +620,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 s.trips.to_string(),
                 s.probes.to_string(),
                 s.respawns.to_string(),
+                fmt_ns(s.p50_exec_ns_per_lane),
+                fmt_ns(s.p99_exec_ns_per_lane),
                 if s.degraded {
                     "DEGRADED".into()
                 } else if s.breaker_open {
@@ -573,6 +632,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ]);
         }
         t.print();
+    }
+    if let Some(path) = &trace_out {
+        if let Some(trace) = svc.trace() {
+            let events = trace.events();
+            goldschmidt::obs::write_trace(path, &events)?;
+            println!(
+                "trace: wrote {} event(s) to {} (1-in-{} sampling, {} dropped, {} error-class)",
+                events.len(),
+                path.display(),
+                trace.sample_rate(),
+                trace.drops(),
+                trace.error_count()
+            );
+        }
     }
     svc.shutdown();
     Ok(())

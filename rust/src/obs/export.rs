@@ -1,0 +1,350 @@
+//! Trace export and the per-stage latency breakdown report.
+//!
+//! Two on-disk formats, both derived from the same [`TraceEvent`]
+//! stream:
+//!
+//! * **Chrome `trace_event` JSON** (`.json`) — an object with a
+//!   `traceEvents` array; stage spans export as `ph: "X"` complete
+//!   events (one timeline track per stage), everything else as
+//!   `ph: "i"` instants. Loads directly in `chrome://tracing` /
+//!   Perfetto.
+//! * **flat JSONL** (`.jsonl`) — one self-describing object per line,
+//!   the grep/`jq`-friendly form.
+//!
+//! [`trace_report`] reads either format back (via the crate's own
+//! [`Json`] parser) and prints the per-(op, format) stage table:
+//! queue / batch / exec / failover share of end-to-end latency, with
+//! p50/p99 per stage — the measurement analogue of the paper's
+//! block-level cost breakdown.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::ring::{TraceEvent, TraceKind, NO_BACKEND};
+
+/// Stage labels in report display order.
+const STAGES: [&str; 4] = ["queue", "batch", "exec", "failover"];
+
+fn event_args(ev: &TraceEvent) -> Json {
+    let mut args = vec![
+        ("id", Json::from(ev.id)),
+        ("op", Json::from(ev.op.label())),
+        ("format", Json::from(ev.format.label())),
+        ("lanes", Json::from(u64::from(ev.lanes))),
+        ("arg", Json::from(ev.arg)),
+    ];
+    if ev.backend != NO_BACKEND {
+        args.push(("backend", Json::from(u64::from(ev.backend))));
+    }
+    Json::obj(args)
+}
+
+/// Build the Chrome `trace_event` document for an event stream.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let rows = events.iter().map(|ev| {
+        // one track (tid) per stage keeps span rows from stacking; all
+        // instants share track 0
+        let tid = STAGES.iter().position(|&s| s == ev.kind.label()).map_or(0, |i| i + 1);
+        let cat = if ev.kind.is_error_class() {
+            "error"
+        } else if ev.kind.is_span() {
+            "stage"
+        } else {
+            "lifecycle"
+        };
+        let mut fields = vec![
+            ("name", Json::from(ev.kind.label())),
+            ("cat", Json::from(cat)),
+            ("ph", Json::from(if ev.kind.is_span() { "X" } else { "i" })),
+            ("ts", Json::Num(ev.t_ns as f64 / 1_000.0)),
+            ("pid", Json::from(1u64)),
+            ("tid", Json::from(tid)),
+            ("args", event_args(ev)),
+        ];
+        if ev.kind.is_span() {
+            fields.push(("dur", Json::Num(ev.dur_ns as f64 / 1_000.0)));
+        } else {
+            fields.push(("s", Json::from("t"))); // instant scope: thread
+        }
+        Json::obj(fields)
+    });
+    Json::obj([("traceEvents", Json::arr(rows))])
+}
+
+/// Render the flat JSONL form (one object per line, raw nanoseconds).
+pub fn jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        let mut fields = vec![
+            ("kind", Json::from(ev.kind.label())),
+            ("t_ns", Json::from(ev.t_ns)),
+            ("id", Json::from(ev.id)),
+            ("op", Json::from(ev.op.label())),
+            ("format", Json::from(ev.format.label())),
+            ("lanes", Json::from(u64::from(ev.lanes))),
+            ("arg", Json::from(ev.arg)),
+        ];
+        if ev.kind.is_span() {
+            fields.push(("dur_ns", Json::from(ev.dur_ns)));
+        }
+        if ev.backend != NO_BACKEND {
+            fields.push(("backend", Json::from(u64::from(ev.backend))));
+        }
+        let _ = writeln!(out, "{}", Json::obj(fields).to_string());
+    }
+    out
+}
+
+/// Write an event stream to `path`: `.jsonl` extension selects the
+/// flat form, anything else the Chrome trace document.
+pub fn write_trace(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    let body = if path.extension().is_some_and(|e| e == "jsonl") {
+        jsonl(events)
+    } else {
+        chrome_trace(events).to_string()
+    };
+    std::fs::write(path, body).with_context(|| format!("writing trace to {}", path.display()))
+}
+
+/// One parsed stage-span sample.
+struct StageSample {
+    op: String,
+    format: String,
+    stage: usize,
+    dur_us: f64,
+}
+
+fn field_str(obj: &Json, key: &str) -> Option<String> {
+    obj.get(key).and_then(Json::as_str).map(str::to_string)
+}
+
+fn stage_index(name: &str) -> Option<usize> {
+    STAGES.iter().position(|&s| s == name)
+}
+
+/// Pull the stage spans out of a parsed trace document (either form).
+fn stage_samples(doc_is_chrome: bool, rows: &[Json]) -> Vec<StageSample> {
+    let mut out = Vec::new();
+    for row in rows {
+        let (name, dur_us, src) = if doc_is_chrome {
+            if field_str(row, "ph").as_deref() != Some("X") {
+                continue;
+            }
+            let Some(dur) = row.get("dur").and_then(Json::as_f64) else { continue };
+            let Some(args) = row.get("args") else { continue };
+            (field_str(row, "name"), dur, args)
+        } else {
+            let Some(dur_ns) = row.get("dur_ns").and_then(Json::as_f64) else { continue };
+            (field_str(row, "kind"), dur_ns / 1_000.0, row)
+        };
+        let Some(stage) = name.as_deref().and_then(stage_index) else { continue };
+        let (Some(op), Some(format)) = (field_str(src, "op"), field_str(src, "format")) else {
+            continue;
+        };
+        out.push(StageSample { op, format, stage, dur_us });
+    }
+    out
+}
+
+fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], out: &mut String| {
+        for (i, cell) in cells.iter().enumerate() {
+            let pad = widths[i] - cell.len();
+            if i == 0 {
+                // first column left-aligned, the rest right-aligned
+                let _ = write!(out, "{cell}{}", " ".repeat(pad));
+            } else {
+                let _ = write!(out, "  {}{cell}", " ".repeat(pad));
+            }
+        }
+        out.push('\n');
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(), &mut out);
+    let rule: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+    out.push_str(&"-".repeat(rule));
+    out.push('\n');
+    for row in rows {
+        line(row, &mut out);
+    }
+    out
+}
+
+/// Read a trace file (Chrome JSON or JSONL) and render the per-stage
+/// latency breakdown table: for every traced (op, format), each
+/// stage's share of the summed end-to-end latency and its p50/p99.
+pub fn trace_report(path: &Path) -> Result<String> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace from {}", path.display()))?;
+    let trimmed = body.trim_start();
+    let (is_chrome, rows): (bool, Vec<Json>) = if trimmed.starts_with('{') {
+        let doc = Json::parse(&body).map_err(|e| anyhow!("bad trace JSON: {e}"))?;
+        let events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("no traceEvents array in {}", path.display()))?;
+        (true, events.to_vec())
+    } else {
+        let mut rows = Vec::new();
+        for (n, line) in body.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            rows.push(
+                Json::parse(line).map_err(|e| anyhow!("bad JSONL at line {}: {e}", n + 1))?,
+            );
+        }
+        (false, rows)
+    };
+    let samples = stage_samples(is_chrome, &rows);
+    if samples.is_empty() {
+        return Ok(format!(
+            "no stage spans in {} (sampled requests: 0 — lower --trace-sample?)\n",
+            path.display()
+        ));
+    }
+    // (op, format) -> one Summary per stage, in STAGES order
+    let mut slots: BTreeMap<(String, String), [Summary; 4]> = BTreeMap::new();
+    for s in samples {
+        let entry = slots.entry((s.op, s.format)).or_default();
+        entry[s.stage].add(s.dur_us);
+    }
+    let mut out = String::new();
+    let mut rows = Vec::new();
+    let mut spans = 0usize;
+    for ((op, format), stages) in &slots {
+        let total: f64 = stages.iter().map(Summary::sum).sum();
+        for (i, stage) in STAGES.iter().enumerate() {
+            let s = &stages[i];
+            spans += s.count();
+            let share = if total > 0.0 { 100.0 * s.sum() / total } else { 0.0 };
+            rows.push(vec![
+                format!("{op}/{format}"),
+                stage.to_string(),
+                s.count().to_string(),
+                format!("{share:.1}%"),
+                format!("{:.1}", s.percentile(50.0)),
+                format!("{:.1}", s.percentile(99.0)),
+            ]);
+        }
+    }
+    let _ = writeln!(out, "per-stage latency breakdown ({spans} stage spans)");
+    out.push_str(&render_table(
+        &["op/format", "stage", "spans", "share", "p50 us", "p99 us"],
+        &rows,
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::OpKind;
+    use crate::formats::FormatKind;
+
+    fn span(kind: TraceKind, id: u64, t: u64, dur: u64) -> TraceEvent {
+        TraceEvent::new(kind, t)
+            .req(id, OpKind::Divide, FormatKind::F32)
+            .spanning(dur)
+            .with_lanes(1)
+    }
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let mut evs = Vec::new();
+        for id in 0..10u64 {
+            let t = id * 10_000;
+            evs.push(
+                TraceEvent::new(TraceKind::Submit, t).req(id, OpKind::Divide, FormatKind::F32),
+            );
+            evs.push(span(TraceKind::StageQueue, id, t, 4_000));
+            evs.push(span(TraceKind::StageBatch, id, t + 4_000, 1_000));
+            evs.push(span(TraceKind::StageExec, id, t + 5_000, 5_000).on_backend(0));
+            evs.push(
+                TraceEvent::new(TraceKind::Complete, t + 10_000)
+                    .req(id, OpKind::Divide, FormatKind::F32)
+                    .with_arg(10_000),
+            );
+        }
+        evs.push(
+            TraceEvent::new(TraceKind::ExecError, 123)
+                .req(3, OpKind::Divide, FormatKind::F32)
+                .on_backend(1),
+        );
+        evs
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("goldschmidt-obs-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let doc = chrome_trace(&sample_events());
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 51);
+        let spans: Vec<&Json> =
+            events.iter().filter(|e| field_str(e, "ph").as_deref() == Some("X")).collect();
+        assert_eq!(spans.len(), 30, "three stage spans per request");
+        // spans tile: ts+dur of queue == ts of batch (request 0)
+        let q = &spans[0];
+        assert_eq!(field_str(q, "name").as_deref(), Some("queue"));
+        assert_eq!(q.get("ts").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(q.get("dur").and_then(Json::as_f64), Some(4.0));
+        // round-trips through the crate's own parser
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 51);
+    }
+
+    #[test]
+    fn report_from_both_formats_agrees() {
+        let chrome = tmp("report.json");
+        let flat = tmp("report.jsonl");
+        write_trace(&chrome, &sample_events()).unwrap();
+        write_trace(&flat, &sample_events()).unwrap();
+        let a = trace_report(&chrome).unwrap();
+        let b = trace_report(&flat).unwrap();
+        assert_eq!(a, b, "both formats reduce to the same table");
+        assert!(a.contains("divide/f32"), "{a}");
+        assert!(a.contains("queue"), "{a}");
+        // exec is 5000 of 10000 ns per request -> 50% share, p50 5.0 us
+        assert!(a.contains("50.0%"), "{a}");
+        assert!(a.contains("5.0"), "{a}");
+        std::fs::remove_file(&chrome).ok();
+        std::fs::remove_file(&flat).ok();
+    }
+
+    #[test]
+    fn report_without_spans_says_so() {
+        let p = tmp("empty.json");
+        write_trace(&p, &[TraceEvent::new(TraceKind::Submit, 0)]).unwrap();
+        let r = trace_report(&p).unwrap();
+        assert!(r.contains("no stage spans"), "{r}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn jsonl_lines_parse_individually() {
+        let body = jsonl(&sample_events());
+        for line in body.lines() {
+            let row = Json::parse(line).unwrap();
+            assert!(row.get("kind").is_some());
+            assert!(row.get("t_ns").is_some());
+        }
+        // error-class row keeps its backend blame
+        let last = Json::parse(body.lines().last().unwrap()).unwrap();
+        assert_eq!(field_str(&last, "kind").as_deref(), Some("exec-error"));
+        assert_eq!(last.get("backend").and_then(Json::as_f64), Some(1.0));
+    }
+}

@@ -1,0 +1,41 @@
+//! Observability: the trace plane.
+//!
+//! The serving stack's always-on [`Metrics`](crate::coordinator::Metrics)
+//! answer *how much*; this module answers *where the time went*. A
+//! [`TracePlane`] threads one shared handle through the whole request
+//! path — service handle, router, batcher, dispatch plane, fault
+//! wrapper, workers, supervisor, journal retirer — and each stage
+//! emits compact [`TraceEvent`]s into lock-free sharded rings
+//! ([`ring`]):
+//!
+//! ```text
+//! submit ─ enqueue ─ batch-formed ─ backend-selected ─ exec ─ complete
+//!    │         │            │              │             │
+//!    │   (queue span)  (batch span)  (failover span) (exec span)
+//!    └── reject / shed / failover-hop / respawn / fault-injected /
+//!        exec-error / worker-death / batch-failed   (error class)
+//! ```
+//!
+//! Two capture rules:
+//!
+//! * **1-in-N request sampling** — a request is sampled at submit time
+//!   (`id % sample == 0`) and its *entire* lifecycle is then traced:
+//!   the four stage spans (queue / batch / exec / failover) tile its
+//!   rider-observed latency exactly, so a trace decomposes p99 by
+//!   pipeline stage the way the paper decomposes divider cost by
+//!   block.
+//! * **error class is never sampled and never dropped** — rejects,
+//!   sheds, failovers, respawns, injected faults, executor errors,
+//!   worker deaths and rider-visible batch failures bypass the rings
+//!   into an unbounded side store; ring overflow (counted in
+//!   [`TracePlane::drops`]) can only lose sampled lifecycle events.
+//!
+//! [`export`] drains the plane into Chrome `trace_event` JSON or flat
+//! JSONL (`serve --trace-out PATH --trace-sample N`) and renders the
+//! per-(op, format) stage breakdown table (`goldschmidt trace-report`).
+
+pub mod export;
+pub mod ring;
+
+pub use export::{chrome_trace, jsonl, trace_report, write_trace};
+pub use ring::{EventRing, TraceConfig, TraceEvent, TraceKind, TracePlane, NO_BACKEND};

@@ -1,0 +1,601 @@
+//! [`TracePlane`]: sharded lock-free event rings + sampling policy.
+//!
+//! The hot path (workers, dispatcher, router) emits compact
+//! [`TraceEvent`]s into fixed-capacity rings with an atomic write
+//! cursor — no locks, no allocation, and a full ring *drops* the event
+//! (counted) rather than blocking a worker on an observer. Error-class
+//! events (rejects, sheds, failovers, injected faults, worker deaths)
+//! bypass the rings into a mutex-guarded side store so overflow can
+//! only ever drop sampled lifecycle events, never the forensic ones.
+//!
+//! Sampling is per *request id*: `id % sample == 0` marks a request
+//! sampled at submit time, and the flag rides the
+//! [`WorkItem`](crate::coordinator::WorkItem) through every stage, so
+//! one request's whole lifecycle is either fully traced or fully
+//! untraced (a 1-in-N sample of complete span chains, not 1-in-N of
+//! individual events). Error-class events ignore the sample entirely.
+//!
+//! Timestamps are nanosecond offsets from the plane's monotonic epoch
+//! ([`Instant`] at construction), so exported traces start near zero
+//! and are immune to wall-clock steps.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::request::OpKind;
+use crate::formats::FormatKind;
+
+/// Event rings per [`TracePlane`] (requests hash over them by id, so
+/// concurrent emitters rarely contend on one write cursor).
+const SHARDS: usize = 8;
+
+/// Marker for "no backend attributed" in [`TraceEvent::backend`].
+pub const NO_BACKEND: u8 = u8::MAX;
+
+/// What a [`TraceEvent`] records. Three classes:
+///
+/// * lifecycle **instants** (sampled): one point in a request's life;
+/// * per-request **stage spans** (sampled): `dur_ns > 0`, tiled so the
+///   four stages of one request sum to its rider-observed latency;
+/// * **error-class** events: always captured regardless of the sample
+///   rate, and stored outside the overflow-prone rings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    /// Request accepted by the service handle.
+    Submit,
+    /// Request entered its (op, format) queue.
+    Enqueue,
+    /// A batch was formed from the queue (id = first rider's id).
+    BatchFormed,
+    /// The dispatch plane picked a backend for a batch (`arg` = 1 for
+    /// a probe of an open breaker).
+    BackendSelected,
+    /// A journal record was appended (`arg`: 0 = pending, 1 = done,
+    /// 2 = failed).
+    JournalAppend,
+    /// Request completed; `arg` = rider-observed latency in ns.
+    Complete,
+    /// Stage span: submit → batch formation (queue wait).
+    StageQueue,
+    /// Stage span: batch formation → execution start, minus failover
+    /// (dispatch + worker-queue time).
+    StageBatch,
+    /// Stage span: time burned on failed attempts before the
+    /// successful one.
+    StageFailover,
+    /// Stage span: the successful executor run.
+    StageExec,
+    /// Error-class: submission rejected before queueing.
+    Reject,
+    /// Error-class: a queued request shed at its deadline.
+    Shed,
+    /// Error-class: a failed batch re-routed to another backend
+    /// (`backend` = the backend that failed it, `arg` = the next one).
+    FailoverHop,
+    /// Error-class: the supervisor respawned a dead worker.
+    Respawn,
+    /// Error-class: a fault-plan rule fired (`arg` = site index in
+    /// [`FaultSite::ALL`](crate::fault::FaultSite::ALL)).
+    FaultInjected,
+    /// Error-class: an executor returned an error for a batch.
+    ExecError,
+    /// Error-class: a worker died (panic or injected death).
+    WorkerDeath,
+    /// Error-class: a batch failed on every candidate backend (riders
+    /// observed the error).
+    BatchFailed,
+}
+
+impl TraceKind {
+    /// Stable lowercase label (exported names; stage spans use the
+    /// queue/batch/exec/failover vocabulary of the report table).
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceKind::Submit => "submit",
+            TraceKind::Enqueue => "enqueue",
+            TraceKind::BatchFormed => "batch-formed",
+            TraceKind::BackendSelected => "backend-selected",
+            TraceKind::JournalAppend => "journal-append",
+            TraceKind::Complete => "complete",
+            TraceKind::StageQueue => "queue",
+            TraceKind::StageBatch => "batch",
+            TraceKind::StageFailover => "failover",
+            TraceKind::StageExec => "exec",
+            TraceKind::Reject => "reject",
+            TraceKind::Shed => "shed",
+            TraceKind::FailoverHop => "failover-hop",
+            TraceKind::Respawn => "respawn",
+            TraceKind::FaultInjected => "fault-injected",
+            TraceKind::ExecError => "exec-error",
+            TraceKind::WorkerDeath => "worker-death",
+            TraceKind::BatchFailed => "batch-failed",
+        }
+    }
+
+    /// Whether this kind is captured unconditionally (and stored
+    /// outside the drop-prone rings).
+    pub fn is_error_class(self) -> bool {
+        matches!(
+            self,
+            TraceKind::Reject
+                | TraceKind::Shed
+                | TraceKind::FailoverHop
+                | TraceKind::Respawn
+                | TraceKind::FaultInjected
+                | TraceKind::ExecError
+                | TraceKind::WorkerDeath
+                | TraceKind::BatchFailed
+        )
+    }
+
+    /// Whether this kind is a duration span (exported as a Chrome
+    /// `ph: "X"` complete event; everything else is an instant).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            TraceKind::StageQueue
+                | TraceKind::StageBatch
+                | TraceKind::StageFailover
+                | TraceKind::StageExec
+        )
+    }
+}
+
+/// One compact trace event (`Copy`, fixed size — rings hold them
+/// inline).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Nanoseconds since the plane's epoch.
+    pub t_ns: u64,
+    /// Span duration in ns (0 for instants).
+    pub dur_ns: u64,
+    /// Event kind.
+    pub kind: TraceKind,
+    /// Request id (or the first rider's id for batch-scoped events;
+    /// 0 when no request is attributable).
+    pub id: u64,
+    /// Operation.
+    pub op: OpKind,
+    /// IEEE format.
+    pub format: FormatKind,
+    /// Backend index ([`NO_BACKEND`] when not attributable).
+    pub backend: u8,
+    /// Live lanes involved.
+    pub lanes: u32,
+    /// Kind-specific payload (see each [`TraceKind`] variant).
+    pub arg: u64,
+}
+
+impl TraceEvent {
+    /// A blank event of `kind` at `t_ns` (divide/f32 placeholders, no
+    /// backend, no lanes) — finish it with the builder methods.
+    pub fn new(kind: TraceKind, t_ns: u64) -> Self {
+        Self {
+            t_ns,
+            dur_ns: 0,
+            kind,
+            id: 0,
+            op: OpKind::Divide,
+            format: FormatKind::F32,
+            backend: NO_BACKEND,
+            lanes: 0,
+            arg: 0,
+        }
+    }
+
+    /// Attribute a request: id + its (op, format) slot.
+    pub fn req(mut self, id: u64, op: OpKind, format: FormatKind) -> Self {
+        self.id = id;
+        self.op = op;
+        self.format = format;
+        self
+    }
+
+    /// Attribute a backend index.
+    pub fn on_backend(mut self, backend: usize) -> Self {
+        self.backend = backend.min(NO_BACKEND as usize) as u8;
+        self
+    }
+
+    /// Record the live lane count.
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes.min(u32::MAX as usize) as u32;
+        self
+    }
+
+    /// Make this a span of `dur_ns` nanoseconds.
+    pub fn spanning(mut self, dur_ns: u64) -> Self {
+        self.dur_ns = dur_ns;
+        self
+    }
+
+    /// Attach the kind-specific payload.
+    pub fn with_arg(mut self, arg: u64) -> Self {
+        self.arg = arg;
+        self
+    }
+}
+
+struct Slot {
+    seq: AtomicUsize,
+    val: UnsafeCell<TraceEvent>,
+}
+
+/// One fixed-capacity multi-producer event ring (bounded MPMC queue in
+/// the Vyukov style: a per-slot sequence number arbitrates between
+/// producers and the draining consumer without locks). A push into a
+/// full ring *drops* the event and counts the drop — the hot path
+/// never waits for an observer.
+pub struct EventRing {
+    slots: Box<[Slot]>,
+    mask: usize,
+    enqueue_pos: AtomicUsize,
+    dequeue_pos: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// SAFETY: slot payloads are only written by the producer that won the
+// slot's sequence CAS and only read after the matching release store,
+// exactly the Vyukov bounded-queue protocol.
+unsafe impl Send for EventRing {}
+unsafe impl Sync for EventRing {}
+
+impl std::fmt::Debug for EventRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventRing")
+            .field("capacity", &self.slots.len())
+            .field("dropped", &self.dropped.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl EventRing {
+    /// Ring with `capacity` slots (rounded up to a power of two, min 8).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(8).next_power_of_two();
+        let slots: Vec<Slot> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(TraceEvent::new(TraceKind::Submit, 0)),
+            })
+            .collect();
+        Self {
+            slots: slots.into_boxed_slice(),
+            mask: cap - 1,
+            enqueue_pos: AtomicUsize::new(0),
+            dequeue_pos: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Slots in the ring.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Push one event; on a full ring the event is dropped (counted)
+    /// and `false` is returned. Lock-free: at most one CAS retry loop.
+    pub fn push(&self, ev: TraceEvent) -> bool {
+        let mut pos = self.enqueue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.enqueue_pos.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS grants exclusive
+                        // write access to this slot until the release
+                        // store below publishes it.
+                        unsafe { *slot.val.get() = ev };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return true;
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            } else {
+                pos = self.enqueue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pop the oldest event (`None` when empty). Used by the draining
+    /// observer, off the hot path.
+    pub fn pop(&self) -> Option<TraceEvent> {
+        let mut pos = self.dequeue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos.wrapping_add(1) as isize;
+            if diff == 0 {
+                match self.dequeue_pos.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS grants exclusive
+                        // read access; the slot was published by the
+                        // producer's release store.
+                        let ev = unsafe { *slot.val.get() };
+                        slot.seq
+                            .store(pos.wrapping_add(self.mask).wrapping_add(1), Ordering::Release);
+                        return Some(ev);
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                return None;
+            } else {
+                pos = self.dequeue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Events dropped on overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Trace plane configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Sample 1 in `sample` requests (1 = trace everything; clamped to
+    /// at least 1).
+    pub sample: u64,
+    /// Slots per event ring shard (the plane keeps a handful of
+    /// shards; error-class events are stored outside the rings and
+    /// never subject to this cap).
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    /// 1-in-64 sampling, 8192-slot shards.
+    fn default() -> Self {
+        Self { sample: 64, capacity: 8192 }
+    }
+}
+
+/// The shared tracing state: a monotonic epoch, sharded lifecycle
+/// rings, and the always-on error-class side store. One `Arc` of this
+/// is threaded through the handle, router, batcher, dispatch plane,
+/// workers and supervisor.
+#[derive(Debug)]
+pub struct TracePlane {
+    epoch: Instant,
+    shards: Vec<EventRing>,
+    /// Error-class events: never sampled, never dropped on ring
+    /// overflow (a mutex is fine here — these are rare by definition).
+    errors: Mutex<Vec<TraceEvent>>,
+    /// Lifecycle events already pumped out of the rings.
+    collected: Mutex<Vec<TraceEvent>>,
+    sample: u64,
+    /// Counter for id-less sampled sites (e.g. backend selection).
+    tick: AtomicU64,
+}
+
+impl TracePlane {
+    /// New plane; the epoch (t = 0) is *now*.
+    pub fn new(config: TraceConfig) -> Self {
+        Self {
+            epoch: Instant::now(),
+            shards: (0..SHARDS).map(|_| EventRing::new(config.capacity)).collect(),
+            errors: Mutex::new(Vec::new()),
+            collected: Mutex::new(Vec::new()),
+            sample: config.sample.max(1),
+            tick: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured sample modulus.
+    pub fn sample_rate(&self) -> u64 {
+        self.sample
+    }
+
+    /// Whether request `id` is in the 1-in-N sample.
+    pub fn sampled(&self, id: u64) -> bool {
+        id % self.sample == 0
+    }
+
+    /// Sampling gate for sites with no request id (one tick per
+    /// consideration; every N-th returns true).
+    pub fn tick_sampled(&self) -> bool {
+        self.tick.fetch_add(1, Ordering::Relaxed) % self.sample == 0
+    }
+
+    /// Nanoseconds from the epoch to `t` (0 for pre-epoch instants).
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Nanoseconds from the epoch to now.
+    pub fn now_ns(&self) -> u64 {
+        self.ns_of(Instant::now())
+    }
+
+    /// Emit one event. Error-class kinds go to the unbounded side
+    /// store (always captured); everything else rides the ring its id
+    /// hashes to and may be dropped (counted) on overflow.
+    pub fn emit(&self, ev: TraceEvent) {
+        if ev.kind.is_error_class() {
+            self.errors.lock().expect("trace error store poisoned").push(ev);
+        } else {
+            self.shards[(ev.id as usize) % self.shards.len()].push(ev);
+        }
+    }
+
+    /// Total lifecycle events dropped on ring overflow.
+    pub fn drops(&self) -> u64 {
+        self.shards.iter().map(EventRing::dropped).sum()
+    }
+
+    /// Error-class events captured so far.
+    pub fn error_count(&self) -> usize {
+        self.errors.lock().expect("trace error store poisoned").len()
+    }
+
+    /// Drain the rings into the collected store (called periodically
+    /// by the stats emitter and at export, so a long run does not have
+    /// to fit in ring capacity).
+    pub fn pump(&self) {
+        let mut collected = self.collected.lock().expect("trace store poisoned");
+        for ring in &self.shards {
+            while let Some(ev) = ring.pop() {
+                collected.push(ev);
+            }
+        }
+    }
+
+    /// Every event captured so far (pumped lifecycle + error-class),
+    /// sorted by timestamp.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.pump();
+        let mut out = self.collected.lock().expect("trace store poisoned").clone();
+        out.extend(self.errors.lock().expect("trace error store poisoned").iter().copied());
+        out.sort_by_key(|e| (e.t_ns, e.id));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ev(kind: TraceKind, id: u64, t: u64) -> TraceEvent {
+        TraceEvent::new(kind, t).req(id, OpKind::Divide, FormatKind::F32)
+    }
+
+    #[test]
+    fn ring_fifo_and_capacity() {
+        let r = EventRing::new(8);
+        assert_eq!(r.capacity(), 8);
+        for i in 0..8 {
+            assert!(r.push(ev(TraceKind::Enqueue, i, i)));
+        }
+        // full: the ninth push drops, counted
+        assert!(!r.push(ev(TraceKind::Enqueue, 8, 8)));
+        assert_eq!(r.dropped(), 1);
+        for i in 0..8 {
+            assert_eq!(r.pop().unwrap().id, i);
+        }
+        assert!(r.pop().is_none());
+        // space reclaimed: pushes succeed again
+        assert!(r.push(ev(TraceKind::Enqueue, 9, 9)));
+        assert_eq!(r.pop().unwrap().id, 9);
+    }
+
+    #[test]
+    fn ring_concurrent_producers_conserve_events() {
+        let r = Arc::new(EventRing::new(1024));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut pushed = 0u64;
+                for i in 0..10_000u64 {
+                    if r.push(ev(TraceKind::Enqueue, t * 10_000 + i, i)) {
+                        pushed += 1;
+                    }
+                }
+                pushed
+            }));
+        }
+        let pushed: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let mut popped = 0u64;
+        while r.pop().is_some() {
+            popped += 1;
+        }
+        assert_eq!(pushed + r.dropped(), 40_000, "every push accepted or counted dropped");
+        assert_eq!(popped, pushed, "accepted events all drain");
+        assert!(r.dropped() > 0, "1024 slots cannot hold 40k events");
+    }
+
+    #[test]
+    fn sampling_is_per_id_and_error_class_ignores_it() {
+        let p = TracePlane::new(TraceConfig { sample: 64, capacity: 64 });
+        assert!(p.sampled(0));
+        assert!(p.sampled(64));
+        assert!(!p.sampled(1));
+        let all = TracePlane::new(TraceConfig { sample: 1, capacity: 64 });
+        assert!(all.sampled(7));
+        // sample never reaches 0 (would divide by zero)
+        let clamped = TracePlane::new(TraceConfig { sample: 0, capacity: 64 });
+        assert_eq!(clamped.sample_rate(), 1);
+    }
+
+    #[test]
+    fn overflow_drops_only_sampled_lifecycle_events() {
+        // tiny rings, everything hashed to overflow; error-class events
+        // must all survive regardless
+        let p = TracePlane::new(TraceConfig { sample: 1, capacity: 8 });
+        for i in 0..1000u64 {
+            p.emit(ev(TraceKind::Enqueue, i, i));
+        }
+        for i in 0..100u64 {
+            p.emit(ev(TraceKind::ExecError, i, i).on_backend(1));
+        }
+        assert!(p.drops() > 0, "tiny rings must overflow");
+        assert_eq!(p.error_count(), 100, "error-class events bypass the rings");
+        let events = p.events();
+        let errors = events.iter().filter(|e| e.kind == TraceKind::ExecError).count();
+        assert_eq!(errors, 100);
+        let lifecycle = events.iter().filter(|e| e.kind == TraceKind::Enqueue).count() as u64;
+        assert_eq!(lifecycle + p.drops(), 1000, "drops account for every lost event");
+    }
+
+    #[test]
+    fn pump_makes_room_and_events_sort_by_time() {
+        let p = TracePlane::new(TraceConfig { sample: 1, capacity: 8 });
+        for round in 0..10u64 {
+            for i in 0..8u64 {
+                p.emit(ev(TraceKind::Enqueue, round * 8 + i, 1000 - (round * 8 + i)));
+            }
+            p.pump();
+        }
+        assert_eq!(p.drops(), 0, "pumping between bursts prevents overflow");
+        let events = p.events();
+        assert_eq!(events.len(), 80);
+        assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "sorted by timestamp");
+    }
+
+    #[test]
+    fn tick_sampling_fires_once_per_period() {
+        let p = TracePlane::new(TraceConfig { sample: 4, capacity: 8 });
+        let fired = (0..16).filter(|_| p.tick_sampled()).count();
+        assert_eq!(fired, 4);
+    }
+
+    #[test]
+    fn event_builders_fill_fields() {
+        let e = TraceEvent::new(TraceKind::StageExec, 10)
+            .req(7, OpKind::Sqrt, FormatKind::BF16)
+            .on_backend(2)
+            .with_lanes(64)
+            .spanning(500)
+            .with_arg(3);
+        assert_eq!(e.t_ns, 10);
+        assert_eq!(e.id, 7);
+        assert_eq!(e.op, OpKind::Sqrt);
+        assert_eq!(e.format, FormatKind::BF16);
+        assert_eq!(e.backend, 2);
+        assert_eq!(e.lanes, 64);
+        assert_eq!(e.dur_ns, 500);
+        assert_eq!(e.arg, 3);
+        assert!(e.kind.is_span());
+        assert!(!e.kind.is_error_class());
+        assert!(TraceKind::WorkerDeath.is_error_class());
+    }
+}

@@ -225,6 +225,16 @@ impl<const N: usize> RateWindow<N> {
         let lanes: u64 = self.lanes.iter().sum();
         Some(exec as f64 / lanes.max(1) as f64)
     }
+
+    /// Per-batch ns/lane rates currently in the window (unordered —
+    /// the window is a ring). Feed these into a [`Summary`] for
+    /// percentile views of a backend's service rate.
+    pub fn batch_rates(&self) -> impl Iterator<Item = f64> + '_ {
+        self.exec_ns
+            .iter()
+            .zip(self.lanes.iter())
+            .map(|(&ns, &lanes)| ns as f64 / lanes.max(1) as f64)
+    }
 }
 
 #[cfg(test)]
@@ -249,6 +259,25 @@ mod tests {
         let mut z: RateWindow<2> = RateWindow::new();
         z.push(500, 0);
         assert!(z.ns_per_lane().unwrap() >= 500.0);
+    }
+
+    #[test]
+    fn rate_window_batch_rates_feed_percentiles() {
+        let mut w: RateWindow<8> = RateWindow::new();
+        assert_eq!(w.batch_rates().count(), 0);
+        for i in 1..=8u64 {
+            w.push(i * 100 * 10, 10); // rates 100, 200, ..., 800 ns/lane
+        }
+        let s = Summary::from_slice(&w.batch_rates().collect::<Vec<_>>());
+        assert_eq!(s.count(), 8);
+        assert!((s.min() - 100.0).abs() < 1e-9);
+        assert!((s.max() - 800.0).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 400.0).abs() < 101.0);
+        // overwrite wraps: rates stay inside the pushed envelope
+        w.push(9_000, 10);
+        let s = Summary::from_slice(&w.batch_rates().collect::<Vec<_>>());
+        assert_eq!(s.count(), 8);
+        assert!((s.max() - 900.0).abs() < 1e-9);
     }
 
     #[test]

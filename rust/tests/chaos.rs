@@ -17,7 +17,11 @@
 //! - still-`Pending` journal records are replayed exactly once per
 //!   restart (verified by record ids in the raw journal), torn tails
 //!   from a mid-append crash are truncated, and fresh job ids continue
-//!   past every replayed id.
+//!   past every replayed id;
+//! - every injected fault leaves an always-captured trace event
+//!   blaming the right backend — even with request sampling effectively
+//!   off — and trace-ring overflow only ever drops sampled lifecycle
+//!   events, never error-class ones.
 //!
 //! Everything is deterministic: fault decisions are a pure function of
 //! (spec, seed, occurrence index), so these runs are reproducible.
@@ -34,6 +38,7 @@ use goldschmidt::coordinator::{
 };
 use goldschmidt::dispatch::ExecutorRegistry;
 use goldschmidt::fault::{FaultPlan, FaultSite};
+use goldschmidt::obs::{TraceConfig, TraceEvent, TraceKind, TracePlane};
 use goldschmidt::runtime::{Executor, NativeExecutor, ScalarReferenceExecutor};
 
 fn f32b(x: f32) -> u64 {
@@ -339,4 +344,76 @@ fn durable_jobs_complete_under_panic_chaos() {
     let done = coalesce(recs).into_iter().filter(|r| r.status == JobStatus::Done).count();
     assert_eq!(done, 40, "every durable job coalesces to Done");
     let _ = fs::remove_file(&path);
+}
+
+/// Chaos and the trace plane compose: with request sampling effectively
+/// disabled (1 in `u64::MAX`), every injected fault still appears in
+/// the trace as an error-class event with the blame on the backend
+/// that absorbed it — panics and transient errors on the preferred
+/// scalar pool, the injected worker death on the native failover pool.
+#[test]
+fn injected_faults_are_always_traced_with_backend_blame() {
+    let spec = "exec-panic@scalar-reference:after=1,count=1;\
+                exec-error@scalar-reference:after=4,count=2;\
+                worker-death@native-fixed-point:after=0,count=1";
+    let plan = FaultPlan::parse(spec, 0xDECAF).unwrap();
+    let mut cfg = config(Some(plan), None, 2);
+    cfg.trace = Some(TraceConfig { sample: u64::MAX, capacity: 1024 });
+    let svc = FpuService::start_routed(cfg, scalar_then_native()).unwrap();
+    let _ = run_workload(&svc, 400);
+
+    let evs = svc.trace().expect("trace plane armed").events();
+    // scalar-reference registers first => backend 0; native => backend 1
+    let injected: Vec<&TraceEvent> =
+        evs.iter().filter(|e| e.kind == TraceKind::FaultInjected).collect();
+    assert!(injected.len() >= 3, "panic + 2 errors fire, saw {}", injected.len());
+    assert!(injected.iter().all(|e| e.backend == 0), "executor faults blame scalar");
+    assert!(
+        evs.iter().any(|e| e.kind == TraceKind::ExecError && e.backend == 0),
+        "transient errors surface as exec-error on scalar"
+    );
+    assert!(
+        evs.iter().any(|e| e.kind == TraceKind::WorkerDeath && e.backend == 0),
+        "the injected panic is a worker death blamed on scalar"
+    );
+    assert!(
+        evs.iter().any(|e| e.kind == TraceKind::WorkerDeath && e.backend == 1),
+        "the injected death is blamed on the native pool that absorbed it"
+    );
+    assert!(
+        evs.iter().any(|e| e.kind == TraceKind::FailoverHop && e.backend == 0 && e.arg == 1),
+        "blamed scalar failures hop to native (arg = target backend)"
+    );
+    assert!(evs.iter().any(|e| e.kind == TraceKind::Respawn), "dead workers respawn");
+    // ...and none of that depended on the sample: at 1-in-u64::MAX only
+    // request id 0 can land in the lifecycle sample
+    let submits = evs.iter().filter(|e| e.kind == TraceKind::Submit).count();
+    assert!(submits <= 1, "sampling stayed off ({submits} submits)");
+    svc.shutdown();
+}
+
+/// Overflowing the lock-free rings sheds *sampled lifecycle* events
+/// only: every error-class event survives, bit-for-bit, no matter how
+/// far past capacity the stream runs.
+#[test]
+fn trace_ring_overflow_drops_only_sampled_never_error_class() {
+    let plane = TracePlane::new(TraceConfig { sample: 1, capacity: 8 });
+    for i in 0..512u64 {
+        plane.emit(TraceEvent::new(TraceKind::Submit, i).req(i, OpKind::Divide, FormatKind::F32));
+        if i % 8 == 0 {
+            plane.emit(
+                TraceEvent::new(TraceKind::ExecError, i)
+                    .req(i, OpKind::Divide, FormatKind::F32)
+                    .on_backend(1),
+            );
+        }
+    }
+    assert!(plane.drops() > 0, "512 submits through 8 slots must drop");
+    let evs = plane.events();
+    let errors = evs.iter().filter(|e| e.kind == TraceKind::ExecError).count();
+    assert_eq!(errors, 64, "error-class events survive overflow in full");
+    assert_eq!(plane.error_count(), 64);
+    let submits = evs.iter().filter(|e| e.kind == TraceKind::Submit).count();
+    assert!(submits > 0, "the rings retain the freshest sampled events");
+    assert!(submits < 512, "sampled lifecycle events are the ones shed");
 }
