@@ -2,9 +2,11 @@
 //! recorded in EXPERIMENTS.md §E2E. Sweeps batching policy and worker
 //! count on the native executor, measures the batch-kernel hot path
 //! against the scalar-map path it replaced, compares per-request
-//! submission with the v2 vectored `submit_batch` path, and runs the
-//! PJRT backend when built with `--features pjrt` and the artifacts
-//! exist.
+//! submission with the v2 vectored `submit_batch` path, drives the TCP
+//! wire front end on a loopback socket (closed-loop wire tax + an
+//! open-loop rate sweep whose headline is the max sustained qps at a
+//! p99 SLO), and runs the PJRT backend when built with
+//! `--features pjrt` and the artifacts exist.
 //!
 //! Machine-readable output: every run writes `BENCH_throughput.json`
 //! into the working directory (override the path with
@@ -294,6 +296,124 @@ fn limb_vs_u128_row<F: FloatFormat>() -> Json {
     ])
 }
 
+/// The wire front end on a loopback socket. Two measurements:
+///
+/// 1. closed-loop, one outstanding 256-lane frame at a time, over TCP
+///    vs the identical cadence in-process — the per-frame wire tax;
+/// 2. an open-loop offered-rate sweep (the `steady` scenario preset:
+///    Poisson dialers that never wait for completions before the next
+///    send). A rate point is *sustained* when every frame completes ok
+///    AND client-observed p99 stays within the SLO. The headline row
+///    is the fastest sustained point — the number a capacity planner
+///    actually wants from a serving benchmark.
+fn net_loopback_section() -> Json {
+    use goldschmidt::net::{NetClient, NetConfig, NetServer};
+    use goldschmidt::workload::{run_scenario, ScenarioSpec};
+    use std::sync::Arc;
+
+    const SLO_P99_MS: f64 = 5.0;
+    let quick = matches!(std::env::var("BENCH_QUICK").as_deref(), Ok("1") | Ok("true"));
+
+    let svc = Arc::new(native_service(service_config(1024, 200, 2)));
+    prime(&svc, FormatKind::F32);
+    let mut server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default())
+        .expect("net server");
+    let addr = server.local_addr();
+
+    let lanes = 256usize;
+    let frames = if quick { 400 } else { 2_000 };
+    let mut rng = Xoshiro256::new(0x3E7);
+    let a: Vec<u64> = (0..lanes).map(|_| rng.range_f32(1e-3, 1e3).to_bits() as u64).collect();
+    let b: Vec<u64> = (0..lanes).map(|_| rng.range_f32(1e-3, 1e3).to_bits() as u64).collect();
+
+    let handle = svc.handle();
+    let t0 = Instant::now();
+    for _ in 0..frames {
+        let resp = handle
+            .submit_batch(OpKind::Divide, FormatKind::F32, &a, &b)
+            .expect("submit")
+            .wait()
+            .expect("response");
+        black_box(&resp.bits);
+    }
+    let inproc_fps = frames as f64 / t0.elapsed().as_secs_f64();
+
+    let mut client = NetClient::connect(addr).expect("connect");
+    let t0 = Instant::now();
+    for _ in 0..frames {
+        let out = client
+            .call(OpKind::Divide, FormatKind::F32, &a, &b)
+            .expect("wire")
+            .expect("service");
+        black_box(&out);
+    }
+    let wire_fps = frames as f64 / t0.elapsed().as_secs_f64();
+    drop(client);
+
+    println!(
+        "net loopback closed-loop ({lanes}-lane divide frames): \
+         {wire_fps:.0} frames/s over TCP vs {inproc_fps:.0} in-process \
+         ({:+.1}% wire tax)",
+        100.0 * (inproc_fps / wire_fps - 1.0)
+    );
+
+    let mut t = Table::new(
+        format!("net loopback open-loop sweep (steady scenario, p99 SLO {SLO_P99_MS}ms)"),
+        &["offered/s", "achieved/s", "p50 lat", "p99 lat", "ok", "sustained"],
+    )
+    .aligns(&[Align::Right; 6]);
+    let secs = if quick { 1.0 } else { 2.0 };
+    let mut sweep = Vec::new();
+    let (mut max_qps, mut max_rate) = (0.0f64, 0.0f64);
+    for &rate in &[1_000.0f64, 2_000.0, 4_000.0, 8_000.0, 16_000.0, 32_000.0] {
+        let reqs = (rate * secs) as usize;
+        let mut spec = ScenarioSpec::preset("steady", reqs, rate, 0xBE9C).expect("steady preset");
+        spec.lanes = 8;
+        let report = run_scenario(addr.to_string(), &spec).expect("scenario");
+        let p99_ms = report.p99_ns() as f64 / 1e6;
+        let sustained = report.all_ok() && p99_ms <= SLO_P99_MS;
+        if sustained && report.qps() > max_qps {
+            max_qps = report.qps();
+            max_rate = rate;
+        }
+        t.row(&[
+            format!("{rate:.0}"),
+            format!("{:.0}", report.qps()),
+            fmt_ns(report.p50_ns() as f64),
+            fmt_ns(report.p99_ns() as f64),
+            format!("{}/{}", report.ok, report.submitted),
+            if sustained { "yes".to_string() } else { "NO".to_string() },
+        ]);
+        sweep.push(Json::obj([
+            ("offered_qps", Json::from(rate)),
+            ("achieved_qps", Json::from(report.qps())),
+            ("p50_lat_ns", Json::from(report.p50_ns())),
+            ("p99_lat_ns", Json::from(report.p99_ns())),
+            ("ok", Json::from(report.ok)),
+            ("submitted", Json::from(report.submitted)),
+            ("sustained", Json::from(sustained)),
+        ]));
+    }
+    t.print();
+    println!("net loopback headline: {max_qps:.0} qps sustained at p99 <= {SLO_P99_MS}ms\n");
+
+    let snap = server.stats().snapshot();
+    server.stop();
+    drop(svc);
+
+    Json::obj([
+        ("slo_p99_ms", Json::from(SLO_P99_MS)),
+        ("closed_loop_lanes", Json::from(lanes)),
+        ("closed_loop_wire_frames_per_s", Json::from(wire_fps)),
+        ("closed_loop_inproc_frames_per_s", Json::from(inproc_fps)),
+        ("open_loop_sweep", Json::arr(sweep)),
+        ("max_sustained_qps", Json::from(max_qps)),
+        ("max_sustained_offered_qps", Json::from(max_rate)),
+        ("server_submits", Json::from(snap.submits)),
+        ("server_slow_client_drops", Json::from(snap.slow_client_drops)),
+    ])
+}
+
 fn main() {
     let n = requests();
     let mut report: Vec<(&'static str, Json)> = vec![("requests", Json::from(n))];
@@ -495,6 +615,9 @@ fn main() {
     }
     t.print();
     report.push(("trace_overhead", Json::arr(trace_rows)));
+
+    // ---- wire front end on loopback: closed-loop tax + open-loop SLO ----
+    report.push(("net_loopback", net_loopback_section()));
 
     // ---- PJRT backend (the real three-layer path) -----------------------
     #[cfg(feature = "pjrt")]

@@ -101,7 +101,7 @@ impl JournalRecord {
     }
 }
 
-fn op_to_byte(op: OpKind) -> u8 {
+pub(crate) fn op_to_byte(op: OpKind) -> u8 {
     match op {
         OpKind::Divide => 0,
         OpKind::Sqrt => 1,
@@ -109,7 +109,7 @@ fn op_to_byte(op: OpKind) -> u8 {
     }
 }
 
-fn op_from_byte(b: u8) -> Result<OpKind> {
+pub(crate) fn op_from_byte(b: u8) -> Result<OpKind> {
     match b {
         0 => Ok(OpKind::Divide),
         1 => Ok(OpKind::Sqrt),
@@ -118,7 +118,7 @@ fn op_from_byte(b: u8) -> Result<OpKind> {
     }
 }
 
-fn format_to_byte(format: FormatKind) -> u8 {
+pub(crate) fn format_to_byte(format: FormatKind) -> u8 {
     match format {
         FormatKind::F16 => 0,
         FormatKind::BF16 => 1,
@@ -127,7 +127,7 @@ fn format_to_byte(format: FormatKind) -> u8 {
     }
 }
 
-fn format_from_byte(b: u8) -> Result<FormatKind> {
+pub(crate) fn format_from_byte(b: u8) -> Result<FormatKind> {
     match b {
         0 => Ok(FormatKind::F16),
         1 => Ok(FormatKind::BF16),
@@ -139,8 +139,9 @@ fn format_from_byte(b: u8) -> Result<FormatKind> {
 
 /// CRC-32 (IEEE 802.3 polynomial, reflected), table-driven. Hand
 /// rolled because the environment ships no crc crate; pinned by a
-/// known-answer test below.
-fn crc32(data: &[u8]) -> u32 {
+/// known-answer test below. Shared with the wire protocol
+/// (`crate::net`), which reuses the journal's framing discipline.
+pub(crate) fn crc32(data: &[u8]) -> u32 {
     const TABLE: [u32; 256] = {
         let mut table = [0u32; 256];
         let mut i = 0;

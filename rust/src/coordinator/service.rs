@@ -57,7 +57,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -393,7 +393,11 @@ impl ServiceHandle {
         self.check_supported(op, format)
     }
 
-    /// Callers have already run [`Self::check_batch`].
+    /// Callers have already run [`Self::check_batch`]. `tag` overrides
+    /// the service-allocated request id with a caller-assigned one (the
+    /// wire front end passes the client's request id through so a wire
+    /// request's trace spans join under the id the client knows); `None`
+    /// draws from the service allocator as before.
     fn submit_batch_inner(
         &self,
         op: OpKind,
@@ -401,8 +405,9 @@ impl ServiceHandle {
         a: &[u64],
         b: &[u64],
         deadline: Option<Duration>,
+        tag: Option<u64>,
     ) -> Result<BatchTicket, ServiceError> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = tag.unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
         let (mut item, ticket) =
             WorkItem::group(id, op, format, a, b, deadline.map(|d| Instant::now() + d));
         self.mark_submit(&mut item);
@@ -424,7 +429,31 @@ impl ServiceHandle {
         b: &[u64],
     ) -> Result<BatchTicket, ServiceError> {
         self.check_batch(op, format, a, b)?;
-        self.submit_batch_inner(op, format, a, b, None)
+        self.submit_batch_inner(op, format, a, b, None, None)
+    }
+
+    /// [`Self::submit_batch`] under a **caller-assigned** request id
+    /// (with an optional deadline): the wire front end's submit path.
+    /// The tag becomes the item's id for the whole lifecycle, so a
+    /// sampled wire request's trace spans join under the id the client
+    /// chose (and the Chrome export groups them accordingly). Tags share
+    /// the id space with service-allocated ids; collisions only blur
+    /// trace grouping, never correctness (tickets resolve by completion
+    /// slot, not by id).
+    pub fn submit_batch_tagged(
+        &self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+        deadline: Option<Duration>,
+        tag: u64,
+    ) -> Result<BatchTicket, ServiceError> {
+        self.check_batch(op, format, a, b)?;
+        if let Some(d) = deadline {
+            self.admit_deadline(op, format, a.len(), d)?;
+        }
+        self.submit_batch_inner(op, format, a, b, deadline, Some(tag))
     }
 
     /// [`Self::submit_batch`] with a completion deadline covering the
@@ -442,7 +471,7 @@ impl ServiceHandle {
         // validation precedes admission (see submit_value_deadline)
         self.check_batch(op, format, a, b)?;
         self.admit_deadline(op, format, a.len(), deadline)?;
-        self.submit_batch_inner(op, format, a, b, Some(deadline))
+        self.submit_batch_inner(op, format, a, b, Some(deadline), None)
     }
 
     /// Convenience: blocking round-trip divide (f32).
@@ -505,7 +534,22 @@ pub enum JobPoll {
 struct DurableState {
     journal: Mutex<Journal>,
     jobs: Mutex<HashMap<u64, JobPoll>>,
+    /// Notified whenever a job's table entry *resolves* (Done/Failed
+    /// insert), so [`FpuService::wait_for_id`] blocks instead of
+    /// polling. One condvar for the whole table: resolutions are rare
+    /// relative to waits, and waiters re-check their own id.
+    jobs_cv: Condvar,
     next_job: AtomicU64,
+}
+
+impl DurableState {
+    /// Insert a **terminal** outcome and wake every `wait_for_id`
+    /// waiter. All Done/Failed inserts go through here; `Pending`
+    /// inserts don't notify (nothing resolved).
+    fn resolve(&self, id: u64, outcome: JobPoll) {
+        self.jobs.lock().unwrap().insert(id, outcome);
+        self.jobs_cv.notify_all();
+    }
 }
 
 /// What the journal retirer waits on: the job id, the routing key (a
@@ -542,14 +586,14 @@ fn retirer_loop(rx: Receiver<RetireMsg>, state: Arc<DurableState>, trace: Option
                 // unless its record is on disk
                 let _ = state.journal.lock().unwrap().append(&rec);
                 note_append(id, op, format, 1);
-                state.jobs.lock().unwrap().insert(id, JobPoll::Done(rec.result));
+                state.resolve(id, JobPoll::Done(rec.result));
             }
             Err(err) => {
                 rec.status = JobStatus::Failed;
                 rec.error = format!("{err}");
                 let _ = state.journal.lock().unwrap().append(&rec);
                 note_append(id, op, format, 2);
-                state.jobs.lock().unwrap().insert(id, JobPoll::Failed(err));
+                state.resolve(id, JobPoll::Failed(err));
             }
         }
     }
@@ -1101,6 +1145,7 @@ impl FpuService {
             let state = Arc::new(DurableState {
                 journal: Mutex::new(journal),
                 jobs: Mutex::new(HashMap::new()),
+                jobs_cv: Condvar::new(),
                 next_job: AtomicU64::new(0),
             });
             let (rtx, rrx) = mpsc::channel::<RetireMsg>();
@@ -1139,7 +1184,7 @@ impl FpuService {
                                 failed.status = JobStatus::Failed;
                                 failed.error = format!("{err}");
                                 let _ = state.journal.lock().unwrap().append(&failed);
-                                state.jobs.lock().unwrap().insert(rec.id, JobPoll::Failed(err));
+                                state.resolve(rec.id, JobPoll::Failed(err));
                             }
                         }
                     }
@@ -1241,7 +1286,7 @@ impl FpuService {
                 t.emit(TraceEvent::new(TraceKind::JournalAppend, t.now_ns()).req(id, op, format));
             }
         }
-        match self.handle.submit_batch_inner(op, format, a, b, None) {
+        match self.handle.submit_batch_inner(op, format, a, b, None, None) {
             Ok(ticket) => {
                 if let Some(rtx) = &self.retirer_tx {
                     let _ = rtx.send((id, op, format, ticket));
@@ -1255,7 +1300,7 @@ impl FpuService {
                 failed.status = JobStatus::Failed;
                 failed.error = format!("{err}");
                 let _ = state.journal.lock().unwrap().append(&failed);
-                state.jobs.lock().unwrap().insert(id, JobPoll::Failed(err.clone()));
+                state.resolve(id, JobPoll::Failed(err.clone()));
                 Err(err)
             }
         }
@@ -1267,9 +1312,44 @@ impl FpuService {
         self.durable.as_ref().and_then(|s| s.jobs.lock().unwrap().get(&id).cloned())
     }
 
+    /// Block until durable job `id` **resolves** (Done/Failed) or
+    /// `timeout` elapses — the streaming replacement for the
+    /// [`Self::poll_job`] + sleep loop: waiters park on the job table's
+    /// condvar and are woken by the retirer the moment the outcome
+    /// lands.
+    ///
+    /// Returns the job's state at return time: `Some(Done/Failed)` on
+    /// resolution, `Some(Pending)` when the timeout expired first, and
+    /// `None` for an unknown id (or a service without a journal) —
+    /// checked immediately, an unknown id never blocks.
+    pub fn wait_for_id(&self, id: u64, timeout: Duration) -> Option<JobPoll> {
+        let state = self.durable.as_ref()?;
+        let deadline = Instant::now() + timeout;
+        let mut jobs = state.jobs.lock().unwrap();
+        loop {
+            match jobs.get(&id) {
+                Some(JobPoll::Pending) => {}
+                other => return other.cloned(),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(JobPoll::Pending);
+            }
+            // re-checks on every resolution notify; spurious wakes just
+            // loop (the deadline guard above bounds the total wait)
+            jobs = state.jobs_cv.wait_timeout(jobs, deadline - now).unwrap().0;
+        }
+    }
+
     /// How many still-`Pending` journal records this start replayed.
     pub fn replayed_jobs(&self) -> usize {
         self.replayed
+    }
+
+    /// Whether the durable plane is armed ([`ServiceConfig::journal`]
+    /// was set) — the wire handshake grants the durable flag by this.
+    pub fn is_durable(&self) -> bool {
+        self.durable.is_some()
     }
 
     /// Shared by [`Self::shutdown`] and `Drop`; idempotent. Order

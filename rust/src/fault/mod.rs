@@ -16,6 +16,7 @@
 //! rule    := site [ '@' backend ] [ ':' kv { ',' kv } ]
 //! site    := exec-error | exec-panic | latency | bit-flip
 //!          | worker-death | slow-drain
+//!          | conn-drop | partial-write | read-stall
 //! kv      := 'p' '=' float        probability per occurrence (default 1)
 //!          | 'after' '=' int      occurrences skipped first (default 0)
 //!          | 'count' '=' int      occurrences in the window (default ∞)
@@ -50,6 +51,13 @@
 //! | `bit-flip` | executor wrapper | harness detection of silent corruption |
 //! | `worker-death` | `worker_loop` | unblamed requeue + supervisor respawn |
 //! | `slow-drain` | `worker_loop` | shutdown retire budget |
+//! | `conn-drop` | net reader loop | durable exactly-once under client death |
+//! | `partial-write` | net writer loop | client torn-frame rejection (CRC) |
+//! | `read-stall` | net reader loop | slow connection isolation |
+//!
+//! The three net sites are consulted by [`crate::net::NetServer`] (the
+//! wire front end) with the backend filter matched against the string
+//! `"net"`, since a connection has no backend.
 
 mod executor;
 mod plan;

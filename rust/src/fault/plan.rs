@@ -37,17 +37,30 @@ pub enum FaultSite {
     /// The worker sleeps before executing (exercises the shutdown
     /// retire budget under a slow drain).
     SlowDrain,
+    /// The net plane drops the connection after receiving a frame
+    /// (exercises durable exactly-once survival of client death).
+    ConnDrop,
+    /// The net writer sends only a prefix of a completion frame before
+    /// the connection dies (exercises client-side torn-frame handling —
+    /// the CRC/length framing must reject the fragment).
+    PartialWrite,
+    /// The net reader stalls between frames (a server-side slow-loris;
+    /// exercises that one stalled connection never blocks the rest).
+    ReadStall,
 }
 
 impl FaultSite {
     /// Every site, spec order.
-    pub const ALL: [FaultSite; 6] = [
+    pub const ALL: [FaultSite; 9] = [
         FaultSite::ExecError,
         FaultSite::ExecPanic,
         FaultSite::Latency,
         FaultSite::BitFlip,
         FaultSite::WorkerDeath,
         FaultSite::SlowDrain,
+        FaultSite::ConnDrop,
+        FaultSite::PartialWrite,
+        FaultSite::ReadStall,
     ];
 
     /// The spec-grammar name of the site.
@@ -59,6 +72,9 @@ impl FaultSite {
             FaultSite::BitFlip => "bit-flip",
             FaultSite::WorkerDeath => "worker-death",
             FaultSite::SlowDrain => "slow-drain",
+            FaultSite::ConnDrop => "conn-drop",
+            FaultSite::PartialWrite => "partial-write",
+            FaultSite::ReadStall => "read-stall",
         }
     }
 
@@ -94,8 +110,8 @@ pub struct FaultRule {
     pub after: u64,
     /// Occurrences in the window (default unbounded).
     pub count: u64,
-    /// Injected delay for latency/slow-drain sites, microseconds
-    /// (default 1000).
+    /// Injected delay for latency/slow-drain/read-stall sites,
+    /// microseconds (default 1000).
     pub micros: u64,
 }
 
@@ -109,7 +125,10 @@ impl fmt::Display for FaultRule {
         if self.count != u64::MAX {
             write!(f, ",count={}", self.count)?;
         }
-        if matches!(self.site, FaultSite::Latency | FaultSite::SlowDrain) {
+        if matches!(
+            self.site,
+            FaultSite::Latency | FaultSite::SlowDrain | FaultSite::ReadStall
+        ) {
             write!(f, ",us={}", self.micros)?;
         }
         Ok(())
@@ -308,6 +327,24 @@ mod tests {
         // the rendered plan round-trips through the grammar
         let rendered = plan.to_string();
         assert!(rendered.contains("exec-panic@scalar-reference"), "{rendered}");
+    }
+
+    #[test]
+    fn parse_net_sites() {
+        let plan = FaultPlan::parse(
+            "conn-drop:after=3,count=1; partial-write:p=0.25; read-stall:us=5000",
+            11,
+        )
+        .unwrap();
+        let rules = plan.rules();
+        assert_eq!(rules[0].site, FaultSite::ConnDrop);
+        assert_eq!((rules[0].after, rules[0].count), (3, 1));
+        assert_eq!(rules[1].site, FaultSite::PartialWrite);
+        assert_eq!(rules[1].p, 0.25);
+        assert_eq!(rules[2].site, FaultSite::ReadStall);
+        assert_eq!(rules[2].micros, 5000);
+        // read-stall renders its us= parameter back out
+        assert!(plan.to_string().contains("read-stall:p=1,after=0,us=5000"), "{plan}");
     }
 
     #[test]

@@ -32,7 +32,12 @@
 //!   (queue / batch / exec / failover) decompose rider-observed
 //!   latency, always-captured error-class events (sheds, failovers,
 //!   injected faults, worker deaths), Chrome-trace/JSONL export and a
-//!   per-stage breakdown report.
+//!   per-stage breakdown report. The [`net`] plane puts a socket in
+//!   front of all of it: a compact length-prefixed wire protocol
+//!   (HELLO/SUBMIT/TICKET/COMPLETE, CRC-framed like the journal) served
+//!   by blocking per-connection reader threads and bounded writer
+//!   handoff queues, driven at scenario scale by the open-loop
+//!   [`workload`] generator (`goldschmidt loadgen`).
 //! * **Layer 2** — `python/compile/model.py`: jax graphs, lowered once
 //!   to HLO text under `artifacts/`.
 //! * **Layer 1** — `python/compile/kernels/`: the Goldschmidt iteration
@@ -67,6 +72,7 @@ pub mod fault;
 pub mod formats;
 pub mod goldschmidt;
 pub mod kernel;
+pub mod net;
 pub mod obs;
 pub mod runtime;
 pub mod sim;

@@ -79,6 +79,21 @@ COMMANDS:
              --stats-interval-ms MS (live stats emitter: one snapshot
              line per interval — qps, queue depth, per-slot p50/p99,
              breaker states, respawns, trace drops)
+             --listen ADDR (wire front end: serve the binary protocol
+             on a TCP socket instead of the synthetic driver —
+             127.0.0.1:0 binds an ephemeral port; the bound address is
+             printed as \"net: listening on ...\")
+             --listen-for-ms MS (with --listen: serve for MS then shut
+             down cleanly; 0 = serve until killed)
+  loadgen    open-loop scenario load harness against a `serve --listen`
+             --connect ADDR (default 127.0.0.1:7070)
+             --scenario steady|burst|ramp|mixed|reconnect|slowloris
+             --requests N (total SUBMIT frames across all connections)
+             --rate QPS (total offered frame rate across connections)
+             --lanes L (vectored lanes per frame) --seed U64
+             --format f16|bf16|f32|f64|mix (override the preset's mix)
+             --deadline-us US (per-frame wire deadline; 0 = none)
+             --durable (journalled submits; server needs --journal)
   trace-report  per-stage latency breakdown of a --trace-out file
              goldschmidt trace-report TRACE.json (or .jsonl)
   version    print version
@@ -112,6 +127,7 @@ fn run(args: &Args) -> Result<()> {
         Some("stream") => cmd_stream(args),
         Some("sqrt") => cmd_sqrt(args),
         Some("serve") => cmd_serve(args),
+        Some("loadgen") => cmd_loadgen(args),
         Some("trace-report") => cmd_trace_report(args),
         Some("version") => {
             println!("goldschmidt {}", env!("CARGO_PKG_VERSION"));
@@ -443,6 +459,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("fault plan armed: {plan}");
         Some(Arc::new(plan))
     };
+    // the net plane consults the same plan (conn-drop / partial-write /
+    // read-stall sites filter on backend "net")
+    let net_fault = fault.clone();
     // lifecycle tracing: --trace-out arms the trace plane for the whole
     // run (1-in-N whole-request sampling; error-class events are always
     // captured) and the file is written at shutdown
@@ -480,6 +499,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let svc = start_service(config, &backend, policy, &artifacts)?;
     if journal_armed {
         println!("journal: replayed {} pending job(s)", svc.replayed_jobs());
+    }
+
+    // --listen swaps the synthetic driver for the wire front end: the
+    // service stays up serving SUBMIT frames until the window elapses
+    // (or forever), then tears down cleanly
+    let listen = args.get_str("listen", "");
+    if !listen.is_empty() {
+        let listen_for_ms: u64 = args.get("listen-for-ms", 0u64).map_err(anyhow::Error::msg)?;
+        let svc = Arc::new(svc);
+        let net_cfg = goldschmidt::net::NetConfig { fault: net_fault, ..Default::default() };
+        let mut server = goldschmidt::net::NetServer::start(Arc::clone(&svc), &listen, net_cfg)?;
+        println!("net: listening on {}", server.local_addr());
+        // the accept loop runs on its own thread; CI tails this line
+        // from a redirected log, so push it out of the stdout buffer
+        std::io::Write::flush(&mut std::io::stdout()).ok();
+        if listen_for_ms == 0 {
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(Duration::from_millis(listen_for_ms));
+        server.stop();
+        let net = server.stats().snapshot();
+        println!(
+            "net: served {} submit(s) / {} completion(s) over {} connection(s), \
+             {} slow-client drop(s), {} injected conn-drop(s), {} protocol error(s)",
+            net.submits,
+            net.completes,
+            net.connections,
+            net.slow_client_drops,
+            net.injected_conn_drops,
+            net.protocol_errors
+        );
+        write_trace_if_armed(&svc, trace_out.as_deref())?;
+        return Ok(());
     }
 
     let spec = WorkloadSpec {
@@ -522,14 +576,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ids.push(svc.submit_batch_durable(r.op, r.format, &a, b)?);
         }
         for id in ids {
+            // streaming completion: the retirer's condvar wakes this
+            // exactly when the job resolves (no poll/sleep spin); the
+            // timeout only bounds each wait so a wedged job cannot
+            // hang the driver silently
             loop {
-                match svc.poll_job(id) {
+                match svc.wait_for_id(id, Duration::from_millis(500)) {
                     Some(JobPoll::Done(_)) => {
                         ok += 1;
                         break;
                     }
                     Some(JobPoll::Failed(_)) => break,
-                    _ => std::thread::sleep(Duration::from_micros(200)),
+                    Some(JobPoll::Pending) => {}
+                    None => break,
                 }
             }
         }
@@ -633,20 +692,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         t.print();
     }
-    if let Some(path) = &trace_out {
-        if let Some(trace) = svc.trace() {
-            let events = trace.events();
-            goldschmidt::obs::write_trace(path, &events)?;
-            println!(
-                "trace: wrote {} event(s) to {} (1-in-{} sampling, {} dropped, {} error-class)",
-                events.len(),
-                path.display(),
-                trace.sample_rate(),
-                trace.drops(),
-                trace.error_count()
-            );
-        }
-    }
+    write_trace_if_armed(&svc, trace_out.as_deref())?;
     svc.shutdown();
+    Ok(())
+}
+
+/// Drain the trace plane (if armed) to `trace_out`, labeling the Chrome
+/// export's per-backend tracks with the registry's backend names.
+fn write_trace_if_armed(svc: &FpuService, trace_out: Option<&std::path::Path>) -> Result<()> {
+    let Some(path) = trace_out else { return Ok(()) };
+    let Some(trace) = svc.trace() else { return Ok(()) };
+    let events = trace.events();
+    let names: Vec<String> = svc.backend_names().iter().map(|s| s.to_string()).collect();
+    goldschmidt::obs::write_trace_named(path, &events, &names)?;
+    println!(
+        "trace: wrote {} event(s) to {} (1-in-{} sampling, {} dropped, {} error-class)",
+        events.len(),
+        path.display(),
+        trace.sample_rate(),
+        trace.drops(),
+        trace.error_count()
+    );
+    Ok(())
+}
+
+/// Drive a `serve --listen` endpoint with one of the named open-loop
+/// scenarios (see `goldschmidt::workload::scenario`). Prints the
+/// headline `loadgen: N/N ok` line CI asserts on; exits nonzero when a
+/// scenario that promises zero rider-visible errors loses frames.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use goldschmidt::workload::{run_scenario, ScenarioSpec, SCENARIOS};
+
+    let connect = args.get_str("connect", "127.0.0.1:7070");
+    let scenario = args.get_str("scenario", "steady");
+    let requests: usize = args.get("requests", 10_000usize).map_err(anyhow::Error::msg)?;
+    let rate: f64 = args.get("rate", 20_000.0f64).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get("seed", 0xFEEDu64).map_err(anyhow::Error::msg)?;
+    let mut spec = ScenarioSpec::preset(&scenario, requests, rate, seed).ok_or_else(|| {
+        anyhow::anyhow!("unknown scenario {scenario:?} (try {})", SCENARIOS.join("|"))
+    })?;
+    spec.lanes = args.get("lanes", 8usize).map_err(anyhow::Error::msg)?;
+    spec.deadline_us = args.get("deadline-us", 0u32).map_err(anyhow::Error::msg)?;
+    spec.durable = args.flag("durable");
+    let fmt_str = args.get_str("format", "");
+    if !fmt_str.is_empty() {
+        spec.formats = if fmt_str == "mix" {
+            FormatKind::ALL.to_vec()
+        } else {
+            vec![FormatKind::parse(&fmt_str).map_err(anyhow::Error::msg)?]
+        };
+    }
+    println!(
+        "loadgen: scenario={scenario} requests={} connections={} lanes={} -> {connect}",
+        spec.requests, spec.connections, spec.lanes
+    );
+    let report = run_scenario(connect, &spec)?;
+    println!(
+        "loadgen: {:.0} qps achieved in {:.2}s, p50 {} p99 {}, {} service error(s), \
+         {} transport loss(es), {} reconnect(s)",
+        report.qps(),
+        report.elapsed_s,
+        fmt_ns(report.p50_ns() as f64),
+        fmt_ns(report.p99_ns() as f64),
+        report.service_errors,
+        report.transport_errors,
+        report.reconnects
+    );
+    println!("loadgen: {}/{} ok", report.ok, requests);
+    // slow-loris deliberately gets its slow reader shed; every other
+    // scenario promises zero rider-visible errors
+    if scenario != "slowloris" && report.ok != requests as u64 {
+        bail!(
+            "{} of {requests} frame(s) did not complete ok",
+            (requests as u64).saturating_sub(report.ok)
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,219 @@
+//! The wire client: handshake, submits, and completion delivery.
+//!
+//! [`NetClient`] is the simple synchronous shape — submit, then
+//! [`NetClient::wait`] (completions for *other* outstanding ids arrive
+//! out of order and are buffered, so interleaved submits work). The
+//! open-loop load generator wants independent send and receive threads
+//! instead; [`NetClient::split`] hands out the two socket halves as
+//! [`NetSender`] / [`NetReceiver`].
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{FormatKind, OpKind, ServiceError};
+
+use super::wire::{
+    error_from_status, read_frame, write_frame, CompleteFrame, Frame, SubmitFrame, STATUS_OK,
+    SUBMIT_DURABLE, WIRE_VERSION,
+};
+
+/// Submit-time options beyond the operand planes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// Completion deadline in microseconds (0 = none).
+    pub deadline_us: u32,
+    /// Journal the batch server-side (`submit_batch_durable`); requires
+    /// the durable flag to have been granted in the handshake.
+    pub durable: bool,
+}
+
+/// One frame received from the server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// The submit with this id was accepted and queued.
+    Ticket { id: u64 },
+    /// Terminal outcome for one id (out of order).
+    Complete(CompleteFrame),
+}
+
+/// Turn a completion frame into the typed result surface.
+pub fn result_of(frame: &CompleteFrame) -> Result<Vec<u64>, ServiceError> {
+    if frame.status == STATUS_OK {
+        Ok(frame.results.clone())
+    } else {
+        Err(error_from_status(frame.status, &frame.error))
+    }
+}
+
+/// The sending half: assigns request ids and writes SUBMIT frames.
+pub struct NetSender {
+    sock: TcpStream,
+    next_id: u64,
+    granted_flags: u32,
+}
+
+impl NetSender {
+    /// Flags the server granted in the handshake (see
+    /// [`super::wire::FLAG_DURABLE`]).
+    pub fn granted_flags(&self) -> u32 {
+        self.granted_flags
+    }
+
+    /// Submit one vectored batch; returns the client-assigned id its
+    /// TICKET/COMPLETE frames will carry.
+    pub fn submit(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+        opts: SubmitOpts,
+    ) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Submit(SubmitFrame {
+            id,
+            op,
+            format,
+            flags: if opts.durable { SUBMIT_DURABLE } else { 0 },
+            deadline_us: opts.deadline_us,
+            a: a.to_vec(),
+            b: b.to_vec(),
+        });
+        write_frame(&mut self.sock, &frame)?;
+        Ok(id)
+    }
+
+    /// Half-close: FIN the write direction. The server treats this as a
+    /// clean close, flushes every outstanding TICKET/COMPLETE through
+    /// its writer, then closes — so a paired [`NetReceiver`] sees all
+    /// remaining completions followed by EOF instead of blocking on a
+    /// quiet socket.
+    pub fn finish(&self) {
+        let _ = self.sock.shutdown(Shutdown::Write);
+    }
+}
+
+/// The receiving half: blocking frame reads.
+pub struct NetReceiver {
+    sock: TcpStream,
+}
+
+impl NetReceiver {
+    /// Blocking-read the next server frame (`None` = clean close).
+    pub fn recv(&mut self) -> Result<Option<Event>> {
+        match read_frame(&mut self.sock)? {
+            None => Ok(None),
+            Some(Frame::Ticket { id }) => Ok(Some(Event::Ticket { id })),
+            Some(Frame::Complete(c)) => Ok(Some(Event::Complete(c))),
+            Some(other) => bail!("unexpected server frame {other:?}"),
+        }
+    }
+
+    /// Bound every subsequent [`Self::recv`] (`None` = block forever).
+    /// A timeout surfaces as an error from `recv`.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.sock.set_read_timeout(timeout).context("set_read_timeout")
+    }
+}
+
+/// A connected, handshaken wire client.
+pub struct NetClient {
+    sender: NetSender,
+    receiver: NetReceiver,
+    /// Completions that arrived while waiting on a different id.
+    buffered: HashMap<u64, CompleteFrame>,
+}
+
+impl NetClient {
+    /// Connect and handshake with no flags requested.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<NetClient> {
+        Self::connect_with_flags(addr, 0)
+    }
+
+    /// Connect, send `HELLO{version, flags}`, and check the server's
+    /// reply speaks our version. The granted flag subset is readable
+    /// via [`NetSender::granted_flags`].
+    pub fn connect_with_flags<A: ToSocketAddrs>(addr: A, flags: u32) -> Result<NetClient> {
+        let mut sock = TcpStream::connect(addr).context("connecting")?;
+        // request/response round trips dominate an interactive client;
+        // never trade them for Nagle coalescing
+        let _ = sock.set_nodelay(true);
+        write_frame(&mut sock, &Frame::Hello { version: WIRE_VERSION, flags })?;
+        let reply = read_frame(&mut sock)?.context("server closed during handshake")?;
+        let granted = match reply {
+            Frame::Hello { version: WIRE_VERSION, flags: granted } => granted,
+            Frame::Hello { version, .. } => {
+                bail!("server speaks wire version {version}, this client speaks {WIRE_VERSION}")
+            }
+            other => bail!("expected HELLO, got {other:?}"),
+        };
+        let reader = sock.try_clone().context("cloning socket")?;
+        Ok(NetClient {
+            sender: NetSender { sock, next_id: 0, granted_flags: granted },
+            receiver: NetReceiver { sock: reader },
+            buffered: HashMap::new(),
+        })
+    }
+
+    /// Flags the server granted in the handshake.
+    pub fn granted_flags(&self) -> u32 {
+        self.sender.granted_flags
+    }
+
+    /// Submit one vectored batch (see [`NetSender::submit`]).
+    pub fn submit(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+        opts: SubmitOpts,
+    ) -> Result<u64> {
+        self.sender.submit(op, format, a, b, opts)
+    }
+
+    /// Block until the completion for `id` arrives. TICKET acks are
+    /// consumed silently; completions for other ids are buffered for
+    /// their own `wait` calls, so out-of-order delivery is transparent.
+    pub fn wait(&mut self, id: u64) -> Result<CompleteFrame> {
+        if let Some(c) = self.buffered.remove(&id) {
+            return Ok(c);
+        }
+        loop {
+            match self.receiver.recv()? {
+                None => bail!("connection closed with id {id} outstanding"),
+                Some(Event::Ticket { .. }) => {}
+                Some(Event::Complete(c)) => {
+                    if c.id == id {
+                        return Ok(c);
+                    }
+                    self.buffered.insert(c.id, c);
+                }
+            }
+        }
+    }
+
+    /// Submit + wait + typed result: the blocking convenience that
+    /// mirrors `submit_batch(...).wait()` over the wire.
+    pub fn call(
+        &mut self,
+        op: OpKind,
+        format: FormatKind,
+        a: &[u64],
+        b: &[u64],
+    ) -> Result<Result<Vec<u64>, ServiceError>> {
+        let id = self.submit(op, format, a, b, SubmitOpts::default())?;
+        Ok(result_of(&self.wait(id)?))
+    }
+
+    /// Split into independent send/receive halves (separate threads for
+    /// open-loop driving). Buffered completions are discarded — split
+    /// before waiting, not mid-conversation.
+    pub fn split(self) -> (NetSender, NetReceiver) {
+        (self.sender, self.receiver)
+    }
+}

@@ -1,0 +1,44 @@
+//! The net plane: a TCP front end for the FPU service.
+//!
+//! The in-process service ([`crate::coordinator::FpuService`]) serves
+//! callers in the same address space; this module puts a socket in
+//! front of it so the "divider unit as a shared resource" can be shared
+//! across processes and machines — and so the serving claims can be
+//! measured against real request traffic (the `net_loopback` bench
+//! section and the `goldschmidt loadgen` harness drive exactly this
+//! path).
+//!
+//! Three pieces:
+//!
+//! * [`wire`] — the compact length-prefixed binary protocol:
+//!   `HELLO{version, flags}` handshake, `SUBMIT` frames carrying one
+//!   vectored batch each (mapping 1:1 onto
+//!   `submit_batch`/`submit_batch_durable`), `TICKET{id}` acks and
+//!   out-of-order `COMPLETE{id, status, results}` frames. Framing —
+//!   `len | crc32(payload) | payload` — reuses the request journal's
+//!   discipline and its CRC-32.
+//! * [`server`] — [`NetServer`]: per-connection blocking reader
+//!   threads feed the service directly (no reactor), completions are
+//!   pushed by a per-connection writer thread fed from a **bounded**
+//!   handoff queue; a client whose queue fills is counted
+//!   (`net_slow_client_drops`) and disconnected. The `conn-drop`,
+//!   `partial-write` and `read-stall` fault sites inject here.
+//! * [`client`] — [`NetClient`] (synchronous submit/wait with
+//!   out-of-order buffering) and the split [`NetSender`] /
+//!   [`NetReceiver`] halves the open-loop load generator drives from
+//!   separate threads.
+//!
+//! See the README's "Wire protocol" section for the frame layout
+//! tables and handshake rules.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{result_of, Event, NetClient, NetReceiver, NetSender, SubmitOpts};
+pub use server::{NetConfig, NetServer, NetStats, NetStatsSnapshot};
+pub use wire::{
+    error_from_status, status_of, CompleteFrame, Frame, SubmitFrame, FLAG_DURABLE, MAX_FRAME,
+    STATUS_DEADLINE, STATUS_EXEC_FAILED, STATUS_OK, STATUS_OVERLOADED, STATUS_REJECTED,
+    STATUS_SHUTDOWN, SUBMIT_DURABLE, WIRE_VERSION,
+};

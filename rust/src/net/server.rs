@@ -1,0 +1,599 @@
+//! The TCP front end: blocking per-connection reader threads feeding
+//! the service's vectored submit path directly, completions pushed by a
+//! per-connection writer thread fed from a **bounded** handoff queue.
+//!
+//! Threading model, per Eden's strategy (SNIPPETS.md): dedicated
+//! blocking reads skip the epoll+read double syscall, and the
+//! reader-to-writer handoff queue breaks the pool-to-pool deadlock
+//! cycle — a worker pool never writes a socket, and a slow client can
+//! only ever fill its own connection's queue. Eden leaves that queue
+//! unbounded to make the deadlock argument trivial; we bound it and
+//! make the overflow policy explicit instead: a client whose queue is
+//! full when a completion arrives is **counted**
+//! ([`NetStats::slow_client_drops`], the `net_slow_client_drops`
+//! metric) **and disconnected**, so slow-loris readers cost one queue
+//! of memory, not the heap.
+//!
+//! Per accepted connection:
+//!
+//! * one **reader** thread (`net-conn-N`) — handshake, then blocking
+//!   `read_frame` loop; each `SUBMIT` maps 1:1 onto
+//!   `submit_batch_tagged` (the client's request id rides into the
+//!   trace plane) or `submit_batch_durable`, acked with a `TICKET`
+//!   frame and handed to a completer;
+//! * `completers` **completer** threads (`net-completer-N-K`) — block
+//!   on the ticket (or the durable plane's condvar via
+//!   [`FpuService::wait_for_id`]) and push the `COMPLETE` frame; with
+//!   more than one completer per connection, a fast batch overtakes a
+//!   slow one and completions genuinely leave out of order;
+//! * one **writer** thread (`net-writer-N`) — the only thread that
+//!   writes the socket, draining the bounded handoff queue.
+//!
+//! Teardown cascades without joins: shutting the socket down unblocks
+//! the reader, the reader's exit drops its queue senders, the
+//! completers drain and drop theirs, and the writer exits when the
+//! queue disconnects.
+//!
+//! The chaos sites `conn-drop`, `partial-write` and `read-stall`
+//! ([`crate::fault::FaultSite`]) are consulted here with backend filter
+//! `"net"`; see the module docs of [`crate::fault`].
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{FpuService, JobPoll, ServiceError};
+use crate::fault::{FaultPlan, FaultSite};
+
+use super::wire::{
+    encode_frame, read_frame, status_of, write_frame, CompleteFrame, Frame, SubmitFrame,
+    FLAG_DURABLE, STATUS_OK, SUBMIT_DURABLE, WIRE_VERSION,
+};
+
+/// Front-end configuration.
+#[derive(Clone)]
+pub struct NetConfig {
+    /// Bounded per-connection writer handoff depth: completions queued
+    /// for a client that is not reading. Past it the client is counted
+    /// and disconnected.
+    pub writer_queue: usize,
+    /// Completion-waiter threads per connection. More than one lets a
+    /// fast batch's `COMPLETE` overtake a slow one (out-of-order
+    /// completion); one serializes completions in submit order.
+    pub completers: usize,
+    /// Armed net-site fault plan (`conn-drop`, `partial-write`,
+    /// `read-stall`), consulted with backend filter `"net"`.
+    pub fault: Option<Arc<FaultPlan>>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self { writer_queue: 1024, completers: 2, fault: None }
+    }
+}
+
+/// Monotonic front-end counters (all relaxed; read via [`NetStats`]
+/// accessors or [`NetStats::snapshot`]).
+#[derive(Default)]
+pub struct NetStats {
+    connections: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    submits: AtomicU64,
+    completes: AtomicU64,
+    slow_client_drops: AtomicU64,
+    injected_conn_drops: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+/// A point-in-time copy of [`NetStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStatsSnapshot {
+    /// Connections accepted (handshake attempted).
+    pub connections: u64,
+    /// Frames decoded off client sockets.
+    pub frames_in: u64,
+    /// Frames pushed to client sockets.
+    pub frames_out: u64,
+    /// `SUBMIT` frames that reached a submit call.
+    pub submits: u64,
+    /// `COMPLETE` frames queued for delivery.
+    pub completes: u64,
+    /// `net_slow_client_drops`: connections dropped because their
+    /// bounded writer queue was full when a frame arrived for them.
+    pub slow_client_drops: u64,
+    /// Connections dropped by the `conn-drop` fault site.
+    pub injected_conn_drops: u64,
+    /// Malformed/unexpected frames (each also ends its connection).
+    pub protocol_errors: u64,
+}
+
+impl NetStats {
+    /// The `net_slow_client_drops` metric: connections dropped for a
+    /// full writer queue.
+    pub fn slow_client_drops(&self) -> u64 {
+        self.slow_client_drops.load(Ordering::Relaxed)
+    }
+
+    /// Connections accepted so far.
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    /// `SUBMIT` frames serviced so far.
+    pub fn submits(&self) -> u64 {
+        self.submits.load(Ordering::Relaxed)
+    }
+
+    /// Copy every counter.
+    pub fn snapshot(&self) -> NetStatsSnapshot {
+        NetStatsSnapshot {
+            connections: self.connections.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            submits: self.submits.load(Ordering::Relaxed),
+            completes: self.completes.load(Ordering::Relaxed),
+            slow_client_drops: self.slow_client_drops.load(Ordering::Relaxed),
+            injected_conn_drops: self.injected_conn_drops.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What a completer waits on for one acked submit.
+enum Outstanding {
+    /// Non-durable: the batch ticket itself.
+    Ticket { id: u64, ticket: crate::coordinator::BatchTicket },
+    /// Durable: the job id to `wait_for_id` on.
+    Durable { id: u64, job: u64 },
+}
+
+/// Per-connection shared state: the writer handoff queue, the socket
+/// (for disconnects from any of the connection's threads), and the
+/// server-wide stats.
+struct ConnShared {
+    tx: SyncSender<Frame>,
+    sock: TcpStream,
+    stats: Arc<NetStats>,
+    /// Set once the connection is condemned (slow client, injected
+    /// drop, protocol error) so later pushes don't double-count.
+    dead: AtomicBool,
+}
+
+impl ConnShared {
+    /// Queue a frame for the writer. `false` ends the caller's interest
+    /// in this connection: the client was disconnected (slow-client
+    /// policy) or is already gone.
+    fn push(&self, frame: Frame) -> bool {
+        if self.dead.load(Ordering::Relaxed) {
+            return false;
+        }
+        match self.tx.try_send(frame) {
+            Ok(()) => {
+                self.stats.frames_out.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(TrySendError::Full(_)) => {
+                // the bounded-queue policy: count, then disconnect
+                if !self.dead.swap(true, Ordering::Relaxed) {
+                    self.stats.slow_client_drops.fetch_add(1, Ordering::Relaxed);
+                    let _ = self.sock.shutdown(Shutdown::Both);
+                }
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+
+    /// Condemn the connection without the slow-client accounting.
+    fn drop_conn(&self) {
+        if !self.dead.swap(true, Ordering::Relaxed) {
+            let _ = self.sock.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// The running TCP front end. Stop it explicitly with
+/// [`NetServer::stop`] or implicitly on drop; either joins the accept
+/// and reader threads after shutting every live socket down.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    stats: Arc<NetStats>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting. The service must be shared (`Arc`) because
+    /// durable submits and `wait_for_id` live on [`FpuService`], not
+    /// the cloneable handle; the server holds clones for as long as
+    /// connections live.
+    pub fn start(svc: Arc<FpuService>, addr: &str, config: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr().context("reading bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(NetStats::default());
+        let conns = Arc::new(Mutex::new(HashMap::new()));
+        let readers = Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let conns = conns.clone();
+            let readers = readers.clone();
+            let conn_seq = AtomicU64::new(0);
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let stream = match incoming {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        let conn_id = conn_seq.fetch_add(1, Ordering::Relaxed);
+                        stats.connections.fetch_add(1, Ordering::Relaxed);
+                        if let Ok(clone) = stream.try_clone() {
+                            conns.lock().unwrap().insert(conn_id, clone);
+                        }
+                        let reader = spawn_connection(
+                            conn_id,
+                            stream,
+                            svc.clone(),
+                            config.clone(),
+                            stats.clone(),
+                            stop.clone(),
+                            conns.clone(),
+                        );
+                        match reader {
+                            Ok(h) => readers.lock().unwrap().push(h),
+                            Err(_) => {
+                                conns.lock().unwrap().remove(&conn_id);
+                            }
+                        }
+                    }
+                })
+                .context("spawning net-accept")?
+        };
+
+        Ok(NetServer { local_addr, stop, accept: Some(accept), conns, readers, stats })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Live front-end counters.
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.stats.clone()
+    }
+
+    /// Stop accepting, disconnect every client, and join the accept +
+    /// reader threads. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for (_, sock) in self.conns.lock().unwrap().drain() {
+            let _ = sock.shutdown(Shutdown::Both);
+        }
+        let handles: Vec<_> = std::mem::take(&mut *self.readers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Handshake + reader loop for one accepted socket. Returns the reader
+/// thread's handle; the writer and completer threads it spawns tear
+/// down by queue-disconnect cascade.
+fn spawn_connection(
+    conn_id: u64,
+    mut stream: TcpStream,
+    svc: Arc<FpuService>,
+    config: NetConfig,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("net-conn-{conn_id}"))
+        .spawn(move || {
+            run_connection(conn_id, &mut stream, svc, &config, &stats, &stop);
+            conns.lock().unwrap().remove(&conn_id);
+            // no shutdown here: on a clean close the writer is still
+            // flushing queued COMPLETEs — the client sees FIN when the
+            // teardown cascade closes the last duplicated fd
+        })
+        .with_context(|| format!("spawning net-conn-{conn_id}"))
+}
+
+fn run_connection(
+    conn_id: u64,
+    stream: &mut TcpStream,
+    svc: Arc<FpuService>,
+    config: &NetConfig,
+    stats: &Arc<NetStats>,
+    stop: &Arc<AtomicBool>,
+) {
+    // --- handshake, on the raw socket before any thread is spawned ---
+    let hello = match read_frame(stream) {
+        Ok(Some(Frame::Hello { version, flags })) => Some((version, flags)),
+        Ok(_) | Err(_) => {
+            stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    };
+    let Some((version, flags)) = hello else { return };
+    let granted = if svc.is_durable() { flags & FLAG_DURABLE } else { 0 };
+    if write_frame(stream, &Frame::Hello { version: WIRE_VERSION, flags: granted }).is_err() {
+        return;
+    }
+    stats.frames_in.fetch_add(1, Ordering::Relaxed);
+    stats.frames_out.fetch_add(1, Ordering::Relaxed);
+    if version != WIRE_VERSION {
+        // the reply told the client what we speak; nothing more to say
+        stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+
+    // --- writer + completer plumbing ---
+    let (tx, rx) = mpsc::sync_channel::<Frame>(config.writer_queue.max(1));
+    let shared = match stream.try_clone() {
+        Ok(sock) => Arc::new(ConnShared {
+            tx,
+            sock,
+            stats: stats.clone(),
+            dead: AtomicBool::new(false),
+        }),
+        Err(_) => return,
+    };
+    let writer = {
+        // the writer must NOT hold an Arc<ConnShared>: ConnShared owns
+        // the queue's sender, so a strong reference from the writer
+        // would keep its own receiver connected forever
+        let shared = Arc::downgrade(&shared);
+        let fault = config.fault.clone();
+        let sock = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        std::thread::Builder::new()
+            .name(format!("net-writer-{conn_id}"))
+            .spawn(move || writer_loop(sock, rx, shared, fault))
+    };
+    if writer.is_err() {
+        return;
+    }
+
+    let completers = config.completers.max(1);
+    let mut completer_txs = Vec::with_capacity(completers);
+    for k in 0..completers {
+        let (ctx, crx) = mpsc::channel::<Outstanding>();
+        let shared = shared.clone();
+        let svc = svc.clone();
+        let stop = stop.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("net-completer-{conn_id}-{k}"))
+            .spawn(move || completer_loop(crx, shared, svc, stop));
+        if spawned.is_err() {
+            return;
+        }
+        completer_txs.push(ctx);
+    }
+
+    // --- the blocking read loop: SUBMIT frames -> the submit path ---
+    let handle = svc.handle();
+    let mut next_completer = 0usize;
+    loop {
+        if stop.load(Ordering::Acquire) || shared.dead.load(Ordering::Relaxed) {
+            break;
+        }
+        if let Some(plan) = &config.fault {
+            if let Some(shot) = plan.check(FaultSite::ReadStall, "net") {
+                std::thread::sleep(Duration::from_micros(shot.micros));
+            }
+        }
+        let submit = match read_frame(stream) {
+            Ok(Some(Frame::Submit(s))) => s,
+            Ok(None) => break, // clean close
+            Ok(Some(_)) => {
+                // HELLO twice, or a server-only frame from a client
+                stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Err(_) => {
+                // torn frame / CRC mismatch / unknown kind: the stream
+                // cannot be resynchronized, drop the connection
+                if !stop.load(Ordering::Acquire) && !shared.dead.load(Ordering::Relaxed) {
+                    stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
+            }
+        };
+        stats.frames_in.fetch_add(1, Ordering::Relaxed);
+        service_submit(&handle, &svc, submit, &shared, &completer_txs, &mut next_completer);
+        if let Some(plan) = &config.fault {
+            if plan.check(FaultSite::ConnDrop, "net").is_some() {
+                // inject *after* servicing: a journalled job survives
+                // its client's death — the chaos tests pin that
+                stats.injected_conn_drops.fetch_add(1, Ordering::Relaxed);
+                shared.drop_conn();
+                break;
+            }
+        }
+    }
+    // dropping `shared` (and the completer senders) cascades teardown:
+    // completers drain, the writer's queue disconnects, the writer exits
+}
+
+/// One SUBMIT frame onto the 1:1 submit path: TICKET ack, then hand the
+/// wait to a completer (round-robin, so a slow batch doesn't block the
+/// next frame's completion path).
+fn service_submit(
+    handle: &crate::coordinator::ServiceHandle,
+    svc: &Arc<FpuService>,
+    s: SubmitFrame,
+    shared: &Arc<ConnShared>,
+    completer_txs: &[mpsc::Sender<Outstanding>],
+    next_completer: &mut usize,
+) {
+    shared.stats.submits.fetch_add(1, Ordering::Relaxed);
+    let deadline = (s.deadline_us > 0).then(|| Duration::from_micros(s.deadline_us as u64));
+    let outcome = if s.flags & SUBMIT_DURABLE != 0 {
+        // durable ignores the deadline knob: a journalled job's
+        // contract is "runs exactly once", not "runs by T"
+        svc.submit_batch_durable(s.op, s.format, &s.a, &s.b)
+            .map(|job| Outstanding::Durable { id: s.id, job })
+    } else {
+        handle
+            .submit_batch_tagged(s.op, s.format, &s.a, &s.b, deadline, s.id)
+            .map(|ticket| Outstanding::Ticket { id: s.id, ticket })
+    };
+    match outcome {
+        Ok(out) => {
+            if !shared.push(Frame::Ticket { id: s.id }) {
+                return;
+            }
+            let k = *next_completer % completer_txs.len();
+            *next_completer = next_completer.wrapping_add(1);
+            let _ = completer_txs[k].send(out);
+        }
+        Err(err) => {
+            // rejected at submit: the COMPLETE is the only reply (no
+            // TICKET — the work never entered the service)
+            shared.stats.completes.fetch_add(1, Ordering::Relaxed);
+            shared.push(Frame::Complete(CompleteFrame {
+                id: s.id,
+                status: status_of(&err),
+                results: Vec::new(),
+                error: format!("{err}"),
+            }));
+        }
+    }
+}
+
+/// Wait each acked submit to resolution and queue its COMPLETE frame.
+fn completer_loop(
+    rx: Receiver<Outstanding>,
+    shared: Arc<ConnShared>,
+    svc: Arc<FpuService>,
+    stop: Arc<AtomicBool>,
+) {
+    while let Ok(out) = rx.recv() {
+        let frame = match out {
+            Outstanding::Ticket { id, ticket } => match ticket.wait() {
+                Ok(resp) => Frame::Complete(CompleteFrame {
+                    id,
+                    status: STATUS_OK,
+                    results: resp.bits,
+                    error: String::new(),
+                }),
+                Err(err) => Frame::Complete(CompleteFrame {
+                    id,
+                    status: status_of(&err),
+                    results: Vec::new(),
+                    error: format!("{err}"),
+                }),
+            },
+            Outstanding::Durable { id, job } => {
+                // condvar wait in slices so a stopping server (or a
+                // condemned connection) lets the thread go
+                let outcome = loop {
+                    match svc.wait_for_id(job, Duration::from_millis(200)) {
+                        Some(JobPoll::Pending) => {
+                            if stop.load(Ordering::Acquire)
+                                || shared.dead.load(Ordering::Relaxed)
+                            {
+                                break None;
+                            }
+                        }
+                        Some(done) => break Some(done),
+                        None => {
+                            break Some(JobPoll::Failed(ServiceError::Rejected {
+                                reason: format!("durable job {job} unknown to the service"),
+                            }))
+                        }
+                    }
+                };
+                match outcome {
+                    None => continue,
+                    Some(JobPoll::Done(bits)) => Frame::Complete(CompleteFrame {
+                        id,
+                        status: STATUS_OK,
+                        results: bits,
+                        error: String::new(),
+                    }),
+                    Some(JobPoll::Failed(err)) => Frame::Complete(CompleteFrame {
+                        id,
+                        status: status_of(&err),
+                        results: Vec::new(),
+                        error: format!("{err}"),
+                    }),
+                    Some(JobPoll::Pending) => unreachable!("loop only breaks resolved"),
+                }
+            }
+        };
+        shared.stats.completes.fetch_add(1, Ordering::Relaxed);
+        shared.push(frame);
+    }
+}
+
+/// Drain the handoff queue onto the socket; the single writing thread.
+/// Holds only a weak reference to the connection state (see the spawn
+/// site) so the queue disconnects once the reader and completers are
+/// gone — the writer then exits, closing the last fd (the client's FIN).
+fn writer_loop(
+    mut sock: TcpStream,
+    rx: Receiver<Frame>,
+    shared: std::sync::Weak<ConnShared>,
+    fault: Option<Arc<FaultPlan>>,
+) {
+    let condemn = |sock: &TcpStream| match shared.upgrade() {
+        Some(s) => s.drop_conn(),
+        None => {
+            let _ = sock.shutdown(Shutdown::Both);
+        }
+    };
+    while let Ok(frame) = rx.recv() {
+        if let Some(plan) = &fault {
+            if plan.check(FaultSite::PartialWrite, "net").is_some() {
+                // write a torn prefix, then kill the connection: the
+                // client's CRC/length framing must reject the fragment
+                let bytes = encode_frame(&frame);
+                let cut = (bytes.len() / 2).max(1);
+                let _ = sock.write_all(&bytes[..cut]);
+                let _ = sock.flush();
+                condemn(&sock);
+                break;
+            }
+        }
+        if write_frame(&mut sock, &frame).is_err() {
+            condemn(&sock);
+            break;
+        }
+    }
+    // queue disconnected (reader + completers gone) or the socket died
+}

@@ -1,0 +1,456 @@
+//! The wire codec: a compact length-prefixed binary protocol over TCP.
+//!
+//! Framing reuses the journal's discipline (`crate::coordinator::journal`):
+//! every frame is
+//!
+//! ```text
+//! len: u32 LE | crc32(payload): u32 LE | payload
+//! ```
+//!
+//! with the same IEEE CRC-32 and the same torn-frame stance — a length
+//! or checksum that doesn't add up is a protocol error, never a panic
+//! or a silent truncation. `payload[0]` is the frame kind:
+//!
+//! | kind | frame | body |
+//! |---|---|---|
+//! | 1 | `HELLO` | `version u32, flags u32` |
+//! | 2 | `SUBMIT` | `id u64, op u8, format u8, flags u8, deadline_us u32, n_a u32, n_b u32, a[n_a] u64, b[n_b] u64` |
+//! | 3 | `TICKET` | `id u64` |
+//! | 4 | `COMPLETE` | `id u64, status u8, n u32, results[n] u64, msg_len u32, msg bytes` |
+//!
+//! All integers little-endian. Operand/result lanes travel as raw
+//! format words widened to `u64`, exactly the
+//! [`ServiceHandle::submit_batch`](crate::coordinator::ServiceHandle::submit_batch)
+//! contract — a `SUBMIT` frame maps 1:1 onto one vectored submission.
+//! Op and format bytes are the journal's own encodings
+//! (divide=0/sqrt=1/rsqrt=2; f16=0/bf16=1/f32=2/f64=3), so a wire
+//! capture and a journal dump read the same.
+//!
+//! # Handshake
+//!
+//! The client speaks first: one `HELLO{version, flags}`. The server
+//! answers with its own `HELLO{version, flags & supported}` — the
+//! version it will speak (currently there is exactly one) and the
+//! subset of requested flags it honours; a client asking for
+//! [`FLAG_DURABLE`] on a journal-less service sees the bit cleared in
+//! the reply and knows durable submits would be rejected. A version the
+//! server does not speak ends the connection after the reply.
+//!
+//! # Status codes
+//!
+//! `COMPLETE.status` is the typed [`ServiceError`] surface flattened
+//! onto the wire ([`status_of`] / [`error_from_status`] are inverse up
+//! to the carried message): 0 ok, 1 rejected, 2 overloaded, 3
+//! exec-failed, 4 deadline, 5 shutdown.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::journal::{
+    crc32, format_from_byte, format_to_byte, op_from_byte, op_to_byte,
+};
+use crate::coordinator::{FormatKind, OpKind, ServiceError};
+
+/// The one protocol version this build speaks.
+pub const WIRE_VERSION: u32 = 1;
+
+/// HELLO flag: the client intends to use durable (journalled)
+/// submissions. The server clears it in its reply when the service has
+/// no journal.
+pub const FLAG_DURABLE: u32 = 1;
+
+/// SUBMIT flag bit: journal this batch (`submit_batch_durable` path).
+pub const SUBMIT_DURABLE: u8 = 1;
+
+/// Frame size guard, mirroring the journal's `MAX_RECORD` stance: a
+/// corrupt length prefix must not become a giant allocation. 16 MiB
+/// bounds a submit at ~1M lanes — far beyond any batch ladder.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Completion status codes (the [`ServiceError`] surface on the wire).
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_REJECTED: u8 = 1;
+pub const STATUS_OVERLOADED: u8 = 2;
+pub const STATUS_EXEC_FAILED: u8 = 3;
+pub const STATUS_DEADLINE: u8 = 4;
+pub const STATUS_SHUTDOWN: u8 = 5;
+
+const KIND_HELLO: u8 = 1;
+const KIND_SUBMIT: u8 = 2;
+const KIND_TICKET: u8 = 3;
+const KIND_COMPLETE: u8 = 4;
+
+/// A `SUBMIT` body: one vectored batch, client-assigned id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitFrame {
+    /// Client-assigned request id; completions echo it, and the trace
+    /// plane samples/groups the request's spans under it.
+    pub id: u64,
+    pub op: OpKind,
+    pub format: FormatKind,
+    /// Bit 0 ([`SUBMIT_DURABLE`]): journal before queueing.
+    pub flags: u8,
+    /// Completion deadline in microseconds; 0 = none.
+    pub deadline_us: u32,
+    /// Operand plane A, raw format words widened to u64.
+    pub a: Vec<u64>,
+    /// Operand plane B (divisors; empty for unary ops).
+    pub b: Vec<u64>,
+}
+
+/// A `COMPLETE` body: the outcome of one submit, out-of-order by id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompleteFrame {
+    pub id: u64,
+    /// One of the `STATUS_*` codes.
+    pub status: u8,
+    /// Result plane, lane order preserved (empty unless `STATUS_OK`).
+    pub results: Vec<u64>,
+    /// Human-readable error detail (empty on `STATUS_OK`).
+    pub error: String,
+}
+
+/// One decoded wire frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Handshake, both directions.
+    Hello { version: u32, flags: u32 },
+    /// Client → server: one vectored batch.
+    Submit(SubmitFrame),
+    /// Server → client: the submit with this id was accepted and queued.
+    Ticket { id: u64 },
+    /// Server → client: terminal outcome for this id.
+    Complete(CompleteFrame),
+}
+
+/// Map a typed service error to its wire status code.
+pub fn status_of(err: &ServiceError) -> u8 {
+    match err {
+        ServiceError::Rejected { .. } => STATUS_REJECTED,
+        ServiceError::Overloaded => STATUS_OVERLOADED,
+        ServiceError::ExecFailed { .. } => STATUS_EXEC_FAILED,
+        ServiceError::Deadline => STATUS_DEADLINE,
+        ServiceError::Shutdown => STATUS_SHUTDOWN,
+    }
+}
+
+/// Reconstruct a typed service error from a wire status + message (the
+/// client-side inverse of [`status_of`]; unknown codes land on
+/// `Rejected` with the code in the reason).
+pub fn error_from_status(status: u8, msg: &str) -> ServiceError {
+    match status {
+        STATUS_REJECTED => ServiceError::Rejected { reason: msg.to_string() },
+        STATUS_OVERLOADED => ServiceError::Overloaded,
+        STATUS_EXEC_FAILED => ServiceError::ExecFailed { backend: msg.to_string() },
+        STATUS_DEADLINE => ServiceError::Deadline,
+        STATUS_SHUTDOWN => ServiceError::Shutdown,
+        other => ServiceError::Rejected { reason: format!("unknown wire status {other}: {msg}") },
+    }
+}
+
+fn put_words(out: &mut Vec<u8>, words: &[u64]) {
+    for &w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Encode a frame's payload (kind byte + body, no len/crc prefix).
+fn encode_payload(frame: &Frame) -> Vec<u8> {
+    match frame {
+        Frame::Hello { version, flags } => {
+            let mut out = Vec::with_capacity(9);
+            out.push(KIND_HELLO);
+            out.extend_from_slice(&version.to_le_bytes());
+            out.extend_from_slice(&flags.to_le_bytes());
+            out
+        }
+        Frame::Submit(s) => {
+            let mut out = Vec::with_capacity(27 + 8 * (s.a.len() + s.b.len()));
+            out.push(KIND_SUBMIT);
+            out.extend_from_slice(&s.id.to_le_bytes());
+            out.push(op_to_byte(s.op));
+            out.push(format_to_byte(s.format));
+            out.push(s.flags);
+            out.extend_from_slice(&s.deadline_us.to_le_bytes());
+            out.extend_from_slice(&(s.a.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(s.b.len() as u32).to_le_bytes());
+            put_words(&mut out, &s.a);
+            put_words(&mut out, &s.b);
+            out
+        }
+        Frame::Ticket { id } => {
+            let mut out = Vec::with_capacity(9);
+            out.push(KIND_TICKET);
+            out.extend_from_slice(&id.to_le_bytes());
+            out
+        }
+        Frame::Complete(c) => {
+            let mut out = Vec::with_capacity(18 + 8 * c.results.len() + c.error.len());
+            out.push(KIND_COMPLETE);
+            out.extend_from_slice(&c.id.to_le_bytes());
+            out.push(c.status);
+            out.extend_from_slice(&(c.results.len() as u32).to_le_bytes());
+            put_words(&mut out, &c.results);
+            out.extend_from_slice(&(c.error.len() as u32).to_le_bytes());
+            out.extend_from_slice(c.error.as_bytes());
+            out
+        }
+    }
+}
+
+/// A zero-copy cursor over a payload; every read is bounds-checked into
+/// a typed protocol error.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.at < n {
+            bail!(
+                "truncated frame body: wanted {n} bytes at offset {}, have {}",
+                self.at,
+                self.buf.len() - self.at
+            );
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn words(&mut self, n: usize) -> Result<Vec<u64>> {
+        let bytes = self.take(8 * n)?;
+        Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{} trailing bytes after frame body", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+/// Decode one payload (kind byte + body) back into a [`Frame`].
+fn decode_payload(payload: &[u8]) -> Result<Frame> {
+    let mut c = Cursor { buf: payload, at: 0 };
+    let frame = match c.u8().context("empty frame payload")? {
+        KIND_HELLO => Frame::Hello { version: c.u32()?, flags: c.u32()? },
+        KIND_SUBMIT => {
+            let id = c.u64()?;
+            let op = op_from_byte(c.u8()?)?;
+            let format = format_from_byte(c.u8()?)?;
+            let flags = c.u8()?;
+            let deadline_us = c.u32()?;
+            let n_a = c.u32()? as usize;
+            let n_b = c.u32()? as usize;
+            // the plane counts were inside the CRC-checked payload, but
+            // still bound them against the frame we actually hold
+            // before allocating
+            if 8 * (n_a + n_b) > payload.len() {
+                bail!("submit lane counts ({n_a}+{n_b}) exceed the frame");
+            }
+            let a = c.words(n_a)?;
+            let b = c.words(n_b)?;
+            Frame::Submit(SubmitFrame { id, op, format, flags, deadline_us, a, b })
+        }
+        KIND_TICKET => Frame::Ticket { id: c.u64()? },
+        KIND_COMPLETE => {
+            let id = c.u64()?;
+            let status = c.u8()?;
+            let n = c.u32()? as usize;
+            if 8 * n > payload.len() {
+                bail!("complete lane count {n} exceeds the frame");
+            }
+            let results = c.words(n)?;
+            let msg_len = c.u32()? as usize;
+            let error = String::from_utf8(c.take(msg_len)?.to_vec())
+                .context("complete error message is not UTF-8")?;
+            Frame::Complete(CompleteFrame { id, status, results, error })
+        }
+        other => bail!("unknown frame kind {other}"),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Encode a frame to its full wire bytes (`len | crc | payload`).
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let payload = encode_payload(frame);
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Write one frame (a single `write_all`, as the journal appends).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    w.write_all(&encode_frame(frame)).context("writing wire frame")
+}
+
+/// Blocking-read one frame: length prefix, CRC check, decode. An EOF
+/// **before any prefix byte** is a clean close (`Ok(None)`); anywhere
+/// else it is a torn frame and an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut prefix = [0u8; 8];
+    // distinguish clean close from mid-prefix EOF by hand
+    let mut got = 0;
+    while got < prefix.len() {
+        let n = r.read(&mut prefix[got..]).context("reading frame prefix")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid-prefix ({got}/8 bytes)");
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(prefix[0..4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(prefix[4..8].try_into().unwrap());
+    if len == 0 || len > MAX_FRAME {
+        bail!("bad frame length {len} (max {MAX_FRAME})");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    let actual = crc32(&payload);
+    if actual != crc {
+        bail!("frame CRC mismatch: stored {crc:#010x}, computed {actual:#010x}");
+    }
+    decode_payload(&payload).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(frame: Frame) {
+        let bytes = encode_frame(&frame);
+        let mut r = &bytes[..];
+        let back = read_frame(&mut r).unwrap().expect("a frame, not EOF");
+        assert_eq!(back, frame);
+        // and the stream is exactly consumed
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        round_trip(Frame::Hello { version: WIRE_VERSION, flags: FLAG_DURABLE });
+        round_trip(Frame::Ticket { id: 0xDEAD_BEEF_0042 });
+        round_trip(Frame::Submit(SubmitFrame {
+            id: 7,
+            op: OpKind::Divide,
+            format: FormatKind::F16,
+            flags: SUBMIT_DURABLE,
+            deadline_us: 1500,
+            a: vec![0x3C00, 0x4200, 0x7BFF],
+            b: vec![0x3800, 0x4000, 0x3C00],
+        }));
+        round_trip(Frame::Submit(SubmitFrame {
+            id: u64::MAX,
+            op: OpKind::Rsqrt,
+            format: FormatKind::F64,
+            flags: 0,
+            deadline_us: 0,
+            a: vec![0x4000_0000_0000_0000],
+            b: vec![],
+        }));
+        round_trip(Frame::Complete(CompleteFrame {
+            id: 7,
+            status: STATUS_OK,
+            results: vec![1, 2, 3],
+            error: String::new(),
+        }));
+        round_trip(Frame::Complete(CompleteFrame {
+            id: 9,
+            status: STATUS_EXEC_FAILED,
+            results: vec![],
+            error: "backend execution failed: scalar-reference".into(),
+        }));
+    }
+
+    #[test]
+    fn several_frames_stream_back_to_back() {
+        let frames = vec![
+            Frame::Hello { version: WIRE_VERSION, flags: 0 },
+            Frame::Ticket { id: 1 },
+            Frame::Ticket { id: 2 },
+        ];
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&encode_frame(f));
+        }
+        let mut r = &bytes[..];
+        for f in &frames {
+            assert_eq!(read_frame(&mut r).unwrap().as_ref(), Some(f));
+        }
+        assert_eq!(read_frame(&mut r).unwrap(), None, "then a clean EOF");
+    }
+
+    #[test]
+    fn corrupt_frames_are_typed_errors() {
+        let good = encode_frame(&Frame::Ticket { id: 42 });
+
+        // flipped payload bit -> CRC mismatch
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0x40;
+        let err = read_frame(&mut &bad[..]).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+
+        // truncated payload (torn tail) -> read error, not a hang/panic
+        let torn = &good[..good.len() - 3];
+        assert!(read_frame(&mut &torn[..]).is_err());
+
+        // mid-prefix EOF is distinguished from a clean close
+        let stub = &good[..5];
+        let err = read_frame(&mut &stub[..]).unwrap_err().to_string();
+        assert!(err.contains("mid-prefix"), "{err}");
+
+        // an oversized length prefix is rejected before allocating
+        let mut huge = good.clone();
+        huge[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let err = read_frame(&mut &huge[..]).unwrap_err().to_string();
+        assert!(err.contains("bad frame length"), "{err}");
+
+        // unknown kind byte survives the CRC but fails decode
+        let payload = [99u8];
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.extend_from_slice(&crate::coordinator::journal::crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let err = read_frame(&mut &frame[..]).unwrap_err().to_string();
+        assert!(err.contains("unknown frame kind"), "{err}");
+    }
+
+    #[test]
+    fn status_codes_round_trip_the_error_surface() {
+        let errors = [
+            ServiceError::Rejected { reason: "empty batch".into() },
+            ServiceError::Overloaded,
+            ServiceError::ExecFailed { backend: "native-fixed-point".into() },
+            ServiceError::Deadline,
+            ServiceError::Shutdown,
+        ];
+        for err in errors {
+            let status = status_of(&err);
+            assert_ne!(status, STATUS_OK);
+            let back = error_from_status(status, &format!("{err}"));
+            assert_eq!(status_of(&back), status, "status stable through a round trip");
+        }
+        assert!(matches!(error_from_status(200, "?"), ServiceError::Rejected { .. }));
+    }
+}

@@ -5,8 +5,9 @@
 //!
 //! * **Chrome `trace_event` JSON** (`.json`) — an object with a
 //!   `traceEvents` array; stage spans export as `ph: "X"` complete
-//!   events (one timeline track per stage), everything else as
-//!   `ph: "i"` instants. Loads directly in `chrome://tracing` /
+//!   events (one timeline track per stage, and one **per backend** for
+//!   backend-blamed spans — see [`chrome_trace_named`]), everything
+//!   else as `ph: "i"` instants. Loads directly in `chrome://tracing` /
 //!   Perfetto.
 //! * **flat JSONL** (`.jsonl`) — one self-describing object per line,
 //!   the grep/`jq`-friendly form.
@@ -45,36 +46,83 @@ fn event_args(ev: &TraceEvent) -> Json {
     Json::obj(args)
 }
 
+/// First tid of the per-backend track block (tracks 1..=4 belong to
+/// the stages, 0 to lifecycle instants).
+const BACKEND_TRACK_BASE: u64 = 16;
+
 /// Build the Chrome `trace_event` document for an event stream.
+///
+/// Shorthand for [`chrome_trace_named`] with no backend names: backend
+/// tracks are labeled `backend <index>`.
 pub fn chrome_trace(events: &[TraceEvent]) -> Json {
-    let rows = events.iter().map(|ev| {
-        // one track (tid) per stage keeps span rows from stacking; all
-        // instants share track 0
-        let tid = STAGES.iter().position(|&s| s == ev.kind.label()).map_or(0, |i| i + 1);
-        let cat = if ev.kind.is_error_class() {
-            "error"
-        } else if ev.kind.is_span() {
-            "stage"
-        } else {
-            "lifecycle"
-        };
-        let mut fields = vec![
-            ("name", Json::from(ev.kind.label())),
-            ("cat", Json::from(cat)),
-            ("ph", Json::from(if ev.kind.is_span() { "X" } else { "i" })),
-            ("ts", Json::Num(ev.t_ns as f64 / 1_000.0)),
+    chrome_trace_named(events, &[])
+}
+
+/// Build the Chrome `trace_event` document with named tracks.
+///
+/// Events that blame a backend (exec/failover spans, exec-error and
+/// worker-death instants) land on a **per-backend track**
+/// (`tid = BACKEND_TRACK_BASE + index`), so `chrome://tracing` shows
+/// each backend's serving timeline side by side; everything else keeps
+/// the per-stage tracks. `thread_name` metadata rows label every track
+/// that is actually used, resolving backend indices through
+/// `backend_names` (the order `FpuService::backend_names` reports).
+pub fn chrome_trace_named(events: &[TraceEvent], backend_names: &[String]) -> Json {
+    let mut used: BTreeMap<u64, String> = BTreeMap::new();
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|ev| {
+            // one track (tid) per stage keeps span rows from stacking;
+            // backend-blamed events group under their backend's track;
+            // remaining instants share track 0
+            let (tid, track) = if ev.backend != NO_BACKEND {
+                let name = backend_names
+                    .get(usize::from(ev.backend))
+                    .map_or_else(|| format!("backend {}", ev.backend), |n| format!("backend {n}"));
+                (BACKEND_TRACK_BASE + u64::from(ev.backend), name)
+            } else {
+                match STAGES.iter().position(|&s| s == ev.kind.label()) {
+                    Some(i) => (i as u64 + 1, format!("stage {}", STAGES[i])),
+                    None => (0, "lifecycle".to_string()),
+                }
+            };
+            used.entry(tid).or_insert(track);
+            let cat = if ev.kind.is_error_class() {
+                "error"
+            } else if ev.kind.is_span() {
+                "stage"
+            } else {
+                "lifecycle"
+            };
+            let mut fields = vec![
+                ("name", Json::from(ev.kind.label())),
+                ("cat", Json::from(cat)),
+                ("ph", Json::from(if ev.kind.is_span() { "X" } else { "i" })),
+                ("ts", Json::Num(ev.t_ns as f64 / 1_000.0)),
+                ("pid", Json::from(1u64)),
+                ("tid", Json::from(tid)),
+                ("args", event_args(ev)),
+            ];
+            if ev.kind.is_span() {
+                fields.push(("dur", Json::Num(ev.dur_ns as f64 / 1_000.0)));
+            } else {
+                fields.push(("s", Json::from("t"))); // instant scope: thread
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    // name every used track; metadata rows (ph: "M") are invisible to
+    // trace_report, which only reduces ph: "X" spans
+    let meta = used.into_iter().map(|(tid, name)| {
+        Json::obj([
+            ("name", Json::from("thread_name")),
+            ("ph", Json::from("M")),
             ("pid", Json::from(1u64)),
             ("tid", Json::from(tid)),
-            ("args", event_args(ev)),
-        ];
-        if ev.kind.is_span() {
-            fields.push(("dur", Json::Num(ev.dur_ns as f64 / 1_000.0)));
-        } else {
-            fields.push(("s", Json::from("t"))); // instant scope: thread
-        }
-        Json::obj(fields)
+            ("args", Json::obj([("name", Json::from(name.as_str()))])),
+        ])
     });
-    Json::obj([("traceEvents", Json::arr(rows))])
+    Json::obj([("traceEvents", Json::arr(meta.chain(rows)))])
 }
 
 /// Render the flat JSONL form (one object per line, raw nanoseconds).
@@ -104,10 +152,20 @@ pub fn jsonl(events: &[TraceEvent]) -> String {
 /// Write an event stream to `path`: `.jsonl` extension selects the
 /// flat form, anything else the Chrome trace document.
 pub fn write_trace(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    write_trace_named(path, events, &[])
+}
+
+/// [`write_trace`] with backend names for the Chrome form's per-backend
+/// track labels (ignored by the JSONL form, which carries raw indices).
+pub fn write_trace_named(
+    path: &Path,
+    events: &[TraceEvent],
+    backend_names: &[String],
+) -> Result<()> {
     let body = if path.extension().is_some_and(|e| e == "jsonl") {
         jsonl(events)
     } else {
-        chrome_trace(events).to_string()
+        chrome_trace_named(events, backend_names).to_string()
     };
     std::fs::write(path, body).with_context(|| format!("writing trace to {}", path.display()))
 }
@@ -293,7 +351,9 @@ mod tests {
     fn chrome_trace_shape() {
         let doc = chrome_trace(&sample_events());
         let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
-        assert_eq!(events.len(), 51);
+        // 51 event rows + 5 thread_name metadata rows (lifecycle, two
+        // stage tracks, two backend tracks)
+        assert_eq!(events.len(), 56);
         let spans: Vec<&Json> =
             events.iter().filter(|e| field_str(e, "ph").as_deref() == Some("X")).collect();
         assert_eq!(spans.len(), 30, "three stage spans per request");
@@ -304,7 +364,39 @@ mod tests {
         assert_eq!(q.get("dur").and_then(Json::as_f64), Some(4.0));
         // round-trips through the crate's own parser
         let parsed = Json::parse(&doc.to_string()).unwrap();
-        assert_eq!(parsed.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 51);
+        assert_eq!(parsed.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 56);
+    }
+
+    #[test]
+    fn backend_blamed_events_get_named_tracks() {
+        let names = vec!["native".to_string(), "u128".to_string()];
+        let doc = chrome_trace_named(&sample_events(), &names);
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let meta: Vec<&Json> =
+            events.iter().filter(|e| field_str(e, "ph").as_deref() == Some("M")).collect();
+        let labels: Vec<String> = meta
+            .iter()
+            .filter_map(|m| m.get("args").and_then(|a| field_str(a, "name")))
+            .collect();
+        assert!(labels.contains(&"backend native".to_string()), "{labels:?}");
+        assert!(labels.contains(&"backend u128".to_string()), "{labels:?}");
+        assert!(labels.contains(&"stage queue".to_string()), "{labels:?}");
+        assert!(labels.contains(&"lifecycle".to_string()), "{labels:?}");
+        // exec spans moved off the stage block onto backend 0's track
+        let exec = events
+            .iter()
+            .find(|e| field_str(e, "name").as_deref() == Some("exec"))
+            .unwrap();
+        assert_eq!(
+            exec.get("tid").and_then(Json::as_f64),
+            Some(BACKEND_TRACK_BASE as f64),
+        );
+        // and the breakdown report still reduces the same spans
+        let p = tmp("backend-tracks.json");
+        std::fs::write(&p, doc.to_string()).unwrap();
+        let report = trace_report(&p).unwrap();
+        assert!(report.contains("exec"), "{report}");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

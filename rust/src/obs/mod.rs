@@ -37,5 +37,7 @@
 pub mod export;
 pub mod ring;
 
-pub use export::{chrome_trace, jsonl, trace_report, write_trace};
+pub use export::{
+    chrome_trace, chrome_trace_named, jsonl, trace_report, write_trace, write_trace_named,
+};
 pub use ring::{EventRing, TraceConfig, TraceEvent, TraceKind, TracePlane, NO_BACKEND};

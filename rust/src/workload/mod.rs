@@ -1,6 +1,10 @@
 //! Workload generation for the service benchmarks: operand
-//! distributions and arrival processes.
+//! distributions and arrival processes ([`generator`]), and the
+//! scenario-scale open-loop load harness that drives them at the wire
+//! front end ([`scenario`], the engine behind `goldschmidt loadgen`).
 
 pub mod generator;
+pub mod scenario;
 
 pub use generator::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};
+pub use scenario::{derive_seed, run_scenario, RampSpec, ScenarioReport, ScenarioSpec, SCENARIOS};

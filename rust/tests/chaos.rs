@@ -21,7 +21,11 @@
 //! - every injected fault leaves an always-captured trace event
 //!   blaming the right backend — even with request sampling effectively
 //!   off — and trace-ring overflow only ever drops sampled lifecycle
-//!   events, never error-class ones.
+//!   events, never error-class ones;
+//! - an injected wire-level connection drop (the `conn-drop` net site)
+//!   never loses or duplicates a durable job: every journalled submit
+//!   retires Done even when its client died mid-wait, and the journal
+//!   coalesces to exactly one Done per id.
 //!
 //! Everything is deterministic: fault decisions are a pure function of
 //! (spec, seed, occurrence index), so these runs are reproducible.
@@ -38,6 +42,7 @@ use goldschmidt::coordinator::{
 };
 use goldschmidt::dispatch::ExecutorRegistry;
 use goldschmidt::fault::{FaultPlan, FaultSite};
+use goldschmidt::net::{result_of, NetClient, NetConfig, NetServer, SubmitOpts, FLAG_DURABLE};
 use goldschmidt::obs::{TraceConfig, TraceEvent, TraceKind, TracePlane};
 use goldschmidt::runtime::{Executor, NativeExecutor, ScalarReferenceExecutor};
 
@@ -390,6 +395,104 @@ fn injected_faults_are_always_traced_with_backend_blame() {
     let submits = evs.iter().filter(|e| e.kind == TraceKind::Submit).count();
     assert!(submits <= 1, "sampling stayed off ({submits} submits)");
     svc.shutdown();
+}
+
+/// The wire front end composes with durability: `conn-drop` faults
+/// kill client connections right AFTER a SUBMIT is serviced — the
+/// worst moment, because the job is journalled but the client never
+/// hears back. A re-dialing client drives `total` durable frames to
+/// completion across the drops; afterwards EVERY journalled job (the
+/// client-visible ones AND the orphans whose COMPLETE died with the
+/// socket) retires Done exactly once, with the right bits.
+#[test]
+fn conn_drop_never_loses_or_duplicates_durable_jobs() {
+    let path = temp_journal("net-drop");
+    let svc = Arc::new(FpuService::start(config(None, Some(path.clone()), 1), native).unwrap());
+    let plan = FaultPlan::parse("conn-drop:after=3,count=2", 0xD0D0).unwrap();
+    let net_cfg = NetConfig { fault: Some(Arc::new(plan)), ..NetConfig::default() };
+    let mut server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", net_cfg).unwrap();
+    let addr = server.local_addr();
+
+    let total = 12u64;
+    let mut done = 0u64; // frames whose COMPLETE reached a client
+    let mut submitted_ok = 0u64; // submits that reached the wire (journalled upper bound)
+    let mut dials = 0u32;
+    'outer: while done < total {
+        dials += 1;
+        assert!(dials < 50, "client could not finish {total} frames in 50 dials");
+        let Ok(mut client) = NetClient::connect_with_flags(addr, FLAG_DURABLE) else {
+            continue;
+        };
+        assert_eq!(client.granted_flags(), FLAG_DURABLE, "journalled service grants durable");
+        while done < total {
+            let opts = SubmitOpts { deadline_us: 0, durable: true };
+            let Ok(id) =
+                client.submit(OpKind::Divide, FormatKind::F32, &[f32b(6.0)], &[f32b(2.0)], opts)
+            else {
+                continue 'outer; // connection died before this frame hit the wire
+            };
+            submitted_ok += 1;
+            match client.wait(id) {
+                Ok(frame) => {
+                    assert_eq!(result_of(&frame).unwrap(), vec![f32b(3.0)]);
+                    done += 1;
+                }
+                // the injected drop fires between servicing and
+                // COMPLETE: the job may be journalled, but this client
+                // will never hear about it — re-dial and re-drive
+                Err(_) => continue 'outer,
+            }
+        }
+    }
+    assert!(
+        server.stats().snapshot().injected_conn_drops >= 1,
+        "the fault plan must actually have fired"
+    );
+
+    // every job the server journalled — client-visible or orphaned —
+    // retires Done with the right bits; ids the reader never serviced
+    // simply do not exist
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut retired = 0u64;
+    for id in 1..=submitted_ok {
+        loop {
+            match svc.poll_job(id) {
+                None => break, // the drop beat this submit to the reader
+                Some(JobPoll::Done(bits)) => {
+                    assert_eq!(bits, vec![f32b(3.0)], "durable job {id}");
+                    retired += 1;
+                    break;
+                }
+                Some(JobPoll::Failed(e)) => panic!("durable job {id} failed: {e}"),
+                _ => {
+                    assert!(Instant::now() < deadline, "job {id} did not retire in time");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+    }
+    assert!(retired >= done, "every client-acked frame is a retired job");
+    server.stop();
+    drop(svc);
+
+    // the raw journal tells the exactly-once story: one Pending + one
+    // Done per id, no id twice, no Pending left behind
+    let (_, recs) = Journal::open(&path).unwrap();
+    let mut done_ids: Vec<u64> = coalesce(recs.clone())
+        .into_iter()
+        .filter(|r| r.status == JobStatus::Done)
+        .map(|r| r.id)
+        .collect();
+    assert_eq!(done_ids.len() as u64, retired, "exactly one Done per journalled job");
+    done_ids.sort_unstable();
+    done_ids.dedup();
+    assert_eq!(done_ids.len() as u64, retired, "no journalled id retires twice");
+    for id in &done_ids {
+        let statuses: Vec<JobStatus> =
+            recs.iter().filter(|r| r.id == *id).map(|r| r.status).collect();
+        assert_eq!(statuses, vec![JobStatus::Pending, JobStatus::Done], "journal id {id}");
+    }
+    let _ = fs::remove_file(&path);
 }
 
 /// Overflowing the lock-free rings sheds *sampled lifecycle* events

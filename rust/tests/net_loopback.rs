@@ -1,0 +1,246 @@
+//! NET LOOPBACK INTEGRATION SUITE: the wire front end driven
+//! end-to-end over real sockets.
+//!
+//! Everything here binds an ephemeral loopback port, serves the real
+//! [`FpuService`] through [`NetServer`], and asserts the wire contract:
+//!
+//! - results that cross the wire are **bit-identical** to in-process
+//!   `submit_batch` calls on the same service, for every format and op,
+//!   from several concurrent connections;
+//! - completions arrive out of order (a fat batch does not block a
+//!   small one's COMPLETE) and `NetClient::wait` routes them by id;
+//! - the HELLO handshake only grants `FLAG_DURABLE` when the service
+//!   actually has a journal, and a granted durable submit round-trips;
+//! - a reconnect storm (the `reconnect` scenario preset) loses nothing:
+//!   every frame of every segment completes ok;
+//! - a slow-loris client that never reads is counted
+//!   (`net_slow_client_drops`) and disconnected by the bounded writer
+//!   queue, while a healthy rider on the same server keeps completing
+//!   bit-identically.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use goldschmidt::coordinator::{
+    BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, Value,
+};
+use goldschmidt::net::{result_of, NetClient, NetConfig, NetServer, SubmitOpts, FLAG_DURABLE};
+use goldschmidt::runtime::{Executor, NativeExecutor};
+use goldschmidt::workload::{run_scenario, ScenarioSpec};
+
+fn native() -> anyhow::Result<Box<dyn Executor>> {
+    Ok(Box::new(NativeExecutor::with_defaults()))
+}
+
+fn config(workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        batcher: BatcherConfig::new(64, Duration::from_micros(100)),
+        queue_depth: 8192,
+        workers,
+        poll: Duration::from_micros(50),
+        ..ServiceConfig::default()
+    }
+}
+
+fn start_loopback() -> (Arc<FpuService>, NetServer) {
+    let svc = Arc::new(FpuService::start(config(2), native).unwrap());
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).unwrap();
+    (svc, server)
+}
+
+fn f32b(x: f32) -> u64 {
+    u64::from(x.to_bits())
+}
+
+/// Deterministic operand planes for one (op, format) batch; sqrt-family
+/// operands stay positive, divisors stay away from zero.
+fn operands(format: FormatKind, op: OpKind, lanes: usize, salt: u64) -> (Vec<u64>, Vec<u64>) {
+    let a = (0..lanes)
+        .map(|i| Value::from_f64(format, 1.0 + ((i as u64 + salt) % 37) as f64 * 0.25).bits())
+        .collect();
+    let b = if op == OpKind::Divide {
+        (0..lanes)
+            .map(|i| Value::from_f64(format, 1.0 + ((i as u64 * 3 + salt) % 11) as f64 * 0.5).bits())
+            .collect()
+    } else {
+        Vec::new()
+    };
+    (a, b)
+}
+
+/// Three concurrent connections, every format, every op: the bits that
+/// come back over the wire are exactly the bits `submit_batch` hands an
+/// in-process rider of the same service.
+#[test]
+fn wire_results_are_bit_identical_to_in_process_across_connections() {
+    let (svc, mut server) = start_loopback();
+    let addr = server.local_addr();
+    let handle = svc.handle();
+    let mut joins = Vec::new();
+    for conn in 0..3u64 {
+        let handle = handle.clone();
+        joins.push(thread::spawn(move || {
+            let mut client = NetClient::connect(addr).unwrap();
+            for format in FormatKind::ALL {
+                for op in [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt] {
+                    let (a, b) = operands(format, op, 33, conn * 101);
+                    let want =
+                        handle.submit_batch(op, format, &a, &b).unwrap().wait().unwrap().bits;
+                    let got = client.call(op, format, &a, &b).unwrap().unwrap();
+                    assert_eq!(got, want, "wire vs in-process, conn {conn} {op:?} {format:?}");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let stats = server.stats().snapshot();
+    assert_eq!(stats.protocol_errors, 0);
+    assert_eq!(stats.slow_client_drops, 0);
+    assert!(stats.submits >= 36, "3 conns x 4 formats x 3 ops");
+    server.stop();
+    drop(svc);
+}
+
+/// Interleave fat and tiny frames on one connection and wait in reverse
+/// submission order: completions routed strictly by id, regardless of
+/// the order the completer threads resolve them in.
+#[test]
+fn out_of_order_completions_resolve_by_id() {
+    let (svc, mut server) = start_loopback();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let handle = svc.handle();
+    let mut ids = Vec::new();
+    let mut wants = Vec::new();
+    for k in 0..12u64 {
+        let lanes = if k % 3 == 0 { 512 } else { 4 };
+        let (a, b) = operands(FormatKind::F32, OpKind::Divide, lanes, k);
+        wants.push(
+            handle
+                .submit_batch(OpKind::Divide, FormatKind::F32, &a, &b)
+                .unwrap()
+                .wait()
+                .unwrap()
+                .bits,
+        );
+        ids.push(
+            client
+                .submit(OpKind::Divide, FormatKind::F32, &a, &b, SubmitOpts::default())
+                .unwrap(),
+        );
+    }
+    for (k, id) in ids.iter().enumerate().rev() {
+        let frame = client.wait(*id).unwrap();
+        assert_eq!(result_of(&frame).unwrap(), wants[k], "frame {k} (id {id})");
+    }
+    server.stop();
+    drop(svc);
+}
+
+/// The handshake's flag subset is honest: durable is only granted by a
+/// journalled service, and a granted durable submit round-trips.
+#[test]
+fn handshake_grants_durable_only_when_journalled() {
+    let (svc, mut server) = start_loopback();
+    let client = NetClient::connect_with_flags(server.local_addr(), FLAG_DURABLE).unwrap();
+    assert_eq!(client.granted_flags(), 0, "no journal, no durable grant");
+    drop(client);
+    server.stop();
+    drop(svc);
+
+    let path = std::env::temp_dir()
+        .join(format!("goldschmidt-netloop-hs-{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut cfg = config(1);
+    cfg.journal = Some(path.clone());
+    let svc = Arc::new(FpuService::start(cfg, native).unwrap());
+    let mut server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let mut client = NetClient::connect_with_flags(server.local_addr(), FLAG_DURABLE).unwrap();
+    assert_eq!(client.granted_flags(), FLAG_DURABLE, "journalled service grants durable");
+    let id = client
+        .submit(
+            OpKind::Divide,
+            FormatKind::F32,
+            &[f32b(6.0)],
+            &[f32b(2.0)],
+            SubmitOpts { deadline_us: 0, durable: true },
+        )
+        .unwrap();
+    let frame = client.wait(id).unwrap();
+    assert_eq!(result_of(&frame).unwrap(), vec![f32b(3.0)]);
+    server.stop();
+    drop(svc);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The reconnect-storm scenario: eight dialers re-dialing every 64
+/// frames. Segments wait out their outstanding completions before
+/// tearing the socket down, so riders see zero losses.
+#[test]
+fn reconnect_storm_loses_nothing() {
+    let (svc, mut server) = start_loopback();
+    let addr = server.local_addr().to_string();
+    let mut spec = ScenarioSpec::preset("reconnect", 600, 40_000.0, 11).unwrap();
+    spec.lanes = 4;
+    let report = run_scenario(addr, &spec).unwrap();
+    assert_eq!(report.submitted, 600, "{report:?}");
+    assert_eq!(report.ok, 600, "{report:?}");
+    assert_eq!(report.service_errors, 0, "{report:?}");
+    assert_eq!(report.transport_errors, 0, "{report:?}");
+    assert!(report.reconnects >= 8, "every dialer re-dials at least once: {report:?}");
+    assert!(server.stats().snapshot().connections >= 16);
+    server.stop();
+    drop(svc);
+}
+
+/// A slow-loris client (submits fat frames, never reads a byte) fills
+/// its bounded writer queue, is counted in `net_slow_client_drops`, and
+/// is disconnected — while a healthy rider on the same server keeps
+/// getting bit-identical results.
+#[test]
+fn slow_loris_is_counted_and_shed_without_hurting_riders() {
+    let svc = Arc::new(FpuService::start(config(2), native).unwrap());
+    let net_cfg = NetConfig { writer_queue: 2, completers: 2, fault: None };
+    let mut server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", net_cfg).unwrap();
+    let addr = server.local_addr();
+
+    // the loris: a split sender pushing ~16 KiB completions at a
+    // receiver that never reads
+    let loris = NetClient::connect(addr).unwrap();
+    let (mut loris_tx, _loris_rx) = loris.split();
+    let (a, b) = operands(FormatKind::F32, OpKind::Divide, 2048, 1);
+    for _ in 0..128 {
+        if loris_tx
+            .submit(OpKind::Divide, FormatKind::F32, &a, &b, SubmitOpts::default())
+            .is_err()
+        {
+            break; // already disconnected: the shed we are waiting for
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.stats().slow_client_drops() == 0 {
+        assert!(Instant::now() < deadline, "writer queue never shed the stalled reader");
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    // a healthy rider on the same server is untouched by the shed
+    let mut rider = NetClient::connect(addr).unwrap();
+    for salt in 0..4u64 {
+        let (a, b) = operands(FormatKind::F32, OpKind::Divide, 16, salt);
+        let want = svc
+            .handle()
+            .submit_batch(OpKind::Divide, FormatKind::F32, &a, &b)
+            .unwrap()
+            .wait()
+            .unwrap()
+            .bits;
+        let got = rider.call(OpKind::Divide, FormatKind::F32, &a, &b).unwrap().unwrap();
+        assert_eq!(got, want, "rider result {salt} after the loris was shed");
+    }
+    assert_eq!(server.stats().snapshot().slow_client_drops, 1, "one loris, one drop");
+    server.stop();
+    drop(svc);
+}
