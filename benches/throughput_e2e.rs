@@ -296,6 +296,202 @@ fn limb_vs_u128_row<F: FloatFormat>() -> Json {
     ])
 }
 
+/// Submit-path contention at the queue level: P producer threads
+/// pushing into one bounded queue of capacity 1024 while one consumer
+/// drains, comparing the mutex-guarded `VecDeque` the coordinator used
+/// to serialize submitters against the lock-free [`SubmitRing`] the
+/// shards consume from now. Returns the JSON rows plus the 8-producer
+/// ring-over-mutex throughput ratio (the number CI asserts on).
+fn queue_contention_micro() -> (Vec<Json>, f64) {
+    use goldschmidt::coordinator::ring::SubmitRing;
+    use std::collections::VecDeque;
+    use std::sync::{Arc, Mutex};
+
+    let quick = matches!(std::env::var("BENCH_QUICK").as_deref(), Ok("1") | Ok("true"));
+    let ops: u64 = if quick { 100_000 } else { 400_000 };
+    const CAP: usize = 1024;
+
+    let share_of = |p: u64, producers: u64| ops / producers + u64::from(p < ops % producers);
+
+    let run_mutex = |producers: u64| -> f64 {
+        let q = Arc::new(Mutex::new(VecDeque::<u64>::with_capacity(CAP)));
+        let t0 = Instant::now();
+        let mut hs = Vec::new();
+        for p in 0..producers {
+            let q = Arc::clone(&q);
+            let share = share_of(p, producers);
+            hs.push(std::thread::spawn(move || {
+                for i in 0..share {
+                    loop {
+                        let mut g = q.lock().unwrap();
+                        if g.len() < CAP {
+                            g.push_back(i);
+                            break;
+                        }
+                        drop(g);
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let mut seen = 0u64;
+        while seen < ops {
+            let popped = q.lock().unwrap().pop_front();
+            match popped {
+                Some(v) => {
+                    black_box(v);
+                    seen += 1;
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        ops as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    let run_ring = |producers: u64| -> f64 {
+        let ring = Arc::new(SubmitRing::<u64>::with_capacity(CAP));
+        let t0 = Instant::now();
+        let mut hs = Vec::new();
+        for p in 0..producers {
+            let ring = Arc::clone(&ring);
+            let share = share_of(p, producers);
+            hs.push(std::thread::spawn(move || {
+                for i in 0..share {
+                    let mut v = i;
+                    loop {
+                        match ring.try_push(v) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                v = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        let mut seen = 0u64;
+        while seen < ops {
+            match ring.pop() {
+                Some(v) => {
+                    black_box(v);
+                    seen += 1;
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        ops as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    let mut t = Table::new(
+        format!("queue contention micro ({ops} ops, cap {CAP}, 1 consumer)"),
+        &["queue", "producers", "ops/s"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right]);
+    let mut rows = Vec::new();
+    let (mut mutex8, mut ring8) = (0.0f64, 0.0f64);
+    for &producers in &[1u64, 8] {
+        for &kind in &["mutex", "ring"] {
+            let ops_per_s = if kind == "mutex" { run_mutex(producers) } else { run_ring(producers) };
+            if producers == 8 {
+                if kind == "mutex" {
+                    mutex8 = ops_per_s;
+                } else {
+                    ring8 = ops_per_s;
+                }
+            }
+            t.row(&[kind.to_string(), producers.to_string(), format!("{ops_per_s:.0}")]);
+            rows.push(Json::obj([
+                ("queue", Json::from(kind)),
+                ("producers", Json::from(producers)),
+                ("ops_per_s", Json::from(ops_per_s)),
+            ]));
+        }
+    }
+    t.print();
+    let speedup = if mutex8 > 0.0 { ring8 / mutex8 } else { 0.0 };
+    println!("queue contention: ring is {speedup:.2}x the mutex queue at 8 producers\n");
+    (rows, speedup)
+}
+
+/// Submit-path contention at the service level: the same closed-loop
+/// f32 divide volume pushed by 1 vs 8 submitter threads into one
+/// sharded service (shards auto-sized to the CPU count; each cloned
+/// handle carries its own shard key, so submitters spread across
+/// rings instead of serializing on one lock).
+fn service_contention_rows() -> Vec<Json> {
+    let count = requests();
+    let mut t = Table::new(
+        "submit contention (sharded service, f32 divide, 1 worker/pool)",
+        &["submitters", "shards", "req/s", "mean lat", "p99 lat"],
+    )
+    .aligns(&[Align::Right; 5]);
+    let mut rows = Vec::new();
+    for &submitters in &[1usize, 8] {
+        let mut cfg = service_config(1024, 200, 1);
+        cfg.shards = 0; // auto: one shard per CPU
+        let svc = native_service(cfg);
+        let shards = svc.shard_count();
+        prime(&svc, FormatKind::F32);
+        let t0 = Instant::now();
+        let mut hs = Vec::new();
+        for s in 0..submitters {
+            let handle = svc.handle();
+            let share = count / submitters + usize::from(s < count % submitters);
+            hs.push(std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(0xC047E47 ^ s as u64);
+                let mut tickets = Vec::with_capacity(share);
+                for _ in 0..share {
+                    let a = rng.range_f32(1e-6, 1e6);
+                    let b = rng.range_f32(1e-6, 1e6);
+                    tickets.push(handle.submit(OpKind::Divide, a, b).expect("submit"));
+                }
+                for t in tickets {
+                    t.wait().expect("response");
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let r = finish(svc, count, t0.elapsed().as_secs_f64());
+        t.row(&[
+            submitters.to_string(),
+            shards.to_string(),
+            format!("{:.0}", r.reqs_per_s),
+            fmt_ns(r.mean_lat_ns),
+            fmt_ns(r.p99_lat_ns as f64),
+        ]);
+        let mut row = r.json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("submitters".into(), Json::from(submitters));
+            map.insert("shards".into(), Json::from(shards));
+        }
+        rows.push(row);
+    }
+    t.print();
+    rows
+}
+
+/// The `contention` bench section: queue-level micro rows (with the
+/// CI-asserted 8-producer speedup) plus service-level 1-vs-8 submitter
+/// rows.
+fn contention_section() -> Json {
+    let (queue_micro, speedup) = queue_contention_micro();
+    let service = service_contention_rows();
+    Json::obj([
+        ("queue_micro", Json::arr(queue_micro)),
+        ("speedup_8_threads", Json::from(speedup)),
+        ("service", Json::arr(service)),
+    ])
+}
+
 /// The wire front end on a loopback socket. Two measurements:
 ///
 /// 1. closed-loop, one outstanding 256-lane frame at a time, over TCP
@@ -459,24 +655,38 @@ fn main() {
     t.print();
     report.push(("policy_sweep", Json::arr(sweep)));
 
-    // ---- worker scaling ------------------------------------------------
+    // ---- worker / shard scaling -----------------------------------------
+    // worker rows scale the per-shard pool on one shard; shard rows
+    // scale the coordinator itself (each shard brings its own submit
+    // ring, batcher, and worker set)
     let mut t = Table::new(
-        "worker scaling (native backend, max_batch=1024)",
-        &["workers", "req/s", "mean lat"],
+        "worker/shard scaling (native backend, max_batch=1024)",
+        &["workers", "shards", "req/s", "mean lat"],
     )
-    .aligns(&[Align::Right; 3]);
+    .aligns(&[Align::Right; 4]);
     let mut scaling = Vec::new();
-    for &workers in &[1usize, 2, 4] {
-        let r = run_native(service_config(1024, 200, workers));
-        t.row(&[workers.to_string(), format!("{:.0}", r.reqs_per_s), fmt_ns(r.mean_lat_ns)]);
+    for &(workers, shards) in &[(1usize, 1usize), (2, 1), (4, 1), (1, 2), (1, 4)] {
+        let mut cfg = service_config(1024, 200, workers);
+        cfg.shards = shards;
+        let r = run_native(cfg);
+        t.row(&[
+            workers.to_string(),
+            shards.to_string(),
+            format!("{:.0}", r.reqs_per_s),
+            fmt_ns(r.mean_lat_ns),
+        ]);
         let mut row = r.json();
         if let Json::Obj(map) = &mut row {
             map.insert("workers".into(), Json::from(workers));
+            map.insert("shards".into(), Json::from(shards));
         }
         scaling.push(row);
     }
     t.print();
     report.push(("worker_scaling", Json::arr(scaling)));
+
+    // ---- submit-path contention: the sharded ring vs a mutex queue ------
+    report.push(("contention", contention_section()));
 
     // ---- vectored submission: submit_batch vs per-request ---------------
     let mut t = Table::new(

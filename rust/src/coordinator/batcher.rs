@@ -19,6 +19,11 @@
 //! plane allocation. Items whose deadline expired are shed here —
 //! failed with [`ServiceError::Deadline`] and counted in metrics — and
 //! never reach an executor.
+//!
+//! Each coordinator shard owns its own `DynamicBatcher` (and
+//! `PlanePool`): batches form from one shard's queues only, which is
+//! what lets a peer shard steal a *formed* batch wholesale without
+//! ever touching individual lanes.
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};

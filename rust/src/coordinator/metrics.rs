@@ -219,44 +219,80 @@ impl Metrics {
     /// Snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().expect("metrics poisoned");
-        let snap_of = |s: &SliceMetrics| OpSnapshotBody {
-            requests: s.requests,
-            batches: s.batches,
-            errors: s.errors,
-            shed: s.shed,
-            admission_rejected: s.admission_rejected,
-            mean_latency_ns: s.latency.mean(),
-            p50_latency_ns: s.latency.quantile(0.5),
-            p99_latency_ns: s.latency.quantile(0.99),
-            mean_exec_ns: s.batch_exec_ns.mean(),
-            occupancy: if s.padded_slots == 0 {
-                1.0
-            } else {
-                s.live_slots as f64 / s.padded_slots as f64
-            },
-        };
-        let mut op_formats = Vec::with_capacity(SLOTS);
-        let mut ops = Vec::with_capacity(OpKind::ALL.len());
-        for &op in &OpKind::ALL {
-            // aggregate the op's format slices (histograms merge exactly)
-            let mut agg = SliceMetrics::default();
-            for &format in &FormatKind::ALL {
-                let s = &m[idx(op, format)];
-                agg.requests += s.requests;
-                agg.batches += s.batches;
-                agg.padded_slots += s.padded_slots;
-                agg.live_slots += s.live_slots;
-                agg.errors += s.errors;
-                agg.shed += s.shed;
-                agg.admission_rejected += s.admission_rejected;
-                agg.latency.merge(&s.latency);
-                agg.batch_exec_ns.merge(&s.batch_exec_ns);
-                op_formats.push(OpFormatSnapshot { op, format, body: snap_of(s) });
-            }
-            ops.push(OpSnapshot { op, body: snap_of(&agg) });
-        }
-        MetricsSnapshot { ops, op_formats }
+        build_snapshot(&m)
     }
+
+    /// Merged snapshot over several metrics instances — one per
+    /// coordinator shard. Counters sum and latency/exec histograms
+    /// merge exactly (log-bucket histograms are additive), so the
+    /// merged percentiles are what a single global histogram would have
+    /// recorded. The admission rate windows and queue-depth gauges stay
+    /// per-shard: admission control runs on the shard that owns the
+    /// submission, so merging them would model a queue no request ever
+    /// waits in.
+    pub fn merged_snapshot<'a, I>(parts: I) -> MetricsSnapshot
+    where
+        I: IntoIterator<Item = &'a Metrics>,
+    {
+        let mut merged: [SliceMetrics; SLOTS] = std::array::from_fn(|_| SliceMetrics::default());
+        for m in parts {
+            let g = m.inner.lock().expect("metrics poisoned");
+            for (dst, src) in merged.iter_mut().zip(g.iter()) {
+                merge_slice(dst, src);
+            }
+        }
+        build_snapshot(&merged)
+    }
+}
+
+/// Accumulate one shard's (op, format) slice into a merge target.
+/// Everything additive merges; the rate window is deliberately left
+/// alone (see [`Metrics::merged_snapshot`]).
+fn merge_slice(dst: &mut SliceMetrics, src: &SliceMetrics) {
+    dst.requests += src.requests;
+    dst.batches += src.batches;
+    dst.padded_slots += src.padded_slots;
+    dst.live_slots += src.live_slots;
+    dst.errors += src.errors;
+    dst.shed += src.shed;
+    dst.admission_rejected += src.admission_rejected;
+    dst.admission_probes += src.admission_probes;
+    dst.latency.merge(&src.latency);
+    dst.batch_exec_ns.merge(&src.batch_exec_ns);
+}
+
+/// Build the reporting snapshot from a slice array (a single instance's
+/// slices under its lock, or a cross-shard merge).
+fn build_snapshot(m: &[SliceMetrics; SLOTS]) -> MetricsSnapshot {
+    let snap_of = |s: &SliceMetrics| OpSnapshotBody {
+        requests: s.requests,
+        batches: s.batches,
+        errors: s.errors,
+        shed: s.shed,
+        admission_rejected: s.admission_rejected,
+        mean_latency_ns: s.latency.mean(),
+        p50_latency_ns: s.latency.quantile(0.5),
+        p99_latency_ns: s.latency.quantile(0.99),
+        mean_exec_ns: s.batch_exec_ns.mean(),
+        occupancy: if s.padded_slots == 0 {
+            1.0
+        } else {
+            s.live_slots as f64 / s.padded_slots as f64
+        },
+    };
+    let mut op_formats = Vec::with_capacity(SLOTS);
+    let mut ops = Vec::with_capacity(OpKind::ALL.len());
+    for &op in &OpKind::ALL {
+        // aggregate the op's format slices (histograms merge exactly)
+        let mut agg = SliceMetrics::default();
+        for &format in &FormatKind::ALL {
+            let s = &m[idx(op, format)];
+            merge_slice(&mut agg, s);
+            op_formats.push(OpFormatSnapshot { op, format, body: snap_of(s) });
+        }
+        ops.push(OpSnapshot { op, body: snap_of(&agg) });
+    }
+    MetricsSnapshot { ops, op_formats }
 }
 
 /// The measured quantities shared by per-op and per-(op, format)
@@ -595,6 +631,37 @@ mod tests {
         assert_eq!(s.total_shed(), 0);
         assert_eq!(s.op(OpKind::Divide).occupancy, 1.0);
         assert_eq!(s.op_formats.len(), 12);
+    }
+
+    #[test]
+    fn merged_snapshot_sums_shards_and_merges_histograms() {
+        // two shards' slices: counters sum, and the merged percentiles
+        // come from the union of both latency populations — not from
+        // shard 0 alone (the bug the ServiceMetrics wrapper fixes)
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.record_batch(OpKind::Divide, F32, &[(1_000, 1)], 500, 4);
+        a.record_error(OpKind::Divide, F32, 2);
+        b.record_batch(OpKind::Divide, F32, &[(1_000_000, 3)], 900, 4);
+        b.record_shed(OpKind::Sqrt, F32, 5);
+        let s = Metrics::merged_snapshot([&a, &b]);
+        let d = s.op_format(OpKind::Divide, F32);
+        assert_eq!(d.requests, 4);
+        assert_eq!(d.batches, 2);
+        assert_eq!(d.errors, 2);
+        assert_eq!(s.op_format(OpKind::Sqrt, F32).shed, 5);
+        assert_eq!(s.total_requests(), 4);
+        // 3 of 4 lanes are ~1ms: the merged p99 sees shard b's tail
+        assert!(d.p99_latency_ns >= 1_000_000, "{}", d.p99_latency_ns);
+        // occupancy merges too: 4 live / 8 padded
+        assert!((d.occupancy - 0.5).abs() < 1e-9, "{}", d.occupancy);
+        // merging one instance reproduces its own snapshot's counters
+        let solo = Metrics::merged_snapshot([&a]);
+        assert_eq!(solo.total_requests(), a.snapshot().total_requests());
+        // an empty merge is the empty snapshot
+        let empty = Metrics::merged_snapshot(std::iter::empty::<&Metrics>());
+        assert_eq!(empty.total_requests(), 0);
+        assert_eq!(empty.op_formats.len(), 12);
     }
 
     #[test]

@@ -5,28 +5,43 @@
 //! Request path (all rust, no Python):
 //!
 //! ```text
-//! clients ──submit / submit_batch──> bounded queue ──> Router ──> per-
-//!            │ (Ticket / BatchTicket:                       (op, format)
-//!            │  shared completion slots,                    queues
-//!            │  no channel per request)              DynamicBatcher
-//!            │                                       (per-(op, format)
-//!            │                                        size/age policy,
-//!            │                                        deadline shedding,
-//!            │                                        capability-ladder
-//!            │                                        padding)
+//! clients ──submit / submit_batch──> shard pick: hash(op, format,
+//!            │ (Ticket / BatchTicket:             handle shard key)
+//!            │  shared completion slots,      lock-free SubmitRing
+//!            │  no channel per request)       (one CAS + one publish;
+//!            │                                 EventCount parking)
+//!            │                            shard dispatcher ──> per-
+//!            │                                       (op, format)
+//!            │                                       queues
+//!            │                                DynamicBatcher
+//!            │                                (per-(op, format)
+//!            │                                 size/age policy,
+//!            │                                 deadline shedding,
+//!            │                                 capability-ladder
+//!            │                                 padding)
+//!            │                 ready queue ──(peer steal on imbalance:
+//!            │                               whole batches only)
 //!            │                        DispatchPlane (crate::dispatch):
 //!            │                          per-batch backend selection —
 //!            │                          static or latency policy,
 //!            │                          circuit breakers, probes,
 //!            │                          rider-invisible failover
-//!            │                              per-backend worker pools:
-//!            │                                Executor::execute_into
+//!            │                              per-shard × backend worker
+//!            │                              pools: Executor::execute_into
 //!            │                                (caller-owned output
 //!            │                                plane; batch kernels,
 //!            │                                u128 baseline, scalar
 //!            │                                reference or PJRT)
 //!            └───── tickets resolve: Response | typed ServiceError
 //! ```
+//!
+//! The coordinator runs as N independent shards
+//! ([`ServiceConfig::shards`](service::ServiceConfig)): each owns its
+//! submit ring, batcher, plane pool, metrics slice, and worker set, so
+//! submitting threads on different shards share no queue state at all.
+//! A handle clone carries a fresh shard key, spreading connections and
+//! client threads across shards; [`ServiceMetrics`] merges the
+//! per-shard slices back into one [`MetricsSnapshot`] for reporting.
 //!
 //! Every request carries a format-tagged [`Value`] pair (or, vectored,
 //! a whole plane of raw format words); the (op, IEEE format) pair is
@@ -105,6 +120,9 @@
 //!   completion slots.
 //! * [`router`] — fans work items out to per-(op, format) queues
 //!   (lane conservation and format purity are property-tested).
+//! * [`ring`] — the bounded lock-free MPSC [`SubmitRing`](ring::SubmitRing)
+//!   each shard consumes from, plus the [`EventCount`](ring::EventCount)
+//!   the shard dispatcher parks on when its ring runs dry.
 //! * [`batcher`] — dynamic batching: flush on size, age, or deadline
 //!   arrival, per-(op, format) policy overrides, padding to the
 //!   backend's capability ladder with the format's `1.0`, operand-plane
@@ -128,6 +146,7 @@ pub mod batcher;
 pub mod journal;
 pub mod metrics;
 pub mod request;
+pub mod ring;
 pub mod router;
 pub mod service;
 pub mod ticket;
@@ -137,5 +156,5 @@ pub use journal::{coalesce, JobStatus, Journal, JournalRecord};
 pub use metrics::{Metrics, MetricsSnapshot, OpFormatSnapshot, OpSnapshot};
 pub use request::{FormatKind, OpKind, Response, ServiceError, Value, WorkItem};
 pub use router::Router;
-pub use service::{FpuService, JobPoll, ServiceConfig, ServiceHandle};
+pub use service::{FpuService, JobPoll, ServiceConfig, ServiceHandle, ServiceMetrics};
 pub use ticket::{BatchResponse, BatchTicket, Ticket};

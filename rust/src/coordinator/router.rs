@@ -13,6 +13,12 @@
 //! [`Router::drain`] may split it at a batch boundary (the halves share
 //! their operand planes and completion slot, so the split is free and
 //! invisible to the client).
+//!
+//! In the sharded coordinator every shard owns a private `Router`: a
+//! submit picks its shard from `hash(op, format, handle shard key)`,
+//! so one (op, format) stream from one handle always lands in the same
+//! shard's queues and the FIFO/purity/conservation invariants hold
+//! per shard with no cross-shard locking.
 
 use std::collections::VecDeque;
 use std::sync::Arc;

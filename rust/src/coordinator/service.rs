@@ -4,37 +4,58 @@
 //! expensive execution engines, a batching layer in between.
 //!
 //! Threading model (std threads + channels; no async runtime exists in
-//! the offline environment, and none is needed):
+//! the offline environment, and none is needed). The coordinator is
+//! **sharded**: [`ServiceConfig::shards`] independent copies of the
+//! dispatch machinery, so the submit hot path never crosses a lock
+//! shared between shards.
 //!
-//! * clients hold a [`ServiceHandle`] and submit into a *bounded*
-//!   channel — the backpressure boundary; a full queue pushes back on
+//! * clients hold a [`ServiceHandle`]; each submission hashes
+//!   `(op, format, handle key)` to a **shard** and publishes into that
+//!   shard's *bounded lock-free MPSC ring* ([`super::ring::SubmitRing`])
+//!   — one CAS plus one release store, no lock. The ring is the
+//!   backpressure boundary: a full ring pushes back on blocking
 //!   submitters (or returns [`ServiceError::Overloaded`] from the
-//!   `try_submit` family) instead of growing without bound;
-//! * one **dispatcher** thread owns the [`Router`] + [`DynamicBatcher`]
-//!   + [`DispatchPlane`] and turns the work stream into batches —
-//!   shedding expired-deadline items, selecting a backend per batch
-//!   (policy + circuit breakers), and re-routing batches a backend
-//!   fails so riders never see a single backend's death;
-//! * each registered backend owns a **worker pool** of executor
+//!   `try_submit` family) instead of growing without bound. One
+//!   handle's stream for a given (op, format) always lands on one
+//!   shard, so its submission order is preserved end to end;
+//! * each shard runs one **dispatcher** thread owning that shard's
+//!   [`Router`] + [`DynamicBatcher`] + [`DispatchPlane`] + plane pool.
+//!   It parks on an event count when its ring runs dry, and turns the
+//!   work stream into batches — shedding expired-deadline items,
+//!   selecting a backend per batch (policy + circuit breakers, on the
+//!   **shared** health board), and re-routing batches a backend fails.
+//!   Formed, backend-selected batches pass through the shard's *ready
+//!   queue*; an idle peer dispatcher may **steal** the oldest ready
+//!   batch of a stalled shard (whole batches only, never individual
+//!   lanes, so bit-identity and per-handle ordering invariants hold)
+//!   and dispatch it on its own worker set;
+//! * each shard × registered backend owns a **worker pool** of executor
 //!   threads, each owning one [`Executor`] (one "divider unit" each),
 //!   executing its backend's batches round-robin into a reused output
-//!   plane and completing each item's ticket in place. Executor calls
-//!   run under `catch_unwind`: a worker that panics fails its batch
-//!   over like any executor error (the riders never see the panic) and
-//!   then exits; outcomes are recorded on the backend's
-//!   [`HealthBoard`] slot, which is what the dispatcher routes by;
+//!   plane and completing each item's ticket in place (ticket
+//!   completion keeps its condvar — only submit-side contention is
+//!   gone). Executor calls run under `catch_unwind`: a worker that
+//!   panics fails its batch over like any executor error (the riders
+//!   never see the panic) and then exits; outcomes are recorded on the
+//!   backend's [`HealthBoard`] slot, which is what every shard's
+//!   dispatcher routes by;
 //! * one **supervisor** thread watches for abnormal worker exits
-//!   (panic, injected death) and respawns replacements with capped
-//!   exponential backoff; a pool whose respawns keep failing is marked
-//!   *degraded* on the health board and routed around until a respawn
-//!   sticks.
+//!   (panic, injected death) across all shards and respawns
+//!   replacements with capped exponential backoff; a pool whose
+//!   respawns keep failing is marked *degraded* on the health board
+//!   and routed around until a respawn sticks.
 //!
 //! Startup is fail-fast: every registered executor factory is probed
 //! once on the caller thread (capability negotiation, merged into the
-//! routing table), and every worker of every pool reports its own
-//! factory result back before [`FpuService::start_routed`] returns — a
-//! worker that cannot build its executor fails start instead of
-//! silently eating a share of the traffic.
+//! routing table), and every worker of every pool of every shard
+//! reports its own factory result back before
+//! [`FpuService::start_routed`] returns — a worker that cannot build
+//! its executor fails start instead of silently eating a share of the
+//! traffic.
+//!
+//! Metrics are sliced per shard and merged at read time
+//! ([`ServiceMetrics`]), so reports and the stats emitter always cover
+//! every shard.
 //!
 //! Two opt-in planes extend the lifecycle story:
 //!
@@ -52,11 +73,11 @@
 //!   reproducibly. An unarmed service pays one `Option` check.
 
 use std::any::Any;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -75,8 +96,9 @@ use crate::runtime::executor::Executor;
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher, PlanePool};
 use super::journal::{coalesce, JobStatus, Journal, JournalRecord};
-use super::metrics::Metrics;
-use super::request::{FormatKind, OpKind, ServiceError, Value, WorkItem};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{op_format_slot, FormatKind, OpKind, ServiceError, Value, WorkItem};
+use super::ring::{EventCount, SubmitRing};
 use super::router::Router;
 use super::ticket::{BatchTicket, Ticket};
 
@@ -113,6 +135,13 @@ pub struct ServiceConfig {
     /// Emit a one-line service snapshot delta at this interval from a
     /// dedicated `fpu-stats-emitter` thread (`None` = no emitter).
     pub stats_interval: Option<Duration>,
+    /// Coordinator shard count. Each shard owns its own submit ring,
+    /// router, batcher, dispatch plane, plane pool, metrics slice and
+    /// worker set; submissions hash `(op, format, handle)` to a shard.
+    /// `1` (the default) reproduces the single-dispatcher service
+    /// exactly; `0` means auto — one shard per available CPU (the CLI's
+    /// `serve --shards` maps straight onto this field).
+    pub shards: usize,
 }
 
 impl Default for ServiceConfig {
@@ -127,6 +156,7 @@ impl Default for ServiceConfig {
             retire_budget: SHUTDOWN_RETIRE_BUDGET,
             trace: None,
             stats_interval: None,
+            shards: 1,
         }
     }
 }
@@ -136,17 +166,81 @@ enum DispatchMsg {
     Shutdown,
 }
 
+/// One shard's submit-side state, shared between client handles (the
+/// publish side), the shard's own dispatcher (the consume side), and
+/// peer dispatchers (the stealing side).
+struct ShardShared {
+    /// Bounded lock-free submit ring: the backpressure boundary. The
+    /// submit hot path is one CAS plus one release store into here.
+    ring: SubmitRing<DispatchMsg>,
+    /// Parking for the shard's dispatcher when its ring runs dry;
+    /// producers pay a fence + one relaxed load to wake it.
+    events: EventCount,
+    /// This shard's metrics slice (queue gauges, admission model,
+    /// latency histograms). [`ServiceMetrics`] merges the slices at
+    /// read time.
+    metrics: Arc<Metrics>,
+    /// Formed, backend-selected batches awaiting dispatch. The owner
+    /// pushes and normally drains immediately; a peer may steal the
+    /// **front** (oldest) batch once it has sat for [`STEAL_AGE`] —
+    /// whole batches only, never individual lanes, so bit-identity and
+    /// per-handle ordering invariants hold.
+    ready: Mutex<VecDeque<Batch>>,
+    /// Batches peers stole from this shard's ready queue.
+    steals: AtomicU64,
+    /// Fault-site filter name (`"shard0"`, `"shard1"`, ...) for the
+    /// `ring-stall` / `ring-full` chaos sites.
+    name: String,
+}
+
+/// SplitMix64-style finalizer used for shard selection: cheap,
+/// stateless, full-avalanche, so `hash(op, format, shard_key)` spreads
+/// evenly over any shard count.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
 /// Client-side handle: cheap to clone, safe across threads. Every
 /// submission returns a [`Ticket`] / [`BatchTicket`] backed by a shared
 /// completion slot — no per-request channel — and every failure is a
 /// typed [`ServiceError`].
-#[derive(Clone)]
+///
+/// Each handle carries a shard-hash key: its submissions for a given
+/// (op, format) always land on the same shard (preserving the handle's
+/// submission order end to end), while distinct clones spread across
+/// shards. Clone one handle per client thread or connection.
 pub struct ServiceHandle {
-    tx: SyncSender<DispatchMsg>,
+    shards: Arc<Vec<Arc<ShardShared>>>,
     next_id: Arc<AtomicU64>,
+    /// Allocator for clones' shard keys (see [`Clone`] below).
+    next_key: Arc<AtomicU64>,
+    /// This handle's shard-hash key (see [`Self::shard_for`]).
+    shard_key: u64,
     caps: Arc<BackendCaps>,
-    metrics: Arc<Metrics>,
+    fault: Option<Arc<FaultPlan>>,
+    closed: Arc<AtomicBool>,
     trace: Option<Arc<TracePlane>>,
+}
+
+impl Clone for ServiceHandle {
+    fn clone(&self) -> Self {
+        Self {
+            shards: self.shards.clone(),
+            next_id: self.next_id.clone(),
+            next_key: self.next_key.clone(),
+            // every clone draws a fresh key so independent handles
+            // spread their traffic across the shards
+            shard_key: mix64(self.next_key.fetch_add(1, Ordering::Relaxed)),
+            caps: self.caps.clone(),
+            fault: self.fault.clone(),
+            closed: self.closed.clone(),
+            trace: self.trace.clone(),
+        }
+    }
 }
 
 impl ServiceHandle {
@@ -185,6 +279,32 @@ impl ServiceHandle {
         &self.caps
     }
 
+    /// Which shard serves (`op`, `format`) submissions from **this**
+    /// handle: `hash(op, format, shard_key)`, stable for the handle's
+    /// lifetime (one handle's stream for a given (op, format) always
+    /// lands on one shard, preserving its submission order and batch
+    /// locality), while distinct handles spread across shards. Public
+    /// so tests and shard-affine front ends can pin work.
+    pub fn shard_for(&self, op: OpKind, format: FormatKind) -> usize {
+        let slot = op_format_slot(op, format) as u64;
+        let h = mix64(self.shard_key ^ slot.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        (h % self.shards.len() as u64) as usize
+    }
+
+    fn shard(&self, op: OpKind, format: FormatKind) -> &ShardShared {
+        &self.shards[self.shard_for(op, format)]
+    }
+
+    /// The `ring-full` chaos site: with a plan armed and matched on the
+    /// target shard's name, the submit path treats the ring as full and
+    /// sheds typed (forced backpressure).
+    fn ring_full_injected(&self, shard: &ShardShared) -> bool {
+        match &self.fault {
+            Some(plan) => plan.check(FaultSite::RingFull, &shard.name).is_some(),
+            None => false,
+        }
+    }
+
     /// Deadline admission control: a deadline-carrying submission whose
     /// budget is already smaller than the queue-delay estimate for its
     /// (op, format) slot is rejected **at submit time** with
@@ -208,10 +328,13 @@ impl ServiceHandle {
         lanes: usize,
         deadline: Duration,
     ) -> Result<(), ServiceError> {
-        if let Some(est_ns) = self.metrics.queue_delay_estimate_ns(op, format) {
-            if Duration::from_nanos(est_ns) > deadline && !self.metrics.admission_probe(op, format)
-            {
-                self.metrics.record_admission_reject(op, format, lanes as u64);
+        // admission runs against the shard the submission would land
+        // on: its gauge and rate window describe exactly the queue this
+        // request would wait in
+        let m = &self.shard(op, format).metrics;
+        if let Some(est_ns) = m.queue_delay_estimate_ns(op, format) {
+            if Duration::from_nanos(est_ns) > deadline && !m.admission_probe(op, format) {
+                m.record_admission_reject(op, format, lanes as u64);
                 self.note_reject(op, format, lanes);
                 return Err(ServiceError::Deadline);
             }
@@ -235,18 +358,46 @@ impl ServiceHandle {
     }
 
     fn send(&self, item: WorkItem) -> Result<(), ServiceError> {
-        // a failed send drops the item, which fails its ticket — but the
-        // caller gets the error directly and never sees that ticket
+        // a dropped item fails its ticket — but the caller gets the
+        // error directly and never sees that ticket
         let (op, format, lanes) = (item.op, item.format(), item.lanes() as u64);
-        // feed the admission model's queue-depth gauge BEFORE the send:
-        // the dispatcher may dequeue (and discount) the item the moment
-        // it lands, and the gauge must never dip below zero
-        self.metrics.record_enqueued(op, format, lanes);
-        if self.tx.send(DispatchMsg::Req(item)).is_err() {
-            // undo is safe: our own +lanes has not been consumed
-            self.metrics.record_dequeued(op, format, lanes);
+        let shard = self.shard(op, format);
+        if self.closed.load(Ordering::Acquire) {
             return Err(ServiceError::Shutdown);
         }
+        if self.ring_full_injected(shard) {
+            return Err(ServiceError::Overloaded);
+        }
+        // feed the admission model's queue-depth gauge BEFORE the
+        // publish: the dispatcher may dequeue (and discount) the item
+        // the moment it lands, and the gauge must never dip below zero
+        shard.metrics.record_enqueued(op, format, lanes);
+        let mut msg = DispatchMsg::Req(item);
+        let mut spins = 0u32;
+        loop {
+            match shard.ring.try_push(msg) {
+                Ok(()) => break,
+                Err(back) => {
+                    // full ring: backpressure. The dispatcher normally
+                    // drains in microseconds, so yield first; fall back
+                    // to a short sleep so a stalled consumer does not
+                    // burn a core under us
+                    if self.closed.load(Ordering::Acquire) {
+                        // undo is safe: our own +lanes was never consumed
+                        shard.metrics.record_dequeued(op, format, lanes);
+                        return Err(ServiceError::Shutdown);
+                    }
+                    msg = back;
+                    spins += 1;
+                    if spins < 64 {
+                        std::thread::yield_now();
+                    } else {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                }
+            }
+        }
+        shard.events.notify();
         Ok(())
     }
 
@@ -327,18 +478,25 @@ impl ServiceHandle {
     ) -> Result<Ticket, ServiceError> {
         let (item, ticket) = self.make_single(op, a, b, None)?;
         let format = item.format();
-        // gauge before send, as in `send` (the undo on either failure
-        // is safe for the same reason)
-        self.metrics.record_enqueued(op, format, 1);
-        match self.tx.try_send(DispatchMsg::Req(item)) {
-            Ok(()) => Ok(ticket),
-            Err(TrySendError::Full(_)) => {
-                self.metrics.record_dequeued(op, format, 1);
-                Err(ServiceError::Overloaded)
+        let shard = self.shard(op, format);
+        if self.closed.load(Ordering::Acquire) {
+            return Err(ServiceError::Shutdown);
+        }
+        if self.ring_full_injected(shard) {
+            return Err(ServiceError::Overloaded);
+        }
+        // gauge before publish, as in `send` (the undo on failure is
+        // safe for the same reason); a full ring hands the message back
+        // and dropping it here is fine — the caller never sees a ticket
+        shard.metrics.record_enqueued(op, format, 1);
+        match shard.ring.try_push(DispatchMsg::Req(item)) {
+            Ok(()) => {
+                shard.events.notify();
+                Ok(ticket)
             }
-            Err(TrySendError::Disconnected(_)) => {
-                self.metrics.record_dequeued(op, format, 1);
-                Err(ServiceError::Shutdown)
+            Err(_) => {
+                shard.metrics.record_dequeued(op, format, 1);
+                Err(ServiceError::Overloaded)
             }
         }
     }
@@ -599,15 +757,51 @@ fn retirer_loop(rx: Receiver<RetireMsg>, state: Arc<DurableState>, trace: Option
     }
 }
 
+/// Aggregated, clonable view over every shard's [`Metrics`] slice.
+///
+/// [`snapshot`](Self::snapshot) merges at read time — counters sum,
+/// log-bucket latency histograms merge exactly — so reports always
+/// cover all shards rather than silently showing one slice. The
+/// per-shard gauges and rate windows stay separate on purpose:
+/// admission control runs on the shard a submission would land on.
+#[derive(Clone)]
+pub struct ServiceMetrics {
+    shards: Arc<Vec<Arc<Metrics>>>,
+}
+
+impl ServiceMetrics {
+    /// Merged-across-shards snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        Metrics::merged_snapshot(self.shards.iter().map(Arc::as_ref))
+    }
+
+    /// Queued lanes for one (op, format), summed over shards.
+    pub fn queued_lanes(&self, op: OpKind, format: FormatKind) -> u64 {
+        self.shards.iter().map(|m| m.queued_lanes(op, format)).sum()
+    }
+
+    /// Number of shard slices (= the service's shard count).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// One shard's raw metrics slice — for targeted feeds in tests;
+    /// with `shards = 1` this is the whole story.
+    pub fn shard(&self, i: usize) -> &Metrics {
+        &self.shards[i]
+    }
+}
+
 /// The running service.
 pub struct FpuService {
     handle: ServiceHandle,
-    metrics: Arc<Metrics>,
+    shards: Arc<Vec<Arc<ShardShared>>>,
+    metrics: ServiceMetrics,
     health: Arc<HealthBoard>,
     backend_names: Vec<&'static str>,
-    dispatcher: Option<JoinHandle<()>>,
+    dispatchers: Vec<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    shutdown_tx: SyncSender<DispatchMsg>,
+    closed: Arc<AtomicBool>,
     supervisor: Option<JoinHandle<()>>,
     supervisor_stop: Arc<AtomicBool>,
     durable: Option<Arc<DurableState>>,
@@ -686,6 +880,7 @@ impl PoolSender {
 /// would keep its own receiver alive and deadlock shutdown.
 #[derive(Clone)]
 struct WorkerCtx {
+    shard: usize,
     backend: usize,
     name: &'static str,
     factory: ExecutorFactory,
@@ -701,8 +896,10 @@ struct WorkerCtx {
 }
 
 /// An abnormal worker exit (panic or injected death), reported to the
-/// supervisor so it can respawn a replacement.
+/// supervisor so it can respawn a replacement in the right shard's
+/// pool.
 struct ExitNotice {
+    shard: usize,
     backend: usize,
     slot_id: u64,
 }
@@ -710,6 +907,13 @@ struct ExitNotice {
 /// Worker batch-queue depth (per worker; backpressure onto the
 /// dispatcher beyond it).
 const WORKER_QUEUE: usize = 4;
+
+/// How old the front batch of a shard's ready queue must be before a
+/// peer may steal it. A healthy owner drains its own ready queue within
+/// microseconds of forming it, so age is the imbalance signal: only a
+/// stalled (or wedged) shard's batches ever cross this threshold, and
+/// the steady state pays no cross-shard traffic at all.
+const STEAL_AGE: Duration = Duration::from_millis(1);
 
 /// How long the dispatcher keeps servicing the retry channel at
 /// shutdown while batches are still in flight without making progress
@@ -775,13 +979,15 @@ fn respawn_worker(
 
 /// The pool supervisor: waits for [`ExitNotice`]s, removes the dead
 /// worker's slot, and respawns a replacement with capped exponential
-/// backoff. Respawns that keep failing mark the pool degraded on the
-/// health board (the dispatcher routes around it); a later successful
-/// respawn clears the mark.
+/// backoff. One supervisor serves every shard — `ctxs` / `shareds` are
+/// shard-major (`[shard][backend]`). Respawns that keep failing mark
+/// the pool's backend degraded on the (shared) health board — the
+/// dispatchers route around it; a later successful respawn clears the
+/// mark.
 fn supervisor_loop(
     exit_rx: Receiver<ExitNotice>,
-    ctxs: Vec<WorkerCtx>,
-    shareds: Vec<Arc<PoolShared>>,
+    ctxs: Vec<Vec<WorkerCtx>>,
+    shareds: Vec<Vec<Arc<PoolShared>>>,
     stop: Arc<AtomicBool>,
 ) {
     let mut respawned: Vec<JoinHandle<()>> = Vec::new();
@@ -791,16 +997,16 @@ fn supervisor_loop(
             Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => break,
         };
-        let b = notice.backend;
-        shareds[b].slots.lock().unwrap().retain(|s| s.id != notice.slot_id);
-        let ctx = &ctxs[b];
+        let (s, b) = (notice.shard, notice.backend);
+        shareds[s][b].slots.lock().unwrap().retain(|sl| sl.id != notice.slot_id);
+        let ctx = &ctxs[s][b];
         let mut streak = 0u32;
         loop {
             if stop.load(Ordering::Acquire) {
                 break;
             }
             std::thread::sleep(backoff_for(streak));
-            match respawn_worker(ctx, &shareds[b]) {
+            match respawn_worker(ctx, &shareds[s][b]) {
                 Ok(handle) => {
                     ctx.health.record_respawn(b);
                     ctx.health.set_degraded(b, false);
@@ -821,10 +1027,12 @@ fn supervisor_loop(
         }
     }
     // teardown: unplug every slot (disconnects any respawned workers'
-    // receivers too — the dispatcher's own clear cannot see slots
+    // receivers too — a dispatcher's own clear cannot see slots
     // published after it exited), drop the ctxs' senders, then join
-    for shared in &shareds {
-        shared.slots.lock().unwrap().clear();
+    for shard in &shareds {
+        for shared in shard {
+            shared.slots.lock().unwrap().clear();
+        }
     }
     drop(ctxs);
     for h in respawned {
@@ -836,11 +1044,13 @@ fn supervisor_loop(
 /// reporting **deltas** where counters are cumulative (qps, respawns,
 /// trace drops — the `+N` fields) and **levels** elsewhere (queued
 /// lanes, per-slot latency percentiles, breaker/degraded states).
+/// Reads through [`ServiceMetrics`], so every line aggregates all
+/// shards' slices (counters summed, histograms merged exactly).
 /// Sleeps in short slices so shutdown never waits out a full interval.
 fn stats_emitter_loop(
     interval: Duration,
     stop: Arc<AtomicBool>,
-    metrics: Arc<Metrics>,
+    metrics: ServiceMetrics,
     health: Arc<HealthBoard>,
     names: Vec<&'static str>,
     trace: Option<Arc<TracePlane>>,
@@ -947,6 +1157,10 @@ impl FpuService {
     /// normal submit path exactly once, and the durable API goes live.
     pub fn start_routed(config: ServiceConfig, registry: ExecutorRegistry) -> Result<Self> {
         assert!(config.workers >= 1, "need at least one worker");
+        let nshards = match config.shards {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
         let trace = config.trace.clone().map(|c| Arc::new(TracePlane::new(c)));
         let registry = match &config.fault {
             Some(plan) => {
@@ -961,12 +1175,12 @@ impl FpuService {
         if entries.len() > 8 {
             bail!("at most 8 backends per service (the retry mask is a u8)");
         }
-        let metrics = Arc::new(Metrics::new());
-        let pool = PlanePool::new();
-        let (tx, rx) = mpsc::sync_channel::<DispatchMsg>(config.queue_depth);
 
         // probe every backend once: validates each factory and
-        // negotiates its capability table (support + ladders + widths)
+        // negotiates its capability table (support + ladders + widths).
+        // Every shard's routing table is built over this same list in
+        // the same order — backend indices are shard-invariant, which
+        // is what lets a stolen batch dispatch on the stealer's pools.
         let mut caps_list = Vec::with_capacity(entries.len());
         for (i, entry) in entries.iter().enumerate() {
             let probe = entry
@@ -974,87 +1188,122 @@ impl FpuService {
                 .with_context(|| format!("probing backend #{i} capabilities"))?;
             caps_list.push(probe.capabilities());
         }
-        let table = RoutingTable::merge(caps_list)?;
+        let table = RoutingTable::merge(caps_list.clone())?;
         let names = table.names();
         let union = Arc::new(table.union().clone());
-        let batcher =
-            DynamicBatcher::routed(config.batcher, table.caps_list()).with_trace(trace.clone());
         let health = Arc::new(HealthBoard::new(table.backend_count()));
-        let outstanding = Arc::new(AtomicI64::new(0));
-        let (retry_tx, retry_rx) = mpsc::channel::<FailedBatch>();
         let (exit_tx, exit_rx) = mpsc::channel::<ExitNotice>();
         let next_slot_id = Arc::new(AtomicU64::new(0));
 
         // the admission model divides each slot's queue-delay estimate
-        // by the serving pool's worker parallelism: tell it how many
-        // workers the preferred backend of each (op, format) runs
+        // by the serving pool's worker parallelism: tell each shard's
+        // metrics slice how many workers the preferred backend of each
+        // (op, format) runs
         let pool_sizes: Vec<usize> =
             entries.iter().map(|e| e.workers().unwrap_or(config.workers).max(1)).collect();
-        for &op in &OpKind::ALL {
-            for &format in &FormatKind::ALL {
-                if let Some(&b) = table.candidates(op, format).first() {
-                    metrics.set_slot_workers(op, format, pool_sizes[b]);
+
+        // per-shard submit-side state: ring + event count + metrics
+        // slice + ready queue. Every ring gets the full queue_depth —
+        // the knob bounds each shard's backlog, as before.
+        let mut shard_list = Vec::with_capacity(nshards);
+        for s in 0..nshards {
+            let metrics = Arc::new(Metrics::new());
+            for &op in &OpKind::ALL {
+                for &format in &FormatKind::ALL {
+                    if let Some(&b) = table.candidates(op, format).first() {
+                        metrics.set_slot_workers(op, format, pool_sizes[b]);
+                    }
                 }
             }
+            shard_list.push(Arc::new(ShardShared {
+                ring: SubmitRing::with_capacity(config.queue_depth),
+                events: EventCount::new(),
+                metrics,
+                ready: Mutex::new(VecDeque::new()),
+                steals: AtomicU64::new(0),
+                name: format!("shard{s}"),
+            }));
         }
+        let shards = Arc::new(shard_list);
+        let metrics = ServiceMetrics {
+            shards: Arc::new(shards.iter().map(|s| s.metrics.clone()).collect()),
+        };
 
-        // per-backend worker pools: the dispatcher round-robins a
-        // backend's batches across that backend's live slots
+        // per-shard × per-backend worker pools: shard s's dispatcher
+        // round-robins a backend's batches across shard s's live slots
         let (init_tx, init_rx) = mpsc::channel::<(String, std::result::Result<(), String>)>();
-        let mut shareds: Vec<Arc<PoolShared>> = Vec::with_capacity(entries.len());
-        let mut ctxs: Vec<WorkerCtx> = Vec::with_capacity(entries.len());
-        let mut pools = Vec::with_capacity(entries.len());
+        let mut all_shareds: Vec<Vec<Arc<PoolShared>>> = Vec::with_capacity(nshards);
+        let mut all_ctxs: Vec<Vec<WorkerCtx>> = Vec::with_capacity(nshards);
+        let mut shard_pools: Vec<Vec<PoolSender>> = Vec::with_capacity(nshards);
+        let mut shard_retry_rx: Vec<Receiver<FailedBatch>> = Vec::with_capacity(nshards);
+        let mut shard_plane_pools: Vec<PlanePool> = Vec::with_capacity(nshards);
+        let mut shard_outstanding: Vec<Arc<AtomicI64>> = Vec::with_capacity(nshards);
         let mut workers = Vec::new();
         let mut total_workers = 0usize;
-        for (b, entry) in entries.iter().enumerate() {
-            let shared = Arc::new(PoolShared { slots: Mutex::new(Vec::new()) });
-            let ctx = WorkerCtx {
-                backend: b,
-                name: names[b],
-                factory: entry.factory(),
-                metrics: metrics.clone(),
-                health: health.clone(),
-                pool: pool.clone(),
-                retry_tx: retry_tx.clone(),
-                outstanding: outstanding.clone(),
-                fault: config.fault.clone(),
-                exit_tx: exit_tx.clone(),
-                next_slot_id: next_slot_id.clone(),
-                trace: trace.clone(),
-            };
-            for w in 0..pool_sizes[b] {
-                total_workers += 1;
-                let slot_id = next_slot_id.fetch_add(1, Ordering::Relaxed);
-                let (btx, brx) = mpsc::sync_channel::<Batch>(WORKER_QUEUE);
-                shared.slots.lock().unwrap().push(WorkerSlot { id: slot_id, tx: btx });
-                let ctx2 = ctx.clone();
-                let init_tx = init_tx.clone();
-                let wname = format!("fpu-{}-{w}", names[b]);
-                workers.push(
-                    std::thread::Builder::new()
-                        .name(wname.clone())
-                        .spawn(move || match (ctx2.factory)() {
-                            Ok(executor) => {
-                                let _ = init_tx.send((wname, Ok(())));
-                                drop(init_tx);
-                                worker_loop(brx, executor, ctx2, slot_id);
-                            }
-                            Err(e) => {
-                                let _ = init_tx.send((wname, Err(format!("{e:#}"))));
-                            }
-                        })
-                        .expect("spawn worker"),
-                );
+        for s in 0..nshards {
+            let plane_pool = PlanePool::new();
+            let outstanding = Arc::new(AtomicI64::new(0));
+            let (retry_tx, retry_rx) = mpsc::channel::<FailedBatch>();
+            let mut shareds: Vec<Arc<PoolShared>> = Vec::with_capacity(entries.len());
+            let mut ctxs: Vec<WorkerCtx> = Vec::with_capacity(entries.len());
+            let mut pools = Vec::with_capacity(entries.len());
+            for (b, entry) in entries.iter().enumerate() {
+                let shared = Arc::new(PoolShared { slots: Mutex::new(Vec::new()) });
+                let ctx = WorkerCtx {
+                    shard: s,
+                    backend: b,
+                    name: names[b],
+                    factory: entry.factory(),
+                    metrics: shards[s].metrics.clone(),
+                    health: health.clone(),
+                    pool: plane_pool.clone(),
+                    retry_tx: retry_tx.clone(),
+                    outstanding: outstanding.clone(),
+                    fault: config.fault.clone(),
+                    exit_tx: exit_tx.clone(),
+                    next_slot_id: next_slot_id.clone(),
+                    trace: trace.clone(),
+                };
+                for w in 0..pool_sizes[b] {
+                    total_workers += 1;
+                    let slot_id = next_slot_id.fetch_add(1, Ordering::Relaxed);
+                    let (btx, brx) = mpsc::sync_channel::<Batch>(WORKER_QUEUE);
+                    shared.slots.lock().unwrap().push(WorkerSlot { id: slot_id, tx: btx });
+                    let ctx2 = ctx.clone();
+                    let init_tx = init_tx.clone();
+                    let wname = format!("fpu-{}-s{s}w{w}", names[b]);
+                    workers.push(
+                        std::thread::Builder::new()
+                            .name(wname.clone())
+                            .spawn(move || match (ctx2.factory)() {
+                                Ok(executor) => {
+                                    let _ = init_tx.send((wname, Ok(())));
+                                    drop(init_tx);
+                                    worker_loop(brx, executor, ctx2, slot_id);
+                                }
+                                Err(e) => {
+                                    let _ = init_tx.send((wname, Err(format!("{e:#}"))));
+                                }
+                            })
+                            .expect("spawn worker"),
+                    );
+                }
+                pools.push(PoolSender { shared: shared.clone(), next: 0 });
+                shareds.push(shared);
+                ctxs.push(ctx);
             }
-            pools.push(PoolSender { shared: shared.clone(), next: 0 });
-            shareds.push(shared);
-            ctxs.push(ctx);
+            all_shareds.push(shareds);
+            all_ctxs.push(ctxs);
+            shard_pools.push(pools);
+            shard_retry_rx.push(retry_rx);
+            shard_plane_pools.push(plane_pool);
+            shard_outstanding.push(outstanding);
         }
         drop(init_tx);
-        drop(retry_tx); // workers + supervisor ctxs hold the retry senders
-        drop(exit_tx); // likewise the exit senders
+        drop(exit_tx); // workers + supervisor ctxs hold the exit senders
 
-        // fail-fast: every worker reports its init before we go live
+        // fail-fast: every worker of every shard reports its init
+        // before we go live
         for _ in 0..total_workers {
             let failure = match init_rx.recv() {
                 Ok((_, Ok(()))) => None,
@@ -1063,11 +1312,13 @@ impl FpuService {
             };
             if let Some(msg) = failure {
                 // unplug every slot -> live workers exit; then join
-                for shared in &shareds {
-                    shared.slots.lock().unwrap().clear();
+                for shareds in &all_shareds {
+                    for shared in shareds {
+                        shared.slots.lock().unwrap().clear();
+                    }
                 }
-                drop(pools);
-                drop(ctxs);
+                drop(shard_pools);
+                drop(all_ctxs);
                 for h in workers {
                     let _ = h.join();
                 }
@@ -1080,42 +1331,53 @@ impl FpuService {
             let stop = supervisor_stop.clone();
             std::thread::Builder::new()
                 .name("fpu-supervisor".into())
-                .spawn(move || supervisor_loop(exit_rx, ctxs, shareds, stop))
+                .spawn(move || supervisor_loop(exit_rx, all_ctxs, all_shareds, stop))
                 .expect("spawn supervisor")
         };
 
-        let dispatcher = {
-            let metrics = metrics.clone();
-            let pool = pool.clone();
+        // one dispatcher thread per shard, each owning its own router,
+        // batcher and dispatch plane (built over a clone of the shared
+        // routing data, on the shared health board)
+        let mut dispatchers = Vec::with_capacity(nshards);
+        for s in (0..nshards).rev() {
+            // reverse order so pop() hands each shard its own parts
+            let table = RoutingTable::merge(caps_list.clone())?;
+            let batcher = DynamicBatcher::routed(config.batcher.clone(), table.caps_list())
+                .with_trace(trace.clone());
             let plane =
                 DispatchPlane::new(table, policy, health.clone()).with_trace(trace.clone());
-            let outstanding = outstanding.clone();
-            let poll = config.poll;
-            let retire_budget = config.retire_budget;
-            std::thread::Builder::new()
-                .name("fpu-dispatcher".into())
-                .spawn(move || {
-                    dispatcher_loop(
-                        rx,
-                        retry_rx,
-                        batcher,
-                        plane,
-                        pools,
-                        poll,
-                        retire_budget,
-                        metrics,
-                        pool,
-                        outstanding,
-                    )
-                })
-                .expect("spawn dispatcher")
-        };
+            let rt = ShardRuntime {
+                index: s,
+                shards: shards.clone(),
+                retry_rx: shard_retry_rx.pop().expect("one retry channel per shard"),
+                batcher,
+                plane,
+                pools: shard_pools.pop().expect("one pool set per shard"),
+                poll: config.poll,
+                retire_budget: config.retire_budget,
+                plane_pool: shard_plane_pools.pop().expect("one plane pool per shard"),
+                outstanding: shard_outstanding.pop().expect("one counter per shard"),
+                metrics: shards[s].metrics.clone(),
+                fault: config.fault.clone(),
+            };
+            dispatchers.push(
+                std::thread::Builder::new()
+                    .name(format!("fpu-dispatcher-{s}"))
+                    .spawn(move || shard_dispatcher_loop(rt))
+                    .expect("spawn dispatcher"),
+            );
+        }
+        dispatchers.reverse();
 
+        let closed = Arc::new(AtomicBool::new(false));
         let handle = ServiceHandle {
-            tx: tx.clone(),
+            shards: shards.clone(),
             next_id: Arc::new(AtomicU64::new(0)),
+            next_key: Arc::new(AtomicU64::new(1)),
+            shard_key: mix64(0),
             caps: union,
-            metrics: metrics.clone(),
+            fault: config.fault.clone(),
+            closed: closed.clone(),
             trace: trace.clone(),
         };
 
@@ -1198,12 +1460,13 @@ impl FpuService {
 
         Ok(Self {
             handle,
+            shards,
             metrics,
             health,
             backend_names: names,
-            dispatcher: Some(dispatcher),
+            dispatchers,
             workers,
-            shutdown_tx: tx,
+            closed,
             supervisor: Some(supervisor),
             supervisor_stop,
             durable,
@@ -1221,9 +1484,22 @@ impl FpuService {
         self.handle.clone()
     }
 
-    /// Live metrics.
-    pub fn metrics(&self) -> Arc<Metrics> {
+    /// Live metrics: the merged view over every shard's slice (see
+    /// [`ServiceMetrics`]).
+    pub fn metrics(&self) -> ServiceMetrics {
         self.metrics.clone()
+    }
+
+    /// How many coordinator shards this service runs.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total batches peer dispatchers stole from other shards' ready
+    /// queues — the work-stealing imbalance path; 0 in a balanced
+    /// steady state.
+    pub fn steal_count(&self) -> u64 {
+        self.shards.iter().map(|s| s.steals.load(Ordering::Relaxed)).sum()
     }
 
     /// The negotiated capability table (for a routed service: the
@@ -1238,7 +1514,9 @@ impl FpuService {
     }
 
     /// Per-backend dispatch health and traffic counters, registration
-    /// order: (name, snapshot).
+    /// order: (name, snapshot). The health board is shared by every
+    /// shard's dispatch plane, so these counters already aggregate all
+    /// shards' traffic.
     pub fn dispatch_report(&self) -> Vec<(&'static str, BackendHealthSnapshot)> {
         self.backend_names.iter().copied().zip(self.health.snapshot()).collect()
     }
@@ -1353,7 +1631,7 @@ impl FpuService {
     }
 
     /// Shared by [`Self::shutdown`] and `Drop`; idempotent. Order
-    /// matters: the dispatcher drains and retires first (resolving
+    /// matters: the dispatchers drain and retire first (resolving
     /// every ticket), then the retirer (whose waits now return
     /// instantly), then the supervisor (which unplugs and joins any
     /// respawned workers), then the original workers.
@@ -1362,9 +1640,46 @@ impl FpuService {
         if let Some(s) = self.stats_emitter.take() {
             let _ = s.join();
         }
-        let _ = self.shutdown_tx.send(DispatchMsg::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
+        // refuse new submissions (and unblock submitters spinning on a
+        // full ring) before asking the dispatchers to drain
+        self.closed.store(true, Ordering::Release);
+        if !self.dispatchers.is_empty() {
+            for shard in self.shards.iter() {
+                // one Shutdown marker per ring; a full ring clears as
+                // its dispatcher drains, so bound the wait instead of
+                // spinning forever should a dispatcher have died
+                let deadline = Instant::now() + SHUTDOWN_RETIRE_BUDGET;
+                let mut msg = DispatchMsg::Shutdown;
+                loop {
+                    match shard.ring.try_push(msg) {
+                        Ok(()) => {
+                            shard.events.notify();
+                            break;
+                        }
+                        Err(back) => {
+                            if Instant::now() >= deadline {
+                                break;
+                            }
+                            msg = back;
+                            std::thread::sleep(Duration::from_micros(50));
+                        }
+                    }
+                }
+            }
+            for d in self.dispatchers.drain(..) {
+                let _ = d.join();
+            }
+            // a submission racing shutdown may have published after its
+            // dispatcher's final drain: fail those riders typed instead
+            // of leaving them to the ring's drop-drain
+            for shard in self.shards.iter() {
+                while let Some(msg) = shard.ring.pop() {
+                    if let DispatchMsg::Req(item) = msg {
+                        shard.metrics.record_dequeued(item.op, item.format(), item.lanes() as u64);
+                        item.fail(ServiceError::Shutdown);
+                    }
+                }
+            }
         }
         drop(self.retirer_tx.take());
         if let Some(r) = self.retirer.take() {
@@ -1602,18 +1917,19 @@ fn reroute_failed(
 }
 
 /// Form batches for every queue that should flush (`flush` = drain
-/// unconditionally) and dispatch each to the backend the plane
-/// selects.
-#[allow(clippy::too_many_arguments)]
-fn form_and_dispatch(
+/// unconditionally), select each one's backend, and expose them on the
+/// shard's **ready queue**. Dispatch happens separately — normally the
+/// owner's [`drain_own_ready`] an instant later, or a peer's
+/// [`steal_one`] when the owner stalls: the ready queue is the hand-off
+/// point that makes whole-batch work stealing possible without sharing
+/// the router or batcher across shards.
+fn form_ready(
     flush: bool,
     router: &mut Router,
+    me: &ShardShared,
     batcher: &DynamicBatcher,
     plane: &mut DispatchPlane,
-    pools: &mut [PoolSender],
-    metrics: &Metrics,
     plane_pool: &PlanePool,
-    outstanding: &AtomicI64,
 ) {
     let now = Instant::now();
     for &op in &OpKind::ALL {
@@ -1627,8 +1943,8 @@ fn form_and_dispatch(
                     // at submit), but a direct router feed must not
                     // wedge: fail the queue typed
                     for item in router.drain(op, format, usize::MAX) {
-                        metrics.record_dequeued(op, format, item.lanes() as u64);
-                        metrics.record_error(op, format, item.lanes() as u64);
+                        me.metrics.record_dequeued(op, format, item.lanes() as u64);
+                        me.metrics.record_error(op, format, item.lanes() as u64);
                         item.fail(ServiceError::Rejected {
                             reason: format!("no backend serves ({}, {format})", op.label()),
                         });
@@ -1643,23 +1959,14 @@ fn form_and_dispatch(
                 }
                 let sel = plane.select(op, format).expect("peeked candidate exists");
                 match batcher
-                    .form_batch_for(sel.backend, router, op, format, now, plane_pool, metrics)
+                    .form_batch_for(sel.backend, router, op, format, now, plane_pool, &me.metrics)
                 {
-                    Some(batch) => {
-                        // counted outstanding from send to terminal
-                        // outcome (success, final failure, or shutdown)
-                        outstanding.fetch_add(1, Ordering::AcqRel);
-                        send_batch(
-                            batch,
-                            sel.backend,
-                            None,
-                            plane,
-                            pools,
-                            batcher,
-                            metrics,
-                            plane_pool,
-                            outstanding,
-                        );
+                    Some(mut batch) => {
+                        // carry the selection to whoever dispatches —
+                        // backend indices are shard-invariant, so the
+                        // choice is valid on a stealer's pools too
+                        batch.backend = sel.backend;
+                        me.ready.lock().unwrap().push_back(batch);
                     }
                     None => {
                         if router.len(op, format) == 0 {
@@ -1710,92 +2017,175 @@ fn retire_outstanding(
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn dispatcher_loop(
-    rx: Receiver<DispatchMsg>,
+/// Everything one shard's dispatcher owns (or shares read-only): its
+/// routing plane, pools and retry channel, plus the shared shard list
+/// it may steal from when idle.
+struct ShardRuntime {
+    index: usize,
+    shards: Arc<Vec<Arc<ShardShared>>>,
     retry_rx: Receiver<FailedBatch>,
     batcher: DynamicBatcher,
-    mut plane: DispatchPlane,
-    mut pools: Vec<PoolSender>,
+    plane: DispatchPlane,
+    pools: Vec<PoolSender>,
     poll: Duration,
     retire_budget: Duration,
-    metrics: Arc<Metrics>,
     plane_pool: PlanePool,
     outstanding: Arc<AtomicI64>,
-) {
-    let mut router = Router::new();
-    router.set_trace(plane.trace().cloned());
-    'outer: loop {
-        // block for the first message (bounded by the poll tick) ...
-        match rx.recv_timeout(poll) {
-            Ok(DispatchMsg::Req(req)) => router.route(req),
-            Ok(DispatchMsg::Shutdown) => break,
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
+    metrics: Arc<Metrics>,
+    fault: Option<Arc<FaultPlan>>,
+}
+
+/// Dispatch one ready batch on `rt`'s pools, counting it against `rt`'s
+/// outstanding counter — the dispatching shard (owner or stealer) owns
+/// the batch through its terminal outcome, including failover re-routes
+/// through its own retry channel.
+fn dispatch_one(batch: Batch, rt: &mut ShardRuntime) {
+    let backend = batch.backend;
+    rt.outstanding.fetch_add(1, Ordering::AcqRel);
+    send_batch(
+        batch,
+        backend,
+        None,
+        &mut rt.plane,
+        &mut rt.pools,
+        &rt.batcher,
+        &rt.metrics,
+        &rt.plane_pool,
+        &rt.outstanding,
+    );
+}
+
+/// Drain every batch from this shard's own ready queue (oldest first).
+/// Returns how many were dispatched. The lock is released between pops
+/// so a stealing peer is never held out for a whole drain.
+fn drain_own_ready(me: &ShardShared, rt: &mut ShardRuntime) -> usize {
+    let mut n = 0;
+    loop {
+        let batch = me.ready.lock().unwrap().pop_front();
+        match batch {
+            Some(b) => {
+                dispatch_one(b, rt);
+                n += 1;
+            }
+            None => return n,
         }
-        // ... then greedily drain the backlog so the batcher sees the
-        // whole burst at once (otherwise a stale-age flush would emit
-        // singleton batches while the queue still holds work)
+    }
+}
+
+/// Steal the oldest sufficiently-aged ready batch from one peer, if
+/// any, and dispatch it on **this** shard's pools. Whole batches only,
+/// front (oldest) first: lanes stay together and a peer's per-handle
+/// order is preserved, so bit-identity invariants hold. Backend indices
+/// are shard-invariant (every plane is built over the same registration
+/// order), so the owner's backend selection is valid on the stealer.
+fn steal_one(rt: &mut ShardRuntime) -> bool {
+    let now = Instant::now();
+    for offset in 1..rt.shards.len() {
+        let j = (rt.index + offset) % rt.shards.len();
+        let peer = rt.shards[j].clone();
+        let batch = {
+            let mut q = peer.ready.lock().unwrap();
+            match q.front() {
+                Some(front) if now.saturating_duration_since(front.formed_at) >= STEAL_AGE => {
+                    q.pop_front()
+                }
+                _ => None,
+            }
+        };
+        if let Some(batch) = batch {
+            peer.steals.fetch_add(1, Ordering::Relaxed);
+            dispatch_one(batch, rt);
+            return true;
+        }
+    }
+    false
+}
+
+/// One shard's dispatcher loop: drain the ring into the router, form
+/// ready batches, dispatch them, and steal from stalled peers when
+/// otherwise idle.
+fn shard_dispatcher_loop(mut rt: ShardRuntime) {
+    let me = rt.shards[rt.index].clone();
+    let mut router = Router::new();
+    router.set_trace(rt.plane.trace().cloned());
+    'outer: loop {
+        let mut busy = false;
+        // park until work arrives (bounded by the poll tick), then
+        // greedily drain the ring so the batcher sees the whole burst
+        // at once (otherwise a stale-age flush would emit singleton
+        // batches while the ring still holds work)
+        if me.ring.is_empty() {
+            me.events.park_timeout(|| !me.ring.is_empty(), rt.poll);
+        }
         loop {
-            match rx.try_recv() {
-                Ok(DispatchMsg::Req(req)) => router.route(req),
-                Ok(DispatchMsg::Shutdown) => break 'outer,
-                Err(_) => break,
+            match me.ring.pop() {
+                Some(DispatchMsg::Req(req)) => {
+                    router.route(req);
+                    busy = true;
+                }
+                Some(DispatchMsg::Shutdown) => break 'outer,
+                None => break,
             }
         }
         // failed batches re-route before new work dispatches: their
         // riders have waited longest
-        while let Ok(failed) = retry_rx.try_recv() {
+        while let Ok(failed) = rt.retry_rx.try_recv() {
+            busy = true;
             reroute_failed(
                 failed,
-                &mut plane,
-                &mut pools,
-                &batcher,
-                &metrics,
-                &plane_pool,
-                &outstanding,
+                &mut rt.plane,
+                &mut rt.pools,
+                &rt.batcher,
+                &rt.metrics,
+                &rt.plane_pool,
+                &rt.outstanding,
             );
         }
-        form_and_dispatch(
-            false,
-            &mut router,
-            &batcher,
-            &mut plane,
-            &mut pools,
-            &metrics,
-            &plane_pool,
-            &outstanding,
-        );
+        form_ready(false, &mut router, &me, &rt.batcher, &mut rt.plane, &rt.plane_pool);
+        // the ring-stall chaos site: delay this consumer between batch
+        // formation and dispatch — exactly the window where its ready
+        // queue is exposed to peer stealing and its ring backs up onto
+        // submitters. Consulted only when batches are actually exposed,
+        // so idle poll ticks do not burn the plan's occurrence window.
+        if let Some(plan) = &rt.fault {
+            if !me.ready.lock().unwrap().is_empty() {
+                if let Some(shot) = plan.check(FaultSite::RingStall, &me.name) {
+                    std::thread::sleep(Duration::from_micros(shot.micros));
+                }
+            }
+        }
+        if drain_own_ready(&me, &mut rt) > 0 {
+            busy = true;
+        }
+        // only an idle tick pays the peer scan: work stealing is the
+        // imbalance path, not the steady state
+        if !busy {
+            steal_one(&mut rt);
+        }
     }
-    // drain everything left
-    while let Ok(DispatchMsg::Req(req)) = rx.try_recv() {
-        router.route(req);
+    // drain everything left on this shard's ring
+    while let Some(msg) = me.ring.pop() {
+        if let DispatchMsg::Req(req) = msg {
+            router.route(req);
+        }
     }
-    form_and_dispatch(
-        true,
-        &mut router,
-        &batcher,
-        &mut plane,
-        &mut pools,
-        &metrics,
-        &plane_pool,
-        &outstanding,
-    );
+    form_ready(true, &mut router, &me, &rt.batcher, &mut rt.plane, &rt.plane_pool);
+    drain_own_ready(&me, &mut rt);
     // retire in-flight batches before closing the pools
     retire_outstanding(
-        &retry_rx,
-        retire_budget,
-        &mut plane,
-        &mut pools,
-        &batcher,
-        &metrics,
-        &plane_pool,
-        &outstanding,
+        &rt.retry_rx,
+        rt.retire_budget,
+        &mut rt.plane,
+        &mut rt.pools,
+        &rt.batcher,
+        &rt.metrics,
+        &rt.plane_pool,
+        &rt.outstanding,
     );
     // unplug every worker channel explicitly: the supervisor shares the
     // slot lists (behind `Arc`), so dropping `pools` alone would not
     // disconnect the workers' receivers
-    for p in &pools {
+    for p in &rt.pools {
         p.shared.slots.lock().unwrap().clear();
     }
 }
@@ -1845,7 +2235,7 @@ fn send_failed_or_fail(ctx: &WorkerCtx, failed: FailedBatch) {
 /// batches still buffered on the channel to the retry path, unblamed —
 /// they were never executed.
 fn abnormal_exit(rx: &Receiver<Batch>, ctx: &WorkerCtx, slot_id: u64) {
-    let _ = ctx.exit_tx.send(ExitNotice { backend: ctx.backend, slot_id });
+    let _ = ctx.exit_tx.send(ExitNotice { shard: ctx.shard, backend: ctx.backend, slot_id });
     while let Ok(batch) = rx.recv() {
         send_failed_or_fail(ctx, FailedBatch { batch, error: None });
     }
@@ -2277,8 +2667,10 @@ mod tests {
         assert_eq!(t.wait().unwrap().value.f32(), 3.0);
         // seed the rate window: ~1ms of executor time per lane on
         // (divide, f32)
+        // (fed straight into shard 0's slice — the only shard here, so
+        // the handle's admission check reads exactly this slice)
         for _ in 0..8 {
-            svc.metrics().record_batch(
+            svc.metrics().shard(0).record_batch(
                 OpKind::Divide,
                 FormatKind::F32,
                 &[(10_000_000, 1)],
@@ -2289,7 +2681,7 @@ mod tests {
         // ... and a standing backlog of 200 lanes: the model predicts
         // ~200ms of queue delay (the gauge is what the router's lane
         // counts feed in production; the test feeds it directly)
-        svc.metrics().record_enqueued(OpKind::Divide, FormatKind::F32, 200);
+        svc.metrics().shard(0).record_enqueued(OpKind::Divide, FormatKind::F32, 200);
         // a 50us budget is now hopeless: rejected at submit, typed
         match h.submit_value_deadline(
             OpKind::Divide,
@@ -2319,7 +2711,7 @@ mod tests {
         // model needs no latency window to decay. (The request may
         // still shed *in the queue* on a slow run; the property under
         // test is that submit no longer rejects.)
-        svc.metrics().record_dequeued(OpKind::Divide, FormatKind::F32, 200);
+        svc.metrics().shard(0).record_dequeued(OpKind::Divide, FormatKind::F32, 200);
         let t = h
             .submit_value_deadline(
                 OpKind::Divide,
@@ -2340,7 +2732,7 @@ mod tests {
             .unwrap();
         assert_eq!(t.wait().unwrap().value.f32(), 4.0);
         // other (op, format) slots are unaffected by this slot's history
-        svc.metrics().record_enqueued(OpKind::Divide, FormatKind::F32, 200);
+        svc.metrics().shard(0).record_enqueued(OpKind::Divide, FormatKind::F32, 200);
         let t = h
             .submit_value_deadline(
                 OpKind::Sqrt,

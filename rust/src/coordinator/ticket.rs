@@ -13,6 +13,11 @@
 //! batches (the dynamic batcher splits oversized groups at ladder
 //! boundaries); each completed range fills its slice of the slot and the
 //! final range wakes the waiter.
+//!
+//! Tickets are shard-agnostic: completion is a write into the shared
+//! slot plus a condvar wake, so it does not matter whether the batch
+//! retired on its home shard's workers or was stolen by a peer — the
+//! waiter sees the same bits either way.
 
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 

@@ -23,6 +23,13 @@
 //! batch has already failed on, it returns the next candidate to try
 //! (healthy ones first), or `None` when the batch has exhausted every
 //! registered option.
+//!
+//! In the sharded coordinator each shard dispatcher owns a
+//! `DispatchPlane` of its own (selection counters are per shard), but
+//! every plane shares one [`HealthBoard`]: breaker trips, probes and
+//! degradation are service-wide signals, so a backend opened by one
+//! shard's traffic is routed around by all of them — and the health
+//! counters aggregate all shards without extra merging.
 
 use std::sync::Arc;
 

@@ -17,6 +17,7 @@
 //! site    := exec-error | exec-panic | latency | bit-flip
 //!          | worker-death | slow-drain
 //!          | conn-drop | partial-write | read-stall
+//!          | ring-stall | ring-full
 //! kv      := 'p' '=' float        probability per occurrence (default 1)
 //!          | 'after' '=' int      occurrences skipped first (default 0)
 //!          | 'count' '=' int      occurrences in the window (default ∞)
@@ -54,10 +55,15 @@
 //! | `conn-drop` | net reader loop | durable exactly-once under client death |
 //! | `partial-write` | net writer loop | client torn-frame rejection (CRC) |
 //! | `read-stall` | net reader loop | slow connection isolation |
+//! | `ring-stall` | shard dispatcher | peer work stealing, backpressure under a stalled consumer |
+//! | `ring-full` | shard submit path | typed `Overloaded` shedding (forced backpressure) |
 //!
 //! The three net sites are consulted by [`crate::net::NetServer`] (the
 //! wire front end) with the backend filter matched against the string
-//! `"net"`, since a connection has no backend.
+//! `"net"`, since a connection has no backend. The two ring sites are
+//! consulted by the coordinator's shard machinery with the filter
+//! matched against the shard name (`"shard0"`, `"shard1"`, ...), so a
+//! plan can stall one shard while its peers stay healthy.
 
 mod executor;
 mod plan;

@@ -47,11 +47,20 @@ pub enum FaultSite {
     /// The net reader stalls between frames (a server-side slow-loris;
     /// exercises that one stalled connection never blocks the rest).
     ReadStall,
+    /// A shard dispatcher stalls between forming batches and draining
+    /// its ready queue (delayed consumer; exercises peer work stealing
+    /// and submit-ring backpressure). Backend filter matches the shard
+    /// name (`shard0`, `shard1`, ...).
+    RingStall,
+    /// The submit path treats the shard's ring as full (forced
+    /// backpressure; exercises typed `Overloaded` shedding). Backend
+    /// filter matches the shard name.
+    RingFull,
 }
 
 impl FaultSite {
     /// Every site, spec order.
-    pub const ALL: [FaultSite; 9] = [
+    pub const ALL: [FaultSite; 11] = [
         FaultSite::ExecError,
         FaultSite::ExecPanic,
         FaultSite::Latency,
@@ -61,6 +70,8 @@ impl FaultSite {
         FaultSite::ConnDrop,
         FaultSite::PartialWrite,
         FaultSite::ReadStall,
+        FaultSite::RingStall,
+        FaultSite::RingFull,
     ];
 
     /// The spec-grammar name of the site.
@@ -75,6 +86,8 @@ impl FaultSite {
             FaultSite::ConnDrop => "conn-drop",
             FaultSite::PartialWrite => "partial-write",
             FaultSite::ReadStall => "read-stall",
+            FaultSite::RingStall => "ring-stall",
+            FaultSite::RingFull => "ring-full",
         }
     }
 
@@ -127,7 +140,10 @@ impl fmt::Display for FaultRule {
         }
         if matches!(
             self.site,
-            FaultSite::Latency | FaultSite::SlowDrain | FaultSite::ReadStall
+            FaultSite::Latency
+                | FaultSite::SlowDrain
+                | FaultSite::ReadStall
+                | FaultSite::RingStall
         ) {
             write!(f, ",us={}", self.micros)?;
         }
@@ -345,6 +361,26 @@ mod tests {
         assert_eq!(rules[2].micros, 5000);
         // read-stall renders its us= parameter back out
         assert!(plan.to_string().contains("read-stall:p=1,after=0,us=5000"), "{plan}");
+    }
+
+    #[test]
+    fn parse_ring_sites() {
+        let plan = FaultPlan::parse(
+            "ring-stall@shard0:us=20000,count=3; ring-full@shard1:after=5,count=10",
+            17,
+        )
+        .unwrap();
+        let rules = plan.rules();
+        assert_eq!(rules[0].site, FaultSite::RingStall);
+        assert_eq!(rules[0].backend.as_deref(), Some("shard0"));
+        assert_eq!((rules[0].micros, rules[0].count), (20_000, 3));
+        assert_eq!(rules[1].site, FaultSite::RingFull);
+        assert_eq!(rules[1].backend.as_deref(), Some("shard1"));
+        assert_eq!((rules[1].after, rules[1].count), (5, 10));
+        // ring-stall renders its delay; ring-full has none to render
+        let rendered = plan.to_string();
+        assert!(rendered.contains("ring-stall@shard0:p=1,after=0,count=3,us=20000"), "{rendered}");
+        assert!(rendered.contains("ring-full@shard1:p=1,after=5,count=10"), "{rendered}");
     }
 
     #[test]

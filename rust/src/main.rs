@@ -50,6 +50,10 @@ COMMANDS:
              --d F --steps K --gantt
   serve      run the FPU service on a synthetic workload (E2E driver)
              --requests N --workers W
+             --shards N (independent coordinator shards, each with its
+             own lock-free submit ring, batcher and worker set; 0 =
+             one per CPU, default 0 — set 1 to reproduce the old
+             single-dispatcher service)
              --backend LIST (comma-separated registry, preference order:
              native|u128|scalar|pjrt — e.g. --backend native,u128,scalar
              routes per (op, format) across three pools; u128 serves
@@ -94,6 +98,11 @@ COMMANDS:
              --format f16|bf16|f32|f64|mix (override the preset's mix)
              --deadline-us US (per-frame wire deadline; 0 = none)
              --durable (journalled submits; server needs --journal)
+             --sweep (max-sustained-qps search: double the offered rate
+             from --rate until the p99 SLO breaks, then binary-refine
+             to the knee; each probe sends --requests frames)
+             --slo-p99-ms MS (p99 SLO the sweep holds rates to,
+             default 5)
   trace-report  per-stage latency breakdown of a --trace-out file
              goldschmidt trace-report TRACE.json (or .jsonl)
   version    print version
@@ -414,6 +423,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("the pjrt backend serves f32 only (AOT artifacts are single-precision); use --backend native for {format_str}");
     }
     let workers: usize = args.get("workers", 1usize).map_err(anyhow::Error::msg)?;
+    let shards: usize = args.get("shards", 0usize).map_err(anyhow::Error::msg)?;
     let max_batch: usize = args.get("batch", 1024usize).map_err(anyhow::Error::msg)?;
     let explicit_wait: Option<u64> = args.get_opt("wait-us").map_err(anyhow::Error::msg)?;
     let wait_us = explicit_wait.unwrap_or(200);
@@ -485,6 +495,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batcher,
         queue_depth: 65_536,
         workers,
+        shards,
         poll: Duration::from_micros(50),
         fault,
         journal,
@@ -721,7 +732,7 @@ fn write_trace_if_armed(svc: &FpuService, trace_out: Option<&std::path::Path>) -
 /// headline `loadgen: N/N ok` line CI asserts on; exits nonzero when a
 /// scenario that promises zero rider-visible errors loses frames.
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    use goldschmidt::workload::{run_scenario, ScenarioSpec, SCENARIOS};
+    use goldschmidt::workload::{run_scenario, sweep_max_qps, ScenarioSpec, SCENARIOS};
 
     let connect = args.get_str("connect", "127.0.0.1:7070");
     let scenario = args.get_str("scenario", "steady");
@@ -742,6 +753,43 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             vec![FormatKind::parse(&fmt_str).map_err(anyhow::Error::msg)?]
         };
     }
+    if args.flag("sweep") {
+        // max-sustained-qps search: probe offered rates until the p99
+        // SLO breaks, then binary-refine to the knee; --rate is the
+        // starting (floor) rate and --requests the frames per probe
+        let slo_ms: u64 = args.get("slo-p99-ms", 5u64).map_err(anyhow::Error::msg)?;
+        let slo = Duration::from_millis(slo_ms.max(1));
+        println!(
+            "loadgen: sweep scenario={scenario} start={rate:.0} qps slo-p99={slo_ms}ms \
+             probe-requests={} -> {connect}",
+            spec.requests
+        );
+        let sweep = sweep_max_qps(connect, &spec, rate, slo)?;
+        let mut t = Table::new(
+            "offered-rate sweep (open-loop probes)",
+            &["offered qps", "achieved qps", "p99", "all ok", "verdict"],
+        )
+        .aligns(&[Align::Right, Align::Right, Align::Right, Align::Right, Align::Left]);
+        for p in &sweep.probes {
+            t.row(&[
+                format!("{:.0}", p.offered_qps),
+                format!("{:.0}", p.achieved_qps),
+                fmt_ns(p.p99_ns as f64),
+                p.all_ok.to_string(),
+                if p.sustained { "sustained".into() } else { "over SLO".to_string() },
+            ]);
+        }
+        t.print();
+        if sweep.max_sustained_qps > 0.0 {
+            println!(
+                "loadgen: max sustained {:.0} qps within p99 <= {slo_ms}ms",
+                sweep.max_sustained_qps
+            );
+            return Ok(());
+        }
+        bail!("no offered rate met the p99 SLO (even {rate:.0} qps missed {slo_ms}ms)");
+    }
+
     println!(
         "loadgen: scenario={scenario} requests={} connections={} lanes={} -> {connect}",
         spec.requests, spec.connections, spec.lanes

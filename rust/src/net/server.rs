@@ -34,6 +34,15 @@
 //! completers drain and drop theirs, and the writer exits when the
 //! queue disconnects.
 //!
+//! Each reader clones its own
+//! [`ServiceHandle`](crate::coordinator::ServiceHandle) off the
+//! service, and a
+//! handle clone draws a fresh shard key — so every connection gets its
+//! own coordinator-shard affinity for free: concurrent connections
+//! spread across the sharded submit rings instead of serializing on
+//! one queue, while one connection's (op, format) stream stays on one
+//! shard (FIFO preserved end to end).
+//!
 //! The chaos sites `conn-drop`, `partial-write` and `read-stall`
 //! ([`crate::fault::FaultSite`]) are consulted here with backend filter
 //! `"net"`; see the module docs of [`crate::fault`].

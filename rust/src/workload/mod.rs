@@ -7,4 +7,7 @@ pub mod generator;
 pub mod scenario;
 
 pub use generator::{ArrivalProcess, OperandDist, WorkloadGen, WorkloadSpec};
-pub use scenario::{derive_seed, run_scenario, RampSpec, ScenarioReport, ScenarioSpec, SCENARIOS};
+pub use scenario::{
+    derive_seed, run_scenario, sweep_max_qps, RampSpec, ScenarioReport, ScenarioSpec, SweepProbe,
+    SweepReport, SCENARIOS,
+};

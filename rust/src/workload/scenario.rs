@@ -176,6 +176,23 @@ impl ScenarioSpec {
         let conns = self.connections.max(1);
         self.requests / conns + usize::from(idx < self.requests % conns)
     }
+
+    /// The same scenario re-paced to a new **total** offered rate
+    /// (frames/s across all connections). Burst trains keep their
+    /// on/off duty cycle and 4x peak-to-mean ratio; a closed-loop spec
+    /// becomes Poisson so the sweep stays open-loop.
+    pub fn with_total_rate(&self, total_qps: f64) -> ScenarioSpec {
+        let per_conn = total_qps.max(1e-9) / self.connections.max(1) as f64;
+        let arrivals = match self.arrivals {
+            ArrivalProcess::Closed => ArrivalProcess::Poisson { rate: per_conn },
+            ArrivalProcess::Uniform { .. } => ArrivalProcess::Uniform { rate: per_conn },
+            ArrivalProcess::Poisson { .. } => ArrivalProcess::Poisson { rate: per_conn },
+            ArrivalProcess::Bursty { on_s, off_s, .. } => {
+                ArrivalProcess::Bursty { burst_rate: 4.0 * per_conn, on_s, off_s }
+            }
+        };
+        ScenarioSpec { arrivals, ..self.clone() }
+    }
 }
 
 /// Stable per-connection seed derivation: mixes the scenario seed with
@@ -371,6 +388,104 @@ where
     report.elapsed_s = start.elapsed().as_secs_f64();
     report.latencies_ns.sort_unstable();
     Ok(report)
+}
+
+/// One probed offered rate in a [`sweep_max_qps`] run.
+#[derive(Clone, Debug)]
+pub struct SweepProbe {
+    /// Total offered rate for this probe, frames/s.
+    pub offered_qps: f64,
+    /// Completed-OK throughput actually achieved, frames/s.
+    pub achieved_qps: f64,
+    /// Submit-to-complete p99 at this rate, ns.
+    pub p99_ns: u64,
+    /// Every submitted frame completed OK.
+    pub all_ok: bool,
+    /// `all_ok` and p99 within the SLO: this rate is sustained.
+    pub sustained: bool,
+}
+
+/// Outcome of a max-sustained-qps sweep: every probe in the order it
+/// ran, plus the knee.
+#[derive(Clone, Debug, Default)]
+pub struct SweepReport {
+    /// All probes, in execution order (climb phase then refinement).
+    pub probes: Vec<SweepProbe>,
+    /// Highest offered rate that met the SLO; 0 when even the starting
+    /// rate missed it and refinement found no sustainable rate.
+    pub max_sustained_qps: f64,
+}
+
+/// Doubling climb + binary refinement over a probe function. Split out
+/// from the networked sweep so the search itself is unit-testable: the
+/// probe returns `(achieved_qps, p99_ns, all_ok)` for an offered rate.
+fn sweep_core<F>(start_qps: f64, slo_p99_ns: u64, mut run_probe: F) -> Result<SweepReport>
+where
+    F: FnMut(f64) -> Result<(f64, u64, bool)>,
+{
+    const CLIMB_STEPS: usize = 8;
+    const REFINE_STEPS: usize = 5;
+    let mut probes = Vec::new();
+    let mut probe = |qps: f64, probes: &mut Vec<SweepProbe>| -> Result<bool> {
+        let (achieved_qps, p99_ns, all_ok) = run_probe(qps)?;
+        let sustained = all_ok && p99_ns <= slo_p99_ns;
+        probes.push(SweepProbe { offered_qps: qps, achieved_qps, p99_ns, all_ok, sustained });
+        Ok(sustained)
+    };
+    // geometric climb: double until the SLO breaks (or the climb budget
+    // runs out, in which case the last sustained rate is the answer)
+    let mut lo = 0.0f64; // highest sustained offered rate so far
+    let mut hi = 0.0f64; // lowest unsustained offered rate so far
+    let mut rate = start_qps.max(1.0);
+    for _ in 0..CLIMB_STEPS {
+        if probe(rate, &mut probes)? {
+            lo = rate;
+            rate *= 2.0;
+        } else {
+            hi = rate;
+            break;
+        }
+    }
+    // binary refinement between the last good and first bad rate
+    if hi > 0.0 {
+        for _ in 0..REFINE_STEPS {
+            if lo > 0.0 && hi / lo < 1.1 {
+                break;
+            }
+            let mid = if lo > 0.0 { (lo * hi).sqrt() } else { hi / 2.0 };
+            if mid < 1.0 {
+                break;
+            }
+            if probe(mid, &mut probes)? {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+    }
+    Ok(SweepReport { probes, max_sustained_qps: lo })
+}
+
+/// Find the highest total offered rate the server sustains within a p99
+/// SLO: each probe re-paces `template` (same mix, lanes, deadline,
+/// connection count) to a candidate rate and runs it open-loop via
+/// [`run_scenario`]; a rate is *sustained* when every frame completes
+/// OK and the submit-to-complete p99 stays within `slo_p99`. Doubling
+/// climb from `start_qps`, then geometric binary refinement to ~10%.
+/// This is the engine behind `goldschmidt loadgen --sweep`.
+pub fn sweep_max_qps<A>(
+    addr: A,
+    template: &ScenarioSpec,
+    start_qps: f64,
+    slo_p99: Duration,
+) -> Result<SweepReport>
+where
+    A: ToSocketAddrs + Clone + Send + 'static,
+{
+    sweep_core(start_qps, slo_p99.as_nanos() as u64, |qps| {
+        let report = run_scenario(addr.clone(), &template.with_total_rate(qps))?;
+        Ok((report.qps(), report.p99_ns(), report.all_ok()))
+    })
 }
 
 /// One connection's life: dial, pace its frame share open-loop, drain
@@ -596,6 +711,68 @@ mod tests {
         let unary = ScenarioSpec { divide_frac: 0.0, ..spec };
         let f = sample_frame(&unary, &mut rng);
         assert!(f.b.is_empty());
+    }
+
+    #[test]
+    fn with_total_rate_repaces_every_arrival_shape() {
+        let base = ScenarioSpec { connections: 4, ..Default::default() };
+        match base.with_total_rate(8_000.0).arrivals {
+            ArrivalProcess::Poisson { rate } => assert!((rate - 2_000.0).abs() < 1e-9),
+            other => panic!("expected Poisson, got {other:?}"),
+        }
+        let bursty = ScenarioSpec {
+            connections: 2,
+            arrivals: ArrivalProcess::Bursty { burst_rate: 1.0, on_s: 0.020, off_s: 0.060 },
+            ..Default::default()
+        };
+        match bursty.with_total_rate(1_000.0).arrivals {
+            ArrivalProcess::Bursty { burst_rate, on_s, off_s } => {
+                // duty cycle preserved, peak re-derived from the new mean
+                assert!((burst_rate - 2_000.0).abs() < 1e-9);
+                assert!((on_s - 0.020).abs() < 1e-12);
+                assert!((off_s - 0.060).abs() < 1e-12);
+            }
+            other => panic!("expected Bursty, got {other:?}"),
+        }
+        // closed-loop becomes open-loop Poisson so a sweep can pace it
+        let closed = ScenarioSpec { arrivals: ArrivalProcess::Closed, ..Default::default() };
+        assert!(matches!(
+            closed.with_total_rate(100.0).arrivals,
+            ArrivalProcess::Poisson { .. }
+        ));
+    }
+
+    #[test]
+    fn sweep_core_finds_the_capacity_knee() {
+        // synthetic server: sustains anything at or below 10_000 qps
+        let capacity = 10_000.0;
+        let report = sweep_core(1_000.0, 5_000_000, |qps| {
+            let ok = qps <= capacity;
+            Ok((qps.min(capacity), if ok { 1_000_000 } else { 50_000_000 }, ok))
+        })
+        .unwrap();
+        // climbs 1k,2k,4k,8k,16k then refines between 8k and 16k
+        assert!(report.probes.len() >= 5, "only {} probes", report.probes.len());
+        assert!(
+            report.max_sustained_qps >= 8_000.0 && report.max_sustained_qps <= capacity,
+            "knee {} outside (8000, {capacity}]",
+            report.max_sustained_qps
+        );
+        // the refinement converged to within ~10% of the true knee
+        assert!(report.max_sustained_qps >= capacity / 1.2);
+        // every recorded probe carries a coherent verdict
+        for p in &report.probes {
+            assert_eq!(p.sustained, p.all_ok && p.p99_ns <= 5_000_000);
+        }
+    }
+
+    #[test]
+    fn sweep_core_reports_zero_when_even_the_floor_fails() {
+        let report =
+            sweep_core(1_000.0, 1_000, |_| Ok((0.0, 1_000_000, false))).unwrap();
+        assert_eq!(report.max_sustained_qps, 0.0);
+        assert!(!report.probes.is_empty());
+        assert!(report.probes.iter().all(|p| !p.sustained));
     }
 
     #[test]

@@ -495,6 +495,56 @@ fn conn_drop_never_loses_or_duplicates_durable_jobs() {
     let _ = fs::remove_file(&path);
 }
 
+/// The coordinator's ring fault sites compose: `ring-stall` parks
+/// shard 0's dispatcher for long windows while `ring-full` forces
+/// backpressure on its submit path. The contract under that squeeze:
+/// exactly the planned number of submits shed as **typed
+/// `Overloaded`** (never a hang, never a dropped ticket), every
+/// accepted rider completes with the right bits, and shutdown stays
+/// clean with the stall windows still scheduled.
+#[test]
+fn stalled_shard_sheds_typed_overloaded_and_strands_no_rider() {
+    use goldschmidt::coordinator::ServiceError;
+
+    // after=5,count=10: submits 6..=15 on shard 0 are forced to shed;
+    // the 5ms stall windows keep the shard's dispatcher parked so the
+    // shedding happens while the consumer side is genuinely slow
+    let spec = "ring-stall@shard0:us=5000,count=200;ring-full@shard0:after=5,count=10";
+    let plan = FaultPlan::parse(spec, 0x51A11).unwrap();
+    let mut cfg = config(Some(plan), None, 1);
+    cfg.shards = 2;
+    let svc = FpuService::start(cfg, native).unwrap();
+
+    // pin every submit to shard 0: clone handles until one routes
+    // (divide, f32) there (each clone draws a fresh shard key)
+    let handle = (0..10_000)
+        .map(|_| svc.handle())
+        .find(|h| h.shard_for(OpKind::Divide, FormatKind::F32) == 0)
+        .expect("a handle clone routing (divide, f32) to shard 0");
+
+    let total = 60u32;
+    let mut tickets = Vec::new();
+    let mut overloaded = 0u32;
+    for i in 0..total {
+        let a = Value::from_f64(FormatKind::F32, f64::from(i + 2));
+        let b = Value::from_f64(FormatKind::F32, 2.0);
+        match handle.submit_value(OpKind::Divide, a, b) {
+            Ok(t) => tickets.push((i, t)),
+            Err(ServiceError::Overloaded) => overloaded += 1,
+            Err(e) => panic!("submit {i}: expected Overloaded or Ok, got {e}"),
+        }
+    }
+    assert_eq!(overloaded, 10, "exactly the planned ring-full window sheds");
+    assert_eq!(tickets.len() as u32, total - overloaded);
+    for (i, t) in tickets {
+        let got = t.wait().expect("accepted rider must complete").value.f32();
+        assert_eq!(got, (i + 2) as f32 / 2.0, "request {i}");
+    }
+    assert_eq!(svc.metrics().snapshot().total_errors(), 0, "sheds are typed, not errors");
+    // teardown must not deadlock against the remaining stall shots
+    svc.shutdown();
+}
+
 /// Overflowing the lock-free rings sheds *sampled lifecycle* events
 /// only: every error-class event survives, bit-for-bit, no matter how
 /// far past capacity the stream runs.

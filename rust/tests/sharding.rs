@@ -1,0 +1,209 @@
+//! SHARDED-COORDINATOR SUITE: the invariants the shard refactor must
+//! hold.
+//!
+//! - **Bit identity**: a multi-shard service returns exactly the bits a
+//!   single-shard service returns for the same workload, across every
+//!   (op, format) pair — sharding only changes *where* a request
+//!   queues, never what it computes.
+//! - **No lost or duplicated tickets**: 16 submitter threads hammering
+//!   cloned handles resolve every ticket exactly once with the right
+//!   result, and the merged metrics account for every request.
+//! - **Work stealing**: a shard whose dispatcher is stalled (the
+//!   `ring-stall` fault site) has its ready batches retired by a peer —
+//!   whole batches only, so order and identity still hold — and every
+//!   rider completes.
+//! - **Handle spreading**: cloned handles draw fresh shard keys, so a
+//!   multi-connection workload actually lands on more than one shard.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use goldschmidt::coordinator::{
+    BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, ServiceHandle, Value,
+};
+use goldschmidt::fault::FaultPlan;
+use goldschmidt::runtime::{Executor, NativeExecutor};
+
+fn native() -> anyhow::Result<Box<dyn Executor>> {
+    Ok(Box::new(NativeExecutor::with_defaults()))
+}
+
+fn config(shards: usize) -> ServiceConfig {
+    ServiceConfig {
+        batcher: BatcherConfig::new(64, Duration::from_micros(100)),
+        queue_depth: 8192,
+        workers: 1,
+        poll: Duration::from_micros(50),
+        shards,
+        ..ServiceConfig::default()
+    }
+}
+
+/// A deterministic workload covering all 4 formats x 3 ops; returns
+/// each rider's result bits in submission order.
+fn run_all_slots(svc: &FpuService, per_slot: u32) -> Vec<u64> {
+    let handle = svc.handle();
+    let mut tickets = Vec::new();
+    for op in [OpKind::Divide, OpKind::Sqrt, OpKind::Rsqrt] {
+        for format in FormatKind::ALL {
+            for i in 0..per_slot {
+                // positive operands keep the sqrt family in domain
+                let a = Value::from_f64(format, 1.0 + f64::from(i % 89) * 0.5);
+                let b = Value::from_f64(format, 1.0 + f64::from(i % 11) * 0.25);
+                tickets.push(handle.submit_value(op, a, b).expect("submit"));
+            }
+        }
+    }
+    tickets.into_iter().map(|t| t.wait().expect("response").value.bits()).collect()
+}
+
+/// Clone handles until one routes (op, format) to the wanted shard;
+/// each clone draws a fresh shard key, so with s shards this takes an
+/// expected s tries.
+fn handle_on_shard(
+    svc: &FpuService,
+    op: OpKind,
+    format: FormatKind,
+    shard: usize,
+) -> ServiceHandle {
+    for _ in 0..10_000 {
+        let h = svc.handle();
+        if h.shard_for(op, format) == shard {
+            return h;
+        }
+    }
+    panic!("no handle clone landed (divide, f32) on shard {shard}");
+}
+
+#[test]
+fn multi_shard_results_are_bit_identical_to_single_shard() {
+    let single = FpuService::start(config(1), native).unwrap();
+    assert_eq!(single.shard_count(), 1);
+    let want = run_all_slots(&single, 64);
+    single.shutdown();
+
+    let sharded = FpuService::start(config(4), native).unwrap();
+    assert_eq!(sharded.shard_count(), 4);
+    let got = run_all_slots(&sharded, 64);
+    assert_eq!(got, want, "sharding must not change a single result bit");
+    assert_eq!(sharded.metrics().snapshot().total_errors(), 0);
+    sharded.shutdown();
+}
+
+#[test]
+fn shards_auto_size_to_the_cpu_count() {
+    let svc = FpuService::start(config(0), native).unwrap();
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    assert_eq!(svc.shard_count(), cpus);
+    // and the auto-sized service still serves
+    let t = svc.handle().submit(OpKind::Divide, 10.0f32, 4.0f32).unwrap();
+    assert_eq!(t.wait().unwrap().value.f32(), 2.5);
+    svc.shutdown();
+}
+
+/// 16 threads x 1000 requests through cloned handles: every ticket
+/// resolves exactly once with the right quotient, and the merged
+/// per-shard metrics account for every request — nothing lost,
+/// nothing double-counted.
+#[test]
+fn sixteen_submitters_lose_and_duplicate_nothing() {
+    const THREADS: u32 = 16;
+    const PER_THREAD: u32 = 1000;
+    let svc = Arc::new(FpuService::start(config(4), native).unwrap());
+
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let svc = Arc::clone(&svc);
+        joins.push(std::thread::spawn(move || {
+            let handle = svc.handle();
+            let mut tickets = Vec::with_capacity(PER_THREAD as usize);
+            for i in 0..PER_THREAD {
+                // operands encode (thread, index) so a cross-wired
+                // completion would return the wrong quotient
+                let a = Value::from_f64(FormatKind::F32, f64::from(t * PER_THREAD + i));
+                let b = Value::from_f64(FormatKind::F32, 1.0);
+                tickets.push((i, handle.submit_value(OpKind::Divide, a, b).expect("submit")));
+            }
+            let mut ok = 0u32;
+            for (i, ticket) in tickets {
+                let got = ticket.wait().expect("response").value.f32();
+                assert_eq!(got, (t * PER_THREAD + i) as f32, "thread {t} request {i}");
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: u32 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, THREADS * PER_THREAD, "every ticket resolves exactly once");
+
+    let snap = svc.metrics().snapshot();
+    assert_eq!(
+        snap.total_requests(),
+        u64::from(THREADS * PER_THREAD),
+        "merged shard metrics account for every request"
+    );
+    assert_eq!(snap.total_errors(), 0);
+    Arc::try_unwrap(svc).ok().expect("all submitters joined").shutdown();
+}
+
+/// Cloned handles draw fresh shard keys: across 64 clones, (divide,
+/// f32) lands on more than one of 4 shards.
+#[test]
+fn handle_clones_spread_across_shards() {
+    let svc = FpuService::start(config(4), native).unwrap();
+    let mut seen = [false; 4];
+    for _ in 0..64 {
+        seen[svc.handle().shard_for(OpKind::Divide, FormatKind::F32)] = true;
+    }
+    assert!(
+        seen.iter().filter(|&&s| s).count() > 1,
+        "64 handle clones all routed (divide, f32) to one shard: {seen:?}"
+    );
+    // a single handle is sticky: same (op, format) -> same shard
+    let h = svc.handle();
+    let first = h.shard_for(OpKind::Sqrt, FormatKind::F16);
+    for _ in 0..10 {
+        assert_eq!(h.shard_for(OpKind::Sqrt, FormatKind::F16), first);
+    }
+    svc.shutdown();
+}
+
+/// A stalled shard's batches retire through a peer: `ring-stall` on
+/// shard 0 parks its dispatcher for 20ms windows between batch
+/// formation and the ready-queue drain, leaving formed batches
+/// stealable; shard 1, idle, must take at least one whole batch. Every
+/// rider still completes with the right bits.
+#[test]
+fn stalled_shard_batches_retire_via_peer_steal() {
+    // a long stall window, many shots: shard 0's dispatcher sleeps
+    // with batches parked in its ready queue well past the 1ms steal
+    // age, while shard 1 gets no traffic at all
+    let plan = FaultPlan::parse("ring-stall@shard0:us=20000,count=500", 7).unwrap();
+    let mut cfg = config(2);
+    cfg.batcher = BatcherConfig::new(8, Duration::from_micros(100));
+    cfg.fault = Some(Arc::new(plan));
+    let svc = FpuService::start(cfg, native).unwrap();
+    let handle = handle_on_shard(&svc, OpKind::Divide, FormatKind::F32, 0);
+
+    // several waves so batches keep forming across stall windows
+    let mut tickets = Vec::new();
+    for wave in 0..10u32 {
+        for i in 0..20u32 {
+            let a = Value::from_f64(FormatKind::F32, f64::from(wave * 20 + i + 2));
+            let b = Value::from_f64(FormatKind::F32, 2.0);
+            tickets.push((wave * 20 + i, handle.submit_value(OpKind::Divide, a, b).unwrap()));
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for (i, t) in tickets {
+        let got = t.wait().expect("stalled shard must not strand a rider").value.f32();
+        assert_eq!(got, (i + 2) as f32 / 2.0, "request {i}");
+    }
+    assert!(
+        svc.steal_count() >= 1,
+        "an idle peer must steal from the stalled shard (steals = {})",
+        svc.steal_count()
+    );
+    assert_eq!(svc.metrics().snapshot().total_errors(), 0);
+    svc.shutdown();
+}
