@@ -22,7 +22,7 @@ use goldschmidt::dispatch::{ExecutorRegistry, RoutePolicy};
 use goldschmidt::formats::{self, FloatFormat, Value};
 use goldschmidt::goldschmidt::{divide_f32, Config};
 use goldschmidt::kernel::{BatchScratch, GoldschmidtContext};
-use goldschmidt::obs::TraceConfig;
+use goldschmidt::obs::{DrainConfig, TraceConfig, TraceDrainer};
 use goldschmidt::runtime::{Executor, NativeExecutor, ScalarReferenceExecutor, U128BaselineExecutor};
 use goldschmidt::tables::ReciprocalTable;
 use goldschmidt::util::json::Json;
@@ -786,11 +786,14 @@ fn main() {
     t.print();
     report.push(("routed_vs_direct", Json::arr(routed_rows)));
 
-    // ---- trace-plane overhead: off vs sampled vs all-on ------------------
+    // ---- trace-plane overhead: off vs sampled vs streamed vs all-on ------
     // same routed f32 divide volume with the obs trace plane disarmed,
-    // at the shipping 1-in-64 sample, and tracing every request. The
-    // acceptance bar is <5% overhead at 1-in-64 (CI asserts the
-    // machine-readable overhead_vs_off with quick-mode headroom).
+    // at the shipping 1-in-64 sample, at 1-in-64 with the streaming
+    // drainer appending segments to disk during the run, and tracing
+    // every request. The acceptance bar is <5% overhead at 1-in-64 (CI
+    // asserts the machine-readable overhead_vs_off with quick-mode
+    // headroom); the drained bar shows what `serve --trace-out` costs
+    // in steady state.
     let mut t = Table::new(
         "trace overhead (routed f32 divide per-request, workers=2)",
         &["mode", "req/s", "mean lat", "p99 lat", "overhead"],
@@ -798,12 +801,38 @@ fn main() {
     .aligns(&[Align::Right; 5]);
     let mut trace_rows = Vec::new();
     let mut off_rps = 0.0f64;
-    for &(mode, sample) in &[("off", 0u64), ("sampled_64", 64), ("all_on", 1)] {
+    for &(mode, sample, drained) in &[
+        ("off", 0u64, false),
+        ("sampled_64", 64, false),
+        ("sampled_64_drained", 64, true),
+        ("all_on", 1, false),
+    ] {
         let mut cfg = service_config(1024, 200, 2);
         if sample > 0 {
             cfg.trace = Some(TraceConfig { sample, ..TraceConfig::default() });
         }
-        let r = drive_per_request_divide(routed_service(cfg, RoutePolicy::Static));
+        let svc = routed_service(cfg, RoutePolicy::Static);
+        let drainer = drained.then(|| {
+            let path = std::env::temp_dir()
+                .join(format!("goldschmidt-bench-trace-{}.jsonl", std::process::id()));
+            TraceDrainer::start(
+                svc.trace().expect("trace armed for the drained bar"),
+                DrainConfig {
+                    path,
+                    interval: Duration::from_millis(20),
+                    ..DrainConfig::default()
+                },
+            )
+            .expect("start trace drainer")
+        });
+        let r = drive_per_request_divide(svc);
+        if let Some(d) = drainer {
+            let rep = d.finish().expect("merge trace segments");
+            let _ = std::fs::remove_file(&rep.path);
+            for i in 0..rep.segments {
+                let _ = std::fs::remove_file(goldschmidt::obs::segment_path(&rep.path, i));
+            }
+        }
         if mode == "off" {
             off_rps = r.reqs_per_s;
         }
@@ -819,6 +848,7 @@ fn main() {
         if let Json::Obj(map) = &mut row {
             map.insert("mode".into(), Json::from(mode));
             map.insert("sample".into(), Json::from(sample));
+            map.insert("drained".into(), Json::from(drained));
             map.insert("overhead_vs_off".into(), Json::from(overhead));
         }
         trace_rows.push(row);

@@ -26,12 +26,18 @@
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fault::{FaultPlan, FaultSite};
 use crate::formats::FormatKind;
 
 use super::request::OpKind;
+
+/// Backend-filter name the journal's fault sites match against (a
+/// journal has no backend; see `crate::fault` for the site table).
+const FAULT_BACKEND: &str = "journal";
 
 const MAGIC: [u8; 4] = *b"GSJL";
 const VERSION: u32 = 1;
@@ -226,6 +232,9 @@ fn decode_payload(payload: &[u8]) -> Result<JournalRecord> {
 #[derive(Debug)]
 pub struct Journal {
     file: File,
+    /// Armed fault schedule; `append-fail` / `fsync-stall` sites are
+    /// consulted per append with the `"journal"` backend filter.
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl Journal {
@@ -246,7 +255,7 @@ impl Journal {
             file.write_all(&MAGIC)?;
             file.write_all(&VERSION.to_le_bytes())?;
             file.flush()?;
-            return Ok((Journal { file }, Vec::new()));
+            return Ok((Journal { file, fault: None }, Vec::new()));
         }
         file.seek(SeekFrom::Start(0))?;
         let mut bytes = Vec::with_capacity(end as usize);
@@ -286,13 +295,27 @@ impl Journal {
             file.set_len(good_end as u64)?;
         }
         file.seek(SeekFrom::Start(good_end as u64))?;
-        Ok((Journal { file }, records))
+        Ok((Journal { file, fault: None }, records))
+    }
+
+    /// Arm a fault schedule: subsequent appends consult the
+    /// `append-fail` and `fsync-stall` sites (backend `"journal"`).
+    pub fn set_fault(&mut self, plan: Arc<FaultPlan>) {
+        self.fault = Some(plan);
     }
 
     /// Append one record (length + CRC + payload, flushed). The write
     /// is a single `write_all`, so a crash leaves at most one torn
-    /// tail record for the next open to truncate.
+    /// tail record for the next open to truncate. An injected
+    /// `append-fail` errors *before* anything reaches the file, so the
+    /// caller sees a typed failure for a record the journal does not
+    /// hold — exactly the shape a full disk or yanked volume produces.
     pub fn append(&mut self, rec: &JournalRecord) -> Result<()> {
+        if let Some(plan) = &self.fault {
+            if plan.check(FaultSite::JournalAppendFail, FAULT_BACKEND).is_some() {
+                bail!("injected fault: journal append failed (site append-fail)");
+            }
+        }
         let payload = encode_payload(rec);
         if payload.len() as u64 > MAX_RECORD as u64 {
             bail!("journal record too large ({} bytes)", payload.len());
@@ -302,6 +325,11 @@ impl Journal {
         frame.extend_from_slice(&crc32(&payload).to_le_bytes());
         frame.extend_from_slice(&payload);
         self.file.write_all(&frame)?;
+        if let Some(plan) = &self.fault {
+            if let Some(shot) = plan.check(FaultSite::JournalFsyncStall, FAULT_BACKEND) {
+                std::thread::sleep(std::time::Duration::from_micros(shot.micros));
+            }
+        }
         self.file.flush()?;
         Ok(())
     }
@@ -442,6 +470,52 @@ mod tests {
         let (_, recs) = Journal::open(&path).unwrap();
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].id, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn injected_append_fail_is_typed_and_writes_nothing() {
+        let path = tmp("appendfail");
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.set_fault(Arc::new(
+                FaultPlan::parse("append-fail@journal:after=1,count=1", 5).unwrap(),
+            ));
+            j.append(&sample(1, JobStatus::Pending)).unwrap();
+            let len_before = std::fs::metadata(&path).unwrap().len();
+            let err = j.append(&sample(2, JobStatus::Pending)).unwrap_err();
+            assert!(err.to_string().contains("append-fail"), "{err:#}");
+            assert_eq!(
+                std::fs::metadata(&path).unwrap().len(),
+                len_before,
+                "a failed append must leave the file untouched"
+            );
+            // the window is spent: the next append lands normally
+            j.append(&sample(3, JobStatus::Pending)).unwrap();
+        }
+        let (_, recs) = Journal::open(&path).unwrap();
+        assert_eq!(recs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn injected_fsync_stall_delays_but_lands_the_record() {
+        let path = tmp("fsyncstall");
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.set_fault(Arc::new(
+                FaultPlan::parse("fsync-stall@journal:us=20000,count=1", 5).unwrap(),
+            ));
+            let t0 = std::time::Instant::now();
+            j.append(&sample(1, JobStatus::Pending)).unwrap();
+            assert!(
+                t0.elapsed() >= std::time::Duration::from_millis(15),
+                "stall not observed: {:?}",
+                t0.elapsed()
+            );
+        }
+        let (_, recs) = Journal::open(&path).unwrap();
+        assert_eq!(recs.len(), 1, "a stalled flush still lands the record");
         std::fs::remove_file(&path).unwrap();
     }
 

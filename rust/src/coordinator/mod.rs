@@ -156,5 +156,7 @@ pub use journal::{coalesce, JobStatus, Journal, JournalRecord};
 pub use metrics::{Metrics, MetricsSnapshot, OpFormatSnapshot, OpSnapshot};
 pub use request::{FormatKind, OpKind, Response, ServiceError, Value, WorkItem};
 pub use router::Router;
-pub use service::{FpuService, JobPoll, ServiceConfig, ServiceHandle, ServiceMetrics};
+pub use service::{
+    FpuService, JobPoll, NetPlaneStats, ServiceConfig, ServiceHandle, ServiceMetrics, ShardStat,
+};
 pub use ticket::{BatchResponse, BatchTicket, Ticket};

@@ -139,6 +139,16 @@ impl<T> SubmitRing<T> {
         }
     }
 
+    /// Approximate occupancy: enqueue cursor minus dequeue cursor,
+    /// clamped to `[0, capacity]`. Racy by nature — an introspection
+    /// gauge (per-shard ring depth in the stats surface), never a
+    /// synchronization primitive.
+    pub fn len(&self) -> usize {
+        let e = self.enqueue_pos.load(Ordering::Relaxed);
+        let d = self.dequeue_pos.load(Ordering::Relaxed);
+        (e.wrapping_sub(d) as isize).clamp(0, self.slots.len() as isize) as usize
+    }
+
     /// Racy emptiness probe used by the consumer's parking double-check.
     /// Exact under quiescence, conservative under concurrency; the park
     /// timeout bounds the cost of any stale answer.
@@ -229,15 +239,18 @@ mod tests {
     #[test]
     fn fifo_order_single_thread() {
         let ring = SubmitRing::with_capacity(128);
+        assert_eq!(ring.len(), 0);
         for i in 0..100u64 {
             ring.try_push(i).unwrap();
         }
         assert!(!ring.is_empty());
+        assert_eq!(ring.len(), 100, "occupancy gauge exact under quiescence");
         for i in 0..100u64 {
             assert_eq!(ring.pop(), Some(i));
         }
         assert_eq!(ring.pop(), None);
         assert!(ring.is_empty());
+        assert_eq!(ring.len(), 0);
     }
 
     #[test]

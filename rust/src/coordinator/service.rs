@@ -188,6 +188,15 @@ struct ShardShared {
     ready: Mutex<VecDeque<Batch>>,
     /// Batches peers stole from this shard's ready queue.
     steals: AtomicU64,
+    /// Batches this shard's dispatcher stole from peers' ready queues
+    /// (the thief-side count; [`ShardShared::steals`] is the victim
+    /// side).
+    steals_in: AtomicU64,
+    /// Submissions bounced with [`ServiceError::Overloaded`] because
+    /// this shard's ring was full (the `try_submit` family) or the
+    /// `ring-full` chaos site fired. The blocking submit path
+    /// backpressures instead of rejecting, so it never counts here.
+    ring_full_rejects: AtomicU64,
     /// Fault-site filter name (`"shard0"`, `"shard1"`, ...) for the
     /// `ring-stall` / `ring-full` chaos sites.
     name: String,
@@ -256,7 +265,8 @@ impl ServiceHandle {
                 t.emit(
                     TraceEvent::new(TraceKind::Submit, t.now_ns())
                         .req(item.id, item.op, item.format())
-                        .with_lanes(item.lanes()),
+                        .with_lanes(item.lanes())
+                        .on_shard(self.shard_for(item.op, item.format())),
                 );
             }
         }
@@ -366,6 +376,7 @@ impl ServiceHandle {
             return Err(ServiceError::Shutdown);
         }
         if self.ring_full_injected(shard) {
+            shard.ring_full_rejects.fetch_add(1, Ordering::Relaxed);
             return Err(ServiceError::Overloaded);
         }
         // feed the admission model's queue-depth gauge BEFORE the
@@ -483,6 +494,7 @@ impl ServiceHandle {
             return Err(ServiceError::Shutdown);
         }
         if self.ring_full_injected(shard) {
+            shard.ring_full_rejects.fetch_add(1, Ordering::Relaxed);
             return Err(ServiceError::Overloaded);
         }
         // gauge before publish, as in `send` (the undo on failure is
@@ -496,6 +508,7 @@ impl ServiceHandle {
             }
             Err(_) => {
                 shard.metrics.record_dequeued(op, format, 1);
+                shard.ring_full_rejects.fetch_add(1, Ordering::Relaxed);
                 Err(ServiceError::Overloaded)
             }
         }
@@ -792,6 +805,77 @@ impl ServiceMetrics {
     }
 }
 
+/// One shard's live introspection row ([`FpuService::shard_stats`]):
+/// the submit-ring occupancy, the ready-queue backlog and its age, the
+/// work-stealing traffic in both directions, and typed ring-full
+/// rejections. Gauges (`ring_depth`, `ready_batches`,
+/// `oldest_ready_us`, `queued_lanes`) are racy point-in-time reads;
+/// the counters are monotonic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStat {
+    /// Messages sitting in the shard's submit ring right now.
+    pub ring_depth: usize,
+    /// The ring's slot count (the backpressure bound).
+    pub ring_capacity: usize,
+    /// Lanes queued on this shard across every (op, format) slot.
+    pub queued_lanes: u64,
+    /// Formed, backend-selected batches awaiting dispatch.
+    pub ready_batches: usize,
+    /// Age of the oldest ready batch, microseconds (0 when none) — the
+    /// signal peer dispatchers steal by.
+    pub oldest_ready_us: u64,
+    /// Batches this shard's dispatcher stole from peers.
+    pub steals_in: u64,
+    /// Batches peers stole from this shard's ready queue.
+    pub steals_out: u64,
+    /// Submissions bounced typed because this shard's ring was full.
+    pub ring_full_rejects: u64,
+}
+
+/// Read one shard's introspection row (shared by
+/// [`FpuService::shard_stats`] and the stats emitter).
+fn shard_stat_of(shard: &ShardShared) -> ShardStat {
+    let queued_lanes = OpKind::ALL
+        .iter()
+        .flat_map(|&op| FormatKind::ALL.iter().map(move |&format| (op, format)))
+        .map(|(op, format)| shard.metrics.queued_lanes(op, format))
+        .sum();
+    let (ready_batches, oldest_ready_us) = {
+        let q = shard.ready.lock().unwrap();
+        let age = q
+            .front()
+            .map(|b| b.formed_at.elapsed().as_micros().min(u64::MAX as u128) as u64)
+            .unwrap_or(0);
+        (q.len(), age)
+    };
+    ShardStat {
+        ring_depth: shard.ring.len(),
+        ring_capacity: shard.ring.capacity(),
+        queued_lanes,
+        ready_batches,
+        oldest_ready_us,
+        steals_in: shard.steals_in.load(Ordering::Relaxed),
+        steals_out: shard.steals.load(Ordering::Relaxed),
+        ring_full_rejects: shard.ring_full_rejects.load(Ordering::Relaxed),
+    }
+}
+
+/// Net-plane figures a front end feeds the stats emitter (the
+/// coordinator cannot depend on the net module, so the wire server
+/// attaches a closure producing these; see
+/// [`FpuService::attach_net_stats_source`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetPlaneStats {
+    /// Connections currently open.
+    pub active_connections: u64,
+    /// Cumulative slow-client disconnects (bounded writer queue full).
+    pub slow_client_drops: u64,
+}
+
+/// Pluggable producer of [`NetPlaneStats`] — attached after start
+/// because the front end is built *around* a running service.
+type NetStatsSource = Arc<dyn Fn() -> NetPlaneStats + Send + Sync>;
+
 /// The running service.
 pub struct FpuService {
     handle: ServiceHandle,
@@ -811,6 +895,12 @@ pub struct FpuService {
     trace: Option<Arc<TracePlane>>,
     stats_stop: Arc<AtomicBool>,
     stats_emitter: Option<JoinHandle<()>>,
+    /// When [`Self::start_routed`] returned — the uptime epoch the
+    /// STATS wire frame timestamps rates against.
+    started: Instant,
+    /// Net-plane stats producer, attached by the wire front end after
+    /// start (shared with the stats emitter).
+    net_source: Arc<Mutex<Option<NetStatsSource>>>,
 }
 
 /// A batch a worker could not execute, handed back to the dispatcher
@@ -1042,11 +1132,15 @@ fn supervisor_loop(
 
 /// The `fpu-stats-emitter` thread: one `stats:` line per interval,
 /// reporting **deltas** where counters are cumulative (qps, respawns,
-/// trace drops — the `+N` fields) and **levels** elsewhere (queued
-/// lanes, per-slot latency percentiles, breaker/degraded states).
-/// Reads through [`ServiceMetrics`], so every line aggregates all
-/// shards' slices (counters summed, histograms merged exactly).
-/// Sleeps in short slices so shutdown never waits out a full interval.
+/// trace drops, net slow-client drops — the `+N` fields) and **levels**
+/// elsewhere (queued lanes, per-slot latency percentiles,
+/// breaker/degraded states, per-shard ring depth and steal counts, net
+/// active connections). Reads through [`ServiceMetrics`], so every
+/// line aggregates all shards' slices (counters summed, histograms
+/// merged exactly); the per-shard `sN=` fields then break the same
+/// tick down by shard. Sleeps in short slices so shutdown never waits
+/// out a full interval.
+#[allow(clippy::too_many_arguments)]
 fn stats_emitter_loop(
     interval: Duration,
     stop: Arc<AtomicBool>,
@@ -1054,10 +1148,13 @@ fn stats_emitter_loop(
     health: Arc<HealthBoard>,
     names: Vec<&'static str>,
     trace: Option<Arc<TracePlane>>,
+    shards: Arc<Vec<Arc<ShardShared>>>,
+    net_source: Arc<Mutex<Option<NetStatsSource>>>,
 ) {
     let mut last_requests = 0u64;
     let mut last_respawns = 0u64;
     let mut last_drops = 0u64;
+    let mut last_net_drops = 0u64;
     let mut last = Instant::now();
     loop {
         while last.elapsed() < interval {
@@ -1102,11 +1199,48 @@ fn stats_emitter_loop(
             .collect();
         let breakers = if open.is_empty() { "all-closed".to_string() } else { open.join(",") };
         let drops = trace.as_ref().map(|t| t.drops()).unwrap_or(0);
+        // per-shard rows: ring depth / queued lanes / ready backlog /
+        // steals in:out / ring-full rejects, one compact field per shard
+        let shard_rows: Vec<String> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let st = shard_stat_of(s);
+                format!(
+                    "s{i}=d{}:q{}:r{}:st{}:{}:rf{}",
+                    st.ring_depth,
+                    st.queued_lanes,
+                    st.ready_batches,
+                    st.steals_in,
+                    st.steals_out,
+                    st.ring_full_rejects,
+                )
+            })
+            .collect();
+        // the net plane reports through its attached source; before a
+        // front end attaches (or without one) the fields are absent
+        let net_part = {
+            let source = net_source.lock().unwrap().clone();
+            match source {
+                Some(f) => {
+                    let n = f();
+                    let part = format!(
+                        " net-conns={} net-drops=+{}",
+                        n.active_connections,
+                        n.slow_client_drops - last_net_drops.min(n.slow_client_drops),
+                    );
+                    last_net_drops = n.slow_client_drops;
+                    part
+                }
+                None => String::new(),
+            }
+        };
         println!(
             "stats: qps={qps:.0} queued={queued} breakers={breakers} respawns=+{} \
-             trace-drops=+{} {}",
+             trace-drops=+{}{net_part} {} {}",
             respawns - last_respawns,
             drops - last_drops,
+            shard_rows.join(" "),
             slots.join(" "),
         );
         last_respawns = respawns;
@@ -1221,6 +1355,8 @@ impl FpuService {
                 metrics,
                 ready: Mutex::new(VecDeque::new()),
                 steals: AtomicU64::new(0),
+                steals_in: AtomicU64::new(0),
+                ring_full_rejects: AtomicU64::new(0),
                 name: format!("shard{s}"),
             }));
         }
@@ -1383,15 +1519,22 @@ impl FpuService {
 
         // the live stats emitter: one snapshot-delta line per interval
         let stats_stop = Arc::new(AtomicBool::new(false));
+        let net_source: Arc<Mutex<Option<NetStatsSource>>> = Arc::new(Mutex::new(None));
         let stats_emitter = config.stats_interval.map(|interval| {
             let stop = stats_stop.clone();
             let metrics = metrics.clone();
             let health = health.clone();
             let names = names.clone();
             let trace = trace.clone();
+            let shards = shards.clone();
+            let net_source = net_source.clone();
             std::thread::Builder::new()
                 .name("fpu-stats-emitter".into())
-                .spawn(move || stats_emitter_loop(interval, stop, metrics, health, names, trace))
+                .spawn(move || {
+                    stats_emitter_loop(
+                        interval, stop, metrics, health, names, trace, shards, net_source,
+                    )
+                })
                 .expect("spawn stats emitter")
         });
 
@@ -1402,8 +1545,14 @@ impl FpuService {
         let mut retirer_tx = None;
         let mut replayed = 0usize;
         if let Some(path) = &config.journal {
-            let (journal, records) = Journal::open(path)
+            let (mut journal, records) = Journal::open(path)
                 .with_context(|| format!("opening request journal {}", path.display()))?;
+            // arm the journal-io fault sites (append-fail, fsync-stall)
+            // only after open+replay read the file: injection targets
+            // live appends, not recovery
+            if let Some(plan) = &config.fault {
+                journal.set_fault(plan.clone());
+            }
             let state = Arc::new(DurableState {
                 journal: Mutex::new(journal),
                 jobs: Mutex::new(HashMap::new()),
@@ -1476,6 +1625,8 @@ impl FpuService {
             trace,
             stats_stop,
             stats_emitter,
+            started: Instant::now(),
+            net_source,
         })
     }
 
@@ -1500,6 +1651,32 @@ impl FpuService {
     /// steady state.
     pub fn steal_count(&self) -> u64 {
         self.shards.iter().map(|s| s.steals.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-shard introspection rows, shard order: ring occupancy,
+    /// queued lanes, ready-queue backlog and age, steal traffic both
+    /// ways, and ring-full rejects. This is what the `STATS` wire frame
+    /// and the Prometheus surface render per shard.
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        self.shards.iter().map(|s| shard_stat_of(s)).collect()
+    }
+
+    /// Nanoseconds since [`Self::start_routed`] returned — the
+    /// monotonic clock STATS clients difference qps against.
+    pub fn uptime_ns(&self) -> u64 {
+        self.started.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// Attach (or replace) the net-plane stats producer the stats
+    /// emitter folds into its line (`net-conns=`, `net-drops=+`). The
+    /// wire front end calls this once its listener is up; an
+    /// in-process-only service never attaches one and the fields stay
+    /// absent.
+    pub fn attach_net_stats_source<F>(&self, source: F)
+    where
+        F: Fn() -> NetPlaneStats + Send + Sync + 'static,
+    {
+        *self.net_source.lock().unwrap() = Some(Arc::new(source));
     }
 
     /// The negotiated capability table (for a routed service: the
@@ -2094,6 +2271,7 @@ fn steal_one(rt: &mut ShardRuntime) -> bool {
         };
         if let Some(batch) = batch {
             peer.steals.fetch_add(1, Ordering::Relaxed);
+            rt.shards[rt.index].steals_in.fetch_add(1, Ordering::Relaxed);
             dispatch_one(batch, rt);
             return true;
         }
@@ -2270,6 +2448,7 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                         TraceEvent::new(TraceKind::WorkerDeath, t.now_ns())
                             .req(batch.items.first().map_or(0, |i| i.id), batch.op, batch.format)
                             .on_backend(ctx.backend)
+                            .on_shard(ctx.shard)
                             .with_lanes(batch.live()),
                     );
                 }
@@ -2362,10 +2541,16 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                                 batch.failover_ns.min(total.saturating_sub(exec + queue));
                             let residual = total - queue - exec - failover;
                             let t0 = done_ns.saturating_sub(total);
+                            // the dispatching shard is not knowable here
+                            // (a stolen batch executes on the thief's
+                            // workers), so stage spans carry the worker's
+                            // own shard — exactly the attribution the
+                            // per-shard report wants
                             let stamp = |kind: TraceKind, at: u64, dur: u64| {
                                 TraceEvent::new(kind, at)
                                     .req(item.id, batch.op, batch.format)
                                     .on_backend(ctx.backend)
+                                    .on_shard(ctx.shard)
                                     .with_lanes(item.lanes())
                                     .spanning(dur)
                             };
@@ -2385,6 +2570,7 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                                 TraceEvent::new(TraceKind::Complete, t0 + total)
                                     .req(item.id, batch.op, batch.format)
                                     .on_backend(ctx.backend)
+                                    .on_shard(ctx.shard)
                                     .with_lanes(item.lanes())
                                     .with_arg(total),
                             );
@@ -2421,6 +2607,7 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                         TraceEvent::new(TraceKind::ExecError, t.now_ns())
                             .req(batch.items.first().map_or(0, |i| i.id), batch.op, batch.format)
                             .on_backend(ctx.backend)
+                            .on_shard(ctx.shard)
                             .with_lanes(batch.live()),
                     );
                 }
@@ -2440,6 +2627,7 @@ fn worker_loop(rx: Receiver<Batch>, mut executor: Box<dyn Executor>, ctx: Worker
                         TraceEvent::new(TraceKind::WorkerDeath, t.now_ns())
                             .req(batch.items.first().map_or(0, |i| i.id), batch.op, batch.format)
                             .on_backend(ctx.backend)
+                            .on_shard(ctx.shard)
                             .with_lanes(batch.live()),
                     );
                 }
@@ -3156,10 +3344,60 @@ mod tests {
         cfg.stats_interval = Some(Duration::from_millis(5));
         cfg.trace = Some(TraceConfig::default());
         let svc = FpuService::start(cfg, native).unwrap();
+        // a net source attached mid-flight shows up on later lines
+        svc.attach_net_stats_source(|| NetPlaneStats {
+            active_connections: 1,
+            slow_client_drops: 0,
+        });
         let h = svc.handle();
         assert_eq!(h.divide(9.0, 3.0).unwrap(), 3.0);
         std::thread::sleep(Duration::from_millis(20));
         // the property under test: shutdown joins the emitter promptly
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shard_stats_report_every_shard() {
+        let mut cfg = quick_config();
+        cfg.shards = 2;
+        let svc = FpuService::start(cfg, native).unwrap();
+        assert!(svc.uptime_ns() > 0, "uptime epoch set at start");
+        let h = svc.handle();
+        for i in 1..=50u32 {
+            assert_eq!(h.divide((2 * i) as f32, 2.0).unwrap(), i as f32);
+        }
+        let rows = svc.shard_stats();
+        assert_eq!(rows.len(), 2, "one row per shard");
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.ring_capacity, 1024, "shard {i} reports the ring bound");
+            assert_eq!(r.ring_full_rejects, 0, "shard {i}: nothing bounced");
+        }
+        // the service is quiescent: all gauges drained
+        let after = svc.shard_stats();
+        for (i, r) in after.iter().enumerate() {
+            assert_eq!(r.ring_depth, 0, "shard {i} ring drained");
+            assert_eq!(r.queued_lanes, 0, "shard {i} lanes drained");
+            assert_eq!(r.ready_batches, 0, "shard {i} ready queue drained");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn injected_ring_full_counts_on_the_shard_row() {
+        let mut cfg = quick_config();
+        cfg.fault =
+            Some(Arc::new(FaultPlan::parse("ring-full@shard0:after=0,count=1", 11).unwrap()));
+        let svc = FpuService::start(cfg, native).unwrap();
+        let h = svc.handle();
+        // single shard: the first submit trips the injected full ring
+        match h.submit(OpKind::Divide, 6.0, 2.0) {
+            Err(ServiceError::Overloaded) => {}
+            other => panic!("expected Overloaded, got {:?}", other.map(|t| t.id())),
+        }
+        assert_eq!(svc.shard_stats()[0].ring_full_rejects, 1, "the bounce is on the row");
+        // the site's count window is spent: service serves normally
+        assert_eq!(h.divide(6.0, 2.0).unwrap(), 3.0);
+        assert_eq!(svc.shard_stats()[0].ring_full_rejects, 1);
         svc.shutdown();
     }
 }

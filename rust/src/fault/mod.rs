@@ -18,6 +18,7 @@
 //!          | worker-death | slow-drain
 //!          | conn-drop | partial-write | read-stall
 //!          | ring-stall | ring-full
+//!          | append-fail | fsync-stall
 //! kv      := 'p' '=' float        probability per occurrence (default 1)
 //!          | 'after' '=' int      occurrences skipped first (default 0)
 //!          | 'count' '=' int      occurrences in the window (default ∞)
@@ -57,13 +58,17 @@
 //! | `read-stall` | net reader loop | slow connection isolation |
 //! | `ring-stall` | shard dispatcher | peer work stealing, backpressure under a stalled consumer |
 //! | `ring-full` | shard submit path | typed `Overloaded` shedding (forced backpressure) |
+//! | `append-fail` | journal append | typed error surfacing — an unjournalled durable job is never acked |
+//! | `fsync-stall` | journal flush | durable-path latency isolation under storage pressure |
 //!
 //! The three net sites are consulted by [`crate::net::NetServer`] (the
 //! wire front end) with the backend filter matched against the string
 //! `"net"`, since a connection has no backend. The two ring sites are
 //! consulted by the coordinator's shard machinery with the filter
 //! matched against the shard name (`"shard0"`, `"shard1"`, ...), so a
-//! plan can stall one shard while its peers stay healthy.
+//! plan can stall one shard while its peers stay healthy. The two
+//! journal sites are consulted by [`crate::coordinator::Journal`] with
+//! the filter matched against the string `"journal"`.
 
 mod executor;
 mod plan;

@@ -56,11 +56,20 @@ pub enum FaultSite {
     /// backpressure; exercises typed `Overloaded` shedding). Backend
     /// filter matches the shard name.
     RingFull,
+    /// A journal append fails before anything reaches the file
+    /// (exercises the durable submit path's typed-error surface: a job
+    /// the journal did not record must never be acked). Backend filter
+    /// matches `"journal"`.
+    JournalAppendFail,
+    /// The journal's flush stalls (a slow fsync; exercises durable
+    /// submit latency under storage pressure — the record still lands).
+    /// Backend filter matches `"journal"`.
+    JournalFsyncStall,
 }
 
 impl FaultSite {
     /// Every site, spec order.
-    pub const ALL: [FaultSite; 11] = [
+    pub const ALL: [FaultSite; 13] = [
         FaultSite::ExecError,
         FaultSite::ExecPanic,
         FaultSite::Latency,
@@ -72,6 +81,8 @@ impl FaultSite {
         FaultSite::ReadStall,
         FaultSite::RingStall,
         FaultSite::RingFull,
+        FaultSite::JournalAppendFail,
+        FaultSite::JournalFsyncStall,
     ];
 
     /// The spec-grammar name of the site.
@@ -88,6 +99,8 @@ impl FaultSite {
             FaultSite::ReadStall => "read-stall",
             FaultSite::RingStall => "ring-stall",
             FaultSite::RingFull => "ring-full",
+            FaultSite::JournalAppendFail => "append-fail",
+            FaultSite::JournalFsyncStall => "fsync-stall",
         }
     }
 
@@ -144,6 +157,7 @@ impl fmt::Display for FaultRule {
                 | FaultSite::SlowDrain
                 | FaultSite::ReadStall
                 | FaultSite::RingStall
+                | FaultSite::JournalFsyncStall
         ) {
             write!(f, ",us={}", self.micros)?;
         }
@@ -381,6 +395,26 @@ mod tests {
         let rendered = plan.to_string();
         assert!(rendered.contains("ring-stall@shard0:p=1,after=0,count=3,us=20000"), "{rendered}");
         assert!(rendered.contains("ring-full@shard1:p=1,after=5,count=10"), "{rendered}");
+    }
+
+    #[test]
+    fn parse_journal_sites() {
+        let plan = FaultPlan::parse(
+            "append-fail@journal:after=1,count=1; fsync-stall@journal:us=4000,p=0.5",
+            23,
+        )
+        .unwrap();
+        let rules = plan.rules();
+        assert_eq!(rules[0].site, FaultSite::JournalAppendFail);
+        assert_eq!(rules[0].backend.as_deref(), Some("journal"));
+        assert_eq!((rules[0].after, rules[0].count), (1, 1));
+        assert_eq!(rules[1].site, FaultSite::JournalFsyncStall);
+        assert_eq!(rules[1].micros, 4000);
+        assert_eq!(rules[1].p, 0.5);
+        // fsync-stall renders its delay; append-fail has none to render
+        let rendered = plan.to_string();
+        assert!(rendered.contains("append-fail@journal:p=1,after=1,count=1"), "{rendered}");
+        assert!(rendered.contains("fsync-stall@journal:p=0.5,after=0,us=4000"), "{rendered}");
     }
 
     #[test]

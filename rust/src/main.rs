@@ -3,6 +3,7 @@
 //! service. Run with no arguments for usage.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -75,11 +76,19 @@ COMMANDS:
              arm a fault plan, e.g. \"exec-error:p=0.01;latency:us=200\"
              — see goldschmidt::fault for the grammar; env FAULT_PLAN /
              FAULT_SEED are the fallbacks, for CI smoke runs)
-             --trace-out PATH (write the lifecycle trace on shutdown:
-             .jsonl => flat JSONL, anything else => Chrome trace_event
-             JSON for chrome://tracing / Perfetto)
+             --trace-out PATH (streaming lifecycle trace: a background
+             drainer appends rotating JSONL segments during the run
+             and merges them into PATH at shutdown — .jsonl => flat
+             JSONL, anything else => Chrome trace_event JSON for
+             chrome://tracing / Perfetto)
+             --trace-rotate-mb MB (rotate trace segments once the
+             current one passes MB MiB, default 64)
              --trace-sample N (trace 1 in N requests whole-lifecycle,
              default 64; error-class events are always captured)
+             --metrics-listen ADDR (Prometheus text exposition: GET
+             http://ADDR/metrics serves the same snapshot as the
+             STATS wire frame — 127.0.0.1:0 binds an ephemeral port,
+             printed as \"metrics: listening on ...\")
              --stats-interval-ms MS (live stats emitter: one snapshot
              line per interval — qps, queue depth, per-slot p50/p99,
              breaker states, respawns, trace drops)
@@ -103,6 +112,9 @@ COMMANDS:
              to the knee; each probe sends --requests frames)
              --slo-p99-ms MS (p99 SLO the sweep holds rates to,
              default 5)
+             --stats-poll SECS (poll the server's STATS frame every
+             SECS over a side connection and print one \"stats-poll:\"
+             line per sample; 0 = off, ignored with --sweep)
   trace-report  per-stage latency breakdown of a --trace-out file
              goldschmidt trace-report TRACE.json (or .jsonl)
   version    print version
@@ -480,6 +492,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if p.is_empty() { None } else { Some(PathBuf::from(p)) }
     };
     let trace_sample: u64 = args.get("trace-sample", 64u64).map_err(anyhow::Error::msg)?;
+    let trace_rotate_mb: u64 = args.get("trace-rotate-mb", 64u64).map_err(anyhow::Error::msg)?;
+    let metrics_listen = args.get_str("metrics-listen", "");
     let stats_interval_ms: u64 =
         args.get("stats-interval-ms", 0u64).map_err(anyhow::Error::msg)?;
     let journal_arg = args.get_str("journal", "");
@@ -507,10 +521,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..ServiceConfig::default()
     };
 
-    let svc = start_service(config, &backend, policy, &artifacts)?;
+    let svc = Arc::new(start_service(config, &backend, policy, &artifacts)?);
     if journal_armed {
         println!("journal: replayed {} pending job(s)", svc.replayed_jobs());
     }
+
+    // streaming trace export: the drainer pumps the trace rings while
+    // the service runs, so a serve's history is bounded by disk, not by
+    // ring capacity; segments are merged into --trace-out at shutdown
+    let drainer = match (&trace_out, svc.trace()) {
+        (Some(path), Some(plane)) => {
+            let cfg = goldschmidt::obs::DrainConfig {
+                path: path.clone(),
+                rotate_bytes: trace_rotate_mb.max(1) << 20,
+                backend_names: svc.backend_names().iter().map(|s| s.to_string()).collect(),
+                ..Default::default()
+            };
+            let d = goldschmidt::obs::TraceDrainer::start(plane, cfg)?;
+            println!(
+                "trace: streaming to {} (segments rotate at {} MiB)",
+                path.display(),
+                trace_rotate_mb.max(1)
+            );
+            Some(d)
+        }
+        _ => None,
+    };
 
     // --listen swaps the synthetic driver for the wire front end: the
     // service stays up serving SUBMIT frames until the window elapses
@@ -518,12 +554,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listen = args.get_str("listen", "");
     if !listen.is_empty() {
         let listen_for_ms: u64 = args.get("listen-for-ms", 0u64).map_err(anyhow::Error::msg)?;
-        let svc = Arc::new(svc);
         let net_cfg = goldschmidt::net::NetConfig { fault: net_fault, ..Default::default() };
         let mut server = goldschmidt::net::NetServer::start(Arc::clone(&svc), &listen, net_cfg)?;
         println!("net: listening on {}", server.local_addr());
-        // the accept loop runs on its own thread; CI tails this line
-        // from a redirected log, so push it out of the stdout buffer
+        // the scrape endpoint folds the front end's counters into the
+        // same snapshot the STATS wire frame serves
+        let metrics_server = if metrics_listen.is_empty() {
+            None
+        } else {
+            let m = goldschmidt::net::MetricsServer::start(
+                Arc::clone(&svc),
+                Some(server.stats()),
+                &metrics_listen,
+            )?;
+            println!("metrics: listening on http://{}/metrics", m.local_addr());
+            Some(m)
+        };
+        // the accept loop runs on its own thread; CI tails these lines
+        // from a redirected log, so push them out of the stdout buffer
         std::io::Write::flush(&mut std::io::stdout()).ok();
         if listen_for_ms == 0 {
             loop {
@@ -543,9 +591,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             net.injected_conn_drops,
             net.protocol_errors
         );
-        write_trace_if_armed(&svc, trace_out.as_deref())?;
+        if let Some(mut m) = metrics_server {
+            m.stop();
+        }
+        drop(server);
+        // tear the service down before the final drain so every
+        // lifecycle event is emitted by the time the segments merge
+        drop(svc);
+        finish_drainer(drainer)?;
         return Ok(());
     }
+
+    // synthetic driver: the scrape endpoint still works (no wire front
+    // end, so the fpu_net_* family reads zero)
+    let metrics_server = if metrics_listen.is_empty() {
+        None
+    } else {
+        let m = goldschmidt::net::MetricsServer::start(Arc::clone(&svc), None, &metrics_listen)?;
+        println!("metrics: listening on http://{}/metrics", m.local_addr());
+        Some(m)
+    };
 
     let spec = WorkloadSpec {
         count: requests,
@@ -703,26 +768,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         t.print();
     }
-    write_trace_if_armed(&svc, trace_out.as_deref())?;
-    svc.shutdown();
+    if let Some(mut m) = metrics_server {
+        m.stop();
+    }
+    // graceful teardown (drains queues, joins workers) before the final
+    // trace drain so the merged document carries the whole run
+    drop(svc);
+    finish_drainer(drainer)?;
     Ok(())
 }
 
-/// Drain the trace plane (if armed) to `trace_out`, labeling the Chrome
-/// export's per-backend tracks with the registry's backend names.
-fn write_trace_if_armed(svc: &FpuService, trace_out: Option<&std::path::Path>) -> Result<()> {
-    let Some(path) = trace_out else { return Ok(()) };
-    let Some(trace) = svc.trace() else { return Ok(()) };
-    let events = trace.events();
-    let names: Vec<String> = svc.backend_names().iter().map(|s| s.to_string()).collect();
-    goldschmidt::obs::write_trace_named(path, &events, &names)?;
+/// Stop a streaming trace drainer (if armed), merge its segments into
+/// the target path, and print the accounting line CI greps for.
+fn finish_drainer(drainer: Option<goldschmidt::obs::TraceDrainer>) -> Result<()> {
+    let Some(d) = drainer else { return Ok(()) };
+    let r = d.finish()?;
     println!(
-        "trace: wrote {} event(s) to {} (1-in-{} sampling, {} dropped, {} error-class)",
-        events.len(),
-        path.display(),
-        trace.sample_rate(),
-        trace.drops(),
-        trace.error_count()
+        "trace: merged {} event(s) from {} segment(s) into {} \
+         ({} streamed, {} ring drop(s), {} io drop(s))",
+        r.merged_events,
+        r.segments,
+        r.path.display(),
+        r.events_written,
+        r.ring_drops,
+        r.io_drops
     );
     Ok(())
 }
@@ -790,11 +859,74 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         bail!("no offered rate met the p99 SLO (even {rate:.0} qps missed {slo_ms}ms)");
     }
 
+    // --stats-poll: a side connection round-trips the STATS frame on an
+    // interval while the scenario runs; rates come from differencing
+    // consecutive snapshots against the server's own monotonic clock
+    let stats_poll: u64 = args.get("stats-poll", 0u64).map_err(anyhow::Error::msg)?;
+    let poller = if stats_poll > 0 {
+        let addr = connect.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut client = match goldschmidt::net::NetClient::connect(addr.as_str()) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("stats-poll: connect failed: {e:#}");
+                        return;
+                    }
+                };
+                let total =
+                    |f: &goldschmidt::net::StatsFrame| f.slots.iter().map(|s| s.requests).sum::<u64>();
+                let mut last: Option<goldschmidt::net::StatsFrame> = None;
+                loop {
+                    // the server tearing down ends the poll quietly
+                    let Ok(frame) = client.stats() else { return };
+                    let qps = match &last {
+                        Some(prev) if frame.server_ns > prev.server_ns => {
+                            total(&frame).saturating_sub(total(prev)) as f64
+                                / ((frame.server_ns - prev.server_ns) as f64 / 1e9)
+                        }
+                        _ => 0.0,
+                    };
+                    let queued: u64 = frame.slots.iter().map(|s| s.queued_lanes).sum();
+                    println!(
+                        "stats-poll: qps={qps:.0} queued={queued} shards={} conns={} \
+                         slow-drops={} trace-drops={} respawns={}",
+                        frame.shards.len(),
+                        frame.net.active_connections,
+                        frame.net.slow_client_drops,
+                        frame.trace_drops,
+                        frame.respawns
+                    );
+                    last = Some(frame);
+                    // sleep in slices so the post-run join is prompt
+                    let mut left = Duration::from_secs(stats_poll);
+                    while !left.is_zero() {
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let slice = left.min(Duration::from_millis(100));
+                        std::thread::sleep(slice);
+                        left = left.saturating_sub(slice);
+                    }
+                }
+            })
+        };
+        Some((stop, thread))
+    } else {
+        None
+    };
+
     println!(
         "loadgen: scenario={scenario} requests={} connections={} lanes={} -> {connect}",
         spec.requests, spec.connections, spec.lanes
     );
     let report = run_scenario(connect, &spec)?;
+    if let Some((stop, thread)) = poller {
+        stop.store(true, Ordering::Release);
+        let _ = thread.join();
+    }
     println!(
         "loadgen: {:.0} qps achieved in {:.2}s, p50 {} p99 {}, {} service error(s), \
          {} transport loss(es), {} reconnect(s)",

@@ -16,8 +16,8 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::{FormatKind, OpKind, ServiceError};
 
 use super::wire::{
-    error_from_status, read_frame, write_frame, CompleteFrame, Frame, SubmitFrame, STATUS_OK,
-    SUBMIT_DURABLE, WIRE_VERSION,
+    error_from_status, read_frame, write_frame, CompleteFrame, Frame, StatsFrame, SubmitFrame,
+    STATUS_OK, SUBMIT_DURABLE, WIRE_VERSION,
 };
 
 /// Submit-time options beyond the operand planes.
@@ -37,6 +37,8 @@ pub enum Event {
     Ticket { id: u64 },
     /// Terminal outcome for one id (out of order).
     Complete(CompleteFrame),
+    /// A metrics snapshot answering a [`NetSender::request_stats`].
+    Stats(StatsFrame),
 }
 
 /// Turn a completion frame into the typed result surface.
@@ -87,6 +89,14 @@ impl NetSender {
         Ok(id)
     }
 
+    /// Ask the server for a metrics snapshot; the reply arrives on the
+    /// receiving half as [`Event::Stats`], ordered with this sender's
+    /// other replies (the stats poller thread of `loadgen
+    /// --stats-poll` drives exactly this).
+    pub fn request_stats(&mut self) -> Result<()> {
+        write_frame(&mut self.sock, &Frame::StatsRequest)
+    }
+
     /// Half-close: FIN the write direction. The server treats this as a
     /// clean close, flushes every outstanding TICKET/COMPLETE through
     /// its writer, then closes — so a paired [`NetReceiver`] sees all
@@ -109,6 +119,7 @@ impl NetReceiver {
             None => Ok(None),
             Some(Frame::Ticket { id }) => Ok(Some(Event::Ticket { id })),
             Some(Frame::Complete(c)) => Ok(Some(Event::Complete(c))),
+            Some(Frame::Stats(s)) => Ok(Some(Event::Stats(s))),
             Some(other) => bail!("unexpected server frame {other:?}"),
         }
     }
@@ -193,6 +204,26 @@ impl NetClient {
                     }
                     self.buffered.insert(c.id, c);
                 }
+                // a stats reply nobody is waiting on (stale poll): drop
+                Some(Event::Stats(_)) => {}
+            }
+        }
+    }
+
+    /// Round-trip a `STATS` request: returns the server's versioned
+    /// metrics snapshot. TICKET acks are consumed silently and
+    /// completions for outstanding ids are buffered exactly as in
+    /// [`Self::wait`], so polling stats mid-conversation is safe.
+    pub fn stats(&mut self) -> Result<StatsFrame> {
+        self.sender.request_stats()?;
+        loop {
+            match self.receiver.recv()? {
+                None => bail!("connection closed with a stats request outstanding"),
+                Some(Event::Ticket { .. }) => {}
+                Some(Event::Complete(c)) => {
+                    self.buffered.insert(c.id, c);
+                }
+                Some(Event::Stats(s)) => return Ok(s),
             }
         }
     }

@@ -1,0 +1,454 @@
+//! Prometheus text exposition over plain HTTP: `serve --metrics-listen
+//! ADDR` binds a [`MetricsServer`] whose only endpoint, `GET /metrics`,
+//! renders the same [`StatsFrame`] snapshot the `STATS` wire frame
+//! carries (`curl http://ADDR/metrics` is the scrape quickstart in the
+//! README).
+//!
+//! The HTTP surface is deliberately minimal — hand-rolled over
+//! [`TcpListener`], no dependency: one request per connection, request
+//! line + headers parsed just far enough to route, `Connection: close`
+//! on every reply. Requests are serviced inline on the accept thread
+//! under a short socket timeout, so a stalled scraper delays the next
+//! scrape by at most [`CLIENT_TIMEOUT`] instead of wedging the
+//! listener. Anything that is not `GET /metrics` gets a 404; anything
+//! that is not parseable HTTP gets a 400.
+//!
+//! The exposition format is Prometheus text v0.0.4: `# HELP`/`# TYPE`
+//! headers per family, `_total` suffixes on cumulative counters, plain
+//! names on gauges. Per-(op, format) families are labelled
+//! `{op="divide",format="f32"}`, per-shard families `{shard="0"}`, and
+//! per-backend families `{backend="native-fixed-point"}` — the same
+//! three axes the in-process [`MetricsSnapshot`] and
+//! [`FpuService::shard_stats`] slice by, so a scrape and an in-process
+//! report always agree.
+//!
+//! [`MetricsSnapshot`]: crate::coordinator::MetricsSnapshot
+//! [`FpuService::shard_stats`]: crate::coordinator::FpuService::shard_stats
+
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::FpuService;
+
+use super::server::{stats_frame, NetStats};
+use super::wire::StatsFrame;
+
+/// Per-connection socket timeout: bounds how long one slow scraper can
+/// hold the accept thread.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// The metrics listener. Stop it explicitly with [`MetricsServer::stop`]
+/// or implicitly on drop; either joins the accept thread.
+pub struct MetricsServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `GET /metrics`. `net: Some` folds the wire front end's
+    /// counters into the exposition; `None` (an in-process service with
+    /// no TCP front end) zeroes the `fpu_net_*` family.
+    pub fn start(
+        svc: Arc<FpuService>,
+        net: Option<Arc<NetStats>>,
+        addr: &str,
+    ) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics listener {addr}"))?;
+        let local_addr = listener.local_addr().context("reading bound metrics address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("fpu-metrics-http".into())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        let _ = serve_one(stream, &svc, net.as_deref());
+                    }
+                })
+                .context("spawning fpu-metrics-http")?
+        };
+        Ok(MetricsServer { local_addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop listening and join the accept thread. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Service one HTTP connection: parse the request line, drain the
+/// headers, route, reply, close.
+fn serve_one(stream: TcpStream, svc: &FpuService, net: Option<&NetStats>) -> Result<()> {
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT)).context("set_read_timeout")?;
+    stream.set_write_timeout(Some(CLIENT_TIMEOUT)).context("set_write_timeout")?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning metrics socket")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    // drain headers to the blank line so the client's socket is clean
+    // for our reply (pipelining is not supported: we close after one)
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header).unwrap_or(0) == 0 || header.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut sock = stream;
+    let (status, content_type, body) = match (method, path) {
+        ("GET", "/metrics") => {
+            let body = render_prometheus(&stats_frame(svc, net));
+            ("200 OK", "text/plain; version=0.0.4; charset=utf-8", body)
+        }
+        ("GET", _) => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".into()),
+        _ => ("400 Bad Request", "text/plain; charset=utf-8", "bad request\n".into()),
+    };
+    let reply = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    sock.write_all(reply.as_bytes()).context("writing metrics reply")?;
+    sock.flush().context("flushing metrics reply")
+}
+
+/// One `# HELP` + `# TYPE` family header.
+fn family(out: &mut String, name: &str, help: &str, kind: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render a [`StatsFrame`] as Prometheus text exposition v0.0.4. Pure
+/// (no clocks, no I/O) so tests assert on exact lines.
+pub fn render_prometheus(frame: &StatsFrame) -> String {
+    let mut out = String::with_capacity(4096);
+
+    family(&mut out, "fpu_uptime_seconds", "Seconds since the service started.", "gauge");
+    let _ = writeln!(out, "fpu_uptime_seconds {}", frame.server_ns as f64 / 1e9);
+
+    // per-(op, format) slots
+    family(&mut out, "fpu_requests_total", "Lanes completed per (op, format).", "counter");
+    for s in &frame.slots {
+        let _ = writeln!(
+            out,
+            "fpu_requests_total{{op=\"{}\",format=\"{}\"}} {}",
+            s.op.label(),
+            s.format.label(),
+            s.requests,
+        );
+    }
+    let slot_counters: [(&str, &str, fn(&super::wire::SlotStats) -> u64); 3] = [
+        ("fpu_errors_total", "Lanes failed per (op, format).", |s| s.errors),
+        ("fpu_shed_total", "Lanes shed past their deadline per (op, format).", |s| s.shed),
+        (
+            "fpu_admission_rejected_total",
+            "Lanes rejected by deadline admission control per (op, format).",
+            |s| s.admission_rejected,
+        ),
+    ];
+    for (name, help, get) in slot_counters {
+        family(&mut out, name, help, "counter");
+        for s in &frame.slots {
+            let _ = writeln!(
+                out,
+                "{name}{{op=\"{}\",format=\"{}\"}} {}",
+                s.op.label(),
+                s.format.label(),
+                get(s),
+            );
+        }
+    }
+    let slot_gauges: [(&str, &str, fn(&super::wire::SlotStats) -> u64); 3] = [
+        ("fpu_queued_lanes", "Lanes currently queued per (op, format).", |s| s.queued_lanes),
+        ("fpu_p50_latency_ns", "p50 completion latency per (op, format).", |s| s.p50_latency_ns),
+        ("fpu_p99_latency_ns", "p99 completion latency per (op, format).", |s| s.p99_latency_ns),
+    ];
+    for (name, help, get) in slot_gauges {
+        family(&mut out, name, help, "gauge");
+        for s in &frame.slots {
+            let _ = writeln!(
+                out,
+                "{name}{{op=\"{}\",format=\"{}\"}} {}",
+                s.op.label(),
+                s.format.label(),
+                get(s),
+            );
+        }
+    }
+
+    // per-shard rows
+    let shard_gauges: [(&str, &str, fn(&super::wire::ShardStats) -> u64); 5] = [
+        ("fpu_shard_ring_depth", "Submit-ring occupancy per shard.", |s| s.ring_depth as u64),
+        ("fpu_shard_ring_capacity", "Submit-ring slot count per shard.", |s| {
+            s.ring_capacity as u64
+        }),
+        ("fpu_shard_queued_lanes", "Lanes queued per shard.", |s| s.queued_lanes),
+        ("fpu_shard_ready_batches", "Formed batches awaiting dispatch per shard.", |s| {
+            s.ready_batches as u64
+        }),
+        ("fpu_shard_oldest_ready_us", "Age of the oldest ready batch per shard.", |s| {
+            s.oldest_ready_us
+        }),
+    ];
+    for (name, help, get) in shard_gauges {
+        family(&mut out, name, help, "gauge");
+        for (i, s) in frame.shards.iter().enumerate() {
+            let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {}", get(s));
+        }
+    }
+    let shard_counters: [(&str, &str, fn(&super::wire::ShardStats) -> u64); 3] = [
+        ("fpu_shard_steals_in_total", "Batches stolen from peers per shard.", |s| s.steals_in),
+        ("fpu_shard_steals_out_total", "Batches peers stole per shard.", |s| s.steals_out),
+        ("fpu_shard_ring_full_rejects_total", "Submissions bounced on a full ring per shard.", |s| {
+            s.ring_full_rejects
+        }),
+    ];
+    for (name, help, get) in shard_counters {
+        family(&mut out, name, help, "counter");
+        for (i, s) in frame.shards.iter().enumerate() {
+            let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {}", get(s));
+        }
+    }
+
+    // per-backend health
+    let backend_gauges: [(&str, &str, fn(&super::wire::BackendStats) -> u64); 2] = [
+        ("fpu_backend_breaker_open", "1 when the backend's circuit breaker is open.", |b| {
+            b.breaker_open as u64
+        }),
+        ("fpu_backend_degraded", "1 when the backend's pool is marked degraded.", |b| {
+            b.degraded as u64
+        }),
+    ];
+    for (name, help, get) in backend_gauges {
+        family(&mut out, name, help, "gauge");
+        for b in &frame.backends {
+            let _ = writeln!(out, "{name}{{backend=\"{}\"}} {}", b.name, get(b));
+        }
+    }
+    let backend_counters: [(&str, &str, fn(&super::wire::BackendStats) -> u64); 4] = [
+        ("fpu_backend_ok_batches_total", "Batches executed successfully per backend.", |b| {
+            b.ok_batches
+        }),
+        ("fpu_backend_failed_batches_total", "Batches failed per backend.", |b| b.failed_batches),
+        ("fpu_backend_rerouted_total", "Batches rerouted away per backend.", |b| b.rerouted),
+        ("fpu_backend_respawns_total", "Workers respawned per backend.", |b| b.respawns),
+    ];
+    for (name, help, get) in backend_counters {
+        family(&mut out, name, help, "counter");
+        for b in &frame.backends {
+            let _ = writeln!(out, "{name}{{backend=\"{}\"}} {}", b.name, get(b));
+        }
+    }
+
+    // service-wide counters
+    family(&mut out, "fpu_respawns_total", "Workers respawned, all backends.", "counter");
+    let _ = writeln!(out, "fpu_respawns_total {}", frame.respawns);
+    family(
+        &mut out,
+        "fpu_trace_drops_total",
+        "Sampled lifecycle trace events lost to ring overflow.",
+        "counter",
+    );
+    let _ = writeln!(out, "fpu_trace_drops_total {}", frame.trace_drops);
+    family(
+        &mut out,
+        "fpu_trace_errors_total",
+        "Error-class trace events captured (never dropped).",
+        "counter",
+    );
+    let _ = writeln!(out, "fpu_trace_errors_total {}", frame.trace_errors);
+
+    // net plane
+    let net = &frame.net;
+    family(&mut out, "fpu_net_active_connections", "Wire connections currently open.", "gauge");
+    let _ = writeln!(out, "fpu_net_active_connections {}", net.active_connections);
+    let net_counters: [(&str, &str, u64); 7] = [
+        ("fpu_net_connections_total", "Wire connections accepted.", net.connections),
+        ("fpu_net_frames_in_total", "Frames decoded off client sockets.", net.frames_in),
+        ("fpu_net_frames_out_total", "Frames pushed to client sockets.", net.frames_out),
+        ("fpu_net_submits_total", "SUBMIT frames serviced.", net.submits),
+        ("fpu_net_completes_total", "COMPLETE frames queued.", net.completes),
+        (
+            "fpu_net_slow_client_drops_total",
+            "Connections dropped for a full writer queue.",
+            net.slow_client_drops,
+        ),
+        ("fpu_net_protocol_errors_total", "Malformed or unexpected frames.", net.protocol_errors),
+    ];
+    for (name, help, v) in net_counters {
+        family(&mut out, name, help, "counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, FormatKind, OpKind, ServiceConfig};
+    use crate::net::wire::{BackendStats, NetCounters, ShardStats, SlotStats};
+    use crate::runtime::executor::NativeExecutor;
+    use std::io::Read;
+
+    fn sample_frame() -> StatsFrame {
+        StatsFrame {
+            version: 1,
+            server_ns: 2_500_000_000,
+            respawns: 3,
+            trace_drops: 7,
+            trace_errors: 2,
+            slots: vec![SlotStats {
+                op: OpKind::Divide,
+                format: FormatKind::F32,
+                requests: 100,
+                errors: 1,
+                shed: 2,
+                admission_rejected: 3,
+                p50_latency_ns: 4000,
+                p99_latency_ns: 9000,
+                queued_lanes: 5,
+            }],
+            shards: vec![
+                ShardStats {
+                    ring_depth: 4,
+                    ring_capacity: 1024,
+                    queued_lanes: 5,
+                    ready_batches: 1,
+                    oldest_ready_us: 250,
+                    steals_in: 6,
+                    steals_out: 7,
+                    ring_full_rejects: 8,
+                },
+                ShardStats { ring_capacity: 1024, ..Default::default() },
+            ],
+            backends: vec![BackendStats {
+                name: "native-fixed-point".into(),
+                breaker_open: true,
+                degraded: false,
+                ok_batches: 40,
+                failed_batches: 2,
+                rerouted: 1,
+                respawns: 3,
+            }],
+            net: NetCounters {
+                connections: 10,
+                active_connections: 2,
+                frames_in: 100,
+                frames_out: 90,
+                submits: 50,
+                completes: 49,
+                slow_client_drops: 1,
+                protocol_errors: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn exposition_covers_every_axis() {
+        let text = render_prometheus(&sample_frame());
+        for expected in [
+            "# TYPE fpu_requests_total counter",
+            "fpu_requests_total{op=\"divide\",format=\"f32\"} 100",
+            "fpu_p99_latency_ns{op=\"divide\",format=\"f32\"} 9000",
+            "fpu_queued_lanes{op=\"divide\",format=\"f32\"} 5",
+            "fpu_shard_ring_depth{shard=\"0\"} 4",
+            "fpu_shard_ring_capacity{shard=\"1\"} 1024",
+            "fpu_shard_steals_in_total{shard=\"0\"} 6",
+            "fpu_shard_steals_out_total{shard=\"0\"} 7",
+            "fpu_shard_ring_full_rejects_total{shard=\"0\"} 8",
+            "fpu_backend_breaker_open{backend=\"native-fixed-point\"} 1",
+            "fpu_backend_ok_batches_total{backend=\"native-fixed-point\"} 40",
+            "fpu_respawns_total 3",
+            "fpu_trace_drops_total 7",
+            "fpu_trace_errors_total 2",
+            "fpu_net_active_connections 2",
+            "fpu_net_slow_client_drops_total 1",
+            "fpu_uptime_seconds 2.5",
+        ] {
+            assert!(text.contains(expected), "missing {expected:?} in:\n{text}");
+        }
+        // every family header precedes its samples exactly once
+        assert_eq!(text.matches("# TYPE fpu_requests_total").count(), 1);
+    }
+
+    fn quick_service() -> Arc<FpuService> {
+        let cfg = ServiceConfig {
+            batcher: BatcherConfig::new(64, Duration::from_micros(100)),
+            queue_depth: 1024,
+            workers: 1,
+            ..ServiceConfig::default()
+        };
+        Arc::new(
+            FpuService::start(cfg, || Ok(Box::new(NativeExecutor::with_defaults()) as _)).unwrap(),
+        )
+    }
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+        let mut reply = String::new();
+        sock.read_to_string(&mut reply).unwrap();
+        reply
+    }
+
+    #[test]
+    fn scrape_round_trips_over_http() {
+        let svc = quick_service();
+        let h = svc.handle();
+        for i in 1..=20u32 {
+            assert_eq!(h.divide((3 * i) as f32, 3.0).unwrap(), i as f32);
+        }
+        let mut server = MetricsServer::start(svc.clone(), None, "127.0.0.1:0").unwrap();
+        let reply = http_get(server.local_addr(), "/metrics");
+        assert!(reply.starts_with("HTTP/1.1 200 OK"), "{reply}");
+        assert!(reply.contains("text/plain; version=0.0.4"), "{reply}");
+        assert!(reply.contains("fpu_requests_total{op=\"divide\",format=\"f32\"} 20"), "{reply}");
+        assert!(reply.contains("fpu_shard_ring_capacity{shard=\"0\"} 1024"), "{reply}");
+        assert!(
+            reply.contains("fpu_backend_breaker_open{backend=\"native-fixed-point\"} 0"),
+            "{reply}"
+        );
+        // the scrape agrees with the in-process snapshot
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.op_format(OpKind::Divide, FormatKind::F32).requests, 20);
+        // anything else is a 404; the listener survives both
+        let miss = http_get(server.local_addr(), "/other");
+        assert!(miss.starts_with("HTTP/1.1 404"), "{miss}");
+        let again = http_get(server.local_addr(), "/metrics");
+        assert!(again.starts_with("HTTP/1.1 200 OK"), "{again}");
+        server.stop();
+        server.stop(); // idempotent
+        drop(server); // joined accept thread released its service Arc
+        drop(svc); // FpuService::drop shuts the shards down
+    }
+}

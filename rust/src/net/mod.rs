@@ -8,15 +8,17 @@
 //! section and the `goldschmidt loadgen` harness drive exactly this
 //! path).
 //!
-//! Three pieces:
+//! Four pieces:
 //!
 //! * [`wire`] — the compact length-prefixed binary protocol:
 //!   `HELLO{version, flags}` handshake, `SUBMIT` frames carrying one
 //!   vectored batch each (mapping 1:1 onto
-//!   `submit_batch`/`submit_batch_durable`), `TICKET{id}` acks and
-//!   out-of-order `COMPLETE{id, status, results}` frames. Framing —
-//!   `len | crc32(payload) | payload` — reuses the request journal's
-//!   discipline and its CRC-32.
+//!   `submit_batch`/`submit_batch_durable`), `TICKET{id}` acks,
+//!   out-of-order `COMPLETE{id, status, results}` frames, and the
+//!   `STATS_REQUEST`/`STATS` pair that round-trips a versioned
+//!   [`StatsFrame`] metrics snapshot. Framing — `len | crc32(payload)
+//!   | payload` — reuses the request journal's discipline and its
+//!   CRC-32.
 //! * [`server`] — [`NetServer`]: per-connection blocking reader
 //!   threads feed the service directly (no reactor), completions are
 //!   pushed by a per-connection writer thread fed from a **bounded**
@@ -24,21 +26,28 @@
 //!   (`net_slow_client_drops`) and disconnected. The `conn-drop`,
 //!   `partial-write` and `read-stall` fault sites inject here.
 //! * [`client`] — [`NetClient`] (synchronous submit/wait with
-//!   out-of-order buffering) and the split [`NetSender`] /
-//!   [`NetReceiver`] halves the open-loop load generator drives from
-//!   separate threads.
+//!   out-of-order buffering, plus [`NetClient::stats`] polling) and
+//!   the split [`NetSender`] / [`NetReceiver`] halves the open-loop
+//!   load generator drives from separate threads.
+//! * [`metrics_http`] — [`MetricsServer`]: Prometheus text exposition
+//!   of the same [`StatsFrame`] snapshot over plain HTTP
+//!   (`serve --metrics-listen ADDR`, then `curl http://ADDR/metrics`).
 //!
 //! See the README's "Wire protocol" section for the frame layout
-//! tables and handshake rules.
+//! tables and handshake rules, and "Observability" for the stats and
+//! scrape surfaces.
 
 pub mod client;
+pub mod metrics_http;
 pub mod server;
 pub mod wire;
 
 pub use client::{result_of, Event, NetClient, NetReceiver, NetSender, SubmitOpts};
-pub use server::{NetConfig, NetServer, NetStats, NetStatsSnapshot};
+pub use metrics_http::{render_prometheus, MetricsServer};
+pub use server::{stats_frame, NetConfig, NetServer, NetStats, NetStatsSnapshot};
 pub use wire::{
-    error_from_status, status_of, CompleteFrame, Frame, SubmitFrame, FLAG_DURABLE, MAX_FRAME,
-    STATUS_DEADLINE, STATUS_EXEC_FAILED, STATUS_OK, STATUS_OVERLOADED, STATUS_REJECTED,
-    STATUS_SHUTDOWN, SUBMIT_DURABLE, WIRE_VERSION,
+    error_from_status, status_of, BackendStats, CompleteFrame, Frame, NetCounters, ShardStats,
+    SlotStats, StatsFrame, SubmitFrame, FLAG_DURABLE, MAX_FRAME, STATS_VERSION, STATUS_DEADLINE,
+    STATUS_EXEC_FAILED, STATUS_OK, STATUS_OVERLOADED, STATUS_REJECTED, STATUS_SHUTDOWN,
+    SUBMIT_DURABLE, WIRE_VERSION,
 };

@@ -20,7 +20,9 @@
 //!   `read_frame` loop; each `SUBMIT` maps 1:1 onto
 //!   `submit_batch_tagged` (the client's request id rides into the
 //!   trace plane) or `submit_batch_durable`, acked with a `TICKET`
-//!   frame and handed to a completer;
+//!   frame and handed to a completer; a `STATS` request is answered
+//!   inline with the [`stats_frame`] snapshot through the same writer
+//!   queue;
 //! * `completers` **completer** threads (`net-completer-N-K`) — block
 //!   on the ticket (or the durable plane's condvar via
 //!   [`FpuService::wait_for_id`]) and push the `COMPLETE` frame; with
@@ -50,7 +52,7 @@
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -58,12 +60,13 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{FpuService, JobPoll, ServiceError};
+use crate::coordinator::{FpuService, JobPoll, NetPlaneStats, ServiceError};
 use crate::fault::{FaultPlan, FaultSite};
 
 use super::wire::{
-    encode_frame, read_frame, status_of, write_frame, CompleteFrame, Frame, SubmitFrame,
-    FLAG_DURABLE, STATUS_OK, SUBMIT_DURABLE, WIRE_VERSION,
+    encode_frame, read_frame, status_of, write_frame, BackendStats, CompleteFrame, Frame,
+    NetCounters, ShardStats, SlotStats, StatsFrame, SubmitFrame, FLAG_DURABLE, STATS_VERSION,
+    STATUS_OK, SUBMIT_DURABLE, WIRE_VERSION,
 };
 
 /// Front-end configuration.
@@ -93,6 +96,9 @@ impl Default for NetConfig {
 #[derive(Default)]
 pub struct NetStats {
     connections: AtomicU64,
+    /// Connections currently open (a gauge: reader entry increments,
+    /// reader exit decrements — signed so a racy read never wraps).
+    active_connections: AtomicI64,
     frames_in: AtomicU64,
     frames_out: AtomicU64,
     submits: AtomicU64,
@@ -107,6 +113,8 @@ pub struct NetStats {
 pub struct NetStatsSnapshot {
     /// Connections accepted (handshake attempted).
     pub connections: u64,
+    /// Connections currently open.
+    pub active_connections: u64,
     /// Frames decoded off client sockets.
     pub frames_in: u64,
     /// Frames pushed to client sockets.
@@ -136,6 +144,12 @@ impl NetStats {
         self.connections.load(Ordering::Relaxed)
     }
 
+    /// Connections currently open (clamped at zero: the gauge is
+    /// incremented and decremented by racing reader threads).
+    pub fn active_connections(&self) -> u64 {
+        self.active_connections.load(Ordering::Relaxed).max(0) as u64
+    }
+
     /// `SUBMIT` frames serviced so far.
     pub fn submits(&self) -> u64 {
         self.submits.load(Ordering::Relaxed)
@@ -145,6 +159,7 @@ impl NetStats {
     pub fn snapshot(&self) -> NetStatsSnapshot {
         NetStatsSnapshot {
             connections: self.connections.load(Ordering::Relaxed),
+            active_connections: self.active_connections(),
             frames_in: self.frames_in.load(Ordering::Relaxed),
             frames_out: self.frames_out.load(Ordering::Relaxed),
             submits: self.submits.load(Ordering::Relaxed),
@@ -235,6 +250,17 @@ impl NetServer {
         let conns = Arc::new(Mutex::new(HashMap::new()));
         let readers = Arc::new(Mutex::new(Vec::new()));
 
+        // feed the service's stats emitter the net-plane fields
+        // (active connections, slow-client drops); the source outlives
+        // this server harmlessly — counters freeze once it stops
+        {
+            let ns = stats.clone();
+            svc.attach_net_stats_source(move || NetPlaneStats {
+                active_connections: ns.active_connections(),
+                slow_client_drops: ns.slow_client_drops(),
+            });
+        }
+
         let accept = {
             let stop = stop.clone();
             let stats = stats.clone();
@@ -315,6 +341,90 @@ impl Drop for NetServer {
     }
 }
 
+/// Assemble the versioned [`StatsFrame`] the `STATS` wire reply and the
+/// Prometheus exposition both render: per-(op, format) counters and
+/// latency percentiles from the merged [`MetricsSnapshot`]
+/// (slots that never saw traffic are omitted), per-shard introspection
+/// rows, per-backend health, trace-plane loss accounting, and the raw
+/// net counters (`net: None` zeroes them — the in-process callers).
+///
+/// Every counter is **cumulative**; `server_ns` is the service's
+/// monotonic uptime, so a polling client computes rates by differencing
+/// two frames without trusting wall clocks on either end.
+pub fn stats_frame(svc: &FpuService, net: Option<&NetStats>) -> StatsFrame {
+    let metrics = svc.metrics();
+    let snap = metrics.snapshot();
+    let slots = snap
+        .op_formats
+        .iter()
+        .filter(|s| s.requests > 0 || s.errors > 0 || s.shed > 0 || s.admission_rejected > 0)
+        .map(|s| SlotStats {
+            op: s.op,
+            format: s.format,
+            requests: s.requests,
+            errors: s.errors,
+            shed: s.shed,
+            admission_rejected: s.admission_rejected,
+            p50_latency_ns: s.p50_latency_ns,
+            p99_latency_ns: s.p99_latency_ns,
+            queued_lanes: metrics.queued_lanes(s.op, s.format),
+        })
+        .collect();
+    let shards = svc
+        .shard_stats()
+        .into_iter()
+        .map(|s| ShardStats {
+            ring_depth: s.ring_depth.min(u32::MAX as usize) as u32,
+            ring_capacity: s.ring_capacity.min(u32::MAX as usize) as u32,
+            queued_lanes: s.queued_lanes,
+            ready_batches: s.ready_batches.min(u32::MAX as usize) as u32,
+            oldest_ready_us: s.oldest_ready_us,
+            steals_in: s.steals_in,
+            steals_out: s.steals_out,
+            ring_full_rejects: s.ring_full_rejects,
+        })
+        .collect();
+    let report = svc.dispatch_report();
+    let respawns = report.iter().map(|(_, b)| b.respawns).sum();
+    let backends = report
+        .into_iter()
+        .map(|(name, b)| BackendStats {
+            name: name.to_string(),
+            breaker_open: b.breaker_open,
+            degraded: b.degraded,
+            ok_batches: b.ok_batches,
+            failed_batches: b.failed_batches,
+            rerouted: b.rerouted,
+            respawns: b.respawns,
+        })
+        .collect();
+    let (trace_drops, trace_errors) = svc
+        .trace()
+        .map(|t| (t.drops(), t.error_count() as u64))
+        .unwrap_or((0, 0));
+    let net = net.map(|n| n.snapshot()).unwrap_or_default();
+    StatsFrame {
+        version: STATS_VERSION,
+        server_ns: svc.uptime_ns(),
+        respawns,
+        trace_drops,
+        trace_errors,
+        slots,
+        shards,
+        backends,
+        net: NetCounters {
+            connections: net.connections,
+            active_connections: net.active_connections,
+            frames_in: net.frames_in,
+            frames_out: net.frames_out,
+            submits: net.submits,
+            completes: net.completes,
+            slow_client_drops: net.slow_client_drops,
+            protocol_errors: net.protocol_errors,
+        },
+    }
+}
+
 /// Handshake + reader loop for one accepted socket. Returns the reader
 /// thread's handle; the writer and completer threads it spawns tear
 /// down by queue-disconnect cascade.
@@ -330,7 +440,9 @@ fn spawn_connection(
     std::thread::Builder::new()
         .name(format!("net-conn-{conn_id}"))
         .spawn(move || {
+            stats.active_connections.fetch_add(1, Ordering::Relaxed);
             run_connection(conn_id, &mut stream, svc, &config, &stats, &stop);
+            stats.active_connections.fetch_sub(1, Ordering::Relaxed);
             conns.lock().unwrap().remove(&conn_id);
             // no shutdown here: on a clean close the writer is still
             // flushing queued COMPLETEs — the client sees FIN when the
@@ -427,6 +539,14 @@ fn run_connection(
         }
         let submit = match read_frame(stream) {
             Ok(Some(Frame::Submit(s))) => s,
+            Ok(Some(Frame::StatsRequest)) => {
+                // wire-queryable metrics: reply with the versioned
+                // snapshot through the writer queue (ordering with
+                // in-flight COMPLETEs preserved) and keep reading
+                stats.frames_in.fetch_add(1, Ordering::Relaxed);
+                shared.push(Frame::Stats(stats_frame(&svc, Some(stats))));
+                continue;
+            }
             Ok(None) => break, // clean close
             Ok(Some(_)) => {
                 // HELLO twice, or a server-only frame from a client

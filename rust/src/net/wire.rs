@@ -17,6 +17,8 @@
 //! | 2 | `SUBMIT` | `id u64, op u8, format u8, flags u8, deadline_us u32, n_a u32, n_b u32, a[n_a] u64, b[n_b] u64` |
 //! | 3 | `TICKET` | `id u64` |
 //! | 4 | `COMPLETE` | `id u64, status u8, n u32, results[n] u64, msg_len u32, msg bytes` |
+//! | 5 | `STATS_REQUEST` | (empty) |
+//! | 6 | `STATS` | `version u32, server_ns u64, respawns u64, trace_drops u64, trace_errors u64, n_slots u32, slots[], n_shards u32, shards[], n_backends u32, backends[], net[8] u64` — see [`StatsFrame`] |
 //!
 //! All integers little-endian. Operand/result lanes travel as raw
 //! format words widened to `u64`, exactly the
@@ -80,6 +82,12 @@ const KIND_HELLO: u8 = 1;
 const KIND_SUBMIT: u8 = 2;
 const KIND_TICKET: u8 = 3;
 const KIND_COMPLETE: u8 = 4;
+const KIND_STATS_REQUEST: u8 = 5;
+const KIND_STATS: u8 = 6;
+
+/// Version of the `STATS` snapshot body. Bumped whenever a field is
+/// added or its meaning changes; clients check it before interpreting.
+pub const STATS_VERSION: u32 = 1;
 
 /// A `SUBMIT` body: one vectored batch, client-assigned id.
 #[derive(Clone, Debug, PartialEq)]
@@ -111,6 +119,98 @@ pub struct CompleteFrame {
     pub error: String,
 }
 
+/// One per-(op, format) slot in a `STATS` snapshot (raw counters —
+/// clients compute rates from successive snapshots and `server_ns`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SlotStats {
+    pub op: OpKind,
+    pub format: FormatKind,
+    /// Lanes completed.
+    pub requests: u64,
+    pub errors: u64,
+    pub shed: u64,
+    pub admission_rejected: u64,
+    pub p50_latency_ns: u64,
+    pub p99_latency_ns: u64,
+    /// Lanes currently queued on this slot (gauge).
+    pub queued_lanes: u64,
+}
+
+/// One coordinator shard's row in a `STATS` snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct ShardStats {
+    /// Approximate submit-ring occupancy (gauge).
+    pub ring_depth: u32,
+    pub ring_capacity: u32,
+    /// Lanes queued across this shard's (op, format) slots (gauge).
+    pub queued_lanes: u64,
+    /// Formed batches waiting in the ready queue (gauge).
+    pub ready_batches: u32,
+    /// Age of the oldest ready batch in microseconds (gauge; 0 when
+    /// the queue is empty).
+    pub oldest_ready_us: u64,
+    /// Batches this shard stole from peers.
+    pub steals_in: u64,
+    /// Batches peers stole from this shard.
+    pub steals_out: u64,
+    /// Submissions rejected because this shard's ring was full.
+    pub ring_full_rejects: u64,
+}
+
+/// One backend's health row in a `STATS` snapshot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BackendStats {
+    pub name: String,
+    pub breaker_open: bool,
+    pub degraded: bool,
+    pub ok_batches: u64,
+    pub failed_batches: u64,
+    pub rerouted: u64,
+    pub respawns: u64,
+}
+
+/// Net-plane counters in a `STATS` snapshot (zeroed when the snapshot
+/// is built without a wire front end, e.g. in-process callers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct NetCounters {
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+    /// Connections currently open (gauge).
+    pub active_connections: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub submits: u64,
+    pub completes: u64,
+    pub slow_client_drops: u64,
+    pub protocol_errors: u64,
+}
+
+/// A `STATS` body: a versioned snapshot of the serving plane. All
+/// counters are raw totals plus the server's monotonic `server_ns`, so
+/// a polling client (`loadgen --stats-poll`) differences successive
+/// snapshots for rates without trusting its own clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsFrame {
+    /// [`STATS_VERSION`] of the sender.
+    pub version: u32,
+    /// Server monotonic nanoseconds (since service start).
+    pub server_ns: u64,
+    /// Workers respawned by the supervisor.
+    pub respawns: u64,
+    /// Trace-plane ring drops (sampled lifecycle events lost).
+    pub trace_drops: u64,
+    /// Trace-plane error-class events captured.
+    pub trace_errors: u64,
+    /// Per-(op, format) rows.
+    pub slots: Vec<SlotStats>,
+    /// Per-coordinator-shard rows.
+    pub shards: Vec<ShardStats>,
+    /// Per-backend health rows.
+    pub backends: Vec<BackendStats>,
+    /// Wire front-end counters.
+    pub net: NetCounters,
+}
+
 /// One decoded wire frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -122,6 +222,10 @@ pub enum Frame {
     Ticket { id: u64 },
     /// Server → client: terminal outcome for this id.
     Complete(CompleteFrame),
+    /// Client → server: snapshot request (empty body).
+    StatsRequest,
+    /// Server → client: the versioned snapshot.
+    Stats(StatsFrame),
 }
 
 /// Map a typed service error to its wire status code.
@@ -194,6 +298,70 @@ fn encode_payload(frame: &Frame) -> Vec<u8> {
             put_words(&mut out, &c.results);
             out.extend_from_slice(&(c.error.len() as u32).to_le_bytes());
             out.extend_from_slice(c.error.as_bytes());
+            out
+        }
+        Frame::StatsRequest => vec![KIND_STATS_REQUEST],
+        Frame::Stats(s) => {
+            let mut out = Vec::with_capacity(64 + 58 * s.slots.len() + 52 * s.shards.len());
+            out.push(KIND_STATS);
+            out.extend_from_slice(&s.version.to_le_bytes());
+            out.extend_from_slice(&s.server_ns.to_le_bytes());
+            out.extend_from_slice(&s.respawns.to_le_bytes());
+            out.extend_from_slice(&s.trace_drops.to_le_bytes());
+            out.extend_from_slice(&s.trace_errors.to_le_bytes());
+            out.extend_from_slice(&(s.slots.len() as u32).to_le_bytes());
+            for slot in &s.slots {
+                out.push(op_to_byte(slot.op));
+                out.push(format_to_byte(slot.format));
+                put_words(
+                    &mut out,
+                    &[
+                        slot.requests,
+                        slot.errors,
+                        slot.shed,
+                        slot.admission_rejected,
+                        slot.p50_latency_ns,
+                        slot.p99_latency_ns,
+                        slot.queued_lanes,
+                    ],
+                );
+            }
+            out.extend_from_slice(&(s.shards.len() as u32).to_le_bytes());
+            for sh in &s.shards {
+                out.extend_from_slice(&sh.ring_depth.to_le_bytes());
+                out.extend_from_slice(&sh.ring_capacity.to_le_bytes());
+                out.extend_from_slice(&sh.ready_batches.to_le_bytes());
+                put_words(
+                    &mut out,
+                    &[
+                        sh.queued_lanes,
+                        sh.oldest_ready_us,
+                        sh.steals_in,
+                        sh.steals_out,
+                        sh.ring_full_rejects,
+                    ],
+                );
+            }
+            out.extend_from_slice(&(s.backends.len() as u32).to_le_bytes());
+            for b in &s.backends {
+                out.extend_from_slice(&(b.name.len() as u32).to_le_bytes());
+                out.extend_from_slice(b.name.as_bytes());
+                out.push(u8::from(b.breaker_open) | (u8::from(b.degraded) << 1));
+                put_words(&mut out, &[b.ok_batches, b.failed_batches, b.rerouted, b.respawns]);
+            }
+            put_words(
+                &mut out,
+                &[
+                    s.net.connections,
+                    s.net.active_connections,
+                    s.net.frames_in,
+                    s.net.frames_out,
+                    s.net.submits,
+                    s.net.completes,
+                    s.net.slow_client_drops,
+                    s.net.protocol_errors,
+                ],
+            );
             out
         }
     }
@@ -269,6 +437,100 @@ fn decode_payload(payload: &[u8]) -> Result<Frame> {
             Frame::Submit(SubmitFrame { id, op, format, flags, deadline_us, a, b })
         }
         KIND_TICKET => Frame::Ticket { id: c.u64()? },
+        KIND_STATS_REQUEST => Frame::StatsRequest,
+        KIND_STATS => {
+            let version = c.u32()?;
+            let server_ns = c.u64()?;
+            let respawns = c.u64()?;
+            let trace_drops = c.u64()?;
+            let trace_errors = c.u64()?;
+            let n_slots = c.u32()? as usize;
+            // 58 bytes per slot row: bound counts against the held
+            // frame before allocating, as SUBMIT does for lanes
+            if 58 * n_slots > payload.len() {
+                bail!("stats slot count {n_slots} exceeds the frame");
+            }
+            let mut slots = Vec::with_capacity(n_slots);
+            for _ in 0..n_slots {
+                let op = op_from_byte(c.u8()?)?;
+                let format = format_from_byte(c.u8()?)?;
+                let w = c.words(7)?;
+                slots.push(SlotStats {
+                    op,
+                    format,
+                    requests: w[0],
+                    errors: w[1],
+                    shed: w[2],
+                    admission_rejected: w[3],
+                    p50_latency_ns: w[4],
+                    p99_latency_ns: w[5],
+                    queued_lanes: w[6],
+                });
+            }
+            let n_shards = c.u32()? as usize;
+            if 52 * n_shards > payload.len() {
+                bail!("stats shard count {n_shards} exceeds the frame");
+            }
+            let mut shards = Vec::with_capacity(n_shards);
+            for _ in 0..n_shards {
+                let ring_depth = c.u32()?;
+                let ring_capacity = c.u32()?;
+                let ready_batches = c.u32()?;
+                let w = c.words(5)?;
+                shards.push(ShardStats {
+                    ring_depth,
+                    ring_capacity,
+                    ready_batches,
+                    queued_lanes: w[0],
+                    oldest_ready_us: w[1],
+                    steals_in: w[2],
+                    steals_out: w[3],
+                    ring_full_rejects: w[4],
+                });
+            }
+            let n_backends = c.u32()? as usize;
+            if 37 * n_backends > payload.len() {
+                bail!("stats backend count {n_backends} exceeds the frame");
+            }
+            let mut backends = Vec::with_capacity(n_backends);
+            for _ in 0..n_backends {
+                let name_len = c.u32()? as usize;
+                let name = String::from_utf8(c.take(name_len)?.to_vec())
+                    .context("stats backend name is not UTF-8")?;
+                let flags = c.u8()?;
+                let w = c.words(4)?;
+                backends.push(BackendStats {
+                    name,
+                    breaker_open: flags & 1 != 0,
+                    degraded: flags & 2 != 0,
+                    ok_batches: w[0],
+                    failed_batches: w[1],
+                    rerouted: w[2],
+                    respawns: w[3],
+                });
+            }
+            let w = c.words(8)?;
+            Frame::Stats(StatsFrame {
+                version,
+                server_ns,
+                respawns,
+                trace_drops,
+                trace_errors,
+                slots,
+                shards,
+                backends,
+                net: NetCounters {
+                    connections: w[0],
+                    active_connections: w[1],
+                    frames_in: w[2],
+                    frames_out: w[3],
+                    submits: w[4],
+                    completes: w[5],
+                    slow_client_drops: w[6],
+                    protocol_errors: w[7],
+                },
+            })
+        }
         KIND_COMPLETE => {
             let id = c.u64()?;
             let status = c.u8()?;
@@ -381,6 +643,103 @@ mod tests {
             results: vec![],
             error: "backend execution failed: scalar-reference".into(),
         }));
+    }
+
+    #[test]
+    fn stats_frames_round_trip() {
+        round_trip(Frame::StatsRequest);
+        // empty snapshot (a service with nothing recorded yet)
+        round_trip(Frame::Stats(StatsFrame {
+            version: STATS_VERSION,
+            server_ns: 0,
+            respawns: 0,
+            trace_drops: 0,
+            trace_errors: 0,
+            slots: vec![],
+            shards: vec![],
+            backends: vec![],
+            net: NetCounters::default(),
+        }));
+        // fully populated snapshot
+        round_trip(Frame::Stats(StatsFrame {
+            version: STATS_VERSION,
+            server_ns: 123_456_789_000,
+            respawns: 2,
+            trace_drops: 17,
+            trace_errors: 3,
+            slots: vec![
+                SlotStats {
+                    op: OpKind::Divide,
+                    format: FormatKind::F32,
+                    requests: 1_000_000,
+                    errors: 4,
+                    shed: 9,
+                    admission_rejected: 1,
+                    p50_latency_ns: 42_000,
+                    p99_latency_ns: 990_000,
+                    queued_lanes: 128,
+                },
+                SlotStats {
+                    op: OpKind::Rsqrt,
+                    format: FormatKind::F16,
+                    requests: 7,
+                    errors: 0,
+                    shed: 0,
+                    admission_rejected: 0,
+                    p50_latency_ns: 0,
+                    p99_latency_ns: 0,
+                    queued_lanes: 0,
+                },
+            ],
+            shards: vec![
+                ShardStats {
+                    ring_depth: 12,
+                    ring_capacity: 65_536,
+                    queued_lanes: 96,
+                    ready_batches: 2,
+                    oldest_ready_us: 750,
+                    steals_in: 5,
+                    steals_out: 3,
+                    ring_full_rejects: 1,
+                },
+                ShardStats::default(),
+            ],
+            backends: vec![BackendStats {
+                name: "native-fixed-point".into(),
+                breaker_open: true,
+                degraded: false,
+                ok_batches: 500,
+                failed_batches: 2,
+                rerouted: 2,
+                respawns: 1,
+            }],
+            net: NetCounters {
+                connections: 10,
+                active_connections: 3,
+                frames_in: 4000,
+                frames_out: 4100,
+                submits: 1900,
+                completes: 1890,
+                slow_client_drops: 1,
+                protocol_errors: 0,
+            },
+        }));
+    }
+
+    #[test]
+    fn stats_row_counts_are_bounded_by_the_frame() {
+        // a CRC-valid STATS whose declared slot count exceeds the held
+        // bytes must fail decode without a giant allocation
+        let mut payload = vec![KIND_STATS];
+        payload.extend_from_slice(&STATS_VERSION.to_le_bytes());
+        payload.extend_from_slice(&[0u8; 32]); // server_ns..trace_errors
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // n_slots
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let err = read_frame(&mut &frame[..]).unwrap_err().to_string();
+        assert!(err.contains("slot count"), "{err}");
     }
 
     #[test]

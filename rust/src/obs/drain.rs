@@ -1,0 +1,401 @@
+//! [`TraceDrainer`]: streaming trace export for long-lived serving.
+//!
+//! The trace plane's rings are sized for *bursts*, not for a run's
+//! whole history — before this module, events were drained at
+//! shutdown, so any serve longer than ring capacity silently lost its
+//! past. The drainer is a background thread (`fpu-trace-drainer`) that
+//! pumps the rings on an interval while the service runs and appends
+//! each batch as JSONL to a **rotating segment file**
+//! (`trace.seg0.jsonl`, `trace.seg1.jsonl`, ... beside the target
+//! path, a new segment whenever the current one passes the configured
+//! byte threshold). At [`finish`](TraceDrainer::finish) the segments
+//! are re-merged — parsed back through
+//! [`parse_jsonl_event`](super::export::parse_jsonl_event), sorted,
+//! and written to the target in its native form (Chrome document for
+//! `.json`, flat for `.jsonl`).
+//!
+//! Buffering is bounded end to end: the rings themselves are the
+//! in-flight buffer (a slow writer backs pressure up into ring drops,
+//! which the plane counts exactly), each pump hands out at most one
+//! ring's worth per shard plus the new error-class events, and a
+//! failing writer *counts* every event it could not persist
+//! ([`DrainReport::io_drops`]) instead of stalling the hot path.
+//! Error-class events are never dropped by the drainer: they are
+//! cursor-copied out of the plane's unbounded side store, so the only
+//! way to lose one is an I/O failure, which is accounted.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::export::{jsonl, merge_segments};
+use super::ring::TracePlane;
+
+/// Streaming export configuration.
+#[derive(Clone, Debug)]
+pub struct DrainConfig {
+    /// Final merged output path. `.jsonl` selects the flat form,
+    /// anything else the Chrome trace document. Segments live beside
+    /// it as `<stem>.segN.jsonl`.
+    pub path: PathBuf,
+    /// Rotate to a new segment once the current one passes this many
+    /// bytes (clamped to at least 4 KiB).
+    pub rotate_bytes: u64,
+    /// Pump period (clamped to at least 1 ms).
+    pub interval: Duration,
+    /// Backend names for the merged Chrome document's track labels.
+    pub backend_names: Vec<String>,
+}
+
+impl Default for DrainConfig {
+    /// 64 MiB segments, 200 ms pump period, `trace.json` target.
+    fn default() -> Self {
+        Self {
+            path: PathBuf::from("trace.json"),
+            rotate_bytes: 64 << 20,
+            interval: Duration::from_millis(200),
+            backend_names: Vec::new(),
+        }
+    }
+}
+
+/// Counters shared between the drainer thread and its handle.
+#[derive(Debug, Default)]
+struct DrainShared {
+    /// Events persisted to segment files.
+    written: AtomicU64,
+    /// Events lost to segment I/O failures (write/open errors) — the
+    /// drainer keeps running, the loss is accounted here.
+    io_drops: AtomicU64,
+    /// Segments opened so far.
+    segments: AtomicU64,
+}
+
+/// What a finished drainer streamed, merged, and lost.
+#[derive(Clone, Debug)]
+pub struct DrainReport {
+    /// Events appended to segment files over the run.
+    pub events_written: u64,
+    /// Segment files the run rotated through.
+    pub segments: u64,
+    /// Events lost to segment I/O failures (write/open errors).
+    pub io_drops: u64,
+    /// Lifecycle events the *rings* dropped while the writer lagged
+    /// (`TracePlane::drops` at finish; error-class events are never
+    /// subject to this).
+    pub ring_drops: u64,
+    /// Events in the final merged document.
+    pub merged_events: usize,
+    /// The merged output path.
+    pub path: PathBuf,
+}
+
+/// Handle to the `fpu-trace-drainer` thread. Call
+/// [`finish`](TraceDrainer::finish) after the service has shut down
+/// (so nothing is still emitting) to flush, merge, and collect the
+/// [`DrainReport`]; dropping without finishing stops the thread and
+/// leaves the segments on disk un-merged.
+#[derive(Debug)]
+pub struct TraceDrainer {
+    plane: Arc<TracePlane>,
+    config: DrainConfig,
+    stop: Arc<AtomicBool>,
+    shared: Arc<DrainShared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// Segment path `i` for a merge target: `trace.json` →
+/// `trace.seg<i>.jsonl` in the same directory.
+pub fn segment_path(target: &Path, index: u64) -> PathBuf {
+    let stem = target.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    target.with_file_name(format!("{stem}.seg{index}.jsonl"))
+}
+
+/// One open segment file with its byte budget.
+struct Segment {
+    file: File,
+    bytes: u64,
+}
+
+fn open_segment(target: &Path, index: u64) -> Result<Segment> {
+    let path = segment_path(target, index);
+    let file = OpenOptions::new()
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(&path)
+        .with_context(|| format!("open trace segment {}", path.display()))?;
+    Ok(Segment { file, bytes: 0 })
+}
+
+impl TraceDrainer {
+    /// Spawn the drainer over `plane`. The thread opens its first
+    /// segment eagerly so a permission problem surfaces here, not
+    /// minutes into a soak.
+    pub fn start(plane: Arc<TracePlane>, config: DrainConfig) -> Result<TraceDrainer> {
+        if config.path.as_os_str().is_empty() {
+            bail!("trace drain path is empty");
+        }
+        let rotate = config.rotate_bytes.max(4 << 10);
+        let interval = config.interval.max(Duration::from_millis(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(DrainShared::default());
+        let mut segment = open_segment(&config.path, 0)?;
+        shared.segments.store(1, Ordering::Relaxed);
+        let thread = {
+            let (plane, stop, shared) = (plane.clone(), stop.clone(), shared.clone());
+            let target = config.path.clone();
+            std::thread::Builder::new()
+                .name("fpu-trace-drainer".into())
+                .spawn(move || {
+                    let mut error_cursor = 0usize;
+                    loop {
+                        // read the flag *before* draining: everything
+                        // emitted up to a stop request still flushes on
+                        // the final pass
+                        let stopping = stop.load(Ordering::Acquire);
+                        let mut events = plane.take_collected();
+                        let errors = plane.errors_since(error_cursor);
+                        error_cursor += errors.len();
+                        events.extend(errors);
+                        if !events.is_empty() {
+                            events.sort_by_key(|e| (e.t_ns, e.id));
+                            let body = jsonl(&events);
+                            match segment.file.write_all(body.as_bytes()).and_then(|()| segment.file.flush()) {
+                                Ok(()) => {
+                                    segment.bytes += body.len() as u64;
+                                    shared.written.fetch_add(events.len() as u64, Ordering::Relaxed);
+                                }
+                                Err(_) => {
+                                    shared.io_drops.fetch_add(events.len() as u64, Ordering::Relaxed);
+                                }
+                            }
+                            if segment.bytes >= rotate && !stopping {
+                                let next = shared.segments.load(Ordering::Relaxed);
+                                match open_segment(&target, next) {
+                                    Ok(s) => {
+                                        segment = s;
+                                        shared.segments.store(next + 1, Ordering::Relaxed);
+                                    }
+                                    // keep appending to the full
+                                    // segment rather than lose events
+                                    Err(_) => {}
+                                }
+                            }
+                        }
+                        if stopping {
+                            return;
+                        }
+                        // sleep in slices so a stop request is honored
+                        // promptly even with long pump intervals
+                        let mut left = interval;
+                        while !left.is_zero() && !stop.load(Ordering::Acquire) {
+                            let slice = left.min(Duration::from_millis(20));
+                            std::thread::sleep(slice);
+                            left = left.saturating_sub(slice);
+                        }
+                    }
+                })
+                .context("spawn fpu-trace-drainer")?
+        };
+        Ok(TraceDrainer { plane, config, stop, shared, thread: Some(thread) })
+    }
+
+    /// Events persisted to segments so far (live gauge).
+    pub fn events_written(&self) -> u64 {
+        self.shared.written.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to segment I/O failures so far (live gauge).
+    pub fn io_drops(&self) -> u64 {
+        self.shared.io_drops.load(Ordering::Relaxed)
+    }
+
+    /// Stop the thread (final flush pass included), merge the segments
+    /// into the target path, and report the accounting. Call after the
+    /// emitting service has shut down.
+    pub fn finish(mut self) -> Result<DrainReport> {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        let segments = self.shared.segments.load(Ordering::Relaxed);
+        let paths: Vec<PathBuf> =
+            (0..segments).map(|i| segment_path(&self.config.path, i)).collect();
+        let merged_events =
+            merge_segments(&paths, &self.config.path, &self.config.backend_names)?;
+        Ok(DrainReport {
+            events_written: self.shared.written.load(Ordering::Relaxed),
+            segments,
+            io_drops: self.shared.io_drops.load(Ordering::Relaxed),
+            ring_drops: self.plane.drops(),
+            merged_events,
+            path: self.config.path.clone(),
+        })
+    }
+}
+
+impl Drop for TraceDrainer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::OpKind;
+    use crate::formats::FormatKind;
+    use crate::obs::export::trace_report;
+    use crate::obs::ring::{TraceConfig, TraceEvent, TraceKind};
+    use crate::util::json::Json;
+
+    fn ev(kind: TraceKind, id: u64, t: u64) -> TraceEvent {
+        TraceEvent::new(kind, t).req(id, OpKind::Divide, FormatKind::F32)
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("goldschmidt-drain-{}-{name}", std::process::id()))
+    }
+
+    fn cleanup(report: &DrainReport) {
+        std::fs::remove_file(&report.path).ok();
+        for i in 0..report.segments {
+            std::fs::remove_file(segment_path(&report.path, i)).ok();
+        }
+    }
+
+    /// The acceptance property: far more events stream through than the
+    /// rings can hold, with exact accounting.
+    #[test]
+    fn streaming_outlives_ring_capacity() {
+        // 8 shards x 8 slots = 64 in-flight events maximum
+        let plane = Arc::new(TracePlane::new(TraceConfig { sample: 1, capacity: 8 }));
+        let drainer = TraceDrainer::start(
+            plane.clone(),
+            DrainConfig {
+                path: tmp("stream.json"),
+                interval: Duration::from_millis(1),
+                ..DrainConfig::default()
+            },
+        )
+        .unwrap();
+        let total_capacity = 64u64;
+        let emitted = 640u64;
+        for round in 0..10u64 {
+            for i in 0..64u64 {
+                let id = round * 64 + i;
+                plane.emit(ev(TraceKind::Enqueue, id, id));
+            }
+            // give the drainer time to pump between bursts — this is
+            // the streaming the shutdown-drain model could not do
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        let report = drainer.finish().unwrap();
+        assert_eq!(report.io_drops, 0);
+        assert_eq!(
+            report.merged_events as u64 + report.ring_drops,
+            emitted,
+            "every event persisted or counted dropped: {report:?}"
+        );
+        assert!(
+            report.merged_events as u64 > total_capacity,
+            "streamed more than ring capacity ({report:?}) — shutdown-drain could not"
+        );
+        let doc = Json::parse(&std::fs::read_to_string(&report.path).unwrap()).unwrap();
+        assert!(doc.get("traceEvents").and_then(Json::as_arr).is_some());
+        cleanup(&report);
+    }
+
+    /// Overflow during a slow drainer loses only sampled lifecycle
+    /// events; error-class events always land.
+    #[test]
+    fn slow_drainer_never_loses_error_class_events() {
+        let plane = Arc::new(TracePlane::new(TraceConfig { sample: 1, capacity: 8 }));
+        let drainer = TraceDrainer::start(
+            plane.clone(),
+            DrainConfig {
+                path: tmp("slow.jsonl"),
+                // effectively never pumps during the test: everything
+                // rides the final flush pass
+                interval: Duration::from_secs(3600),
+                ..DrainConfig::default()
+            },
+        )
+        .unwrap();
+        for i in 0..1000u64 {
+            plane.emit(ev(TraceKind::Enqueue, i, i));
+        }
+        for i in 0..50u64 {
+            plane.emit(ev(TraceKind::ExecError, i, 2000 + i).on_backend(0));
+        }
+        let report = drainer.finish().unwrap();
+        assert!(report.ring_drops > 0, "tiny rings must overflow under a stalled drainer");
+        let body = std::fs::read_to_string(&report.path).unwrap();
+        let mut errors = 0u64;
+        let mut lifecycle = 0u64;
+        for line in body.lines() {
+            let row = Json::parse(line).unwrap();
+            match row.get("kind").and_then(Json::as_str) {
+                Some("exec-error") => errors += 1,
+                Some("enqueue") => lifecycle += 1,
+                other => panic!("unexpected kind {other:?}"),
+            }
+        }
+        assert_eq!(errors, 50, "error-class events are never dropped");
+        assert_eq!(lifecycle + report.ring_drops, 1000, "drop accounting is exact");
+        cleanup(&report);
+    }
+
+    /// Small rotation threshold produces multiple segments that
+    /// re-merge into one valid, report-parseable Chrome trace.
+    #[test]
+    fn rotated_segments_remerge_into_valid_trace() {
+        let plane = Arc::new(TracePlane::new(TraceConfig { sample: 1, capacity: 1024 }));
+        let drainer = TraceDrainer::start(
+            plane.clone(),
+            DrainConfig {
+                path: tmp("rotate.json"),
+                rotate_bytes: 1, // clamped to 4 KiB — still tiny
+                interval: Duration::from_millis(1),
+                backend_names: vec!["native".to_string()],
+            },
+        )
+        .unwrap();
+        for round in 0..20u64 {
+            for i in 0..50u64 {
+                let id = round * 50 + i;
+                plane.emit(
+                    TraceEvent::new(TraceKind::StageExec, id * 10)
+                        .req(id, OpKind::Divide, FormatKind::F32)
+                        .spanning(500)
+                        .on_backend(0)
+                        .on_shard((id % 4) as usize)
+                        .with_lanes(1),
+                );
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let report = drainer.finish().unwrap();
+        assert!(report.segments > 1, "4 KiB threshold must rotate: {report:?}");
+        assert_eq!(report.ring_drops, 0, "1024-slot rings with a 1 ms pump never overflow here");
+        assert_eq!(report.merged_events, 1000);
+        assert_eq!(report.events_written, 1000);
+        // the merged Chrome document parses and the report reduces it,
+        // including per-shard attribution
+        let rendered = trace_report(&report.path).unwrap();
+        assert!(rendered.contains("divide/f32"), "{rendered}");
+        assert!(rendered.contains("per-shard stage attribution"), "{rendered}");
+        assert!(rendered.contains("shard3"), "{rendered}");
+        cleanup(&report);
+    }
+}

@@ -20,14 +20,16 @@
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::coordinator::request::OpKind;
+use crate::formats::FormatKind;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
-use super::ring::{TraceEvent, TraceKind, NO_BACKEND};
+use super::ring::{TraceEvent, TraceKind, NO_BACKEND, NO_SHARD};
 
 /// Stage labels in report display order.
 const STAGES: [&str; 4] = ["queue", "batch", "exec", "failover"];
@@ -42,6 +44,9 @@ fn event_args(ev: &TraceEvent) -> Json {
     ];
     if ev.backend != NO_BACKEND {
         args.push(("backend", Json::from(u64::from(ev.backend))));
+    }
+    if ev.shard != NO_SHARD {
+        args.push(("shard", Json::from(u64::from(ev.shard))));
     }
     Json::obj(args)
 }
@@ -144,9 +149,78 @@ pub fn jsonl(events: &[TraceEvent]) -> String {
         if ev.backend != NO_BACKEND {
             fields.push(("backend", Json::from(u64::from(ev.backend))));
         }
+        if ev.shard != NO_SHARD {
+            fields.push(("shard", Json::from(u64::from(ev.shard))));
+        }
         let _ = writeln!(out, "{}", Json::obj(fields).to_string());
     }
     out
+}
+
+/// Parse one JSONL trace line back into a [`TraceEvent`] — the inverse
+/// of [`jsonl`], used by the streaming drainer's segment merge.
+pub fn parse_jsonl_event(line: &str) -> Result<TraceEvent> {
+    let row = Json::parse(line).map_err(|e| anyhow!("bad trace JSONL: {e}"))?;
+    let str_of = |key: &str| {
+        row.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace line missing {key:?}: {line}"))
+    };
+    let num_of = |key: &str| row.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let kind_s = str_of("kind")?;
+    let kind = TraceKind::from_label(kind_s)
+        .ok_or_else(|| anyhow!("unknown trace kind {kind_s:?}"))?;
+    let op_s = str_of("op")?;
+    let op = OpKind::ALL
+        .into_iter()
+        .find(|o| o.label() == op_s)
+        .ok_or_else(|| anyhow!("unknown trace op {op_s:?}"))?;
+    let format_s = str_of("format")?;
+    let format = FormatKind::ALL
+        .into_iter()
+        .find(|f| f.label() == format_s)
+        .ok_or_else(|| anyhow!("unknown trace format {format_s:?}"))?;
+    let mut ev = TraceEvent::new(kind, num_of("t_ns"))
+        .req(num_of("id"), op, format)
+        .with_lanes(num_of("lanes") as usize)
+        .spanning(num_of("dur_ns"))
+        .with_arg(num_of("arg"));
+    if row.get("backend").is_some() {
+        ev = ev.on_backend(num_of("backend") as usize);
+    }
+    if row.get("shard").is_some() {
+        ev = ev.on_shard(num_of("shard") as usize);
+    }
+    Ok(ev)
+}
+
+/// Re-merge rotated JSONL segment files into one trace at `target`
+/// (`.jsonl` → flat, anything else → the Chrome document), sorted by
+/// timestamp. Returns the merged event count. Missing segment files
+/// are an error — a merge must never silently present a partial run
+/// as complete.
+pub fn merge_segments(
+    segments: &[PathBuf],
+    target: &Path,
+    backend_names: &[String],
+) -> Result<usize> {
+    let mut events = Vec::new();
+    for seg in segments {
+        let body = std::fs::read_to_string(seg)
+            .with_context(|| format!("reading trace segment {}", seg.display()))?;
+        for (n, line) in body.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            events.push(
+                parse_jsonl_event(line)
+                    .with_context(|| format!("{} line {}", seg.display(), n + 1))?,
+            );
+        }
+    }
+    events.sort_by_key(|e| (e.t_ns, e.id));
+    write_trace_named(target, &events, backend_names)?;
+    Ok(events.len())
 }
 
 /// Write an event stream to `path`: `.jsonl` extension selects the
@@ -176,6 +250,9 @@ struct StageSample {
     format: String,
     stage: usize,
     dur_us: f64,
+    /// Coordinator shard the span was served on, when the trace
+    /// carries one (traces predating the shard field simply omit it).
+    shard: Option<u64>,
 }
 
 fn field_str(obj: &Json, key: &str) -> Option<String> {
@@ -205,7 +282,8 @@ fn stage_samples(doc_is_chrome: bool, rows: &[Json]) -> Vec<StageSample> {
         let (Some(op), Some(format)) = (field_str(src, "op"), field_str(src, "format")) else {
             continue;
         };
-        out.push(StageSample { op, format, stage, dur_us });
+        let shard = src.get("shard").and_then(Json::as_f64).map(|s| s as u64);
+        out.push(StageSample { op, format, stage, dur_us, shard });
     }
     out
 }
@@ -275,7 +353,12 @@ pub fn trace_report(path: &Path) -> Result<String> {
     }
     // (op, format) -> one Summary per stage, in STAGES order
     let mut slots: BTreeMap<(String, String), [Summary; 4]> = BTreeMap::new();
+    // shard -> one Summary per stage (spans carrying a shard only)
+    let mut shards: BTreeMap<u64, [Summary; 4]> = BTreeMap::new();
     for s in samples {
+        if let Some(shard) = s.shard {
+            shards.entry(shard).or_default()[s.stage].add(s.dur_us);
+        }
         let entry = slots.entry((s.op, s.format)).or_default();
         entry[s.stage].add(s.dur_us);
     }
@@ -303,6 +386,37 @@ pub fn trace_report(path: &Path) -> Result<String> {
         &["op/format", "stage", "spans", "share", "p50 us", "p99 us"],
         &rows,
     ));
+    // spans that carry a shard also get a per-shard attribution table,
+    // making skew between shards (the thing the steal policy fixes)
+    // directly visible from a trace file
+    if !shards.is_empty() {
+        let mut rows = Vec::new();
+        let mut shard_spans = 0usize;
+        for (shard, stages) in &shards {
+            let total: f64 = stages.iter().map(Summary::sum).sum();
+            for (i, stage) in STAGES.iter().enumerate() {
+                let s = &stages[i];
+                if s.count() == 0 {
+                    continue;
+                }
+                shard_spans += s.count();
+                let share = if total > 0.0 { 100.0 * s.sum() / total } else { 0.0 };
+                rows.push(vec![
+                    format!("shard{shard}"),
+                    stage.to_string(),
+                    s.count().to_string(),
+                    format!("{share:.1}%"),
+                    format!("{:.1}", s.percentile(50.0)),
+                    format!("{:.1}", s.percentile(99.0)),
+                ]);
+            }
+        }
+        let _ = writeln!(out, "\nper-shard stage attribution ({shard_spans} stage spans)");
+        out.push_str(&render_table(
+            &["shard", "stage", "spans", "share", "p50 us", "p99 us"],
+            &rows,
+        ));
+    }
     Ok(out)
 }
 
@@ -423,6 +537,75 @@ mod tests {
         write_trace(&p, &[TraceEvent::new(TraceKind::Submit, 0)]).unwrap();
         let r = trace_report(&p).unwrap();
         assert!(r.contains("no stage spans"), "{r}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_parse() {
+        let mut evs = sample_events();
+        evs.push(span(TraceKind::StageExec, 42, 99, 777).on_backend(1).on_shard(2).with_arg(5));
+        let body = jsonl(&evs);
+        let parsed: Vec<TraceEvent> =
+            body.lines().map(|l| parse_jsonl_event(l).unwrap()).collect();
+        assert_eq!(parsed.len(), evs.len());
+        for (a, b) in evs.iter().zip(&parsed) {
+            assert_eq!((a.kind, a.t_ns, a.id, a.op, a.format), (b.kind, b.t_ns, b.id, b.op, b.format));
+            assert_eq!((a.dur_ns, a.backend, a.shard, a.lanes, a.arg), (b.dur_ns, b.backend, b.shard, b.lanes, b.arg));
+        }
+        assert!(parse_jsonl_event("{\"kind\":\"no-such-kind\",\"op\":\"divide\",\"format\":\"f32\"}").is_err());
+        assert!(parse_jsonl_event("not json").is_err());
+    }
+
+    #[test]
+    fn merge_segments_rebuilds_a_sorted_chrome_trace() {
+        let evs = sample_events();
+        // split out of timestamp order across two segments
+        let seg_a = tmp("merge-a.jsonl");
+        let seg_b = tmp("merge-b.jsonl");
+        std::fs::write(&seg_a, jsonl(&evs[evs.len() / 2..])).unwrap();
+        std::fs::write(&seg_b, jsonl(&evs[..evs.len() / 2])).unwrap();
+        let target = tmp("merged.json");
+        let n = merge_segments(
+            &[seg_a.clone(), seg_b.clone()],
+            &target,
+            &["native".to_string(), "u128".to_string()],
+        )
+        .unwrap();
+        assert_eq!(n, evs.len());
+        // the merged document is a valid Chrome trace the report parses
+        let doc = Json::parse(&std::fs::read_to_string(&target).unwrap()).unwrap();
+        let rows = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let data_rows: Vec<&Json> =
+            rows.iter().filter(|r| field_str(r, "ph").as_deref() != Some("M")).collect();
+        assert_eq!(data_rows.len(), evs.len());
+        let ts: Vec<f64> =
+            data_rows.iter().filter_map(|r| r.get("ts").and_then(Json::as_f64)).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "merged events sorted by time");
+        assert!(trace_report(&target).unwrap().contains("divide/f32"));
+        // a missing segment is an error, not a silent partial merge
+        assert!(merge_segments(&[tmp("nope.jsonl")], &target, &[]).is_err());
+        for p in [seg_a, seg_b, target] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn report_attributes_stage_latency_by_shard() {
+        let mut evs = Vec::new();
+        for id in 0..8u64 {
+            let shard = (id % 2) as usize;
+            // shard 1 is twice as slow in exec — the report should show it
+            let exec = if shard == 1 { 8_000 } else { 4_000 };
+            evs.push(span(TraceKind::StageQueue, id, id * 100, 1_000).on_shard(shard));
+            evs.push(span(TraceKind::StageExec, id, id * 100 + 10, exec).on_shard(shard));
+        }
+        let p = tmp("shard-report.jsonl");
+        write_trace(&p, &evs).unwrap();
+        let report = trace_report(&p).unwrap();
+        assert!(report.contains("per-shard stage attribution"), "{report}");
+        assert!(report.contains("shard0"), "{report}");
+        assert!(report.contains("shard1"), "{report}");
+        assert!(report.contains("8.0"), "shard 1 exec p50 visible: {report}");
         std::fs::remove_file(&p).ok();
     }
 

@@ -30,14 +30,22 @@
 //!   into an unbounded side store; ring overflow (counted in
 //!   [`TracePlane::drops`]) can only lose sampled lifecycle events.
 //!
-//! [`export`] drains the plane into Chrome `trace_event` JSON or flat
+//! [`export`] renders the plane as Chrome `trace_event` JSON or flat
 //! JSONL (`serve --trace-out PATH --trace-sample N`) and renders the
-//! per-(op, format) stage breakdown table (`goldschmidt trace-report`).
+//! per-(op, format) and per-shard stage breakdown tables
+//! (`goldschmidt trace-report`). [`drain`] streams the plane to disk
+//! *while serving* — the `fpu-trace-drainer` thread pumps the rings on
+//! an interval into rotating JSONL segments
+//! (`--trace-rotate-mb`) and re-merges them at shutdown, so a
+//! multi-hour soak never outlives its rings.
 
+pub mod drain;
 pub mod export;
 pub mod ring;
 
+pub use drain::{segment_path, DrainConfig, DrainReport, TraceDrainer};
 pub use export::{
-    chrome_trace, chrome_trace_named, jsonl, trace_report, write_trace, write_trace_named,
+    chrome_trace, chrome_trace_named, jsonl, merge_segments, parse_jsonl_event, trace_report,
+    write_trace, write_trace_named,
 };
-pub use ring::{EventRing, TraceConfig, TraceEvent, TraceKind, TracePlane, NO_BACKEND};
+pub use ring::{EventRing, TraceConfig, TraceEvent, TraceKind, TracePlane, NO_BACKEND, NO_SHARD};

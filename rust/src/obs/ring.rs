@@ -34,6 +34,10 @@ const SHARDS: usize = 8;
 /// Marker for "no backend attributed" in [`TraceEvent::backend`].
 pub const NO_BACKEND: u8 = u8::MAX;
 
+/// Marker for "no coordinator shard attributed" in
+/// [`TraceEvent::shard`].
+pub const NO_SHARD: u16 = u16::MAX;
+
 /// What a [`TraceEvent`] records. Three classes:
 ///
 /// * lifecycle **instants** (sampled): one point in a request's life;
@@ -89,6 +93,34 @@ pub enum TraceKind {
 }
 
 impl TraceKind {
+    /// Every kind (label round-trip support for segment re-merging).
+    pub const ALL: [TraceKind; 18] = [
+        TraceKind::Submit,
+        TraceKind::Enqueue,
+        TraceKind::BatchFormed,
+        TraceKind::BackendSelected,
+        TraceKind::JournalAppend,
+        TraceKind::Complete,
+        TraceKind::StageQueue,
+        TraceKind::StageBatch,
+        TraceKind::StageFailover,
+        TraceKind::StageExec,
+        TraceKind::Reject,
+        TraceKind::Shed,
+        TraceKind::FailoverHop,
+        TraceKind::Respawn,
+        TraceKind::FaultInjected,
+        TraceKind::ExecError,
+        TraceKind::WorkerDeath,
+        TraceKind::BatchFailed,
+    ];
+
+    /// The kind whose [`label`](TraceKind::label) is `s` (the inverse
+    /// mapping, used when parsing exported JSONL back into events).
+    pub fn from_label(s: &str) -> Option<TraceKind> {
+        TraceKind::ALL.into_iter().find(|k| k.label() == s)
+    }
+
     /// Stable lowercase label (exported names; stage spans use the
     /// queue/batch/exec/failover vocabulary of the report table).
     pub fn label(self) -> &'static str {
@@ -162,6 +194,9 @@ pub struct TraceEvent {
     pub format: FormatKind,
     /// Backend index ([`NO_BACKEND`] when not attributable).
     pub backend: u8,
+    /// Coordinator shard index ([`NO_SHARD`] when not attributable),
+    /// so stage latency can be blamed on the shard that served it.
+    pub shard: u16,
     /// Live lanes involved.
     pub lanes: u32,
     /// Kind-specific payload (see each [`TraceKind`] variant).
@@ -180,6 +215,7 @@ impl TraceEvent {
             op: OpKind::Divide,
             format: FormatKind::F32,
             backend: NO_BACKEND,
+            shard: NO_SHARD,
             lanes: 0,
             arg: 0,
         }
@@ -196,6 +232,12 @@ impl TraceEvent {
     /// Attribute a backend index.
     pub fn on_backend(mut self, backend: usize) -> Self {
         self.backend = backend.min(NO_BACKEND as usize) as u8;
+        self
+    }
+
+    /// Attribute a coordinator shard index.
+    pub fn on_shard(mut self, shard: usize) -> Self {
+        self.shard = shard.min(NO_SHARD as usize) as u16;
         self
     }
 
@@ -467,6 +509,25 @@ impl TracePlane {
         out.sort_by_key(|e| (e.t_ns, e.id));
         out
     }
+
+    /// Pump the rings and *take* every collected lifecycle event,
+    /// leaving the store empty. The streaming drainer
+    /// ([`TraceDrainer`](super::drain::TraceDrainer)) calls this on an
+    /// interval so a long run never has to fit in ring capacity — each
+    /// event is handed out exactly once.
+    pub fn take_collected(&self) -> Vec<TraceEvent> {
+        self.pump();
+        std::mem::take(&mut *self.collected.lock().expect("trace store poisoned"))
+    }
+
+    /// Error-class events captured at index `from` onward. Errors stay
+    /// in the plane (they are the forensic record — `error_count` and
+    /// shutdown summaries must keep seeing all of them); a streaming
+    /// consumer advances its own cursor by the returned length.
+    pub fn errors_since(&self, from: usize) -> Vec<TraceEvent> {
+        let errors = self.errors.lock().expect("trace error store poisoned");
+        errors.get(from..).map(<[TraceEvent]>::to_vec).unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -583,6 +644,7 @@ mod tests {
         let e = TraceEvent::new(TraceKind::StageExec, 10)
             .req(7, OpKind::Sqrt, FormatKind::BF16)
             .on_backend(2)
+            .on_shard(3)
             .with_lanes(64)
             .spanning(500)
             .with_arg(3);
@@ -591,11 +653,40 @@ mod tests {
         assert_eq!(e.op, OpKind::Sqrt);
         assert_eq!(e.format, FormatKind::BF16);
         assert_eq!(e.backend, 2);
+        assert_eq!(e.shard, 3);
         assert_eq!(e.lanes, 64);
         assert_eq!(e.dur_ns, 500);
         assert_eq!(e.arg, 3);
         assert!(e.kind.is_span());
         assert!(!e.kind.is_error_class());
         assert!(TraceKind::WorkerDeath.is_error_class());
+        assert_eq!(TraceEvent::new(TraceKind::Submit, 0).shard, NO_SHARD);
+    }
+
+    #[test]
+    fn kind_labels_round_trip() {
+        for kind in TraceKind::ALL {
+            assert_eq!(TraceKind::from_label(kind.label()), Some(kind));
+        }
+        assert_eq!(TraceKind::from_label("warp-core-breach"), None);
+    }
+
+    #[test]
+    fn take_collected_consumes_and_errors_since_cursors() {
+        let p = TracePlane::new(TraceConfig { sample: 1, capacity: 64 });
+        for i in 0..10u64 {
+            p.emit(ev(TraceKind::Enqueue, i, i));
+        }
+        p.emit(ev(TraceKind::Shed, 100, 100));
+        assert_eq!(p.take_collected().len(), 10);
+        assert!(p.take_collected().is_empty(), "second take sees nothing new");
+        assert_eq!(p.errors_since(0).len(), 1);
+        assert!(p.errors_since(1).is_empty());
+        p.emit(ev(TraceKind::Shed, 101, 101));
+        assert_eq!(p.errors_since(1).len(), 1);
+        assert_eq!(p.error_count(), 2, "errors stay in the plane after streaming");
+        // new lifecycle emissions after a take are still collected
+        p.emit(ev(TraceKind::Enqueue, 11, 11));
+        assert_eq!(p.take_collected().len(), 1);
     }
 }

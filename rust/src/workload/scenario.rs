@@ -575,6 +575,9 @@ fn run_segment(
                 }
                 match receiver.recv() {
                     Ok(Some(Event::Ticket { .. })) => {}
+                    // scenario segments never poll stats; a stray reply
+                    // (shared harness, stale poll) is not a completion
+                    Ok(Some(Event::Stats(_))) => {}
                     Ok(Some(Event::Complete(c))) => {
                         done += 1;
                         let sent_at = in_flight.lock().unwrap().remove(&c.id);

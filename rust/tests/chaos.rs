@@ -25,7 +25,11 @@
 //! - an injected wire-level connection drop (the `conn-drop` net site)
 //!   never loses or duplicates a durable job: every journalled submit
 //!   retires Done even when its client died mid-wait, and the journal
-//!   coalesces to exactly one Done per id.
+//!   coalesces to exactly one Done per id;
+//! - an injected journal append failure (the `append-fail` journal-io
+//!   site) surfaces as a typed `Rejected` at submit time — the service
+//!   never acks a durable job it could not journal, and the failed id
+//!   never exists: not pollable, not in the file, not replayed.
 //!
 //! Everything is deterministic: fault decisions are a pure function of
 //! (spec, seed, occurrence index), so these runs are reproducible.
@@ -492,6 +496,55 @@ fn conn_drop_never_loses_or_duplicates_durable_jobs() {
             recs.iter().filter(|r| r.id == *id).map(|r| r.status).collect();
         assert_eq!(statuses, vec![JobStatus::Pending, JobStatus::Done], "journal id {id}");
     }
+    let _ = fs::remove_file(&path);
+}
+
+/// The journal-io fault sites compose with durability: an injected
+/// append failure surfaces at submit time as a typed `Rejected` (the
+/// service never acks a durable job it could not journal), the failed
+/// id never exists — not pollable, not in the file, not replayed on
+/// restart — and the very next durable submit retires Done untouched.
+#[test]
+fn injected_journal_append_failure_is_typed_and_never_acks() {
+    use goldschmidt::coordinator::ServiceError;
+
+    let path = temp_journal("journal-io");
+    let plan = FaultPlan::parse("append-fail@journal:after=0,count=1", 0x10AD).unwrap();
+    let svc = FpuService::start(config(Some(plan), Some(path.clone()), 1), native).unwrap();
+
+    let err = svc
+        .submit_batch_durable(OpKind::Divide, FormatKind::F32, &[f32b(6.0)], &[f32b(2.0)])
+        .expect_err("the injected append failure must surface");
+    match &err {
+        ServiceError::Rejected { reason } => {
+            assert!(reason.contains("journal append failed"), "typed blame: {reason}");
+            assert!(reason.contains("append-fail"), "the fault site is named: {reason}");
+        }
+        other => panic!("expected Rejected, got {other}"),
+    }
+
+    // the fault window is spent: the next durable submit journals fine
+    let id = svc
+        .submit_batch_durable(OpKind::Divide, FormatKind::F32, &[f32b(9.0)], &[f32b(3.0)])
+        .unwrap();
+    // the failed submit burned the id before it, but that job does not
+    // exist anywhere — the service never acked it
+    assert!(svc.poll_job(id - 1).is_none(), "an unjournalled job must not be pollable");
+    assert_eq!(poll_done(&svc, id), vec![f32b(3.0)]);
+    svc.shutdown();
+
+    // restart: nothing replays, the good id is Done, the failed id is
+    // still nothing
+    let svc2 = FpuService::start(config(None, Some(path.clone()), 1), native).unwrap();
+    assert_eq!(svc2.replayed_jobs(), 0);
+    assert!(matches!(svc2.poll_job(id), Some(JobPoll::Done(_))));
+    assert!(svc2.poll_job(id - 1).is_none(), "the failed id must not resurrect on replay");
+    svc2.shutdown();
+
+    // the raw journal never saw the failed id at all
+    let (_, recs) = Journal::open(&path).unwrap();
+    assert!(!recs.is_empty());
+    assert!(recs.iter().all(|r| r.id == id), "only the journalled job has records: {recs:?}");
     let _ = fs::remove_file(&path);
 }
 

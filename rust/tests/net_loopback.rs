@@ -16,8 +16,13 @@
 //! - a slow-loris client that never reads is counted
 //!   (`net_slow_client_drops`) and disconnected by the bounded writer
 //!   queue, while a healthy rider on the same server keeps completing
-//!   bit-identically.
+//!   bit-identically;
+//! - a `STATS` round-trip returns the same figures as the in-process
+//!   `MetricsSnapshot` (per-(op, format) and per-shard), and the
+//!   Prometheus endpoint scrapes the same snapshot over plain HTTP.
 
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -25,7 +30,10 @@ use std::time::{Duration, Instant};
 use goldschmidt::coordinator::{
     BatcherConfig, FormatKind, FpuService, OpKind, ServiceConfig, Value,
 };
-use goldschmidt::net::{result_of, NetClient, NetConfig, NetServer, SubmitOpts, FLAG_DURABLE};
+use goldschmidt::net::{
+    result_of, MetricsServer, NetClient, NetConfig, NetServer, SubmitOpts, FLAG_DURABLE,
+    STATS_VERSION,
+};
 use goldschmidt::runtime::{Executor, NativeExecutor};
 use goldschmidt::workload::{run_scenario, ScenarioSpec};
 
@@ -241,6 +249,82 @@ fn slow_loris_is_counted_and_shed_without_hurting_riders() {
         assert_eq!(got, want, "rider result {salt} after the loris was shed");
     }
     assert_eq!(server.stats().snapshot().slow_client_drops, 1, "one loris, one drop");
+    server.stop();
+    drop(svc);
+}
+
+/// A `STATS` round-trip returns the server's own metrics: the polled
+/// snapshot agrees with the in-process `MetricsSnapshot`, carries one
+/// row per shard, and counts this very connection in the net plane.
+/// Polling mid-conversation is safe — a submit outstanding across the
+/// poll still resolves.
+#[test]
+fn stats_frame_round_trips_and_matches_in_process_metrics() {
+    let (svc, mut server) = start_loopback();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    for salt in 0..5u64 {
+        let (a, b) = operands(FormatKind::F32, OpKind::Divide, 8, salt);
+        client.call(OpKind::Divide, FormatKind::F32, &a, &b).unwrap().unwrap();
+    }
+    let frame = client.stats().unwrap();
+    assert_eq!(frame.version, STATS_VERSION);
+    assert!(frame.server_ns > 0);
+    let slot = frame
+        .slots
+        .iter()
+        .find(|s| s.op == OpKind::Divide && s.format == FormatKind::F32)
+        .expect("divide/f32 slot present");
+    assert_eq!(slot.requests, 40, "5 frames x 8 lanes");
+    let snap = svc.metrics().snapshot();
+    assert_eq!(slot.requests, snap.op_format(OpKind::Divide, FormatKind::F32).requests);
+    let shards = svc.shard_stats();
+    assert_eq!(frame.shards.len(), shards.len());
+    assert!(frame.shards.iter().all(|s| s.ring_capacity > 0));
+    assert!(frame.net.active_connections >= 1, "this connection is live: {:?}", frame.net);
+    assert!(frame.net.submits >= 5, "{:?}", frame.net);
+    // a submit left outstanding across a poll still resolves
+    let (a, b) = operands(FormatKind::F32, OpKind::Sqrt, 4, 9);
+    let id = client.submit(OpKind::Sqrt, FormatKind::F32, &a, &b, SubmitOpts::default()).unwrap();
+    let _ = client.stats().unwrap();
+    assert!(result_of(&client.wait(id).unwrap()).is_ok());
+    server.stop();
+    drop(svc);
+}
+
+/// The Prometheus endpoint scrapes the same snapshot the STATS frame
+/// serves — per-(op, format), per-shard, and net-plane families all
+/// present, with figures matching the in-process snapshot.
+#[test]
+fn prometheus_scrape_matches_wire_stats() {
+    let (svc, mut server) = start_loopback();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    for salt in 0..3u64 {
+        let (a, b) = operands(FormatKind::F64, OpKind::Divide, 16, salt);
+        client.call(OpKind::Divide, FormatKind::F64, &a, &b).unwrap().unwrap();
+    }
+    let mut metrics =
+        MetricsServer::start(Arc::clone(&svc), Some(server.stats()), "127.0.0.1:0").unwrap();
+    let mut sock = TcpStream::connect(metrics.local_addr()).unwrap();
+    sock.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut reply = String::new();
+    sock.read_to_string(&mut reply).unwrap();
+    assert!(reply.starts_with("HTTP/1.1 200 OK"), "{reply}");
+    let requests = svc.metrics().snapshot().op_format(OpKind::Divide, FormatKind::F64).requests;
+    assert_eq!(requests, 48, "3 frames x 16 lanes");
+    assert!(
+        reply.contains(&format!("fpu_requests_total{{op=\"divide\",format=\"f64\"}} {requests}")),
+        "scrape disagrees with in-process snapshot:\n{reply}"
+    );
+    for family in [
+        "fpu_shard_ring_depth{shard=\"0\"}",
+        "fpu_shard_steals_out_total{shard=\"0\"}",
+        "fpu_backend_breaker_open{backend=",
+        "fpu_net_active_connections 1",
+        "fpu_trace_drops_total",
+    ] {
+        assert!(reply.contains(family), "missing {family:?} in:\n{reply}");
+    }
+    metrics.stop();
     server.stop();
     drop(svc);
 }
